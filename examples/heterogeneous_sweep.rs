@@ -1,0 +1,39 @@
+//! Heterogeneous sweep: a miniature Fig. 1 for one app — CPU-only vs
+//! GPU-only vs COMPAR dynamic selection across input sizes, on the real
+//! runtime where artifacts exist and through the calibrated device model
+//! beyond.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example heterogeneous_sweep -- [--app matmul] [--quick]
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use compar::bench_harness::fig1;
+use compar::runtime::Manifest;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let app = args
+        .iter()
+        .position(|a| a == "--app")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("matmul");
+
+    let manifest = Manifest::load(&compar::runtime::manifest::default_dir())
+        .ok()
+        .map(Arc::new);
+    if manifest.is_none() {
+        eprintln!("note: no artifacts found; all rows will be model-derived");
+    }
+    let (reps, max_measured) = if quick { (1, 64) } else { (3, 256) };
+    let points = fig1::series(app, manifest.as_ref(), reps, max_measured)?;
+    println!("{}", fig1::render(app, &points));
+    if app == "matmul" {
+        println!("{}", fig1::matmul_variant_table());
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart: the paper's Listing 1.3 scenario — a `sort` and an `mmul`
+//! interface, each with multiple implementation variants, left to the
+//! runtime to choose from.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use compar::apps;
+use compar::taskrt::{Config, Runtime, SchedPolicy};
+
+fn main() -> Result<()> {
+    // compar_init() — what `#pragma compar initialize` expands to.
+    let manifest = std::sync::Arc::new(compar::runtime::Manifest::load(
+        &compar::runtime::manifest::default_dir(),
+    )?);
+    let cfg = Config {
+        ncpu: 2,
+        ncuda: 1,
+        sched: SchedPolicy::Dmda,
+        ..Config::from_env()
+    };
+    let rt = Runtime::new(cfg, Some(manifest))?;
+    println!(
+        "COMPAR quickstart (ncpu={} ncuda={} sched={})\n",
+        rt.config().ncpu,
+        rt.config().ncuda,
+        rt.config().sched.name()
+    );
+
+    // sort(arr, N); — Listing 1.3 line 23. Run it a few times so the
+    // perf models calibrate, then watch the runtime's choice converge.
+    println!("sort(arr, 4096) x 12:");
+    for i in 0..12 {
+        let run = apps::run_once(&rt, "sort", 4096, i, None, true)?;
+        println!(
+            "  run {i:2}: selected {:7} modeled {:>10} (verified, rel_err {:.1e})",
+            run.variant,
+            compar::util::stats::fmt_time(run.modeled),
+            run.rel_err
+        );
+    }
+
+    // mmul(A, B, N, M); — Listing 1.3 line 24.
+    println!("\nmmul(A, B, 256, 256) x 16:");
+    for i in 0..16 {
+        let run = apps::run_once(&rt, "matmul", 256, 100 + i, None, true)?;
+        println!(
+            "  run {i:2}: selected {:7} modeled {:>10}",
+            run.variant,
+            compar::util::stats::fmt_time(run.modeled)
+        );
+    }
+
+    println!("\nselection histogram: {:?}", rt.metrics().variant_histogram());
+    println!(
+        "tasks executed: {}, bytes transferred (modeled PCIe): {}",
+        rt.metrics()
+            .tasks_executed
+            .load(std::sync::atomic::Ordering::Relaxed),
+        rt.metrics()
+            .bytes_transferred
+            .load(std::sync::atomic::Ordering::Relaxed)
+    );
+    // compar_terminate() — Listing 1.3 line 25.
+    rt.shutdown()?;
+    Ok(())
+}

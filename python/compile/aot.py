@@ -1,0 +1,134 @@
+"""AOT bridge: lower every (app, variant, size) graph to HLO text.
+
+HLO *text* (not ``lowered.compile().serialize()`` and not the serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+published ``xla`` 0.1.6 crate) rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs land in artifacts/:
+  <app>_<variant>_<size>.hlo.txt   — one module per entry
+  manifest.json                    — schema the Rust ArtifactRegistry reads
+
+Incremental: an entry is skipped when its .hlo.txt already exists and the
+manifest fingerprint (source mtime hash) matches — `make artifacts` is a
+no-op on an unchanged tree.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--apps a,b] [--full]
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _source_fingerprint() -> str:
+    """Hash of every .py under compile/ — invalidates artifacts on edits."""
+    root = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def _spec_json(s):
+    return {"shape": list(s.shape), "dtype": "f32"}
+
+
+def lower_entry(entry: model.Entry) -> str:
+    lowered = jax.jit(entry.fn).lower(*entry.specs)
+    return to_hlo_text(lowered)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--apps", default=None, help="comma-separated app filter")
+    ap.add_argument("--sizes", default=None, help="comma-separated size override")
+    ap.add_argument("--full", action="store_true", help="extended size grid")
+    ap.add_argument("--force", action="store_true", help="rebuild everything")
+    args = ap.parse_args(argv)
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    apps = set(args.apps.split(",")) if args.apps else None
+    sizes = [int(s) for s in args.sizes.split(",")] if args.sizes else None
+
+    fingerprint = _source_fingerprint()
+    manifest_path = out / "manifest.json"
+    old = {}
+    if manifest_path.exists() and not args.force:
+        try:
+            prev = json.loads(manifest_path.read_text())
+            if prev.get("fingerprint") == fingerprint:
+                old = {a["name"]: a for a in prev.get("artifacts", [])}
+        except (json.JSONDecodeError, KeyError):
+            pass
+
+    artifacts = []
+    t_all = time.time()
+    for entry in model.entries(apps=apps, sizes=sizes, full=args.full):
+        fname = f"{entry.name}.hlo.txt"
+        fpath = out / fname
+        meta = {
+            "name": entry.name,
+            "app": entry.app,
+            "variant": entry.variant,
+            "size": entry.size,
+            "file": fname,
+            "inputs": [_spec_json(s) for s in entry.specs],
+            "params": entry.params,
+        }
+        if entry.name in old and fpath.exists():
+            artifacts.append(meta)
+            continue
+        t0 = time.time()
+        try:
+            text = lower_entry(entry)
+        except Exception as e:  # keep going; report at the end
+            print(f"FAIL {entry.name}: {e}", file=sys.stderr)
+            continue
+        fpath.write_text(text)
+        artifacts.append(meta)
+        print(f"  {entry.name}: {len(text) / 1e6:.2f} MB in {time.time() - t0:.1f}s")
+
+    # Merge with prior manifest entries (an --apps/--sizes filtered run
+    # must not drop artifacts it did not regenerate).
+    have = {a["name"] for a in artifacts}
+    for name, meta in old.items():
+        if name not in have and (out / meta["file"]).exists():
+            artifacts.append(meta)
+
+    manifest = {
+        "fingerprint": fingerprint,
+        "hotspot_steps": model.HOTSPOT_STEPS,
+        "hotspot3d_steps": model.HOTSPOT3D_STEPS,
+        "hotspot3d_layers": model.HOTSPOT3D_LAYERS,
+        "nw_penalty": model.NW_PENALTY,
+        "artifacts": artifacts,
+    }
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {len(artifacts)} artifacts in {time.time() - t_all:.1f}s -> {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

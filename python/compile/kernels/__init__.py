@@ -1,0 +1,8 @@
+"""L1 Pallas kernels + pure-jnp reference oracles (ref.py).
+
+Each module exposes the paper benchmark's hot-spot as a Pallas kernel
+(interpret=True; see DESIGN.md §Hardware-Adaptation) plus helpers. ref.py
+carries the oracles the kernels are tested against.
+"""
+
+from . import hotspot, hotspot3d, lud, matmul, nw, ref, sort  # noqa: F401

@@ -1,0 +1,64 @@
+"""Pallas hotspot3D 7-point stencil — the "CUDA"-analog Rodinia 3D kernel.
+
+TPU adaptation: Rodinia's 3D CUDA kernel marches z-planes through shared
+memory (three resident planes). Here each grid step owns one z-plane of the
+output and reads the (z-1, z, z+1) planes from the VMEM-resident field.
+The plane-per-step schedule is exactly the CUDA kernel's z-march expressed
+as a BlockSpec grid instead of a software pipeline.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _hs3d_kernel(temp_ref, power_ref, o_ref, *, nz, cc, cw, ce, cn, cs, ct, cb, step_div_cap):
+    z = pl.program_id(0)
+    zb = jnp.maximum(z - 1, 0)
+    zu = jnp.minimum(z + 1, nz - 1)
+    t = temp_ref[z, :, :]
+    below = temp_ref[zb, :, :]
+    above = temp_ref[zu, :, :]
+    w = jnp.concatenate([t[:, :1], t[:, :-1]], axis=1)
+    e = jnp.concatenate([t[:, 1:], t[:, -1:]], axis=1)
+    n_ = jnp.concatenate([t[:1, :], t[:-1, :]], axis=0)
+    s = jnp.concatenate([t[1:, :], t[-1:, :]], axis=0)
+    p = power_ref[0, :, :]
+    o_ref[0, :, :] = (
+        cc * t
+        + cw * w
+        + ce * e
+        + cn * n_
+        + cs * s
+        + cb * below
+        + ct * above
+        + step_div_cap * p
+        + ct * ref.HS_AMB_TEMP
+    )
+
+
+def hotspot3d_step(temp, power, *, interpret=True):
+    """One step of the 7-point stencil on f32[NZ,NY,NX]."""
+    nz, ny, nx = temp.shape
+    c = ref.hotspot3d_coeffs(nx, ny, nz)
+    kernel = lambda t, p, o: _hs3d_kernel(t, p, o, nz=nz, **c)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((nz, ny, nx), jnp.float32),
+        grid=(nz,),
+        in_specs=[
+            pl.BlockSpec((nz, ny, nx), lambda z: (0, 0, 0)),  # full field
+            pl.BlockSpec((1, ny, nx), lambda z: (z, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ny, nx), lambda z: (z, 0, 0)),
+        interpret=interpret,
+    )(temp, power)
+
+
+def hotspot3d(temp, power, steps, *, interpret=True):
+    def body(_, t):
+        return hotspot3d_step(t, power, interpret=interpret)
+
+    return jax.lax.fori_loop(0, steps, body, temp)

@@ -1,0 +1,133 @@
+"""Pallas blocked LU decomposition — Rodinia lud's three-kernel structure.
+
+Rodinia's CUDA lud factors the matrix in B-sized panels with three kernels:
+  lud_diagonal  — factor the B x B diagonal block,
+  lud_perimeter — solve the row panel (U) and column panel (L),
+  lud_internal  — rank-B GEMM update of the trailing submatrix (the hot
+                  spot, >90% of the FLOPs).
+
+TPU adaptation: diagonal + perimeter are tiny and latency-bound, so they
+stay as traced jnp (XLA fuses them); the internal update — the hot spot —
+is the Pallas kernel, a (bm, B) x (B, bn) tile GEMM-subtract streamed
+through VMEM, MXU-shaped like kernels/matmul.py.
+
+The panel loop runs at trace time (Python range over a static size), so a
+fixed-size problem lowers to one HLO module.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_B = 32  # panel width (Rodinia uses 16; 32 suits 8-lane VPU rows)
+
+
+def _internal_kernel(l_ref, u_ref, a_ref, o_ref):
+    """o = a - l @ u for one (bm, bn) trailing tile."""
+    o_ref[...] = a_ref[...] - jnp.dot(
+        l_ref[...], u_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _fit_block(dim, pref):
+    """Largest divisor of `dim` that is <= pref (trailing dims shrink by B
+    each panel step, so a fixed 128 tile rarely divides them evenly)."""
+    b = min(pref, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _internal_update(lpanel, upanel, trailing, *, bm, bn, interpret):
+    """trailing -= lpanel @ upanel via the Pallas tile kernel."""
+    m, b = lpanel.shape
+    _, n = upanel.shape
+    bm, bn = _fit_block(m, bm), _fit_block(n, bn)
+    return pl.pallas_call(
+        _internal_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, b), lambda i, j: (i, 0)),
+            pl.BlockSpec((b, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(lpanel, upanel, trailing)
+
+
+def _factor_diag(d):
+    """Unblocked Doolittle LU of the B x B diagonal block (packed form)."""
+    b = d.shape[0]
+
+    def outer(k, m):
+        pivot = m[k, k]
+        col = m[:, k] / pivot
+        below = jnp.arange(b) > k
+        m = m.at[:, k].set(jnp.where(below, col, m[:, k]))
+        lcol = jnp.where(below, m[:, k], 0.0)
+        urow = jnp.where(jnp.arange(b) > k, m[k, :], 0.0)
+        return m - jnp.outer(lcol, urow)
+
+    return jax.lax.fori_loop(0, b, outer, d)
+
+
+# NOTE: jax.scipy.linalg.solve_triangular lowers to a typed-FFI custom
+# call that xla_extension 0.5.1 (the version behind the rust `xla` crate)
+# rejects at compile time, so both substitutions are written as explicit
+# fori_loops over the B=32 panel — they lower to plain HLO ops.
+
+
+def _solve_lower_unit(lu, rhs):
+    """Solve L X = rhs with L unit-lower from packed lu (forward subst).
+
+    Row i only reads already-final rows j < i (strictly-lower L), so the
+    loop-carried X is safe.
+    """
+    l = jnp.tril(lu, -1)
+    b = lu.shape[0]
+
+    def body(i, x):
+        xi = rhs[i, :] - l[i, :] @ x
+        return x.at[i, :].set(xi)
+
+    return jax.lax.fori_loop(0, b, body, jnp.zeros_like(rhs))
+
+
+def _solve_upper_right(lu, rhs):
+    """Solve X U = rhs with U upper from packed lu (column substitution)."""
+    u = jnp.triu(lu)
+    b = lu.shape[0]
+
+    def body(j, x):
+        col = (rhs[:, j] - x @ u[:, j]) / u[j, j]
+        return x.at[:, j].set(col)
+
+    return jax.lax.fori_loop(0, b, body, jnp.zeros_like(rhs))
+
+
+def lud(a, *, block=DEFAULT_B, bm=128, bn=128, interpret=True):
+    """Blocked LU (no pivoting) of f32[N,N]; returns Rodinia packed LU."""
+    n = a.shape[0]
+    b = min(block, n)
+    if n % b:
+        raise ValueError(f"matrix size {n} not divisible by block {b}")
+    m = a
+    for k0 in range(0, n, b):
+        d = _factor_diag(m[k0 : k0 + b, k0 : k0 + b])
+        m = m.at[k0 : k0 + b, k0 : k0 + b].set(d)
+        rest = k0 + b
+        if rest >= n:
+            break
+        # perimeter: U row panel and L column panel
+        urow = _solve_lower_unit(d, m[k0 : k0 + b, rest:])
+        lcol = _solve_upper_right(d, m[rest:, k0 : k0 + b])
+        m = m.at[k0 : k0 + b, rest:].set(urow)
+        m = m.at[rest:, k0 : k0 + b].set(lcol)
+        # internal: trailing -= L @ U  (the Pallas hot spot)
+        trailing = _internal_update(
+            lcol, urow, m[rest:, rest:], bm=bm, bn=bn, interpret=interpret
+        )
+        m = m.at[rest:, rest:].set(trailing)
+    return m

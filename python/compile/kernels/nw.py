@@ -1,0 +1,53 @@
+"""Pallas Needleman-Wunsch wavefront — the "CUDA"-analog Rodinia nw kernel.
+
+Rodinia's CUDA nw sweeps the DP matrix in anti-diagonal waves of
+threadblocks, each block buffering its tile in shared memory. TPU
+adaptation: the whole (N+1)^2 f32 matrix for our AOT sizes (<= 2049^2 =
+16 MiB... we cap at 1025^2 = 4 MiB) fits VMEM, so the kernel keeps the
+matrix resident and runs the anti-diagonal recurrence as a fori_loop of
+full-row gathers — the wave parallelism maps to the VPU lanes instead of
+threadblocks. Grid = (1,): a single kernel instance owns the matrix, like
+one cooperative CUDA grid launch.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nw_kernel(ref_ref, o_ref, *, n, penalty):
+    pen = jnp.float32(penalty)
+    ar = jnp.arange(n, dtype=jnp.float32)
+    m = jnp.zeros((n, n), jnp.float32)
+    m = m.at[:, 0].set(-ar * pen)
+    m = m.at[0, :].set(-ar * pen)
+    sub = ref_ref[...]
+    rows = jnp.arange(n)
+
+    def diag_body(d, m):
+        i = rows
+        j = d - i
+        valid = (i >= 1) & (j >= 1) & (j <= n - 1)
+        jc = jnp.clip(j, 0, n - 1)
+        diag = m[jnp.clip(i - 1, 0, n - 1), jnp.clip(jc - 1, 0, n - 1)]
+        up = m[jnp.clip(i - 1, 0, n - 1), jc]
+        left = m[i, jnp.clip(jc - 1, 0, n - 1)]
+        val = jnp.maximum(diag + sub[i, jc], jnp.maximum(up - pen, left - pen))
+        return m.at[i, jc].set(jnp.where(valid, val, m[i, jc]))
+
+    m = jax.lax.fori_loop(2, 2 * n - 1, diag_body, m)
+    o_ref[...] = m
+
+
+def nw(reference, penalty, *, interpret=True):
+    """Fill the NW DP matrix for f32[N+1,N+1] substitution scores."""
+    n = reference.shape[0]
+    kernel = lambda r, o: _nw_kernel(r, o, n=n, penalty=float(penalty))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        interpret=interpret,
+    )(reference)

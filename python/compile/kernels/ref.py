@@ -1,0 +1,282 @@
+"""Pure-jnp reference oracles for every benchmark kernel.
+
+These are the correctness ground truth: each Pallas kernel in this package
+must match its oracle here to within float tolerance (pytest enforces it,
+hypothesis sweeps shapes/dtypes). They are also lowered to HLO as the
+"CUDA"-analog implementation variants (plain XLA, no Pallas) so the Rust
+runtime has at least two real executable variants per interface.
+
+All functions are shape-polymorphic pure functions of jnp arrays; no
+Python-side randomness or I/O.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# matmul — Fig 1e. C = A @ B over f32[N,N].
+# ---------------------------------------------------------------------------
+
+
+def matmul(a, b):
+    """Plain jnp matrix multiply (the BLAS/CUBLAS oracle)."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# hotspot — Fig 1a. Rodinia 2D thermal simulation.
+#
+# Rodinia's hotspot iterates a 5-point stencil over a power grid:
+#   T'[i,j] = T[i,j] + (dt/cap) * ( P[i,j]
+#             + (T[i+1,j] + T[i-1,j] - 2 T[i,j]) / Ry
+#             + (T[i,j+1] + T[i,j-1] - 2 T[i,j]) / Rx
+#             + (Tamb - T[i,j]) / Rz )
+# with clamped (edge-replicate) boundaries, `steps` times.
+# Constants follow Rodinia's hotspot defaults scaled to grid size; we fold
+# them into precomputed coefficients (step_div_cap, rx1, ry1, rz1).
+# ---------------------------------------------------------------------------
+
+HS_AMB_TEMP = 80.0
+
+
+def hotspot_coeffs(n):
+    """Rodinia hotspot coefficient set for an n x n grid (f32 scalars)."""
+    # Chip parameters from Rodinia hotspot.c
+    t_chip = 0.0005
+    chip_height = 0.016
+    chip_width = 0.016
+    k_si = 100.0
+    cap_factor = 0.5
+    precision = 0.001
+    max_pd = 3.0e6
+    spec_heat_si = 1.75e6
+
+    grid_height = chip_height / n
+    grid_width = chip_width / n
+    cap = cap_factor * spec_heat_si * t_chip * grid_width * grid_height
+    rx = grid_width / (2.0 * k_si * t_chip * grid_height)
+    ry = grid_height / (2.0 * k_si * t_chip * grid_width)
+    rz = t_chip / (k_si * grid_height * grid_width)
+    max_slope = max_pd / (spec_heat_si * t_chip)
+    step = precision / max_slope
+    # Plain Python floats: callers embed these as compile-time constants
+    # (both in jnp traces and inside Pallas kernels).
+    return dict(
+        step_div_cap=float(np.float32(step / cap)),
+        rx1=float(np.float32(1.0 / rx)),
+        ry1=float(np.float32(1.0 / ry)),
+        rz1=float(np.float32(1.0 / rz)),
+    )
+
+
+def _hotspot_step(temp, power, step_div_cap, rx1, ry1, rz1):
+    """One explicit-Euler step of the Rodinia hotspot stencil (edge clamp)."""
+    up = jnp.concatenate([temp[:1, :], temp[:-1, :]], axis=0)
+    down = jnp.concatenate([temp[1:, :], temp[-1:, :]], axis=0)
+    left = jnp.concatenate([temp[:, :1], temp[:, :-1]], axis=1)
+    right = jnp.concatenate([temp[:, 1:], temp[:, -1:]], axis=1)
+    delta = step_div_cap * (
+        power
+        + (down + up - 2.0 * temp) * ry1
+        + (right + left - 2.0 * temp) * rx1
+        + (HS_AMB_TEMP - temp) * rz1
+    )
+    return temp + delta
+
+
+def hotspot(temp, power, steps):
+    """Run `steps` hotspot iterations on f32[N,N] grids."""
+    c = hotspot_coeffs(temp.shape[0])
+    step = partial(_hotspot_step, **c)
+
+    def body(_, t):
+        return step(t, power)
+
+    return lax.fori_loop(0, steps, body, temp)
+
+
+# ---------------------------------------------------------------------------
+# hotspot3D — Fig 1b. Rodinia 3D thermal simulation (7-point stencil).
+#
+# T'[z,y,x] = cc*T + cw*W + ce*E + cn*N + cs*S + cb*B + ct*U
+#             + step/cap * P + ct*amb_temp
+# Coefficients follow Rodinia's 3D.c (with edge-replicate boundaries).
+# ---------------------------------------------------------------------------
+
+
+def hotspot3d_coeffs(nx, ny, nz):
+    t_chip = 0.0005
+    chip_height = 0.016
+    chip_width = 0.016
+    k_si = 100.0
+    cap_factor = 0.5
+    precision = 0.001
+    max_pd = 3.0e6
+    spec_heat_si = 1.75e6
+
+    dx = chip_height / nx
+    dy = chip_width / ny
+    dz = t_chip / nz
+    cap = cap_factor * spec_heat_si * t_chip * dx * dy
+    rx = dy / (2.0 * k_si * t_chip * dx)
+    ry = dx / (2.0 * k_si * t_chip * dy)
+    rz = dz / (k_si * dx * dy)
+    max_slope = max_pd / (spec_heat_si * t_chip)
+    dt = precision / max_slope
+    step_div_cap = dt / cap
+    ce = cw = step_div_cap / rx
+    cn = cs = step_div_cap / ry
+    ct = cb = step_div_cap / rz
+    cc = 1.0 - (2.0 * ce + 2.0 * cn + 3.0 * ct)
+    return dict(
+        cc=float(np.float32(cc)),
+        cw=float(np.float32(cw)),
+        ce=float(np.float32(ce)),
+        cn=float(np.float32(cn)),
+        cs=float(np.float32(cs)),
+        ct=float(np.float32(ct)),
+        cb=float(np.float32(cb)),
+        step_div_cap=float(np.float32(step_div_cap)),
+    )
+
+
+def _shift(a, off, axis):
+    """Edge-replicated shift of `a` by one along `axis` (off in {-1,+1})."""
+    n = a.shape[axis]
+    if off == 1:
+        idx = jnp.concatenate([jnp.arange(1, n), jnp.array([n - 1])])
+    else:
+        idx = jnp.concatenate([jnp.array([0]), jnp.arange(0, n - 1)])
+    return jnp.take(a, idx, axis=axis)
+
+
+def _hotspot3d_step(t, p, cc, cw, ce, cn, cs, ct, cb, step_div_cap):
+    w = _shift(t, -1, 2)
+    e = _shift(t, 1, 2)
+    n = _shift(t, -1, 1)
+    s = _shift(t, 1, 1)
+    b = _shift(t, -1, 0)
+    u = _shift(t, 1, 0)
+    return (
+        cc * t
+        + cw * w
+        + ce * e
+        + cn * n
+        + cs * s
+        + cb * b
+        + ct * u
+        + step_div_cap * p
+        + ct * HS_AMB_TEMP
+    )
+
+
+def hotspot3d(temp, power, steps):
+    """Run `steps` iterations of the 7-point stencil on f32[NZ,NY,NX]."""
+    c = hotspot3d_coeffs(temp.shape[2], temp.shape[1], temp.shape[0])
+    step = partial(_hotspot3d_step, **c)
+
+    def body(_, t):
+        return step(t, power)
+
+    return lax.fori_loop(0, steps, body, temp)
+
+
+# ---------------------------------------------------------------------------
+# lud — Fig 1c. In-place LU decomposition (Doolittle, no pivoting),
+# matching Rodinia's lud: returns a single matrix with U on/above the
+# diagonal and the unit-lower-triangular L (without its 1s) below.
+# ---------------------------------------------------------------------------
+
+
+def lud(a):
+    """LU decomposition without pivoting of f32[N,N]; Rodinia packed form."""
+    n = a.shape[0]
+
+    def outer(k, m):
+        pivot = m[k, k]
+        # L column below the diagonal
+        col = m[:, k] / pivot
+        row_mask = jnp.arange(n) > k
+        m = m.at[:, k].set(jnp.where(row_mask, col, m[:, k]))
+        # trailing update: m[i,j] -= l[i,k] * u[k,j] for i>k, j>k
+        lcol = jnp.where(row_mask, m[:, k], 0.0)
+        urow = jnp.where(jnp.arange(n) > k, m[k, :], 0.0)
+        return m - jnp.outer(lcol, urow)
+
+    return lax.fori_loop(0, n, outer, a)
+
+
+def lud_unpack(m):
+    """Split packed LU into (L with unit diag, U)."""
+    l = jnp.tril(m, -1) + jnp.eye(m.shape[0], dtype=m.dtype)
+    u = jnp.triu(m)
+    return l, u
+
+
+def make_diag_dominant(a):
+    """Make a random matrix safely factorable without pivoting."""
+    n = a.shape[0]
+    return a + n * jnp.eye(n, dtype=a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# nw — Fig 1d. Needleman-Wunsch global sequence alignment score matrix.
+#
+# Rodinia nw fills an (N+1)x(N+1) DP matrix:
+#   M[i,j] = max(M[i-1,j-1] + ref[i,j], M[i,j-1] - penalty, M[i-1,j] - penalty)
+# with M[i,0] = -i*penalty, M[0,j] = -j*penalty. `reference` is the
+# substitution score matrix (Rodinia precomputes it from BLOSUM62 lookups).
+# The wavefront recurrence is expressed over anti-diagonals so it lowers to
+# a lax.fori_loop of vectorized ops (this is also how the GPU kernel works).
+# ---------------------------------------------------------------------------
+
+
+def nw(reference, penalty):
+    """DP score matrix for f32[N+1,N+1] reference (row/col 0 ignored).
+
+    `reference` carries the substitution scores at [i,j] for i,j >= 1.
+    Returns the filled f32[N+1,N+1] matrix.
+    """
+    n = reference.shape[0]  # N+1
+    pen = jnp.float32(penalty)
+    init = jnp.zeros((n, n), jnp.float32)
+    ar = jnp.arange(n, dtype=jnp.float32)
+    init = init.at[:, 0].set(-ar * pen)
+    init = init.at[0, :].set(-ar * pen)
+
+    rows = jnp.arange(n)
+
+    def diag_body(d, m):
+        # cells (i, j) with i + j == d, 1 <= i, j <= n-1
+        i = rows
+        j = d - i
+        valid = (i >= 1) & (j >= 1) & (j <= n - 1)
+        jc = jnp.clip(j, 0, n - 1)
+        nw_ = m[jnp.clip(i - 1, 0, n - 1), jnp.clip(jc - 1, 0, n - 1)]
+        up = m[jnp.clip(i - 1, 0, n - 1), jc]
+        left = m[i, jnp.clip(jc - 1, 0, n - 1)]
+        sub = reference[i, jc]
+        val = jnp.maximum(nw_ + sub, jnp.maximum(up - pen, left - pen))
+        cur = m[i, jc]
+        new = jnp.where(valid, val, cur)
+        return m.at[i, jc].set(new)
+
+    return lax.fori_loop(2, 2 * n - 1, diag_body, init)
+
+
+def nw_reference_matrix(key, n):
+    """Random substitution-score matrix like Rodinia's BLOSUM62 lookups."""
+    return jax.random.randint(key, (n + 1, n + 1), -10, 11).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# sort — quickstart app (paper Listing 1.3). Ascending sort of f32[N].
+# ---------------------------------------------------------------------------
+
+
+def sort(arr):
+    return jnp.sort(arr)

@@ -1,0 +1,51 @@
+"""Pallas bitonic sort — the "CUDA"-analog sort variant from Listing 1.3.
+
+A bitonic sorting network over a power-of-two f32 vector. On a GPU this is
+the classic shared-memory bitonic kernel; the TPU mapping keeps the whole
+vector in VMEM and performs each compare-exchange stage as a vectorized
+gather + min/max over the full vector (VPU lanes play the role of threads).
+log2(N)*(log2(N)+1)/2 stages, all inside one kernel instance.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitonic_kernel(x_ref, o_ref, *, n):
+    logn = n.bit_length() - 1
+    idx = jnp.arange(n)
+    arr = x_ref[...]
+
+    def stage(arr, k, j):
+        partner = idx ^ j
+        a = arr
+        b = arr[partner]
+        ascending = (idx & k) == 0
+        keep_min = (idx < partner) == ascending
+        lo = jnp.minimum(a, b)
+        hi = jnp.maximum(a, b)
+        return jnp.where(keep_min, lo, hi)
+
+    # Static double loop: network depth is log-sized so full unroll is fine.
+    for kk in range(1, logn + 1):
+        k = 1 << kk
+        for jj in range(kk - 1, -1, -1):
+            arr = stage(arr, k, 1 << jj)
+    o_ref[...] = arr
+
+
+def sort(x, *, interpret=True):
+    """Ascending sort of f32[N], N a power of two, via a bitonic network."""
+    n = x.shape[0]
+    if n & (n - 1):
+        raise ValueError(f"bitonic sort needs power-of-two length, got {n}")
+    kernel = lambda i, o: _bitonic_kernel(i, o, n=n)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        interpret=interpret,
+    )(x)

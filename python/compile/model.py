@@ -1,0 +1,183 @@
+"""L2: benchmark compute graphs, one per (app, variant), ready to lower.
+
+Each entry pairs a pure jax function with example input specs so aot.py can
+`jax.jit(fn).lower(*specs)` and dump HLO text. Two executable variants per
+interface come from here:
+
+  * ``jnp``    — the pure-XLA graph from kernels/ref.py. This plays the
+                 role of the paper's hand-written CUDA variant (a
+                 straightforwardly-parallel implementation the XLA
+                 compiler maps to the device).
+  * ``pallas`` — the hand-tiled Pallas kernel (interpret=True). This plays
+                 the role of the *tuned* device library variant (CUBLAS
+                 for mmul, the hand-optimized Rodinia CUDA kernel for the
+                 others); its tiling is chosen for the TPU memory
+                 hierarchy (DESIGN.md §Hardware-Adaptation).
+
+The native CPU variants ("Seq"/"OMP" analogs) live in rust/src/apps/*.
+
+The stencil time loops run INSIDE the lowered module (lax.fori_loop), so
+one artifact = one full simulation — Rust never dispatches per step.
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hotspot as k_hotspot
+from .kernels import hotspot3d as k_hotspot3d
+from .kernels import lud as k_lud
+from .kernels import matmul as k_matmul
+from .kernels import nw as k_nw
+from .kernels import ref
+from .kernels import sort as k_sort
+
+F32 = jnp.float32
+
+# Iteration counts baked into the stencil artifacts. Rodinia's defaults are
+# larger; 8 keeps CPU execution of the biggest AOT size < seconds while
+# still exercising the loop structure. Rust mirrors these in apps/*.
+HOTSPOT_STEPS = 8
+HOTSPOT3D_STEPS = 8
+HOTSPOT3D_LAYERS = 8
+NW_PENALTY = 10.0
+
+
+@dataclass
+class Entry:
+    """One lowerable artifact: (app, variant, size) -> HLO module."""
+
+    app: str
+    variant: str
+    size: int
+    fn: Callable
+    specs: tuple  # ShapeDtypeStructs of the inputs
+    params: dict = field(default_factory=dict)
+
+    @property
+    def name(self) -> str:
+        return f"{self.app}_{self.variant}_{self.size}"
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _matmul_entries(size: int):
+    s = (_spec(size, size), _spec(size, size))
+    yield Entry("matmul", "jnp", size, lambda a, b: (ref.matmul(a, b),), s)
+    if size >= 8:
+        # clamp tiles to the problem so tiny sizes still build
+        bm = bn = bk = min(128, size)
+        yield Entry(
+            "matmul",
+            "pallas",
+            size,
+            lambda a, b: (k_matmul.matmul(a, b, bm=bm, bn=bn, bk=bk),),
+            s,
+            {"bm": bm, "bn": bn, "bk": bk},
+        )
+
+
+def _hotspot_entries(size: int):
+    s = (_spec(size, size), _spec(size, size))
+    p = {"steps": HOTSPOT_STEPS}
+    yield Entry(
+        "hotspot", "jnp", size, lambda t, pw: (ref.hotspot(t, pw, HOTSPOT_STEPS),), s, p
+    )
+    band = min(k_hotspot.DEFAULT_BAND, size)
+    yield Entry(
+        "hotspot",
+        "pallas",
+        size,
+        lambda t, pw: (k_hotspot.hotspot(t, pw, HOTSPOT_STEPS, band=band),),
+        s,
+        {**p, "band": band},
+    )
+
+
+def _hotspot3d_entries(size: int):
+    nz = HOTSPOT3D_LAYERS
+    s = (_spec(nz, size, size), _spec(nz, size, size))
+    p = {"steps": HOTSPOT3D_STEPS, "layers": nz}
+    yield Entry(
+        "hotspot3d",
+        "jnp",
+        size,
+        lambda t, pw: (ref.hotspot3d(t, pw, HOTSPOT3D_STEPS),),
+        s,
+        p,
+    )
+    yield Entry(
+        "hotspot3d",
+        "pallas",
+        size,
+        lambda t, pw: (k_hotspot3d.hotspot3d(t, pw, HOTSPOT3D_STEPS),),
+        s,
+        p,
+    )
+
+
+def _lud_entries(size: int):
+    s = (_spec(size, size),)
+    yield Entry("lud", "jnp", size, lambda a: (ref.lud(a),), s)
+    yield Entry("lud", "pallas", size, lambda a: (k_lud.lud(a),), s)
+
+
+def _nw_entries(size: int):
+    # `size` is N; the DP matrix is (N+1)^2
+    n1 = size + 1
+    s = (_spec(n1, n1),)
+    p = {"penalty": NW_PENALTY}
+    yield Entry("nw", "jnp", size, lambda r: (ref.nw(r, NW_PENALTY),), s, p)
+    yield Entry("nw", "pallas", size, lambda r: (k_nw.nw(r, NW_PENALTY),), s, p)
+
+
+def _sort_entries(size: int):
+    s = (_spec(size),)
+    yield Entry("sort", "jnp", size, lambda a: (ref.sort(a),), s)
+    yield Entry("sort", "pallas", size, lambda a: (k_sort.sort(a),), s)
+
+
+APP_BUILDERS = {
+    "matmul": _matmul_entries,
+    "hotspot": _hotspot_entries,
+    "hotspot3d": _hotspot3d_entries,
+    "lud": _lud_entries,
+    "nw": _nw_entries,
+    "sort": _sort_entries,
+}
+
+# Default AOT size grids. These are the sizes the Rust runtime can execute
+# for real; the Fig. 1 sweeps extrapolate beyond them through the
+# calibrated device model (DESIGN.md §3). Kept modest so `make artifacts`
+# finishes in minutes on CPU.
+DEFAULT_SIZES = {
+    "matmul": [8, 16, 32, 64, 128, 256, 512],
+    "hotspot": [64, 128, 256, 512],
+    "hotspot3d": [64, 128, 256],
+    "lud": [64, 128, 256],
+    "nw": [63, 127, 255, 511],  # DP matrix is size+1 (power-of-two friendly)
+    "sort": [256, 1024, 4096, 16384],
+}
+
+FULL_SIZES = {
+    "matmul": DEFAULT_SIZES["matmul"] + [1024],
+    "hotspot": DEFAULT_SIZES["hotspot"] + [1024],
+    "hotspot3d": DEFAULT_SIZES["hotspot3d"] + [512],
+    "lud": DEFAULT_SIZES["lud"] + [512],
+    "nw": DEFAULT_SIZES["nw"] + [1023],
+    "sort": DEFAULT_SIZES["sort"] + [65536],
+}
+
+
+def entries(apps=None, sizes=None, full=False):
+    """Yield every Entry for the requested apps/size grid."""
+    table = FULL_SIZES if full else DEFAULT_SIZES
+    for app, builder in APP_BUILDERS.items():
+        if apps and app not in apps:
+            continue
+        for size in sizes or table[app]:
+            yield from builder(size)

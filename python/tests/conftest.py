@@ -1,0 +1,14 @@
+"""Shared pytest fixtures for the kernel test suite."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(20230710)
+
+
+def pytest_configure(config):
+    # interpret-mode Pallas on CPU is slow; keep example counts sane
+    config.addinivalue_line("markers", "slow: long-running sweeps")

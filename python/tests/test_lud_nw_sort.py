@@ -1,0 +1,124 @@
+"""lud / nw / sort Pallas kernels vs the jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lud, nw, ref, sort
+
+# -------------------------------------------------------------------- lud
+
+
+def dd_matrix(key, n):
+    return ref.make_diag_dominant(jax.random.normal(key, (n, n), jnp.float32))
+
+
+@pytest.mark.parametrize("n", [32, 64, 96, 128, 256])
+def test_lud_matches_oracle(key, n):
+    m = dd_matrix(jax.random.fold_in(key, n), n)
+    got = lud.lud(m)
+    want = ref.lud(m)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("n", [64, 128])
+def test_lud_reconstructs_input(key, n):
+    m = dd_matrix(jax.random.fold_in(key, 7 * n), n)
+    packed = lud.lud(m)
+    l, u = ref.lud_unpack(packed)
+    np.testing.assert_allclose(np.array(l @ u), np.array(m), rtol=1e-3, atol=5e-2)
+
+
+def test_lud_identity_fixed_point():
+    eye = jnp.eye(64, dtype=jnp.float32)
+    np.testing.assert_allclose(lud.lud(eye), eye, rtol=0, atol=0)
+
+
+def test_lud_indivisible_raises(key):
+    m = dd_matrix(key, 100)
+    with pytest.raises(ValueError, match="divisible"):
+        lud.lud(m, block=32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([32, 64]), seed=st.integers(0, 2**31 - 1))
+def test_lud_hypothesis(n, seed):
+    m = dd_matrix(jax.random.PRNGKey(seed), n)
+    np.testing.assert_allclose(lud.lud(m), ref.lud(m), rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------- nw
+
+
+@pytest.mark.parametrize("n", [16, 64, 128])
+def test_nw_matches_oracle(key, n):
+    r = ref.nw_reference_matrix(jax.random.fold_in(key, n), n)
+    got = nw.nw(r, 10)
+    want = ref.nw(r, 10)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_nw_borders():
+    n = 32
+    r = jnp.zeros((n + 1, n + 1), jnp.float32)
+    m = nw.nw(r, 10)
+    ar = np.arange(n + 1, dtype=np.float32)
+    np.testing.assert_allclose(np.array(m)[0, :], -ar * 10.0)
+    np.testing.assert_allclose(np.array(m)[:, 0], -ar * 10.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32]),
+    penalty=st.sampled_from([1.0, 5.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nw_hypothesis(n, penalty, seed):
+    r = ref.nw_reference_matrix(jax.random.PRNGKey(seed), n)
+    got = nw.nw(r, penalty)
+    want = ref.nw(r, penalty)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_nw_monotone_in_penalty(key):
+    # larger gap penalty can only decrease (or keep) the final score
+    r = ref.nw_reference_matrix(key, 32)
+    lo = np.array(nw.nw(r, 1.0))[-1, -1]
+    hi = np.array(nw.nw(r, 20.0))[-1, -1]
+    assert hi <= lo
+
+
+# ------------------------------------------------------------------- sort
+
+
+@pytest.mark.parametrize("n", [16, 256, 1024, 4096])
+def test_sort_matches_oracle(key, n):
+    x = jax.random.normal(jax.random.fold_in(key, n), (n,), jnp.float32)
+    got = sort.sort(x)
+    np.testing.assert_allclose(got, ref.sort(x), rtol=0, atol=0)
+
+
+def test_sort_non_power_of_two_raises(key):
+    x = jax.random.normal(key, (100,), jnp.float32)
+    with pytest.raises(ValueError, match="power-of-two"):
+        sort.sort(x)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    logn=st.integers(2, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sort_hypothesis(logn, seed):
+    n = 1 << logn
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+    out = np.array(sort.sort(x))
+    assert (np.diff(out) >= 0).all()
+    np.testing.assert_allclose(np.sort(np.array(x)), out, rtol=0, atol=0)
+
+
+def test_sort_duplicates_and_negatives():
+    x = jnp.array([3.0, -1.0, 3.0, 0.0, -1.0, 2.5, 2.5, -7.0], jnp.float32)
+    np.testing.assert_allclose(sort.sort(x), np.sort(np.array(x)))

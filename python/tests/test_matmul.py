@@ -1,0 +1,77 @@
+"""Pallas matmul kernel vs the jnp oracle (the paper's CUBLAS-analog)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref
+
+SIZES = [8, 16, 32, 64, 128, 256]
+
+
+def rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_square_matches_oracle(key, n):
+    k1, k2 = jax.random.split(jax.random.fold_in(key, n))
+    a, b = rand(k1, (n, n)), rand(k2, (n, n))
+    got = matmul.matmul(a, b)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rectangular_blocks(key):
+    # m, n, k all different, multiple blocks in each dimension
+    k1, k2 = jax.random.split(key)
+    a, b = rand(k1, (256, 128)), rand(k2, (128, 384))
+    got = matmul.matmul(a, b)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_indivisible_raises(key):
+    a = rand(key, (100, 100))
+    with pytest.raises(ValueError, match="divisible"):
+        matmul.matmul(a, a, bm=64, bn=64, bk=64)
+
+
+def test_vmem_budget():
+    # default tiling must fit VMEM with headroom for double buffering
+    assert matmul.vmem_bytes() <= 16 * 2**20 / 8
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32, 64]),
+    n=st.sampled_from([8, 16, 32, 64]),
+    k=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(m, n, k, seed):
+    kk = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(kk)
+    a, b = rand(k1, (m, k)), rand(k2, (k, n))
+    got = matmul.matmul(a, b, bm=min(8, m), bn=min(8, n), bk=min(8, k))
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_scaling_invariance(scale, seed):
+    # (sA) @ B == s (A @ B) within float tolerance
+    kk = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(kk)
+    a, b = rand(k1, (32, 32)), rand(k2, (32, 32))
+    s = jnp.float32(scale)
+    left = matmul.matmul(a * s, b)
+    right = matmul.matmul(a, b) * s
+    np.testing.assert_allclose(left, right, rtol=1e-3, atol=1e-3)
+
+
+def test_identity(key):
+    a = rand(key, (64, 64))
+    eye = jnp.eye(64, dtype=jnp.float32)
+    np.testing.assert_allclose(matmul.matmul(a, eye), a, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,101 @@
+"""hotspot / hotspot3D Pallas kernels vs the jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hotspot, hotspot3d, ref
+
+
+def grids(key, n):
+    k1, k2 = jax.random.split(key)
+    temp = ref.HS_AMB_TEMP + 5.0 * jax.random.normal(k1, (n, n), jnp.float32)
+    power = jnp.abs(jax.random.normal(k2, (n, n), jnp.float32))
+    return temp, power
+
+
+@pytest.mark.parametrize("n", [64, 128, 256])
+@pytest.mark.parametrize("steps", [1, 4])
+def test_hotspot_matches_oracle(key, n, steps):
+    t, p = grids(jax.random.fold_in(key, n), n)
+    got = hotspot.hotspot(t, p, steps)
+    want = ref.hotspot(t, p, steps)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_hotspot_band_size_invariance(key):
+    # the banded decomposition must not change results
+    t, p = grids(key, 128)
+    a = hotspot.hotspot_step(t, p, band=32)
+    b = hotspot.hotspot_step(t, p, band=128)
+    np.testing.assert_allclose(a, b, rtol=0, atol=0)
+
+
+def test_hotspot_bad_band_raises(key):
+    t, p = grids(key, 100)
+    with pytest.raises(ValueError, match="divisible"):
+        hotspot.hotspot_step(t, p, band=64)
+
+
+def test_hotspot_equilibrium_drift(key):
+    # with zero power and uniform ambient temperature the field is a
+    # fixed point of the stencil
+    n = 64
+    t = jnp.full((n, n), ref.HS_AMB_TEMP, jnp.float32)
+    p = jnp.zeros((n, n), jnp.float32)
+    out = hotspot.hotspot(t, p, 8)
+    np.testing.assert_allclose(out, t, rtol=0, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([32, 64, 96]),
+    steps=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hotspot_hypothesis(n, steps, seed):
+    t, p = grids(jax.random.PRNGKey(seed), n)
+    band = 32
+    got = hotspot.hotspot(t, p, steps, band=band)
+    want = ref.hotspot(t, p, steps)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+# ----------------------------------------------------------- hotspot3D
+
+
+def grids3d(key, n, nz=8):
+    k1, k2 = jax.random.split(key)
+    temp = ref.HS_AMB_TEMP + 5.0 * jax.random.normal(k1, (nz, n, n), jnp.float32)
+    power = jnp.abs(jax.random.normal(k2, (nz, n, n), jnp.float32))
+    return temp, power
+
+
+@pytest.mark.parametrize("n", [32, 64, 128])
+def test_hotspot3d_matches_oracle(key, n):
+    t, p = grids3d(jax.random.fold_in(key, 3 * n), n)
+    got = hotspot3d.hotspot3d(t, p, 3)
+    want = ref.hotspot3d(t, p, 3)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    nz=st.sampled_from([2, 4, 8]),
+    n=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hotspot3d_hypothesis(nz, n, seed):
+    t, p = grids3d(jax.random.PRNGKey(seed), n, nz)
+    got = hotspot3d.hotspot3d(t, p, 2)
+    want = ref.hotspot3d(t, p, 2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_hotspot3d_coefficients_stable():
+    c = ref.hotspot3d_coeffs(64, 64, 8)
+    # explicit scheme stability: center coefficient must stay positive
+    assert c["cc"] > 0.0
+    assert all(v >= 0.0 for k, v in c.items() if k != "cc")

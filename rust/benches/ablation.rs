@@ -1,0 +1,201 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!  A1 scheduler policy — makespan of a mixed task stream per policy;
+//!  A2 data awareness  — dmda with vs without the transfer-cost term
+//!     on a transfer-heavy ping-pong workload;
+//!  A3 calibration     — selection accuracy as models warm up;
+//!  A4 variant pruning — cold-phase length with vs without the
+//!     compile-time pruning pass (paper §5 future work).
+
+use std::sync::Arc;
+
+use compar::apps;
+use compar::bench_harness::selection::oracle_variant;
+use compar::runtime::Manifest;
+use compar::taskrt::{Config, Runtime, SchedPolicy};
+use compar::util::stats::fmt_time;
+
+fn manifest() -> Option<Arc<Manifest>> {
+    Manifest::load(&compar::runtime::manifest::default_dir())
+        .ok()
+        .map(Arc::new)
+}
+
+/// A1: mixed stream of all apps, modeled makespan per scheduler.
+fn a1_scheduler_policies(m: &Arc<Manifest>) {
+    println!("-- A1: scheduler policy vs modeled total time (mixed stream) --");
+    let stream: Vec<(&str, usize)> = vec![
+        ("matmul", 128),
+        ("hotspot", 128),
+        ("sort", 1024),
+        ("nw", 127),
+        ("lud", 128),
+        ("matmul", 256),
+        ("hotspot", 256),
+        ("sort", 4096),
+    ];
+    for sched in [
+        SchedPolicy::Random,
+        SchedPolicy::Eager,
+        SchedPolicy::WorkStealing,
+        SchedPolicy::Dmda,
+        SchedPolicy::Heft,
+    ] {
+        let cfg = Config {
+            ncpu: 2,
+            ncuda: 1,
+            sched,
+            ..Config::default()
+        };
+        let rt = Runtime::new(cfg, Some(m.clone())).unwrap();
+        // calibrate
+        for (app, size) in &stream {
+            let n = apps::codelet(app).unwrap().impls.len();
+            for i in 0..(3 * n) {
+                let _ = apps::run_once(&rt, app, *size, 100 + i as u64, None, false);
+            }
+        }
+        rt.drain_results();
+        for (i, (app, size)) in stream.iter().enumerate() {
+            let _ = apps::run_once(&rt, app, *size, 900 + i as u64, None, false);
+        }
+        let total = rt.metrics().modeled_total();
+        println!("   {:8} {:>12}", sched.name(), fmt_time(total));
+    }
+}
+
+/// A2: data awareness — a workload where CPU and GPU execution times are
+/// close, so the transfer term decides: tasks alternate between two
+/// instances, one GPU-resident, one CPU-resident. The data-aware policy
+/// keeps each task where its data lives; the ablated one bounces data
+/// across PCIe.
+fn a2_data_awareness(m: &Arc<Manifest>) {
+    println!("\n-- A2: dmda transfer-model term (alternating shared-data tasks) --");
+    for (label, data_aware) in [("dmda (data aware)", true), ("dm (no transfer term)", false)] {
+        let cfg = Config {
+            ncpu: 2,
+            ncuda: 1,
+            sched: SchedPolicy::Dmda,
+            data_aware,
+            ..Config::default()
+        };
+        let rt = Runtime::new(cfg, Some(m.clone())).unwrap();
+        let cl = rt.register_codelet(apps::codelet("lud").unwrap());
+        // calibrate on throwaway instances
+        for i in 0..9 {
+            let _ = apps::run_once(&rt, "lud", 256, 50 + i, None, false);
+        }
+        rt.drain_results();
+        // two long-lived instances, interleaved tasks
+        let inst_a = apps::prepare(&rt, "lud", 256, 1).unwrap();
+        let inst_b = apps::prepare(&rt, "lud", 256, 2).unwrap();
+        for i in 0..24 {
+            let inst = if i % 2 == 0 { &inst_a } else { &inst_b };
+            let spec = compar::taskrt::TaskSpec::new(cl.clone(), inst.handles.clone(), 256);
+            rt.submit(spec).unwrap();
+        }
+        rt.wait_all().unwrap();
+        let bytes = rt
+            .metrics()
+            .bytes_transferred
+            .load(std::sync::atomic::Ordering::Relaxed);
+        let total = rt.metrics().modeled_total();
+        let hist = rt.metrics().variant_histogram();
+        println!(
+            "   {label:24} modeled {:>12}  PCIe bytes {:>9}  {hist:?}",
+            fmt_time(total),
+            bytes
+        );
+    }
+}
+
+/// A3: calibration curve — decision accuracy in windows of 5 tasks.
+fn a3_calibration(m: &Arc<Manifest>) {
+    println!("\n-- A3: dmda selection accuracy while models warm (matmul 128) --");
+    let cfg = Config {
+        ncpu: 2,
+        ncuda: 1,
+        sched: SchedPolicy::Dmda,
+        ..Config::default()
+    };
+    let rt = Runtime::new(cfg, Some(m.clone())).unwrap();
+    let (oracle, _) = oracle_variant("matmul", 128);
+    let mut hits = Vec::new();
+    for i in 0..40u64 {
+        let run = apps::run_once(&rt, "matmul", 128, 300 + i, None, false).unwrap();
+        hits.push(run.variant == oracle);
+    }
+    for (w, window) in hits.chunks(10).enumerate() {
+        let acc = window.iter().filter(|h| **h).count() * 100 / window.len();
+        println!("   tasks {:2}-{:2}: {acc:3}% oracle ({oracle})", w * 10, w * 10 + 9);
+    }
+}
+
+/// A4: pruning shortens the cold phase — tasks until first oracle pick.
+fn a4_pruning(m: &Arc<Manifest>) {
+    println!("\n-- A4: variant pruning vs calibration length (matmul 256) --");
+    let (oracle, _) = oracle_variant("matmul", 256);
+    for (label, variants) in [
+        ("all 5 variants", None),
+        // pruned set as computed by compar::opt at margin 1.25
+        ("pruned (no omp)", Some(vec!["blas", "seq", "cuda", "cublas"])),
+    ] {
+        let cfg = Config {
+            ncpu: 2,
+            ncuda: 1,
+            sched: SchedPolicy::Dmda,
+            ..Config::default()
+        };
+        let rt = Runtime::new(cfg, Some(m.clone())).unwrap();
+        // register a codelet restricted to the variant subset
+        let full = apps::codelet("matmul").unwrap();
+        let cl = match &variants {
+            None => rt.register_codelet(full),
+            Some(keep) => {
+                let mut c = compar::taskrt::Codelet::new("mmul", "matmul", full.modes.clone());
+                for imp in &full.impls {
+                    if keep.contains(&imp.name.as_str()) {
+                        c.impls.push(imp.clone());
+                    }
+                }
+                rt.register_codelet(c)
+            }
+        };
+        let mut first_hit = None;
+        let mut streak_start = None;
+        for i in 0..40u64 {
+            let inst = apps::prepare(&rt, "matmul", 256, 500 + i).unwrap();
+            let spec = compar::taskrt::TaskSpec::new(cl.clone(), inst.handles.clone(), 256);
+            let id = rt.submit(spec).unwrap();
+            rt.wait_all().unwrap();
+            let r = rt
+                .metrics()
+                .results()
+                .into_iter()
+                .rev()
+                .find(|r| r.task == id)
+                .unwrap();
+            if r.variant == oracle {
+                first_hit.get_or_insert(i);
+                streak_start.get_or_insert(i);
+            } else {
+                streak_start = None;
+            }
+        }
+        println!(
+            "   {label:18} first oracle pick at task {:?}, stable from task {:?}",
+            first_hit, streak_start
+        );
+    }
+}
+
+fn main() {
+    let Some(m) = manifest() else {
+        eprintln!("ablation bench needs artifacts (run `make artifacts`)");
+        std::process::exit(1);
+    };
+    println!("== ablation benches ==\n");
+    a1_scheduler_policies(&m);
+    a2_data_awareness(&m);
+    a3_calibration(&m);
+    a4_pruning(&m);
+}

@@ -1,0 +1,32 @@
+//! Shared scaffolding for the custom bench binaries (criterion is not
+//! available in the offline image; util::stats provides the measurement
+//! core). Each fig1_* bench regenerates one panel of the paper's Fig. 1.
+
+use std::sync::Arc;
+
+use compar::bench_harness::fig1;
+use compar::runtime::Manifest;
+
+/// Run one Fig. 1 panel and print it. `quick` trims reps for CI runs.
+pub fn run_fig1(app: &str) {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let manifest = Manifest::load(&compar::runtime::manifest::default_dir())
+        .ok()
+        .map(Arc::new);
+    if manifest.is_none() {
+        eprintln!("(no artifacts: all rows model-derived; run `make artifacts`)");
+    }
+    let (reps, max_meas) = if quick { (1, 64) } else { (3, 256) };
+    match fig1::series(app, manifest.as_ref(), reps, max_meas) {
+        Ok(points) => {
+            println!("{}", fig1::render(app, &points));
+            if app == "matmul" {
+                println!("{}", fig1::matmul_variant_table());
+            }
+        }
+        Err(e) => {
+            eprintln!("bench failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Regenerates the paper's Fig. 1 panel for hotspot (cargo bench --bench fig1_hotspot).
+mod common;
+
+fn main() {
+    common::run_fig1("hotspot");
+}

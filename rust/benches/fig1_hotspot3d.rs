@@ -1,0 +1,6 @@
+//! Regenerates the paper's Fig. 1 panel for hotspot3d (cargo bench --bench fig1_hotspot3d).
+mod common;
+
+fn main() {
+    common::run_fig1("hotspot3d");
+}

@@ -1,0 +1,6 @@
+//! Regenerates the paper's Fig. 1 panel for lud (cargo bench --bench fig1_lud).
+mod common;
+
+fn main() {
+    common::run_fig1("lud");
+}

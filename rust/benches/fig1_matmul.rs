@@ -1,0 +1,6 @@
+//! Regenerates the paper's Fig. 1 panel for matmul (cargo bench --bench fig1_matmul).
+mod common;
+
+fn main() {
+    common::run_fig1("matmul");
+}

@@ -1,0 +1,6 @@
+//! Regenerates the paper's Fig. 1 panel for nw (cargo bench --bench fig1_nw).
+mod common;
+
+fn main() {
+    common::run_fig1("nw");
+}

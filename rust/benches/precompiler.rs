@@ -1,0 +1,53 @@
+//! Pre-compiler throughput bench: full front-end + code generation over
+//! the bundled benchmark sources, plus a scaling run on a synthetic
+//! many-interface program. The pre-compiler is build-time tooling, but a
+//! source-to-source compiler that cannot chew megabytes of annotations
+//! would be a real adoption blocker.
+
+use std::time::Duration;
+
+use compar::bench_harness::bundled_sources;
+use compar::util::stats::{bench_budget, fmt_time};
+
+fn synthetic_program(interfaces: usize) -> String {
+    let mut src = String::from("#pragma compar include\n");
+    for i in 0..interfaces {
+        src.push_str(&format!(
+            "#pragma compar method_declare interface(f{i}) target(cuda) name(f{i}_cuda)\n\
+             #pragma compar parameter name(a) type(float*) size(N, M) access_mode(readwrite)\n\
+             #pragma compar parameter name(N) type(int)\n\
+             #pragma compar parameter name(M) type(int)\n\
+             void f{i}_cuda(float* a, int N, int M) {{}}\n\
+             #pragma compar method_declare interface(f{i}) target(openmp) name(f{i}_omp)\n\
+             void f{i}_omp(float* a, int N, int M) {{}}\n"
+        ));
+    }
+    src.push_str("#pragma compar initialize\n#pragma compar terminate\n");
+    src
+}
+
+fn main() {
+    println!("== COMPAR pre-compiler throughput ==\n");
+    for (app, src, file) in bundled_sources() {
+        let s = bench_budget(Duration::from_millis(300), 20, || {
+            let _ = compar::compar::compile(&src, &file).unwrap();
+        });
+        println!(
+            "  {app:10} {:>6} bytes  {:>12}/compile",
+            src.len(),
+            fmt_time(s.median)
+        );
+    }
+    for n in [10usize, 100, 1000] {
+        let src = synthetic_program(n);
+        let s = bench_budget(Duration::from_millis(500), 3, || {
+            let _ = compar::compar::compile(&src, "synthetic.c").unwrap();
+        });
+        let mb_s = src.len() as f64 / s.median / 1e6;
+        println!(
+            "  synthetic {n:4} interfaces ({:>8} bytes): {:>12}/compile ({mb_s:.1} MB/s)",
+            src.len(),
+            fmt_time(s.median)
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! L3 hot-path overhead bench (DESIGN.md §Perf): measures the runtime's
+//! per-task cost — submit -> schedule -> dispatch -> execute(noop) ->
+//! complete — which must stay in the microsecond range (StarPU's own
+//! overhead is ~2-10 µs/task). Also isolates scheduler push cost per
+//! policy and the data-registration cost.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use compar::runtime::Tensor;
+use compar::taskrt::{AccessMode, Arch, Codelet, Config, Runtime, SchedPolicy, TaskSpec};
+use compar::util::stats::{bench_budget, fmt_time};
+
+fn per_task_overhead(sched: SchedPolicy, batch: usize) -> f64 {
+    let cfg = Config {
+        ncpu: 2,
+        ncuda: 0,
+        sched,
+        ..Config::default()
+    };
+    let rt = Runtime::new(cfg, None).unwrap();
+    let cl = rt.register_codelet(
+        Codelet::new("noop", "sort", vec![AccessMode::Read]).with_native(
+            "omp",
+            Arch::Cpu,
+            Arc::new(|_| Ok(())),
+        ),
+    );
+    // pre-register data so the loop measures task machinery only
+    let handles: Vec<_> = (0..batch)
+        .map(|_| rt.register_data(Tensor::vector(vec![0.0])))
+        .collect();
+    let summary = bench_budget(Duration::from_millis(800), 5, || {
+        for h in &handles {
+            rt.submit(TaskSpec::new(cl.clone(), vec![*h], 1)).unwrap();
+        }
+        rt.wait_all().unwrap();
+    });
+    summary.median / batch as f64
+}
+
+fn registration_cost() -> f64 {
+    let cfg = Config {
+        ncpu: 1,
+        ncuda: 0,
+        sched: SchedPolicy::Eager,
+        ..Config::default()
+    };
+    let rt = Runtime::new(cfg, None).unwrap();
+    let data = vec![0.0f32; 1024];
+    let summary = bench_budget(Duration::from_millis(300), 50, || {
+        let _ = rt.register_data(Tensor::vector(data.clone()));
+    });
+    summary.median
+}
+
+/// L2 dispatch overhead: smallest artifact through the XLA service
+/// thread (channel roundtrip + PJRT execute of an 8x8 matmul) — the
+/// fixed cost every artifact-backed variant pays on top of its compute.
+fn xla_dispatch_overhead() -> Option<f64> {
+    let m = compar::runtime::Manifest::load(&compar::runtime::manifest::default_dir()).ok()?;
+    let meta = m.find("matmul", "jnp", 8)?.clone();
+    let svc = compar::runtime::XlaService::spawn().ok()?;
+    let h = svc.handle();
+    let mut rng = compar::util::rng::Rng::new(1);
+    let a = Tensor::matrix(8, 8, rng.vec_f32(64, -1.0, 1.0));
+    let b = Tensor::matrix(8, 8, rng.vec_f32(64, -1.0, 1.0));
+    // warm the executable cache
+    let _ = h.run(&meta, vec![a.clone(), b.clone()]).ok()?;
+    let s = bench_budget(Duration::from_millis(500), 20, || {
+        let _ = h.run(&meta, vec![a.clone(), b.clone()]).unwrap();
+    });
+    Some(s.median)
+}
+
+fn main() {
+    println!("== taskrt overhead (L3 hot path) ==");
+    println!("target: < 10 µs/task (StarPU-class)\n");
+    for sched in [
+        SchedPolicy::Eager,
+        SchedPolicy::Random,
+        SchedPolicy::WorkStealing,
+        SchedPolicy::Dmda,
+        SchedPolicy::Heft,
+    ] {
+        let t = per_task_overhead(sched, 256);
+        println!(
+            "  {:8} {:>12} per task (256-task batches, noop kernel)",
+            sched.name(),
+            fmt_time(t)
+        );
+    }
+    println!(
+        "\n  data registration (1 KiB vector): {:>12}",
+        fmt_time(registration_cost())
+    );
+    match xla_dispatch_overhead() {
+        Some(t) => println!(
+            "  XLA artifact dispatch (8x8 matmul through the service thread): {:>12}",
+            fmt_time(t)
+        ),
+        None => println!("  XLA artifact dispatch: skipped (no artifacts)"),
+    }
+}

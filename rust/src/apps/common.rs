@@ -1,0 +1,82 @@
+//! Shared helpers for the benchmark applications: chunked parallel-for
+//! (the "OpenMP" analog on the CPU device) and workload generators.
+
+use crate::util::rng::Rng;
+
+/// Parallel-for over row chunks using scoped threads — the native-Rust
+//  stand-in for `#pragma omp parallel for`.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk: usize, nthreads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if nthreads <= 1 || data.len() <= chunk {
+        f(0, data);
+        return;
+    }
+    let per = data.len().div_ceil(nthreads).max(chunk);
+    // round up to a whole number of chunks so rows are never split
+    let per = per.div_ceil(chunk) * chunk;
+    std::thread::scope(|s| {
+        for (i, piece) in data.chunks_mut(per).enumerate() {
+            let f = &f;
+            s.spawn(move || f(i * per, piece));
+        }
+    });
+}
+
+/// Number of CPU threads the native "omp" variants use.
+pub fn omp_threads() -> usize {
+    std::env::var("COMPAR_OMP_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        })
+}
+
+/// Deterministic f32 matrix in [lo, hi).
+pub fn gen_matrix(seed: u64, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    Rng::new(seed).vec_f32(n * n, lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_chunks_covers_everything() {
+        let mut v = vec![0u32; 1000];
+        par_chunks_mut(&mut v, 10, 4, |_, piece| {
+            for x in piece {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn par_chunks_offsets_are_correct() {
+        let mut v = vec![0usize; 64];
+        par_chunks_mut(&mut v, 8, 4, |off, piece| {
+            for (i, x) in piece.iter_mut().enumerate() {
+                *x = off + i;
+            }
+        });
+        let want: Vec<usize> = (0..64).collect();
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let mut v = vec![1.0f32; 7];
+        par_chunks_mut(&mut v, 100, 8, |off, piece| {
+            assert_eq!(off, 0);
+            for x in piece {
+                *x *= 2.0;
+            }
+        });
+        assert_eq!(v, vec![2.0f32; 7]);
+    }
+}

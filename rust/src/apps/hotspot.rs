@@ -1,0 +1,194 @@
+//! Rodinia hotspot (2D thermal simulation) — Fig 1a.
+//!
+//! Native variants implement exactly the stencil of
+//! `python/compile/kernels/ref.py::hotspot` (Rodinia coefficients, edge
+//! clamp, f32) so artifact and native results agree to float tolerance.
+//! The CUDA variant is the Pallas-banded artifact; OpenMP is the
+//! row-parallel native loop.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::common::{omp_threads, par_chunks_mut};
+use crate::taskrt::{AccessMode, Arch, Codelet, ExecBuffers};
+
+pub const APP: &str = "hotspot";
+pub const AMB_TEMP: f32 = 80.0;
+/// Iterations baked into the artifacts (model.py HOTSPOT_STEPS).
+pub const STEPS: usize = 8;
+
+/// Rodinia hotspot coefficients for an n x n grid (matches ref.py).
+#[derive(Debug, Clone, Copy)]
+pub struct Coeffs {
+    pub step_div_cap: f32,
+    pub rx1: f32,
+    pub ry1: f32,
+    pub rz1: f32,
+}
+
+pub fn coeffs(n: usize) -> Coeffs {
+    let t_chip = 0.0005f64;
+    let chip_height = 0.016f64;
+    let chip_width = 0.016f64;
+    let k_si = 100.0f64;
+    let cap_factor = 0.5f64;
+    let precision = 0.001f64;
+    let max_pd = 3.0e6f64;
+    let spec_heat_si = 1.75e6f64;
+
+    let nf = n as f64;
+    let grid_height = chip_height / nf;
+    let grid_width = chip_width / nf;
+    let cap = cap_factor * spec_heat_si * t_chip * grid_width * grid_height;
+    let rx = grid_width / (2.0 * k_si * t_chip * grid_height);
+    let ry = grid_height / (2.0 * k_si * t_chip * grid_width);
+    let rz = t_chip / (k_si * grid_height * grid_width);
+    let max_slope = max_pd / (spec_heat_si * t_chip);
+    let step = precision / max_slope;
+    Coeffs {
+        step_div_cap: (step / cap) as f32,
+        rx1: (1.0 / rx) as f32,
+        ry1: (1.0 / ry) as f32,
+        rz1: (1.0 / rz) as f32,
+    }
+}
+
+#[inline]
+fn stencil_row(
+    out_row: &mut [f32],
+    up: &[f32],
+    center: &[f32],
+    down: &[f32],
+    power: &[f32],
+    c: &Coeffs,
+    n: usize,
+) {
+    for j in 0..n {
+        let left = center[j.saturating_sub(1)];
+        let right = center[(j + 1).min(n - 1)];
+        let t = center[j];
+        let delta = c.step_div_cap
+            * (power[j]
+                + (down[j] + up[j] - 2.0 * t) * c.ry1
+                + (right + left - 2.0 * t) * c.rx1
+                + (AMB_TEMP - t) * c.rz1);
+        out_row[j] = t + delta;
+    }
+}
+
+/// One Euler step, sequential.
+pub fn step_seq(temp: &[f32], power: &[f32], out: &mut [f32], n: usize, c: &Coeffs) {
+    for i in 0..n {
+        let up = &temp[i.saturating_sub(1) * n..][..n];
+        let down = &temp[(i + 1).min(n - 1) * n..][..n];
+        let center = &temp[i * n..][..n];
+        stencil_row(&mut out[i * n..i * n + n], up, center, down, &power[i * n..i * n + n], c, n);
+    }
+}
+
+/// One Euler step, row-parallel (the OpenMP variant).
+pub fn step_omp(temp: &[f32], power: &[f32], out: &mut [f32], n: usize, c: &Coeffs) {
+    let threads = omp_threads();
+    par_chunks_mut(out, n, threads, |off, rows| {
+        let i0 = off / n;
+        for (li, row) in rows.chunks_mut(n).enumerate() {
+            let i = i0 + li;
+            let up = &temp[i.saturating_sub(1) * n..][..n];
+            let down = &temp[(i + 1).min(n - 1) * n..][..n];
+            let center = &temp[i * n..][..n];
+            stencil_row(row, up, center, down, &power[i * n..i * n + n], c, n);
+        }
+    });
+}
+
+/// Run `steps` iterations in place on `temp`.
+pub fn simulate(
+    temp: &mut Vec<f32>,
+    power: &[f32],
+    n: usize,
+    steps: usize,
+    step: fn(&[f32], &[f32], &mut [f32], usize, &Coeffs),
+) {
+    let c = coeffs(n);
+    let mut next = vec![0.0f32; n * n];
+    for _ in 0..steps {
+        step(temp, power, &mut next, n, &c);
+        std::mem::swap(temp, &mut next);
+    }
+}
+
+fn native(step: fn(&[f32], &[f32], &mut [f32], usize, &Coeffs)) -> crate::taskrt::NativeFn {
+    Arc::new(move |bufs: &ExecBuffers| -> Result<()> {
+        let n = bufs.size;
+        let power = bufs.read(1).data().to_vec();
+        let mut t = bufs.write(0);
+        let mut temp = t.data().to_vec();
+        simulate(&mut temp, &power, n, STEPS, step);
+        t.data_mut().copy_from_slice(&temp);
+        Ok(())
+    })
+}
+
+/// The `hotspot` codelet: OMP (cpu) + CUDA (Pallas artifact), plus a
+/// sequential CPU variant for ablations.
+pub fn codelet() -> Codelet {
+    Codelet::new("hotspot", APP, vec![AccessMode::ReadWrite, AccessMode::Read])
+        .with_native("omp", Arch::Cpu, native(step_omp))
+        .with_native("seq", Arch::Cpu, native(step_seq))
+        .with_artifact("cuda", Arch::Cuda, "pallas")
+}
+
+pub fn paper_variants() -> &'static [&'static str] {
+    &["omp", "cuda"]
+}
+
+/// Deterministic problem instance: (temp, power) grids like Rodinia's.
+pub fn generate(seed: u64, n: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let temp = rng.vec_f32(n * n, AMB_TEMP - 5.0, AMB_TEMP + 5.0);
+    let power = rng.vec_f32(n * n, 0.0, 1.0);
+    (temp, power)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn omp_matches_seq() {
+        let n = 64;
+        let (mut t1, p) = generate(11, n);
+        let mut t2 = t1.clone();
+        simulate(&mut t1, &p, n, STEPS, step_seq);
+        simulate(&mut t2, &p, n, STEPS, step_omp);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn heat_stays_bounded() {
+        let n = 32;
+        let (mut t, p) = generate(12, n);
+        simulate(&mut t, &p, n, STEPS, step_seq);
+        for &x in &t {
+            assert!(x.is_finite() && (0.0..400.0).contains(&x), "{x}");
+        }
+    }
+
+    #[test]
+    fn coeffs_scale_with_grid() {
+        // finer grid -> smaller cells -> larger rz1 coupling to ambient
+        let a = coeffs(64);
+        let b = coeffs(128);
+        assert!(b.rz1 < a.rz1);
+        assert!(a.step_div_cap > 0.0 && b.step_div_cap > 0.0);
+    }
+
+    #[test]
+    fn codelet_variant_set() {
+        let c = codelet();
+        assert!(c.impl_by_name("omp").is_some());
+        assert!(c.impl_by_name("cuda").is_some());
+        assert_eq!(c.modes.len(), 2);
+    }
+}

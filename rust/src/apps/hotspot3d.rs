@@ -1,0 +1,189 @@
+//! Rodinia hotspot3D (7-point stencil thermal simulation) — Fig 1b.
+//! Mirrors `python/compile/kernels/ref.py::hotspot3d` exactly.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::common::{omp_threads, par_chunks_mut};
+use crate::taskrt::{AccessMode, Arch, Codelet, ExecBuffers};
+
+pub const APP: &str = "hotspot3d";
+pub const AMB_TEMP: f32 = 80.0;
+pub const STEPS: usize = 8;
+/// Z layers baked into the artifacts (model.py HOTSPOT3D_LAYERS).
+pub const LAYERS: usize = 8;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Coeffs {
+    pub cc: f32,
+    pub cw: f32,
+    pub ce: f32,
+    pub cn: f32,
+    pub cs: f32,
+    pub ct: f32,
+    pub cb: f32,
+    pub step_div_cap: f32,
+}
+
+/// Rodinia 3D.c coefficient set for an (nz, ny, nx) grid.
+pub fn coeffs(nx: usize, ny: usize, nz: usize) -> Coeffs {
+    let t_chip = 0.0005f64;
+    let chip_height = 0.016f64;
+    let chip_width = 0.016f64;
+    let k_si = 100.0f64;
+    let cap_factor = 0.5f64;
+    let precision = 0.001f64;
+    let max_pd = 3.0e6f64;
+    let spec_heat_si = 1.75e6f64;
+
+    let dx = chip_height / nx as f64;
+    let dy = chip_width / ny as f64;
+    let dz = t_chip / nz as f64;
+    let cap = cap_factor * spec_heat_si * t_chip * dx * dy;
+    let rx = dy / (2.0 * k_si * t_chip * dx);
+    let ry = dx / (2.0 * k_si * t_chip * dy);
+    let rz = dz / (k_si * dx * dy);
+    let max_slope = max_pd / (spec_heat_si * t_chip);
+    let dt = precision / max_slope;
+    let step_div_cap = dt / cap;
+    let ce = step_div_cap / rx;
+    let cn = step_div_cap / ry;
+    let ct = step_div_cap / rz;
+    let cc = 1.0 - (2.0 * ce + 2.0 * cn + 3.0 * ct);
+    Coeffs {
+        cc: cc as f32,
+        cw: ce as f32,
+        ce: ce as f32,
+        cn: cn as f32,
+        cs: cn as f32,
+        ct: ct as f32,
+        cb: ct as f32,
+        step_div_cap: step_div_cap as f32,
+    }
+}
+
+/// One step over the (nz, ny, nx) row-major grid, writing `out`.
+/// Parallelized over z-planes when `threads > 1`.
+pub fn step(
+    temp: &[f32],
+    power: &[f32],
+    out: &mut [f32],
+    (nz, ny, nx): (usize, usize, usize),
+    c: &Coeffs,
+    threads: usize,
+) {
+    let plane = ny * nx;
+    par_chunks_mut(out, plane, threads, |off, planes| {
+        let z0 = off / plane;
+        for (lz, out_plane) in planes.chunks_mut(plane).enumerate() {
+            let z = z0 + lz;
+            let below = &temp[z.saturating_sub(1) * plane..][..plane];
+            let above = &temp[(z + 1).min(nz - 1) * plane..][..plane];
+            let cur = &temp[z * plane..][..plane];
+            let pw = &power[z * plane..][..plane];
+            for y in 0..ny {
+                for x in 0..nx {
+                    let i = y * nx + x;
+                    let w = cur[y * nx + x.saturating_sub(1)];
+                    let e = cur[y * nx + (x + 1).min(nx - 1)];
+                    let n_ = cur[y.saturating_sub(1) * nx + x];
+                    let s = cur[(y + 1).min(ny - 1) * nx + x];
+                    out_plane[i] = c.cc * cur[i]
+                        + c.cw * w
+                        + c.ce * e
+                        + c.cn * n_
+                        + c.cs * s
+                        + c.cb * below[i]
+                        + c.ct * above[i]
+                        + c.step_div_cap * pw[i]
+                        + c.ct * AMB_TEMP;
+                }
+            }
+        }
+    });
+}
+
+/// Run `steps` iterations in place.
+pub fn simulate(
+    temp: &mut Vec<f32>,
+    power: &[f32],
+    dims: (usize, usize, usize),
+    steps: usize,
+    threads: usize,
+) {
+    let c = coeffs(dims.2, dims.1, dims.0);
+    let mut next = vec![0.0f32; temp.len()];
+    for _ in 0..steps {
+        step(temp, power, &mut next, dims, &c, threads);
+        std::mem::swap(temp, &mut next);
+    }
+}
+
+fn native(threads_fn: fn() -> usize) -> crate::taskrt::NativeFn {
+    Arc::new(move |bufs: &ExecBuffers| -> Result<()> {
+        let n = bufs.size;
+        let dims = (LAYERS, n, n);
+        let power = bufs.read(1).data().to_vec();
+        let mut t = bufs.write(0);
+        let mut temp = t.data().to_vec();
+        simulate(&mut temp, &power, dims, STEPS, threads_fn());
+        t.data_mut().copy_from_slice(&temp);
+        Ok(())
+    })
+}
+
+pub fn codelet() -> Codelet {
+    Codelet::new(
+        "hotspot3d",
+        APP,
+        vec![AccessMode::ReadWrite, AccessMode::Read],
+    )
+    .with_native("omp", Arch::Cpu, native(omp_threads))
+    .with_native("seq", Arch::Cpu, native(|| 1))
+    .with_artifact("cuda", Arch::Cuda, "pallas")
+}
+
+pub fn paper_variants() -> &'static [&'static str] {
+    &["omp", "cuda"]
+}
+
+/// Deterministic (temp, power) instance with `LAYERS` z-planes.
+pub fn generate(seed: u64, n: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let len = LAYERS * n * n;
+    let temp = rng.vec_f32(len, AMB_TEMP - 5.0, AMB_TEMP + 5.0);
+    let power = rng.vec_f32(len, 0.0, 1.0);
+    (temp, power)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let n = 24;
+        let (mut t1, p) = generate(5, n);
+        let mut t2 = t1.clone();
+        simulate(&mut t1, &p, (LAYERS, n, n), STEPS, 1);
+        simulate(&mut t2, &p, (LAYERS, n, n), STEPS, 4);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn coefficients_sum_near_one() {
+        // cc + 2ce + 2cn + cb + ct == 1 - ct (energy balance with ambient)
+        let c = coeffs(64, 64, 8);
+        let sum = c.cc + c.cw + c.ce + c.cn + c.cs + c.cb + c.ct;
+        assert!((sum - (1.0 - c.ct)).abs() < 1e-3, "sum {sum} ct {}", c.ct);
+    }
+
+    #[test]
+    fn stays_finite() {
+        let n = 16;
+        let (mut t, p) = generate(6, n);
+        simulate(&mut t, &p, (LAYERS, n, n), STEPS, 2);
+        assert!(t.iter().all(|x| x.is_finite()));
+    }
+}

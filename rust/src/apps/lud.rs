@@ -1,0 +1,150 @@
+//! Rodinia LUD (LU decomposition, no pivoting, packed form) — Fig 1c.
+//! Matches `python/compile/kernels/ref.py::lud`: U on/above the diagonal,
+//! unit-lower L (without the 1s) below.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::common::{omp_threads, par_chunks_mut};
+use crate::taskrt::{AccessMode, Arch, Codelet, ExecBuffers};
+
+pub const APP: &str = "lud";
+
+/// Sequential right-looking Doolittle LU, in place.
+pub fn lud_seq(m: &mut [f32], n: usize) {
+    for k in 0..n {
+        let pivot = m[k * n + k];
+        for i in (k + 1)..n {
+            m[i * n + k] /= pivot;
+        }
+        for i in (k + 1)..n {
+            let lik = m[i * n + k];
+            let (urow, irow) = {
+                // split borrows: row k (read) and row i (write)
+                let (a, b) = m.split_at_mut(i * n);
+                (&a[k * n..k * n + n], &mut b[..n])
+            };
+            for j in (k + 1)..n {
+                irow[j] -= lik * urow[j];
+            }
+        }
+    }
+}
+
+/// Parallel LU: the trailing update of each panel step is row-parallel
+/// (the dominant O(n^3) part), the panel scaling stays sequential.
+pub fn lud_omp(m: &mut [f32], n: usize) {
+    let threads = omp_threads();
+    for k in 0..n {
+        let pivot = m[k * n + k];
+        for i in (k + 1)..n {
+            m[i * n + k] /= pivot;
+        }
+        if k + 1 >= n {
+            break;
+        }
+        let urow: Vec<f32> = m[k * n..k * n + n].to_vec();
+        let lcol: Vec<f32> = ((k + 1)..n).map(|i| m[i * n + k]).collect();
+        let tail = &mut m[(k + 1) * n..];
+        par_chunks_mut(tail, n, threads, |off, rows| {
+            let r0 = off / n;
+            for (lr, row) in rows.chunks_mut(n).enumerate() {
+                let lik = lcol[r0 + lr];
+                for j in (k + 1)..n {
+                    row[j] -= lik * urow[j];
+                }
+            }
+        });
+    }
+}
+
+fn native(f: fn(&mut [f32], usize)) -> crate::taskrt::NativeFn {
+    Arc::new(move |bufs: &ExecBuffers| -> Result<()> {
+        let n = bufs.size;
+        let mut m = bufs.write(0);
+        f(m.data_mut(), n);
+        Ok(())
+    })
+}
+
+pub fn codelet() -> Codelet {
+    Codelet::new("lud", APP, vec![AccessMode::ReadWrite])
+        .with_native("omp", Arch::Cpu, native(lud_omp))
+        .with_native("seq", Arch::Cpu, native(lud_seq))
+        .with_artifact("cuda", Arch::Cuda, "pallas")
+}
+
+pub fn paper_variants() -> &'static [&'static str] {
+    &["omp", "cuda"]
+}
+
+/// Diagonally-dominant instance (safe without pivoting), like ref.py.
+pub fn generate(seed: u64, n: usize) -> Vec<f32> {
+    let mut m = crate::util::rng::Rng::new(seed).vec_f32(n * n, -1.0, 1.0);
+    for i in 0..n {
+        m[i * n + i] += n as f32;
+    }
+    m
+}
+
+/// Reconstruct A from the packed LU and return max |A - LU|.
+pub fn residual(packed: &[f32], original: &[f32], n: usize) -> f32 {
+    let mut max = 0.0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0f64;
+            let kmax = i.min(j);
+            // L has unit diagonal: A[i][j] = sum_{k<min(i,j)} L[i][k] U[k][j] (+ U[i][j] if i<=j ...)
+            for k in 0..kmax {
+                s += packed[i * n + k] as f64 * packed[k * n + j] as f64;
+            }
+            if i <= j {
+                s += packed[i * n + j] as f64; // L[i][i] = 1 times U[i][j]
+            } else {
+                s += packed[i * n + j] as f64 * packed[j * n + j] as f64; // L[i][j] * U[j][j]
+            }
+            max = max.max((s as f32 - original[i * n + j]).abs());
+        }
+    }
+    max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seq_factorization_reconstructs() {
+        let n = 48;
+        let a = generate(3, n);
+        let mut m = a.clone();
+        lud_seq(&mut m, n);
+        assert!(residual(&m, &a, n) < 1e-2, "residual too large");
+    }
+
+    #[test]
+    fn omp_matches_seq() {
+        let n = 64;
+        let a = generate(4, n);
+        let mut m1 = a.clone();
+        let mut m2 = a;
+        lud_seq(&mut m1, n);
+        lud_omp(&mut m2, n);
+        for (x, y) in m1.iter().zip(&m2) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn identity_is_fixed_point() {
+        let n = 8;
+        let mut m = vec![0.0f32; n * n];
+        for i in 0..n {
+            m[i * n + i] = 1.0;
+        }
+        let want = m.clone();
+        lud_seq(&mut m, n);
+        assert_eq!(m, want);
+    }
+}

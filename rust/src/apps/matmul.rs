@@ -1,0 +1,149 @@
+//! Matrix multiplication — Fig 1e, the paper's richest variant set:
+//! BLAS, OpenMP, CUDA and CUBLAS. Mapping (DESIGN.md §3):
+//!
+//! | paper variant | ours                                   | arch |
+//! |---------------|----------------------------------------|------|
+//! | BLAS          | XLA `jnp` artifact on the CPU device   | cpu  |
+//! | OpenMP        | native blocked parallel loop           | cpu  |
+//! | Seq (extra)   | native blocked triple loop             | cpu  |
+//! | CUDA          | XLA `jnp` artifact on the CUDA device  | cuda |
+//! | CUBLAS        | Pallas-tiled artifact on CUDA device   | cuda |
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::common::{omp_threads, par_chunks_mut};
+use crate::taskrt::{AccessMode, Arch, Codelet, ExecBuffers};
+
+pub const APP: &str = "matmul";
+
+/// Cache-blocked sequential matmul: C = A @ B (f32, row-major, n x n).
+pub fn matmul_seq(a: &[f32], b: &[f32], c: &mut [f32], n: usize) {
+    const BK: usize = 64;
+    c.fill(0.0);
+    for kk in (0..n).step_by(BK) {
+        let kmax = (kk + BK).min(n);
+        for i in 0..n {
+            for k in kk..kmax {
+                let aik = a[i * n + k];
+                let brow = &b[k * n..k * n + n];
+                let crow = &mut c[i * n..i * n + n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// Row-parallel blocked matmul (the OpenMP variant).
+pub fn matmul_omp(a: &[f32], b: &[f32], c: &mut [f32], n: usize) {
+    let threads = omp_threads();
+    par_chunks_mut(c, n, threads, |off, rows| {
+        let i0 = off / n;
+        let nrows = rows.len() / n;
+        const BK: usize = 64;
+        rows.fill(0.0);
+        for kk in (0..n).step_by(BK) {
+            let kmax = (kk + BK).min(n);
+            for li in 0..nrows {
+                let i = i0 + li;
+                for k in kk..kmax {
+                    let aik = a[i * n + k];
+                    let brow = &b[k * n..k * n + n];
+                    let crow = &mut rows[li * n..li * n + n];
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    });
+}
+
+fn native(f: fn(&[f32], &[f32], &mut [f32], usize)) -> crate::taskrt::NativeFn {
+    Arc::new(move |bufs: &ExecBuffers| -> Result<()> {
+        let n = bufs.size;
+        let a = bufs.read(0).data().to_vec();
+        let b = bufs.read(1).data().to_vec();
+        let mut c = bufs.write(2);
+        f(&a, &b, c.data_mut(), n);
+        Ok(())
+    })
+}
+
+/// The `mmul` codelet with the paper's full variant set.
+pub fn codelet() -> Codelet {
+    Codelet::new(
+        "mmul",
+        APP,
+        vec![AccessMode::Read, AccessMode::Read, AccessMode::Write],
+    )
+    .with_artifact("blas", Arch::Cpu, "jnp")
+    .with_native("omp", Arch::Cpu, native(matmul_omp))
+    .with_native("seq", Arch::Cpu, native(matmul_seq))
+    .with_artifact("cuda", Arch::Cuda, "jnp")
+    .with_artifact("cublas", Arch::Cuda, "pallas")
+}
+
+/// Variants shown in Fig 1e.
+pub fn paper_variants() -> &'static [&'static str] {
+    &["blas", "omp", "cuda", "cublas"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+        let mut c = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += a[i * n + k] * b[k * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn seq_matches_naive() {
+        let n = 37; // non-multiple of block size
+        let mut rng = Rng::new(1);
+        let a = rng.vec_f32(n * n, -1.0, 1.0);
+        let b = rng.vec_f32(n * n, -1.0, 1.0);
+        let mut c = vec![0.0; n * n];
+        matmul_seq(&a, &b, &mut c, n);
+        let want = naive(&a, &b, n);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn omp_matches_seq() {
+        let n = 96;
+        let mut rng = Rng::new(2);
+        let a = rng.vec_f32(n * n, -1.0, 1.0);
+        let b = rng.vec_f32(n * n, -1.0, 1.0);
+        let mut c1 = vec![0.0; n * n];
+        let mut c2 = vec![0.0; n * n];
+        matmul_seq(&a, &b, &mut c1, n);
+        matmul_omp(&a, &b, &mut c2, n);
+        assert_eq!(c1, c2, "parallel result must be bit-identical");
+    }
+
+    #[test]
+    fn codelet_has_paper_variants() {
+        let c = codelet();
+        for v in paper_variants() {
+            assert!(c.impl_by_name(v).is_some(), "missing variant {v}");
+        }
+        assert!(c.can_run_on(Arch::Cpu) && c.can_run_on(Arch::Cuda));
+    }
+}

@@ -1,0 +1,298 @@
+//! The paper's benchmark applications (Table 2), each exposing multiple
+//! implementation variants through one codelet:
+//!
+//! | app       | variants (paper)            | input parameter        |
+//! |-----------|-----------------------------|------------------------|
+//! | hotspot   | CUDA, OMP                   | squared grid size      |
+//! | hotspot3d | CUDA, OMP                   | rows/cols (x 8 layers) |
+//! | lud       | CUDA, OMP                   | squared matrix size    |
+//! | nw        | CUDA, OMP                   | max rows/cols          |
+//! | matmul    | BLAS, OMP, CUDA, CUBLAS     | squared matrix size    |
+//! | sort      | CUDA, OMP (Listing 1.3)     | vector length          |
+//!
+//! Every app provides: deterministic generators, native Rust variants
+//! (bit-reproducible parallel vs sequential), the codelet wiring, and a
+//! [`run_once`] driver that registers data, submits one task, waits, and
+//! verifies the result against the native sequential reference.
+
+pub mod common;
+pub mod hotspot;
+pub mod hotspot3d;
+pub mod lud;
+pub mod matmul;
+pub mod nw;
+pub mod sort;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::Tensor;
+use crate::taskrt::{Codelet, HandleId, Runtime, TaskSpec};
+
+/// All benchmark app names, in the paper's Table 2 order.
+pub const ALL: &[&str] = &["hotspot", "hotspot3d", "lud", "nw", "matmul", "sort"];
+
+/// Build the codelet for an app by name.
+pub fn codelet(app: &str) -> Result<Codelet> {
+    Ok(match app {
+        "hotspot" => hotspot::codelet(),
+        "hotspot3d" => hotspot3d::codelet(),
+        "lud" => lud::codelet(),
+        "nw" => nw::codelet(),
+        "matmul" => matmul::codelet(),
+        "sort" => sort::codelet(),
+        _ => bail!("unknown app '{app}' (expected one of {ALL:?})"),
+    })
+}
+
+/// Variant names the paper's figures sweep for an app.
+pub fn paper_variants(app: &str) -> &'static [&'static str] {
+    match app {
+        "hotspot" => hotspot::paper_variants(),
+        "hotspot3d" => hotspot3d::paper_variants(),
+        "lud" => lud::paper_variants(),
+        "nw" => nw::paper_variants(),
+        "matmul" => matmul::paper_variants(),
+        "sort" => sort::paper_variants(),
+        _ => &[],
+    }
+}
+
+/// Paper Table 2 input ranges (sweep grids for Fig 1).
+pub fn paper_sizes(app: &str) -> Vec<usize> {
+    match app {
+        "hotspot" => vec![64, 128, 256, 512, 1024, 2048, 4096, 8192],
+        "hotspot3d" => vec![64, 128, 256, 512],
+        "lud" => vec![64, 128, 256, 512, 1024, 2048, 4096, 8192],
+        "nw" => vec![64, 128, 256, 512, 1024, 2048, 4096, 8192],
+        "matmul" => vec![8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192],
+        "sort" => vec![256, 1024, 4096, 16384, 65536],
+        _ => vec![],
+    }
+}
+
+/// One prepared problem instance: registered handles + enough context to
+/// verify the output.
+pub struct Instance {
+    pub handles: Vec<HandleId>,
+    pub size: usize,
+    app: String,
+    seed: u64,
+}
+
+/// Register a fresh problem instance for (app, size) in the runtime.
+pub fn prepare(rt: &Runtime, app: &str, size: usize, seed: u64) -> Result<Instance> {
+    let handles = match app {
+        "hotspot" => {
+            let (t, p) = hotspot::generate(seed, size);
+            vec![
+                rt.register_data(Tensor::matrix(size, size, t)),
+                rt.register_data(Tensor::matrix(size, size, p)),
+            ]
+        }
+        "hotspot3d" => {
+            let (t, p) = hotspot3d::generate(seed, size);
+            let shape = vec![hotspot3d::LAYERS, size, size];
+            vec![
+                rt.register_data(Tensor::new(shape.clone(), t)),
+                rt.register_data(Tensor::new(shape, p)),
+            ]
+        }
+        "lud" => {
+            let m = lud::generate(seed, size);
+            vec![rt.register_data(Tensor::matrix(size, size, m))]
+        }
+        "nw" => {
+            let r = nw::generate(seed, size);
+            let n1 = size + 1;
+            vec![
+                rt.register_data(Tensor::matrix(n1, n1, r)),
+                rt.register_data(Tensor::zeros(vec![n1, n1])),
+            ]
+        }
+        "matmul" => {
+            let a = common::gen_matrix(seed, size, -1.0, 1.0);
+            let b = common::gen_matrix(seed ^ 0xb, size, -1.0, 1.0);
+            vec![
+                rt.register_data(Tensor::matrix(size, size, a)),
+                rt.register_data(Tensor::matrix(size, size, b)),
+                rt.register_data(Tensor::zeros(vec![size, size])),
+            ]
+        }
+        "sort" => {
+            let v = sort::generate(seed, size);
+            vec![rt.register_data(Tensor::vector(v))]
+        }
+        _ => bail!("unknown app '{app}'"),
+    };
+    Ok(Instance {
+        handles,
+        size,
+        app: app.to_string(),
+        seed,
+    })
+}
+
+/// Compute the expected output with the native sequential variant.
+pub fn expected(inst: &Instance) -> Result<Tensor> {
+    let (app, size, seed) = (inst.app.as_str(), inst.size, inst.seed);
+    Ok(match app {
+        "hotspot" => {
+            let (mut t, p) = hotspot::generate(seed, size);
+            hotspot::simulate(&mut t, &p, size, hotspot::STEPS, hotspot::step_seq);
+            Tensor::matrix(size, size, t)
+        }
+        "hotspot3d" => {
+            let (mut t, p) = hotspot3d::generate(seed, size);
+            hotspot3d::simulate(
+                &mut t,
+                &p,
+                (hotspot3d::LAYERS, size, size),
+                hotspot3d::STEPS,
+                1,
+            );
+            Tensor::new(vec![hotspot3d::LAYERS, size, size], t)
+        }
+        "lud" => {
+            let mut m = lud::generate(seed, size);
+            lud::lud_seq(&mut m, size);
+            Tensor::matrix(size, size, m)
+        }
+        "nw" => {
+            let r = nw::generate(seed, size);
+            let n1 = size + 1;
+            let mut o = vec![0.0; n1 * n1];
+            nw::nw_seq(&r, &mut o, n1, nw::PENALTY);
+            Tensor::matrix(n1, n1, o)
+        }
+        "matmul" => {
+            let a = common::gen_matrix(seed, size, -1.0, 1.0);
+            let b = common::gen_matrix(seed ^ 0xb, size, -1.0, 1.0);
+            let mut c = vec![0.0; size * size];
+            matmul::matmul_seq(&a, &b, &mut c, size);
+            Tensor::matrix(size, size, c)
+        }
+        "sort" => {
+            let mut v = sort::generate(seed, size);
+            sort::sort_seq(&mut v);
+            Tensor::vector(v)
+        }
+        _ => bail!("unknown app '{app}'"),
+    })
+}
+
+/// The handle that carries the app's result.
+pub fn output_handle(inst: &Instance) -> HandleId {
+    match inst.app.as_str() {
+        "nw" => inst.handles[1],
+        "matmul" => inst.handles[2],
+        _ => inst.handles[0],
+    }
+}
+
+/// Relative-L2 verification tolerance per app (iterated stencils and
+/// O(n^3) accumulations tolerate more float reassociation).
+pub fn tolerance(app: &str) -> f32 {
+    match app {
+        "matmul" | "lud" => 5e-3,
+        _ => 1e-3,
+    }
+}
+
+/// Result of one driven task.
+pub struct AppRun {
+    pub task: crate::taskrt::TaskId,
+    pub variant: String,
+    pub modeled: f64,
+    pub wall: f64,
+    pub rel_err: f32,
+}
+
+/// Submit one task on a fresh instance, wait, verify, and report which
+/// variant the runtime selected.
+pub fn run_once(
+    rt: &Runtime,
+    app: &str,
+    size: usize,
+    seed: u64,
+    force_variant: Option<&str>,
+    verify: bool,
+) -> Result<AppRun> {
+    let name = app_codelet_name(app).to_string();
+    let cl = match rt.codelet(&name) {
+        Some(c) => c,
+        None => rt.register_codelet(codelet(app)?),
+    };
+    let inst = prepare(rt, app, size, seed)?;
+    let mut spec = TaskSpec::new(cl, inst.handles.clone(), size);
+    if let Some(v) = force_variant {
+        spec = spec.with_variant(v);
+    }
+    let task = rt.submit(spec)?;
+    rt.wait_all()?;
+
+    let result = rt
+        .metrics()
+        .results()
+        .into_iter()
+        .rev()
+        .find(|r| r.task == task)
+        .ok_or_else(|| anyhow!("no result recorded for task {task}"))?;
+
+    let rel_err = if verify {
+        let got = rt.snapshot(output_handle(&inst))?;
+        let want = expected(&inst)?;
+        let err = got.rel_l2_error(&want);
+        if err > tolerance(app) {
+            bail!(
+                "{app} size {size} variant {}: rel L2 error {err} exceeds {}",
+                result.variant,
+                tolerance(app)
+            );
+        }
+        err
+    } else {
+        0.0
+    };
+
+    Ok(AppRun {
+        task,
+        variant: result.variant.clone(),
+        modeled: result.modeled_total(),
+        wall: result.wall,
+        rel_err,
+    })
+}
+
+/// Codelet name for an app (hotspot -> "hotspot", matmul -> "mmul", ...).
+pub fn app_codelet_name(app: &str) -> &str {
+    match app {
+        "matmul" => "mmul",
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_apps_have_codelets_and_sizes() {
+        for app in ALL {
+            let c = codelet(app).unwrap();
+            assert!(!c.impls.is_empty(), "{app} has no variants");
+            assert!(!paper_sizes(app).is_empty());
+            assert!(!paper_variants(app).is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_app_is_error() {
+        assert!(codelet("bfs").is_err());
+    }
+
+    #[test]
+    fn codelet_names() {
+        assert_eq!(app_codelet_name("matmul"), "mmul");
+        assert_eq!(app_codelet_name("nw"), "nw");
+    }
+}

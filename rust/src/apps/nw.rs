@@ -1,0 +1,148 @@
+//! Rodinia Needleman-Wunsch (global sequence alignment DP) — Fig 1d.
+//! Matches `python/compile/kernels/ref.py::nw`: the (N+1)^2 score matrix
+//! with penalty-initialized borders and max(diag+sub, up-p, left-p).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::common::omp_threads;
+use crate::taskrt::{AccessMode, Arch, Codelet, ExecBuffers};
+
+pub const APP: &str = "nw";
+/// Gap penalty baked into the artifacts (model.py NW_PENALTY).
+pub const PENALTY: f32 = 10.0;
+
+/// Sequential row-sweep DP fill. `reference` and `out` are (n1 x n1),
+/// n1 = N + 1; row/col 0 of `reference` are ignored.
+pub fn nw_seq(reference: &[f32], out: &mut [f32], n1: usize, penalty: f32) {
+    for i in 0..n1 {
+        out[i * n1] = -(i as f32) * penalty;
+        out[i] = -(i as f32) * penalty;
+    }
+    for i in 1..n1 {
+        for j in 1..n1 {
+            let diag = out[(i - 1) * n1 + (j - 1)] + reference[i * n1 + j];
+            let up = out[(i - 1) * n1 + j] - penalty;
+            let left = out[i * n1 + (j - 1)] - penalty;
+            out[i * n1 + j] = diag.max(up).max(left);
+        }
+    }
+}
+
+/// Anti-diagonal wavefront fill, parallel across the diagonal's cells —
+/// the same decomposition as Rodinia's GPU kernel (the OpenMP variant).
+pub fn nw_omp(reference: &[f32], out: &mut [f32], n1: usize, penalty: f32) {
+    for i in 0..n1 {
+        out[i * n1] = -(i as f32) * penalty;
+        out[i] = -(i as f32) * penalty;
+    }
+    let threads = omp_threads();
+    // out is written one anti-diagonal at a time; cells on a diagonal are
+    // independent, so they can be computed from a snapshot pointer.
+    for d in 2..(2 * n1 - 1) {
+        let lo = 1.max(d as i64 - (n1 as i64 - 1)) as usize;
+        let hi = (d - 1).min(n1 - 1);
+        if lo > hi {
+            continue;
+        }
+        let cells: Vec<usize> = (lo..=hi).collect();
+        let nchunk = cells.len().div_ceil(threads).max(64);
+        // Safety of the raw-pointer share: every (i, d-i) cell on this
+        // diagonal is distinct, and reads only touch diagonals d-1, d-2.
+        let out_ptr = out.as_mut_ptr() as usize;
+        std::thread::scope(|s| {
+            for chunk in cells.chunks(nchunk) {
+                let chunk = chunk.to_vec();
+                s.spawn(move || {
+                    let out = out_ptr as *mut f32;
+                    for i in chunk {
+                        let j = d - i;
+                        unsafe {
+                            let diag = *out.add((i - 1) * n1 + (j - 1))
+                                + reference[i * n1 + j];
+                            let up = *out.add((i - 1) * n1 + j) - penalty;
+                            let left = *out.add(i * n1 + (j - 1)) - penalty;
+                            *out.add(i * n1 + j) = diag.max(up).max(left);
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+fn native(f: fn(&[f32], &mut [f32], usize, f32)) -> crate::taskrt::NativeFn {
+    Arc::new(move |bufs: &ExecBuffers| -> Result<()> {
+        let n1 = bufs.size + 1;
+        let reference = bufs.read(0).data().to_vec();
+        let mut out = bufs.write(1);
+        f(&reference, out.data_mut(), n1, PENALTY);
+        Ok(())
+    })
+}
+
+pub fn codelet() -> Codelet {
+    Codelet::new("nw", APP, vec![AccessMode::Read, AccessMode::Write])
+        .with_native("omp", Arch::Cpu, native(nw_omp))
+        .with_native("seq", Arch::Cpu, native(nw_seq))
+        .with_artifact("cuda", Arch::Cuda, "pallas")
+}
+
+pub fn paper_variants() -> &'static [&'static str] {
+    &["omp", "cuda"]
+}
+
+/// Random substitution-score matrix (integers in [-10, 10], like BLOSUM
+/// lookups in Rodinia). Returned flat, (n+1)^2.
+pub fn generate(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let n1 = n + 1;
+    (0..n1 * n1)
+        .map(|_| (rng.below(21) as f32) - 10.0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn omp_matches_seq() {
+        let n = 127;
+        let r = generate(8, n);
+        let n1 = n + 1;
+        let mut o1 = vec![0.0; n1 * n1];
+        let mut o2 = vec![0.0; n1 * n1];
+        nw_seq(&r, &mut o1, n1, PENALTY);
+        nw_omp(&r, &mut o2, n1, PENALTY);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn borders_are_gap_penalties() {
+        let n = 16;
+        let r = generate(9, n);
+        let n1 = n + 1;
+        let mut o = vec![0.0; n1 * n1];
+        nw_seq(&r, &mut o, n1, PENALTY);
+        for i in 0..n1 {
+            assert_eq!(o[i * n1], -(i as f32) * PENALTY);
+            assert_eq!(o[i], -(i as f32) * PENALTY);
+        }
+    }
+
+    #[test]
+    fn known_small_case() {
+        // 1x1 alignment: M[1][1] = max(0 + sub, -p - p twice)
+        let n1 = 2;
+        let mut r = vec![0.0; 4];
+        r[3] = 5.0; // sub score at (1,1)
+        let mut o = vec![0.0; 4];
+        nw_seq(&r, &mut o, n1, 10.0);
+        assert_eq!(o[3], 5.0);
+        r[3] = -50.0;
+        nw_seq(&r, &mut o, n1, 10.0);
+        assert_eq!(o[3], -20.0); // two gaps beat the bad substitution
+    }
+}

@@ -1,0 +1,129 @@
+//! Sort — the quickstart interface from the paper's Listing 1.3
+//! (`sort(arr, N)` with CUDA and OpenMP variants).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::common::omp_threads;
+use crate::taskrt::{AccessMode, Arch, Codelet, ExecBuffers};
+
+pub const APP: &str = "sort";
+
+/// Sequential sort (std's pdqsort — the "Seq" variant).
+pub fn sort_seq(arr: &mut [f32]) {
+    arr.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+/// Parallel merge sort: chunk-sort on scoped threads, then k-way merge
+/// by repeated pairwise merging (the "OpenMP" variant).
+pub fn sort_omp(arr: &mut [f32]) {
+    let threads = omp_threads().min(arr.len().max(1));
+    if threads <= 1 || arr.len() < 4096 {
+        sort_seq(arr);
+        return;
+    }
+    let chunk = arr.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for piece in arr.chunks_mut(chunk) {
+            s.spawn(|| piece.sort_by(|a, b| a.partial_cmp(b).unwrap()));
+        }
+    });
+    // pairwise merge passes
+    let mut width = chunk;
+    let mut buf = vec![0.0f32; arr.len()];
+    while width < arr.len() {
+        let mut lo = 0;
+        while lo + width < arr.len() {
+            let mid = lo + width;
+            let hi = (lo + 2 * width).min(arr.len());
+            merge(&arr[lo..mid], &arr[mid..hi], &mut buf[lo..hi]);
+            arr[lo..hi].copy_from_slice(&buf[lo..hi]);
+            lo = hi;
+        }
+        width *= 2;
+    }
+}
+
+fn merge(a: &[f32], b: &[f32], out: &mut [f32]) {
+    let (mut i, mut j, mut k) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        if a[i] <= b[j] {
+            out[k] = a[i];
+            i += 1;
+        } else {
+            out[k] = b[j];
+            j += 1;
+        }
+        k += 1;
+    }
+    out[k..k + a.len() - i].copy_from_slice(&a[i..]);
+    k += a.len() - i;
+    out[k..k + b.len() - j].copy_from_slice(&b[j..]);
+}
+
+fn native(f: fn(&mut [f32])) -> crate::taskrt::NativeFn {
+    Arc::new(move |bufs: &ExecBuffers| -> Result<()> {
+        let mut arr = bufs.write(0);
+        f(arr.data_mut());
+        Ok(())
+    })
+}
+
+/// The `sort` codelet of Listing 1.3: CUDA (bitonic Pallas artifact) and
+/// OpenMP variants, plus Seq.
+pub fn codelet() -> Codelet {
+    Codelet::new("sort", APP, vec![AccessMode::ReadWrite])
+        .with_native("omp", Arch::Cpu, native(sort_omp))
+        .with_native("seq", Arch::Cpu, native(sort_seq))
+        .with_artifact("cuda", Arch::Cuda, "pallas")
+}
+
+pub fn paper_variants() -> &'static [&'static str] {
+    &["omp", "cuda"]
+}
+
+pub fn generate(seed: u64, n: usize) -> Vec<f32> {
+    crate::util::rng::Rng::new(seed).vec_f32(n, -1e4, 1e4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_sorted(v: &[f32]) -> bool {
+        v.windows(2).all(|w| w[0] <= w[1])
+    }
+
+    #[test]
+    fn seq_sorts() {
+        let mut v = generate(1, 1000);
+        sort_seq(&mut v);
+        assert!(is_sorted(&v));
+    }
+
+    #[test]
+    fn omp_matches_seq() {
+        let mut a = generate(2, 100_000);
+        let mut b = a.clone();
+        sort_seq(&mut a);
+        sort_omp(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn omp_small_input() {
+        let mut v = generate(3, 17);
+        sort_omp(&mut v);
+        assert!(is_sorted(&v));
+    }
+
+    #[test]
+    fn merge_is_stable_total() {
+        let a = [1.0f32, 3.0, 5.0];
+        let b = [2.0f32, 4.0, 6.0];
+        let mut out = [0.0f32; 6];
+        merge(&a, &b, &mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+}

@@ -1,0 +1,266 @@
+//! Fig. 1 regenerator: execution time per input size for three
+//! configurations — CPU-only (STARPU_NCUDA=0), GPU-only (STARPU_NCPU=0)
+//! and COMPAR (free dynamic selection, dmda) — for every benchmark app,
+//! plus the per-variant series of Fig. 1e for matmul.
+//!
+//! Two row sources, marked in the output (DESIGN.md §3):
+//! * `meas`  — the task really executed through the runtime (native Rust
+//!   or XLA artifact); reported time is the modeled device time of the
+//!   executed variant(s), exactly what the schedulers saw.
+//! * `model` — sizes beyond the AOT artifact grid (up to the paper's
+//!   8192) evaluated through the same calibrated device model the
+//!   runtime's perf models learn; selection is simulated with trained
+//!   models (best variant + transfer), i.e. the converged-dmda outcome.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::report::{fmt_secs, Table};
+use crate::apps;
+use crate::runtime::Manifest;
+use crate::taskrt::device::{exec_model, transfer_model, Arch};
+use crate::taskrt::{Config, Runtime, SchedPolicy};
+
+/// One Fig. 1 data point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub size: usize,
+    /// configuration -> (seconds, winning variant, measured?)
+    pub cpu_only: (f64, String, bool),
+    pub gpu_only: (f64, String, bool),
+    pub compar: (f64, String, bool),
+}
+
+/// Variant -> arch mapping for an app (paper variant names).
+fn variants_with_arch(app: &str) -> Vec<(&'static str, Arch)> {
+    apps::paper_variants(app)
+        .iter()
+        .map(|v| (*v, Arch::parse(v).unwrap_or(Arch::Cpu)))
+        .collect()
+}
+
+/// Bytes an app's working set moves to the GPU on first touch.
+fn workload_bytes(app: &str, n: usize) -> usize {
+    match app {
+        "hotspot" => 2 * 4 * n * n,
+        "hotspot3d" => 2 * 4 * 8 * n * n,
+        "lud" => 4 * n * n,
+        "nw" => 2 * 4 * (n + 1) * (n + 1),
+        "matmul" => 3 * 4 * n * n,
+        "sort" => 4 * n,
+        _ => 4 * n * n,
+    }
+}
+
+/// Converged-model analytic time for one variant (exec + transfer if the
+/// variant lives on the GPU).
+pub fn variant_time(app: &str, variant: &str, arch: Arch, n: usize) -> f64 {
+    let exec = exec_model(app, variant, n);
+    match arch {
+        Arch::Cpu => exec,
+        Arch::Cuda => exec + transfer_model(workload_bytes(app, n)),
+    }
+}
+
+/// Best variant restricted to an arch filter (analytic).
+fn best_variant(app: &str, n: usize, allow: impl Fn(Arch) -> bool) -> (f64, String) {
+    variants_with_arch(app)
+        .into_iter()
+        .filter(|(_, a)| allow(*a))
+        .map(|(v, a)| (variant_time(app, v, a, n), v.to_string()))
+        .min_by(|x, y| x.0.partial_cmp(&y.0).unwrap())
+        .unwrap_or((f64::NAN, "-".into()))
+}
+
+/// Measured execution of one configuration through the real runtime:
+/// calibration warmup, then the timed run; returns the modeled time of
+/// the selected variant.
+fn measured(
+    app: &str,
+    size: usize,
+    manifest: &Arc<Manifest>,
+    ncpu: usize,
+    ncuda: usize,
+    reps: usize,
+) -> Result<(f64, String)> {
+    let cfg = Config {
+        ncpu,
+        ncuda,
+        sched: SchedPolicy::Dmda,
+        ..Config::default()
+    };
+    let rt = Runtime::new(cfg, Some(manifest.clone()))?;
+    // calibration phase (not timed): every variant of the codelet needs
+    // MIN_SAMPLES observations before dmda trusts its estimate
+    let nvariants = apps::codelet(app)?.impls.len();
+    let warmup = (crate::taskrt::perfmodel::MIN_SAMPLES + 1) * nvariants;
+    for i in 0..warmup {
+        let _ = apps::run_once(&rt, app, size, 1000 + i as u64, None, false)?;
+    }
+    rt.drain_results();
+    // timed: take the best (converged) selection over `reps`
+    let mut best = f64::INFINITY;
+    let mut variant = String::new();
+    for i in 0..reps {
+        let run = apps::run_once(&rt, app, size, 2000 + i as u64, None, false)?;
+        if run.modeled < best {
+            best = run.modeled;
+            variant = run.variant;
+        }
+    }
+    Ok((best, variant))
+}
+
+/// Is (app, size) fully executable (artifacts exist for the GPU variants)?
+fn size_measurable(app: &str, size: usize, manifest: &Manifest) -> bool {
+    // the pallas (cuda-analog) artifact must exist; native variants
+    // always exist. matmul additionally needs jnp (blas/cuda).
+    let need: &[&str] = if app == "matmul" {
+        &["pallas", "jnp"]
+    } else {
+        &["pallas"]
+    };
+    need.iter().all(|f| manifest.find(app, f, size).is_some())
+}
+
+/// Generate the Fig. 1 series for one app.
+pub fn series(
+    app: &str,
+    manifest: Option<&Arc<Manifest>>,
+    reps: usize,
+    max_measured_size: usize,
+) -> Result<Vec<Point>> {
+    let mut out = Vec::new();
+    for size in apps::paper_sizes(app) {
+        let measurable = manifest
+            .map(|m| size_measurable(app, size, m) && size <= max_measured_size)
+            .unwrap_or(false);
+        let point = if let (true, Some(m)) = (measurable, manifest) {
+            let cpu = measured(app, size, m, 4, 0, reps)?;
+            let gpu = measured(app, size, m, 0, 1, reps)?;
+            let both = measured(app, size, m, 4, 1, reps)?;
+            Point {
+                size,
+                cpu_only: (cpu.0, cpu.1, true),
+                gpu_only: (gpu.0, gpu.1, true),
+                compar: (both.0, both.1, true),
+            }
+        } else {
+            // converged-model extrapolation (same model family the
+            // runtime's perf models learn)
+            let cpu = best_variant(app, size, |a| a == Arch::Cpu);
+            let gpu = best_variant(app, size, |a| a == Arch::Cuda);
+            let free = best_variant(app, size, |_| true);
+            // dmda decision overhead on the critical path (measured by
+            // the taskrt_overhead bench; ~microseconds)
+            let overhead = 5e-6;
+            Point {
+                size,
+                cpu_only: (cpu.0, cpu.1, false),
+                gpu_only: (gpu.0, gpu.1, false),
+                compar: (free.0 + overhead, free.1, false),
+            }
+        };
+        out.push(point);
+    }
+    Ok(out)
+}
+
+/// Render one app's Fig. 1 panel.
+pub fn render(app: &str, points: &[Point]) -> String {
+    let mut t = Table::new(
+        &format!("Fig 1 ({app}): execution time, CPU-only vs GPU-only vs COMPAR"),
+        &["size", "cpu-only", "gpu-only", "COMPAR", "selected", "src"],
+    );
+    for p in points {
+        t.row(vec![
+            p.size.to_string(),
+            fmt_secs(p.cpu_only.0),
+            fmt_secs(p.gpu_only.0),
+            fmt_secs(p.compar.0),
+            p.compar.1.clone(),
+            if p.compar.2 { "meas" } else { "model" }.into(),
+        ]);
+    }
+    t.render()
+}
+
+/// Fig 1e per-variant series for matmul (BLAS/OMP/CUDA/CUBLAS columns).
+pub fn matmul_variant_table() -> String {
+    let mut t = Table::new(
+        "Fig 1e (matmul): per-variant execution time (converged models)",
+        &["size", "blas", "omp", "cuda", "cublas", "best"],
+    );
+    for size in apps::paper_sizes("matmul") {
+        let times: Vec<(f64, &str)> = [
+            ("blas", Arch::Cpu),
+            ("omp", Arch::Cpu),
+            ("cuda", Arch::Cuda),
+            ("cublas", Arch::Cuda),
+        ]
+        .iter()
+        .map(|(v, a)| (variant_time("matmul", v, *a, size), *v))
+        .collect();
+        let best = times
+            .iter()
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .unwrap()
+            .1;
+        t.row(vec![
+            size.to_string(),
+            fmt_secs(times[0].0),
+            fmt_secs(times[1].0),
+            fmt_secs(times[2].0),
+            fmt_secs(times[3].0),
+            best.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modeled_series_has_paper_shape_hotspot() {
+        // GPU wins at large sizes (Fig 1a), CPU competitive at 64
+        let pts = series("hotspot", None, 1, 0).unwrap();
+        let large = pts.iter().find(|p| p.size == 4096).unwrap();
+        assert!(large.gpu_only.0 < large.cpu_only.0);
+        // COMPAR tracks the winner
+        assert!(large.compar.0 <= large.cpu_only.0.min(large.gpu_only.0) * 1.1);
+    }
+
+    #[test]
+    fn matmul_crossover_in_variant_table() {
+        // Fig 1e shape: cuda beats cublas at 4096, loses at 8192
+        let t4096 = variant_time("matmul", "cuda", Arch::Cuda, 4096);
+        let b4096 = variant_time("matmul", "cublas", Arch::Cuda, 4096);
+        let t8192 = variant_time("matmul", "cuda", Arch::Cuda, 8192);
+        let b8192 = variant_time("matmul", "cublas", Arch::Cuda, 8192);
+        assert!(t4096 < b4096);
+        assert!(b8192 < t8192);
+    }
+
+    #[test]
+    fn small_matmul_contested() {
+        // 8..128: no single variant dominates by 10x (paper: "not always
+        // clear which variant performs best")
+        for size in [8usize, 32, 128] {
+            let cpu = best_variant("matmul", size, |a| a == Arch::Cpu);
+            let gpu = best_variant("matmul", size, |a| a == Arch::Cuda);
+            assert!(cpu.0 < gpu.0, "CPU should win tiny matmul at {size}");
+        }
+    }
+
+    #[test]
+    fn render_contains_all_sizes() {
+        let pts = series("nw", None, 1, 0).unwrap();
+        let s = render("nw", &pts);
+        for size in apps::paper_sizes("nw") {
+            assert!(s.contains(&size.to_string()));
+        }
+    }
+}

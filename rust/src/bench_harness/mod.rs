@@ -1,0 +1,48 @@
+//! Regenerates every table and figure of the paper's evaluation (§3):
+//! * [`fig1`] — Fig 1a-1e execution-time series (CPU-only / GPU-only /
+//!   COMPAR) plus the matmul per-variant panel;
+//! * [`table1f`] — the programmability (LoC) comparison;
+//! * [`selection`] — the §3.2 selection-quality discussion, quantified;
+//! * [`report`] — the plain-text table renderer.
+
+pub mod fig1;
+pub mod report;
+pub mod selection;
+pub mod table1f;
+
+/// The bundled COMPAR-annotated benchmark sources (compiled in, so the
+/// harness works from any working directory).
+pub fn bundled_sources() -> Vec<(String, String, String)> {
+    [
+        ("hotspot", include_str!("../../../examples/compar_src/hotspot.compar.c")),
+        (
+            "hotspot3d",
+            include_str!("../../../examples/compar_src/hotspot3d.compar.c"),
+        ),
+        ("lud", include_str!("../../../examples/compar_src/lud.compar.c")),
+        ("nw", include_str!("../../../examples/compar_src/nw.compar.c")),
+        ("matmul", include_str!("../../../examples/compar_src/matmul.compar.c")),
+        ("sort", include_str!("../../../examples/compar_src/sort.compar.c")),
+    ]
+    .into_iter()
+    .map(|(app, src)| {
+        (
+            app.to_string(),
+            src.to_string(),
+            format!("{app}.compar.c"),
+        )
+    })
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bundled_sources_compile_cleanly() {
+        for (app, src, file) in super::bundled_sources() {
+            let out = crate::compar::compile(&src, &file)
+                .unwrap_or_else(|e| panic!("{app}: {e:#}"));
+            assert!(!out.c_units.is_empty(), "{app} produced no glue");
+        }
+    }
+}

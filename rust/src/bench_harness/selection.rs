@@ -1,0 +1,152 @@
+//! Selection-quality experiments: the §3.2 discussion quantified.
+//!
+//! The paper observes that StarPU's dmda (a) converges to the best
+//! variant for the Rodinia apps, and (b) for matmul "frequently chose
+//! sub-optimal options" while its models were cold. This module measures
+//! both: run a task stream through the real runtime and score every
+//! decision against the oracle (the converged device model).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::fig1::variant_time;
+use super::report::Table;
+use crate::apps;
+use crate::runtime::Manifest;
+use crate::taskrt::device::Arch;
+use crate::taskrt::{Config, Runtime, SchedPolicy};
+
+/// Decision trace of one run.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub app: String,
+    pub size: usize,
+    /// (selected variant, oracle variant, regret seconds) per task.
+    pub decisions: Vec<(String, String, f64)>,
+}
+
+impl Trace {
+    /// Fraction of decisions matching the oracle.
+    pub fn accuracy(&self) -> f64 {
+        if self.decisions.is_empty() {
+            return 0.0;
+        }
+        let hits = self
+            .decisions
+            .iter()
+            .filter(|(sel, oracle, _)| sel == oracle)
+            .count();
+        hits as f64 / self.decisions.len() as f64
+    }
+
+    /// Total regret (selected modeled time - oracle time), seconds.
+    pub fn regret(&self) -> f64 {
+        self.decisions.iter().map(|(_, _, r)| r.max(0.0)).sum()
+    }
+}
+
+/// Oracle = variant with minimal converged-model time (incl. transfer).
+pub fn oracle_variant(app: &str, size: usize) -> (String, f64) {
+    apps::paper_variants(app)
+        .iter()
+        .map(|v| {
+            let arch = Arch::parse(v).unwrap_or(Arch::Cpu);
+            (v.to_string(), variant_time(app, v, arch, size))
+        })
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+}
+
+/// Run `tasks` submissions of (app, size) under `sched` and trace the
+/// selections. Fresh runtime => cold models (the paper's scenario).
+pub fn trace(
+    app: &str,
+    size: usize,
+    sched: SchedPolicy,
+    tasks: usize,
+    manifest: &Arc<Manifest>,
+) -> Result<Trace> {
+    let cfg = Config {
+        ncpu: 2,
+        ncuda: 1,
+        sched,
+        ..Config::default()
+    };
+    let rt = Runtime::new(cfg, Some(manifest.clone()))?;
+    let (oracle, oracle_t) = oracle_variant(app, size);
+    let mut decisions = Vec::new();
+    for i in 0..tasks {
+        let run = apps::run_once(&rt, app, size, 7000 + i as u64, None, false)?;
+        let arch = Arch::parse(&run.variant).unwrap_or(Arch::Cpu);
+        let sel_t = variant_time(app, &run.variant, arch, size);
+        decisions.push((run.variant, oracle.clone(), sel_t - oracle_t));
+    }
+    Ok(Trace {
+        app: app.to_string(),
+        size,
+        decisions,
+    })
+}
+
+/// Accuracy-over-time table: cold phase vs converged phase.
+pub fn render(traces: &[Trace]) -> String {
+    let mut t = Table::new(
+        "Selection quality (dmda decisions vs oracle; paper §3.2)",
+        &["app", "size", "tasks", "cold acc.", "warm acc.", "total regret"],
+    );
+    for tr in traces {
+        let n = tr.decisions.len();
+        let half = n / 2;
+        let cold = Trace {
+            app: tr.app.clone(),
+            size: tr.size,
+            decisions: tr.decisions[..half].to_vec(),
+        };
+        let warm = Trace {
+            app: tr.app.clone(),
+            size: tr.size,
+            decisions: tr.decisions[half..].to_vec(),
+        };
+        t.row(vec![
+            tr.app.clone(),
+            tr.size.to_string(),
+            n.to_string(),
+            format!("{:.0}%", cold.accuracy() * 100.0),
+            format!("{:.0}%", warm.accuracy() * 100.0),
+            crate::util::stats::fmt_time(tr.regret()),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_is_gpu_for_large_hotspot() {
+        let (v, _) = oracle_variant("hotspot", 4096);
+        assert_eq!(v, "cuda");
+    }
+
+    #[test]
+    fn oracle_is_cpu_for_tiny_matmul() {
+        let (v, _) = oracle_variant("matmul", 8);
+        assert!(v == "blas" || v == "omp", "{v}");
+    }
+
+    #[test]
+    fn accuracy_and_regret_math() {
+        let t = Trace {
+            app: "x".into(),
+            size: 1,
+            decisions: vec![
+                ("a".into(), "a".into(), 0.0),
+                ("b".into(), "a".into(), 0.5),
+            ],
+        };
+        assert_eq!(t.accuracy(), 0.5);
+        assert_eq!(t.regret(), 0.5);
+    }
+}

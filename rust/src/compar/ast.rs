@@ -1,0 +1,90 @@
+//! Abstract syntax tree of the COMPAR directive language (parser output,
+//! paper's Bison phase result).
+
+use super::token::Span;
+
+/// One clause: `name(arg, arg, ...)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Clause {
+    pub name: String,
+    pub args: Vec<ClauseArg>,
+    pub span: Span,
+}
+
+/// Clause argument values.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClauseArg {
+    /// Identifier (variable name, target name, interface name, ...).
+    Ident(String),
+    /// Integer literal.
+    Number(i64),
+    /// A C type: base identifier + pointer depth, e.g. float* = ("float", 1).
+    Type { base: String, stars: usize },
+}
+
+impl ClauseArg {
+    pub fn as_text(&self) -> String {
+        match self {
+            ClauseArg::Ident(s) => s.clone(),
+            ClauseArg::Number(n) => n.to_string(),
+            ClauseArg::Type { base, stars } => format!("{base}{}", "*".repeat(*stars)),
+        }
+    }
+}
+
+/// A parsed directive.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Directive {
+    /// `#pragma compar include`
+    Include { span: Span },
+    /// `#pragma compar initialize`
+    Initialize { span: Span },
+    /// `#pragma compar terminate`
+    Terminate { span: Span },
+    /// `#pragma compar method_declare interface(..) target(..) name(..)`
+    MethodDeclare { clauses: Vec<Clause>, span: Span },
+    /// `#pragma compar parameter name(..) type(..) size(..) access_mode(..)`
+    Parameter { clauses: Vec<Clause>, span: Span },
+}
+
+impl Directive {
+    pub fn span(&self) -> Span {
+        match self {
+            Directive::Include { span }
+            | Directive::Initialize { span }
+            | Directive::Terminate { span }
+            | Directive::MethodDeclare { span, .. }
+            | Directive::Parameter { span, .. } => *span,
+        }
+    }
+
+    pub fn keyword(&self) -> &'static str {
+        match self {
+            Directive::Include { .. } => "include",
+            Directive::Initialize { .. } => "initialize",
+            Directive::Terminate { .. } => "terminate",
+            Directive::MethodDeclare { .. } => "method_declare",
+            Directive::Parameter { .. } => "parameter",
+        }
+    }
+
+    pub fn clauses(&self) -> &[Clause] {
+        match self {
+            Directive::MethodDeclare { clauses, .. } | Directive::Parameter { clauses, .. } => {
+                clauses
+            }
+            _ => &[],
+        }
+    }
+
+    /// First clause with the given name.
+    pub fn clause(&self, name: &str) -> Option<&Clause> {
+        self.clauses().iter().find(|c| c.name == name)
+    }
+}
+
+/// The parsed program: directive list in source order.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub directives: Vec<Directive>,
+}

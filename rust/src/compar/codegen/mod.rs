@@ -1,0 +1,11 @@
+//! Code generation (paper §2.2, template-based): the IR is rendered to
+//! * StarPU-style C glue, one translation unit per interface, matching
+//!   the paper's Listing 1.4 ([`c_glue`]);
+//! * the `compar.h` support header ([`header`]);
+//! * Rust glue that registers the same interfaces with our `taskrt`
+//!   runtime ([`rust_glue`]) — the back-end target is swappable, as the
+//!   paper notes StarPU could be replaced by StarSs.
+
+pub mod c_glue;
+pub mod header;
+pub mod rust_glue;

@@ -1,0 +1,85 @@
+//! Diagnostics with source spans — rendered like a compiler error:
+//!
+//! ```text
+//! error: duplicate variant 'sort_cuda' for interface 'sort'
+//!   --> app.compar.c:12:44
+//!    |
+//! 12 | #pragma compar method_declare interface(sort) ...
+//!    |                                          ^^^^
+//! ```
+
+use super::token::Span;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    pub message: String,
+    pub span: Span,
+}
+
+impl Diagnostic {
+    pub fn error(message: impl Into<String>, span: Span) -> Diagnostic {
+        Diagnostic {
+            severity: Severity::Error,
+            message: message.into(),
+            span,
+        }
+    }
+
+    pub fn warning(message: impl Into<String>, span: Span) -> Diagnostic {
+        Diagnostic {
+            severity: Severity::Warning,
+            message: message.into(),
+            span,
+        }
+    }
+
+    pub fn is_error(&self) -> bool {
+        self.severity == Severity::Error
+    }
+
+    /// Render with the offending source line and a caret underline.
+    pub fn render(&self, source: &str, filename: &str) -> String {
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        let line_text = source.lines().nth(self.span.line.saturating_sub(1)).unwrap_or("");
+        let gutter = format!("{}", self.span.line);
+        let pad = " ".repeat(gutter.len());
+        let caret_pad = " ".repeat(self.span.col.saturating_sub(1));
+        let carets = "^".repeat(self.span.len.max(1));
+        format!(
+            "{sev}: {}\n {pad}--> {filename}:{}:{}\n {pad}|\n {gutter} | {line_text}\n {pad}| {caret_pad}{carets}",
+            self.message, self.span.line, self.span.col
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_with_caret() {
+        let src = "int x;\n#pragma compar bogus\n";
+        let d = Diagnostic::error("unknown directive 'bogus'", Span::new(2, 16, 22, 5));
+        let out = d.render(src, "t.c");
+        assert!(out.contains("error: unknown directive 'bogus'"));
+        assert!(out.contains("t.c:2:16"));
+        assert!(out.contains("#pragma compar bogus"));
+        assert!(out.contains("^^^^^"));
+    }
+
+    #[test]
+    fn severity_flags() {
+        let d = Diagnostic::warning("w", Span::new(1, 1, 0, 1));
+        assert!(!d.is_error());
+    }
+}

@@ -1,0 +1,252 @@
+//! Intermediate representation (paper §2.2): the validated, lowered form
+//! the code generators consume.
+
+use super::ast::{ClauseArg, Directive, Program};
+use crate::taskrt::{AccessMode, Arch};
+
+/// One parameter of an interface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub name: String,
+    /// C type text, e.g. "float*".
+    pub ctype: String,
+    /// Size expressions (variable names or literals); empty = scalar.
+    pub dims: Vec<String>,
+    pub mode: AccessMode,
+}
+
+impl Param {
+    pub fn is_buffer(&self) -> bool {
+        !self.dims.is_empty()
+    }
+
+    /// Element C type (pointer stars stripped).
+    pub fn elem_type(&self) -> String {
+        self.ctype.trim_end_matches('*').to_string()
+    }
+
+    /// StarPU data interface for this parameter's rank.
+    pub fn starpu_interface(&self) -> &'static str {
+        match self.dims.len() {
+            1 => "vector",
+            2 => "matrix",
+            3 => "block",
+            4 => "tensor",
+            _ => "variable",
+        }
+    }
+}
+
+/// One implementation variant of an interface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variant {
+    /// Function name, e.g. "sort_cuda".
+    pub func: String,
+    /// Normalized target ("cuda", "openmp", "seq", "opencl", "blas",
+    /// "cublas").
+    pub target: String,
+}
+
+impl Variant {
+    /// Architecture the target maps onto.
+    pub fn arch(&self) -> Arch {
+        Arch::parse(&self.target).unwrap_or(Arch::Cpu)
+    }
+}
+
+/// One interface (codelet) with its variants.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Interface {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub variants: Vec<Variant>,
+}
+
+impl Interface {
+    /// The size expression used as the task scale parameter: the first
+    /// dimension of the first buffer parameter (paper: "input size").
+    pub fn size_expr(&self) -> Option<&str> {
+        self.params
+            .iter()
+            .find(|p| p.is_buffer())
+            .and_then(|p| p.dims.first())
+            .map(String::as_str)
+    }
+}
+
+/// The lowered program.
+#[derive(Debug, Clone, Default)]
+pub struct ComparProgram {
+    pub interfaces: Vec<Interface>,
+    pub has_include: bool,
+    pub has_initialize: bool,
+    pub has_terminate: bool,
+}
+
+impl ComparProgram {
+    pub fn interface(&self, name: &str) -> Option<&Interface> {
+        self.interfaces.iter().find(|i| i.name == name)
+    }
+}
+
+/// Lower a validated AST into the IR. Assumes `sema::check` passed
+/// (malformed clauses are skipped defensively rather than panicking).
+pub fn lower(program: &Program) -> ComparProgram {
+    let mut out = ComparProgram::default();
+    let mut current: Option<usize> = None; // index into out.interfaces
+    let mut current_first = false;
+
+    for d in &program.directives {
+        match d {
+            Directive::Include { .. } => out.has_include = true,
+            Directive::Initialize { .. } => out.has_initialize = true,
+            Directive::Terminate { .. } => out.has_terminate = true,
+            Directive::MethodDeclare { .. } => {
+                let (Some(iface), Some(name), Some(target)) = (
+                    d.clause("interface").and_then(|c| c.args.first()).map(ClauseArg::as_text),
+                    d.clause("name").and_then(|c| c.args.first()).map(ClauseArg::as_text),
+                    d.clause("target").and_then(|c| c.args.first()).map(ClauseArg::as_text),
+                ) else {
+                    current = None;
+                    continue;
+                };
+                let mut target = target.to_ascii_lowercase();
+                if target == "omp" {
+                    target = "openmp".into();
+                }
+                let idx = match out.interfaces.iter().position(|i| i.name == iface) {
+                    Some(i) => i,
+                    None => {
+                        out.interfaces.push(Interface {
+                            name: iface,
+                            ..Default::default()
+                        });
+                        out.interfaces.len() - 1
+                    }
+                };
+                current_first = out.interfaces[idx].params.is_empty();
+                out.interfaces[idx].variants.push(Variant { func: name, target });
+                current = Some(idx);
+            }
+            Directive::Parameter { .. } => {
+                let Some(idx) = current else { continue };
+                if !current_first {
+                    continue; // signature already fixed by the first variant
+                }
+                let Some(name) = d
+                    .clause("name")
+                    .and_then(|c| c.args.first())
+                    .map(ClauseArg::as_text)
+                else {
+                    continue;
+                };
+                let ctype = d
+                    .clause("type")
+                    .and_then(|c| c.args.first())
+                    .map(ClauseArg::as_text)
+                    .unwrap_or_default();
+                let dims = d
+                    .clause("size")
+                    .map(|c| c.args.iter().map(ClauseArg::as_text).collect())
+                    .unwrap_or_default();
+                let mode = d
+                    .clause("access_mode")
+                    .and_then(|c| c.args.first())
+                    .and_then(|a| AccessMode::parse(&a.as_text()))
+                    .unwrap_or(AccessMode::Read);
+                out.interfaces[idx].params.push(Param {
+                    name,
+                    ctype,
+                    dims,
+                    mode,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compar::{lexer::lex, parser::parse};
+
+    fn lower_src(src: &str) -> ComparProgram {
+        lower(&parse(&lex(src, "t.c").unwrap(), src, "t.c").unwrap())
+    }
+
+    const LISTING_1_3: &str = "\
+#pragma compar include
+#pragma compar method_declare interface(sort) target(cuda) name(sort_cuda)
+#pragma compar parameter name(arr) type(float*) size(N) access_mode(readwrite)
+#pragma compar parameter name(N) type(int)
+#pragma compar method_declare interface(sort) target(openmp) name(sort_omp)
+#pragma compar method_declare interface(mmul) target(cuda) name(mmul_cuda)
+#pragma compar parameter name(A) type(float*) size(N, M) access_mode(read)
+#pragma compar parameter name(B) type(float*) size(N, M) access_mode(read)
+#pragma compar parameter name(N) type(int)
+#pragma compar parameter name(M) type(int)
+#pragma compar method_declare interface(mmul) target(openmp) name(mmul_omp)
+#pragma compar initialize
+#pragma compar terminate
+";
+
+    #[test]
+    fn lowers_listing_1_3() {
+        let p = lower_src(LISTING_1_3);
+        assert!(p.has_include && p.has_initialize && p.has_terminate);
+        assert_eq!(p.interfaces.len(), 2);
+        let sort = p.interface("sort").unwrap();
+        assert_eq!(sort.variants.len(), 2);
+        assert_eq!(sort.variants[0].func, "sort_cuda");
+        assert_eq!(sort.variants[1].target, "openmp");
+        assert_eq!(sort.params.len(), 2);
+        assert!(sort.params[0].is_buffer());
+        assert_eq!(sort.params[0].mode, AccessMode::ReadWrite);
+        assert!(!sort.params[1].is_buffer());
+        assert_eq!(sort.size_expr(), Some("N"));
+
+        let mmul = p.interface("mmul").unwrap();
+        assert_eq!(mmul.params.len(), 4);
+        assert_eq!(mmul.params[0].dims, vec!["N", "M"]);
+        assert_eq!(mmul.params[0].starpu_interface(), "matrix");
+    }
+
+    #[test]
+    fn variant_arch_mapping() {
+        let v = Variant {
+            func: "f".into(),
+            target: "cublas".into(),
+        };
+        assert_eq!(v.arch(), Arch::Cuda);
+        let v2 = Variant {
+            func: "g".into(),
+            target: "openmp".into(),
+        };
+        assert_eq!(v2.arch(), Arch::Cpu);
+    }
+
+    #[test]
+    fn elem_type_strips_stars() {
+        let p = Param {
+            name: "a".into(),
+            ctype: "float*".into(),
+            dims: vec!["N".into()],
+            mode: AccessMode::Read,
+        };
+        assert_eq!(p.elem_type(), "float");
+        assert_eq!(p.starpu_interface(), "vector");
+    }
+
+    #[test]
+    fn later_variant_params_do_not_override() {
+        let src = "\
+#pragma compar method_declare interface(f) target(cuda) name(f1)
+#pragma compar parameter name(x) type(int)
+#pragma compar method_declare interface(f) target(openmp) name(f2)
+#pragma compar parameter name(x) type(int)
+";
+        let p = lower_src(src);
+        assert_eq!(p.interface("f").unwrap().params.len(), 1);
+    }
+}

@@ -1,0 +1,235 @@
+//! Lexical analysis (the paper's Flex phase).
+//!
+//! Scans the whole source, but produces tokens only for lines starting
+//! with `#pragma compar` (after whitespace). Supports `\` line
+//! continuations. Everything else is passthrough text the code
+//! generator preserves verbatim.
+
+use anyhow::{bail, Result};
+
+use super::token::{Span, Token, TokenKind};
+
+/// Tokenize all COMPAR directive lines in `source`.
+///
+/// The token stream is flat; each directive ends with an `Eol` token.
+pub fn lex(source: &str, filename: &str) -> Result<Vec<Token>> {
+    let mut tokens = Vec::new();
+    let mut offset = 0usize;
+    let mut lines = source.lines().enumerate().peekable();
+    while let Some((lineno, raw)) = lines.next() {
+        let line_start = offset;
+        offset += raw.len() + 1; // + newline
+        let trimmed = raw.trim_start();
+        let indent = raw.len() - trimmed.len();
+        if !is_compar_pragma(trimmed) {
+            continue;
+        }
+        // assemble continuations
+        let mut text = trimmed.to_string();
+        let mut extent = raw.len();
+        while text.ends_with('\\') {
+            text.pop();
+            match lines.next() {
+                Some((_, cont)) => {
+                    text.push(' ');
+                    text.push_str(cont.trim());
+                    extent += cont.len() + 1;
+                    offset += cont.len() + 1;
+                }
+                None => break,
+            }
+        }
+        let _ = extent;
+        lex_directive_line(
+            &text,
+            lineno + 1,
+            indent + 1,
+            line_start + indent,
+            &mut tokens,
+            filename,
+        )?;
+    }
+    Ok(tokens)
+}
+
+/// Does a (trimmed) line start a COMPAR directive?
+pub fn is_compar_pragma(trimmed: &str) -> bool {
+    let Some(rest) = trimmed.strip_prefix("#pragma") else {
+        return false;
+    };
+    rest.trim_start().starts_with("compar")
+        && rest
+            .trim_start()
+            .strip_prefix("compar")
+            .map(|r| r.is_empty() || r.starts_with(char::is_whitespace))
+            .unwrap_or(false)
+}
+
+fn lex_directive_line(
+    text: &str,
+    line: usize,
+    col0: usize,
+    offset0: usize,
+    out: &mut Vec<Token>,
+    filename: &str,
+) -> Result<()> {
+    // strip "#pragma" then "compar"
+    let after_pragma = text.strip_prefix("#pragma").unwrap();
+    let ws1 = after_pragma.len() - after_pragma.trim_start().len();
+    let after = after_pragma.trim_start().strip_prefix("compar").unwrap();
+    let intro_len = "#pragma".len() + ws1 + "compar".len();
+    out.push(Token::new(
+        TokenKind::PragmaCompar,
+        Span::new(line, col0, offset0, intro_len),
+    ));
+
+    let bytes = after.as_bytes();
+    let base_col = col0 + intro_len;
+    let base_off = offset0 + intro_len;
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        let span1 = |i: usize| Span::new(line, base_col + i, base_off + i, 1);
+        match c {
+            ' ' | '\t' => i += 1,
+            '(' => {
+                out.push(Token::new(TokenKind::LParen, span1(i)));
+                i += 1;
+            }
+            ')' => {
+                out.push(Token::new(TokenKind::RParen, span1(i)));
+                i += 1;
+            }
+            ',' => {
+                out.push(Token::new(TokenKind::Comma, span1(i)));
+                i += 1;
+            }
+            '*' => {
+                out.push(Token::new(TokenKind::Star, span1(i)));
+                i += 1;
+            }
+            '/' if bytes.get(i + 1) == Some(&b'/') => break, // trailing comment
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < bytes.len() && (bytes[i] as char).is_ascii_digit() {
+                    i += 1;
+                }
+                let n: i64 = after[start..i].parse().unwrap();
+                out.push(Token::new(
+                    TokenKind::Number(n),
+                    Span::new(line, base_col + start, base_off + start, i - start),
+                ));
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < bytes.len() && {
+                    let c = bytes[i] as char;
+                    c.is_ascii_alphanumeric() || c == '_'
+                } {
+                    i += 1;
+                }
+                out.push(Token::new(
+                    TokenKind::Ident(after[start..i].to_string()),
+                    Span::new(line, base_col + start, base_off + start, i - start),
+                ));
+            }
+            other => bail!(
+                "{filename}:{line}:{}: unexpected character '{other}' in COMPAR directive",
+                base_col + i
+            ),
+        }
+    }
+    out.push(Token::new(
+        TokenKind::Eol,
+        Span::new(line, base_col + bytes.len(), base_off + bytes.len(), 1),
+    ));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokenKind> {
+        lex(src, "t.c").unwrap().into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn ignores_plain_source() {
+        assert!(lex("int main() { return 0; }\n// #pragma omp\n", "t.c")
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn detects_pragma_variants() {
+        assert!(is_compar_pragma("#pragma compar include"));
+        assert!(is_compar_pragma("#pragma  compar initialize"));
+        assert!(!is_compar_pragma("#pragma omp parallel"));
+        assert!(!is_compar_pragma("#pragma comparx"));
+    }
+
+    #[test]
+    fn lexes_method_declare() {
+        let k = kinds("#pragma compar method_declare interface(sort) target(cuda) name(sort_cuda)\n");
+        use TokenKind::*;
+        assert_eq!(
+            k,
+            vec![
+                PragmaCompar,
+                Ident("method_declare".into()),
+                Ident("interface".into()),
+                LParen,
+                Ident("sort".into()),
+                RParen,
+                Ident("target".into()),
+                LParen,
+                Ident("cuda".into()),
+                RParen,
+                Ident("name".into()),
+                LParen,
+                Ident("sort_cuda".into()),
+                RParen,
+                Eol,
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_pointer_type_and_sizes() {
+        let k = kinds("#pragma compar parameter name(A) type(float*) size(N, M)\n");
+        assert!(k.contains(&TokenKind::Star));
+        assert!(k.contains(&TokenKind::Comma));
+    }
+
+    #[test]
+    fn numbers_and_continuations() {
+        let k = kinds("#pragma compar parameter name(x) \\\n  type(int) size(128)\n");
+        assert!(k.contains(&TokenKind::Number(128)));
+    }
+
+    #[test]
+    fn trailing_comment_ignored() {
+        let k = kinds("#pragma compar initialize // boot the runtime\n");
+        assert_eq!(
+            k,
+            vec![
+                TokenKind::PragmaCompar,
+                TokenKind::Ident("initialize".into()),
+                TokenKind::Eol
+            ]
+        );
+    }
+
+    #[test]
+    fn bad_character_is_error() {
+        assert!(lex("#pragma compar parameter name(a$b)\n", "t.c").is_err());
+    }
+
+    #[test]
+    fn spans_point_into_line() {
+        let toks = lex("  #pragma compar include\n", "t.c").unwrap();
+        assert_eq!(toks[0].span.line, 1);
+        assert_eq!(toks[0].span.col, 3);
+    }
+}

@@ -1,0 +1,59 @@
+//! The COMPAR pre-compiler (paper §2): lexer -> parser -> semantic
+//! analysis -> IR -> code generation.
+//!
+//! The surface language is the paper's `#pragma compar` directive set
+//! embedded in C/C++-like sources; everything that is not a COMPAR
+//! directive passes through untouched (backward compatibility, §2.1).
+
+pub mod ast;
+pub mod codegen;
+pub mod diagnostics;
+pub mod ir;
+pub mod lexer;
+pub mod opt;
+pub mod parser;
+pub mod sema;
+pub mod token;
+
+use anyhow::{bail, Result};
+
+/// Run the full front-end: source text -> validated IR.
+pub fn analyze(source: &str, filename: &str) -> Result<ir::ComparProgram> {
+    let tokens = lexer::lex(source, filename)?;
+    let program = parser::parse(&tokens, source, filename)?;
+    let diags = sema::check(&program);
+    if diags.iter().any(|d| d.is_error()) {
+        let mut msg = String::new();
+        for d in &diags {
+            msg.push_str(&d.render(source, filename));
+            msg.push('\n');
+        }
+        bail!("semantic errors:\n{msg}");
+    }
+    Ok(ir::lower(&program))
+}
+
+/// Full pipeline: source -> generated artifacts (paper §2.2).
+pub struct CompileOutput {
+    /// StarPU-style C glue, one unit per interface (paper Listing 1.4).
+    pub c_units: Vec<(String, String)>,
+    /// `compar.h` contents.
+    pub header: String,
+    /// Rust glue targeting our `taskrt` runtime.
+    pub rust_glue: String,
+    /// The transformed application source (directives -> plain C).
+    pub transformed: String,
+    pub program: ir::ComparProgram,
+}
+
+/// Compile COMPAR-annotated source to all glue outputs.
+pub fn compile(source: &str, filename: &str) -> Result<CompileOutput> {
+    let program = analyze(source, filename)?;
+    Ok(CompileOutput {
+        c_units: codegen::c_glue::generate_units(&program),
+        header: codegen::header::generate(&program),
+        rust_glue: codegen::rust_glue::generate(&program),
+        transformed: codegen::c_glue::transform_source(source),
+        program,
+    })
+}

@@ -1,0 +1,184 @@
+//! Compile-time optimization (the paper's §5 future work, implemented):
+//! "optimization techniques could be applied during compilation to
+//! reduce the set of implementation variants based on benchmarking
+//! results or other criteria."
+//!
+//! The pass evaluates every variant of every interface against the
+//! calibrated device model over the app's input-size range and removes
+//! *dominated* variants — those never within `keep_margin` of the best
+//! variant at any size. The runtime then has fewer codelets to
+//! calibrate, shortening the cold phase that §3.2 blames for StarPU's
+//! early sub-optimal selections.
+
+use crate::bench_harness::fig1::variant_time;
+use crate::compar::codegen::rust_glue::variant_label;
+use crate::compar::ir::{ComparProgram, Interface};
+use crate::taskrt::device::Arch;
+
+/// Result of pruning one interface.
+#[derive(Debug, Clone)]
+pub struct PruneReport {
+    pub interface: String,
+    pub kept: Vec<String>,
+    pub removed: Vec<(String, String)>, // (variant func, reason)
+}
+
+/// The device-model app key for an interface (interface names follow the
+/// benchmark apps; unknown interfaces fall back to their own name, which
+/// hits the device model's generic path).
+fn app_key(iface: &Interface) -> &str {
+    match iface.name.as_str() {
+        "mmul" => "matmul",
+        other => other,
+    }
+}
+
+/// Sizes to evaluate during pruning.
+fn probe_sizes(app: &str) -> Vec<usize> {
+    let s = crate::apps::paper_sizes(app);
+    if s.is_empty() {
+        vec![64, 256, 1024, 4096]
+    } else {
+        s
+    }
+}
+
+/// Prune dominated variants. `keep_margin` = 1.25 keeps any variant that
+/// comes within 25% of the best somewhere in the size range.
+pub fn prune_variants(program: &mut ComparProgram, keep_margin: f64) -> Vec<PruneReport> {
+    let mut reports = Vec::new();
+    for iface in &mut program.interfaces {
+        let app = app_key(iface).to_string();
+        let sizes = probe_sizes(&app);
+        // time matrix: variant x size
+        let times: Vec<Vec<f64>> = iface
+            .variants
+            .iter()
+            .map(|v| {
+                let label = variant_label(&v.target);
+                let arch = v.arch();
+                sizes
+                    .iter()
+                    .map(|&n| variant_time(&app, label, arch, n))
+                    .collect()
+            })
+            .collect();
+        let best_per_size: Vec<f64> = (0..sizes.len())
+            .map(|j| {
+                times
+                    .iter()
+                    .map(|row| row[j])
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let mut kept = Vec::new();
+        let mut removed = Vec::new();
+        let keep_flags: Vec<bool> = times
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .zip(&best_per_size)
+                    .any(|(t, b)| *t <= b * keep_margin)
+            })
+            .collect();
+        // never remove everything, and always keep at least one variant
+        // per architecture that has one (the runtime needs a fallback
+        // when a device class is absent)
+        let mut keep_flags = keep_flags;
+        for arch in [Arch::Cpu, Arch::Cuda] {
+            let has_arch: Vec<usize> = iface
+                .variants
+                .iter()
+                .enumerate()
+                .filter(|(_, v)| v.arch() == arch)
+                .map(|(i, _)| i)
+                .collect();
+            if !has_arch.is_empty() && !has_arch.iter().any(|&i| keep_flags[i]) {
+                // keep the best-at-largest-size variant of this arch
+                let best = has_arch
+                    .into_iter()
+                    .min_by(|&a, &b| {
+                        times[a].last().unwrap().partial_cmp(times[b].last().unwrap()).unwrap()
+                    })
+                    .unwrap();
+                keep_flags[best] = true;
+            }
+        }
+        let old = std::mem::take(&mut iface.variants);
+        for (i, v) in old.into_iter().enumerate() {
+            if keep_flags[i] {
+                kept.push(v.func.clone());
+                iface.variants.push(v);
+            } else {
+                removed.push((
+                    v.func.clone(),
+                    format!(
+                        "dominated: never within {:.0}% of the best variant over sizes {:?}",
+                        (keep_margin - 1.0) * 100.0,
+                        sizes
+                    ),
+                ));
+            }
+        }
+        reports.push(PruneReport {
+            interface: iface.name.clone(),
+            kept,
+            removed,
+        });
+    }
+    reports
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compar::analyze;
+
+    const SRC: &str = "\
+#pragma compar method_declare interface(mmul) target(blas) name(mmul_blas)
+#pragma compar parameter name(A) type(float*) size(N, N) access_mode(read)
+#pragma compar parameter name(B) type(float*) size(N, N) access_mode(read)
+#pragma compar parameter name(C) type(float*) size(N, N) access_mode(write)
+#pragma compar parameter name(N) type(int)
+#pragma compar method_declare interface(mmul) target(seq) name(mmul_seq)
+#pragma compar method_declare interface(mmul) target(openmp) name(mmul_omp)
+#pragma compar method_declare interface(mmul) target(cuda) name(mmul_cuda)
+#pragma compar method_declare interface(mmul) target(cublas) name(mmul_cublas)
+#pragma compar initialize
+#pragma compar terminate
+";
+
+    #[test]
+    fn dominated_variant_is_pruned_for_mmul() {
+        let mut p = analyze(SRC, "t.c").unwrap();
+        let reports = prune_variants(&mut p, 1.25);
+        let r = &reports[0];
+        // the naive OpenMP triple loop is dominated everywhere: seq wins
+        // tiny sizes (lower overhead), blas wins small-mid, cuda/cublas
+        // win large — omp is never within 25% of any of them
+        assert!(
+            r.removed.iter().any(|(f, _)| f == "mmul_omp"),
+            "omp not pruned: {r:?}"
+        );
+        // the contested variants all survive (blas small, cuda mid,
+        // cublas large)
+        for keep in ["mmul_blas", "mmul_cuda", "mmul_cublas"] {
+            assert!(r.kept.iter().any(|k| k == keep), "{keep} wrongly pruned");
+        }
+        // program was actually rewritten
+        assert_eq!(
+            p.interface("mmul").unwrap().variants.len(),
+            r.kept.len()
+        );
+    }
+
+    #[test]
+    fn every_arch_keeps_a_fallback() {
+        let mut p = analyze(SRC, "t.c").unwrap();
+        // absurd margin would prune all but one; arch fallback must hold
+        prune_variants(&mut p, 1.0);
+        let iface = p.interface("mmul").unwrap();
+        assert!(iface.variants.iter().any(|v| v.arch() == Arch::Cpu));
+        assert!(iface.variants.iter().any(|v| v.arch() == Arch::Cuda));
+    }
+}

@@ -1,0 +1,246 @@
+//! Syntax analysis (the paper's Bison phase): token stream -> AST.
+//!
+//! Grammar:
+//! ```text
+//! program   := directive*
+//! directive := PRAGMA keyword clause* EOL
+//! keyword   := include | initialize | terminate
+//!            | method_declare | parameter
+//! clause    := IDENT '(' args? ')'
+//! args      := arg (',' arg)*
+//! arg       := IDENT '*'* | NUMBER
+//! ```
+
+use anyhow::{bail, Result};
+
+use super::ast::{Clause, ClauseArg, Directive, Program};
+use super::token::{Span, Token, TokenKind};
+
+pub fn parse(tokens: &[Token], _source: &str, filename: &str) -> Result<Program> {
+    let mut p = Parser {
+        toks: tokens,
+        i: 0,
+        filename,
+    };
+    let mut program = Program::default();
+    while !p.done() {
+        program.directives.push(p.directive()?);
+    }
+    Ok(program)
+}
+
+struct Parser<'a> {
+    toks: &'a [Token],
+    i: usize,
+    filename: &'a str,
+}
+
+impl<'a> Parser<'a> {
+    fn done(&self) -> bool {
+        self.i >= self.toks.len()
+    }
+
+    fn peek(&self) -> Option<&Token> {
+        self.toks.get(self.i)
+    }
+
+    fn next(&mut self) -> Option<&Token> {
+        let t = self.toks.get(self.i);
+        self.i += 1;
+        t
+    }
+
+    fn err<T>(&self, span: Span, msg: impl std::fmt::Display) -> Result<T> {
+        bail!("{}:{}:{}: {msg}", self.filename, span.line, span.col)
+    }
+
+    fn directive(&mut self) -> Result<Directive> {
+        let intro = self.next().cloned().expect("non-empty");
+        if intro.kind != TokenKind::PragmaCompar {
+            return self.err(intro.span, format!("expected #pragma compar, got {}", intro.kind));
+        }
+        let kw = match self.next().cloned() {
+            Some(Token {
+                kind: TokenKind::Ident(name),
+                span,
+            }) => (name, span),
+            Some(t) => return self.err(t.span, format!("expected a directive name, got {}", t.kind)),
+            None => return self.err(intro.span, "directive name missing"),
+        };
+        let span = intro.span;
+        let d = match kw.0.as_str() {
+            "include" => Directive::Include { span },
+            "initialize" => Directive::Initialize { span },
+            "terminate" => Directive::Terminate { span },
+            "method_declare" => Directive::MethodDeclare {
+                clauses: self.clauses()?,
+                span,
+            },
+            "parameter" => Directive::Parameter {
+                clauses: self.clauses()?,
+                span,
+            },
+            other => {
+                return self.err(
+                    kw.1,
+                    format!(
+                        "unknown COMPAR directive '{other}' (expected include, initialize, \
+                         terminate, method_declare or parameter)"
+                    ),
+                )
+            }
+        };
+        // consume EOL
+        match self.next() {
+            Some(t) if t.kind == TokenKind::Eol => Ok(d),
+            Some(t) => {
+                let (k, s) = (t.kind.clone(), t.span);
+                self.err(s, format!("unexpected {k} after directive"))
+            }
+            None => Ok(d),
+        }
+    }
+
+    fn clauses(&mut self) -> Result<Vec<Clause>> {
+        let mut out = Vec::new();
+        while let Some(t) = self.peek() {
+            match &t.kind {
+                TokenKind::Eol => break,
+                TokenKind::Ident(_) => out.push(self.clause()?),
+                other => {
+                    let (k, s) = (other.clone(), t.span);
+                    return self.err(s, format!("expected a clause name, got {k}"));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn clause(&mut self) -> Result<Clause> {
+        let (name, span) = match self.next().cloned() {
+            Some(Token {
+                kind: TokenKind::Ident(n),
+                span,
+            }) => (n, span),
+            _ => unreachable!("guarded by peek"),
+        };
+        match self.next() {
+            Some(t) if t.kind == TokenKind::LParen => {}
+            Some(t) => {
+                let s = t.span;
+                return self.err(s, format!("clause '{name}' needs '('"));
+            }
+            None => return self.err(span, format!("clause '{name}' needs '('")),
+        }
+        let mut args = Vec::new();
+        loop {
+            match self.peek().map(|t| (t.kind.clone(), t.span)) {
+                Some((TokenKind::RParen, _)) => {
+                    self.next();
+                    break;
+                }
+                Some((TokenKind::Comma, _)) => {
+                    self.next();
+                }
+                Some((TokenKind::Ident(id), _)) => {
+                    self.next();
+                    // fold pointer stars into a type argument
+                    let mut stars = 0;
+                    while matches!(self.peek().map(|t| &t.kind), Some(TokenKind::Star)) {
+                        self.next();
+                        stars += 1;
+                    }
+                    if stars > 0 {
+                        args.push(ClauseArg::Type { base: id, stars });
+                    } else {
+                        args.push(ClauseArg::Ident(id));
+                    }
+                }
+                Some((TokenKind::Number(n), _)) => {
+                    self.next();
+                    args.push(ClauseArg::Number(n));
+                }
+                Some((k, s)) => return self.err(s, format!("unexpected {k} in clause '{name}'")),
+                None => return self.err(span, format!("clause '{name}' not closed")),
+            }
+        }
+        Ok(Clause { name, args, span })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compar::lexer::lex;
+
+    fn parse_src(src: &str) -> Result<Program> {
+        parse(&lex(src, "t.c").unwrap(), src, "t.c")
+    }
+
+    #[test]
+    fn parses_listing_1_3_shapes() {
+        let src = "\
+#pragma compar include
+#pragma compar method_declare interface(sort) target(cuda) name(sort_cuda)
+#pragma compar parameter name(arr) type(float*) size(N) access_mode(readwrite)
+#pragma compar parameter name(N) type(int)
+#pragma compar initialize
+#pragma compar terminate
+";
+        let p = parse_src(src).unwrap();
+        assert_eq!(p.directives.len(), 6);
+        assert_eq!(p.directives[0].keyword(), "include");
+        let md = &p.directives[1];
+        assert_eq!(md.clause("interface").unwrap().args[0].as_text(), "sort");
+        assert_eq!(md.clause("target").unwrap().args[0].as_text(), "cuda");
+        let param = &p.directives[2];
+        assert_eq!(param.clause("type").unwrap().args[0].as_text(), "float*");
+        assert_eq!(
+            param.clause("access_mode").unwrap().args[0].as_text(),
+            "readwrite"
+        );
+    }
+
+    #[test]
+    fn multi_arg_size_clause() {
+        let p = parse_src("#pragma compar parameter name(A) type(float*) size(N, M)\n").unwrap();
+        let sz = p.directives[0].clause("size").unwrap();
+        assert_eq!(sz.args.len(), 2);
+    }
+
+    #[test]
+    fn unknown_directive_rejected() {
+        assert!(parse_src("#pragma compar frobnicate\n").is_err());
+    }
+
+    #[test]
+    fn unclosed_clause_rejected() {
+        assert!(parse_src("#pragma compar parameter name(arr\n").is_err());
+    }
+
+    #[test]
+    fn missing_paren_rejected() {
+        assert!(parse_src("#pragma compar method_declare interface sort\n").is_err());
+    }
+
+    #[test]
+    fn numeric_size_args() {
+        let p = parse_src("#pragma compar parameter name(x) type(int) size(4096)\n").unwrap();
+        assert_eq!(
+            p.directives[0].clause("size").unwrap().args[0],
+            ClauseArg::Number(4096)
+        );
+    }
+
+    #[test]
+    fn double_pointer_type() {
+        let p = parse_src("#pragma compar parameter name(x) type(float**)\n").unwrap();
+        assert_eq!(
+            p.directives[0].clause("type").unwrap().args[0],
+            ClauseArg::Type {
+                base: "float".into(),
+                stars: 2
+            }
+        );
+    }
+}

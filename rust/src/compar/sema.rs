@@ -1,0 +1,456 @@
+//! Semantic analysis (paper §2.2): verifies directive usage in context.
+//!
+//! Checks implemented (superset of the paper's list):
+//! * method_declare has exactly one interface/name/target clause each,
+//!   with exactly one argument;
+//! * target is a known programming model (cuda, openmp/omp, seq, opencl,
+//!   blas, cublas);
+//! * no duplicate variant name, and no duplicate target per interface;
+//! * parameter directives appear only after a method_declare;
+//! * the FIRST variant of an interface declares every parameter's type;
+//!   later variants may re-declare parameters only with an identical
+//!   signature (same name/type/size arity/access mode);
+//! * parameter types come from the supported C scalar set; size clauses
+//!   have 1..=4 dimensions (vector/matrix/3D/4D — paper §2.1);
+//! * access_mode is read/write/readwrite (default read);
+//! * duplicate include/initialize/terminate warnings, missing
+//!   initialize/terminate warnings.
+
+use std::collections::HashMap;
+
+use super::ast::{Clause, ClauseArg, Directive, Program};
+use super::diagnostics::Diagnostic;
+
+pub const KNOWN_TARGETS: &[&str] = &["cuda", "openmp", "omp", "seq", "opencl", "blas", "cublas"];
+pub const KNOWN_TYPES: &[&str] = &[
+    "int", "float", "double", "char", "wchar_t", "long", "short", "unsigned", "size_t",
+];
+pub const KNOWN_MODES: &[&str] = &["read", "write", "readwrite"];
+
+/// Run all checks; returns diagnostics (errors + warnings).
+pub fn check(program: &Program) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let mut seen_include = false;
+    let mut seen_init = false;
+    let mut seen_term = false;
+
+    // interface -> (variant names, targets, signature)
+    #[derive(Default)]
+    struct IfaceInfo {
+        variants: Vec<String>,
+        targets: Vec<String>,
+        /// (name, type text, size arity, mode) per parameter
+        signature: Vec<(String, String, usize, String)>,
+        signature_fixed: bool,
+    }
+    let mut ifaces: HashMap<String, IfaceInfo> = HashMap::new();
+    // parameters of the method_declare currently being collected
+    let mut current: Option<(String, Vec<(String, String, usize, String)>, bool)> = None;
+
+    let flush_current =
+        |current: &mut Option<(String, Vec<(String, String, usize, String)>, bool)>,
+         ifaces: &mut HashMap<String, IfaceInfo>,
+         diags: &mut Vec<Diagnostic>,
+         span| {
+            if let Some((iface, params, first)) = current.take() {
+                let info = ifaces.entry(iface.clone()).or_default();
+                if first {
+                    info.signature = params;
+                    info.signature_fixed = true;
+                } else if !params.is_empty() && params != info.signature {
+                    diags.push(Diagnostic::error(
+                        format!(
+                            "variant of interface '{iface}' re-declares parameters with a \
+                             different signature (variants must share the method signature)"
+                        ),
+                        span,
+                    ));
+                }
+            }
+        };
+
+    for d in &program.directives {
+        match d {
+            Directive::Include { span } => {
+                if seen_include {
+                    diags.push(Diagnostic::warning("duplicate include directive", *span));
+                }
+                seen_include = true;
+            }
+            Directive::Initialize { span } => {
+                if seen_init {
+                    diags.push(Diagnostic::error("duplicate initialize directive", *span));
+                }
+                seen_init = true;
+            }
+            Directive::Terminate { span } => {
+                if seen_term {
+                    diags.push(Diagnostic::error("duplicate terminate directive", *span));
+                }
+                seen_term = true;
+            }
+            Directive::MethodDeclare { clauses, span } => {
+                flush_current(&mut current, &mut ifaces, &mut diags, *span);
+                let iface = require_single(clauses, "interface", *span, &mut diags);
+                let name = require_single(clauses, "name", *span, &mut diags);
+                let target = require_single(clauses, "target", *span, &mut diags);
+                check_unknown_clauses(clauses, &["interface", "name", "target"], &mut diags);
+                let (Some(iface), Some(name), Some(target)) = (iface, name, target) else {
+                    continue;
+                };
+                if !KNOWN_TARGETS.contains(&target.to_ascii_lowercase().as_str()) {
+                    diags.push(Diagnostic::error(
+                        format!(
+                            "unknown target '{target}' (supported: {})",
+                            KNOWN_TARGETS.join(", ")
+                        ),
+                        d.clause("target").unwrap().span,
+                    ));
+                }
+                let info = ifaces.entry(iface.clone()).or_default();
+                if info.variants.contains(&name) {
+                    diags.push(Diagnostic::error(
+                        format!("duplicate variant '{name}' for interface '{iface}'"),
+                        d.clause("name").unwrap().span,
+                    ));
+                }
+                let tgt = target.to_ascii_lowercase();
+                let tgt_norm = if tgt == "omp" { "openmp".to_string() } else { tgt };
+                if info.targets.contains(&tgt_norm) {
+                    diags.push(Diagnostic::warning(
+                        format!(
+                            "interface '{iface}' already has a variant for target '{target}'; \
+                             the runtime will treat them as alternatives"
+                        ),
+                        d.clause("target").unwrap().span,
+                    ));
+                }
+                info.variants.push(name);
+                info.targets.push(tgt_norm);
+                let first = !info.signature_fixed;
+                current = Some((iface, Vec::new(), first));
+            }
+            Directive::Parameter { clauses, span } => {
+                let Some((iface, params, first)) = current.as_mut() else {
+                    diags.push(Diagnostic::error(
+                        "parameter directive outside a method_declare context",
+                        *span,
+                    ));
+                    continue;
+                };
+                check_unknown_clauses(
+                    clauses,
+                    &["name", "type", "size", "access_mode"],
+                    &mut diags,
+                );
+                let Some(pname) = require_single(clauses, "name", *span, &mut diags) else {
+                    continue;
+                };
+                if params.iter().any(|(n, _, _, _)| n == &pname) {
+                    diags.push(Diagnostic::error(
+                        format!("duplicate parameter '{pname}' for interface '{iface}'"),
+                        *span,
+                    ));
+                    continue;
+                }
+                // type: required on the first variant
+                let ptype = match d.clause("type") {
+                    Some(c) if c.args.len() == 1 => {
+                        let text = c.args[0].as_text();
+                        let base = match &c.args[0] {
+                            ClauseArg::Type { base, .. } => base.clone(),
+                            ClauseArg::Ident(s) => s.clone(),
+                            ClauseArg::Number(_) => String::new(),
+                        };
+                        if !KNOWN_TYPES.contains(&base.as_str()) {
+                            diags.push(Diagnostic::error(
+                                format!(
+                                    "unsupported parameter type '{text}' (supported bases: {})",
+                                    KNOWN_TYPES.join(", ")
+                                ),
+                                c.span,
+                            ));
+                        }
+                        text
+                    }
+                    Some(c) => {
+                        diags.push(Diagnostic::error(
+                            "type clause takes exactly one argument",
+                            c.span,
+                        ));
+                        String::new()
+                    }
+                    None => {
+                        if *first {
+                            diags.push(Diagnostic::error(
+                                format!(
+                                    "parameter '{pname}' of the first variant of '{iface}' \
+                                     must declare a type"
+                                ),
+                                *span,
+                            ));
+                        }
+                        String::new()
+                    }
+                };
+                // size: 0 (scalar) or 1..=4 dims
+                let arity = match d.clause("size") {
+                    Some(c) => {
+                        if c.args.is_empty() || c.args.len() > 4 {
+                            diags.push(Diagnostic::error(
+                                format!(
+                                    "size clause takes 1 to 4 dimensions (vector, matrix, 3D, \
+                                     4D), got {}",
+                                    c.args.len()
+                                ),
+                                c.span,
+                            ));
+                        }
+                        c.args.len()
+                    }
+                    None => 0,
+                };
+                if arity == 0 && ptype.contains('*') {
+                    diags.push(Diagnostic::warning(
+                        format!(
+                            "pointer parameter '{pname}' has no size clause; treating as scalar"
+                        ),
+                        *span,
+                    ));
+                }
+                // access_mode
+                let mode = match d.clause("access_mode") {
+                    Some(c) if c.args.len() == 1 => {
+                        let m = c.args[0].as_text().to_ascii_lowercase();
+                        if !KNOWN_MODES.contains(&m.as_str()) {
+                            diags.push(Diagnostic::error(
+                                format!(
+                                    "unknown access_mode '{m}' (expected read, write or readwrite)"
+                                ),
+                                c.span,
+                            ));
+                        }
+                        m
+                    }
+                    Some(c) => {
+                        diags.push(Diagnostic::error(
+                            "access_mode takes exactly one argument",
+                            c.span,
+                        ));
+                        "read".into()
+                    }
+                    None => "read".into(),
+                };
+                params.push((pname, ptype, arity, mode));
+            }
+        }
+    }
+    let last_span = program
+        .directives
+        .last()
+        .map(|d| d.span())
+        .unwrap_or(super::token::Span::new(1, 1, 0, 1));
+    flush_current(&mut current, &mut ifaces, &mut diags, last_span);
+
+    if !ifaces.is_empty() {
+        if !seen_init {
+            diags.push(Diagnostic::warning(
+                "no initialize directive: the runtime must be initialized manually",
+                last_span,
+            ));
+        }
+        if !seen_term {
+            diags.push(Diagnostic::warning(
+                "no terminate directive: the runtime will not be shut down cleanly",
+                last_span,
+            ));
+        }
+    }
+    diags
+}
+
+fn require_single(
+    clauses: &[Clause],
+    name: &str,
+    span: super::token::Span,
+    diags: &mut Vec<Diagnostic>,
+) -> Option<String> {
+    let found: Vec<&Clause> = clauses.iter().filter(|c| c.name == name).collect();
+    match found.as_slice() {
+        [] => {
+            diags.push(Diagnostic::error(
+                format!("missing required clause '{name}'"),
+                span,
+            ));
+            None
+        }
+        [c] => {
+            if c.args.len() != 1 {
+                diags.push(Diagnostic::error(
+                    format!("clause '{name}' takes exactly one argument"),
+                    c.span,
+                ));
+                None
+            } else {
+                Some(c.args[0].as_text())
+            }
+        }
+        [_, dup, ..] => {
+            diags.push(Diagnostic::error(
+                format!("duplicate clause '{name}'"),
+                dup.span,
+            ));
+            None
+        }
+    }
+}
+
+fn check_unknown_clauses(clauses: &[Clause], known: &[&str], diags: &mut Vec<Diagnostic>) {
+    for c in clauses {
+        if !known.contains(&c.name.as_str()) {
+            diags.push(Diagnostic::error(
+                format!("unknown clause '{}' (expected one of {})", c.name, known.join(", ")),
+                c.span,
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compar::{lexer::lex, parser::parse};
+
+    fn diags_for(src: &str) -> Vec<Diagnostic> {
+        let p = parse(&lex(src, "t.c").unwrap(), src, "t.c").unwrap();
+        check(&p)
+    }
+
+    fn errors(src: &str) -> Vec<String> {
+        diags_for(src)
+            .into_iter()
+            .filter(|d| d.is_error())
+            .map(|d| d.message)
+            .collect()
+    }
+
+    const VALID: &str = "\
+#pragma compar include
+#pragma compar method_declare interface(sort) target(cuda) name(sort_cuda)
+#pragma compar parameter name(arr) type(float*) size(N) access_mode(readwrite)
+#pragma compar parameter name(N) type(int)
+#pragma compar method_declare interface(sort) target(openmp) name(sort_omp)
+#pragma compar initialize
+#pragma compar terminate
+";
+
+    #[test]
+    fn valid_program_clean() {
+        assert!(errors(VALID).is_empty(), "{:?}", errors(VALID));
+    }
+
+    #[test]
+    fn unknown_target() {
+        let e = errors(
+            "#pragma compar method_declare interface(f) target(fpga) name(f1)\n",
+        );
+        assert!(e.iter().any(|m| m.contains("unknown target 'fpga'")));
+    }
+
+    #[test]
+    fn duplicate_variant_name() {
+        let src = "\
+#pragma compar method_declare interface(f) target(cuda) name(f1)
+#pragma compar parameter name(x) type(int)
+#pragma compar method_declare interface(f) target(openmp) name(f1)
+";
+        assert!(errors(src).iter().any(|m| m.contains("duplicate variant 'f1'")));
+    }
+
+    #[test]
+    fn parameter_outside_method() {
+        let e = errors("#pragma compar parameter name(x) type(int)\n");
+        assert!(e.iter().any(|m| m.contains("outside a method_declare")));
+    }
+
+    #[test]
+    fn missing_type_on_first_variant() {
+        let src = "\
+#pragma compar method_declare interface(f) target(cuda) name(f1)
+#pragma compar parameter name(x)
+";
+        assert!(errors(src).iter().any(|m| m.contains("must declare a type")));
+    }
+
+    #[test]
+    fn mismatched_redeclaration() {
+        let src = "\
+#pragma compar method_declare interface(f) target(cuda) name(f1)
+#pragma compar parameter name(x) type(int)
+#pragma compar method_declare interface(f) target(openmp) name(f2)
+#pragma compar parameter name(x) type(float)
+";
+        assert!(errors(src).iter().any(|m| m.contains("different signature")));
+    }
+
+    #[test]
+    fn matching_redeclaration_ok() {
+        let src = "\
+#pragma compar method_declare interface(f) target(cuda) name(f1)
+#pragma compar parameter name(x) type(int)
+#pragma compar method_declare interface(f) target(openmp) name(f2)
+#pragma compar parameter name(x) type(int)
+";
+        assert!(errors(src).is_empty());
+    }
+
+    #[test]
+    fn size_arity_limit() {
+        let src = "\
+#pragma compar method_declare interface(f) target(cuda) name(f1)
+#pragma compar parameter name(x) type(float*) size(A, B, C, D, E)
+";
+        assert!(errors(src).iter().any(|m| m.contains("1 to 4 dimensions")));
+    }
+
+    #[test]
+    fn bad_access_mode() {
+        let src = "\
+#pragma compar method_declare interface(f) target(cuda) name(f1)
+#pragma compar parameter name(x) type(int) access_mode(scan)
+";
+        assert!(errors(src).iter().any(|m| m.contains("unknown access_mode")));
+    }
+
+    #[test]
+    fn duplicate_parameter() {
+        let src = "\
+#pragma compar method_declare interface(f) target(cuda) name(f1)
+#pragma compar parameter name(x) type(int)
+#pragma compar parameter name(x) type(int)
+";
+        assert!(errors(src).iter().any(|m| m.contains("duplicate parameter 'x'")));
+    }
+
+    #[test]
+    fn duplicate_initialize_is_error() {
+        let src = "#pragma compar initialize\n#pragma compar initialize\n";
+        assert!(errors(src).iter().any(|m| m.contains("duplicate initialize")));
+    }
+
+    #[test]
+    fn missing_init_warns() {
+        let src = "\
+#pragma compar method_declare interface(f) target(cuda) name(f1)
+#pragma compar parameter name(x) type(int)
+";
+        let w: Vec<_> = diags_for(src).into_iter().filter(|d| !d.is_error()).collect();
+        assert!(w.iter().any(|d| d.message.contains("no initialize")));
+    }
+
+    #[test]
+    fn unknown_clause_rejected() {
+        let e = errors("#pragma compar method_declare interface(f) target(cuda) name(f1) speed(fast)\n");
+        assert!(e.iter().any(|m| m.contains("unknown clause 'speed'")));
+    }
+}

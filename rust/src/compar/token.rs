@@ -1,0 +1,73 @@
+//! Token definitions for the COMPAR directive language.
+//!
+//! Only `#pragma compar ...` lines are tokenized (the pre-compiler's
+//! Flex specification in the paper is equally narrow); all other source
+//! text flows through untouched.
+
+use std::fmt;
+
+/// Source location (1-based line/column, byte offset + length).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub line: usize,
+    pub col: usize,
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl Span {
+    pub fn new(line: usize, col: usize, offset: usize, len: usize) -> Span {
+        Span {
+            line,
+            col,
+            offset,
+            len,
+        }
+    }
+}
+
+/// Token kinds of the directive grammar.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokenKind {
+    /// The `#pragma compar` introducer (one per directive line).
+    PragmaCompar,
+    /// Identifier or keyword: directive names, clause names, values.
+    Ident(String),
+    /// Integer literal (e.g. in size clauses).
+    Number(i64),
+    /// Pointer star inside type(...) clauses.
+    Star,
+    LParen,
+    RParen,
+    Comma,
+    /// End of one directive line.
+    Eol,
+}
+
+impl fmt::Display for TokenKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TokenKind::PragmaCompar => write!(f, "#pragma compar"),
+            TokenKind::Ident(s) => write!(f, "'{s}'"),
+            TokenKind::Number(n) => write!(f, "{n}"),
+            TokenKind::Star => write!(f, "'*'"),
+            TokenKind::LParen => write!(f, "'('"),
+            TokenKind::RParen => write!(f, "')'"),
+            TokenKind::Eol => write!(f, "end of directive"),
+            TokenKind::Comma => write!(f, "','"),
+        }
+    }
+}
+
+/// A token with its source span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub span: Span,
+}
+
+impl Token {
+    pub fn new(kind: TokenKind, span: Span) -> Token {
+        Token { kind, span }
+    }
+}

@@ -1,0 +1,26 @@
+//! # COMPAR — component-based parallel programming with dynamic
+//! implementation-variant selection
+//!
+//! Reproduction of Memeti, *"Enabling Dynamic Selection of Implementation
+//! Variants in Component-Based Parallel Programming for Heterogeneous
+//! Systems"* (2023), as a three-layer Rust + JAX + Pallas system:
+//!
+//! * [`compar`] — the paper's language extension and source-to-source
+//!   pre-compiler (`#pragma compar ...` -> glue code).
+//! * [`taskrt`] — the StarPU-analog heterogeneous task runtime: codelets,
+//!   data handles, device workers, pluggable schedulers, history-based
+//!   performance models.
+//! * [`runtime`] — the PJRT bridge that executes the AOT-compiled JAX /
+//!   Pallas artifacts (the "GPU library" implementation variants).
+//! * [`apps`] — the paper's benchmark applications (Rodinia hotspot,
+//!   hotspot3D, lud, nw, plus matmul and the sort quickstart), each with
+//!   multiple implementation variants.
+//! * [`bench_harness`] — regenerates every table and figure of the
+//!   paper's evaluation section.
+
+pub mod apps;
+pub mod bench_harness;
+pub mod compar;
+pub mod runtime;
+pub mod taskrt;
+pub mod util;

@@ -1,0 +1,366 @@
+//! `compar` — the leader binary: pre-compiler driver, benchmark runner
+//! and evaluation-harness entry point.
+//!
+//! ```text
+//! compar compile <file.compar.c> [--out-dir DIR]      run the pre-compiler
+//! compar run --app A --size N [options]               run one benchmark task
+//! compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|all>
+//! compar calibrate --app A [--sizes a,b,c]            warm the perf models
+//! compar list                                         inventory: apps, variants, artifacts
+//! ```
+//!
+//! Argument parsing is hand-rolled: the offline build environment ships
+//! no clap; see DESIGN.md §5.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use compar::apps;
+use compar::bench_harness::{self, fig1, selection, table1f};
+use compar::compar as precompiler;
+use compar::runtime::Manifest;
+use compar::taskrt::{Config, Runtime, SchedPolicy};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Split args into positional and --key value (or --flag) options.
+fn parse_opts(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut opts = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                opts.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                opts.insert(key.to_string(), "1".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (pos, opts)
+}
+
+fn load_manifest() -> Result<Arc<Manifest>> {
+    let dir = compar::runtime::manifest::default_dir();
+    Manifest::load(&dir).map(Arc::new)
+}
+
+fn config_from_opts(opts: &HashMap<String, String>) -> Result<Config> {
+    let mut cfg = Config::from_env();
+    if let Some(v) = opts.get("ncpu") {
+        cfg.ncpu = v.parse().context("--ncpu")?;
+    }
+    if let Some(v) = opts.get("ncuda") {
+        cfg.ncuda = v.parse().context("--ncuda")?;
+    }
+    if let Some(v) = opts.get("sched") {
+        cfg.sched = SchedPolicy::parse(v).ok_or_else(|| anyhow!("unknown scheduler '{v}'"))?;
+    }
+    if opts.contains_key("calibrate") {
+        cfg.calibrate = true;
+    }
+    if let Some(v) = opts.get("seed") {
+        cfg.seed = v.parse().context("--seed")?;
+    }
+    Ok(cfg)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "compile" => cmd_compile(rest),
+        "run" => cmd_run(rest),
+        "bench" => cmd_bench(rest),
+        "calibrate" => cmd_calibrate(rest),
+        "list" => cmd_list(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `compar help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "compar — component-based parallel programming with dynamic variant selection\n\
+         \n\
+         USAGE:\n\
+         \x20 compar compile <file.compar.c> [--out-dir DIR] [--emit c|rust|all]\n\
+         \x20 compar run --app APP --size N [--variant V] [--sched S] [--ncpu N] [--ncuda N] [--reps R]\n\
+         \x20 compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|all> [--reps R] [--max-measured N]\n\
+         \x20 compar calibrate --app APP [--sizes a,b,c]\n\
+         \x20 compar list\n\
+         \n\
+         Environment: COMPAR_NCPU, COMPAR_NCUDA, COMPAR_SCHED, COMPAR_CALIBRATE,\n\
+         \x20 COMPAR_TIME_MODE=modeled|wall, COMPAR_PERFMODEL_DIR, COMPAR_ARTIFACTS\n\
+         (STARPU_NCPU / STARPU_NCUDA / STARPU_SCHED / STARPU_CALIBRATE are accepted aliases.)"
+    );
+}
+
+// ---------------------------------------------------------------- compile
+
+fn cmd_compile(args: &[String]) -> Result<()> {
+    let (pos, opts) = parse_opts(args);
+    let file = pos
+        .first()
+        .ok_or_else(|| anyhow!("usage: compar compile <file.compar.c>"))?;
+    let source = std::fs::read_to_string(file).with_context(|| format!("reading {file}"))?;
+    let mut out = precompiler::compile(&source, file)?;
+    // --prune: compile-time variant pruning (paper §5 future work)
+    if opts.contains_key("prune") {
+        let margin: f64 = opts
+            .get("prune")
+            .and_then(|v| v.parse().ok())
+            .filter(|m: &f64| *m > 1.0)
+            .unwrap_or(1.25);
+        let reports = precompiler::opt::prune_variants(&mut out.program, margin);
+        for r in &reports {
+            for (func, why) in &r.removed {
+                println!("  pruned {}::{func}: {why}", r.interface);
+            }
+        }
+        // regenerate glue from the pruned program
+        out.c_units = precompiler::codegen::c_glue::generate_units(&out.program);
+        out.header = precompiler::codegen::header::generate(&out.program);
+        out.rust_glue = precompiler::codegen::rust_glue::generate(&out.program);
+    }
+    let emit = opts.get("emit").map(String::as_str).unwrap_or("all");
+    let out_dir = std::path::PathBuf::from(
+        opts.get("out-dir").cloned().unwrap_or_else(|| "compar_gen".into()),
+    );
+    std::fs::create_dir_all(&out_dir)?;
+
+    let mut written = Vec::new();
+    if emit == "c" || emit == "all" {
+        for (name, contents) in &out.c_units {
+            let p = out_dir.join(name);
+            std::fs::write(&p, contents)?;
+            written.push(p);
+        }
+        let p = out_dir.join("compar.h");
+        std::fs::write(&p, &out.header)?;
+        written.push(p);
+        let stem = std::path::Path::new(file)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("app");
+        let p = out_dir.join(format!("{stem}.transformed.c"));
+        std::fs::write(&p, &out.transformed)?;
+        written.push(p);
+    }
+    if emit == "rust" || emit == "all" {
+        let p = out_dir.join("compar_glue.rs");
+        std::fs::write(&p, &out.rust_glue)?;
+        written.push(p);
+    }
+    println!(
+        "compiled {} interface(s), {} variant(s):",
+        out.program.interfaces.len(),
+        out.program
+            .interfaces
+            .iter()
+            .map(|i| i.variants.len())
+            .sum::<usize>()
+    );
+    for i in &out.program.interfaces {
+        let vs: Vec<&str> = i.variants.iter().map(|v| v.target.as_str()).collect();
+        println!("  {}({} params) <- [{}]", i.name, i.params.len(), vs.join(", "));
+    }
+    for p in written {
+        println!("  wrote {}", p.display());
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------------- run
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let (_, opts) = parse_opts(args);
+    let app = opts
+        .get("app")
+        .ok_or_else(|| anyhow!("--app is required (one of {:?})", apps::ALL))?;
+    let size: usize = opts
+        .get("size")
+        .ok_or_else(|| anyhow!("--size is required"))?
+        .parse()
+        .context("--size")?;
+    let reps: usize = opts.get("reps").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    let variant = opts.get("variant").map(String::as_str);
+    let verify = !opts.contains_key("no-verify");
+
+    let cfg = config_from_opts(&opts)?;
+    let manifest = load_manifest().ok();
+    let rt = Runtime::new(cfg, manifest)?;
+    println!(
+        "runtime: ncpu={} ncuda={} sched={}",
+        rt.config().ncpu,
+        rt.config().ncuda,
+        rt.config().sched.name()
+    );
+    for rep in 0..reps {
+        let run = apps::run_once(&rt, app, size, 42 + rep as u64, variant, verify)?;
+        println!(
+            "rep {rep}: variant={} modeled={} wall={} rel_err={:.2e}",
+            run.variant,
+            compar::util::stats::fmt_time(run.modeled),
+            compar::util::stats::fmt_time(run.wall),
+            run.rel_err
+        );
+    }
+    let hist = rt.metrics().variant_histogram();
+    println!("selection histogram: {hist:?}");
+    Ok(())
+}
+
+// ------------------------------------------------------------------ bench
+
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let (pos, opts) = parse_opts(args);
+    let which = pos.first().map(String::as_str).unwrap_or("all");
+    let reps: usize = opts.get("reps").map(|v| v.parse()).transpose()?.unwrap_or(3);
+    let max_measured: usize = opts
+        .get("max-measured")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(256);
+    let manifest = load_manifest().ok();
+
+    let figs: &[(&str, &str)] = &[
+        ("fig1a", "hotspot"),
+        ("fig1b", "hotspot3d"),
+        ("fig1c", "lud"),
+        ("fig1d", "nw"),
+        ("fig1e", "matmul"),
+    ];
+
+    let mut ran = false;
+    for (fig, app) in figs {
+        if which == *fig || which == "all" {
+            let pts = fig1::series(app, manifest.as_ref(), reps, max_measured)?;
+            println!("{}", fig1::render(app, &pts));
+            if *fig == "fig1e" {
+                println!("{}", fig1::matmul_variant_table());
+            }
+            ran = true;
+        }
+    }
+    if which == "table1f" || which == "all" {
+        let rows = table1f::measure(&bench_harness::bundled_sources())?;
+        println!("{}", table1f::render(&rows));
+        ran = true;
+    }
+    if which == "selection" || which == "all" {
+        let Some(m) = manifest.as_ref() else {
+            bail!("selection bench needs artifacts (run `make artifacts`)");
+        };
+        let mut traces = Vec::new();
+        for (app, size) in [("matmul", 64), ("matmul", 256), ("hotspot", 128)] {
+            traces.push(selection::trace(app, size, SchedPolicy::Dmda, 30, m)?);
+        }
+        println!("{}", selection::render(&traces));
+        ran = true;
+    }
+    if !ran {
+        bail!("unknown bench target '{which}'");
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------- calibrate
+
+fn cmd_calibrate(args: &[String]) -> Result<()> {
+    let (_, opts) = parse_opts(args);
+    let app = opts
+        .get("app")
+        .ok_or_else(|| anyhow!("--app is required"))?;
+    let manifest = load_manifest()?;
+    let sizes: Vec<usize> = match opts.get("sizes") {
+        Some(s) => s.split(',').map(|v| v.trim().parse()).collect::<Result<_, _>>()?,
+        None => manifest.sizes(app, "pallas"),
+    };
+    let mut cfg = config_from_opts(&opts)?;
+    cfg.calibrate = true;
+    if cfg.perfmodel_dir.is_none() {
+        cfg.perfmodel_dir = Some("perfmodels".into());
+    }
+    let rt = Runtime::new(cfg, Some(manifest))?;
+    for &size in &sizes {
+        let rounds = 3 * apps::paper_variants(app).len();
+        for i in 0..rounds {
+            let run = apps::run_once(&rt, app, size, 9000 + i as u64, None, false)?;
+            println!("size {size} round {i}: {}", run.variant);
+        }
+    }
+    rt.save_perf_models()?;
+    println!("perf models saved");
+    Ok(())
+}
+
+// ------------------------------------------------------------------- list
+
+fn cmd_list() -> Result<()> {
+    println!("benchmark applications (paper Table 2):");
+    for app in apps::ALL {
+        let c = apps::codelet(app)?;
+        let variants: Vec<String> = c
+            .impls
+            .iter()
+            .map(|i| format!("{}({})", i.name, i.arch.name()))
+            .collect();
+        println!(
+            "  {:10} codelet={:9} variants=[{}] sizes={:?}",
+            app,
+            c.name,
+            variants.join(", "),
+            apps::paper_sizes(app)
+        );
+    }
+    let hw = compar::taskrt::hwloc::MachineTopology::detect();
+    println!(
+        "\nhost machine (hwloc probe): {} logical / {} physical cores, {} socket(s){}",
+        hw.logical_cpus,
+        hw.physical_cores,
+        hw.sockets,
+        hw.model_name
+            .as_deref()
+            .map(|m| format!(" — {m}"))
+            .unwrap_or_default()
+    );
+    println!("  recommended COMPAR_NCPU: {}", hw.recommended_ncpu());
+
+    println!("\ndevice topology (paper Table 1):");
+    for d in compar::taskrt::device::paper_topology(4, 1) {
+        println!("  node {} {:5} x{} — {}", d.mem_node, d.arch.name(), d.workers, d.name);
+    }
+    match load_manifest() {
+        Ok(m) => {
+            println!("\nartifacts: {} compiled HLO modules", m.artifacts.len());
+            for app in apps::ALL {
+                let sizes = m.sizes(app, "pallas");
+                let jnp = m.sizes(app, "jnp");
+                println!("  {app:10} pallas={sizes:?} jnp={jnp:?}");
+            }
+        }
+        Err(_) => println!("\nartifacts: none (run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! XLA/PJRT execution engine: loads `artifacts/*.hlo.txt`, compiles them
+//! on the PJRT CPU client, and executes them with `Tensor` inputs.
+//!
+//! HLO **text** is the interchange format (see python/compile/aot.py and
+//! /opt/xla-example/README.md): jax >= 0.5 emits HloModuleProtos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids, so text round-trips cleanly.
+//!
+//! The engine is deliberately **not** Send/Sync (the xla crate's PJRT
+//! handles are raw pointers); `service.rs` wraps it in a dedicated owner
+//! thread, which is also how StarPU drives a CUDA device (one worker
+//! thread owns the device context).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::ArtifactMeta;
+use super::tensor::Tensor;
+
+/// Owns the PJRT client plus a compiled-executable cache keyed by
+/// artifact name. One compiled executable per model variant, reused for
+/// every execution (compilation happens once, off the hot path).
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaEngine {
+    pub fn new() -> Result<XlaEngine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(XlaEngine {
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Compile (or fetch from cache) the artifact's executable.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("loading HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact. Inputs must match the manifest specs;
+    /// outputs are the flattened tuple elements (our modules lower with
+    /// return_tuple=True, so the single PJRT output is a tuple literal).
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self
+            .cache
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data())
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshaping input for {name}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("{name}: empty result"))?;
+        let lit = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: fetching result: {e:?}"))?;
+        let mut parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("{name}: untupling result: {e:?}"))?;
+        parts
+            .drain(..)
+            .map(|p| {
+                let shape = p
+                    .array_shape()
+                    .map_err(|e| anyhow!("{name}: result shape: {e:?}"))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = p
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("{name}: result data: {e:?}"))?;
+                Ok(Tensor::new(dims, data))
+            })
+            .collect()
+    }
+
+    /// Load-and-execute helper for ArtifactMeta records.
+    pub fn run(&mut self, meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        // validate against the manifest input specs before touching PJRT
+        if inputs.len() != meta.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                meta.name,
+                meta.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if t.shape() != spec.as_slice() {
+                return Err(anyhow!(
+                    "{}: input {} shape {:?} != manifest {:?}",
+                    meta.name,
+                    i,
+                    t.shape(),
+                    spec
+                ));
+            }
+        }
+        self.load(&meta.name, &meta.path)
+            .with_context(|| format!("loading {}", meta.name))?;
+        self.execute(&meta.name, inputs)
+    }
+}

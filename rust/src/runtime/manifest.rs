@@ -1,0 +1,198 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. aot.py writes `artifacts/manifest.json`; this module
+//! parses it into typed records the `ArtifactRegistry` serves.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One AOT-compiled HLO module: (app, variant, size) -> file.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub app: String,
+    pub variant: String,
+    pub size: usize,
+    /// Path to the .hlo.txt, absolute (joined with the manifest dir).
+    pub path: PathBuf,
+    /// Input specs in call order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Free-form lowering parameters (steps, tiles, penalty, ...).
+    pub params: BTreeMap<String, f64>,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub fingerprint: String,
+    pub hotspot_steps: usize,
+    pub hotspot3d_steps: usize,
+    pub hotspot3d_layers: usize,
+    pub nw_penalty: f32,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&v, dir)
+    }
+
+    pub fn from_json(v: &Json, dir: &Path) -> Result<Manifest> {
+        let req_num = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("manifest missing numeric '{key}'"))
+        };
+        let mut artifacts = Vec::new();
+        for a in v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing 'name'"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing 'file'"))?;
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name} missing 'inputs'"))?
+                .iter()
+                .map(|spec| {
+                    spec.get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                        .ok_or_else(|| anyhow!("artifact {name}: bad input spec"))
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            let mut params = BTreeMap::new();
+            if let Some(p) = a.get("params").and_then(Json::as_obj) {
+                for (k, val) in p {
+                    if let Some(n) = val.as_f64() {
+                        params.insert(k.clone(), n);
+                    }
+                }
+            }
+            artifacts.push(ArtifactMeta {
+                app: a
+                    .get("app")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact {name} missing 'app'"))?
+                    .to_string(),
+                variant: a
+                    .get("variant")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact {name} missing 'variant'"))?
+                    .to_string(),
+                size: a
+                    .get("size")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("artifact {name} missing 'size'"))?,
+                path: dir.join(file),
+                inputs,
+                name,
+                params,
+            });
+        }
+        Ok(Manifest {
+            fingerprint: v
+                .get("fingerprint")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            hotspot_steps: req_num("hotspot_steps")? as usize,
+            hotspot3d_steps: req_num("hotspot3d_steps")? as usize,
+            hotspot3d_layers: req_num("hotspot3d_layers")? as usize,
+            nw_penalty: req_num("nw_penalty")? as f32,
+            artifacts,
+        })
+    }
+
+    /// Artifacts for one app, sorted by size.
+    pub fn for_app(&self, app: &str) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<_> = self.artifacts.iter().filter(|a| a.app == app).collect();
+        v.sort_by_key(|a| (a.size, a.variant.clone()));
+        v
+    }
+
+    /// Exact lookup.
+    pub fn find(&self, app: &str, variant: &str, size: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.app == app && a.variant == variant && a.size == size)
+    }
+
+    /// Sizes available for (app, variant), ascending.
+    pub fn sizes(&self, app: &str, variant: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.app == app && a.variant == variant)
+            .map(|a| a.size)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Default artifacts directory: $COMPAR_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("COMPAR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "fingerprint": "abc",
+      "hotspot_steps": 8, "hotspot3d_steps": 8, "hotspot3d_layers": 8,
+      "nw_penalty": 10.0,
+      "artifacts": [
+        {"name": "matmul_jnp_64", "app": "matmul", "variant": "jnp",
+         "size": 64, "file": "matmul_jnp_64.hlo.txt",
+         "inputs": [{"shape": [64, 64], "dtype": "f32"},
+                    {"shape": [64, 64], "dtype": "f32"}],
+         "params": {}},
+        {"name": "matmul_pallas_64", "app": "matmul", "variant": "pallas",
+         "size": 64, "file": "matmul_pallas_64.hlo.txt",
+         "inputs": [{"shape": [64, 64], "dtype": "f32"},
+                    {"shape": [64, 64], "dtype": "f32"}],
+         "params": {"bm": 64}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.nw_penalty, 10.0);
+        let a = m.find("matmul", "pallas", 64).unwrap();
+        assert_eq!(a.path, Path::new("/tmp/a/matmul_pallas_64.hlo.txt"));
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.params["bm"], 64.0);
+        assert_eq!(m.sizes("matmul", "jnp"), vec![64]);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let v = json::parse(r#"{"artifacts": [{"name": "x"}]}"#).unwrap();
+        assert!(Manifest::from_json(&v, Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime bridge: load and execute the AOT-compiled HLO artifacts via
+//! the `xla` crate's PJRT CPU client.
+//!
+//! Layering (DESIGN.md §2): python lowers each (app, variant, size) graph
+//! to `artifacts/*.hlo.txt` once at build time; this module is the only
+//! code that touches PJRT. Python never runs on the request path.
+
+pub mod engine;
+pub mod manifest;
+pub mod service;
+pub mod tensor;
+
+pub use engine::XlaEngine;
+pub use manifest::{ArtifactMeta, Manifest};
+pub use service::{XlaHandle, XlaService};
+pub use tensor::Tensor;

@@ -1,0 +1,148 @@
+//! Thread-owned XLA execution service.
+//!
+//! The xla crate's PJRT handles are raw pointers (not Send/Sync), so a
+//! single dedicated thread owns the `XlaEngine`; any worker can submit
+//! execution requests through a cloneable `XlaHandle`. This mirrors
+//! StarPU's device-worker design: one pinned thread per accelerator owns
+//! the device context, everyone else talks to it via queues.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::ArtifactMeta;
+use super::tensor::Tensor;
+
+enum Request {
+    /// Compile an artifact ahead of time (warm the executable cache).
+    Load {
+        name: String,
+        path: std::path::PathBuf,
+        reply: Sender<Result<()>>,
+    },
+    /// Execute a loaded (or loadable) artifact.
+    Run {
+        meta: ArtifactMeta,
+        inputs: Vec<Tensor>,
+        reply: Sender<Result<(Vec<Tensor>, Duration)>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle for submitting work to the engine thread.
+#[derive(Clone)]
+pub struct XlaHandle {
+    tx: Sender<Request>,
+}
+
+// Sender<T> is Send but not Sync; XlaHandle is cloned per worker instead.
+
+impl XlaHandle {
+    /// Pre-compile an artifact (off the measured path).
+    pub fn load(&self, meta: &ArtifactMeta) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Load {
+                name: meta.name.clone(),
+                path: meta.path.clone(),
+                reply,
+            })
+            .map_err(|_| anyhow!("xla service is down"))?;
+        rx.recv().map_err(|_| anyhow!("xla service dropped reply"))?
+    }
+
+    /// Execute `meta` with `inputs`; returns outputs plus the pure
+    /// execution time measured inside the service thread (excludes queue
+    /// wait, so perf models see device time, not congestion).
+    pub fn run(&self, meta: &ArtifactMeta, inputs: Vec<Tensor>) -> Result<(Vec<Tensor>, Duration)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Run {
+                meta: meta.clone(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| anyhow!("xla service is down"))?;
+        rx.recv().map_err(|_| anyhow!("xla service dropped reply"))?
+    }
+}
+
+/// The service: spawn once, hand out handles, `shutdown()` at exit.
+pub struct XlaService {
+    tx: Sender<Request>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl XlaService {
+    /// Spawn the engine thread. Fails fast if PJRT cannot initialize.
+    pub fn spawn() -> Result<XlaService> {
+        // silence the TfrtCpuClient created/destroyed info logs
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("xla-engine".into())
+            .spawn(move || Self::serve(rx, ready_tx))
+            .expect("spawning xla-engine thread");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("xla engine thread died during init"))??;
+        Ok(XlaService {
+            tx,
+            join: Some(join),
+        })
+    }
+
+    fn serve(rx: Receiver<Request>, ready: Sender<Result<()>>) {
+        let mut engine = match super::engine::XlaEngine::new() {
+            Ok(e) => {
+                let _ = ready.send(Ok(()));
+                e
+            }
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                return;
+            }
+        };
+        while let Ok(req) = rx.recv() {
+            match req {
+                Request::Load { name, path, reply } => {
+                    let _ = reply.send(engine.load(&name, &path));
+                }
+                Request::Run {
+                    meta,
+                    inputs,
+                    reply,
+                } => {
+                    let r = (|| {
+                        engine.load(&meta.name, &meta.path)?;
+                        let t0 = Instant::now();
+                        let out = engine.execute(&meta.name, &inputs)?;
+                        Ok((out, t0.elapsed()))
+                    })();
+                    let _ = reply.send(r);
+                }
+                Request::Shutdown => break,
+            }
+        }
+    }
+
+    pub fn handle(&self) -> XlaHandle {
+        XlaHandle {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Codelets: the StarPU-analog unit of multi-variant computation.
+//!
+//! A codelet corresponds 1:1 to a COMPAR *interface* (paper §2.2): one
+//! logical function (e.g. `mmul`) with several *implementation variants*
+//! (`mmul_omp`, `mmul_cuda`, ...), each targeting an architecture. The
+//! generated glue (compar/codegen) builds these at startup; applications
+//! can also build them by hand through this API (the "raw StarPU"
+//! programmability baseline of Table 1f).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::data::AccessMode;
+use super::device::Arch;
+use crate::runtime::Tensor;
+
+/// Buffer view passed to native implementations: the tensors of the
+/// task's handles, in declaration order (paper `parameter` order).
+pub struct ExecBuffers {
+    pub tensors: Vec<Arc<Mutex<Tensor>>>,
+    pub modes: Vec<AccessMode>,
+    /// The task's scale parameter (paper `size` clause).
+    pub size: usize,
+}
+
+impl ExecBuffers {
+    /// Lock buffer `i` for reading (panics on out-of-range).
+    pub fn read(&self, i: usize) -> std::sync::MutexGuard<'_, Tensor> {
+        assert!(self.modes[i].reads(), "buffer {i} is not readable");
+        self.tensors[i].lock().unwrap()
+    }
+
+    /// Lock buffer `i` for writing.
+    pub fn write(&self, i: usize) -> std::sync::MutexGuard<'_, Tensor> {
+        assert!(self.modes[i].writes(), "buffer {i} is not writable");
+        self.tensors[i].lock().unwrap()
+    }
+}
+
+/// Native (CPU) implementation body.
+pub type NativeFn = Arc<dyn Fn(&ExecBuffers) -> Result<()> + Send + Sync>;
+
+/// How an implementation variant executes.
+#[derive(Clone)]
+pub enum ImplKind {
+    /// Rust function run directly on the worker thread (the paper's
+    /// Seq / OpenMP variants).
+    Native(NativeFn),
+    /// AOT-compiled HLO artifact executed through the XLA service (the
+    /// paper's CUDA / CUBLAS / BLAS-library variants). `variant` selects
+    /// the artifact family in the manifest (e.g. "jnp", "pallas").
+    Artifact { artifact_variant: String },
+}
+
+impl std::fmt::Debug for ImplKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ImplKind::Native(_) => write!(f, "Native"),
+            ImplKind::Artifact { artifact_variant } => {
+                write!(f, "Artifact({artifact_variant})")
+            }
+        }
+    }
+}
+
+/// One implementation variant of a codelet.
+#[derive(Clone, Debug)]
+pub struct Implementation {
+    /// Paper-facing variant name ("omp", "cuda", "cublas", ...). Used by
+    /// the device model and in every report.
+    pub name: String,
+    pub arch: Arch,
+    pub kind: ImplKind,
+}
+
+/// A multi-variant computation bound to a parameter signature.
+#[derive(Clone, Debug)]
+pub struct Codelet {
+    /// Interface name (paper `interface` clause), e.g. "mmul".
+    pub name: String,
+    /// App key for the device model / manifest ("matmul", "hotspot", ...).
+    pub app: String,
+    /// Parameter access modes, in declaration order.
+    pub modes: Vec<AccessMode>,
+    pub impls: Vec<Implementation>,
+}
+
+impl Codelet {
+    pub fn new(name: &str, app: &str, modes: Vec<AccessMode>) -> Codelet {
+        Codelet {
+            name: name.to_string(),
+            app: app.to_string(),
+            modes,
+            impls: Vec::new(),
+        }
+    }
+
+    /// Add a native variant (builder style).
+    pub fn with_native(mut self, variant: &str, arch: Arch, f: NativeFn) -> Codelet {
+        self.impls.push(Implementation {
+            name: variant.to_string(),
+            arch,
+            kind: ImplKind::Native(f),
+        });
+        self
+    }
+
+    /// Add an artifact-backed variant.
+    pub fn with_artifact(mut self, variant: &str, arch: Arch, artifact_variant: &str) -> Codelet {
+        self.impls.push(Implementation {
+            name: variant.to_string(),
+            arch,
+            kind: ImplKind::Artifact {
+                artifact_variant: artifact_variant.to_string(),
+            },
+        });
+        self
+    }
+
+    /// Variants runnable on `arch`.
+    pub fn impls_for(&self, arch: Arch) -> impl Iterator<Item = (usize, &Implementation)> {
+        self.impls
+            .iter()
+            .enumerate()
+            .filter(move |(_, i)| i.arch == arch)
+    }
+
+    pub fn can_run_on(&self, arch: Arch) -> bool {
+        self.impls.iter().any(|i| i.arch == arch)
+    }
+
+    pub fn impl_by_name(&self, name: &str) -> Option<(usize, &Implementation)> {
+        self.impls
+            .iter()
+            .enumerate()
+            .find(|(_, i)| i.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Codelet {
+        Codelet::new("mmul", "matmul", vec![
+            AccessMode::Read,
+            AccessMode::Read,
+            AccessMode::Write,
+        ])
+        .with_native("omp", Arch::Cpu, Arc::new(|_| Ok(())))
+        .with_artifact("cuda", Arch::Cuda, "jnp")
+        .with_artifact("cublas", Arch::Cuda, "pallas")
+    }
+
+    #[test]
+    fn arch_filtering() {
+        let c = sample();
+        assert_eq!(c.impls_for(Arch::Cpu).count(), 1);
+        assert_eq!(c.impls_for(Arch::Cuda).count(), 2);
+        assert!(c.can_run_on(Arch::Cuda));
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        let c = sample();
+        let (idx, imp) = c.impl_by_name("cublas").unwrap();
+        assert_eq!(idx, 2);
+        assert_eq!(imp.arch, Arch::Cuda);
+        assert!(c.impl_by_name("opencl").is_none());
+    }
+
+    #[test]
+    fn buffers_respect_modes() {
+        let bufs = ExecBuffers {
+            tensors: vec![Arc::new(Mutex::new(Tensor::vector(vec![1.0])))],
+            modes: vec![AccessMode::Read],
+            size: 1,
+        };
+        assert_eq!(bufs.read(0).data()[0], 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not writable")]
+    fn write_readonly_panics() {
+        let bufs = ExecBuffers {
+            tensors: vec![Arc::new(Mutex::new(Tensor::vector(vec![1.0])))],
+            modes: vec![AccessMode::Read],
+            size: 1,
+        };
+        drop(bufs.write(0));
+    }
+}

@@ -1,0 +1,198 @@
+//! Runtime configuration, mirroring the StarPU environment variables the
+//! paper uses in its evaluation (§3.2): `STARPU_NCPU=0` forces GPU-only,
+//! `STARPU_NCUDA=0` forces CPU-only. We accept both the `COMPAR_*` names
+//! and the `STARPU_*` aliases.
+
+use std::time::Duration;
+
+/// Scheduling policy selector (see `scheduler/`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Greedy FIFO shared by all workers (StarPU "eager").
+    Eager,
+    /// Uniform-random worker choice (StarPU "random").
+    Random,
+    /// Per-worker deques with work stealing (StarPU "ws").
+    WorkStealing,
+    /// Deque Model Data Aware: minimize modeled completion = exec model +
+    /// transfer model (StarPU "dmda"). The paper's selection mechanism.
+    Dmda,
+    /// Heterogeneous Earliest Finish Time over the task window.
+    Heft,
+}
+
+impl SchedPolicy {
+    pub fn parse(s: &str) -> Option<SchedPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "eager" => Some(SchedPolicy::Eager),
+            "random" => Some(SchedPolicy::Random),
+            "ws" | "work-stealing" | "work_stealing" => Some(SchedPolicy::WorkStealing),
+            "dmda" | "dm" => Some(SchedPolicy::Dmda),
+            "heft" => Some(SchedPolicy::Heft),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::Eager => "eager",
+            SchedPolicy::Random => "random",
+            SchedPolicy::WorkStealing => "ws",
+            SchedPolicy::Dmda => "dmda",
+            SchedPolicy::Heft => "heft",
+        }
+    }
+}
+
+/// How execution time is attributed for scheduling / reporting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeMode {
+    /// Calibrated analytic device model (paper hardware, DESIGN.md §3).
+    /// This is the default: it reproduces the heterogeneous testbed.
+    Modeled,
+    /// Raw wall-clock on this machine (useful for overhead benches).
+    Wall,
+}
+
+/// Runtime configuration. Build with [`Config::default()`] +. setters, or
+/// [`Config::from_env()`] for CLI use.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// CPU worker threads (the paper's multi-core resource).
+    pub ncpu: usize,
+    /// CUDA-analog device workers (each owns an XLA service handle).
+    pub ncuda: usize,
+    pub sched: SchedPolicy,
+    /// Force perf-model calibration (round-robin over variants) like
+    /// STARPU_CALIBRATE=1.
+    pub calibrate: bool,
+    pub time_mode: TimeMode,
+    /// Directory for persisted performance models.
+    pub perfmodel_dir: Option<std::path::PathBuf>,
+    /// Deterministic seed for the modeled-time noise + random scheduler.
+    pub seed: u64,
+    /// dmda/heft consider data-transfer cost (the "data aware" part).
+    /// Disabling this is the ablation of DESIGN.md — dmda degrades to a
+    /// pure execution-model policy.
+    pub data_aware: bool,
+    /// Worker poll timeout (idle workers re-check shutdown this often).
+    pub poll: Duration,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            ncpu: 4,
+            ncuda: 1,
+            sched: SchedPolicy::Dmda,
+            calibrate: false,
+            time_mode: TimeMode::Modeled,
+            perfmodel_dir: None,
+            seed: 0xc0f1a5,
+            data_aware: true,
+            poll: Duration::from_millis(10),
+        }
+    }
+}
+
+fn env_usize(names: &[&str]) -> Option<usize> {
+    for n in names {
+        if let Ok(v) = std::env::var(n) {
+            if let Ok(x) = v.trim().parse() {
+                return Some(x);
+            }
+        }
+    }
+    None
+}
+
+fn env_str(names: &[&str]) -> Option<String> {
+    names.iter().find_map(|n| std::env::var(n).ok())
+}
+
+impl Config {
+    /// Read `COMPAR_*` (or legacy `STARPU_*`) environment variables.
+    /// The default CPU worker count comes from the hwloc-analog probe
+    /// (paper §4: resources are "automatically collected ... using
+    /// tools like hwloc") unless overridden.
+    pub fn from_env() -> Config {
+        let mut c = Config::default();
+        c.ncpu = super::hwloc::MachineTopology::detect().recommended_ncpu();
+        if let Some(n) = env_usize(&["COMPAR_NCPU", "STARPU_NCPU"]) {
+            c.ncpu = n;
+        }
+        if let Some(n) = env_usize(&["COMPAR_NCUDA", "STARPU_NCUDA"]) {
+            c.ncuda = n;
+        }
+        if let Some(s) = env_str(&["COMPAR_SCHED", "STARPU_SCHED"]) {
+            if let Some(p) = SchedPolicy::parse(&s) {
+                c.sched = p;
+            }
+        }
+        if let Some(n) = env_usize(&["COMPAR_CALIBRATE", "STARPU_CALIBRATE"]) {
+            c.calibrate = n != 0;
+        }
+        if let Some(s) = env_str(&["COMPAR_TIME_MODE"]) {
+            if s.eq_ignore_ascii_case("wall") {
+                c.time_mode = TimeMode::Wall;
+            }
+        }
+        if let Some(s) = env_str(&["COMPAR_PERFMODEL_DIR"]) {
+            c.perfmodel_dir = Some(s.into());
+        }
+        if let Some(n) = env_usize(&["COMPAR_SEED"]) {
+            c.seed = n as u64;
+        }
+        if let Some(n) = env_usize(&["COMPAR_DATA_AWARE"]) {
+            c.data_aware = n != 0;
+        }
+        c
+    }
+
+    /// CPU-only execution (paper: STARPU_NCUDA=0).
+    pub fn cpu_only(mut self) -> Config {
+        self.ncuda = 0;
+        self
+    }
+
+    /// GPU-only execution (paper: STARPU_NCPU=0).
+    pub fn gpu_only(mut self) -> Config {
+        self.ncpu = 0;
+        self
+    }
+
+    pub fn with_sched(mut self, s: SchedPolicy) -> Config {
+        self.sched = s;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Config {
+        self.seed = seed;
+        self
+    }
+
+    pub fn total_workers(&self) -> usize {
+        self.ncpu + self.ncuda
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(SchedPolicy::parse("dmda"), Some(SchedPolicy::Dmda));
+        assert_eq!(SchedPolicy::parse("EAGER"), Some(SchedPolicy::Eager));
+        assert_eq!(SchedPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn cpu_gpu_only() {
+        let c = Config::default().cpu_only();
+        assert_eq!(c.ncuda, 0);
+        assert!(c.ncpu > 0);
+        let g = Config::default().gpu_only();
+        assert_eq!(g.ncpu, 0);
+    }
+}

@@ -1,0 +1,275 @@
+//! Data handles and coherence — the StarPU data-management analog.
+//!
+//! Applications register tensors once (`starpu_vector_data_register` /
+//! `starpu_matrix_data_register` in the generated glue); tasks then name
+//! handles plus an access mode. The registry tracks, per handle, which
+//! memory nodes hold a valid copy (MSI-style: main memory is node 0,
+//! each CUDA device has its own node), so the transfer engine can charge
+//! PCIe time only for actual movements — exactly what StarPU's dmda
+//! scheduler feeds its transfer model with.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Tensor;
+
+/// Access mode of one task parameter (paper `access_mode` clause).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessMode {
+    Read,
+    Write,
+    ReadWrite,
+}
+
+impl AccessMode {
+    pub fn parse(s: &str) -> Option<AccessMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "read" | "r" => Some(AccessMode::Read),
+            "write" | "w" => Some(AccessMode::Write),
+            "readwrite" | "rw" => Some(AccessMode::ReadWrite),
+            _ => None,
+        }
+    }
+
+    pub fn reads(&self) -> bool {
+        matches!(self, AccessMode::Read | AccessMode::ReadWrite)
+    }
+
+    pub fn writes(&self) -> bool {
+        matches!(self, AccessMode::Write | AccessMode::ReadWrite)
+    }
+}
+
+/// Opaque handle id (index into the registry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct HandleId(pub usize);
+
+/// Memory node id: 0 = main memory (CPU), 1.. = device memories.
+pub type MemNode = usize;
+
+pub const MAIN_MEMORY: MemNode = 0;
+
+struct HandleEntry {
+    tensor: Arc<Mutex<Tensor>>,
+    /// Nodes currently holding a valid copy.
+    valid: Vec<MemNode>,
+    /// Sequential-consistency bookkeeping (implicit dependencies):
+    /// the last task that wrote this handle, and readers since then.
+    last_writer: Option<usize>,
+    readers_since_write: Vec<usize>,
+}
+
+/// Registry of all application data known to the runtime.
+#[derive(Default)]
+pub struct DataRegistry {
+    entries: RwLock<Vec<HandleEntry>>,
+    names: Mutex<HashMap<String, HandleId>>,
+}
+
+impl DataRegistry {
+    pub fn new() -> DataRegistry {
+        Self::default()
+    }
+
+    /// Register a tensor; it starts valid only in main memory.
+    pub fn register(&self, tensor: Tensor) -> HandleId {
+        let mut entries = self.entries.write().unwrap();
+        let id = HandleId(entries.len());
+        entries.push(HandleEntry {
+            tensor: Arc::new(Mutex::new(tensor)),
+            valid: vec![MAIN_MEMORY],
+            last_writer: None,
+            readers_since_write: Vec::new(),
+        });
+        id
+    }
+
+    /// Register with a debug name (used by generated glue).
+    pub fn register_named(&self, name: &str, tensor: Tensor) -> HandleId {
+        let id = self.register(tensor);
+        self.names.lock().unwrap().insert(name.to_string(), id);
+        id
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<HandleId> {
+        self.names.lock().unwrap().get(name).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn with_entry<T>(&self, id: HandleId, f: impl FnOnce(&mut HandleEntry) -> T) -> Result<T> {
+        let mut entries = self.entries.write().unwrap();
+        entries
+            .get_mut(id.0)
+            .map(f)
+            .ok_or_else(|| anyhow!("unknown handle {id:?}"))
+    }
+
+    /// Shared reference to the tensor storage.
+    pub fn tensor(&self, id: HandleId) -> Result<Arc<Mutex<Tensor>>> {
+        let entries = self.entries.read().unwrap();
+        entries
+            .get(id.0)
+            .map(|e| e.tensor.clone())
+            .ok_or_else(|| anyhow!("unknown handle {id:?}"))
+    }
+
+    /// Clone the current contents ("unregister + fetch" in StarPU terms).
+    pub fn snapshot(&self, id: HandleId) -> Result<Tensor> {
+        Ok(self.tensor(id)?.lock().unwrap().clone())
+    }
+
+    /// Byte size of the handle's tensor.
+    pub fn byte_size(&self, id: HandleId) -> Result<usize> {
+        Ok(self.tensor(id)?.lock().unwrap().byte_size())
+    }
+
+    /// Bytes that must move to make `id` valid on `node` (0 if resident).
+    pub fn transfer_bytes(&self, id: HandleId, node: MemNode) -> Result<usize> {
+        let entries = self.entries.read().unwrap();
+        let e = entries
+            .get(id.0)
+            .ok_or_else(|| anyhow!("unknown handle {id:?}"))?;
+        if e.valid.contains(&node) {
+            Ok(0)
+        } else {
+            Ok(e.tensor.lock().unwrap().byte_size())
+        }
+    }
+
+    /// Make `id` valid on `node` for the given access, applying MSI rules:
+    /// a read adds `node` to the valid set; a write invalidates all other
+    /// copies. Returns the bytes actually transferred (for accounting).
+    pub fn acquire(&self, id: HandleId, node: MemNode, mode: AccessMode) -> Result<usize> {
+        self.with_entry(id, |e| {
+            let moved = if e.valid.contains(&node) {
+                0
+            } else {
+                e.tensor.lock().unwrap().byte_size()
+            };
+            if mode.writes() {
+                e.valid.clear();
+                e.valid.push(node);
+            } else if !e.valid.contains(&node) {
+                e.valid.push(node);
+            }
+            moved
+        })
+    }
+
+    /// Nodes currently holding a valid copy (for tests/inspection).
+    pub fn valid_nodes(&self, id: HandleId) -> Result<Vec<MemNode>> {
+        let entries = self.entries.read().unwrap();
+        entries
+            .get(id.0)
+            .map(|e| e.valid.clone())
+            .ok_or_else(|| anyhow!("unknown handle {id:?}"))
+    }
+
+    /// Implicit-dependency bookkeeping (StarPU sequential consistency):
+    /// returns the task ids the new access must wait for.
+    pub fn record_access(&self, id: HandleId, task: usize, mode: AccessMode) -> Result<Vec<usize>> {
+        self.with_entry(id, |e| {
+            let mut deps = Vec::new();
+            if mode.writes() {
+                // write-after-read + write-after-write
+                deps.extend(e.readers_since_write.iter().copied());
+                if let Some(w) = e.last_writer {
+                    deps.push(w);
+                }
+                e.last_writer = Some(task);
+                e.readers_since_write.clear();
+            } else {
+                // read-after-write
+                if let Some(w) = e.last_writer {
+                    deps.push(w);
+                }
+                e.readers_since_write.push(task);
+            }
+            deps.sort_unstable();
+            deps.dedup();
+            deps.retain(|&t| t != task);
+            deps
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> (DataRegistry, HandleId) {
+        let r = DataRegistry::new();
+        let id = r.register(Tensor::vector(vec![1.0, 2.0, 3.0]));
+        (r, id)
+    }
+
+    #[test]
+    fn register_and_snapshot() {
+        let (r, id) = reg();
+        assert_eq!(r.snapshot(id).unwrap().data(), &[1.0, 2.0, 3.0]);
+        assert_eq!(r.byte_size(id).unwrap(), 12);
+    }
+
+    #[test]
+    fn named_lookup() {
+        let r = DataRegistry::new();
+        let id = r.register_named("arr", Tensor::vector(vec![0.0]));
+        assert_eq!(r.lookup("arr"), Some(id));
+        assert_eq!(r.lookup("nope"), None);
+    }
+
+    #[test]
+    fn msi_read_then_write() {
+        let (r, id) = reg();
+        // initially valid only on node 0
+        assert_eq!(r.valid_nodes(id).unwrap(), vec![0]);
+        // read on node 1 -> copy, both valid
+        let moved = r.acquire(id, 1, AccessMode::Read).unwrap();
+        assert_eq!(moved, 12);
+        assert_eq!(r.valid_nodes(id).unwrap(), vec![0, 1]);
+        // second read on node 1 -> no movement
+        assert_eq!(r.acquire(id, 1, AccessMode::Read).unwrap(), 0);
+        // write on node 1 -> invalidates node 0
+        r.acquire(id, 1, AccessMode::ReadWrite).unwrap();
+        assert_eq!(r.valid_nodes(id).unwrap(), vec![1]);
+        // read back on node 0 -> transfer again
+        assert_eq!(r.acquire(id, 0, AccessMode::Read).unwrap(), 12);
+    }
+
+    #[test]
+    fn transfer_bytes_matches_acquire() {
+        let (r, id) = reg();
+        assert_eq!(r.transfer_bytes(id, 1).unwrap(), 12);
+        r.acquire(id, 1, AccessMode::Read).unwrap();
+        assert_eq!(r.transfer_bytes(id, 1).unwrap(), 0);
+    }
+
+    #[test]
+    fn implicit_deps_raw_war_waw() {
+        let (r, id) = reg();
+        // t0 writes, t1 reads (RAW on t0), t2 reads, t3 writes (WAR on t1,t2)
+        assert!(r.record_access(id, 0, AccessMode::Write).unwrap().is_empty());
+        assert_eq!(r.record_access(id, 1, AccessMode::Read).unwrap(), vec![0]);
+        assert_eq!(r.record_access(id, 2, AccessMode::Read).unwrap(), vec![0]);
+        let deps = r.record_access(id, 3, AccessMode::Write).unwrap();
+        assert_eq!(deps, vec![0, 1, 2]);
+        // t4 reads -> RAW on t3 only
+        assert_eq!(r.record_access(id, 4, AccessMode::Read).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn access_mode_parse() {
+        assert_eq!(AccessMode::parse("read"), Some(AccessMode::Read));
+        assert_eq!(AccessMode::parse("RW"), Some(AccessMode::ReadWrite));
+        assert_eq!(AccessMode::parse("x"), None);
+    }
+}

@@ -1,0 +1,270 @@
+//! Device topology + calibrated analytic performance model.
+//!
+//! The paper's testbed (Table 1) is a dual Xeon E5-2695v2 (24 cores,
+//! 2×59.7 GB/s) plus an NVIDIA Titan Xp (3840 cores, 12.15 TFLOP/s f32,
+//! 547.6 GB/s, PCIe 3.0 x16). We have neither GPU nor CUDA, so per
+//! DESIGN.md §3 the *compute* still runs for real (native Rust or XLA
+//! artifacts — numerics are fully verified) while the *time* attributed
+//! to each device comes from this calibrated analytic model. Schedulers,
+//! performance-model learning and the Fig. 1 sweeps all operate on these
+//! modeled times; wall-clock is recorded alongside.
+//!
+//! Model form per (app, variant): t(n) = overhead + work(n) / throughput,
+//! with throughputs derived from Table 1 peaks times per-variant
+//! efficiency factors (documented on each constant below). A seeded ±5%
+//! multiplicative noise term reproduces the "stochastic variability" the
+//! paper attributes its COMPAR-vs-CUDA deltas to.
+
+use crate::util::rng::Rng;
+use std::sync::Mutex;
+
+/// Processor architecture of a worker / implementation variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    Cpu,
+    Cuda,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Option<Arch> {
+        match s.to_ascii_lowercase().as_str() {
+            "cpu" | "openmp" | "omp" | "seq" | "blas" => Some(Arch::Cpu),
+            "cuda" | "gpu" | "opencl" | "cublas" => Some(Arch::Cuda),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::Cpu => "cpu",
+            Arch::Cuda => "cuda",
+        }
+    }
+}
+
+/// PCIe 3.0 x16 transfer model (Table 1 testbed).
+pub const PCIE_BANDWIDTH: f64 = 15.75e9; // bytes/s
+pub const PCIE_LATENCY: f64 = 10e-6; // per transfer
+
+/// Table 1 hardware peaks.
+pub mod peaks {
+    /// 2x Xeon E5-2695v2: 24 cores x 2.4 GHz x 8 f32 FLOP/cycle (AVX FMA).
+    pub const CPU_FLOPS: f64 = 460e9;
+    /// Aggregate CPU memory bandwidth (2 sockets x 59.7 GB/s).
+    pub const CPU_BW: f64 = 119.4e9;
+    /// Titan Xp f32 peak.
+    pub const GPU_FLOPS: f64 = 12.15e12;
+    /// Titan Xp memory bandwidth.
+    pub const GPU_BW: f64 = 547.6e9;
+}
+
+/// The modeled execution time of one implementation variant at size n.
+///
+/// `app` and `variant` are the paper's names: variants "omp", "seq",
+/// "blas" run on [`Arch::Cpu`]; "cuda", "cublas" on [`Arch::Cuda`].
+/// Unknown combinations fall back to a bandwidth-bound estimate so new
+/// apps degrade gracefully rather than panic.
+pub fn exec_model(app: &str, variant: &str, n: usize) -> f64 {
+    let nf = n as f64;
+    match (app, variant) {
+        // ------------------------------------------------ matmul (Fig 1e)
+        // flops = 2 n^3. Efficiencies: naive seq ~1.5 GF/s; OpenMP naive
+        // triple loop ~6% of peak; MKL-class BLAS ~65% of peak; naive CUDA
+        // tiled kernel ~16% of GPU peak; CUBLAS ~75% of GPU peak but with
+        // a large one-off library/handle overhead (the paper observed
+        // CUDA beating CUBLAS at n=4096 and losing at 8192 — that
+        // crossover pins the overhead at ~80 ms).
+        ("matmul", "seq") => 1e-6 + 2.0 * nf.powi(3) / 1.5e9,
+        ("matmul", "omp") => 12e-6 + 2.0 * nf.powi(3) / (0.06 * peaks::CPU_FLOPS),
+        ("matmul", "blas") => 2e-6 + 2.0 * nf.powi(3) / (0.65 * peaks::CPU_FLOPS),
+        ("matmul", "cuda") => 18e-6 + 2.0 * nf.powi(3) / (0.16 * peaks::GPU_FLOPS),
+        ("matmul", "cublas") => 80e-3 + 2.0 * nf.powi(3) / (0.75 * peaks::GPU_FLOPS),
+
+        // ---------------------------------------------- hotspot (Fig 1a)
+        // 5-point stencil, STEPS iterations; memory bound: ~3 arrays of
+        // n^2 f32 touched per step. OpenMP reaches ~60% of CPU bw; the
+        // CUDA kernel ~70% of GPU bw with a per-step launch cost.
+        ("hotspot", "seq") => 1e-6 + hotspot_bytes(nf) / (0.25 * peaks::CPU_BW),
+        ("hotspot", "omp") => 15e-6 + hotspot_bytes(nf) / (0.60 * peaks::CPU_BW),
+        ("hotspot", "cuda") => {
+            STEPS as f64 * 8e-6 + hotspot_bytes(nf) / (0.70 * peaks::GPU_BW)
+        }
+
+        // -------------------------------------------- hotspot3D (Fig 1b)
+        ("hotspot3d", "seq") => 1e-6 + hs3d_bytes(nf) / (0.25 * peaks::CPU_BW),
+        ("hotspot3d", "omp") => 15e-6 + hs3d_bytes(nf) / (0.55 * peaks::CPU_BW),
+        ("hotspot3d", "cuda") => STEPS as f64 * 8e-6 + hs3d_bytes(nf) / (0.65 * peaks::GPU_BW),
+
+        // -------------------------------------------------- lud (Fig 1c)
+        // 2/3 n^3 flops; the panel factorization serializes, so CPU
+        // efficiency is low (~4% OpenMP); Rodinia's blocked CUDA kernel
+        // reaches ~10% of GPU peak.
+        ("lud", "seq") => 1e-6 + 0.6667 * nf.powi(3) / 1.2e9,
+        ("lud", "omp") => 20e-6 + 0.6667 * nf.powi(3) / (0.04 * peaks::CPU_FLOPS),
+        ("lud", "cuda") => {
+            // one kernel launch per panel (n / 16 panels in Rodinia)
+            (nf / 16.0) * 6e-6 + 0.6667 * nf.powi(3) / (0.10 * peaks::GPU_FLOPS)
+        }
+
+        // --------------------------------------------------- nw (Fig 1d)
+        // (n+1)^2 DP cells, ~10 ops each; anti-diagonal wavefront limits
+        // parallelism: OpenMP ~1.2 Gcell/s, CUDA ~12 Gcell/s with 2n
+        // diagonal kernel launches.
+        ("nw", "seq") => 1e-6 + nf * nf / 0.35e9,
+        ("nw", "omp") => 15e-6 + nf * nf / 1.2e9,
+        ("nw", "cuda") => 2.0 * nf * 4e-6 + nf * nf / 12e9,
+
+        // ------------------------------------------------ sort (Listing 1.3)
+        ("sort", "seq") => 0.5e-6 + nf * nf.log2().max(1.0) * 9e-9,
+        ("sort", "omp") => 10e-6 + nf * nf.log2().max(1.0) * 1.4e-9,
+        ("sort", "cuda") => 25e-6 + nf * nf.log2().max(1.0) * 0.11e-9,
+
+        // -------------------------------------------------- fallback
+        _ => {
+            let bytes = 4.0 * nf * nf;
+            let bw = if Arch::parse(variant) == Some(Arch::Cuda) {
+                0.5 * peaks::GPU_BW
+            } else {
+                0.5 * peaks::CPU_BW
+            };
+            10e-6 + bytes / bw
+        }
+    }
+}
+
+/// Steps baked into the stencil artifacts (matches python model.py).
+pub const STEPS: usize = 8;
+
+fn hotspot_bytes(nf: f64) -> f64 {
+    STEPS as f64 * 3.0 * 4.0 * nf * nf
+}
+
+fn hs3d_bytes(nf: f64) -> f64 {
+    // 8 layers (model.py HOTSPOT3D_LAYERS), 3 arrays touched per step
+    STEPS as f64 * 3.0 * 4.0 * 8.0 * nf * nf
+}
+
+/// Modeled PCIe transfer time for `bytes` moved to/from the GPU.
+pub fn transfer_model(bytes: usize) -> f64 {
+    if bytes == 0 {
+        0.0
+    } else {
+        PCIE_LATENCY + bytes as f64 / PCIE_BANDWIDTH
+    }
+}
+
+/// Deterministic multiplicative noise source for modeled times (±~5%),
+/// reproducing the run-to-run variability of a real testbed.
+pub struct NoiseSource {
+    rng: Mutex<Rng>,
+    amplitude: f64,
+}
+
+impl NoiseSource {
+    pub fn new(seed: u64, amplitude: f64) -> NoiseSource {
+        NoiseSource {
+            rng: Mutex::new(Rng::new(seed)),
+            amplitude,
+        }
+    }
+
+    /// Multiply a modeled time by (1 + amplitude * u), u uniform [-1, 1).
+    pub fn apply(&self, t: f64) -> f64 {
+        let mut rng = self.rng.lock().unwrap();
+        let u = 2.0 * rng.next_f32() as f64 - 1.0;
+        t * (1.0 + self.amplitude * u)
+    }
+}
+
+/// A device in the simulated topology.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub arch: Arch,
+    /// Memory node for the coherence tracker (0 = main memory).
+    pub mem_node: usize,
+    /// Worker threads this device contributes.
+    pub workers: usize,
+}
+
+/// The evaluation testbed of Table 1.
+pub fn paper_topology(ncpu: usize, ncuda: usize) -> Vec<DeviceSpec> {
+    let mut v = Vec::new();
+    if ncpu > 0 {
+        v.push(DeviceSpec {
+            name: "2x Xeon E5-2695v2 (Ivy Bridge, 24c)".into(),
+            arch: Arch::Cpu,
+            mem_node: 0,
+            workers: ncpu,
+        });
+    }
+    if ncuda > 0 {
+        v.push(DeviceSpec {
+            name: "NVIDIA Titan Xp (GP102)".into(),
+            arch: Arch::Cuda,
+            mem_node: 1,
+            workers: ncuda,
+        });
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_wins_large_hotspot() {
+        // Fig 1a shape: GPU decisively faster at large grids.
+        assert!(exec_model("hotspot", "cuda", 4096) < exec_model("hotspot", "omp", 4096));
+    }
+
+    #[test]
+    fn cpu_competitive_small() {
+        // Launch overheads make the CPU competitive at tiny sizes.
+        assert!(exec_model("matmul", "blas", 8) < exec_model("matmul", "cuda", 8));
+        assert!(exec_model("hotspot", "omp", 64) < exec_model("hotspot", "cuda", 64));
+    }
+
+    #[test]
+    fn matmul_cuda_cublas_crossover() {
+        // Fig 1e: CUDA wins at 4096, CUBLAS wins at 8192.
+        assert!(exec_model("matmul", "cuda", 4096) < exec_model("matmul", "cublas", 4096));
+        assert!(exec_model("matmul", "cublas", 8192) < exec_model("matmul", "cuda", 8192));
+    }
+
+    #[test]
+    fn transfer_zero_is_free() {
+        assert_eq!(transfer_model(0), 0.0);
+        assert!(transfer_model(1) > 0.0);
+    }
+
+    #[test]
+    fn noise_bounded_and_deterministic() {
+        let a = NoiseSource::new(9, 0.05);
+        let b = NoiseSource::new(9, 0.05);
+        for _ in 0..100 {
+            let x = a.apply(1.0);
+            assert!((0.95..=1.05).contains(&x));
+            assert_eq!(x, b.apply(1.0));
+        }
+    }
+
+    #[test]
+    fn arch_parse() {
+        assert_eq!(Arch::parse("cublas"), Some(Arch::Cuda));
+        assert_eq!(Arch::parse("omp"), Some(Arch::Cpu));
+        assert_eq!(Arch::parse("tpu"), None);
+    }
+
+    #[test]
+    fn monotone_in_size() {
+        for app in ["matmul", "hotspot", "lud", "nw", "sort"] {
+            for v in ["omp", "cuda"] {
+                assert!(
+                    exec_model(app, v, 1024) > exec_model(app, v, 64),
+                    "{app}/{v} not monotone"
+                );
+            }
+        }
+    }
+}

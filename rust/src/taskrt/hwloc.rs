@@ -1,0 +1,159 @@
+//! Hardware-topology discovery — the paper's hwloc usage ("our approach
+//! ... automatically collects details about available computing
+//! resources using tools like hwloc", §4). A small native prober: CPU
+//! package/core counts and cache sizes from /proc/cpuinfo + sysfs, and
+//! accelerator presence from the artifact manifest (the CUDA-analog
+//! device exists exactly when AOT artifacts are available).
+
+use std::path::Path;
+
+/// Discovered machine description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MachineTopology {
+    /// Logical CPUs visible to this process.
+    pub logical_cpus: usize,
+    /// Physical cores (logical / threads-per-core when detectable).
+    pub physical_cores: usize,
+    /// CPU sockets ("physical id" count), >= 1.
+    pub sockets: usize,
+    /// Model name string, if exposed.
+    pub model_name: Option<String>,
+    /// Last-level cache size in bytes, if exposed.
+    pub llc_bytes: Option<usize>,
+}
+
+impl MachineTopology {
+    /// Probe the running machine.
+    pub fn detect() -> MachineTopology {
+        let logical = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let cpuinfo = std::fs::read_to_string("/proc/cpuinfo").unwrap_or_default();
+        Self::from_cpuinfo(&cpuinfo, logical)
+    }
+
+    /// Parse a /proc/cpuinfo text (separated out for tests).
+    pub fn from_cpuinfo(cpuinfo: &str, logical: usize) -> MachineTopology {
+        let mut sockets = std::collections::BTreeSet::new();
+        let mut cores = std::collections::BTreeSet::new();
+        let mut model_name = None;
+        let mut llc_bytes = None;
+        let mut cur_socket = 0usize;
+        for line in cpuinfo.lines() {
+            let mut split = line.splitn(2, ':');
+            let key = split.next().unwrap_or("").trim();
+            let val = split.next().unwrap_or("").trim();
+            match key {
+                "physical id" => {
+                    cur_socket = val.parse().unwrap_or(0);
+                    sockets.insert(cur_socket);
+                }
+                "core id" => {
+                    if let Ok(c) = val.parse::<usize>() {
+                        cores.insert((cur_socket, c));
+                    }
+                }
+                "model name" if model_name.is_none() => {
+                    model_name = Some(val.to_string());
+                }
+                "cache size" if llc_bytes.is_none() => {
+                    // "cache size : 20480 KB"
+                    let mut parts = val.split_whitespace();
+                    if let (Some(n), Some(unit)) = (parts.next(), parts.next()) {
+                        if let Ok(n) = n.parse::<usize>() {
+                            llc_bytes = Some(match unit {
+                                "KB" | "kB" => n * 1024,
+                                "MB" => n * 1024 * 1024,
+                                _ => n,
+                            });
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        let physical = if cores.is_empty() { logical } else { cores.len() };
+        MachineTopology {
+            logical_cpus: logical,
+            physical_cores: physical.max(1),
+            sockets: sockets.len().max(1),
+            model_name,
+            llc_bytes,
+        }
+    }
+
+    /// Recommended CPU worker count for the runtime: one worker per
+    /// physical core, minus one core reserved for the leader thread and
+    /// the XLA engine thread (StarPU reserves a core for its own
+    /// drivers the same way).
+    pub fn recommended_ncpu(&self) -> usize {
+        self.physical_cores.saturating_sub(1).max(1)
+    }
+}
+
+/// Are CUDA-analog devices available? True when AOT artifacts exist —
+/// the accelerator in this reproduction is the XLA engine.
+pub fn accelerators_available(artifacts_dir: &Path) -> bool {
+    artifacts_dir.join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+processor\t: 0
+physical id\t: 0
+core id\t: 0
+model name\t: Intel(R) Xeon(R) CPU E5-2695 v2 @ 2.40GHz
+cache size\t: 30720 KB
+
+processor\t: 1
+physical id\t: 0
+core id\t: 1
+
+processor\t: 2
+physical id\t: 1
+core id\t: 0
+
+processor\t: 3
+physical id\t: 1
+core id\t: 1
+";
+
+    #[test]
+    fn parses_sockets_and_cores() {
+        let t = MachineTopology::from_cpuinfo(SAMPLE, 4);
+        assert_eq!(t.sockets, 2);
+        assert_eq!(t.physical_cores, 4);
+        assert_eq!(t.logical_cpus, 4);
+        assert_eq!(t.llc_bytes, Some(30720 * 1024));
+        assert!(t.model_name.unwrap().contains("E5-2695"));
+    }
+
+    #[test]
+    fn empty_cpuinfo_falls_back() {
+        let t = MachineTopology::from_cpuinfo("", 8);
+        assert_eq!(t.physical_cores, 8);
+        assert_eq!(t.sockets, 1);
+        assert_eq!(t.recommended_ncpu(), 7);
+    }
+
+    #[test]
+    fn detect_runs_on_this_machine() {
+        let t = MachineTopology::detect();
+        assert!(t.logical_cpus >= 1);
+        assert!(t.recommended_ncpu() >= 1);
+    }
+
+    #[test]
+    fn smt_detection() {
+        // 2 logical per core
+        let two_threads = "\
+processor\t: 0\nphysical id\t: 0\ncore id\t: 0\n
+processor\t: 1\nphysical id\t: 0\ncore id\t: 0\n";
+        let t = MachineTopology::from_cpuinfo(two_threads, 2);
+        assert_eq!(t.physical_cores, 1);
+        assert_eq!(t.logical_cpus, 2);
+    }
+}

@@ -1,0 +1,137 @@
+//! Execution metrics: per-task results and aggregate counters.
+//!
+//! The bench harness consumes [`TaskResult`] records to build the Fig. 1
+//! series (modeled time per app/size/configuration) and the variant-
+//! selection traces the paper discusses in §3.2.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::task::TaskId;
+
+/// Outcome of one executed task.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task: TaskId,
+    pub codelet: String,
+    /// Variant name actually executed ("omp", "cuda", ...).
+    pub variant: String,
+    pub worker: usize,
+    pub size: usize,
+    /// Wall-clock execution on this machine (seconds).
+    pub wall: f64,
+    /// Modeled device execution time (seconds) — DESIGN.md §3.
+    pub modeled_exec: f64,
+    /// Modeled PCIe transfer time (seconds).
+    pub modeled_transfer: f64,
+    pub transfer_bytes: usize,
+    /// Wall-clock execution window relative to the runtime epoch
+    /// (seconds) — consumed by the trace exporter.
+    pub t_start: f64,
+    pub t_end: f64,
+}
+
+impl TaskResult {
+    pub fn modeled_total(&self) -> f64 {
+        self.modeled_exec + self.modeled_transfer
+    }
+}
+
+/// Shared metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    pub tasks_executed: AtomicUsize,
+    pub tasks_failed: AtomicUsize,
+    pub bytes_transferred: AtomicU64,
+    results: Mutex<Vec<TaskResult>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Self::default()
+    }
+
+    pub fn record(&self, r: TaskResult) {
+        self.tasks_executed.fetch_add(1, Ordering::Relaxed);
+        self.bytes_transferred
+            .fetch_add(r.transfer_bytes as u64, Ordering::Relaxed);
+        self.results.lock().unwrap().push(r);
+    }
+
+    pub fn record_failure(&self) {
+        self.tasks_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Take all accumulated task results (clears the buffer).
+    pub fn drain_results(&self) -> Vec<TaskResult> {
+        std::mem::take(&mut self.results.lock().unwrap())
+    }
+
+    /// Peek without clearing.
+    pub fn results(&self) -> Vec<TaskResult> {
+        self.results.lock().unwrap().clone()
+    }
+
+    /// variant -> execution count (the selection histogram of §3.2).
+    pub fn variant_histogram(&self) -> BTreeMap<String, usize> {
+        let mut h = BTreeMap::new();
+        for r in self.results.lock().unwrap().iter() {
+            *h.entry(r.variant.clone()).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Sum of modeled times (exec + transfer) over all results.
+    pub fn modeled_total(&self) -> f64 {
+        self.results
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|r| r.modeled_total())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(variant: &str, t: f64) -> TaskResult {
+        TaskResult {
+            task: 0,
+            codelet: "c".into(),
+            variant: variant.into(),
+            worker: 0,
+            size: 64,
+            wall: t,
+            modeled_exec: t,
+            modeled_transfer: 0.1,
+            transfer_bytes: 256,
+            t_start: 0.0,
+            t_end: t,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let m = Metrics::new();
+        m.record(result("omp", 1.0));
+        m.record(result("cuda", 2.0));
+        m.record(result("cuda", 3.0));
+        assert_eq!(m.tasks_executed.load(Ordering::Relaxed), 3);
+        assert_eq!(m.bytes_transferred.load(Ordering::Relaxed), 768);
+        let h = m.variant_histogram();
+        assert_eq!(h["cuda"], 2);
+        assert_eq!(h["omp"], 1);
+        assert!((m.modeled_total() - 6.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drain_clears() {
+        let m = Metrics::new();
+        m.record(result("omp", 1.0));
+        assert_eq!(m.drain_results().len(), 1);
+        assert!(m.drain_results().is_empty());
+    }
+}

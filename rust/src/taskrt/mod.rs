@@ -1,0 +1,343 @@
+//! `taskrt` — the StarPU-analog heterogeneous task runtime (DESIGN.md S5).
+//!
+//! Applications (or the COMPAR-generated glue) register data handles and
+//! multi-variant codelets, then submit tasks; the runtime resolves
+//! implicit data dependencies, lets the configured scheduler choose an
+//! implementation variant + worker, simulates the heterogeneous device
+//! timing (DESIGN.md §3) while executing every task for real (native
+//! Rust or an AOT XLA artifact), and feeds observed times back into the
+//! history-based performance models that drive future selections.
+
+pub mod codelet;
+pub mod config;
+pub mod data;
+pub mod device;
+pub mod hwloc;
+pub mod metrics;
+pub mod perfmodel;
+pub mod scheduler;
+pub mod task;
+pub mod trace;
+mod worker;
+
+pub use codelet::{Codelet, ExecBuffers, ImplKind, Implementation, NativeFn};
+pub use config::{Config, SchedPolicy, TimeMode};
+pub use data::{AccessMode, DataRegistry, HandleId, MAIN_MEMORY};
+pub use device::Arch;
+pub use metrics::{Metrics, TaskResult};
+pub use perfmodel::PerfModels;
+pub use task::{TaskId, TaskSpec, TaskState};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::{Manifest, Tensor, XlaHandle, XlaService};
+use scheduler::{ReadyTask, SchedCtx, Scheduler, WorkerInfo};
+use task::TaskTable;
+
+/// Shared runtime state (one per [`Runtime`]).
+pub(crate) struct Inner {
+    pub config: Config,
+    pub data: Arc<DataRegistry>,
+    pub codelets: RwLock<HashMap<String, Arc<Codelet>>>,
+    pub tasks: Mutex<TaskTable>,
+    pub sched: Box<dyn Scheduler>,
+    pub ctx: SchedCtx,
+    pub perf: Arc<PerfModels>,
+    pub metrics: Metrics,
+    pub noise: device::NoiseSource,
+    pub manifest: Option<Arc<Manifest>>,
+    pub xla: Option<XlaHandle>,
+    pub shutdown: AtomicBool,
+    /// (in-flight count, condvar) for wait_all.
+    pub inflight: Mutex<usize>,
+    pub inflight_cv: Condvar,
+    /// Runtime start time; task trace timestamps are relative to this.
+    pub epoch: std::time::Instant,
+}
+
+/// The COMPAR runtime: StarPU's `starpu_init` .. `starpu_shutdown`
+/// lifecycle. Created by generated glue (`compar_init()`) or directly.
+pub struct Runtime {
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
+    /// Keep the XLA service alive for the runtime's lifetime.
+    _xla_service: Option<XlaService>,
+}
+
+impl Runtime {
+    /// Bring up workers (and the XLA engine thread if any CUDA-analog
+    /// devices or artifact variants are configured).
+    pub fn new(config: Config, manifest: Option<Arc<Manifest>>) -> Result<Runtime> {
+        if config.total_workers() == 0 {
+            bail!("configuration has zero workers (ncpu=0 and ncuda=0)");
+        }
+        // Build the worker list from the device topology.
+        let mut infos = Vec::new();
+        for dev in device::paper_topology(config.ncpu, config.ncuda) {
+            for _ in 0..dev.workers {
+                infos.push(WorkerInfo {
+                    id: infos.len(),
+                    arch: dev.arch,
+                    mem_node: dev.mem_node,
+                });
+            }
+        }
+
+        // The XLA service thread is needed whenever artifacts may run.
+        let xla_service = if manifest.is_some() {
+            Some(XlaService::spawn()?)
+        } else {
+            None
+        };
+        let xla = xla_service.as_ref().map(|s| s.handle());
+
+        let data = Arc::new(DataRegistry::new());
+        let perf = Arc::new(PerfModels::new());
+        if let Some(dir) = &config.perfmodel_dir {
+            let path = dir.join("models.json");
+            if path.exists() {
+                perf.load(&path)?;
+            }
+        }
+        let mut ctx = SchedCtx::new(
+            infos.clone(),
+            perf.clone(),
+            data.clone(),
+            manifest.clone(),
+            config.calibrate,
+            config.seed,
+        );
+        ctx.data_aware = config.data_aware;
+        let sched = scheduler::make(config.sched);
+        let noise = device::NoiseSource::new(config.seed ^ 0x5eed, 0.05);
+
+        let inner = Arc::new(Inner {
+            config,
+            data,
+            codelets: RwLock::new(HashMap::new()),
+            tasks: Mutex::new(TaskTable::new()),
+            sched,
+            ctx,
+            perf,
+            metrics: Metrics::new(),
+            noise,
+            manifest,
+            xla,
+            shutdown: AtomicBool::new(false),
+            inflight: Mutex::new(0),
+            inflight_cv: Condvar::new(),
+            epoch: std::time::Instant::now(),
+        });
+
+        let workers = infos
+            .iter()
+            .map(|info| {
+                let inner = inner.clone();
+                let info = info.clone();
+                std::thread::Builder::new()
+                    .name(format!("worker-{}-{}", info.arch.name(), info.id))
+                    .spawn(move || worker::run(inner, info))
+                    .expect("spawning worker")
+            })
+            .collect();
+
+        Ok(Runtime {
+            inner,
+            workers,
+            _xla_service: xla_service,
+        })
+    }
+
+    /// Convenience: default config from env + artifacts from the default
+    /// directory if present.
+    pub fn from_env() -> Result<Runtime> {
+        let dir = crate::runtime::manifest::default_dir();
+        let manifest = if dir.join("manifest.json").exists() {
+            Some(Arc::new(Manifest::load(&dir)?))
+        } else {
+            None
+        };
+        Runtime::new(Config::from_env(), manifest)
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.inner.config
+    }
+
+    pub fn manifest(&self) -> Option<&Arc<Manifest>> {
+        self.inner.manifest.as_ref()
+    }
+
+    // ------------------------------------------------------------- data
+
+    pub fn register_data(&self, t: Tensor) -> HandleId {
+        self.inner.data.register(t)
+    }
+
+    pub fn register_data_named(&self, name: &str, t: Tensor) -> HandleId {
+        self.inner.data.register_named(name, t)
+    }
+
+    /// Copy out a handle's current contents (implies wait_all first for
+    /// deterministic reads in app code; we do not wait here).
+    pub fn snapshot(&self, id: HandleId) -> Result<Tensor> {
+        self.inner.data.snapshot(id)
+    }
+
+    pub fn data(&self) -> &Arc<DataRegistry> {
+        &self.inner.data
+    }
+
+    // --------------------------------------------------------- codelets
+
+    pub fn register_codelet(&self, c: Codelet) -> Arc<Codelet> {
+        let arc = Arc::new(c);
+        self.inner
+            .codelets
+            .write()
+            .unwrap()
+            .insert(arc.name.clone(), arc.clone());
+        arc
+    }
+
+    pub fn codelet(&self, name: &str) -> Option<Arc<Codelet>> {
+        self.inner.codelets.read().unwrap().get(name).cloned()
+    }
+
+    // ------------------------------------------------------------ tasks
+
+    /// Submit a task. Implicit dependencies (sequential consistency over
+    /// its data handles) are resolved here; the task enters the scheduler
+    /// as soon as they clear.
+    pub fn submit(&self, spec: TaskSpec) -> Result<TaskId> {
+        // validate executability up front (StarPU would hang instead)
+        let archs: Vec<Arch> = self
+            .inner
+            .ctx
+            .workers
+            .iter()
+            .map(|w| w.arch)
+            .collect();
+        let probe = ReadyTask {
+            id: 0,
+            codelet: spec.codelet.clone(),
+            size: spec.size,
+            handles: spec.handles.clone(),
+            force_variant: spec.force_variant.clone(),
+            priority: spec.priority,
+            chosen_impl: None,
+            est_cost_ns: 0,
+        };
+        if !archs
+            .iter()
+            .any(|&a| !self.inner.ctx.eligible_impls(&probe, a).is_empty())
+        {
+            bail!(
+                "task on codelet '{}' (size {}) has no eligible implementation \
+                 for the current topology (ncpu={}, ncuda={}, forced={:?})",
+                spec.codelet.name,
+                spec.size,
+                self.inner.config.ncpu,
+                self.inner.config.ncuda,
+                spec.force_variant
+            );
+        }
+
+        *self.inner.inflight.lock().unwrap() += 1;
+
+        let (id, ready) = {
+            let mut table = self.inner.tasks.lock().unwrap();
+            // record_access needs the task id before insertion; TaskTable
+            // assigns ids sequentially, so use the announced next id.
+            let next = table.next_id();
+            let mut deps = Vec::new();
+            for (h, m) in &spec.handles {
+                deps.extend(self.inner.data.record_access(*h, next as usize, *m)?);
+            }
+            let mut deps: Vec<TaskId> = deps.into_iter().map(|d| d as TaskId).collect();
+            // explicit dependencies (starpu_task_declare_deps analog)
+            deps.extend(spec.after.iter().copied());
+            deps.sort_unstable();
+            deps.dedup();
+            let (id, ready) = table.insert(spec, &deps);
+            debug_assert_eq!(id, next, "task id drift");
+            (id, ready)
+        };
+
+        if ready {
+            worker::push_ready(&self.inner, id);
+        }
+        Ok(id)
+    }
+
+    /// Block until every submitted task has finished. Returns the first
+    /// execution error, if any task failed.
+    pub fn wait_all(&self) -> Result<()> {
+        let mut inflight = self.inner.inflight.lock().unwrap();
+        while *inflight > 0 {
+            inflight = self.inner.inflight_cv.wait(inflight).unwrap();
+        }
+        drop(inflight);
+        let table = self.inner.tasks.lock().unwrap();
+        if let Some(e) = table.first_error() {
+            return Err(anyhow!("task failed: {e}"));
+        }
+        Ok(())
+    }
+
+    pub fn task_state(&self, id: TaskId) -> Option<TaskState> {
+        self.inner.tasks.lock().unwrap().state(id)
+    }
+
+    // ---------------------------------------------------------- metrics
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.inner.metrics
+    }
+
+    pub fn drain_results(&self) -> Vec<TaskResult> {
+        self.inner.metrics.drain_results()
+    }
+
+    pub fn perf_models(&self) -> &Arc<PerfModels> {
+        &self.inner.perf
+    }
+
+    /// Export the execution trace (chrome://tracing JSON) of everything
+    /// recorded so far — StarPU's FxT trace analog.
+    pub fn export_chrome_trace(&self, path: &std::path::Path) -> Result<()> {
+        trace::export_chrome_trace(&self.inner.metrics.results(), &self.inner.ctx.workers, path)
+    }
+
+    /// Persist perf models to the configured directory.
+    pub fn save_perf_models(&self) -> Result<()> {
+        if let Some(dir) = &self.inner.config.perfmodel_dir {
+            self.inner.perf.save(&dir.join("models.json"))?;
+        }
+        Ok(())
+    }
+
+    /// Graceful shutdown: waits for queues to drain, then joins workers.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.wait_all()?;
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.save_perf_models()
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! History-based performance models — StarPU's `starpu_perfmodel` analog.
+//!
+//! Each (codelet, variant) pair owns a model keyed by input footprint
+//! (the task's `size` parameter). Observed execution times accumulate
+//! into per-size buckets (Welford running mean/variance); estimates for
+//! unseen sizes come from a power-law regression t = a * n^b fitted over
+//! the bucket means in log-log space — the same family StarPU's
+//! `STARPU_REGRESSION_BASED` models use.
+//!
+//! Models persist as JSON under `$COMPAR_PERFMODEL_DIR` so calibration
+//! survives across runs (StarPU's ~/.starpu/sampling analog).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::RwLock;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Minimum observations in a bucket before its mean is trusted.
+pub const MIN_SAMPLES: usize = 3;
+
+/// One footprint bucket: Welford accumulator.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Bucket {
+    pub count: usize,
+    pub mean: f64,
+    m2: f64,
+}
+
+impl Bucket {
+    pub fn record(&mut self, t: f64) {
+        self.count += 1;
+        let delta = t - self.mean;
+        self.mean += delta / self.count as f64;
+        self.m2 += delta * (t - self.mean);
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.count - 1) as f64).sqrt()
+        }
+    }
+}
+
+/// Model for one (codelet, variant) pair.
+#[derive(Debug, Clone, Default)]
+pub struct VariantModel {
+    /// size -> observations
+    pub buckets: BTreeMap<usize, Bucket>,
+}
+
+impl VariantModel {
+    pub fn record(&mut self, size: usize, t: f64) {
+        self.buckets.entry(size).or_default().record(t);
+    }
+
+    pub fn total_samples(&self) -> usize {
+        self.buckets.values().map(|b| b.count).sum()
+    }
+
+    /// Power-law fit t = a * n^b over trusted buckets (log-log least
+    /// squares). Returns (a, b) when >= 2 trusted buckets exist.
+    pub fn regression(&self) -> Option<(f64, f64)> {
+        let pts: Vec<(f64, f64)> = self
+            .buckets
+            .iter()
+            .filter(|(s, b)| b.count >= MIN_SAMPLES && **s > 0 && b.mean > 0.0)
+            .map(|(s, b)| ((*s as f64).ln(), b.mean.ln()))
+            .collect();
+        if pts.len() < 2 {
+            return None;
+        }
+        let n = pts.len() as f64;
+        let sx: f64 = pts.iter().map(|p| p.0).sum();
+        let sy: f64 = pts.iter().map(|p| p.1).sum();
+        let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+        let denom = n * sxx - sx * sx;
+        if denom.abs() < 1e-12 {
+            return None;
+        }
+        let b = (n * sxy - sx * sy) / denom;
+        let a = ((sy - b * sx) / n).exp();
+        Some((a, b))
+    }
+
+    /// Estimated execution time at `size`, if the model knows enough:
+    /// exact trusted bucket first, regression fallback second.
+    pub fn estimate(&self, size: usize) -> Option<f64> {
+        if let Some(b) = self.buckets.get(&size) {
+            if b.count >= MIN_SAMPLES {
+                return Some(b.mean);
+            }
+        }
+        self.regression().map(|(a, b)| a * (size as f64).powf(b))
+    }
+
+    /// Whether `size` still needs calibration runs.
+    pub fn needs_calibration(&self, size: usize) -> bool {
+        self.buckets.get(&size).map_or(true, |b| b.count < MIN_SAMPLES)
+    }
+}
+
+/// Registry of all models, keyed "codelet:variant".
+#[derive(Default)]
+pub struct PerfModels {
+    models: RwLock<BTreeMap<String, VariantModel>>,
+}
+
+fn key(codelet: &str, variant: &str) -> String {
+    format!("{codelet}:{variant}")
+}
+
+impl PerfModels {
+    pub fn new() -> PerfModels {
+        Self::default()
+    }
+
+    pub fn record(&self, codelet: &str, variant: &str, size: usize, t: f64) {
+        self.models
+            .write()
+            .unwrap()
+            .entry(key(codelet, variant))
+            .or_default()
+            .record(size, t);
+    }
+
+    pub fn estimate(&self, codelet: &str, variant: &str, size: usize) -> Option<f64> {
+        self.models
+            .read()
+            .unwrap()
+            .get(&key(codelet, variant))
+            .and_then(|m| m.estimate(size))
+    }
+
+    pub fn needs_calibration(&self, codelet: &str, variant: &str, size: usize) -> bool {
+        self.models
+            .read()
+            .unwrap()
+            .get(&key(codelet, variant))
+            .map_or(true, |m| m.needs_calibration(size))
+    }
+
+    pub fn samples(&self, codelet: &str, variant: &str) -> usize {
+        self.models
+            .read()
+            .unwrap()
+            .get(&key(codelet, variant))
+            .map_or(0, |m| m.total_samples())
+    }
+
+    /// Serialize all models to JSON.
+    pub fn to_json(&self) -> Json {
+        let models = self.models.read().unwrap();
+        let mut obj = BTreeMap::new();
+        for (k, m) in models.iter() {
+            let mut buckets = BTreeMap::new();
+            for (size, b) in &m.buckets {
+                let mut rec = BTreeMap::new();
+                rec.insert("count".into(), Json::Num(b.count as f64));
+                rec.insert("mean".into(), Json::Num(b.mean));
+                rec.insert("m2".into(), Json::Num(b.m2));
+                buckets.insert(size.to_string(), Json::Obj(rec));
+            }
+            obj.insert(k.clone(), Json::Obj(buckets));
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn load_json(&self, v: &Json) {
+        let mut models = self.models.write().unwrap();
+        if let Some(obj) = v.as_obj() {
+            for (k, buckets) in obj {
+                let m = models.entry(k.clone()).or_default();
+                if let Some(bo) = buckets.as_obj() {
+                    for (size, rec) in bo {
+                        if let (Ok(size), Some(count), Some(mean)) = (
+                            size.parse::<usize>(),
+                            rec.get("count").and_then(Json::as_f64),
+                            rec.get("mean").and_then(Json::as_f64),
+                        ) {
+                            let b = m.buckets.entry(size).or_default();
+                            b.count = count as usize;
+                            b.mean = mean;
+                            b.m2 = rec.get("m2").and_then(Json::as_f64).unwrap_or(0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, json::to_string(&self.to_json()))
+            .with_context(|| format!("writing perf models to {}", path.display()))
+    }
+
+    pub fn load(&self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading perf models from {}", path.display()))?;
+        let v = json::parse(&text)?;
+        self.load_json(&v);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_welford() {
+        let mut b = Bucket::default();
+        for t in [1.0, 2.0, 3.0] {
+            b.record(t);
+        }
+        assert_eq!(b.count, 3);
+        assert!((b.mean - 2.0).abs() < 1e-12);
+        assert!((b.stddev() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimate_prefers_exact_bucket() {
+        let mut m = VariantModel::default();
+        for _ in 0..MIN_SAMPLES {
+            m.record(64, 0.5);
+        }
+        assert_eq!(m.estimate(64), Some(0.5));
+    }
+
+    #[test]
+    fn regression_extrapolates_cubic() {
+        let mut m = VariantModel::default();
+        // t = 1e-9 * n^3
+        for n in [64usize, 128, 256] {
+            for _ in 0..MIN_SAMPLES {
+                m.record(n, 1e-9 * (n as f64).powi(3));
+            }
+        }
+        let (a, b) = m.regression().unwrap();
+        assert!((b - 3.0).abs() < 0.01, "exponent {b}");
+        assert!((a - 1e-9).abs() / 1e-9 < 0.05, "coeff {a}");
+        let est = m.estimate(1024).unwrap();
+        let truth = 1e-9 * 1024f64.powi(3);
+        assert!((est - truth).abs() / truth < 0.05);
+    }
+
+    #[test]
+    fn calibration_threshold() {
+        let mut m = VariantModel::default();
+        assert!(m.needs_calibration(32));
+        for _ in 0..MIN_SAMPLES {
+            m.record(32, 1.0);
+        }
+        assert!(!m.needs_calibration(32));
+        // other sizes still uncalibrated
+        assert!(m.needs_calibration(64));
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let p = PerfModels::new();
+        for _ in 0..4 {
+            p.record("mmul", "cuda", 128, 0.25);
+        }
+        let j = p.to_json();
+        let q = PerfModels::new();
+        q.load_json(&j);
+        assert_eq!(q.estimate("mmul", "cuda", 128), Some(0.25));
+        assert_eq!(q.samples("mmul", "cuda"), 4);
+    }
+
+    #[test]
+    fn persistence() {
+        let dir = std::env::temp_dir().join("compar_pm_test");
+        let path = dir.join("models.json");
+        let p = PerfModels::new();
+        for _ in 0..3 {
+            p.record("sort", "omp", 1024, 0.001);
+        }
+        p.save(&path).unwrap();
+        let q = PerfModels::new();
+        q.load(&path).unwrap();
+        assert_eq!(q.estimate("sort", "omp", 1024), Some(0.001));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

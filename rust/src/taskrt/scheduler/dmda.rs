@@ -1,0 +1,114 @@
+//! StarPU "dmda" — Deque Model Data Aware. The paper's selection engine.
+//!
+//! At push time, for every (worker, implementation) pair the policy
+//! estimates the task's completion:
+//!
+//! ```text
+//! completion(w, i) = queued_work(w)               // deque model
+//!                  + transfer_model(bytes -> w)   // data awareness
+//!                  + perf_model(codelet, i, size) // history model
+//! ```
+//!
+//! and commits the task to the argmin. While any implementation is still
+//! uncalibrated for this size, the policy round-robins over the unknown
+//! options instead — this is StarPU's calibration phase, and it is what
+//! makes the paper's mmul experiment pick "sub-optimal options" until
+//! the models converge (§3.2).
+
+use std::time::Duration;
+
+use super::{PerWorkerQueues, ReadyTask, SchedCtx, Scheduler};
+
+pub struct Dmda {
+    queues: PerWorkerQueues,
+}
+
+impl Dmda {
+    pub fn new() -> Dmda {
+        Dmda {
+            queues: PerWorkerQueues::new(),
+        }
+    }
+
+    /// (worker, impl) candidates with their completion estimates;
+    /// `None` estimate = uncalibrated.
+    fn candidates(task: &ReadyTask, ctx: &SchedCtx) -> Vec<(usize, usize, Option<f64>)> {
+        let mut out = Vec::new();
+        // §Perf: transfer cost depends only on the memory node, so cache
+        // it per node instead of recomputing per worker (each lookup
+        // walks the data registry under its lock).
+        let mut node_transfer: [Option<f64>; 8] = [None; 8];
+        for w in &ctx.workers {
+            for i in ctx.eligible_impls(task, w.arch) {
+                let est = ctx.exec_estimate(task, i).map(|exec| {
+                    let t = if w.mem_node < node_transfer.len() {
+                        *node_transfer[w.mem_node]
+                            .get_or_insert_with(|| ctx.transfer_secs(task, w.id))
+                    } else {
+                        ctx.transfer_secs(task, w.id)
+                    };
+                    ctx.queued_secs(w.id) + t + exec
+                });
+                out.push((w.id, i, est));
+            }
+        }
+        out
+    }
+
+    pub(crate) fn place(
+        task: &ReadyTask,
+        ctx: &SchedCtx,
+        extra: impl Fn(&ReadyTask, usize, usize) -> f64,
+    ) -> Option<(usize, usize, f64)> {
+        let cands = Self::candidates(task, ctx);
+        if cands.is_empty() {
+            return None;
+        }
+        // calibration phase: explore unknown implementations round-robin
+        let unknown: Vec<&(usize, usize, Option<f64>)> =
+            cands.iter().filter(|c| c.2.is_none()).collect();
+        if !unknown.is_empty() {
+            let k = ctx.rr.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let (w, i, _) = *unknown[k % unknown.len()];
+            // charge a neutral guess so parallel pushes spread out
+            let cost = ctx.transfer_secs(task, w) + 1e-3;
+            return Some((w, i, cost));
+        }
+        cands
+            .into_iter()
+            .map(|(w, i, est)| (w, i, est.unwrap() + extra(task, w, i)))
+            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+    }
+}
+
+impl Default for Dmda {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for Dmda {
+    fn push(&self, mut task: ReadyTask, ctx: &SchedCtx) {
+        match Self::place(&task, ctx, |_, _, _| 0.0) {
+            Some((w, i, cost)) => {
+                task.chosen_impl = Some(i);
+                task.est_cost_ns = (cost.max(0.0) * 1e9) as u64;
+                ctx.charge(w, task.est_cost_ns);
+                self.queues.push_to(w, task);
+            }
+            None => self.queues.push_to(0, task), // surfaced as exec error
+        }
+    }
+
+    fn pop(&self, worker: usize, ctx: &SchedCtx, timeout: Duration) -> Option<ReadyTask> {
+        self.queues.pop(worker, ctx, timeout, false)
+    }
+
+    fn queued(&self) -> usize {
+        self.queues.queued()
+    }
+
+    fn name(&self) -> &'static str {
+        "dmda"
+    }
+}

@@ -1,0 +1,72 @@
+//! StarPU "eager": a single shared FIFO; any idle worker takes the first
+//! task it can execute. No model, no data awareness — the baseline the
+//! paper's dmda results implicitly compare against.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::{ReadyTask, SchedCtx, Scheduler};
+
+pub struct Eager {
+    queue: Mutex<VecDeque<ReadyTask>>,
+    cv: Condvar,
+}
+
+impl Eager {
+    pub fn new() -> Eager {
+        Eager {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+impl Default for Eager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for Eager {
+    fn push(&self, task: ReadyTask, _ctx: &SchedCtx) {
+        let mut q = self.queue.lock().unwrap();
+        let pos = q
+            .iter()
+            .position(|t| t.priority < task.priority)
+            .unwrap_or(q.len());
+        q.insert(pos, task);
+        drop(q);
+        self.cv.notify_all();
+    }
+
+    fn pop(&self, worker: usize, ctx: &SchedCtx, timeout: Duration) -> Option<ReadyTask> {
+        let arch = ctx.workers[worker].arch;
+        let mut q = self.queue.lock().unwrap();
+        let deadline = Instant::now() + timeout;
+        loop {
+            // first task this worker can run (not strictly FIFO across
+            // archs, otherwise a CPU-only task at the head starves GPUs)
+            if let Some(pos) = q
+                .iter()
+                .position(|t| !ctx.eligible_impls(t, arch).is_empty())
+            {
+                return q.remove(pos);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (quard, _) = self.cv.wait_timeout(q, deadline - now).unwrap();
+            q = quard;
+        }
+    }
+
+    fn queued(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    fn name(&self) -> &'static str {
+        "eager"
+    }
+}

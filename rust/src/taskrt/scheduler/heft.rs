@@ -1,0 +1,68 @@
+//! HEFT-style policy: dmda's completion estimate plus the write-back
+//! cost of results that will have to return to main memory. For tasks
+//! whose outputs are consumed on the CPU next (the common pattern in the
+//! paper's benchmarks), this penalizes accelerator placement of small
+//! tasks slightly more accurately than plain dmda.
+
+use std::time::Duration;
+
+use super::dmda::Dmda;
+use super::{PerWorkerQueues, ReadyTask, SchedCtx, Scheduler};
+use crate::taskrt::device::transfer_model;
+
+pub struct Heft {
+    queues: PerWorkerQueues,
+}
+
+impl Heft {
+    pub fn new() -> Heft {
+        Heft {
+            queues: PerWorkerQueues::new(),
+        }
+    }
+}
+
+impl Default for Heft {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for Heft {
+    fn push(&self, mut task: ReadyTask, ctx: &SchedCtx) {
+        let writeback = |t: &ReadyTask, w: usize, _i: usize| {
+            let node = ctx.workers[w].mem_node;
+            if node == crate::taskrt::data::MAIN_MEMORY {
+                return 0.0;
+            }
+            let bytes: usize = t
+                .handles
+                .iter()
+                .filter(|(_, m)| m.writes())
+                .map(|(h, _)| ctx.data.byte_size(*h).unwrap_or(0))
+                .sum();
+            transfer_model(bytes)
+        };
+        match Dmda::place(&task, ctx, writeback) {
+            Some((w, i, cost)) => {
+                task.chosen_impl = Some(i);
+                task.est_cost_ns = (cost.max(0.0) * 1e9) as u64;
+                ctx.charge(w, task.est_cost_ns);
+                self.queues.push_to(w, task);
+            }
+            None => self.queues.push_to(0, task),
+        }
+    }
+
+    fn pop(&self, worker: usize, ctx: &SchedCtx, timeout: Duration) -> Option<ReadyTask> {
+        self.queues.pop(worker, ctx, timeout, false)
+    }
+
+    fn queued(&self) -> usize {
+        self.queues.queued()
+    }
+
+    fn name(&self) -> &'static str {
+        "heft"
+    }
+}

@@ -1,0 +1,349 @@
+//! Pluggable scheduling policies — the StarPU scheduler zoo.
+//!
+//! The paper delegates variant selection to StarPU's scheduler (§2.2);
+//! dmda (deque model data aware) is the policy its evaluation exercises.
+//! We implement five policies behind one trait so the ablation benches
+//! can compare selection quality:
+//!
+//! * [`eager::Eager`] — shared FIFO, first compatible worker wins.
+//! * [`random::RandomSched`] — uniform random eligible worker.
+//! * [`ws::WorkStealing`] — per-worker deques + stealing.
+//! * [`dmda::Dmda`] — minimize modeled completion time (exec model +
+//!   transfer model + queued work). The paper's selection mechanism.
+//! * [`heft::Heft`] — dmda plus write-back cost (earliest finish time).
+
+pub mod dmda;
+pub mod eager;
+pub mod heft;
+pub mod random;
+pub mod ws;
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::codelet::{Codelet, ImplKind};
+use super::data::{AccessMode, DataRegistry, HandleId};
+use super::device::{transfer_model, Arch};
+use super::perfmodel::PerfModels;
+use super::task::TaskId;
+use crate::runtime::Manifest;
+use crate::util::rng::Rng;
+
+/// A task that cleared its dependencies and awaits a worker.
+#[derive(Clone)]
+pub struct ReadyTask {
+    pub id: TaskId,
+    pub codelet: Arc<Codelet>,
+    pub size: usize,
+    pub handles: Vec<(HandleId, AccessMode)>,
+    pub force_variant: Option<String>,
+    /// Scheduling priority (higher first within a queue).
+    pub priority: i32,
+    /// Implementation chosen at push time (model-aware policies).
+    pub chosen_impl: Option<usize>,
+    /// Cost the policy charged to the worker's queue (to undo on finish).
+    pub est_cost_ns: u64,
+}
+
+/// Static description of one worker thread.
+#[derive(Debug, Clone)]
+pub struct WorkerInfo {
+    pub id: usize,
+    pub arch: Arch,
+    pub mem_node: usize,
+}
+
+/// Everything a policy may consult when placing a task.
+pub struct SchedCtx {
+    pub workers: Vec<WorkerInfo>,
+    pub perf: Arc<PerfModels>,
+    pub data: Arc<DataRegistry>,
+    pub manifest: Option<Arc<Manifest>>,
+    /// STARPU_CALIBRATE analog: keep forcing exploration.
+    pub calibrate: bool,
+    /// Model transfer costs in placement decisions (dmda's "DA").
+    pub data_aware: bool,
+    /// Modeled ns of work queued per worker (the "deque model").
+    pub queued_ns: Vec<AtomicU64>,
+    /// Round-robin cursor for calibration runs.
+    pub rr: AtomicUsize,
+    pub rng: Mutex<Rng>,
+}
+
+impl SchedCtx {
+    pub fn new(
+        workers: Vec<WorkerInfo>,
+        perf: Arc<PerfModels>,
+        data: Arc<DataRegistry>,
+        manifest: Option<Arc<Manifest>>,
+        calibrate: bool,
+        seed: u64,
+    ) -> SchedCtx {
+        let queued_ns = (0..workers.len()).map(|_| AtomicU64::new(0)).collect();
+        SchedCtx {
+            workers,
+            perf,
+            data,
+            manifest,
+            calibrate,
+            data_aware: true,
+            queued_ns,
+            rr: AtomicUsize::new(0),
+            rng: Mutex::new(Rng::new(seed)),
+        }
+    }
+
+    /// Is implementation `idx` of `task` executable on `arch` right now?
+    /// (arch match + artifact availability + variant pinning).
+    pub fn impl_eligible(&self, task: &ReadyTask, idx: usize, arch: Arch) -> bool {
+        let imp = &task.codelet.impls[idx];
+        if imp.arch != arch {
+            return false;
+        }
+        if let Some(f) = &task.force_variant {
+            if &imp.name != f {
+                return false;
+            }
+        }
+        match &imp.kind {
+            ImplKind::Native(_) => true,
+            ImplKind::Artifact { artifact_variant } => self
+                .manifest
+                .as_ref()
+                .map(|m| {
+                    m.find(&task.codelet.app, artifact_variant, task.size)
+                        .is_some()
+                })
+                .unwrap_or(false),
+        }
+    }
+
+    /// Indices of eligible implementations for `arch`.
+    pub fn eligible_impls(&self, task: &ReadyTask, arch: Arch) -> Vec<usize> {
+        (0..task.codelet.impls.len())
+            .filter(|&i| self.impl_eligible(task, i, arch))
+            .collect()
+    }
+
+    /// Workers with at least one eligible implementation.
+    pub fn eligible_workers(&self, task: &ReadyTask) -> Vec<usize> {
+        self.workers
+            .iter()
+            .filter(|w| !self.eligible_impls(task, w.arch).is_empty())
+            .map(|w| w.id)
+            .collect()
+    }
+
+    /// Modeled bytes that would move if `task` ran on `worker`.
+    pub fn transfer_bytes(&self, task: &ReadyTask, worker: usize) -> usize {
+        let node = self.workers[worker].mem_node;
+        task.handles
+            .iter()
+            .map(|(h, _)| self.data.transfer_bytes(*h, node).unwrap_or(0))
+            .sum()
+    }
+
+    /// Modeled transfer seconds for `task` on `worker` (zero when the
+    /// data-aware term is disabled — the dmda ablation).
+    pub fn transfer_secs(&self, task: &ReadyTask, worker: usize) -> f64 {
+        if !self.data_aware {
+            return 0.0;
+        }
+        transfer_model(self.transfer_bytes(task, worker))
+    }
+
+    /// Perf-model estimate for (task, impl); None = uncalibrated.
+    pub fn exec_estimate(&self, task: &ReadyTask, idx: usize) -> Option<f64> {
+        let imp = &task.codelet.impls[idx];
+        self.perf.estimate(&task.codelet.name, &imp.name, task.size)
+    }
+
+    /// Charge a placement to the deque model.
+    pub fn charge(&self, worker: usize, ns: u64) {
+        self.queued_ns[worker].fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Undo a charge when the task leaves the worker.
+    pub fn discharge(&self, worker: usize, ns: u64) {
+        // saturating: races with charge are harmless for a heuristic
+        let _ = self.queued_ns[worker].fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| Some(v.saturating_sub(ns)),
+        );
+    }
+
+    pub fn queued_secs(&self, worker: usize) -> f64 {
+        self.queued_ns[worker].load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Pick the best-known implementation for a worker that received a
+    /// task without a pre-made choice (eager/random/ws policies):
+    /// uncalibrated variants first (round-robin, to gather samples à la
+    /// STARPU_CALIBRATE), then minimum estimated time.
+    pub fn pick_impl(&self, task: &ReadyTask, arch: Arch) -> Option<usize> {
+        let eligible = self.eligible_impls(task, arch);
+        if eligible.is_empty() {
+            return None;
+        }
+        let unknown: Vec<usize> = eligible
+            .iter()
+            .copied()
+            .filter(|&i| self.exec_estimate(task, i).is_none())
+            .collect();
+        if !unknown.is_empty() {
+            let k = self.rr.fetch_add(1, Ordering::Relaxed);
+            return Some(unknown[k % unknown.len()]);
+        }
+        eligible.into_iter().min_by(|&a, &b| {
+            let ta = self.exec_estimate(task, a).unwrap_or(f64::MAX);
+            let tb = self.exec_estimate(task, b).unwrap_or(f64::MAX);
+            ta.partial_cmp(&tb).unwrap()
+        })
+    }
+}
+
+/// A scheduling policy. `push` is called with ready tasks; workers call
+/// `pop` in a loop (with a timeout so they can observe shutdown).
+pub trait Scheduler: Send + Sync {
+    fn push(&self, task: ReadyTask, ctx: &SchedCtx);
+    fn pop(&self, worker: usize, ctx: &SchedCtx, timeout: Duration) -> Option<ReadyTask>;
+    /// Tasks currently queued (diagnostics).
+    fn queued(&self) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+/// Instantiate a policy by config value.
+pub fn make(policy: super::config::SchedPolicy) -> Box<dyn Scheduler> {
+    use super::config::SchedPolicy::*;
+    match policy {
+        Eager => Box::new(eager::Eager::new()),
+        Random => Box::new(random::RandomSched::new()),
+        WorkStealing => Box::new(ws::WorkStealing::new()),
+        Dmda => Box::new(dmda::Dmda::new()),
+        Heft => Box::new(heft::Heft::new()),
+    }
+}
+
+/// Shared building block: one FIFO per worker with its own lock and
+/// condvar, so a push wakes exactly the target worker and unrelated
+/// workers never contend on one global mutex (§Perf: this halved the
+/// per-task overhead vs the original single-Mutex design).
+pub(crate) struct PerWorkerQueues {
+    lanes: std::sync::RwLock<Vec<Arc<Lane>>>,
+    /// Work-stealing pops wait here so a push anywhere can wake them.
+    any_cv: std::sync::Condvar,
+    any_mx: Mutex<()>,
+}
+
+struct Lane {
+    q: Mutex<std::collections::VecDeque<ReadyTask>>,
+    cv: std::sync::Condvar,
+}
+
+impl PerWorkerQueues {
+    pub fn new() -> PerWorkerQueues {
+        PerWorkerQueues {
+            lanes: std::sync::RwLock::new(Vec::new()),
+            any_cv: std::sync::Condvar::new(),
+            any_mx: Mutex::new(()),
+        }
+    }
+
+    fn lane(&self, n: usize) -> Arc<Lane> {
+        {
+            let lanes = self.lanes.read().unwrap();
+            if let Some(l) = lanes.get(n) {
+                return l.clone();
+            }
+        }
+        let mut lanes = self.lanes.write().unwrap();
+        while lanes.len() <= n {
+            lanes.push(Arc::new(Lane {
+                q: Mutex::new(std::collections::VecDeque::new()),
+                cv: std::sync::Condvar::new(),
+            }));
+        }
+        lanes[n].clone()
+    }
+
+    pub fn push_to(&self, worker: usize, task: ReadyTask) {
+        let lane = self.lane(worker);
+        {
+            let mut q = lane.q.lock().unwrap();
+            // priority order within a queue: insert before the first
+            // lower-priority task (FIFO among equals)
+            let pos = q
+                .iter()
+                .position(|t| t.priority < task.priority)
+                .unwrap_or(q.len());
+            q.insert(pos, task);
+        }
+        lane.cv.notify_one();
+        self.any_cv.notify_all(); // wake stealers (no-op without waiters)
+    }
+
+    /// Pop from own queue front; if empty and `steal`, take from the
+    /// back of the longest other queue whose task this worker can run.
+    pub fn pop(
+        &self,
+        worker: usize,
+        ctx: &SchedCtx,
+        timeout: Duration,
+        steal: bool,
+    ) -> Option<ReadyTask> {
+        let arch = ctx.workers[worker].arch;
+        let lane = self.lane(worker);
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(t) = lane.q.lock().unwrap().pop_front() {
+                return Some(t);
+            }
+            if steal {
+                let lanes: Vec<Arc<Lane>> = self.lanes.read().unwrap().clone();
+                // longest victim queue first
+                let mut victims: Vec<(usize, usize)> = lanes
+                    .iter()
+                    .enumerate()
+                    .filter(|(v, _)| *v != worker)
+                    .map(|(v, l)| (v, l.q.lock().unwrap().len()))
+                    .collect();
+                victims.sort_by_key(|&(_, len)| std::cmp::Reverse(len));
+                for (v, _) in victims {
+                    let mut q = lanes[v].q.lock().unwrap();
+                    // steal only what we can execute
+                    if let Some(pos) =
+                        q.iter().rposition(|t| !ctx.eligible_impls(t, arch).is_empty())
+                    {
+                        return q.remove(pos);
+                    }
+                }
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            if steal {
+                // wait for a push anywhere
+                let g = self.any_mx.lock().unwrap();
+                let _ = self.any_cv.wait_timeout(g, deadline - now).unwrap();
+            } else {
+                let q = lane.q.lock().unwrap();
+                if !q.is_empty() {
+                    continue;
+                }
+                let _ = lane.cv.wait_timeout(q, deadline - now).unwrap();
+            }
+        }
+    }
+
+    pub fn queued(&self) -> usize {
+        self.lanes
+            .read()
+            .unwrap()
+            .iter()
+            .map(|l| l.q.lock().unwrap().len())
+            .sum()
+    }
+}

@@ -1,0 +1,51 @@
+//! StarPU "random": each ready task goes to a uniformly random worker
+//! among those that can execute it. Terrible but cheap — the scheduling
+//! lower bound in the ablations.
+
+use std::time::Duration;
+
+use super::{PerWorkerQueues, ReadyTask, SchedCtx, Scheduler};
+
+pub struct RandomSched {
+    queues: PerWorkerQueues,
+}
+
+impl RandomSched {
+    pub fn new() -> RandomSched {
+        RandomSched {
+            queues: PerWorkerQueues::new(),
+        }
+    }
+}
+
+impl Default for RandomSched {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for RandomSched {
+    fn push(&self, task: ReadyTask, ctx: &SchedCtx) {
+        let eligible = ctx.eligible_workers(&task);
+        if eligible.is_empty() {
+            // leave it to any worker's pop-scan to fail loudly; in
+            // practice submit() pre-validates executability.
+            self.queues.push_to(0, task);
+            return;
+        }
+        let k = ctx.rng.lock().unwrap().below(eligible.len());
+        self.queues.push_to(eligible[k], task);
+    }
+
+    fn pop(&self, worker: usize, ctx: &SchedCtx, timeout: Duration) -> Option<ReadyTask> {
+        self.queues.pop(worker, ctx, timeout, false)
+    }
+
+    fn queued(&self) -> usize {
+        self.queues.queued()
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}

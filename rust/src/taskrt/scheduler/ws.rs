@@ -1,0 +1,52 @@
+//! StarPU "ws" (work stealing): per-worker deques; tasks land round-robin
+//! on eligible workers; idle workers steal from the back of the longest
+//! compatible queue.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use super::{PerWorkerQueues, ReadyTask, SchedCtx, Scheduler};
+
+pub struct WorkStealing {
+    queues: PerWorkerQueues,
+    next: AtomicUsize,
+}
+
+impl WorkStealing {
+    pub fn new() -> WorkStealing {
+        WorkStealing {
+            queues: PerWorkerQueues::new(),
+            next: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Default for WorkStealing {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for WorkStealing {
+    fn push(&self, task: ReadyTask, ctx: &SchedCtx) {
+        let eligible = ctx.eligible_workers(&task);
+        if eligible.is_empty() {
+            self.queues.push_to(0, task);
+            return;
+        }
+        let k = self.next.fetch_add(1, Ordering::Relaxed);
+        self.queues.push_to(eligible[k % eligible.len()], task);
+    }
+
+    fn pop(&self, worker: usize, ctx: &SchedCtx, timeout: Duration) -> Option<ReadyTask> {
+        self.queues.pop(worker, ctx, timeout, true)
+    }
+
+    fn queued(&self) -> usize {
+        self.queues.queued()
+    }
+
+    fn name(&self) -> &'static str {
+        "ws"
+    }
+}

@@ -1,0 +1,248 @@
+//! Tasks and the dependency table.
+//!
+//! A task = one invocation of a codelet on a set of data handles
+//! (StarPU `starpu_task`). Dependencies are implicit, derived from data
+//! access order exactly like StarPU's sequential-consistency mode: the
+//! `DataRegistry` reports which earlier tasks a new access conflicts
+//! with, and the table holds the reverse edges until they resolve.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::codelet::Codelet;
+use super::data::{AccessMode, HandleId};
+
+pub type TaskId = u64;
+
+/// What the application submits.
+#[derive(Clone)]
+pub struct TaskSpec {
+    pub codelet: Arc<Codelet>,
+    /// (handle, mode) per parameter, in declaration order.
+    pub handles: Vec<(HandleId, AccessMode)>,
+    /// Scale parameter for perf models / artifact lookup (paper `size`).
+    pub size: usize,
+    /// Pin to a specific variant name (None = runtime decides — the
+    /// paper's headline feature).
+    pub force_variant: Option<String>,
+    /// Scheduling priority (higher runs earlier among ready tasks;
+    /// StarPU's `starpu_task::priority`).
+    pub priority: i32,
+    /// Explicit dependencies in addition to the implicit data-driven
+    /// ones (StarPU's `starpu_task_declare_deps`).
+    pub after: Vec<TaskId>,
+}
+
+impl TaskSpec {
+    /// Build with the codelet's declared modes.
+    pub fn new(codelet: Arc<Codelet>, handles: Vec<HandleId>, size: usize) -> TaskSpec {
+        assert_eq!(
+            handles.len(),
+            codelet.modes.len(),
+            "codelet {} wants {} parameters, got {}",
+            codelet.name,
+            codelet.modes.len(),
+            handles.len()
+        );
+        let modes = codelet.modes.clone();
+        TaskSpec {
+            codelet,
+            handles: handles.into_iter().zip(modes).collect(),
+            size,
+            force_variant: None,
+            priority: 0,
+            after: Vec::new(),
+        }
+    }
+
+    pub fn with_variant(mut self, v: &str) -> TaskSpec {
+        self.force_variant = Some(v.to_string());
+        self
+    }
+
+    pub fn with_priority(mut self, p: i32) -> TaskSpec {
+        self.priority = p;
+        self
+    }
+
+    /// Explicit ordering: this task runs only after `deps` finish.
+    pub fn after(mut self, deps: &[TaskId]) -> TaskSpec {
+        self.after.extend_from_slice(deps);
+        self
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// Waiting on dependencies.
+    Blocked,
+    /// In a scheduler queue.
+    Ready,
+    /// Executing on a worker.
+    Running,
+    Done,
+    Failed,
+}
+
+pub struct TaskRecord {
+    pub spec: TaskSpec,
+    pub state: TaskState,
+    pub remaining_deps: usize,
+    pub dependents: Vec<TaskId>,
+    pub error: Option<String>,
+}
+
+/// Dependency table. All mutation happens under the runtime's lock.
+#[derive(Default)]
+pub struct TaskTable {
+    next_id: TaskId,
+    pub records: HashMap<TaskId, TaskRecord>,
+}
+
+impl TaskTable {
+    pub fn new() -> TaskTable {
+        Self::default()
+    }
+
+    /// The id the next `insert` will assign.
+    pub fn next_id(&self) -> TaskId {
+        self.next_id
+    }
+
+    /// Insert a new task with its dependency list; returns (id, ready).
+    pub fn insert(&mut self, spec: TaskSpec, deps: &[TaskId]) -> (TaskId, bool) {
+        let id = self.next_id;
+        self.next_id += 1;
+        // Only count deps that are still live and not finished.
+        let mut remaining = 0;
+        for &d in deps {
+            if let Some(rec) = self.records.get_mut(&d) {
+                if rec.state != TaskState::Done && rec.state != TaskState::Failed {
+                    rec.dependents.push(id);
+                    remaining += 1;
+                }
+            }
+        }
+        let ready = remaining == 0;
+        self.records.insert(
+            id,
+            TaskRecord {
+                spec,
+                state: if ready {
+                    TaskState::Ready
+                } else {
+                    TaskState::Blocked
+                },
+                remaining_deps: remaining,
+                dependents: Vec::new(),
+                error: None,
+            },
+        );
+        (id, ready)
+    }
+
+    /// Mark `id` finished; returns dependents that became ready.
+    pub fn complete(&mut self, id: TaskId, error: Option<String>) -> Vec<TaskId> {
+        let dependents = {
+            let rec = self.records.get_mut(&id).expect("unknown task");
+            rec.state = if error.is_some() {
+                TaskState::Failed
+            } else {
+                TaskState::Done
+            };
+            rec.error = error;
+            std::mem::take(&mut rec.dependents)
+        };
+        let mut ready = Vec::new();
+        for d in dependents {
+            if let Some(rec) = self.records.get_mut(&d) {
+                rec.remaining_deps -= 1;
+                if rec.remaining_deps == 0 && rec.state == TaskState::Blocked {
+                    rec.state = TaskState::Ready;
+                    ready.push(d);
+                }
+            }
+        }
+        ready
+    }
+
+    pub fn state(&self, id: TaskId) -> Option<TaskState> {
+        self.records.get(&id).map(|r| r.state)
+    }
+
+    /// First stored error, if any task failed.
+    pub fn first_error(&self) -> Option<String> {
+        self.records
+            .values()
+            .find_map(|r| r.error.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskrt::codelet::Codelet;
+    use crate::taskrt::data::AccessMode;
+
+    fn spec() -> TaskSpec {
+        let c = Arc::new(Codelet::new("t", "matmul", vec![AccessMode::Read]));
+        TaskSpec::new(c, vec![HandleId(0)], 8)
+    }
+
+    #[test]
+    fn no_deps_is_ready() {
+        let mut t = TaskTable::new();
+        let (id, ready) = t.insert(spec(), &[]);
+        assert!(ready);
+        assert_eq!(t.state(id), Some(TaskState::Ready));
+    }
+
+    #[test]
+    fn chain_releases_in_order() {
+        let mut t = TaskTable::new();
+        let (a, _) = t.insert(spec(), &[]);
+        let (b, ready_b) = t.insert(spec(), &[a]);
+        let (c, ready_c) = t.insert(spec(), &[b]);
+        assert!(!ready_b && !ready_c);
+        let freed = t.complete(a, None);
+        assert_eq!(freed, vec![b]);
+        let freed = t.complete(b, None);
+        assert_eq!(freed, vec![c]);
+    }
+
+    #[test]
+    fn diamond_waits_for_both() {
+        let mut t = TaskTable::new();
+        let (a, _) = t.insert(spec(), &[]);
+        let (b, _) = t.insert(spec(), &[]);
+        let (c, ready) = t.insert(spec(), &[a, b]);
+        assert!(!ready);
+        assert!(t.complete(a, None).is_empty());
+        assert_eq!(t.complete(b, None), vec![c]);
+    }
+
+    #[test]
+    fn deps_on_finished_tasks_ignored() {
+        let mut t = TaskTable::new();
+        let (a, _) = t.insert(spec(), &[]);
+        t.complete(a, None);
+        let (_b, ready) = t.insert(spec(), &[a]);
+        assert!(ready, "dependency on a Done task must not block");
+    }
+
+    #[test]
+    fn failure_propagates_error() {
+        let mut t = TaskTable::new();
+        let (a, _) = t.insert(spec(), &[]);
+        t.complete(a, Some("boom".into()));
+        assert_eq!(t.state(a), Some(TaskState::Failed));
+        assert_eq!(t.first_error().as_deref(), Some("boom"));
+    }
+
+    #[test]
+    #[should_panic(expected = "parameters")]
+    fn arity_mismatch_panics() {
+        let c = Arc::new(Codelet::new("t", "x", vec![AccessMode::Read, AccessMode::Write]));
+        TaskSpec::new(c, vec![HandleId(0)], 8);
+    }
+}

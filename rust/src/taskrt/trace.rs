@@ -1,0 +1,143 @@
+//! Execution-trace export — the StarPU FxT/Vite analog, emitting the
+//! chrome://tracing (Trace Event Format) JSON so runs can be inspected
+//! visually: one lane per worker, one complete event per task with the
+//! selected variant and transfer bytes as arguments.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::metrics::TaskResult;
+use super::scheduler::WorkerInfo;
+use crate::util::json::{to_string, Json};
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Build the Trace Event Format JSON value.
+pub fn chrome_trace(results: &[TaskResult], workers: &[WorkerInfo]) -> Json {
+    let mut events = Vec::new();
+    // thread-name metadata per worker lane
+    for w in workers {
+        let mut args = BTreeMap::new();
+        args.insert(
+            "name".into(),
+            s(&format!("worker {} ({})", w.id, w.arch.name())),
+        );
+        let mut ev = BTreeMap::new();
+        ev.insert("ph".into(), s("M"));
+        ev.insert("name".into(), s("thread_name"));
+        ev.insert("pid".into(), num(1.0));
+        ev.insert("tid".into(), num(w.id as f64));
+        ev.insert("args".into(), Json::Obj(args));
+        events.push(Json::Obj(ev));
+    }
+    for r in results {
+        let mut args = BTreeMap::new();
+        args.insert("variant".into(), s(&r.variant));
+        args.insert("size".into(), num(r.size as f64));
+        args.insert("transfer_bytes".into(), num(r.transfer_bytes as f64));
+        args.insert("modeled_exec_us".into(), num(r.modeled_exec * 1e6));
+        args.insert(
+            "modeled_transfer_us".into(),
+            num(r.modeled_transfer * 1e6),
+        );
+        let mut ev = BTreeMap::new();
+        ev.insert("ph".into(), s("X")); // complete event
+        ev.insert("name".into(), s(&format!("{}:{}", r.codelet, r.variant)));
+        ev.insert("cat".into(), s("task"));
+        ev.insert("pid".into(), num(1.0));
+        ev.insert("tid".into(), num(r.worker as f64));
+        ev.insert("ts".into(), num(r.t_start * 1e6)); // µs
+        ev.insert("dur".into(), num(((r.t_end - r.t_start) * 1e6).max(0.01)));
+        ev.insert("args".into(), Json::Obj(args));
+        events.push(Json::Obj(ev));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".into(), Json::Arr(events));
+    root.insert("displayTimeUnit".into(), s("ms"));
+    Json::Obj(root)
+}
+
+/// Write the trace to `path`.
+pub fn export_chrome_trace(
+    results: &[TaskResult],
+    workers: &[WorkerInfo],
+    path: &Path,
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, to_string(&chrome_trace(results, workers)))
+        .with_context(|| format!("writing trace to {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskrt::device::Arch;
+
+    fn sample_result() -> TaskResult {
+        TaskResult {
+            task: 3,
+            codelet: "mmul".into(),
+            variant: "cuda".into(),
+            worker: 1,
+            size: 128,
+            wall: 0.001,
+            modeled_exec: 0.002,
+            modeled_transfer: 0.0005,
+            transfer_bytes: 65536,
+            t_start: 0.01,
+            t_end: 0.011,
+        }
+    }
+
+    fn sample_workers() -> Vec<WorkerInfo> {
+        vec![
+            WorkerInfo {
+                id: 0,
+                arch: Arch::Cpu,
+                mem_node: 0,
+            },
+            WorkerInfo {
+                id: 1,
+                arch: Arch::Cuda,
+                mem_node: 1,
+            },
+        ]
+    }
+
+    #[test]
+    fn trace_structure() {
+        let j = chrome_trace(&[sample_result()], &sample_workers());
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata + 1 task
+        assert_eq!(events.len(), 3);
+        let task = &events[2];
+        assert_eq!(task.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(task.get("tid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            task.get("args").unwrap().get("variant").unwrap().as_str(),
+            Some("cuda")
+        );
+        // serializes to parseable JSON
+        let text = to_string(&j);
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn export_writes_file() {
+        let p = std::env::temp_dir().join(format!("compar_trace_{}.json", std::process::id()));
+        export_chrome_trace(&[sample_result()], &sample_workers(), &p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("traceEvents"));
+        let _ = std::fs::remove_file(&p);
+    }
+}

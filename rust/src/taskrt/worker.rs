@@ -1,0 +1,230 @@
+//! Worker loop: pop a ready task, acquire its data on this device's
+//! memory node (MSI coherence + transfer accounting), execute the chosen
+//! implementation variant for real, attribute modeled device time, feed
+//! the performance model, release dependents.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::codelet::{ExecBuffers, ImplKind};
+use super::config::TimeMode;
+use super::device;
+use super::metrics::TaskResult;
+use super::scheduler::{ReadyTask, WorkerInfo};
+use super::Inner;
+use crate::runtime::Tensor;
+
+pub(crate) fn run(inner: Arc<Inner>, me: WorkerInfo) {
+    loop {
+        let task = inner
+            .sched
+            .pop(me.id, &inner.ctx, inner.config.poll);
+        match task {
+            Some(t) => execute(&inner, &me, t),
+            None => {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn execute(inner: &Arc<Inner>, me: &WorkerInfo, task: ReadyTask) {
+    // NOTE §Perf: the task is not flipped to Running in the table here —
+    // that cost a global table lock per task for purely informational
+    // state; Ready->Done is observationally equivalent for callers.
+    let outcome = execute_body(inner, me, &task);
+
+    // undo the deque-model charge now that the task left the queue
+    if task.est_cost_ns > 0 {
+        inner.ctx.discharge(me.id, task.est_cost_ns);
+    }
+
+    let error = match outcome {
+        Ok(result) => {
+            inner.metrics.record(result);
+            None
+        }
+        Err(e) => {
+            inner.metrics.record_failure();
+            Some(format!("{e:#}"))
+        }
+    };
+
+    // complete + release dependents
+    let ready = {
+        let mut table = inner.tasks.lock().unwrap();
+        table.complete(task.id, error)
+    };
+    for id in ready {
+        push_ready(inner, id);
+    }
+
+    // in-flight accounting for wait_all
+    {
+        let mut inflight = inner.inflight.lock().unwrap();
+        *inflight -= 1;
+        if *inflight == 0 {
+            inner.inflight_cv.notify_all();
+        }
+    }
+}
+
+pub(crate) fn push_ready(inner: &Arc<Inner>, id: super::task::TaskId) {
+    let spec = {
+        let table = inner.tasks.lock().unwrap();
+        table.records.get(&id).map(|r| r.spec.clone())
+    };
+    if let Some(spec) = spec {
+        let rt = ReadyTask {
+            id,
+            codelet: spec.codelet.clone(),
+            size: spec.size,
+            handles: spec.handles.clone(),
+            force_variant: spec.force_variant.clone(),
+            priority: spec.priority,
+            chosen_impl: None,
+            est_cost_ns: 0,
+        };
+        inner.sched.push(rt, &inner.ctx);
+    }
+}
+
+fn execute_body(inner: &Arc<Inner>, me: &WorkerInfo, task: &ReadyTask) -> Result<TaskResult> {
+    let codelet = &task.codelet;
+
+    // choose the implementation (model-aware policies already did)
+    let impl_idx = match task.chosen_impl {
+        Some(i) if inner.ctx.impl_eligible(task, i, me.arch) => i,
+        _ => inner
+            .ctx
+            .pick_impl(task, me.arch)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no implementation of '{}' (size {}) runnable on {} worker {}",
+                    codelet.name,
+                    task.size,
+                    me.arch.name(),
+                    me.id
+                )
+            })?,
+    };
+    let imp = &codelet.impls[impl_idx];
+
+    // acquire data on this memory node (coherence + transfer accounting)
+    let mut transfer_bytes = 0usize;
+    for (h, m) in &task.handles {
+        transfer_bytes += inner.ctx.data.acquire(*h, me.mem_node, *m)?;
+    }
+
+    // execute for real
+    let t_start = inner.epoch.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    match &imp.kind {
+        ImplKind::Native(f) => {
+            let tensors = task
+                .handles
+                .iter()
+                .map(|(h, _)| inner.ctx.data.tensor(*h))
+                .collect::<Result<Vec<_>>>()?;
+            let bufs = ExecBuffers {
+                tensors,
+                modes: task.handles.iter().map(|(_, m)| *m).collect(),
+                size: task.size,
+            };
+            f(&bufs)?;
+        }
+        ImplKind::Artifact { artifact_variant } => {
+            let manifest = inner
+                .manifest
+                .as_ref()
+                .ok_or_else(|| anyhow!("artifact variant without a manifest"))?;
+            let meta = manifest
+                .find(&codelet.app, artifact_variant, task.size)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no artifact {}/{} at size {}",
+                        codelet.app,
+                        artifact_variant,
+                        task.size
+                    )
+                })?
+                .clone();
+            let xla = inner
+                .xla
+                .as_ref()
+                .ok_or_else(|| anyhow!("xla service not running"))?;
+            // inputs = readable parameters, in declaration order
+            let inputs: Vec<Tensor> = task
+                .handles
+                .iter()
+                .filter(|(_, m)| m.reads())
+                .map(|(h, _)| inner.ctx.data.snapshot(*h))
+                .collect::<Result<Vec<_>>>()?;
+            let (outputs, _svc_time) = xla.run(&meta, inputs)?;
+            // outputs map onto writable parameters, in declaration order
+            let writers: Vec<usize> = (0..task.handles.len())
+                .filter(|&i| task.handles[i].1.writes())
+                .collect();
+            if outputs.len() != writers.len() {
+                return Err(anyhow!(
+                    "{}: artifact returned {} outputs for {} writable parameters",
+                    meta.name,
+                    outputs.len(),
+                    writers.len()
+                ));
+            }
+            for (slot, out) in writers.into_iter().zip(outputs) {
+                let (h, _) = task.handles[slot];
+                let storage = inner.ctx.data.tensor(h)?;
+                let mut guard = storage.lock().unwrap();
+                if guard.shape() != out.shape() {
+                    return Err(anyhow!(
+                        "{}: output shape {:?} != handle shape {:?}",
+                        meta.name,
+                        out.shape(),
+                        guard.shape()
+                    ));
+                }
+                *guard = out;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // attribute device time (DESIGN.md §3)
+    let (modeled_exec, modeled_transfer) = match inner.config.time_mode {
+        TimeMode::Modeled => {
+            let base = device::exec_model(&codelet.app, &imp.name, task.size);
+            (
+                inner.noise.apply(base),
+                device::transfer_model(transfer_bytes),
+            )
+        }
+        TimeMode::Wall => (wall, 0.0),
+    };
+
+    // history model learns the *execution* component only; dmda adds
+    // transfer separately at placement time
+    inner
+        .perf
+        .record(&codelet.name, &imp.name, task.size, modeled_exec);
+
+    Ok(TaskResult {
+        task: task.id,
+        codelet: codelet.name.clone(),
+        variant: imp.name.clone(),
+        worker: me.id,
+        size: task.size,
+        wall,
+        modeled_exec,
+        modeled_transfer,
+        transfer_bytes,
+        t_start,
+        t_end: t_start + wall,
+    })
+}

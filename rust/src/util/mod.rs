@@ -1,0 +1,6 @@
+//! Support utilities: hand-rolled JSON (offline image has no serde),
+//! deterministic RNG for workloads, and timing statistics for benches.
+
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,153 @@
+//! Cross-variant numerics: for every app and every available size, all
+//! implementation variants (native seq/omp + jnp/pallas artifacts) must
+//! produce the same result within tolerance. This is the deepest
+//! correctness net in the repo: it catches divergence between the Rust
+//! reimplementations, the jnp oracles and the Pallas kernels after they
+//! went through AOT lowering + PJRT compilation.
+
+use std::sync::Arc;
+
+use compar::apps;
+use compar::runtime::Manifest;
+use compar::taskrt::{Config, Runtime, SchedPolicy};
+
+fn manifest() -> Option<Arc<Manifest>> {
+    let dir = compar::runtime::manifest::default_dir();
+    Manifest::load(&dir).ok().map(Arc::new)
+}
+
+fn runtime(m: &Arc<Manifest>) -> Runtime {
+    Runtime::new(
+        Config {
+            ncpu: 2,
+            ncuda: 1,
+            sched: SchedPolicy::Eager,
+            ..Config::default()
+        },
+        Some(m.clone()),
+    )
+    .unwrap()
+}
+
+/// Variants to exercise per app: all native + all artifact-backed.
+fn all_variants(app: &str) -> Vec<&'static str> {
+    match app {
+        "matmul" => vec!["blas", "omp", "seq", "cuda", "cublas"],
+        _ => vec!["omp", "seq", "cuda"],
+    }
+}
+
+fn sizes_under_test(app: &str, m: &Manifest) -> Vec<usize> {
+    // sizes with a pallas artifact, capped for test runtime
+    m.sizes(app, "pallas")
+        .into_iter()
+        .filter(|&s| s <= 256)
+        .collect()
+}
+
+#[test]
+fn every_variant_agrees_with_reference() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let rt = runtime(&m);
+    for app in apps::ALL {
+        for size in sizes_under_test(app, &m) {
+            for variant in all_variants(app) {
+                let run = apps::run_once(&rt, app, size, 31337, Some(variant), true)
+                    .unwrap_or_else(|e| panic!("{app}/{variant}/{size}: {e:#}"));
+                assert_eq!(&run.variant, variant);
+                assert!(
+                    run.rel_err <= apps::tolerance(app),
+                    "{app}/{variant}/{size}: rel_err {}",
+                    run.rel_err
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_runs_are_deterministic() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let rt = runtime(&m);
+    // same seed => identical outputs, for a native and an artifact variant
+    for variant in ["omp", "cuda"] {
+        let mut outputs = Vec::new();
+        for _ in 0..2 {
+            let inst = apps::prepare(&rt, "hotspot", 64, 777).unwrap();
+            let cl = rt
+                .codelet("hotspot")
+                .unwrap_or_else(|| rt.register_codelet(apps::codelet("hotspot").unwrap()));
+            let spec = compar::taskrt::TaskSpec::new(cl, inst.handles.clone(), 64)
+                .with_variant(variant);
+            rt.submit(spec).unwrap();
+            rt.wait_all().unwrap();
+            outputs.push(rt.snapshot(apps::output_handle(&inst)).unwrap());
+        }
+        assert_eq!(
+            outputs[0], outputs[1],
+            "{variant}: nondeterministic output"
+        );
+    }
+}
+
+#[test]
+fn matmul_blas_and_cublas_share_numerics() {
+    // blas (jnp on cpu) and cublas (pallas on gpu) must agree: they run
+    // through different devices and different kernels
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let rt = runtime(&m);
+    let mut results = Vec::new();
+    for variant in ["blas", "cublas"] {
+        let inst = apps::prepare(&rt, "matmul", 128, 2024).unwrap();
+        let cl = rt
+            .codelet("mmul")
+            .unwrap_or_else(|| rt.register_codelet(apps::codelet("matmul").unwrap()));
+        let spec =
+            compar::taskrt::TaskSpec::new(cl, inst.handles.clone(), 128).with_variant(variant);
+        rt.submit(spec).unwrap();
+        rt.wait_all().unwrap();
+        results.push(rt.snapshot(apps::output_handle(&inst)).unwrap());
+    }
+    let err = results[0].rel_l2_error(&results[1]);
+    assert!(err < 1e-5, "blas vs cublas rel err {err}");
+}
+
+#[test]
+fn mixed_app_stream_on_one_runtime() {
+    // interleave tasks of all apps in one runtime instance — exercises
+    // codelet registry, manifest lookups and scheduler fairness together
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let rt = runtime(&m);
+    let stream: Vec<(&str, usize)> = vec![
+        ("matmul", 64),
+        ("hotspot", 64),
+        ("sort", 256),
+        ("matmul", 128),
+        ("nw", 63),
+        ("lud", 64),
+        ("hotspot3d", 64),
+        ("sort", 1024),
+    ];
+    for (i, (app, size)) in stream.iter().enumerate() {
+        apps::run_once(&rt, app, *size, 400 + i as u64, None, true)
+            .unwrap_or_else(|e| panic!("{app}: {e:#}"));
+    }
+    assert_eq!(
+        rt.metrics()
+            .tasks_executed
+            .load(std::sync::atomic::Ordering::Relaxed),
+        stream.len()
+    );
+}

@@ -1,0 +1,105 @@
+//! End-to-end artifact execution: manifest -> PJRT compile -> execute ->
+//! numerics vs native Rust reference. Requires `make artifacts`.
+
+use compar::runtime::{Manifest, Tensor, XlaEngine, XlaService};
+use compar::util::rng::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    compar::runtime::manifest::default_dir()
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Naive f32 matmul for checking artifact numerics.
+fn matmul_ref(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            for j in 0..n {
+                c[i * n + j] += aik * b[k * n + j];
+            }
+        }
+    }
+    c
+}
+
+#[test]
+fn matmul_jnp_artifact_matches_reference() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    let meta = m.find("matmul", "jnp", 64).expect("matmul_jnp_64 artifact");
+    let mut engine = XlaEngine::new().unwrap();
+    let mut rng = Rng::new(42);
+    let a = rng.vec_f32(64 * 64, -1.0, 1.0);
+    let b = rng.vec_f32(64 * 64, -1.0, 1.0);
+    let out = engine
+        .run(
+            meta,
+            &[
+                Tensor::matrix(64, 64, a.clone()),
+                Tensor::matrix(64, 64, b.clone()),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    let want = matmul_ref(&a, &b, 64);
+    let got = out[0].data();
+    let max_diff = want
+        .iter()
+        .zip(got)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "max diff {max_diff}");
+}
+
+#[test]
+fn pallas_and_jnp_variants_agree() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    let mut engine = XlaEngine::new().unwrap();
+    let mut rng = Rng::new(7);
+    for size in [64usize, 128] {
+        let jnp = m.find("matmul", "jnp", size).unwrap();
+        let pal = m.find("matmul", "pallas", size).unwrap();
+        let a = Tensor::matrix(size, size, rng.vec_f32(size * size, -1.0, 1.0));
+        let b = Tensor::matrix(size, size, rng.vec_f32(size * size, -1.0, 1.0));
+        let o1 = engine.run(jnp, &[a.clone(), b.clone()]).unwrap();
+        let o2 = engine.run(pal, &[a, b]).unwrap();
+        let diff = o1[0].max_abs_diff(&o2[0]);
+        assert!(diff < 1e-3, "size {size}: pallas vs jnp diff {diff}");
+    }
+}
+
+#[test]
+fn service_thread_executes() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    let svc = XlaService::spawn().unwrap();
+    let meta = m.find("sort", "jnp", 256).unwrap().clone();
+    let handle = svc.handle();
+    let mut rng = Rng::new(3);
+    let input = Tensor::vector(rng.vec_f32(256, -10.0, 10.0));
+    // run from two threads to exercise the channel protocol
+    let h2 = handle.clone();
+    let m2 = meta.clone();
+    let i2 = input.clone();
+    let t = std::thread::spawn(move || h2.run(&m2, vec![i2]).unwrap());
+    let (out, dur) = handle.run(&meta, vec![input]).unwrap();
+    let (out2, _) = t.join().unwrap();
+    assert!(dur.as_nanos() > 0);
+    let sorted = out[0].data();
+    assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "not sorted");
+    assert_eq!(out[0].data(), out2[0].data());
+}

@@ -1,0 +1,161 @@
+//! Pre-compiler integration: full pipeline over the paper's Listing 1.3
+//! and the bundled benchmark sources; CLI-equivalent flows; backward
+//! compatibility of the transformed source.
+
+use compar::bench_harness::{bundled_sources, table1f};
+use compar::compar::{analyze, compile};
+
+/// The paper's Listing 1.3, reconstructed in full.
+const LISTING_1_3: &str = r#"
+#pragma compar include
+
+#pragma compar method_declare interface(sort) target(cuda) name(sort_cuda)
+#pragma compar parameter name(arr) type(float*) size(N) access_mode(readwrite)
+#pragma compar parameter name(N) type(int)
+void sort_cuda(float* arr, int N) {}
+
+#pragma compar method_declare interface(sort) target(openmp) name(sort_omp)
+void sort_omp(float* arr, int N) {}
+
+#pragma compar method_declare interface(mmul) target(cuda) name(mmul_cuda)
+#pragma compar parameter name(A) type(float*) size(N, M) access_mode(read)
+#pragma compar parameter name(B) type(float*) size(N, M) access_mode(read)
+#pragma compar parameter name(N) type(int)
+#pragma compar parameter name(M) type(int)
+void mmul_cuda(float* A, float* B, int N, int M) {}
+
+#pragma compar method_declare interface(mmul) target(openmp) name(mmul_omp)
+void mmul_omp(float* A, float* B, int N, int M) {}
+
+int main(int argc, char **argv) {
+#pragma compar initialize
+    sort(arr, N);
+    mmul(A, B, N, M);
+#pragma compar terminate
+}
+"#;
+
+#[test]
+fn listing_1_3_full_pipeline() {
+    let out = compile(LISTING_1_3, "listing13.c").unwrap();
+    // two interfaces -> two generated C units (paper: "separate code
+    // files ... for each defined interface")
+    assert_eq!(out.c_units.len(), 2);
+    let names: Vec<&str> = out.c_units.iter().map(|(n, _)| n.as_str()).collect();
+    assert!(names.contains(&"compar_sort.c"));
+    assert!(names.contains(&"compar_mmul.c"));
+
+    // sort glue: Listing 1.4 structure
+    let sort_glue = &out.c_units.iter().find(|(n, _)| n == "compar_sort.c").unwrap().1;
+    assert!(sort_glue.contains("extern void sort_cuda(float* arr, int N);"));
+    assert!(sort_glue.contains(".cuda_funcs = { sort_cuda_wrapper }"));
+    assert!(sort_glue.contains(".cpu_funcs = { sort_omp_wrapper }"));
+
+    // mmul glue: matrix registration for A and B
+    let mmul_glue = &out.c_units.iter().find(|(n, _)| n == "compar_mmul.c").unwrap().1;
+    assert!(mmul_glue.contains("starpu_matrix_data_register(&A_handle"));
+    assert!(mmul_glue.contains("starpu_matrix_data_register(&B_handle"));
+    assert!(mmul_glue.contains(".modes = { STARPU_R, STARPU_R }"));
+
+    // header declares both entry points
+    assert!(out.header.contains("void sort(float* arr, int N);"));
+    assert!(out.header.contains("void mmul(float* A, float* B, int N, int M);"));
+
+    // transformed source: directives replaced, C code untouched
+    assert!(out.transformed.contains("#include \"compar.h\""));
+    assert!(out.transformed.contains("compar_init();"));
+    assert!(out.transformed.contains("compar_terminate();"));
+    assert!(out.transformed.contains("sort(arr, N);"));
+    assert!(!out.transformed.contains("#pragma compar"));
+
+    // rust glue registers both codelets
+    assert!(out.rust_glue.contains("Codelet::new(\"sort\""));
+    assert!(out.rust_glue.contains("Codelet::new(\"mmul\""));
+}
+
+#[test]
+fn backward_compatibility_directives_are_pragmas() {
+    // Paper §2.1: unprocessed COMPAR directives must not change the code.
+    // Every directive line must be a #pragma (ignored by C compilers
+    // that do not know the namespace).
+    for line in LISTING_1_3.lines() {
+        if line.contains("compar") && line.trim_start().starts_with('#') {
+            assert!(line.trim_start().starts_with("#pragma compar"));
+        }
+    }
+}
+
+#[test]
+fn all_bundled_sources_analyze_and_generate() {
+    for (app, src, file) in bundled_sources() {
+        let program = analyze(&src, &file).unwrap_or_else(|e| panic!("{app}: {e:#}"));
+        assert!(
+            !program.interfaces.is_empty(),
+            "{app}: no interfaces found"
+        );
+        for iface in &program.interfaces {
+            assert!(
+                iface.variants.len() >= 2,
+                "{app}/{}: fewer than 2 variants",
+                iface.name
+            );
+            assert!(!iface.params.is_empty());
+        }
+    }
+}
+
+#[test]
+fn table1f_ordering_holds() {
+    // the paper's programmability claim: COMPAR directives << generated
+    // (== hand-written StarPU) glue, for every app
+    let rows = table1f::measure(&bundled_sources()).unwrap();
+    assert_eq!(rows.len(), 6);
+    for r in &rows {
+        assert!(
+            r.compar_directives * 3 < r.generated_glue,
+            "{}: directives {} vs glue {}",
+            r.app,
+            r.compar_directives,
+            r.generated_glue
+        );
+        // and our directive counts are in the same regime as the paper's
+        // COMPAR numbers (single digits to low tens)
+        assert!(r.compar_directives >= 5 && r.compar_directives <= 30, "{}", r.app);
+    }
+}
+
+#[test]
+fn diagnostics_carry_locations() {
+    let bad = "#pragma compar method_declare interface(f) target(vulkan) name(f1)\n";
+    let err = format!("{:#}", analyze(bad, "bad.c").unwrap_err());
+    assert!(err.contains("unknown target 'vulkan'"));
+    assert!(err.contains("bad.c:1:"), "missing location: {err}");
+}
+
+#[test]
+fn cli_compile_writes_files() {
+    let dir = std::env::temp_dir().join(format!("compar_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let src_path = dir.join("app.compar.c");
+    std::fs::write(&src_path, LISTING_1_3).unwrap();
+    let exe = env!("CARGO_BIN_EXE_compar");
+    let out = std::process::Command::new(exe)
+        .args([
+            "compile",
+            src_path.to_str().unwrap(),
+            "--out-dir",
+            dir.join("gen").to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(dir.join("gen/compar_sort.c").exists());
+    assert!(dir.join("gen/compar_mmul.c").exists());
+    assert!(dir.join("gen/compar.h").exists());
+    assert!(dir.join("gen/compar_glue.rs").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,437 @@
+//! Property-based tests (hand-rolled quickcheck style — proptest is not
+//! available offline): randomized inputs over the coordinator's
+//! invariants — routing/eligibility, dependency ordering, coherence
+//! state, perf-model math, JSON round-trips, and the pre-compiler's
+//! passthrough guarantee.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use compar::runtime::Tensor;
+use compar::taskrt::{AccessMode, Arch, Codelet, Config, Runtime, SchedPolicy, TaskSpec};
+use compar::util::json::{self, Json};
+use compar::util::rng::Rng;
+
+const CASES: usize = 64;
+
+/// Random JSON value generator for round-trip fuzzing.
+fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num((rng.next_f32() * 1e6).round() as f64 / 64.0),
+        3 => {
+            let len = rng.below(12);
+            let s: String = (0..len)
+                .map(|_| {
+                    // printable ascii + some escapes + some unicode
+                    match rng.below(10) {
+                        0 => '"',
+                        1 => '\\',
+                        2 => '\n',
+                        3 => 'π',
+                        _ => (b'a' + rng.below(26) as u8) as char,
+                    }
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => {
+            let len = rng.below(5);
+            Json::Arr((0..len).map(|_| gen_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let len = rng.below(5);
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..len {
+                m.insert(format!("k{i}"), gen_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    let mut rng = Rng::new(0x1a50);
+    for _ in 0..CASES * 4 {
+        let v = gen_json(&mut rng, 3);
+        let s = json::to_string(&v);
+        let back = json::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
+        assert_eq!(v, back, "roundtrip failed for {s}");
+    }
+}
+
+#[test]
+fn prop_dependency_order_respected() {
+    // Random interleavings of reads/writes on a handful of handles must
+    // execute in an order consistent with sequential consistency:
+    // writers see all prior accesses' effects. We verify with a counter
+    // tensor: each write task increments, each read task records.
+    let mut rng = Rng::new(42);
+    for _ in 0..8 {
+        let rt = Runtime::new(
+            Config {
+                ncpu: 3,
+                ncuda: 0,
+                sched: SchedPolicy::WorkStealing,
+                ..Config::default()
+            },
+            None,
+        )
+        .unwrap();
+        let observed = Arc::new(Mutex::new(Vec::<(usize, f32)>::new()));
+        let obs2 = observed.clone();
+        let write_cl = rt.register_codelet(
+            Codelet::new("w", "sort", vec![AccessMode::ReadWrite]).with_native(
+                "omp",
+                Arch::Cpu,
+                Arc::new(|b| {
+                    b.write(0).data_mut()[0] += 1.0;
+                    Ok(())
+                }),
+            ),
+        );
+        let seq = Arc::new(AtomicUsize::new(0));
+        let seq2 = seq.clone();
+        let read_cl = rt.register_codelet(
+            Codelet::new("r", "sort", vec![AccessMode::Read]).with_native(
+                "omp",
+                Arch::Cpu,
+                Arc::new(move |b| {
+                    let v = b.read(0).data()[0];
+                    let k = seq2.fetch_add(1, Ordering::SeqCst);
+                    obs2.lock().unwrap().push((k, v));
+                    Ok(())
+                }),
+            ),
+        );
+        let h = rt.register_data(Tensor::vector(vec![0.0]));
+        let mut writes_before: Vec<f32> = Vec::new();
+        let mut nwrites = 0.0f32;
+        for _ in 0..30 {
+            if rng.below(2) == 0 {
+                rt.submit(TaskSpec::new(write_cl.clone(), vec![h], 1)).unwrap();
+                nwrites += 1.0;
+            } else {
+                rt.submit(TaskSpec::new(read_cl.clone(), vec![h], 1)).unwrap();
+                writes_before.push(nwrites);
+            }
+        }
+        rt.wait_all().unwrap();
+        // each read must observe exactly the number of writes submitted
+        // before it (sequential consistency)
+        let mut obs = observed.lock().unwrap().clone();
+        obs.sort_by_key(|(k, _)| *k);
+        // reads between the same writes may complete in any relative
+        // order; collect observed values as a multiset
+        let mut got: Vec<f32> = obs.iter().map(|(_, v)| *v).collect();
+        let mut want = writes_before.clone();
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, want);
+        assert_eq!(rt.snapshot(h).unwrap().data()[0], nwrites);
+    }
+}
+
+#[test]
+fn prop_msi_coherence_never_loses_data() {
+    // random acquire sequences across 3 nodes: after any prefix, at
+    // least one node holds a valid copy, and a read on any node after a
+    // write sees the written value (single-tensor model).
+    let mut rng = Rng::new(7);
+    for _ in 0..CASES {
+        let reg = compar::taskrt::DataRegistry::new();
+        let h = reg.register(Tensor::vector(vec![1.0]));
+        for _ in 0..20 {
+            let node = rng.below(3);
+            let mode = match rng.below(3) {
+                0 => AccessMode::Read,
+                1 => AccessMode::Write,
+                _ => AccessMode::ReadWrite,
+            };
+            reg.acquire(h, node, mode).unwrap();
+            let valid = reg.valid_nodes(h).unwrap();
+            assert!(!valid.is_empty(), "no valid copy left");
+            if mode.writes() {
+                assert_eq!(valid, vec![node], "write must invalidate others");
+            } else {
+                assert!(valid.contains(&node));
+            }
+            // transfer_bytes is 0 iff resident
+            for n in 0..3 {
+                let tb = reg.transfer_bytes(h, n).unwrap();
+                assert_eq!(tb == 0, valid.contains(&n));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_perfmodel_regression_recovers_exponent() {
+    // for random power laws t = a*n^b, the fitted exponent is close
+    let mut rng = Rng::new(99);
+    for _ in 0..CASES {
+        let a = 10f64.powf(-9.0 + 3.0 * rng.next_f32() as f64);
+        let b = 1.0 + 2.5 * rng.next_f32() as f64;
+        let mut m = compar::taskrt::perfmodel::VariantModel::default();
+        for n in [32usize, 64, 128, 256, 512] {
+            for _ in 0..3 {
+                m.record(n, a * (n as f64).powf(b));
+            }
+        }
+        let (fa, fb) = m.regression().unwrap();
+        assert!((fb - b).abs() < 0.02, "exponent {fb} vs {b}");
+        assert!((fa - a).abs() / a < 0.1, "coeff {fa} vs {a}");
+    }
+}
+
+#[test]
+fn prop_scheduler_eligibility_is_safe() {
+    // whatever the scheduler does, the executed variant must be
+    // arch-compatible and honor force_variant
+    let mut rng = Rng::new(5);
+    for &sched in &[
+        SchedPolicy::Eager,
+        SchedPolicy::Random,
+        SchedPolicy::WorkStealing,
+        SchedPolicy::Dmda,
+        SchedPolicy::Heft,
+    ] {
+        let rt = Runtime::new(
+            Config {
+                ncpu: 2,
+                ncuda: 0,
+                sched,
+                ..Config::default()
+            },
+            None,
+        )
+        .unwrap();
+        let cl = rt.register_codelet(
+            Codelet::new("multi", "sort", vec![AccessMode::Read])
+                .with_native("omp", Arch::Cpu, Arc::new(|_| Ok(())))
+                .with_native("seq", Arch::Cpu, Arc::new(|_| Ok(()))),
+        );
+        for _ in 0..20 {
+            let h = rt.register_data(Tensor::vector(vec![0.0]));
+            let forced = match rng.below(3) {
+                0 => Some("omp"),
+                1 => Some("seq"),
+                _ => None,
+            };
+            let mut spec = TaskSpec::new(cl.clone(), vec![h], 1);
+            if let Some(f) = forced {
+                spec = spec.with_variant(f);
+            }
+            rt.submit(spec).unwrap();
+            rt.wait_all().unwrap();
+            let r = rt.drain_results().pop().unwrap();
+            if let Some(f) = forced {
+                assert_eq!(r.variant, f, "{sched:?} ignored forced variant");
+            }
+            assert!(r.variant == "omp" || r.variant == "seq");
+        }
+    }
+}
+
+#[test]
+fn prop_precompiler_passthrough_is_lossless() {
+    // random C-ish sources with NO compar directives must transform to
+    // themselves
+    let mut rng = Rng::new(12);
+    let fragments = [
+        "int x = 42;",
+        "/* comment with #pragma omp */",
+        "#pragma omp parallel for",
+        "void f() { g(); }",
+        "  indented();",
+        "#include <stdio.h>",
+        "char *s = \"#pragma compar in a string\";",
+        "",
+    ];
+    for _ in 0..CASES {
+        let n = 1 + rng.below(12);
+        let src: String = (0..n)
+            .map(|_| fragments[rng.below(fragments.len())])
+            .collect::<Vec<_>>()
+            .join("\n")
+            + "\n";
+        let out = compar::compar::codegen::c_glue::transform_source(&src);
+        assert_eq!(out, src, "passthrough altered plain source");
+    }
+}
+
+#[test]
+fn prop_tensor_error_metrics_sane() {
+    let mut rng = Rng::new(31);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(64);
+        let data = rng.vec_f32(n, -10.0, 10.0);
+        let t = Tensor::vector(data.clone());
+        // self-distance is zero
+        assert_eq!(t.max_abs_diff(&t), 0.0);
+        assert!(t.rel_l2_error(&t) < 1e-9);
+        // perturbation is detected
+        let mut d2 = data;
+        let k = rng.below(n);
+        d2[k] += 1.0;
+        let t2 = Tensor::vector(d2);
+        assert!(t.max_abs_diff(&t2) >= 1.0);
+    }
+}
+
+#[test]
+fn prop_generated_directive_programs_always_compile() {
+    // grammar-directed generator: every syntactically valid program the
+    // generator emits must pass the full front-end + codegen
+    let mut rng = Rng::new(2718);
+    let targets = ["cuda", "openmp", "seq", "opencl", "blas", "cublas"];
+    let types = ["int", "float*", "double*", "char"];
+    let modes = ["read", "write", "readwrite"];
+    for case in 0..CASES {
+        let mut src = String::from("#pragma compar include\n");
+        let n_ifaces = 1 + rng.below(4);
+        for f in 0..n_ifaces {
+            let n_params = 1 + rng.below(4);
+            let n_variants = 1 + rng.below(3);
+            // variants must have distinct targets-names
+            for v in 0..n_variants {
+                let tgt = targets[(v + rng.below(2)) % targets.len()];
+                src.push_str(&format!(
+                    "#pragma compar method_declare interface(f{f}) target({tgt}) name(f{f}_v{v})\n"
+                ));
+                if v == 0 {
+                    for p in 0..n_params {
+                        let ty = types[rng.below(types.len())];
+                        let dims = if ty.ends_with('*') {
+                            let d = 1 + rng.below(4);
+                            let names: Vec<String> =
+                                (0..d).map(|k| format!("D{k}")).collect();
+                            format!(" size({})", names.join(", "))
+                        } else {
+                            String::new()
+                        };
+                        let m = modes[rng.below(modes.len())];
+                        src.push_str(&format!(
+                            "#pragma compar parameter name(p{p}) type({ty}){dims} access_mode({m})\n"
+                        ));
+                    }
+                }
+            }
+        }
+        src.push_str("#pragma compar initialize\n#pragma compar terminate\n");
+        let out = compar::compar::compile(&src, "gen.c")
+            .unwrap_or_else(|e| panic!("case {case}:\n{src}\n{e:#}"));
+        assert_eq!(out.c_units.len(), n_ifaces);
+    }
+}
+
+#[test]
+fn prop_priority_order_on_single_worker() {
+    // with one worker and a blocked queue, strictly higher-priority
+    // tasks must run before lower ones
+    let rt = Runtime::new(
+        Config {
+            ncpu: 1,
+            ncuda: 0,
+            sched: SchedPolicy::Dmda,
+            ..Config::default()
+        },
+        None,
+    )
+    .unwrap();
+    let order = Arc::new(Mutex::new(Vec::new()));
+    let o2 = order.clone();
+    let gate = Arc::new(Mutex::new(()));
+    let cl = rt.register_codelet(
+        Codelet::new("ordered", "sort", vec![AccessMode::Read]).with_native(
+            "omp",
+            Arch::Cpu,
+            Arc::new(move |b| {
+                o2.lock().unwrap().push(b.size);
+                Ok(())
+            }),
+        ),
+    );
+    // hold the worker with a sleeper so the queue builds up
+    let guard = gate.lock().unwrap();
+    let g2 = gate.clone();
+    let sleeper = rt.register_codelet(
+        Codelet::new("sleeper", "sort", vec![AccessMode::Read]).with_native(
+            "omp",
+            Arch::Cpu,
+            Arc::new(move |_| {
+                drop(g2.lock().unwrap());
+                Ok(())
+            }),
+        ),
+    );
+    let h = rt.register_data(Tensor::vector(vec![0.0]));
+    rt.submit(TaskSpec::new(sleeper, vec![h], 0)).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    // enqueue in mixed priority order while the worker is blocked
+    let mut rng = Rng::new(4);
+    let mut expect: Vec<(i32, usize)> = Vec::new();
+    for i in 0..12 {
+        let h = rt.register_data(Tensor::vector(vec![0.0]));
+        let pri = rng.below(3) as i32;
+        rt.submit(
+            TaskSpec::new(cl.clone(), vec![h], 100 + i).with_priority(pri),
+        )
+        .unwrap();
+        expect.push((pri, 100 + i));
+    }
+    drop(guard); // release the worker
+    rt.wait_all().unwrap();
+    let got = order.lock().unwrap().clone();
+    // expected: stable sort by descending priority
+    let mut want = expect.clone();
+    want.sort_by_key(|(p, _)| std::cmp::Reverse(*p));
+    let want: Vec<usize> = want.into_iter().map(|(_, s)| s).collect();
+    assert_eq!(got, want, "priority order violated");
+}
+
+#[test]
+fn prop_explicit_deps_compose_with_implicit() {
+    let mut rng = Rng::new(77);
+    for _ in 0..6 {
+        let rt = Runtime::new(
+            Config {
+                ncpu: 2,
+                ncuda: 0,
+                sched: SchedPolicy::WorkStealing,
+                ..Config::default()
+            },
+            None,
+        )
+        .unwrap();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let l2 = log.clone();
+        let cl = rt.register_codelet(
+            Codelet::new("dep", "sort", vec![AccessMode::Read]).with_native(
+                "omp",
+                Arch::Cpu,
+                Arc::new(move |b| {
+                    l2.lock().unwrap().push(b.size);
+                    Ok(())
+                }),
+            ),
+        );
+        // chain of explicit deps over INDEPENDENT data
+        let mut prev: Option<compar::taskrt::TaskId> = None;
+        let n = 5 + rng.below(10);
+        for i in 0..n {
+            let h = rt.register_data(Tensor::vector(vec![0.0]));
+            let mut spec = TaskSpec::new(cl.clone(), vec![h], i);
+            if let Some(p) = prev {
+                spec = spec.after(&[p]);
+            }
+            prev = Some(rt.submit(spec).unwrap());
+        }
+        rt.wait_all().unwrap();
+        let got = log.lock().unwrap().clone();
+        let want: Vec<usize> = (0..n).collect();
+        assert_eq!(got, want, "explicit dependency chain violated");
+    }
+}

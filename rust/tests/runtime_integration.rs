@@ -1,0 +1,280 @@
+//! Integration tests over the full taskrt runtime: workers, schedulers,
+//! dependencies, coherence, perf-model learning, and artifact-backed
+//! variants (require `make artifacts`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use compar::apps;
+use compar::runtime::{Manifest, Tensor};
+use compar::taskrt::{
+    AccessMode, Arch, Codelet, Config, Runtime, SchedPolicy, TaskSpec, TimeMode,
+};
+
+fn manifest() -> Option<Arc<Manifest>> {
+    let dir = compar::runtime::manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Arc::new(Manifest::load(&dir).unwrap()))
+    } else {
+        None
+    }
+}
+
+fn cpu_runtime(sched: SchedPolicy) -> Runtime {
+    let cfg = Config {
+        ncpu: 2,
+        ncuda: 0,
+        sched,
+        ..Config::default()
+    };
+    Runtime::new(cfg, None).unwrap()
+}
+
+#[test]
+fn native_task_executes_and_completes() {
+    let rt = cpu_runtime(SchedPolicy::Eager);
+    let counter = Arc::new(AtomicUsize::new(0));
+    let c2 = counter.clone();
+    let cl = rt.register_codelet(
+        Codelet::new("count", "sort", vec![AccessMode::ReadWrite]).with_native(
+            "omp",
+            Arch::Cpu,
+            Arc::new(move |bufs| {
+                c2.fetch_add(1, Ordering::SeqCst);
+                bufs.write(0).data_mut()[0] += 1.0;
+                Ok(())
+            }),
+        ),
+    );
+    let h = rt.register_data(Tensor::vector(vec![0.0]));
+    for _ in 0..10 {
+        rt.submit(TaskSpec::new(cl.clone(), vec![h], 1)).unwrap();
+    }
+    rt.wait_all().unwrap();
+    assert_eq!(counter.load(Ordering::SeqCst), 10);
+    // RW chain => strictly sequential increments
+    assert_eq!(rt.snapshot(h).unwrap().data()[0], 10.0);
+}
+
+#[test]
+fn implicit_dependencies_serialize_rw_chain() {
+    let rt = cpu_runtime(SchedPolicy::WorkStealing);
+    let cl = rt.register_codelet(
+        Codelet::new("mul2", "sort", vec![AccessMode::ReadWrite]).with_native(
+            "omp",
+            Arch::Cpu,
+            Arc::new(|bufs| {
+                let mut t = bufs.write(0);
+                for x in t.data_mut() {
+                    *x *= 2.0;
+                }
+                Ok(())
+            }),
+        ),
+    );
+    let h = rt.register_data(Tensor::vector(vec![1.0]));
+    for _ in 0..8 {
+        rt.submit(TaskSpec::new(cl.clone(), vec![h], 1)).unwrap();
+    }
+    rt.wait_all().unwrap();
+    assert_eq!(rt.snapshot(h).unwrap().data()[0], 256.0);
+}
+
+#[test]
+fn all_schedulers_run_a_batch() {
+    for sched in [
+        SchedPolicy::Eager,
+        SchedPolicy::Random,
+        SchedPolicy::WorkStealing,
+        SchedPolicy::Dmda,
+        SchedPolicy::Heft,
+    ] {
+        let rt = cpu_runtime(sched);
+        let cl = rt.register_codelet(
+            Codelet::new("noop", "sort", vec![AccessMode::Read]).with_native(
+                "omp",
+                Arch::Cpu,
+                Arc::new(|_| Ok(())),
+            ),
+        );
+        // independent data => parallelism allowed
+        for _ in 0..20 {
+            let h = rt.register_data(Tensor::vector(vec![0.0]));
+            rt.submit(TaskSpec::new(cl.clone(), vec![h], 1)).unwrap();
+        }
+        rt.wait_all()
+            .unwrap_or_else(|e| panic!("{:?} failed: {e}", sched));
+        assert_eq!(
+            rt.metrics().tasks_executed.load(Ordering::Relaxed),
+            20,
+            "{sched:?}"
+        );
+    }
+}
+
+#[test]
+fn failing_task_reports_error() {
+    let rt = cpu_runtime(SchedPolicy::Eager);
+    let cl = rt.register_codelet(
+        Codelet::new("boom", "sort", vec![AccessMode::Read]).with_native(
+            "omp",
+            Arch::Cpu,
+            Arc::new(|_| anyhow::bail!("deliberate failure")),
+        ),
+    );
+    let h = rt.register_data(Tensor::vector(vec![0.0]));
+    rt.submit(TaskSpec::new(cl, vec![h], 1)).unwrap();
+    let err = rt.wait_all().unwrap_err();
+    assert!(format!("{err:#}").contains("deliberate failure"));
+}
+
+#[test]
+fn submit_rejects_impossible_tasks() {
+    // CPU-only runtime, CUDA-only codelet
+    let rt = cpu_runtime(SchedPolicy::Dmda);
+    let cl = rt.register_codelet(
+        Codelet::new("gpu_only", "matmul", vec![AccessMode::Read]).with_artifact(
+            "cuda",
+            Arch::Cuda,
+            "jnp",
+        ),
+    );
+    let h = rt.register_data(Tensor::vector(vec![0.0]));
+    assert!(rt.submit(TaskSpec::new(cl, vec![h], 64)).is_err());
+}
+
+#[test]
+fn perf_models_learn_from_execution() {
+    let rt = cpu_runtime(SchedPolicy::Dmda);
+    let cl = rt.register_codelet(
+        Codelet::new("mmul", "matmul", vec![AccessMode::Read]).with_native(
+            "omp",
+            Arch::Cpu,
+            Arc::new(|_| Ok(())),
+        ),
+    );
+    for _ in 0..5 {
+        let h = rt.register_data(Tensor::vector(vec![0.0; 64]));
+        rt.submit(TaskSpec::new(cl.clone(), vec![h], 64)).unwrap();
+    }
+    rt.wait_all().unwrap();
+    // modeled times for matmul/omp at 64 should now be learned
+    let est = rt.perf_models().estimate("mmul", "omp", 64);
+    assert!(est.is_some());
+    let expected = compar::taskrt::device::exec_model("matmul", "omp", 64);
+    let got = est.unwrap();
+    assert!(
+        (got - expected).abs() / expected < 0.2,
+        "learned {got}, device model {expected}"
+    );
+}
+
+#[test]
+fn wall_time_mode_records_real_time() {
+    let cfg = Config {
+        ncpu: 1,
+        ncuda: 0,
+        sched: SchedPolicy::Eager,
+        time_mode: TimeMode::Wall,
+        ..Config::default()
+    };
+    let rt = Runtime::new(cfg, None).unwrap();
+    let cl = rt.register_codelet(
+        Codelet::new("sleepy", "sort", vec![AccessMode::Read]).with_native(
+            "omp",
+            Arch::Cpu,
+            Arc::new(|_| {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                Ok(())
+            }),
+        ),
+    );
+    let h = rt.register_data(Tensor::vector(vec![0.0]));
+    rt.submit(TaskSpec::new(cl, vec![h], 1)).unwrap();
+    rt.wait_all().unwrap();
+    let r = &rt.metrics().results()[0];
+    assert!(r.modeled_exec >= 5e-3, "wall mode should reflect sleep");
+}
+
+// ------------------------------------------------------------------
+// artifact-backed heterogeneous tests (need `make artifacts`)
+// ------------------------------------------------------------------
+
+#[test]
+fn heterogeneous_matmul_verifies_and_selects() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let cfg = Config {
+        ncpu: 2,
+        ncuda: 1,
+        sched: SchedPolicy::Dmda,
+        ..Config::default()
+    };
+    let rt = Runtime::new(cfg, Some(m)).unwrap();
+    // repeated runs: calibration first (5 variants x MIN_SAMPLES each),
+    // then informed selection
+    let runs = 20;
+    for i in 0..runs {
+        let run = apps::run_once(&rt, "matmul", 64, 100 + i, None, true).unwrap();
+        assert!(run.rel_err <= apps::tolerance("matmul"));
+    }
+    let hist = rt.metrics().variant_histogram();
+    let total: usize = hist.values().sum();
+    assert_eq!(total as u64, runs);
+    // after calibration, estimates exist for every paper variant
+    for v in apps::paper_variants("matmul") {
+        assert!(
+            rt.perf_models().estimate("mmul", v, 64).is_some(),
+            "variant {v} never calibrated: {hist:?}"
+        );
+    }
+}
+
+#[test]
+fn gpu_only_runs_artifacts() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let cfg = Config {
+        ncpu: 0,
+        ncuda: 1,
+        sched: SchedPolicy::Eager,
+        ..Config::default()
+    };
+    let rt = Runtime::new(cfg, Some(m)).unwrap();
+    let run = apps::run_once(&rt, "hotspot", 64, 5, None, true).unwrap();
+    assert_eq!(run.variant, "cuda");
+}
+
+#[test]
+fn every_app_verifies_on_heterogeneous_runtime() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let cfg = Config {
+        ncpu: 2,
+        ncuda: 1,
+        sched: SchedPolicy::Dmda,
+        ..Config::default()
+    };
+    let rt = Runtime::new(cfg, Some(m)).unwrap();
+    for (app, size) in [
+        ("hotspot", 64),
+        ("hotspot3d", 64),
+        ("lud", 64),
+        ("nw", 63),
+        ("matmul", 64),
+        ("sort", 256),
+    ] {
+        // force both paper variants to execute + verify
+        for variant in apps::paper_variants(app) {
+            let run = apps::run_once(&rt, app, size, 9, Some(variant), true)
+                .unwrap_or_else(|e| panic!("{app}/{variant}: {e:#}"));
+            assert_eq!(&run.variant, variant, "{app}");
+        }
+    }
+}
