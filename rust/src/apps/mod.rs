@@ -31,6 +31,18 @@ use crate::taskrt::{Codelet, HandleId, Runtime, TaskSpec};
 /// All benchmark app names, in the paper's Table 2 order.
 pub const ALL: &[&str] = &["hotspot", "hotspot3d", "lud", "nw", "matmul", "sort"];
 
+/// Apps whose codelet is idempotent over its handles (output depends
+/// only on the read-only inputs, or re-running is a fixed point). Only
+/// these support verified task *chains* in the serving layer — the
+/// stencils and lud transform their input in place, so running the
+/// codelet k times computes something different from one application.
+pub const IDEMPOTENT: &[&str] = &["matmul", "nw", "sort"];
+
+/// Whether `app`'s codelet can be re-applied without changing the result.
+pub fn idempotent(app: &str) -> bool {
+    IDEMPOTENT.contains(&app)
+}
+
 /// Build the codelet for an app by name.
 pub fn codelet(app: &str) -> Result<Codelet> {
     Ok(match app {

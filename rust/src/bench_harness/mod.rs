@@ -3,11 +3,13 @@
 //!   COMPAR) plus the matmul per-variant panel;
 //! * [`table1f`] — the programmability (LoC) comparison;
 //! * [`selection`] — the §3.2 selection-quality discussion, quantified;
+//! * [`serve_bench`] — serving-path throughput/latency (BENCH_serve.json);
 //! * [`report`] — the plain-text table renderer.
 
 pub mod fig1;
 pub mod report;
 pub mod selection;
+pub mod serve_bench;
 pub mod table1f;
 
 /// The bundled COMPAR-annotated benchmark sources (compiled in, so the

@@ -1,0 +1,87 @@
+//! Serving-path throughput/latency bench: boots an in-process
+//! `compar serve` instance, drives it with the load generator, and
+//! renders a report (requests/s + p50/p95/p99) — the measurement the
+//! multi-tenant scaling story is tracked by (BENCH_serve.json).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::report::Table;
+use crate::serve::loadgen::{self, LoadReport, LoadgenOptions};
+use crate::serve::protocol::StatsResp;
+use crate::serve::{ServeOptions, Server};
+use crate::util::json::{self, Json};
+use crate::util::stats::fmt_time;
+
+/// Boot a server, run the load, drain, return both sides' numbers.
+pub fn run_inprocess(
+    serve: ServeOptions,
+    load: &LoadgenOptions,
+) -> Result<(LoadReport, StatsResp)> {
+    let server = Server::start(serve)?;
+    let addr = server.local_addr().to_string();
+    let report = loadgen::run(&addr, load)?;
+    let stats = server.shutdown()?;
+    Ok((report, stats))
+}
+
+/// Render the combined report (loadgen render + a server-side table).
+pub fn render(report: &LoadReport, stats: &StatsResp) -> String {
+    let mut out = loadgen::render(report);
+    let mut t = Table::new(
+        "server-side counters",
+        &["requests ok", "requests err", "tasks", "uptime"],
+    );
+    t.row(vec![
+        stats.requests_ok.to_string(),
+        stats.requests_err.to_string(),
+        stats.tasks_executed.to_string(),
+        fmt_time(stats.uptime),
+    ]);
+    out.push('\n');
+    out.push_str(&t.render());
+    if !stats.ctx_tasks.is_empty() {
+        let cells: Vec<String> = stats
+            .ctx_tasks
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        out.push_str(&format!("tasks per context: {}\n", cells.join("  ")));
+    }
+    out
+}
+
+/// The BENCH_serve.json record: loadgen numbers + server counters +
+/// the knobs that produced them, so trajectories stay comparable.
+pub fn to_json(
+    report: &LoadReport,
+    stats: &StatsResp,
+    load: &LoadgenOptions,
+    contexts: &str,
+) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("bench".to_string(), Json::Str("compar-loadgen".into()));
+    m.insert("status".to_string(), Json::Str("measured".into()));
+    let mut knobs = BTreeMap::new();
+    knobs.insert("app".into(), Json::Str(load.app.clone()));
+    knobs.insert("size".into(), Json::Num(load.size as f64));
+    knobs.insert("tasks".into(), Json::Num(load.tasks as f64));
+    knobs.insert("contexts".into(), Json::Str(contexts.to_string()));
+    m.insert("config".into(), Json::Obj(knobs));
+    m.insert("load".into(), loadgen::to_json(report));
+    let mut srv = BTreeMap::new();
+    srv.insert("requests_ok".into(), Json::Num(stats.requests_ok as f64));
+    srv.insert("requests_err".into(), Json::Num(stats.requests_err as f64));
+    srv.insert(
+        "tasks_executed".into(),
+        Json::Num(stats.tasks_executed as f64),
+    );
+    let mut ctx_tasks = BTreeMap::new();
+    for (k, v) in &stats.ctx_tasks {
+        ctx_tasks.insert(k.clone(), Json::Num(*v as f64));
+    }
+    srv.insert("ctx_tasks".into(), Json::Obj(ctx_tasks));
+    m.insert("server".into(), Json::Obj(srv));
+    json::to_string(&Json::Obj(m))
+}

@@ -15,6 +15,9 @@
 //! * [`apps`] — the paper's benchmark applications (Rodinia hotspot,
 //!   hotspot3D, lud, nw, plus matmul and the sort quickstart), each with
 //!   multiple implementation variants.
+//! * [`serve`] — the multi-tenant component service: a persistent
+//!   runtime partitioned into scheduling contexts, serving task-graph
+//!   requests from concurrent clients (`compar serve` / `compar loadgen`).
 //! * [`bench_harness`] — regenerates every table and figure of the
 //!   paper's evaluation section.
 
@@ -22,5 +25,6 @@ pub mod apps;
 pub mod bench_harness;
 pub mod compar;
 pub mod runtime;
+pub mod serve;
 pub mod taskrt;
 pub mod util;

@@ -6,6 +6,8 @@
 //! compar run --app A --size N [options]               run one benchmark task
 //! compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|all>
 //! compar calibrate --app A [--sizes a,b,c]            warm the perf models
+//! compar serve [--addr A --contexts cpu:4,gpu:1 ...]  multi-tenant component service
+//! compar loadgen [--clients N --requests M --app A]   drive a server, report latency
 //! compar list                                         inventory: apps, variants, artifacts
 //! ```
 //!
@@ -90,6 +92,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "run" => cmd_run(rest),
         "bench" => cmd_bench(rest),
         "calibrate" => cmd_calibrate(rest),
+        "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         "list" => cmd_list(),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -108,6 +112,10 @@ fn print_usage() {
          \x20 compar run --app APP --size N [--variant V] [--sched S] [--ncpu N] [--ncuda N] [--reps R]\n\
          \x20 compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|all> [--reps R] [--max-measured N]\n\
          \x20 compar calibrate --app APP [--sizes a,b,c]\n\
+         \x20 compar serve [--addr HOST:PORT] [--contexts cpu:4,gpu:1] [--sched S] [--cap N]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--batch-window-us U] [--max-batch B] [--ncpu N] [--ncuda N]\n\
+         \x20 compar loadgen [--clients N] [--requests M] [--app APP] [--size N] [--tasks K]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--ctxs a,b] [--addr HOST:PORT | --contexts SPEC] [--out FILE] [--no-verify]\n\
          \x20 compar list\n\
          \n\
          Environment: COMPAR_NCPU, COMPAR_NCUDA, COMPAR_SCHED, COMPAR_CALIBRATE,\n\
@@ -281,6 +289,132 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     }
     if !ran {
         bail!("unknown bench target '{which}'");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ serve
+
+fn serve_options_from(opts: &HashMap<String, String>) -> Result<compar::serve::ServeOptions> {
+    let mut so = compar::serve::ServeOptions::default();
+    if let Some(a) = opts.get("addr") {
+        so.addr = a.clone();
+    }
+    if let Some(c) = opts.get("contexts") {
+        so.contexts = compar::serve::parse_contexts(c)?;
+    }
+    if let Some(v) = opts.get("sched") {
+        so.sched = SchedPolicy::parse(v).ok_or_else(|| anyhow!("unknown scheduler '{v}'"))?;
+    }
+    if let Some(v) = opts.get("ncpu") {
+        so.ncpu = v.parse().context("--ncpu")?;
+    }
+    if let Some(v) = opts.get("ncuda") {
+        so.ncuda = v.parse().context("--ncuda")?;
+    }
+    if let Some(v) = opts.get("cap") {
+        so.max_inflight = v.parse().context("--cap")?;
+    }
+    if let Some(v) = opts.get("batch-window-us") {
+        so.batch_window = std::time::Duration::from_micros(v.parse().context("--batch-window-us")?);
+    }
+    if let Some(v) = opts.get("max-batch") {
+        so.max_batch = v.parse().context("--max-batch")?;
+    }
+    Ok(so)
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let (_, opts) = parse_opts(args);
+    let so = serve_options_from(&opts)?;
+    let server = compar::serve::Server::start(so)?;
+    println!("compar serve listening on {}", server.local_addr());
+    for (name, workers) in server.context_table() {
+        println!("  context {name:12} workers {workers:?}");
+    }
+    println!("(send {{\"op\":\"shutdown\"}} or run `compar loadgen --shutdown` to stop)");
+    let stats = server.serve_forever()?;
+    println!(
+        "drained: {} ok, {} errors, {} tasks executed over {:.1} s",
+        stats.requests_ok, stats.requests_err, stats.tasks_executed, stats.uptime
+    );
+    Ok(())
+}
+
+fn cmd_loadgen(args: &[String]) -> Result<()> {
+    let (_, opts) = parse_opts(args);
+    let mut lg = compar::serve::LoadgenOptions::default();
+    if let Some(v) = opts.get("clients") {
+        lg.clients = v.parse().context("--clients")?;
+    }
+    if let Some(v) = opts.get("requests") {
+        lg.requests = v.parse().context("--requests")?;
+    }
+    if let Some(v) = opts.get("app") {
+        lg.app = v.clone();
+    }
+    if let Some(v) = opts.get("size") {
+        lg.size = v.parse().context("--size")?;
+    }
+    if let Some(v) = opts.get("tasks") {
+        lg.tasks = v.parse::<usize>().context("--tasks")?.max(1);
+    }
+    if let Some(v) = opts.get("ctxs") {
+        lg.ctxs = v
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+    }
+    if let Some(v) = opts.get("seed") {
+        lg.seed = v.parse().context("--seed")?;
+    }
+    if opts.contains_key("no-verify") {
+        lg.verify = false;
+    }
+
+    // --shutdown: just ask a running server to drain and exit
+    if opts.contains_key("shutdown") {
+        let addr = opts
+            .get("addr")
+            .cloned()
+            .unwrap_or_else(|| compar::serve::ServeOptions::default().addr);
+        let mut c = compar::serve::Client::connect(&addr)?;
+        c.shutdown_server()?;
+        println!("shutdown requested at {addr}");
+        return Ok(());
+    }
+
+    let contexts_desc = opts.get("contexts").cloned().unwrap_or_default();
+    let (report, stats) = match opts.get("addr") {
+        // external server: drive it over the wire
+        Some(addr) => {
+            let report = compar::serve::loadgen::run(addr, &lg)?;
+            let mut c = compar::serve::Client::connect(addr)?;
+            let stats = c.stats()?;
+            let _ = c.quit();
+            (report, stats)
+        }
+        // default: boot an in-process server on an ephemeral port
+        None => {
+            let mut so = serve_options_from(&opts)?;
+            so.addr = "127.0.0.1:0".into();
+            compar::bench_harness::serve_bench::run_inprocess(so, &lg)?
+        }
+    };
+    print!(
+        "{}",
+        compar::bench_harness::serve_bench::render(&report, &stats)
+    );
+    if report.errors > 0 {
+        bail!("{} request(s) failed", report.errors);
+    }
+    if let Some(out) = opts.get("out") {
+        let json =
+            compar::bench_harness::serve_bench::to_json(&report, &stats, &lg, &contexts_desc);
+        std::fs::write(out, json + "\n").with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
     }
     Ok(())
 }

@@ -10,14 +10,73 @@
 //! handles are raw pointers); `service.rs` wraps it in a dedicated owner
 //! thread, which is also how StarPU drives a CUDA device (one worker
 //! thread owns the device context).
+//!
+//! The `xla` crate is an optional dependency (cargo feature `xla`): the
+//! offline build compiles a stub engine with the same API whose
+//! constructor fails, so the runtime degrades to native-only variants
+//! (`taskrt::Runtime::new` handles that degradation).
+
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaEngine;
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::path::Path;
+
+    use anyhow::{anyhow, Result};
+
+    use super::super::manifest::ArtifactMeta;
+    use super::super::tensor::Tensor;
+
+    /// API-compatible stand-in compiled when the `xla` feature is off.
+    /// Construction fails, so no other method is ever reachable.
+    pub struct XlaEngine {
+        _private: (),
+    }
+
+    impl XlaEngine {
+        pub fn new() -> Result<XlaEngine> {
+            Err(anyhow!(
+                "built without the `xla` cargo feature; artifact variants \
+                 are unavailable (rebuild with `--features xla`)"
+            ))
+        }
+
+        pub fn platform_name(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn cached(&self) -> usize {
+            0
+        }
+
+        pub fn load(&mut self, _name: &str, _path: &Path) -> Result<()> {
+            Err(anyhow!("xla feature disabled"))
+        }
+
+        pub fn execute(&self, _name: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            Err(anyhow!("xla feature disabled"))
+        }
+
+        pub fn run(&mut self, _meta: &ArtifactMeta, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            Err(anyhow!("xla feature disabled"))
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use real::XlaEngine;
+
+#[cfg(feature = "xla")]
+mod real {
 
 use std::collections::HashMap;
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
-use super::manifest::ArtifactMeta;
-use super::tensor::Tensor;
+use super::super::manifest::ArtifactMeta;
+use super::super::tensor::Tensor;
 
 /// Owns the PJRT client plus a compiled-executable cache keyed by
 /// artifact name. One compiled executable per model variant, reused for
@@ -132,4 +191,6 @@ impl XlaEngine {
             .with_context(|| format!("loading {}", meta.name))?;
         self.execute(&meta.name, inputs)
     }
+}
+
 }

@@ -1,0 +1,116 @@
+//! Blocking client for the component service: one TCP connection, one
+//! outstanding request at a time (the protocol supports pipelining via
+//! ids; the load generator opens one connection per simulated client
+//! instead, which is also how it measures per-request latency honestly).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::protocol::{
+    self, CtxDesc, Request, Response, ResultResp, StatsResp, SubmitReq, PROTOCOL_VERSION,
+};
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    pub session: u64,
+}
+
+impl Client {
+    /// Connect and perform the hello handshake.
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone()?;
+        let mut c = Client {
+            reader: BufReader::new(stream),
+            writer,
+            session: 0,
+        };
+        c.send(&Request::Hello {
+            client: format!("compar-client-{}", std::process::id()),
+        })?;
+        match c.recv()? {
+            Response::Hello { session, version } => {
+                if version != PROTOCOL_VERSION {
+                    bail!("server speaks protocol v{version}, client v{PROTOCOL_VERSION}");
+                }
+                c.session = session;
+            }
+            other => bail!("expected hello, got {other:?}"),
+        }
+        Ok(c)
+    }
+
+    fn send(&mut self, r: &Request) -> Result<()> {
+        let mut line = protocol::encode_request(r);
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Response> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        protocol::decode_response(&line)
+    }
+
+    /// Execute one request; blocks until the (possibly batched) reply.
+    pub fn submit(&mut self, req: SubmitReq) -> Result<ResultResp> {
+        let id = req.id;
+        self.send(&Request::Submit(req))?;
+        match self.recv()? {
+            Response::Result(r) => {
+                if r.id != id {
+                    bail!("response id {} for request {id}", r.id);
+                }
+                Ok(r)
+            }
+            Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<StatsResp> {
+        self.send(&Request::Stats)?;
+        match self.recv()? {
+            Response::Stats(s) => Ok(s),
+            Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn contexts(&mut self) -> Result<Vec<CtxDesc>> {
+        self.send(&Request::Contexts)?;
+        match self.recv()? {
+            Response::Contexts { contexts } => Ok(contexts),
+            Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Ask the server to drain and exit (acknowledged before the drain).
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        self.send(&Request::Shutdown)?;
+        match self.recv()? {
+            Response::Shutdown => Ok(()),
+            Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Close the session politely.
+    pub fn quit(mut self) -> Result<()> {
+        self.send(&Request::Quit)?;
+        match self.recv()? {
+            Response::Bye => Ok(()),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! Load generator for the component service: N client threads, each
+//! with its own connection, each firing M synchronous requests; reports
+//! throughput and the latency distribution (p50/p95/p99) plus variant
+//! and context histograms — the serving-path scaling instrument.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::client::Client;
+use super::protocol::SubmitReq;
+use crate::util::json::Json;
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Requests per client.
+    pub requests: usize,
+    pub app: String,
+    pub size: usize,
+    /// Tasks per request (dependency chain length).
+    pub tasks: usize,
+    /// Contexts to spread requests over, round-robin per client
+    /// (empty = server default routing).
+    pub ctxs: Vec<String>,
+    pub verify: bool,
+    pub seed: u64,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> LoadgenOptions {
+        LoadgenOptions {
+            clients: 8,
+            requests: 100,
+            app: "matmul".into(),
+            size: 48,
+            tasks: 1,
+            ctxs: Vec::new(),
+            verify: true,
+            seed: 42,
+        }
+    }
+}
+
+/// Aggregate outcome of one load-generation run (seconds throughout).
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub clients: usize,
+    pub requests: usize,
+    pub errors: usize,
+    pub elapsed: f64,
+    /// Successful requests per second of wall time.
+    pub rps: f64,
+    pub lat_mean: f64,
+    pub lat_min: f64,
+    pub lat_max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    /// variant name -> tasks executed with it.
+    pub variants: BTreeMap<String, usize>,
+    /// context name -> requests served under it.
+    pub per_ctx: BTreeMap<String, usize>,
+    /// Requests that shared a codelet batch with at least one other.
+    pub batched: usize,
+    pub max_rel_err: f64,
+}
+
+struct ClientOutcome {
+    latencies: Vec<f64>,
+    errors: usize,
+    variants: BTreeMap<String, usize>,
+    per_ctx: BTreeMap<String, usize>,
+    batched: usize,
+    max_rel_err: f64,
+}
+
+fn drive_client(addr: &str, opts: &LoadgenOptions, client_idx: usize) -> Result<ClientOutcome> {
+    let mut c = Client::connect(addr)?;
+    let mut out = ClientOutcome {
+        latencies: Vec::with_capacity(opts.requests),
+        errors: 0,
+        variants: BTreeMap::new(),
+        per_ctx: BTreeMap::new(),
+        batched: 0,
+        max_rel_err: 0.0,
+    };
+    for r in 0..opts.requests {
+        let ctx = if opts.ctxs.is_empty() {
+            None
+        } else {
+            Some(opts.ctxs[(client_idx + r) % opts.ctxs.len()].clone())
+        };
+        let req = SubmitReq {
+            id: r as u64,
+            app: opts.app.clone(),
+            size: opts.size,
+            tasks: opts.tasks,
+            ctx,
+            seed: opts
+                .seed
+                .wrapping_add((client_idx as u64) << 20)
+                .wrapping_add(r as u64),
+            variant: None,
+            verify: opts.verify,
+        };
+        let t0 = Instant::now();
+        match c.submit(req) {
+            Ok(resp) => {
+                out.latencies.push(t0.elapsed().as_secs_f64());
+                for v in &resp.variants {
+                    *out.variants.entry(v.clone()).or_insert(0) += 1;
+                }
+                *out.per_ctx.entry(resp.ctx.clone()).or_insert(0) += 1;
+                if resp.batch > 1 {
+                    out.batched += 1;
+                }
+                out.max_rel_err = out.max_rel_err.max(resp.rel_err);
+            }
+            Err(_) => out.errors += 1,
+        }
+    }
+    let _ = c.quit();
+    Ok(out)
+}
+
+/// Run the load against a listening server.
+pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<LoadReport> {
+    if opts.clients == 0 || opts.requests == 0 {
+        return Err(anyhow!("need at least one client and one request"));
+    }
+    let t0 = Instant::now();
+    let outcomes: Vec<Result<ClientOutcome>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..opts.clients)
+            .map(|i| {
+                let addr = addr.to_string();
+                let opts = opts.clone();
+                s.spawn(move || drive_client(&addr, &opts, i))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow!("client thread panicked")))
+            })
+            .collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut latencies = Vec::new();
+    let mut errors = 0usize;
+    let mut variants = BTreeMap::new();
+    let mut per_ctx = BTreeMap::new();
+    let mut batched = 0usize;
+    let mut max_rel_err = 0.0f64;
+    for o in outcomes {
+        let o = o?;
+        latencies.extend(o.latencies);
+        errors += o.errors;
+        for (k, v) in o.variants {
+            *variants.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in o.per_ctx {
+            *per_ctx.entry(k).or_insert(0) += v;
+        }
+        batched += o.batched;
+        max_rel_err = max_rel_err.max(o.max_rel_err);
+    }
+    if latencies.is_empty() {
+        return Err(anyhow!("no request succeeded ({errors} errors)"));
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = latencies.len();
+    Ok(LoadReport {
+        clients: opts.clients,
+        requests: n + errors,
+        errors,
+        elapsed,
+        rps: n as f64 / elapsed,
+        lat_mean: latencies.iter().sum::<f64>() / n as f64,
+        lat_min: latencies[0],
+        lat_max: latencies[n - 1],
+        p50: stats::percentile(&latencies, 50.0),
+        p95: stats::percentile(&latencies, 95.0),
+        p99: stats::percentile(&latencies, 99.0),
+        variants,
+        per_ctx,
+        batched,
+        max_rel_err,
+    })
+}
+
+/// Plain-text report.
+pub fn render(r: &LoadReport) -> String {
+    let mut out = String::new();
+    out.push_str("== compar loadgen report ==\n");
+    out.push_str(&format!(
+        "clients {}  requests {}  errors {}  elapsed {:.3} s\n",
+        r.clients, r.requests, r.errors, r.elapsed
+    ));
+    out.push_str(&format!("throughput {:.1} req/s\n", r.rps));
+    out.push_str(&format!(
+        "latency mean {}  min {}  max {}\n",
+        stats::fmt_time(r.lat_mean),
+        stats::fmt_time(r.lat_min),
+        stats::fmt_time(r.lat_max)
+    ));
+    out.push_str(&format!(
+        "latency p50 {}  p95 {}  p99 {}\n",
+        stats::fmt_time(r.p50),
+        stats::fmt_time(r.p95),
+        stats::fmt_time(r.p99)
+    ));
+    if !r.per_ctx.is_empty() {
+        let cells: Vec<String> = r
+            .per_ctx
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        out.push_str(&format!("requests per context: {}\n", cells.join("  ")));
+    }
+    if !r.variants.is_empty() {
+        let cells: Vec<String> = r
+            .variants
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        out.push_str(&format!("variant selection: {}\n", cells.join("  ")));
+    }
+    out.push_str(&format!(
+        "batched requests {}  max rel L2 err {:.2e}\n",
+        r.batched, r.max_rel_err
+    ));
+    out
+}
+
+/// JSON form (BENCH_serve.json baseline record).
+pub fn to_json(r: &LoadReport) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("clients".into(), Json::Num(r.clients as f64));
+    m.insert("requests".into(), Json::Num(r.requests as f64));
+    m.insert("errors".into(), Json::Num(r.errors as f64));
+    m.insert("elapsed_s".into(), Json::Num(r.elapsed));
+    m.insert("rps".into(), Json::Num(r.rps));
+    m.insert("lat_mean_s".into(), Json::Num(r.lat_mean));
+    m.insert("lat_min_s".into(), Json::Num(r.lat_min));
+    m.insert("lat_max_s".into(), Json::Num(r.lat_max));
+    m.insert("p50_s".into(), Json::Num(r.p50));
+    m.insert("p95_s".into(), Json::Num(r.p95));
+    m.insert("p99_s".into(), Json::Num(r.p99));
+    m.insert("batched".into(), Json::Num(r.batched as f64));
+    m.insert("max_rel_err".into(), Json::Num(r.max_rel_err));
+    let mut variants = std::collections::BTreeMap::new();
+    for (k, v) in &r.variants {
+        variants.insert(k.clone(), Json::Num(*v as f64));
+    }
+    m.insert("variants".into(), Json::Obj(variants));
+    let mut per_ctx = std::collections::BTreeMap::new();
+    for (k, v) in &r.per_ctx {
+        per_ctx.insert(k.clone(), Json::Num(*v as f64));
+    }
+    m.insert("per_ctx".into(), Json::Obj(per_ctx));
+    Json::Obj(m)
+}

@@ -1,0 +1,29 @@
+//! `serve` — the multi-tenant component service (`compar serve`).
+//!
+//! The paper's runtime selects implementation variants per call; this
+//! layer turns the one-shot benchmark runtime into a *persistent
+//! service*: many concurrent clients submit task-graph requests over a
+//! newline-delimited JSON protocol, each request is routed to a
+//! **scheduling context** (a worker partition with its own scheduler —
+//! see [`crate::taskrt::Runtime::create_context`]), same-codelet
+//! requests are batched, an admission gate bounds in-flight work, and
+//! shutdown drains gracefully. All contexts share one data registry,
+//! one performance-model store and one XLA service, so variant
+//! selection keeps learning across tenants — the optimized-composition
+//! setting where history-based selection pays off most.
+//!
+//! Layers (each its own module):
+//! * [`protocol`] — wire format (requests/responses, encode/decode).
+//! * [`server`] — sessions, admission, batching, contexts, drain.
+//! * [`client`] — blocking client used by tools and tests.
+//! * [`loadgen`] — the throughput/latency measurement harness.
+
+pub mod client;
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+
+pub use client::Client;
+pub use loadgen::{LoadReport, LoadgenOptions};
+pub use protocol::{Request, Response, SubmitReq};
+pub use server::{parse_contexts, CtxSpec, ServeOptions, Server};

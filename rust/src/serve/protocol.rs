@@ -1,0 +1,494 @@
+//! Wire protocol of the component service: one JSON object per line
+//! (newline-delimited), hand-rolled over [`crate::util::json`] — the
+//! offline image ships no serde. Every message is self-describing
+//! (`"op"` on requests, `"type"` on responses) and carries the client's
+//! request `id` back so batched / out-of-order replies can be matched.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::{self, Json};
+
+pub const PROTOCOL_VERSION: u64 = 1;
+
+// --------------------------------------------------------------- requests
+
+/// One task-graph execution request: `tasks` chained invocations of the
+/// app's codelet over a single fresh problem instance (implicit data
+/// dependencies serialize them), scheduled under context `ctx`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitReq {
+    /// Client-chosen correlation id, echoed in the response.
+    pub id: u64,
+    pub app: String,
+    pub size: usize,
+    /// Chain length (>= 1): task k reads/writes the same handles as
+    /// task k-1, so the request is a real dependency graph.
+    pub tasks: usize,
+    /// Scheduling-context name (None = server default routing).
+    pub ctx: Option<String>,
+    pub seed: u64,
+    /// Pin a variant (None = runtime selects — the paper's feature).
+    pub variant: Option<String>,
+    /// Verify the final output against the sequential reference.
+    pub verify: bool,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Hello { client: String },
+    Submit(SubmitReq),
+    Stats,
+    Contexts,
+    /// Ask the server to drain and exit (graceful shutdown).
+    Shutdown,
+    /// Close this session only.
+    Quit,
+}
+
+// -------------------------------------------------------------- responses
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultResp {
+    pub id: u64,
+    pub app: String,
+    pub size: usize,
+    /// Context name the request actually ran under.
+    pub ctx: String,
+    /// Per-task selected variant names, in chain order.
+    pub variants: Vec<String>,
+    /// Global worker ids that executed the tasks, in chain order.
+    pub workers: Vec<usize>,
+    /// How many requests rode in the same codelet batch.
+    pub batch: usize,
+    /// Summed modeled device seconds over the chain.
+    pub modeled: f64,
+    /// Summed wall-clock execution seconds over the chain.
+    pub wall: f64,
+    /// Relative L2 error vs the sequential reference (0.0 when
+    /// verification was disabled).
+    pub rel_err: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CtxDesc {
+    pub id: usize,
+    pub name: String,
+    pub policy: String,
+    pub workers: Vec<usize>,
+    pub queued: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsResp {
+    pub uptime: f64,
+    pub requests_ok: u64,
+    pub requests_err: u64,
+    /// Requests admitted but not yet completed.
+    pub inflight: u64,
+    pub tasks_executed: u64,
+    /// Tasks executed per context name.
+    pub ctx_tasks: BTreeMap<String, u64>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Hello { session: u64, version: u64 },
+    Result(ResultResp),
+    Error { id: Option<u64>, error: String },
+    Stats(StatsResp),
+    Contexts { contexts: Vec<CtxDesc> },
+    /// Shutdown acknowledged; the server drains after replying.
+    Shutdown,
+    /// Session closed.
+    Bye,
+}
+
+// --------------------------------------------------------------- encoding
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn n(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn nums(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&x| n(x as f64)).collect())
+}
+
+fn strs(v: &[String]) -> Json {
+    Json::Arr(v.iter().map(|x| s(x)).collect())
+}
+
+pub fn encode_request(r: &Request) -> String {
+    let j = match r {
+        Request::Hello { client } => obj(vec![("op", s("hello")), ("client", s(client))]),
+        Request::Submit(q) => {
+            let mut pairs = vec![
+                ("op", s("submit")),
+                ("id", n(q.id as f64)),
+                ("app", s(&q.app)),
+                ("size", n(q.size as f64)),
+                ("tasks", n(q.tasks as f64)),
+                ("seed", n(q.seed as f64)),
+                ("verify", Json::Bool(q.verify)),
+            ];
+            if let Some(c) = &q.ctx {
+                pairs.push(("ctx", s(c)));
+            }
+            if let Some(v) = &q.variant {
+                pairs.push(("variant", s(v)));
+            }
+            obj(pairs)
+        }
+        Request::Stats => obj(vec![("op", s("stats"))]),
+        Request::Contexts => obj(vec![("op", s("contexts"))]),
+        Request::Shutdown => obj(vec![("op", s("shutdown"))]),
+        Request::Quit => obj(vec![("op", s("quit"))]),
+    };
+    json::to_string(&j)
+}
+
+pub fn encode_response(r: &Response) -> String {
+    let j = match r {
+        Response::Hello { session, version } => obj(vec![
+            ("ok", Json::Bool(true)),
+            ("type", s("hello")),
+            ("session", n(*session as f64)),
+            ("version", n(*version as f64)),
+        ]),
+        Response::Result(q) => obj(vec![
+            ("ok", Json::Bool(true)),
+            ("type", s("result")),
+            ("id", n(q.id as f64)),
+            ("app", s(&q.app)),
+            ("size", n(q.size as f64)),
+            ("ctx", s(&q.ctx)),
+            ("variants", strs(&q.variants)),
+            ("workers", nums(&q.workers)),
+            ("batch", n(q.batch as f64)),
+            ("modeled", n(q.modeled)),
+            ("wall", n(q.wall)),
+            ("rel_err", n(q.rel_err)),
+        ]),
+        Response::Error { id, error } => {
+            let mut pairs = vec![
+                ("ok", Json::Bool(false)),
+                ("type", s("error")),
+                ("error", s(error)),
+            ];
+            if let Some(id) = id {
+                pairs.push(("id", n(*id as f64)));
+            }
+            obj(pairs)
+        }
+        Response::Stats(q) => {
+            let mut ctx_tasks = BTreeMap::new();
+            for (k, v) in &q.ctx_tasks {
+                ctx_tasks.insert(k.clone(), n(*v as f64));
+            }
+            obj(vec![
+                ("ok", Json::Bool(true)),
+                ("type", s("stats")),
+                ("uptime", n(q.uptime)),
+                ("requests_ok", n(q.requests_ok as f64)),
+                ("requests_err", n(q.requests_err as f64)),
+                ("inflight", n(q.inflight as f64)),
+                ("tasks_executed", n(q.tasks_executed as f64)),
+                ("ctx_tasks", Json::Obj(ctx_tasks)),
+            ])
+        }
+        Response::Contexts { contexts } => {
+            let arr = contexts
+                .iter()
+                .map(|c| {
+                    obj(vec![
+                        ("id", n(c.id as f64)),
+                        ("name", s(&c.name)),
+                        ("policy", s(&c.policy)),
+                        ("workers", nums(&c.workers)),
+                        ("queued", n(c.queued as f64)),
+                    ])
+                })
+                .collect();
+            obj(vec![
+                ("ok", Json::Bool(true)),
+                ("type", s("contexts")),
+                ("contexts", Json::Arr(arr)),
+            ])
+        }
+        Response::Shutdown => obj(vec![("ok", Json::Bool(true)), ("type", s("shutdown"))]),
+        Response::Bye => obj(vec![("ok", Json::Bool(true)), ("type", s("bye"))]),
+    };
+    json::to_string(&j)
+}
+
+// --------------------------------------------------------------- decoding
+
+fn get_str(j: &Json, k: &str) -> Result<String> {
+    j.get(k)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing/invalid string field '{k}'"))
+}
+
+fn get_u64(j: &Json, k: &str) -> Result<u64> {
+    j.get(k)
+        .and_then(Json::as_f64)
+        .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+        .map(|v| v as u64)
+        .ok_or_else(|| anyhow!("missing/invalid integer field '{k}'"))
+}
+
+fn get_f64(j: &Json, k: &str) -> Result<f64> {
+    j.get(k)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing/invalid number field '{k}'"))
+}
+
+fn get_usize_arr(j: &Json, k: &str) -> Result<Vec<usize>> {
+    j.get(k)
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .ok_or_else(|| anyhow!("missing/invalid array field '{k}'"))
+}
+
+fn get_str_arr(j: &Json, k: &str) -> Result<Vec<String>> {
+    j.get(k)
+        .and_then(Json::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter_map(Json::as_str)
+                .map(str::to_string)
+                .collect()
+        })
+        .ok_or_else(|| anyhow!("missing/invalid array field '{k}'"))
+}
+
+pub fn decode_request(line: &str) -> Result<Request> {
+    let j = json::parse(line.trim()).map_err(|e| anyhow!("bad request json: {e}"))?;
+    let op = get_str(&j, "op")?;
+    Ok(match op.as_str() {
+        "hello" => Request::Hello {
+            client: get_str(&j, "client").unwrap_or_default(),
+        },
+        "submit" => {
+            let tasks = get_u64(&j, "tasks").unwrap_or(1).max(1) as usize;
+            Request::Submit(SubmitReq {
+                id: get_u64(&j, "id")?,
+                app: get_str(&j, "app")?,
+                size: get_u64(&j, "size")? as usize,
+                tasks,
+                ctx: get_str(&j, "ctx").ok(),
+                seed: get_u64(&j, "seed").unwrap_or(0),
+                variant: get_str(&j, "variant").ok(),
+                verify: match j.get("verify") {
+                    Some(Json::Bool(b)) => *b,
+                    None => true,
+                    _ => bail!("invalid 'verify' field"),
+                },
+            })
+        }
+        "stats" => Request::Stats,
+        "contexts" => Request::Contexts,
+        "shutdown" => Request::Shutdown,
+        "quit" => Request::Quit,
+        other => bail!("unknown op '{other}'"),
+    })
+}
+
+pub fn decode_response(line: &str) -> Result<Response> {
+    let j = json::parse(line.trim()).map_err(|e| anyhow!("bad response json: {e}"))?;
+    let ty = get_str(&j, "type")?;
+    Ok(match ty.as_str() {
+        "hello" => Response::Hello {
+            session: get_u64(&j, "session")?,
+            version: get_u64(&j, "version")?,
+        },
+        "result" => Response::Result(ResultResp {
+            id: get_u64(&j, "id")?,
+            app: get_str(&j, "app")?,
+            size: get_u64(&j, "size")? as usize,
+            ctx: get_str(&j, "ctx")?,
+            variants: get_str_arr(&j, "variants")?,
+            workers: get_usize_arr(&j, "workers")?,
+            batch: get_u64(&j, "batch")? as usize,
+            modeled: get_f64(&j, "modeled")?,
+            wall: get_f64(&j, "wall")?,
+            rel_err: get_f64(&j, "rel_err")?,
+        }),
+        "error" => Response::Error {
+            id: get_u64(&j, "id").ok(),
+            error: get_str(&j, "error")?,
+        },
+        "stats" => {
+            let mut ctx_tasks = BTreeMap::new();
+            if let Some(o) = j.get("ctx_tasks").and_then(Json::as_obj) {
+                for (k, v) in o {
+                    if let Some(x) = v.as_f64() {
+                        ctx_tasks.insert(k.clone(), x as u64);
+                    }
+                }
+            }
+            Response::Stats(StatsResp {
+                uptime: get_f64(&j, "uptime")?,
+                requests_ok: get_u64(&j, "requests_ok")?,
+                requests_err: get_u64(&j, "requests_err")?,
+                inflight: get_u64(&j, "inflight")?,
+                tasks_executed: get_u64(&j, "tasks_executed")?,
+                ctx_tasks,
+            })
+        }
+        "contexts" => {
+            let arr = j
+                .get("contexts")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing 'contexts'"))?;
+            let mut contexts = Vec::new();
+            for c in arr {
+                contexts.push(CtxDesc {
+                    id: get_u64(c, "id")? as usize,
+                    name: get_str(c, "name")?,
+                    policy: get_str(c, "policy")?,
+                    workers: get_usize_arr(c, "workers")?,
+                    queued: get_u64(c, "queued")? as usize,
+                });
+            }
+            Response::Contexts { contexts }
+        }
+        "shutdown" => Response::Shutdown,
+        "bye" => Response::Bye,
+        other => bail!("unknown response type '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(r: Request) {
+        let line = encode_request(&r);
+        let back = decode_request(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        assert_eq!(back, r, "{line}");
+    }
+
+    fn roundtrip_resp(r: Response) {
+        let line = encode_response(&r);
+        let back = decode_response(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        assert_eq!(back, r, "{line}");
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_req(Request::Hello {
+            client: "client-1".into(),
+        });
+        roundtrip_req(Request::Submit(SubmitReq {
+            id: 42,
+            app: "matmul".into(),
+            size: 64,
+            tasks: 3,
+            ctx: Some("gpu".into()),
+            seed: 7,
+            variant: Some("omp".into()),
+            verify: true,
+        }));
+        roundtrip_req(Request::Submit(SubmitReq {
+            id: 0,
+            app: "nw".into(),
+            size: 32,
+            tasks: 1,
+            ctx: None,
+            seed: 0,
+            variant: None,
+            verify: false,
+        }));
+        roundtrip_req(Request::Stats);
+        roundtrip_req(Request::Contexts);
+        roundtrip_req(Request::Shutdown);
+        roundtrip_req(Request::Quit);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_resp(Response::Hello {
+            session: 9,
+            version: PROTOCOL_VERSION,
+        });
+        roundtrip_resp(Response::Result(ResultResp {
+            id: 42,
+            app: "matmul".into(),
+            size: 64,
+            ctx: "alpha".into(),
+            variants: vec!["omp".into(), "seq".into()],
+            workers: vec![0, 3],
+            batch: 4,
+            modeled: 0.0025,
+            wall: 0.001,
+            rel_err: 1.5e-6,
+        }));
+        roundtrip_resp(Response::Error {
+            id: Some(3),
+            error: "queue \"full\"\nretry later".into(),
+        });
+        roundtrip_resp(Response::Error {
+            id: None,
+            error: "bad json".into(),
+        });
+        let mut ctx_tasks = BTreeMap::new();
+        ctx_tasks.insert("alpha".to_string(), 10u64);
+        ctx_tasks.insert("beta".to_string(), 4u64);
+        roundtrip_resp(Response::Stats(StatsResp {
+            uptime: 12.5,
+            requests_ok: 100,
+            requests_err: 2,
+            inflight: 3,
+            tasks_executed: 250,
+            ctx_tasks,
+        }));
+        roundtrip_resp(Response::Contexts {
+            contexts: vec![CtxDesc {
+                id: 1,
+                name: "alpha".into(),
+                policy: "dmda".into(),
+                workers: vec![0, 1],
+                queued: 2,
+            }],
+        });
+        roundtrip_resp(Response::Shutdown);
+        roundtrip_resp(Response::Bye);
+    }
+
+    #[test]
+    fn submit_defaults() {
+        let r = decode_request(r#"{"op":"submit","id":1,"app":"sort","size":256}"#).unwrap();
+        match r {
+            Request::Submit(q) => {
+                assert_eq!(q.tasks, 1);
+                assert_eq!(q.seed, 0);
+                assert!(q.verify);
+                assert!(q.ctx.is_none() && q.variant.is_none());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(decode_request("not json").is_err());
+        assert!(decode_request(r#"{"op":"nope"}"#).is_err());
+        assert!(decode_request(r#"{"op":"submit","id":1}"#).is_err());
+        assert!(decode_response(r#"{"ok":true}"#).is_err());
+    }
+}

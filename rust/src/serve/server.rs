@@ -1,0 +1,877 @@
+//! The persistent component service: accepts task-graph requests from
+//! many concurrent clients over newline-delimited JSON (TCP), routes
+//! each request to a scheduling context, batches same-codelet requests,
+//! enforces an admission cap, and drains gracefully on shutdown.
+//!
+//! ```text
+//! client ──TCP──▶ session thread ──▶ admission gate ──▶ batcher
+//!                                                          │ (same-app
+//!                                                          ▼  batches)
+//!                                     dispatcher ──▶ taskrt submit
+//!                                                          │
+//!                         completion thread ◀── wait_tasks ┘
+//!                 (verify · reply · unregister · reap · release gate)
+//! ```
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::protocol::{
+    self, CtxDesc, Request, Response, ResultResp, StatsResp, SubmitReq, PROTOCOL_VERSION,
+};
+use crate::apps;
+use crate::runtime::Manifest;
+use crate::taskrt::{Arch, Config, CtxId, Runtime, SchedPolicy, TaskId, TaskSpec};
+
+// ----------------------------------------------------------- configuration
+
+/// One requested context partition: `count` workers of `arch` under
+/// scheduler policy inherited from [`ServeOptions::sched`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CtxSpec {
+    pub name: String,
+    pub count: usize,
+    pub arch: Arch,
+}
+
+/// Parse `--contexts cpu:4,gpu:1` — names containing "gpu" or "cuda"
+/// take CUDA-analog workers, everything else CPU workers.
+pub fn parse_contexts(spec: &str) -> Result<Vec<CtxSpec>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+        let (name, count) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow!("bad context spec '{part}' (want name:count)"))?;
+        let name = name.trim();
+        let count: usize = count
+            .trim()
+            .parse()
+            .with_context(|| format!("bad worker count in '{part}'"))?;
+        if name.is_empty() || count == 0 {
+            bail!("bad context spec '{part}' (empty name or zero workers)");
+        }
+        let lower = name.to_ascii_lowercase();
+        let arch = if lower.contains("gpu") || lower.contains("cuda") {
+            Arch::Cuda
+        } else {
+            Arch::Cpu
+        };
+        out.push(CtxSpec {
+            name: name.to_string(),
+            count,
+            arch,
+        });
+    }
+    Ok(out)
+}
+
+/// Server configuration (`compar serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bind address; use port 0 for an ephemeral port (tests).
+    pub addr: String,
+    /// Context partitions; empty = one default context over ncpu/ncuda.
+    pub contexts: Vec<CtxSpec>,
+    pub sched: SchedPolicy,
+    /// Worker counts used when `contexts` is empty.
+    pub ncpu: usize,
+    pub ncuda: usize,
+    /// Admission cap: requests admitted but not yet completed.
+    pub max_inflight: usize,
+    /// How long the batcher waits for same-codelet company.
+    pub batch_window: Duration,
+    /// Max requests fused into one batch.
+    pub max_batch: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            addr: "127.0.0.1:7199".into(),
+            contexts: Vec::new(),
+            sched: SchedPolicy::Dmda,
+            ncpu: 4,
+            ncuda: 0,
+            max_inflight: 64,
+            batch_window: Duration::from_micros(500),
+            max_batch: 16,
+        }
+    }
+}
+
+// -------------------------------------------------------- admission gate
+
+/// Counting gate bounding admitted-but-incomplete requests; acquirers
+/// block (backpressure) instead of failing.
+struct Gate {
+    max: usize,
+    cur: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new(max: usize) -> Gate {
+        Gate {
+            max: max.max(1),
+            cur: Mutex::new(0),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn acquire(&self) {
+        let mut cur = self.cur.lock().unwrap();
+        while *cur >= self.max {
+            cur = self.cv.wait(cur).unwrap();
+        }
+        *cur += 1;
+    }
+
+    fn release(&self) {
+        let mut cur = self.cur.lock().unwrap();
+        *cur -= 1;
+        self.cv.notify_all();
+    }
+
+    fn inflight(&self) -> usize {
+        *self.cur.lock().unwrap()
+    }
+}
+
+// ---------------------------------------------------------------- batching
+
+/// A per-connection reply lane: completion threads and the session
+/// thread interleave line writes through one mutex.
+type ReplyLane = Arc<Mutex<TcpStream>>;
+
+fn send_line(lane: &ReplyLane, resp: &Response) {
+    let mut line = protocol::encode_response(resp);
+    line.push('\n');
+    let mut w = lane.lock().unwrap();
+    // a dead client is not a server error; drop silently
+    let _ = w.write_all(line.as_bytes());
+    let _ = w.flush();
+}
+
+struct Job {
+    req: SubmitReq,
+    ctx_id: CtxId,
+    ctx_name: String,
+    reply: ReplyLane,
+}
+
+#[derive(Default)]
+struct BatchState {
+    by_app: HashMap<String, Vec<Job>>,
+    queued: usize,
+    draining: bool,
+}
+
+/// Same-codelet request batching: jobs wait up to `window` so requests
+/// for the same app fuse into one submission burst (amortizing scheduler
+/// and perf-model lookups, and giving dmda a whole batch to spread over
+/// the partition at once).
+struct Batcher {
+    state: Mutex<BatchState>,
+    cv: Condvar,
+    window: Duration,
+    max_batch: usize,
+}
+
+impl Batcher {
+    fn new(window: Duration, max_batch: usize) -> Batcher {
+        Batcher {
+            state: Mutex::new(BatchState::default()),
+            cv: Condvar::new(),
+            window,
+            max_batch: max_batch.max(1),
+        }
+    }
+
+    fn add(&self, job: Job) {
+        let mut st = self.state.lock().unwrap();
+        st.by_app.entry(job.req.app.clone()).or_default().push(job);
+        st.queued += 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn drain(&self) {
+        self.state.lock().unwrap().draining = true;
+        self.cv.notify_all();
+    }
+
+    /// Dispatcher side: block for work, give same-app company `window`
+    /// to arrive (unless a batch is already full), then take everything.
+    /// Returns None when draining and empty.
+    fn collect(&self) -> Option<Vec<(String, Vec<Job>)>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.queued == 0 {
+                if st.draining {
+                    return None;
+                }
+                st = self.cv.wait(st).unwrap();
+                continue;
+            }
+            // accumulate: wait out the batch window unless a full batch
+            // is already waiting or we're draining
+            let full = st.by_app.values().any(|v| v.len() >= self.max_batch);
+            if !full && !st.draining {
+                let (g, _timeout) = self.cv.wait_timeout(st, self.window).unwrap();
+                st = g;
+                if st.queued == 0 {
+                    continue;
+                }
+            }
+            st.queued = 0;
+            return Some(std::mem::take(&mut st.by_app).into_iter().collect());
+        }
+    }
+}
+
+// ------------------------------------------------------------- the server
+
+struct Shared {
+    rt: Runtime,
+    gate: Gate,
+    batcher: Batcher,
+    draining: AtomicBool,
+    /// Set by a `shutdown` request; `serve_forever` waits on it.
+    stop: Mutex<bool>,
+    stop_cv: Condvar,
+    sessions: Mutex<Vec<JoinHandle<()>>>,
+    completions: Mutex<Vec<JoinHandle<()>>>,
+    next_session: AtomicU64,
+    requests_ok: AtomicU64,
+    requests_err: AtomicU64,
+    /// Tasks completed per context id (results leave Metrics per-request,
+    /// so the server keeps its own per-tenant counters).
+    ctx_tasks: Vec<AtomicU64>,
+    /// Context routing table fixed at startup: name -> id.
+    ctx_names: Vec<(String, CtxId)>,
+    default_ctx: CtxId,
+    started: Instant,
+}
+
+impl Shared {
+    fn resolve_ctx(&self, name: Option<&str>) -> Result<(CtxId, String)> {
+        match name {
+            None => {
+                let (n, id) = &self.ctx_names[self.default_ctx_index()];
+                Ok((*id, n.clone()))
+            }
+            Some(n) => self
+                .ctx_names
+                .iter()
+                .find(|(name, _)| name == n)
+                .map(|(name, id)| (*id, name.clone()))
+                .ok_or_else(|| {
+                    anyhow!(
+                        "unknown context '{n}' (have: {})",
+                        self.ctx_names
+                            .iter()
+                            .map(|(n, _)| n.as_str())
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    )
+                }),
+        }
+    }
+
+    fn default_ctx_index(&self) -> usize {
+        self.ctx_names
+            .iter()
+            .position(|(_, id)| *id == self.default_ctx)
+            .unwrap_or(0)
+    }
+
+    fn stats_snapshot(&self) -> StatsResp {
+        let mut ctx_tasks = std::collections::BTreeMap::new();
+        for (name, id) in &self.ctx_names {
+            ctx_tasks.insert(
+                name.clone(),
+                self.ctx_tasks
+                    .get(*id)
+                    .map(|a| a.load(Ordering::Relaxed))
+                    .unwrap_or(0),
+            );
+        }
+        StatsResp {
+            uptime: self.started.elapsed().as_secs_f64(),
+            requests_ok: self.requests_ok.load(Ordering::Relaxed),
+            requests_err: self.requests_err.load(Ordering::Relaxed),
+            inflight: self.gate.inflight() as u64,
+            tasks_executed: self
+                .rt
+                .metrics()
+                .tasks_executed
+                .load(Ordering::Relaxed) as u64,
+            ctx_tasks,
+        }
+    }
+}
+
+/// The multi-tenant component service. `start` binds and returns
+/// immediately; `serve_forever` blocks until a client sends `shutdown`;
+/// `shutdown` drains gracefully.
+pub struct Server {
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn start(opts: ServeOptions) -> Result<Server> {
+        // worker counts follow the context partitioning when given
+        let (ncpu, ncuda) = if opts.contexts.is_empty() {
+            (opts.ncpu, opts.ncuda)
+        } else {
+            (
+                opts.contexts
+                    .iter()
+                    .filter(|c| c.arch == Arch::Cpu)
+                    .map(|c| c.count)
+                    .sum(),
+                opts.contexts
+                    .iter()
+                    .filter(|c| c.arch == Arch::Cuda)
+                    .map(|c| c.count)
+                    .sum(),
+            )
+        };
+        let mut cfg = Config::from_env();
+        cfg.ncpu = ncpu;
+        cfg.ncuda = ncuda;
+        cfg.sched = opts.sched;
+        let manifest = Manifest::load(&crate::runtime::manifest::default_dir())
+            .ok()
+            .map(Arc::new);
+        let rt = Runtime::new(cfg, manifest)?;
+
+        // carve the requested partitions; cpu workers occupy global ids
+        // [0, ncpu), cuda workers [ncpu, ncpu+ncuda) (paper_topology order)
+        let mut ctx_names: Vec<(String, CtxId)> = vec![("default".into(), 0)];
+        let mut default_ctx = 0;
+        if !opts.contexts.is_empty() {
+            let mut next_cpu = 0usize;
+            let mut next_cuda = ncpu;
+            for spec in &opts.contexts {
+                let ids: Vec<usize> = match spec.arch {
+                    Arch::Cpu => {
+                        let ids = (next_cpu..next_cpu + spec.count).collect();
+                        next_cpu += spec.count;
+                        ids
+                    }
+                    Arch::Cuda => {
+                        let ids = (next_cuda..next_cuda + spec.count).collect();
+                        next_cuda += spec.count;
+                        ids
+                    }
+                };
+                let id = rt.create_context(&spec.name, &ids, opts.sched)?;
+                ctx_names.push((spec.name.clone(), id));
+            }
+            // all workers moved out of the default context: route
+            // ctx-less requests to the first named partition instead
+            default_ctx = ctx_names[1].1;
+        }
+
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding {}", opts.addr))?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let shared = Arc::new(Shared {
+            ctx_tasks: (0..ctx_names.len().max(rt.contexts().len()))
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            rt,
+            gate: Gate::new(opts.max_inflight),
+            batcher: Batcher::new(opts.batch_window, opts.max_batch),
+            draining: AtomicBool::new(false),
+            stop: Mutex::new(false),
+            stop_cv: Condvar::new(),
+            sessions: Mutex::new(Vec::new()),
+            completions: Mutex::new(Vec::new()),
+            next_session: AtomicU64::new(1),
+            requests_ok: AtomicU64::new(0),
+            requests_err: AtomicU64::new(0),
+            ctx_names,
+            default_ctx,
+            started: Instant::now(),
+        });
+
+        let accept = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || accept_loop(shared, listener))
+                .expect("spawning accept thread")
+        };
+        let dispatcher = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("serve-dispatch".into())
+                .spawn(move || dispatch_loop(shared))
+                .expect("spawning dispatcher thread")
+        };
+
+        Ok(Server {
+            local_addr,
+            shared,
+            accept: Some(accept),
+            dispatcher: Some(dispatcher),
+        })
+    }
+
+    /// The actual bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Context partitions (name -> worker ids), for tooling and tests.
+    pub fn context_table(&self) -> Vec<(String, Vec<usize>)> {
+        let infos = self.shared.rt.contexts();
+        self.shared
+            .ctx_names
+            .iter()
+            .map(|(name, id)| (name.clone(), infos[*id].workers.clone()))
+            .collect()
+    }
+
+    /// Block until a client sends a `shutdown` request, then drain.
+    pub fn serve_forever(self) -> Result<StatsResp> {
+        {
+            let mut stop = self.shared.stop.lock().unwrap();
+            while !*stop {
+                stop = self.shared.stop_cv.wait(stop).unwrap();
+            }
+        }
+        self.shutdown()
+    }
+
+    /// Graceful drain: stop accepting, let sessions finish, flush the
+    /// batcher, wait for every admitted request to complete.
+    pub fn shutdown(mut self) -> Result<StatsResp> {
+        let shared = &self.shared;
+        shared.draining.store(true, Ordering::SeqCst);
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        // sessions observe `draining` within one read timeout; join them
+        // *before* draining the batcher so a session blocked on the
+        // admission gate can still enqueue (its job will be flushed).
+        loop {
+            let handles: Vec<JoinHandle<()>> =
+                std::mem::take(&mut *shared.sessions.lock().unwrap());
+            if handles.is_empty() {
+                break;
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+        shared.batcher.drain();
+        if let Some(j) = self.dispatcher.take() {
+            let _ = j.join();
+        }
+        // dispatcher exited => no new completion threads can appear
+        let completions: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *shared.completions.lock().unwrap());
+        for c in completions {
+            let _ = c.join();
+        }
+        debug_assert_eq!(shared.gate.inflight(), 0, "drain left requests behind");
+        // belt-and-braces: any stray tasks (there should be none)
+        let _ = shared.rt.wait_all();
+        Ok(shared.stats_snapshot())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        self.shared.batcher.drain();
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.dispatcher.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+// ------------------------------------------------------------ accept loop
+
+fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
+    while !shared.draining.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let sid = shared.next_session.fetch_add(1, Ordering::Relaxed);
+                let shared2 = shared.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("serve-session-{sid}"))
+                    .spawn(move || session_loop(shared2, stream, sid))
+                    .expect("spawning session thread");
+                shared.sessions.lock().unwrap().push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+// ----------------------------------------------------------- session loop
+
+fn session_loop(shared: Arc<Shared>, stream: TcpStream, sid: u64) {
+    let _ = stream.set_nodelay(true);
+    // periodic timeout so the session observes `draining` while idle
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let reply: ReplyLane = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {
+                let keep = handle_request(&shared, &reply, line.trim(), sid);
+                line.clear();
+                // also break on drain here: a chatty client whose reads
+                // never time out must not hold the session (and thereby
+                // Server::shutdown's join) open forever
+                if !keep || shared.draining.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // partial data (if any) stays in `line`; just check drain
+                if shared.draining.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Handle one request line; returns false when the session should close.
+fn handle_request(shared: &Arc<Shared>, reply: &ReplyLane, line: &str, sid: u64) -> bool {
+    if line.is_empty() {
+        return true;
+    }
+    let req = match protocol::decode_request(line) {
+        Ok(r) => r,
+        Err(e) => {
+            send_line(
+                reply,
+                &Response::Error {
+                    id: None,
+                    error: format!("{e:#}"),
+                },
+            );
+            return true;
+        }
+    };
+    match req {
+        Request::Hello { client: _ } => {
+            send_line(
+                reply,
+                &Response::Hello {
+                    session: sid,
+                    version: PROTOCOL_VERSION,
+                },
+            );
+            true
+        }
+        Request::Stats => {
+            send_line(reply, &Response::Stats(shared.stats_snapshot()));
+            true
+        }
+        Request::Contexts => {
+            let contexts = shared
+                .rt
+                .contexts()
+                .into_iter()
+                .map(|c| CtxDesc {
+                    id: c.id,
+                    name: c.name,
+                    policy: c.policy.name().to_string(),
+                    workers: c.workers,
+                    queued: c.queued,
+                })
+                .collect();
+            send_line(reply, &Response::Contexts { contexts });
+            true
+        }
+        Request::Shutdown => {
+            send_line(reply, &Response::Shutdown);
+            let mut stop = shared.stop.lock().unwrap();
+            *stop = true;
+            shared.stop_cv.notify_all();
+            true
+        }
+        Request::Quit => {
+            send_line(reply, &Response::Bye);
+            false
+        }
+        Request::Submit(req) => {
+            let id = req.id;
+            if shared.draining.load(Ordering::SeqCst) {
+                send_line(
+                    reply,
+                    &Response::Error {
+                        id: Some(id),
+                        error: "server is draining".into(),
+                    },
+                );
+                return true;
+            }
+            let (ctx_id, ctx_name) = match shared.resolve_ctx(req.ctx.as_deref()) {
+                Ok(x) => x,
+                Err(e) => {
+                    shared.requests_err.fetch_add(1, Ordering::Relaxed);
+                    send_line(
+                        reply,
+                        &Response::Error {
+                            id: Some(id),
+                            error: format!("{e:#}"),
+                        },
+                    );
+                    return true;
+                }
+            };
+            // admission control: block (backpressure) until capacity
+            shared.gate.acquire();
+            shared.batcher.add(Job {
+                req,
+                ctx_id,
+                ctx_name,
+                reply: reply.clone(),
+            });
+            true
+        }
+    }
+}
+
+// -------------------------------------------------------- dispatch + exec
+
+fn dispatch_loop(shared: Arc<Shared>) {
+    while let Some(batches) = shared.batcher.collect() {
+        for (_app, mut jobs) in batches {
+            while !jobs.is_empty() {
+                let take = jobs.len().min(shared.batcher.max_batch);
+                let chunk: Vec<Job> = jobs.drain(..take).collect();
+                run_batch(&shared, chunk);
+            }
+        }
+        // prune finished completion threads so the list stays bounded
+        let mut comps = shared.completions.lock().unwrap();
+        let done: Vec<usize> = comps
+            .iter()
+            .enumerate()
+            .filter(|(_, h)| h.is_finished())
+            .map(|(i, _)| i)
+            .collect();
+        for i in done.into_iter().rev() {
+            let _ = comps.swap_remove(i).join();
+        }
+    }
+}
+
+/// Submit one batch of same-app jobs and hand completion to a worker
+/// thread (submission itself is cheap; waiting must not block the
+/// dispatcher, or contexts could not make progress concurrently).
+fn run_batch(shared: &Arc<Shared>, jobs: Vec<Job>) {
+    let batch_size = jobs.len();
+    let mut submitted = Vec::new();
+    for job in jobs {
+        match submit_job(shared, &job) {
+            Ok((inst, ids)) => submitted.push((job, inst, ids)),
+            Err(e) => {
+                shared.requests_err.fetch_add(1, Ordering::Relaxed);
+                send_line(
+                    &job.reply,
+                    &Response::Error {
+                        id: Some(job.req.id),
+                        error: format!("{e:#}"),
+                    },
+                );
+                shared.gate.release();
+            }
+        }
+    }
+    if submitted.is_empty() {
+        return;
+    }
+    let shared2 = shared.clone();
+    let handle = std::thread::Builder::new()
+        .name("serve-complete".into())
+        .spawn(move || {
+            for (job, inst, ids) in submitted {
+                complete_job(&shared2, job, inst, ids, batch_size);
+            }
+        })
+        .expect("spawning completion thread");
+    shared.completions.lock().unwrap().push(handle);
+}
+
+/// Register a fresh instance and submit the request's task chain.
+fn submit_job(shared: &Arc<Shared>, job: &Job) -> Result<(apps::Instance, Vec<TaskId>)> {
+    let rt = &shared.rt;
+    if job.req.tasks > 1 && !apps::idempotent(&job.req.app) {
+        bail!(
+            "app '{}' mutates its input in place; a verified task chain \
+             (tasks > 1) is only supported for idempotent apps {:?}",
+            job.req.app,
+            apps::IDEMPOTENT
+        );
+    }
+    let name = apps::app_codelet_name(&job.req.app).to_string();
+    let cl = match rt.codelet(&name) {
+        Some(c) => c,
+        None => rt.register_codelet(apps::codelet(&job.req.app)?),
+    };
+    let inst = apps::prepare(rt, &job.req.app, job.req.size, job.req.seed)?;
+    let mut ids: Vec<TaskId> = Vec::with_capacity(job.req.tasks);
+    for _ in 0..job.req.tasks {
+        let mut spec =
+            TaskSpec::new(cl.clone(), inst.handles.clone(), job.req.size).in_context(job.ctx_id);
+        if let Some(v) = &job.req.variant {
+            spec = spec.with_variant(v);
+        }
+        match rt.submit(spec) {
+            Ok(id) => ids.push(id),
+            Err(e) => {
+                // unwind: wait out what we already submitted, then free
+                let _ = rt.wait_tasks(&ids);
+                rt.metrics().take_results_for(&ids);
+                rt.reap_tasks(&ids);
+                for h in &inst.handles {
+                    let _ = rt.unregister_data(*h);
+                }
+                return Err(e);
+            }
+        }
+    }
+    Ok((inst, ids))
+}
+
+/// Wait for one request's tasks, verify, reply, clean up, release.
+fn complete_job(
+    shared: &Arc<Shared>,
+    job: Job,
+    inst: apps::Instance,
+    ids: Vec<TaskId>,
+    batch: usize,
+) {
+    let rt = &shared.rt;
+    let waited = rt.wait_tasks(&ids);
+    let results = rt.metrics().take_results_for(&ids);
+    if let Some(c) = shared.ctx_tasks.get(job.ctx_id) {
+        c.fetch_add(results.len() as u64, Ordering::Relaxed);
+    }
+
+    let outcome = waited.and_then(|()| {
+        let mut rel_err = 0.0f64;
+        if job.req.verify {
+            let got = rt.snapshot(apps::output_handle(&inst))?;
+            let want = apps::expected(&inst)?;
+            let err = got.rel_l2_error(&want);
+            if err > apps::tolerance(&job.req.app) {
+                bail!(
+                    "verification failed: rel L2 error {err} exceeds {}",
+                    apps::tolerance(&job.req.app)
+                );
+            }
+            rel_err = err as f64;
+        }
+        Ok(ResultResp {
+            id: job.req.id,
+            app: job.req.app.clone(),
+            size: job.req.size,
+            ctx: job.ctx_name.clone(),
+            variants: results.iter().map(|r| r.variant.clone()).collect(),
+            workers: results.iter().map(|r| r.worker).collect(),
+            batch,
+            modeled: results.iter().map(|r| r.modeled_total()).sum(),
+            wall: results.iter().map(|r| r.wall).sum(),
+            rel_err,
+        })
+    });
+
+    rt.reap_tasks(&ids);
+    for h in &inst.handles {
+        let _ = rt.unregister_data(*h);
+    }
+
+    match outcome {
+        Ok(resp) => {
+            shared.requests_ok.fetch_add(1, Ordering::Relaxed);
+            send_line(&job.reply, &Response::Result(resp));
+        }
+        Err(e) => {
+            shared.requests_err.fetch_add(1, Ordering::Relaxed);
+            send_line(
+                &job.reply,
+                &Response::Error {
+                    id: Some(job.req.id),
+                    error: format!("{e:#}"),
+                },
+            );
+        }
+    }
+    shared.gate.release();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_spec_parsing() {
+        let v = parse_contexts("cpu:4,gpu:1").unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0], CtxSpec { name: "cpu".into(), count: 4, arch: Arch::Cpu });
+        assert_eq!(v[1], CtxSpec { name: "gpu".into(), count: 1, arch: Arch::Cuda });
+        let v = parse_contexts("alpha:2, cuda0:3").unwrap();
+        assert_eq!(v[0].arch, Arch::Cpu);
+        assert_eq!(v[1].arch, Arch::Cuda);
+        assert!(parse_contexts("bad").is_err());
+        assert!(parse_contexts("x:0").is_err());
+        assert!(parse_contexts(":3").is_err());
+        assert!(parse_contexts("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn gate_blocks_at_cap() {
+        let gate = Arc::new(Gate::new(2));
+        gate.acquire();
+        gate.acquire();
+        assert_eq!(gate.inflight(), 2);
+        let g2 = gate.clone();
+        let t = std::thread::spawn(move || {
+            g2.acquire(); // blocks until a release
+            g2.inflight()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!t.is_finished(), "third acquire must block at cap 2");
+        gate.release();
+        assert_eq!(t.join().unwrap(), 2);
+    }
+}

@@ -62,9 +62,15 @@ struct HandleEntry {
 }
 
 /// Registry of all application data known to the runtime.
+///
+/// Slots are recycled: [`DataRegistry::unregister`] frees an entry and a
+/// later `register` reuses its index, so a long-running service that
+/// registers fresh handles per request stays bounded in memory.
 #[derive(Default)]
 pub struct DataRegistry {
-    entries: RwLock<Vec<HandleEntry>>,
+    entries: RwLock<Vec<Option<HandleEntry>>>,
+    /// Indices of unregistered slots available for reuse.
+    free: Mutex<Vec<usize>>,
     names: Mutex<HashMap<String, HandleId>>,
 }
 
@@ -75,14 +81,19 @@ impl DataRegistry {
 
     /// Register a tensor; it starts valid only in main memory.
     pub fn register(&self, tensor: Tensor) -> HandleId {
-        let mut entries = self.entries.write().unwrap();
-        let id = HandleId(entries.len());
-        entries.push(HandleEntry {
+        let entry = HandleEntry {
             tensor: Arc::new(Mutex::new(tensor)),
             valid: vec![MAIN_MEMORY],
             last_writer: None,
             readers_since_write: Vec::new(),
-        });
+        };
+        let mut entries = self.entries.write().unwrap();
+        if let Some(slot) = self.free.lock().unwrap().pop() {
+            entries[slot] = Some(entry);
+            return HandleId(slot);
+        }
+        let id = HandleId(entries.len());
+        entries.push(Some(entry));
         id
     }
 
@@ -93,12 +104,33 @@ impl DataRegistry {
         id
     }
 
+    /// Drop a handle; its slot is recycled by a later `register`. Callers
+    /// must not unregister while tasks naming the handle are in flight.
+    pub fn unregister(&self, id: HandleId) -> Result<()> {
+        let mut entries = self.entries.write().unwrap();
+        match entries.get_mut(id.0) {
+            Some(slot) if slot.is_some() => {
+                *slot = None;
+                self.names.lock().unwrap().retain(|_, v| *v != id);
+                self.free.lock().unwrap().push(id.0);
+                Ok(())
+            }
+            _ => Err(anyhow!("unknown handle {id:?}")),
+        }
+    }
+
     pub fn lookup(&self, name: &str) -> Option<HandleId> {
         self.names.lock().unwrap().get(name).copied()
     }
 
+    /// Live (registered, not-yet-unregistered) handle count.
     pub fn len(&self) -> usize {
-        self.entries.read().unwrap().len()
+        self.entries
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|e| e.is_some())
+            .count()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -109,6 +141,7 @@ impl DataRegistry {
         let mut entries = self.entries.write().unwrap();
         entries
             .get_mut(id.0)
+            .and_then(|e| e.as_mut())
             .map(f)
             .ok_or_else(|| anyhow!("unknown handle {id:?}"))
     }
@@ -118,6 +151,7 @@ impl DataRegistry {
         let entries = self.entries.read().unwrap();
         entries
             .get(id.0)
+            .and_then(|e| e.as_ref())
             .map(|e| e.tensor.clone())
             .ok_or_else(|| anyhow!("unknown handle {id:?}"))
     }
@@ -137,6 +171,7 @@ impl DataRegistry {
         let entries = self.entries.read().unwrap();
         let e = entries
             .get(id.0)
+            .and_then(|e| e.as_ref())
             .ok_or_else(|| anyhow!("unknown handle {id:?}"))?;
         if e.valid.contains(&node) {
             Ok(0)
@@ -170,8 +205,28 @@ impl DataRegistry {
         let entries = self.entries.read().unwrap();
         entries
             .get(id.0)
+            .and_then(|e| e.as_ref())
             .map(|e| e.valid.clone())
             .ok_or_else(|| anyhow!("unknown handle {id:?}"))
+    }
+
+    /// Sequential-consistency bookkeeping for one (handle, mode) access.
+    fn record_one(e: &mut HandleEntry, task: usize, mode: AccessMode, deps: &mut Vec<usize>) {
+        if mode.writes() {
+            // write-after-read + write-after-write
+            deps.extend(e.readers_since_write.iter().copied());
+            if let Some(w) = e.last_writer {
+                deps.push(w);
+            }
+            e.last_writer = Some(task);
+            e.readers_since_write.clear();
+        } else {
+            // read-after-write
+            if let Some(w) = e.last_writer {
+                deps.push(w);
+            }
+            e.readers_since_write.push(task);
+        }
     }
 
     /// Implicit-dependency bookkeeping (StarPU sequential consistency):
@@ -179,26 +234,42 @@ impl DataRegistry {
     pub fn record_access(&self, id: HandleId, task: usize, mode: AccessMode) -> Result<Vec<usize>> {
         self.with_entry(id, |e| {
             let mut deps = Vec::new();
-            if mode.writes() {
-                // write-after-read + write-after-write
-                deps.extend(e.readers_since_write.iter().copied());
-                if let Some(w) = e.last_writer {
-                    deps.push(w);
-                }
-                e.last_writer = Some(task);
-                e.readers_since_write.clear();
-            } else {
-                // read-after-write
-                if let Some(w) = e.last_writer {
-                    deps.push(w);
-                }
-                e.readers_since_write.push(task);
-            }
+            Self::record_one(e, task, mode, &mut deps);
             deps.sort_unstable();
             deps.dedup();
             deps.retain(|&t| t != task);
             deps
         })
+    }
+
+    /// Record all of one task's accesses atomically: every handle is
+    /// validated up front under a single registry lock, so a failure
+    /// (unknown/unregistered handle) mutates *no* bookkeeping — an
+    /// aborted submit must not leave a never-inserted task id behind as
+    /// a handle's `last_writer`.
+    pub fn record_access_all(
+        &self,
+        handles: &[(HandleId, AccessMode)],
+        task: usize,
+    ) -> Result<Vec<usize>> {
+        let mut entries = self.entries.write().unwrap();
+        for (h, _) in handles {
+            if entries.get(h.0).and_then(|e| e.as_ref()).is_none() {
+                return Err(anyhow!("unknown handle {h:?}"));
+            }
+        }
+        let mut deps = Vec::new();
+        for (h, m) in handles {
+            let e = entries
+                .get_mut(h.0)
+                .and_then(|e| e.as_mut())
+                .expect("validated above");
+            Self::record_one(e, task, *m, &mut deps);
+        }
+        deps.sort_unstable();
+        deps.dedup();
+        deps.retain(|&t| t != task);
+        Ok(deps)
     }
 }
 
@@ -264,6 +335,47 @@ mod tests {
         assert_eq!(deps, vec![0, 1, 2]);
         // t4 reads -> RAW on t3 only
         assert_eq!(r.record_access(id, 4, AccessMode::Read).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn record_access_all_is_atomic() {
+        let r = DataRegistry::new();
+        let a = r.register(Tensor::vector(vec![1.0]));
+        let b = r.register(Tensor::vector(vec![2.0]));
+        r.unregister(b).unwrap();
+        // writer of a in flight as task 0
+        assert!(r.record_access(a, 0, AccessMode::Write).unwrap().is_empty());
+        // task 1 names a valid and an unregistered handle: must fail
+        // WITHOUT touching a's bookkeeping
+        let err = r.record_access_all(&[(a, AccessMode::Write), (b, AccessMode::Read)], 1);
+        assert!(err.is_err());
+        // a's last_writer is still task 0, not the phantom task 1
+        assert_eq!(r.record_access(a, 2, AccessMode::Read).unwrap(), vec![0]);
+        // and the happy path aggregates deps across handles
+        let c = r.register(Tensor::vector(vec![3.0]));
+        let deps = r
+            .record_access_all(&[(a, AccessMode::Write), (c, AccessMode::Read)], 3)
+            .unwrap();
+        assert_eq!(deps, vec![0, 2]);
+    }
+
+    #[test]
+    fn unregister_recycles_slots() {
+        let r = DataRegistry::new();
+        let a = r.register_named("a", Tensor::vector(vec![1.0]));
+        let b = r.register(Tensor::vector(vec![2.0]));
+        assert_eq!(r.len(), 2);
+        r.unregister(a).unwrap();
+        assert_eq!(r.len(), 1);
+        assert!(r.snapshot(a).is_err(), "stale handle must error");
+        assert!(r.unregister(a).is_err(), "double unregister must error");
+        assert_eq!(r.lookup("a"), None, "name mapping dropped");
+        // slot is reused, other handles untouched
+        let c = r.register(Tensor::vector(vec![3.0]));
+        assert_eq!(c, a, "freed slot reused");
+        assert_eq!(r.snapshot(c).unwrap().data(), &[3.0]);
+        assert_eq!(r.snapshot(b).unwrap().data(), &[2.0]);
+        assert_eq!(r.len(), 2);
     }
 
     #[test]

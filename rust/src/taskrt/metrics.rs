@@ -18,6 +18,8 @@ pub struct TaskResult {
     /// Variant name actually executed ("omp", "cuda", ...).
     pub variant: String,
     pub worker: usize,
+    /// Scheduling context the task ran under.
+    pub ctx: crate::taskrt::CtxId,
     pub size: usize,
     /// Wall-clock execution on this machine (seconds).
     pub wall: f64,
@@ -68,6 +70,25 @@ impl Metrics {
         std::mem::take(&mut self.results.lock().unwrap())
     }
 
+    /// Take only the results for the given task ids, leaving everything
+    /// else buffered — the per-request extraction the component service
+    /// uses so concurrent requests don't steal each other's results.
+    pub fn take_results_for(&self, ids: &[TaskId]) -> Vec<TaskResult> {
+        let wanted: std::collections::BTreeSet<TaskId> = ids.iter().copied().collect();
+        let mut guard = self.results.lock().unwrap();
+        let mut taken = Vec::new();
+        guard.retain(|r| {
+            if wanted.contains(&r.task) {
+                taken.push(r.clone());
+                false
+            } else {
+                true
+            }
+        });
+        taken.sort_by_key(|r| r.task);
+        taken
+    }
+
     /// Peek without clearing.
     pub fn results(&self) -> Vec<TaskResult> {
         self.results.lock().unwrap().clone()
@@ -78,6 +99,15 @@ impl Metrics {
         let mut h = BTreeMap::new();
         for r in self.results.lock().unwrap().iter() {
             *h.entry(r.variant.clone()).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// context id -> execution count (multi-tenant accounting).
+    pub fn ctx_histogram(&self) -> BTreeMap<crate::taskrt::CtxId, usize> {
+        let mut h = BTreeMap::new();
+        for r in self.results.lock().unwrap().iter() {
+            *h.entry(r.ctx).or_insert(0) += 1;
         }
         h
     }
@@ -103,6 +133,7 @@ mod tests {
             codelet: "c".into(),
             variant: variant.into(),
             worker: 0,
+            ctx: 0,
             size: 64,
             wall: t,
             modeled_exec: t,
@@ -133,5 +164,26 @@ mod tests {
         m.record(result("omp", 1.0));
         assert_eq!(m.drain_results().len(), 1);
         assert!(m.drain_results().is_empty());
+    }
+
+    #[test]
+    fn take_results_for_is_selective() {
+        let m = Metrics::new();
+        for (task, ctx) in [(7, 0), (8, 1), (9, 1)] {
+            let mut r = result("omp", 1.0);
+            r.task = task;
+            r.ctx = ctx;
+            m.record(r);
+        }
+        let taken = m.take_results_for(&[9, 7]);
+        assert_eq!(
+            taken.iter().map(|r| r.task).collect::<Vec<_>>(),
+            vec![7, 9],
+            "sorted by task id"
+        );
+        // untouched result still buffered
+        assert_eq!(m.results().len(), 1);
+        assert_eq!(m.results()[0].task, 8);
+        assert_eq!(m.ctx_histogram()[&1], 1);
     }
 }

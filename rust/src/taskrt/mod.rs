@@ -7,6 +7,18 @@
 //! timing (DESIGN.md §3) while executing every task for real (native
 //! Rust or an AOT XLA artifact), and feeds observed times back into the
 //! history-based performance models that drive future selections.
+//!
+//! ## Scheduling contexts
+//!
+//! Since the multi-tenant serving work, a single [`Runtime`] can be
+//! partitioned into named **scheduling contexts** (StarPU's
+//! `sched_ctx` analog): each context owns a worker subset and its own
+//! scheduler policy + queues, while every context shares one
+//! [`DataRegistry`], one [`PerfModels`] store and one XLA service.
+//! Tasks submitted under a context ([`TaskSpec::in_context`]) are
+//! scheduled strictly within its partition. [`Runtime::create_context`]
+//! carves workers out of their current contexts; context 0 is the
+//! default context and initially owns every worker.
 
 pub mod codelet;
 pub mod config;
@@ -29,7 +41,7 @@ pub use perfmodel::PerfModels;
 pub use task::{TaskId, TaskSpec, TaskState};
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 
@@ -39,14 +51,48 @@ use crate::runtime::{Manifest, Tensor, XlaHandle, XlaService};
 use scheduler::{ReadyTask, SchedCtx, Scheduler, WorkerInfo};
 use task::TaskTable;
 
+/// Scheduling-context id: index into the runtime's context table.
+pub type CtxId = usize;
+
+/// The default context; owns every worker until others are carved out.
+pub const DEFAULT_CTX: CtxId = 0;
+
+/// One scheduling context: a worker partition with its own policy and
+/// queues. Immutable once published; reconfiguration replaces the slot.
+pub(crate) struct ContextSlot {
+    pub name: String,
+    pub policy: SchedPolicy,
+    pub sched: Box<dyn Scheduler>,
+    pub ctx: SchedCtx,
+}
+
+/// Public descriptor of one scheduling context (diagnostics / serving).
+#[derive(Debug, Clone)]
+pub struct ContextInfo {
+    pub id: CtxId,
+    pub name: String,
+    pub policy: SchedPolicy,
+    /// Global worker ids in this context's partition.
+    pub workers: Vec<usize>,
+    /// Tasks currently queued in this context's scheduler.
+    pub queued: usize,
+}
+
 /// Shared runtime state (one per [`Runtime`]).
 pub(crate) struct Inner {
     pub config: Config,
     pub data: Arc<DataRegistry>,
     pub codelets: RwLock<HashMap<String, Arc<Codelet>>>,
     pub tasks: Mutex<TaskTable>,
-    pub sched: Box<dyn Scheduler>,
-    pub ctx: SchedCtx,
+    /// Notified on every task completion (for [`Runtime::wait_tasks`]).
+    pub tasks_cv: Condvar,
+    /// Full machine topology (all contexts index into this).
+    pub workers: Vec<WorkerInfo>,
+    /// Context table; slots are only appended or replaced, never removed,
+    /// so a `CtxId` stays valid for the runtime's lifetime.
+    pub contexts: RwLock<Vec<Arc<ContextSlot>>>,
+    /// Current context of each worker (indexed by global worker id).
+    pub worker_ctx: Vec<AtomicUsize>,
     pub perf: Arc<PerfModels>,
     pub metrics: Metrics,
     pub noise: device::NoiseSource,
@@ -58,6 +104,38 @@ pub(crate) struct Inner {
     pub inflight_cv: Condvar,
     /// Runtime start time; task trace timestamps are relative to this.
     pub epoch: std::time::Instant,
+}
+
+impl Inner {
+    /// Fetch a context slot by id.
+    pub(crate) fn slot(&self, id: CtxId) -> Option<Arc<ContextSlot>> {
+        self.contexts.read().unwrap().get(id).cloned()
+    }
+
+    fn make_slot(
+        &self,
+        name: &str,
+        policy: SchedPolicy,
+        members: Vec<usize>,
+        salt: u64,
+    ) -> ContextSlot {
+        let mut ctx = SchedCtx::new(
+            self.workers.clone(),
+            self.perf.clone(),
+            self.data.clone(),
+            self.manifest.clone(),
+            self.config.calibrate,
+            self.config.seed ^ salt,
+        );
+        ctx.data_aware = self.config.data_aware;
+        ctx.set_members(members);
+        ContextSlot {
+            name: name.to_string(),
+            policy,
+            sched: scheduler::make(policy),
+            ctx,
+        }
+    }
 }
 
 /// The COMPAR runtime: StarPU's `starpu_init` .. `starpu_shutdown`
@@ -89,8 +167,22 @@ impl Runtime {
         }
 
         // The XLA service thread is needed whenever artifacts may run.
+        // When unavailable (e.g. built without the `xla` feature), degrade
+        // to native-only execution: without a manifest the artifact
+        // variants are simply ineligible.
+        let mut manifest = manifest;
         let xla_service = if manifest.is_some() {
-            Some(XlaService::spawn()?)
+            match XlaService::spawn() {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    eprintln!(
+                        "warning: XLA unavailable ({e:#}); \
+                         artifact variants disabled, running native-only"
+                    );
+                    manifest = None;
+                    None
+                }
+            }
         } else {
             None
         };
@@ -104,16 +196,9 @@ impl Runtime {
                 perf.load(&path)?;
             }
         }
-        let mut ctx = SchedCtx::new(
-            infos.clone(),
-            perf.clone(),
-            data.clone(),
-            manifest.clone(),
-            config.calibrate,
-            config.seed,
-        );
-        ctx.data_aware = config.data_aware;
-        let sched = scheduler::make(config.sched);
+        let worker_ctx = (0..infos.len())
+            .map(|_| AtomicUsize::new(DEFAULT_CTX))
+            .collect();
         let noise = device::NoiseSource::new(config.seed ^ 0x5eed, 0.05);
 
         let inner = Arc::new(Inner {
@@ -121,8 +206,10 @@ impl Runtime {
             data,
             codelets: RwLock::new(HashMap::new()),
             tasks: Mutex::new(TaskTable::new()),
-            sched,
-            ctx,
+            tasks_cv: Condvar::new(),
+            workers: infos.clone(),
+            contexts: RwLock::new(Vec::new()),
+            worker_ctx,
             perf,
             metrics: Metrics::new(),
             noise,
@@ -133,6 +220,12 @@ impl Runtime {
             inflight_cv: Condvar::new(),
             epoch: std::time::Instant::now(),
         });
+        // default context 0: all workers, the configured policy
+        {
+            let members: Vec<usize> = (0..inner.workers.len()).collect();
+            let slot = inner.make_slot("default", inner.config.sched, members, 0);
+            inner.contexts.write().unwrap().push(Arc::new(slot));
+        }
 
         let workers = infos
             .iter()
@@ -173,6 +266,110 @@ impl Runtime {
         self.inner.manifest.as_ref()
     }
 
+    // -------------------------------------------------------- contexts
+
+    /// Carve a new scheduling context out of the runtime: `workers` move
+    /// from their current contexts into a fresh partition running
+    /// `policy`. Requires a quiescent runtime (no tasks in flight) so no
+    /// queued task can strand on a reassigned worker; concurrent submits
+    /// block until the reconfiguration completes.
+    pub fn create_context(
+        &self,
+        name: &str,
+        workers: &[usize],
+        policy: SchedPolicy,
+    ) -> Result<CtxId> {
+        let mut members: Vec<usize> = workers.to_vec();
+        members.sort_unstable();
+        members.dedup();
+        if members.is_empty() {
+            bail!("context '{name}' needs at least one worker");
+        }
+        if let Some(&bad) = members.iter().find(|&&w| w >= self.inner.workers.len()) {
+            bail!(
+                "context '{name}': worker {bad} out of range (topology has {})",
+                self.inner.workers.len()
+            );
+        }
+        // Hold the inflight lock for the whole reconfiguration: quiescence
+        // can't be invalidated by a concurrent submit.
+        let inflight = self.inner.inflight.lock().unwrap();
+        if *inflight > 0 {
+            bail!(
+                "create_context('{name}') requires a quiescent runtime \
+                 ({} task(s) in flight — call wait_all first)",
+                *inflight
+            );
+        }
+        let mut contexts = self.inner.contexts.write().unwrap();
+        if contexts.iter().any(|c| c.name == name) {
+            bail!("context '{name}' already exists");
+        }
+        let id = contexts.len();
+
+        // Rebuild every context losing workers (slots are immutable).
+        let mut donors: Vec<CtxId> = members
+            .iter()
+            .map(|&w| self.inner.worker_ctx[w].load(Ordering::Acquire))
+            .collect();
+        donors.sort_unstable();
+        donors.dedup();
+        for donor in donors {
+            let (donor_name, donor_policy, keep) = {
+                let old = &contexts[donor];
+                let keep: Vec<usize> = old
+                    .ctx
+                    .members
+                    .iter()
+                    .copied()
+                    .filter(|w| !members.contains(w))
+                    .collect();
+                (old.name.clone(), old.policy, keep)
+            };
+            let rebuilt = self
+                .inner
+                .make_slot(&donor_name, donor_policy, keep, donor as u64);
+            contexts[donor] = Arc::new(rebuilt);
+        }
+
+        let slot = self
+            .inner
+            .make_slot(name, policy, members.clone(), 0x9e3779b9 ^ id as u64);
+        contexts.push(Arc::new(slot));
+        for &w in &members {
+            self.inner.worker_ctx[w].store(id, Ordering::Release);
+        }
+        drop(contexts);
+        drop(inflight);
+        Ok(id)
+    }
+
+    /// Look up a context id by name ("default" is context 0).
+    pub fn context_id(&self, name: &str) -> Option<CtxId> {
+        self.inner
+            .contexts
+            .read()
+            .unwrap()
+            .iter()
+            .position(|c| c.name == name)
+    }
+
+    /// Describe every scheduling context (partition + queue depth).
+    pub fn contexts(&self) -> Vec<ContextInfo> {
+        let contexts = self.inner.contexts.read().unwrap();
+        contexts
+            .iter()
+            .enumerate()
+            .map(|(id, c)| ContextInfo {
+                id,
+                name: c.name.clone(),
+                policy: c.policy,
+                workers: c.ctx.members.clone(),
+                queued: c.sched.queued(),
+            })
+            .collect()
+    }
+
     // ------------------------------------------------------------- data
 
     pub fn register_data(&self, t: Tensor) -> HandleId {
@@ -181,6 +378,12 @@ impl Runtime {
 
     pub fn register_data_named(&self, name: &str, t: Tensor) -> HandleId {
         self.inner.data.register_named(name, t)
+    }
+
+    /// Drop a data handle (slot is recycled). The caller must ensure no
+    /// in-flight task still names it.
+    pub fn unregister_data(&self, id: HandleId) -> Result<()> {
+        self.inner.data.unregister(id)
     }
 
     /// Copy out a handle's current contents (implies wait_all first for
@@ -212,17 +415,27 @@ impl Runtime {
     // ------------------------------------------------------------ tasks
 
     /// Submit a task. Implicit dependencies (sequential consistency over
-    /// its data handles) are resolved here; the task enters the scheduler
-    /// as soon as they clear.
+    /// its data handles) are resolved here; the task enters its context's
+    /// scheduler as soon as they clear.
     pub fn submit(&self, spec: TaskSpec) -> Result<TaskId> {
+        // Count the task in-flight *first*: a concurrent create_context
+        // requires (and locks out) quiescence, so once this increment
+        // lands the context table cannot be repartitioned under us.
+        *self.inner.inflight.lock().unwrap() += 1;
+        let undo = |this: &Runtime| {
+            let mut inflight = this.inner.inflight.lock().unwrap();
+            *inflight -= 1;
+            if *inflight == 0 {
+                this.inner.inflight_cv.notify_all();
+            }
+        };
+
+        let Some(slot) = self.inner.slot(spec.ctx) else {
+            undo(self);
+            bail!("unknown scheduling context {}", spec.ctx);
+        };
         // validate executability up front (StarPU would hang instead)
-        let archs: Vec<Arch> = self
-            .inner
-            .ctx
-            .workers
-            .iter()
-            .map(|w| w.arch)
-            .collect();
+        let archs = slot.ctx.member_archs();
         let probe = ReadyTask {
             id: 0,
             codelet: spec.codelet.clone(),
@@ -230,35 +443,42 @@ impl Runtime {
             handles: spec.handles.clone(),
             force_variant: spec.force_variant.clone(),
             priority: spec.priority,
+            ctx: spec.ctx,
             chosen_impl: None,
             est_cost_ns: 0,
         };
         if !archs
             .iter()
-            .any(|&a| !self.inner.ctx.eligible_impls(&probe, a).is_empty())
+            .any(|&a| !slot.ctx.eligible_impls(&probe, a).is_empty())
         {
+            undo(self);
             bail!(
                 "task on codelet '{}' (size {}) has no eligible implementation \
-                 for the current topology (ncpu={}, ncuda={}, forced={:?})",
+                 in context '{}' (workers {:?}, forced={:?})",
                 spec.codelet.name,
                 spec.size,
-                self.inner.config.ncpu,
-                self.inner.config.ncuda,
+                slot.name,
+                slot.ctx.members,
                 spec.force_variant
             );
         }
-
-        *self.inner.inflight.lock().unwrap() += 1;
 
         let (id, ready) = {
             let mut table = self.inner.tasks.lock().unwrap();
             // record_access needs the task id before insertion; TaskTable
             // assigns ids sequentially, so use the announced next id.
             let next = table.next_id();
-            let mut deps = Vec::new();
-            for (h, m) in &spec.handles {
-                deps.extend(self.inner.data.record_access(*h, next as usize, *m)?);
-            }
+            // all-or-nothing: an unknown handle must not leave partial
+            // sequential-consistency bookkeeping behind for a task id
+            // that is never inserted (and would later be reassigned)
+            let deps = match self.inner.data.record_access_all(&spec.handles, next as usize) {
+                Ok(d) => d,
+                Err(e) => {
+                    drop(table);
+                    undo(self);
+                    return Err(e);
+                }
+            };
             let mut deps: Vec<TaskId> = deps.into_iter().map(|d| d as TaskId).collect();
             // explicit dependencies (starpu_task_declare_deps analog)
             deps.extend(spec.after.iter().copied());
@@ -290,6 +510,40 @@ impl Runtime {
         Ok(())
     }
 
+    /// Block until the given tasks have finished (Done or Failed, or
+    /// already reaped). Unlike [`Runtime::wait_all`] this is safe for a
+    /// multi-tenant service: it only waits on one request's tasks and
+    /// only reports *their* errors.
+    pub fn wait_tasks(&self, ids: &[TaskId]) -> Result<()> {
+        let mut table = self.inner.tasks.lock().unwrap();
+        loop {
+            let mut first_err: Option<String> = None;
+            let all_done = ids.iter().all(|&id| match table.state(id) {
+                None | Some(TaskState::Done) => true,
+                Some(TaskState::Failed) => {
+                    if first_err.is_none() {
+                        first_err = table.error(id);
+                    }
+                    true
+                }
+                _ => false,
+            });
+            if all_done {
+                return match first_err {
+                    Some(e) => Err(anyhow!("task failed: {e}")),
+                    None => Ok(()),
+                };
+            }
+            table = self.inner.tasks_cv.wait(table).unwrap();
+        }
+    }
+
+    /// Drop bookkeeping for finished tasks (a long-running service reaps
+    /// each request's tasks after collecting its results).
+    pub fn reap_tasks(&self, ids: &[TaskId]) {
+        self.inner.tasks.lock().unwrap().remove_finished(ids);
+    }
+
     pub fn task_state(&self, id: TaskId) -> Option<TaskState> {
         self.inner.tasks.lock().unwrap().state(id)
     }
@@ -311,7 +565,7 @@ impl Runtime {
     /// Export the execution trace (chrome://tracing JSON) of everything
     /// recorded so far — StarPU's FxT trace analog.
     pub fn export_chrome_trace(&self, path: &std::path::Path) -> Result<()> {
-        trace::export_chrome_trace(&self.inner.metrics.results(), &self.inner.ctx.workers, path)
+        trace::export_chrome_trace(&self.inner.metrics.results(), &self.inner.workers, path)
     }
 
     /// Persist perf models to the configured directory.

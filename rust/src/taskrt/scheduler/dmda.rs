@@ -31,22 +31,27 @@ impl Dmda {
     }
 
     /// (worker, impl) candidates with their completion estimates;
-    /// `None` estimate = uncalibrated.
+    /// `None` estimate = uncalibrated. Only the context's member workers
+    /// are considered.
     fn candidates(task: &ReadyTask, ctx: &SchedCtx) -> Vec<(usize, usize, Option<f64>)> {
         let mut out = Vec::new();
         // §Perf: transfer cost depends only on the memory node, so cache
         // it per node instead of recomputing per worker (each lookup
-        // walks the data registry under its lock).
-        let mut node_transfer: [Option<f64>; 8] = [None; 8];
-        for w in &ctx.workers {
+        // walks the data registry under its lock). Sized from the actual
+        // topology — a fixed-size cache silently stopped caching (and
+        // before that, missed nodes entirely) past 8 memory nodes.
+        let n_nodes = ctx
+            .workers
+            .iter()
+            .map(|w| w.mem_node + 1)
+            .max()
+            .unwrap_or(1);
+        let mut node_transfer: Vec<Option<f64>> = vec![None; n_nodes];
+        for w in ctx.member_workers() {
             for i in ctx.eligible_impls(task, w.arch) {
                 let est = ctx.exec_estimate(task, i).map(|exec| {
-                    let t = if w.mem_node < node_transfer.len() {
-                        *node_transfer[w.mem_node]
-                            .get_or_insert_with(|| ctx.transfer_secs(task, w.id))
-                    } else {
-                        ctx.transfer_secs(task, w.id)
-                    };
+                    let t = *node_transfer[w.mem_node]
+                        .get_or_insert_with(|| ctx.transfer_secs(task, w.id));
                     ctx.queued_secs(w.id) + t + exec
                 });
                 out.push((w.id, i, est));
@@ -96,7 +101,7 @@ impl Scheduler for Dmda {
                 ctx.charge(w, task.est_cost_ns);
                 self.queues.push_to(w, task);
             }
-            None => self.queues.push_to(0, task), // surfaced as exec error
+            None => self.queues.push_to(ctx.fallback_worker(), task),
         }
     }
 
@@ -110,5 +115,83 @@ impl Scheduler for Dmda {
 
     fn name(&self) -> &'static str {
         "dmda"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::super::{SchedCtx, WorkerInfo};
+    use super::*;
+    use crate::runtime::Tensor;
+    use crate::taskrt::codelet::Codelet;
+    use crate::taskrt::data::{AccessMode, DataRegistry};
+    use crate::taskrt::perfmodel::{PerfModels, MIN_SAMPLES};
+
+    /// A topology with one worker per memory node, `n` nodes total.
+    fn wide_ctx(n: usize) -> (SchedCtx, crate::taskrt::HandleId) {
+        let workers: Vec<WorkerInfo> = (0..n)
+            .map(|i| WorkerInfo {
+                id: i,
+                arch: crate::taskrt::Arch::Cpu,
+                mem_node: i,
+            })
+            .collect();
+        let data = Arc::new(DataRegistry::new());
+        let h = data.register(Tensor::vector(vec![0.0; 1024]));
+        let perf = Arc::new(PerfModels::new());
+        for _ in 0..MIN_SAMPLES {
+            perf.record("c", "omp", 64, 1e-3);
+        }
+        (SchedCtx::new(workers, perf, data, None, false, 7), h)
+    }
+
+    fn ready(h: crate::taskrt::HandleId) -> ReadyTask {
+        let cl = Arc::new(
+            Codelet::new("c", "sort", vec![AccessMode::Read]).with_native(
+                "omp",
+                crate::taskrt::Arch::Cpu,
+                Arc::new(|_| Ok(())),
+            ),
+        );
+        ReadyTask {
+            id: 0,
+            codelet: cl,
+            size: 64,
+            handles: vec![(h, AccessMode::Read)],
+            force_variant: None,
+            priority: 0,
+            ctx: 0,
+            chosen_impl: None,
+            est_cost_ns: 0,
+        }
+    }
+
+    #[test]
+    fn place_handles_more_than_eight_mem_nodes() {
+        // regression: the old [Option<f64>; 8] cache broke node >= 8
+        let (ctx, h) = wide_ctx(12);
+        let (w, _i, cost) = Dmda::place(&ready(h), &ctx, |_, _, _| 0.0).unwrap();
+        // data lives on node 0, so the node-0 worker avoids all transfer
+        assert_eq!(w, 0, "should pick the transfer-free worker");
+        assert!(cost > 0.0);
+    }
+
+    #[test]
+    fn place_respects_context_members() {
+        let (mut ctx, h) = wide_ctx(12);
+        ctx.set_members(vec![9, 10, 11]);
+        for _ in 0..32 {
+            let (w, _, _) = Dmda::place(&ready(h), &ctx, |_, _, _| 0.0).unwrap();
+            assert!((9..=11).contains(&w), "placed outside partition: {w}");
+        }
+    }
+
+    #[test]
+    fn empty_partition_yields_no_placement() {
+        let (mut ctx, h) = wide_ctx(4);
+        ctx.set_members(vec![]);
+        assert!(Dmda::place(&ready(h), &ctx, |_, _, _| 0.0).is_none());
     }
 }

@@ -50,7 +50,7 @@ impl Scheduler for Heft {
                 ctx.charge(w, task.est_cost_ns);
                 self.queues.push_to(w, task);
             }
-            None => self.queues.push_to(0, task),
+            None => self.queues.push_to(ctx.fallback_worker(), task),
         }
     }
 

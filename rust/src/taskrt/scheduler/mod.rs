@@ -40,6 +40,8 @@ pub struct ReadyTask {
     pub force_variant: Option<String>,
     /// Scheduling priority (higher first within a queue).
     pub priority: i32,
+    /// Scheduling context the task was submitted under.
+    pub ctx: crate::taskrt::CtxId,
     /// Implementation chosen at push time (model-aware policies).
     pub chosen_impl: Option<usize>,
     /// Cost the policy charged to the worker's queue (to undo on finish).
@@ -55,8 +57,16 @@ pub struct WorkerInfo {
 }
 
 /// Everything a policy may consult when placing a task.
+///
+/// Since the scheduling-context refactor, one `SchedCtx` exists per
+/// *context* (worker partition): `workers` still describes the full
+/// machine (lanes and `queued_ns` are indexed by global worker id), and
+/// `members` lists the worker ids this context may place tasks on.
 pub struct SchedCtx {
     pub workers: Vec<WorkerInfo>,
+    /// Global worker ids belonging to this scheduling context. Policies
+    /// must only place tasks on member workers.
+    pub members: Vec<usize>,
     pub perf: Arc<PerfModels>,
     pub data: Arc<DataRegistry>,
     pub manifest: Option<Arc<Manifest>>,
@@ -81,8 +91,10 @@ impl SchedCtx {
         seed: u64,
     ) -> SchedCtx {
         let queued_ns = (0..workers.len()).map(|_| AtomicU64::new(0)).collect();
+        let members = (0..workers.len()).collect();
         SchedCtx {
             workers,
+            members,
             perf,
             data,
             manifest,
@@ -92,6 +104,38 @@ impl SchedCtx {
             rr: AtomicUsize::new(0),
             rng: Mutex::new(Rng::new(seed)),
         }
+    }
+
+    /// Restrict this context to a worker subset (scheduling contexts).
+    pub fn set_members(&mut self, mut members: Vec<usize>) {
+        members.sort_unstable();
+        members.dedup();
+        members.retain(|&w| w < self.workers.len());
+        self.members = members;
+    }
+
+    /// The member workers' static descriptions.
+    pub fn member_workers(&self) -> impl Iterator<Item = &WorkerInfo> {
+        self.members.iter().map(|&w| &self.workers[w])
+    }
+
+    /// Where to park a task that has no eligible placement: a *member*
+    /// worker's queue, so the error surfaces on this context's next pop
+    /// instead of stranding in another partition's lane. (Submit
+    /// pre-validates executability, so this is a defensive corner.)
+    pub fn fallback_worker(&self) -> usize {
+        self.members.first().copied().unwrap_or(0)
+    }
+
+    /// Distinct architectures present in this context's partition.
+    pub fn member_archs(&self) -> Vec<Arch> {
+        let mut archs = Vec::new();
+        for w in self.member_workers() {
+            if !archs.contains(&w.arch) {
+                archs.push(w.arch);
+            }
+        }
+        archs
     }
 
     /// Is implementation `idx` of `task` executable on `arch` right now?
@@ -126,10 +170,9 @@ impl SchedCtx {
             .collect()
     }
 
-    /// Workers with at least one eligible implementation.
+    /// Member workers with at least one eligible implementation.
     pub fn eligible_workers(&self, task: &ReadyTask) -> Vec<usize> {
-        self.workers
-            .iter()
+        self.member_workers()
             .filter(|w| !self.eligible_impls(task, w.arch).is_empty())
             .map(|w| w.id)
             .collect()

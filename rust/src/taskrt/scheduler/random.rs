@@ -28,9 +28,7 @@ impl Scheduler for RandomSched {
     fn push(&self, task: ReadyTask, ctx: &SchedCtx) {
         let eligible = ctx.eligible_workers(&task);
         if eligible.is_empty() {
-            // leave it to any worker's pop-scan to fail loudly; in
-            // practice submit() pre-validates executability.
-            self.queues.push_to(0, task);
+            self.queues.push_to(ctx.fallback_worker(), task);
             return;
         }
         let k = ctx.rng.lock().unwrap().below(eligible.len());

@@ -31,7 +31,7 @@ impl Scheduler for WorkStealing {
     fn push(&self, task: ReadyTask, ctx: &SchedCtx) {
         let eligible = ctx.eligible_workers(&task);
         if eligible.is_empty() {
-            self.queues.push_to(0, task);
+            self.queues.push_to(ctx.fallback_worker(), task);
             return;
         }
         let k = self.next.fetch_add(1, Ordering::Relaxed);

@@ -31,6 +31,9 @@ pub struct TaskSpec {
     /// Explicit dependencies in addition to the implicit data-driven
     /// ones (StarPU's `starpu_task_declare_deps`).
     pub after: Vec<TaskId>,
+    /// Scheduling context to run under (StarPU's `sched_ctx`); tasks are
+    /// placed only on the context's worker partition. 0 = default.
+    pub ctx: crate::taskrt::CtxId,
 }
 
 impl TaskSpec {
@@ -52,7 +55,14 @@ impl TaskSpec {
             force_variant: None,
             priority: 0,
             after: Vec::new(),
+            ctx: crate::taskrt::DEFAULT_CTX,
         }
+    }
+
+    /// Submit under a scheduling context (see [`crate::taskrt::Runtime::create_context`]).
+    pub fn in_context(mut self, ctx: crate::taskrt::CtxId) -> TaskSpec {
+        self.ctx = ctx;
+        self
     }
 
     pub fn with_variant(mut self, v: &str) -> TaskSpec {
@@ -176,6 +186,26 @@ impl TaskTable {
             .values()
             .find_map(|r| r.error.clone())
     }
+
+    /// Error recorded for a specific task, if it failed.
+    pub fn error(&self, id: TaskId) -> Option<String> {
+        self.records.get(&id).and_then(|r| r.error.clone())
+    }
+
+    /// Drop the records of finished (Done/Failed) tasks so a long-running
+    /// service does not accumulate one record per request forever. Tasks
+    /// still Blocked/Ready/Running are left alone; dependents of a reaped
+    /// task were already released at completion time.
+    pub fn remove_finished(&mut self, ids: &[TaskId]) {
+        for id in ids {
+            if matches!(
+                self.records.get(id).map(|r| r.state),
+                Some(TaskState::Done) | Some(TaskState::Failed)
+            ) {
+                self.records.remove(id);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -244,5 +274,23 @@ mod tests {
     fn arity_mismatch_panics() {
         let c = Arc::new(Codelet::new("t", "x", vec![AccessMode::Read, AccessMode::Write]));
         TaskSpec::new(c, vec![HandleId(0)], 8);
+    }
+
+    #[test]
+    fn in_context_sets_ctx() {
+        assert_eq!(spec().ctx, 0);
+        assert_eq!(spec().in_context(3).ctx, 3);
+    }
+
+    #[test]
+    fn remove_finished_reaps_only_done() {
+        let mut t = TaskTable::new();
+        let (a, _) = t.insert(spec(), &[]);
+        let (b, _) = t.insert(spec(), &[a]);
+        t.complete(a, Some("boom".into()));
+        t.remove_finished(&[a, b]);
+        assert_eq!(t.state(a), None, "failed task reaped");
+        assert!(t.state(b).is_some(), "ready task kept");
+        assert_eq!(t.error(a), None);
     }
 }

@@ -41,6 +41,7 @@ pub fn chrome_trace(results: &[TaskResult], workers: &[WorkerInfo]) -> Json {
     for r in results {
         let mut args = BTreeMap::new();
         args.insert("variant".into(), s(&r.variant));
+        args.insert("ctx".into(), num(r.ctx as f64));
         args.insert("size".into(), num(r.size as f64));
         args.insert("transfer_bytes".into(), num(r.transfer_bytes as f64));
         args.insert("modeled_exec_us".into(), num(r.modeled_exec * 1e6));
@@ -89,6 +90,7 @@ mod tests {
             codelet: "mmul".into(),
             variant: "cuda".into(),
             worker: 1,
+            ctx: 0,
             size: 128,
             wall: 0.001,
             modeled_exec: 0.002,

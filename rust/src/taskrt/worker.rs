@@ -1,7 +1,8 @@
-//! Worker loop: pop a ready task, acquire its data on this device's
-//! memory node (MSI coherence + transfer accounting), execute the chosen
-//! implementation variant for real, attribute modeled device time, feed
-//! the performance model, release dependents.
+//! Worker loop: pop a ready task from this worker's current scheduling
+//! context, acquire its data on this device's memory node (MSI coherence
+//! + transfer accounting), execute the chosen implementation variant for
+//! real, attribute modeled device time, feed the performance model,
+//! release dependents.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -14,16 +15,25 @@ use super::config::TimeMode;
 use super::device;
 use super::metrics::TaskResult;
 use super::scheduler::{ReadyTask, WorkerInfo};
-use super::Inner;
+use super::{ContextSlot, Inner};
 use crate::runtime::Tensor;
 
 pub(crate) fn run(inner: Arc<Inner>, me: WorkerInfo) {
     loop {
-        let task = inner
-            .sched
-            .pop(me.id, &inner.ctx, inner.config.poll);
+        // Re-resolve the context each iteration: create_context may have
+        // reassigned this worker (only while the runtime is quiescent).
+        let cid = inner.worker_ctx[me.id].load(Ordering::Acquire);
+        let Some(slot) = inner.slot(cid) else {
+            // context table not yet populated (startup race): spin gently
+            if inner.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::yield_now();
+            continue;
+        };
+        let task = slot.sched.pop(me.id, &slot.ctx, inner.config.poll);
         match task {
-            Some(t) => execute(&inner, &me, t),
+            Some(t) => execute(&inner, &me, &slot, t),
             None => {
                 if inner.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -33,15 +43,15 @@ pub(crate) fn run(inner: Arc<Inner>, me: WorkerInfo) {
     }
 }
 
-fn execute(inner: &Arc<Inner>, me: &WorkerInfo, task: ReadyTask) {
+fn execute(inner: &Arc<Inner>, me: &WorkerInfo, slot: &ContextSlot, task: ReadyTask) {
     // NOTE §Perf: the task is not flipped to Running in the table here —
     // that cost a global table lock per task for purely informational
     // state; Ready->Done is observationally equivalent for callers.
-    let outcome = execute_body(inner, me, &task);
+    let outcome = execute_body(inner, me, slot, &task);
 
     // undo the deque-model charge now that the task left the queue
     if task.est_cost_ns > 0 {
-        inner.ctx.discharge(me.id, task.est_cost_ns);
+        slot.ctx.discharge(me.id, task.est_cost_ns);
     }
 
     let error = match outcome {
@@ -60,6 +70,7 @@ fn execute(inner: &Arc<Inner>, me: &WorkerInfo, task: ReadyTask) {
         let mut table = inner.tasks.lock().unwrap();
         table.complete(task.id, error)
     };
+    inner.tasks_cv.notify_all();
     for id in ready {
         push_ready(inner, id);
     }
@@ -80,6 +91,9 @@ pub(crate) fn push_ready(inner: &Arc<Inner>, id: super::task::TaskId) {
         table.records.get(&id).map(|r| r.spec.clone())
     };
     if let Some(spec) = spec {
+        let slot = inner
+            .slot(spec.ctx)
+            .expect("context slots are never removed");
         let rt = ReadyTask {
             id,
             codelet: spec.codelet.clone(),
@@ -87,29 +101,37 @@ pub(crate) fn push_ready(inner: &Arc<Inner>, id: super::task::TaskId) {
             handles: spec.handles.clone(),
             force_variant: spec.force_variant.clone(),
             priority: spec.priority,
+            ctx: spec.ctx,
             chosen_impl: None,
             est_cost_ns: 0,
         };
-        inner.sched.push(rt, &inner.ctx);
+        slot.sched.push(rt, &slot.ctx);
     }
 }
 
-fn execute_body(inner: &Arc<Inner>, me: &WorkerInfo, task: &ReadyTask) -> Result<TaskResult> {
+fn execute_body(
+    inner: &Arc<Inner>,
+    me: &WorkerInfo,
+    slot: &ContextSlot,
+    task: &ReadyTask,
+) -> Result<TaskResult> {
     let codelet = &task.codelet;
 
     // choose the implementation (model-aware policies already did)
     let impl_idx = match task.chosen_impl {
-        Some(i) if inner.ctx.impl_eligible(task, i, me.arch) => i,
-        _ => inner
+        Some(i) if slot.ctx.impl_eligible(task, i, me.arch) => i,
+        _ => slot
             .ctx
             .pick_impl(task, me.arch)
             .ok_or_else(|| {
                 anyhow!(
-                    "no implementation of '{}' (size {}) runnable on {} worker {}",
+                    "no implementation of '{}' (size {}) runnable on {} worker {} \
+                     (context '{}')",
                     codelet.name,
                     task.size,
                     me.arch.name(),
-                    me.id
+                    me.id,
+                    slot.name
                 )
             })?,
     };
@@ -118,7 +140,7 @@ fn execute_body(inner: &Arc<Inner>, me: &WorkerInfo, task: &ReadyTask) -> Result
     // acquire data on this memory node (coherence + transfer accounting)
     let mut transfer_bytes = 0usize;
     for (h, m) in &task.handles {
-        transfer_bytes += inner.ctx.data.acquire(*h, me.mem_node, *m)?;
+        transfer_bytes += inner.data.acquire(*h, me.mem_node, *m)?;
     }
 
     // execute for real
@@ -129,7 +151,7 @@ fn execute_body(inner: &Arc<Inner>, me: &WorkerInfo, task: &ReadyTask) -> Result
             let tensors = task
                 .handles
                 .iter()
-                .map(|(h, _)| inner.ctx.data.tensor(*h))
+                .map(|(h, _)| inner.data.tensor(*h))
                 .collect::<Result<Vec<_>>>()?;
             let bufs = ExecBuffers {
                 tensors,
@@ -163,7 +185,7 @@ fn execute_body(inner: &Arc<Inner>, me: &WorkerInfo, task: &ReadyTask) -> Result
                 .handles
                 .iter()
                 .filter(|(_, m)| m.reads())
-                .map(|(h, _)| inner.ctx.data.snapshot(*h))
+                .map(|(h, _)| inner.data.snapshot(*h))
                 .collect::<Result<Vec<_>>>()?;
             let (outputs, _svc_time) = xla.run(&meta, inputs)?;
             // outputs map onto writable parameters, in declaration order
@@ -178,9 +200,9 @@ fn execute_body(inner: &Arc<Inner>, me: &WorkerInfo, task: &ReadyTask) -> Result
                     writers.len()
                 ));
             }
-            for (slot, out) in writers.into_iter().zip(outputs) {
-                let (h, _) = task.handles[slot];
-                let storage = inner.ctx.data.tensor(h)?;
+            for (slot_idx, out) in writers.into_iter().zip(outputs) {
+                let (h, _) = task.handles[slot_idx];
+                let storage = inner.data.tensor(h)?;
                 let mut guard = storage.lock().unwrap();
                 if guard.shape() != out.shape() {
                     return Err(anyhow!(
@@ -219,6 +241,7 @@ fn execute_body(inner: &Arc<Inner>, me: &WorkerInfo, task: &ReadyTask) -> Result
         codelet: codelet.name.clone(),
         variant: imp.name.clone(),
         worker: me.id,
+        ctx: task.ctx,
         size: task.size,
         wall,
         modeled_exec,

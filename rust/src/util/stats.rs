@@ -39,6 +39,22 @@ impl Summary {
     }
 }
 
+/// Linear-interpolated percentile over **sorted** samples, `q` in
+/// [0, 100] (the serving-latency p50/p95/p99 primitive).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "no samples");
+    let q = q.clamp(0.0, 100.0);
+    let pos = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
 /// Human-friendly duration formatting (ns/µs/ms/s).
 pub fn fmt_time(secs: f64) -> String {
     if secs < 1e-6 {
@@ -102,6 +118,16 @@ mod tests {
     fn summary_odd_median() {
         let s = Summary::from_samples(&[5.0, 1.0, 3.0]);
         assert_eq!(s.median, 3.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert!((percentile(&v, 50.0) - 50.5).abs() < 1e-9);
+        assert!((percentile(&v, 95.0) - 95.05).abs() < 1e-9);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
     }
 
     #[test]

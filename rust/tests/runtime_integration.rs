@@ -196,6 +196,132 @@ fn wall_time_mode_records_real_time() {
     assert!(r.modeled_exec >= 5e-3, "wall mode should reflect sleep");
 }
 
+#[test]
+fn scheduling_contexts_partition_workers() {
+    let cfg = Config {
+        ncpu: 4,
+        ncuda: 0,
+        sched: SchedPolicy::Dmda,
+        ..Config::default()
+    };
+    let rt = Runtime::new(cfg, None).unwrap();
+    let a = rt
+        .create_context("a", &[0, 1], SchedPolicy::Eager)
+        .unwrap();
+    let b = rt
+        .create_context("b", &[2, 3], SchedPolicy::WorkStealing)
+        .unwrap();
+    assert_eq!(rt.context_id("a"), Some(a));
+    assert_eq!(rt.context_id("b"), Some(b));
+    assert!(rt.context_id("nope").is_none());
+    let infos = rt.contexts();
+    assert_eq!(infos.len(), 3);
+    assert!(infos[0].workers.is_empty(), "default ctx donated everything");
+    assert_eq!(infos[a].workers, vec![0, 1]);
+    assert_eq!(infos[b].workers, vec![2, 3]);
+
+    let cl = rt.register_codelet(
+        Codelet::new("noop", "sort", vec![AccessMode::Read]).with_native(
+            "omp",
+            Arch::Cpu,
+            Arc::new(|_| Ok(())),
+        ),
+    );
+    let mut in_a = Vec::new();
+    let mut in_b = Vec::new();
+    for i in 0..24 {
+        let h = rt.register_data(Tensor::vector(vec![0.0]));
+        let ctx = if i % 2 == 0 { a } else { b };
+        let id = rt
+            .submit(TaskSpec::new(cl.clone(), vec![h], 1).in_context(ctx))
+            .unwrap();
+        if ctx == a {
+            in_a.push(id);
+        } else {
+            in_b.push(id);
+        }
+    }
+    rt.wait_all().unwrap();
+    for r in rt.drain_results() {
+        if in_a.contains(&r.task) {
+            assert!(r.worker <= 1, "ctx a task on worker {}", r.worker);
+            assert_eq!(r.ctx, a);
+        } else {
+            assert!(in_b.contains(&r.task));
+            assert!(r.worker >= 2, "ctx b task on worker {}", r.worker);
+            assert_eq!(r.ctx, b);
+        }
+    }
+
+    // the default context donated all its workers: submitting to it
+    // must fail fast rather than strand the task
+    let h = rt.register_data(Tensor::vector(vec![0.0]));
+    assert!(rt.submit(TaskSpec::new(cl.clone(), vec![h], 1)).is_err());
+    // duplicate context names are rejected
+    assert!(rt.create_context("a", &[0], SchedPolicy::Eager).is_err());
+    // out-of-range workers are rejected
+    assert!(rt.create_context("c", &[9], SchedPolicy::Eager).is_err());
+}
+
+#[test]
+fn create_context_requires_quiescence() {
+    let rt = cpu_runtime(SchedPolicy::Eager);
+    let gate = Arc::new(AtomicUsize::new(0));
+    let g2 = gate.clone();
+    let cl = rt.register_codelet(
+        Codelet::new("slow", "sort", vec![AccessMode::Read]).with_native(
+            "omp",
+            Arch::Cpu,
+            Arc::new(move |_| {
+                while g2.load(Ordering::SeqCst) == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Ok(())
+            }),
+        ),
+    );
+    let h = rt.register_data(Tensor::vector(vec![0.0]));
+    rt.submit(TaskSpec::new(cl, vec![h], 1)).unwrap();
+    let err = rt.create_context("x", &[0], SchedPolicy::Eager).unwrap_err();
+    assert!(format!("{err:#}").contains("quiescent"), "{err:#}");
+    gate.store(1, Ordering::SeqCst);
+    rt.wait_all().unwrap();
+    // quiescent now: reconfiguration succeeds
+    rt.create_context("x", &[0], SchedPolicy::Eager).unwrap();
+}
+
+#[test]
+fn wait_tasks_waits_only_its_request() {
+    let rt = cpu_runtime(SchedPolicy::Eager);
+    let cl = rt.register_codelet(
+        Codelet::new("bump", "sort", vec![AccessMode::ReadWrite]).with_native(
+            "omp",
+            Arch::Cpu,
+            Arc::new(|bufs| {
+                bufs.write(0).data_mut()[0] += 1.0;
+                Ok(())
+            }),
+        ),
+    );
+    let h1 = rt.register_data(Tensor::vector(vec![0.0]));
+    let h2 = rt.register_data(Tensor::vector(vec![0.0]));
+    let t1 = rt.submit(TaskSpec::new(cl.clone(), vec![h1], 1)).unwrap();
+    let t2 = rt.submit(TaskSpec::new(cl.clone(), vec![h2], 1)).unwrap();
+    rt.wait_tasks(&[t1, t2]).unwrap();
+    assert_eq!(rt.snapshot(h1).unwrap().data()[0], 1.0);
+    assert_eq!(rt.snapshot(h2).unwrap().data()[0], 1.0);
+    // reaped tasks are treated as done; results can be taken per-request
+    let taken = rt.metrics().take_results_for(&[t1]);
+    assert_eq!(taken.len(), 1);
+    rt.reap_tasks(&[t1, t2]);
+    assert!(rt.task_state(t1).is_none());
+    rt.wait_tasks(&[t1, t2]).unwrap();
+    // handle recycling after a request completes
+    rt.unregister_data(h1).unwrap();
+    let h3 = rt.register_data(Tensor::vector(vec![9.0]));
+    assert_eq!(h3, h1, "slot reuse");
+}
+
 // ------------------------------------------------------------------
 // artifact-backed heterogeneous tests (need `make artifacts`)
 // ------------------------------------------------------------------

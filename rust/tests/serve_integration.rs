@@ -1,0 +1,174 @@
+//! Integration tests for the multi-tenant component service: an
+//! in-process server partitioned into two scheduling contexts, driven by
+//! ≥8 concurrent clients submitting matmul/nw task graphs. Asserts
+//! numerically correct results, strict per-context worker isolation, and
+//! a clean drain (zero in-flight, every request accounted for).
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use compar::serve::{loadgen, parse_contexts, Client, LoadgenOptions, ServeOptions, Server, SubmitReq};
+use compar::taskrt::SchedPolicy;
+
+fn opts(contexts: &str) -> ServeOptions {
+    ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        contexts: parse_contexts(contexts).unwrap(),
+        sched: SchedPolicy::Dmda,
+        ncpu: 4,
+        ncuda: 0,
+        max_inflight: 16,
+        batch_window: Duration::from_micros(200),
+        max_batch: 8,
+    }
+}
+
+fn submit(id: u64, app: &str, size: usize, tasks: usize, ctx: Option<&str>, seed: u64) -> SubmitReq {
+    SubmitReq {
+        id,
+        app: app.into(),
+        size,
+        tasks,
+        ctx: ctx.map(str::to_string),
+        seed,
+        variant: None,
+        verify: true,
+    }
+}
+
+#[test]
+fn concurrent_clients_two_contexts_isolated() {
+    let server = Server::start(opts("alpha:2,beta:2")).unwrap();
+    let addr = server.local_addr().to_string();
+    let table = server.context_table();
+    let partition = |name: &str| -> BTreeSet<usize> {
+        table
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, w)| w.iter().copied().collect())
+            .unwrap_or_else(|| panic!("context {name} missing from {table:?}"))
+    };
+    let alpha = partition("alpha");
+    let beta = partition("beta");
+    assert_eq!(alpha.len(), 2);
+    assert_eq!(beta.len(), 2);
+    assert!(alpha.is_disjoint(&beta), "partitions overlap: {alpha:?} {beta:?}");
+
+    let handles: Vec<_> = (0..8)
+        .map(|i: usize| {
+            let addr = addr.clone();
+            let alpha = alpha.clone();
+            let beta = beta.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let ctx = if i % 2 == 0 { "alpha" } else { "beta" };
+                let allowed = if i % 2 == 0 { &alpha } else { &beta };
+                for r in 0..4usize {
+                    // alternate apps so same-codelet batching gets company
+                    let (app, size, tol) = if (i + r) % 2 == 0 {
+                        ("matmul", 48, 5e-3)
+                    } else {
+                        ("nw", 32, 1e-3)
+                    };
+                    let seed = 1000 + (i * 10 + r) as u64;
+                    let resp = c
+                        .submit(submit(r as u64, app, size, 2, Some(ctx), seed))
+                        .unwrap_or_else(|e| panic!("client {i} req {r}: {e:#}"));
+                    assert_eq!(resp.ctx, ctx);
+                    assert_eq!(resp.workers.len(), 2, "chain of 2 tasks");
+                    assert_eq!(resp.variants.len(), 2);
+                    for w in &resp.workers {
+                        assert!(
+                            allowed.contains(w),
+                            "context {ctx} task ran on worker {w}, partition {allowed:?}"
+                        );
+                    }
+                    assert!(
+                        resp.rel_err <= tol,
+                        "{app} rel_err {} over {tol}",
+                        resp.rel_err
+                    );
+                }
+                c.quit().unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // clean drain: nothing in flight, every request + task accounted
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.inflight, 0, "drain left requests in flight");
+    assert_eq!(stats.requests_err, 0);
+    assert_eq!(stats.requests_ok, 32, "8 clients x 4 requests");
+    assert_eq!(stats.tasks_executed, 64, "32 requests x 2-task chains");
+    assert!(stats.ctx_tasks["alpha"] > 0, "{:?}", stats.ctx_tasks);
+    assert!(stats.ctx_tasks["beta"] > 0, "{:?}", stats.ctx_tasks);
+    assert_eq!(stats.ctx_tasks["alpha"] + stats.ctx_tasks["beta"], 64);
+}
+
+#[test]
+fn loadgen_reports_throughput_and_percentiles() {
+    let server = Server::start(opts("alpha:2,beta:2")).unwrap();
+    let addr = server.local_addr().to_string();
+    let lg = LoadgenOptions {
+        clients: 4,
+        requests: 6,
+        app: "matmul".into(),
+        size: 32,
+        tasks: 1,
+        ctxs: vec!["alpha".into(), "beta".into()],
+        verify: true,
+        seed: 7,
+    };
+    let report = loadgen::run(&addr, &lg).unwrap();
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.requests, 24);
+    assert!(report.rps > 0.0);
+    assert!(report.p50 <= report.p95 && report.p95 <= report.p99);
+    assert!(report.lat_min <= report.p50 && report.p99 <= report.lat_max);
+    assert_eq!(report.per_ctx.values().sum::<usize>(), 24);
+    assert!(report.per_ctx.contains_key("alpha"), "{:?}", report.per_ctx);
+    assert!(report.per_ctx.contains_key("beta"), "{:?}", report.per_ctx);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests_err, 0);
+    assert_eq!(stats.requests_ok, 24);
+}
+
+#[test]
+fn server_rejects_bad_requests_and_recovers() {
+    let server = Server::start(opts("")).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+
+    // unknown app
+    let e = c.submit(submit(1, "bogus", 32, 1, None, 1)).unwrap_err();
+    assert!(format!("{e:#}").contains("unknown app"), "{e:#}");
+    // unknown context
+    let e = c
+        .submit(submit(2, "matmul", 32, 1, Some("nope"), 1))
+        .unwrap_err();
+    assert!(format!("{e:#}").contains("unknown context"), "{e:#}");
+    // verified chains only for idempotent apps
+    let e = c.submit(submit(3, "hotspot", 64, 2, None, 1)).unwrap_err();
+    assert!(format!("{e:#}").contains("idempotent"), "{e:#}");
+
+    // the session still works afterwards
+    let ok = c.submit(submit(4, "matmul", 32, 1, None, 5)).unwrap();
+    assert_eq!(ok.ctx, "default");
+    assert_eq!(ok.workers.len(), 1);
+
+    let contexts = c.contexts().unwrap();
+    assert_eq!(contexts.len(), 1);
+    assert_eq!(contexts[0].name, "default");
+    assert_eq!(contexts[0].workers, vec![0, 1, 2, 3]);
+
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.requests_ok, 1);
+    assert_eq!(stats.requests_err, 3);
+    c.quit().unwrap();
+
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.inflight, 0);
+}
