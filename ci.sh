@@ -20,9 +20,12 @@ echo "== tier-1 verify =="
 cargo build --release
 cargo test -q
 
-echo "== serve smoke (loadgen, in-process) =="
+echo "== serve smoke (loadgen, in-process, pipelined) =="
 cargo run --release --quiet -- loadgen \
-  --clients 4 --requests 10 --app matmul --size 32 \
-  --contexts alpha:2,beta:2 --ctxs alpha,beta
+  --clients 4 --requests 10 --app matmul --size 32 --pipeline 2 \
+  --contexts alpha:2,beta:2:epsilon --ctxs alpha,beta
+
+echo "== selection-policy bench (smoke) =="
+cargo run --release --quiet -- bench selection --smoke
 
 echo "CI OK"

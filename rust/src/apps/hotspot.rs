@@ -137,6 +137,7 @@ pub fn codelet() -> Codelet {
         .with_native("omp", Arch::Cpu, native(step_omp))
         .with_native("seq", Arch::Cpu, native(step_seq))
         .with_artifact("cuda", Arch::Cuda, "pallas")
+        .with_hint("cuda")
 }
 
 pub fn paper_variants() -> &'static [&'static str] {

@@ -142,6 +142,7 @@ pub fn codelet() -> Codelet {
     .with_native("omp", Arch::Cpu, native(omp_threads))
     .with_native("seq", Arch::Cpu, native(|| 1))
     .with_artifact("cuda", Arch::Cuda, "pallas")
+    .with_hint("cuda")
 }
 
 pub fn paper_variants() -> &'static [&'static str] {

@@ -73,6 +73,7 @@ pub fn codelet() -> Codelet {
         .with_native("omp", Arch::Cpu, native(lud_omp))
         .with_native("seq", Arch::Cpu, native(lud_seq))
         .with_artifact("cuda", Arch::Cuda, "pallas")
+        .with_hint("cuda")
 }
 
 pub fn paper_variants() -> &'static [&'static str] {

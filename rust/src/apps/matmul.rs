@@ -85,6 +85,7 @@ pub fn codelet() -> Codelet {
     .with_native("seq", Arch::Cpu, native(matmul_seq))
     .with_artifact("cuda", Arch::Cuda, "jnp")
     .with_artifact("cublas", Arch::Cuda, "pallas")
+    .with_hint("cuda")
 }
 
 /// Variants shown in Fig 1e.

@@ -87,6 +87,7 @@ pub fn codelet() -> Codelet {
         .with_native("omp", Arch::Cpu, native(nw_omp))
         .with_native("seq", Arch::Cpu, native(nw_seq))
         .with_artifact("cuda", Arch::Cuda, "pallas")
+        .with_hint("cuda")
 }
 
 pub fn paper_variants() -> &'static [&'static str] {

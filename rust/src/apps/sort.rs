@@ -77,6 +77,7 @@ pub fn codelet() -> Codelet {
         .with_native("omp", Arch::Cpu, native(sort_omp))
         .with_native("seq", Arch::Cpu, native(sort_seq))
         .with_artifact("cuda", Arch::Cuda, "pallas")
+        .with_hint("cuda")
 }
 
 pub fn paper_variants() -> &'static [&'static str] {

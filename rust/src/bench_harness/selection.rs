@@ -1,10 +1,17 @@
-//! Selection-quality experiments: the §3.2 discussion quantified.
+//! Selection-quality experiments: the §3.2 discussion quantified, plus
+//! the selection-policy shoot-out.
 //!
 //! The paper observes that StarPU's dmda (a) converges to the best
 //! variant for the Rodinia apps, and (b) for matmul "frequently chose
 //! sub-optimal options" while its models were cold. This module measures
 //! both: run a task stream through the real runtime and score every
-//! decision against the oracle (the converged device model).
+//! decision against the oracle (the converged device model). Since the
+//! unified selection engine landed, it also compares the pluggable
+//! [`SelectionPolicy`] implementations (Greedy / Calibrating /
+//! EpsilonGreedy) head-to-head on selection regret — the measurement
+//! behind "which policy should a long-running server run".
+//!
+//! [`SelectionPolicy`]: crate::taskrt::selection::SelectionPolicy
 
 use std::sync::Arc;
 
@@ -15,13 +22,23 @@ use super::report::Table;
 use crate::apps;
 use crate::runtime::Manifest;
 use crate::taskrt::device::Arch;
-use crate::taskrt::{Config, Runtime, SchedPolicy};
+use crate::taskrt::{Config, ImplKind, Runtime, SchedPolicy, SelectorKind};
+
+/// Policies the comparison bench sweeps (Forced is excluded: its regret
+/// is a property of the pinned variant, not of learning).
+pub const POLICY_SET: &[SelectorKind] = &[
+    SelectorKind::Greedy,
+    SelectorKind::Calibrating,
+    SelectorKind::EpsilonGreedy(0.1),
+];
 
 /// Decision trace of one run.
 #[derive(Debug, Clone)]
 pub struct Trace {
     pub app: String,
     pub size: usize,
+    /// Selection policy that produced the decisions.
+    pub policy: String,
     /// (selected variant, oracle variant, regret seconds) per task.
     pub decisions: Vec<(String, String, f64)>,
 }
@@ -46,35 +63,66 @@ impl Trace {
     }
 }
 
-/// Oracle = variant with minimal converged-model time (incl. transfer).
-pub fn oracle_variant(app: &str, size: usize) -> (String, f64) {
-    apps::paper_variants(app)
+/// Variants of `app` the runtime can actually execute: all of them when
+/// artifacts are available, natives only otherwise (artifact variants
+/// are ineligible without a manifest).
+pub fn runnable_variants(app: &str, with_artifacts: bool) -> Vec<String> {
+    match apps::codelet(app) {
+        Ok(cl) => cl
+            .impls
+            .iter()
+            .filter(|i| with_artifacts || matches!(i.kind, ImplKind::Native(_)))
+            .map(|i| i.name.clone())
+            .collect(),
+        Err(_) => Vec::new(),
+    }
+}
+
+/// Best variant (analytic device model, incl. transfer) within a pool.
+pub fn oracle_among(app: &str, size: usize, variants: &[String]) -> Option<(String, f64)> {
+    variants
         .iter()
         .map(|v| {
             let arch = Arch::parse(v).unwrap_or(Arch::Cpu);
-            (v.to_string(), variant_time(app, v, arch, size))
+            (v.clone(), variant_time(app, v, arch, size))
         })
         .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-        .unwrap()
 }
 
-/// Run `tasks` submissions of (app, size) under `sched` and trace the
-/// selections. Fresh runtime => cold models (the paper's scenario).
+/// Oracle over the paper's full variant set (incl. accelerator
+/// variants, whether or not artifacts are installed).
+pub fn oracle_variant(app: &str, size: usize) -> (String, f64) {
+    let pool: Vec<String> = apps::paper_variants(app)
+        .iter()
+        .map(|v| v.to_string())
+        .collect();
+    oracle_among(app, size, &pool).unwrap()
+}
+
+/// Run `tasks` submissions of (app, size) under scheduler `sched` and
+/// selection policy `selector`, tracing every selection. Fresh runtime
+/// => cold models (the paper's scenario). Regret is scored against the
+/// oracle over the *runnable* variants, so artifact-less environments
+/// stay comparable.
 pub fn trace(
     app: &str,
     size: usize,
     sched: SchedPolicy,
+    selector: SelectorKind,
     tasks: usize,
-    manifest: &Arc<Manifest>,
+    manifest: Option<&Arc<Manifest>>,
 ) -> Result<Trace> {
     let cfg = Config {
         ncpu: 2,
         ncuda: 1,
         sched,
+        selector: selector.clone(),
         ..Config::default()
     };
-    let rt = Runtime::new(cfg, Some(manifest.clone()))?;
-    let (oracle, oracle_t) = oracle_variant(app, size);
+    let rt = Runtime::new(cfg, manifest.cloned())?;
+    let pool = runnable_variants(app, manifest.is_some());
+    let (oracle, oracle_t) =
+        oracle_among(app, size, &pool).unwrap_or_else(|| ("-".into(), 0.0));
     let mut decisions = Vec::new();
     for i in 0..tasks {
         let run = apps::run_once(&rt, app, size, 7000 + i as u64, None, false)?;
@@ -85,15 +133,38 @@ pub fn trace(
     Ok(Trace {
         app: app.to_string(),
         size,
+        policy: selector.name(),
         decisions,
     })
+}
+
+/// Run every policy in [`POLICY_SET`] over the given (app, size) pairs.
+pub fn compare_policies(
+    pairs: &[(&str, usize)],
+    tasks: usize,
+    manifest: Option<&Arc<Manifest>>,
+) -> Result<Vec<Trace>> {
+    let mut out = Vec::new();
+    for &(app, size) in pairs {
+        for kind in POLICY_SET {
+            out.push(trace(
+                app,
+                size,
+                SchedPolicy::Dmda,
+                kind.clone(),
+                tasks,
+                manifest,
+            )?);
+        }
+    }
+    Ok(out)
 }
 
 /// Accuracy-over-time table: cold phase vs converged phase.
 pub fn render(traces: &[Trace]) -> String {
     let mut t = Table::new(
-        "Selection quality (dmda decisions vs oracle; paper §3.2)",
-        &["app", "size", "tasks", "cold acc.", "warm acc.", "total regret"],
+        "Selection quality (decisions vs oracle; paper §3.2)",
+        &["app", "size", "policy", "tasks", "cold acc.", "warm acc.", "total regret"],
     );
     for tr in traces {
         let n = tr.decisions.len();
@@ -101,21 +172,70 @@ pub fn render(traces: &[Trace]) -> String {
         let cold = Trace {
             app: tr.app.clone(),
             size: tr.size,
+            policy: tr.policy.clone(),
             decisions: tr.decisions[..half].to_vec(),
         };
         let warm = Trace {
             app: tr.app.clone(),
             size: tr.size,
+            policy: tr.policy.clone(),
             decisions: tr.decisions[half..].to_vec(),
         };
         t.row(vec![
             tr.app.clone(),
             tr.size.to_string(),
+            tr.policy.clone(),
             n.to_string(),
             format!("{:.0}%", cold.accuracy() * 100.0),
             format!("{:.0}%", warm.accuracy() * 100.0),
             crate::util::stats::fmt_time(tr.regret()),
         ]);
+    }
+    t.render()
+}
+
+/// Policy shoot-out: one row per (app, size), regret per policy, winner
+/// marked — the "which policy should the server run" report.
+pub fn render_comparison(traces: &[Trace]) -> String {
+    let mut headers = vec!["app".to_string(), "size".to_string()];
+    for k in POLICY_SET {
+        headers.push(format!("regret {}", k.name()));
+    }
+    headers.push("winner".into());
+    let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        "Selection-policy comparison (total regret vs oracle; lower is better)",
+        &hdr_refs,
+    );
+    // group by (app, size), preserving first-seen order
+    let mut keys: Vec<(String, usize)> = Vec::new();
+    for tr in traces {
+        let key = (tr.app.clone(), tr.size);
+        if !keys.contains(&key) {
+            keys.push(key);
+        }
+    }
+    for (app, size) in keys {
+        let mut row = vec![app.clone(), size.to_string()];
+        let mut best: Option<(String, f64)> = None;
+        for k in POLICY_SET {
+            let name = k.name();
+            let regret = traces
+                .iter()
+                .find(|tr| tr.app == app && tr.size == size && tr.policy == name)
+                .map(|tr| tr.regret());
+            match regret {
+                Some(r) => {
+                    row.push(crate::util::stats::fmt_time(r));
+                    if best.as_ref().map(|(_, b)| r < *b).unwrap_or(true) {
+                        best = Some((name, r));
+                    }
+                }
+                None => row.push("-".into()),
+            }
+        }
+        row.push(best.map(|(n, _)| n).unwrap_or_else(|| "-".into()));
+        t.row(row);
     }
     t.render()
 }
@@ -137,10 +257,20 @@ mod tests {
     }
 
     #[test]
+    fn native_only_pool_excludes_artifacts() {
+        let v = runnable_variants("matmul", false);
+        assert!(v.contains(&"omp".to_string()) && v.contains(&"seq".to_string()));
+        assert!(!v.contains(&"cuda".to_string()), "{v:?}");
+        let all = runnable_variants("matmul", true);
+        assert!(all.contains(&"cuda".to_string()));
+    }
+
+    #[test]
     fn accuracy_and_regret_math() {
         let t = Trace {
             app: "x".into(),
             size: 1,
+            policy: "greedy".into(),
             decisions: vec![
                 ("a".into(), "a".into(), 0.0),
                 ("b".into(), "a".into(), 0.5),

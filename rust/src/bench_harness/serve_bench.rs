@@ -49,6 +49,10 @@ pub fn render(report: &LoadReport, stats: &StatsResp) -> String {
             .collect();
         out.push_str(&format!("tasks per context: {}\n", cells.join("  ")));
     }
+    for (ctx, hist) in &stats.ctx_variants {
+        let cells: Vec<String> = hist.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        out.push_str(&format!("selection[{ctx}]: {}\n", cells.join("  ")));
+    }
     out
 }
 
@@ -67,6 +71,11 @@ pub fn to_json(
     knobs.insert("app".into(), Json::Str(load.app.clone()));
     knobs.insert("size".into(), Json::Num(load.size as f64));
     knobs.insert("tasks".into(), Json::Num(load.tasks as f64));
+    knobs.insert("pipeline".into(), Json::Num(load.pipeline.max(1) as f64));
+    knobs.insert(
+        "policy".into(),
+        Json::Str(load.policy.clone().unwrap_or_else(|| "context".into())),
+    );
     knobs.insert("contexts".into(), Json::Str(contexts.to_string()));
     m.insert("config".into(), Json::Obj(knobs));
     m.insert("load".into(), loadgen::to_json(report));

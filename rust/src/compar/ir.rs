@@ -45,6 +45,9 @@ pub struct Variant {
     /// Normalized target ("cuda", "openmp", "seq", "opencl", "blas",
     /// "cublas").
     pub target: String,
+    /// Component-author selection hint (`prefer()` clause): seed the
+    /// runtime's selection-policy priors with this variant.
+    pub preferred: bool,
 }
 
 impl Variant {
@@ -71,6 +74,11 @@ impl Interface {
             .find(|p| p.is_buffer())
             .and_then(|p| p.dims.first())
             .map(String::as_str)
+    }
+
+    /// The variant carrying the `prefer()` selection hint, if any.
+    pub fn preferred_variant(&self) -> Option<&Variant> {
+        self.variants.iter().find(|v| v.preferred)
     }
 }
 
@@ -125,7 +133,12 @@ pub fn lower(program: &Program) -> ComparProgram {
                     }
                 };
                 current_first = out.interfaces[idx].params.is_empty();
-                out.interfaces[idx].variants.push(Variant { func: name, target });
+                let preferred = d.clause("prefer").is_some();
+                out.interfaces[idx].variants.push(Variant {
+                    func: name,
+                    target,
+                    preferred,
+                });
                 current = Some(idx);
             }
             Directive::Parameter { .. } => {
@@ -217,13 +230,30 @@ mod tests {
         let v = Variant {
             func: "f".into(),
             target: "cublas".into(),
+            preferred: false,
         };
         assert_eq!(v.arch(), Arch::Cuda);
         let v2 = Variant {
             func: "g".into(),
             target: "openmp".into(),
+            preferred: false,
         };
         assert_eq!(v2.arch(), Arch::Cpu);
+    }
+
+    #[test]
+    fn prefer_clause_marks_variant() {
+        let src = "\
+#pragma compar method_declare interface(f) target(cuda) name(f1) prefer()
+#pragma compar parameter name(x) type(float*) size(N) access_mode(read)
+#pragma compar parameter name(N) type(int)
+#pragma compar method_declare interface(f) target(openmp) name(f2)
+";
+        let p = lower_src(src);
+        let f = p.interface("f").unwrap();
+        assert!(f.variants[0].preferred);
+        assert!(!f.variants[1].preferred);
+        assert_eq!(f.preferred_variant().unwrap().func, "f1");
     }
 
     #[test]

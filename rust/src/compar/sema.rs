@@ -39,6 +39,8 @@ pub fn check(program: &Program) -> Vec<Diagnostic> {
     struct IfaceInfo {
         variants: Vec<String>,
         targets: Vec<String>,
+        /// variants carrying a `prefer()` selection hint
+        preferred: usize,
         /// (name, type text, size arity, mode) per parameter
         signature: Vec<(String, String, usize, String)>,
         signature_fixed: bool,
@@ -94,7 +96,20 @@ pub fn check(program: &Program) -> Vec<Diagnostic> {
                 let iface = require_single(clauses, "interface", *span, &mut diags);
                 let name = require_single(clauses, "name", *span, &mut diags);
                 let target = require_single(clauses, "target", *span, &mut diags);
-                check_unknown_clauses(clauses, &["interface", "name", "target"], &mut diags);
+                check_unknown_clauses(
+                    clauses,
+                    &["interface", "name", "target", "prefer"],
+                    &mut diags,
+                );
+                if let Some(c) = d.clause("prefer") {
+                    if !c.args.is_empty() {
+                        diags.push(Diagnostic::error(
+                            "prefer clause takes no arguments (it marks this variant as \
+                             the selection-policy prior)",
+                            c.span,
+                        ));
+                    }
+                }
                 let (Some(iface), Some(name), Some(target)) = (iface, name, target) else {
                     continue;
                 };
@@ -124,6 +139,18 @@ pub fn check(program: &Program) -> Vec<Diagnostic> {
                         ),
                         d.clause("target").unwrap().span,
                     ));
+                }
+                if let Some(c) = d.clause("prefer") {
+                    if info.preferred > 0 {
+                        diags.push(Diagnostic::warning(
+                            format!(
+                                "interface '{iface}' already has a preferred variant; \
+                                 only the first prefer() seeds the selection prior"
+                            ),
+                            c.span,
+                        ));
+                    }
+                    info.preferred += 1;
                 }
                 info.variants.push(name);
                 info.targets.push(tgt_norm);
@@ -452,5 +479,36 @@ mod tests {
     fn unknown_clause_rejected() {
         let e = errors("#pragma compar method_declare interface(f) target(cuda) name(f1) speed(fast)\n");
         assert!(e.iter().any(|m| m.contains("unknown clause 'speed'")));
+    }
+
+    #[test]
+    fn prefer_clause_accepted_without_args() {
+        let src = "\
+#pragma compar method_declare interface(f) target(cuda) name(f1) prefer()
+#pragma compar parameter name(x) type(int)
+#pragma compar initialize
+#pragma compar terminate
+";
+        assert!(errors(src).is_empty(), "{:?}", errors(src));
+    }
+
+    #[test]
+    fn prefer_clause_rejects_args() {
+        let src =
+            "#pragma compar method_declare interface(f) target(cuda) name(f1) prefer(fast)\n";
+        assert!(errors(src).iter().any(|m| m.contains("prefer clause takes no arguments")));
+    }
+
+    #[test]
+    fn duplicate_prefer_warns() {
+        let src = "\
+#pragma compar method_declare interface(f) target(cuda) name(f1) prefer()
+#pragma compar parameter name(x) type(int)
+#pragma compar method_declare interface(f) target(openmp) name(f2) prefer()
+#pragma compar initialize
+#pragma compar terminate
+";
+        let w: Vec<_> = diags_for(src).into_iter().filter(|d| !d.is_error()).collect();
+        assert!(w.iter().any(|d| d.message.contains("already has a preferred variant")));
     }
 }

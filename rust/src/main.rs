@@ -23,7 +23,7 @@ use compar::apps;
 use compar::bench_harness::{self, fig1, selection, table1f};
 use compar::compar as precompiler;
 use compar::runtime::Manifest;
-use compar::taskrt::{Config, Runtime, SchedPolicy};
+use compar::taskrt::{Config, Runtime, SchedPolicy, SelectorKind};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -72,6 +72,10 @@ fn config_from_opts(opts: &HashMap<String, String>) -> Result<Config> {
     if let Some(v) = opts.get("sched") {
         cfg.sched = SchedPolicy::parse(v).ok_or_else(|| anyhow!("unknown scheduler '{v}'"))?;
     }
+    if let Some(v) = opts.get("selector") {
+        cfg.selector = SelectorKind::parse(v)
+            .ok_or_else(|| anyhow!("unknown selection policy '{v}'"))?;
+    }
     if opts.contains_key("calibrate") {
         cfg.calibrate = true;
     }
@@ -109,16 +113,18 @@ fn print_usage() {
          \n\
          USAGE:\n\
          \x20 compar compile <file.compar.c> [--out-dir DIR] [--emit c|rust|all]\n\
-         \x20 compar run --app APP --size N [--variant V] [--sched S] [--ncpu N] [--ncuda N] [--reps R]\n\
-         \x20 compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|all> [--reps R] [--max-measured N]\n\
+         \x20 compar run --app APP --size N [--variant V] [--sched S] [--selector P] [--ncpu N] [--ncuda N] [--reps R]\n\
+         \x20 compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|all> [--reps R] [--max-measured N] [--smoke]\n\
          \x20 compar calibrate --app APP [--sizes a,b,c]\n\
-         \x20 compar serve [--addr HOST:PORT] [--contexts cpu:4,gpu:1] [--sched S] [--cap N]\n\
+         \x20 compar serve [--addr HOST:PORT] [--contexts NAME:N[:POLICY],...] [--sched S] [--selector P] [--cap N]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--batch-window-us U] [--max-batch B] [--ncpu N] [--ncuda N]\n\
          \x20 compar loadgen [--clients N] [--requests M] [--app APP] [--size N] [--tasks K]\n\
-         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--ctxs a,b] [--addr HOST:PORT | --contexts SPEC] [--out FILE] [--no-verify]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--pipeline N] [--policy P] [--ctxs a,b] [--addr HOST:PORT | --contexts SPEC]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--out FILE] [--no-verify]\n\
          \x20 compar list\n\
          \n\
-         Environment: COMPAR_NCPU, COMPAR_NCUDA, COMPAR_SCHED, COMPAR_CALIBRATE,\n\
+         Selection policies P: greedy | calibrating | epsilon[:E] | forced:VARIANT\n\
+         Environment: COMPAR_NCPU, COMPAR_NCUDA, COMPAR_SCHED, COMPAR_SELECTOR, COMPAR_CALIBRATE,\n\
          \x20 COMPAR_TIME_MODE=modeled|wall, COMPAR_PERFMODEL_DIR, COMPAR_ARTIFACTS\n\
          (STARPU_NCPU / STARPU_NCUDA / STARPU_SCHED / STARPU_CALIBRATE are accepted aliases.)"
     );
@@ -277,14 +283,39 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         ran = true;
     }
     if which == "selection" || which == "all" {
-        let Some(m) = manifest.as_ref() else {
-            bail!("selection bench needs artifacts (run `make artifacts`)");
-        };
-        let mut traces = Vec::new();
-        for (app, size) in [("matmul", 64), ("matmul", 256), ("hotspot", 128)] {
-            traces.push(selection::trace(app, size, SchedPolicy::Dmda, 30, m)?);
+        let smoke = opts.contains_key("smoke");
+        // without artifacts the bench degrades to the native variant
+        // pool (regret stays comparable: the oracle is restricted too)
+        if manifest.is_none() {
+            println!("(selection bench: no artifacts; native variant pool only)");
         }
+        let tasks = if smoke { 8 } else { 30 };
+        let pairs: Vec<(&str, usize)> = if smoke {
+            vec![("matmul", 48), ("sort", 4096), ("hotspot", 64)]
+        } else if manifest.is_some() {
+            vec![
+                ("hotspot", 128),
+                ("hotspot3d", 64),
+                ("lud", 256),
+                ("nw", 256),
+                ("matmul", 64),
+                ("matmul", 256),
+                ("sort", 16384),
+            ]
+        } else {
+            vec![
+                ("hotspot", 64),
+                ("hotspot3d", 32),
+                ("lud", 64),
+                ("nw", 64),
+                ("matmul", 48),
+                ("matmul", 128),
+                ("sort", 4096),
+            ]
+        };
+        let traces = selection::compare_policies(&pairs, tasks, manifest.as_ref())?;
         println!("{}", selection::render(&traces));
+        println!("{}", selection::render_comparison(&traces));
         ran = true;
     }
     if !ran {
@@ -305,6 +336,11 @@ fn serve_options_from(opts: &HashMap<String, String>) -> Result<compar::serve::S
     }
     if let Some(v) = opts.get("sched") {
         so.sched = SchedPolicy::parse(v).ok_or_else(|| anyhow!("unknown scheduler '{v}'"))?;
+    }
+    if let Some(v) = opts.get("selector") {
+        so.selector = Some(
+            SelectorKind::parse(v).ok_or_else(|| anyhow!("unknown selection policy '{v}'"))?,
+        );
     }
     if let Some(v) = opts.get("ncpu") {
         so.ncpu = v.parse().context("--ncpu")?;
@@ -366,6 +402,15 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
             .filter(|s| !s.is_empty())
             .map(str::to_string)
             .collect();
+    }
+    if let Some(v) = opts.get("pipeline") {
+        lg.pipeline = v.parse::<usize>().context("--pipeline")?.max(1);
+    }
+    if let Some(v) = opts.get("policy") {
+        if SelectorKind::parse(v).is_none() {
+            bail!("unknown selection policy '{v}' for --policy");
+        }
+        lg.policy = Some(v.clone());
     }
     if let Some(v) = opts.get("seed") {
         lg.seed = v.parse().context("--seed")?;
@@ -433,6 +478,9 @@ fn cmd_calibrate(args: &[String]) -> Result<()> {
     };
     let mut cfg = config_from_opts(&opts)?;
     cfg.calibrate = true;
+    // the whole point of this subcommand is per-size calibration: pin
+    // the Calibrating policy even if COMPAR_SELECTOR says otherwise
+    cfg.selector = SelectorKind::Calibrating;
     if cfg.perfmodel_dir.is_none() {
         cfg.perfmodel_dir = Some("perfmodels".into());
     }

@@ -1,7 +1,9 @@
-//! Blocking client for the component service: one TCP connection, one
-//! outstanding request at a time (the protocol supports pipelining via
-//! ids; the load generator opens one connection per simulated client
-//! instead, which is also how it measures per-request latency honestly).
+//! Blocking client for the component service. One TCP connection; the
+//! simple [`Client::submit`] keeps one request outstanding, while
+//! [`Client::send_submit`] / [`Client::recv_response`] expose the wire
+//! protocol's correlation ids so callers (the load generator's
+//! `--pipeline N` mode) can keep several requests in flight and match
+//! out-of-order completions by id.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -21,6 +23,13 @@ pub struct Client {
 impl Client {
     /// Connect and perform the hello handshake.
     pub fn connect(addr: &str) -> Result<Client> {
+        Client::connect_with_policy(addr, None)
+    }
+
+    /// Connect, optionally asking the server to run every submit on this
+    /// session under `policy` ("greedy" | "calibrating" | "epsilon[:E]"
+    /// | "forced:VARIANT").
+    pub fn connect_with_policy(addr: &str, policy: Option<&str>) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let _ = stream.set_nodelay(true);
         let writer = stream.try_clone()?;
@@ -31,6 +40,7 @@ impl Client {
         };
         c.send(&Request::Hello {
             client: format!("compar-client-{}", std::process::id()),
+            policy: policy.map(str::to_string),
         })?;
         match c.recv()? {
             Response::Hello { session, version } => {
@@ -39,6 +49,7 @@ impl Client {
                 }
                 c.session = session;
             }
+            Response::Error { error, .. } => bail!("server rejected hello: {error}"),
             other => bail!("expected hello, got {other:?}"),
         }
         Ok(c)
@@ -59,6 +70,17 @@ impl Client {
             bail!("server closed the connection");
         }
         protocol::decode_response(&line)
+    }
+
+    /// Fire a submit without waiting for the reply (pipelining). Pair
+    /// with [`Client::recv_response`] and match replies by request id.
+    pub fn send_submit(&mut self, req: SubmitReq) -> Result<()> {
+        self.send(&Request::Submit(req))
+    }
+
+    /// Receive the next response line (pipelining).
+    pub fn recv_response(&mut self) -> Result<Response> {
+        self.recv()
     }
 
     /// Execute one request; blocks until the (possibly batched) reply.

@@ -1,15 +1,18 @@
 //! Load generator for the component service: N client threads, each
-//! with its own connection, each firing M synchronous requests; reports
-//! throughput and the latency distribution (p50/p95/p99) plus variant
-//! and context histograms — the serving-path scaling instrument.
+//! with its own connection, each firing M requests — synchronously by
+//! default, or with up to `--pipeline` requests in flight per
+//! connection (the wire protocol's correlation ids match out-of-order
+//! completions). Reports throughput and the latency distribution
+//! (p50/p95/p99) plus variant and context histograms — the serving-path
+//! scaling instrument.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use super::client::Client;
-use super::protocol::SubmitReq;
+use super::protocol::{Response, SubmitReq};
 use crate::util::json::Json;
 use crate::util::stats;
 
@@ -26,6 +29,11 @@ pub struct LoadgenOptions {
     /// Contexts to spread requests over, round-robin per client
     /// (empty = server default routing).
     pub ctxs: Vec<String>,
+    /// Requests kept in flight per connection (1 = synchronous).
+    pub pipeline: usize,
+    /// Per-session selection policy (hello handshake); None = the
+    /// context's policy.
+    pub policy: Option<String>,
     pub verify: bool,
     pub seed: u64,
 }
@@ -39,6 +47,8 @@ impl Default for LoadgenOptions {
             size: 48,
             tasks: 1,
             ctxs: Vec::new(),
+            pipeline: 1,
+            policy: None,
             verify: true,
             seed: 42,
         }
@@ -50,6 +60,8 @@ impl Default for LoadgenOptions {
 pub struct LoadReport {
     pub clients: usize,
     pub requests: usize,
+    /// Requests in flight per connection during the run.
+    pub pipeline: usize,
     pub errors: usize,
     pub elapsed: f64,
     /// Successful requests per second of wall time.
@@ -78,8 +90,41 @@ struct ClientOutcome {
     max_rel_err: f64,
 }
 
+fn request_for(opts: &LoadgenOptions, client_idx: usize, r: usize) -> SubmitReq {
+    let ctx = if opts.ctxs.is_empty() {
+        None
+    } else {
+        Some(opts.ctxs[(client_idx + r) % opts.ctxs.len()].clone())
+    };
+    SubmitReq {
+        id: r as u64,
+        app: opts.app.clone(),
+        size: opts.size,
+        tasks: opts.tasks,
+        ctx,
+        seed: opts
+            .seed
+            .wrapping_add((client_idx as u64) << 20)
+            .wrapping_add(r as u64),
+        variant: None,
+        verify: opts.verify,
+    }
+}
+
+fn tally(out: &mut ClientOutcome, resp: &super::protocol::ResultResp, latency: f64) {
+    out.latencies.push(latency);
+    for v in &resp.variants {
+        *out.variants.entry(v.clone()).or_insert(0) += 1;
+    }
+    *out.per_ctx.entry(resp.ctx.clone()).or_insert(0) += 1;
+    if resp.batch > 1 {
+        out.batched += 1;
+    }
+    out.max_rel_err = out.max_rel_err.max(resp.rel_err);
+}
+
 fn drive_client(addr: &str, opts: &LoadgenOptions, client_idx: usize) -> Result<ClientOutcome> {
-    let mut c = Client::connect(addr)?;
+    let mut c = Client::connect_with_policy(addr, opts.policy.as_deref())?;
     let mut out = ClientOutcome {
         latencies: Vec::with_capacity(opts.requests),
         errors: 0,
@@ -88,40 +133,60 @@ fn drive_client(addr: &str, opts: &LoadgenOptions, client_idx: usize) -> Result<
         batched: 0,
         max_rel_err: 0.0,
     };
-    for r in 0..opts.requests {
-        let ctx = if opts.ctxs.is_empty() {
-            None
-        } else {
-            Some(opts.ctxs[(client_idx + r) % opts.ctxs.len()].clone())
-        };
-        let req = SubmitReq {
-            id: r as u64,
-            app: opts.app.clone(),
-            size: opts.size,
-            tasks: opts.tasks,
-            ctx,
-            seed: opts
-                .seed
-                .wrapping_add((client_idx as u64) << 20)
-                .wrapping_add(r as u64),
-            variant: None,
-            verify: opts.verify,
-        };
-        let t0 = Instant::now();
-        match c.submit(req) {
-            Ok(resp) => {
-                out.latencies.push(t0.elapsed().as_secs_f64());
-                for v in &resp.variants {
-                    *out.variants.entry(v.clone()).or_insert(0) += 1;
-                }
-                *out.per_ctx.entry(resp.ctx.clone()).or_insert(0) += 1;
-                if resp.batch > 1 {
-                    out.batched += 1;
-                }
-                out.max_rel_err = out.max_rel_err.max(resp.rel_err);
+    let window = opts.pipeline.max(1);
+    if window == 1 {
+        // synchronous: one outstanding request, honest per-request latency
+        for r in 0..opts.requests {
+            let req = request_for(opts, client_idx, r);
+            let t0 = Instant::now();
+            match c.submit(req) {
+                Ok(resp) => tally(&mut out, &resp, t0.elapsed().as_secs_f64()),
+                Err(_) => out.errors += 1,
             }
-            Err(_) => out.errors += 1,
         }
+    } else {
+        // pipelined: keep up to `window` requests in flight; replies may
+        // come back out of order, so match them by correlation id. A
+        // transport or protocol failure kills this connection only:
+        // everything unsent or unanswered counts as an error, matching
+        // the synchronous path's keep-going semantics.
+        let mut pending: HashMap<u64, Instant> = HashMap::new();
+        let mut next = 0usize;
+        let mut dead = false;
+        while !dead && (next < opts.requests || !pending.is_empty()) {
+            while pending.len() < window && next < opts.requests {
+                let req = request_for(opts, client_idx, next);
+                let id = req.id;
+                if c.send_submit(req).is_err() {
+                    dead = true;
+                    break;
+                }
+                pending.insert(id, Instant::now());
+                next += 1;
+            }
+            if dead {
+                break;
+            }
+            match c.recv_response() {
+                Ok(Response::Result(resp)) => match pending.remove(&resp.id) {
+                    Some(t0) => tally(&mut out, &resp, t0.elapsed().as_secs_f64()),
+                    None => dead = true, // unsolicited id: protocol confusion
+                },
+                Ok(Response::Error { id, .. }) => match id {
+                    Some(id) => {
+                        pending.remove(&id);
+                        out.errors += 1;
+                    }
+                    // an id-less error can't be matched to a pending
+                    // request; waiting on would hang forever — give up
+                    // on the connection (tail accounting records the
+                    // outstanding requests as errors)
+                    None => dead = true,
+                },
+                Ok(_) | Err(_) => dead = true,
+            }
+        }
+        out.errors += pending.len() + opts.requests.saturating_sub(next);
     }
     let _ = c.quit();
     Ok(out)
@@ -178,6 +243,7 @@ pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<LoadReport> {
     Ok(LoadReport {
         clients: opts.clients,
         requests: n + errors,
+        pipeline: opts.pipeline.max(1),
         errors,
         elapsed,
         rps: n as f64 / elapsed,
@@ -199,8 +265,8 @@ pub fn render(r: &LoadReport) -> String {
     let mut out = String::new();
     out.push_str("== compar loadgen report ==\n");
     out.push_str(&format!(
-        "clients {}  requests {}  errors {}  elapsed {:.3} s\n",
-        r.clients, r.requests, r.errors, r.elapsed
+        "clients {}  requests {}  pipeline {}  errors {}  elapsed {:.3} s\n",
+        r.clients, r.requests, r.pipeline, r.errors, r.elapsed
     ));
     out.push_str(&format!("throughput {:.1} req/s\n", r.rps));
     out.push_str(&format!(
@@ -243,6 +309,7 @@ pub fn to_json(r: &LoadReport) -> Json {
     let mut m = std::collections::BTreeMap::new();
     m.insert("clients".into(), Json::Num(r.clients as f64));
     m.insert("requests".into(), Json::Num(r.requests as f64));
+    m.insert("pipeline".into(), Json::Num(r.pipeline as f64));
     m.insert("errors".into(), Json::Num(r.errors as f64));
     m.insert("elapsed_s".into(), Json::Num(r.elapsed));
     m.insert("rps".into(), Json::Num(r.rps));

@@ -4,13 +4,17 @@
 //! layer turns the one-shot benchmark runtime into a *persistent
 //! service*: many concurrent clients submit task-graph requests over a
 //! newline-delimited JSON protocol, each request is routed to a
-//! **scheduling context** (a worker partition with its own scheduler —
-//! see [`crate::taskrt::Runtime::create_context`]), same-codelet
+//! **scheduling context** (a worker partition with its own scheduler
+//! and [`crate::taskrt::selection::SelectionPolicy`] — see
+//! [`crate::taskrt::Runtime::create_context_with`]), same-codelet
 //! requests are batched, an admission gate bounds in-flight work, and
 //! shutdown drains gracefully. All contexts share one data registry,
 //! one performance-model store and one XLA service, so variant
 //! selection keeps learning across tenants — the optimized-composition
-//! setting where history-based selection pays off most.
+//! setting where history-based selection pays off most. Sessions can
+//! pick their own selection policy in the hello handshake, clients can
+//! pipeline requests (correlation ids match out-of-order replies), and
+//! stats report per-context selection histograms.
 //!
 //! Layers (each its own module):
 //! * [`protocol`] — wire format (requests/responses, encode/decode).

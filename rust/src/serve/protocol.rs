@@ -10,7 +10,9 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::util::json::{self, Json};
 
-pub const PROTOCOL_VERSION: u64 = 1;
+/// v2: per-session selection policy in `hello`, `policy` on results,
+/// `selector` on context descriptors, `ctx_variants` in stats.
+pub const PROTOCOL_VERSION: u64 = 2;
 
 // --------------------------------------------------------------- requests
 
@@ -37,7 +39,14 @@ pub struct SubmitReq {
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    Hello { client: String },
+    /// Session handshake. `policy` optionally picks a variant-selection
+    /// policy for every submit on this session (e.g. "greedy",
+    /// "epsilon:0.2", "forced:omp"); `None` = the scheduling context's
+    /// policy decides.
+    Hello {
+        client: String,
+        policy: Option<String>,
+    },
     Submit(SubmitReq),
     Stats,
     Contexts,
@@ -56,6 +65,9 @@ pub struct ResultResp {
     pub size: usize,
     /// Context name the request actually ran under.
     pub ctx: String,
+    /// Selection policy that governed the request ("forced:V" for a
+    /// pinned variant, the session policy, or the context's policy).
+    pub policy: String,
     /// Per-task selected variant names, in chain order.
     pub variants: Vec<String>,
     /// Global worker ids that executed the tasks, in chain order.
@@ -76,6 +88,8 @@ pub struct CtxDesc {
     pub id: usize,
     pub name: String,
     pub policy: String,
+    /// Variant-selection policy of this context ("greedy", ...).
+    pub selector: String,
     pub workers: Vec<usize>,
     pub queued: usize,
 }
@@ -90,6 +104,10 @@ pub struct StatsResp {
     pub tasks_executed: u64,
     /// Tasks executed per context name.
     pub ctx_tasks: BTreeMap<String, u64>,
+    /// Per-context selection histogram: context name -> variant name ->
+    /// tasks executed with that variant (the paper's §3.2 histogram,
+    /// per tenant).
+    pub ctx_variants: BTreeMap<String, BTreeMap<String, u64>>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -133,7 +151,13 @@ fn strs(v: &[String]) -> Json {
 
 pub fn encode_request(r: &Request) -> String {
     let j = match r {
-        Request::Hello { client } => obj(vec![("op", s("hello")), ("client", s(client))]),
+        Request::Hello { client, policy } => {
+            let mut pairs = vec![("op", s("hello")), ("client", s(client))];
+            if let Some(p) = policy {
+                pairs.push(("policy", s(p)));
+            }
+            obj(pairs)
+        }
         Request::Submit(q) => {
             let mut pairs = vec![
                 ("op", s("submit")),
@@ -175,6 +199,7 @@ pub fn encode_response(r: &Response) -> String {
             ("app", s(&q.app)),
             ("size", n(q.size as f64)),
             ("ctx", s(&q.ctx)),
+            ("policy", s(&q.policy)),
             ("variants", strs(&q.variants)),
             ("workers", nums(&q.workers)),
             ("batch", n(q.batch as f64)),
@@ -198,6 +223,14 @@ pub fn encode_response(r: &Response) -> String {
             for (k, v) in &q.ctx_tasks {
                 ctx_tasks.insert(k.clone(), n(*v as f64));
             }
+            let mut ctx_variants = BTreeMap::new();
+            for (ctx, hist) in &q.ctx_variants {
+                let mut h = BTreeMap::new();
+                for (variant, count) in hist {
+                    h.insert(variant.clone(), n(*count as f64));
+                }
+                ctx_variants.insert(ctx.clone(), Json::Obj(h));
+            }
             obj(vec![
                 ("ok", Json::Bool(true)),
                 ("type", s("stats")),
@@ -207,6 +240,7 @@ pub fn encode_response(r: &Response) -> String {
                 ("inflight", n(q.inflight as f64)),
                 ("tasks_executed", n(q.tasks_executed as f64)),
                 ("ctx_tasks", Json::Obj(ctx_tasks)),
+                ("ctx_variants", Json::Obj(ctx_variants)),
             ])
         }
         Response::Contexts { contexts } => {
@@ -217,6 +251,7 @@ pub fn encode_response(r: &Response) -> String {
                         ("id", n(c.id as f64)),
                         ("name", s(&c.name)),
                         ("policy", s(&c.policy)),
+                        ("selector", s(&c.selector)),
                         ("workers", nums(&c.workers)),
                         ("queued", n(c.queued as f64)),
                     ])
@@ -282,6 +317,7 @@ pub fn decode_request(line: &str) -> Result<Request> {
     Ok(match op.as_str() {
         "hello" => Request::Hello {
             client: get_str(&j, "client").unwrap_or_default(),
+            policy: get_str(&j, "policy").ok(),
         },
         "submit" => {
             let tasks = get_u64(&j, "tasks").unwrap_or(1).max(1) as usize;
@@ -321,6 +357,7 @@ pub fn decode_response(line: &str) -> Result<Response> {
             app: get_str(&j, "app")?,
             size: get_u64(&j, "size")? as usize,
             ctx: get_str(&j, "ctx")?,
+            policy: get_str(&j, "policy")?,
             variants: get_str_arr(&j, "variants")?,
             workers: get_usize_arr(&j, "workers")?,
             batch: get_u64(&j, "batch")? as usize,
@@ -341,6 +378,20 @@ pub fn decode_response(line: &str) -> Result<Response> {
                     }
                 }
             }
+            let mut ctx_variants = BTreeMap::new();
+            if let Some(o) = j.get("ctx_variants").and_then(Json::as_obj) {
+                for (ctx, hist) in o {
+                    let mut h = BTreeMap::new();
+                    if let Some(ho) = hist.as_obj() {
+                        for (variant, count) in ho {
+                            if let Some(x) = count.as_f64() {
+                                h.insert(variant.clone(), x as u64);
+                            }
+                        }
+                    }
+                    ctx_variants.insert(ctx.clone(), h);
+                }
+            }
             Response::Stats(StatsResp {
                 uptime: get_f64(&j, "uptime")?,
                 requests_ok: get_u64(&j, "requests_ok")?,
@@ -348,6 +399,7 @@ pub fn decode_response(line: &str) -> Result<Response> {
                 inflight: get_u64(&j, "inflight")?,
                 tasks_executed: get_u64(&j, "tasks_executed")?,
                 ctx_tasks,
+                ctx_variants,
             })
         }
         "contexts" => {
@@ -361,6 +413,7 @@ pub fn decode_response(line: &str) -> Result<Response> {
                     id: get_u64(c, "id")? as usize,
                     name: get_str(c, "name")?,
                     policy: get_str(c, "policy")?,
+                    selector: get_str(c, "selector")?,
                     workers: get_usize_arr(c, "workers")?,
                     queued: get_u64(c, "queued")? as usize,
                 });
@@ -393,6 +446,11 @@ mod tests {
     fn request_roundtrips() {
         roundtrip_req(Request::Hello {
             client: "client-1".into(),
+            policy: None,
+        });
+        roundtrip_req(Request::Hello {
+            client: "client-2".into(),
+            policy: Some("epsilon:0.2".into()),
         });
         roundtrip_req(Request::Submit(SubmitReq {
             id: 42,
@@ -431,6 +489,7 @@ mod tests {
             app: "matmul".into(),
             size: 64,
             ctx: "alpha".into(),
+            policy: "greedy".into(),
             variants: vec!["omp".into(), "seq".into()],
             workers: vec![0, 3],
             batch: 4,
@@ -449,6 +508,11 @@ mod tests {
         let mut ctx_tasks = BTreeMap::new();
         ctx_tasks.insert("alpha".to_string(), 10u64);
         ctx_tasks.insert("beta".to_string(), 4u64);
+        let mut ctx_variants = BTreeMap::new();
+        let mut alpha_hist = BTreeMap::new();
+        alpha_hist.insert("omp".to_string(), 7u64);
+        alpha_hist.insert("cuda".to_string(), 3u64);
+        ctx_variants.insert("alpha".to_string(), alpha_hist);
         roundtrip_resp(Response::Stats(StatsResp {
             uptime: 12.5,
             requests_ok: 100,
@@ -456,12 +520,14 @@ mod tests {
             inflight: 3,
             tasks_executed: 250,
             ctx_tasks,
+            ctx_variants,
         }));
         roundtrip_resp(Response::Contexts {
             contexts: vec![CtxDesc {
                 id: 1,
                 name: "alpha".into(),
                 policy: "dmda".into(),
+                selector: "epsilon:0.1".into(),
                 workers: vec![0, 1],
                 queued: 2,
             }],

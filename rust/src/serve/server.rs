@@ -13,7 +13,7 @@
 //!                 (verify · reply · unregister · reap · release gate)
 //! ```
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -28,35 +28,51 @@ use super::protocol::{
 };
 use crate::apps;
 use crate::runtime::Manifest;
-use crate::taskrt::{Arch, Config, CtxId, Runtime, SchedPolicy, TaskId, TaskSpec};
+use crate::taskrt::{
+    Arch, Config, CtxId, Runtime, SchedPolicy, SelectionPolicy, SelectorKind, TaskId, TaskSpec,
+};
 
 // ----------------------------------------------------------- configuration
 
-/// One requested context partition: `count` workers of `arch` under
-/// scheduler policy inherited from [`ServeOptions::sched`].
+/// One requested context partition: `count` workers of `arch`, with an
+/// optional per-context variant-selection policy (tenants can run
+/// different policies); scheduler policy inherits
+/// [`ServeOptions::sched`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct CtxSpec {
     pub name: String,
     pub count: usize,
     pub arch: Arch,
+    /// Variant-selection policy; `None` = [`ServeOptions::selector`].
+    pub selector: Option<SelectorKind>,
 }
 
-/// Parse `--contexts cpu:4,gpu:1` — names containing "gpu" or "cuda"
-/// take CUDA-analog workers, everything else CPU workers.
+/// Parse `--contexts cpu:4,gpu:1,tenant:2:epsilon` — names containing
+/// "gpu" or "cuda" take CUDA-analog workers, everything else CPU
+/// workers; the optional third field picks that context's
+/// variant-selection policy (greedy | calibrating | epsilon[:E] |
+/// forced:VARIANT).
 pub fn parse_contexts(spec: &str) -> Result<Vec<CtxSpec>> {
     let mut out = Vec::new();
     for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
-        let (name, count) = part
-            .split_once(':')
-            .ok_or_else(|| anyhow!("bad context spec '{part}' (want name:count)"))?;
-        let name = name.trim();
-        let count: usize = count
-            .trim()
+        let fields: Vec<&str> = part.splitn(3, ':').map(str::trim).collect();
+        if fields.len() < 2 {
+            bail!("bad context spec '{part}' (want name:count[:selector])");
+        }
+        let name = fields[0];
+        let count: usize = fields[1]
             .parse()
             .with_context(|| format!("bad worker count in '{part}'"))?;
         if name.is_empty() || count == 0 {
             bail!("bad context spec '{part}' (empty name or zero workers)");
         }
+        let selector = match fields.get(2) {
+            Some(s) => Some(
+                SelectorKind::parse(s)
+                    .ok_or_else(|| anyhow!("unknown selection policy '{s}' in '{part}'"))?,
+            ),
+            None => None,
+        };
         let lower = name.to_ascii_lowercase();
         let arch = if lower.contains("gpu") || lower.contains("cuda") {
             Arch::Cuda
@@ -67,6 +83,7 @@ pub fn parse_contexts(spec: &str) -> Result<Vec<CtxSpec>> {
             name: name.to_string(),
             count,
             arch,
+            selector,
         });
     }
     Ok(out)
@@ -80,6 +97,10 @@ pub struct ServeOptions {
     /// Context partitions; empty = one default context over ncpu/ncuda.
     pub contexts: Vec<CtxSpec>,
     pub sched: SchedPolicy,
+    /// Default variant-selection policy for contexts without their own
+    /// (`--selector`); `None` = inherit the environment-derived config
+    /// (`COMPAR_SELECTOR`, with `STARPU_CALIBRATE` upgrading Greedy).
+    pub selector: Option<SelectorKind>,
     /// Worker counts used when `contexts` is empty.
     pub ncpu: usize,
     pub ncuda: usize,
@@ -97,6 +118,7 @@ impl Default for ServeOptions {
             addr: "127.0.0.1:7199".into(),
             contexts: Vec::new(),
             sched: SchedPolicy::Dmda,
+            selector: None,
             ncpu: 4,
             ncuda: 0,
             max_inflight: 64,
@@ -163,6 +185,12 @@ struct Job {
     req: SubmitReq,
     ctx_id: CtxId,
     ctx_name: String,
+    /// Name of the selection policy governing this request (reported in
+    /// the result response).
+    policy_name: String,
+    /// Per-session selection policy to attach to the task specs (None =
+    /// the context's policy, or a per-request `Forced` pin).
+    selector: Option<Arc<dyn SelectionPolicy>>,
     reply: ReplyLane,
 }
 
@@ -254,6 +282,9 @@ struct Shared {
     /// Tasks completed per context id (results leave Metrics per-request,
     /// so the server keeps its own per-tenant counters).
     ctx_tasks: Vec<AtomicU64>,
+    /// Per-context variant-selection histogram (context id -> variant
+    /// name -> tasks executed with it).
+    ctx_variants: Mutex<Vec<BTreeMap<String, u64>>>,
     /// Context routing table fixed at startup: name -> id.
     ctx_names: Vec<(String, CtxId)>,
     default_ctx: CtxId,
@@ -293,7 +324,7 @@ impl Shared {
     }
 
     fn stats_snapshot(&self) -> StatsResp {
-        let mut ctx_tasks = std::collections::BTreeMap::new();
+        let mut ctx_tasks = BTreeMap::new();
         for (name, id) in &self.ctx_names {
             ctx_tasks.insert(
                 name.clone(),
@@ -302,6 +333,17 @@ impl Shared {
                     .map(|a| a.load(Ordering::Relaxed))
                     .unwrap_or(0),
             );
+        }
+        let mut ctx_variants = BTreeMap::new();
+        {
+            let hists = self.ctx_variants.lock().unwrap();
+            for (name, id) in &self.ctx_names {
+                if let Some(h) = hists.get(*id) {
+                    if !h.is_empty() {
+                        ctx_variants.insert(name.clone(), h.clone());
+                    }
+                }
+            }
         }
         StatsResp {
             uptime: self.started.elapsed().as_secs_f64(),
@@ -314,6 +356,7 @@ impl Shared {
                 .tasks_executed
                 .load(Ordering::Relaxed) as u64,
             ctx_tasks,
+            ctx_variants,
         }
     }
 }
@@ -351,6 +394,12 @@ impl Server {
         cfg.ncpu = ncpu;
         cfg.ncuda = ncuda;
         cfg.sched = opts.sched;
+        // --selector overrides the env-derived default; otherwise the
+        // env config (COMPAR_SELECTOR / STARPU_CALIBRATE) stands
+        if let Some(sel) = &opts.selector {
+            cfg.selector = sel.clone();
+        }
+        let default_selector = cfg.effective_selector();
         let manifest = Manifest::load(&crate::runtime::manifest::default_dir())
             .ok()
             .map(Arc::new);
@@ -376,7 +425,11 @@ impl Server {
                         ids
                     }
                 };
-                let id = rt.create_context(&spec.name, &ids, opts.sched)?;
+                let selector = spec
+                    .selector
+                    .clone()
+                    .unwrap_or_else(|| default_selector.clone());
+                let id = rt.create_context_with(&spec.name, &ids, opts.sched, selector)?;
                 ctx_names.push((spec.name.clone(), id));
             }
             // all workers moved out of the default context: route
@@ -389,10 +442,10 @@ impl Server {
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
 
+        let n_slots = ctx_names.len().max(rt.contexts().len());
         let shared = Arc::new(Shared {
-            ctx_tasks: (0..ctx_names.len().max(rt.contexts().len()))
-                .map(|_| AtomicU64::new(0))
-                .collect(),
+            ctx_tasks: (0..n_slots).map(|_| AtomicU64::new(0)).collect(),
+            ctx_variants: Mutex::new(vec![BTreeMap::new(); n_slots]),
             rt,
             gate: Gate::new(opts.max_inflight),
             batcher: Batcher::new(opts.batch_window, opts.max_batch),
@@ -533,6 +586,16 @@ fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
 
 // ----------------------------------------------------------- session loop
 
+/// Per-session mutable state (the session thread owns it).
+#[derive(Default)]
+struct SessionState {
+    /// Selection policy chosen in the hello handshake: one live
+    /// instance shared by every submit on this session, so stateful
+    /// policies (epsilon-greedy exploration counters) learn across the
+    /// session's requests.
+    policy: Option<(String, Arc<dyn SelectionPolicy>)>,
+}
+
 fn session_loop(shared: Arc<Shared>, stream: TcpStream, sid: u64) {
     let _ = stream.set_nodelay(true);
     // periodic timeout so the session observes `draining` while idle
@@ -543,11 +606,12 @@ fn session_loop(shared: Arc<Shared>, stream: TcpStream, sid: u64) {
     };
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
+    let mut sess = SessionState::default();
     loop {
         match reader.read_line(&mut line) {
             Ok(0) => break, // EOF
             Ok(_) => {
-                let keep = handle_request(&shared, &reply, line.trim(), sid);
+                let keep = handle_request(&shared, &reply, line.trim(), sid, &mut sess);
                 line.clear();
                 // also break on drain here: a chatty client whose reads
                 // never time out must not hold the session (and thereby
@@ -571,7 +635,13 @@ fn session_loop(shared: Arc<Shared>, stream: TcpStream, sid: u64) {
 }
 
 /// Handle one request line; returns false when the session should close.
-fn handle_request(shared: &Arc<Shared>, reply: &ReplyLane, line: &str, sid: u64) -> bool {
+fn handle_request(
+    shared: &Arc<Shared>,
+    reply: &ReplyLane,
+    line: &str,
+    sid: u64,
+    sess: &mut SessionState,
+) -> bool {
     if line.is_empty() {
         return true;
     }
@@ -589,7 +659,27 @@ fn handle_request(shared: &Arc<Shared>, reply: &ReplyLane, line: &str, sid: u64)
         }
     };
     match req {
-        Request::Hello { client: _ } => {
+        Request::Hello { client: _, policy } => {
+            if let Some(p) = policy {
+                match SelectorKind::parse(&p) {
+                    Some(kind) => {
+                        sess.policy = Some((kind.name(), kind.build(sid)));
+                    }
+                    None => {
+                        send_line(
+                            reply,
+                            &Response::Error {
+                                id: None,
+                                error: format!(
+                                    "unknown selection policy '{p}' (want greedy | \
+                                     calibrating | epsilon[:E] | forced:VARIANT)"
+                                ),
+                            },
+                        );
+                        return true;
+                    }
+                }
+            }
             send_line(
                 reply,
                 &Response::Hello {
@@ -612,6 +702,7 @@ fn handle_request(shared: &Arc<Shared>, reply: &ReplyLane, line: &str, sid: u64)
                     id: c.id,
                     name: c.name,
                     policy: c.policy.name().to_string(),
+                    selector: c.selector,
                     workers: c.workers,
                     queued: c.queued,
                 })
@@ -656,12 +747,27 @@ fn handle_request(shared: &Arc<Shared>, reply: &ReplyLane, line: &str, sid: u64)
                     return true;
                 }
             };
+            // which policy governs the request: a pinned variant wins,
+            // then the session policy, then the context's own
+            let policy_name = if let Some(v) = &req.variant {
+                format!("forced:{v}")
+            } else if let Some((name, _)) = &sess.policy {
+                name.clone()
+            } else {
+                shared
+                    .rt
+                    .context_selector_name(ctx_id)
+                    .unwrap_or_else(|| "greedy".into())
+            };
+            let selector = sess.policy.as_ref().map(|(_, s)| s.clone());
             // admission control: block (backpressure) until capacity
             shared.gate.acquire();
             shared.batcher.add(Job {
                 req,
                 ctx_id,
                 ctx_name,
+                policy_name,
+                selector,
                 reply: reply.clone(),
             });
             true
@@ -747,6 +853,19 @@ fn submit_job(shared: &Arc<Shared>, job: &Job) -> Result<(apps::Instance, Vec<Ta
         Some(c) => c,
         None => rt.register_codelet(apps::codelet(&job.req.app)?),
     };
+    // validate a pinned variant against the codelet's registered
+    // variants up front: a typo is a protocol error, never a silent
+    // fallback to runtime selection
+    if let Some(v) = &job.req.variant {
+        if cl.impl_by_name(v).is_none() {
+            let known: Vec<&str> = cl.impls.iter().map(|i| i.name.as_str()).collect();
+            bail!(
+                "unknown variant '{v}' for app '{}' (registered: {})",
+                job.req.app,
+                known.join(", ")
+            );
+        }
+    }
     let inst = apps::prepare(rt, &job.req.app, job.req.size, job.req.seed)?;
     let mut ids: Vec<TaskId> = Vec::with_capacity(job.req.tasks);
     for _ in 0..job.req.tasks {
@@ -754,6 +873,8 @@ fn submit_job(shared: &Arc<Shared>, job: &Job) -> Result<(apps::Instance, Vec<Ta
             TaskSpec::new(cl.clone(), inst.handles.clone(), job.req.size).in_context(job.ctx_id);
         if let Some(v) = &job.req.variant {
             spec = spec.with_variant(v);
+        } else if let Some(sel) = &job.selector {
+            spec = spec.with_selector(sel.clone());
         }
         match rt.submit(spec) {
             Ok(id) => ids.push(id),
@@ -786,6 +907,14 @@ fn complete_job(
     if let Some(c) = shared.ctx_tasks.get(job.ctx_id) {
         c.fetch_add(results.len() as u64, Ordering::Relaxed);
     }
+    {
+        let mut hists = shared.ctx_variants.lock().unwrap();
+        if let Some(h) = hists.get_mut(job.ctx_id) {
+            for r in &results {
+                *h.entry(r.variant.clone()).or_insert(0) += 1;
+            }
+        }
+    }
 
     let outcome = waited.and_then(|()| {
         let mut rel_err = 0.0f64;
@@ -806,6 +935,7 @@ fn complete_job(
             app: job.req.app.clone(),
             size: job.req.size,
             ctx: job.ctx_name.clone(),
+            policy: job.policy_name.clone(),
             variants: results.iter().map(|r| r.variant.clone()).collect(),
             workers: results.iter().map(|r| r.worker).collect(),
             batch,
@@ -847,8 +977,24 @@ mod tests {
     fn context_spec_parsing() {
         let v = parse_contexts("cpu:4,gpu:1").unwrap();
         assert_eq!(v.len(), 2);
-        assert_eq!(v[0], CtxSpec { name: "cpu".into(), count: 4, arch: Arch::Cpu });
-        assert_eq!(v[1], CtxSpec { name: "gpu".into(), count: 1, arch: Arch::Cuda });
+        assert_eq!(
+            v[0],
+            CtxSpec {
+                name: "cpu".into(),
+                count: 4,
+                arch: Arch::Cpu,
+                selector: None
+            }
+        );
+        assert_eq!(
+            v[1],
+            CtxSpec {
+                name: "gpu".into(),
+                count: 1,
+                arch: Arch::Cuda,
+                selector: None
+            }
+        );
         let v = parse_contexts("alpha:2, cuda0:3").unwrap();
         assert_eq!(v[0].arch, Arch::Cpu);
         assert_eq!(v[1].arch, Arch::Cuda);
@@ -856,6 +1002,15 @@ mod tests {
         assert!(parse_contexts("x:0").is_err());
         assert!(parse_contexts(":3").is_err());
         assert!(parse_contexts("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn context_spec_parses_per_context_selector() {
+        let v = parse_contexts("a:2:greedy,b:2:epsilon:0.2,c:1:forced:omp").unwrap();
+        assert_eq!(v[0].selector, Some(SelectorKind::Greedy));
+        assert_eq!(v[1].selector, Some(SelectorKind::EpsilonGreedy(0.2)));
+        assert_eq!(v[2].selector, Some(SelectorKind::Forced("omp".into())));
+        assert!(parse_contexts("a:2:bogus").is_err());
     }
 
     #[test]

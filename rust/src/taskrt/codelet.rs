@@ -84,6 +84,10 @@ pub struct Codelet {
     /// Parameter access modes, in declaration order.
     pub modes: Vec<AccessMode>,
     pub impls: Vec<Implementation>,
+    /// Component-author selection hint: the variant name expected to win
+    /// (the pre-compiler's `prefer(...)` clause lands here). Selection
+    /// policies explore the hinted variant first while models are cold.
+    pub hint: Option<String>,
 }
 
 impl Codelet {
@@ -93,7 +97,15 @@ impl Codelet {
             app: app.to_string(),
             modes,
             impls: Vec::new(),
+            hint: None,
         }
+    }
+
+    /// Seed selection priors with the expected-winner variant (builder
+    /// style; emitted by the pre-compiler's `prefer(...)` clause).
+    pub fn with_hint(mut self, variant: &str) -> Codelet {
+        self.hint = Some(variant.to_string());
+        self
     }
 
     /// Add a native variant (builder style).

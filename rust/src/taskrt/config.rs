@@ -5,6 +5,8 @@
 
 use std::time::Duration;
 
+use super::selection::SelectorKind;
+
 /// Scheduling policy selector (see `scheduler/`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedPolicy {
@@ -63,8 +65,13 @@ pub struct Config {
     /// CUDA-analog device workers (each owns an XLA service handle).
     pub ncuda: usize,
     pub sched: SchedPolicy,
-    /// Force perf-model calibration (round-robin over variants) like
-    /// STARPU_CALIBRATE=1.
+    /// Default variant-selection policy for scheduling contexts (see
+    /// [`crate::taskrt::selection`]). Contexts created through
+    /// [`crate::taskrt::Runtime::create_context_with`] may override it.
+    pub selector: SelectorKind,
+    /// Force full per-size calibration like STARPU_CALIBRATE=1: when the
+    /// selector is the default Greedy, contexts run the Calibrating
+    /// policy instead (see [`Config::effective_selector`]).
     pub calibrate: bool,
     pub time_mode: TimeMode,
     /// Directory for persisted performance models.
@@ -85,6 +92,7 @@ impl Default for Config {
             ncpu: 4,
             ncuda: 1,
             sched: SchedPolicy::Dmda,
+            selector: SelectorKind::Greedy,
             calibrate: false,
             time_mode: TimeMode::Modeled,
             perfmodel_dir: None,
@@ -129,6 +137,11 @@ impl Config {
                 c.sched = p;
             }
         }
+        if let Some(s) = env_str(&["COMPAR_SELECTOR"]) {
+            if let Some(k) = SelectorKind::parse(&s) {
+                c.selector = k;
+            }
+        }
         if let Some(n) = env_usize(&["COMPAR_CALIBRATE", "STARPU_CALIBRATE"]) {
             c.calibrate = n != 0;
         }
@@ -171,6 +184,21 @@ impl Config {
         self
     }
 
+    pub fn with_selector(mut self, k: SelectorKind) -> Config {
+        self.selector = k;
+        self
+    }
+
+    /// The selector new contexts get by default: the configured one,
+    /// with STARPU_CALIBRATE upgrading the default Greedy to Calibrating.
+    pub fn effective_selector(&self) -> SelectorKind {
+        if self.calibrate && self.selector == SelectorKind::Greedy {
+            SelectorKind::Calibrating
+        } else {
+            self.selector.clone()
+        }
+    }
+
     pub fn total_workers(&self) -> usize {
         self.ncpu + self.ncuda
     }
@@ -185,6 +213,17 @@ mod tests {
         assert_eq!(SchedPolicy::parse("dmda"), Some(SchedPolicy::Dmda));
         assert_eq!(SchedPolicy::parse("EAGER"), Some(SchedPolicy::Eager));
         assert_eq!(SchedPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn calibrate_upgrades_default_selector() {
+        let mut c = Config::default();
+        assert_eq!(c.effective_selector(), SelectorKind::Greedy);
+        c.calibrate = true;
+        assert_eq!(c.effective_selector(), SelectorKind::Calibrating);
+        // an explicit selector wins over the calibrate flag
+        c.selector = SelectorKind::EpsilonGreedy(0.2);
+        assert_eq!(c.effective_selector(), SelectorKind::EpsilonGreedy(0.2));
     }
 
     #[test]

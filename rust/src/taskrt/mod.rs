@@ -19,6 +19,16 @@
 //! scheduled strictly within its partition. [`Runtime::create_context`]
 //! carves workers out of their current contexts; context 0 is the
 //! default context and initially owns every worker.
+//!
+//! ## Variant selection
+//!
+//! *Which implementation variant* runs is decided by the pluggable
+//! [`selection`] subsystem: every scheduling context carries a
+//! [`SelectionPolicy`] instance (choose one per context via
+//! [`Runtime::create_context_with`]), tasks may override it per-task
+//! ([`TaskSpec::with_selector`] / [`TaskSpec::with_variant`]), and
+//! workers feed measured execution times back through
+//! [`SelectionPolicy::feedback`] — the online-learning loop.
 
 pub mod codelet;
 pub mod config;
@@ -28,6 +38,7 @@ pub mod hwloc;
 pub mod metrics;
 pub mod perfmodel;
 pub mod scheduler;
+pub mod selection;
 pub mod task;
 pub mod trace;
 mod worker;
@@ -38,6 +49,7 @@ pub use data::{AccessMode, DataRegistry, HandleId, MAIN_MEMORY};
 pub use device::Arch;
 pub use metrics::{Metrics, TaskResult};
 pub use perfmodel::PerfModels;
+pub use selection::{SelectionPolicy, SelectorKind, VariantChoice};
 pub use task::{TaskId, TaskSpec, TaskState};
 
 use std::collections::HashMap;
@@ -62,6 +74,9 @@ pub const DEFAULT_CTX: CtxId = 0;
 pub(crate) struct ContextSlot {
     pub name: String,
     pub policy: SchedPolicy,
+    /// Kind of the variant-selection policy (the live instance lives in
+    /// `ctx.selector`); kept so slot rebuilds preserve the choice.
+    pub selector: SelectorKind,
     pub sched: Box<dyn Scheduler>,
     pub ctx: SchedCtx,
 }
@@ -72,6 +87,8 @@ pub struct ContextInfo {
     pub id: CtxId,
     pub name: String,
     pub policy: SchedPolicy,
+    /// Variant-selection policy name (e.g. "greedy", "epsilon:0.1").
+    pub selector: String,
     /// Global worker ids in this context's partition.
     pub workers: Vec<usize>,
     /// Tasks currently queued in this context's scheduler.
@@ -116,6 +133,7 @@ impl Inner {
         &self,
         name: &str,
         policy: SchedPolicy,
+        selector: SelectorKind,
         members: Vec<usize>,
         salt: u64,
     ) -> ContextSlot {
@@ -124,7 +142,7 @@ impl Inner {
             self.perf.clone(),
             self.data.clone(),
             self.manifest.clone(),
-            self.config.calibrate,
+            selector.build(self.config.seed ^ salt),
             self.config.seed ^ salt,
         );
         ctx.data_aware = self.config.data_aware;
@@ -132,6 +150,7 @@ impl Inner {
         ContextSlot {
             name: name.to_string(),
             policy,
+            selector,
             sched: scheduler::make(policy),
             ctx,
         }
@@ -220,10 +239,11 @@ impl Runtime {
             inflight_cv: Condvar::new(),
             epoch: std::time::Instant::now(),
         });
-        // default context 0: all workers, the configured policy
+        // default context 0: all workers, the configured policies
         {
             let members: Vec<usize> = (0..inner.workers.len()).collect();
-            let slot = inner.make_slot("default", inner.config.sched, members, 0);
+            let selector = inner.config.effective_selector();
+            let slot = inner.make_slot("default", inner.config.sched, selector, members, 0);
             inner.contexts.write().unwrap().push(Arc::new(slot));
         }
 
@@ -268,16 +288,30 @@ impl Runtime {
 
     // -------------------------------------------------------- contexts
 
-    /// Carve a new scheduling context out of the runtime: `workers` move
-    /// from their current contexts into a fresh partition running
-    /// `policy`. Requires a quiescent runtime (no tasks in flight) so no
-    /// queued task can strand on a reassigned worker; concurrent submits
-    /// block until the reconfiguration completes.
+    /// Carve a new scheduling context with the runtime's default
+    /// variant-selection policy ([`Config::effective_selector`]).
     pub fn create_context(
         &self,
         name: &str,
         workers: &[usize],
         policy: SchedPolicy,
+    ) -> Result<CtxId> {
+        self.create_context_with(name, workers, policy, self.inner.config.effective_selector())
+    }
+
+    /// Carve a new scheduling context out of the runtime: `workers` move
+    /// from their current contexts into a fresh partition running
+    /// scheduler `policy` and variant-selection policy `selector` (so
+    /// different tenants can run different selection strategies over one
+    /// machine). Requires a quiescent runtime (no tasks in flight) so no
+    /// queued task can strand on a reassigned worker; concurrent submits
+    /// block until the reconfiguration completes.
+    pub fn create_context_with(
+        &self,
+        name: &str,
+        workers: &[usize],
+        policy: SchedPolicy,
+        selector: SelectorKind,
     ) -> Result<CtxId> {
         let mut members: Vec<usize> = workers.to_vec();
         members.sort_unstable();
@@ -315,7 +349,7 @@ impl Runtime {
         donors.sort_unstable();
         donors.dedup();
         for donor in donors {
-            let (donor_name, donor_policy, keep) = {
+            let (donor_name, donor_policy, donor_selector, keep) = {
                 let old = &contexts[donor];
                 let keep: Vec<usize> = old
                     .ctx
@@ -324,17 +358,17 @@ impl Runtime {
                     .copied()
                     .filter(|w| !members.contains(w))
                     .collect();
-                (old.name.clone(), old.policy, keep)
+                (old.name.clone(), old.policy, old.selector.clone(), keep)
             };
-            let rebuilt = self
-                .inner
-                .make_slot(&donor_name, donor_policy, keep, donor as u64);
+            let rebuilt =
+                self.inner
+                    .make_slot(&donor_name, donor_policy, donor_selector, keep, donor as u64);
             contexts[donor] = Arc::new(rebuilt);
         }
 
-        let slot = self
-            .inner
-            .make_slot(name, policy, members.clone(), 0x9e3779b9 ^ id as u64);
+        let slot =
+            self.inner
+                .make_slot(name, policy, selector, members.clone(), 0x9e3779b9 ^ id as u64);
         contexts.push(Arc::new(slot));
         for &w in &members {
             self.inner.worker_ctx[w].store(id, Ordering::Release);
@@ -364,10 +398,21 @@ impl Runtime {
                 id,
                 name: c.name.clone(),
                 policy: c.policy,
+                selector: c.selector.name(),
                 workers: c.ctx.members.clone(),
                 queued: c.sched.queued(),
             })
             .collect()
+    }
+
+    /// Name of a context's variant-selection policy (serve layer).
+    pub fn context_selector_name(&self, id: CtxId) -> Option<String> {
+        self.inner
+            .contexts
+            .read()
+            .unwrap()
+            .get(id)
+            .map(|c| c.selector.name())
     }
 
     // ------------------------------------------------------------- data
@@ -441,25 +486,22 @@ impl Runtime {
             codelet: spec.codelet.clone(),
             size: spec.size,
             handles: spec.handles.clone(),
-            force_variant: spec.force_variant.clone(),
+            selector: spec.selector.clone(),
             priority: spec.priority,
             ctx: spec.ctx,
             chosen_impl: None,
             est_cost_ns: 0,
         };
-        if !archs
-            .iter()
-            .any(|&a| !slot.ctx.eligible_impls(&probe, a).is_empty())
-        {
+        if !archs.iter().any(|&a| slot.ctx.can_run(&probe, a)) {
             undo(self);
             bail!(
-                "task on codelet '{}' (size {}) has no eligible implementation \
-                 in context '{}' (workers {:?}, forced={:?})",
+                "task on codelet '{}' (size {}) has no selectable implementation \
+                 in context '{}' (workers {:?}, policy '{}')",
                 spec.codelet.name,
                 spec.size,
                 slot.name,
                 slot.ctx.members,
-                spec.force_variant
+                slot.ctx.policy_for(&probe).name()
             );
         }
 

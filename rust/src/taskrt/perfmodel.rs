@@ -111,7 +111,9 @@ pub struct PerfModels {
     models: RwLock<BTreeMap<String, VariantModel>>,
 }
 
-fn key(codelet: &str, variant: &str) -> String {
+/// The composite "codelet:variant" map key — shared with the selection
+/// policies so observation counters and models stay keyed identically.
+pub(crate) fn key(codelet: &str, variant: &str) -> String {
     format!("{codelet}:{variant}")
 }
 

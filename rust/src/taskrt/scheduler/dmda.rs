@@ -9,11 +9,15 @@
 //!                  + perf_model(codelet, i, size) // history model
 //! ```
 //!
-//! and commits the task to the argmin. While any implementation is still
-//! uncalibrated for this size, the policy round-robins over the unknown
-//! options instead — this is StarPU's calibration phase, and it is what
-//! makes the paper's mmul experiment pick "sub-optimal options" until
-//! the models converge (§3.2).
+//! and commits the task to the argmin. *Which* implementation runs per
+//! architecture is decided by the context's [`SelectionPolicy`]
+//! (`ctx.select_impl`); dmda only decides *where*. While the policy is
+//! still exploring (no estimate yet), placements round-robin over the
+//! member workers instead — this is StarPU's calibration phase, and it
+//! is what makes the paper's mmul experiment pick "sub-optimal options"
+//! until the models converge (§3.2).
+//!
+//! [`SelectionPolicy`]: crate::taskrt::selection::SelectionPolicy
 
 use std::time::Duration;
 
@@ -31,10 +35,14 @@ impl Dmda {
     }
 
     /// (worker, impl) candidates with their completion estimates;
-    /// `None` estimate = uncalibrated. Only the context's member workers
-    /// are considered.
+    /// `None` estimate = the selection policy is exploring. The variant
+    /// per architecture comes from the task's [`SelectionPolicy`] (one
+    /// `select` per distinct member arch, memoized across workers); dmda
+    /// only decides *where* the chosen variant runs.
     fn candidates(task: &ReadyTask, ctx: &SchedCtx) -> Vec<(usize, usize, Option<f64>)> {
+        use crate::taskrt::selection::VariantChoice;
         let mut out = Vec::new();
+        let mut per_arch: Vec<(crate::taskrt::Arch, Option<VariantChoice>)> = Vec::new();
         // §Perf: transfer cost depends only on the memory node, so cache
         // it per node instead of recomputing per worker (each lookup
         // walks the data registry under its lock). Sized from the actual
@@ -48,14 +56,21 @@ impl Dmda {
             .unwrap_or(1);
         let mut node_transfer: Vec<Option<f64>> = vec![None; n_nodes];
         for w in ctx.member_workers() {
-            for i in ctx.eligible_impls(task, w.arch) {
-                let est = ctx.exec_estimate(task, i).map(|exec| {
-                    let t = *node_transfer[w.mem_node]
-                        .get_or_insert_with(|| ctx.transfer_secs(task, w.id));
-                    ctx.queued_secs(w.id) + t + exec
-                });
-                out.push((w.id, i, est));
-            }
+            let choice = match per_arch.iter().find(|(a, _)| *a == w.arch) {
+                Some((_, c)) => c.clone(),
+                None => {
+                    let c = ctx.select_impl(task, w.arch);
+                    per_arch.push((w.arch, c.clone()));
+                    c
+                }
+            };
+            let Some(c) = choice else { continue };
+            let est = c.est.map(|exec| {
+                let t = *node_transfer[w.mem_node]
+                    .get_or_insert_with(|| ctx.transfer_secs(task, w.id));
+                ctx.queued_secs(w.id) + t + exec
+            });
+            out.push((w.id, c.impl_idx, est));
         }
         out
     }
@@ -69,12 +84,22 @@ impl Dmda {
         if cands.is_empty() {
             return None;
         }
-        // calibration phase: explore unknown implementations round-robin
+        // exploration phase (policy returned no estimate): run the
+        // least-sampled variant first so calibration spreads evenly
+        // across variants, rotating over workers among ties
         let unknown: Vec<&(usize, usize, Option<f64>)> =
             cands.iter().filter(|c| c.2.is_none()).collect();
         if !unknown.is_empty() {
             let k = ctx.rr.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            let (w, i, _) = *unknown[k % unknown.len()];
+            let n = unknown.len();
+            let pick = (0..n)
+                .map(|j| unknown[(k + j) % n])
+                .min_by_key(|&&(_, i, _)| {
+                    ctx.perf
+                        .samples(&task.codelet.name, &task.codelet.impls[i].name)
+                })
+                .expect("unknown is non-empty");
+            let (w, i, _) = *pick;
             // charge a neutral guess so parallel pushes spread out
             let cost = ctx.transfer_secs(task, w) + 1e-3;
             return Some((w, i, cost));
@@ -144,7 +169,8 @@ mod tests {
         for _ in 0..MIN_SAMPLES {
             perf.record("c", "omp", 64, 1e-3);
         }
-        (SchedCtx::new(workers, perf, data, None, false, 7), h)
+        let selector = Arc::new(crate::taskrt::selection::Greedy::new());
+        (SchedCtx::new(workers, perf, data, None, selector, 7), h)
     }
 
     fn ready(h: crate::taskrt::HandleId) -> ReadyTask {
@@ -160,7 +186,7 @@ mod tests {
             codelet: cl,
             size: 64,
             handles: vec![(h, AccessMode::Read)],
-            force_variant: None,
+            selector: None,
             priority: 0,
             ctx: 0,
             chosen_impl: None,

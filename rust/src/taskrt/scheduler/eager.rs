@@ -47,10 +47,7 @@ impl Scheduler for Eager {
         loop {
             // first task this worker can run (not strictly FIFO across
             // archs, otherwise a CPU-only task at the head starves GPUs)
-            if let Some(pos) = q
-                .iter()
-                .position(|t| !ctx.eligible_impls(t, arch).is_empty())
-            {
+            if let Some(pos) = q.iter().position(|t| ctx.can_run(t, arch)) {
                 return q.remove(pos);
             }
             let now = Instant::now();

@@ -26,6 +26,7 @@ use super::codelet::{Codelet, ImplKind};
 use super::data::{AccessMode, DataRegistry, HandleId};
 use super::device::{transfer_model, Arch};
 use super::perfmodel::PerfModels;
+use super::selection::{SelectionPolicy, VariantChoice};
 use super::task::TaskId;
 use crate::runtime::Manifest;
 use crate::util::rng::Rng;
@@ -37,7 +38,9 @@ pub struct ReadyTask {
     pub codelet: Arc<Codelet>,
     pub size: usize,
     pub handles: Vec<(HandleId, AccessMode)>,
-    pub force_variant: Option<String>,
+    /// Per-task selection-policy override (e.g. a pinned variant rides
+    /// as a `Forced` policy); `None` = the context's policy decides.
+    pub selector: Option<Arc<dyn SelectionPolicy>>,
     /// Scheduling priority (higher first within a queue).
     pub priority: i32,
     /// Scheduling context the task was submitted under.
@@ -70,13 +73,14 @@ pub struct SchedCtx {
     pub perf: Arc<PerfModels>,
     pub data: Arc<DataRegistry>,
     pub manifest: Option<Arc<Manifest>>,
-    /// STARPU_CALIBRATE analog: keep forcing exploration.
-    pub calibrate: bool,
+    /// This context's variant-selection policy; tasks may carry a
+    /// per-task override ([`ReadyTask::selector`]).
+    pub selector: Arc<dyn SelectionPolicy>,
     /// Model transfer costs in placement decisions (dmda's "DA").
     pub data_aware: bool,
     /// Modeled ns of work queued per worker (the "deque model").
     pub queued_ns: Vec<AtomicU64>,
-    /// Round-robin cursor for calibration runs.
+    /// Round-robin cursor for calibration-phase worker placement.
     pub rr: AtomicUsize,
     pub rng: Mutex<Rng>,
 }
@@ -87,7 +91,7 @@ impl SchedCtx {
         perf: Arc<PerfModels>,
         data: Arc<DataRegistry>,
         manifest: Option<Arc<Manifest>>,
-        calibrate: bool,
+        selector: Arc<dyn SelectionPolicy>,
         seed: u64,
     ) -> SchedCtx {
         let queued_ns = (0..workers.len()).map(|_| AtomicU64::new(0)).collect();
@@ -98,7 +102,7 @@ impl SchedCtx {
             perf,
             data,
             manifest,
-            calibrate,
+            selector,
             data_aware: true,
             queued_ns,
             rr: AtomicUsize::new(0),
@@ -139,16 +143,12 @@ impl SchedCtx {
     }
 
     /// Is implementation `idx` of `task` executable on `arch` right now?
-    /// (arch match + artifact availability + variant pinning).
+    /// (arch match + artifact availability). Variant pinning is a policy
+    /// concern: see [`SchedCtx::can_run`] / [`SchedCtx::select_impl`].
     pub fn impl_eligible(&self, task: &ReadyTask, idx: usize, arch: Arch) -> bool {
         let imp = &task.codelet.impls[idx];
         if imp.arch != arch {
             return false;
-        }
-        if let Some(f) = &task.force_variant {
-            if &imp.name != f {
-                return false;
-            }
         }
         match &imp.kind {
             ImplKind::Native(_) => true,
@@ -170,12 +170,40 @@ impl SchedCtx {
             .collect()
     }
 
-    /// Member workers with at least one eligible implementation.
+    /// Member workers the task's selection policy can serve.
     pub fn eligible_workers(&self, task: &ReadyTask) -> Vec<usize> {
         self.member_workers()
-            .filter(|w| !self.eligible_impls(task, w.arch).is_empty())
+            .filter(|w| self.can_run(task, w.arch))
             .map(|w| w.id)
             .collect()
+    }
+
+    /// The selection policy governing `task`: its per-task override if
+    /// any, else this context's policy.
+    pub fn policy_for<'a>(&'a self, task: &'a ReadyTask) -> &'a dyn SelectionPolicy {
+        match &task.selector {
+            Some(s) => s.as_ref(),
+            None => self.selector.as_ref(),
+        }
+    }
+
+    /// THE selection entry point: every layer (schedulers, workers)
+    /// resolves "which implementation runs on `arch`" through here.
+    pub fn select_impl(&self, task: &ReadyTask, arch: Arch) -> Option<VariantChoice> {
+        self.policy_for(task).select(task, arch, self)
+    }
+
+    /// Side-effect-free probe: can the governing policy serve `task` on
+    /// `arch`? Used by worker placement, stealing and submit validation.
+    pub fn can_run(&self, task: &ReadyTask, arch: Arch) -> bool {
+        self.policy_for(task).can_serve(task, arch, self)
+    }
+
+    /// Report a measured execution back to the governing policy (the
+    /// online-learning loop; shared [`PerfModels`] are fed separately).
+    pub fn feedback(&self, task: &ReadyTask, variant: &str, secs: f64) {
+        self.policy_for(task)
+            .feedback(&task.codelet.name, variant, task.size, secs);
     }
 
     /// Modeled bytes that would move if `task` ran on `worker`.
@@ -219,31 +247,6 @@ impl SchedCtx {
 
     pub fn queued_secs(&self, worker: usize) -> f64 {
         self.queued_ns[worker].load(Ordering::Relaxed) as f64 * 1e-9
-    }
-
-    /// Pick the best-known implementation for a worker that received a
-    /// task without a pre-made choice (eager/random/ws policies):
-    /// uncalibrated variants first (round-robin, to gather samples à la
-    /// STARPU_CALIBRATE), then minimum estimated time.
-    pub fn pick_impl(&self, task: &ReadyTask, arch: Arch) -> Option<usize> {
-        let eligible = self.eligible_impls(task, arch);
-        if eligible.is_empty() {
-            return None;
-        }
-        let unknown: Vec<usize> = eligible
-            .iter()
-            .copied()
-            .filter(|&i| self.exec_estimate(task, i).is_none())
-            .collect();
-        if !unknown.is_empty() {
-            let k = self.rr.fetch_add(1, Ordering::Relaxed);
-            return Some(unknown[k % unknown.len()]);
-        }
-        eligible.into_iter().min_by(|&a, &b| {
-            let ta = self.exec_estimate(task, a).unwrap_or(f64::MAX);
-            let tb = self.exec_estimate(task, b).unwrap_or(f64::MAX);
-            ta.partial_cmp(&tb).unwrap()
-        })
     }
 }
 
@@ -355,10 +358,8 @@ impl PerWorkerQueues {
                 victims.sort_by_key(|&(_, len)| std::cmp::Reverse(len));
                 for (v, _) in victims {
                     let mut q = lanes[v].q.lock().unwrap();
-                    // steal only what we can execute
-                    if let Some(pos) =
-                        q.iter().rposition(|t| !ctx.eligible_impls(t, arch).is_empty())
-                    {
+                    // steal only what this worker's policy can serve
+                    if let Some(pos) = q.iter().rposition(|t| ctx.can_run(t, arch)) {
                         return q.remove(pos);
                     }
                 }

@@ -1,0 +1,623 @@
+//! The unified variant-selection engine (the paper's headline feature,
+//! promoted to a first-class subsystem).
+//!
+//! Before this module existed, selection logic was scattered across
+//! three layers: a greedy `SchedCtx::pick_impl` in the scheduler, raw
+//! `PerfModels` lookups inside dmda, and a per-request variant override
+//! special-cased in the serve layer. Kessler & Dastgeer's *Optimized
+//! Composition* line of work argues selection deserves a dedicated
+//! composition layer with trained dispatch tables; this module is that
+//! layer. Every component of the stack now consults one
+//! [`SelectionPolicy`]:
+//!
+//! * schedulers ask the policy which implementation to run per
+//!   architecture (dmda then places the chosen variant cost-aware);
+//! * workers report measured execution times back through
+//!   [`SelectionPolicy::feedback`], closing the online-learning loop;
+//! * the COMPAR pre-compiler emits `prefer(...)` hints into generated
+//!   glue ([`crate::taskrt::Codelet::with_hint`]) that seed exploration
+//!   priors;
+//! * scheduling contexts carry their own policy instance (configured at
+//!   [`crate::taskrt::Runtime::create_context_with`] time) so different
+//!   tenants can run different policies over the same machine;
+//! * the serve layer maps per-session policy choices and per-request
+//!   variant pins onto per-task policy overrides
+//!   ([`crate::taskrt::TaskSpec::with_selector`]).
+//!
+//! Four policies ship:
+//!
+//! | policy                    | behaviour                                          |
+//! |---------------------------|----------------------------------------------------|
+//! | [`Greedy`]                | explore uncalibrated variants round-robin, then    |
+//! |                           | always take the model minimum (trusts regression   |
+//! |                           | extrapolation across sizes)                        |
+//! | [`Calibrating`]           | round-robin until `needs_calibration` clears *at   |
+//! |                           | this exact size*, then model minimum               |
+//! | [`EpsilonGreedy`]         | Greedy exploitation + an ε-fraction of continuous  |
+//! |                           | exploration (least-observed variant first) so      |
+//! |                           | models keep tracking drift on a long-running server|
+//! | [`Forced`]                | pin one variant by name; replaces both the old     |
+//! |                           | `force_variant` plumbing and the serve special case|
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::device::Arch;
+use super::perfmodel::key;
+use super::scheduler::{ReadyTask, SchedCtx};
+use crate::util::rng::Rng;
+
+/// Default exploration rate for [`EpsilonGreedy`].
+pub const DEFAULT_EPSILON: f64 = 0.1;
+
+/// The outcome of one selection decision.
+#[derive(Debug, Clone)]
+pub struct VariantChoice {
+    /// Index into the codelet's `impls`.
+    pub impl_idx: usize,
+    /// Modeled execution estimate behind the choice; `None` means the
+    /// policy is exploring (schedulers fall back to calibration-style
+    /// placement for such tasks).
+    pub est: Option<f64>,
+}
+
+/// A pluggable variant-selection policy. One instance lives per
+/// scheduling context (shared by all its workers), and tasks may carry
+/// a per-task override ([`crate::taskrt::TaskSpec::with_selector`]).
+pub trait SelectionPolicy: Send + Sync {
+    /// Human-readable policy name (diagnostics / serve protocol).
+    fn name(&self) -> String;
+
+    /// Choose an implementation of `task`'s codelet for `arch`, or
+    /// `None` when the policy cannot serve this (task, arch) pair.
+    fn select(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> Option<VariantChoice>;
+
+    /// Side-effect-free eligibility probe: could [`Self::select`] return
+    /// a choice for this (task, arch)? Used for worker placement,
+    /// stealing filters and submit-time validation.
+    fn can_serve(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> bool {
+        !ctx.eligible_impls(task, arch).is_empty()
+    }
+
+    /// Online-learning hook: a worker measured `secs` of execution for
+    /// (codelet, variant) at `size`. The shared [`super::PerfModels`]
+    /// store is updated separately by the worker; policies use this to
+    /// maintain their own exploration state.
+    fn feedback(&self, _codelet: &str, _variant: &str, _size: usize, _secs: f64) {}
+}
+
+/// Serializable policy selector: what configs, CLI flags and the serve
+/// protocol name; [`SelectorKind::build`] instantiates the live policy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SelectorKind {
+    Greedy,
+    Calibrating,
+    EpsilonGreedy(f64),
+    Forced(String),
+}
+
+impl SelectorKind {
+    /// Parse `greedy`, `calibrating`, `epsilon`, `epsilon:0.2`,
+    /// `forced:VARIANT`.
+    pub fn parse(s: &str) -> Option<SelectorKind> {
+        let s = s.trim();
+        match s.to_ascii_lowercase().as_str() {
+            "greedy" => return Some(SelectorKind::Greedy),
+            "calibrating" | "calibrate" => return Some(SelectorKind::Calibrating),
+            "epsilon" | "epsilon-greedy" | "egreedy" => {
+                return Some(SelectorKind::EpsilonGreedy(DEFAULT_EPSILON))
+            }
+            _ => {}
+        }
+        if let Some(e) = s.to_ascii_lowercase().strip_prefix("epsilon:") {
+            let eps: f64 = e.parse().ok()?;
+            if (0.0..=1.0).contains(&eps) {
+                return Some(SelectorKind::EpsilonGreedy(eps));
+            }
+            return None;
+        }
+        // variant names are case-sensitive: strip the prefix from `s`
+        if let Some(v) = s.strip_prefix("forced:") {
+            if !v.is_empty() {
+                return Some(SelectorKind::Forced(v.to_string()));
+            }
+        }
+        None
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            SelectorKind::Greedy => "greedy".into(),
+            SelectorKind::Calibrating => "calibrating".into(),
+            SelectorKind::EpsilonGreedy(e) => format!("epsilon:{e}"),
+            SelectorKind::Forced(v) => format!("forced:{v}"),
+        }
+    }
+
+    /// Instantiate a fresh policy (per scheduling context or session).
+    pub fn build(&self, seed: u64) -> Arc<dyn SelectionPolicy> {
+        match self {
+            SelectorKind::Greedy => Arc::new(Greedy::new()),
+            SelectorKind::Calibrating => Arc::new(Calibrating::new()),
+            SelectorKind::EpsilonGreedy(e) => Arc::new(EpsilonGreedy::new(*e, seed)),
+            SelectorKind::Forced(v) => Arc::new(Forced::new(v)),
+        }
+    }
+}
+
+// ------------------------------------------------------------ shared bits
+
+/// If the codelet carries a pre-compiler `prefer(...)` hint naming a
+/// variant in `pool` that has never been observed, explore it first —
+/// the hint seeds the policy's prior so the likely winner gets a model
+/// before anything else.
+fn hint_first(task: &ReadyTask, ctx: &SchedCtx, pool: &[usize]) -> Option<usize> {
+    let hint = task.codelet.hint.as_deref()?;
+    let &idx = pool.iter().find(|&&i| task.codelet.impls[i].name == hint)?;
+    if ctx.perf.samples(&task.codelet.name, hint) == 0 {
+        Some(idx)
+    } else {
+        None
+    }
+}
+
+/// Cold-start exploration over `pool` (impl indices still lacking a
+/// usable model): the unseen hinted variant first, then round-robin by
+/// `cursor`. `None` when nothing needs exploring.
+fn explore_pool(
+    task: &ReadyTask,
+    ctx: &SchedCtx,
+    pool: &[usize],
+    cursor: &AtomicUsize,
+) -> Option<VariantChoice> {
+    if pool.is_empty() {
+        return None;
+    }
+    if let Some(i) = hint_first(task, ctx, pool) {
+        return Some(VariantChoice {
+            impl_idx: i,
+            est: None,
+        });
+    }
+    let k = cursor.fetch_add(1, Ordering::Relaxed);
+    Some(VariantChoice {
+        impl_idx: pool[k % pool.len()],
+        est: None,
+    })
+}
+
+/// Model minimum over `pool` (assumes every entry has an estimate; a
+/// missing one sorts last rather than panicking).
+fn best_known(task: &ReadyTask, ctx: &SchedCtx, pool: &[usize]) -> Option<VariantChoice> {
+    pool.iter()
+        .copied()
+        .map(|i| (i, ctx.exec_estimate(task, i)))
+        .min_by(|a, b| {
+            let ta = a.1.unwrap_or(f64::MAX);
+            let tb = b.1.unwrap_or(f64::MAX);
+            ta.partial_cmp(&tb).unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .map(|(i, est)| VariantChoice { impl_idx: i, est })
+}
+
+// ----------------------------------------------------------------- greedy
+
+/// Today's historical behaviour, extracted from `SchedCtx::pick_impl`:
+/// round-robin over variants whose model has *no estimate at all* (no
+/// trusted bucket and no regression), then always take the model
+/// minimum. Trusts power-law regression to extrapolate across sizes, so
+/// it stops exploring a size as soon as any fit exists.
+pub struct Greedy {
+    rr: AtomicUsize,
+}
+
+impl Greedy {
+    pub fn new() -> Greedy {
+        Greedy {
+            rr: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Default for Greedy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SelectionPolicy for Greedy {
+    fn name(&self) -> String {
+        "greedy".into()
+    }
+
+    fn select(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> Option<VariantChoice> {
+        let eligible = ctx.eligible_impls(task, arch);
+        if eligible.is_empty() {
+            return None;
+        }
+        let unknown: Vec<usize> = eligible
+            .iter()
+            .copied()
+            .filter(|&i| ctx.exec_estimate(task, i).is_none())
+            .collect();
+        if let Some(c) = explore_pool(task, ctx, &unknown, &self.rr) {
+            return Some(c);
+        }
+        best_known(task, ctx, &eligible)
+    }
+}
+
+// ------------------------------------------------------------ calibrating
+
+/// STARPU_CALIBRATE analog: round-robin over every variant that still
+/// [`super::PerfModels::needs_calibration`] *at this exact size*, then
+/// take the model minimum. Unlike [`Greedy`] it refuses to trust
+/// regression extrapolation — a new problem size re-triggers
+/// exploration until the per-size bucket is trusted.
+pub struct Calibrating {
+    rr: AtomicUsize,
+}
+
+impl Calibrating {
+    pub fn new() -> Calibrating {
+        Calibrating {
+            rr: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Default for Calibrating {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SelectionPolicy for Calibrating {
+    fn name(&self) -> String {
+        "calibrating".into()
+    }
+
+    fn select(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> Option<VariantChoice> {
+        let eligible = ctx.eligible_impls(task, arch);
+        if eligible.is_empty() {
+            return None;
+        }
+        let need: Vec<usize> = eligible
+            .iter()
+            .copied()
+            .filter(|&i| {
+                ctx.perf
+                    .needs_calibration(&task.codelet.name, &task.codelet.impls[i].name, task.size)
+            })
+            .collect();
+        if let Some(c) = explore_pool(task, ctx, &need, &self.rr) {
+            return Some(c);
+        }
+        best_known(task, ctx, &eligible)
+    }
+}
+
+// ---------------------------------------------------------- epsilon-greedy
+
+/// Greedy exploitation plus an ε-fraction of continuous exploration, so
+/// a long-running server keeps sampling every variant and the shared
+/// performance models track drift instead of freezing at the first
+/// converged ranking. Exploration picks the *least-observed* eligible
+/// variant (observation counts are maintained by the
+/// [`SelectionPolicy::feedback`] loop from the workers).
+pub struct EpsilonGreedy {
+    epsilon: f64,
+    rr: AtomicUsize,
+    rng: Mutex<Rng>,
+    /// "codelet:variant" -> measured-execution observations (same key
+    /// format as the [`super::PerfModels`] store, via [`key`]).
+    seen: Mutex<BTreeMap<String, u64>>,
+}
+
+impl EpsilonGreedy {
+    pub fn new(epsilon: f64, seed: u64) -> EpsilonGreedy {
+        EpsilonGreedy {
+            epsilon: epsilon.clamp(0.0, 1.0),
+            rr: AtomicUsize::new(0),
+            rng: Mutex::new(Rng::new(seed ^ 0xeb511e55)),
+            seen: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Observation count for diagnostics/tests.
+    pub fn observations(&self, codelet: &str, variant: &str) -> u64 {
+        self.seen
+            .lock()
+            .unwrap()
+            .get(&key(codelet, variant))
+            .copied()
+            .unwrap_or(0)
+    }
+}
+
+impl SelectionPolicy for EpsilonGreedy {
+    fn name(&self) -> String {
+        format!("epsilon:{}", self.epsilon)
+    }
+
+    fn select(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> Option<VariantChoice> {
+        let eligible = ctx.eligible_impls(task, arch);
+        if eligible.is_empty() {
+            return None;
+        }
+        // cold start behaves exactly like Greedy
+        let unknown: Vec<usize> = eligible
+            .iter()
+            .copied()
+            .filter(|&i| ctx.exec_estimate(task, i).is_none())
+            .collect();
+        if let Some(c) = explore_pool(task, ctx, &unknown, &self.rr) {
+            return Some(c);
+        }
+        let explore = (self.rng.lock().unwrap().next_f32() as f64) < self.epsilon;
+        if explore {
+            let pool: Vec<usize> = {
+                let seen = self.seen.lock().unwrap();
+                let counts: Vec<(usize, u64)> = eligible
+                    .iter()
+                    .map(|&i| {
+                        let k = key(&task.codelet.name, &task.codelet.impls[i].name);
+                        (i, seen.get(&k).copied().unwrap_or(0))
+                    })
+                    .collect();
+                let min = counts.iter().map(|&(_, c)| c).min().unwrap_or(0);
+                counts
+                    .into_iter()
+                    .filter(|&(_, c)| c == min)
+                    .map(|(i, _)| i)
+                    .collect()
+            };
+            let k = self.rng.lock().unwrap().below(pool.len());
+            // est None = "this is an exploration pick": cost-argmin
+            // schedulers (dmda/heft) must execute it rather than let it
+            // lose the completion-time comparison against the exploit
+            // choice of another architecture — otherwise exploration
+            // would starve on every arch that isn't the current winner.
+            return Some(VariantChoice {
+                impl_idx: pool[k],
+                est: None,
+            });
+        }
+        best_known(task, ctx, &eligible)
+    }
+
+    fn feedback(&self, codelet: &str, variant: &str, _size: usize, _secs: f64) {
+        *self
+            .seen
+            .lock()
+            .unwrap()
+            .entry(key(codelet, variant))
+            .or_insert(0) += 1;
+    }
+}
+
+// ----------------------------------------------------------------- forced
+
+/// Pin selection to one variant by name. Replaces both the old
+/// `force_variant` plumbing through `ReadyTask` and the serve layer's
+/// per-request override special case: a pinned request simply carries a
+/// `Forced` policy as its per-task selector.
+pub struct Forced {
+    variant: String,
+}
+
+impl Forced {
+    pub fn new(variant: &str) -> Forced {
+        Forced {
+            variant: variant.to_string(),
+        }
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+}
+
+impl SelectionPolicy for Forced {
+    fn name(&self) -> String {
+        format!("forced:{}", self.variant)
+    }
+
+    fn select(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> Option<VariantChoice> {
+        ctx.eligible_impls(task, arch)
+            .into_iter()
+            .find(|&i| task.codelet.impls[i].name == self.variant)
+            .map(|i| VariantChoice {
+                impl_idx: i,
+                est: ctx.exec_estimate(task, i),
+            })
+    }
+
+    fn can_serve(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> bool {
+        ctx.eligible_impls(task, arch)
+            .iter()
+            .any(|&i| task.codelet.impls[i].name == self.variant)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskrt::codelet::Codelet;
+    use crate::taskrt::data::DataRegistry;
+    use crate::taskrt::perfmodel::{PerfModels, MIN_SAMPLES};
+    use crate::taskrt::scheduler::WorkerInfo;
+
+    fn ctx_with(perf: Arc<PerfModels>) -> SchedCtx {
+        let workers = vec![WorkerInfo {
+            id: 0,
+            arch: Arch::Cpu,
+            mem_node: 0,
+        }];
+        let data = Arc::new(DataRegistry::new());
+        SchedCtx::new(workers, perf, data, None, Arc::new(Greedy::new()), 7)
+    }
+
+    fn two_variant_task(hint: Option<&str>) -> ReadyTask {
+        let mut cl = Codelet::new("c", "sort", vec![])
+            .with_native("fast", Arch::Cpu, Arc::new(|_| Ok(())))
+            .with_native("slow", Arch::Cpu, Arc::new(|_| Ok(())));
+        if let Some(h) = hint {
+            cl = cl.with_hint(h);
+        }
+        ReadyTask {
+            id: 0,
+            codelet: Arc::new(cl),
+            size: 64,
+            handles: vec![],
+            selector: None,
+            priority: 0,
+            ctx: 0,
+            chosen_impl: None,
+            est_cost_ns: 0,
+        }
+    }
+
+    fn warm(perf: &PerfModels, variant: &str, t: f64) {
+        for _ in 0..MIN_SAMPLES {
+            perf.record("c", variant, 64, t);
+        }
+    }
+
+    #[test]
+    fn selector_kind_parse_roundtrip() {
+        assert_eq!(SelectorKind::parse("greedy"), Some(SelectorKind::Greedy));
+        assert_eq!(
+            SelectorKind::parse("CALIBRATING"),
+            Some(SelectorKind::Calibrating)
+        );
+        assert_eq!(
+            SelectorKind::parse("epsilon"),
+            Some(SelectorKind::EpsilonGreedy(DEFAULT_EPSILON))
+        );
+        assert_eq!(
+            SelectorKind::parse("epsilon:0.25"),
+            Some(SelectorKind::EpsilonGreedy(0.25))
+        );
+        assert_eq!(
+            SelectorKind::parse("forced:cuda"),
+            Some(SelectorKind::Forced("cuda".into()))
+        );
+        assert_eq!(SelectorKind::parse("epsilon:7"), None);
+        assert_eq!(SelectorKind::parse("forced:"), None);
+        assert_eq!(SelectorKind::parse("nope"), None);
+        for k in [
+            SelectorKind::Greedy,
+            SelectorKind::Calibrating,
+            SelectorKind::EpsilonGreedy(0.5),
+            SelectorKind::Forced("omp".into()),
+        ] {
+            assert_eq!(SelectorKind::parse(&k.name()), Some(k.clone()), "{k:?}");
+        }
+    }
+
+    #[test]
+    fn greedy_explores_then_exploits() {
+        let perf = Arc::new(PerfModels::new());
+        let ctx = ctx_with(perf.clone());
+        let task = two_variant_task(None);
+        let g = Greedy::new();
+        // cold: explores (est None)
+        let c = g.select(&task, Arch::Cpu, &ctx).unwrap();
+        assert!(c.est.is_none());
+        // warmed: exploits the minimum
+        warm(&perf, "fast", 1e-3);
+        warm(&perf, "slow", 1e-1);
+        let c = g.select(&task, Arch::Cpu, &ctx).unwrap();
+        assert_eq!(task.codelet.impls[c.impl_idx].name, "fast");
+        assert!(c.est.is_some());
+    }
+
+    #[test]
+    fn calibrating_completes_then_exploits() {
+        let perf = Arc::new(PerfModels::new());
+        let ctx = ctx_with(perf.clone());
+        let task = two_variant_task(None);
+        let p = Calibrating::new();
+        // drive the calibration loop exactly as a worker would
+        for _ in 0..(2 * MIN_SAMPLES) {
+            let c = p.select(&task, Arch::Cpu, &ctx).unwrap();
+            assert!(c.est.is_none(), "still calibrating");
+            let name = &task.codelet.impls[c.impl_idx].name;
+            let t = if name == "fast" { 1e-3 } else { 1e-1 };
+            perf.record("c", name, 64, t);
+            p.feedback("c", name, 64, t);
+        }
+        assert!(!perf.needs_calibration("c", "fast", 64));
+        assert!(!perf.needs_calibration("c", "slow", 64));
+        let c = p.select(&task, Arch::Cpu, &ctx).unwrap();
+        assert_eq!(task.codelet.impls[c.impl_idx].name, "fast");
+        // a NEW size re-triggers calibration (unlike Greedy's regression)
+        let mut big = two_variant_task(None);
+        big.size = 4096;
+        let c = p.select(&big, Arch::Cpu, &ctx).unwrap();
+        assert!(c.est.is_none(), "new size must recalibrate");
+    }
+
+    #[test]
+    fn epsilon_greedy_converges_to_fastest_under_bimodal_costs() {
+        let perf = Arc::new(PerfModels::new());
+        warm(&perf, "fast", 1e-3);
+        warm(&perf, "slow", 1e-1);
+        let ctx = ctx_with(perf);
+        let task = two_variant_task(None);
+        let p = EpsilonGreedy::new(0.2, 11);
+        let mut fast = 0usize;
+        let n = 1000;
+        for _ in 0..n {
+            let c = p.select(&task, Arch::Cpu, &ctx).unwrap();
+            let name = task.codelet.impls[c.impl_idx].name.clone();
+            if name == "fast" {
+                fast += 1;
+            }
+            p.feedback("c", &name, 64, 0.0);
+        }
+        // expected fast fraction = (1 - eps) + eps * balance ≈ 0.9
+        assert!(fast as f64 / n as f64 > 0.7, "converged to {fast}/{n}");
+        // exploration keeps observing the slow variant too
+        assert!(p.observations("c", "slow") > 0);
+    }
+
+    #[test]
+    fn forced_selects_only_its_variant() {
+        let perf = Arc::new(PerfModels::new());
+        warm(&perf, "fast", 1e-3);
+        let ctx = ctx_with(perf);
+        let task = two_variant_task(None);
+        let p = Forced::new("slow");
+        let c = p.select(&task, Arch::Cpu, &ctx).unwrap();
+        assert_eq!(task.codelet.impls[c.impl_idx].name, "slow");
+        assert!(p.can_serve(&task, Arch::Cpu, &ctx));
+        // unknown variant: no selection, no eligibility
+        let bogus = Forced::new("nope");
+        assert!(bogus.select(&task, Arch::Cpu, &ctx).is_none());
+        assert!(!bogus.can_serve(&task, Arch::Cpu, &ctx));
+    }
+
+    #[test]
+    fn hint_seeds_first_exploration() {
+        let perf = Arc::new(PerfModels::new());
+        let ctx = ctx_with(perf.clone());
+        let task = two_variant_task(Some("slow"));
+        let g = Greedy::new();
+        let c = g.select(&task, Arch::Cpu, &ctx).unwrap();
+        assert_eq!(
+            task.codelet.impls[c.impl_idx].name, "slow",
+            "hinted variant is explored first"
+        );
+        // once observed, the hint no longer dominates exploration
+        perf.record("c", "slow", 64, 1e-1);
+        let mut names = std::collections::BTreeSet::new();
+        for _ in 0..4 {
+            let c = g.select(&task, Arch::Cpu, &ctx).unwrap();
+            names.insert(task.codelet.impls[c.impl_idx].name.clone());
+        }
+        assert!(names.contains("fast"), "round-robin resumes: {names:?}");
+    }
+}

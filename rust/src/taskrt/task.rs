@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use super::codelet::Codelet;
 use super::data::{AccessMode, HandleId};
+use super::selection::{Forced, SelectionPolicy};
 
 pub type TaskId = u64;
 
@@ -22,9 +23,11 @@ pub struct TaskSpec {
     pub handles: Vec<(HandleId, AccessMode)>,
     /// Scale parameter for perf models / artifact lookup (paper `size`).
     pub size: usize,
-    /// Pin to a specific variant name (None = runtime decides — the
-    /// paper's headline feature).
-    pub force_variant: Option<String>,
+    /// Per-task selection-policy override (None = the scheduling
+    /// context's policy decides — the paper's headline feature). A
+    /// pinned variant rides as a [`Forced`] policy; the serve layer
+    /// attaches per-session policies here.
+    pub selector: Option<Arc<dyn SelectionPolicy>>,
     /// Scheduling priority (higher runs earlier among ready tasks;
     /// StarPU's `starpu_task::priority`).
     pub priority: i32,
@@ -52,7 +55,7 @@ impl TaskSpec {
             codelet,
             handles: handles.into_iter().zip(modes).collect(),
             size,
-            force_variant: None,
+            selector: None,
             priority: 0,
             after: Vec::new(),
             ctx: crate::taskrt::DEFAULT_CTX,
@@ -65,8 +68,16 @@ impl TaskSpec {
         self
     }
 
-    pub fn with_variant(mut self, v: &str) -> TaskSpec {
-        self.force_variant = Some(v.to_string());
+    /// Pin this task to one variant: sugar for a per-task [`Forced`]
+    /// selection policy.
+    pub fn with_variant(self, v: &str) -> TaskSpec {
+        self.with_selector(Arc::new(Forced::new(v)))
+    }
+
+    /// Run this task under its own selection policy instead of the
+    /// scheduling context's (per-session policies in the serve layer).
+    pub fn with_selector(mut self, s: Arc<dyn SelectionPolicy>) -> TaskSpec {
+        self.selector = Some(s);
         self
     }
 

@@ -99,7 +99,7 @@ pub(crate) fn push_ready(inner: &Arc<Inner>, id: super::task::TaskId) {
             codelet: spec.codelet.clone(),
             size: spec.size,
             handles: spec.handles.clone(),
-            force_variant: spec.force_variant.clone(),
+            selector: spec.selector.clone(),
             priority: spec.priority,
             ctx: spec.ctx,
             chosen_impl: None,
@@ -117,21 +117,24 @@ fn execute_body(
 ) -> Result<TaskResult> {
     let codelet = &task.codelet;
 
-    // choose the implementation (model-aware policies already did)
+    // choose the implementation: model-aware schedulers already asked
+    // the selection policy at push time; everyone else asks it now
     let impl_idx = match task.chosen_impl {
         Some(i) if slot.ctx.impl_eligible(task, i, me.arch) => i,
         _ => slot
             .ctx
-            .pick_impl(task, me.arch)
+            .select_impl(task, me.arch)
+            .map(|c| c.impl_idx)
             .ok_or_else(|| {
                 anyhow!(
-                    "no implementation of '{}' (size {}) runnable on {} worker {} \
-                     (context '{}')",
+                    "no implementation of '{}' (size {}) selectable on {} worker {} \
+                     (context '{}', policy '{}')",
                     codelet.name,
                     task.size,
                     me.arch.name(),
                     me.id,
-                    slot.name
+                    slot.name,
+                    slot.ctx.policy_for(task).name()
                 )
             })?,
     };
@@ -231,10 +234,12 @@ fn execute_body(
     };
 
     // history model learns the *execution* component only; dmda adds
-    // transfer separately at placement time
+    // transfer separately at placement time. The governing selection
+    // policy hears about the measurement too (online-learning loop).
     inner
         .perf
         .record(&codelet.name, &imp.name, task.size, modeled_exec);
+    slot.ctx.feedback(task, &imp.name, modeled_exec);
 
     Ok(TaskResult {
         task: task.id,

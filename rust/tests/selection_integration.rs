@@ -1,0 +1,134 @@
+//! Integration tests for the unified variant-selection engine: two
+//! scheduling contexts running different policies over the same
+//! workload select differently; a Greedy context converges to the
+//! model-best variant; per-task policy overrides beat the context
+//! policy; and unknown forced variants are rejected at submit time.
+
+use std::sync::Arc;
+
+use compar::runtime::Tensor;
+use compar::taskrt::selection::Forced;
+use compar::taskrt::{
+    AccessMode, Arch, Codelet, Config, Runtime, SchedPolicy, SelectorKind, TaskSpec,
+};
+
+fn sort_codelet() -> Codelet {
+    // app "sort" so the analytic device model knows both variants:
+    // at size 4096 "omp" is modeled ~5x faster than "seq"
+    Codelet::new("duo", "sort", vec![AccessMode::Read])
+        .with_native("omp", Arch::Cpu, Arc::new(|_| Ok(())))
+        .with_native("seq", Arch::Cpu, Arc::new(|_| Ok(())))
+}
+
+fn cpu_runtime(ncpu: usize) -> Runtime {
+    let cfg = Config {
+        ncpu,
+        ncuda: 0,
+        sched: SchedPolicy::Eager,
+        ..Config::default()
+    };
+    Runtime::new(cfg, None).unwrap()
+}
+
+#[test]
+fn contexts_with_different_policies_select_differently() {
+    let rt = cpu_runtime(4);
+    let a = rt
+        .create_context_with("a", &[0, 1], SchedPolicy::Eager, SelectorKind::Forced("seq".into()))
+        .unwrap();
+    let b = rt
+        .create_context_with("b", &[2, 3], SchedPolicy::Eager, SelectorKind::Forced("omp".into()))
+        .unwrap();
+    let infos = rt.contexts();
+    assert_eq!(infos[a].selector, "forced:seq");
+    assert_eq!(infos[b].selector, "forced:omp");
+
+    let cl = rt.register_codelet(sort_codelet());
+    for _ in 0..6 {
+        let ha = rt.register_data(Tensor::vector(vec![0.0; 4]));
+        let hb = rt.register_data(Tensor::vector(vec![0.0; 4]));
+        rt.submit(TaskSpec::new(cl.clone(), vec![ha], 4096).in_context(a))
+            .unwrap();
+        rt.submit(TaskSpec::new(cl.clone(), vec![hb], 4096).in_context(b))
+            .unwrap();
+    }
+    rt.wait_all().unwrap();
+    let results = rt.drain_results();
+    assert_eq!(results.len(), 12);
+    for r in &results {
+        if r.ctx == a {
+            assert_eq!(r.variant, "seq", "context a pinned to seq");
+        } else {
+            assert_eq!(r.ctx, b);
+            assert_eq!(r.variant, "omp", "context b pinned to omp");
+        }
+    }
+}
+
+#[test]
+fn greedy_converges_to_model_best_variant() {
+    let rt = cpu_runtime(2);
+    let cl = rt.register_codelet(sort_codelet());
+    // one task at a time: deterministic sample accumulation
+    let mut variants = Vec::new();
+    for _ in 0..16 {
+        let h = rt.register_data(Tensor::vector(vec![0.0; 4]));
+        let id = rt.submit(TaskSpec::new(cl.clone(), vec![h], 4096)).unwrap();
+        rt.wait_all().unwrap();
+        let r = rt
+            .drain_results()
+            .into_iter()
+            .find(|r| r.task == id)
+            .unwrap();
+        variants.push(r.variant);
+    }
+    // both variants must have been explored while cold...
+    assert!(variants.iter().any(|v| v == "omp"), "{variants:?}");
+    assert!(variants.iter().any(|v| v == "seq"), "{variants:?}");
+    // ...and the tail must exploit the model-best variant (omp)
+    for v in &variants[variants.len() - 5..] {
+        assert_eq!(v, "omp", "converged tail: {variants:?}");
+    }
+}
+
+#[test]
+fn per_task_selector_overrides_context_policy() {
+    let rt = cpu_runtime(2);
+    let cl = rt.register_codelet(sort_codelet());
+    // warm the models so the Greedy context policy would pick omp
+    for _ in 0..8 {
+        let h = rt.register_data(Tensor::vector(vec![0.0; 4]));
+        rt.submit(TaskSpec::new(cl.clone(), vec![h], 4096)).unwrap();
+        rt.wait_all().unwrap();
+    }
+    rt.drain_results();
+    let h = rt.register_data(Tensor::vector(vec![0.0; 4]));
+    let id = rt
+        .submit(
+            TaskSpec::new(cl.clone(), vec![h], 4096)
+                .with_selector(Arc::new(Forced::new("seq"))),
+        )
+        .unwrap();
+    rt.wait_all().unwrap();
+    let r = rt
+        .drain_results()
+        .into_iter()
+        .find(|r| r.task == id)
+        .unwrap();
+    assert_eq!(r.variant, "seq", "per-task Forced must beat the context policy");
+}
+
+#[test]
+fn forced_unknown_variant_rejected_at_submit() {
+    let rt = cpu_runtime(2);
+    let cl = rt.register_codelet(sort_codelet());
+    let h = rt.register_data(Tensor::vector(vec![0.0; 4]));
+    let err = rt
+        .submit(TaskSpec::new(cl, vec![h], 64).with_variant("nope"))
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no selectable implementation"), "{msg}");
+    assert!(msg.contains("forced:nope"), "{msg}");
+    // the runtime stays healthy afterwards
+    rt.wait_all().unwrap();
+}

@@ -8,13 +8,14 @@ use std::collections::BTreeSet;
 use std::time::Duration;
 
 use compar::serve::{loadgen, parse_contexts, Client, LoadgenOptions, ServeOptions, Server, SubmitReq};
-use compar::taskrt::SchedPolicy;
+use compar::taskrt::{SchedPolicy, SelectorKind};
 
 fn opts(contexts: &str) -> ServeOptions {
     ServeOptions {
         addr: "127.0.0.1:0".into(),
         contexts: parse_contexts(contexts).unwrap(),
         sched: SchedPolicy::Dmda,
+        selector: Some(SelectorKind::Greedy),
         ncpu: 4,
         ncuda: 0,
         max_inflight: 16,
@@ -119,6 +120,8 @@ fn loadgen_reports_throughput_and_percentiles() {
         size: 32,
         tasks: 1,
         ctxs: vec!["alpha".into(), "beta".into()],
+        pipeline: 1,
+        policy: None,
         verify: true,
         seed: 7,
     };
@@ -134,6 +137,88 @@ fn loadgen_reports_throughput_and_percentiles() {
     let stats = server.shutdown().unwrap();
     assert_eq!(stats.requests_err, 0);
     assert_eq!(stats.requests_ok, 24);
+}
+
+#[test]
+fn pipelined_loadgen_matches_out_of_order_replies() {
+    let server = Server::start(opts("alpha:2,beta:2")).unwrap();
+    let addr = server.local_addr().to_string();
+    let lg = LoadgenOptions {
+        clients: 3,
+        requests: 8,
+        app: "matmul".into(),
+        size: 32,
+        tasks: 1,
+        ctxs: vec!["alpha".into(), "beta".into()],
+        pipeline: 4,
+        policy: None,
+        verify: true,
+        seed: 21,
+    };
+    let report = loadgen::run(&addr, &lg).unwrap();
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.requests, 24);
+    assert_eq!(report.pipeline, 4);
+    assert!(report.rps > 0.0);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests_ok, 24);
+    assert_eq!(stats.inflight, 0, "pipelined drain left requests behind");
+}
+
+#[test]
+fn session_policy_pins_selection_and_is_reported() {
+    let server = Server::start(opts("")).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // a bogus policy is rejected in the handshake
+    let err = Client::connect_with_policy(&addr, Some("bogus")).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown selection policy"), "{err:#}");
+
+    // forced:omp session: every task must run the omp variant
+    let mut c = Client::connect_with_policy(&addr, Some("forced:omp")).unwrap();
+    for r in 0..3u64 {
+        let resp = c.submit(submit(r, "matmul", 32, 1, None, 100 + r)).unwrap();
+        assert_eq!(resp.policy, "forced:omp");
+        assert!(resp.variants.iter().all(|v| v == "omp"), "{:?}", resp.variants);
+    }
+    // per-request variant pin overrides the session policy
+    let mut req = submit(9, "matmul", 32, 1, None, 5);
+    req.variant = Some("seq".into());
+    let resp = c.submit(req).unwrap();
+    assert_eq!(resp.policy, "forced:seq");
+    assert!(resp.variants.iter().all(|v| v == "seq"), "{:?}", resp.variants);
+
+    // selection counts surface per context in stats
+    let stats = c.stats().unwrap();
+    let default_hist = stats.ctx_variants.get("default").expect("default ctx histogram");
+    assert_eq!(default_hist.get("omp").copied().unwrap_or(0), 3);
+    assert_eq!(default_hist.get("seq").copied().unwrap_or(0), 1);
+
+    // context descriptors expose their selection policy
+    let contexts = c.contexts().unwrap();
+    assert_eq!(contexts[0].selector, "greedy");
+    c.quit().unwrap();
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn unknown_variant_is_a_protocol_error() {
+    let server = Server::start(opts("")).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    let mut req = submit(1, "matmul", 32, 1, None, 1);
+    req.variant = Some("tpu".into());
+    let e = c.submit(req).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("unknown variant 'tpu'"), "{msg}");
+    assert!(msg.contains("registered:"), "{msg}");
+    // the session still works afterwards with a valid pin
+    let mut req = submit(2, "matmul", 32, 1, None, 2);
+    req.variant = Some("omp".into());
+    let ok = c.submit(req).unwrap();
+    assert!(ok.variants.iter().all(|v| v == "omp"));
+    c.quit().unwrap();
+    server.shutdown().unwrap();
 }
 
 #[test]
