@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
-# CI gate: formatting, lints on the codebase (serve + taskrt included),
-# and the tier-1 verify (build + tests). Also exercises the serving path
-# end-to-end via an in-process loadgen smoke run.
+# CI gate: formatting, lints on the codebase (serve + cluster + taskrt
+# included), and the tier-1 verify (build + tests). Also exercises the
+# serving path end-to-end via in-process loadgen smoke runs, a real
+# multi-process two-shard cluster behind `compar route`, and the bench
+# record schema (validate both a fresh record and the repo baseline).
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -10,7 +12,7 @@ cargo fmt --all -- --check
 
 echo "== clippy (-D warnings) =="
 # The two -A lints are pre-existing stylistic patterns in the seed code;
-# everything else (including the serve/ subsystem) builds warning-free.
+# everything else (including serve/ and cluster/) builds warning-free.
 cargo clippy --release --all-targets -- \
   -D warnings \
   -A clippy::too_many_arguments \
@@ -27,5 +29,62 @@ cargo run --release --quiet -- loadgen \
 
 echo "== selection-policy bench (smoke) =="
 cargo run --release --quiet -- bench selection --smoke
+
+echo "== cluster smoke (in-process: 2 shards behind the router) =="
+cargo run --release --quiet -- loadgen --shards 2 \
+  --clients 4 --requests 8 --app matmul --size 32 --pipeline 2 --ncpu 2
+
+# wait until a TCP port accepts connections (pure bash, no nc needed)
+wait_port() {
+  local port="$1"
+  for _ in $(seq 1 100); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/${port}") 2>/dev/null; then
+      exec 3>&- 3<&- || true
+      return 0
+    fi
+    sleep 0.1
+  done
+  echo "port ${port} never came up" >&2
+  return 1
+}
+
+echo "== cluster smoke (multi-process: compar route + 2 compar serve) =="
+# run the prebuilt binary directly (already built by the tier-1 step):
+# backgrounding `cargo run` would record cargo's PID, and cargo does not
+# forward signals to its child — the trap below must kill the real
+# server processes so a failed step never leaves the fixed ports bound
+COMPAR=target/release/compar
+SHARD1=""; SHARD2=""; ROUTER=""
+cleanup_cluster() {
+  for pid in $ROUTER $SHARD1 $SHARD2; do
+    kill "$pid" 2>/dev/null || true
+  done
+}
+trap cleanup_cluster EXIT
+"$COMPAR" serve --addr 127.0.0.1:7361 --ncpu 2 &
+SHARD1=$!
+"$COMPAR" serve --addr 127.0.0.1:7362 --ncpu 2 &
+SHARD2=$!
+wait_port 7361
+wait_port 7362
+"$COMPAR" route --listen 127.0.0.1:7360 \
+  --shards 127.0.0.1:7361,127.0.0.1:7362 --gossip-ms 200 &
+ROUTER=$!
+wait_port 7360
+# loadgen exits non-zero unless every request completed
+"$COMPAR" loadgen --addr 127.0.0.1:7360 \
+  --clients 2 --requests 6 --app matmul --size 32
+# shutdown through the router drains the whole cluster; clean exits only
+"$COMPAR" loadgen --addr 127.0.0.1:7360 --shutdown
+wait "$ROUTER" "$SHARD1" "$SHARD2"
+trap - EXIT
+
+echo "== bench record schema (fresh record + repo baseline) =="
+tmp_bench="$(mktemp)"
+cargo run --release --quiet -- loadgen \
+  --clients 2 --requests 4 --app matmul --size 32 --out "$tmp_bench"
+cargo run --release --quiet -- bench validate "$tmp_bench"
+rm -f "$tmp_bench"
+cargo run --release --quiet -- bench validate BENCH_serve.json
 
 echo "CI OK"

@@ -87,58 +87,150 @@ pub fn paper_sizes(app: &str) -> Vec<usize> {
 pub struct Instance {
     pub handles: Vec<HandleId>,
     pub size: usize,
+    /// Which handles this instance registered itself (and whose cleanup
+    /// it is responsible for). Handles shared with other identical
+    /// instances (zero-copy batching) or donated to a batch group are
+    /// not owned.
+    owned: Vec<bool>,
     app: String,
     seed: u64,
 }
 
-/// Register a fresh problem instance for (app, size) in the runtime.
-pub fn prepare(rt: &Runtime, app: &str, size: usize, seed: u64) -> Result<Instance> {
-    let handles = match app {
+impl Instance {
+    /// The handles this instance must unregister when it is done.
+    pub fn owned_handles(&self) -> Vec<HandleId> {
+        self.handles
+            .iter()
+            .zip(&self.owned)
+            .filter(|(_, &o)| o)
+            .map(|(h, _)| *h)
+            .collect()
+    }
+
+    /// Transfer ownership of the handles at `idx` to the caller —
+    /// zero-copy batching: the batch group frees the shared read-only
+    /// inputs only after every rider has completed. Returns the
+    /// (index, handle) pairs now owned by the caller.
+    pub fn donate_handles(&mut self, idx: &[usize]) -> Vec<(usize, HandleId)> {
+        idx.iter()
+            .filter(|&&i| i < self.handles.len())
+            .map(|&i| {
+                self.owned[i] = false;
+                (i, self.handles[i])
+            })
+            .collect()
+    }
+}
+
+/// Indices of `app`'s handles that its codelet only ever reads, so
+/// identical (app, size, seed) instances may share one registration
+/// (zero-copy batching in the serve layer). Apps whose kernels update
+/// their input in place (the stencils, lud, sort) share nothing.
+pub fn shared_input_indices(app: &str) -> &'static [usize] {
+    match app {
+        // a and b are Read-mode; only c is written
+        "matmul" => &[0, 1],
+        // the reference matrix is Read-mode; the score matrix is written
+        "nw" => &[0],
+        _ => &[],
+    }
+}
+
+/// The tensors backing a fresh (app, size, seed) problem instance, in
+/// handle order. Indices in `skip` come back as `None` without paying
+/// for data generation — the zero-copy path reuses a donor's handle
+/// there, so generating the tensor would be pure waste. Only the
+/// shareable apps consult `skip` (the others are never shared).
+fn instance_tensors(
+    app: &str,
+    size: usize,
+    seed: u64,
+    skip: &[usize],
+) -> Result<Vec<Option<Tensor>>> {
+    let want = |i: usize| !skip.contains(&i);
+    Ok(match app {
         "hotspot" => {
             let (t, p) = hotspot::generate(seed, size);
             vec![
-                rt.register_data(Tensor::matrix(size, size, t)),
-                rt.register_data(Tensor::matrix(size, size, p)),
+                Some(Tensor::matrix(size, size, t)),
+                Some(Tensor::matrix(size, size, p)),
             ]
         }
         "hotspot3d" => {
             let (t, p) = hotspot3d::generate(seed, size);
             let shape = vec![hotspot3d::LAYERS, size, size];
             vec![
-                rt.register_data(Tensor::new(shape.clone(), t)),
-                rt.register_data(Tensor::new(shape, p)),
+                Some(Tensor::new(shape.clone(), t)),
+                Some(Tensor::new(shape, p)),
             ]
         }
         "lud" => {
             let m = lud::generate(seed, size);
-            vec![rt.register_data(Tensor::matrix(size, size, m))]
+            vec![Some(Tensor::matrix(size, size, m))]
         }
         "nw" => {
-            let r = nw::generate(seed, size);
             let n1 = size + 1;
-            vec![
-                rt.register_data(Tensor::matrix(n1, n1, r)),
-                rt.register_data(Tensor::zeros(vec![n1, n1])),
-            ]
+            let r = want(0).then(|| Tensor::matrix(n1, n1, nw::generate(seed, size)));
+            vec![r, Some(Tensor::zeros(vec![n1, n1]))]
         }
         "matmul" => {
-            let a = common::gen_matrix(seed, size, -1.0, 1.0);
-            let b = common::gen_matrix(seed ^ 0xb, size, -1.0, 1.0);
-            vec![
-                rt.register_data(Tensor::matrix(size, size, a)),
-                rt.register_data(Tensor::matrix(size, size, b)),
-                rt.register_data(Tensor::zeros(vec![size, size])),
-            ]
+            let a = want(0)
+                .then(|| Tensor::matrix(size, size, common::gen_matrix(seed, size, -1.0, 1.0)));
+            let b = want(1).then(|| {
+                Tensor::matrix(size, size, common::gen_matrix(seed ^ 0xb, size, -1.0, 1.0))
+            });
+            vec![a, b, Some(Tensor::zeros(vec![size, size]))]
         }
         "sort" => {
             let v = sort::generate(seed, size);
-            vec![rt.register_data(Tensor::vector(v))]
+            vec![Some(Tensor::vector(v))]
         }
         _ => bail!("unknown app '{app}'"),
-    };
+    })
+}
+
+/// Register a fresh problem instance for (app, size, seed) in the
+/// runtime.
+pub fn prepare(rt: &Runtime, app: &str, size: usize, seed: u64) -> Result<Instance> {
+    prepare_with_inputs(rt, app, size, seed, &[])
+}
+
+/// Like [`prepare`], but reuse already-registered handles for the given
+/// (index, handle) pairs instead of registering fresh copies — the
+/// zero-copy batching path for identical (app, size, seed) requests.
+/// Only indices from [`shared_input_indices`] are safe to share. Shared
+/// handles are not owned by the returned instance (the donor group
+/// frees them).
+pub fn prepare_with_inputs(
+    rt: &Runtime,
+    app: &str,
+    size: usize,
+    seed: u64,
+    shared: &[(usize, HandleId)],
+) -> Result<Instance> {
+    let skip: Vec<usize> = shared.iter().map(|(i, _)| *i).collect();
+    let tensors = instance_tensors(app, size, seed, &skip)?;
+    let mut handles = Vec::with_capacity(tensors.len());
+    let mut owned = Vec::with_capacity(tensors.len());
+    for (i, t) in tensors.into_iter().enumerate() {
+        match shared.iter().copied().find(|&(j, _)| j == i) {
+            Some((_, h)) => {
+                handles.push(h);
+                owned.push(false);
+            }
+            None => {
+                let t = t.ok_or_else(|| {
+                    anyhow!("internal: handle {i} of '{app}' not generated and not shared")
+                })?;
+                handles.push(rt.register_data(t));
+                owned.push(true);
+            }
+        }
+    }
     Ok(Instance {
         handles,
         size,
+        owned,
         app: app.to_string(),
         seed,
     })

@@ -1,0 +1,136 @@
+//! Cluster serving bench: N in-process `compar serve` shards behind a
+//! `compar route` router, driven by the load generator. Reports the
+//! aggregate requests/s across the cluster and the **cross-shard
+//! selection regret** — every task's selected variant scored against the
+//! single-process oracle (the converged analytic device model over the
+//! runnable variant pool), exactly as the single-process selection bench
+//! does. Run with gossip off and on ([`compare`]) to see how much of the
+//! per-shard cold-start regret the perf-model gossip removes: with
+//! gossip, one shard's calibration seeds every other shard's priors, so
+//! the cluster pays the exploration cost roughly once instead of once
+//! per shard.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::fig1::variant_time;
+use super::report::Table;
+use super::selection::{oracle_among, runnable_variants};
+use crate::cluster::{LocalCluster, PlacementKind, RouterOptions};
+use crate::serve::loadgen::{self, LoadReport, LoadgenOptions};
+use crate::serve::ServeOptions;
+use crate::taskrt::device::Arch;
+use crate::util::stats::fmt_time;
+
+/// Outcome of one cluster run.
+pub struct ClusterReport {
+    pub shards: usize,
+    pub gossip: bool,
+    pub placement: &'static str,
+    pub load: LoadReport,
+    /// Selected-minus-oracle modeled seconds summed over every task.
+    pub regret: f64,
+    /// The oracle variant for (app, size) over the runnable pool.
+    pub oracle: String,
+    /// Tasks that selected the oracle variant / all tasks.
+    pub oracle_hits: usize,
+    pub tasks: usize,
+}
+
+/// Boot a cluster, drive it, score the selection histogram against the
+/// single-process oracle, drain everything.
+pub fn run(
+    shards: usize,
+    gossip: bool,
+    placement: PlacementKind,
+    serve: &ServeOptions,
+    load: &LoadgenOptions,
+) -> Result<ClusterReport> {
+    let ropts = RouterOptions {
+        listen: "127.0.0.1:0".into(),
+        shards: Vec::new(),
+        placement,
+        health_period: Duration::from_millis(150),
+        gossip_period: Duration::from_millis(150),
+        gossip,
+    };
+    let cluster = LocalCluster::start(shards, serve, ropts)?;
+    let report = loadgen::run(&cluster.addr(), load)?;
+    cluster.shutdown()?;
+
+    // artifacts only count toward the oracle pool when the shards could
+    // actually run them
+    let with_artifacts = crate::runtime::Manifest::load(&crate::runtime::manifest::default_dir())
+        .is_ok()
+        && cfg!(feature = "xla");
+    let pool = runnable_variants(&load.app, with_artifacts);
+    let (oracle, oracle_t) =
+        oracle_among(&load.app, load.size, &pool).unwrap_or_else(|| ("-".into(), 0.0));
+    let mut regret = 0.0f64;
+    let mut oracle_hits = 0usize;
+    let mut tasks = 0usize;
+    for (variant, count) in &report.variants {
+        let arch = Arch::parse(variant).unwrap_or(Arch::Cpu);
+        let t = variant_time(&load.app, variant, arch, load.size);
+        regret += (*count as f64) * (t - oracle_t).max(0.0);
+        tasks += count;
+        if *variant == oracle {
+            oracle_hits += count;
+        }
+    }
+    Ok(ClusterReport {
+        shards,
+        gossip,
+        placement: placement.name(),
+        load: report,
+        regret,
+        oracle,
+        oracle_hits,
+        tasks,
+    })
+}
+
+/// The gossip ablation: the same load with gossip off, then on.
+pub fn compare(
+    shards: usize,
+    placement: PlacementKind,
+    serve: &ServeOptions,
+    load: &LoadgenOptions,
+) -> Result<Vec<ClusterReport>> {
+    Ok(vec![
+        run(shards, false, placement, serve, load)?,
+        run(shards, true, placement, serve, load)?,
+    ])
+}
+
+pub fn render(reports: &[ClusterReport]) -> String {
+    let mut t = Table::new(
+        "Cluster bench (aggregate throughput + cross-shard selection regret vs oracle)",
+        &[
+            "shards",
+            "gossip",
+            "placement",
+            "req/s",
+            "p95",
+            "errors",
+            "oracle",
+            "oracle hits",
+            "regret",
+        ],
+    );
+    for r in reports {
+        t.row(vec![
+            r.shards.to_string(),
+            if r.gossip { "on" } else { "off" }.to_string(),
+            r.placement.to_string(),
+            format!("{:.1}", r.load.rps),
+            fmt_time(r.load.p95),
+            r.load.errors.to_string(),
+            r.oracle.clone(),
+            format!("{}/{}", r.oracle_hits, r.tasks),
+            fmt_time(r.regret),
+        ]);
+    }
+    t.render()
+}

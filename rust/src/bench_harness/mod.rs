@@ -4,8 +4,11 @@
 //! * [`table1f`] — the programmability (LoC) comparison;
 //! * [`selection`] — the §3.2 selection-quality discussion, quantified;
 //! * [`serve_bench`] — serving-path throughput/latency (BENCH_serve.json);
+//! * [`cluster_bench`] — sharded serving: aggregate req/s + cross-shard
+//!   selection regret, gossip off vs on;
 //! * [`report`] — the plain-text table renderer.
 
+pub mod cluster_bench;
 pub mod fig1;
 pub mod report;
 pub mod selection;

@@ -30,6 +30,7 @@ pub const POLICY_SET: &[SelectorKind] = &[
     SelectorKind::Greedy,
     SelectorKind::Calibrating,
     SelectorKind::EpsilonGreedy(0.1),
+    SelectorKind::EpsilonDecayed(0.1),
 ];
 
 /// Decision trace of one run.
@@ -238,6 +239,40 @@ pub fn render_comparison(traces: &[Trace]) -> String {
         t.row(row);
     }
     t.render()
+}
+
+/// The selection-regret record (`compar bench selection --out FILE`):
+/// schema-versioned like `BENCH_serve.json`, one row per trace.
+pub fn to_json(traces: &[Trace]) -> String {
+    use crate::util::json::Json;
+    let mut m = std::collections::BTreeMap::new();
+    m.insert(
+        "bench".to_string(),
+        Json::Str("compar-selection".to_string()),
+    );
+    m.insert(
+        "schema".to_string(),
+        Json::Num(super::serve_bench::BENCH_SCHEMA as f64),
+    );
+    m.insert("status".to_string(), Json::Str("measured".to_string()));
+    let rows: Vec<Json> = traces
+        .iter()
+        .map(|tr| {
+            let mut row = std::collections::BTreeMap::new();
+            row.insert("app".to_string(), Json::Str(tr.app.clone()));
+            row.insert("size".to_string(), Json::Num(tr.size as f64));
+            row.insert("policy".to_string(), Json::Str(tr.policy.clone()));
+            row.insert(
+                "tasks".to_string(),
+                Json::Num(tr.decisions.len() as f64),
+            );
+            row.insert("accuracy".to_string(), Json::Num(tr.accuracy()));
+            row.insert("regret_s".to_string(), Json::Num(tr.regret()));
+            Json::Obj(row)
+        })
+        .collect();
+    m.insert("rows".to_string(), Json::Arr(rows));
+    crate::util::json::to_string(&Json::Obj(m))
 }
 
 #[cfg(test)]

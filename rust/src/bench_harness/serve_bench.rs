@@ -5,7 +5,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::report::Table;
 use crate::serve::loadgen::{self, LoadReport, LoadgenOptions};
@@ -13,6 +13,21 @@ use crate::serve::protocol::StatsResp;
 use crate::serve::{ServeOptions, Server};
 use crate::util::json::{self, Json};
 use crate::util::stats::fmt_time;
+
+/// Schema version of every bench JSON record (`BENCH_serve.json` and
+/// the selection-regret record). Bump on breaking shape changes; the
+/// `compar bench validate` subcommand (and ci.sh) checks it.
+pub const BENCH_SCHEMA: u64 = 2;
+
+/// Write a bench record atomically (temp file + rename), so a reader —
+/// or a crashed run — never observes a half-written record and the
+/// `"pending"` placeholder is replaced in one step.
+pub fn write_atomic(path: &str, contents: &str) -> Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, contents).with_context(|| format!("writing {tmp}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp} -> {path}"))?;
+    Ok(())
+}
 
 /// Boot a server, run the load, drain, return both sides' numbers.
 pub fn run_inprocess(
@@ -66,6 +81,7 @@ pub fn to_json(
 ) -> String {
     let mut m = BTreeMap::new();
     m.insert("bench".to_string(), Json::Str("compar-loadgen".into()));
+    m.insert("schema".to_string(), Json::Num(BENCH_SCHEMA as f64));
     m.insert("status".to_string(), Json::Str("measured".into()));
     let mut knobs = BTreeMap::new();
     knobs.insert("app".into(), Json::Str(load.app.clone()));

@@ -1,0 +1,98 @@
+//! Router-mediated perf-model gossip.
+//!
+//! Every round the router **pulls** each live shard's *locally observed*
+//! perf-model bucket summaries (`perf_pull` — a `{count, mean, m2,
+//! ewma}` record per (codelet:variant, size)), then **pushes** to each
+//! shard the Welford-combined summary of every *other* shard
+//! (`perf_push`). The receiving shard installs the payload as a
+//! replaceable remote overlay
+//! ([`crate::taskrt::PerfModels::set_remote_json`]), so:
+//!
+//! * a variant calibrated on shard A is calibrated on shard B one round
+//!   later — B's Calibrating/Greedy/EpsilonGreedy policies skip the
+//!   cold-start exploration entirely (the Optimized-Composition
+//!   "transferable performance data" property, across processes);
+//! * no sample is ever counted twice: a shard only ever ships what it
+//!   measured itself, and the overlay is replaced, not accumulated;
+//! * the payload is bounded by the number of distinct (codelet,
+//!   variant, size) triples, independent of traffic volume.
+//!
+//! Pulls run even when pushing is disabled (`compar route --no-gossip`):
+//! the pulled summaries also feed the `calibrated` placement policy.
+//!
+//! **Deployment caveat:** the no-double-counting argument assumes each
+//! shard's *local* layer holds only its own measurements. Shards that
+//! share one persisted `COMPAR_PERFMODEL_DIR` all load the same
+//! `models.json` into their local layer at startup and would each ship
+//! those samples as their own — give clustered shards distinct
+//! perf-model directories (or none).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::router::ShardState;
+use crate::serve::Client;
+use crate::taskrt::perfmodel::{merge_models, models_to_json, parse_models, VariantModel};
+use crate::util::json::Json;
+
+/// Outcome of one gossip round (diagnostics).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RoundStats {
+    /// Shards whose models were pulled this round.
+    pub pulled: usize,
+    /// Shards that accepted a pushed overlay this round.
+    pub pushed: usize,
+}
+
+/// Pull every live shard's local models; when `push` is set, push each
+/// shard the combined summary of the *others*.
+pub fn run_round(shards: &[Arc<ShardState>], push: bool) -> RoundStats {
+    let mut stats = RoundStats::default();
+    for shard in shards {
+        if !shard.healthy() {
+            continue;
+        }
+        if let Ok(models) = pull(&shard.addr) {
+            shard.set_calib(models);
+            stats.pulled += 1;
+        }
+    }
+    if !push {
+        return stats;
+    }
+    for (i, shard) in shards.iter().enumerate() {
+        if !shard.healthy() {
+            continue;
+        }
+        let mut merged: BTreeMap<String, VariantModel> = BTreeMap::new();
+        for (j, other) in shards.iter().enumerate() {
+            if i == j {
+                continue; // never send a shard its own samples back
+            }
+            merge_models(&mut merged, &other.calib_clone());
+        }
+        if merged.is_empty() {
+            continue;
+        }
+        if push_models(&shard.addr, &models_to_json(&merged)).is_ok() {
+            stats.pushed += 1;
+        }
+    }
+    stats
+}
+
+fn pull(addr: &str) -> Result<BTreeMap<String, VariantModel>> {
+    let mut c = Client::connect_with_deadline(addr, super::router::ADMIN_TIMEOUT)?;
+    let models = c.perf_pull()?;
+    let _ = c.quit();
+    Ok(parse_models(&models))
+}
+
+fn push_models(addr: &str, models: &Json) -> Result<u64> {
+    let mut c = Client::connect_with_deadline(addr, super::router::ADMIN_TIMEOUT)?;
+    let merged = c.perf_push(models)?;
+    let _ = c.quit();
+    Ok(merged)
+}

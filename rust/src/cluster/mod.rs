@@ -1,0 +1,96 @@
+//! `cluster` — sharded multi-process serving (`compar route`).
+//!
+//! The serve layer scales one process; this layer scales across
+//! processes while keeping the programmer-facing surface a single
+//! endpoint (HSTREAM's "unified API, distributed runtime" shape): a
+//! **router** speaks the exact same NDJSON protocol as `compar serve`,
+//! so existing clients and the load generator work unchanged, and fans
+//! submits out over N backend shards.
+//!
+//! ```text
+//!                        ┌────────────────────────────────────────────┐
+//!                        │              compar route                  │
+//! clients ──NDJSON/TCP──▶│ sessions ─▶ placement (rr / least-loaded / │
+//!  (unchanged protocol)  │             calibrated) ─▶ shard backends  │
+//!                        │ health probe ─ drain ─ retry-on-failure    │
+//!                        │ gossip: perf_pull* ─▶ merge ─▶ perf_push   │
+//!                        └──────┬──────────────────┬──────────────────┘
+//!                               ▼                  ▼
+//!                      compar serve shard A   compar serve shard B
+//!                      (scheduling contexts,  (scheduling contexts,
+//!                       selection policies,    selection policies,
+//!                       local PerfModels   ◀─gossip─▶  local PerfModels
+//!                       + remote overlay)      + remote overlay)
+//! ```
+//!
+//! What makes this more than a TCP proxy is the **perf-model gossip**
+//! (see [`gossip`]): selection quality — the paper's core metric — stops
+//! being a per-process property. A variant calibrated by traffic on one
+//! shard seeds the selection priors of every other shard within a gossip
+//! round, so a cold shard joins the cluster already knowing the variant
+//! ranking. The `calibrated` placement policy closes the loop from the
+//! other side: requests are routed toward the shard that already knows
+//! their (codelet, size).
+//!
+//! Layers (each its own module):
+//! * [`placement`] — pluggable shard-placement policies.
+//! * [`router`] — sessions, fan-out, health, drain, retry, shutdown.
+//! * [`gossip`] — the pull/merge/push round over protocol v3.
+
+pub mod gossip;
+pub mod placement;
+pub mod router;
+
+pub use placement::PlacementKind;
+pub use router::{Router, RouterOptions, ShardState};
+
+use anyhow::{bail, Result};
+
+use crate::serve::protocol::StatsResp;
+use crate::serve::{ServeOptions, Server};
+
+/// An in-process cluster: N serve shards on ephemeral loopback ports
+/// behind one router — tests, `compar loadgen --shards N`, and the
+/// cluster bench.
+pub struct LocalCluster {
+    pub shards: Vec<Server>,
+    pub router: Router,
+}
+
+impl LocalCluster {
+    /// Boot `n` shards (each a full [`Server`] with `serve`'s
+    /// configuration, bound to an ephemeral port) and a router over
+    /// them. `ropts.shards` is filled in; `ropts.listen` is honoured.
+    pub fn start(n: usize, serve: &ServeOptions, mut ropts: RouterOptions) -> Result<LocalCluster> {
+        if n == 0 {
+            bail!("need at least one shard");
+        }
+        let mut shards = Vec::with_capacity(n);
+        let mut addrs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut so = serve.clone();
+            so.addr = "127.0.0.1:0".into();
+            let s = Server::start(so)?;
+            addrs.push(s.local_addr().to_string());
+            shards.push(s);
+        }
+        ropts.shards = addrs;
+        let router = Router::start(ropts)?;
+        Ok(LocalCluster { shards, router })
+    }
+
+    /// The router's client-facing address.
+    pub fn addr(&self) -> String {
+        self.router.local_addr().to_string()
+    }
+
+    /// Drain the router, then every shard; returns per-shard stats.
+    pub fn shutdown(self) -> Result<Vec<StatsResp>> {
+        self.router.shutdown()?;
+        let mut out = Vec::with_capacity(self.shards.len());
+        for s in self.shards {
+            out.push(s.shutdown()?);
+        }
+        Ok(out)
+    }
+}

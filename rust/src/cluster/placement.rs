@@ -1,0 +1,184 @@
+//! Shard-placement policies: which backend shard serves a submit.
+//!
+//! Three policies ship, mirroring the selection engine's shape (a small
+//! closed set, picked by config, swappable per router):
+//!
+//! | policy         | behaviour                                             |
+//! |----------------|-------------------------------------------------------|
+//! | `round-robin`  | rotate over the available shards                      |
+//! | `least-loaded` | fewest in-flight requests at the last health poll     |
+//! | `calibrated`   | selection-aware: the shard whose perf models hold the |
+//! |                | most samples for the request's (codelet, size) — so a |
+//! |                | request lands where variant selection is already      |
+//! |                | converged; ties / cold keys fall back to round-robin  |
+//!
+//! "Available" always means healthy (last stats probe succeeded) and not
+//! drained out of the rotation.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::router::ShardState;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementKind {
+    RoundRobin,
+    LeastLoaded,
+    /// Route to the shard best-calibrated for the request's
+    /// (codelet, size), per the last gossip pull.
+    Calibrated,
+}
+
+impl PlacementKind {
+    pub fn parse(s: &str) -> Option<PlacementKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => Some(PlacementKind::RoundRobin),
+            "least-loaded" | "leastloaded" | "load" => Some(PlacementKind::LeastLoaded),
+            "calibrated" | "selection-aware" | "selection" => Some(PlacementKind::Calibrated),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementKind::RoundRobin => "round-robin",
+            PlacementKind::LeastLoaded => "least-loaded",
+            PlacementKind::Calibrated => "calibrated",
+        }
+    }
+}
+
+/// Pick a shard index for a submit of `app` at `size`, skipping
+/// unavailable shards and the indices in `exclude` (prior failed
+/// attempts of this request). `rr` is the router-wide rotation cursor.
+pub fn pick(
+    kind: PlacementKind,
+    shards: &[Arc<ShardState>],
+    app: &str,
+    size: usize,
+    exclude: &[usize],
+    rr: &AtomicUsize,
+) -> Option<usize> {
+    let cands: Vec<usize> = (0..shards.len())
+        .filter(|i| !exclude.contains(i))
+        .filter(|&i| shards[i].available())
+        .collect();
+    if cands.is_empty() {
+        return None;
+    }
+    match kind {
+        PlacementKind::RoundRobin => {
+            Some(cands[rr.fetch_add(1, Ordering::Relaxed) % cands.len()])
+        }
+        PlacementKind::LeastLoaded => cands
+            .iter()
+            .copied()
+            .min_by_key(|&i| (shards[i].inflight(), i)),
+        PlacementKind::Calibrated => {
+            let codelet = crate::apps::app_codelet_name(app);
+            let scored: Vec<(usize, usize)> = cands
+                .iter()
+                .map(|&i| (i, shards[i].calibration_samples(codelet, size)))
+                .collect();
+            let best = scored.iter().map(|&(_, s)| s).max().unwrap_or(0);
+            if best == 0 {
+                // nobody has seen this (codelet, size) yet: spread the
+                // calibration load instead of piling on shard 0
+                return Some(cands[rr.fetch_add(1, Ordering::Relaxed) % cands.len()]);
+            }
+            // round-robin over the equally-best shards, or a steady
+            // workload would pin all traffic to the lowest index forever
+            let best_set: Vec<usize> = scored
+                .into_iter()
+                .filter(|&(_, s)| s == best)
+                .map(|(i, _)| i)
+                .collect();
+            Some(best_set[rr.fetch_add(1, Ordering::Relaxed) % best_set.len()])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shards(n: usize) -> Vec<Arc<ShardState>> {
+        (0..n)
+            .map(|i| Arc::new(ShardState::new(format!("127.0.0.1:{}", 7400 + i))))
+            .collect()
+    }
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for k in [
+            PlacementKind::RoundRobin,
+            PlacementKind::LeastLoaded,
+            PlacementKind::Calibrated,
+        ] {
+            assert_eq!(PlacementKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PlacementKind::parse("rr"), Some(PlacementKind::RoundRobin));
+        assert_eq!(PlacementKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn round_robin_rotates_over_available() {
+        let s = shards(3);
+        s[1].set_healthy(false);
+        let rr = AtomicUsize::new(0);
+        let picks: Vec<usize> = (0..4)
+            .map(|_| pick(PlacementKind::RoundRobin, &s, "matmul", 64, &[], &rr).unwrap())
+            .collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn exclusion_and_exhaustion() {
+        let s = shards(2);
+        let rr = AtomicUsize::new(0);
+        let p = pick(PlacementKind::RoundRobin, &s, "matmul", 64, &[0], &rr).unwrap();
+        assert_eq!(p, 1);
+        assert_eq!(
+            pick(PlacementKind::RoundRobin, &s, "matmul", 64, &[0, 1], &rr),
+            None
+        );
+        s[0].set_healthy(false);
+        s[1].set_draining(true);
+        assert_eq!(pick(PlacementKind::RoundRobin, &s, "matmul", 64, &[], &rr), None);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_shard() {
+        let s = shards(3);
+        s[0].set_inflight(5);
+        s[1].set_inflight(1);
+        s[2].set_inflight(9);
+        let rr = AtomicUsize::new(0);
+        let p = pick(PlacementKind::LeastLoaded, &s, "matmul", 64, &[], &rr).unwrap();
+        assert_eq!(p, 1);
+    }
+
+    #[test]
+    fn calibrated_routes_to_the_shard_that_knows_the_size() {
+        use crate::taskrt::perfmodel::VariantModel;
+        use std::collections::BTreeMap;
+        let s = shards(2);
+        let mut models: BTreeMap<String, VariantModel> = BTreeMap::new();
+        let m = models.entry("mmul:omp".into()).or_default();
+        for _ in 0..4 {
+            m.record(64, 0.01);
+        }
+        s[1].set_calib(models);
+        let rr = AtomicUsize::new(0);
+        // calibrated size goes to shard 1 every time
+        for _ in 0..3 {
+            let p = pick(PlacementKind::Calibrated, &s, "matmul", 64, &[], &rr).unwrap();
+            assert_eq!(p, 1);
+        }
+        // an unseen size falls back to round-robin over both shards
+        let picks: Vec<usize> = (0..4)
+            .map(|_| pick(PlacementKind::Calibrated, &s, "matmul", 999, &[], &rr).unwrap())
+            .collect();
+        assert!(picks.contains(&0) && picks.contains(&1), "{picks:?}");
+    }
+}

@@ -1,0 +1,982 @@
+//! The cluster router (`compar route`): speaks the serve NDJSON
+//! protocol to clients and fans submits out over N backend
+//! `compar serve` shards.
+//!
+//! ```text
+//! client ──TCP──▶ router session ──placement──▶ shard A (compar serve)
+//!                  │   ▲                   └──▶ shard B (compar serve)
+//!                  │   └── backend readers forward tagged results
+//!                  ├── health thread: stats probe, mark ±healthy
+//!                  └── gossip thread: perf_pull* → merge → perf_push
+//! ```
+//!
+//! Lifecycle guarantees:
+//!
+//! * **health** — a background thread polls every shard's `stats`; a
+//!   failed probe (or a failed submit write) marks the shard unhealthy
+//!   and placement skips it until a probe succeeds again.
+//! * **drain** — `drain_shard` takes a shard out of the rotation without
+//!   killing it: in-flight requests on it complete normally, new submits
+//!   go elsewhere.
+//! * **retry-on-other-shard** — a submit whose shard connection fails
+//!   (on write, or while the reply is pending when the connection dies)
+//!   is transparently resubmitted to the next available shard; the
+//!   client just sees its result. Requests are idempotent by
+//!   construction (a fresh problem instance per request), so a
+//!   duplicated execution on a shard that died mid-flight is wasted
+//!   work, never a wrong answer.
+//! * **shutdown** — a client `shutdown` is forwarded to every shard
+//!   (each drains gracefully), then the router itself drains.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::gossip;
+use super::placement::{self, PlacementKind};
+use crate::serve::protocol::{
+    self, Request, Response, ShardDesc, StatsResp, SubmitReq, PROTOCOL_VERSION,
+};
+use crate::serve::Client;
+use crate::taskrt::perfmodel::VariantModel;
+use crate::taskrt::SelectorKind;
+
+// ---------------------------------------------------------- configuration
+
+/// Router configuration (`compar route` flags).
+#[derive(Debug, Clone)]
+pub struct RouterOptions {
+    /// Bind address; port 0 for an ephemeral port (tests).
+    pub listen: String,
+    /// Backend `compar serve` addresses.
+    pub shards: Vec<String>,
+    pub placement: PlacementKind,
+    /// Health-probe period (a `stats` round trip per shard).
+    pub health_period: Duration,
+    /// Gossip period (perf-model pull round, plus a push when enabled).
+    pub gossip_period: Duration,
+    /// Push merged perf models back to the shards. Pulls always run —
+    /// they also feed the `calibrated` placement policy.
+    pub gossip: bool,
+}
+
+impl Default for RouterOptions {
+    fn default() -> RouterOptions {
+        RouterOptions {
+            listen: "127.0.0.1:7190".into(),
+            shards: Vec::new(),
+            placement: PlacementKind::RoundRobin,
+            health_period: Duration::from_millis(300),
+            gossip_period: Duration::from_millis(500),
+            gossip: true,
+        }
+    }
+}
+
+// ------------------------------------------------------------ shard state
+
+/// The router's live view of one backend shard.
+pub struct ShardState {
+    pub addr: String,
+    healthy: AtomicBool,
+    draining: AtomicBool,
+    inflight: AtomicU64,
+    requests_ok: AtomicU64,
+    /// The shard's locally observed perf models, from the last gossip
+    /// pull (feeds the `calibrated` placement policy and the push merge).
+    calib: Mutex<BTreeMap<String, VariantModel>>,
+}
+
+impl ShardState {
+    pub(crate) fn new(addr: String) -> ShardState {
+        ShardState {
+            addr,
+            // optimistic start: the first failed probe or submit marks
+            // the shard down
+            healthy: AtomicBool::new(true),
+            draining: AtomicBool::new(false),
+            inflight: AtomicU64::new(0),
+            requests_ok: AtomicU64::new(0),
+            calib: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// In the routing rotation: healthy and not drained.
+    pub fn available(&self) -> bool {
+        self.healthy.load(Ordering::Relaxed) && !self.draining.load(Ordering::Relaxed)
+    }
+
+    pub fn healthy(&self) -> bool {
+        self.healthy.load(Ordering::Relaxed)
+    }
+
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn set_healthy(&self, v: bool) {
+        self.healthy.store(v, Ordering::Relaxed);
+    }
+
+    #[cfg(test)]
+    pub(crate) fn set_draining(&self, v: bool) {
+        self.draining.store(v, Ordering::Relaxed);
+    }
+
+    #[cfg(test)]
+    pub(crate) fn set_inflight(&self, v: u64) {
+        self.inflight.store(v, Ordering::Relaxed);
+    }
+
+    pub(crate) fn set_calib(&self, models: BTreeMap<String, VariantModel>) {
+        *self.calib.lock().unwrap() = models;
+    }
+
+    pub(crate) fn calib_clone(&self) -> BTreeMap<String, VariantModel> {
+        self.calib.lock().unwrap().clone()
+    }
+
+    /// Samples this shard holds for `codelet` at exactly `size`, summed
+    /// over variants (the `calibrated` placement score). Key format is
+    /// the perf-model store's "codelet:variant".
+    pub fn calibration_samples(&self, codelet: &str, size: usize) -> usize {
+        let prefix = format!("{codelet}:");
+        self.calib
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(k, _)| k.starts_with(&prefix))
+            .filter_map(|(_, m)| m.buckets.get(&size))
+            .map(|b| b.count)
+            .sum()
+    }
+
+    fn desc(&self) -> ShardDesc {
+        ShardDesc {
+            addr: self.addr.clone(),
+            healthy: self.healthy.load(Ordering::Relaxed),
+            draining: self.draining.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::Relaxed),
+            requests_ok: self.requests_ok.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ------------------------------------------------------------- the router
+
+struct RouterShared {
+    placement: PlacementKind,
+    shards: Vec<Arc<ShardState>>,
+    /// Placement rotation cursor (shared by every session).
+    rr: AtomicUsize,
+    draining: AtomicBool,
+    stop: Mutex<bool>,
+    stop_cv: Condvar,
+    next_session: AtomicU64,
+    sessions: Mutex<Vec<JoinHandle<()>>>,
+    /// Submits forwarded to a shard.
+    routed: AtomicU64,
+    /// Submits re-routed to another shard after a failure.
+    retried: AtomicU64,
+    started: Instant,
+}
+
+/// The routing front-end. `start` binds and returns immediately;
+/// `serve_forever` blocks until a client sends `shutdown`.
+pub struct Router {
+    local_addr: SocketAddr,
+    shared: Arc<RouterShared>,
+    accept: Option<JoinHandle<()>>,
+    health: Option<JoinHandle<()>>,
+    gossip: Option<JoinHandle<()>>,
+}
+
+impl Router {
+    pub fn start(opts: RouterOptions) -> Result<Router> {
+        if opts.shards.is_empty() {
+            bail!("router needs at least one backend shard (--shards host:port,...)");
+        }
+        let listener = TcpListener::bind(&opts.listen)
+            .with_context(|| format!("binding {}", opts.listen))?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(RouterShared {
+            placement: opts.placement,
+            shards: opts
+                .shards
+                .iter()
+                .map(|a| Arc::new(ShardState::new(a.clone())))
+                .collect(),
+            rr: AtomicUsize::new(0),
+            draining: AtomicBool::new(false),
+            stop: Mutex::new(false),
+            stop_cv: Condvar::new(),
+            next_session: AtomicU64::new(1),
+            sessions: Mutex::new(Vec::new()),
+            routed: AtomicU64::new(0),
+            retried: AtomicU64::new(0),
+            started: Instant::now(),
+        });
+        let accept = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("route-accept".into())
+                .spawn(move || accept_loop(shared, listener))
+                .expect("spawning accept thread")
+        };
+        let health = {
+            let shared = shared.clone();
+            let period = opts.health_period;
+            std::thread::Builder::new()
+                .name("route-health".into())
+                .spawn(move || health_loop(shared, period))
+                .expect("spawning health thread")
+        };
+        let gossip = {
+            let shared = shared.clone();
+            let period = opts.gossip_period;
+            let push = opts.gossip;
+            std::thread::Builder::new()
+                .name("route-gossip".into())
+                .spawn(move || gossip_loop(shared, period, push))
+                .expect("spawning gossip thread")
+        };
+        Ok(Router {
+            local_addr,
+            shared,
+            accept: Some(accept),
+            health: Some(health),
+            gossip: Some(gossip),
+        })
+    }
+
+    /// The actual bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The shard table, as `{"op":"shards"}` would report it.
+    pub fn shards(&self) -> Vec<ShardDesc> {
+        self.shared.shards.iter().map(|s| s.desc()).collect()
+    }
+
+    /// (submits routed, submits retried on another shard).
+    pub fn routing_counters(&self) -> (u64, u64) {
+        (
+            self.shared.routed.load(Ordering::Relaxed),
+            self.shared.retried.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Block until a client sends `shutdown` (which is also forwarded to
+    /// every shard), then drain the router.
+    pub fn serve_forever(self) -> Result<()> {
+        {
+            let mut stop = self.shared.stop.lock().unwrap();
+            while !*stop {
+                stop = self.shared.stop_cv.wait(stop).unwrap();
+            }
+        }
+        self.shutdown()
+    }
+
+    /// Drain the router: stop accepting, let sessions finish, join the
+    /// background threads. The shards are left running (drain them
+    /// separately, or send `shutdown` through a client, which forwards).
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        loop {
+            let handles: Vec<JoinHandle<()>> =
+                std::mem::take(&mut *self.shared.sessions.lock().unwrap());
+            if handles.is_empty() {
+                break;
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+        if let Some(j) = self.health.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.gossip.take() {
+            let _ = j.join();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.health.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.gossip.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+// ------------------------------------------------------ background threads
+
+/// Sleep `period` in small slices so drain is observed promptly.
+fn drain_aware_sleep(shared: &Arc<RouterShared>, period: Duration) {
+    let deadline = Instant::now() + period;
+    while Instant::now() < deadline && !shared.draining.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(20).min(period));
+    }
+}
+
+fn accept_loop(shared: Arc<RouterShared>, listener: TcpListener) {
+    while !shared.draining.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let sid = shared.next_session.fetch_add(1, Ordering::Relaxed);
+                let shared2 = shared.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("route-session-{sid}"))
+                    .spawn(move || session_loop(shared2, stream, sid))
+                    .expect("spawning router session thread");
+                let mut sessions = shared.sessions.lock().unwrap();
+                // reap finished sessions so the list stays bounded
+                crate::util::threads::reap_finished(&mut sessions);
+                sessions.push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Probe every shard's `stats`; update health/load. A shard flapping
+/// back up is re-admitted to the rotation here. Probes run concurrently
+/// so one hung shard (bounded by [`ADMIN_TIMEOUT`]) delays the round by
+/// the max probe time, not the sum.
+fn health_loop(shared: Arc<RouterShared>, period: Duration) {
+    while !shared.draining.load(Ordering::SeqCst) {
+        std::thread::scope(|scope| {
+            for shard in &shared.shards {
+                scope.spawn(move || match shard_stats(&shard.addr) {
+                    Ok(stats) => {
+                        shard.healthy.store(true, Ordering::Relaxed);
+                        shard.inflight.store(stats.inflight, Ordering::Relaxed);
+                        shard.requests_ok.store(stats.requests_ok, Ordering::Relaxed);
+                    }
+                    Err(_) => shard.healthy.store(false, Ordering::Relaxed),
+                });
+            }
+        });
+        drain_aware_sleep(&shared, period);
+    }
+}
+
+fn gossip_loop(shared: Arc<RouterShared>, period: Duration, push: bool) {
+    while !shared.draining.load(Ordering::SeqCst) {
+        gossip::run_round(&shared.shards, push);
+        drain_aware_sleep(&shared, period);
+    }
+}
+
+/// Deadline on every periodic/admin connection to a shard (probe,
+/// gossip, aggregation, shutdown forwarding): a hung shard counts as
+/// down instead of blocking the caller forever.
+pub(crate) const ADMIN_TIMEOUT: Duration = Duration::from_secs(2);
+
+fn shard_stats(addr: &str) -> Result<StatsResp> {
+    let mut c = Client::connect_with_deadline(addr, ADMIN_TIMEOUT)?;
+    let stats = c.stats()?;
+    let _ = c.quit();
+    Ok(stats)
+}
+
+// ------------------------------------------------------------- sessions
+
+type ReplyLane = Arc<Mutex<TcpStream>>;
+
+fn send_line(lane: &ReplyLane, resp: &Response) {
+    let mut line = protocol::encode_response(resp);
+    line.push('\n');
+    let mut w = lane.lock().unwrap();
+    let _ = w.write_all(line.as_bytes());
+    let _ = w.flush();
+}
+
+/// A submit forwarded to a shard whose reply has not come back yet. Kept
+/// so the request can be replayed on another shard if the connection
+/// dies under it.
+struct Pending {
+    req: SubmitReq,
+    shard: usize,
+}
+
+/// One live backend connection of a session.
+struct Backend {
+    stream: Mutex<TcpStream>,
+}
+
+/// Per-client-session state shared between the session thread and its
+/// backend reader threads.
+struct Session {
+    sid: u64,
+    router: Arc<RouterShared>,
+    reply: ReplyLane,
+    /// Selection policy from the client's hello, forwarded to shards.
+    policy: Mutex<Option<String>>,
+    backends: Mutex<HashMap<usize, Arc<Backend>>>,
+    pending: Mutex<HashMap<u64, Pending>>,
+    readers: Mutex<Vec<JoinHandle<()>>>,
+    closing: AtomicBool,
+}
+
+fn session_loop(shared: Arc<RouterShared>, stream: TcpStream, sid: u64) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let reply: ReplyLane = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let sess = Arc::new(Session {
+        sid,
+        router: shared.clone(),
+        reply,
+        policy: Mutex::new(None),
+        backends: Mutex::new(HashMap::new()),
+        pending: Mutex::new(HashMap::new()),
+        readers: Mutex::new(Vec::new()),
+        closing: AtomicBool::new(false),
+    });
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                let keep = handle_request(&sess, line.trim());
+                line.clear();
+                if !keep || shared.draining.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if shared.draining.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    close_session(&sess);
+}
+
+fn close_session(sess: &Arc<Session>) {
+    sess.closing.store(true, Ordering::SeqCst);
+    let backends: Vec<Arc<Backend>> = sess
+        .backends
+        .lock()
+        .unwrap()
+        .drain()
+        .map(|(_, b)| b)
+        .collect();
+    for b in backends {
+        let s = b.stream.lock().unwrap();
+        let mut line = protocol::encode_request(&Request::Quit);
+        line.push('\n');
+        let _ = (&*s).write_all(line.as_bytes());
+        let _ = s.shutdown(Shutdown::Both);
+    }
+    let readers: Vec<JoinHandle<()>> = std::mem::take(&mut *sess.readers.lock().unwrap());
+    for r in readers {
+        let _ = r.join();
+    }
+}
+
+/// Handle one client request line; returns false to close the session.
+fn handle_request(sess: &Arc<Session>, line: &str) -> bool {
+    if line.is_empty() {
+        return true;
+    }
+    let req = match protocol::decode_request(line) {
+        Ok(r) => r,
+        Err(e) => {
+            send_line(
+                &sess.reply,
+                &Response::Error {
+                    id: None,
+                    error: format!("{e:#}"),
+                },
+            );
+            return true;
+        }
+    };
+    let router = &sess.router;
+    match req {
+        Request::Hello { client: _, policy } => {
+            if let Some(p) = &policy {
+                if SelectorKind::parse(p).is_none() {
+                    send_line(
+                        &sess.reply,
+                        &Response::Error {
+                            id: None,
+                            error: format!(
+                                "unknown selection policy '{p}' (want greedy | calibrating \
+                                 | epsilon[:E] | epsilon-decayed[:E] | forced:VARIANT)"
+                            ),
+                        },
+                    );
+                    return true;
+                }
+            }
+            *sess.policy.lock().unwrap() = policy;
+            send_line(
+                &sess.reply,
+                &Response::Hello {
+                    session: sess.sid,
+                    version: PROTOCOL_VERSION,
+                },
+            );
+            true
+        }
+        Request::Submit(req) => {
+            if router.draining.load(Ordering::SeqCst) {
+                send_line(
+                    &sess.reply,
+                    &Response::Error {
+                        id: Some(req.id),
+                        error: "router is draining".into(),
+                    },
+                );
+                return true;
+            }
+            let id = req.id;
+            let mut exclude = Vec::new();
+            if let Err(e) = route_submit(sess, req, &mut exclude) {
+                send_line(
+                    &sess.reply,
+                    &Response::Error {
+                        id: Some(id),
+                        error: format!("{e:#}"),
+                    },
+                );
+            }
+            true
+        }
+        Request::Stats => {
+            send_line(&sess.reply, &Response::Stats(cluster_stats(router)));
+            true
+        }
+        Request::Contexts => {
+            send_line(
+                &sess.reply,
+                &Response::Contexts {
+                    contexts: cluster_contexts(router),
+                },
+            );
+            true
+        }
+        Request::Shards => {
+            send_line(
+                &sess.reply,
+                &Response::Shards {
+                    shards: router.shards.iter().map(|s| s.desc()).collect(),
+                },
+            );
+            true
+        }
+        Request::DrainShard { shard } => {
+            match resolve_shard(router, &shard) {
+                Some(i) => {
+                    router.shards[i].draining.store(true, Ordering::Relaxed);
+                    send_line(
+                        &sess.reply,
+                        &Response::Drained {
+                            shard: router.shards[i].addr.clone(),
+                        },
+                    );
+                }
+                None => send_line(
+                    &sess.reply,
+                    &Response::Error {
+                        id: None,
+                        error: format!(
+                            "unknown shard '{shard}' (have: {})",
+                            router
+                                .shards
+                                .iter()
+                                .map(|s| s.addr.as_str())
+                                .collect::<Vec<_>>()
+                                .join(", ")
+                        ),
+                    },
+                ),
+            }
+            true
+        }
+        Request::PerfPull | Request::PerfPush { .. } => {
+            send_line(
+                &sess.reply,
+                &Response::Error {
+                    id: None,
+                    error: "shard-level operation (the router gossips perf models \
+                            on your behalf; send perf ops to a shard)"
+                        .into(),
+                },
+            );
+            true
+        }
+        Request::Shutdown => {
+            // forward to every shard (each drains gracefully), then stop
+            for shard in &router.shards {
+                if let Ok(mut c) = Client::connect_with_deadline(&shard.addr, ADMIN_TIMEOUT) {
+                    let _ = c.shutdown_server();
+                }
+            }
+            send_line(&sess.reply, &Response::Shutdown);
+            let mut stop = router.stop.lock().unwrap();
+            *stop = true;
+            router.stop_cv.notify_all();
+            true
+        }
+        Request::Quit => {
+            send_line(&sess.reply, &Response::Bye);
+            false
+        }
+    }
+}
+
+/// Resolve a shard by address, `shardN`, or bare index.
+fn resolve_shard(router: &Arc<RouterShared>, name: &str) -> Option<usize> {
+    if let Some(i) = router.shards.iter().position(|s| s.addr == name) {
+        return Some(i);
+    }
+    name.strip_prefix("shard")
+        .unwrap_or(name)
+        .parse::<usize>()
+        .ok()
+        .filter(|&i| i < router.shards.len())
+}
+
+// ------------------------------------------------------------- routing
+
+/// Route one submit to a shard, retrying on the next available shard
+/// when the chosen one cannot be reached or written to. Errors only when
+/// every shard has been excluded.
+fn route_submit(sess: &Arc<Session>, req: SubmitReq, exclude: &mut Vec<usize>) -> Result<()> {
+    loop {
+        if sess.closing.load(Ordering::SeqCst) {
+            bail!("session is closing");
+        }
+        let Some(si) = placement::pick(
+            sess.router.placement,
+            &sess.router.shards,
+            &req.app,
+            req.size,
+            exclude,
+            &sess.router.rr,
+        ) else {
+            bail!(
+                "no available shard for request {} ({} shard(s), {} excluded)",
+                req.id,
+                sess.router.shards.len(),
+                exclude.len()
+            );
+        };
+        let backend = match ensure_backend(sess, si) {
+            Ok(b) => b,
+            Err(_) => {
+                sess.router.shards[si].set_healthy(false);
+                exclude.push(si);
+                continue;
+            }
+        };
+        sess.pending.lock().unwrap().insert(
+            req.id,
+            Pending {
+                req: req.clone(),
+                shard: si,
+            },
+        );
+        let mut line = protocol::encode_request(&Request::Submit(req.clone()));
+        line.push('\n');
+        let wrote = {
+            let mut s = backend.stream.lock().unwrap();
+            s.write_all(line.as_bytes()).and_then(|_| s.flush())
+        };
+        if wrote.is_err() {
+            // reclaim the pending entry before retrying: if it is
+            // already gone, the backend reader observed this connection
+            // die first and is replaying the request itself — retrying
+            // here too would submit it twice and send the client two
+            // replies for one id
+            let still_ours = sess.pending.lock().unwrap().remove(&req.id).is_some();
+            {
+                // evict only OUR dead connection: a reader may already
+                // have replaced backends[si] with a fresh healthy one
+                let mut backends = sess.backends.lock().unwrap();
+                if backends
+                    .get(&si)
+                    .map(|b| Arc::ptr_eq(b, &backend))
+                    .unwrap_or(false)
+                {
+                    backends.remove(&si);
+                }
+            }
+            sess.router.shards[si].set_healthy(false);
+            if !still_ours {
+                return Ok(());
+            }
+            sess.router.retried.fetch_add(1, Ordering::Relaxed);
+            exclude.push(si);
+            continue;
+        }
+        // a write into a freshly closed socket can still report success
+        // (the bytes land in the kernel buffer; the RST arrives later).
+        // If the reader swept this connection dead between our map
+        // lookup and the write, nobody will ever read a reply for this
+        // entry — re-check the backend is still the registered one and
+        // replay if not. Lock order (reader: remove backend, then sweep
+        // pending) guarantees that when we still see our backend
+        // registered here, a later sweep will see our pending entry.
+        let still_registered = sess
+            .backends
+            .lock()
+            .unwrap()
+            .get(&si)
+            .map(|b| Arc::ptr_eq(b, &backend))
+            .unwrap_or(false);
+        if !still_registered {
+            let still_ours = sess.pending.lock().unwrap().remove(&req.id).is_some();
+            if !still_ours {
+                return Ok(()); // the reader's sweep already replayed it
+            }
+            sess.router.retried.fetch_add(1, Ordering::Relaxed);
+            exclude.push(si);
+            continue;
+        }
+        sess.router.routed.fetch_add(1, Ordering::Relaxed);
+        return Ok(());
+    }
+}
+
+/// Get (or open) this session's connection to shard `si`, performing the
+/// hello handshake (forwarding the session's selection policy) and
+/// spawning the reply-forwarding reader thread.
+fn ensure_backend(sess: &Arc<Session>, si: usize) -> Result<Arc<Backend>> {
+    let mut backends = sess.backends.lock().unwrap();
+    if let Some(b) = backends.get(&si) {
+        return Ok(b.clone());
+    }
+    let addr = &sess.router.shards[si].addr;
+    // deadline on connect AND handshake: this runs with the session's
+    // backends mutex held, so a hung shard must fail fast here instead
+    // of wedging the session (and with it, router shutdown)
+    let sa = {
+        use std::net::ToSocketAddrs;
+        addr.to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("cannot resolve shard '{addr}'"))?
+    };
+    let stream = TcpStream::connect_timeout(&sa, ADMIN_TIMEOUT)
+        .with_context(|| format!("connecting shard {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(ADMIN_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(ADMIN_TIMEOUT));
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let hello = Request::Hello {
+        client: format!("compar-route-{}", sess.sid),
+        policy: sess.policy.lock().unwrap().clone(),
+    };
+    let mut line = protocol::encode_request(&hello);
+    line.push('\n');
+    (&stream).write_all(line.as_bytes())?;
+    (&stream).flush()?;
+    let mut resp_line = String::new();
+    if reader.read_line(&mut resp_line)? == 0 {
+        bail!("shard {addr} closed during handshake");
+    }
+    match protocol::decode_response(&resp_line)? {
+        Response::Hello { version, .. } => {
+            if version != PROTOCOL_VERSION {
+                bail!("shard {addr} speaks protocol v{version}, router v{PROTOCOL_VERSION}");
+            }
+        }
+        Response::Error { error, .. } => bail!("shard {addr} rejected hello: {error}"),
+        other => bail!("shard {addr}: expected hello, got {other:?}"),
+    }
+    // short read timeout so the reader thread can observe session close
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let backend = Arc::new(Backend {
+        stream: Mutex::new(stream),
+    });
+    backends.insert(si, backend.clone());
+    drop(backends);
+    let sess2 = sess.clone();
+    let handle = std::thread::Builder::new()
+        .name(format!("route-be-{}-{}", sess.sid, si))
+        .spawn(move || backend_reader(sess2, si, reader))
+        .expect("spawning backend reader");
+    sess.readers.lock().unwrap().push(handle);
+    Ok(backend)
+}
+
+/// Forward one shard's replies to the client, tagging results with the
+/// shard index; when the connection dies with replies still pending,
+/// replay those submits on another shard.
+fn backend_reader(sess: Arc<Session>, shard: usize, mut reader: BufReader<TcpStream>) {
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                forward_backend_line(&sess, shard, line.trim());
+                line.clear();
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if sess.closing.load(Ordering::SeqCst)
+                    || sess.router.draining.load(Ordering::SeqCst)
+                {
+                    return;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    if sess.closing.load(Ordering::SeqCst) || sess.router.draining.load(Ordering::SeqCst) {
+        return;
+    }
+    // the shard connection died under us
+    sess.router.shards[shard].set_healthy(false);
+    sess.backends.lock().unwrap().remove(&shard);
+    let orphans: Vec<SubmitReq> = {
+        let mut pending = sess.pending.lock().unwrap();
+        let ids: Vec<u64> = pending
+            .iter()
+            .filter(|(_, p)| p.shard == shard)
+            .map(|(id, _)| *id)
+            .collect();
+        ids.into_iter()
+            .filter_map(|id| pending.remove(&id))
+            .map(|p| p.req)
+            .collect()
+    };
+    for req in orphans {
+        sess.router.retried.fetch_add(1, Ordering::Relaxed);
+        let id = req.id;
+        let mut exclude = vec![shard];
+        if let Err(e) = route_submit(&sess, req, &mut exclude) {
+            send_line(
+                &sess.reply,
+                &Response::Error {
+                    id: Some(id),
+                    error: format!("{e:#}"),
+                },
+            );
+        }
+    }
+}
+
+fn forward_backend_line(sess: &Arc<Session>, shard: usize, line: &str) {
+    if line.is_empty() {
+        return;
+    }
+    let Ok(resp) = protocol::decode_response(line) else {
+        return;
+    };
+    match resp {
+        Response::Result(mut r) => {
+            sess.pending.lock().unwrap().remove(&r.id);
+            // tag the context with the shard so clients (and the
+            // loadgen per-context histogram) see the cluster spread
+            r.ctx = format!("shard{shard}/{}", r.ctx);
+            send_line(&sess.reply, &Response::Result(r));
+        }
+        Response::Error { id, error } => {
+            if let Some(id) = id {
+                sess.pending.lock().unwrap().remove(&id);
+            }
+            // a per-request error from the shard (bad app, bad variant,
+            // failed verification) is a real answer — forward, no retry
+            send_line(&sess.reply, &Response::Error { id, error });
+        }
+        // hello is consumed during the handshake; nothing else rides on
+        // a submit connection
+        _ => {}
+    }
+}
+
+// -------------------------------------------------------- admin aggregates
+
+/// Cluster-wide stats: sum of every reachable shard's counters, with
+/// per-context tables prefixed by shard index. Deliberately fetched
+/// live (not from the health cache, which lags a probe period): a
+/// client asking for stats right after its submits completed must see
+/// them counted.
+fn cluster_stats(router: &Arc<RouterShared>) -> StatsResp {
+    let mut agg = StatsResp {
+        uptime: router.started.elapsed().as_secs_f64(),
+        requests_ok: 0,
+        requests_err: 0,
+        inflight: 0,
+        tasks_executed: 0,
+        ctx_tasks: BTreeMap::new(),
+        ctx_variants: BTreeMap::new(),
+    };
+    for (i, shard) in router.shards.iter().enumerate() {
+        if !shard.healthy.load(Ordering::Relaxed) {
+            continue;
+        }
+        let Ok(stats) = shard_stats(&shard.addr) else {
+            continue;
+        };
+        agg.requests_ok += stats.requests_ok;
+        agg.requests_err += stats.requests_err;
+        agg.inflight += stats.inflight;
+        agg.tasks_executed += stats.tasks_executed;
+        for (k, v) in stats.ctx_tasks {
+            agg.ctx_tasks.insert(format!("shard{i}/{k}"), v);
+        }
+        for (k, h) in stats.ctx_variants {
+            agg.ctx_variants.insert(format!("shard{i}/{k}"), h);
+        }
+    }
+    agg
+}
+
+fn cluster_contexts(router: &Arc<RouterShared>) -> Vec<protocol::CtxDesc> {
+    let mut out = Vec::new();
+    for (i, shard) in router.shards.iter().enumerate() {
+        if !shard.healthy.load(Ordering::Relaxed) {
+            continue;
+        }
+        let Ok(mut c) = Client::connect_with_deadline(&shard.addr, ADMIN_TIMEOUT) else {
+            continue;
+        };
+        if let Ok(contexts) = c.contexts() {
+            for mut ctx in contexts {
+                ctx.name = format!("shard{i}/{}", ctx.name);
+                out.push(ctx);
+            }
+        }
+        let _ = c.quit();
+    }
+    out
+}

@@ -18,11 +18,15 @@
 //! * [`serve`] — the multi-tenant component service: a persistent
 //!   runtime partitioned into scheduling contexts, serving task-graph
 //!   requests from concurrent clients (`compar serve` / `compar loadgen`).
+//! * [`cluster`] — sharded multi-process serving: a routing front-end
+//!   (`compar route`) speaking the same protocol over N serve shards,
+//!   with perf-model gossip so variant selection learns cluster-wide.
 //! * [`bench_harness`] — regenerates every table and figure of the
 //!   paper's evaluation section.
 
 pub mod apps;
 pub mod bench_harness;
+pub mod cluster;
 pub mod compar;
 pub mod runtime;
 pub mod serve;

@@ -4,10 +4,13 @@
 //! ```text
 //! compar compile <file.compar.c> [--out-dir DIR]      run the pre-compiler
 //! compar run --app A --size N [options]               run one benchmark task
-//! compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|all>
+//! compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|all>
+//! compar bench validate <FILE>                        check a bench JSON record
 //! compar calibrate --app A [--sizes a,b,c]            warm the perf models
 //! compar serve [--addr A --contexts cpu:4,gpu:1 ...]  multi-tenant component service
+//! compar route --shards H:P,... [--listen A]          cluster router + perf gossip
 //! compar loadgen [--clients N --requests M --app A]   drive a server, report latency
+//! compar loadgen --shards N ...                       drive an in-process cluster
 //! compar list                                         inventory: apps, variants, artifacts
 //! ```
 //!
@@ -97,6 +100,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "bench" => cmd_bench(rest),
         "calibrate" => cmd_calibrate(rest),
         "serve" => cmd_serve(rest),
+        "route" => cmd_route(rest),
         "loadgen" => cmd_loadgen(rest),
         "list" => cmd_list(),
         "help" | "--help" | "-h" => {
@@ -114,16 +118,21 @@ fn print_usage() {
          USAGE:\n\
          \x20 compar compile <file.compar.c> [--out-dir DIR] [--emit c|rust|all]\n\
          \x20 compar run --app APP --size N [--variant V] [--sched S] [--selector P] [--ncpu N] [--ncuda N] [--reps R]\n\
-         \x20 compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|all> [--reps R] [--max-measured N] [--smoke]\n\
+         \x20 compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|all> [--reps R] [--max-measured N] [--smoke]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 (selection: [--out FILE]; cluster: [--shards N] [--placement PL])\n\
+         \x20 compar bench validate <FILE>\n\
          \x20 compar calibrate --app APP [--sizes a,b,c]\n\
          \x20 compar serve [--addr HOST:PORT] [--contexts NAME:N[:POLICY],...] [--sched S] [--selector P] [--cap N]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--batch-window-us U] [--max-batch B] [--ncpu N] [--ncuda N]\n\
+         \x20 compar route --shards HOST:PORT,... [--listen HOST:PORT] [--placement PL]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--health-ms T] [--gossip-ms T] [--no-gossip]\n\
          \x20 compar loadgen [--clients N] [--requests M] [--app APP] [--size N] [--tasks K]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--pipeline N] [--policy P] [--ctxs a,b] [--addr HOST:PORT | --contexts SPEC]\n\
-         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--out FILE] [--no-verify]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--shards N [--placement PL] [--no-gossip]] [--out FILE] [--no-verify]\n\
          \x20 compar list\n\
          \n\
-         Selection policies P: greedy | calibrating | epsilon[:E] | forced:VARIANT\n\
+         Selection policies P: greedy | calibrating | epsilon[:E] | epsilon-decayed[:E] | forced:VARIANT\n\
+         Shard placement PL:   round-robin | least-loaded | calibrated\n\
          Environment: COMPAR_NCPU, COMPAR_NCUDA, COMPAR_SCHED, COMPAR_SELECTOR, COMPAR_CALIBRATE,\n\
          \x20 COMPAR_TIME_MODE=modeled|wall, COMPAR_PERFMODEL_DIR, COMPAR_ARTIFACTS\n\
          (STARPU_NCPU / STARPU_NCUDA / STARPU_SCHED / STARPU_CALIBRATE are accepted aliases.)"
@@ -250,6 +259,12 @@ fn cmd_run(args: &[String]) -> Result<()> {
 fn cmd_bench(args: &[String]) -> Result<()> {
     let (pos, opts) = parse_opts(args);
     let which = pos.first().map(String::as_str).unwrap_or("all");
+    if which == "validate" {
+        let file = pos
+            .get(1)
+            .ok_or_else(|| anyhow!("usage: compar bench validate <FILE>"))?;
+        return validate_bench_record(file);
+    }
     let reps: usize = opts.get("reps").map(|v| v.parse()).transpose()?.unwrap_or(3);
     let max_measured: usize = opts
         .get("max-measured")
@@ -316,11 +331,130 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         let traces = selection::compare_policies(&pairs, tasks, manifest.as_ref())?;
         println!("{}", selection::render(&traces));
         println!("{}", selection::render_comparison(&traces));
+        if let Some(out) = opts.get("out") {
+            bench_harness::serve_bench::write_atomic(out, &(selection::to_json(&traces) + "\n"))?;
+            println!("wrote {out}");
+        }
+        ran = true;
+    }
+    // cluster is explicit-only (it boots several servers per run)
+    if which == "cluster" {
+        let smoke = opts.contains_key("smoke");
+        let shards: usize = opts
+            .get("shards")
+            .map(|v| v.parse())
+            .transpose()
+            .context("--shards")?
+            .unwrap_or(2);
+        let placement = match opts.get("placement") {
+            Some(v) => compar::cluster::PlacementKind::parse(v)
+                .ok_or_else(|| anyhow!("unknown placement policy '{v}'"))?,
+            None => compar::cluster::PlacementKind::RoundRobin,
+        };
+        let serve = compar::serve::ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            ncpu: 2,
+            ncuda: 0,
+            ..compar::serve::ServeOptions::default()
+        };
+        let load = compar::serve::LoadgenOptions {
+            clients: 4,
+            requests: if smoke { 8 } else { 40 },
+            app: "matmul".into(),
+            size: 48,
+            pipeline: 2,
+            ..compar::serve::LoadgenOptions::default()
+        };
+        let reports =
+            bench_harness::cluster_bench::compare(shards, placement, &serve, &load)?;
+        println!("{}", bench_harness::cluster_bench::render(&reports));
         ran = true;
     }
     if !ran {
         bail!("unknown bench target '{which}'");
     }
+    Ok(())
+}
+
+/// `compar bench validate FILE`: check a bench JSON record against the
+/// current schema (ci.sh runs this on BENCH_serve.json and on freshly
+/// generated records, so the pending-toolchain placeholder flow cannot
+/// rot silently).
+fn validate_bench_record(file: &str) -> Result<()> {
+    use compar::util::json::Json;
+    let text = std::fs::read_to_string(file).with_context(|| format!("reading {file}"))?;
+    let v = compar::util::json::parse(text.trim())
+        .map_err(|e| anyhow!("{file}: invalid json: {e}"))?;
+    let bench = v
+        .get("bench")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("{file}: missing 'bench' name"))?
+        .to_string();
+    let status = v
+        .get("status")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("{file}: missing 'status'"))?
+        .to_string();
+    match status.as_str() {
+        "pending-toolchain" => {
+            // the placeholder must say how to replace itself
+            if v.get("regenerate").and_then(Json::as_str).is_none() {
+                bail!("{file}: pending record without a 'regenerate' command");
+            }
+        }
+        "measured" => {
+            let schema = v
+                .get("schema")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("{file}: measured record missing 'schema'"))?
+                as u64;
+            if schema != compar::bench_harness::serve_bench::BENCH_SCHEMA {
+                bail!(
+                    "{file}: schema v{schema}, tool expects v{}",
+                    compar::bench_harness::serve_bench::BENCH_SCHEMA
+                );
+            }
+            match bench.as_str() {
+                "compar-loadgen" => {
+                    let rps = v
+                        .get("load")
+                        .and_then(|l| l.get("rps"))
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("{file}: missing load.rps"))?;
+                    if !rps.is_finite() || rps <= 0.0 {
+                        bail!("{file}: non-positive load.rps {rps}");
+                    }
+                    if v.get("server").and_then(Json::as_obj).is_none() {
+                        bail!("{file}: missing 'server' counters");
+                    }
+                }
+                "compar-selection" => {
+                    let rows = v
+                        .get("rows")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("{file}: missing 'rows'"))?;
+                    if rows.is_empty() {
+                        bail!("{file}: empty 'rows'");
+                    }
+                    for (i, row) in rows.iter().enumerate() {
+                        for k in ["app", "policy"] {
+                            if row.get(k).and_then(Json::as_str).is_none() {
+                                bail!("{file}: row {i} missing '{k}'");
+                            }
+                        }
+                        for k in ["size", "regret_s", "accuracy"] {
+                            if row.get(k).and_then(Json::as_f64).is_none() {
+                                bail!("{file}: row {i} missing '{k}'");
+                            }
+                        }
+                    }
+                }
+                other => bail!("{file}: unknown bench kind '{other}'"),
+            }
+        }
+        other => bail!("{file}: unknown status '{other}'"),
+    }
+    println!("{file}: valid {bench} record ({status})");
     Ok(())
 }
 
@@ -374,6 +508,59 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         "drained: {} ok, {} errors, {} tasks executed over {:.1} s",
         stats.requests_ok, stats.requests_err, stats.tasks_executed, stats.uptime
     );
+    Ok(())
+}
+
+// ------------------------------------------------------------------ route
+
+/// Router options shared by `compar route` and `loadgen --shards`.
+fn router_options_from(opts: &HashMap<String, String>) -> Result<compar::cluster::RouterOptions> {
+    let mut ro = compar::cluster::RouterOptions::default();
+    if let Some(v) = opts.get("listen") {
+        ro.listen = v.clone();
+    }
+    if let Some(v) = opts.get("placement") {
+        ro.placement = compar::cluster::PlacementKind::parse(v)
+            .ok_or_else(|| anyhow!("unknown placement policy '{v}'"))?;
+    }
+    if let Some(v) = opts.get("health-ms") {
+        ro.health_period = std::time::Duration::from_millis(v.parse().context("--health-ms")?);
+    }
+    if let Some(v) = opts.get("gossip-ms") {
+        ro.gossip_period = std::time::Duration::from_millis(v.parse().context("--gossip-ms")?);
+    }
+    if opts.contains_key("no-gossip") {
+        ro.gossip = false;
+    }
+    Ok(ro)
+}
+
+fn cmd_route(args: &[String]) -> Result<()> {
+    let (_, opts) = parse_opts(args);
+    let mut ro = router_options_from(&opts)?;
+    ro.shards = opts
+        .get("shards")
+        .ok_or_else(|| anyhow!("--shards host:port,... is required"))?
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    let gossip = ro.gossip;
+    let placement = ro.placement;
+    let router = compar::cluster::Router::start(ro)?;
+    println!(
+        "compar route listening on {} (placement {}, gossip {})",
+        router.local_addr(),
+        placement.name(),
+        if gossip { "on" } else { "off" }
+    );
+    for d in router.shards() {
+        println!("  shard {}", d.addr);
+    }
+    println!("(send {{\"op\":\"shutdown\"}} or run `compar loadgen --shutdown` to stop the cluster)");
+    router.serve_forever()?;
+    println!("router drained");
     Ok(())
 }
 
@@ -432,9 +619,29 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
     }
 
     let contexts_desc = opts.get("contexts").cloned().unwrap_or_default();
-    let (report, stats) = match opts.get("addr") {
-        // external server: drive it over the wire
-        Some(addr) => {
+    let (report, stats) = match (opts.get("shards"), opts.get("addr")) {
+        // --shards N: boot an in-process cluster (N serve shards behind
+        // a router on ephemeral loopback ports) and drive the router
+        (Some(n), _) => {
+            let n: usize = n.parse().context("--shards")?;
+            let mut so = serve_options_from(&opts)?;
+            so.addr = "127.0.0.1:0".into();
+            let mut ro = router_options_from(&opts)?;
+            ro.listen = "127.0.0.1:0".into();
+            let cluster = compar::cluster::LocalCluster::start(n, &so, ro)?;
+            let addr = cluster.addr();
+            println!("in-process cluster: {n} shard(s) behind {addr}");
+            let report = compar::serve::loadgen::run(&addr, &lg)?;
+            let mut c = compar::serve::Client::connect(&addr)?;
+            let stats = c.stats()?;
+            let _ = c.quit();
+            let (routed, retried) = cluster.router.routing_counters();
+            cluster.shutdown()?;
+            println!("router: {routed} submit(s) routed, {retried} retried on another shard");
+            (report, stats)
+        }
+        // external server (or router): drive it over the wire
+        (None, Some(addr)) => {
             let report = compar::serve::loadgen::run(addr, &lg)?;
             let mut c = compar::serve::Client::connect(addr)?;
             let stats = c.stats()?;
@@ -442,7 +649,7 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
             (report, stats)
         }
         // default: boot an in-process server on an ephemeral port
-        None => {
+        (None, None) => {
             let mut so = serve_options_from(&opts)?;
             so.addr = "127.0.0.1:0".into();
             compar::bench_harness::serve_bench::run_inprocess(so, &lg)?
@@ -458,7 +665,9 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
     if let Some(out) = opts.get("out") {
         let json =
             compar::bench_harness::serve_bench::to_json(&report, &stats, &lg, &contexts_desc);
-        std::fs::write(out, json + "\n").with_context(|| format!("writing {out}"))?;
+        // atomic replace: the pending-toolchain placeholder (or a prior
+        // measurement) is swapped in one rename
+        compar::bench_harness::serve_bench::write_atomic(out, &(json + "\n"))?;
         println!("wrote {out}");
     }
     Ok(())

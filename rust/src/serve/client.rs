@@ -11,8 +11,10 @@ use std::net::TcpStream;
 use anyhow::{anyhow, bail, Result};
 
 use super::protocol::{
-    self, CtxDesc, Request, Response, ResultResp, StatsResp, SubmitReq, PROTOCOL_VERSION,
+    self, CtxDesc, Request, Response, ResultResp, ShardDesc, StatsResp, SubmitReq,
+    PROTOCOL_VERSION,
 };
+use crate::util::json::Json;
 
 pub struct Client {
     reader: BufReader<TcpStream>,
@@ -28,9 +30,29 @@ impl Client {
 
     /// Connect, optionally asking the server to run every submit on this
     /// session under `policy` ("greedy" | "calibrating" | "epsilon[:E]"
-    /// | "forced:VARIANT").
+    /// | "epsilon-decayed[:E]" | "forced:VARIANT").
     pub fn connect_with_policy(addr: &str, policy: Option<&str>) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
+        Client::handshake(stream, policy)
+    }
+
+    /// Connect with connect/read/write deadlines — for health probes,
+    /// gossip and other periodic admin traffic, where one hung peer must
+    /// not block the caller forever (a timed-out probe simply counts as
+    /// the peer being down).
+    pub fn connect_with_deadline(addr: &str, timeout: std::time::Duration) -> Result<Client> {
+        use std::net::ToSocketAddrs;
+        let sa = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow!("cannot resolve '{addr}'"))?;
+        let stream = TcpStream::connect_timeout(&sa, timeout)?;
+        let _ = stream.set_read_timeout(Some(timeout));
+        let _ = stream.set_write_timeout(Some(timeout));
+        Client::handshake(stream, None)
+    }
+
+    fn handshake(stream: TcpStream, policy: Option<&str>) -> Result<Client> {
         let _ = stream.set_nodelay(true);
         let writer = stream.try_clone()?;
         let mut c = Client {
@@ -112,6 +134,53 @@ impl Client {
         self.send(&Request::Contexts)?;
         match self.recv()? {
             Response::Contexts { contexts } => Ok(contexts),
+            Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// v3 (shard): fetch the server's locally observed perf-model bucket
+    /// summaries (the gossip payload).
+    pub fn perf_pull(&mut self) -> Result<Json> {
+        self.send(&Request::PerfPull)?;
+        match self.recv()? {
+            Response::PerfModels { models } => Ok(models),
+            Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// v3 (shard): install `models` as the server's remote perf-model
+    /// overlay; returns the number of buckets accepted.
+    pub fn perf_push(&mut self, models: &Json) -> Result<u64> {
+        self.send(&Request::PerfPush {
+            models: models.clone(),
+        })?;
+        match self.recv()? {
+            Response::PerfAck { merged } => Ok(merged),
+            Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// v3 (router): the shard health/load table.
+    pub fn shards(&mut self) -> Result<Vec<ShardDesc>> {
+        self.send(&Request::Shards)?;
+        match self.recv()? {
+            Response::Shards { shards } => Ok(shards),
+            Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// v3 (router): drain a shard (by address or `shardN`) out of the
+    /// routing rotation.
+    pub fn drain_shard(&mut self, shard: &str) -> Result<String> {
+        self.send(&Request::DrainShard {
+            shard: shard.to_string(),
+        })?;
+        match self.recv()? {
+            Response::Drained { shard } => Ok(shard),
             Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
             other => bail!("unexpected response {other:?}"),
         }

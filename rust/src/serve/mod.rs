@@ -29,5 +29,5 @@ pub mod server;
 
 pub use client::Client;
 pub use loadgen::{LoadReport, LoadgenOptions};
-pub use protocol::{Request, Response, SubmitReq};
+pub use protocol::{Request, Response, ShardDesc, SubmitReq};
 pub use server::{parse_contexts, CtxSpec, ServeOptions, Server};

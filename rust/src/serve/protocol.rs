@@ -3,6 +3,31 @@
 //! offline image ships no serde. Every message is self-describing
 //! (`"op"` on requests, `"type"` on responses) and carries the client's
 //! request `id` back so batched / out-of-order replies can be matched.
+//!
+//! ## v3 message set (cluster)
+//!
+//! The same protocol is spoken at two levels: clients talk to either a
+//! single `compar serve` shard or to a `compar route` router, and the
+//! router talks to its shards. v3 adds the cluster operations:
+//!
+//! | request `op`  | response `type` | level  | purpose                               |
+//! |---------------|-----------------|--------|---------------------------------------|
+//! | `hello`       | `hello`         | both   | session handshake (+ session policy)  |
+//! | `submit`      | `result`        | both   | task-graph request (router fans out)  |
+//! | `stats`       | `stats`         | both   | counters (router aggregates shards)   |
+//! | `contexts`    | `contexts`      | both   | context table (router prefixes shard) |
+//! | `perf_pull`   | `perf_models`   | shard  | fetch locally observed perf-model     |
+//! |               |                 |        | bucket summaries (what gossip ships)  |
+//! | `perf_push`   | `perf_ack`      | shard  | install the merged remote overlay     |
+//! | `shards`      | `shards`        | router | shard health/load/drain table         |
+//! | `drain_shard` | `drained`       | router | take a shard out of rotation          |
+//! | `shutdown`    | `shutdown`      | both   | drain and exit (router forwards)      |
+//! | `quit`        | `bye`           | both   | close this session                    |
+//!
+//! Perf-model payloads are the serialized bucket summaries of
+//! [`crate::taskrt::perfmodel::models_to_json`]: per (codelet:variant,
+//! size), a fixed-size `{count, mean, m2, ewma}` record, merged across
+//! shards by Welford combination.
 
 use std::collections::BTreeMap;
 
@@ -10,9 +35,11 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::util::json::{self, Json};
 
-/// v2: per-session selection policy in `hello`, `policy` on results,
-/// `selector` on context descriptors, `ctx_variants` in stats.
-pub const PROTOCOL_VERSION: u64 = 2;
+/// v3: cluster ops — `perf_pull`/`perf_push` perf-model gossip on
+/// shards, `shards`/`drain_shard` rotation control on the router.
+/// (v2 added per-session selection policy in `hello`, `policy` on
+/// results, `selector` on context descriptors, `ctx_variants` in stats.)
+pub const PROTOCOL_VERSION: u64 = 3;
 
 // --------------------------------------------------------------- requests
 
@@ -50,6 +77,17 @@ pub enum Request {
     Submit(SubmitReq),
     Stats,
     Contexts,
+    /// v3 (shard): fetch this process's locally observed perf-model
+    /// bucket summaries (the gossip payload).
+    PerfPull,
+    /// v3 (shard): install `models` as the remote perf-model overlay,
+    /// replacing the previous one (idempotent gossip).
+    PerfPush { models: Json },
+    /// v3 (router): list shard health/load/drain state.
+    Shards,
+    /// v3 (router): take a shard (by address, or `shardN`/index) out of
+    /// the routing rotation; in-flight requests on it still complete.
+    DrainShard { shard: String },
     /// Ask the server to drain and exit (graceful shutdown).
     Shutdown,
     /// Close this session only.
@@ -110,6 +148,20 @@ pub struct StatsResp {
     pub ctx_variants: BTreeMap<String, BTreeMap<String, u64>>,
 }
 
+/// One shard as the router sees it (`shards` response).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardDesc {
+    pub addr: String,
+    /// Last health probe succeeded.
+    pub healthy: bool,
+    /// Drained out of the routing rotation.
+    pub draining: bool,
+    /// Requests in flight on the shard at the last health poll.
+    pub inflight: u64,
+    /// Requests the shard had completed at the last health poll.
+    pub requests_ok: u64,
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
     Hello { session: u64, version: u64 },
@@ -117,6 +169,14 @@ pub enum Response {
     Error { id: Option<u64>, error: String },
     Stats(StatsResp),
     Contexts { contexts: Vec<CtxDesc> },
+    /// v3: serialized perf-model bucket summaries (`perf_pull`).
+    PerfModels { models: Json },
+    /// v3: overlay installed; `merged` = (key, size) buckets accepted.
+    PerfAck { merged: u64 },
+    /// v3 (router): the shard table.
+    Shards { shards: Vec<ShardDesc> },
+    /// v3 (router): shard drained out of rotation.
+    Drained { shard: String },
     /// Shutdown acknowledged; the server drains after replying.
     Shutdown,
     /// Session closed.
@@ -178,6 +238,14 @@ pub fn encode_request(r: &Request) -> String {
         }
         Request::Stats => obj(vec![("op", s("stats"))]),
         Request::Contexts => obj(vec![("op", s("contexts"))]),
+        Request::PerfPull => obj(vec![("op", s("perf_pull"))]),
+        Request::PerfPush { models } => {
+            obj(vec![("op", s("perf_push")), ("models", models.clone())])
+        }
+        Request::Shards => obj(vec![("op", s("shards"))]),
+        Request::DrainShard { shard } => {
+            obj(vec![("op", s("drain_shard")), ("shard", s(shard))])
+        }
         Request::Shutdown => obj(vec![("op", s("shutdown"))]),
         Request::Quit => obj(vec![("op", s("quit"))]),
     };
@@ -263,6 +331,40 @@ pub fn encode_response(r: &Response) -> String {
                 ("contexts", Json::Arr(arr)),
             ])
         }
+        Response::PerfModels { models } => obj(vec![
+            ("ok", Json::Bool(true)),
+            ("type", s("perf_models")),
+            ("models", models.clone()),
+        ]),
+        Response::PerfAck { merged } => obj(vec![
+            ("ok", Json::Bool(true)),
+            ("type", s("perf_ack")),
+            ("merged", n(*merged as f64)),
+        ]),
+        Response::Shards { shards } => {
+            let arr = shards
+                .iter()
+                .map(|d| {
+                    obj(vec![
+                        ("addr", s(&d.addr)),
+                        ("healthy", Json::Bool(d.healthy)),
+                        ("draining", Json::Bool(d.draining)),
+                        ("inflight", n(d.inflight as f64)),
+                        ("requests_ok", n(d.requests_ok as f64)),
+                    ])
+                })
+                .collect();
+            obj(vec![
+                ("ok", Json::Bool(true)),
+                ("type", s("shards")),
+                ("shards", Json::Arr(arr)),
+            ])
+        }
+        Response::Drained { shard } => obj(vec![
+            ("ok", Json::Bool(true)),
+            ("type", s("drained")),
+            ("shard", s(shard)),
+        ]),
         Response::Shutdown => obj(vec![("ok", Json::Bool(true)), ("type", s("shutdown"))]),
         Response::Bye => obj(vec![("ok", Json::Bool(true)), ("type", s("bye"))]),
     };
@@ -338,6 +440,17 @@ pub fn decode_request(line: &str) -> Result<Request> {
         }
         "stats" => Request::Stats,
         "contexts" => Request::Contexts,
+        "perf_pull" => Request::PerfPull,
+        "perf_push" => Request::PerfPush {
+            models: j
+                .get("models")
+                .cloned()
+                .unwrap_or(Json::Obj(BTreeMap::new())),
+        },
+        "shards" => Request::Shards,
+        "drain_shard" => Request::DrainShard {
+            shard: get_str(&j, "shard")?,
+        },
         "shutdown" => Request::Shutdown,
         "quit" => Request::Quit,
         other => bail!("unknown op '{other}'"),
@@ -420,6 +533,35 @@ pub fn decode_response(line: &str) -> Result<Response> {
             }
             Response::Contexts { contexts }
         }
+        "perf_models" => Response::PerfModels {
+            models: j
+                .get("models")
+                .cloned()
+                .unwrap_or(Json::Obj(BTreeMap::new())),
+        },
+        "perf_ack" => Response::PerfAck {
+            merged: get_u64(&j, "merged")?,
+        },
+        "shards" => {
+            let arr = j
+                .get("shards")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing 'shards'"))?;
+            let mut shards = Vec::new();
+            for d in arr {
+                shards.push(ShardDesc {
+                    addr: get_str(d, "addr")?,
+                    healthy: matches!(d.get("healthy"), Some(Json::Bool(true))),
+                    draining: matches!(d.get("draining"), Some(Json::Bool(true))),
+                    inflight: get_u64(d, "inflight")?,
+                    requests_ok: get_u64(d, "requests_ok")?,
+                });
+            }
+            Response::Shards { shards }
+        }
+        "drained" => Response::Drained {
+            shard: get_str(&j, "shard")?,
+        },
         "shutdown" => Response::Shutdown,
         "bye" => Response::Bye,
         other => bail!("unknown response type '{other}'"),
@@ -476,6 +618,60 @@ mod tests {
         roundtrip_req(Request::Contexts);
         roundtrip_req(Request::Shutdown);
         roundtrip_req(Request::Quit);
+    }
+
+    #[test]
+    fn cluster_request_roundtrips() {
+        roundtrip_req(Request::PerfPull);
+        let mut bucket = BTreeMap::new();
+        bucket.insert("count".to_string(), Json::Num(3.0));
+        bucket.insert("mean".to_string(), Json::Num(0.25));
+        let mut sizes = BTreeMap::new();
+        sizes.insert("64".to_string(), Json::Obj(bucket));
+        let mut models = BTreeMap::new();
+        models.insert("mmul:omp".to_string(), Json::Obj(sizes));
+        roundtrip_req(Request::PerfPush {
+            models: Json::Obj(models),
+        });
+        // a push without models decodes to an empty overlay
+        match decode_request(r#"{"op":"perf_push"}"#).unwrap() {
+            Request::PerfPush { models } => assert_eq!(models, Json::Obj(BTreeMap::new())),
+            other => panic!("{other:?}"),
+        }
+        roundtrip_req(Request::Shards);
+        roundtrip_req(Request::DrainShard {
+            shard: "127.0.0.1:7201".into(),
+        });
+        assert!(decode_request(r#"{"op":"drain_shard"}"#).is_err());
+    }
+
+    #[test]
+    fn cluster_response_roundtrips() {
+        roundtrip_resp(Response::PerfModels {
+            models: Json::Obj(BTreeMap::new()),
+        });
+        roundtrip_resp(Response::PerfAck { merged: 12 });
+        roundtrip_resp(Response::Shards {
+            shards: vec![
+                ShardDesc {
+                    addr: "127.0.0.1:7201".into(),
+                    healthy: true,
+                    draining: false,
+                    inflight: 3,
+                    requests_ok: 99,
+                },
+                ShardDesc {
+                    addr: "127.0.0.1:7202".into(),
+                    healthy: false,
+                    draining: true,
+                    inflight: 0,
+                    requests_ok: 0,
+                },
+            ],
+        });
+        roundtrip_resp(Response::Drained {
+            shard: "127.0.0.1:7201".into(),
+        });
     }
 
     #[test]

@@ -490,6 +490,13 @@ impl Server {
         self.local_addr
     }
 
+    /// The runtime's performance-model store (gossip tests / tooling):
+    /// local observations plus the remote overlay installed by
+    /// `perf_push`.
+    pub fn perf_models(&self) -> Arc<crate::taskrt::PerfModels> {
+        self.shared.rt.perf_models().clone()
+    }
+
     /// Context partitions (name -> worker ids), for tooling and tests.
     pub fn context_table(&self) -> Vec<(String, Vec<usize>)> {
         let infos = self.shared.rt.contexts();
@@ -574,7 +581,12 @@ fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
                     .name(format!("serve-session-{sid}"))
                     .spawn(move || session_loop(shared2, stream, sid))
                     .expect("spawning session thread");
-                shared.sessions.lock().unwrap().push(handle);
+                let mut sessions = shared.sessions.lock().unwrap();
+                // reap finished sessions so the list stays bounded under
+                // connection churn (health probes and gossip open a
+                // short-lived session every round)
+                crate::util::threads::reap_finished(&mut sessions);
+                sessions.push(handle);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(10));
@@ -672,7 +684,8 @@ fn handle_request(
                                 id: None,
                                 error: format!(
                                     "unknown selection policy '{p}' (want greedy | \
-                                     calibrating | epsilon[:E] | forced:VARIANT)"
+                                     calibrating | epsilon[:E] | epsilon-decayed[:E] | \
+                                     forced:VARIANT)"
                                 ),
                             },
                         );
@@ -708,6 +721,32 @@ fn handle_request(
                 })
                 .collect();
             send_line(reply, &Response::Contexts { contexts });
+            true
+        }
+        Request::PerfPull => {
+            send_line(
+                reply,
+                &Response::PerfModels {
+                    models: shared.rt.perf_models().to_json(),
+                },
+            );
+            true
+        }
+        Request::PerfPush { models } => {
+            let merged = shared.rt.perf_models().set_remote_json(&models) as u64;
+            send_line(reply, &Response::PerfAck { merged });
+            true
+        }
+        Request::Shards | Request::DrainShard { .. } => {
+            send_line(
+                reply,
+                &Response::Error {
+                    id: None,
+                    error: "router-level operation (this is a shard server; \
+                            send it to `compar route`)"
+                        .into(),
+                },
+            );
             true
         }
         Request::Shutdown => {
@@ -787,27 +826,28 @@ fn dispatch_loop(shared: Arc<Shared>) {
             }
         }
         // prune finished completion threads so the list stays bounded
-        let mut comps = shared.completions.lock().unwrap();
-        let done: Vec<usize> = comps
-            .iter()
-            .enumerate()
-            .filter(|(_, h)| h.is_finished())
-            .map(|(i, _)| i)
-            .collect();
-        for i in done.into_iter().rev() {
-            let _ = comps.swap_remove(i).join();
-        }
+        crate::util::threads::reap_finished(&mut shared.completions.lock().unwrap());
     }
 }
 
 /// Submit one batch of same-app jobs and hand completion to a worker
 /// thread (submission itself is cheap; waiting must not block the
 /// dispatcher, or contexts could not make progress concurrently).
+///
+/// Zero-copy batching: riders with identical (size, seed) — the app is
+/// already identical within a batch — share one registration of their
+/// read-only input handles ([`apps::shared_input_indices`]). The batch
+/// group owns those handles and frees them only after every rider has
+/// completed, so concurrent readers never race an unregister.
 fn run_batch(shared: &Arc<Shared>, jobs: Vec<Job>) {
     let batch_size = jobs.len();
     let mut submitted = Vec::new();
+    // (size, seed) -> the shared input handles registered by the first
+    // identical rider
+    let mut donors: HashMap<(usize, u64), Vec<(usize, crate::taskrt::HandleId)>> = HashMap::new();
+    let mut group_handles: Vec<crate::taskrt::HandleId> = Vec::new();
     for job in jobs {
-        match submit_job(shared, &job) {
+        match submit_job(shared, &job, &mut donors, &mut group_handles) {
             Ok((inst, ids)) => submitted.push((job, inst, ids)),
             Err(e) => {
                 shared.requests_err.fetch_add(1, Ordering::Relaxed);
@@ -823,6 +863,9 @@ fn run_batch(shared: &Arc<Shared>, jobs: Vec<Job>) {
         }
     }
     if submitted.is_empty() {
+        for h in group_handles {
+            let _ = shared.rt.unregister_data(h);
+        }
         return;
     }
     let shared2 = shared.clone();
@@ -832,13 +875,23 @@ fn run_batch(shared: &Arc<Shared>, jobs: Vec<Job>) {
             for (job, inst, ids) in submitted {
                 complete_job(&shared2, job, inst, ids, batch_size);
             }
+            // every rider is done: release the shared input handles
+            for h in group_handles {
+                let _ = shared2.rt.unregister_data(h);
+            }
         })
         .expect("spawning completion thread");
     shared.completions.lock().unwrap().push(handle);
 }
 
-/// Register a fresh instance and submit the request's task chain.
-fn submit_job(shared: &Arc<Shared>, job: &Job) -> Result<(apps::Instance, Vec<TaskId>)> {
+/// Validate, register (sharing read-only inputs with identical riders in
+/// the same batch) and submit one request's task chain.
+fn submit_job(
+    shared: &Arc<Shared>,
+    job: &Job,
+    donors: &mut HashMap<(usize, u64), Vec<(usize, crate::taskrt::HandleId)>>,
+    group_handles: &mut Vec<crate::taskrt::HandleId>,
+) -> Result<(apps::Instance, Vec<TaskId>)> {
     let rt = &shared.rt;
     if job.req.tasks > 1 && !apps::idempotent(&job.req.app) {
         bail!(
@@ -866,7 +919,26 @@ fn submit_job(shared: &Arc<Shared>, job: &Job) -> Result<(apps::Instance, Vec<Ta
             );
         }
     }
-    let inst = apps::prepare(rt, &job.req.app, job.req.size, job.req.seed)?;
+    // register the instance, sharing read-only inputs with identical
+    // riders (zero-copy batching)
+    let share = apps::shared_input_indices(&job.req.app);
+    let inst = if share.is_empty() {
+        apps::prepare(rt, &job.req.app, job.req.size, job.req.seed)?
+    } else {
+        let key = (job.req.size, job.req.seed);
+        match donors.get(&key) {
+            Some(inputs) => {
+                apps::prepare_with_inputs(rt, &job.req.app, job.req.size, job.req.seed, inputs)?
+            }
+            None => {
+                let mut inst = apps::prepare(rt, &job.req.app, job.req.size, job.req.seed)?;
+                let donated = inst.donate_handles(share);
+                group_handles.extend(donated.iter().map(|(_, h)| *h));
+                donors.insert(key, donated);
+                inst
+            }
+        }
+    };
     let mut ids: Vec<TaskId> = Vec::with_capacity(job.req.tasks);
     for _ in 0..job.req.tasks {
         let mut spec =
@@ -880,11 +952,12 @@ fn submit_job(shared: &Arc<Shared>, job: &Job) -> Result<(apps::Instance, Vec<Ta
             Ok(id) => ids.push(id),
             Err(e) => {
                 // unwind: wait out what we already submitted, then free
+                // (shared inputs stay registered — the group frees them)
                 let _ = rt.wait_tasks(&ids);
                 rt.metrics().take_results_for(&ids);
                 rt.reap_tasks(&ids);
-                for h in &inst.handles {
-                    let _ = rt.unregister_data(*h);
+                for h in inst.owned_handles() {
+                    let _ = rt.unregister_data(h);
                 }
                 return Err(e);
             }
@@ -946,8 +1019,10 @@ fn complete_job(
     });
 
     rt.reap_tasks(&ids);
-    for h in &inst.handles {
-        let _ = rt.unregister_data(*h);
+    // free only the handles this request registered itself; shared
+    // zero-copy inputs belong to the batch group
+    for h in inst.owned_handles() {
+        let _ = rt.unregister_data(h);
     }
 
     match outcome {

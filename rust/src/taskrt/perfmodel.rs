@@ -2,10 +2,32 @@
 //!
 //! Each (codelet, variant) pair owns a model keyed by input footprint
 //! (the task's `size` parameter). Observed execution times accumulate
-//! into per-size buckets (Welford running mean/variance); estimates for
-//! unseen sizes come from a power-law regression t = a * n^b fitted over
-//! the bucket means in log-log space — the same family StarPU's
+//! into per-size buckets (Welford running mean/variance, plus an
+//! exponentially-decayed mean for drift tracking); estimates for unseen
+//! sizes come from a power-law regression t = a * n^b fitted over the
+//! bucket means in log-log space — the same family StarPU's
 //! `STARPU_REGRESSION_BASED` models use.
+//!
+//! ## Cluster gossip
+//!
+//! Since the `compar cluster` work a store holds two layers:
+//!
+//! * **local** — observations measured by *this* process. This is what
+//!   [`PerfModels::to_json`] serializes, what persists to disk, and the
+//!   only thing a shard ever ships over the wire (`perf_pull`).
+//! * **remote** — a gossip overlay: the Welford-combined summary of the
+//!   *other* shards' local observations, installed wholesale by
+//!   `perf_push` ([`PerfModels::set_remote_json`]). Replacing (rather
+//!   than accumulating) the overlay keeps gossip idempotent — repeated
+//!   rounds can never double-count a sample — and because each bucket
+//!   ships as a fixed-size summary (count, mean, M2, ewma), a gossip
+//!   message is bounded by the number of (codelet, variant, size)
+//!   triples regardless of traffic volume.
+//!
+//! Every query (estimate / calibration status / sample counts) answers
+//! from the pairwise Welford-combine of both layers, so a variant
+//! calibrated on one shard is immediately calibrated everywhere the
+//! gossip reaches.
 //!
 //! Models persist as JSON under `$COMPAR_PERFMODEL_DIR` so calibration
 //! survives across runs (StarPU's ~/.starpu/sampling analog).
@@ -21,12 +43,20 @@ use crate::util::json::{self, Json};
 /// Minimum observations in a bucket before its mean is trusted.
 pub const MIN_SAMPLES: usize = 3;
 
-/// One footprint bucket: Welford accumulator.
+/// Per-observation weight of [`Bucket::ewma`], the exponentially-decayed
+/// mean: after a real performance shift the decayed estimate recovers in
+/// O(1/alpha) observations while the cumulative mean needs O(count).
+pub const EWMA_ALPHA: f64 = 0.3;
+
+/// One footprint bucket: Welford accumulator + decayed mean.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Bucket {
     pub count: usize,
     pub mean: f64,
     m2: f64,
+    /// Exponentially-decayed mean (weight [`EWMA_ALPHA`] per sample);
+    /// policies opt in via [`VariantModel::estimate_recent`].
+    pub ewma: f64,
 }
 
 impl Bucket {
@@ -35,6 +65,11 @@ impl Bucket {
         let delta = t - self.mean;
         self.mean += delta / self.count as f64;
         self.m2 += delta * (t - self.mean);
+        self.ewma = if self.count == 1 {
+            t
+        } else {
+            self.ewma + EWMA_ALPHA * (t - self.ewma)
+        };
     }
 
     pub fn stddev(&self) -> f64 {
@@ -43,6 +78,29 @@ impl Bucket {
         } else {
             (self.m2 / (self.count - 1) as f64).sqrt()
         }
+    }
+
+    /// Combine another accumulator into this one (Chan et al.'s
+    /// parallel-Welford update): the result is bit-for-bit the same
+    /// count/mean and the same variance as if both sample streams had
+    /// been recorded into a single bucket. The decayed means (which are
+    /// order-dependent by construction) combine count-weighted.
+    pub fn merge(&mut self, other: &Bucket) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        let na = self.count as f64;
+        let nb = other.count as f64;
+        let n = na + nb;
+        let delta = other.mean - self.mean;
+        self.mean += delta * nb / n;
+        self.m2 += other.m2 + delta * delta * na * nb / n;
+        self.ewma = (self.ewma * na + other.ewma * nb) / n;
+        self.count += other.count;
     }
 }
 
@@ -60,6 +118,13 @@ impl VariantModel {
 
     pub fn total_samples(&self) -> usize {
         self.buckets.values().map(|b| b.count).sum()
+    }
+
+    /// Welford-combine another model's buckets into this one.
+    pub fn merge(&mut self, other: &VariantModel) {
+        for (size, b) in &other.buckets {
+            self.buckets.entry(*size).or_default().merge(b);
+        }
     }
 
     /// Power-law fit t = a * n^b over trusted buckets (log-log least
@@ -99,16 +164,93 @@ impl VariantModel {
         self.regression().map(|(a, b)| a * (size as f64).powf(b))
     }
 
+    /// Like [`VariantModel::estimate`] but the trusted-bucket answer is
+    /// the exponentially-decayed mean, so drift-tracking policies see a
+    /// recent shift within a few observations instead of waiting for the
+    /// cumulative mean to move.
+    pub fn estimate_recent(&self, size: usize) -> Option<f64> {
+        if let Some(b) = self.buckets.get(&size) {
+            if b.count >= MIN_SAMPLES {
+                return Some(b.ewma);
+            }
+        }
+        self.regression().map(|(a, b)| a * (size as f64).powf(b))
+    }
+
     /// Whether `size` still needs calibration runs.
     pub fn needs_calibration(&self, size: usize) -> bool {
         self.buckets.get(&size).map_or(true, |b| b.count < MIN_SAMPLES)
     }
 }
 
-/// Registry of all models, keyed "codelet:variant".
+// ----------------------------------------------------- (de)serialization
+
+/// Serialize a model map (the gossip wire form and the on-disk form):
+/// `{ "codelet:variant": { "SIZE": {count, mean, m2, ewma} } }`.
+pub fn models_to_json(models: &BTreeMap<String, VariantModel>) -> Json {
+    let mut obj = BTreeMap::new();
+    for (k, m) in models {
+        let mut buckets = BTreeMap::new();
+        for (size, b) in &m.buckets {
+            let mut rec = BTreeMap::new();
+            rec.insert("count".into(), Json::Num(b.count as f64));
+            rec.insert("mean".into(), Json::Num(b.mean));
+            rec.insert("m2".into(), Json::Num(b.m2));
+            rec.insert("ewma".into(), Json::Num(b.ewma));
+            buckets.insert(size.to_string(), Json::Obj(rec));
+        }
+        obj.insert(k.clone(), Json::Obj(buckets));
+    }
+    Json::Obj(obj)
+}
+
+/// Parse a model map (tolerant: malformed entries are skipped).
+pub fn parse_models(v: &Json) -> BTreeMap<String, VariantModel> {
+    let mut out: BTreeMap<String, VariantModel> = BTreeMap::new();
+    if let Some(obj) = v.as_obj() {
+        for (k, buckets) in obj {
+            let m = out.entry(k.clone()).or_default();
+            if let Some(bo) = buckets.as_obj() {
+                for (size, rec) in bo {
+                    if let (Ok(size), Some(count), Some(mean)) = (
+                        size.parse::<usize>(),
+                        rec.get("count").and_then(Json::as_f64),
+                        rec.get("mean").and_then(Json::as_f64),
+                    ) {
+                        let b = m.buckets.entry(size).or_default();
+                        b.count = count as usize;
+                        b.mean = mean;
+                        b.m2 = rec.get("m2").and_then(Json::as_f64).unwrap_or(0.0);
+                        b.ewma = rec.get("ewma").and_then(Json::as_f64).unwrap_or(mean);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Welford-combine `from` into `into` (the router's cross-shard merge).
+pub fn merge_models(
+    into: &mut BTreeMap<String, VariantModel>,
+    from: &BTreeMap<String, VariantModel>,
+) {
+    for (k, m) in from {
+        into.entry(k.clone()).or_default().merge(m);
+    }
+}
+
+// ---------------------------------------------------------- the registry
+
+/// Registry of all models, keyed "codelet:variant": locally observed
+/// samples plus a replaceable gossip overlay of remote observations
+/// (see the module docs).
 #[derive(Default)]
 pub struct PerfModels {
+    /// Observations measured by this process (serialized / persisted).
     models: RwLock<BTreeMap<String, VariantModel>>,
+    /// Gossip overlay: combined summary of other shards' local models.
+    remote: RwLock<BTreeMap<String, VariantModel>>,
 }
 
 /// The composite "codelet:variant" map key — shared with the selection
@@ -131,69 +273,118 @@ impl PerfModels {
             .record(size, t);
     }
 
+    /// Run `f` over the combined (local ⊕ remote) model for `k`, without
+    /// cloning when only one layer knows the key. Lock order is always
+    /// local-then-remote.
+    fn with_combined<R>(&self, k: &str, f: impl FnOnce(&VariantModel) -> R) -> Option<R> {
+        let models = self.models.read().unwrap();
+        let remote = self.remote.read().unwrap();
+        match (models.get(k), remote.get(k)) {
+            (None, None) => None,
+            (Some(l), None) => Some(f(l)),
+            (None, Some(r)) => Some(f(r)),
+            (Some(l), Some(r)) => {
+                let mut m = l.clone();
+                m.merge(r);
+                Some(f(&m))
+            }
+        }
+    }
+
+    /// Combined (local ⊕ remote) bucket for (key, size) — the fast path
+    /// of the bucket-exact queries below: merges just two small buckets
+    /// instead of cloning a whole model. These queries sit on the
+    /// scheduler's per-decision path, once per eligible variant.
+    fn combined_bucket(&self, k: &str, size: usize) -> Option<Bucket> {
+        let models = self.models.read().unwrap();
+        let remote = self.remote.read().unwrap();
+        let lb = models.get(k).and_then(|m| m.buckets.get(&size));
+        let rb = remote.get(k).and_then(|m| m.buckets.get(&size));
+        match (lb, rb) {
+            (None, None) => None,
+            (Some(b), None) | (None, Some(b)) => Some(b.clone()),
+            (Some(l), Some(r)) => {
+                let mut b = l.clone();
+                b.merge(r);
+                Some(b)
+            }
+        }
+    }
+
     pub fn estimate(&self, codelet: &str, variant: &str, size: usize) -> Option<f64> {
-        self.models
-            .read()
-            .unwrap()
-            .get(&key(codelet, variant))
-            .and_then(|m| m.estimate(size))
+        let k = key(codelet, variant);
+        if let Some(b) = self.combined_bucket(&k, size) {
+            if b.count >= MIN_SAMPLES {
+                return Some(b.mean);
+            }
+        }
+        // untrusted/unseen size: regression over the merged model (the
+        // rare path — this one does pay for a full combine)
+        self.with_combined(&k, |m| {
+            m.regression().map(|(a, b)| a * (size as f64).powf(b))
+        })
+        .flatten()
+    }
+
+    /// Decayed-mean estimate (drift-tracking policies opt in).
+    pub fn estimate_recent(&self, codelet: &str, variant: &str, size: usize) -> Option<f64> {
+        let k = key(codelet, variant);
+        if let Some(b) = self.combined_bucket(&k, size) {
+            if b.count >= MIN_SAMPLES {
+                return Some(b.ewma);
+            }
+        }
+        self.with_combined(&k, |m| {
+            m.regression().map(|(a, b)| a * (size as f64).powf(b))
+        })
+        .flatten()
     }
 
     pub fn needs_calibration(&self, codelet: &str, variant: &str, size: usize) -> bool {
-        self.models
-            .read()
-            .unwrap()
-            .get(&key(codelet, variant))
-            .map_or(true, |m| m.needs_calibration(size))
+        self.combined_bucket(&key(codelet, variant), size)
+            .map_or(true, |b| b.count < MIN_SAMPLES)
     }
 
     pub fn samples(&self, codelet: &str, variant: &str) -> usize {
-        self.models
+        let k = key(codelet, variant);
+        let models = self.models.read().unwrap();
+        let remote = self.remote.read().unwrap();
+        models.get(&k).map_or(0, |m| m.total_samples())
+            + remote.get(&k).map_or(0, |m| m.total_samples())
+    }
+
+    /// Serialize the *locally observed* models only — the gossip payload
+    /// (`perf_pull`) and the persistence record. The remote overlay is
+    /// deliberately excluded so a shard never re-ships samples it
+    /// received through gossip (which would double-count them).
+    pub fn to_json(&self) -> Json {
+        models_to_json(&self.models.read().unwrap())
+    }
+
+    /// Merge serialized models into the local layer (persistence load).
+    pub fn load_json(&self, v: &Json) {
+        let parsed = parse_models(v);
+        merge_models(&mut self.models.write().unwrap(), &parsed);
+    }
+
+    /// Install a gossip overlay (`perf_push`), *replacing* the previous
+    /// one — idempotent by construction. Returns the number of (key,
+    /// size) buckets installed.
+    pub fn set_remote_json(&self, v: &Json) -> usize {
+        let parsed = parse_models(v);
+        let n = parsed.values().map(|m| m.buckets.len()).sum();
+        *self.remote.write().unwrap() = parsed;
+        n
+    }
+
+    /// Buckets currently in the gossip overlay (diagnostics / tests).
+    pub fn remote_buckets(&self) -> usize {
+        self.remote
             .read()
             .unwrap()
-            .get(&key(codelet, variant))
-            .map_or(0, |m| m.total_samples())
-    }
-
-    /// Serialize all models to JSON.
-    pub fn to_json(&self) -> Json {
-        let models = self.models.read().unwrap();
-        let mut obj = BTreeMap::new();
-        for (k, m) in models.iter() {
-            let mut buckets = BTreeMap::new();
-            for (size, b) in &m.buckets {
-                let mut rec = BTreeMap::new();
-                rec.insert("count".into(), Json::Num(b.count as f64));
-                rec.insert("mean".into(), Json::Num(b.mean));
-                rec.insert("m2".into(), Json::Num(b.m2));
-                buckets.insert(size.to_string(), Json::Obj(rec));
-            }
-            obj.insert(k.clone(), Json::Obj(buckets));
-        }
-        Json::Obj(obj)
-    }
-
-    pub fn load_json(&self, v: &Json) {
-        let mut models = self.models.write().unwrap();
-        if let Some(obj) = v.as_obj() {
-            for (k, buckets) in obj {
-                let m = models.entry(k.clone()).or_default();
-                if let Some(bo) = buckets.as_obj() {
-                    for (size, rec) in bo {
-                        if let (Ok(size), Some(count), Some(mean)) = (
-                            size.parse::<usize>(),
-                            rec.get("count").and_then(Json::as_f64),
-                            rec.get("mean").and_then(Json::as_f64),
-                        ) {
-                            let b = m.buckets.entry(size).or_default();
-                            b.count = count as usize;
-                            b.mean = mean;
-                            b.m2 = rec.get("m2").and_then(Json::as_f64).unwrap_or(0.0);
-                        }
-                    }
-                }
-            }
-        }
+            .values()
+            .map(|m| m.buckets.len())
+            .sum()
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -229,12 +420,60 @@ mod tests {
     }
 
     #[test]
+    fn welford_combine_matches_single_stream() {
+        // property: merging the buckets of any split of a sample stream
+        // reproduces the single-stream count, mean and variance
+        let samples: Vec<f64> = (0..40)
+            .map(|i| 0.5 + 0.013 * (i as f64) + if i % 3 == 0 { 0.2 } else { -0.1 })
+            .collect();
+        let mut whole = Bucket::default();
+        for &t in &samples {
+            whole.record(t);
+        }
+        for split in [1usize, 7, 20, 39] {
+            let (mut a, mut b) = (Bucket::default(), Bucket::default());
+            for &t in &samples[..split] {
+                a.record(t);
+            }
+            for &t in &samples[split..] {
+                b.record(t);
+            }
+            a.merge(&b);
+            assert_eq!(a.count, whole.count, "split {split}");
+            assert!((a.mean - whole.mean).abs() < 1e-12, "split {split}");
+            assert!((a.stddev() - whole.stddev()).abs() < 1e-9, "split {split}");
+        }
+        // merging an empty bucket in either direction is the identity
+        let mut a = whole.clone();
+        a.merge(&Bucket::default());
+        assert_eq!(a, whole);
+        let mut e = Bucket::default();
+        e.merge(&whole);
+        assert_eq!(e, whole);
+    }
+
+    #[test]
+    fn ewma_recovers_from_drift_faster_than_cumulative_mean() {
+        let mut b = Bucket::default();
+        for _ in 0..50 {
+            b.record(0.001);
+        }
+        for _ in 0..5 {
+            b.record(1.0);
+        }
+        // cumulative mean barely moved; the decayed mean is mostly there
+        assert!(b.mean < 0.2, "cumulative {}", b.mean);
+        assert!(b.ewma > 0.5, "decayed {}", b.ewma);
+    }
+
+    #[test]
     fn estimate_prefers_exact_bucket() {
         let mut m = VariantModel::default();
         for _ in 0..MIN_SAMPLES {
             m.record(64, 0.5);
         }
         assert_eq!(m.estimate(64), Some(0.5));
+        assert_eq!(m.estimate_recent(64), Some(0.5));
     }
 
     #[test]
@@ -277,6 +516,57 @@ mod tests {
         q.load_json(&j);
         assert_eq!(q.estimate("mmul", "cuda", 128), Some(0.25));
         assert_eq!(q.samples("mmul", "cuda"), 4);
+    }
+
+    #[test]
+    fn remote_overlay_calibrates_and_replaces() {
+        // "shard A" observed enough samples; "shard B" has none locally
+        let a = PerfModels::new();
+        for _ in 0..MIN_SAMPLES {
+            a.record("mmul", "omp", 48, 0.01);
+        }
+        let b = PerfModels::new();
+        assert!(b.needs_calibration("mmul", "omp", 48));
+        let installed = b.set_remote_json(&a.to_json());
+        assert_eq!(installed, 1);
+        // B is now calibrated at that size without local observations
+        assert!(!b.needs_calibration("mmul", "omp", 48));
+        assert_eq!(b.estimate("mmul", "omp", 48), Some(0.01));
+        assert_eq!(b.samples("mmul", "omp"), MIN_SAMPLES);
+        // queries combine local + remote pairwise
+        b.record("mmul", "omp", 48, 0.03);
+        assert_eq!(b.samples("mmul", "omp"), MIN_SAMPLES + 1);
+        let est = b.estimate("mmul", "omp", 48).unwrap();
+        let want = (0.01 * MIN_SAMPLES as f64 + 0.03) / (MIN_SAMPLES + 1) as f64;
+        assert!((est - want).abs() < 1e-12, "{est} vs {want}");
+        // re-pushing the same overlay replaces it: no double counting
+        b.set_remote_json(&a.to_json());
+        assert_eq!(b.samples("mmul", "omp"), MIN_SAMPLES + 1);
+        // B's own wire payload ships only its local observation
+        let shipped = parse_models(&b.to_json());
+        assert_eq!(shipped["mmul:omp"].total_samples(), 1);
+        // clearing the overlay decalibrates again
+        b.set_remote_json(&Json::Obj(BTreeMap::new()));
+        assert_eq!(b.remote_buckets(), 0);
+        assert!(b.needs_calibration("mmul", "omp", 48));
+    }
+
+    #[test]
+    fn model_map_merge_and_roundtrip() {
+        let mut a: BTreeMap<String, VariantModel> = BTreeMap::new();
+        a.entry("c:x".into()).or_default().record(8, 1.0);
+        a.entry("c:x".into()).or_default().record(8, 3.0);
+        let mut b: BTreeMap<String, VariantModel> = BTreeMap::new();
+        b.entry("c:x".into()).or_default().record(8, 2.0);
+        b.entry("c:y".into()).or_default().record(16, 5.0);
+        let mut merged = a.clone();
+        merge_models(&mut merged, &b);
+        assert_eq!(merged["c:x"].buckets[&8].count, 3);
+        assert!((merged["c:x"].buckets[&8].mean - 2.0).abs() < 1e-12);
+        assert_eq!(merged["c:y"].total_samples(), 1);
+        // wire roundtrip preserves the welford state
+        let back = parse_models(&models_to_json(&merged));
+        assert_eq!(back["c:x"].buckets[&8], merged["c:x"].buckets[&8]);
     }
 
     #[test]

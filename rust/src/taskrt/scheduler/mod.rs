@@ -230,6 +230,14 @@ impl SchedCtx {
         self.perf.estimate(&task.codelet.name, &imp.name, task.size)
     }
 
+    /// Exponentially-decayed estimate for (task, impl) — what the
+    /// drift-tracking `epsilon-decayed` policy exploits.
+    pub fn recent_estimate(&self, task: &ReadyTask, idx: usize) -> Option<f64> {
+        let imp = &task.codelet.impls[idx];
+        self.perf
+            .estimate_recent(&task.codelet.name, &imp.name, task.size)
+    }
+
     /// Charge a placement to the deque model.
     pub fn charge(&self, worker: usize, ns: u64) {
         self.queued_ns[worker].fetch_add(ns, Ordering::Relaxed);

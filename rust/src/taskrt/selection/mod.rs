@@ -36,6 +36,11 @@
 //! | [`EpsilonGreedy`]         | Greedy exploitation + an ε-fraction of continuous  |
 //! |                           | exploration (least-observed variant first) so      |
 //! |                           | models keep tracking drift on a long-running server|
+//! | `epsilon-decayed[:E]`     | [`EpsilonGreedy`] whose exploitation ranks variants|
+//! |                           | by the *exponentially-decayed* mean                |
+//! |                           | ([`crate::taskrt::perfmodel::Bucket::ewma`]), so a |
+//! |                           | real performance shift flips the ranking within a  |
+//! |                           | few observations instead of O(history)             |
 //! | [`Forced`]                | pin one variant by name; replaces both the old     |
 //! |                           | `force_variant` plumbing and the serve special case|
 
@@ -94,23 +99,38 @@ pub enum SelectorKind {
     Greedy,
     Calibrating,
     EpsilonGreedy(f64),
+    /// Epsilon-greedy whose exploitation consults the exponentially-
+    /// decayed estimates (fast drift recovery; see
+    /// [`crate::taskrt::perfmodel::EWMA_ALPHA`]).
+    EpsilonDecayed(f64),
     Forced(String),
 }
 
 impl SelectorKind {
     /// Parse `greedy`, `calibrating`, `epsilon`, `epsilon:0.2`,
-    /// `forced:VARIANT`.
+    /// `epsilon-decayed[:E]`, `forced:VARIANT`.
     pub fn parse(s: &str) -> Option<SelectorKind> {
         let s = s.trim();
-        match s.to_ascii_lowercase().as_str() {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
             "greedy" => return Some(SelectorKind::Greedy),
             "calibrating" | "calibrate" => return Some(SelectorKind::Calibrating),
             "epsilon" | "epsilon-greedy" | "egreedy" => {
                 return Some(SelectorKind::EpsilonGreedy(DEFAULT_EPSILON))
             }
+            "epsilon-decayed" | "edecay" => {
+                return Some(SelectorKind::EpsilonDecayed(DEFAULT_EPSILON))
+            }
             _ => {}
         }
-        if let Some(e) = s.to_ascii_lowercase().strip_prefix("epsilon:") {
+        if let Some(e) = lower.strip_prefix("epsilon-decayed:") {
+            let eps: f64 = e.parse().ok()?;
+            if (0.0..=1.0).contains(&eps) {
+                return Some(SelectorKind::EpsilonDecayed(eps));
+            }
+            return None;
+        }
+        if let Some(e) = lower.strip_prefix("epsilon:") {
             let eps: f64 = e.parse().ok()?;
             if (0.0..=1.0).contains(&eps) {
                 return Some(SelectorKind::EpsilonGreedy(eps));
@@ -131,6 +151,7 @@ impl SelectorKind {
             SelectorKind::Greedy => "greedy".into(),
             SelectorKind::Calibrating => "calibrating".into(),
             SelectorKind::EpsilonGreedy(e) => format!("epsilon:{e}"),
+            SelectorKind::EpsilonDecayed(e) => format!("epsilon-decayed:{e}"),
             SelectorKind::Forced(v) => format!("forced:{v}"),
         }
     }
@@ -141,6 +162,7 @@ impl SelectorKind {
             SelectorKind::Greedy => Arc::new(Greedy::new()),
             SelectorKind::Calibrating => Arc::new(Calibrating::new()),
             SelectorKind::EpsilonGreedy(e) => Arc::new(EpsilonGreedy::new(*e, seed)),
+            SelectorKind::EpsilonDecayed(e) => Arc::new(EpsilonGreedy::new_decayed(*e, seed)),
             SelectorKind::Forced(v) => Arc::new(Forced::new(v)),
         }
     }
@@ -190,9 +212,19 @@ fn explore_pool(
 /// Model minimum over `pool` (assumes every entry has an estimate; a
 /// missing one sorts last rather than panicking).
 fn best_known(task: &ReadyTask, ctx: &SchedCtx, pool: &[usize]) -> Option<VariantChoice> {
+    best_by(pool, |i| ctx.exec_estimate(task, i))
+}
+
+/// Decayed-mean minimum over `pool` — the drift-tracking ranking
+/// ([`crate::taskrt::perfmodel::Bucket::ewma`]).
+fn best_recent(task: &ReadyTask, ctx: &SchedCtx, pool: &[usize]) -> Option<VariantChoice> {
+    best_by(pool, |i| ctx.recent_estimate(task, i))
+}
+
+fn best_by(pool: &[usize], est: impl Fn(usize) -> Option<f64>) -> Option<VariantChoice> {
     pool.iter()
         .copied()
-        .map(|i| (i, ctx.exec_estimate(task, i)))
+        .map(|i| (i, est(i)))
         .min_by(|a, b| {
             let ta = a.1.unwrap_or(f64::MAX);
             let tb = b.1.unwrap_or(f64::MAX);
@@ -308,6 +340,10 @@ impl SelectionPolicy for Calibrating {
 /// [`SelectionPolicy::feedback`] loop from the workers).
 pub struct EpsilonGreedy {
     epsilon: f64,
+    /// Exploit via the exponentially-decayed estimates instead of the
+    /// cumulative means (the `epsilon-decayed` policy): after a real
+    /// performance shift the ranking flips in O(1/alpha) observations.
+    decayed: bool,
     rr: AtomicUsize,
     rng: Mutex<Rng>,
     /// "codelet:variant" -> measured-execution observations (same key
@@ -319,9 +355,18 @@ impl EpsilonGreedy {
     pub fn new(epsilon: f64, seed: u64) -> EpsilonGreedy {
         EpsilonGreedy {
             epsilon: epsilon.clamp(0.0, 1.0),
+            decayed: false,
             rr: AtomicUsize::new(0),
             rng: Mutex::new(Rng::new(seed ^ 0xeb511e55)),
             seen: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// The drift-tracking variant: exploitation ranks by decayed mean.
+    pub fn new_decayed(epsilon: f64, seed: u64) -> EpsilonGreedy {
+        EpsilonGreedy {
+            decayed: true,
+            ..EpsilonGreedy::new(epsilon, seed)
         }
     }
 
@@ -338,7 +383,11 @@ impl EpsilonGreedy {
 
 impl SelectionPolicy for EpsilonGreedy {
     fn name(&self) -> String {
-        format!("epsilon:{}", self.epsilon)
+        if self.decayed {
+            format!("epsilon-decayed:{}", self.epsilon)
+        } else {
+            format!("epsilon:{}", self.epsilon)
+        }
     }
 
     fn select(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> Option<VariantChoice> {
@@ -384,7 +433,11 @@ impl SelectionPolicy for EpsilonGreedy {
                 est: None,
             });
         }
-        best_known(task, ctx, &eligible)
+        if self.decayed {
+            best_recent(task, ctx, &eligible)
+        } else {
+            best_known(task, ctx, &eligible)
+        }
     }
 
     fn feedback(&self, codelet: &str, variant: &str, _size: usize, _secs: f64) {
@@ -504,13 +557,23 @@ mod tests {
             SelectorKind::parse("forced:cuda"),
             Some(SelectorKind::Forced("cuda".into()))
         );
+        assert_eq!(
+            SelectorKind::parse("epsilon-decayed"),
+            Some(SelectorKind::EpsilonDecayed(DEFAULT_EPSILON))
+        );
+        assert_eq!(
+            SelectorKind::parse("epsilon-decayed:0.3"),
+            Some(SelectorKind::EpsilonDecayed(0.3))
+        );
         assert_eq!(SelectorKind::parse("epsilon:7"), None);
+        assert_eq!(SelectorKind::parse("epsilon-decayed:7"), None);
         assert_eq!(SelectorKind::parse("forced:"), None);
         assert_eq!(SelectorKind::parse("nope"), None);
         for k in [
             SelectorKind::Greedy,
             SelectorKind::Calibrating,
             SelectorKind::EpsilonGreedy(0.5),
+            SelectorKind::EpsilonDecayed(0.25),
             SelectorKind::Forced("omp".into()),
         ] {
             assert_eq!(SelectorKind::parse(&k.name()), Some(k.clone()), "{k:?}");
@@ -582,6 +645,35 @@ mod tests {
         assert!(fast as f64 / n as f64 > 0.7, "converged to {fast}/{n}");
         // exploration keeps observing the slow variant too
         assert!(p.observations("c", "slow") > 0);
+    }
+
+    #[test]
+    fn decayed_epsilon_recovers_from_drift_cumulative_does_not() {
+        // long history: "fast" was the winner for 50 observations, then
+        // drifted to 1.0 s for the last 5. The cumulative mean still
+        // ranks it first; the decayed mean has already flipped.
+        let perf = Arc::new(PerfModels::new());
+        for _ in 0..50 {
+            perf.record("c", "fast", 64, 1e-3);
+        }
+        warm(&perf, "slow", 1e-1);
+        for _ in 0..5 {
+            perf.record("c", "fast", 64, 1.0);
+        }
+        let ctx = ctx_with(perf);
+        let task = two_variant_task(None);
+        // epsilon 0.0: pure exploitation, no randomness
+        let cumulative = EpsilonGreedy::new(0.0, 3);
+        let c = cumulative.select(&task, Arch::Cpu, &ctx).unwrap();
+        assert_eq!(task.codelet.impls[c.impl_idx].name, "fast", "cumulative lags");
+        let decayed = EpsilonGreedy::new_decayed(0.0, 3);
+        assert_eq!(decayed.name(), "epsilon-decayed:0");
+        let c = decayed.select(&task, Arch::Cpu, &ctx).unwrap();
+        assert_eq!(
+            task.codelet.impls[c.impl_idx].name, "slow",
+            "decayed ranking flips after the drift"
+        );
+        assert!(c.est.is_some());
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Support utilities: hand-rolled JSON (offline image has no serde),
-//! deterministic RNG for workloads, and timing statistics for benches.
+//! deterministic RNG for workloads, timing statistics for benches, and
+//! thread bookkeeping for the serving layers.
 
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod threads;

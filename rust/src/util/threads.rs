@@ -1,0 +1,18 @@
+//! Tiny thread-bookkeeping helper shared by the serving layers.
+
+use std::thread::JoinHandle;
+
+/// Join and drop every finished handle in `handles`, keeping the live
+/// ones — bounded bookkeeping for long-running accept/dispatch loops
+/// that would otherwise accumulate one handle per connection forever.
+pub fn reap_finished(handles: &mut Vec<JoinHandle<()>>) {
+    let done: Vec<usize> = handles
+        .iter()
+        .enumerate()
+        .filter(|(_, h)| h.is_finished())
+        .map(|(i, _)| i)
+        .collect();
+    for i in done.into_iter().rev() {
+        let _ = handles.swap_remove(i).join();
+    }
+}

@@ -1,0 +1,278 @@
+//! Integration tests for the `compar cluster` subsystem: two in-process
+//! `serve` shards behind the router. Covers end-to-end loadgen traffic
+//! through the unchanged client protocol, stats aggregation + shard
+//! drain, the perf-model wire ops, and the headline property — with
+//! gossip enabled, a variant calibrated on shard A is selected on shard
+//! B without recalibrating from scratch (and *is* recalibrated from
+//! scratch when gossip is off).
+
+use std::collections::BTreeSet;
+use std::time::{Duration, Instant};
+
+use compar::cluster::{LocalCluster, PlacementKind, RouterOptions};
+use compar::serve::{loadgen, Client, LoadgenOptions, ServeOptions, Server, SubmitReq};
+use compar::taskrt::{SchedPolicy, SelectorKind};
+
+fn serve_opts(selector: SelectorKind) -> ServeOptions {
+    ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        contexts: Vec::new(),
+        sched: SchedPolicy::Dmda,
+        selector: Some(selector),
+        ncpu: 2,
+        ncuda: 0,
+        max_inflight: 16,
+        batch_window: Duration::from_micros(200),
+        max_batch: 8,
+    }
+}
+
+fn router_opts(gossip: bool) -> RouterOptions {
+    RouterOptions {
+        listen: "127.0.0.1:0".into(),
+        shards: Vec::new(),
+        placement: PlacementKind::RoundRobin,
+        health_period: Duration::from_millis(100),
+        gossip_period: Duration::from_millis(100),
+        gossip,
+    }
+}
+
+fn submit(id: u64, app: &str, size: usize, seed: u64, verify: bool) -> SubmitReq {
+    SubmitReq {
+        id,
+        app: app.into(),
+        size,
+        tasks: 1,
+        ctx: None,
+        seed,
+        variant: None,
+        verify,
+    }
+}
+
+#[test]
+fn two_shard_cluster_serves_loadgen_end_to_end() {
+    let cluster =
+        LocalCluster::start(2, &serve_opts(SelectorKind::Greedy), router_opts(true)).unwrap();
+    let lg = LoadgenOptions {
+        clients: 4,
+        requests: 6,
+        app: "matmul".into(),
+        size: 32,
+        tasks: 1,
+        ctxs: Vec::new(),
+        pipeline: 2,
+        policy: None,
+        verify: true,
+        seed: 3,
+    };
+    let report = loadgen::run(&cluster.addr(), &lg).unwrap();
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.requests, 24);
+    assert!(report.rps > 0.0);
+    // results come back tagged with the serving shard; round-robin
+    // placement spreads the requests over both
+    assert!(
+        report.per_ctx.keys().any(|k| k.starts_with("shard0/")),
+        "{:?}",
+        report.per_ctx
+    );
+    assert!(
+        report.per_ctx.keys().any(|k| k.starts_with("shard1/")),
+        "{:?}",
+        report.per_ctx
+    );
+    let stats = cluster.shutdown().unwrap();
+    assert_eq!(stats.len(), 2);
+    let total: u64 = stats.iter().map(|s| s.requests_ok).sum();
+    assert_eq!(total, 24, "every request accounted for across shards");
+    for s in &stats {
+        assert_eq!(s.inflight, 0, "clean drain on every shard");
+        assert!(s.requests_ok > 0, "both shards served traffic: {stats:?}");
+    }
+}
+
+#[test]
+fn router_aggregates_stats_and_drains_shards_out_of_rotation() {
+    let cluster =
+        LocalCluster::start(2, &serve_opts(SelectorKind::Greedy), router_opts(true)).unwrap();
+    let mut c = Client::connect(&cluster.addr()).unwrap();
+    for r in 0..4u64 {
+        c.submit(submit(r, "matmul", 32, 50 + r, true)).unwrap();
+    }
+    // shard table: both healthy, none draining
+    let shards = c.shards().unwrap();
+    assert_eq!(shards.len(), 2);
+    assert!(shards.iter().all(|s| s.healthy && !s.draining), "{shards:?}");
+    // aggregated stats sum the shard counters, shard-prefixed tables
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.requests_ok, 4);
+    assert_eq!(stats.inflight, 0);
+    assert!(
+        stats.ctx_tasks.keys().all(|k| k.starts_with("shard")),
+        "{:?}",
+        stats.ctx_tasks
+    );
+    // drain shard0: subsequent submits all land on shard1
+    let drained = c.drain_shard(&shards[0].addr).unwrap();
+    assert_eq!(drained, shards[0].addr);
+    for r in 10..16u64 {
+        let resp = c.submit(submit(r, "matmul", 32, 80 + r, true)).unwrap();
+        assert!(
+            resp.ctx.starts_with("shard1/"),
+            "request routed to drained shard: {}",
+            resp.ctx
+        );
+    }
+    let shards = c.shards().unwrap();
+    assert!(shards[0].draining && !shards[1].draining, "{shards:?}");
+    // unknown shard name is an error, session survives
+    assert!(c.drain_shard("nope:1").is_err());
+    c.quit().unwrap();
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn perf_pull_and_push_roundtrip_over_the_wire() {
+    let server = Server::start(serve_opts(SelectorKind::Greedy)).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    for r in 0..3u64 {
+        c.submit(submit(r, "matmul", 32, 7 + r, false)).unwrap();
+    }
+    // pull: the executed tasks left local observations for the codelet
+    let models = c.perf_pull().unwrap();
+    let obj = models.as_obj().expect("perf_pull returns an object");
+    assert!(
+        obj.keys().any(|k| k.starts_with("mmul:")),
+        "{:?}",
+        obj.keys().collect::<Vec<_>>()
+    );
+    // push: installing an overlay acks with the bucket count
+    let merged = c.perf_push(&models).unwrap();
+    assert!(merged > 0, "no buckets accepted");
+    assert_eq!(server.perf_models().remote_buckets(), merged as usize);
+    c.quit().unwrap();
+    server.shutdown().unwrap();
+}
+
+/// The acceptance-criteria property: calibrate (matmul, 48) on shard A
+/// only, wait for a gossip round, and shard B selects the model-best
+/// variant from its very first request — no per-shard recalibration.
+#[test]
+fn gossip_transfers_calibration_from_shard_a_to_shard_b() {
+    let cluster =
+        LocalCluster::start(2, &serve_opts(SelectorKind::Calibrating), router_opts(true)).unwrap();
+    let shard_b_models = cluster.shards[1].perf_models();
+    // drive shard A directly so B sees no traffic at all
+    let addr_a = cluster.shards[0].local_addr().to_string();
+    let mut c = Client::connect(&addr_a).unwrap();
+    for r in 0..12u64 {
+        c.submit(submit(r, "matmul", 48, 100 + r, false)).unwrap();
+    }
+    c.quit().unwrap();
+    assert!(!cluster.shards[0]
+        .perf_models()
+        .needs_calibration("mmul", "omp", 48));
+    // shard A's buckets reach shard B through the router's gossip round
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let calibrated = ["omp", "seq"]
+            .iter()
+            .all(|v| !shard_b_models.needs_calibration("mmul", v, 48));
+        if calibrated {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "gossip never calibrated shard B (remote buckets: {})",
+            shard_b_models.remote_buckets()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // every selection on B exploits immediately: one variant, never the
+    // round-robin calibration sweep
+    let addr_b = cluster.shards[1].local_addr().to_string();
+    let mut c = Client::connect(&addr_b).unwrap();
+    let mut variants = BTreeSet::new();
+    for r in 0..6u64 {
+        let resp = c.submit(submit(r, "matmul", 48, 200 + r, false)).unwrap();
+        variants.extend(resp.variants.clone());
+    }
+    c.quit().unwrap();
+    assert_eq!(
+        variants.len(),
+        1,
+        "gossip-seeded shard B still explored: {variants:?}"
+    );
+    cluster.shutdown().unwrap();
+}
+
+/// Control for the test above: gossip off, shard B recalibrates from
+/// scratch (the Calibrating policy's round-robin sweep visits every
+/// variant again).
+#[test]
+fn without_gossip_each_shard_recalibrates_from_scratch() {
+    let cluster = LocalCluster::start(
+        2,
+        &serve_opts(SelectorKind::Calibrating),
+        router_opts(false),
+    )
+    .unwrap();
+    let addr_a = cluster.shards[0].local_addr().to_string();
+    let mut c = Client::connect(&addr_a).unwrap();
+    for r in 0..12u64 {
+        c.submit(submit(r, "matmul", 48, 100 + r, false)).unwrap();
+    }
+    c.quit().unwrap();
+    // give the (pull-only) gossip thread several rounds: B must stay cold
+    std::thread::sleep(Duration::from_millis(400));
+    let shard_b_models = cluster.shards[1].perf_models();
+    assert!(
+        shard_b_models.needs_calibration("mmul", "omp", 48),
+        "calibration leaked to shard B with gossip off"
+    );
+    assert_eq!(shard_b_models.remote_buckets(), 0);
+    let addr_b = cluster.shards[1].local_addr().to_string();
+    let mut c = Client::connect(&addr_b).unwrap();
+    let mut variants = BTreeSet::new();
+    for r in 0..6u64 {
+        let resp = c.submit(submit(r, "matmul", 48, 200 + r, false)).unwrap();
+        variants.extend(resp.variants.clone());
+    }
+    c.quit().unwrap();
+    assert!(
+        variants.len() >= 2,
+        "shard B should have explored both variants while recalibrating: {variants:?}"
+    );
+    cluster.shutdown().unwrap();
+}
+
+/// A dead shard is detected and traffic fails over to the survivor —
+/// the retry-on-other-shard path.
+#[test]
+fn submits_fail_over_when_a_shard_dies() {
+    let mut cluster =
+        LocalCluster::start(2, &serve_opts(SelectorKind::Greedy), router_opts(false)).unwrap();
+    let addr = cluster.addr();
+    // kill shard 0 out from under the router
+    let dead = cluster.shards.remove(0);
+    let survivor_ok_before = {
+        let mut c = Client::connect(&cluster.shards[0].local_addr().to_string()).unwrap();
+        let s = c.stats().unwrap();
+        let _ = c.quit();
+        s.requests_ok
+    };
+    dead.shutdown().unwrap();
+    let mut c = Client::connect(&addr).unwrap();
+    // every request still answers, routed around the dead shard
+    for r in 0..8u64 {
+        let resp = c.submit(submit(r, "matmul", 32, 300 + r, true)).unwrap();
+        assert!(resp.ctx.starts_with("shard1/"), "{}", resp.ctx);
+    }
+    c.quit().unwrap();
+    let stats = cluster.shutdown().unwrap();
+    assert_eq!(stats.len(), 1);
+    assert_eq!(stats[0].requests_ok - survivor_ok_before, 8);
+}

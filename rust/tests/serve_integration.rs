@@ -222,6 +222,90 @@ fn unknown_variant_is_a_protocol_error() {
 }
 
 #[test]
+fn shared_input_registration_for_identical_instances() {
+    use compar::apps;
+    use compar::taskrt::{Config, Runtime, TaskSpec};
+    let rt = Runtime::new(
+        Config {
+            ncpu: 2,
+            ncuda: 0,
+            ..Config::default()
+        },
+        None,
+    )
+    .unwrap();
+    // matmul shares its two read-only inputs; the output stays private
+    assert_eq!(apps::shared_input_indices("matmul"), &[0, 1]);
+    assert_eq!(apps::shared_input_indices("nw"), &[0]);
+    assert!(apps::shared_input_indices("lud").is_empty());
+    let mut donor = apps::prepare(&rt, "matmul", 24, 9).unwrap();
+    let donated = donor.donate_handles(&[0, 1]);
+    assert_eq!(donated.len(), 2);
+    // the donor no longer owns the donated inputs
+    assert_eq!(donor.owned_handles(), vec![donor.handles[2]]);
+    let rider = apps::prepare_with_inputs(&rt, "matmul", 24, 9, &donated).unwrap();
+    assert_eq!(rider.handles[0], donor.handles[0], "input a shared");
+    assert_eq!(rider.handles[1], donor.handles[1], "input b shared");
+    assert_ne!(rider.handles[2], donor.handles[2], "outputs are private");
+    assert_eq!(rider.owned_handles(), vec![rider.handles[2]]);
+    // both instances compute the same (correct) product concurrently
+    let cl = rt.register_codelet(apps::codelet("matmul").unwrap());
+    let t1 = rt
+        .submit(TaskSpec::new(cl.clone(), donor.handles.clone(), 24))
+        .unwrap();
+    let t2 = rt
+        .submit(TaskSpec::new(cl, rider.handles.clone(), 24))
+        .unwrap();
+    rt.wait_tasks(&[t1, t2]).unwrap();
+    let want = apps::expected(&donor).unwrap();
+    for inst in [&donor, &rider] {
+        let got = rt.snapshot(apps::output_handle(inst)).unwrap();
+        assert!(got.rel_l2_error(&want) <= 5e-3);
+    }
+    // cleanup order: riders first, then the shared inputs
+    for h in donor.owned_handles() {
+        rt.unregister_data(h).unwrap();
+    }
+    for h in rider.owned_handles() {
+        rt.unregister_data(h).unwrap();
+    }
+    for (_, h) in donated {
+        rt.unregister_data(h).unwrap();
+    }
+}
+
+#[test]
+fn identical_pipelined_requests_batch_and_verify() {
+    // identical (app, size, seed) requests fired back-to-back share
+    // input registrations inside a batch; results must stay correct and
+    // every reply must come back
+    let server = Server::start(opts("")).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    let n = 8u64;
+    for id in 0..n {
+        // same seed on purpose: all riders in a batch are identical
+        c.send_submit(submit(id, "matmul", 32, 1, None, 77)).unwrap();
+    }
+    let mut seen = BTreeSet::new();
+    for _ in 0..n {
+        match c.recv_response().unwrap() {
+            compar::serve::Response::Result(r) => {
+                assert!(r.rel_err <= 5e-3, "{}", r.rel_err);
+                seen.insert(r.id);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+    assert_eq!(seen.len(), n as usize, "every identical request answered");
+    c.quit().unwrap();
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests_ok, n);
+    assert_eq!(stats.requests_err, 0);
+    assert_eq!(stats.inflight, 0);
+}
+
+#[test]
 fn server_rejects_bad_requests_and_recovers() {
     let server = Server::start(opts("")).unwrap();
     let addr = server.local_addr().to_string();
