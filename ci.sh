@@ -27,7 +27,10 @@ cargo run --release --quiet -- loadgen \
   --clients 4 --requests 10 --app matmul --size 32 --pipeline 2 \
   --contexts alpha:2,beta:2:epsilon --ctxs alpha,beta
 
-echo "== selection-policy bench (smoke) =="
+echo "== selection-policy bench (smoke, incl. contended scenario) =="
+# --smoke also runs the contended scenario and FAILS the gate if the
+# contextual policy's regret exceeds greedy's under phased device
+# pressure (the context-aware selection guarantee)
 cargo run --release --quiet -- bench selection --smoke
 
 echo "== cluster smoke (in-process: 2 shards behind the router) =="

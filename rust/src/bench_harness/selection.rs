@@ -31,6 +31,7 @@ pub const POLICY_SET: &[SelectorKind] = &[
     SelectorKind::Calibrating,
     SelectorKind::EpsilonGreedy(0.1),
     SelectorKind::EpsilonDecayed(0.1),
+    SelectorKind::Contextual,
 ];
 
 /// Decision trace of one run.
@@ -241,6 +242,161 @@ pub fn render_comparison(traces: &[Trace]) -> String {
     t.render()
 }
 
+// -------------------------------------------------- contended scenario
+
+/// Outcome of one policy's run through the contended scenario.
+#[derive(Debug, Clone)]
+pub struct ContendedOutcome {
+    pub policy: String,
+    /// Total effective-time regret vs the phase-aware oracle (seconds).
+    pub regret: f64,
+    /// Decisions matching the phase-aware oracle.
+    pub accuracy: f64,
+}
+
+/// Idle effective time of the device variant (seconds).
+const CUDA_IDLE: f64 = 1e-3;
+/// Effective time of the device variant while the device is contended:
+/// the queue wait + interference the paper's global per-(codelet, size)
+/// models cannot represent.
+const CUDA_CONTENDED: f64 = 1e-2;
+/// The CPU variant is load-insensitive in this scenario.
+const OMP_TIME: f64 = 4e-3;
+
+fn effective_time(variant: &str, contended: bool) -> f64 {
+    match (variant, contended) {
+        ("cuda", false) => CUDA_IDLE,
+        ("cuda", true) => CUDA_CONTENDED,
+        _ => OMP_TIME,
+    }
+}
+
+/// The contended scenario: a deterministic decision-level simulation of
+/// phase-alternating device pressure. A two-arch partition serves a
+/// steady (codelet, size) stream whose device is periodically contended
+/// (in-flight work + queue depth that only the selection layer's
+/// [`RuntimeSnapshot`] exposes — dmda's deque model cannot see it, and
+/// the perf models were warmed while idle). During contended phases the
+/// device variant's *effective* time is [`CUDA_CONTENDED`]; the oracle
+/// switches to the CPU variant there. A policy that keys on (codelet,
+/// size) alone keeps choosing the device; a context-aware policy flips.
+///
+/// Decision-level on purpose: no threads, no sleeps, no wall-clock — the
+/// regret ordering is stable enough for a CI gate (`--smoke` asserts
+/// contextual ≤ greedy).
+///
+/// [`RuntimeSnapshot`]: crate::taskrt::selection::RuntimeSnapshot
+pub fn contended_compare(steps: usize) -> Vec<ContendedOutcome> {
+    [SelectorKind::Greedy, SelectorKind::Contextual]
+        .iter()
+        .map(|k| contended_run(k, steps))
+        .collect()
+}
+
+fn contended_run(kind: &SelectorKind, steps: usize) -> ContendedOutcome {
+    use std::sync::atomic::Ordering;
+
+    use crate::taskrt::data::DataRegistry;
+    use crate::taskrt::perfmodel::{PerfModels, MIN_SAMPLES};
+    use crate::taskrt::scheduler::dmda::Dmda;
+    use crate::taskrt::scheduler::{ReadyTask, SchedCtx, WorkerInfo};
+    use crate::taskrt::{AccessMode, Codelet};
+
+    let workers = vec![
+        WorkerInfo {
+            id: 0,
+            arch: Arch::Cpu,
+            mem_node: 0,
+        },
+        WorkerInfo {
+            id: 1,
+            arch: Arch::Cuda,
+            mem_node: 1,
+        },
+    ];
+    let perf = Arc::new(PerfModels::new());
+    // warmed while idle: the global models rank the device first
+    for _ in 0..MIN_SAMPLES {
+        perf.record("mmul", "cuda", 64, CUDA_IDLE);
+        perf.record("mmul", "omp", 64, OMP_TIME);
+    }
+    let ctx = SchedCtx::new(
+        workers,
+        perf,
+        Arc::new(DataRegistry::new()),
+        None,
+        kind.build(7),
+        7,
+    );
+    let codelet = Arc::new(
+        Codelet::new("mmul", "matmul", Vec::<AccessMode>::new())
+            .with_native("omp", Arch::Cpu, Arc::new(|_| Ok(())))
+            .with_native("cuda", Arch::Cuda, Arc::new(|_| Ok(()))),
+    );
+    let task = ReadyTask {
+        id: 0,
+        codelet,
+        size: 64,
+        handles: vec![],
+        selector: None,
+        priority: 0,
+        ctx: 0,
+        chosen_impl: None,
+        est_cost_ns: 0,
+    };
+
+    let mut regret = 0.0;
+    let mut hits = 0usize;
+    let mut decided = 0usize;
+    for step in 0..steps {
+        // alternate 4-step idle / 4-step contended phases
+        let contended = (step / 4) % 2 == 1;
+        let (inflight, depth): (usize, isize) = if contended { (2, 4) } else { (0, 0) };
+        ctx.running[1].store(inflight, Ordering::Relaxed);
+        ctx.pending.store(depth, Ordering::Relaxed);
+        let Some((w, i, _)) = Dmda::place(&task, &ctx, |_, _, _| 0.0) else {
+            continue;
+        };
+        let variant = task.codelet.impls[i].name.clone();
+        let effective = effective_time(&variant, contended);
+        let oracle_t = OMP_TIME.min(effective_time("cuda", contended));
+        regret += (effective - oracle_t).max(0.0);
+        if (effective - oracle_t).abs() < 1e-12 {
+            hits += 1;
+        }
+        decided += 1;
+        // close the online-learning loop with the *effective* time, so
+        // context-aware policies can learn the interference
+        let arch = ctx.workers[w].arch;
+        ctx.feedback(&task, arch, &variant, effective);
+    }
+    ContendedOutcome {
+        policy: kind.name(),
+        regret,
+        accuracy: if decided == 0 {
+            0.0
+        } else {
+            hits as f64 / decided as f64
+        },
+    }
+}
+
+/// Render the contended-scenario shoot-out.
+pub fn render_contended(outcomes: &[ContendedOutcome]) -> String {
+    let mut t = Table::new(
+        "Contended scenario (phase-alternating device pressure; lower regret is better)",
+        &["policy", "oracle accuracy", "total regret"],
+    );
+    for o in outcomes {
+        t.row(vec![
+            o.policy.clone(),
+            format!("{:.0}%", o.accuracy * 100.0),
+            crate::util::stats::fmt_time(o.regret),
+        ]);
+    }
+    t.render()
+}
+
 /// The selection-regret record (`compar bench selection --out FILE`):
 /// schema-versioned like `BENCH_serve.json`, one row per trace.
 pub fn to_json(traces: &[Trace]) -> String {
@@ -298,6 +454,19 @@ mod tests {
         assert!(!v.contains(&"cuda".to_string()), "{v:?}");
         let all = runnable_variants("matmul", true);
         assert!(all.contains(&"cuda".to_string()));
+    }
+
+    #[test]
+    fn contended_scenario_contextual_beats_greedy() {
+        let out = contended_compare(40);
+        let regret = |n: &str| out.iter().find(|o| o.policy == n).unwrap().regret;
+        assert!(
+            regret("contextual") < regret("greedy"),
+            "context-aware selection must win under phased pressure: {out:?}"
+        );
+        // greedy pays for (nearly) every contended step; contextual only
+        // for the first step of the first contended phase
+        assert!(regret("greedy") > 10.0 * regret("contextual").max(1e-9), "{out:?}");
     }
 
     #[test]

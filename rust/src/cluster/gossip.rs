@@ -2,10 +2,12 @@
 //!
 //! Every round the router **pulls** each live shard's *locally observed*
 //! perf-model bucket summaries (`perf_pull` — a `{count, mean, m2,
-//! ewma}` record per (codelet:variant, size)), then **pushes** to each
-//! shard the Welford-combined summary of every *other* shard
-//! (`perf_push`). The receiving shard installs the payload as a
-//! replaceable remote overlay
+//! ewma, updated}` record per (codelet:variant, size)), then **pushes**
+//! to each shard the combined summary of every *other* shard
+//! (`perf_push`): means/variances Welford-combine exactly, decayed
+//! means merge by recency (the shard with the fresher `updated` stamp
+//! wins, so a drifting shard's observations dominate stale ones). The
+//! receiving shard installs the payload as a replaceable remote overlay
 //! ([`crate::taskrt::PerfModels::set_remote_json`]), so:
 //!
 //! * a variant calibrated on shard A is calibrated on shard B one round

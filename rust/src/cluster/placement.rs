@@ -6,14 +6,19 @@
 //! | policy         | behaviour                                             |
 //! |----------------|-------------------------------------------------------|
 //! | `round-robin`  | rotate over the available shards                      |
-//! | `least-loaded` | fewest in-flight requests at the last health poll     |
+//! | `least-loaded` | lowest load (in-flight requests + runtime queue       |
+//! |                | depth) at the last health poll                        |
 //! | `calibrated`   | selection-aware: the shard whose perf models hold the |
 //! |                | most samples for the request's (codelet, size) — so a |
 //! |                | request lands where variant selection is already      |
-//! |                | converged; ties / cold keys fall back to round-robin  |
+//! |                | converged; equally-calibrated shards (and cold keys)  |
+//! |                | are split by load, then round-robin                   |
 //!
 //! "Available" always means healthy (last stats probe succeeded) and not
-//! drained out of the rotation.
+//! drained out of the rotation. "Load" is the same runtime-snapshot
+//! feature set the selection layer's `RuntimeSnapshot` uses inside one
+//! process (queue depth + in-flight work), reported per shard through
+//! the v4 `stats` fields and cached by the health poll.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -73,7 +78,7 @@ pub fn pick(
         PlacementKind::LeastLoaded => cands
             .iter()
             .copied()
-            .min_by_key(|&i| (shards[i].inflight(), i)),
+            .min_by_key(|&i| (shards[i].load(), i)),
         PlacementKind::Calibrated => {
             let codelet = crate::apps::app_codelet_name(app);
             let scored: Vec<(usize, usize)> = cands
@@ -83,19 +88,40 @@ pub fn pick(
             let best = scored.iter().map(|&(_, s)| s).max().unwrap_or(0);
             if best == 0 {
                 // nobody has seen this (codelet, size) yet: spread the
-                // calibration load instead of piling on shard 0
-                return Some(cands[rr.fetch_add(1, Ordering::Relaxed) % cands.len()]);
+                // calibration work toward the least-loaded shards
+                return Some(least_loaded_rr(shards, &cands, rr));
             }
-            // round-robin over the equally-best shards, or a steady
-            // workload would pin all traffic to the lowest index forever
+            // among the equally-best-calibrated shards, prefer the one
+            // with capacity to spare (same snapshot features the
+            // in-process selection layer keys on), rotating over load
+            // ties so a steady workload never pins the lowest index
             let best_set: Vec<usize> = scored
                 .into_iter()
                 .filter(|&(_, s)| s == best)
                 .map(|(i, _)| i)
                 .collect();
-            Some(best_set[rr.fetch_add(1, Ordering::Relaxed) % best_set.len()])
+            Some(least_loaded_rr(shards, &best_set, rr))
         }
     }
+}
+
+/// Least-loaded member of `set`, breaking load ties round-robin. Loads
+/// are read once into a snapshot: the health poll updates them
+/// concurrently, and re-reading between the min pass and the filter
+/// pass could leave the tie set empty.
+fn least_loaded_rr(shards: &[Arc<ShardState>], set: &[usize], rr: &AtomicUsize) -> usize {
+    let loads: Vec<(usize, u64)> = set.iter().map(|&i| (i, shards[i].load())).collect();
+    let min_load = loads
+        .iter()
+        .map(|&(_, l)| l)
+        .min()
+        .expect("set is non-empty");
+    let idle: Vec<usize> = loads
+        .into_iter()
+        .filter(|&(_, l)| l == min_load)
+        .map(|(i, _)| i)
+        .collect();
+    idle[rr.fetch_add(1, Ordering::Relaxed) % idle.len()]
 }
 
 #[cfg(test)]
@@ -156,6 +182,41 @@ mod tests {
         let rr = AtomicUsize::new(0);
         let p = pick(PlacementKind::LeastLoaded, &s, "matmul", 64, &[], &rr).unwrap();
         assert_eq!(p, 1);
+    }
+
+    #[test]
+    fn least_loaded_counts_queue_depth_not_just_inflight() {
+        let s = shards(2);
+        s[0].set_inflight(1);
+        s[1].set_inflight(2);
+        // shard 0 has fewer in flight but a deep runtime queue behind
+        // them: the v4 snapshot field flips the decision
+        s[0].set_queue_depth(10);
+        let rr = AtomicUsize::new(0);
+        let p = pick(PlacementKind::LeastLoaded, &s, "matmul", 64, &[], &rr).unwrap();
+        assert_eq!(p, 1);
+    }
+
+    #[test]
+    fn calibrated_splits_equally_calibrated_shards_by_load() {
+        use crate::taskrt::perfmodel::VariantModel;
+        use std::collections::BTreeMap;
+        let s = shards(2);
+        let mut models: BTreeMap<String, VariantModel> = BTreeMap::new();
+        let m = models.entry("mmul:omp".into()).or_default();
+        for _ in 0..4 {
+            m.record(64, 0.01);
+        }
+        // both shards equally calibrated; shard 0 is swamped
+        s[0].set_calib(models.clone());
+        s[1].set_calib(models);
+        s[0].set_inflight(6);
+        s[0].set_queue_depth(4);
+        let rr = AtomicUsize::new(0);
+        for _ in 0..3 {
+            let p = pick(PlacementKind::Calibrated, &s, "matmul", 64, &[], &rr).unwrap();
+            assert_eq!(p, 1, "equally calibrated: load decides");
+        }
     }
 
     #[test]

@@ -45,7 +45,7 @@ use crate::serve::protocol::{
 };
 use crate::serve::Client;
 use crate::taskrt::perfmodel::VariantModel;
-use crate::taskrt::SelectorKind;
+use crate::taskrt::{SelectorKind, VALID_SELECTORS};
 
 // ---------------------------------------------------------- configuration
 
@@ -88,6 +88,10 @@ pub struct ShardState {
     draining: AtomicBool,
     inflight: AtomicU64,
     requests_ok: AtomicU64,
+    /// Tasks queued inside the shard's runtime at the last health poll
+    /// (the v4 stats `queue_depth` snapshot field; placement reuses it
+    /// as a load signal alongside `inflight`).
+    queue_depth: AtomicU64,
     /// The shard's locally observed perf models, from the last gossip
     /// pull (feeds the `calibrated` placement policy and the push merge).
     calib: Mutex<BTreeMap<String, VariantModel>>,
@@ -103,6 +107,7 @@ impl ShardState {
             draining: AtomicBool::new(false),
             inflight: AtomicU64::new(0),
             requests_ok: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
             calib: Mutex::new(BTreeMap::new()),
         }
     }
@@ -120,6 +125,18 @@ impl ShardState {
         self.inflight.load(Ordering::Relaxed)
     }
 
+    /// Runtime queue depth reported by the last health poll.
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Combined load signal for placement: requests in flight plus
+    /// tasks queued inside the shard's runtime (the snapshot features
+    /// the selection layer uses, reused at the cluster level).
+    pub fn load(&self) -> u64 {
+        self.inflight() + self.queue_depth()
+    }
+
     pub(crate) fn set_healthy(&self, v: bool) {
         self.healthy.store(v, Ordering::Relaxed);
     }
@@ -132,6 +149,11 @@ impl ShardState {
     #[cfg(test)]
     pub(crate) fn set_inflight(&self, v: u64) {
         self.inflight.store(v, Ordering::Relaxed);
+    }
+
+    #[cfg(test)]
+    pub(crate) fn set_queue_depth(&self, v: u64) {
+        self.queue_depth.store(v, Ordering::Relaxed);
     }
 
     pub(crate) fn set_calib(&self, models: BTreeMap<String, VariantModel>) {
@@ -375,6 +397,7 @@ fn health_loop(shared: Arc<RouterShared>, period: Duration) {
                         shard.healthy.store(true, Ordering::Relaxed);
                         shard.inflight.store(stats.inflight, Ordering::Relaxed);
                         shard.requests_ok.store(stats.requests_ok, Ordering::Relaxed);
+                        shard.queue_depth.store(stats.queue_depth, Ordering::Relaxed);
                     }
                     Err(_) => shard.healthy.store(false, Ordering::Relaxed),
                 });
@@ -535,8 +558,7 @@ fn handle_request(sess: &Arc<Session>, line: &str) -> bool {
                         &Response::Error {
                             id: None,
                             error: format!(
-                                "unknown selection policy '{p}' (want greedy | calibrating \
-                                 | epsilon[:E] | epsilon-decayed[:E] | forced:VARIANT)"
+                                "unknown selection policy '{p}' (want {VALID_SELECTORS})"
                             ),
                         },
                     );
@@ -937,6 +959,10 @@ fn cluster_stats(router: &Arc<RouterShared>) -> StatsResp {
         requests_err: 0,
         inflight: 0,
         tasks_executed: 0,
+        queue_depth: 0,
+        busy_workers: 0,
+        total_workers: 0,
+        sessions: 0,
         ctx_tasks: BTreeMap::new(),
         ctx_variants: BTreeMap::new(),
     };
@@ -951,6 +977,10 @@ fn cluster_stats(router: &Arc<RouterShared>) -> StatsResp {
         agg.requests_err += stats.requests_err;
         agg.inflight += stats.inflight;
         agg.tasks_executed += stats.tasks_executed;
+        agg.queue_depth += stats.queue_depth;
+        agg.busy_workers += stats.busy_workers;
+        agg.total_workers += stats.total_workers;
+        agg.sessions += stats.sessions;
         for (k, v) in stats.ctx_tasks {
             agg.ctx_tasks.insert(format!("shard{i}/{k}"), v);
         }

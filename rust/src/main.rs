@@ -26,7 +26,7 @@ use compar::apps;
 use compar::bench_harness::{self, fig1, selection, table1f};
 use compar::compar as precompiler;
 use compar::runtime::Manifest;
-use compar::taskrt::{Config, Runtime, SchedPolicy, SelectorKind};
+use compar::taskrt::{Config, Runtime, SchedPolicy, SelectorKind, VALID_SELECTORS};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -77,7 +77,7 @@ fn config_from_opts(opts: &HashMap<String, String>) -> Result<Config> {
     }
     if let Some(v) = opts.get("selector") {
         cfg.selector = SelectorKind::parse(v)
-            .ok_or_else(|| anyhow!("unknown selection policy '{v}'"))?;
+            .ok_or_else(|| anyhow!("unknown selection policy '{v}' (want {VALID_SELECTORS})"))?;
     }
     if opts.contains_key("calibrate") {
         cfg.calibrate = true;
@@ -131,7 +131,7 @@ fn print_usage() {
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--shards N [--placement PL] [--no-gossip]] [--out FILE] [--no-verify]\n\
          \x20 compar list\n\
          \n\
-         Selection policies P: greedy | calibrating | epsilon[:E] | epsilon-decayed[:E] | forced:VARIANT\n\
+         Selection policies P: greedy | calibrating | epsilon[:E] | epsilon-decayed[:E] | contextual | forced:VARIANT\n\
          Shard placement PL:   round-robin | least-loaded | calibrated\n\
          Environment: COMPAR_NCPU, COMPAR_NCUDA, COMPAR_SCHED, COMPAR_SELECTOR, COMPAR_CALIBRATE,\n\
          \x20 COMPAR_TIME_MODE=modeled|wall, COMPAR_PERFMODEL_DIR, COMPAR_ARTIFACTS\n\
@@ -331,6 +331,28 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         let traces = selection::compare_policies(&pairs, tasks, manifest.as_ref())?;
         println!("{}", selection::render(&traces));
         println!("{}", selection::render_comparison(&traces));
+        // contended scenario: phase-alternating device pressure that a
+        // global (codelet, size) model cannot represent — the measure
+        // behind the context-aware selection work
+        let contended = selection::contended_compare(if smoke { 40 } else { 200 });
+        println!("{}", selection::render_contended(&contended));
+        if smoke {
+            // a missing policy name must fail the gate, not skip it
+            let regret = |name: &str| -> Result<f64> {
+                contended
+                    .iter()
+                    .find(|o| o.policy == name)
+                    .map(|o| o.regret)
+                    .ok_or_else(|| anyhow!("contended scenario ran no '{name}' policy"))
+            };
+            let (ctx_regret, greedy_regret) = (regret("contextual")?, regret("greedy")?);
+            if ctx_regret > greedy_regret {
+                bail!(
+                    "contended scenario: contextual regret {ctx_regret:.6} \
+                     exceeds greedy {greedy_regret:.6}"
+                );
+            }
+        }
         if let Some(out) = opts.get("out") {
             bench_harness::serve_bench::write_atomic(out, &(selection::to_json(&traces) + "\n"))?;
             println!("wrote {out}");
@@ -472,9 +494,9 @@ fn serve_options_from(opts: &HashMap<String, String>) -> Result<compar::serve::S
         so.sched = SchedPolicy::parse(v).ok_or_else(|| anyhow!("unknown scheduler '{v}'"))?;
     }
     if let Some(v) = opts.get("selector") {
-        so.selector = Some(
-            SelectorKind::parse(v).ok_or_else(|| anyhow!("unknown selection policy '{v}'"))?,
-        );
+        so.selector = Some(SelectorKind::parse(v).ok_or_else(|| {
+            anyhow!("unknown selection policy '{v}' (want {VALID_SELECTORS})")
+        })?);
     }
     if let Some(v) = opts.get("ncpu") {
         so.ncpu = v.parse().context("--ncpu")?;
@@ -595,7 +617,7 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
     }
     if let Some(v) = opts.get("policy") {
         if SelectorKind::parse(v).is_none() {
-            bail!("unknown selection policy '{v}' for --policy");
+            bail!("unknown selection policy '{v}' for --policy (want {VALID_SELECTORS})");
         }
         lg.policy = Some(v.clone());
     }

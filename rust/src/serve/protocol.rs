@@ -4,11 +4,16 @@
 //! (`"op"` on requests, `"type"` on responses) and carries the client's
 //! request `id` back so batched / out-of-order replies can be matched.
 //!
-//! ## v3 message set (cluster)
+//! ## v4 message set
 //!
 //! The same protocol is spoken at two levels: clients talk to either a
 //! single `compar serve` shard or to a `compar route` router, and the
-//! router talks to its shards. v3 adds the cluster operations:
+//! router talks to its shards. v4 (context-aware selection) adds the
+//! `contextual` selector name in `hello` and runtime-snapshot fields to
+//! `stats` (`queue_depth`, `busy_workers`, `total_workers`, `sessions`
+//! — the same features the selection layer's `RuntimeSnapshot`
+//! exposes, so routers can place by shard load); v3 added the cluster
+//! operations:
 //!
 //! | request `op`  | response `type` | level  | purpose                               |
 //! |---------------|-----------------|--------|---------------------------------------|
@@ -26,8 +31,9 @@
 //!
 //! Perf-model payloads are the serialized bucket summaries of
 //! [`crate::taskrt::perfmodel::models_to_json`]: per (codelet:variant,
-//! size), a fixed-size `{count, mean, m2, ewma}` record, merged across
-//! shards by Welford combination.
+//! size), a fixed-size `{count, mean, m2, ewma, updated}` record —
+//! counts/means/variances merge across shards by Welford combination,
+//! decayed means by recency (fresher `updated` wins).
 
 use std::collections::BTreeMap;
 
@@ -35,11 +41,14 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::util::json::{self, Json};
 
-/// v3: cluster ops — `perf_pull`/`perf_push` perf-model gossip on
-/// shards, `shards`/`drain_shard` rotation control on the router.
-/// (v2 added per-session selection policy in `hello`, `policy` on
-/// results, `selector` on context descriptors, `ctx_variants` in stats.)
-pub const PROTOCOL_VERSION: u64 = 3;
+/// v4: context-aware selection — the `contextual` session selector and
+/// runtime-snapshot fields in `stats` (`queue_depth`, `busy_workers`,
+/// `total_workers`, `sessions`).
+/// (v3 added cluster ops — `perf_pull`/`perf_push` perf-model gossip on
+/// shards, `shards`/`drain_shard` rotation control on the router; v2
+/// added per-session selection policy in `hello`, `policy` on results,
+/// `selector` on context descriptors, `ctx_variants` in stats.)
+pub const PROTOCOL_VERSION: u64 = 4;
 
 // --------------------------------------------------------------- requests
 
@@ -140,6 +149,16 @@ pub struct StatsResp {
     /// Requests admitted but not yet completed.
     pub inflight: u64,
     pub tasks_executed: u64,
+    /// v4 — runtime-snapshot features (the serve-side view of the
+    /// selection layer's `RuntimeSnapshot`):
+    /// tasks queued in the runtime's schedulers, not yet popped.
+    pub queue_depth: u64,
+    /// Workers currently executing a task.
+    pub busy_workers: u64,
+    /// Workers in the machine topology.
+    pub total_workers: u64,
+    /// Live client sessions (the co-tenant count).
+    pub sessions: u64,
     /// Tasks executed per context name.
     pub ctx_tasks: BTreeMap<String, u64>,
     /// Per-context selection histogram: context name -> variant name ->
@@ -307,6 +326,10 @@ pub fn encode_response(r: &Response) -> String {
                 ("requests_err", n(q.requests_err as f64)),
                 ("inflight", n(q.inflight as f64)),
                 ("tasks_executed", n(q.tasks_executed as f64)),
+                ("queue_depth", n(q.queue_depth as f64)),
+                ("busy_workers", n(q.busy_workers as f64)),
+                ("total_workers", n(q.total_workers as f64)),
+                ("sessions", n(q.sessions as f64)),
                 ("ctx_tasks", Json::Obj(ctx_tasks)),
                 ("ctx_variants", Json::Obj(ctx_variants)),
             ])
@@ -511,6 +534,11 @@ pub fn decode_response(line: &str) -> Result<Response> {
                 requests_err: get_u64(&j, "requests_err")?,
                 inflight: get_u64(&j, "inflight")?,
                 tasks_executed: get_u64(&j, "tasks_executed")?,
+                // v4 snapshot fields: tolerant decode (0 when absent)
+                queue_depth: get_u64(&j, "queue_depth").unwrap_or(0),
+                busy_workers: get_u64(&j, "busy_workers").unwrap_or(0),
+                total_workers: get_u64(&j, "total_workers").unwrap_or(0),
+                sessions: get_u64(&j, "sessions").unwrap_or(0),
                 ctx_tasks,
                 ctx_variants,
             })
@@ -715,6 +743,10 @@ mod tests {
             requests_err: 2,
             inflight: 3,
             tasks_executed: 250,
+            queue_depth: 7,
+            busy_workers: 4,
+            total_workers: 5,
+            sessions: 9,
             ctx_tasks,
             ctx_variants,
         }));
@@ -730,6 +762,25 @@ mod tests {
         });
         roundtrip_resp(Response::Shutdown);
         roundtrip_resp(Response::Bye);
+    }
+
+    #[test]
+    fn stats_without_snapshot_fields_decode_as_zero() {
+        // pre-v4 peers omit the runtime-snapshot fields; decode them as
+        // zero rather than failing the whole stats reply
+        let line = r#"{"ok":true,"type":"stats","uptime":1,"requests_ok":2,
+            "requests_err":0,"inflight":0,"tasks_executed":4}"#
+            .replace('\n', "");
+        match decode_response(&line).unwrap() {
+            Response::Stats(s) => {
+                assert_eq!(s.queue_depth, 0);
+                assert_eq!(s.busy_workers, 0);
+                assert_eq!(s.total_workers, 0);
+                assert_eq!(s.sessions, 0);
+                assert_eq!(s.tasks_executed, 4);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::apps;
 use crate::runtime::Manifest;
 use crate::taskrt::{
     Arch, Config, CtxId, Runtime, SchedPolicy, SelectionPolicy, SelectorKind, TaskId, TaskSpec,
+    VALID_SELECTORS,
 };
 
 // ----------------------------------------------------------- configuration
@@ -67,10 +68,9 @@ pub fn parse_contexts(spec: &str) -> Result<Vec<CtxSpec>> {
             bail!("bad context spec '{part}' (empty name or zero workers)");
         }
         let selector = match fields.get(2) {
-            Some(s) => Some(
-                SelectorKind::parse(s)
-                    .ok_or_else(|| anyhow!("unknown selection policy '{s}' in '{part}'"))?,
-            ),
+            Some(s) => Some(SelectorKind::parse(s).ok_or_else(|| {
+                anyhow!("unknown selection policy '{s}' in '{part}' (want {VALID_SELECTORS})")
+            })?),
             None => None,
         };
         let lower = name.to_ascii_lowercase();
@@ -355,6 +355,12 @@ impl Shared {
                 .metrics()
                 .tasks_executed
                 .load(Ordering::Relaxed) as u64,
+            // v4: the runtime-snapshot features (what the selection
+            // layer's RuntimeSnapshot sees, aggregated server-wide)
+            queue_depth: self.rt.queued_tasks() as u64,
+            busy_workers: self.rt.busy_workers() as u64,
+            total_workers: self.rt.worker_count() as u64,
+            sessions: self.rt.tenants() as u64,
             ctx_tasks,
             ctx_variants,
         }
@@ -616,6 +622,9 @@ fn session_loop(shared: Arc<Shared>, stream: TcpStream, sid: u64) {
         Ok(w) => Arc::new(Mutex::new(w)),
         Err(_) => return,
     };
+    // count the session into the runtime's co-tenant gauge: selection
+    // snapshots (and v4 stats) see how many clients share the machine
+    shared.rt.tenant_started();
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     let mut sess = SessionState::default();
@@ -644,6 +653,7 @@ fn session_loop(shared: Arc<Shared>, stream: TcpStream, sid: u64) {
             Err(_) => break,
         }
     }
+    shared.rt.tenant_finished();
 }
 
 /// Handle one request line; returns false when the session should close.
@@ -683,9 +693,7 @@ fn handle_request(
                             &Response::Error {
                                 id: None,
                                 error: format!(
-                                    "unknown selection policy '{p}' (want greedy | \
-                                     calibrating | epsilon[:E] | epsilon-decayed[:E] | \
-                                     forced:VARIANT)"
+                                    "unknown selection policy '{p}' (want {VALID_SELECTORS})"
                                 ),
                             },
                         );

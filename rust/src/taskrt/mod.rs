@@ -28,7 +28,12 @@
 //! [`Runtime::create_context_with`]), tasks may override it per-task
 //! ([`TaskSpec::with_selector`] / [`TaskSpec::with_variant`]), and
 //! workers feed measured execution times back through
-//! [`SelectionPolicy::feedback`] — the online-learning loop.
+//! [`SelectionPolicy::feedback`] — the online-learning loop. Every
+//! policy consultation carries a first-class [`SelectionQuery`]: the
+//! (task, arch) pair plus a [`RuntimeSnapshot`] of queue depth, worker
+//! occupancy, operand residency and co-tenancy, so context-aware
+//! policies (the `contextual` selector) can condition on runtime state,
+//! not just problem shape.
 
 pub mod codelet;
 pub mod config;
@@ -49,7 +54,10 @@ pub use data::{AccessMode, DataRegistry, HandleId, MAIN_MEMORY};
 pub use device::Arch;
 pub use metrics::{Metrics, TaskResult};
 pub use perfmodel::PerfModels;
-pub use selection::{SelectionPolicy, SelectorKind, VariantChoice};
+pub use selection::{
+    RuntimeSnapshot, SelectionPolicy, SelectionQuery, SelectorKind, VariantChoice,
+    VALID_SELECTORS,
+};
 pub use task::{TaskId, TaskSpec, TaskState};
 
 use std::collections::HashMap;
@@ -111,6 +119,10 @@ pub(crate) struct Inner {
     /// Current context of each worker (indexed by global worker id).
     pub worker_ctx: Vec<AtomicUsize>,
     pub perf: Arc<PerfModels>,
+    /// Live serve-layer sessions sharing this runtime (the co-tenant
+    /// count selection snapshots report); shared into every context's
+    /// `SchedCtx` so policies can observe it.
+    pub tenants: Arc<AtomicUsize>,
     pub metrics: Metrics,
     pub noise: device::NoiseSource,
     pub manifest: Option<Arc<Manifest>>,
@@ -146,6 +158,7 @@ impl Inner {
             self.config.seed ^ salt,
         );
         ctx.data_aware = self.config.data_aware;
+        ctx.tenants = self.tenants.clone();
         ctx.set_members(members);
         ContextSlot {
             name: name.to_string(),
@@ -230,6 +243,7 @@ impl Runtime {
             contexts: RwLock::new(Vec::new()),
             worker_ctx,
             perf,
+            tenants: Arc::new(AtomicUsize::new(0)),
             metrics: Metrics::new(),
             noise,
             manifest,
@@ -588,6 +602,60 @@ impl Runtime {
 
     pub fn task_state(&self, id: TaskId) -> Option<TaskState> {
         self.inner.tasks.lock().unwrap().state(id)
+    }
+
+    // -------------------------------------------------------- snapshots
+
+    /// Register a serve-layer session: the co-tenant count feeds every
+    /// context's [`RuntimeSnapshot`]. Pair with
+    /// [`Runtime::tenant_finished`].
+    pub fn tenant_started(&self) {
+        self.inner.tenants.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Unregister a serve-layer session (see [`Runtime::tenant_started`]).
+    pub fn tenant_finished(&self) {
+        let _ = self
+            .inner
+            .tenants
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(1))
+            });
+    }
+
+    /// Live serve-layer sessions sharing this runtime.
+    pub fn tenants(&self) -> usize {
+        self.inner.tenants.load(Ordering::Relaxed)
+    }
+
+    /// Workers currently executing a task (occupancy across all
+    /// scheduling contexts — each worker executes from exactly one).
+    pub fn busy_workers(&self) -> usize {
+        let contexts = self.inner.contexts.read().unwrap();
+        contexts
+            .iter()
+            .map(|c| {
+                c.ctx
+                    .running
+                    .iter()
+                    .map(|r| r.load(Ordering::Relaxed).min(1))
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// Total workers in the machine topology.
+    pub fn worker_count(&self) -> usize {
+        self.inner.workers.len()
+    }
+
+    /// Tasks queued (pushed, not yet popped) across every context.
+    pub fn queued_tasks(&self) -> usize {
+        let contexts = self.inner.contexts.read().unwrap();
+        contexts
+            .iter()
+            .map(|c| c.ctx.pending.load(Ordering::Relaxed).max(0) as usize)
+            .sum()
     }
 
     // ---------------------------------------------------------- metrics

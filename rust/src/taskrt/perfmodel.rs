@@ -20,9 +20,11 @@
 //!   `perf_push` ([`PerfModels::set_remote_json`]). Replacing (rather
 //!   than accumulating) the overlay keeps gossip idempotent — repeated
 //!   rounds can never double-count a sample — and because each bucket
-//!   ships as a fixed-size summary (count, mean, M2, ewma), a gossip
-//!   message is bounded by the number of (codelet, variant, size)
-//!   triples regardless of traffic volume.
+//!   ships as a fixed-size summary (count, mean, M2, ewma, updated), a
+//!   gossip message is bounded by the number of (codelet, variant, size)
+//!   triples regardless of traffic volume. Decayed means merge by
+//!   *recency* (the fresher [`Bucket::updated`] stamp wins), so a
+//!   drifting shard's observations dominate stale ones.
 //!
 //! Every query (estimate / calibration status / sample counts) answers
 //! from the pairwise Welford-combine of both layers, so a variant
@@ -57,6 +59,18 @@ pub struct Bucket {
     /// Exponentially-decayed mean (weight [`EWMA_ALPHA`] per sample);
     /// policies opt in via [`VariantModel::estimate_recent`].
     pub ewma: f64,
+    /// Unix seconds of the last recorded observation — what
+    /// [`Bucket::merge`] uses to weight decayed means by *recency*
+    /// (gossip: a drifting shard's fresh observations must dominate a
+    /// stale count-heavy history).
+    pub updated: f64,
+}
+
+fn unix_now() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
 }
 
 impl Bucket {
@@ -70,6 +84,7 @@ impl Bucket {
         } else {
             self.ewma + EWMA_ALPHA * (t - self.ewma)
         };
+        self.updated = unix_now();
     }
 
     pub fn stddev(&self) -> f64 {
@@ -84,7 +99,12 @@ impl Bucket {
     /// parallel-Welford update): the result is bit-for-bit the same
     /// count/mean and the same variance as if both sample streams had
     /// been recorded into a single bucket. The decayed means (which are
-    /// order-dependent by construction) combine count-weighted.
+    /// order-dependent by construction) combine by *recency*: the side
+    /// with the fresher [`Bucket::updated`] stamp wins outright, so a
+    /// drifting shard's recent observations dominate another shard's
+    /// stale count-heavy history (exact timestamp ties — e.g. streams
+    /// split from one recording process — blend count-weighted). Either
+    /// merge order yields the same result.
     pub fn merge(&mut self, other: &Bucket) {
         if other.count == 0 {
             return;
@@ -99,7 +119,14 @@ impl Bucket {
         let delta = other.mean - self.mean;
         self.mean += delta * nb / n;
         self.m2 += other.m2 + delta * delta * na * nb / n;
-        self.ewma = (self.ewma * na + other.ewma * nb) / n;
+        self.ewma = if other.updated > self.updated {
+            other.ewma
+        } else if self.updated > other.updated {
+            self.ewma
+        } else {
+            (self.ewma * na + other.ewma * nb) / n
+        };
+        self.updated = self.updated.max(other.updated);
         self.count += other.count;
     }
 }
@@ -186,7 +213,7 @@ impl VariantModel {
 // ----------------------------------------------------- (de)serialization
 
 /// Serialize a model map (the gossip wire form and the on-disk form):
-/// `{ "codelet:variant": { "SIZE": {count, mean, m2, ewma} } }`.
+/// `{ "codelet:variant": { "SIZE": {count, mean, m2, ewma, updated} } }`.
 pub fn models_to_json(models: &BTreeMap<String, VariantModel>) -> Json {
     let mut obj = BTreeMap::new();
     for (k, m) in models {
@@ -197,6 +224,7 @@ pub fn models_to_json(models: &BTreeMap<String, VariantModel>) -> Json {
             rec.insert("mean".into(), Json::Num(b.mean));
             rec.insert("m2".into(), Json::Num(b.m2));
             rec.insert("ewma".into(), Json::Num(b.ewma));
+            rec.insert("updated".into(), Json::Num(b.updated));
             buckets.insert(size.to_string(), Json::Obj(rec));
         }
         obj.insert(k.clone(), Json::Obj(buckets));
@@ -222,6 +250,8 @@ pub fn parse_models(v: &Json) -> BTreeMap<String, VariantModel> {
                         b.mean = mean;
                         b.m2 = rec.get("m2").and_then(Json::as_f64).unwrap_or(0.0);
                         b.ewma = rec.get("ewma").and_then(Json::as_f64).unwrap_or(mean);
+                        // pre-recency records count as infinitely stale
+                        b.updated = rec.get("updated").and_then(Json::as_f64).unwrap_or(0.0);
                     }
                 }
             }
@@ -450,6 +480,73 @@ mod tests {
         let mut e = Bucket::default();
         e.merge(&whole);
         assert_eq!(e, whole);
+    }
+
+    #[test]
+    fn merge_prefers_fresher_decayed_mean_in_either_order() {
+        // "stale" shard: a long, count-heavy history that converged at
+        // 1 ms long ago; "fresh" shard: few recent samples at 100 ms
+        // (post-drift). The merged decayed mean must be the fresh one —
+        // count-weighting would bury the drift under the stale history.
+        let mut stale = Bucket::default();
+        for _ in 0..100 {
+            stale.record(1e-3);
+        }
+        stale.updated = 1_000.0;
+        let mut fresh = Bucket::default();
+        for _ in 0..3 {
+            fresh.record(0.1);
+        }
+        fresh.updated = 2_000.0;
+
+        let mut ab = stale.clone();
+        ab.merge(&fresh);
+        let mut ba = fresh.clone();
+        ba.merge(&stale);
+        for (label, m) in [("stale<-fresh", &ab), ("fresh<-stale", &ba)] {
+            assert!(
+                (m.ewma - fresh.ewma).abs() < 1e-12,
+                "{label}: decayed mean {} should be the fresh {}",
+                m.ewma,
+                fresh.ewma
+            );
+            assert_eq!(m.updated, 2_000.0, "{label}");
+            // the Welford layer still combines exactly
+            assert_eq!(m.count, 103, "{label}");
+        }
+        assert!((ab.mean - ba.mean).abs() < 1e-12, "merge is order-independent");
+        // equal timestamps (one stream split in two) blend count-weighted
+        let mut a = Bucket {
+            count: 1,
+            mean: 1.0,
+            ewma: 1.0,
+            updated: 5.0,
+            ..Bucket::default()
+        };
+        let b = Bucket {
+            count: 3,
+            mean: 2.0,
+            ewma: 2.0,
+            updated: 5.0,
+            ..Bucket::default()
+        };
+        a.merge(&b);
+        assert!((a.ewma - 1.75).abs() < 1e-12, "tie blends by count: {}", a.ewma);
+    }
+
+    #[test]
+    fn bucket_timestamp_survives_the_wire() {
+        let mut m: BTreeMap<String, VariantModel> = BTreeMap::new();
+        m.entry("c:x".into()).or_default().record(8, 1.0);
+        let stamped = m["c:x"].buckets[&8].updated;
+        assert!(stamped > 0.0, "record() must stamp recency");
+        let back = parse_models(&models_to_json(&m));
+        assert_eq!(back["c:x"].buckets[&8].updated, stamped);
+        // records without a stamp (pre-recency wire format) parse as
+        // infinitely stale rather than failing
+        let legacy = json::parse(r#"{"c:x":{"8":{"count":3,"mean":0.5}}}"#).unwrap();
+        let parsed = parse_models(&legacy);
+        assert_eq!(parsed["c:x"].buckets[&8].updated, 0.0);
     }
 
     #[test]

@@ -18,7 +18,7 @@ pub mod heft;
 pub mod random;
 pub mod ws;
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicIsize, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -26,7 +26,7 @@ use super::codelet::{Codelet, ImplKind};
 use super::data::{AccessMode, DataRegistry, HandleId};
 use super::device::{transfer_model, Arch};
 use super::perfmodel::PerfModels;
-use super::selection::{SelectionPolicy, VariantChoice};
+use super::selection::{RuntimeSnapshot, SelectionPolicy, SelectionQuery, VariantChoice};
 use super::task::TaskId;
 use crate::runtime::Manifest;
 use crate::util::rng::Rng;
@@ -80,6 +80,23 @@ pub struct SchedCtx {
     pub data_aware: bool,
     /// Modeled ns of work queued per worker (the "deque model").
     pub queued_ns: Vec<AtomicU64>,
+    /// Tasks pushed to this context's scheduler and not yet popped
+    /// (maintained by the worker layer; feeds [`RuntimeSnapshot`]).
+    /// Signed and clamped at read: the increment lands *after* the
+    /// push so a push-time selection query never counts the task being
+    /// placed as pressure (idle must stay observable), and a racing
+    /// pop may therefore transiently drive the counter to -1.
+    ///
+    /// [`RuntimeSnapshot`]: super::selection::RuntimeSnapshot
+    pub pending: AtomicIsize,
+    /// 1 while the worker is executing a task from this context
+    /// (indexed by global worker id; feeds the snapshot's in-flight
+    /// counts and occupancy).
+    pub running: Vec<AtomicUsize>,
+    /// Serve-layer sessions currently sharing the runtime (co-tenant
+    /// count; the serve layer maintains it via
+    /// [`crate::taskrt::Runtime::tenant_started`]).
+    pub tenants: Arc<AtomicUsize>,
     /// Round-robin cursor for calibration-phase worker placement.
     pub rr: AtomicUsize,
     pub rng: Mutex<Rng>,
@@ -95,6 +112,7 @@ impl SchedCtx {
         seed: u64,
     ) -> SchedCtx {
         let queued_ns = (0..workers.len()).map(|_| AtomicU64::new(0)).collect();
+        let running = (0..workers.len()).map(|_| AtomicUsize::new(0)).collect();
         let members = (0..workers.len()).collect();
         SchedCtx {
             workers,
@@ -105,6 +123,9 @@ impl SchedCtx {
             selector,
             data_aware: true,
             queued_ns,
+            pending: AtomicIsize::new(0),
+            running,
+            tenants: Arc::new(AtomicUsize::new(0)),
             rr: AtomicUsize::new(0),
             rng: Mutex::new(Rng::new(seed)),
         }
@@ -187,23 +208,39 @@ impl SchedCtx {
         }
     }
 
+    /// Build the [`SelectionQuery`] for one (task, arch) decision:
+    /// codelet, size and arch plus a snapshot of this context's runtime
+    /// state (queue depth, occupancy, backlog, co-tenancy).
+    pub fn query<'a>(&'a self, task: &'a ReadyTask, arch: Arch) -> SelectionQuery<'a> {
+        SelectionQuery::capture(task, arch, self)
+    }
+
     /// THE selection entry point: every layer (schedulers, workers)
-    /// resolves "which implementation runs on `arch`" through here.
+    /// resolves "which implementation runs on `arch`" through here, and
+    /// every resolution carries a full [`SelectionQuery`].
     pub fn select_impl(&self, task: &ReadyTask, arch: Arch) -> Option<VariantChoice> {
-        self.policy_for(task).select(task, arch, self)
+        let q = self.query(task, arch);
+        self.policy_for(task).select(&q)
     }
 
     /// Side-effect-free probe: can the governing policy serve `task` on
-    /// `arch`? Used by worker placement, stealing and submit validation.
+    /// `arch`? Used by worker placement, stealing and submit validation
+    /// — all tight loops, so the probe query carries an empty snapshot
+    /// instead of paying a capture per scan item (eligibility is
+    /// load-independent by contract; see
+    /// [`SelectionPolicy::can_serve`]).
     pub fn can_run(&self, task: &ReadyTask, arch: Arch) -> bool {
-        self.policy_for(task).can_serve(task, arch, self)
+        let q = SelectionQuery::with_snapshot(task, arch, self, RuntimeSnapshot::default());
+        self.policy_for(task).can_serve(&q)
     }
 
     /// Report a measured execution back to the governing policy (the
     /// online-learning loop; shared [`PerfModels`] are fed separately).
-    pub fn feedback(&self, task: &ReadyTask, variant: &str, secs: f64) {
-        self.policy_for(task)
-            .feedback(&task.codelet.name, variant, task.size, secs);
+    /// The query re-captures the runtime snapshot, so context-aware
+    /// policies learn which load band the measurement was taken under.
+    pub fn feedback(&self, task: &ReadyTask, arch: Arch, variant: &str, secs: f64) {
+        let q = self.query(task, arch);
+        self.policy_for(task).feedback(&q, variant, secs);
     }
 
     /// Modeled bytes that would move if `task` ran on `worker`.

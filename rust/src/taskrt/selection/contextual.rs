@@ -1,0 +1,384 @@
+//! The `contextual` policy: context-aware selection over the full
+//! [`SelectionQuery`], the capability the `SelectionQuery` redesign
+//! exists to enable.
+//!
+//! Every other shipped policy keys its decision on (codelet, size)
+//! alone; this one also reads the [`RuntimeSnapshot`]:
+//!
+//! * **Banded learning** — measured execution times are bucketed by
+//!   (variant, size band, load band). Interference is real: a variant
+//!   that wins on an idle machine can lose badly when its device is
+//!   contended, and a single global mean can never represent both
+//!   phases. Each band keeps its own exponentially-decayed mean
+//!   ([`EWMA_ALPHA`]), so the ranking under load is learned from
+//!   observations made under load.
+//! * **Transfer adjustment** — the score of every candidate is its
+//!   banded estimate *plus* the modeled cost of moving the task's
+//!   non-resident operand bytes to the queried architecture
+//!   ([`SelectionQuery::transfer_penalty_secs`]). A GPU variant loses
+//!   to a CPU variant when the inputs are CPU-resident and small
+//!   enough that the PCIe round trip dominates.
+//! * **Queue adjustment** — the modeled backlog already queued on the
+//!   queried architecture ([`RuntimeSnapshot::queued_secs`]) is added
+//!   too, so a deep device queue pushes selection toward the idle
+//!   architecture even under schedulers that do no completion-time
+//!   modeling of their own. (Under dmda the backlog is also counted at
+//!   placement; the double weight is deliberate — it steers *harder*
+//!   away from contended devices, which is the conservative direction.)
+//! * **Hint priors per band** — a pre-compiler `prefer()` hint
+//!   ([`crate::taskrt::Codelet::with_hint`]) discounts the hinted
+//!   variant by [`HINT_PRIOR`] in every band that has no observations
+//!   yet, so the component author's expected winner is favored until
+//!   the band has real data (and ignored as soon as it does).
+//!
+//! Forced pins are unaffected: a per-task [`super::Forced`] override
+//! still wins over any snapshot state, because the override replaces
+//! this policy entirely ([`SchedCtx::policy_for`]).
+//!
+//! [`RuntimeSnapshot`]: super::RuntimeSnapshot
+//! [`SchedCtx::policy_for`]: crate::taskrt::scheduler::SchedCtx::policy_for
+
+use std::collections::BTreeMap;
+use std::sync::atomic::AtomicUsize;
+use std::sync::Mutex;
+
+use super::query::SelectionQuery;
+use super::{best_by, explore_pool, SelectionPolicy, VariantChoice};
+use crate::taskrt::perfmodel::{key, EWMA_ALPHA};
+
+/// Multiplier applied to the hinted variant's score in bands without
+/// observations: the author's `prefer()` expectation breaks near-ties
+/// until measured data exists for the band.
+pub const HINT_PRIOR: f64 = 0.9;
+
+/// Log2 size band: observations at 48 and 63 share a band, 64 starts
+/// the next one. Coarse on purpose — the bands only need to separate
+/// "small" from "large", the per-size models stay in [`PerfModels`].
+///
+/// [`PerfModels`]: crate::taskrt::PerfModels
+pub fn size_band(size: usize) -> u8 {
+    (usize::BITS - size.max(1).leading_zeros()) as u8
+}
+
+/// One (variant, size band, load band) observation bucket.
+#[derive(Debug, Clone, Copy, Default)]
+struct BandBucket {
+    count: u64,
+    ewma: f64,
+}
+
+impl BandBucket {
+    fn record(&mut self, secs: f64) {
+        self.count += 1;
+        self.ewma = if self.count == 1 {
+            secs
+        } else {
+            self.ewma + EWMA_ALPHA * (secs - self.ewma)
+        };
+    }
+}
+
+/// Context-aware selection: banded observations + transfer- and
+/// queue-adjusted scoring (see the module docs).
+pub struct Contextual {
+    rr: AtomicUsize,
+    /// ("codelet:variant", size band, load band) -> decayed mean.
+    buckets: Mutex<BTreeMap<(String, u8, u8), BandBucket>>,
+}
+
+impl Contextual {
+    pub fn new() -> Contextual {
+        Contextual {
+            rr: AtomicUsize::new(0),
+            buckets: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Observations recorded for (codelet, variant) in a band
+    /// (diagnostics / tests).
+    pub fn band_observations(
+        &self,
+        codelet: &str,
+        variant: &str,
+        size: usize,
+        load_band: u8,
+    ) -> u64 {
+        self.buckets
+            .lock()
+            .unwrap()
+            .get(&(key(codelet, variant), size_band(size), load_band))
+            .map(|b| b.count)
+            .unwrap_or(0)
+    }
+
+    /// Banded execution estimate for implementation `i`: the band's
+    /// decayed mean when the band has data, else the drift-tracking
+    /// global estimate (discounted by [`HINT_PRIOR`] for the hinted
+    /// variant while the band is cold).
+    fn band_estimate(&self, q: &SelectionQuery, i: usize) -> Option<f64> {
+        let band = (
+            key(q.codelet_name(), q.variant_name(i)),
+            size_band(q.size()),
+            q.snapshot.load_band(),
+        );
+        if let Some(b) = self.buckets.lock().unwrap().get(&band) {
+            if b.count > 0 {
+                return Some(b.ewma);
+            }
+        }
+        let base = q.recent_estimate(i).or_else(|| q.exec_estimate(i))?;
+        let hinted = q.task.codelet.hint.as_deref() == Some(q.variant_name(i));
+        Some(if hinted { base * HINT_PRIOR } else { base })
+    }
+
+    /// The transfer- and queue-adjusted score the ranking minimizes.
+    fn adjusted(&self, q: &SelectionQuery, i: usize, transfer: f64) -> Option<f64> {
+        self.band_estimate(q, i)
+            .map(|est| est + transfer + q.snapshot.queued_secs)
+    }
+}
+
+impl Default for Contextual {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SelectionPolicy for Contextual {
+    fn name(&self) -> String {
+        "contextual".into()
+    }
+
+    fn select(&self, q: &SelectionQuery) -> Option<VariantChoice> {
+        let eligible = q.eligible();
+        if eligible.is_empty() {
+            return None;
+        }
+        // cold start behaves exactly like Greedy: explore variants the
+        // global models know nothing about (hinted variant first)
+        let unknown: Vec<usize> = eligible
+            .iter()
+            .copied()
+            .filter(|&i| q.exec_estimate(i).is_none())
+            .collect();
+        if let Some(c) = explore_pool(q, &unknown, &self.rr) {
+            return Some(c);
+        }
+        // the transfer term is per (task, arch), not per variant:
+        // compute it once outside the ranking closure
+        let transfer = q.transfer_penalty_secs();
+        best_by(&eligible, |i| self.adjusted(q, i, transfer))
+    }
+
+    fn feedback(&self, q: &SelectionQuery, variant: &str, secs: f64) {
+        let band = (
+            key(q.codelet_name(), variant),
+            size_band(q.size()),
+            q.snapshot.load_band(),
+        );
+        self.buckets
+            .lock()
+            .unwrap()
+            .entry(band)
+            .or_default()
+            .record(secs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    use super::super::{Forced, Greedy};
+    use super::*;
+    use crate::taskrt::codelet::Codelet;
+    use crate::taskrt::data::DataRegistry;
+    use crate::taskrt::device::Arch;
+    use crate::taskrt::perfmodel::{PerfModels, MIN_SAMPLES};
+    use crate::taskrt::scheduler::dmda::Dmda;
+    use crate::taskrt::scheduler::{ReadyTask, SchedCtx, WorkerInfo};
+
+    /// One CPU worker (node 0) + one CUDA-analog worker (node 1), perf
+    /// models warmed so the device variant wins when idle.
+    fn two_arch_ctx(
+        selector: Arc<dyn crate::taskrt::selection::SelectionPolicy>,
+    ) -> SchedCtx {
+        let workers = vec![
+            WorkerInfo {
+                id: 0,
+                arch: Arch::Cpu,
+                mem_node: 0,
+            },
+            WorkerInfo {
+                id: 1,
+                arch: Arch::Cuda,
+                mem_node: 1,
+            },
+        ];
+        let perf = Arc::new(PerfModels::new());
+        for _ in 0..MIN_SAMPLES {
+            perf.record("c", "cuda", 64, 1e-3);
+            perf.record("c", "omp", 64, 5e-3);
+        }
+        SchedCtx::new(
+            workers,
+            perf,
+            Arc::new(DataRegistry::new()),
+            None,
+            selector,
+            7,
+        )
+    }
+
+    fn cross_arch_task(hint: Option<&str>) -> ReadyTask {
+        let mut cl = Codelet::new("c", "sort", vec![])
+            .with_native("omp", Arch::Cpu, Arc::new(|_| Ok(())))
+            .with_native("cuda", Arch::Cuda, Arc::new(|_| Ok(())));
+        if let Some(h) = hint {
+            cl = cl.with_hint(h);
+        }
+        ReadyTask {
+            id: 0,
+            codelet: Arc::new(cl),
+            size: 64,
+            handles: vec![],
+            selector: None,
+            priority: 0,
+            ctx: 0,
+            chosen_impl: None,
+            est_cost_ns: 0,
+        }
+    }
+
+    fn pressure(ctx: &SchedCtx, inflight: usize, depth: isize) {
+        ctx.running[1].store(inflight, Ordering::Relaxed);
+        ctx.pending.store(depth, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn banded_interference_flips_the_placement_greedy_does_not() {
+        let p = Arc::new(Contextual::new());
+        let ctx = two_arch_ctx(p.clone());
+        let task = cross_arch_task(None);
+
+        // idle: dmda places the device variant (globally fastest)
+        let (_, i, _) = Dmda::place(&task, &ctx, |_, _, _| 0.0).unwrap();
+        assert_eq!(task.codelet.impls[i].name, "cuda");
+
+        // contended phase: the device variant is observed 50x slower
+        // (interference); the observation lands in the loaded band
+        pressure(&ctx, 2, 4);
+        p.feedback(&ctx.query(&task, Arch::Cuda), "cuda", 5e-2);
+        p.feedback(&ctx.query(&task, Arch::Cpu), "omp", 5e-3);
+        assert_eq!(p.band_observations("c", "cuda", 64, 2), 1);
+
+        // still contended: the banded ranking now prefers the CPU
+        // variant — dmda sees nothing (its deque model ignores the
+        // in-flight counters), the flip is the policy's alone
+        let (_, i, _) = Dmda::place(&task, &ctx, |_, _, _| 0.0).unwrap();
+        assert_eq!(task.codelet.impls[i].name, "omp", "contextual flips under load");
+
+        // ...whereas Greedy in the identical state keeps the device
+        let greedy_ctx = two_arch_ctx(Arc::new(Greedy::new()));
+        pressure(&greedy_ctx, 2, 4);
+        let (_, i, _) = Dmda::place(&task, &greedy_ctx, |_, _, _| 0.0).unwrap();
+        assert_eq!(task.codelet.impls[i].name, "cuda", "greedy cannot see the load");
+
+        // back to idle: the idle band is untouched, the device wins again
+        pressure(&ctx, 0, 0);
+        let (_, i, _) = Dmda::place(&task, &ctx, |_, _, _| 0.0).unwrap();
+        assert_eq!(task.codelet.impls[i].name, "cuda", "idle band unaffected");
+    }
+
+    #[test]
+    fn queue_backlog_penalizes_the_contended_arch_without_banded_data() {
+        let p = Contextual::new();
+        let ctx = two_arch_ctx(Arc::new(Greedy::new()));
+        let task = cross_arch_task(None);
+
+        // idle: the device estimate is the better one
+        let cuda = p.select(&ctx.query(&task, Arch::Cuda)).unwrap();
+        let cpu = p.select(&ctx.query(&task, Arch::Cpu)).unwrap();
+        assert!(cuda.est.unwrap() < cpu.est.unwrap());
+
+        // 50 ms of modeled backlog on the device: the adjusted device
+        // estimate now loses, with zero banded observations
+        ctx.charge(1, 50_000_000);
+        let cuda = p.select(&ctx.query(&task, Arch::Cuda)).unwrap();
+        let cpu = p.select(&ctx.query(&task, Arch::Cpu)).unwrap();
+        assert!(
+            cuda.est.unwrap() > cpu.est.unwrap(),
+            "queued backlog must inflate the device score"
+        );
+    }
+
+    #[test]
+    fn forced_pin_wins_over_any_snapshot_state() {
+        // regression: a per-task Forced override is a different policy,
+        // so no amount of snapshot pressure may override the pin
+        let ctx = two_arch_ctx(Arc::new(Contextual::new()));
+        let task = cross_arch_task(None);
+        pressure(&ctx, 8, 64);
+        ctx.charge(1, 500_000_000);
+        let pin = Forced::new("cuda");
+        let c = pin.select(&ctx.query(&task, Arch::Cuda)).unwrap();
+        assert_eq!(task.codelet.impls[c.impl_idx].name, "cuda");
+        assert!(pin.can_serve(&ctx.query(&task, Arch::Cuda)));
+    }
+
+    #[test]
+    fn hint_prior_breaks_near_ties_in_cold_bands_only() {
+        let workers = vec![WorkerInfo {
+            id: 0,
+            arch: Arch::Cpu,
+            mem_node: 0,
+        }];
+        let perf = Arc::new(PerfModels::new());
+        for _ in 0..MIN_SAMPLES {
+            perf.record("c", "fast", 64, 0.95e-3);
+            perf.record("c", "hinted", 64, 1.0e-3);
+        }
+        let ctx = SchedCtx::new(
+            workers,
+            perf,
+            Arc::new(DataRegistry::new()),
+            None,
+            Arc::new(Greedy::new()),
+            7,
+        );
+        let mut cl = Codelet::new("c", "sort", vec![])
+            .with_native("fast", Arch::Cpu, Arc::new(|_| Ok(())))
+            .with_native("hinted", Arch::Cpu, Arc::new(|_| Ok(())));
+        cl = cl.with_hint("hinted");
+        let task = ReadyTask {
+            id: 0,
+            codelet: Arc::new(cl),
+            size: 64,
+            handles: vec![],
+            selector: None,
+            priority: 0,
+            ctx: 0,
+            chosen_impl: None,
+            est_cost_ns: 0,
+        };
+        let p = Contextual::new();
+        // cold band: the prefer() prior discounts the hinted variant
+        // below the marginally-faster rival
+        let c = p.select(&ctx.query(&task, Arch::Cpu)).unwrap();
+        assert_eq!(task.codelet.impls[c.impl_idx].name, "hinted");
+        // once the band has data, measurements win over the prior
+        p.feedback(&ctx.query(&task, Arch::Cpu), "hinted", 2e-3);
+        p.feedback(&ctx.query(&task, Arch::Cpu), "fast", 0.95e-3);
+        let c = p.select(&ctx.query(&task, Arch::Cpu)).unwrap();
+        assert_eq!(task.codelet.impls[c.impl_idx].name, "fast");
+    }
+
+    #[test]
+    fn size_bands_are_log2() {
+        assert_eq!(size_band(1), 1);
+        assert_eq!(size_band(48), size_band(63));
+        assert_ne!(size_band(63), size_band(64));
+        assert_eq!(size_band(0), size_band(1), "size 0 clamps");
+    }
+}

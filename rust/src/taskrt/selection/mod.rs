@@ -8,15 +8,23 @@
 //! Composition* line of work argues selection deserves a dedicated
 //! composition layer with trained dispatch tables; this module is that
 //! layer. Every component of the stack now consults one
-//! [`SelectionPolicy`]:
+//! [`SelectionPolicy`], and every consultation goes through a
+//! first-class [`SelectionQuery`]:
 //!
+//! * a query bundles the codelet, size and architecture *plus* a cheap
+//!   [`RuntimeSnapshot`] of the runtime state (queue depth, per-arch
+//!   in-flight counts and worker occupancy, operand residency,
+//!   co-tenant sessions) — so policies can condition on call context,
+//!   not just problem shape (the Optimized-Composition dispatch-table
+//!   argument, and HSTREAM's load-dependent splitting);
 //! * schedulers ask the policy which implementation to run per
 //!   architecture (dmda then places the chosen variant cost-aware);
 //! * workers report measured execution times back through
-//!   [`SelectionPolicy::feedback`], closing the online-learning loop;
+//!   [`SelectionPolicy::feedback`] with the same query shape, closing
+//!   the online-learning loop *with* the load context attached;
 //! * the COMPAR pre-compiler emits `prefer(...)` hints into generated
 //!   glue ([`crate::taskrt::Codelet::with_hint`]) that seed exploration
-//!   priors;
+//!   priors (per (size, load) band for the [`Contextual`] policy);
 //! * scheduling contexts carry their own policy instance (configured at
 //!   [`crate::taskrt::Runtime::create_context_with`] time) so different
 //!   tenants can run different policies over the same machine;
@@ -24,7 +32,7 @@
 //!   variant pins onto per-task policy overrides
 //!   ([`crate::taskrt::TaskSpec::with_selector`]).
 //!
-//! Four policies ship:
+//! Six policies ship:
 //!
 //! | policy                    | behaviour                                          |
 //! |---------------------------|----------------------------------------------------|
@@ -41,20 +49,35 @@
 //! |                           | ([`crate::taskrt::perfmodel::Bucket::ewma`]), so a |
 //! |                           | real performance shift flips the ranking within a  |
 //! |                           | few observations instead of O(history)             |
+//! | [`Contextual`]            | context-aware: buckets observations by (size band, |
+//! |                           | load band) and ranks by the *transfer-adjusted*    |
+//! |                           | estimate, so a device variant loses to a CPU       |
+//! |                           | variant when the device queue is deep or the       |
+//! |                           | inputs are CPU-resident                            |
 //! | [`Forced`]                | pin one variant by name; replaces both the old     |
 //! |                           | `force_variant` plumbing and the serve special case|
+
+pub mod contextual;
+pub mod query;
+
+pub use contextual::Contextual;
+pub use query::{RuntimeSnapshot, SelectionQuery};
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use super::device::Arch;
 use super::perfmodel::key;
-use super::scheduler::{ReadyTask, SchedCtx};
 use crate::util::rng::Rng;
 
 /// Default exploration rate for [`EpsilonGreedy`].
 pub const DEFAULT_EPSILON: f64 = 0.1;
+
+/// The valid selector names, for uniform validation errors across the
+/// CLI, `compar serve` and `compar route` (unknown names must be
+/// rejected with this set, never silently defaulted).
+pub const VALID_SELECTORS: &str =
+    "greedy | calibrating | epsilon[:E] | epsilon-decayed[:E] | contextual | forced:VARIANT";
 
 /// The outcome of one selection decision.
 #[derive(Debug, Clone)]
@@ -63,33 +86,45 @@ pub struct VariantChoice {
     pub impl_idx: usize,
     /// Modeled execution estimate behind the choice; `None` means the
     /// policy is exploring (schedulers fall back to calibration-style
-    /// placement for such tasks).
+    /// placement for such tasks). Context-aware policies may return a
+    /// *context-adjusted* estimate (e.g. including pending-transfer
+    /// cost), which cost-argmin schedulers compare directly.
     pub est: Option<f64>,
 }
 
 /// A pluggable variant-selection policy. One instance lives per
 /// scheduling context (shared by all its workers), and tasks may carry
 /// a per-task override ([`crate::taskrt::TaskSpec::with_selector`]).
+///
+/// Every entry point takes a [`SelectionQuery`]: the (task, arch) pair
+/// being decided plus a [`RuntimeSnapshot`] of queue depths, worker
+/// occupancy, operand residency and co-tenancy. Policies that only care
+/// about (codelet, size) simply ignore the snapshot.
 pub trait SelectionPolicy: Send + Sync {
     /// Human-readable policy name (diagnostics / serve protocol).
     fn name(&self) -> String;
 
-    /// Choose an implementation of `task`'s codelet for `arch`, or
-    /// `None` when the policy cannot serve this (task, arch) pair.
-    fn select(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> Option<VariantChoice>;
+    /// Choose an implementation for the query's (task, arch), or `None`
+    /// when the policy cannot serve this pair.
+    fn select(&self, q: &SelectionQuery) -> Option<VariantChoice>;
 
     /// Side-effect-free eligibility probe: could [`Self::select`] return
-    /// a choice for this (task, arch)? Used for worker placement,
-    /// stealing filters and submit-time validation.
-    fn can_serve(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> bool {
-        !ctx.eligible_impls(task, arch).is_empty()
+    /// a choice for this query? Used for worker placement, stealing
+    /// filters and submit-time validation — hot scan loops, so the
+    /// probe query may carry an **empty snapshot**. Eligibility must
+    /// therefore be load-independent: policies may steer *rankings* by
+    /// the snapshot, never whether a (task, arch) pair is servable at
+    /// all.
+    fn can_serve(&self, q: &SelectionQuery) -> bool {
+        !q.eligible().is_empty()
     }
 
-    /// Online-learning hook: a worker measured `secs` of execution for
-    /// (codelet, variant) at `size`. The shared [`super::PerfModels`]
-    /// store is updated separately by the worker; policies use this to
-    /// maintain their own exploration state.
-    fn feedback(&self, _codelet: &str, _variant: &str, _size: usize, _secs: f64) {}
+    /// Online-learning hook: a worker measured `secs` of execution of
+    /// `variant` for the query's (codelet, size) — the query's snapshot
+    /// carries the load context the measurement was taken under. The
+    /// shared [`super::PerfModels`] store is updated separately by the
+    /// worker; policies use this to maintain their own state.
+    fn feedback(&self, _q: &SelectionQuery, _variant: &str, _secs: f64) {}
 }
 
 /// Serializable policy selector: what configs, CLI flags and the serve
@@ -103,12 +138,15 @@ pub enum SelectorKind {
     /// decayed estimates (fast drift recovery; see
     /// [`crate::taskrt::perfmodel::EWMA_ALPHA`]).
     EpsilonDecayed(f64),
+    /// Context-aware selection over the full [`SelectionQuery`]
+    /// (banded observations + transfer/queue-adjusted ranking).
+    Contextual,
     Forced(String),
 }
 
 impl SelectorKind {
     /// Parse `greedy`, `calibrating`, `epsilon`, `epsilon:0.2`,
-    /// `epsilon-decayed[:E]`, `forced:VARIANT`.
+    /// `epsilon-decayed[:E]`, `contextual`, `forced:VARIANT`.
     pub fn parse(s: &str) -> Option<SelectorKind> {
         let s = s.trim();
         let lower = s.to_ascii_lowercase();
@@ -121,6 +159,7 @@ impl SelectorKind {
             "epsilon-decayed" | "edecay" => {
                 return Some(SelectorKind::EpsilonDecayed(DEFAULT_EPSILON))
             }
+            "contextual" | "context-aware" => return Some(SelectorKind::Contextual),
             _ => {}
         }
         if let Some(e) = lower.strip_prefix("epsilon-decayed:") {
@@ -152,6 +191,7 @@ impl SelectorKind {
             SelectorKind::Calibrating => "calibrating".into(),
             SelectorKind::EpsilonGreedy(e) => format!("epsilon:{e}"),
             SelectorKind::EpsilonDecayed(e) => format!("epsilon-decayed:{e}"),
+            SelectorKind::Contextual => "contextual".into(),
             SelectorKind::Forced(v) => format!("forced:{v}"),
         }
     }
@@ -163,6 +203,7 @@ impl SelectorKind {
             SelectorKind::Calibrating => Arc::new(Calibrating::new()),
             SelectorKind::EpsilonGreedy(e) => Arc::new(EpsilonGreedy::new(*e, seed)),
             SelectorKind::EpsilonDecayed(e) => Arc::new(EpsilonGreedy::new_decayed(*e, seed)),
+            SelectorKind::Contextual => Arc::new(Contextual::new()),
             SelectorKind::Forced(v) => Arc::new(Forced::new(v)),
         }
     }
@@ -174,10 +215,10 @@ impl SelectorKind {
 /// variant in `pool` that has never been observed, explore it first —
 /// the hint seeds the policy's prior so the likely winner gets a model
 /// before anything else.
-fn hint_first(task: &ReadyTask, ctx: &SchedCtx, pool: &[usize]) -> Option<usize> {
-    let hint = task.codelet.hint.as_deref()?;
-    let &idx = pool.iter().find(|&&i| task.codelet.impls[i].name == hint)?;
-    if ctx.perf.samples(&task.codelet.name, hint) == 0 {
+fn hint_first(q: &SelectionQuery, pool: &[usize]) -> Option<usize> {
+    let hint = q.task.codelet.hint.as_deref()?;
+    let &idx = pool.iter().find(|&&i| q.variant_name(i) == hint)?;
+    if q.ctx.perf.samples(q.codelet_name(), hint) == 0 {
         Some(idx)
     } else {
         None
@@ -187,16 +228,11 @@ fn hint_first(task: &ReadyTask, ctx: &SchedCtx, pool: &[usize]) -> Option<usize>
 /// Cold-start exploration over `pool` (impl indices still lacking a
 /// usable model): the unseen hinted variant first, then round-robin by
 /// `cursor`. `None` when nothing needs exploring.
-fn explore_pool(
-    task: &ReadyTask,
-    ctx: &SchedCtx,
-    pool: &[usize],
-    cursor: &AtomicUsize,
-) -> Option<VariantChoice> {
+fn explore_pool(q: &SelectionQuery, pool: &[usize], cursor: &AtomicUsize) -> Option<VariantChoice> {
     if pool.is_empty() {
         return None;
     }
-    if let Some(i) = hint_first(task, ctx, pool) {
+    if let Some(i) = hint_first(q, pool) {
         return Some(VariantChoice {
             impl_idx: i,
             est: None,
@@ -211,14 +247,14 @@ fn explore_pool(
 
 /// Model minimum over `pool` (assumes every entry has an estimate; a
 /// missing one sorts last rather than panicking).
-fn best_known(task: &ReadyTask, ctx: &SchedCtx, pool: &[usize]) -> Option<VariantChoice> {
-    best_by(pool, |i| ctx.exec_estimate(task, i))
+fn best_known(q: &SelectionQuery, pool: &[usize]) -> Option<VariantChoice> {
+    best_by(pool, |i| q.exec_estimate(i))
 }
 
 /// Decayed-mean minimum over `pool` — the drift-tracking ranking
 /// ([`crate::taskrt::perfmodel::Bucket::ewma`]).
-fn best_recent(task: &ReadyTask, ctx: &SchedCtx, pool: &[usize]) -> Option<VariantChoice> {
-    best_by(pool, |i| ctx.recent_estimate(task, i))
+fn best_recent(q: &SelectionQuery, pool: &[usize]) -> Option<VariantChoice> {
+    best_by(pool, |i| q.recent_estimate(i))
 }
 
 fn best_by(pool: &[usize], est: impl Fn(usize) -> Option<f64>) -> Option<VariantChoice> {
@@ -263,20 +299,20 @@ impl SelectionPolicy for Greedy {
         "greedy".into()
     }
 
-    fn select(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> Option<VariantChoice> {
-        let eligible = ctx.eligible_impls(task, arch);
+    fn select(&self, q: &SelectionQuery) -> Option<VariantChoice> {
+        let eligible = q.eligible();
         if eligible.is_empty() {
             return None;
         }
         let unknown: Vec<usize> = eligible
             .iter()
             .copied()
-            .filter(|&i| ctx.exec_estimate(task, i).is_none())
+            .filter(|&i| q.exec_estimate(i).is_none())
             .collect();
-        if let Some(c) = explore_pool(task, ctx, &unknown, &self.rr) {
+        if let Some(c) = explore_pool(q, &unknown, &self.rr) {
             return Some(c);
         }
-        best_known(task, ctx, &eligible)
+        best_known(q, &eligible)
     }
 }
 
@@ -310,8 +346,8 @@ impl SelectionPolicy for Calibrating {
         "calibrating".into()
     }
 
-    fn select(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> Option<VariantChoice> {
-        let eligible = ctx.eligible_impls(task, arch);
+    fn select(&self, q: &SelectionQuery) -> Option<VariantChoice> {
+        let eligible = q.eligible();
         if eligible.is_empty() {
             return None;
         }
@@ -319,14 +355,15 @@ impl SelectionPolicy for Calibrating {
             .iter()
             .copied()
             .filter(|&i| {
-                ctx.perf
-                    .needs_calibration(&task.codelet.name, &task.codelet.impls[i].name, task.size)
+                q.ctx
+                    .perf
+                    .needs_calibration(q.codelet_name(), q.variant_name(i), q.size())
             })
             .collect();
-        if let Some(c) = explore_pool(task, ctx, &need, &self.rr) {
+        if let Some(c) = explore_pool(q, &need, &self.rr) {
             return Some(c);
         }
-        best_known(task, ctx, &eligible)
+        best_known(q, &eligible)
     }
 }
 
@@ -390,8 +427,8 @@ impl SelectionPolicy for EpsilonGreedy {
         }
     }
 
-    fn select(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> Option<VariantChoice> {
-        let eligible = ctx.eligible_impls(task, arch);
+    fn select(&self, q: &SelectionQuery) -> Option<VariantChoice> {
+        let eligible = q.eligible();
         if eligible.is_empty() {
             return None;
         }
@@ -399,9 +436,9 @@ impl SelectionPolicy for EpsilonGreedy {
         let unknown: Vec<usize> = eligible
             .iter()
             .copied()
-            .filter(|&i| ctx.exec_estimate(task, i).is_none())
+            .filter(|&i| q.exec_estimate(i).is_none())
             .collect();
-        if let Some(c) = explore_pool(task, ctx, &unknown, &self.rr) {
+        if let Some(c) = explore_pool(q, &unknown, &self.rr) {
             return Some(c);
         }
         let explore = (self.rng.lock().unwrap().next_f32() as f64) < self.epsilon;
@@ -411,7 +448,7 @@ impl SelectionPolicy for EpsilonGreedy {
                 let counts: Vec<(usize, u64)> = eligible
                     .iter()
                     .map(|&i| {
-                        let k = key(&task.codelet.name, &task.codelet.impls[i].name);
+                        let k = key(q.codelet_name(), q.variant_name(i));
                         (i, seen.get(&k).copied().unwrap_or(0))
                     })
                     .collect();
@@ -434,18 +471,18 @@ impl SelectionPolicy for EpsilonGreedy {
             });
         }
         if self.decayed {
-            best_recent(task, ctx, &eligible)
+            best_recent(q, &eligible)
         } else {
-            best_known(task, ctx, &eligible)
+            best_known(q, &eligible)
         }
     }
 
-    fn feedback(&self, codelet: &str, variant: &str, _size: usize, _secs: f64) {
+    fn feedback(&self, q: &SelectionQuery, variant: &str, _secs: f64) {
         *self
             .seen
             .lock()
             .unwrap()
-            .entry(key(codelet, variant))
+            .entry(key(q.codelet_name(), variant))
             .or_insert(0) += 1;
     }
 }
@@ -455,7 +492,9 @@ impl SelectionPolicy for EpsilonGreedy {
 /// Pin selection to one variant by name. Replaces both the old
 /// `force_variant` plumbing through `ReadyTask` and the serve layer's
 /// per-request override special case: a pinned request simply carries a
-/// `Forced` policy as its per-task selector.
+/// `Forced` policy as its per-task selector. A pin wins over any
+/// snapshot state by construction — the override *replaces* the
+/// context's policy, so no load signal can ever veto it.
 pub struct Forced {
     variant: String,
 }
@@ -477,20 +516,20 @@ impl SelectionPolicy for Forced {
         format!("forced:{}", self.variant)
     }
 
-    fn select(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> Option<VariantChoice> {
-        ctx.eligible_impls(task, arch)
+    fn select(&self, q: &SelectionQuery) -> Option<VariantChoice> {
+        q.eligible()
             .into_iter()
-            .find(|&i| task.codelet.impls[i].name == self.variant)
+            .find(|&i| q.variant_name(i) == self.variant)
             .map(|i| VariantChoice {
                 impl_idx: i,
-                est: ctx.exec_estimate(task, i),
+                est: q.exec_estimate(i),
             })
     }
 
-    fn can_serve(&self, task: &ReadyTask, arch: Arch, ctx: &SchedCtx) -> bool {
-        ctx.eligible_impls(task, arch)
+    fn can_serve(&self, q: &SelectionQuery) -> bool {
+        q.eligible()
             .iter()
-            .any(|&i| task.codelet.impls[i].name == self.variant)
+            .any(|&i| q.variant_name(i) == self.variant)
     }
 }
 
@@ -499,8 +538,9 @@ mod tests {
     use super::*;
     use crate::taskrt::codelet::Codelet;
     use crate::taskrt::data::DataRegistry;
+    use crate::taskrt::device::Arch;
     use crate::taskrt::perfmodel::{PerfModels, MIN_SAMPLES};
-    use crate::taskrt::scheduler::WorkerInfo;
+    use crate::taskrt::scheduler::{ReadyTask, SchedCtx, WorkerInfo};
 
     fn ctx_with(perf: Arc<PerfModels>) -> SchedCtx {
         let workers = vec![WorkerInfo {
@@ -565,6 +605,14 @@ mod tests {
             SelectorKind::parse("epsilon-decayed:0.3"),
             Some(SelectorKind::EpsilonDecayed(0.3))
         );
+        assert_eq!(
+            SelectorKind::parse("contextual"),
+            Some(SelectorKind::Contextual)
+        );
+        assert_eq!(
+            SelectorKind::parse("Context-Aware"),
+            Some(SelectorKind::Contextual)
+        );
         assert_eq!(SelectorKind::parse("epsilon:7"), None);
         assert_eq!(SelectorKind::parse("epsilon-decayed:7"), None);
         assert_eq!(SelectorKind::parse("forced:"), None);
@@ -574,9 +622,17 @@ mod tests {
             SelectorKind::Calibrating,
             SelectorKind::EpsilonGreedy(0.5),
             SelectorKind::EpsilonDecayed(0.25),
+            SelectorKind::Contextual,
             SelectorKind::Forced("omp".into()),
         ] {
             assert_eq!(SelectorKind::parse(&k.name()), Some(k.clone()), "{k:?}");
+        }
+    }
+
+    #[test]
+    fn valid_selector_set_names_every_policy() {
+        for name in ["greedy", "calibrating", "epsilon", "contextual", "forced"] {
+            assert!(VALID_SELECTORS.contains(name), "{name} missing");
         }
     }
 
@@ -587,12 +643,12 @@ mod tests {
         let task = two_variant_task(None);
         let g = Greedy::new();
         // cold: explores (est None)
-        let c = g.select(&task, Arch::Cpu, &ctx).unwrap();
+        let c = g.select(&ctx.query(&task, Arch::Cpu)).unwrap();
         assert!(c.est.is_none());
         // warmed: exploits the minimum
         warm(&perf, "fast", 1e-3);
         warm(&perf, "slow", 1e-1);
-        let c = g.select(&task, Arch::Cpu, &ctx).unwrap();
+        let c = g.select(&ctx.query(&task, Arch::Cpu)).unwrap();
         assert_eq!(task.codelet.impls[c.impl_idx].name, "fast");
         assert!(c.est.is_some());
     }
@@ -605,21 +661,21 @@ mod tests {
         let p = Calibrating::new();
         // drive the calibration loop exactly as a worker would
         for _ in 0..(2 * MIN_SAMPLES) {
-            let c = p.select(&task, Arch::Cpu, &ctx).unwrap();
+            let c = p.select(&ctx.query(&task, Arch::Cpu)).unwrap();
             assert!(c.est.is_none(), "still calibrating");
             let name = &task.codelet.impls[c.impl_idx].name;
             let t = if name == "fast" { 1e-3 } else { 1e-1 };
             perf.record("c", name, 64, t);
-            p.feedback("c", name, 64, t);
+            p.feedback(&ctx.query(&task, Arch::Cpu), name, t);
         }
         assert!(!perf.needs_calibration("c", "fast", 64));
         assert!(!perf.needs_calibration("c", "slow", 64));
-        let c = p.select(&task, Arch::Cpu, &ctx).unwrap();
+        let c = p.select(&ctx.query(&task, Arch::Cpu)).unwrap();
         assert_eq!(task.codelet.impls[c.impl_idx].name, "fast");
         // a NEW size re-triggers calibration (unlike Greedy's regression)
         let mut big = two_variant_task(None);
         big.size = 4096;
-        let c = p.select(&big, Arch::Cpu, &ctx).unwrap();
+        let c = p.select(&ctx.query(&big, Arch::Cpu)).unwrap();
         assert!(c.est.is_none(), "new size must recalibrate");
     }
 
@@ -634,12 +690,12 @@ mod tests {
         let mut fast = 0usize;
         let n = 1000;
         for _ in 0..n {
-            let c = p.select(&task, Arch::Cpu, &ctx).unwrap();
+            let c = p.select(&ctx.query(&task, Arch::Cpu)).unwrap();
             let name = task.codelet.impls[c.impl_idx].name.clone();
             if name == "fast" {
                 fast += 1;
             }
-            p.feedback("c", &name, 64, 0.0);
+            p.feedback(&ctx.query(&task, Arch::Cpu), &name, 0.0);
         }
         // expected fast fraction = (1 - eps) + eps * balance ≈ 0.9
         assert!(fast as f64 / n as f64 > 0.7, "converged to {fast}/{n}");
@@ -664,11 +720,11 @@ mod tests {
         let task = two_variant_task(None);
         // epsilon 0.0: pure exploitation, no randomness
         let cumulative = EpsilonGreedy::new(0.0, 3);
-        let c = cumulative.select(&task, Arch::Cpu, &ctx).unwrap();
+        let c = cumulative.select(&ctx.query(&task, Arch::Cpu)).unwrap();
         assert_eq!(task.codelet.impls[c.impl_idx].name, "fast", "cumulative lags");
         let decayed = EpsilonGreedy::new_decayed(0.0, 3);
         assert_eq!(decayed.name(), "epsilon-decayed:0");
-        let c = decayed.select(&task, Arch::Cpu, &ctx).unwrap();
+        let c = decayed.select(&ctx.query(&task, Arch::Cpu)).unwrap();
         assert_eq!(
             task.codelet.impls[c.impl_idx].name, "slow",
             "decayed ranking flips after the drift"
@@ -683,13 +739,13 @@ mod tests {
         let ctx = ctx_with(perf);
         let task = two_variant_task(None);
         let p = Forced::new("slow");
-        let c = p.select(&task, Arch::Cpu, &ctx).unwrap();
+        let c = p.select(&ctx.query(&task, Arch::Cpu)).unwrap();
         assert_eq!(task.codelet.impls[c.impl_idx].name, "slow");
-        assert!(p.can_serve(&task, Arch::Cpu, &ctx));
+        assert!(p.can_serve(&ctx.query(&task, Arch::Cpu)));
         // unknown variant: no selection, no eligibility
         let bogus = Forced::new("nope");
-        assert!(bogus.select(&task, Arch::Cpu, &ctx).is_none());
-        assert!(!bogus.can_serve(&task, Arch::Cpu, &ctx));
+        assert!(bogus.select(&ctx.query(&task, Arch::Cpu)).is_none());
+        assert!(!bogus.can_serve(&ctx.query(&task, Arch::Cpu)));
     }
 
     #[test]
@@ -698,7 +754,7 @@ mod tests {
         let ctx = ctx_with(perf.clone());
         let task = two_variant_task(Some("slow"));
         let g = Greedy::new();
-        let c = g.select(&task, Arch::Cpu, &ctx).unwrap();
+        let c = g.select(&ctx.query(&task, Arch::Cpu)).unwrap();
         assert_eq!(
             task.codelet.impls[c.impl_idx].name, "slow",
             "hinted variant is explored first"
@@ -707,7 +763,7 @@ mod tests {
         perf.record("c", "slow", 64, 1e-1);
         let mut names = std::collections::BTreeSet::new();
         for _ in 0..4 {
-            let c = g.select(&task, Arch::Cpu, &ctx).unwrap();
+            let c = g.select(&ctx.query(&task, Arch::Cpu)).unwrap();
             names.insert(task.codelet.impls[c.impl_idx].name.clone());
         }
         assert!(names.contains("fast"), "round-robin resumes: {names:?}");

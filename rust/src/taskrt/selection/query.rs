@@ -1,0 +1,346 @@
+//! The first-class selection query: everything a [`SelectionPolicy`]
+//! may condition a decision on, bundled into one value object.
+//!
+//! Before this type existed, `select(task, arch, ctx)` could only key
+//! decisions on (codelet, size, arch) — the runtime state a
+//! context-aware policy needs (queue depths, worker occupancy, operand
+//! residency, co-tenancy) was either buried in the scheduler or not
+//! observable at all. Kessler & Dastgeer's *Optimized Composition*
+//! dispatch tables condition on call context (operand locality, problem
+//! shape), and HSTREAM splits work by device load; both require the
+//! selection *API*, not just the policies, to carry runtime state.
+//!
+//! A [`SelectionQuery`] is built per decision by
+//! [`SchedCtx::query`](crate::taskrt::scheduler::SchedCtx::query). The
+//! cheap scalar features (atomic counter reads) are captured eagerly
+//! into a [`RuntimeSnapshot`]; the data-residency features walk the
+//! data registry and are computed on demand
+//! ([`SelectionQuery::pending_transfer_bytes`]), so policies that never
+//! look at operand locality never pay for it.
+//!
+//! [`SelectionPolicy`]: super::SelectionPolicy
+
+use std::sync::atomic::Ordering;
+
+use crate::taskrt::device::{transfer_model, Arch};
+use crate::taskrt::scheduler::{ReadyTask, SchedCtx};
+
+/// A cheap point-in-time view of the runtime state relevant to one
+/// (task, arch) selection decision. Captured from atomic counters only
+/// — building one costs a handful of relaxed loads, so it sits on the
+/// per-decision hot path (including work-stealing eligibility scans).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RuntimeSnapshot {
+    /// Tasks pushed to the submitting context's scheduler and not yet
+    /// popped by a worker (context-wide queue depth).
+    pub queue_depth: usize,
+    /// Member workers of the queried architecture in this context.
+    pub arch_workers: usize,
+    /// Tasks currently *executing* on members of the queried
+    /// architecture (in-flight count; schedulers' deque models do not
+    /// see these, only policies do).
+    pub arch_inflight: usize,
+    /// Member workers of this context currently executing a task
+    /// (occupancy, across all architectures).
+    pub busy_workers: usize,
+    /// Total member workers in this context's partition.
+    pub partition_workers: usize,
+    /// Modeled seconds of work already queued on the *least-loaded*
+    /// member of the queried architecture (the dmda deque model, seen
+    /// from the policy's side).
+    pub queued_secs: f64,
+    /// Serve-layer sessions currently sharing the runtime (co-tenant
+    /// count; 0 outside `compar serve`).
+    pub tenants: usize,
+}
+
+impl RuntimeSnapshot {
+    /// Coarse load band for bucketing performance observations:
+    /// 0 = idle (nothing queued or in flight on this arch),
+    /// 1 = busy (backlog up to one task per member worker),
+    /// 2 = contended (backlog beyond the partition's parallelism).
+    pub fn load_band(&self) -> u8 {
+        let pressure = self.queue_depth + self.arch_inflight;
+        if pressure == 0 {
+            0
+        } else if pressure <= self.arch_workers.max(1) {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// Nothing queued or running on the queried architecture.
+    pub fn is_idle(&self) -> bool {
+        self.load_band() == 0
+    }
+}
+
+/// One variant-selection question: "which implementation of
+/// [`SelectionQuery::task`]'s codelet should run on
+/// [`SelectionQuery::arch`], given the runtime state in
+/// [`SelectionQuery::snapshot`]?" — the sole argument of
+/// [`SelectionPolicy::select`](super::SelectionPolicy::select) and
+/// [`SelectionPolicy::feedback`](super::SelectionPolicy::feedback).
+pub struct SelectionQuery<'a> {
+    pub task: &'a ReadyTask,
+    pub arch: Arch,
+    pub ctx: &'a SchedCtx,
+    pub snapshot: RuntimeSnapshot,
+}
+
+impl<'a> SelectionQuery<'a> {
+    /// Build a query, capturing the runtime snapshot from the context's
+    /// counters (relaxed atomic loads only).
+    pub fn capture(task: &'a ReadyTask, arch: Arch, ctx: &'a SchedCtx) -> SelectionQuery<'a> {
+        let mut arch_workers = 0usize;
+        let mut arch_inflight = 0usize;
+        let mut busy_workers = 0usize;
+        let mut queued: Option<f64> = None;
+        for &w in &ctx.members {
+            let running = ctx.running[w].load(Ordering::Relaxed);
+            busy_workers += running.min(1);
+            if ctx.workers[w].arch == arch {
+                arch_workers += 1;
+                arch_inflight += running;
+                let backlog = ctx.queued_secs(w);
+                queued = Some(match queued {
+                    Some(v) if v <= backlog => v,
+                    _ => backlog,
+                });
+            }
+        }
+        let snapshot = RuntimeSnapshot {
+            // clamped: the pop/push accounting may transiently be -1
+            queue_depth: ctx.pending.load(Ordering::Relaxed).max(0) as usize,
+            arch_workers,
+            arch_inflight,
+            busy_workers,
+            partition_workers: ctx.members.len(),
+            queued_secs: queued.unwrap_or(0.0),
+            tenants: ctx.tenants.load(Ordering::Relaxed),
+        };
+        SelectionQuery {
+            task,
+            arch,
+            ctx,
+            snapshot,
+        }
+    }
+
+    /// Build a query with an explicit snapshot (tests and simulations).
+    pub fn with_snapshot(
+        task: &'a ReadyTask,
+        arch: Arch,
+        ctx: &'a SchedCtx,
+        snapshot: RuntimeSnapshot,
+    ) -> SelectionQuery<'a> {
+        SelectionQuery {
+            task,
+            arch,
+            ctx,
+            snapshot,
+        }
+    }
+
+    pub fn codelet_name(&self) -> &str {
+        &self.task.codelet.name
+    }
+
+    pub fn size(&self) -> usize {
+        self.task.size
+    }
+
+    /// Variant name of implementation `idx`.
+    pub fn variant_name(&self, idx: usize) -> &str {
+        &self.task.codelet.impls[idx].name
+    }
+
+    /// Indices of implementations executable on this query's arch right
+    /// now (arch match + artifact availability).
+    pub fn eligible(&self) -> Vec<usize> {
+        self.ctx.eligible_impls(self.task, self.arch)
+    }
+
+    /// Perf-model estimate for implementation `idx`; `None` =
+    /// uncalibrated.
+    pub fn exec_estimate(&self, idx: usize) -> Option<f64> {
+        self.ctx.exec_estimate(self.task, idx)
+    }
+
+    /// Exponentially-decayed estimate for implementation `idx` (what
+    /// drift-tracking policies exploit).
+    pub fn recent_estimate(&self, idx: usize) -> Option<f64> {
+        self.ctx.recent_estimate(self.task, idx)
+    }
+
+    /// Measured-execution observations for implementation `idx`.
+    pub fn samples(&self, idx: usize) -> usize {
+        self.ctx
+            .perf
+            .samples(&self.task.codelet.name, &self.task.codelet.impls[idx].name)
+    }
+
+    /// Bytes of the task's handles *not* yet resident on the queried
+    /// architecture's best member node — what a placement there would
+    /// have to move. Walks the data registry, so it is computed on
+    /// demand rather than captured in the snapshot.
+    pub fn pending_transfer_bytes(&self) -> usize {
+        let mut best: Option<usize> = None;
+        let mut seen_nodes: Vec<usize> = Vec::new();
+        for w in self.ctx.member_workers() {
+            if w.arch != self.arch || seen_nodes.contains(&w.mem_node) {
+                continue;
+            }
+            seen_nodes.push(w.mem_node);
+            let pending = self.ctx.transfer_bytes(self.task, w.id);
+            best = Some(match best {
+                Some(b) if b <= pending => b,
+                _ => pending,
+            });
+        }
+        best.unwrap_or(0)
+    }
+
+    /// Modeled seconds the pending (non-resident) operand bytes would
+    /// take to move — the transfer-adjustment term of context-aware
+    /// estimates. Zero when the context's data-aware term is disabled.
+    pub fn transfer_penalty_secs(&self) -> f64 {
+        if !self.ctx.data_aware {
+            return 0.0;
+        }
+        let pending = self.pending_transfer_bytes();
+        if pending == 0 {
+            0.0
+        } else {
+            transfer_model(pending)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::runtime::Tensor;
+    use crate::taskrt::codelet::Codelet;
+    use crate::taskrt::data::{AccessMode, DataRegistry};
+    use crate::taskrt::perfmodel::PerfModels;
+    use crate::taskrt::scheduler::WorkerInfo;
+    use crate::taskrt::selection::Greedy;
+
+    fn two_arch_ctx() -> (SchedCtx, crate::taskrt::HandleId) {
+        let workers = vec![
+            WorkerInfo {
+                id: 0,
+                arch: Arch::Cpu,
+                mem_node: 0,
+            },
+            WorkerInfo {
+                id: 1,
+                arch: Arch::Cuda,
+                mem_node: 1,
+            },
+        ];
+        let data = Arc::new(DataRegistry::new());
+        let h = data.register(Tensor::vector(vec![0.0; 256]));
+        (
+            SchedCtx::new(
+                workers,
+                Arc::new(PerfModels::new()),
+                data,
+                None,
+                Arc::new(Greedy::new()),
+                7,
+            ),
+            h,
+        )
+    }
+
+    fn task(h: crate::taskrt::HandleId) -> ReadyTask {
+        let cl = Codelet::new("c", "sort", vec![AccessMode::Read])
+            .with_native("omp", Arch::Cpu, Arc::new(|_| Ok(())))
+            .with_native("cuda", Arch::Cuda, Arc::new(|_| Ok(())));
+        ReadyTask {
+            id: 0,
+            codelet: Arc::new(cl),
+            size: 64,
+            handles: vec![(h, AccessMode::Read)],
+            selector: None,
+            priority: 0,
+            ctx: 0,
+            chosen_impl: None,
+            est_cost_ns: 0,
+        }
+    }
+
+    #[test]
+    fn snapshot_captures_counters_per_arch() {
+        let (ctx, h) = two_arch_ctx();
+        let t = task(h);
+        let q = ctx.query(&t, Arch::Cuda);
+        assert!(q.snapshot.is_idle());
+        assert_eq!(q.snapshot.arch_workers, 1);
+        assert_eq!(q.snapshot.partition_workers, 2);
+
+        ctx.pending.store(3, Ordering::Relaxed);
+        ctx.running[1].store(2, Ordering::Relaxed);
+        ctx.charge(1, 50_000_000); // 50 ms modeled backlog on the device
+        let q = ctx.query(&t, Arch::Cuda);
+        assert_eq!(q.snapshot.queue_depth, 3);
+        assert_eq!(q.snapshot.arch_inflight, 2);
+        assert_eq!(q.snapshot.busy_workers, 1);
+        assert_eq!(q.snapshot.load_band(), 2, "5 pending > 1 worker");
+        assert!((q.snapshot.queued_secs - 0.05).abs() < 1e-9);
+        // the CPU-side view sees the context-wide queue but not the
+        // device's in-flight work
+        let q = ctx.query(&t, Arch::Cpu);
+        assert_eq!(q.snapshot.arch_inflight, 0);
+        assert_eq!(q.snapshot.queued_secs, 0.0);
+        assert_eq!(q.snapshot.load_band(), 2);
+    }
+
+    #[test]
+    fn load_band_thresholds() {
+        let s = RuntimeSnapshot {
+            arch_workers: 2,
+            ..RuntimeSnapshot::default()
+        };
+        assert_eq!(s.load_band(), 0);
+        let busy = RuntimeSnapshot {
+            arch_workers: 2,
+            queue_depth: 2,
+            ..RuntimeSnapshot::default()
+        };
+        assert_eq!(busy.load_band(), 1);
+        let contended = RuntimeSnapshot {
+            arch_workers: 2,
+            queue_depth: 2,
+            arch_inflight: 2,
+            ..RuntimeSnapshot::default()
+        };
+        assert_eq!(contended.load_band(), 2);
+    }
+
+    #[test]
+    fn pending_transfer_tracks_residency() {
+        let (ctx, h) = two_arch_ctx();
+        let t = task(h);
+        // data starts in main memory: the device side would transfer,
+        // the CPU side would not
+        let q = ctx.query(&t, Arch::Cuda);
+        assert_eq!(q.pending_transfer_bytes(), 1024);
+        assert!(q.transfer_penalty_secs() > 0.0);
+        let q = ctx.query(&t, Arch::Cpu);
+        assert_eq!(q.pending_transfer_bytes(), 0);
+        assert_eq!(q.transfer_penalty_secs(), 0.0);
+        // move the data to the device: the penalty flips sides
+        ctx.data.acquire(h, 1, AccessMode::ReadWrite).unwrap();
+        let q = ctx.query(&t, Arch::Cuda);
+        assert_eq!(q.pending_transfer_bytes(), 0);
+        let q = ctx.query(&t, Arch::Cpu);
+        assert_eq!(q.pending_transfer_bytes(), 1024);
+    }
+}

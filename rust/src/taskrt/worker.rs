@@ -18,6 +18,16 @@ use super::scheduler::{ReadyTask, WorkerInfo};
 use super::{ContextSlot, Inner};
 use crate::runtime::Tensor;
 
+/// Decrements a worker's in-flight counter on drop, so the occupancy
+/// signal clears even when an execution body errors out early.
+struct Busy<'a>(&'a std::sync::atomic::AtomicUsize);
+
+impl Drop for Busy<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 pub(crate) fn run(inner: Arc<Inner>, me: WorkerInfo) {
     loop {
         // Re-resolve the context each iteration: create_context may have
@@ -33,7 +43,14 @@ pub(crate) fn run(inner: Arc<Inner>, me: WorkerInfo) {
         };
         let task = slot.sched.pop(me.id, &slot.ctx, inner.config.poll);
         match task {
-            Some(t) => execute(&inner, &me, &slot, t),
+            Some(t) => {
+                // popped: leave the context's queue-depth counter (the
+                // selection snapshots' context-wide pressure signal).
+                // May transiently reach -1 when this pop races the
+                // producer's post-push increment; snapshots clamp at 0.
+                slot.ctx.pending.fetch_sub(1, Ordering::Relaxed);
+                execute(&inner, &me, &slot, t);
+            }
             None => {
                 if inner.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -105,7 +122,14 @@ pub(crate) fn push_ready(inner: &Arc<Inner>, id: super::task::TaskId) {
             chosen_impl: None,
             est_cost_ns: 0,
         };
+        // count the task into the context's queue depth *after* the
+        // push: model-aware schedulers run their selection queries
+        // inside push(), and the task being placed must not count
+        // itself as pressure — otherwise the idle band would be
+        // unreachable on the decision path and banded policies would
+        // learn into a band that selection never consults
         slot.sched.push(rt, &slot.ctx);
+        slot.ctx.pending.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -145,6 +169,12 @@ fn execute_body(
     for (h, m) in &task.handles {
         transfer_bytes += inner.data.acquire(*h, me.mem_node, *m)?;
     }
+
+    // occupancy: visible to concurrent selection snapshots while the
+    // body runs (incremented after selection so a worker's own choice
+    // never counts itself as in-flight pressure)
+    slot.ctx.running[me.id].fetch_add(1, Ordering::Relaxed);
+    let _busy = Busy(&slot.ctx.running[me.id]);
 
     // execute for real
     let t_start = inner.epoch.elapsed().as_secs_f64();
@@ -220,6 +250,7 @@ fn execute_body(
         }
     }
     let wall = t0.elapsed().as_secs_f64();
+    drop(_busy); // the feedback snapshot must not count this task
 
     // attribute device time (DESIGN.md §3)
     let (modeled_exec, modeled_transfer) = match inner.config.time_mode {
@@ -235,11 +266,13 @@ fn execute_body(
 
     // history model learns the *execution* component only; dmda adds
     // transfer separately at placement time. The governing selection
-    // policy hears about the measurement too (online-learning loop).
+    // policy hears about the measurement too (online-learning loop),
+    // through a full SelectionQuery so context-aware policies know
+    // which load band the observation belongs to.
     inner
         .perf
         .record(&codelet.name, &imp.name, task.size, modeled_exec);
-    slot.ctx.feedback(task, &imp.name, modeled_exec);
+    slot.ctx.feedback(task, me.arch, &imp.name, modeled_exec);
 
     Ok(TaskResult {
         task: task.id,

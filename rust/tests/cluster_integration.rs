@@ -133,6 +133,28 @@ fn router_aggregates_stats_and_drains_shards_out_of_rotation() {
     cluster.shutdown().unwrap();
 }
 
+/// Selector validation is uniform across the cluster: the router
+/// rejects an unknown session policy with a protocol error naming the
+/// valid set (exactly like a shard does), and accepts `contextual`.
+#[test]
+fn router_validates_session_policy_names_against_the_valid_set() {
+    let cluster =
+        LocalCluster::start(1, &serve_opts(SelectorKind::Greedy), router_opts(false)).unwrap();
+    let err = Client::connect_with_policy(&cluster.addr(), Some("bogus")).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown selection policy 'bogus'"), "{msg}");
+    for name in ["greedy", "calibrating", "epsilon-decayed", "contextual", "forced"] {
+        assert!(msg.contains(name), "valid set must name {name}: {msg}");
+    }
+    // the new selector name routes end-to-end (router hello -> shard
+    // hello -> per-task override on the shard's runtime)
+    let mut c = Client::connect_with_policy(&cluster.addr(), Some("contextual")).unwrap();
+    let resp = c.submit(submit(1, "matmul", 32, 9, true)).unwrap();
+    assert_eq!(resp.policy, "contextual");
+    c.quit().unwrap();
+    cluster.shutdown().unwrap();
+}
+
 #[test]
 fn perf_pull_and_push_roundtrip_over_the_wire() {
     let server = Server::start(serve_opts(SelectorKind::Greedy)).unwrap();

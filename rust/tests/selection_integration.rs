@@ -2,9 +2,13 @@
 //! scheduling contexts running different policies over the same
 //! workload select differently; a Greedy context converges to the
 //! model-best variant; per-task policy overrides beat the context
-//! policy; and unknown forced variants are rejected at submit time.
+//! policy; unknown forced variants are rejected at submit time; and
+//! the context-aware `contextual` policy flips its variant choice for
+//! the same (app, size) stream between an idle and a loaded machine
+//! (while Forced pins keep winning over any snapshot state).
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use compar::runtime::Tensor;
 use compar::taskrt::selection::Forced;
@@ -116,6 +120,106 @@ fn per_task_selector_overrides_context_policy() {
         .find(|r| r.task == id)
         .unwrap();
     assert_eq!(r.variant, "seq", "per-task Forced must beat the context policy");
+}
+
+/// The context-aware headline: the same (app, size) stream selects the
+/// device variant on an idle machine and the CPU variant while the
+/// device is buried under a backlog — through the public API, with the
+/// pressure created by real queued tasks. A `forced` pin submitted
+/// under the same pressure still runs its pinned variant.
+#[test]
+fn contextual_flips_variant_under_queue_pressure_and_forced_pin_still_wins() {
+    const SIZE: usize = 16384;
+    let cfg = Config {
+        ncpu: 1,
+        ncuda: 1,
+        sched: SchedPolicy::Dmda,
+        selector: SelectorKind::Contextual,
+        ..Config::default()
+    };
+    let rt = Runtime::new(cfg, None).unwrap();
+    // native variant on each arch; the device body sleeps so a burst of
+    // pinned tasks creates a real, observable backlog on its queue
+    let cl = rt.register_codelet(
+        Codelet::new("duo", "sort", vec![AccessMode::Read])
+            .with_native("omp", Arch::Cpu, Arc::new(|_| Ok(())))
+            .with_native(
+                "cuda",
+                Arch::Cuda,
+                Arc::new(|_| {
+                    std::thread::sleep(Duration::from_millis(1));
+                    Ok(())
+                }),
+            ),
+    );
+    let submit_probe = |selector: Option<&str>| {
+        let h = rt.register_data(Tensor::vector(vec![0.0; 8]));
+        let mut spec = TaskSpec::new(cl.clone(), vec![h], SIZE);
+        if let Some(v) = selector {
+            spec = spec.with_variant(v);
+        }
+        rt.submit(spec).unwrap()
+    };
+    let variant_in = |results: &[compar::taskrt::TaskResult], id| {
+        results
+            .iter()
+            .find(|r| r.task == id)
+            .map(|r| r.variant.clone())
+            .unwrap()
+    };
+
+    // warm the models under both variants (modeled sort times at this
+    // size: cuda ≈ 50 µs, omp ≈ 330 µs — the device wins when idle)
+    for v in ["cuda", "omp"] {
+        for _ in 0..4 {
+            let id = submit_probe(Some(v));
+            rt.wait_tasks(&[id]).unwrap();
+        }
+    }
+    rt.wait_all().unwrap();
+    rt.drain_results();
+
+    // idle machine: the stream picks the device variant
+    let idle_probe = submit_probe(None);
+    rt.wait_all().unwrap();
+    let results = rt.drain_results();
+    assert_eq!(
+        variant_in(&results, idle_probe),
+        "cuda",
+        "idle: device variant wins"
+    );
+
+    // bury the device: a burst of pinned tasks queues ~40 ms of work on
+    // its lane, then the SAME (app, size) probe arrives while the
+    // backlog is still queued
+    for _ in 0..40 {
+        submit_probe(Some("cuda"));
+    }
+    let loaded_probe = submit_probe(None);
+    // a pin submitted under the same pressure must ignore it entirely
+    let pinned_probe = submit_probe(Some("cuda"));
+    rt.wait_all().unwrap();
+    let results = rt.drain_results();
+    assert_eq!(
+        variant_in(&results, loaded_probe),
+        "omp",
+        "loaded: the contextual policy must flip to the idle architecture"
+    );
+    assert_eq!(
+        variant_in(&results, pinned_probe),
+        "cuda",
+        "a Forced pin wins over any snapshot state"
+    );
+
+    // backlog drained: the stream returns to the device variant
+    let recovered_probe = submit_probe(None);
+    rt.wait_all().unwrap();
+    let results = rt.drain_results();
+    assert_eq!(
+        variant_in(&results, recovered_probe),
+        "cuda",
+        "recovers when idle again"
+    );
 }
 
 #[test]

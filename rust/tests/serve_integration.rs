@@ -170,9 +170,14 @@ fn session_policy_pins_selection_and_is_reported() {
     let server = Server::start(opts("")).unwrap();
     let addr = server.local_addr().to_string();
 
-    // a bogus policy is rejected in the handshake
+    // a bogus policy is rejected in the handshake, and the error names
+    // the full valid set (uniform validation across serve and route)
     let err = Client::connect_with_policy(&addr, Some("bogus")).unwrap_err();
-    assert!(format!("{err:#}").contains("unknown selection policy"), "{err:#}");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown selection policy"), "{msg}");
+    for name in ["greedy", "calibrating", "epsilon-decayed", "contextual", "forced"] {
+        assert!(msg.contains(name), "valid set must name {name}: {msg}");
+    }
 
     // forced:omp session: every task must run the omp variant
     let mut c = Client::connect_with_policy(&addr, Some("forced:omp")).unwrap();
@@ -199,6 +204,28 @@ fn session_policy_pins_selection_and_is_reported() {
     assert_eq!(contexts[0].selector, "greedy");
     c.quit().unwrap();
     server.shutdown().unwrap();
+}
+
+#[test]
+fn contextual_session_policy_accepted_and_v4_stats_report_snapshot() {
+    let server = Server::start(opts("")).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut c = Client::connect_with_policy(&addr, Some("contextual")).unwrap();
+    for r in 0..3u64 {
+        let resp = c.submit(submit(r, "matmul", 32, 1, None, 300 + r)).unwrap();
+        assert_eq!(resp.policy, "contextual");
+        assert_eq!(resp.variants.len(), 1);
+    }
+    // v4: stats carry the runtime-snapshot features
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.sessions, 1, "one live session (this one)");
+    assert_eq!(stats.total_workers, 4);
+    assert!(stats.busy_workers <= stats.total_workers);
+    c.quit().unwrap();
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests_ok, 3);
+    assert_eq!(stats.sessions, 0, "drained server has no live sessions");
+    assert_eq!(stats.queue_depth, 0, "drained server has nothing queued");
 }
 
 #[test]
