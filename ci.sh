@@ -37,6 +37,14 @@ echo "== cluster smoke (in-process: 2 shards behind the router) =="
 cargo run --release --quiet -- loadgen --shards 2 \
   --clients 4 --requests 8 --app matmul --size 32 --pipeline 2 --ncpu 2
 
+echo "== autoscale smoke (context elasticity + shard churn) =="
+# in-process: a loadgen burst on a small context must trigger a worker
+# migration (asserted via the v5 autoscale_status request) and the drain
+# must give the workers back; cluster: a two-shard elastic cluster must
+# spawn a third shard under burst and retire it after, with zero failed
+# requests throughout — `bench autoscale --smoke` FAILS on any of these
+cargo run --release --quiet -- bench autoscale --smoke
+
 # wait until a TCP port accepts connections (pure bash, no nc needed)
 wait_port() {
   local port="$1"

@@ -1,0 +1,371 @@
+//! `autoscale` — the elastic control plane (`compar autoscale`).
+//!
+//! COMPAR's selection layer adapts *which variant* runs to runtime
+//! context, but until this subsystem the *capacity* side was static:
+//! scheduling contexts were fixed at startup, so under bursty
+//! multi-tenant traffic the contextual policy could only route around
+//! pressure it had no way to relieve. This module closes that loop,
+//! following the optimized-composition line (Kessler & Dastgeer,
+//! arXiv:1405.2915 — co-optimizing composition decisions with resource
+//! allocation at runtime) and HSTREAM (arXiv:1809.09387 — sizing
+//! heterogeneous work distribution from observed throughput):
+//!
+//! ```text
+//!            ┌───────────────── Autoscaler thread ─────────────────┐
+//!            │ sample: Runtime::context_loads()                    │
+//!            │   (queue depth · occupancy · modeled backlog ·      │
+//!            │    tenants — the RuntimeSnapshot features, per ctx) │
+//!            │ decide: ScalePolicy (threshold hysteresis +         │
+//!            │   token-bucket cooldown; SLO-aware)                 │
+//!            │ act:    Runtime::move_workers(from, to, n)          │
+//!            └─────────────────────────────────────────────────────┘
+//! ```
+//!
+//! The same control shape runs at two levels: in-process (this module,
+//! moving *workers* between scheduling contexts without quiescing the
+//! runtime — see [`crate::taskrt::Runtime::move_workers`]) and across
+//! processes ([`crate::cluster::autoscale`], spawning and retiring
+//! `compar serve` shards behind the router). Both report through the
+//! protocol-v5 `autoscale_status` request.
+//!
+//! Layers:
+//! * [`policy`] — [`ScalePolicy`] + the threshold/hysteresis/cooldown
+//!   implementation and its property tests.
+//! * this module — the sampling loop, per-context limits and SLOs, and
+//!   the live status the serve layer exposes.
+
+pub mod policy;
+
+pub use policy::{CtxSample, ScaleAction, ScalePolicy, Threshold, ThresholdConfig, TokenBucket};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::taskrt::{CtxId, CtxLoad, Runtime};
+
+/// What the control loop needs from the thing it scales. [`Runtime`]
+/// implements it directly; the serve layer adapts its shared state.
+pub trait ScaleTarget: Send + Sync {
+    /// Per-context load samples (see [`CtxLoad`]).
+    fn loads(&self) -> Vec<CtxLoad>;
+    /// Migrate up to `n` workers; returns how many actually moved.
+    fn move_workers(&self, from: CtxId, to: CtxId, n: usize) -> Result<usize>;
+}
+
+impl ScaleTarget for Runtime {
+    fn loads(&self) -> Vec<CtxLoad> {
+        self.context_loads()
+    }
+
+    fn move_workers(&self, from: CtxId, to: CtxId, n: usize) -> Result<usize> {
+        Runtime::move_workers(self, from, to, n)
+    }
+}
+
+/// Per-context limits (`--scale-min` / `--scale-max` / `--slo-ms`).
+#[derive(Debug, Clone, Copy)]
+pub struct CtxLimits {
+    pub min: usize,
+    /// `usize::MAX` = unbounded.
+    pub max: usize,
+    pub slo_ms: Option<f64>,
+}
+
+/// Control-loop configuration (`compar serve --autoscale ...`).
+#[derive(Debug, Clone)]
+pub struct AutoscaleOptions {
+    /// Sampling period of the control loop.
+    pub period: Duration,
+    /// Token-bucket refill window (`--cooldown-ms`).
+    pub cooldown: Duration,
+    /// Actions allowed per cooldown window.
+    pub burst: usize,
+    /// Pressure (outstanding tasks per worker) triggering scale-up.
+    pub high: f64,
+    /// Pressure at or below which a context may donate workers.
+    pub low: f64,
+    /// Consecutive pressured samples before acting (hysteresis).
+    pub sustain: usize,
+    /// Default floor for every context (`--scale-min`).
+    pub min_workers: usize,
+    /// Default ceiling (`--scale-max`; 0 = unbounded).
+    pub max_workers: usize,
+    /// Default latency SLO (`--slo-ms`; modeled backlog beyond it is
+    /// pressure even below the queue-depth band).
+    pub slo_ms: Option<f64>,
+    /// Per-context overrides, keyed by context name.
+    pub per_ctx: HashMap<String, CtxLimits>,
+}
+
+impl Default for AutoscaleOptions {
+    fn default() -> AutoscaleOptions {
+        AutoscaleOptions {
+            period: Duration::from_millis(50),
+            cooldown: Duration::from_millis(250),
+            burst: 1,
+            high: 2.0,
+            low: 0.5,
+            sustain: 2,
+            min_workers: 1,
+            max_workers: 0,
+            slo_ms: None,
+            per_ctx: HashMap::new(),
+        }
+    }
+}
+
+impl AutoscaleOptions {
+    fn limits_for(&self, name: &str) -> CtxLimits {
+        self.per_ctx.get(name).copied().unwrap_or(CtxLimits {
+            min: self.min_workers,
+            max: if self.max_workers == 0 {
+                usize::MAX
+            } else {
+                self.max_workers
+            },
+            slo_ms: self.slo_ms,
+        })
+    }
+}
+
+/// One context in the live status (`autoscale_status`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CtxStatus {
+    pub name: String,
+    pub workers: usize,
+    pub home: usize,
+    pub min: usize,
+    /// 0 encodes "unbounded" on the wire.
+    pub max: usize,
+    pub queue_depth: usize,
+    /// 0.0 encodes "no SLO".
+    pub slo_ms: f64,
+}
+
+/// Live view of the control loop, served through `autoscale_status`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AutoscaleStatus {
+    pub enabled: bool,
+    pub policy: String,
+    /// Scale actions executed (each one worker-migration batch).
+    pub moves: u64,
+    /// Workers migrated in total.
+    pub moved_workers: u64,
+    /// Human-readable description of the last executed action.
+    pub last_action: Option<String>,
+    pub contexts: Vec<CtxStatus>,
+}
+
+/// State shared between the control-loop thread and status readers
+/// (the serve layer holds one of these per server).
+pub struct AutoscaleShared {
+    stop: AtomicBool,
+    status: Mutex<AutoscaleStatus>,
+    /// Live SLO declarations (protocol v5): context name -> declaring
+    /// session -> target. Session-scoped — a declaration is dropped
+    /// when its session ends, so one aggressive short-lived client
+    /// cannot skew the control loop forever. The tightest live
+    /// declaration (and the configured default) wins.
+    slo: Mutex<HashMap<String, HashMap<u64, f64>>>,
+}
+
+impl AutoscaleShared {
+    pub fn status(&self) -> AutoscaleStatus {
+        self.status.lock().unwrap().clone()
+    }
+
+    /// Register session `sid`'s declared target for `ctx` (a session
+    /// re-declaring keeps only its latest value).
+    pub fn tighten_slo(&self, ctx: &str, sid: u64, ms: f64) {
+        if ms.is_nan() || ms <= 0.0 {
+            return;
+        }
+        self.slo
+            .lock()
+            .unwrap()
+            .entry(ctx.to_string())
+            .or_default()
+            .insert(sid, ms);
+    }
+
+    /// Drop every declaration session `sid` made (session end).
+    pub fn release_session(&self, sid: u64) {
+        let mut slo = self.slo.lock().unwrap();
+        slo.retain(|_, by_session| {
+            by_session.remove(&sid);
+            !by_session.is_empty()
+        });
+    }
+
+    /// Effective SLO for `ctx`: the tightest of the configured default
+    /// and the live session-declared targets.
+    pub fn effective_slo(&self, ctx: &str, configured: Option<f64>) -> Option<f64> {
+        let slo = self.slo.lock().unwrap();
+        let declared = slo.get(ctx).and_then(|by_session| {
+            let min = by_session.values().copied().fold(f64::INFINITY, f64::min);
+            min.is_finite().then_some(min)
+        });
+        drop(slo);
+        match (configured, declared) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+}
+
+/// The elastic control loop: samples a [`ScaleTarget`], runs a
+/// [`ScalePolicy`], executes the actions. Owns its thread; stopping
+/// (or dropping) joins it.
+pub struct Autoscaler {
+    shared: Arc<AutoscaleShared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Autoscaler {
+    pub fn start(target: Arc<dyn ScaleTarget>, opts: AutoscaleOptions) -> Autoscaler {
+        let shared = Arc::new(AutoscaleShared {
+            stop: AtomicBool::new(false),
+            status: Mutex::new(AutoscaleStatus {
+                enabled: true,
+                policy: "threshold".into(),
+                ..AutoscaleStatus::default()
+            }),
+            slo: Mutex::new(HashMap::new()),
+        });
+        let handle = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("autoscale".into())
+                .spawn(move || control_loop(target, opts, shared))
+                .expect("spawning autoscale thread")
+        };
+        Autoscaler {
+            shared,
+            handle: Some(handle),
+        }
+    }
+
+    /// The shared status handle (for the serve layer's
+    /// `autoscale_status` path).
+    pub fn shared(&self) -> Arc<AutoscaleShared> {
+        self.shared.clone()
+    }
+
+    pub fn status(&self) -> AutoscaleStatus {
+        self.shared.status()
+    }
+
+    /// Stop the loop and join its thread.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Autoscaler {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+fn control_loop(
+    target: Arc<dyn ScaleTarget>,
+    opts: AutoscaleOptions,
+    shared: Arc<AutoscaleShared>,
+) {
+    let mut policy = Threshold::new(ThresholdConfig {
+        high: opts.high,
+        low: opts.low,
+        sustain: opts.sustain,
+        cooldown: opts.cooldown,
+        burst: opts.burst,
+    });
+    // home sizes: the partition the operator configured at startup
+    let mut homes: HashMap<CtxId, usize> = HashMap::new();
+    let mut last = Instant::now();
+    while !shared.stop.load(Ordering::SeqCst) {
+        let loads = target.loads();
+        let samples: Vec<CtxSample> = loads
+            .iter()
+            .map(|l| {
+                let home = *homes.entry(l.id).or_insert(l.workers);
+                let limits = opts.limits_for(&l.name);
+                CtxSample {
+                    ctx: l.id,
+                    name: l.name.clone(),
+                    workers: l.workers,
+                    queue_depth: l.queue_depth,
+                    busy: l.busy,
+                    queued_secs: l.queued_secs,
+                    tenants: l.tenants,
+                    home,
+                    // the configured floor stands as declared: a floor
+                    // above the current size simply means the context
+                    // never donates (the loop does not grow contexts to
+                    // meet floors — that is the operator's partitioning)
+                    min: limits.min,
+                    max: limits.max,
+                    slo_ms: shared.effective_slo(&l.name, limits.slo_ms),
+                }
+            })
+            .collect();
+        let now = Instant::now();
+        let dt = now.duration_since(last);
+        last = now;
+        let actions = policy.decide(&samples, dt);
+        let mut executed: Option<String> = None;
+        let mut moved = 0usize;
+        for a in actions {
+            let ScaleAction::Move { from, to, n } = a;
+            if let Ok(k) = target.move_workers(from, to, n) {
+                if k > 0 {
+                    moved += k;
+                    let name = |id: CtxId| {
+                        samples
+                            .iter()
+                            .find(|s| s.ctx == id)
+                            .map(|s| s.name.clone())
+                            .unwrap_or_else(|| format!("ctx{id}"))
+                    };
+                    executed = Some(format!("moved {k} worker(s) {} -> {}", name(from), name(to)));
+                }
+            }
+        }
+        {
+            let mut st = shared.status.lock().unwrap();
+            if moved > 0 {
+                st.moves += 1;
+                st.moved_workers += moved as u64;
+                st.last_action = executed;
+            }
+            st.contexts = samples
+                .iter()
+                .map(|s| CtxStatus {
+                    name: s.name.clone(),
+                    workers: s.workers,
+                    home: s.home,
+                    min: s.min,
+                    max: if s.max == usize::MAX { 0 } else { s.max },
+                    queue_depth: s.queue_depth,
+                    slo_ms: s.slo_ms.unwrap_or(0.0),
+                })
+                .collect();
+        }
+        // sleep in small slices so stop is observed promptly
+        let deadline = Instant::now() + opts.period;
+        while Instant::now() < deadline && !shared.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(5).min(opts.period));
+        }
+    }
+}

@@ -1,0 +1,446 @@
+//! Scale policies: given per-context load samples, decide which elastic
+//! actions to take. Pluggable behind [`ScalePolicy`], mirroring the
+//! selection engine's shape (a small closed set, picked by config).
+//!
+//! The shipped [`Threshold`] policy is deliberately boring control
+//! theory: pressure bands with hysteresis (an action needs `sustain`
+//! consecutive pressured samples, so one noisy snapshot never moves a
+//! worker) plus a token-bucket cooldown (at most `burst` actions per
+//! cooldown window, so the loop cannot flap workers back and forth
+//! faster than the runtime can observe the effect). Time is passed in
+//! explicitly (`dt`) rather than read from a wall clock, so decisions
+//! are deterministic and property-testable.
+
+use std::time::Duration;
+
+use crate::taskrt::CtxId;
+
+/// One scheduling context as the policy sees it: the runtime's
+/// [`crate::taskrt::CtxLoad`] plus the operator-configured limits.
+#[derive(Debug, Clone)]
+pub struct CtxSample {
+    pub ctx: CtxId,
+    pub name: String,
+    /// Current member workers.
+    pub workers: usize,
+    /// Tasks pushed, not yet popped.
+    pub queue_depth: usize,
+    /// Members currently executing a task.
+    pub busy: usize,
+    /// Modeled backlog seconds on the least-loaded member.
+    pub queued_secs: f64,
+    /// Serve-layer sessions sharing the runtime (co-tenancy; policies
+    /// may weigh multi-tenant contexts differently).
+    pub tenants: usize,
+    /// Worker count when the control loop started — the "home" size
+    /// calm rebalancing drifts back to.
+    pub home: usize,
+    /// Floor: this context never donates below `min` workers.
+    pub min: usize,
+    /// Ceiling: this context never grows above `max` workers.
+    pub max: usize,
+    /// Latency SLO target; modeled backlog beyond it counts as
+    /// pressure even when the queue-depth band does not.
+    pub slo_ms: Option<f64>,
+}
+
+impl CtxSample {
+    /// Outstanding work per worker — the banded pressure signal.
+    pub fn pressure(&self) -> f64 {
+        (self.queue_depth + self.busy) as f64 / self.workers.max(1) as f64
+    }
+
+    /// The SLO term: best-case modeled wait already exceeds the target.
+    pub fn slo_violated(&self) -> bool {
+        match self.slo_ms {
+            Some(ms) => self.queued_secs * 1e3 > ms,
+            None => false,
+        }
+    }
+}
+
+/// One elastic action. Every action *moves* capacity — none creates or
+/// destroys it — so the total worker count is conserved by construction
+/// (the property tests pin this down).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    Move { from: CtxId, to: CtxId, n: usize },
+}
+
+/// A scale policy: consumes load samples, emits actions. `dt` is the
+/// time elapsed since the previous call; it drives the cooldown, so a
+/// test can replay a schedule deterministically.
+pub trait ScalePolicy: Send {
+    fn name(&self) -> &'static str;
+    fn decide(&mut self, samples: &[CtxSample], dt: Duration) -> Vec<ScaleAction>;
+}
+
+/// Token bucket: at most `capacity` actions per `cooldown` refill
+/// window. Shared by the in-process worker scaler and the cluster
+/// shard scaler.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    capacity: f64,
+    tokens: f64,
+    cooldown: Duration,
+}
+
+impl TokenBucket {
+    /// Starts full, so the first pressured sample can act immediately.
+    pub fn new(capacity: usize, cooldown: Duration) -> TokenBucket {
+        let capacity = capacity.max(1) as f64;
+        TokenBucket {
+            capacity,
+            tokens: capacity,
+            cooldown,
+        }
+    }
+
+    /// Refill for `dt` of elapsed time (one token per cooldown window).
+    pub fn advance(&mut self, dt: Duration) {
+        if self.cooldown.is_zero() {
+            self.tokens = self.capacity;
+            return;
+        }
+        let refill = dt.as_secs_f64() / self.cooldown.as_secs_f64();
+        self.tokens = (self.tokens + refill).min(self.capacity);
+    }
+
+    /// Consume one token if available.
+    pub fn try_take(&mut self) -> bool {
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Configuration of the [`Threshold`] policy.
+#[derive(Debug, Clone)]
+pub struct ThresholdConfig {
+    /// Pressure (outstanding tasks per worker) at which a context wants
+    /// more workers.
+    pub high: f64,
+    /// Pressure at or below which a context may donate workers.
+    pub low: f64,
+    /// Consecutive pressured samples required before acting
+    /// (hysteresis).
+    pub sustain: usize,
+    /// Token-bucket refill window.
+    pub cooldown: Duration,
+    /// Token-bucket capacity (actions per cooldown window).
+    pub burst: usize,
+}
+
+impl Default for ThresholdConfig {
+    fn default() -> ThresholdConfig {
+        ThresholdConfig {
+            high: 2.0,
+            low: 0.5,
+            sustain: 2,
+            cooldown: Duration::from_millis(250),
+            burst: 1,
+        }
+    }
+}
+
+/// Threshold hysteresis with a token-bucket cooldown; also drifts
+/// worker counts back to their home sizes once every context is calm.
+pub struct Threshold {
+    cfg: ThresholdConfig,
+    bucket: TokenBucket,
+    /// ctx id -> consecutive samples over the high band.
+    hot_streak: Vec<usize>,
+    /// Consecutive samples where *every* context was calm.
+    calm_streak: usize,
+}
+
+impl Threshold {
+    pub fn new(cfg: ThresholdConfig) -> Threshold {
+        let bucket = TokenBucket::new(cfg.burst, cfg.cooldown);
+        Threshold {
+            cfg,
+            bucket,
+            hot_streak: Vec::new(),
+            calm_streak: 0,
+        }
+    }
+
+    fn streak(&mut self, ctx: CtxId) -> &mut usize {
+        if self.hot_streak.len() <= ctx {
+            self.hot_streak.resize(ctx + 1, 0);
+        }
+        &mut self.hot_streak[ctx]
+    }
+
+    /// How many workers the receiver needs to come back under the high
+    /// band (at least one).
+    fn deficit(&self, s: &CtxSample) -> usize {
+        let outstanding = (s.queue_depth + s.busy) as f64;
+        let want = (outstanding / self.cfg.high).ceil() as usize;
+        want.saturating_sub(s.workers).max(1)
+    }
+}
+
+impl ScalePolicy for Threshold {
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+
+    fn decide(&mut self, samples: &[CtxSample], dt: Duration) -> Vec<ScaleAction> {
+        self.bucket.advance(dt);
+        let (high, sustain) = (self.cfg.high, self.cfg.sustain);
+        // 1) classify and update hysteresis streaks
+        let mut hottest: Option<&CtxSample> = None;
+        let mut any_hot = false;
+        for s in samples {
+            let hot = (s.pressure() >= high || s.slo_violated()) && s.workers < s.max;
+            let streak = {
+                let e = self.streak(s.ctx);
+                *e = if hot { *e + 1 } else { 0 };
+                *e
+            };
+            any_hot = any_hot || hot;
+            if hot
+                && streak >= sustain
+                && hottest
+                    .map(|h| s.pressure() > h.pressure())
+                    .unwrap_or(true)
+            {
+                hottest = Some(s);
+            }
+        }
+
+        // 2) a sustained-hot context pulls workers from the calmest
+        //    donor that sits above its floor
+        if let Some(recv) = hottest {
+            self.calm_streak = 0;
+            let donor = samples
+                .iter()
+                .filter(|s| s.ctx != recv.ctx && s.workers > s.min && s.pressure() <= self.cfg.low)
+                .min_by(|a, b| a.pressure().partial_cmp(&b.pressure()).unwrap());
+            if let Some(donor) = donor {
+                let n = self
+                    .deficit(recv)
+                    .min(donor.workers - donor.min)
+                    .min(recv.max - recv.workers);
+                if n > 0 && self.bucket.try_take() {
+                    return vec![ScaleAction::Move {
+                        from: donor.ctx,
+                        to: recv.ctx,
+                        n,
+                    }];
+                }
+            }
+            return Vec::new();
+        }
+
+        // 3) everyone calm: drift back to home sizes (the borrowed
+        //    workers return once the burst has drained). An SLO still
+        //    in violation is not calm — giving its workers back now
+        //    would re-trigger the scale-up on the next samples, the
+        //    exact flapping the hysteresis exists to prevent.
+        let all_calm = samples
+            .iter()
+            .all(|s| s.pressure() <= self.cfg.low && !s.slo_violated());
+        if !all_calm || any_hot {
+            self.calm_streak = 0;
+            return Vec::new();
+        }
+        self.calm_streak += 1;
+        if self.calm_streak < self.cfg.sustain {
+            return Vec::new();
+        }
+        let over = samples
+            .iter()
+            .filter(|s| s.workers > s.home && s.workers > s.min)
+            .max_by_key(|s| s.workers - s.home);
+        let under = samples
+            .iter()
+            .filter(|s| s.workers < s.home && s.workers < s.max)
+            .max_by_key(|s| s.home - s.workers);
+        if let (Some(over), Some(under)) = (over, under) {
+            let n = (over.workers - over.home)
+                .min(over.workers - over.min)
+                .min(under.home - under.workers)
+                .min(under.max - under.workers);
+            if n > 0 && self.bucket.try_take() {
+                return vec![ScaleAction::Move {
+                    from: over.ctx,
+                    to: under.ctx,
+                    n,
+                }];
+            }
+        }
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(ctx: usize, workers: usize, depth: usize) -> CtxSample {
+        CtxSample {
+            ctx,
+            name: format!("c{ctx}"),
+            workers,
+            queue_depth: depth,
+            busy: 0,
+            queued_secs: 0.0,
+            tenants: 0,
+            home: workers,
+            min: 1,
+            max: usize::MAX,
+            slo_ms: None,
+        }
+    }
+
+    fn cfg(sustain: usize, cooldown_ms: u64) -> ThresholdConfig {
+        ThresholdConfig {
+            high: 2.0,
+            low: 0.5,
+            sustain,
+            cooldown: Duration::from_millis(cooldown_ms),
+            burst: 1,
+        }
+    }
+
+    #[test]
+    fn pressured_context_pulls_from_idle_donor() {
+        let mut p = Threshold::new(cfg(2, 100));
+        let samples = vec![sample(0, 2, 0), sample(1, 2, 12)];
+        let dt = Duration::from_millis(50);
+        // first sample: hysteresis holds the action back
+        assert!(p.decide(&samples, dt).is_empty(), "one sample must not act");
+        let actions = p.decide(&samples, dt);
+        // deficit is 4 (ceil(12/2) wanted, has 2) but the donor's floor
+        // caps the grant at one worker
+        assert_eq!(actions, vec![ScaleAction::Move { from: 0, to: 1, n: 1 }]);
+    }
+
+    #[test]
+    fn slo_violation_counts_as_pressure() {
+        let mut p = Threshold::new(cfg(1, 100));
+        let mut hot = sample(1, 2, 1); // below the queue-depth band
+        hot.queued_secs = 0.050;
+        hot.slo_ms = Some(10.0);
+        let actions = p.decide(&[sample(0, 2, 0), hot], Duration::from_millis(50));
+        assert_eq!(actions.len(), 1, "SLO breach must trigger a move");
+    }
+
+    #[test]
+    fn calm_cluster_rebalances_to_home_sizes() {
+        let mut p = Threshold::new(cfg(1, 50));
+        // ctx1 borrowed two workers (home 2, now 4); everyone idle
+        let mut borrowed = sample(1, 4, 0);
+        borrowed.home = 2;
+        let mut lender = sample(0, 2, 0);
+        lender.home = 4;
+        let dt = Duration::from_millis(100);
+        let actions = p.decide(&[lender.clone(), borrowed.clone()], dt);
+        assert_eq!(actions, vec![ScaleAction::Move { from: 1, to: 0, n: 2 }]);
+    }
+
+    #[test]
+    fn donor_floor_is_respected() {
+        let mut p = Threshold::new(cfg(1, 50));
+        let mut donor = sample(0, 2, 0);
+        donor.min = 2; // at its floor: nothing to give
+        let actions = p.decide(&[donor, sample(1, 2, 40)], Duration::from_millis(100));
+        assert!(actions.is_empty(), "a donor at its floor must not shrink");
+    }
+
+    /// Property: over random sample streams, applying every emitted
+    /// action to a model cluster conserves the total worker count, never
+    /// drops a donor below its floor, and never grows a receiver past
+    /// its ceiling. (Hand-rolled quickcheck style — proptest is not
+    /// available offline; shapes follow tests/properties.rs.)
+    #[test]
+    fn prop_actions_conserve_workers_and_respect_bounds() {
+        let mut rng = Rng::new(0x5ca1e);
+        for case in 0..64 {
+            let n_ctx = 2 + rng.below(4);
+            let mut workers: Vec<usize> = (0..n_ctx).map(|_| 1 + rng.below(6)).collect();
+            let homes = workers.clone();
+            let mins: Vec<usize> = workers.iter().map(|&w| 1 + rng.below(w)).collect();
+            let maxs: Vec<usize> = workers.iter().map(|&w| w + rng.below(8)).collect();
+            let total: usize = workers.iter().sum();
+            let mut p = Threshold::new(cfg(1 + rng.below(3), 10));
+            for step in 0..40 {
+                let samples: Vec<CtxSample> = (0..n_ctx)
+                    .map(|c| {
+                        let mut s = sample(c, workers[c], rng.below(20));
+                        s.home = homes[c];
+                        s.min = mins[c];
+                        s.max = maxs[c];
+                        s
+                    })
+                    .collect();
+                let dt = Duration::from_millis(rng.below(30) as u64);
+                for a in p.decide(&samples, dt) {
+                    let ScaleAction::Move { from, to, n } = a;
+                    assert!(n >= 1, "case {case} step {step}: empty move");
+                    assert!(from != to, "case {case} step {step}: self-move");
+                    workers[from] -= n;
+                    workers[to] += n;
+                    assert!(
+                        workers[from] >= mins[from],
+                        "case {case} step {step}: ctx {from} below floor"
+                    );
+                    assert!(
+                        workers[to] <= maxs[to],
+                        "case {case} step {step}: ctx {to} above ceiling"
+                    );
+                }
+                assert_eq!(
+                    workers.iter().sum::<usize>(),
+                    total,
+                    "case {case} step {step}: workers created or destroyed"
+                );
+            }
+        }
+    }
+
+    /// Property: with a capacity-1 bucket, two actions are never closer
+    /// than the cooldown window (measured in accumulated `dt`).
+    #[test]
+    fn prop_cooldown_spaces_actions() {
+        let mut rng = Rng::new(0xc001);
+        for _ in 0..32 {
+            let cooldown_ms = 50 + rng.below(200) as u64;
+            let mut p = Threshold::new(ThresholdConfig {
+                sustain: 1,
+                cooldown: Duration::from_millis(cooldown_ms),
+                burst: 1,
+                ..ThresholdConfig::default()
+            });
+            // drain the initial token so every action is refill-paced
+            let primed = vec![sample(0, 4, 0), sample(1, 1, 40)];
+            assert_eq!(p.decide(&primed, Duration::ZERO).len(), 1);
+            let mut clock_ms = 0u64;
+            let mut last_action: Option<u64> = None;
+            for _ in 0..200 {
+                let dt = rng.below(20) as u64;
+                clock_ms += dt;
+                // keep ctx1 permanently starved so only the bucket gates
+                let samples = vec![sample(0, 4, 0), sample(1, 1, 40)];
+                let acted = !p.decide(&samples, Duration::from_millis(dt)).is_empty();
+                if acted {
+                    if let Some(prev) = last_action {
+                        assert!(
+                            clock_ms - prev >= cooldown_ms,
+                            "actions {prev} ms and {clock_ms} ms violate the \
+                             {cooldown_ms} ms cooldown"
+                        );
+                    }
+                    last_action = Some(clock_ms);
+                }
+            }
+            assert!(last_action.is_some(), "the loop never acted at all");
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Elastic-scaling bench (`compar bench autoscale`): the bursty-load
+//! scenario behind the autoscale work, measured at both levels.
+//!
+//! **Context elasticity** — one server, a small `hot` context plus a
+//! `pool` context, and a pipelined burst aimed exclusively at `hot`.
+//! With `--autoscale` off the burst queues behind two workers; with it
+//! on, the control loop migrates pool workers in (observed via the v5
+//! `autoscale_status` request) and p95 drops. After the burst drains,
+//! the borrowed workers return to their home context.
+//!
+//! **Shard elasticity** — a two-shard elastic cluster under burst load:
+//! the router spawns a third shard (gossip-seeded, so it joins already
+//! calibrated), then retires it once the load goes away — with zero
+//! failed client requests throughout.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::autoscale::AutoscaleOptions;
+use crate::cluster::{ClusterScaleOptions, LocalCluster, RouterOptions};
+use crate::serve::protocol::AutoscaleResp;
+use crate::serve::{loadgen, Client, LoadgenOptions, ServeOptions, Server};
+use crate::util::stats::fmt_time;
+
+/// Outcome of the context-elasticity scenario (one autoscale setting).
+#[derive(Debug, Clone)]
+pub struct ContextRun {
+    pub autoscale: bool,
+    pub p95: f64,
+    pub rps: f64,
+    pub errors: usize,
+    /// Scale actions the control loop executed (0 when off).
+    pub moves: u64,
+    pub moved_workers: u64,
+    /// `hot` context's worker count after the burst drained.
+    pub hot_workers_after: usize,
+    /// `hot`'s home (configured) worker count.
+    pub hot_home: usize,
+}
+
+fn hot_pool_serve(autoscale: bool) -> Result<ServeOptions> {
+    let mut so = ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        contexts: crate::serve::parse_contexts("hot:2,pool:4")?,
+        ..ServeOptions::default()
+    };
+    if autoscale {
+        so.autoscale = Some(AutoscaleOptions {
+            period: Duration::from_millis(20),
+            cooldown: Duration::from_millis(100),
+            sustain: 2,
+            ..AutoscaleOptions::default()
+        });
+    }
+    Ok(so)
+}
+
+/// Run the bursty one-context workload with autoscaling off or on.
+pub fn context_run(autoscale: bool, smoke: bool) -> Result<ContextRun> {
+    let server = Server::start(hot_pool_serve(autoscale)?)?;
+    let addr = server.local_addr().to_string();
+    let lg = LoadgenOptions {
+        clients: 4,
+        requests: if smoke { 20 } else { 60 },
+        app: "matmul".into(),
+        // heavy enough (a few ms per task) that the pipelined burst
+        // builds a queue the control loop can observe and relieve
+        size: 192,
+        pipeline: 8,
+        ctxs: vec!["hot".into()],
+        verify: false,
+        ..LoadgenOptions::default()
+    };
+    let report = loadgen::run(&addr, &lg)?;
+    // the v5 status, over the wire (exercises the protocol path)
+    let status: AutoscaleResp = {
+        let mut c = Client::connect(&addr)?;
+        let s = c.autoscale_status()?;
+        let _ = c.quit();
+        s
+    };
+    // after the drain, borrowed workers must return home
+    let (hot_home, hot_after) = if autoscale {
+        let deadline = Instant::now() + Duration::from_secs(15);
+        loop {
+            let hot = server
+                .context_table()
+                .into_iter()
+                .find(|(name, _)| name == "hot")
+                .map(|(_, w)| w.len())
+                .unwrap_or(0);
+            if hot == 2 || Instant::now() >= deadline {
+                break (2, hot);
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    } else {
+        (2, 2)
+    };
+    server.shutdown()?;
+    Ok(ContextRun {
+        autoscale,
+        p95: report.p95,
+        rps: report.rps,
+        errors: report.errors,
+        moves: status.moves,
+        moved_workers: status.moved_workers,
+        hot_workers_after: hot_after,
+        hot_home,
+    })
+}
+
+/// Outcome of the shard-elasticity scenario.
+#[derive(Debug, Clone)]
+pub struct ShardRun {
+    pub spawned: u64,
+    pub retired: u64,
+    /// Shards in the table when the run ended (live, non-retired).
+    pub final_shards: u64,
+    /// Failed client requests across every load phase (must be 0).
+    pub errors: usize,
+}
+
+/// Two-shard elastic cluster: burst load spawns a third shard, idleness
+/// retires one again; every client request must succeed throughout.
+pub fn shard_run(smoke: bool) -> Result<ShardRun> {
+    let serve = ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        ncpu: 2,
+        ncuda: 0,
+        ..ServeOptions::default()
+    };
+    let ropts = RouterOptions {
+        listen: "127.0.0.1:0".into(),
+        health_period: Duration::from_millis(100),
+        gossip_period: Duration::from_millis(150),
+        ..RouterOptions::default()
+    };
+    let scale = ClusterScaleOptions {
+        min_shards: 1,
+        max_shards: 3,
+        up_load: 3,
+        down_load: 0,
+        sustain: 1,
+        cooldown: Duration::from_millis(400),
+        period: Duration::from_millis(100),
+        ..ClusterScaleOptions::default()
+    };
+    let (cluster, launcher) = LocalCluster::start_elastic(2, &serve, ropts, scale)?;
+    let addr = cluster.addr();
+    let mut errors = 0usize;
+
+    // phase 1: burst — enough sustained in-flight load to cross the
+    // spawn band (load is polled from shard stats, so keep pressure on
+    // until the router reacts)
+    let lg = LoadgenOptions {
+        clients: 6,
+        requests: if smoke { 25 } else { 60 },
+        app: "matmul".into(),
+        // a couple of ms per request keeps the health poll's in-flight
+        // gauge visibly above the spawn band for the whole burst
+        size: 128,
+        tasks: 2,
+        pipeline: 8,
+        verify: false,
+        ..LoadgenOptions::default()
+    };
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut spawned = 0u64;
+    while Instant::now() < deadline {
+        let report = loadgen::run(&addr, &lg)?;
+        errors += report.errors;
+        (spawned, _) = cluster.router.scale_counters();
+        if spawned >= 1 {
+            break;
+        }
+    }
+    if spawned == 0 {
+        launcher.shutdown_all();
+        let _ = cluster.shutdown();
+        return Err(anyhow!("burst load never triggered a shard spawn"));
+    }
+
+    // phase 2: idle — the scaler should retire back down
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut retired = 0u64;
+    while Instant::now() < deadline {
+        (_, retired) = cluster.router.scale_counters();
+        if retired >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    // phase 3: the (possibly shrunk) cluster still serves flawlessly
+    let tail = LoadgenOptions {
+        clients: 2,
+        requests: 6,
+        app: "matmul".into(),
+        size: 48,
+        verify: true,
+        ..LoadgenOptions::default()
+    };
+    let report = loadgen::run(&addr, &tail).context("post-retire load")?;
+    errors += report.errors;
+
+    let final_shards = cluster
+        .router
+        .shards()
+        .iter()
+        .filter(|d| !d.draining)
+        .count() as u64;
+    launcher.shutdown_all();
+    cluster.shutdown()?;
+    Ok(ShardRun {
+        spawned,
+        retired,
+        final_shards,
+        errors,
+    })
+}
+
+pub fn render(off: &ContextRun, on: &ContextRun, shards: &ShardRun) -> String {
+    let mut out = String::new();
+    out.push_str("== compar bench autoscale ==\n");
+    out.push_str("context elasticity (burst on 'hot:2', pool 4 workers):\n");
+    for r in [off, on] {
+        out.push_str(&format!(
+            "  autoscale {:3}  p95 {:>9}  {:7.1} req/s  errors {}  moves {} ({} worker(s))\n",
+            if r.autoscale { "on" } else { "off" },
+            fmt_time(r.p95),
+            r.rps,
+            r.errors,
+            r.moves,
+            r.moved_workers,
+        ));
+    }
+    out.push_str(&format!(
+        "  p95 ratio on/off: {:.2}  (hot context after drain: {}/{} workers)\n",
+        on.p95 / off.p95.max(1e-12),
+        on.hot_workers_after,
+        on.hot_home,
+    ));
+    out.push_str(&format!(
+        "shard elasticity: spawned {}  retired {}  final shards {}  errors {}\n",
+        shards.spawned, shards.retired, shards.final_shards, shards.errors
+    ));
+    out
+}

@@ -54,6 +54,7 @@ pub fn run(
         health_period: Duration::from_millis(150),
         gossip_period: Duration::from_millis(150),
         gossip,
+        autoscale: None,
     };
     let cluster = LocalCluster::start(shards, serve, ropts)?;
     let report = loadgen::run(&cluster.addr(), load)?;

@@ -6,8 +6,11 @@
 //! * [`serve_bench`] — serving-path throughput/latency (BENCH_serve.json);
 //! * [`cluster_bench`] — sharded serving: aggregate req/s + cross-shard
 //!   selection regret, gossip off vs on;
+//! * [`autoscale_bench`] — elastic scaling: bursty-load p95 with the
+//!   autoscaler off vs on, plus shard spawn/retire under burst;
 //! * [`report`] — the plain-text table renderer.
 
+pub mod autoscale_bench;
 pub mod cluster_bench;
 pub mod fig1;
 pub mod report;

@@ -349,9 +349,12 @@ fn contended_run(kind: &SelectorKind, steps: usize) -> ContendedOutcome {
     let mut hits = 0usize;
     let mut decided = 0usize;
     for step in 0..steps {
-        // alternate 4-step idle / 4-step contended phases
+        // alternate 4-step idle / 4-step contended phases (at most one
+        // in-flight task per worker — the occupancy invariant the
+        // autoscale counter audit asserts; the queue depth carries the
+        // contended band)
         let contended = (step / 4) % 2 == 1;
-        let (inflight, depth): (usize, isize) = if contended { (2, 4) } else { (0, 0) };
+        let (inflight, depth): (usize, isize) = if contended { (1, 5) } else { (0, 0) };
         ctx.running[1].store(inflight, Ordering::Relaxed);
         ctx.pending.store(depth, Ordering::Relaxed);
         let Some((w, i, _)) = Dmda::place(&task, &ctx, |_, _, _| 0.0) else {

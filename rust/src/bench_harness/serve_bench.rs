@@ -92,6 +92,14 @@ pub fn to_json(
         "policy".into(),
         Json::Str(load.policy.clone().unwrap_or_else(|| "context".into())),
     );
+    knobs.insert(
+        "profile".into(),
+        Json::Str(
+            load.profile
+                .map(|p| p.name())
+                .unwrap_or_else(|| "closed-loop".into()),
+        ),
+    );
     knobs.insert("contexts".into(), Json::Str(contexts.to_string()));
     m.insert("config".into(), Json::Obj(knobs));
     m.insert("load".into(), loadgen::to_json(report));

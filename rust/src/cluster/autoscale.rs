@@ -1,0 +1,220 @@
+//! Shard-level elastic scaling: spawn a new `compar serve` process (or
+//! retire the least-loaded one) when the cluster's aggregate load
+//! crosses the policy bands — the cross-process twin of the in-process
+//! worker migration in [`crate::autoscale`].
+//!
+//! The router's scale loop (see [`super::router`]) owns the decisions;
+//! this module supplies its configuration and the [`ShardLauncher`]
+//! abstraction over *how* shards come and go: a real child process
+//! (`compar serve` via [`ProcessLauncher`], the production path) or an
+//! in-process [`crate::serve::Server`] ([`InProcessLauncher`], tests
+//! and `loadgen --shards`). A spawned shard is gossip-seeded with the
+//! merged perf models of the existing shards *before* it enters the
+//! rotation, so it serves its first request already calibrated.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::{Client, ServeOptions, Server};
+
+/// Shard-scaling configuration (`compar route --autoscale ...`).
+#[derive(Debug, Clone)]
+pub struct ClusterScaleOptions {
+    /// Never retire below this many live shards.
+    pub min_shards: usize,
+    /// Never spawn above this many live shards.
+    pub max_shards: usize,
+    /// Per-available-shard load (in-flight + runtime queue depth, the
+    /// health poll's snapshot features) at which the cluster wants a
+    /// new shard.
+    pub up_load: u64,
+    /// Per-shard load at or below which the cluster retires one.
+    pub down_load: u64,
+    /// Consecutive pressured (or idle) rounds before acting.
+    pub sustain: usize,
+    /// Token-bucket refill window between scale actions.
+    pub cooldown: Duration,
+    /// Scale-loop sampling period.
+    pub period: Duration,
+    /// Worker count passed to process-spawned shards (`--spawn-ncpu`).
+    pub spawn_ncpu: usize,
+    /// Extra `compar serve` flags for process-spawned shards
+    /// (`--spawn-args "--contexts hot:2,pool:2 --selector contextual"`).
+    /// Spawned shards must match the existing shards' topology: a
+    /// request naming a scheduling context fails on a shard that does
+    /// not have it.
+    pub spawn_args: Vec<String>,
+}
+
+impl Default for ClusterScaleOptions {
+    fn default() -> ClusterScaleOptions {
+        ClusterScaleOptions {
+            min_shards: 1,
+            max_shards: 4,
+            up_load: 8,
+            down_load: 1,
+            sustain: 2,
+            cooldown: Duration::from_millis(1000),
+            period: Duration::from_millis(200),
+            spawn_ncpu: 2,
+            spawn_args: Vec::new(),
+        }
+    }
+}
+
+/// How the router brings shards up and down.
+pub trait ShardLauncher: Send + Sync {
+    /// Bring up a shard and return its address once it accepts
+    /// connections.
+    fn spawn(&self) -> Result<String>;
+    /// Gracefully stop the shard at `addr` (it drains first).
+    fn stop(&self, addr: &str) -> Result<()>;
+}
+
+/// Wait until `addr` accepts a TCP connection (readiness probe).
+fn wait_ready(addr: &str, timeout: Duration) -> Result<()> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if TcpStream::connect(addr).is_ok() {
+            return Ok(());
+        }
+        if Instant::now() >= deadline {
+            bail!("shard {addr} never came up within {timeout:?}");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Spawns real `compar serve` child processes — the production path of
+/// `compar route --autoscale`.
+pub struct ProcessLauncher {
+    exe: PathBuf,
+    ncpu: usize,
+    /// Extra `serve` flags so spawned shards match the existing shards'
+    /// topology (contexts, selector, scheduler, cap).
+    extra_args: Vec<String>,
+    children: Mutex<HashMap<String, Child>>,
+}
+
+impl ProcessLauncher {
+    /// Launch shards with this binary (`current_exe`) itself, passing
+    /// `extra_args` through to every spawned `compar serve`.
+    pub fn from_current_exe(ncpu: usize, extra_args: Vec<String>) -> Result<ProcessLauncher> {
+        Ok(ProcessLauncher {
+            exe: std::env::current_exe().context("resolving current executable")?,
+            ncpu: ncpu.max(1),
+            extra_args,
+            children: Mutex::new(HashMap::new()),
+        })
+    }
+}
+
+impl ShardLauncher for ProcessLauncher {
+    fn spawn(&self) -> Result<String> {
+        // reserve an ephemeral port, then hand it to the child. The
+        // small window between drop and the child's bind is racy in
+        // principle; a lost race fails the readiness probe and the
+        // scale loop simply retries on a later round.
+        let port = {
+            let probe = TcpListener::bind("127.0.0.1:0").context("probing for a free port")?;
+            probe.local_addr()?.port()
+        };
+        let addr = format!("127.0.0.1:{port}");
+        let child = Command::new(&self.exe)
+            .arg("serve")
+            .arg("--addr")
+            .arg(&addr)
+            .arg("--ncpu")
+            .arg(self.ncpu.to_string())
+            .args(&self.extra_args)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .with_context(|| format!("spawning {} serve", self.exe.display()))?;
+        if let Err(e) = wait_ready(&addr, Duration::from_secs(10)) {
+            let mut child = child;
+            let _ = child.kill();
+            let _ = child.wait();
+            return Err(e);
+        }
+        self.children.lock().unwrap().insert(addr.clone(), child);
+        Ok(addr)
+    }
+
+    fn stop(&self, addr: &str) -> Result<()> {
+        let child = self.children.lock().unwrap().remove(addr);
+        // graceful: the serve process drains in-flight work on shutdown
+        let sent = Client::connect_with_deadline(addr, Duration::from_secs(2))
+            .and_then(|mut c| c.shutdown_server());
+        if let Some(mut child) = child {
+            if sent.is_err() {
+                let _ = child.kill();
+            }
+            let _ = child.wait();
+        }
+        sent
+    }
+}
+
+impl Drop for ProcessLauncher {
+    fn drop(&mut self) {
+        for (_, mut child) in self.children.lock().unwrap().drain() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// Boots in-process [`Server`]s on ephemeral ports — tests, the bench
+/// harness and `loadgen --shards` with autoscaling.
+pub struct InProcessLauncher {
+    serve: ServeOptions,
+    servers: Mutex<HashMap<String, Server>>,
+}
+
+impl InProcessLauncher {
+    pub fn new(serve: ServeOptions) -> InProcessLauncher {
+        let mut serve = serve;
+        serve.addr = "127.0.0.1:0".into();
+        InProcessLauncher {
+            serve,
+            servers: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Drain every shard this launcher still owns (end-of-run cleanup).
+    pub fn shutdown_all(&self) {
+        for (_, server) in self.servers.lock().unwrap().drain() {
+            let _ = server.shutdown();
+        }
+    }
+}
+
+impl ShardLauncher for InProcessLauncher {
+    fn spawn(&self) -> Result<String> {
+        let server = Server::start(self.serve.clone())?;
+        let addr = server.local_addr().to_string();
+        self.servers.lock().unwrap().insert(addr.clone(), server);
+        Ok(addr)
+    }
+
+    fn stop(&self, addr: &str) -> Result<()> {
+        match self.servers.lock().unwrap().remove(addr) {
+            Some(server) => {
+                server.shutdown()?;
+                Ok(())
+            }
+            // not ours (one of the router's initial shards): drain it
+            // over the wire like the process launcher would
+            None => Client::connect_with_deadline(addr, Duration::from_secs(2))
+                .and_then(|mut c| c.shutdown_server()),
+        }
+    }
+}

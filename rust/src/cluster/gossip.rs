@@ -85,6 +85,25 @@ pub fn run_round(shards: &[Arc<ShardState>], push: bool) -> RoundStats {
     stats
 }
 
+/// Seed a freshly spawned shard with the combined models of the
+/// existing shards (shard autoscaling): pushed *before* the newcomer
+/// enters the routing rotation, so it serves its first request already
+/// calibrated — no per-shard recalibration window. Returns the number
+/// of buckets the newcomer accepted (0 when the cluster holds no
+/// models yet).
+pub fn seed_newcomer(addr: &str, existing: &[Arc<ShardState>]) -> Result<u64> {
+    let mut merged: BTreeMap<String, VariantModel> = BTreeMap::new();
+    for shard in existing {
+        if shard.healthy() {
+            merge_models(&mut merged, &shard.calib_clone());
+        }
+    }
+    if merged.is_empty() {
+        return Ok(0);
+    }
+    push_models(addr, &models_to_json(&merged))
+}
+
 fn pull(addr: &str) -> Result<BTreeMap<String, VariantModel>> {
     let mut c = Client::connect_with_deadline(addr, super::router::ADMIN_TIMEOUT)?;
     let models = c.perf_pull()?;

@@ -34,13 +34,19 @@
 //!
 //! Layers (each its own module):
 //! * [`placement`] — pluggable shard-placement policies.
-//! * [`router`] — sessions, fan-out, health, drain, retry, shutdown.
-//! * [`gossip`] — the pull/merge/push round over protocol v3.
+//! * [`router`] — sessions, fan-out, health, drain, retry, shutdown,
+//!   and the shard-scaling control loop.
+//! * [`gossip`] — the pull/merge/push round over protocol v3 (also
+//!   seeds autoscale-spawned shards before they enter the rotation).
+//! * [`autoscale`] — shard-scaling configuration and the
+//!   [`autoscale::ShardLauncher`] process/in-process backends.
 
+pub mod autoscale;
 pub mod gossip;
 pub mod placement;
 pub mod router;
 
+pub use autoscale::{ClusterScaleOptions, InProcessLauncher, ProcessLauncher, ShardLauncher};
 pub use placement::PlacementKind;
 pub use router::{Router, RouterOptions, ShardState};
 
@@ -77,6 +83,35 @@ impl LocalCluster {
         ropts.shards = addrs;
         let router = Router::start(ropts)?;
         Ok(LocalCluster { shards, router })
+    }
+
+    /// Boot an *elastic* in-process cluster: like [`LocalCluster::start`]
+    /// but with the shard scaler enabled, spawning additional in-process
+    /// shards through the returned [`InProcessLauncher`] (drain it with
+    /// `shutdown_all` after [`LocalCluster::shutdown`]).
+    pub fn start_elastic(
+        n: usize,
+        serve: &ServeOptions,
+        mut ropts: RouterOptions,
+        scale: autoscale::ClusterScaleOptions,
+    ) -> Result<(LocalCluster, std::sync::Arc<InProcessLauncher>)> {
+        if n == 0 {
+            bail!("need at least one shard");
+        }
+        let mut shards = Vec::with_capacity(n);
+        let mut addrs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut so = serve.clone();
+            so.addr = "127.0.0.1:0".into();
+            let s = Server::start(so)?;
+            addrs.push(s.local_addr().to_string());
+            shards.push(s);
+        }
+        ropts.shards = addrs;
+        ropts.autoscale = Some(scale);
+        let launcher = std::sync::Arc::new(InProcessLauncher::new(serve.clone()));
+        let router = Router::start_with_launcher(ropts, Some(launcher.clone()))?;
+        Ok((LocalCluster { shards, router }, launcher))
     }
 
     /// The router's client-facing address.

@@ -32,16 +32,18 @@ use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use super::autoscale::{ClusterScaleOptions, ProcessLauncher, ShardLauncher};
 use super::gossip;
 use super::placement::{self, PlacementKind};
+use crate::autoscale::TokenBucket;
 use crate::serve::protocol::{
-    self, Request, Response, ShardDesc, StatsResp, SubmitReq, PROTOCOL_VERSION,
+    self, AutoscaleResp, Request, Response, ShardDesc, StatsResp, SubmitReq, PROTOCOL_VERSION,
 };
 use crate::serve::Client;
 use crate::taskrt::perfmodel::VariantModel;
@@ -64,6 +66,10 @@ pub struct RouterOptions {
     /// Push merged perf models back to the shards. Pulls always run —
     /// they also feed the `calibrated` placement policy.
     pub gossip: bool,
+    /// Shard-level elastic scaling (`--autoscale`): spawn/retire
+    /// `compar serve` processes as aggregate load crosses the bands.
+    /// `None` = the shard set is static.
+    pub autoscale: Option<ClusterScaleOptions>,
 }
 
 impl Default for RouterOptions {
@@ -75,6 +81,7 @@ impl Default for RouterOptions {
             health_period: Duration::from_millis(300),
             gossip_period: Duration::from_millis(500),
             gossip: true,
+            autoscale: None,
         }
     }
 }
@@ -86,6 +93,11 @@ pub struct ShardState {
     pub addr: String,
     healthy: AtomicBool,
     draining: AtomicBool,
+    /// Permanently out of the cluster (stopped by the shard scaler).
+    /// Entries are never removed from the table — session `Pending`
+    /// records and placement results index into it — so retirement is
+    /// a terminal flag, not a removal.
+    retired: AtomicBool,
     inflight: AtomicU64,
     requests_ok: AtomicU64,
     /// Tasks queued inside the shard's runtime at the last health poll
@@ -105,6 +117,7 @@ impl ShardState {
             // the shard down
             healthy: AtomicBool::new(true),
             draining: AtomicBool::new(false),
+            retired: AtomicBool::new(false),
             inflight: AtomicU64::new(0),
             requests_ok: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
@@ -112,9 +125,19 @@ impl ShardState {
         }
     }
 
-    /// In the routing rotation: healthy and not drained.
+    /// In the routing rotation: healthy, not drained, not retired.
     pub fn available(&self) -> bool {
-        self.healthy.load(Ordering::Relaxed) && !self.draining.load(Ordering::Relaxed)
+        self.healthy.load(Ordering::Relaxed)
+            && !self.draining.load(Ordering::Relaxed)
+            && !self.retired.load(Ordering::Relaxed)
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
+    }
+
+    pub fn retired(&self) -> bool {
+        self.retired.load(Ordering::Relaxed)
     }
 
     pub fn healthy(&self) -> bool {
@@ -141,9 +164,13 @@ impl ShardState {
         self.healthy.store(v, Ordering::Relaxed);
     }
 
-    #[cfg(test)]
     pub(crate) fn set_draining(&self, v: bool) {
         self.draining.store(v, Ordering::Relaxed);
+    }
+
+    pub(crate) fn set_retired(&self) {
+        self.retired.store(true, Ordering::Relaxed);
+        self.healthy.store(false, Ordering::Relaxed);
     }
 
     #[cfg(test)]
@@ -183,7 +210,8 @@ impl ShardState {
         ShardDesc {
             addr: self.addr.clone(),
             healthy: self.healthy.load(Ordering::Relaxed),
-            draining: self.draining.load(Ordering::Relaxed),
+            // a retired shard reads as permanently draining on the wire
+            draining: self.draining.load(Ordering::Relaxed) || self.retired.load(Ordering::Relaxed),
             inflight: self.inflight.load(Ordering::Relaxed),
             requests_ok: self.requests_ok.load(Ordering::Relaxed),
         }
@@ -194,7 +222,11 @@ impl ShardState {
 
 struct RouterShared {
     placement: PlacementKind,
-    shards: Vec<Arc<ShardState>>,
+    /// The shard table. Append-only: the shard scaler adds spawned
+    /// shards at the tail and marks retired ones rather than removing
+    /// them, so a shard *index* (used by session pending-maps and
+    /// result tags) stays valid for the router's lifetime.
+    shards: RwLock<Vec<Arc<ShardState>>>,
     /// Placement rotation cursor (shared by every session).
     rr: AtomicUsize,
     draining: AtomicBool,
@@ -206,7 +238,39 @@ struct RouterShared {
     routed: AtomicU64,
     /// Submits re-routed to another shard after a failure.
     retried: AtomicU64,
+    /// Shard scaling state (v5 `autoscale_status`).
+    autoscale_on: AtomicBool,
+    shards_spawned: AtomicU64,
+    shards_retired: AtomicU64,
     started: Instant,
+}
+
+impl RouterShared {
+    /// Snapshot of the shard table. Indices in the returned vector are
+    /// the global shard indices (the table is append-only).
+    fn shard_list(&self) -> Vec<Arc<ShardState>> {
+        self.shards.read().unwrap().clone()
+    }
+
+    fn shard(&self, i: usize) -> Option<Arc<ShardState>> {
+        self.shards.read().unwrap().get(i).cloned()
+    }
+
+    /// Append a freshly spawned shard to the table (already seeded with
+    /// gossip models; enters the rotation immediately).
+    fn add_shard(&self, addr: String) -> usize {
+        let mut shards = self.shards.write().unwrap();
+        shards.push(Arc::new(ShardState::new(addr)));
+        shards.len() - 1
+    }
+
+    /// Shards neither retired nor draining (the scaler's population).
+    fn live_shards(&self) -> Vec<Arc<ShardState>> {
+        self.shard_list()
+            .into_iter()
+            .filter(|s| !s.retired() && !s.draining())
+            .collect()
+    }
 }
 
 /// The routing front-end. `start` binds and returns immediately;
@@ -217,12 +281,37 @@ pub struct Router {
     accept: Option<JoinHandle<()>>,
     health: Option<JoinHandle<()>>,
     gossip: Option<JoinHandle<()>>,
+    scaler: Option<JoinHandle<()>>,
 }
 
 impl Router {
+    /// Start with the default shard launcher: when `opts.autoscale` is
+    /// set, spawned shards are real `compar serve` child processes of
+    /// this binary.
     pub fn start(opts: RouterOptions) -> Result<Router> {
+        let launcher: Option<Arc<dyn ShardLauncher>> = match &opts.autoscale {
+            Some(a) => Some(Arc::new(ProcessLauncher::from_current_exe(
+                a.spawn_ncpu,
+                a.spawn_args.clone(),
+            )?)),
+            None => None,
+        };
+        Router::start_with_launcher(opts, launcher)
+    }
+
+    /// Start with an explicit [`ShardLauncher`] (tests and the bench
+    /// harness use [`super::autoscale::InProcessLauncher`]).
+    pub fn start_with_launcher(
+        opts: RouterOptions,
+        launcher: Option<Arc<dyn ShardLauncher>>,
+    ) -> Result<Router> {
         if opts.shards.is_empty() {
             bail!("router needs at least one backend shard (--shards host:port,...)");
+        }
+        // validate the autoscale/launcher pairing *before* binding the
+        // listener and spawning threads: bailing later would leak them
+        if opts.autoscale.is_some() && launcher.is_none() {
+            bail!("autoscale enabled without a shard launcher");
         }
         let listener = TcpListener::bind(&opts.listen)
             .with_context(|| format!("binding {}", opts.listen))?;
@@ -230,11 +319,12 @@ impl Router {
         listener.set_nonblocking(true)?;
         let shared = Arc::new(RouterShared {
             placement: opts.placement,
-            shards: opts
-                .shards
-                .iter()
-                .map(|a| Arc::new(ShardState::new(a.clone())))
-                .collect(),
+            shards: RwLock::new(
+                opts.shards
+                    .iter()
+                    .map(|a| Arc::new(ShardState::new(a.clone())))
+                    .collect(),
+            ),
             rr: AtomicUsize::new(0),
             draining: AtomicBool::new(false),
             stop: Mutex::new(false),
@@ -243,6 +333,9 @@ impl Router {
             sessions: Mutex::new(Vec::new()),
             routed: AtomicU64::new(0),
             retried: AtomicU64::new(0),
+            autoscale_on: AtomicBool::new(opts.autoscale.is_some()),
+            shards_spawned: AtomicU64::new(0),
+            shards_retired: AtomicU64::new(0),
             started: Instant::now(),
         });
         let accept = {
@@ -269,12 +362,25 @@ impl Router {
                 .spawn(move || gossip_loop(shared, period, push))
                 .expect("spawning gossip thread")
         };
+        let scaler = match (opts.autoscale, launcher) {
+            (Some(sopts), Some(launcher)) => {
+                let shared = shared.clone();
+                Some(
+                    std::thread::Builder::new()
+                        .name("route-scale".into())
+                        .spawn(move || scale_loop(shared, sopts, launcher))
+                        .expect("spawning shard-scale thread"),
+                )
+            }
+            _ => None,
+        };
         Ok(Router {
             local_addr,
             shared,
             accept: Some(accept),
             health: Some(health),
             gossip: Some(gossip),
+            scaler,
         })
     }
 
@@ -285,7 +391,15 @@ impl Router {
 
     /// The shard table, as `{"op":"shards"}` would report it.
     pub fn shards(&self) -> Vec<ShardDesc> {
-        self.shared.shards.iter().map(|s| s.desc()).collect()
+        self.shared.shard_list().iter().map(|s| s.desc()).collect()
+    }
+
+    /// (shards spawned, shards retired) by the shard scaler.
+    pub fn scale_counters(&self) -> (u64, u64) {
+        (
+            self.shared.shards_spawned.load(Ordering::Relaxed),
+            self.shared.shards_retired.load(Ordering::Relaxed),
+        )
     }
 
     /// (submits routed, submits retried on another shard).
@@ -332,6 +446,9 @@ impl Router {
         if let Some(j) = self.gossip.take() {
             let _ = j.join();
         }
+        if let Some(j) = self.scaler.take() {
+            let _ = j.join();
+        }
         Ok(())
     }
 }
@@ -346,6 +463,9 @@ impl Drop for Router {
             let _ = j.join();
         }
         if let Some(j) = self.gossip.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.scaler.take() {
             let _ = j.join();
         }
     }
@@ -390,8 +510,12 @@ fn accept_loop(shared: Arc<RouterShared>, listener: TcpListener) {
 /// the max probe time, not the sum.
 fn health_loop(shared: Arc<RouterShared>, period: Duration) {
     while !shared.draining.load(Ordering::SeqCst) {
+        let shards = shared.shard_list();
         std::thread::scope(|scope| {
-            for shard in &shared.shards {
+            for shard in &shards {
+                if shard.retired() {
+                    continue; // the process is gone; don't probe-spam it
+                }
                 scope.spawn(move || match shard_stats(&shard.addr) {
                     Ok(stats) => {
                         shard.healthy.store(true, Ordering::Relaxed);
@@ -409,9 +533,140 @@ fn health_loop(shared: Arc<RouterShared>, period: Duration) {
 
 fn gossip_loop(shared: Arc<RouterShared>, period: Duration, push: bool) {
     while !shared.draining.load(Ordering::SeqCst) {
-        gossip::run_round(&shared.shards, push);
+        let live: Vec<Arc<ShardState>> = shared
+            .shard_list()
+            .into_iter()
+            .filter(|s| !s.retired())
+            .collect();
+        gossip::run_round(&live, push);
         drain_aware_sleep(&shared, period);
     }
+}
+
+// ------------------------------------------------------- shard scaling
+
+/// The shard-level elastic control loop (`compar route --autoscale`):
+/// spawn a shard when the per-shard load stays above the high band,
+/// retire the least-loaded one when it stays at the low band — same
+/// hysteresis + token-bucket shape as the in-process worker scaler.
+fn scale_loop(
+    shared: Arc<RouterShared>,
+    opts: ClusterScaleOptions,
+    launcher: Arc<dyn ShardLauncher>,
+) {
+    let mut bucket = TokenBucket::new(1, opts.cooldown);
+    let mut hot = 0usize;
+    let mut cold = 0usize;
+    // a scale-down is a *return* from pressure: an idle (or lightly
+    // loaded) cluster keeps the shard count the operator configured.
+    // `spawn_debt` counts scaler-spawned shards not yet reclaimed (a
+    // burst that spawned two shards drains both back); `seen_load`
+    // additionally allows one operator-shard retire per observed
+    // pressure episode.
+    let mut spawn_debt = 0usize;
+    let mut seen_load = false;
+    let mut last = Instant::now();
+    while !shared.draining.load(Ordering::SeqCst) {
+        let now = Instant::now();
+        bucket.advance(now.duration_since(last));
+        last = now;
+        let live = shared.live_shards();
+        let avail: Vec<&Arc<ShardState>> = live.iter().filter(|s| s.available()).collect();
+        if !avail.is_empty() {
+            let total: u64 = avail.iter().map(|s| s.load()).sum();
+            let per_shard = total / avail.len() as u64;
+            if per_shard >= opts.up_load {
+                seen_load = true;
+            }
+            // min/max bound the *available* population, not the table:
+            // a crashed (unhealthy) shard must neither block spawning
+            // its replacement at max_shards nor count toward the floor
+            // when retiring (retiring the last healthy shard would
+            // leave the rotation empty)
+            if per_shard >= opts.up_load && avail.len() < opts.max_shards {
+                hot += 1;
+            } else {
+                hot = 0;
+            }
+            if (seen_load || spawn_debt > 0)
+                && per_shard <= opts.down_load
+                && avail.len() > opts.min_shards
+            {
+                cold += 1;
+            } else {
+                cold = 0;
+            }
+            if hot >= opts.sustain && bucket.try_take() {
+                hot = 0;
+                match spawn_shard(&shared, &*launcher) {
+                    Ok(addr) => {
+                        spawn_debt += 1;
+                        eprintln!("route: scaled up, spawned shard {addr}");
+                    }
+                    Err(e) => eprintln!("route: shard spawn failed: {e:#}"),
+                }
+            } else if cold >= opts.sustain && bucket.try_take() {
+                cold = 0;
+                if spawn_debt > 0 {
+                    spawn_debt -= 1;
+                } else {
+                    seen_load = false;
+                }
+                // retire the least-loaded available shard
+                if let Some(victim) = avail
+                    .iter()
+                    .min_by_key(|s| (s.load(), s.addr.clone()))
+                    .map(|s| (*s).clone())
+                {
+                    retire_shard(&shared, &victim, &*launcher);
+                    eprintln!("route: scaled down, retired shard {}", victim.addr);
+                }
+            }
+        }
+        drain_aware_sleep(&shared, opts.period);
+    }
+}
+
+/// Spawn a shard, gossip-seed it with the merged perf models of the
+/// existing shards (it serves its first request already calibrated),
+/// then add it to the routing rotation.
+fn spawn_shard(shared: &Arc<RouterShared>, launcher: &dyn ShardLauncher) -> Result<String> {
+    let addr = launcher.spawn()?;
+    let existing = shared.live_shards();
+    if let Err(e) = gossip::seed_newcomer(&addr, &existing) {
+        // non-fatal: the shard still works, it just recalibrates
+        eprintln!("route: gossip-seeding {addr} failed: {e:#}");
+    }
+    shared.add_shard(addr.clone());
+    shared.shards_spawned.fetch_add(1, Ordering::Relaxed);
+    Ok(addr)
+}
+
+/// Drain `victim` out of the rotation, wait (bounded) for its in-flight
+/// requests to finish, then stop the process and mark it retired.
+fn retire_shard(
+    shared: &Arc<RouterShared>,
+    victim: &Arc<ShardState>,
+    launcher: &dyn ShardLauncher,
+) {
+    victim.set_draining(true);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline && !shared.draining.load(Ordering::SeqCst) {
+        match shard_stats(&victim.addr) {
+            Ok(stats) if stats.inflight == 0 => break,
+            Ok(_) => {}
+            Err(_) => break, // unreachable — nothing left to wait for
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // graceful stop: the serve process itself drains before exiting, so
+    // a straggler request still completes and its reply is delivered
+    // before the connection closes
+    if let Err(e) = launcher.stop(&victim.addr) {
+        eprintln!("route: stopping shard {} failed: {e:#}", victim.addr);
+    }
+    victim.set_retired();
+    shared.shards_retired.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Deadline on every periodic/admin connection to a shard (probe,
@@ -459,6 +714,8 @@ struct Session {
     reply: ReplyLane,
     /// Selection policy from the client's hello, forwarded to shards.
     policy: Mutex<Option<String>>,
+    /// v5: latency SLO from the client's hello, forwarded to shards.
+    slo_ms: Mutex<Option<f64>>,
     backends: Mutex<HashMap<usize, Arc<Backend>>>,
     pending: Mutex<HashMap<u64, Pending>>,
     readers: Mutex<Vec<JoinHandle<()>>>,
@@ -477,6 +734,7 @@ fn session_loop(shared: Arc<RouterShared>, stream: TcpStream, sid: u64) {
         router: shared.clone(),
         reply,
         policy: Mutex::new(None),
+        slo_ms: Mutex::new(None),
         backends: Mutex::new(HashMap::new()),
         pending: Mutex::new(HashMap::new()),
         readers: Mutex::new(Vec::new()),
@@ -550,7 +808,11 @@ fn handle_request(sess: &Arc<Session>, line: &str) -> bool {
     };
     let router = &sess.router;
     match req {
-        Request::Hello { client: _, policy } => {
+        Request::Hello {
+            client: _,
+            policy,
+            slo_ms,
+        } => {
             if let Some(p) = &policy {
                 if SelectorKind::parse(p).is_none() {
                     send_line(
@@ -566,11 +828,17 @@ fn handle_request(sess: &Arc<Session>, line: &str) -> bool {
                 }
             }
             *sess.policy.lock().unwrap() = policy;
+            *sess.slo_ms.lock().unwrap() = slo_ms;
             send_line(
                 &sess.reply,
                 &Response::Hello {
                     session: sess.sid,
                     version: PROTOCOL_VERSION,
+                    // the router has no context table of its own, so it
+                    // cannot report an *effective* target here; shards
+                    // apply the declared value when the hello is
+                    // forwarded on each backend connection
+                    slo_ms: None,
                 },
             );
             true
@@ -616,19 +884,39 @@ fn handle_request(sess: &Arc<Session>, line: &str) -> bool {
             send_line(
                 &sess.reply,
                 &Response::Shards {
-                    shards: router.shards.iter().map(|s| s.desc()).collect(),
+                    shards: router.shard_list().iter().map(|s| s.desc()).collect(),
                 },
+            );
+            true
+        }
+        Request::AutoscaleStatus => {
+            let live = router.live_shards();
+            send_line(
+                &sess.reply,
+                &Response::Autoscale(AutoscaleResp {
+                    enabled: router.autoscale_on.load(Ordering::Relaxed),
+                    policy: if router.autoscale_on.load(Ordering::Relaxed) {
+                        "shard-threshold".into()
+                    } else {
+                        String::new()
+                    },
+                    shards: live.len() as u64,
+                    shards_spawned: router.shards_spawned.load(Ordering::Relaxed),
+                    shards_retired: router.shards_retired.load(Ordering::Relaxed),
+                    ..AutoscaleResp::default()
+                }),
             );
             true
         }
         Request::DrainShard { shard } => {
             match resolve_shard(router, &shard) {
                 Some(i) => {
-                    router.shards[i].draining.store(true, Ordering::Relaxed);
+                    let target = router.shard(i).expect("resolved index is in the table");
+                    target.set_draining(true);
                     send_line(
                         &sess.reply,
                         &Response::Drained {
-                            shard: router.shards[i].addr.clone(),
+                            shard: target.addr.clone(),
                         },
                     );
                 }
@@ -639,9 +927,9 @@ fn handle_request(sess: &Arc<Session>, line: &str) -> bool {
                         error: format!(
                             "unknown shard '{shard}' (have: {})",
                             router
-                                .shards
+                                .shard_list()
                                 .iter()
-                                .map(|s| s.addr.as_str())
+                                .map(|s| s.addr.clone())
                                 .collect::<Vec<_>>()
                                 .join(", ")
                         ),
@@ -664,7 +952,10 @@ fn handle_request(sess: &Arc<Session>, line: &str) -> bool {
         }
         Request::Shutdown => {
             // forward to every shard (each drains gracefully), then stop
-            for shard in &router.shards {
+            for shard in router.shard_list() {
+                if shard.retired() {
+                    continue; // already stopped by the scaler
+                }
                 if let Ok(mut c) = Client::connect_with_deadline(&shard.addr, ADMIN_TIMEOUT) {
                     let _ = c.shutdown_server();
                 }
@@ -684,14 +975,15 @@ fn handle_request(sess: &Arc<Session>, line: &str) -> bool {
 
 /// Resolve a shard by address, `shardN`, or bare index.
 fn resolve_shard(router: &Arc<RouterShared>, name: &str) -> Option<usize> {
-    if let Some(i) = router.shards.iter().position(|s| s.addr == name) {
+    let shards = router.shard_list();
+    if let Some(i) = shards.iter().position(|s| s.addr == name) {
         return Some(i);
     }
     name.strip_prefix("shard")
         .unwrap_or(name)
         .parse::<usize>()
         .ok()
-        .filter(|&i| i < router.shards.len())
+        .filter(|&i| i < shards.len())
 }
 
 // ------------------------------------------------------------- routing
@@ -704,9 +996,12 @@ fn route_submit(sess: &Arc<Session>, req: SubmitReq, exclude: &mut Vec<usize>) -
         if sess.closing.load(Ordering::SeqCst) {
             bail!("session is closing");
         }
+        // snapshot of the append-only shard table: indices returned by
+        // placement are global shard indices
+        let shards = sess.router.shard_list();
         let Some(si) = placement::pick(
             sess.router.placement,
-            &sess.router.shards,
+            &shards,
             &req.app,
             req.size,
             exclude,
@@ -715,14 +1010,14 @@ fn route_submit(sess: &Arc<Session>, req: SubmitReq, exclude: &mut Vec<usize>) -
             bail!(
                 "no available shard for request {} ({} shard(s), {} excluded)",
                 req.id,
-                sess.router.shards.len(),
+                shards.len(),
                 exclude.len()
             );
         };
         let backend = match ensure_backend(sess, si) {
             Ok(b) => b,
             Err(_) => {
-                sess.router.shards[si].set_healthy(false);
+                shards[si].set_healthy(false);
                 exclude.push(si);
                 continue;
             }
@@ -759,7 +1054,7 @@ fn route_submit(sess: &Arc<Session>, req: SubmitReq, exclude: &mut Vec<usize>) -
                     backends.remove(&si);
                 }
             }
-            sess.router.shards[si].set_healthy(false);
+            shards[si].set_healthy(false);
             if !still_ours {
                 return Ok(());
             }
@@ -804,7 +1099,13 @@ fn ensure_backend(sess: &Arc<Session>, si: usize) -> Result<Arc<Backend>> {
     if let Some(b) = backends.get(&si) {
         return Ok(b.clone());
     }
-    let addr = &sess.router.shards[si].addr;
+    let addr = sess
+        .router
+        .shard(si)
+        .ok_or_else(|| anyhow::anyhow!("shard index {si} out of range"))?
+        .addr
+        .clone();
+    let addr = addr.as_str();
     // deadline on connect AND handshake: this runs with the session's
     // backends mutex held, so a hung shard must fail fast here instead
     // of wedging the session (and with it, router shutdown)
@@ -823,6 +1124,7 @@ fn ensure_backend(sess: &Arc<Session>, si: usize) -> Result<Arc<Backend>> {
     let hello = Request::Hello {
         client: format!("compar-route-{}", sess.sid),
         policy: sess.policy.lock().unwrap().clone(),
+        slo_ms: *sess.slo_ms.lock().unwrap(),
     };
     let mut line = protocol::encode_request(&hello);
     line.push('\n');
@@ -886,7 +1188,9 @@ fn backend_reader(sess: Arc<Session>, shard: usize, mut reader: BufReader<TcpStr
         return;
     }
     // the shard connection died under us
-    sess.router.shards[shard].set_healthy(false);
+    if let Some(s) = sess.router.shard(shard) {
+        s.set_healthy(false);
+    }
     sess.backends.lock().unwrap().remove(&shard);
     let orphans: Vec<SubmitReq> = {
         let mut pending = sess.pending.lock().unwrap();
@@ -966,8 +1270,8 @@ fn cluster_stats(router: &Arc<RouterShared>) -> StatsResp {
         ctx_tasks: BTreeMap::new(),
         ctx_variants: BTreeMap::new(),
     };
-    for (i, shard) in router.shards.iter().enumerate() {
-        if !shard.healthy.load(Ordering::Relaxed) {
+    for (i, shard) in router.shard_list().iter().enumerate() {
+        if shard.retired() || !shard.healthy.load(Ordering::Relaxed) {
             continue;
         }
         let Ok(stats) = shard_stats(&shard.addr) else {
@@ -993,8 +1297,8 @@ fn cluster_stats(router: &Arc<RouterShared>) -> StatsResp {
 
 fn cluster_contexts(router: &Arc<RouterShared>) -> Vec<protocol::CtxDesc> {
     let mut out = Vec::new();
-    for (i, shard) in router.shards.iter().enumerate() {
-        if !shard.healthy.load(Ordering::Relaxed) {
+    for (i, shard) in router.shard_list().iter().enumerate() {
+        if shard.retired() || !shard.healthy.load(Ordering::Relaxed) {
             continue;
         }
         let Ok(mut c) = Client::connect_with_deadline(&shard.addr, ADMIN_TIMEOUT) else {

@@ -21,10 +21,15 @@
 //! * [`cluster`] — sharded multi-process serving: a routing front-end
 //!   (`compar route`) speaking the same protocol over N serve shards,
 //!   with perf-model gossip so variant selection learns cluster-wide.
+//! * [`autoscale`] — the elastic control plane: a control loop that
+//!   resizes scheduling contexts (live worker migration) and drives
+//!   shard spawn/retire in the cluster, from the same runtime-snapshot
+//!   features the selection layer keys on.
 //! * [`bench_harness`] — regenerates every table and figure of the
 //!   paper's evaluation section.
 
 pub mod apps;
+pub mod autoscale;
 pub mod bench_harness;
 pub mod cluster;
 pub mod compar;

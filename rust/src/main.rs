@@ -4,13 +4,16 @@
 //! ```text
 //! compar compile <file.compar.c> [--out-dir DIR]      run the pre-compiler
 //! compar run --app A --size N [options]               run one benchmark task
-//! compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|all>
+//! compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|autoscale|all>
 //! compar bench validate <FILE>                        check a bench JSON record
 //! compar calibrate --app A [--sizes a,b,c]            warm the perf models
 //! compar serve [--addr A --contexts cpu:4,gpu:1 ...]  multi-tenant component service
+//! compar serve --autoscale [--scale-min/-max --slo-ms --cooldown-ms]  elastic contexts
 //! compar route --shards H:P,... [--listen A]          cluster router + perf gossip
+//! compar route --autoscale [--min/max-shards ...]     elastic shard set
 //! compar loadgen [--clients N --requests M --app A]   drive a server, report latency
 //! compar loadgen --shards N ...                       drive an in-process cluster
+//! compar loadgen --profile burst:H:L:P                time-varying offered load
 //! compar list                                         inventory: apps, variants, artifacts
 //! ```
 //!
@@ -118,17 +121,22 @@ fn print_usage() {
          USAGE:\n\
          \x20 compar compile <file.compar.c> [--out-dir DIR] [--emit c|rust|all]\n\
          \x20 compar run --app APP --size N [--variant V] [--sched S] [--selector P] [--ncpu N] [--ncuda N] [--reps R]\n\
-         \x20 compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|all> [--reps R] [--max-measured N] [--smoke]\n\
+         \x20 compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|autoscale|all> [--reps R] [--max-measured N] [--smoke]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 (selection: [--out FILE]; cluster: [--shards N] [--placement PL])\n\
          \x20 compar bench validate <FILE>\n\
          \x20 compar calibrate --app APP [--sizes a,b,c]\n\
          \x20 compar serve [--addr HOST:PORT] [--contexts NAME:N[:POLICY],...] [--sched S] [--selector P] [--cap N]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--batch-window-us U] [--max-batch B] [--ncpu N] [--ncuda N]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--autoscale [--scale-min N|name=N,..] [--scale-max N|name=N,..] [--slo-ms F]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--cooldown-ms T] [--scale-period-ms T] [--scale-high F] [--scale-low F]]\n\
          \x20 compar route --shards HOST:PORT,... [--listen HOST:PORT] [--placement PL]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--health-ms T] [--gossip-ms T] [--no-gossip]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--autoscale [--min-shards N] [--max-shards N] [--scale-up L] [--scale-down L]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--cooldown-ms T] [--spawn-ncpu N] [--spawn-args \"SERVE FLAGS\"]]\n\
          \x20 compar loadgen [--clients N] [--requests M] [--app APP] [--size N] [--tasks K]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--pipeline N] [--policy P] [--ctxs a,b] [--addr HOST:PORT | --contexts SPEC]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--shards N [--placement PL] [--no-gossip]] [--out FILE] [--no-verify]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--profile burst:<high_rps>:<low_rps>:<period_ms>]\n\
          \x20 compar list\n\
          \n\
          Selection policies P: greedy | calibrating | epsilon[:E] | epsilon-decayed[:E] | contextual | forced:VARIANT\n\
@@ -359,6 +367,47 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         }
         ran = true;
     }
+    // autoscale is explicit-only (it boots servers and a cluster per run)
+    if which == "autoscale" {
+        let smoke = opts.contains_key("smoke");
+        let off = bench_harness::autoscale_bench::context_run(false, smoke)?;
+        let on = bench_harness::autoscale_bench::context_run(true, smoke)?;
+        let shards = bench_harness::autoscale_bench::shard_run(smoke)?;
+        print!("{}", bench_harness::autoscale_bench::render(&off, &on, &shards));
+        if smoke {
+            // CI gates: the burst must trigger a scale-up (observed via
+            // autoscale_status), the drain must give the workers back,
+            // the router must spawn AND retire a shard, and no client
+            // request may fail at any point
+            if on.moves == 0 || on.moved_workers == 0 {
+                bail!("autoscale smoke: the burst never triggered a worker migration");
+            }
+            if on.hot_workers_after != on.hot_home {
+                bail!(
+                    "autoscale smoke: 'hot' kept {} worker(s) after the drain (home {})",
+                    on.hot_workers_after,
+                    on.hot_home
+                );
+            }
+            if off.errors + on.errors > 0 {
+                bail!("autoscale smoke: {} request(s) failed", off.errors + on.errors);
+            }
+            if shards.spawned == 0 || shards.retired == 0 {
+                bail!(
+                    "autoscale smoke: shard churn missing (spawned {}, retired {})",
+                    shards.spawned,
+                    shards.retired
+                );
+            }
+            if shards.errors > 0 {
+                bail!(
+                    "autoscale smoke: {} request(s) failed during shard churn",
+                    shards.errors
+                );
+            }
+        }
+        ran = true;
+    }
     // cluster is explicit-only (it boots several servers per run)
     if which == "cluster" {
         let smoke = opts.contains_key("smoke");
@@ -482,6 +531,79 @@ fn validate_bench_record(file: &str) -> Result<()> {
 
 // ------------------------------------------------------------------ serve
 
+/// The `compar autoscale` flag group (shared by `serve` and in-process
+/// loadgen clusters): `--autoscale` enables the elastic control loop;
+/// `--scale-min` / `--scale-max` bound each context's worker count
+/// (either a bare number for every context or `name=N,name2=M`),
+/// `--slo-ms` sets the latency target, `--cooldown-ms` the token-bucket
+/// refill window.
+fn autoscale_options_from(
+    opts: &HashMap<String, String>,
+) -> Result<Option<compar::autoscale::AutoscaleOptions>> {
+    if !opts.contains_key("autoscale") {
+        return Ok(None);
+    }
+    let mut a = compar::autoscale::AutoscaleOptions::default();
+    if let Some(v) = opts.get("cooldown-ms") {
+        a.cooldown = std::time::Duration::from_millis(v.parse().context("--cooldown-ms")?);
+    }
+    if let Some(v) = opts.get("scale-period-ms") {
+        a.period = std::time::Duration::from_millis(v.parse().context("--scale-period-ms")?);
+    }
+    if let Some(v) = opts.get("slo-ms") {
+        a.slo_ms = Some(v.parse().context("--slo-ms")?);
+    }
+    if let Some(v) = opts.get("scale-high") {
+        a.high = v.parse().context("--scale-high")?;
+    }
+    if let Some(v) = opts.get("scale-low") {
+        a.low = v.parse().context("--scale-low")?;
+    }
+    if let Some(v) = opts.get("scale-sustain") {
+        a.sustain = v.parse().context("--scale-sustain")?;
+    }
+    // min/max: a bare number applies to every context; name=N entries
+    // override per context
+    let mut per: HashMap<String, (Option<usize>, Option<usize>)> = HashMap::new();
+    for (flag, is_min) in [("scale-min", true), ("scale-max", false)] {
+        let Some(v) = opts.get(flag) else { continue };
+        for part in v.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            match part.split_once('=') {
+                Some((name, n)) => {
+                    let n: usize = n.parse().with_context(|| format!("--{flag} '{part}'"))?;
+                    let e = per.entry(name.to_string()).or_default();
+                    if is_min {
+                        e.0 = Some(n);
+                    } else {
+                        e.1 = Some(n);
+                    }
+                }
+                None => {
+                    let n: usize = part.parse().with_context(|| format!("--{flag}"))?;
+                    if is_min {
+                        a.min_workers = n;
+                    } else {
+                        a.max_workers = n;
+                    }
+                }
+            }
+        }
+    }
+    for (name, (min, max)) in per {
+        a.per_ctx.insert(
+            name,
+            compar::autoscale::CtxLimits {
+                min: min.unwrap_or(a.min_workers),
+                max: max
+                    .or(if a.max_workers == 0 { None } else { Some(a.max_workers) })
+                    .unwrap_or(usize::MAX),
+                slo_ms: a.slo_ms,
+            },
+        );
+    }
+    Ok(Some(a))
+}
+
 fn serve_options_from(opts: &HashMap<String, String>) -> Result<compar::serve::ServeOptions> {
     let mut so = compar::serve::ServeOptions::default();
     if let Some(a) = opts.get("addr") {
@@ -513,16 +635,21 @@ fn serve_options_from(opts: &HashMap<String, String>) -> Result<compar::serve::S
     if let Some(v) = opts.get("max-batch") {
         so.max_batch = v.parse().context("--max-batch")?;
     }
+    so.autoscale = autoscale_options_from(opts)?;
     Ok(so)
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
     let (_, opts) = parse_opts(args);
     let so = serve_options_from(&opts)?;
+    let autoscale_on = so.autoscale.is_some();
     let server = compar::serve::Server::start(so)?;
     println!("compar serve listening on {}", server.local_addr());
     for (name, workers) in server.context_table() {
         println!("  context {name:12} workers {workers:?}");
+    }
+    if autoscale_on {
+        println!("  autoscale: enabled (query with {{\"op\":\"autoscale_status\"}})");
     }
     println!("(send {{\"op\":\"shutdown\"}} or run `compar loadgen --shutdown` to stop)");
     let stats = server.serve_forever()?;
@@ -553,6 +680,40 @@ fn router_options_from(opts: &HashMap<String, String>) -> Result<compar::cluster
     }
     if opts.contains_key("no-gossip") {
         ro.gossip = false;
+    }
+    // --autoscale at the router level scales the *shard set*
+    if opts.contains_key("autoscale") {
+        let mut sc = compar::cluster::ClusterScaleOptions::default();
+        if let Some(v) = opts.get("min-shards") {
+            sc.min_shards = v.parse().context("--min-shards")?;
+        }
+        if let Some(v) = opts.get("max-shards") {
+            sc.max_shards = v.parse().context("--max-shards")?;
+        }
+        if let Some(v) = opts.get("scale-up") {
+            sc.up_load = v.parse().context("--scale-up")?;
+        }
+        if let Some(v) = opts.get("scale-down") {
+            sc.down_load = v.parse().context("--scale-down")?;
+        }
+        if let Some(v) = opts.get("scale-sustain") {
+            sc.sustain = v.parse().context("--scale-sustain")?;
+        }
+        if let Some(v) = opts.get("cooldown-ms") {
+            sc.cooldown = std::time::Duration::from_millis(v.parse().context("--cooldown-ms")?);
+        }
+        if let Some(v) = opts.get("scale-period-ms") {
+            sc.period = std::time::Duration::from_millis(v.parse().context("--scale-period-ms")?);
+        }
+        if let Some(v) = opts.get("spawn-ncpu") {
+            sc.spawn_ncpu = v.parse().context("--spawn-ncpu")?;
+        }
+        if let Some(v) = opts.get("spawn-args") {
+            // extra `compar serve` flags so spawned shards match the
+            // existing shards' topology (contexts, selector, cap, ...)
+            sc.spawn_args = v.split_whitespace().map(str::to_string).collect();
+        }
+        ro.autoscale = Some(sc);
     }
     Ok(ro)
 }
@@ -620,6 +781,9 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
             bail!("unknown selection policy '{v}' for --policy (want {VALID_SELECTORS})");
         }
         lg.policy = Some(v.clone());
+    }
+    if let Some(v) = opts.get("profile") {
+        lg.profile = Some(compar::serve::LoadProfile::parse(v)?);
     }
     if let Some(v) = opts.get("seed") {
         lg.seed = v.parse().context("--seed")?;

@@ -11,7 +11,7 @@ use std::net::TcpStream;
 use anyhow::{anyhow, bail, Result};
 
 use super::protocol::{
-    self, CtxDesc, Request, Response, ResultResp, ShardDesc, StatsResp, SubmitReq,
+    self, AutoscaleResp, CtxDesc, Request, Response, ResultResp, ShardDesc, StatsResp, SubmitReq,
     PROTOCOL_VERSION,
 };
 use crate::util::json::Json;
@@ -20,6 +20,9 @@ pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     pub session: u64,
+    /// v5: the effective latency SLO the server reported in its hello
+    /// (None when autoscaling is off or no SLO is configured).
+    pub slo_ms: Option<f64>,
 }
 
 impl Client {
@@ -33,7 +36,15 @@ impl Client {
     /// | "epsilon-decayed[:E]" | "forced:VARIANT").
     pub fn connect_with_policy(addr: &str, policy: Option<&str>) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
-        Client::handshake(stream, policy)
+        Client::handshake(stream, policy, None)
+    }
+
+    /// v5: connect, declaring this session's latency target — the
+    /// autoscaler treats the tightest declared target per context as
+    /// that context's SLO.
+    pub fn connect_with_slo(addr: &str, policy: Option<&str>, slo_ms: f64) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Client::handshake(stream, policy, Some(slo_ms))
     }
 
     /// Connect with connect/read/write deadlines — for health probes,
@@ -49,27 +60,34 @@ impl Client {
         let stream = TcpStream::connect_timeout(&sa, timeout)?;
         let _ = stream.set_read_timeout(Some(timeout));
         let _ = stream.set_write_timeout(Some(timeout));
-        Client::handshake(stream, None)
+        Client::handshake(stream, None, None)
     }
 
-    fn handshake(stream: TcpStream, policy: Option<&str>) -> Result<Client> {
+    fn handshake(stream: TcpStream, policy: Option<&str>, slo_ms: Option<f64>) -> Result<Client> {
         let _ = stream.set_nodelay(true);
         let writer = stream.try_clone()?;
         let mut c = Client {
             reader: BufReader::new(stream),
             writer,
             session: 0,
+            slo_ms: None,
         };
         c.send(&Request::Hello {
             client: format!("compar-client-{}", std::process::id()),
             policy: policy.map(str::to_string),
+            slo_ms,
         })?;
         match c.recv()? {
-            Response::Hello { session, version } => {
+            Response::Hello {
+                session,
+                version,
+                slo_ms,
+            } => {
                 if version != PROTOCOL_VERSION {
                     bail!("server speaks protocol v{version}, client v{PROTOCOL_VERSION}");
                 }
                 c.session = session;
+                c.slo_ms = slo_ms;
             }
             Response::Error { error, .. } => bail!("server rejected hello: {error}"),
             other => bail!("expected hello, got {other:?}"),
@@ -134,6 +152,17 @@ impl Client {
         self.send(&Request::Contexts)?;
         match self.recv()? {
             Response::Contexts { contexts } => Ok(contexts),
+            Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// v5: the elastic-scaling control loop's live state (worker moves
+    /// on a shard; shard spawn/retire counters on the router).
+    pub fn autoscale_status(&mut self) -> Result<AutoscaleResp> {
+        self.send(&Request::AutoscaleStatus)?;
+        match self.recv()? {
+            Response::Autoscale(a) => Ok(a),
             Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
             other => bail!("unexpected response {other:?}"),
         }

@@ -7,14 +7,118 @@
 //! scaling instrument.
 
 use std::collections::{BTreeMap, HashMap};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::client::Client;
 use super::protocol::{Response, SubmitReq};
 use crate::util::json::Json;
 use crate::util::stats;
+
+/// Time-varying offered load (`--profile burst:<high>:<low>:<period_ms>`):
+/// without one, every client fires as fast as the closed loop allows;
+/// with one, each client paces its sends to the phase's offered rate.
+/// The bursty shape is what the autoscale bench (and any elastic-scaling
+/// demo) needs: pressure that arrives in waves rather than a constant
+/// stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadProfile {
+    /// Alternate between `high` and `low` offered requests/s per
+    /// client, switching phase every `period_ms`.
+    Burst { high: f64, low: f64, period_ms: u64 },
+}
+
+impl LoadProfile {
+    /// Parse `burst:<high_rps>:<low_rps>:<period_ms>`.
+    pub fn parse(s: &str) -> Result<LoadProfile> {
+        let parts: Vec<&str> = s.split(':').map(str::trim).collect();
+        match parts.as_slice() {
+            ["burst", h, l, p] => {
+                let high: f64 = h.parse().context("burst high rate")?;
+                let low: f64 = l.parse().context("burst low rate")?;
+                let period_ms: u64 = p.parse().context("burst period")?;
+                if high.is_nan() || high <= 0.0 || low.is_nan() || low < 0.0 || period_ms == 0 {
+                    bail!("bad burst profile '{s}' (need high > 0, low >= 0, period > 0)");
+                }
+                Ok(LoadProfile::Burst {
+                    high,
+                    low,
+                    period_ms,
+                })
+            }
+            _ => bail!("unknown load profile '{s}' (want burst:<high>:<low>:<period_ms>)"),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            LoadProfile::Burst {
+                high,
+                low,
+                period_ms,
+            } => format!("burst:{high}:{low}:{period_ms}"),
+        }
+    }
+
+    /// Offered per-client rate (req/s) at `elapsed` since the run
+    /// started.
+    pub fn rate_at(&self, elapsed: Duration) -> f64 {
+        match self {
+            LoadProfile::Burst {
+                high,
+                low,
+                period_ms,
+            } => {
+                if (elapsed.as_millis() as u64 / period_ms) % 2 == 0 {
+                    *high
+                } else {
+                    *low
+                }
+            }
+        }
+    }
+}
+
+/// Paces one client's sends to a [`LoadProfile`] (no-op without one).
+struct Pacer {
+    profile: Option<LoadProfile>,
+    t0: Instant,
+    last: Option<Instant>,
+}
+
+impl Pacer {
+    fn new(profile: Option<LoadProfile>) -> Pacer {
+        Pacer {
+            profile,
+            t0: Instant::now(),
+            last: None,
+        }
+    }
+
+    /// Block until the profile grants the next send slot.
+    fn wait(&mut self) {
+        let Some(p) = self.profile else { return };
+        loop {
+            let now = Instant::now();
+            let rate = p.rate_at(now.duration_since(self.t0));
+            if rate > 0.0 {
+                let due = match self.last {
+                    Some(last) => last + Duration::from_secs_f64(1.0 / rate),
+                    None => now,
+                };
+                if now >= due {
+                    self.last = Some(now);
+                    return;
+                }
+                std::thread::sleep((due - now).min(Duration::from_millis(5)));
+            } else {
+                // zero-rate phase: idle until the profile wakes up
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct LoadgenOptions {
@@ -34,6 +138,9 @@ pub struct LoadgenOptions {
     /// Per-session selection policy (hello handshake); None = the
     /// context's policy.
     pub policy: Option<String>,
+    /// Time-varying offered load; None = closed-loop, as fast as
+    /// possible.
+    pub profile: Option<LoadProfile>,
     pub verify: bool,
     pub seed: u64,
 }
@@ -49,6 +156,7 @@ impl Default for LoadgenOptions {
             ctxs: Vec::new(),
             pipeline: 1,
             policy: None,
+            profile: None,
             verify: true,
             seed: 42,
         }
@@ -134,9 +242,11 @@ fn drive_client(addr: &str, opts: &LoadgenOptions, client_idx: usize) -> Result<
         max_rel_err: 0.0,
     };
     let window = opts.pipeline.max(1);
+    let mut pacer = Pacer::new(opts.profile);
     if window == 1 {
         // synchronous: one outstanding request, honest per-request latency
         for r in 0..opts.requests {
+            pacer.wait();
             let req = request_for(opts, client_idx, r);
             let t0 = Instant::now();
             match c.submit(req) {
@@ -155,6 +265,7 @@ fn drive_client(addr: &str, opts: &LoadgenOptions, client_idx: usize) -> Result<
         let mut dead = false;
         while !dead && (next < opts.requests || !pending.is_empty()) {
             while pending.len() < window && next < opts.requests {
+                pacer.wait();
                 let req = request_for(opts, client_idx, next);
                 let id = req.id;
                 if c.send_submit(req).is_err() {
@@ -332,4 +443,38 @@ pub fn to_json(r: &LoadReport) -> Json {
     }
     m.insert("per_ctx".into(), Json::Obj(per_ctx));
     Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_profile_parses_and_phases() {
+        let p = LoadProfile::parse("burst:40:2:300").unwrap();
+        assert_eq!(
+            p,
+            LoadProfile::Burst {
+                high: 40.0,
+                low: 2.0,
+                period_ms: 300
+            }
+        );
+        assert_eq!(p.name(), "burst:40:2:300");
+        // phase 0 is high, phase 1 low, phase 2 high again
+        assert_eq!(p.rate_at(Duration::from_millis(0)), 40.0);
+        assert_eq!(p.rate_at(Duration::from_millis(299)), 40.0);
+        assert_eq!(p.rate_at(Duration::from_millis(300)), 2.0);
+        assert_eq!(p.rate_at(Duration::from_millis(650)), 40.0);
+    }
+
+    #[test]
+    fn burst_profile_rejects_malformed() {
+        assert!(LoadProfile::parse("burst:40:2").is_err());
+        assert!(LoadProfile::parse("burst:0:2:300").is_err());
+        assert!(LoadProfile::parse("burst:40:-1:300").is_err());
+        assert!(LoadProfile::parse("burst:40:2:0").is_err());
+        assert!(LoadProfile::parse("ramp:1:2:3").is_err());
+        assert!(LoadProfile::parse("burst:x:2:300").is_err());
+    }
 }

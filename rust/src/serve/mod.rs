@@ -28,6 +28,6 @@ pub mod protocol;
 pub mod server;
 
 pub use client::Client;
-pub use loadgen::{LoadReport, LoadgenOptions};
+pub use loadgen::{LoadProfile, LoadReport, LoadgenOptions};
 pub use protocol::{Request, Response, ShardDesc, SubmitReq};
 pub use server::{parse_contexts, CtxSpec, ServeOptions, Server};

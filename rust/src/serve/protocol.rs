@@ -4,30 +4,38 @@
 //! (`"op"` on requests, `"type"` on responses) and carries the client's
 //! request `id` back so batched / out-of-order replies can be matched.
 //!
-//! ## v4 message set
+//! ## v5 message set
 //!
 //! The same protocol is spoken at two levels: clients talk to either a
 //! single `compar serve` shard or to a `compar route` router, and the
-//! router talks to its shards. v4 (context-aware selection) adds the
-//! `contextual` selector name in `hello` and runtime-snapshot fields to
-//! `stats` (`queue_depth`, `busy_workers`, `total_workers`, `sessions`
-//! — the same features the selection layer's `RuntimeSnapshot`
-//! exposes, so routers can place by shard load); v3 added the cluster
+//! router talks to its shards. v5 (elastic scaling) adds the
+//! `autoscale_status` request (the control loop's live view: executed
+//! scale actions, per-context worker counts against their min/max
+//! bands, shard spawn/retire counters on the router) and a latency SLO
+//! in `hello`: a session may declare `slo_ms`, which tightens the
+//! autoscaler's target for the contexts it submits to for as long as
+//! the session lives; a shard's hello response echoes the effective
+//! target (a router, which has no context table of its own, omits it
+//! and forwards the declaration to shards). v4 added the `contextual`
+//! selector and runtime-snapshot fields to `stats`; v3 the cluster
 //! operations:
 //!
-//! | request `op`  | response `type` | level  | purpose                               |
-//! |---------------|-----------------|--------|---------------------------------------|
-//! | `hello`       | `hello`         | both   | session handshake (+ session policy)  |
-//! | `submit`      | `result`        | both   | task-graph request (router fans out)  |
-//! | `stats`       | `stats`         | both   | counters (router aggregates shards)   |
-//! | `contexts`    | `contexts`      | both   | context table (router prefixes shard) |
-//! | `perf_pull`   | `perf_models`   | shard  | fetch locally observed perf-model     |
-//! |               |                 |        | bucket summaries (what gossip ships)  |
-//! | `perf_push`   | `perf_ack`      | shard  | install the merged remote overlay     |
-//! | `shards`      | `shards`        | router | shard health/load/drain table         |
-//! | `drain_shard` | `drained`       | router | take a shard out of rotation          |
-//! | `shutdown`    | `shutdown`      | both   | drain and exit (router forwards)      |
-//! | `quit`        | `bye`           | both   | close this session                    |
+//! | request `op`       | response `type` | level  | purpose                               |
+//! |--------------------|-----------------|--------|---------------------------------------|
+//! | `hello`            | `hello`         | both   | session handshake (+ policy, slo_ms)  |
+//! | `submit`           | `result`        | both   | task-graph request (router fans out)  |
+//! | `stats`            | `stats`         | both   | counters (router aggregates shards)   |
+//! | `contexts`         | `contexts`      | both   | context table (router prefixes shard) |
+//! | `autoscale_status` | `autoscale`     | both   | elastic-scaling state (v5): context   |
+//! |                    |                 |        | bands in-process, shard churn on the  |
+//! |                    |                 |        | router                                |
+//! | `perf_pull`        | `perf_models`   | shard  | fetch locally observed perf-model     |
+//! |                    |                 |        | bucket summaries (what gossip ships)  |
+//! | `perf_push`        | `perf_ack`      | shard  | install the merged remote overlay     |
+//! | `shards`           | `shards`        | router | shard health/load/drain table         |
+//! | `drain_shard`      | `drained`       | router | take a shard out of rotation          |
+//! | `shutdown`         | `shutdown`      | both   | drain and exit (router forwards)      |
+//! | `quit`             | `bye`           | both   | close this session                    |
 //!
 //! Perf-model payloads are the serialized bucket summaries of
 //! [`crate::taskrt::perfmodel::models_to_json`]: per (codelet:variant,
@@ -41,14 +49,16 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::util::json::{self, Json};
 
-/// v4: context-aware selection — the `contextual` session selector and
-/// runtime-snapshot fields in `stats` (`queue_depth`, `busy_workers`,
-/// `total_workers`, `sessions`).
-/// (v3 added cluster ops — `perf_pull`/`perf_push` perf-model gossip on
-/// shards, `shards`/`drain_shard` rotation control on the router; v2
-/// added per-session selection policy in `hello`, `policy` on results,
-/// `selector` on context descriptors, `ctx_variants` in stats.)
-pub const PROTOCOL_VERSION: u64 = 4;
+/// v5: elastic scaling — the `autoscale_status` request and a latency
+/// SLO in `hello` (request `slo_ms` tightens the autoscaler's target;
+/// the response echoes the effective one).
+/// (v4 added the `contextual` session selector and runtime-snapshot
+/// fields in `stats`; v3 cluster ops — `perf_pull`/`perf_push`
+/// perf-model gossip on shards, `shards`/`drain_shard` rotation control
+/// on the router; v2 per-session selection policy in `hello`, `policy`
+/// on results, `selector` on context descriptors, `ctx_variants` in
+/// stats.)
+pub const PROTOCOL_VERSION: u64 = 5;
 
 // --------------------------------------------------------------- requests
 
@@ -78,14 +88,21 @@ pub enum Request {
     /// Session handshake. `policy` optionally picks a variant-selection
     /// policy for every submit on this session (e.g. "greedy",
     /// "epsilon:0.2", "forced:omp"); `None` = the scheduling context's
-    /// policy decides.
+    /// policy decides. v5: `slo_ms` optionally declares this session's
+    /// latency target — the autoscaler treats the tightest declared
+    /// target per context as that context's SLO.
     Hello {
         client: String,
         policy: Option<String>,
+        slo_ms: Option<f64>,
     },
     Submit(SubmitReq),
     Stats,
     Contexts,
+    /// v5: the elastic-scaling control loop's live state (worker moves
+    /// and per-context bands on a shard; shard spawn/retire counters on
+    /// the router).
+    AutoscaleStatus,
     /// v3 (shard): fetch this process's locally observed perf-model
     /// bucket summaries (the gossip payload).
     PerfPull,
@@ -181,9 +198,53 @@ pub struct ShardDesc {
     pub requests_ok: u64,
 }
 
+/// One scheduling context in the `autoscale` response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleCtxDesc {
+    pub name: String,
+    pub workers: u64,
+    /// Worker count when the control loop started.
+    pub home: u64,
+    pub min: u64,
+    /// 0 = unbounded.
+    pub max: u64,
+    pub queue_depth: u64,
+    /// 0.0 = no SLO configured.
+    pub slo_ms: f64,
+}
+
+/// The `autoscale_status` reply (v5) — spoken at both levels: a shard
+/// reports worker moves between its scheduling contexts, the router
+/// reports shard spawn/retire churn.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AutoscaleResp {
+    pub enabled: bool,
+    pub policy: String,
+    /// Scale actions executed (in-process worker-migration batches).
+    pub moves: u64,
+    /// Workers migrated in total.
+    pub moved_workers: u64,
+    /// Human-readable description of the last executed action.
+    pub last_action: Option<String>,
+    pub contexts: Vec<AutoscaleCtxDesc>,
+    /// Router level: shards currently in the table.
+    pub shards: u64,
+    /// Router level: shards spawned by the scaler.
+    pub shards_spawned: u64,
+    /// Router level: shards retired by the scaler.
+    pub shards_retired: u64,
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
-    Hello { session: u64, version: u64 },
+    Hello {
+        session: u64,
+        version: u64,
+        /// v5: the effective latency SLO of the server's default
+        /// context after applying the request's `slo_ms` (absent when
+        /// autoscaling is off or no SLO is configured).
+        slo_ms: Option<f64>,
+    },
     Result(ResultResp),
     Error { id: Option<u64>, error: String },
     Stats(StatsResp),
@@ -196,6 +257,8 @@ pub enum Response {
     Shards { shards: Vec<ShardDesc> },
     /// v3 (router): shard drained out of rotation.
     Drained { shard: String },
+    /// v5: elastic-scaling state.
+    Autoscale(AutoscaleResp),
     /// Shutdown acknowledged; the server drains after replying.
     Shutdown,
     /// Session closed.
@@ -230,10 +293,17 @@ fn strs(v: &[String]) -> Json {
 
 pub fn encode_request(r: &Request) -> String {
     let j = match r {
-        Request::Hello { client, policy } => {
+        Request::Hello {
+            client,
+            policy,
+            slo_ms,
+        } => {
             let mut pairs = vec![("op", s("hello")), ("client", s(client))];
             if let Some(p) = policy {
                 pairs.push(("policy", s(p)));
+            }
+            if let Some(ms) = slo_ms {
+                pairs.push(("slo_ms", n(*ms)));
             }
             obj(pairs)
         }
@@ -257,6 +327,7 @@ pub fn encode_request(r: &Request) -> String {
         }
         Request::Stats => obj(vec![("op", s("stats"))]),
         Request::Contexts => obj(vec![("op", s("contexts"))]),
+        Request::AutoscaleStatus => obj(vec![("op", s("autoscale_status"))]),
         Request::PerfPull => obj(vec![("op", s("perf_pull"))]),
         Request::PerfPush { models } => {
             obj(vec![("op", s("perf_push")), ("models", models.clone())])
@@ -273,12 +344,22 @@ pub fn encode_request(r: &Request) -> String {
 
 pub fn encode_response(r: &Response) -> String {
     let j = match r {
-        Response::Hello { session, version } => obj(vec![
-            ("ok", Json::Bool(true)),
-            ("type", s("hello")),
-            ("session", n(*session as f64)),
-            ("version", n(*version as f64)),
-        ]),
+        Response::Hello {
+            session,
+            version,
+            slo_ms,
+        } => {
+            let mut pairs = vec![
+                ("ok", Json::Bool(true)),
+                ("type", s("hello")),
+                ("session", n(*session as f64)),
+                ("version", n(*version as f64)),
+            ];
+            if let Some(ms) = slo_ms {
+                pairs.push(("slo_ms", n(*ms)));
+            }
+            obj(pairs)
+        }
         Response::Result(q) => obj(vec![
             ("ok", Json::Bool(true)),
             ("type", s("result")),
@@ -388,6 +469,39 @@ pub fn encode_response(r: &Response) -> String {
             ("type", s("drained")),
             ("shard", s(shard)),
         ]),
+        Response::Autoscale(q) => {
+            let ctxs = q
+                .contexts
+                .iter()
+                .map(|c| {
+                    obj(vec![
+                        ("name", s(&c.name)),
+                        ("workers", n(c.workers as f64)),
+                        ("home", n(c.home as f64)),
+                        ("min", n(c.min as f64)),
+                        ("max", n(c.max as f64)),
+                        ("queue_depth", n(c.queue_depth as f64)),
+                        ("slo_ms", n(c.slo_ms)),
+                    ])
+                })
+                .collect();
+            let mut pairs = vec![
+                ("ok", Json::Bool(true)),
+                ("type", s("autoscale")),
+                ("enabled", Json::Bool(q.enabled)),
+                ("policy", s(&q.policy)),
+                ("moves", n(q.moves as f64)),
+                ("moved_workers", n(q.moved_workers as f64)),
+                ("contexts", Json::Arr(ctxs)),
+                ("shards", n(q.shards as f64)),
+                ("shards_spawned", n(q.shards_spawned as f64)),
+                ("shards_retired", n(q.shards_retired as f64)),
+            ];
+            if let Some(a) = &q.last_action {
+                pairs.push(("last_action", s(a)));
+            }
+            obj(pairs)
+        }
         Response::Shutdown => obj(vec![("ok", Json::Bool(true)), ("type", s("shutdown"))]),
         Response::Bye => obj(vec![("ok", Json::Bool(true)), ("type", s("bye"))]),
     };
@@ -443,6 +557,7 @@ pub fn decode_request(line: &str) -> Result<Request> {
         "hello" => Request::Hello {
             client: get_str(&j, "client").unwrap_or_default(),
             policy: get_str(&j, "policy").ok(),
+            slo_ms: get_f64(&j, "slo_ms").ok(),
         },
         "submit" => {
             let tasks = get_u64(&j, "tasks").unwrap_or(1).max(1) as usize;
@@ -463,6 +578,7 @@ pub fn decode_request(line: &str) -> Result<Request> {
         }
         "stats" => Request::Stats,
         "contexts" => Request::Contexts,
+        "autoscale_status" => Request::AutoscaleStatus,
         "perf_pull" => Request::PerfPull,
         "perf_push" => Request::PerfPush {
             models: j
@@ -487,6 +603,7 @@ pub fn decode_response(line: &str) -> Result<Response> {
         "hello" => Response::Hello {
             session: get_u64(&j, "session")?,
             version: get_u64(&j, "version")?,
+            slo_ms: get_f64(&j, "slo_ms").ok(),
         },
         "result" => Response::Result(ResultResp {
             id: get_u64(&j, "id")?,
@@ -590,6 +707,33 @@ pub fn decode_response(line: &str) -> Result<Response> {
         "drained" => Response::Drained {
             shard: get_str(&j, "shard")?,
         },
+        "autoscale" => {
+            let mut contexts = Vec::new();
+            if let Some(arr) = j.get("contexts").and_then(Json::as_arr) {
+                for c in arr {
+                    contexts.push(AutoscaleCtxDesc {
+                        name: get_str(c, "name")?,
+                        workers: get_u64(c, "workers").unwrap_or(0),
+                        home: get_u64(c, "home").unwrap_or(0),
+                        min: get_u64(c, "min").unwrap_or(0),
+                        max: get_u64(c, "max").unwrap_or(0),
+                        queue_depth: get_u64(c, "queue_depth").unwrap_or(0),
+                        slo_ms: get_f64(c, "slo_ms").unwrap_or(0.0),
+                    });
+                }
+            }
+            Response::Autoscale(AutoscaleResp {
+                enabled: matches!(j.get("enabled"), Some(Json::Bool(true))),
+                policy: get_str(&j, "policy").unwrap_or_default(),
+                moves: get_u64(&j, "moves").unwrap_or(0),
+                moved_workers: get_u64(&j, "moved_workers").unwrap_or(0),
+                last_action: get_str(&j, "last_action").ok(),
+                contexts,
+                shards: get_u64(&j, "shards").unwrap_or(0),
+                shards_spawned: get_u64(&j, "shards_spawned").unwrap_or(0),
+                shards_retired: get_u64(&j, "shards_retired").unwrap_or(0),
+            })
+        }
         "shutdown" => Response::Shutdown,
         "bye" => Response::Bye,
         other => bail!("unknown response type '{other}'"),
@@ -617,10 +761,12 @@ mod tests {
         roundtrip_req(Request::Hello {
             client: "client-1".into(),
             policy: None,
+            slo_ms: None,
         });
         roundtrip_req(Request::Hello {
             client: "client-2".into(),
             policy: Some("epsilon:0.2".into()),
+            slo_ms: Some(12.5),
         });
         roundtrip_req(Request::Submit(SubmitReq {
             id: 42,
@@ -644,8 +790,33 @@ mod tests {
         }));
         roundtrip_req(Request::Stats);
         roundtrip_req(Request::Contexts);
+        roundtrip_req(Request::AutoscaleStatus);
         roundtrip_req(Request::Shutdown);
         roundtrip_req(Request::Quit);
+    }
+
+    #[test]
+    fn autoscale_response_roundtrips() {
+        roundtrip_resp(Response::Autoscale(AutoscaleResp::default()));
+        roundtrip_resp(Response::Autoscale(AutoscaleResp {
+            enabled: true,
+            policy: "threshold".into(),
+            moves: 3,
+            moved_workers: 5,
+            last_action: Some("moved 2 worker(s) beta -> alpha".into()),
+            contexts: vec![AutoscaleCtxDesc {
+                name: "alpha".into(),
+                workers: 4,
+                home: 2,
+                min: 1,
+                max: 6,
+                queue_depth: 11,
+                slo_ms: 25.0,
+            }],
+            shards: 3,
+            shards_spawned: 1,
+            shards_retired: 0,
+        }));
     }
 
     #[test]
@@ -707,6 +878,12 @@ mod tests {
         roundtrip_resp(Response::Hello {
             session: 9,
             version: PROTOCOL_VERSION,
+            slo_ms: None,
+        });
+        roundtrip_resp(Response::Hello {
+            session: 9,
+            version: PROTOCOL_VERSION,
+            slo_ms: Some(40.0),
         });
         roundtrip_resp(Response::Result(ResultResp {
             id: 42,

@@ -24,13 +24,15 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::protocol::{
-    self, CtxDesc, Request, Response, ResultResp, StatsResp, SubmitReq, PROTOCOL_VERSION,
+    self, AutoscaleCtxDesc, AutoscaleResp, CtxDesc, Request, Response, ResultResp, StatsResp,
+    SubmitReq, PROTOCOL_VERSION,
 };
 use crate::apps;
+use crate::autoscale::{AutoscaleOptions, AutoscaleShared, Autoscaler, ScaleTarget};
 use crate::runtime::Manifest;
 use crate::taskrt::{
-    Arch, Config, CtxId, Runtime, SchedPolicy, SelectionPolicy, SelectorKind, TaskId, TaskSpec,
-    VALID_SELECTORS,
+    Arch, Config, CtxId, CtxLoad, Runtime, SchedPolicy, SelectionPolicy, SelectorKind, TaskId,
+    TaskSpec, VALID_SELECTORS,
 };
 
 // ----------------------------------------------------------- configuration
@@ -106,10 +108,17 @@ pub struct ServeOptions {
     pub ncuda: usize,
     /// Admission cap: requests admitted but not yet completed.
     pub max_inflight: usize,
-    /// How long the batcher waits for same-codelet company.
+    /// Base fuse window of the batcher. The *effective* window is
+    /// snapshot-aware: it widens (up to 4x) while the runtime has a
+    /// queue backlog — fusing more under pressure costs no extra
+    /// latency when requests wait anyway — and shrinks to a quarter
+    /// when the runtime is fully idle, where waiting is pure latency.
     pub batch_window: Duration,
     /// Max requests fused into one batch.
     pub max_batch: usize,
+    /// Elastic worker scaling between scheduling contexts
+    /// (`--autoscale`); `None` = static partitions.
+    pub autoscale: Option<AutoscaleOptions>,
 }
 
 impl Default for ServeOptions {
@@ -124,6 +133,7 @@ impl Default for ServeOptions {
             max_inflight: 64,
             batch_window: Duration::from_micros(500),
             max_batch: 16,
+            autoscale: None,
         }
     }
 }
@@ -235,10 +245,13 @@ impl Batcher {
         self.cv.notify_all();
     }
 
-    /// Dispatcher side: block for work, give same-app company `window`
-    /// to arrive (unless a batch is already full), then take everything.
+    /// Dispatcher side: block for work, give same-app company the fuse
+    /// window to arrive (unless a batch is already full), then take
+    /// everything. The window is supplied by the caller *after* work
+    /// exists — snapshot-aware batching reads the runtime's live queue
+    /// depth / occupancy at that moment, not a stale pre-block value.
     /// Returns None when draining and empty.
-    fn collect(&self) -> Option<Vec<(String, Vec<Job>)>> {
+    fn collect(&self, window: impl Fn() -> Duration) -> Option<Vec<(String, Vec<Job>)>> {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.queued == 0 {
@@ -252,7 +265,7 @@ impl Batcher {
             // is already waiting or we're draining
             let full = st.by_app.values().any(|v| v.len() >= self.max_batch);
             if !full && !st.draining {
-                let (g, _timeout) = self.cv.wait_timeout(st, self.window).unwrap();
+                let (g, _timeout) = self.cv.wait_timeout(st, window()).unwrap();
                 st = g;
                 if st.queued == 0 {
                     continue;
@@ -262,6 +275,21 @@ impl Batcher {
             return Some(std::mem::take(&mut st.by_app).into_iter().collect());
         }
     }
+}
+
+/// The snapshot-aware fuse window: scale the configured base by the
+/// runtime's live pressure (the same `RuntimeSnapshot` features the
+/// selection layer keys on). Idle runtime — nothing queued, nothing
+/// executing — means waiting is pure added latency, so the window
+/// shrinks to a quarter; a queue backlog means requests wait anyway, so
+/// the window widens (up to 4x) and fuses more riders per batch.
+fn adaptive_window(base: Duration, rt: &Runtime) -> Duration {
+    let depth = rt.queued_tasks();
+    if depth == 0 && rt.busy_workers() == 0 {
+        return base / 4;
+    }
+    let per_worker = depth as f64 / rt.worker_count().max(1) as f64;
+    base.mul_f64(1.0 + per_worker.min(3.0))
 }
 
 // ------------------------------------------------------------- the server
@@ -288,7 +316,26 @@ struct Shared {
     /// Context routing table fixed at startup: name -> id.
     ctx_names: Vec<(String, CtxId)>,
     default_ctx: CtxId,
+    /// Elastic-scaling state (v5 `autoscale_status`, hello SLO); set
+    /// once right after the control loop starts.
+    autoscale: Mutex<Option<Arc<AutoscaleShared>>>,
+    /// The configured default SLO (`--slo-ms`), echoed in hello.
+    slo_default: Option<f64>,
     started: Instant,
+}
+
+/// [`ScaleTarget`] adapter: the autoscale control loop samples and
+/// reconfigures the server's runtime through its shared state.
+struct ServeTarget(Arc<Shared>);
+
+impl ScaleTarget for ServeTarget {
+    fn loads(&self) -> Vec<CtxLoad> {
+        self.0.rt.context_loads()
+    }
+
+    fn move_workers(&self, from: CtxId, to: CtxId, n: usize) -> Result<usize> {
+        self.0.rt.move_workers(from, to, n)
+    }
 }
 
 impl Shared {
@@ -375,6 +422,8 @@ pub struct Server {
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
     dispatcher: Option<JoinHandle<()>>,
+    /// The elastic control loop (owns its thread; stopped on shutdown).
+    autoscaler: Option<Autoscaler>,
 }
 
 impl Server {
@@ -465,7 +514,16 @@ impl Server {
             requests_err: AtomicU64::new(0),
             ctx_names,
             default_ctx,
+            autoscale: Mutex::new(None),
+            slo_default: opts.autoscale.as_ref().and_then(|a| a.slo_ms),
             started: Instant::now(),
+        });
+
+        // the elastic control loop, resizing scheduling contexts live
+        let autoscaler = opts.autoscale.clone().map(|aopts| {
+            let scaler = Autoscaler::start(Arc::new(ServeTarget(shared.clone())), aopts);
+            *shared.autoscale.lock().unwrap() = Some(scaler.shared());
+            scaler
         });
 
         let accept = {
@@ -488,6 +546,7 @@ impl Server {
             shared,
             accept: Some(accept),
             dispatcher: Some(dispatcher),
+            autoscaler,
         })
     }
 
@@ -524,9 +583,19 @@ impl Server {
         self.shutdown()
     }
 
+    /// Live elastic-scaling status (None when autoscaling is off).
+    pub fn autoscale_status(&self) -> Option<crate::autoscale::AutoscaleStatus> {
+        self.autoscaler.as_ref().map(|a| a.status())
+    }
+
     /// Graceful drain: stop accepting, let sessions finish, flush the
     /// batcher, wait for every admitted request to complete.
     pub fn shutdown(mut self) -> Result<StatsResp> {
+        // stop the control loop first: a drain must not race worker
+        // migrations
+        if let Some(a) = self.autoscaler.take() {
+            a.stop();
+        }
         let shared = &self.shared;
         shared.draining.store(true, Ordering::SeqCst);
         if let Some(j) = self.accept.take() {
@@ -612,6 +681,13 @@ struct SessionState {
     /// policies (epsilon-greedy exploration counters) learn across the
     /// session's requests.
     policy: Option<(String, Arc<dyn SelectionPolicy>)>,
+    /// Latency SLO declared in the hello (v5): tightens the autoscale
+    /// target of every context this session submits to.
+    slo_ms: Option<f64>,
+    /// Contexts this session already declared its SLO for — the
+    /// registration is once per (session, context), so the submit hot
+    /// path normally touches no autoscale lock at all.
+    slo_declared: Vec<CtxId>,
 }
 
 fn session_loop(shared: Arc<Shared>, stream: TcpStream, sid: u64) {
@@ -653,6 +729,10 @@ fn session_loop(shared: Arc<Shared>, stream: TcpStream, sid: u64) {
             Err(_) => break,
         }
     }
+    // the session's SLO declarations die with it (v5 semantics)
+    if let Some(a) = shared.autoscale.lock().unwrap().as_ref() {
+        a.release_session(sid);
+    }
     shared.rt.tenant_finished();
 }
 
@@ -681,7 +761,11 @@ fn handle_request(
         }
     };
     match req {
-        Request::Hello { client: _, policy } => {
+        Request::Hello {
+            client: _,
+            policy,
+            slo_ms,
+        } => {
             if let Some(p) = policy {
                 match SelectorKind::parse(&p) {
                     Some(kind) => {
@@ -701,11 +785,34 @@ fn handle_request(
                     }
                 }
             }
+            // v5: a declared session SLO tightens the autoscaler's
+            // target for the contexts the session actually submits to
+            // (registered per submit below — declaring here must not
+            // skew contexts the session never uses). The response
+            // echoes the target the session would see on the default
+            // context: the current effective one, tightened by its own
+            // declaration.
+            sess.slo_ms = slo_ms;
+            // a re-declaration replaces the session's earlier target:
+            // force per-context re-registration on the next submits
+            sess.slo_declared.clear();
+            let effective = {
+                let autoscale = shared.autoscale.lock().unwrap();
+                autoscale.as_ref().and_then(|a| {
+                    let (default_name, _) = &shared.ctx_names[shared.default_ctx_index()];
+                    let eff = a.effective_slo(default_name, shared.slo_default);
+                    match (eff, slo_ms) {
+                        (Some(x), Some(y)) => Some(x.min(y)),
+                        (x, y) => x.or(y),
+                    }
+                })
+            };
             send_line(
                 reply,
                 &Response::Hello {
                     session: sid,
                     version: PROTOCOL_VERSION,
+                    slo_ms: effective,
                 },
             );
             true
@@ -729,6 +836,37 @@ fn handle_request(
                 })
                 .collect();
             send_line(reply, &Response::Contexts { contexts });
+            true
+        }
+        Request::AutoscaleStatus => {
+            let resp = match shared.autoscale.lock().unwrap().as_ref() {
+                Some(a) => {
+                    let st = a.status();
+                    AutoscaleResp {
+                        enabled: st.enabled,
+                        policy: st.policy,
+                        moves: st.moves,
+                        moved_workers: st.moved_workers,
+                        last_action: st.last_action,
+                        contexts: st
+                            .contexts
+                            .iter()
+                            .map(|c| AutoscaleCtxDesc {
+                                name: c.name.clone(),
+                                workers: c.workers as u64,
+                                home: c.home as u64,
+                                min: c.min as u64,
+                                max: c.max as u64,
+                                queue_depth: c.queue_depth as u64,
+                                slo_ms: c.slo_ms,
+                            })
+                            .collect(),
+                        ..AutoscaleResp::default()
+                    }
+                }
+                None => AutoscaleResp::default(),
+            };
+            send_line(reply, &Response::Autoscale(resp));
             true
         }
         Request::PerfPull => {
@@ -794,6 +932,19 @@ fn handle_request(
                     return true;
                 }
             };
+            // the session's declared SLO follows its submits: the
+            // tightest *live* declared target per context wins, and the
+            // declaration dies with the session (v5 semantics). Once
+            // per (session, context), so steady-state submits skip the
+            // autoscale locks entirely.
+            if let Some(ms) = sess.slo_ms {
+                if !sess.slo_declared.contains(&ctx_id) {
+                    if let Some(a) = shared.autoscale.lock().unwrap().as_ref() {
+                        a.tighten_slo(&ctx_name, sid, ms);
+                    }
+                    sess.slo_declared.push(ctx_id);
+                }
+            }
             // which policy governs the request: a pinned variant wins,
             // then the session policy, then the context's own
             let policy_name = if let Some(v) = &req.variant {
@@ -825,7 +976,11 @@ fn handle_request(
 // -------------------------------------------------------- dispatch + exec
 
 fn dispatch_loop(shared: Arc<Shared>) {
-    while let Some(batches) = shared.batcher.collect() {
+    let window = {
+        let shared = shared.clone();
+        move || adaptive_window(shared.batcher.window, &shared.rt)
+    };
+    while let Some(batches) = shared.batcher.collect(&window) {
         for (_app, mut jobs) in batches {
             while !jobs.is_empty() {
                 let take = jobs.len().min(shared.batcher.max_batch);
@@ -1094,6 +1249,23 @@ mod tests {
         assert_eq!(v[1].selector, Some(SelectorKind::EpsilonGreedy(0.2)));
         assert_eq!(v[2].selector, Some(SelectorKind::Forced("omp".into())));
         assert!(parse_contexts("a:2:bogus").is_err());
+    }
+
+    #[test]
+    fn adaptive_window_shrinks_when_idle() {
+        // a fully idle runtime pays pure latency for batching: the
+        // snapshot-aware window must shrink below the configured base
+        let rt = Runtime::new(
+            Config {
+                ncpu: 1,
+                ncuda: 0,
+                ..Config::default()
+            },
+            None,
+        )
+        .unwrap();
+        let base = Duration::from_micros(400);
+        assert_eq!(adaptive_window(base, &rt), base / 4);
     }
 
     #[test]

@@ -103,6 +103,26 @@ pub struct ContextInfo {
     pub queued: usize,
 }
 
+/// Per-context load sample — the input of elastic control loops
+/// ([`crate::autoscale`]). Mirrors the [`RuntimeSnapshot`] features at
+/// context granularity.
+#[derive(Debug, Clone)]
+pub struct CtxLoad {
+    pub id: CtxId,
+    pub name: String,
+    /// Member workers in the partition.
+    pub workers: usize,
+    /// Tasks pushed to this context's scheduler, not yet popped.
+    pub queue_depth: usize,
+    /// Member workers currently executing a task.
+    pub busy: usize,
+    /// Modeled backlog seconds on the least-loaded member — the
+    /// best-case wait a newly placed task would see.
+    pub queued_secs: f64,
+    /// Live serve-layer sessions sharing the runtime.
+    pub tenants: usize,
+}
+
 /// Shared runtime state (one per [`Runtime`]).
 pub(crate) struct Inner {
     pub config: Config,
@@ -128,6 +148,9 @@ pub(crate) struct Inner {
     pub manifest: Option<Arc<Manifest>>,
     pub xla: Option<XlaHandle>,
     pub shutdown: AtomicBool,
+    /// Serializes live reconfigurations ([`Runtime::move_workers`]):
+    /// two concurrent migrations must not pick the same worker.
+    pub reconfig: Mutex<()>,
     /// (in-flight count, condvar) for wait_all.
     pub inflight: Mutex<usize>,
     pub inflight_cv: Condvar,
@@ -249,6 +272,7 @@ impl Runtime {
             manifest,
             xla,
             shutdown: AtomicBool::new(false),
+            reconfig: Mutex::new(()),
             inflight: Mutex::new(0),
             inflight_cv: Condvar::new(),
             epoch: std::time::Instant::now(),
@@ -339,8 +363,10 @@ impl Runtime {
                 self.inner.workers.len()
             );
         }
-        // Hold the inflight lock for the whole reconfiguration: quiescence
-        // can't be invalidated by a concurrent submit.
+        // Serialize against live worker migrations (move_workers), then
+        // hold the inflight lock for the whole reconfiguration:
+        // quiescence can't be invalidated by a concurrent submit.
+        let _reconfig = self.inner.reconfig.lock().unwrap();
         let inflight = self.inner.inflight.lock().unwrap();
         if *inflight > 0 {
             bail!(
@@ -355,7 +381,10 @@ impl Runtime {
         }
         let id = contexts.len();
 
-        // Rebuild every context losing workers (slots are immutable).
+        // Shrink every context losing workers. Membership is interior-
+        // mutable (the autoscale work), so donors update in place: their
+        // scheduler queues (empty — the runtime is quiescent) and
+        // learned selection-policy state survive the repartition.
         let mut donors: Vec<CtxId> = members
             .iter()
             .map(|&w| self.inner.worker_ctx[w].load(Ordering::Acquire))
@@ -363,21 +392,14 @@ impl Runtime {
         donors.sort_unstable();
         donors.dedup();
         for donor in donors {
-            let (donor_name, donor_policy, donor_selector, keep) = {
-                let old = &contexts[donor];
-                let keep: Vec<usize> = old
-                    .ctx
-                    .members
-                    .iter()
-                    .copied()
-                    .filter(|w| !members.contains(w))
-                    .collect();
-                (old.name.clone(), old.policy, old.selector.clone(), keep)
-            };
-            let rebuilt =
-                self.inner
-                    .make_slot(&donor_name, donor_policy, donor_selector, keep, donor as u64);
-            contexts[donor] = Arc::new(rebuilt);
+            let old = &contexts[donor];
+            let keep: Vec<usize> = old
+                .ctx
+                .members()
+                .into_iter()
+                .filter(|w| !members.contains(w))
+                .collect();
+            old.ctx.set_members(keep);
         }
 
         let slot =
@@ -413,7 +435,7 @@ impl Runtime {
                 name: c.name.clone(),
                 policy: c.policy,
                 selector: c.selector.name(),
-                workers: c.ctx.members.clone(),
+                workers: c.ctx.members(),
                 queued: c.sched.queued(),
             })
             .collect()
@@ -427,6 +449,176 @@ impl Runtime {
             .unwrap()
             .get(id)
             .map(|c| c.selector.name())
+    }
+
+    /// Member workers currently in context `id` (0 for an unknown id).
+    pub fn worker_count_in(&self, id: CtxId) -> usize {
+        self.inner
+            .contexts
+            .read()
+            .unwrap()
+            .get(id)
+            .map(|c| c.ctx.member_count())
+            .unwrap_or(0)
+    }
+
+    /// Per-context load samples — the elastic control loop's input.
+    /// The same snapshot features the selection layer keys on
+    /// ([`RuntimeSnapshot`]), aggregated per scheduling context.
+    pub fn context_loads(&self) -> Vec<CtxLoad> {
+        let contexts = self.inner.contexts.read().unwrap();
+        contexts
+            .iter()
+            .enumerate()
+            .map(|(id, c)| {
+                let members = c.ctx.members();
+                let busy = members
+                    .iter()
+                    .map(|&w| c.ctx.running[w].load(Ordering::Relaxed).min(1))
+                    .sum();
+                // best-case wait: the backlog of the least-loaded member
+                let queued_secs = members
+                    .iter()
+                    .map(|&w| c.ctx.queued_secs(w))
+                    .fold(f64::INFINITY, f64::min);
+                CtxLoad {
+                    id,
+                    name: c.name.clone(),
+                    workers: members.len(),
+                    queue_depth: c.ctx.pending.load(Ordering::Relaxed).max(0) as usize,
+                    busy,
+                    queued_secs: if queued_secs.is_finite() { queued_secs } else { 0.0 },
+                    tenants: c.ctx.tenants.load(Ordering::Relaxed),
+                }
+            })
+            .collect()
+    }
+
+    /// Migrate up to `n` workers from context `from` into context `to`
+    /// **without quiescing the runtime** — the elastic-capacity
+    /// primitive behind `compar autoscale`. Returns how many workers
+    /// actually moved (0 when the donor has nothing movable).
+    ///
+    /// A moving worker finishes (or keeps) whatever task it already
+    /// popped from the donor, then re-homes on its next scheduling
+    /// iteration; tasks parked in its donor lane are evicted and
+    /// re-placed on the remaining members under the donor's migration
+    /// gate, so no task strands and the queue-depth / occupancy /
+    /// deque-model counters stay exact. Movers are chosen idle-first,
+    /// and a worker that is the donor's *last member of its
+    /// architecture* never moves (queued work needing that architecture
+    /// must keep an executor) — which also means a context never
+    /// shrinks to zero workers through this path.
+    pub fn move_workers(&self, from: CtxId, to: CtxId, n: usize) -> Result<usize> {
+        if from == to {
+            bail!("move_workers: source and destination are both context {from}");
+        }
+        let _reconfig = self.inner.reconfig.lock().unwrap();
+        let (src, dst) = {
+            let contexts = self.inner.contexts.read().unwrap();
+            let src = contexts
+                .get(from)
+                .cloned()
+                .ok_or_else(|| anyhow!("unknown scheduling context {from}"))?;
+            let dst = contexts
+                .get(to)
+                .cloned()
+                .ok_or_else(|| anyhow!("unknown scheduling context {to}"))?;
+            (src, dst)
+        };
+        if n == 0 {
+            return Ok(0);
+        }
+        let members = src.ctx.members();
+        // mover preference: workers whose architecture the receiver
+        // already serves come first — a worker of a foreign arch cannot
+        // execute the receiver's queued work and would only dilute its
+        // pressure signal — then idle workers (their migration is
+        // drain-free), stable by id. Foreign-arch workers still move
+        // when nothing else can (deliberate heterogeneous growth).
+        let dst_archs = dst.ctx.member_archs();
+        let mut cands = members.clone();
+        cands.sort_by_key(|&w| {
+            let arch = self.inner.workers[w].arch;
+            (
+                !dst_archs.is_empty() && !dst_archs.contains(&arch),
+                src.ctx.running[w].load(Ordering::Relaxed),
+                w,
+            )
+        });
+        let mut remaining = members;
+        let mut movers: Vec<usize> = Vec::new();
+        for w in cands {
+            if movers.len() == n {
+                break;
+            }
+            let arch = self.inner.workers[w].arch;
+            let same_arch = remaining
+                .iter()
+                .filter(|&&x| self.inner.workers[x].arch == arch)
+                .count();
+            if same_arch <= 1 {
+                continue; // last of its architecture stays
+            }
+            remaining.retain(|&x| x != w);
+            movers.push(w);
+        }
+        if movers.is_empty() {
+            return Ok(0);
+        }
+        // 1) shrink the donor under its migration write gate: in-flight
+        //    pushes (which hold the read side) finish first, and no new
+        //    push can target a mover's lane after the eviction sweep
+        {
+            let _gate = src.ctx.migration.write().unwrap();
+            src.ctx.set_members(remaining);
+            for &w in &movers {
+                for mut t in src.sched.evict(w) {
+                    // undo the deque-model charge; the re-push re-places
+                    // (and re-charges) on the remaining members
+                    if t.est_cost_ns > 0 {
+                        src.ctx.discharge(w, t.est_cost_ns);
+                        t.est_cost_ns = 0;
+                    }
+                    t.chosen_impl = None;
+                    src.sched.push(t, &src.ctx);
+                }
+            }
+        }
+        // 2) grow the receiver, then re-home the workers: each mover
+        //    re-resolves its context on the next worker-loop iteration
+        let mut dst_members = dst.ctx.members();
+        dst_members.extend(movers.iter().copied());
+        dst.ctx.set_members(dst_members);
+        for &w in &movers {
+            self.inner.worker_ctx[w].store(to, Ordering::Release);
+        }
+        Ok(movers.len())
+    }
+
+    /// Resize context `id` toward `target` member workers by exchanging
+    /// workers with the default context (the elastic pool); see
+    /// [`Runtime::move_workers`] for the migration semantics. Returns
+    /// the context's new worker count, which may fall short of `target`
+    /// when the pool cannot supply (or absorb) enough workers.
+    pub fn resize_context(&self, id: CtxId, target: usize) -> Result<usize> {
+        if id == DEFAULT_CTX {
+            bail!("resize_context: context 0 is the elastic pool itself");
+        }
+        if self.inner.slot(id).is_none() {
+            bail!("unknown scheduling context {id}");
+        }
+        let cur = self.worker_count_in(id);
+        match target.cmp(&cur) {
+            std::cmp::Ordering::Greater => {
+                self.move_workers(DEFAULT_CTX, id, target - cur)?;
+            }
+            std::cmp::Ordering::Less => {
+                self.move_workers(id, DEFAULT_CTX, cur - target)?;
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+        Ok(self.worker_count_in(id))
     }
 
     // ------------------------------------------------------------- data
@@ -514,7 +706,7 @@ impl Runtime {
                 spec.codelet.name,
                 spec.size,
                 slot.name,
-                slot.ctx.members,
+                slot.ctx.members(),
                 slot.ctx.policy_for(&probe).name()
             );
         }

@@ -55,6 +55,9 @@ impl Dmda {
             .max()
             .unwrap_or(1);
         let mut node_transfer: Vec<Option<f64>> = vec![None; n_nodes];
+        // snapshot, not a held read guard: select_impl below re-enters
+        // the member lock (query capture), and std's RwLock is not
+        // re-entrant once a writer (a live migration) is queued
         for w in ctx.member_workers() {
             let choice = match per_arch.iter().find(|(a, _)| *a == w.arch) {
                 Some((_, c)) => c.clone(),
@@ -141,6 +144,10 @@ impl Scheduler for Dmda {
     fn name(&self) -> &'static str {
         "dmda"
     }
+
+    fn evict(&self, worker: usize) -> Vec<ReadyTask> {
+        self.queues.take_lane(worker)
+    }
 }
 
 #[cfg(test)]
@@ -206,7 +213,7 @@ mod tests {
 
     #[test]
     fn place_respects_context_members() {
-        let (mut ctx, h) = wide_ctx(12);
+        let (ctx, h) = wide_ctx(12);
         ctx.set_members(vec![9, 10, 11]);
         for _ in 0..32 {
             let (w, _, _) = Dmda::place(&ready(h), &ctx, |_, _, _| 0.0).unwrap();
@@ -216,7 +223,7 @@ mod tests {
 
     #[test]
     fn empty_partition_yields_no_placement() {
-        let (mut ctx, h) = wide_ctx(4);
+        let (ctx, h) = wide_ctx(4);
         ctx.set_members(vec![]);
         assert!(Dmda::place(&ready(h), &ctx, |_, _, _| 0.0).is_none());
     }

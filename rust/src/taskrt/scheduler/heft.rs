@@ -65,4 +65,8 @@ impl Scheduler for Heft {
     fn name(&self) -> &'static str {
         "heft"
     }
+
+    fn evict(&self, worker: usize) -> Vec<ReadyTask> {
+        self.queues.take_lane(worker)
+    }
 }

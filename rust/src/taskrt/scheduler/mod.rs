@@ -19,7 +19,7 @@ pub mod random;
 pub mod ws;
 
 use std::sync::atomic::{AtomicIsize, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use super::codelet::{Codelet, ImplKind};
@@ -68,8 +68,18 @@ pub struct WorkerInfo {
 pub struct SchedCtx {
     pub workers: Vec<WorkerInfo>,
     /// Global worker ids belonging to this scheduling context. Policies
-    /// must only place tasks on member workers.
-    pub members: Vec<usize>,
+    /// must only place tasks on member workers. Behind a lock since the
+    /// autoscale work: membership can change *live* (worker migration
+    /// between contexts) without rebuilding the slot — read through
+    /// [`SchedCtx::members`] / [`SchedCtx::member_workers`].
+    members: RwLock<Vec<usize>>,
+    /// Migration gate: task pushes hold a read lock while they place
+    /// into this context's scheduler; a worker migration holds the
+    /// write lock while it evicts the leaving worker's lane. This
+    /// closes the race where a push placed onto a worker that left the
+    /// partition between the placement scan and the lane insert — such
+    /// a task would strand (the worker now pops from another context).
+    pub(crate) migration: RwLock<()>,
     pub perf: Arc<PerfModels>,
     pub data: Arc<DataRegistry>,
     pub manifest: Option<Arc<Manifest>>,
@@ -116,7 +126,8 @@ impl SchedCtx {
         let members = (0..workers.len()).collect();
         SchedCtx {
             workers,
-            members,
+            members: RwLock::new(members),
+            migration: RwLock::new(()),
             perf,
             data,
             manifest,
@@ -132,16 +143,44 @@ impl SchedCtx {
     }
 
     /// Restrict this context to a worker subset (scheduling contexts).
-    pub fn set_members(&mut self, mut members: Vec<usize>) {
+    /// Takes `&self`: since the autoscale work, membership is interior-
+    /// mutable so workers can migrate between live contexts without
+    /// rebuilding the slot (which would orphan queued tasks and the
+    /// occupancy counters held by in-flight executions).
+    pub fn set_members(&self, mut members: Vec<usize>) {
         members.sort_unstable();
         members.dedup();
         members.retain(|&w| w < self.workers.len());
-        self.members = members;
+        *self.members.write().unwrap() = members;
     }
 
-    /// The member workers' static descriptions.
-    pub fn member_workers(&self) -> impl Iterator<Item = &WorkerInfo> {
-        self.members.iter().map(|&w| &self.workers[w])
+    /// Current member worker ids (a snapshot — membership can change
+    /// under live worker migration).
+    pub fn members(&self) -> Vec<usize> {
+        self.members.read().unwrap().clone()
+    }
+
+    /// Read-locked view of the member list (hot paths that only scan).
+    pub(crate) fn members_read(&self) -> std::sync::RwLockReadGuard<'_, Vec<usize>> {
+        self.members.read().unwrap()
+    }
+
+    pub fn member_count(&self) -> usize {
+        self.members.read().unwrap().len()
+    }
+
+    pub fn is_member(&self, worker: usize) -> bool {
+        self.members.read().unwrap().contains(&worker)
+    }
+
+    /// The member workers' static descriptions (snapshot).
+    pub fn member_workers(&self) -> Vec<WorkerInfo> {
+        self.members
+            .read()
+            .unwrap()
+            .iter()
+            .map(|&w| self.workers[w].clone())
+            .collect()
     }
 
     /// Where to park a task that has no eligible placement: a *member*
@@ -149,15 +188,17 @@ impl SchedCtx {
     /// instead of stranding in another partition's lane. (Submit
     /// pre-validates executability, so this is a defensive corner.)
     pub fn fallback_worker(&self) -> usize {
-        self.members.first().copied().unwrap_or(0)
+        self.members.read().unwrap().first().copied().unwrap_or(0)
     }
 
     /// Distinct architectures present in this context's partition.
     pub fn member_archs(&self) -> Vec<Arch> {
+        let members = self.members_read();
         let mut archs = Vec::new();
-        for w in self.member_workers() {
-            if !archs.contains(&w.arch) {
-                archs.push(w.arch);
+        for &w in members.iter() {
+            let arch = self.workers[w].arch;
+            if !archs.contains(&arch) {
+                archs.push(arch);
             }
         }
         archs
@@ -192,10 +233,14 @@ impl SchedCtx {
     }
 
     /// Member workers the task's selection policy can serve.
+    /// (`can_run` probes with an empty snapshot and never re-enters the
+    /// member lock, so scanning under the read guard is safe.)
     pub fn eligible_workers(&self, task: &ReadyTask) -> Vec<usize> {
-        self.member_workers()
-            .filter(|w| self.can_run(task, w.arch))
-            .map(|w| w.id)
+        let members = self.members_read();
+        members
+            .iter()
+            .copied()
+            .filter(|&w| self.can_run(task, self.workers[w].arch))
             .collect()
     }
 
@@ -303,6 +348,13 @@ pub trait Scheduler: Send + Sync {
     /// Tasks currently queued (diagnostics).
     fn queued(&self) -> usize;
     fn name(&self) -> &'static str;
+    /// Remove every task parked in `worker`'s private lane, for
+    /// re-placement when the worker migrates out of this scheduling
+    /// context. Schedulers with one shared queue (eager) have nothing
+    /// worker-private to evict and keep the default.
+    fn evict(&self, _worker: usize) -> Vec<ReadyTask> {
+        Vec::new()
+    }
 }
 
 /// Instantiate a policy by config value.
@@ -434,5 +486,15 @@ impl PerWorkerQueues {
             .iter()
             .map(|l| l.q.lock().unwrap().len())
             .sum()
+    }
+
+    /// Drain everything parked in `worker`'s lane (worker migration:
+    /// the departing worker will never pop this queue again).
+    pub fn take_lane(&self, worker: usize) -> Vec<ReadyTask> {
+        let lanes = self.lanes.read().unwrap();
+        match lanes.get(worker) {
+            Some(l) => l.q.lock().unwrap().drain(..).collect(),
+            None => Vec::new(),
+        }
     }
 }

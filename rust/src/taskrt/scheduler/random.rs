@@ -46,4 +46,8 @@ impl Scheduler for RandomSched {
     fn name(&self) -> &'static str {
         "random"
     }
+
+    fn evict(&self, worker: usize) -> Vec<ReadyTask> {
+        self.queues.take_lane(worker)
+    }
 }

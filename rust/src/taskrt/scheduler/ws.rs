@@ -49,4 +49,8 @@ impl Scheduler for WorkStealing {
     fn name(&self) -> &'static str {
         "ws"
     }
+
+    fn evict(&self, worker: usize) -> Vec<ReadyTask> {
+        self.queues.take_lane(worker)
+    }
 }

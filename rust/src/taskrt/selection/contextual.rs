@@ -267,8 +267,10 @@ mod tests {
         assert_eq!(task.codelet.impls[i].name, "cuda");
 
         // contended phase: the device variant is observed 50x slower
-        // (interference); the observation lands in the loaded band
-        pressure(&ctx, 2, 4);
+        // (interference); the observation lands in the loaded band.
+        // (At most one in-flight task per worker — capture() asserts
+        // the occupancy invariant; the queue depth carries the band.)
+        pressure(&ctx, 1, 4);
         p.feedback(&ctx.query(&task, Arch::Cuda), "cuda", 5e-2);
         p.feedback(&ctx.query(&task, Arch::Cpu), "omp", 5e-3);
         assert_eq!(p.band_observations("c", "cuda", 64, 2), 1);
@@ -281,7 +283,7 @@ mod tests {
 
         // ...whereas Greedy in the identical state keeps the device
         let greedy_ctx = two_arch_ctx(Arc::new(Greedy::new()));
-        pressure(&greedy_ctx, 2, 4);
+        pressure(&greedy_ctx, 1, 4);
         let (_, i, _) = Dmda::place(&task, &greedy_ctx, |_, _, _| 0.0).unwrap();
         assert_eq!(task.codelet.impls[i].name, "cuda", "greedy cannot see the load");
 
@@ -319,7 +321,7 @@ mod tests {
         // so no amount of snapshot pressure may override the pin
         let ctx = two_arch_ctx(Arc::new(Contextual::new()));
         let task = cross_arch_task(None);
-        pressure(&ctx, 8, 64);
+        pressure(&ctx, 1, 64);
         ctx.charge(1, 500_000_000);
         let pin = Forced::new("cuda");
         let c = pin.select(&ctx.query(&task, Arch::Cuda)).unwrap();

@@ -97,8 +97,16 @@ impl<'a> SelectionQuery<'a> {
         let mut arch_inflight = 0usize;
         let mut busy_workers = 0usize;
         let mut queued: Option<f64> = None;
-        for &w in &ctx.members {
+        let members = ctx.members_read();
+        for &w in members.iter() {
             let running = ctx.running[w].load(Ordering::Relaxed);
+            // a worker executes at most one task from its context at a
+            // time; a higher count means the occupancy accounting (the
+            // Busy guard, or worker migration) leaked an increment
+            debug_assert!(
+                running <= 1,
+                "worker {w} in-flight count {running} > 1 (occupancy leak)"
+            );
             busy_workers += running.min(1);
             if ctx.workers[w].arch == arch {
                 arch_workers += 1;
@@ -110,13 +118,24 @@ impl<'a> SelectionQuery<'a> {
                 });
             }
         }
+        // per-arch in-flight work can never exceed the partition's
+        // per-arch parallelism — the invariant worker migration must
+        // preserve (each member contributes at most one in-flight task)
+        debug_assert!(
+            arch_inflight <= arch_workers,
+            "{} in-flight tasks on {arch_workers} {} member worker(s)",
+            arch_inflight,
+            arch.name()
+        );
+        let partition_workers = members.len();
+        drop(members);
         let snapshot = RuntimeSnapshot {
             // clamped: the pop/push accounting may transiently be -1
             queue_depth: ctx.pending.load(Ordering::Relaxed).max(0) as usize,
             arch_workers,
             arch_inflight,
             busy_workers,
-            partition_workers: ctx.members.len(),
+            partition_workers,
             queued_secs: queued.unwrap_or(0.0),
             tenants: ctx.tenants.load(Ordering::Relaxed),
         };
@@ -186,14 +205,16 @@ impl<'a> SelectionQuery<'a> {
     /// have to move. Walks the data registry, so it is computed on
     /// demand rather than captured in the snapshot.
     pub fn pending_transfer_bytes(&self) -> usize {
+        let members = self.ctx.members_read();
         let mut best: Option<usize> = None;
         let mut seen_nodes: Vec<usize> = Vec::new();
-        for w in self.ctx.member_workers() {
+        for &id in members.iter() {
+            let w = &self.ctx.workers[id];
             if w.arch != self.arch || seen_nodes.contains(&w.mem_node) {
                 continue;
             }
             seen_nodes.push(w.mem_node);
-            let pending = self.ctx.transfer_bytes(self.task, w.id);
+            let pending = self.ctx.transfer_bytes(self.task, id);
             best = Some(match best {
                 Some(b) if b <= pending => b,
                 _ => pending,
@@ -286,13 +307,15 @@ mod tests {
         assert_eq!(q.snapshot.partition_workers, 2);
 
         ctx.pending.store(3, Ordering::Relaxed);
-        ctx.running[1].store(2, Ordering::Relaxed);
+        // at most one in-flight task per worker — capture() debug-asserts
+        // the invariant (the autoscale counter audit)
+        ctx.running[1].store(1, Ordering::Relaxed);
         ctx.charge(1, 50_000_000); // 50 ms modeled backlog on the device
         let q = ctx.query(&t, Arch::Cuda);
         assert_eq!(q.snapshot.queue_depth, 3);
-        assert_eq!(q.snapshot.arch_inflight, 2);
+        assert_eq!(q.snapshot.arch_inflight, 1);
         assert_eq!(q.snapshot.busy_workers, 1);
-        assert_eq!(q.snapshot.load_band(), 2, "5 pending > 1 worker");
+        assert_eq!(q.snapshot.load_band(), 2, "4 pending > 1 worker");
         assert!((q.snapshot.queued_secs - 0.05).abs() < 1e-9);
         // the CPU-side view sees the context-wide queue but not the
         // device's in-flight work

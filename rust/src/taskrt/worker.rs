@@ -127,7 +127,13 @@ pub(crate) fn push_ready(inner: &Arc<Inner>, id: super::task::TaskId) {
         // inside push(), and the task being placed must not count
         // itself as pressure — otherwise the idle band would be
         // unreachable on the decision path and banded policies would
-        // learn into a band that selection never consults
+        // learn into a band that selection never consults.
+        // The migration read gate makes the placement atomic against a
+        // concurrent worker migration: without it, a push could target a
+        // worker that leaves the partition between the placement scan
+        // and the lane insert, stranding the task after the migration's
+        // eviction sweep already ran.
+        let _gate = slot.ctx.migration.read().unwrap();
         slot.sched.push(rt, &slot.ctx);
         slot.ctx.pending.fetch_add(1, Ordering::Relaxed);
     }

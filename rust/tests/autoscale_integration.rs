@@ -1,0 +1,346 @@
+//! Integration tests for the elastic control plane: live worker
+//! migration between scheduling contexts under a real backlog (workers
+//! flow in, p95 drops vs a static control, workers flow home after the
+//! drain, pinned variants are unaffected throughout), and shard
+//! elasticity in a cluster (a burst spawns a gossip-seeded shard that
+//! is calibrated from its first request; retirement drains cleanly).
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use compar::autoscale::{AutoscaleOptions, Autoscaler};
+use compar::cluster::{ClusterScaleOptions, LocalCluster, RouterOptions};
+use compar::runtime::Tensor;
+use compar::serve::protocol::SubmitReq;
+use compar::serve::{loadgen, Client, LoadgenOptions, ServeOptions};
+use compar::taskrt::{
+    AccessMode, Arch, Codelet, Config, Runtime, SchedPolicy, SelectorKind, TaskId, TaskSpec,
+};
+
+/// A CPU codelet whose variants really sleep, so a burst builds an
+/// observable backlog the control loop must relieve.
+fn sleeper_codelet(ms: u64) -> Codelet {
+    let napping: compar::taskrt::NativeFn = Arc::new(move |_| {
+        std::thread::sleep(Duration::from_millis(ms));
+        Ok(())
+    });
+    Codelet::new("duo", "sort", vec![AccessMode::Read])
+        .with_native("omp", Arch::Cpu, napping.clone())
+        .with_native("seq", Arch::Cpu, napping)
+}
+
+/// 6 CPU workers partitioned into hot:[0,1] and pool:[2..6].
+fn hot_pool_runtime() -> (Arc<Runtime>, usize, usize) {
+    let rt = Runtime::new(
+        Config {
+            ncpu: 6,
+            ncuda: 0,
+            sched: SchedPolicy::Eager,
+            ..Config::default()
+        },
+        None,
+    )
+    .unwrap();
+    let hot = rt
+        .create_context_with("hot", &[0, 1], SchedPolicy::Eager, SelectorKind::Greedy)
+        .unwrap();
+    let pool = rt
+        .create_context_with("pool", &[2, 3, 4, 5], SchedPolicy::Eager, SelectorKind::Greedy)
+        .unwrap();
+    (Arc::new(rt), hot, pool)
+}
+
+/// Submit a 40-task burst into `ctx` and return (task ids, p95 sojourn
+/// seconds). Sojourn is measured from the burst's first task start to
+/// each task's completion — with a fixed worker count the tail waits
+/// behind the whole queue, so p95 tracks the backlog directly.
+fn run_burst(rt: &Runtime, cl: &Arc<Codelet>, ctx: usize, probes: &mut Vec<TaskId>) -> f64 {
+    let mut ids = Vec::new();
+    for _ in 0..40 {
+        let h = rt.register_data(Tensor::vector(vec![0.0; 4]));
+        ids.push(
+            rt.submit(TaskSpec::new(cl.clone(), vec![h], 4096).in_context(ctx))
+                .unwrap(),
+        );
+    }
+    // a pinned probe submitted while the backlog is at its deepest: the
+    // Forced path must be unaffected by any migration underneath it
+    let h = rt.register_data(Tensor::vector(vec![0.0; 4]));
+    probes.push(
+        rt.submit(
+            TaskSpec::new(cl.clone(), vec![h], 4096)
+                .in_context(ctx)
+                .with_variant("seq"),
+        )
+        .unwrap(),
+    );
+    rt.wait_all().unwrap();
+    let results = rt.drain_results();
+    let burst: Vec<&compar::taskrt::TaskResult> =
+        results.iter().filter(|r| ids.contains(&r.task)).collect();
+    assert_eq!(burst.len(), 40);
+    let t0 = burst
+        .iter()
+        .map(|r| r.t_start)
+        .fold(f64::INFINITY, f64::min);
+    let mut sojourns: Vec<f64> = burst.iter().map(|r| r.t_end - t0).collect();
+    sojourns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let probe_variant = results
+        .iter()
+        .find(|r| Some(&r.task) == probes.last())
+        .map(|r| r.variant.clone());
+    assert_eq!(
+        probe_variant.as_deref(),
+        Some("seq"),
+        "pinned variant must survive the burst (and any migration)"
+    );
+    compar::util::stats::percentile(&sojourns, 95.0)
+}
+
+/// Acceptance criterion: under a sustained 40-task backlog on one
+/// context, workers migrate into it, p95 drops vs a no-autoscale
+/// control, and after the drain the workers return home — while a
+/// forced-variant probe is honored throughout.
+#[test]
+fn workers_migrate_into_pressured_context_and_return_home() {
+    // control: static partitions
+    let (rt, hot, _pool) = hot_pool_runtime();
+    let cl = rt.register_codelet(sleeper_codelet(5));
+    let mut probes = Vec::new();
+    let p95_off = run_burst(&rt, &cl, hot, &mut probes);
+    drop(rt);
+
+    // elastic: same topology, control loop on
+    let (rt, hot, pool) = hot_pool_runtime();
+    let cl = rt.register_codelet(sleeper_codelet(5));
+    let scaler = Autoscaler::start(
+        rt.clone(),
+        AutoscaleOptions {
+            period: Duration::from_millis(10),
+            cooldown: Duration::from_millis(40),
+            sustain: 1,
+            ..AutoscaleOptions::default()
+        },
+    );
+
+    // watch the hot context grow while the burst runs
+    let rt2 = rt.clone();
+    let watcher = std::thread::spawn(move || {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut peak = 0usize;
+        while Instant::now() < deadline {
+            peak = peak.max(rt2.worker_count_in(hot));
+            if peak > 2 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        peak
+    });
+    let mut probes = Vec::new();
+    let p95_on = run_burst(&rt, &cl, hot, &mut probes);
+    let peak = watcher.join().unwrap();
+    assert!(
+        peak > 2,
+        "no worker ever migrated into the pressured context (peak {peak})"
+    );
+
+    // give-back: once calm, the borrowed workers return home
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        let (h, p) = (rt.worker_count_in(hot), rt.worker_count_in(pool));
+        if h == 2 && p == 4 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "workers never returned home (hot {h}, pool {p})"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let status = scaler.status();
+    assert!(status.moves >= 2, "expected scale-up and give-back: {status:?}");
+    scaler.stop();
+
+    // elasticity must pay off on the tail: generous margin against CI
+    // noise — the structural gap (2 workers vs up to 5) is far larger
+    assert!(
+        p95_on < p95_off * 0.9,
+        "p95 with autoscale ({p95_on:.4}s) not better than control ({p95_off:.4}s)"
+    );
+
+    // the runtime still works after all the churn
+    let h = rt.register_data(Tensor::vector(vec![0.0; 4]));
+    rt.submit(TaskSpec::new(cl.clone(), vec![h], 4096).in_context(hot))
+        .unwrap();
+    rt.wait_all().unwrap();
+}
+
+/// The runtime-level floor: a migration may never empty a context or
+/// remove the last worker of an architecture; unknown contexts error.
+#[test]
+fn move_workers_respects_floors_and_validates() {
+    let (rt, hot, pool) = hot_pool_runtime();
+    assert!(rt.move_workers(hot, hot, 1).is_err(), "self-move");
+    assert!(rt.move_workers(99, hot, 1).is_err(), "unknown source");
+    assert!(rt.move_workers(hot, 99, 1).is_err(), "unknown destination");
+    // asking for far more than the donor can give moves all but one
+    let moved = rt.move_workers(pool, hot, 100).unwrap();
+    assert_eq!(moved, 3, "pool must keep its last worker");
+    assert_eq!(rt.worker_count_in(pool), 1);
+    assert_eq!(rt.worker_count_in(hot), 5);
+    // nothing left to give
+    assert_eq!(rt.move_workers(pool, hot, 1).unwrap(), 0);
+    // resize_context exchanges with the default (empty here) pool
+    assert!(rt.resize_context(0, 3).is_err(), "ctx 0 is the pool itself");
+}
+
+fn submit(id: u64, seed: u64, verify: bool) -> SubmitReq {
+    SubmitReq {
+        id,
+        app: "matmul".into(),
+        size: 48,
+        tasks: 1,
+        ctx: None,
+        seed,
+        variant: None,
+        verify,
+    }
+}
+
+/// Acceptance criterion: the router spawns a shard under burst, the
+/// newcomer serves requests with gossip-seeded perf models (no
+/// recalibration sweep on its first requests), and retirement drains
+/// cleanly with zero failed client requests.
+#[test]
+fn cluster_spawns_gossip_seeded_shard_under_burst_and_retires_it() {
+    let serve = ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        ncpu: 2,
+        ncuda: 0,
+        selector: Some(SelectorKind::Calibrating),
+        ..ServeOptions::default()
+    };
+    let ropts = RouterOptions {
+        listen: "127.0.0.1:0".into(),
+        health_period: Duration::from_millis(100),
+        gossip_period: Duration::from_millis(120),
+        ..RouterOptions::default()
+    };
+    let scale = ClusterScaleOptions {
+        min_shards: 1,
+        max_shards: 3,
+        up_load: 3,
+        down_load: 0,
+        sustain: 1,
+        // long enough that the newcomer cannot be retired while the
+        // test is still talking to it directly
+        cooldown: Duration::from_millis(1500),
+        period: Duration::from_millis(100),
+        ..ClusterScaleOptions::default()
+    };
+    let (cluster, launcher) = LocalCluster::start_elastic(2, &serve, ropts, scale).unwrap();
+    let initial: BTreeSet<String> = cluster
+        .router
+        .shards()
+        .iter()
+        .map(|d| d.addr.clone())
+        .collect();
+
+    // calibrate (matmul, 48) on shard A only, then give the router a
+    // gossip round to pull the buckets it will seed newcomers with
+    let addr_a = cluster.shards[0].local_addr().to_string();
+    let mut c = Client::connect(&addr_a).unwrap();
+    for r in 0..12u64 {
+        c.submit(submit(r, 100 + r, false)).unwrap();
+    }
+    c.quit().unwrap();
+    // two pull periods are enough for the router's gossip cache to hold
+    // shard A's buckets (what seed_newcomer ships to spawned shards)
+    std::thread::sleep(Duration::from_millis(300));
+
+    // burst through the router until the scaler spawns a third shard
+    let lg = LoadgenOptions {
+        clients: 6,
+        requests: 30,
+        app: "matmul".into(),
+        // heavy enough that the health poll's in-flight gauge stays
+        // above the spawn band for the whole burst
+        size: 128,
+        tasks: 2,
+        pipeline: 8,
+        verify: false,
+        ..LoadgenOptions::default()
+    };
+    let addr = cluster.addr();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut errors = 0usize;
+    loop {
+        let report = loadgen::run(&addr, &lg).unwrap();
+        errors += report.errors;
+        let (spawned, _) = cluster.router.scale_counters();
+        if spawned >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "burst load never triggered a shard spawn"
+        );
+    }
+    assert_eq!(errors, 0, "requests failed during the burst");
+
+    // the newcomer is in the table; connect to it directly — its first
+    // requests must already exploit (one variant, no calibration sweep)
+    let newcomer = cluster
+        .router
+        .shards()
+        .iter()
+        .map(|d| d.addr.clone())
+        .find(|a| !initial.contains(a))
+        .expect("spawned shard missing from the table");
+    let mut c = Client::connect(&newcomer).unwrap();
+    let mut variants = BTreeSet::new();
+    for r in 0..6u64 {
+        let resp = c.submit(submit(r, 500 + r, false)).unwrap();
+        variants.extend(resp.variants.clone());
+    }
+    c.quit().unwrap();
+    assert_eq!(
+        variants.len(),
+        1,
+        "gossip-seeded newcomer still ran a calibration sweep: {variants:?}"
+    );
+
+    // idle: the scaler retires back down, and the shrunk cluster still
+    // serves flawlessly
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (_, retired) = cluster.router.scale_counters();
+        if retired >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "idle cluster never retired a shard");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let tail = LoadgenOptions {
+        clients: 2,
+        requests: 6,
+        app: "matmul".into(),
+        size: 48,
+        verify: true,
+        ..LoadgenOptions::default()
+    };
+    let report = loadgen::run(&addr, &tail).unwrap();
+    assert_eq!(report.errors, 0, "requests failed after the retire");
+
+    // the v5 status reflects the churn
+    let mut c = Client::connect(&addr).unwrap();
+    let status = c.autoscale_status().unwrap();
+    let _ = c.quit();
+    assert!(status.enabled);
+    assert!(status.shards_spawned >= 1 && status.shards_retired >= 1, "{status:?}");
+
+    launcher.shutdown_all();
+    cluster.shutdown().unwrap();
+}

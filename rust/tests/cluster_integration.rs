@@ -22,6 +22,7 @@ fn serve_opts(selector: SelectorKind) -> ServeOptions {
         ncpu: 2,
         ncuda: 0,
         max_inflight: 16,
+        autoscale: None,
         batch_window: Duration::from_micros(200),
         max_batch: 8,
     }
@@ -35,6 +36,7 @@ fn router_opts(gossip: bool) -> RouterOptions {
         health_period: Duration::from_millis(100),
         gossip_period: Duration::from_millis(100),
         gossip,
+        autoscale: None,
     }
 }
 
@@ -64,6 +66,7 @@ fn two_shard_cluster_serves_loadgen_end_to_end() {
         ctxs: Vec::new(),
         pipeline: 2,
         policy: None,
+        profile: None,
         verify: true,
         seed: 3,
     };

@@ -21,6 +21,7 @@ fn opts(contexts: &str) -> ServeOptions {
         max_inflight: 16,
         batch_window: Duration::from_micros(200),
         max_batch: 8,
+        autoscale: None,
     }
 }
 
@@ -122,6 +123,7 @@ fn loadgen_reports_throughput_and_percentiles() {
         ctxs: vec!["alpha".into(), "beta".into()],
         pipeline: 1,
         policy: None,
+        profile: None,
         verify: true,
         seed: 7,
     };
@@ -152,6 +154,7 @@ fn pipelined_loadgen_matches_out_of_order_replies() {
         ctxs: vec!["alpha".into(), "beta".into()],
         pipeline: 4,
         policy: None,
+        profile: None,
         verify: true,
         seed: 21,
     };
