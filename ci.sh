@@ -37,6 +37,14 @@ echo "== cluster smoke (in-process: 2 shards behind the router) =="
 cargo run --release --quiet -- loadgen --shards 2 \
   --clients 4 --requests 8 --app matmul --size 32 --pipeline 2 --ncpu 2
 
+echo "== stream smoke (v6 sessions: calibrated SLO + overload backpressure) =="
+# boots a heterogeneous server (2 cpu + 1 emulated device worker) twice:
+# at the calibrated rate every chunk must land inside the SLO with zero
+# drops; at overload the server must engage credit backpressure (shed
+# window granularity, shrink the chunk window) before dropping anything
+# — `bench stream --smoke` FAILS on either breach
+cargo run --release --quiet -- bench stream --smoke
+
 echo "== autoscale smoke (context elasticity + shard churn) =="
 # in-process: a loadgen burst on a small context must trigger a worker
 # migration (asserted via the v5 autoscale_status request) and the drain

@@ -8,6 +8,8 @@
 //!   selection regret, gossip off vs on;
 //! * [`autoscale_bench`] — elastic scaling: bursty-load p95 with the
 //!   autoscaler off vs on, plus shard spawn/retire under burst;
+//! * [`stream_bench`] — v6 stream sessions: calibrated-rate vs
+//!   overload, credit backpressure and window shedding counters;
 //! * [`report`] — the plain-text table renderer.
 
 pub mod autoscale_bench;
@@ -16,6 +18,7 @@ pub mod fig1;
 pub mod report;
 pub mod selection;
 pub mod serve_bench;
+pub mod stream_bench;
 pub mod table1f;
 
 /// The bundled COMPAR-annotated benchmark sources (compiled in, so the

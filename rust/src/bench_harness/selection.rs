@@ -343,6 +343,7 @@ fn contended_run(kind: &SelectorKind, steps: usize) -> ContendedOutcome {
         ctx: 0,
         chosen_impl: None,
         est_cost_ns: 0,
+        tag: 0,
     };
 
     let mut regret = 0.0;

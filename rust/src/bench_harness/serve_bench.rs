@@ -15,9 +15,11 @@ use crate::util::json::{self, Json};
 use crate::util::stats::fmt_time;
 
 /// Schema version of every bench JSON record (`BENCH_serve.json` and
-/// the selection-regret record). Bump on breaking shape changes; the
-/// `compar bench validate` subcommand (and ci.sh) checks it.
-pub const BENCH_SCHEMA: u64 = 2;
+/// the selection-regret and stream records). Bump on breaking shape
+/// changes; the `compar bench validate` subcommand (and ci.sh) checks
+/// it. v3: loadgen records grew stream counters (windows,
+/// shed_windows, stream_credits) and the "compar-stream" kind landed.
+pub const BENCH_SCHEMA: u64 = 3;
 
 /// Write a bench record atomically (temp file + rename), so a reader —
 /// or a crashed run — never observes a half-written record and the

@@ -1,0 +1,193 @@
+//! Stream-serving bench (`compar bench stream`): boots an in-process
+//! server with an emulated device variant, drives v6 stream sessions
+//! at a sustainable (calibrated) rate and then at overload, and
+//! reports what the SLO-driven backpressure machinery did. The smoke
+//! gates check the two sides of the contract: at the calibrated rate
+//! every chunk lands inside the SLO with nothing dropped; at overload
+//! the server engages credit backpressure (shedding window granularity
+//! and shrinking the chunk window) instead of dropping chunks.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::report::Table;
+use super::serve_bench::BENCH_SCHEMA;
+use crate::serve::loadgen::{self, LoadProfile, LoadReport, LoadgenOptions};
+use crate::serve::protocol::StatsResp;
+use crate::serve::{ServeOptions, Server};
+use crate::stream;
+use crate::taskrt::SelectorKind;
+use crate::util::json::{self, Json};
+use crate::util::stats::fmt_time;
+
+/// The latency SLO every stream in this bench declares (ms). Credit
+/// backpressure engages when the modeled backlog crosses half of it.
+pub const SLO_MS: f64 = 40.0;
+
+/// One sub-run: the offered profile plus both sides' numbers.
+pub struct StreamRun {
+    pub profile: String,
+    pub report: LoadReport,
+    pub stats: StatsResp,
+}
+
+/// The full bench: a calibrated run and an overload run.
+pub struct StreamBenchRun {
+    pub slo_ms: f64,
+    pub calibrated: StreamRun,
+    pub overload: StreamRun,
+}
+
+/// Boot a fresh server (2 CPU + 1 emulated-device worker, contextual
+/// selection) and drive it with one stream profile.
+fn one_run(
+    profile: LoadProfile,
+    clients: usize,
+    requests: usize,
+    window: usize,
+    slide: usize,
+) -> Result<StreamRun> {
+    let server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        ncpu: 2,
+        ncuda: 1,
+        selector: Some(SelectorKind::Contextual),
+        ..ServeOptions::default()
+    })?;
+    // the app's real cuda variant is a Pallas artifact (absent in CI);
+    // a native device-emulating variant keeps the bench heterogeneous
+    server.register_codelet(stream::emulated_device_sort(Duration::from_millis(4)));
+    let addr = server.local_addr().to_string();
+    let lg = LoadgenOptions {
+        clients,
+        requests,
+        app: "sort".into(),
+        profile: Some(profile),
+        slo_ms: Some(SLO_MS),
+        window,
+        slide,
+        verify: false,
+        ..LoadgenOptions::default()
+    };
+    let report = loadgen::run(&addr, &lg)?;
+    let stats = server.shutdown()?;
+    Ok(StreamRun {
+        profile: profile.name(),
+        report,
+        stats,
+    })
+}
+
+/// Run both phases. `smoke` shortens the runs for CI.
+pub fn run(smoke: bool) -> Result<StreamBenchRun> {
+    // calibrated: well under what 3 workers sustain — the SLO should
+    // never be threatened and no credit signal should be needed
+    let calibrated = one_run(
+        LoadProfile::Stream {
+            rate: 60.0,
+            chunk_kb: 16,
+            stages: 1,
+        },
+        2,
+        if smoke { 40 } else { 150 },
+        4,
+        2,
+    )?;
+    // overload: ~10x the sustainable chunk cost, many streams — the
+    // credit controller must throttle the offered rate instead of
+    // letting the queue (and the latency) grow without bound
+    let overload = one_run(
+        LoadProfile::Stream {
+            rate: 400.0,
+            chunk_kb: 64,
+            stages: 2,
+        },
+        6,
+        if smoke { 40 } else { 150 },
+        4,
+        2,
+    )?;
+    Ok(StreamBenchRun {
+        slo_ms: SLO_MS,
+        calibrated,
+        overload,
+    })
+}
+
+/// Plain-text report: one row per phase.
+pub fn render(r: &StreamBenchRun) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== compar stream bench (slo {} ms) ==\n",
+        r.slo_ms
+    ));
+    let mut t = Table::new(
+        "stream phases",
+        &[
+            "phase",
+            "profile",
+            "chunks/s",
+            "p95",
+            "errors",
+            "credit signals",
+            "windows (shed)",
+        ],
+    );
+    for (name, run) in [("calibrated", &r.calibrated), ("overload", &r.overload)] {
+        t.row(vec![
+            name.to_string(),
+            run.profile.clone(),
+            format!("{:.1}", run.report.rps),
+            fmt_time(run.report.p95),
+            run.report.errors.to_string(),
+            run.report.stream_credits.to_string(),
+            format!("{} ({})", run.report.windows, run.report.shed_windows),
+        ]);
+    }
+    out.push_str(&t.render());
+    for (name, run) in [("calibrated", &r.calibrated), ("overload", &r.overload)] {
+        if !run.report.variants.is_empty() {
+            let cells: Vec<String> = run
+                .report
+                .variants
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect();
+            out.push_str(&format!("variants[{name}]: {}\n", cells.join("  ")));
+        }
+    }
+    out
+}
+
+/// The BENCH record (`compar bench stream --out FILE`), kind
+/// "compar-stream": both phases' loadgen numbers plus server counters.
+pub fn to_json(r: &StreamBenchRun) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("bench".to_string(), Json::Str("compar-stream".into()));
+    m.insert("schema".to_string(), Json::Num(BENCH_SCHEMA as f64));
+    m.insert("status".to_string(), Json::Str("measured".into()));
+    m.insert("slo_ms".to_string(), Json::Num(r.slo_ms));
+    for (key, run) in [("calibrated", &r.calibrated), ("overload", &r.overload)] {
+        let mut o = BTreeMap::new();
+        o.insert("profile".into(), Json::Str(run.profile.clone()));
+        o.insert("load".into(), loadgen::to_json(&run.report));
+        let mut srv = BTreeMap::new();
+        srv.insert(
+            "requests_ok".into(),
+            Json::Num(run.stats.requests_ok as f64),
+        );
+        srv.insert(
+            "requests_err".into(),
+            Json::Num(run.stats.requests_err as f64),
+        );
+        srv.insert(
+            "tasks_executed".into(),
+            Json::Num(run.stats.tasks_executed as f64),
+        );
+        o.insert("server".into(), Json::Obj(srv));
+        m.insert(key.to_string(), Json::Obj(o));
+    }
+    json::to_string(&Json::Obj(m))
+}

@@ -43,7 +43,8 @@ use super::gossip;
 use super::placement::{self, PlacementKind};
 use crate::autoscale::TokenBucket;
 use crate::serve::protocol::{
-    self, AutoscaleResp, Request, Response, ShardDesc, StatsResp, SubmitReq, PROTOCOL_VERSION,
+    self, AutoscaleResp, Request, Response, ShardDesc, StatsResp, StreamOpenReq, SubmitReq,
+    PROTOCOL_VERSION,
 };
 use crate::serve::Client;
 use crate::taskrt::perfmodel::VariantModel;
@@ -104,6 +105,11 @@ pub struct ShardState {
     /// (the v4 stats `queue_depth` snapshot field; placement reuses it
     /// as a load signal alongside `inflight`).
     queue_depth: AtomicU64,
+    /// Open stream sessions on the shard at the last health poll (the
+    /// v6 stats `streams` gauge). A stream is a standing commitment of
+    /// shard capacity, so placement counts each one as load even
+    /// between chunks.
+    streams: AtomicU64,
     /// The shard's locally observed perf models, from the last gossip
     /// pull (feeds the `calibrated` placement policy and the push merge).
     calib: Mutex<BTreeMap<String, VariantModel>>,
@@ -121,6 +127,7 @@ impl ShardState {
             inflight: AtomicU64::new(0),
             requests_ok: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
+            streams: AtomicU64::new(0),
             calib: Mutex::new(BTreeMap::new()),
         }
     }
@@ -153,11 +160,18 @@ impl ShardState {
         self.queue_depth.load(Ordering::Relaxed)
     }
 
+    /// Open streams reported by the last health poll (v6).
+    pub fn streams(&self) -> u64 {
+        self.streams.load(Ordering::Relaxed)
+    }
+
     /// Combined load signal for placement: requests in flight plus
     /// tasks queued inside the shard's runtime (the snapshot features
-    /// the selection layer uses, reused at the cluster level).
+    /// the selection layer uses, reused at the cluster level), plus
+    /// one unit per open stream — a quiet stream still claims credit
+    /// and will burst again, so new work prefers stream-free shards.
     pub fn load(&self) -> u64 {
-        self.inflight() + self.queue_depth()
+        self.inflight() + self.queue_depth() + self.streams()
     }
 
     pub(crate) fn set_healthy(&self, v: bool) {
@@ -522,6 +536,7 @@ fn health_loop(shared: Arc<RouterShared>, period: Duration) {
                         shard.inflight.store(stats.inflight, Ordering::Relaxed);
                         shard.requests_ok.store(stats.requests_ok, Ordering::Relaxed);
                         shard.queue_depth.store(stats.queue_depth, Ordering::Relaxed);
+                        shard.streams.store(stats.streams, Ordering::Relaxed);
                     }
                     Err(_) => shard.healthy.store(false, Ordering::Relaxed),
                 });
@@ -718,6 +733,12 @@ struct Session {
     slo_ms: Mutex<Option<f64>>,
     backends: Mutex<HashMap<usize, Arc<Backend>>>,
     pending: Mutex<HashMap<u64, Pending>>,
+    /// v6: stream id → the shard index the stream is pinned to. A
+    /// stream's chunk ordering, window accumulator and credit state
+    /// all live inside one shard's runtime, so streams are
+    /// shard-sticky: every chunk follows the pin, and the stream dies
+    /// with its backend instead of being replayed elsewhere.
+    streams: Mutex<HashMap<u64, usize>>,
     readers: Mutex<Vec<JoinHandle<()>>>,
     closing: AtomicBool,
 }
@@ -737,6 +758,7 @@ fn session_loop(shared: Arc<RouterShared>, stream: TcpStream, sid: u64) {
         slo_ms: Mutex::new(None),
         backends: Mutex::new(HashMap::new()),
         pending: Mutex::new(HashMap::new()),
+        streams: Mutex::new(HashMap::new()),
         readers: Mutex::new(Vec::new()),
         closing: AtomicBool::new(false),
     });
@@ -862,6 +884,57 @@ fn handle_request(sess: &Arc<Session>, line: &str) -> bool {
                     &Response::Error {
                         id: Some(id),
                         error: format!("{e:#}"),
+                    },
+                );
+            }
+            true
+        }
+        Request::StreamOpen(req) => {
+            if router.draining.load(Ordering::SeqCst) {
+                send_line(
+                    &sess.reply,
+                    &Response::Error {
+                        id: None,
+                        error: "router is draining".into(),
+                    },
+                );
+                return true;
+            }
+            if let Err(e) = route_stream_open(sess, req) {
+                send_line(
+                    &sess.reply,
+                    &Response::Error {
+                        id: None,
+                        error: format!("{e:#}"),
+                    },
+                );
+            }
+            true
+        }
+        Request::StreamChunk { stream, seq, seed } => {
+            if let Err(e) = forward_stream(sess, stream, &Request::StreamChunk { stream, seq, seed })
+            {
+                send_line(
+                    &sess.reply,
+                    &Response::Error {
+                        id: None,
+                        error: format!("stream {stream} chunk {seq}: {e:#}"),
+                    },
+                );
+            }
+            true
+        }
+        Request::StreamClose { stream } => {
+            if let Err(e) = forward_stream(sess, stream, &Request::StreamClose { stream }) {
+                // the pin is useless once the close cannot reach the
+                // shard; the reader's death sweep may already have
+                // dropped it, so ignore a missing entry
+                sess.streams.lock().unwrap().remove(&stream);
+                send_line(
+                    &sess.reply,
+                    &Response::Error {
+                        id: None,
+                        error: format!("stream {stream} close: {e:#}"),
                     },
                 );
             }
@@ -1091,6 +1164,86 @@ fn route_submit(sess: &Arc<Session>, req: SubmitReq, exclude: &mut Vec<usize>) -
     }
 }
 
+/// Place a new stream on a shard and forward its open (v6). Placement
+/// retries other shards only while the *open* cannot be written; after
+/// the grant the stream is pinned and lives or dies with that backend
+/// — its window and credit state cannot be replayed elsewhere.
+fn route_stream_open(sess: &Arc<Session>, req: StreamOpenReq) -> Result<()> {
+    let mut exclude: Vec<usize> = Vec::new();
+    loop {
+        if sess.closing.load(Ordering::SeqCst) {
+            bail!("session is closing");
+        }
+        let shards = sess.router.shard_list();
+        let Some(si) = placement::pick(
+            sess.router.placement,
+            &shards,
+            &req.app,
+            req.size,
+            &exclude,
+            &sess.router.rr,
+        ) else {
+            bail!(
+                "no available shard for stream {} ({} shard(s), {} excluded)",
+                req.id,
+                shards.len(),
+                exclude.len()
+            );
+        };
+        let backend = match ensure_backend(sess, si) {
+            Ok(b) => b,
+            Err(_) => {
+                shards[si].set_healthy(false);
+                exclude.push(si);
+                continue;
+            }
+        };
+        // pin before writing: the grant (or an immediate shard-side
+        // rejection) races back through the backend reader, which
+        // routes stream events by pin
+        sess.streams.lock().unwrap().insert(req.id, si);
+        let mut line = protocol::encode_request(&Request::StreamOpen(req.clone()));
+        line.push('\n');
+        let wrote = {
+            let mut s = backend.stream.lock().unwrap();
+            s.write_all(line.as_bytes()).and_then(|_| s.flush())
+        };
+        if wrote.is_err() {
+            sess.streams.lock().unwrap().remove(&req.id);
+            shards[si].set_healthy(false);
+            exclude.push(si);
+            continue;
+        }
+        sess.router.routed.fetch_add(1, Ordering::Relaxed);
+        return Ok(());
+    }
+}
+
+/// Forward a chunk or close to the shard its stream is pinned to. No
+/// retry-on-other-shard here by design (see [`route_stream_open`]).
+fn forward_stream(sess: &Arc<Session>, stream: u64, req: &Request) -> Result<()> {
+    let si = *sess
+        .streams
+        .lock()
+        .unwrap()
+        .get(&stream)
+        .ok_or_else(|| anyhow::anyhow!("unknown stream {stream} (open it first)"))?;
+    let backend = sess
+        .backends
+        .lock()
+        .unwrap()
+        .get(&si)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("shard{si} connection is gone"))?;
+    let mut line = protocol::encode_request(req);
+    line.push('\n');
+    let mut s = backend.stream.lock().unwrap();
+    s.write_all(line.as_bytes())
+        .and_then(|_| s.flush())
+        .with_context(|| format!("writing to shard{si}"))?;
+    Ok(())
+}
+
 /// Get (or open) this session's connection to shard `si`, performing the
 /// hello handshake (forwarding the session's selection policy) and
 /// spawning the reply-forwarding reader thread.
@@ -1218,6 +1371,30 @@ fn backend_reader(sess: Arc<Session>, shard: usize, mut reader: BufReader<TcpStr
             );
         }
     }
+    // streams pinned here die with the shard: their window accumulator
+    // and credit controller lived inside its runtime, so there is
+    // nothing to replay — surface the loss instead of going silent
+    let lost: Vec<u64> = {
+        let mut pins = sess.streams.lock().unwrap();
+        let ids: Vec<u64> = pins
+            .iter()
+            .filter(|(_, s)| **s == shard)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &ids {
+            pins.remove(id);
+        }
+        ids
+    };
+    for id in lost {
+        send_line(
+            &sess.reply,
+            &Response::Error {
+                id: None,
+                error: format!("stream {id} lost: shard{shard} connection died"),
+            },
+        );
+    }
 }
 
 fn forward_backend_line(sess: &Arc<Session>, shard: usize, line: &str) {
@@ -1243,6 +1420,18 @@ fn forward_backend_line(sess: &Arc<Session>, shard: usize, line: &str) {
             // failed verification) is a real answer — forward, no retry
             send_line(&sess.reply, &Response::Error { id, error });
         }
+        // v6 stream events ride the pinned stream's backend connection;
+        // forward them, tagging acks with the shard like submit results
+        Response::StreamOpened(o) => send_line(&sess.reply, &Response::StreamOpened(o)),
+        Response::StreamAck(mut a) => {
+            a.ctx = format!("shard{shard}/{}", a.ctx);
+            send_line(&sess.reply, &Response::StreamAck(a));
+        }
+        Response::StreamCredit(c) => send_line(&sess.reply, &Response::StreamCredit(c)),
+        Response::StreamClosed(c) => {
+            sess.streams.lock().unwrap().remove(&c.stream);
+            send_line(&sess.reply, &Response::StreamClosed(c));
+        }
         // hello is consumed during the handshake; nothing else rides on
         // a submit connection
         _ => {}
@@ -1267,6 +1456,8 @@ fn cluster_stats(router: &Arc<RouterShared>) -> StatsResp {
         busy_workers: 0,
         total_workers: 0,
         sessions: 0,
+        streams: 0,
+        slo_ms: 0.0,
         ctx_tasks: BTreeMap::new(),
         ctx_variants: BTreeMap::new(),
     };
@@ -1285,6 +1476,12 @@ fn cluster_stats(router: &Arc<RouterShared>) -> StatsResp {
         agg.busy_workers += stats.busy_workers;
         agg.total_workers += stats.total_workers;
         agg.sessions += stats.sessions;
+        agg.streams += stats.streams;
+        // the cluster-wide effective SLO is the tightest one any shard
+        // is currently enforcing (0 = no shard has a target)
+        if stats.slo_ms > 0.0 && (agg.slo_ms == 0.0 || stats.slo_ms < agg.slo_ms) {
+            agg.slo_ms = stats.slo_ms;
+        }
         for (k, v) in stats.ctx_tasks {
             agg.ctx_tasks.insert(format!("shard{i}/{k}"), v);
         }

@@ -25,6 +25,9 @@
 //!   resizes scheduling contexts (live worker migration) and drives
 //!   shard spawn/retire in the cluster, from the same runtime-snapshot
 //!   features the selection layer keys on.
+//! * [`stream`] — heterogeneous stream computing (HSTREAM-style):
+//!   stream sessions over the serve protocol with per-chunk variant
+//!   selection, windowed operators, and SLO-driven credit backpressure.
 //! * [`bench_harness`] — regenerates every table and figure of the
 //!   paper's evaluation section.
 
@@ -35,5 +38,6 @@ pub mod cluster;
 pub mod compar;
 pub mod runtime;
 pub mod serve;
+pub mod stream;
 pub mod taskrt;
 pub mod util;

@@ -4,7 +4,7 @@
 //! ```text
 //! compar compile <file.compar.c> [--out-dir DIR]      run the pre-compiler
 //! compar run --app A --size N [options]               run one benchmark task
-//! compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|autoscale|all>
+//! compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|autoscale|stream|all>
 //! compar bench validate <FILE>                        check a bench JSON record
 //! compar calibrate --app A [--sizes a,b,c]            warm the perf models
 //! compar serve [--addr A --contexts cpu:4,gpu:1 ...]  multi-tenant component service
@@ -14,6 +14,7 @@
 //! compar loadgen [--clients N --requests M --app A]   drive a server, report latency
 //! compar loadgen --shards N ...                       drive an in-process cluster
 //! compar loadgen --profile burst:H:L:P                time-varying offered load
+//! compar loadgen --profile stream:R:KB:S              v6 stream sessions (credit-gated)
 //! compar list                                         inventory: apps, variants, artifacts
 //! ```
 //!
@@ -121,7 +122,7 @@ fn print_usage() {
          USAGE:\n\
          \x20 compar compile <file.compar.c> [--out-dir DIR] [--emit c|rust|all]\n\
          \x20 compar run --app APP --size N [--variant V] [--sched S] [--selector P] [--ncpu N] [--ncuda N] [--reps R]\n\
-         \x20 compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|autoscale|all> [--reps R] [--max-measured N] [--smoke]\n\
+         \x20 compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|autoscale|stream|all> [--reps R] [--max-measured N] [--smoke]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 (selection: [--out FILE]; cluster: [--shards N] [--placement PL])\n\
          \x20 compar bench validate <FILE>\n\
          \x20 compar calibrate --app APP [--sizes a,b,c]\n\
@@ -137,6 +138,7 @@ fn print_usage() {
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--pipeline N] [--policy P] [--ctxs a,b] [--addr HOST:PORT | --contexts SPEC]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--shards N [--placement PL] [--no-gossip]] [--out FILE] [--no-verify]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--profile burst:<high_rps>:<low_rps>:<period_ms>]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--profile stream:<rate>:<chunk_kb>:<stages> [--slo-ms F] [--window W] [--slide S]]\n\
          \x20 compar list\n\
          \n\
          Selection policies P: greedy | calibrating | epsilon[:E] | epsilon-decayed[:E] | contextual | forced:VARIANT\n\
@@ -408,6 +410,50 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         }
         ran = true;
     }
+    // stream is explicit-only (it boots a server per phase)
+    if which == "stream" {
+        let smoke = opts.contains_key("smoke");
+        let run = bench_harness::stream_bench::run(smoke)?;
+        print!("{}", bench_harness::stream_bench::render(&run));
+        if smoke {
+            // CI gates, both sides of the backpressure contract: the
+            // calibrated rate must land every chunk inside the SLO with
+            // nothing dropped; overload must engage credit backpressure
+            // (and shed granularity) instead of dropping chunks
+            let slo_s = bench_harness::stream_bench::SLO_MS / 1e3;
+            if run.calibrated.report.errors > 0 {
+                bail!(
+                    "stream smoke: {} chunk(s) failed at the calibrated rate",
+                    run.calibrated.report.errors
+                );
+            }
+            if run.calibrated.report.p95 > slo_s {
+                bail!(
+                    "stream smoke: calibrated p95 {:.1} ms exceeds the {} ms SLO",
+                    run.calibrated.report.p95 * 1e3,
+                    bench_harness::stream_bench::SLO_MS
+                );
+            }
+            if run.overload.report.stream_credits == 0 {
+                bail!("stream smoke: overload never engaged credit backpressure");
+            }
+            if run.overload.report.errors > 0 {
+                bail!(
+                    "stream smoke: {} chunk(s) dropped under overload \
+                     (backpressure must shed granularity, not chunks)",
+                    run.overload.report.errors
+                );
+            }
+        }
+        if let Some(out) = opts.get("out") {
+            bench_harness::serve_bench::write_atomic(
+                out,
+                &(bench_harness::stream_bench::to_json(&run) + "\n"),
+            )?;
+            println!("wrote {out}");
+        }
+        ran = true;
+    }
     // cluster is explicit-only (it boots several servers per run)
     if which == "cluster" {
         let smoke = opts.contains_key("smoke");
@@ -517,6 +563,27 @@ fn validate_bench_record(file: &str) -> Result<()> {
                             if row.get(k).and_then(Json::as_f64).is_none() {
                                 bail!("{file}: row {i} missing '{k}'");
                             }
+                        }
+                    }
+                }
+                "compar-stream" => {
+                    if v.get("slo_ms").and_then(Json::as_f64).is_none() {
+                        bail!("{file}: missing 'slo_ms'");
+                    }
+                    for phase in ["calibrated", "overload"] {
+                        let load = v
+                            .get(phase)
+                            .and_then(|p| p.get("load"))
+                            .ok_or_else(|| anyhow!("{file}: missing {phase}.load"))?;
+                        let rps = load
+                            .get("rps")
+                            .and_then(Json::as_f64)
+                            .ok_or_else(|| anyhow!("{file}: missing {phase}.load.rps"))?;
+                        if !rps.is_finite() || rps <= 0.0 {
+                            bail!("{file}: non-positive {phase}.load.rps {rps}");
+                        }
+                        if load.get("stream_credits").and_then(Json::as_f64).is_none() {
+                            bail!("{file}: missing {phase}.load.stream_credits");
                         }
                     }
                 }
@@ -784,6 +851,15 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
     }
     if let Some(v) = opts.get("profile") {
         lg.profile = Some(compar::serve::LoadProfile::parse(v)?);
+    }
+    if let Some(v) = opts.get("slo-ms") {
+        lg.slo_ms = Some(v.parse().context("--slo-ms")?);
+    }
+    if let Some(v) = opts.get("window") {
+        lg.window = v.parse().context("--window")?;
+    }
+    if let Some(v) = opts.get("slide") {
+        lg.slide = v.parse().context("--slide")?;
     }
     if let Some(v) = opts.get("seed") {
         lg.seed = v.parse().context("--seed")?;

@@ -11,8 +11,8 @@ use std::net::TcpStream;
 use anyhow::{anyhow, bail, Result};
 
 use super::protocol::{
-    self, AutoscaleResp, CtxDesc, Request, Response, ResultResp, ShardDesc, StatsResp, SubmitReq,
-    PROTOCOL_VERSION,
+    self, AutoscaleResp, CtxDesc, Request, Response, ResultResp, ShardDesc, StatsResp,
+    StreamClosedResp, StreamOpenReq, StreamOpenedResp, SubmitReq, PROTOCOL_VERSION,
 };
 use crate::util::json::Json;
 
@@ -136,6 +136,46 @@ impl Client {
             }
             Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
             other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// v6: open a stream session; blocks for the `stream_opened` grant.
+    pub fn stream_open(&mut self, req: StreamOpenReq) -> Result<StreamOpenedResp> {
+        let id = req.id;
+        self.send(&Request::StreamOpen(req))?;
+        match self.recv()? {
+            Response::StreamOpened(o) => {
+                if o.stream != id {
+                    bail!("stream_opened for stream {} (opened {id})", o.stream);
+                }
+                Ok(o)
+            }
+            Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// v6: push one chunk without waiting (credit-window pipelining).
+    /// Pair with [`Client::recv_response`] and track `stream_ack` /
+    /// `stream_credit` events to respect the server's grant.
+    pub fn send_stream_chunk(&mut self, stream: u64, seq: u64, seed: u64) -> Result<()> {
+        self.send(&Request::StreamChunk { stream, seq, seed })
+    }
+
+    /// v6: ask the server to flush and close a stream, then read events
+    /// until the `stream_closed` summary arrives (acks and credit
+    /// signals for still-in-flight chunks are drained and discarded).
+    pub fn stream_close(&mut self, stream: u64) -> Result<StreamClosedResp> {
+        self.send(&Request::StreamClose { stream })?;
+        loop {
+            match self.recv()? {
+                Response::StreamClosed(c) if c.stream == stream => return Ok(c),
+                Response::StreamAck(_) | Response::StreamCredit(_) | Response::StreamClosed(_) => {
+                    continue
+                }
+                Response::Error { error, .. } => return Err(anyhow!("server error: {error}")),
+                other => bail!("unexpected response {other:?}"),
+            }
         }
     }
 

@@ -12,42 +12,70 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::client::Client;
-use super::protocol::{Response, SubmitReq};
+use super::protocol::{Response, StreamOpenReq, SubmitReq};
 use crate::util::json::Json;
 use crate::util::stats;
 
-/// Time-varying offered load (`--profile burst:<high>:<low>:<period_ms>`):
-/// without one, every client fires as fast as the closed loop allows;
-/// with one, each client paces its sends to the phase's offered rate.
-/// The bursty shape is what the autoscale bench (and any elastic-scaling
-/// demo) needs: pressure that arrives in waves rather than a constant
-/// stream.
+/// Time-varying offered load (`--profile burst:<high>:<low>:<period_ms>`
+/// or `--profile stream:<rate>:<chunk_kb>:<stages>`): without one, every
+/// client fires as fast as the closed loop allows; with one, each client
+/// paces its sends to the phase's offered rate. The bursty shape is what
+/// the autoscale bench (and any elastic-scaling demo) needs: pressure
+/// that arrives in waves rather than a constant stream. The stream shape
+/// switches the driver to v6 stream sessions: each client opens one
+/// stream and pushes chunks at the offered rate under the server's
+/// credit window.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum LoadProfile {
     /// Alternate between `high` and `low` offered requests/s per
     /// client, switching phase every `period_ms`.
     Burst { high: f64, low: f64, period_ms: u64 },
+    /// v6: one stream session per client, `rate` offered chunks/s,
+    /// `chunk_kb` kilobytes of payload per chunk, a `stages`-deep
+    /// codelet pipeline per chunk.
+    Stream {
+        rate: f64,
+        chunk_kb: usize,
+        stages: usize,
+    },
 }
 
 impl LoadProfile {
-    /// Parse `burst:<high_rps>:<low_rps>:<period_ms>`.
+    /// Parse `burst:<high_rps>:<low_rps>:<period_ms>` or
+    /// `stream:<rate>:<chunk_kb>:<stages>`.
     pub fn parse(s: &str) -> Result<LoadProfile> {
         let parts: Vec<&str> = s.split(':').map(str::trim).collect();
         match parts.as_slice() {
             ["burst", h, l, p] => {
                 let high: f64 = h.parse().context("burst high rate")?;
                 let low: f64 = l.parse().context("burst low rate")?;
-                let period_ms: u64 = p.parse().context("burst period")?;
-                if high.is_nan() || high <= 0.0 || low.is_nan() || low < 0.0 || period_ms == 0 {
+                let period_ms: i64 = p.parse().context("burst period")?;
+                if high.is_nan() || high <= 0.0 || low.is_nan() || low < 0.0 || period_ms <= 0 {
                     bail!("bad burst profile '{s}' (need high > 0, low >= 0, period > 0)");
                 }
                 Ok(LoadProfile::Burst {
                     high,
                     low,
-                    period_ms,
+                    period_ms: period_ms as u64,
                 })
             }
-            _ => bail!("unknown load profile '{s}' (want burst:<high>:<low>:<period_ms>)"),
+            ["stream", r, kb, st] => {
+                let rate: f64 = r.parse().context("stream chunk rate")?;
+                let chunk_kb: i64 = kb.parse().context("stream chunk size (KiB)")?;
+                let stages: i64 = st.parse().context("stream pipeline stages")?;
+                if rate.is_nan() || rate <= 0.0 || chunk_kb <= 0 || stages <= 0 {
+                    bail!("bad stream profile '{s}' (need rate > 0, chunk_kb > 0, stages > 0)");
+                }
+                Ok(LoadProfile::Stream {
+                    rate,
+                    chunk_kb: chunk_kb as usize,
+                    stages: stages as usize,
+                })
+            }
+            _ => bail!(
+                "unknown load profile '{s}' (want burst:<high>:<low>:<period_ms> \
+                 or stream:<rate>:<chunk_kb>:<stages>)"
+            ),
         }
     }
 
@@ -58,6 +86,11 @@ impl LoadProfile {
                 low,
                 period_ms,
             } => format!("burst:{high}:{low}:{period_ms}"),
+            LoadProfile::Stream {
+                rate,
+                chunk_kb,
+                stages,
+            } => format!("stream:{rate}:{chunk_kb}:{stages}"),
         }
     }
 
@@ -70,12 +103,19 @@ impl LoadProfile {
                 low,
                 period_ms,
             } => {
+                // parse() rejects a zero period, but the struct can be
+                // built directly — pin the degenerate case to the high
+                // phase instead of dividing by zero
+                if *period_ms == 0 {
+                    return *high;
+                }
                 if (elapsed.as_millis() as u64 / period_ms) % 2 == 0 {
                     *high
                 } else {
                     *low
                 }
             }
+            LoadProfile::Stream { rate, .. } => *rate,
         }
     }
 }
@@ -139,10 +179,19 @@ pub struct LoadgenOptions {
     /// context's policy.
     pub policy: Option<String>,
     /// Time-varying offered load; None = closed-loop, as fast as
-    /// possible.
+    /// possible. A `stream:` profile switches the driver to v6 stream
+    /// sessions (one per client).
     pub profile: Option<LoadProfile>,
     pub verify: bool,
     pub seed: u64,
+    /// v6 (stream profile): per-session latency SLO declared in the
+    /// hello/open — drives server-side credit backpressure.
+    pub slo_ms: Option<f64>,
+    /// v6 (stream profile): windowed-operator width in chunks
+    /// (0 = no windowing).
+    pub window: usize,
+    /// v6 (stream profile): window slide in chunks (0 = tumbling).
+    pub slide: usize,
 }
 
 impl Default for LoadgenOptions {
@@ -159,6 +208,9 @@ impl Default for LoadgenOptions {
             profile: None,
             verify: true,
             seed: 42,
+            slo_ms: None,
+            window: 0,
+            slide: 0,
         }
     }
 }
@@ -187,6 +239,13 @@ pub struct LoadReport {
     /// Requests that shared a codelet batch with at least one other.
     pub batched: usize,
     pub max_rel_err: f64,
+    /// v6 (stream profile): windows fired across all streams.
+    pub windows: u64,
+    /// v6 (stream profile): windows fired at a shed (widened) slide.
+    pub shed_windows: u64,
+    /// v6 (stream profile): credit-change signals the servers sent
+    /// (each one is backpressure engaging or easing).
+    pub stream_credits: u64,
 }
 
 struct ClientOutcome {
@@ -196,6 +255,25 @@ struct ClientOutcome {
     per_ctx: BTreeMap<String, usize>,
     batched: usize,
     max_rel_err: f64,
+    windows: u64,
+    shed_windows: u64,
+    stream_credits: u64,
+}
+
+impl ClientOutcome {
+    fn empty(cap: usize) -> ClientOutcome {
+        ClientOutcome {
+            latencies: Vec::with_capacity(cap),
+            errors: 0,
+            variants: BTreeMap::new(),
+            per_ctx: BTreeMap::new(),
+            batched: 0,
+            max_rel_err: 0.0,
+            windows: 0,
+            shed_windows: 0,
+            stream_credits: 0,
+        }
+    }
 }
 
 fn request_for(opts: &LoadgenOptions, client_idx: usize, r: usize) -> SubmitReq {
@@ -233,14 +311,7 @@ fn tally(out: &mut ClientOutcome, resp: &super::protocol::ResultResp, latency: f
 
 fn drive_client(addr: &str, opts: &LoadgenOptions, client_idx: usize) -> Result<ClientOutcome> {
     let mut c = Client::connect_with_policy(addr, opts.policy.as_deref())?;
-    let mut out = ClientOutcome {
-        latencies: Vec::with_capacity(opts.requests),
-        errors: 0,
-        variants: BTreeMap::new(),
-        per_ctx: BTreeMap::new(),
-        batched: 0,
-        max_rel_err: 0.0,
-    };
+    let mut out = ClientOutcome::empty(opts.requests);
     let window = opts.pipeline.max(1);
     let mut pacer = Pacer::new(opts.profile);
     if window == 1 {
@@ -303,18 +374,123 @@ fn drive_client(addr: &str, opts: &LoadgenOptions, client_idx: usize) -> Result<
     Ok(out)
 }
 
+/// Consume one stream event, updating the client's credit window. The
+/// server's grant is authoritative: sends are gated on `credit`, so an
+/// overloaded server sheds granularity and throttles the offered rate
+/// instead of queueing unboundedly.
+fn stream_recv_one(
+    c: &mut Client,
+    out: &mut ClientOutcome,
+    credit: &mut u64,
+    inflight: &mut u64,
+) -> Result<()> {
+    match c.recv_response()? {
+        Response::StreamAck(a) => {
+            out.latencies.push(a.latency);
+            for v in &a.variants {
+                *out.variants.entry(v.clone()).or_insert(0) += 1;
+            }
+            *out.per_ctx.entry(a.ctx.clone()).or_insert(0) += 1;
+            *credit = a.credit.max(1);
+            *inflight = inflight.saturating_sub(1);
+        }
+        Response::StreamCredit(cr) => {
+            *credit = cr.credit.max(1);
+            out.stream_credits += 1;
+        }
+        Response::Error { .. } => {
+            out.errors += 1;
+            *inflight = inflight.saturating_sub(1);
+        }
+        other => bail!("unexpected stream response {other:?}"),
+    }
+    Ok(())
+}
+
+/// v6 stream driver: one stream session for this client, chunks offered
+/// at the profile rate but gated on the server's credit grant — the
+/// honest way to load a backpressured pipeline (offered > sustainable
+/// shows up as credit signals and shed windows, not client-side queues).
+fn drive_stream_client(
+    addr: &str,
+    opts: &LoadgenOptions,
+    client_idx: usize,
+    chunk_kb: usize,
+    stages: usize,
+) -> Result<ClientOutcome> {
+    let mut c = match opts.slo_ms {
+        Some(slo) => Client::connect_with_slo(addr, opts.policy.as_deref(), slo)?,
+        None => Client::connect_with_policy(addr, opts.policy.as_deref())?,
+    };
+    let mut out = ClientOutcome::empty(opts.requests);
+    let stream_id = client_idx as u64 + 1;
+    // chunk payload: chunk_kb KiB of f32 elements
+    let size = (chunk_kb * 1024 / std::mem::size_of::<f32>()).max(1);
+    let ctx = if opts.ctxs.is_empty() {
+        None
+    } else {
+        Some(opts.ctxs[client_idx % opts.ctxs.len()].clone())
+    };
+    let opened = c.stream_open(StreamOpenReq {
+        id: stream_id,
+        app: opts.app.clone(),
+        size,
+        stages,
+        window: opts.window,
+        slide: opts.slide,
+        ctx,
+        slo_ms: opts.slo_ms,
+    })?;
+    let mut credit = opened.credit.max(1);
+    let mut inflight = 0u64;
+    let mut pacer = Pacer::new(opts.profile);
+    for seq in 0..opts.requests {
+        while inflight >= credit {
+            stream_recv_one(&mut c, &mut out, &mut credit, &mut inflight)?;
+        }
+        pacer.wait();
+        let seed = opts
+            .seed
+            .wrapping_add((client_idx as u64) << 20)
+            .wrapping_add(seq as u64);
+        c.send_stream_chunk(stream_id, seq as u64, seed)?;
+        inflight += 1;
+    }
+    // drain the tail so every ack's latency is tallied before the close
+    while inflight > 0 {
+        stream_recv_one(&mut c, &mut out, &mut credit, &mut inflight)?;
+    }
+    let closed = c.stream_close(stream_id)?;
+    out.windows = closed.windows;
+    out.shed_windows = closed.shed_windows;
+    // the server-side count is authoritative (a signal can race the
+    // close and be discarded by stream_close's drain)
+    out.stream_credits = out.stream_credits.max(closed.credit_signals);
+    let _ = c.quit();
+    Ok(out)
+}
+
 /// Run the load against a listening server.
 pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<LoadReport> {
     if opts.clients == 0 || opts.requests == 0 {
         return Err(anyhow!("need at least one client and one request"));
     }
+    let stream_shape = match opts.profile {
+        Some(LoadProfile::Stream {
+            chunk_kb, stages, ..
+        }) => Some((chunk_kb, stages)),
+        _ => None,
+    };
     let t0 = Instant::now();
     let outcomes: Vec<Result<ClientOutcome>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..opts.clients)
             .map(|i| {
                 let addr = addr.to_string();
                 let opts = opts.clone();
-                s.spawn(move || drive_client(&addr, &opts, i))
+                s.spawn(move || match stream_shape {
+                    Some((kb, st)) => drive_stream_client(&addr, &opts, i, kb, st),
+                    None => drive_client(&addr, &opts, i),
+                })
             })
             .collect();
         handles
@@ -333,6 +509,9 @@ pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<LoadReport> {
     let mut per_ctx = BTreeMap::new();
     let mut batched = 0usize;
     let mut max_rel_err = 0.0f64;
+    let mut windows = 0u64;
+    let mut shed_windows = 0u64;
+    let mut stream_credits = 0u64;
     for o in outcomes {
         let o = o?;
         latencies.extend(o.latencies);
@@ -345,6 +524,9 @@ pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<LoadReport> {
         }
         batched += o.batched;
         max_rel_err = max_rel_err.max(o.max_rel_err);
+        windows += o.windows;
+        shed_windows += o.shed_windows;
+        stream_credits += o.stream_credits;
     }
     if latencies.is_empty() {
         return Err(anyhow!("no request succeeded ({errors} errors)"));
@@ -368,6 +550,9 @@ pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<LoadReport> {
         per_ctx,
         batched,
         max_rel_err,
+        windows,
+        shed_windows,
+        stream_credits,
     })
 }
 
@@ -412,6 +597,12 @@ pub fn render(r: &LoadReport) -> String {
         "batched requests {}  max rel L2 err {:.2e}\n",
         r.batched, r.max_rel_err
     ));
+    if r.windows > 0 || r.stream_credits > 0 {
+        out.push_str(&format!(
+            "stream windows {} ({} shed)  credit signals {}\n",
+            r.windows, r.shed_windows, r.stream_credits
+        ));
+    }
     out
 }
 
@@ -432,6 +623,9 @@ pub fn to_json(r: &LoadReport) -> Json {
     m.insert("p99_s".into(), Json::Num(r.p99));
     m.insert("batched".into(), Json::Num(r.batched as f64));
     m.insert("max_rel_err".into(), Json::Num(r.max_rel_err));
+    m.insert("windows".into(), Json::Num(r.windows as f64));
+    m.insert("shed_windows".into(), Json::Num(r.shed_windows as f64));
+    m.insert("stream_credits".into(), Json::Num(r.stream_credits as f64));
     let mut variants = std::collections::BTreeMap::new();
     for (k, v) in &r.variants {
         variants.insert(k.clone(), Json::Num(*v as f64));
@@ -474,7 +668,48 @@ mod tests {
         assert!(LoadProfile::parse("burst:0:2:300").is_err());
         assert!(LoadProfile::parse("burst:40:-1:300").is_err());
         assert!(LoadProfile::parse("burst:40:2:0").is_err());
+        assert!(LoadProfile::parse("burst:40:2:-300").is_err());
         assert!(LoadProfile::parse("ramp:1:2:3").is_err());
         assert!(LoadProfile::parse("burst:x:2:300").is_err());
+    }
+
+    #[test]
+    fn burst_rate_at_survives_zero_period() {
+        // parse() rejects period 0, but direct construction must not
+        // divide by zero — the degenerate shape pins to the high phase
+        let p = LoadProfile::Burst {
+            high: 10.0,
+            low: 1.0,
+            period_ms: 0,
+        };
+        assert_eq!(p.rate_at(Duration::from_millis(0)), 10.0);
+        assert_eq!(p.rate_at(Duration::from_millis(12345)), 10.0);
+    }
+
+    #[test]
+    fn stream_profile_parses() {
+        let p = LoadProfile::parse("stream:120:64:2").unwrap();
+        assert_eq!(
+            p,
+            LoadProfile::Stream {
+                rate: 120.0,
+                chunk_kb: 64,
+                stages: 2
+            }
+        );
+        assert_eq!(p.name(), "stream:120:64:2");
+        // constant offered rate, no phases
+        assert_eq!(p.rate_at(Duration::from_millis(0)), 120.0);
+        assert_eq!(p.rate_at(Duration::from_secs(9)), 120.0);
+    }
+
+    #[test]
+    fn stream_profile_rejects_malformed() {
+        assert!(LoadProfile::parse("stream:0:64:2").is_err());
+        assert!(LoadProfile::parse("stream:-5:64:2").is_err());
+        assert!(LoadProfile::parse("stream:120:0:2").is_err());
+        assert!(LoadProfile::parse("stream:120:-64:2").is_err());
+        assert!(LoadProfile::parse("stream:120:64:0").is_err());
+        assert!(LoadProfile::parse("stream:120:64").is_err());
     }
 }

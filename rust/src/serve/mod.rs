@@ -16,6 +16,12 @@
 //! pipeline requests (correlation ids match out-of-order replies), and
 //! stats report per-context selection histograms.
 //!
+//! Protocol v6 adds **stream sessions** (see [`crate::stream`]): a
+//! client opens a long-lived chunk pipeline (`stream_open`), pushes
+//! chunks through it under credit-based flow control, and every
+//! chunk's stage selects its variant per-chunk — with SLO-driven
+//! backpressure shedding window granularity instead of chunks.
+//!
 //! Layers (each its own module):
 //! * [`protocol`] — wire format (requests/responses, encode/decode).
 //! * [`server`] — sessions, admission, batching, contexts, drain.
@@ -29,5 +35,8 @@ pub mod server;
 
 pub use client::Client;
 pub use loadgen::{LoadProfile, LoadReport, LoadgenOptions};
-pub use protocol::{Request, Response, ShardDesc, SubmitReq};
+pub use protocol::{
+    Request, Response, ShardDesc, StreamAckResp, StreamClosedResp, StreamCreditResp,
+    StreamOpenReq, StreamOpenedResp, SubmitReq,
+};
 pub use server::{parse_contexts, CtxSpec, ServeOptions, Server};

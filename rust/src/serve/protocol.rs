@@ -4,27 +4,42 @@
 //! (`"op"` on requests, `"type"` on responses) and carries the client's
 //! request `id` back so batched / out-of-order replies can be matched.
 //!
-//! ## v5 message set
+//! ## v6 message set
 //!
 //! The same protocol is spoken at two levels: clients talk to either a
 //! single `compar serve` shard or to a `compar route` router, and the
-//! router talks to its shards. v5 (elastic scaling) adds the
-//! `autoscale_status` request (the control loop's live view: executed
-//! scale actions, per-context worker counts against their min/max
-//! bands, shard spawn/retire counters on the router) and a latency SLO
-//! in `hello`: a session may declare `slo_ms`, which tightens the
-//! autoscaler's target for the contexts it submits to for as long as
-//! the session lives; a shard's hello response echoes the effective
-//! target (a router, which has no context table of its own, omits it
-//! and forwards the declaration to shards). v4 added the `contextual`
-//! selector and runtime-snapshot fields to `stats`; v3 the cluster
-//! operations:
+//! router talks to its shards. v6 (streaming) adds stream sessions:
+//! `stream_open` declares a chunk pipeline (app, chunk size, stage
+//! count, optional tumbling/sliding window, optional per-stream
+//! `slo_ms`), `stream_chunk` pushes one chunk through it (every stage
+//! selects its implementation variant per chunk), and `stream_close`
+//! flushes and summarizes. Flow control is credit-based: the client may
+//! keep at most `credit` chunks outstanding; each `stream_ack` carries
+//! the current grant and the server pushes an unsolicited
+//! `stream_credit` signal whenever SLO pressure moves it (backpressure
+//! engages at half the SLO — before violation, never by dropping). v6
+//! also surfaces the default context's effective `slo_ms` and the open
+//! `streams` gauge in `stats`. v5 (elastic scaling) added the
+//! `autoscale_status` request and a latency SLO in `hello`: a session
+//! may declare `slo_ms`, which tightens the autoscaler's target for the
+//! contexts it submits to for as long as the session lives; a shard's
+//! hello response echoes the effective target (a router, which has no
+//! context table of its own, omits it and forwards the declaration to
+//! shards). v4 added the `contextual` selector and runtime-snapshot
+//! fields to `stats`; v3 the cluster operations:
 //!
 //! | request `op`       | response `type` | level  | purpose                               |
 //! |--------------------|-----------------|--------|---------------------------------------|
 //! | `hello`            | `hello`         | both   | session handshake (+ policy, slo_ms)  |
 //! | `submit`           | `result`        | both   | task-graph request (router fans out)  |
-//! | `stats`            | `stats`         | both   | counters (router aggregates shards)   |
+//! | `stream_open`      | `stream_opened` | both   | open a stream session (v6); router    |
+//! |                    |                 |        | pins the stream to one shard          |
+//! | `stream_chunk`     | `stream_ack`    | both   | push one chunk through the pipeline;  |
+//! |                    |                 |        | ack carries variants + credit grant   |
+//! |                    | `stream_credit` | both   | unsolicited: credit/shed level moved  |
+//! | `stream_close`     | `stream_closed` | both   | flush + summarize (p95, shed windows) |
+//! | `stats`            | `stats`         | both   | counters (router aggregates shards);  |
+//! |                    |                 |        | v6 adds `slo_ms` + `streams`          |
 //! | `contexts`         | `contexts`      | both   | context table (router prefixes shard) |
 //! | `autoscale_status` | `autoscale`     | both   | elastic-scaling state (v5): context   |
 //! |                    |                 |        | bands in-process, shard churn on the  |
@@ -49,16 +64,18 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::util::json::{self, Json};
 
-/// v5: elastic scaling — the `autoscale_status` request and a latency
-/// SLO in `hello` (request `slo_ms` tightens the autoscaler's target;
-/// the response echoes the effective one).
-/// (v4 added the `contextual` session selector and runtime-snapshot
+/// v6: streaming — `stream_open`/`stream_chunk`/`stream_close` stream
+/// sessions with per-chunk variant selection, windowed operators, and
+/// credit-based backpressure (`stream_credit`); `stats` gains the
+/// default context's effective `slo_ms` and the open-`streams` gauge.
+/// (v5 elastic scaling — `autoscale_status` and a latency SLO in
+/// `hello`; v4 the `contextual` session selector and runtime-snapshot
 /// fields in `stats`; v3 cluster ops — `perf_pull`/`perf_push`
 /// perf-model gossip on shards, `shards`/`drain_shard` rotation control
 /// on the router; v2 per-session selection policy in `hello`, `policy`
 /// on results, `selector` on context descriptors, `ctx_variants` in
 /// stats.)
-pub const PROTOCOL_VERSION: u64 = 5;
+pub const PROTOCOL_VERSION: u64 = 6;
 
 // --------------------------------------------------------------- requests
 
@@ -83,6 +100,30 @@ pub struct SubmitReq {
     pub verify: bool,
 }
 
+/// v6: open a stream session — a long-lived chunk pipeline with
+/// credit-based flow control (see the module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamOpenReq {
+    /// Client-chosen stream id, unique within the session; echoed on
+    /// every stream message.
+    pub id: u64,
+    pub app: String,
+    /// Elements per chunk.
+    pub size: usize,
+    /// Pipeline depth (>= 1): each chunk flows through `stages` chained
+    /// codelet applications, each selecting its variant independently.
+    pub stages: usize,
+    /// Windowed operator: chunks per window (0 = none).
+    pub window: usize,
+    /// Chunks between window firings (0 = tumbling, i.e. `window`).
+    pub slide: usize,
+    /// Scheduling-context name (None = server default routing).
+    pub ctx: Option<String>,
+    /// Per-stream latency target driving backpressure; None falls back
+    /// to the session-level `hello` declaration (if any).
+    pub slo_ms: Option<f64>,
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// Session handshake. `policy` optionally picks a variant-selection
@@ -97,6 +138,14 @@ pub enum Request {
         slo_ms: Option<f64>,
     },
     Submit(SubmitReq),
+    /// v6: open a stream session.
+    StreamOpen(StreamOpenReq),
+    /// v6: push one chunk (seeded input of the stream's declared size)
+    /// through the stream's pipeline. `seq` is the client's monotonic
+    /// chunk counter; the server acks chunks in sequence order.
+    StreamChunk { stream: u64, seq: u64, seed: u64 },
+    /// v6: flush outstanding chunks and close the stream.
+    StreamClose { stream: u64 },
     Stats,
     Contexts,
     /// v5: the elastic-scaling control loop's live state (worker moves
@@ -182,6 +231,84 @@ pub struct StatsResp {
     /// tasks executed with that variant (the paper's §3.2 histogram,
     /// per tenant).
     pub ctx_variants: BTreeMap<String, BTreeMap<String, u64>>,
+    /// v6 — the default context's *effective* latency SLO in
+    /// milliseconds after session/stream declarations tightened it
+    /// (0.0 = none configured or autoscaling off), so operators can see
+    /// which tenants tightened context SLOs.
+    pub slo_ms: f64,
+    /// v6 — stream sessions currently open on this server.
+    pub streams: u64,
+}
+
+/// v6: `stream_opened` — the stream is live; `credit` chunks may be
+/// outstanding before the first ack.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamOpenedResp {
+    pub stream: u64,
+    /// Initial credit grant (max outstanding chunks).
+    pub credit: u64,
+    /// Normalized window size (0 = no windowed operator).
+    pub window: usize,
+    /// Normalized slide (equals `window` for tumbling windows).
+    pub slide: usize,
+    /// Effective SLO driving this stream's backpressure, if any.
+    pub slo_ms: Option<f64>,
+}
+
+/// v6: `stream_ack` — one chunk completed its pipeline (and any window
+/// firing that rode with it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamAckResp {
+    pub stream: u64,
+    pub seq: u64,
+    /// Context name the chunk ran under.
+    pub ctx: String,
+    /// Selected variant per task (pipeline stages in chain order, then
+    /// the window task if one fired with this chunk).
+    pub variants: Vec<String>,
+    /// Global worker ids that executed the tasks, same order.
+    pub workers: Vec<usize>,
+    /// Summed modeled device seconds over the chunk's tasks.
+    pub modeled: f64,
+    /// Summed wall-clock execution seconds over the chunk's tasks.
+    pub wall: f64,
+    /// Submit-to-ack latency of this chunk (seconds).
+    pub latency: f64,
+    /// Current credit grant (the client's new outstanding cap).
+    pub credit: u64,
+    /// Current shed level (0 = full window granularity).
+    pub shed: u64,
+}
+
+/// v6: `stream_credit` — unsolicited flow-control signal, pushed when
+/// backlog pressure moves the credit grant or shed level.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamCreditResp {
+    pub stream: u64,
+    pub credit: u64,
+    pub shed: u64,
+    /// Modeled backlog (milliseconds of queued work) that priced this
+    /// decision.
+    pub queued_ms: f64,
+}
+
+/// v6: `stream_closed` — flush summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamClosedResp {
+    pub stream: u64,
+    /// Chunks acked over the stream's lifetime.
+    pub chunks: u64,
+    /// Chunks lost to submit/execution errors (0 in healthy runs —
+    /// backpressure sheds granularity, never chunks).
+    pub dropped: u64,
+    /// Windows fired.
+    pub windows: u64,
+    /// Windows fired at reduced (shed) granularity.
+    pub shed_windows: u64,
+    /// Unsolicited `stream_credit` signals emitted.
+    pub credit_signals: u64,
+    /// p95 submit-to-ack chunk latency in milliseconds.
+    pub p95_ms: f64,
 }
 
 /// One shard as the router sees it (`shards` response).
@@ -246,6 +373,14 @@ pub enum Response {
         slo_ms: Option<f64>,
     },
     Result(ResultResp),
+    /// v6: stream session opened.
+    StreamOpened(StreamOpenedResp),
+    /// v6: chunk completed.
+    StreamAck(StreamAckResp),
+    /// v6: unsolicited credit/shed update.
+    StreamCredit(StreamCreditResp),
+    /// v6: stream flushed and closed.
+    StreamClosed(StreamClosedResp),
     Error { id: Option<u64>, error: String },
     Stats(StatsResp),
     Contexts { contexts: Vec<CtxDesc> },
@@ -325,6 +460,34 @@ pub fn encode_request(r: &Request) -> String {
             }
             obj(pairs)
         }
+        Request::StreamOpen(q) => {
+            let mut pairs = vec![
+                ("op", s("stream_open")),
+                ("id", n(q.id as f64)),
+                ("app", s(&q.app)),
+                ("size", n(q.size as f64)),
+                ("stages", n(q.stages as f64)),
+                ("window", n(q.window as f64)),
+                ("slide", n(q.slide as f64)),
+            ];
+            if let Some(c) = &q.ctx {
+                pairs.push(("ctx", s(c)));
+            }
+            if let Some(ms) = q.slo_ms {
+                pairs.push(("slo_ms", n(ms)));
+            }
+            obj(pairs)
+        }
+        Request::StreamChunk { stream, seq, seed } => obj(vec![
+            ("op", s("stream_chunk")),
+            ("stream", n(*stream as f64)),
+            ("seq", n(*seq as f64)),
+            ("seed", n(*seed as f64)),
+        ]),
+        Request::StreamClose { stream } => obj(vec![
+            ("op", s("stream_close")),
+            ("stream", n(*stream as f64)),
+        ]),
         Request::Stats => obj(vec![("op", s("stats"))]),
         Request::Contexts => obj(vec![("op", s("contexts"))]),
         Request::AutoscaleStatus => obj(vec![("op", s("autoscale_status"))]),
@@ -375,6 +538,53 @@ pub fn encode_response(r: &Response) -> String {
             ("wall", n(q.wall)),
             ("rel_err", n(q.rel_err)),
         ]),
+        Response::StreamOpened(q) => {
+            let mut pairs = vec![
+                ("ok", Json::Bool(true)),
+                ("type", s("stream_opened")),
+                ("stream", n(q.stream as f64)),
+                ("credit", n(q.credit as f64)),
+                ("window", n(q.window as f64)),
+                ("slide", n(q.slide as f64)),
+            ];
+            if let Some(ms) = q.slo_ms {
+                pairs.push(("slo_ms", n(ms)));
+            }
+            obj(pairs)
+        }
+        Response::StreamAck(q) => obj(vec![
+            ("ok", Json::Bool(true)),
+            ("type", s("stream_ack")),
+            ("stream", n(q.stream as f64)),
+            ("seq", n(q.seq as f64)),
+            ("ctx", s(&q.ctx)),
+            ("variants", strs(&q.variants)),
+            ("workers", nums(&q.workers)),
+            ("modeled", n(q.modeled)),
+            ("wall", n(q.wall)),
+            ("latency", n(q.latency)),
+            ("credit", n(q.credit as f64)),
+            ("shed", n(q.shed as f64)),
+        ]),
+        Response::StreamCredit(q) => obj(vec![
+            ("ok", Json::Bool(true)),
+            ("type", s("stream_credit")),
+            ("stream", n(q.stream as f64)),
+            ("credit", n(q.credit as f64)),
+            ("shed", n(q.shed as f64)),
+            ("queued_ms", n(q.queued_ms)),
+        ]),
+        Response::StreamClosed(q) => obj(vec![
+            ("ok", Json::Bool(true)),
+            ("type", s("stream_closed")),
+            ("stream", n(q.stream as f64)),
+            ("chunks", n(q.chunks as f64)),
+            ("dropped", n(q.dropped as f64)),
+            ("windows", n(q.windows as f64)),
+            ("shed_windows", n(q.shed_windows as f64)),
+            ("credit_signals", n(q.credit_signals as f64)),
+            ("p95_ms", n(q.p95_ms)),
+        ]),
         Response::Error { id, error } => {
             let mut pairs = vec![
                 ("ok", Json::Bool(false)),
@@ -413,6 +623,8 @@ pub fn encode_response(r: &Response) -> String {
                 ("sessions", n(q.sessions as f64)),
                 ("ctx_tasks", Json::Obj(ctx_tasks)),
                 ("ctx_variants", Json::Obj(ctx_variants)),
+                ("slo_ms", n(q.slo_ms)),
+                ("streams", n(q.streams as f64)),
             ])
         }
         Response::Contexts { contexts } => {
@@ -576,6 +788,24 @@ pub fn decode_request(line: &str) -> Result<Request> {
                 },
             })
         }
+        "stream_open" => Request::StreamOpen(StreamOpenReq {
+            id: get_u64(&j, "id")?,
+            app: get_str(&j, "app")?,
+            size: get_u64(&j, "size")? as usize,
+            stages: get_u64(&j, "stages").unwrap_or(1).max(1) as usize,
+            window: get_u64(&j, "window").unwrap_or(0) as usize,
+            slide: get_u64(&j, "slide").unwrap_or(0) as usize,
+            ctx: get_str(&j, "ctx").ok(),
+            slo_ms: get_f64(&j, "slo_ms").ok(),
+        }),
+        "stream_chunk" => Request::StreamChunk {
+            stream: get_u64(&j, "stream")?,
+            seq: get_u64(&j, "seq")?,
+            seed: get_u64(&j, "seed").unwrap_or(0),
+        },
+        "stream_close" => Request::StreamClose {
+            stream: get_u64(&j, "stream")?,
+        },
         "stats" => Request::Stats,
         "contexts" => Request::Contexts,
         "autoscale_status" => Request::AutoscaleStatus,
@@ -618,6 +848,40 @@ pub fn decode_response(line: &str) -> Result<Response> {
             wall: get_f64(&j, "wall")?,
             rel_err: get_f64(&j, "rel_err")?,
         }),
+        "stream_opened" => Response::StreamOpened(StreamOpenedResp {
+            stream: get_u64(&j, "stream")?,
+            credit: get_u64(&j, "credit")?,
+            window: get_u64(&j, "window").unwrap_or(0) as usize,
+            slide: get_u64(&j, "slide").unwrap_or(0) as usize,
+            slo_ms: get_f64(&j, "slo_ms").ok(),
+        }),
+        "stream_ack" => Response::StreamAck(StreamAckResp {
+            stream: get_u64(&j, "stream")?,
+            seq: get_u64(&j, "seq")?,
+            ctx: get_str(&j, "ctx").unwrap_or_default(),
+            variants: get_str_arr(&j, "variants").unwrap_or_default(),
+            workers: get_usize_arr(&j, "workers").unwrap_or_default(),
+            modeled: get_f64(&j, "modeled").unwrap_or(0.0),
+            wall: get_f64(&j, "wall").unwrap_or(0.0),
+            latency: get_f64(&j, "latency").unwrap_or(0.0),
+            credit: get_u64(&j, "credit")?,
+            shed: get_u64(&j, "shed").unwrap_or(0),
+        }),
+        "stream_credit" => Response::StreamCredit(StreamCreditResp {
+            stream: get_u64(&j, "stream")?,
+            credit: get_u64(&j, "credit")?,
+            shed: get_u64(&j, "shed").unwrap_or(0),
+            queued_ms: get_f64(&j, "queued_ms").unwrap_or(0.0),
+        }),
+        "stream_closed" => Response::StreamClosed(StreamClosedResp {
+            stream: get_u64(&j, "stream")?,
+            chunks: get_u64(&j, "chunks").unwrap_or(0),
+            dropped: get_u64(&j, "dropped").unwrap_or(0),
+            windows: get_u64(&j, "windows").unwrap_or(0),
+            shed_windows: get_u64(&j, "shed_windows").unwrap_or(0),
+            credit_signals: get_u64(&j, "credit_signals").unwrap_or(0),
+            p95_ms: get_f64(&j, "p95_ms").unwrap_or(0.0),
+        }),
         "error" => Response::Error {
             id: get_u64(&j, "id").ok(),
             error: get_str(&j, "error")?,
@@ -658,6 +922,9 @@ pub fn decode_response(line: &str) -> Result<Response> {
                 sessions: get_u64(&j, "sessions").unwrap_or(0),
                 ctx_tasks,
                 ctx_variants,
+                // v6 fields: tolerant decode (pre-v6 peers omit them)
+                slo_ms: get_f64(&j, "slo_ms").unwrap_or(0.0),
+                streams: get_u64(&j, "streams").unwrap_or(0),
             })
         }
         "contexts" => {
@@ -926,6 +1193,8 @@ mod tests {
             sessions: 9,
             ctx_tasks,
             ctx_variants,
+            slo_ms: 25.0,
+            streams: 2,
         }));
         roundtrip_resp(Response::Contexts {
             contexts: vec![CtxDesc {
@@ -943,8 +1212,9 @@ mod tests {
 
     #[test]
     fn stats_without_snapshot_fields_decode_as_zero() {
-        // pre-v4 peers omit the runtime-snapshot fields; decode them as
-        // zero rather than failing the whole stats reply
+        // pre-v4 peers omit the runtime-snapshot fields, pre-v6 peers
+        // the slo_ms/streams pair; decode them as zero rather than
+        // failing the whole stats reply
         let line = r#"{"ok":true,"type":"stats","uptime":1,"requests_ok":2,
             "requests_err":0,"inflight":0,"tasks_executed":4}"#
             .replace('\n', "");
@@ -955,9 +1225,125 @@ mod tests {
                 assert_eq!(s.total_workers, 0);
                 assert_eq!(s.sessions, 0);
                 assert_eq!(s.tasks_executed, 4);
+                assert_eq!(s.slo_ms, 0.0);
+                assert_eq!(s.streams, 0);
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn stream_request_roundtrips() {
+        roundtrip_req(Request::StreamOpen(StreamOpenReq {
+            id: 1,
+            app: "sort".into(),
+            size: 16384,
+            stages: 2,
+            window: 4,
+            slide: 2,
+            ctx: Some("hot".into()),
+            slo_ms: Some(40.0),
+        }));
+        roundtrip_req(Request::StreamOpen(StreamOpenReq {
+            id: 2,
+            app: "matmul".into(),
+            size: 48,
+            stages: 1,
+            window: 0,
+            slide: 0,
+            ctx: None,
+            slo_ms: None,
+        }));
+        roundtrip_req(Request::StreamChunk {
+            stream: 1,
+            seq: 17,
+            seed: 99,
+        });
+        roundtrip_req(Request::StreamClose { stream: 1 });
+    }
+
+    #[test]
+    fn stream_open_defaults() {
+        // minimal declaration: stages floors to 1, no window, no slide
+        let r =
+            decode_request(r#"{"op":"stream_open","id":5,"app":"sort","size":256}"#).unwrap();
+        match r {
+            Request::StreamOpen(q) => {
+                assert_eq!(q.stages, 1);
+                assert_eq!(q.window, 0);
+                assert_eq!(q.slide, 0);
+                assert!(q.ctx.is_none() && q.slo_ms.is_none());
+            }
+            other => panic!("{other:?}"),
+        }
+        // chunk without a seed defaults to 0
+        match decode_request(r#"{"op":"stream_chunk","stream":5,"seq":1}"#).unwrap() {
+            Request::StreamChunk { seed, .. } => assert_eq!(seed, 0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stream_response_roundtrips() {
+        roundtrip_resp(Response::StreamOpened(StreamOpenedResp {
+            stream: 1,
+            credit: 8,
+            window: 4,
+            slide: 2,
+            slo_ms: Some(40.0),
+        }));
+        roundtrip_resp(Response::StreamOpened(StreamOpenedResp {
+            stream: 2,
+            credit: 8,
+            window: 0,
+            slide: 0,
+            slo_ms: None,
+        }));
+        roundtrip_resp(Response::StreamAck(StreamAckResp {
+            stream: 1,
+            seq: 9,
+            ctx: "hot".into(),
+            variants: vec!["cuda".into(), "omp".into()],
+            workers: vec![1, 0],
+            modeled: 0.0004,
+            wall: 0.002,
+            latency: 0.0035,
+            credit: 4,
+            shed: 1,
+        }));
+        roundtrip_resp(Response::StreamCredit(StreamCreditResp {
+            stream: 1,
+            credit: 2,
+            shed: 2,
+            queued_ms: 31.5,
+        }));
+        roundtrip_resp(Response::StreamClosed(StreamClosedResp {
+            stream: 1,
+            chunks: 120,
+            dropped: 0,
+            windows: 30,
+            shed_windows: 6,
+            credit_signals: 4,
+            p95_ms: 18.25,
+        }));
+    }
+
+    #[test]
+    fn stream_decode_is_tolerant_and_rejects_malformed() {
+        // acks from a peer that omits optional detail still decode
+        let line = r#"{"ok":true,"type":"stream_ack","stream":1,"seq":2,"credit":8}"#;
+        match decode_response(line).unwrap() {
+            Response::StreamAck(a) => {
+                assert!(a.variants.is_empty() && a.workers.is_empty());
+                assert_eq!(a.shed, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        // the stream id itself is not optional
+        assert!(decode_request(r#"{"op":"stream_chunk","seq":1}"#).is_err());
+        assert!(decode_request(r#"{"op":"stream_close"}"#).is_err());
+        assert!(decode_request(r#"{"op":"stream_open","id":1,"app":"sort"}"#).is_err());
+        assert!(decode_response(r#"{"ok":true,"type":"stream_credit","credit":1}"#).is_err());
     }
 
     #[test]

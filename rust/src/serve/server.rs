@@ -17,7 +17,7 @@ use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -25,14 +25,18 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::protocol::{
     self, AutoscaleCtxDesc, AutoscaleResp, CtxDesc, Request, Response, ResultResp, StatsResp,
-    SubmitReq, PROTOCOL_VERSION,
+    StreamAckResp, StreamClosedResp, StreamCreditResp, StreamOpenReq, StreamOpenedResp, SubmitReq,
+    PROTOCOL_VERSION,
 };
 use crate::apps;
 use crate::autoscale::{AutoscaleOptions, AutoscaleShared, Autoscaler, ScaleTarget};
 use crate::runtime::Manifest;
+use crate::stream::{
+    BacklogModel, CreditController, LatencyTrack, StreamShared, StreamSpec, Windower, BASE_CREDIT,
+};
 use crate::taskrt::{
-    Arch, Config, CtxId, CtxLoad, Runtime, SchedPolicy, SelectionPolicy, SelectorKind, TaskId,
-    TaskSpec, VALID_SELECTORS,
+    Arch, Codelet, Config, CtxId, CtxLoad, HandleId, Runtime, SchedPolicy, SelectionPolicy,
+    SelectorKind, TaskId, TaskSpec, VALID_SELECTORS,
 };
 
 // ----------------------------------------------------------- configuration
@@ -307,6 +311,9 @@ struct Shared {
     next_session: AtomicU64,
     requests_ok: AtomicU64,
     requests_err: AtomicU64,
+    /// Stream sessions currently open (v6 stats gauge; streams also
+    /// count into cluster placement through it).
+    streams: AtomicU64,
     /// Tasks completed per context id (results leave Metrics per-request,
     /// so the server keeps its own per-tenant counters).
     ctx_tasks: Vec<AtomicU64>,
@@ -392,6 +399,19 @@ impl Shared {
                 }
             }
         }
+        // v6: the default context's *effective* SLO after live session
+        // and stream declarations tightened it (0.0 when autoscaling is
+        // off — no control loop, no target to report)
+        let slo_ms = {
+            let autoscale = self.autoscale.lock().unwrap();
+            autoscale
+                .as_ref()
+                .and_then(|a| {
+                    let (default_name, _) = &self.ctx_names[self.default_ctx_index()];
+                    a.effective_slo(default_name, self.slo_default)
+                })
+                .unwrap_or(0.0)
+        };
         StatsResp {
             uptime: self.started.elapsed().as_secs_f64(),
             requests_ok: self.requests_ok.load(Ordering::Relaxed),
@@ -410,6 +430,8 @@ impl Shared {
             sessions: self.rt.tenants() as u64,
             ctx_tasks,
             ctx_variants,
+            slo_ms,
+            streams: self.streams.load(Ordering::Relaxed),
         }
     }
 }
@@ -512,6 +534,7 @@ impl Server {
             next_session: AtomicU64::new(1),
             requests_ok: AtomicU64::new(0),
             requests_err: AtomicU64::new(0),
+            streams: AtomicU64::new(0),
             ctx_names,
             default_ctx,
             autoscale: Mutex::new(None),
@@ -560,6 +583,16 @@ impl Server {
     /// `perf_push`.
     pub fn perf_models(&self) -> Arc<crate::taskrt::PerfModels> {
         self.shared.rt.perf_models().clone()
+    }
+
+    /// Register an extra codelet on the server's runtime *before*
+    /// traffic arrives, shadowing the stock app codelet of the same
+    /// name. Streaming benches and tests use this to install a native
+    /// device-emulating variant ([`crate::stream::emulated_device_sort`])
+    /// where the real CUDA variant would need a compiled artifact
+    /// manifest and an XLA service.
+    pub fn register_codelet(&self, c: Codelet) -> Arc<Codelet> {
+        self.shared.rt.register_codelet(c)
     }
 
     /// Context partitions (name -> worker ids), for tooling and tests.
@@ -688,6 +721,8 @@ struct SessionState {
     /// registration is once per (session, context), so the submit hot
     /// path normally touches no autoscale lock at all.
     slo_declared: Vec<CtxId>,
+    /// Open stream sessions (v6), keyed by the client-chosen stream id.
+    streams: HashMap<u64, StreamHandle>,
 }
 
 fn session_loop(shared: Arc<Shared>, stream: TcpStream, sid: u64) {
@@ -728,6 +763,11 @@ fn session_loop(shared: Arc<Shared>, stream: TcpStream, sid: u64) {
             }
             Err(_) => break,
         }
+    }
+    // streams the client left open are flushed and closed with the
+    // session (their persistent window state must not outlive it)
+    for (_, h) in std::mem::take(&mut sess.streams) {
+        close_stream(&shared, h);
     }
     // the session's SLO declarations die with it (v5 semantics)
     if let Some(a) = shared.autoscale.lock().unwrap().as_ref() {
@@ -906,6 +946,27 @@ fn handle_request(
             send_line(reply, &Response::Bye);
             false
         }
+        Request::StreamOpen(req) => {
+            stream_open(shared, reply, req, sid, sess);
+            true
+        }
+        Request::StreamChunk { stream, seq, seed } => {
+            stream_chunk(shared, reply, stream, seq, seed, sess);
+            true
+        }
+        Request::StreamClose { stream } => {
+            match sess.streams.remove(&stream) {
+                Some(h) => close_stream(shared, h),
+                None => send_line(
+                    reply,
+                    &Response::Error {
+                        id: None,
+                        error: format!("unknown stream {stream}"),
+                    },
+                ),
+            }
+            true
+        }
         Request::Submit(req) => {
             let id = req.id;
             if shared.draining.load(Ordering::SeqCst) {
@@ -971,6 +1032,391 @@ fn handle_request(
             true
         }
     }
+}
+
+// -------------------------------------------------------------- streaming
+
+/// One open stream, owned by its session thread. Submission state
+/// (windower, persistent window accumulator) lives here; completion
+/// state (credit controller, backlog model, latency track) lives in the
+/// stream's worker thread; the two halves meet in [`StreamShared`].
+struct StreamHandle {
+    spec: StreamSpec,
+    ctx_id: CtxId,
+    codelet: Arc<Codelet>,
+    /// Per-session selection policy (None = the context's policy).
+    selector: Option<Arc<dyn SelectionPolicy>>,
+    state: Arc<StreamShared>,
+    windower: Option<Windower>,
+    /// Persistent window state: an app instance whose handles stay
+    /// registered in the `DataRegistry` for the stream's whole life, so
+    /// residency pricing sees the windowed stage as resident data
+    /// across firings.
+    acc: Option<apps::Instance>,
+    tx: mpsc::Sender<StreamWork>,
+    worker: Option<JoinHandle<()>>,
+}
+
+enum StreamWork {
+    Chunk(ChunkInFlight),
+    Close,
+}
+
+/// One submitted chunk, in flight between the session thread and the
+/// stream's completion worker.
+struct ChunkInFlight {
+    seq: u64,
+    /// Pipeline-stage tasks in chain order, then the window task if one
+    /// fired with this chunk.
+    ids: Vec<TaskId>,
+    /// Handles this chunk registered itself (freed after completion;
+    /// the window accumulator's handles persist with the stream).
+    owned: Vec<HandleId>,
+    /// Submit time — the ack's submit-to-ack latency baseline.
+    t0: Instant,
+}
+
+fn stream_open(
+    shared: &Arc<Shared>,
+    reply: &ReplyLane,
+    req: StreamOpenReq,
+    sid: u64,
+    sess: &mut SessionState,
+) {
+    let fail = |e: String| {
+        send_line(reply, &Response::Error { id: None, error: e });
+    };
+    if shared.draining.load(Ordering::SeqCst) {
+        return fail("server is draining".into());
+    }
+    if sess.streams.contains_key(&req.id) {
+        return fail(format!("stream {} is already open on this session", req.id));
+    }
+    // the stream's own SLO wins; otherwise the session's hello
+    // declaration drives this stream's backpressure too
+    let slo = req.slo_ms.or(sess.slo_ms);
+    let spec = match StreamSpec::validate(
+        req.id, &req.app, req.size, req.stages, req.window, req.slide, slo,
+    ) {
+        Ok(s) => s,
+        Err(e) => return fail(format!("{e:#}")),
+    };
+    let (ctx_id, ctx_name) = match shared.resolve_ctx(req.ctx.as_deref()) {
+        Ok(x) => x,
+        Err(e) => return fail(format!("{e:#}")),
+    };
+    // a stream's SLO tightens the autoscale target of its context for
+    // as long as the session lives (released with the session — v5
+    // declaration semantics, stream-scoped source)
+    if let Some(ms) = spec.slo_ms {
+        if let Some(a) = shared.autoscale.lock().unwrap().as_ref() {
+            a.tighten_slo(&ctx_name, sid, ms);
+        }
+    }
+    let rt = &shared.rt;
+    let name = apps::app_codelet_name(&spec.app).to_string();
+    let codelet = match rt.codelet(&name) {
+        Some(c) => c,
+        None => match apps::codelet(&spec.app) {
+            Ok(c) => rt.register_codelet(c),
+            Err(e) => return fail(format!("{e:#}")),
+        },
+    };
+    // persistent window state, registered once per stream
+    let acc = if spec.window.is_some() {
+        match apps::prepare(rt, &spec.app, spec.size, spec.id ^ 0x57ea4d) {
+            Ok(i) => Some(i),
+            Err(e) => return fail(format!("{e:#}")),
+        }
+    } else {
+        None
+    };
+    let state = Arc::new(StreamShared::new(BASE_CREDIT));
+    let (tx, rx) = mpsc::channel();
+    let worker = {
+        let shared = shared.clone();
+        let reply = reply.clone();
+        let state = state.clone();
+        let spec = spec.clone();
+        let ctx_name = ctx_name.clone();
+        std::thread::Builder::new()
+            .name(format!("serve-stream-{sid}-{}", spec.id))
+            .spawn(move || stream_worker(shared, reply, state, spec, ctx_id, ctx_name, rx))
+            .expect("spawning stream worker")
+    };
+    let resp = StreamOpenedResp {
+        stream: spec.id,
+        credit: BASE_CREDIT,
+        window: spec.window.map(|w| w.window).unwrap_or(0),
+        slide: spec.window.map(|w| w.slide).unwrap_or(0),
+        slo_ms: spec.slo_ms,
+    };
+    sess.streams.insert(
+        spec.id,
+        StreamHandle {
+            windower: spec.window.map(Windower::new),
+            spec,
+            ctx_id,
+            codelet,
+            selector: sess.policy.as_ref().map(|(_, s)| s.clone()),
+            state,
+            acc,
+            tx,
+            worker: Some(worker),
+        },
+    );
+    shared.streams.fetch_add(1, Ordering::Relaxed);
+    send_line(reply, &Response::StreamOpened(resp));
+}
+
+fn stream_chunk(
+    shared: &Arc<Shared>,
+    reply: &ReplyLane,
+    stream: u64,
+    seq: u64,
+    seed: u64,
+    sess: &mut SessionState,
+) {
+    let Some(h) = sess.streams.get_mut(&stream) else {
+        send_line(
+            reply,
+            &Response::Error {
+                id: None,
+                error: format!("unknown stream {stream} (open it first)"),
+            },
+        );
+        return;
+    };
+    if shared.draining.load(Ordering::SeqCst) {
+        send_line(
+            reply,
+            &Response::Error {
+                id: None,
+                error: "server is draining".into(),
+            },
+        );
+        return;
+    }
+    // the per-stream credit loop is the primary flow control; the
+    // server-wide admission gate still bounds total in-flight work
+    shared.gate.acquire();
+    match submit_chunk(shared, h, seq, seed) {
+        Ok(chunk) => {
+            if h.tx.send(StreamWork::Chunk(chunk)).is_err() {
+                shared.gate.release();
+            }
+        }
+        Err(e) => {
+            h.state.dropped.fetch_add(1, Ordering::Relaxed);
+            shared.requests_err.fetch_add(1, Ordering::Relaxed);
+            shared.gate.release();
+            send_line(
+                reply,
+                &Response::Error {
+                    id: None,
+                    error: format!("stream {stream} chunk {seq}: {e:#}"),
+                },
+            );
+        }
+    }
+}
+
+/// Register, submit and window one chunk; returns the in-flight record
+/// the stream's completion worker will wait on. Every pipeline stage is
+/// its own task: data dependencies chain the stages (they share the
+/// chunk's handles), and each stage's variant is selected independently
+/// at pop time — per-chunk, per-stage selection under live pressure.
+fn submit_chunk(
+    shared: &Arc<Shared>,
+    h: &mut StreamHandle,
+    seq: u64,
+    seed: u64,
+) -> Result<ChunkInFlight> {
+    let rt = &shared.rt;
+    let t0 = Instant::now();
+    let inst = apps::prepare(rt, &h.spec.app, h.spec.size, seed)?;
+    let mut ids: Vec<TaskId> = Vec::with_capacity(h.spec.stages + 1);
+    for _ in 0..h.spec.stages {
+        let mut spec = TaskSpec::new(h.codelet.clone(), inst.handles.clone(), h.spec.size)
+            .in_context(h.ctx_id)
+            .with_tag(seq);
+        if let Some(sel) = &h.selector {
+            spec = spec.with_selector(sel.clone());
+        }
+        match rt.submit(spec) {
+            Ok(id) => ids.push(id),
+            Err(e) => {
+                unwind_chunk(rt, &ids, &inst);
+                return Err(e);
+            }
+        }
+    }
+    // window assembly at the *current* shed granularity: the completion
+    // worker publishes the shed level, the submit path reads it here
+    let shed = h.state.shed.load(Ordering::Relaxed);
+    if let (Some(w), Some(acc)) = (h.windower.as_mut(), h.acc.as_ref()) {
+        if let Some(fire) = w.push(seq, shed) {
+            let mut spec = TaskSpec::new(h.codelet.clone(), acc.handles.clone(), h.spec.size)
+                .in_context(h.ctx_id)
+                .with_tag(seq);
+            if let Some(sel) = &h.selector {
+                spec = spec.with_selector(sel.clone());
+            }
+            match rt.submit(spec) {
+                Ok(id) => {
+                    ids.push(id);
+                    h.state.windows.fetch_add(1, Ordering::Relaxed);
+                    if fire.shed {
+                        h.state.shed_windows.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Err(e) => {
+                    unwind_chunk(rt, &ids, &inst);
+                    return Err(e);
+                }
+            }
+        }
+    }
+    Ok(ChunkInFlight {
+        seq,
+        ids,
+        owned: inst.owned_handles(),
+        t0,
+    })
+}
+
+/// Submit-failure unwind: wait out what was already submitted, then
+/// free the chunk's handles (the window accumulator is untouched).
+fn unwind_chunk(rt: &Runtime, ids: &[TaskId], inst: &apps::Instance) {
+    let _ = rt.wait_tasks(ids);
+    rt.metrics().take_results_for(ids);
+    rt.reap_tasks(ids);
+    for h in inst.owned_handles() {
+        let _ = rt.unregister_data(h);
+    }
+}
+
+/// Flush and close one stream: the worker drains every chunk already
+/// queued ahead of the Close marker, emits the `stream_closed` summary,
+/// then the persistent window state is freed.
+fn close_stream(shared: &Arc<Shared>, mut h: StreamHandle) {
+    let _ = h.tx.send(StreamWork::Close);
+    if let Some(w) = h.worker.take() {
+        let _ = w.join();
+    }
+    if let Some(acc) = h.acc.take() {
+        for hd in acc.owned_handles() {
+            let _ = shared.rt.unregister_data(hd);
+        }
+    }
+    shared.streams.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// Per-stream completion worker: drains the stream's chunks in order
+/// (one thread per stream keeps acks in sequence order), prices the
+/// backlog in wall milliseconds, drives the credit controller, and
+/// pushes an unsolicited `stream_credit` whenever the shed level moves.
+fn stream_worker(
+    shared: Arc<Shared>,
+    reply: ReplyLane,
+    state: Arc<StreamShared>,
+    spec: StreamSpec,
+    ctx_id: CtxId,
+    ctx_name: String,
+    rx: mpsc::Receiver<StreamWork>,
+) {
+    let rt = &shared.rt;
+    let mut credit = CreditController::new(spec.slo_ms, BASE_CREDIT);
+    let mut backlog = BacklogModel::default();
+    let mut latency = LatencyTrack::default();
+    while let Ok(StreamWork::Chunk(c)) = rx.recv() {
+        let waited = rt.wait_tasks(&c.ids);
+        let results = rt.metrics().take_results_for(&c.ids);
+        if let Some(n) = shared.ctx_tasks.get(ctx_id) {
+            n.fetch_add(results.len() as u64, Ordering::Relaxed);
+        }
+        {
+            let mut hists = shared.ctx_variants.lock().unwrap();
+            if let Some(hist) = hists.get_mut(ctx_id) {
+                for r in &results {
+                    *hist.entry(r.variant.clone()).or_insert(0) += 1;
+                }
+            }
+        }
+        // the backlog model prices the queue in the SLO's domain:
+        // measured wall seconds per task, not modeled device micros
+        for r in &results {
+            backlog.observe(r.wall);
+        }
+        rt.reap_tasks(&c.ids);
+        for hd in &c.owned {
+            let _ = rt.unregister_data(*hd);
+        }
+        let lat = c.t0.elapsed().as_secs_f64();
+        let queued_ms = backlog.queued_ms(rt.queued_tasks());
+        let d = credit.assess(queued_ms);
+        state.shed.store(d.shed, Ordering::Relaxed);
+        state.credit.store(d.credit, Ordering::Relaxed);
+        match waited {
+            Ok(()) => {
+                latency.record(lat);
+                state.chunks.fetch_add(1, Ordering::Relaxed);
+                shared.requests_ok.fetch_add(1, Ordering::Relaxed);
+                send_line(
+                    &reply,
+                    &Response::StreamAck(StreamAckResp {
+                        stream: spec.id,
+                        seq: c.seq,
+                        ctx: ctx_name.clone(),
+                        variants: results.iter().map(|r| r.variant.clone()).collect(),
+                        workers: results.iter().map(|r| r.worker).collect(),
+                        modeled: results.iter().map(|r| r.modeled_total()).sum(),
+                        wall: results.iter().map(|r| r.wall).sum(),
+                        latency: lat,
+                        credit: d.credit,
+                        shed: u64::from(d.shed),
+                    }),
+                );
+            }
+            Err(e) => {
+                state.dropped.fetch_add(1, Ordering::Relaxed);
+                shared.requests_err.fetch_add(1, Ordering::Relaxed);
+                send_line(
+                    &reply,
+                    &Response::Error {
+                        id: None,
+                        error: format!("stream {} chunk {}: {e:#}", spec.id, c.seq),
+                    },
+                );
+            }
+        }
+        if d.changed {
+            state.credit_signals.fetch_add(1, Ordering::Relaxed);
+            send_line(
+                &reply,
+                &Response::StreamCredit(StreamCreditResp {
+                    stream: spec.id,
+                    credit: d.credit,
+                    shed: u64::from(d.shed),
+                    queued_ms,
+                }),
+            );
+        }
+        shared.gate.release();
+    }
+    // Close marker (or the session dropped the sender): flush summary
+    send_line(
+        &reply,
+        &Response::StreamClosed(StreamClosedResp {
+            stream: spec.id,
+            chunks: state.chunks.load(Ordering::Relaxed),
+            dropped: state.dropped.load(Ordering::Relaxed),
+            windows: state.windows.load(Ordering::Relaxed),
+            shed_windows: state.shed_windows.load(Ordering::Relaxed),
+            credit_signals: state.credit_signals.load(Ordering::Relaxed),
+            p95_ms: latency.p95_ms(),
+        }),
+    );
 }
 
 // -------------------------------------------------------- dispatch + exec
@@ -1266,6 +1712,59 @@ mod tests {
         .unwrap();
         let base = Duration::from_micros(400);
         assert_eq!(adaptive_window(base, &rt), base / 4);
+    }
+
+    #[test]
+    fn adaptive_window_widens_under_sustained_pressure_and_recovers() {
+        use crate::runtime::Tensor;
+        use crate::taskrt::{AccessMode, NativeFn};
+        // one slow worker, a deep queue: sustained pressure must hold
+        // the fuse window at its 4x cap (not just a transient burst),
+        // and draining must bring it back to the idle quarter
+        let rt = Runtime::new(
+            Config {
+                ncpu: 1,
+                ncuda: 0,
+                sched: SchedPolicy::Eager,
+                ..Config::default()
+            },
+            None,
+        )
+        .unwrap();
+        let nap: NativeFn = Arc::new(|_bufs| {
+            std::thread::sleep(Duration::from_millis(20));
+            Ok(())
+        });
+        let cl = rt.register_codelet(
+            Codelet::new("nap", "nap", vec![AccessMode::Read]).with_native(
+                "seq",
+                Arch::Cpu,
+                nap,
+            ),
+        );
+        // distinct handles: no data dependencies, every task queues
+        // ready behind the single worker
+        let handles: Vec<_> = (0..8)
+            .map(|_| rt.register_data(Tensor::zeros(vec![4])))
+            .collect();
+        for &h in &handles {
+            rt.submit(TaskSpec::new(cl.clone(), vec![h], 4)).unwrap();
+        }
+        let base = Duration::from_micros(400);
+        assert_eq!(
+            adaptive_window(base, &rt),
+            base.mul_f64(4.0),
+            "a deep sustained queue pins the window at its 4x cap"
+        );
+        rt.wait_all().unwrap();
+        assert_eq!(
+            adaptive_window(base, &rt),
+            base / 4,
+            "a drained runtime returns to the idle quarter"
+        );
+        for h in handles {
+            let _ = rt.unregister_data(h);
+        }
     }
 
     #[test]

@@ -1,0 +1,141 @@
+//! SLO-driven flow control for stream sessions.
+//!
+//! A stream never queues unboundedly: the client may only have
+//! `credit` chunks outstanding, and the server re-prices that credit on
+//! every chunk completion from the *measured* backlog in front of the
+//! stream. When the modeled time-to-drain threatens the session's
+//! `slo_ms`, the grant shrinks (and the window granularity sheds, see
+//! [`super::window`]); when the backlog drains, it recovers. The grant
+//! never reaches zero — backpressure slows the source, it never stalls
+//! or drops an admitted chunk.
+
+/// Default chunks-in-flight grant for a freshly opened stream.
+pub const BASE_CREDIT: u64 = 8;
+
+/// Highest shed level: credit 1, slide stretched 8x (capped by the
+/// window spec).
+pub const MAX_SHED: u8 = 3;
+
+/// Outcome of one [`CreditController::assess`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CreditDecision {
+    /// Chunks the client may now keep outstanding.
+    pub credit: u64,
+    /// Current shed level (0 = full granularity).
+    pub shed: u8,
+    /// The level moved this assessment — the server emits an
+    /// unsolicited `stream_credit` signal exactly when this is set.
+    pub changed: bool,
+}
+
+/// Per-stream credit state machine.
+#[derive(Debug)]
+pub struct CreditController {
+    slo_ms: Option<f64>,
+    base_credit: u64,
+    shed: u8,
+}
+
+impl CreditController {
+    pub fn new(slo_ms: Option<f64>, base_credit: u64) -> CreditController {
+        CreditController {
+            slo_ms: slo_ms.filter(|s| s.is_finite() && *s > 0.0),
+            base_credit: base_credit.max(1),
+            shed: 0,
+        }
+    }
+
+    pub fn shed(&self) -> u8 {
+        self.shed
+    }
+
+    /// Grant at the current shed level; halves per level, floor 1.
+    pub fn credit(&self) -> u64 {
+        (self.base_credit >> u32::from(self.shed)).max(1)
+    }
+
+    /// Re-price the grant against the estimated backlog (milliseconds
+    /// of queued work in front of the stream's next chunk).
+    ///
+    /// Backpressure must engage *before* the SLO is violated, so
+    /// pressure is measured against half the target: a backlog of
+    /// `slo/2` is pressure 1.0 (shed level 1), and every further
+    /// doubling sheds one more level up to [`MAX_SHED`]. Streams with
+    /// no SLO are never shed.
+    pub fn assess(&mut self, queued_ms: f64) -> CreditDecision {
+        let next = match self.slo_ms {
+            Some(slo) => {
+                let mut pressure = queued_ms / (slo * 0.5);
+                if pressure < 1.0 {
+                    0
+                } else {
+                    let mut level: u8 = 1;
+                    while pressure >= 2.0 && level < MAX_SHED {
+                        pressure /= 2.0;
+                        level += 1;
+                    }
+                    level
+                }
+            }
+            None => 0,
+        };
+        let changed = next != self.shed;
+        self.shed = next;
+        CreditDecision {
+            credit: self.credit(),
+            shed: next,
+            changed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_slo_never_sheds() {
+        let mut c = CreditController::new(None, BASE_CREDIT);
+        for backlog in [0.0, 10.0, 1e6] {
+            let d = c.assess(backlog);
+            assert_eq!((d.credit, d.shed, d.changed), (BASE_CREDIT, 0, false));
+        }
+    }
+
+    #[test]
+    fn invalid_slo_treated_as_none() {
+        let mut c = CreditController::new(Some(f64::NAN), BASE_CREDIT);
+        assert_eq!(c.assess(1e9).shed, 0);
+        let mut c = CreditController::new(Some(0.0), BASE_CREDIT);
+        assert_eq!(c.assess(1e9).shed, 0);
+    }
+
+    #[test]
+    fn sheds_at_half_slo_and_escalates_per_doubling() {
+        let mut c = CreditController::new(Some(20.0), 8);
+        // idle: full grant
+        let d = c.assess(0.0);
+        assert_eq!((d.credit, d.shed, d.changed), (8, 0, false));
+        // 12 ms backlog vs a 20 ms SLO: past the half-SLO engage point,
+        // well before the SLO itself is violated
+        let d = c.assess(12.0);
+        assert_eq!((d.credit, d.shed, d.changed), (4, 1, true));
+        // steady: same level, no new signal
+        let d = c.assess(13.0);
+        assert_eq!((d.credit, d.shed, d.changed), (4, 1, false));
+        // 50 ms: pressure 5.0 -> two more doublings -> max shed
+        let d = c.assess(50.0);
+        assert_eq!((d.credit, d.shed, d.changed), (1, 3, true));
+        // drained: full recovery, signalled once
+        let d = c.assess(0.0);
+        assert_eq!((d.credit, d.shed, d.changed), (8, 0, true));
+    }
+
+    #[test]
+    fn credit_floor_is_one() {
+        let mut c = CreditController::new(Some(1.0), 2);
+        let d = c.assess(1e6);
+        assert_eq!(d.shed, MAX_SHED);
+        assert_eq!(d.credit, 1, "a shed stream still makes progress");
+    }
+}

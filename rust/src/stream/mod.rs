@@ -1,0 +1,73 @@
+//! `stream` — heterogeneous stream computing on top of the serve
+//! protocol (HSTREAM-style, Memeti & Pllana): a client opens a *stream
+//! session* (protocol v6 `stream_open`), chunks flow continuously
+//! through a declared codelet pipeline (`stream_chunk`), and every
+//! chunk's stage picks its implementation variant per-chunk through the
+//! runtime's selection engine — so device variants win while the
+//! machine is idle and lose, chunk by chunk, when load-band pressure
+//! builds.
+//!
+//! The module holds the pure core of the subsystem; the serve layer
+//! wires it to sockets and the task runtime:
+//!
+//! - [`window`]: tumbling/sliding windows over chunk sequences. Under
+//!   pressure the window *sheds granularity* (the slide stretches) —
+//!   it never drops chunks. Window state lives in persistent
+//!   `DataRegistry` handles owned by the serve layer, so residency
+//!   pricing applies to the windowed stage across firings.
+//! - [`credit`]: SLO-driven flow control. The client may only keep
+//!   `credit` chunks outstanding; the grant is re-priced on every
+//!   completion and an unsolicited `stream_credit` signal is pushed
+//!   when it moves. Backpressure engages at *half* the SLO — before
+//!   the target is violated, not after.
+//! - [`session`]: the validated stream shape, the state shared between
+//!   submission and completion threads, and the [`BacklogModel`] that
+//!   prices the queue in wall milliseconds (the SLO's domain) from
+//!   measured task service times.
+
+pub mod credit;
+pub mod session;
+pub mod window;
+
+pub use credit::{CreditController, CreditDecision, BASE_CREDIT, MAX_SHED};
+pub use session::{BacklogModel, LatencyTrack, StreamShared, StreamSpec};
+pub use window::{WindowFire, WindowSpec, Windower};
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::apps::sort::{sort_omp, sort_seq};
+use crate::taskrt::{AccessMode, Arch, Codelet, ExecBuffers};
+
+/// A `sort` codelet whose CUDA variant is a *native* device emulation:
+/// it runs a real sort after sleeping `device_latency`, while modeled
+/// time attribution still comes from the analytic device model.
+///
+/// The real app codelet's "cuda" variant is a Pallas artifact that
+/// needs a compiled manifest and an XLA service; benches and tests run
+/// on bare images where neither exists, yet the streaming story needs a
+/// genuine device lane whose queue can be buried. Registering this
+/// codelet under the app's name before serving makes the device lane
+/// real (occupancy, backlog, per-chunk flips) without any artifact.
+pub fn emulated_device_sort(device_latency: Duration) -> Codelet {
+    let wrap = |f: fn(&mut [f32])| -> crate::taskrt::NativeFn {
+        Arc::new(move |bufs: &ExecBuffers| -> Result<()> {
+            let mut arr = bufs.write(0);
+            f(arr.data_mut());
+            Ok(())
+        })
+    };
+    let device: crate::taskrt::NativeFn = Arc::new(move |bufs: &ExecBuffers| -> Result<()> {
+        std::thread::sleep(device_latency);
+        let mut arr = bufs.write(0);
+        sort_seq(arr.data_mut());
+        Ok(())
+    });
+    Codelet::new("sort", "sort", vec![AccessMode::ReadWrite])
+        .with_native("omp", Arch::Cpu, wrap(sort_omp))
+        .with_native("seq", Arch::Cpu, wrap(sort_seq))
+        .with_native("cuda", Arch::Cuda, device)
+        .with_hint("cuda")
+}

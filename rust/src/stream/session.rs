@@ -1,0 +1,228 @@
+//! Shared per-stream state and the backlog estimator that ties
+//! measured task walltime to the credit controller.
+//!
+//! The split between session thread and completion worker in the serve
+//! layer is mediated through [`StreamShared`]: the session thread reads
+//! the current shed level when assembling windows and bumps submission
+//! counters; the completion worker (which sees task results) owns the
+//! [`CreditController`](super::credit::CreditController) and publishes
+//! its decisions here.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::apps;
+use crate::util::stats;
+
+use super::window::WindowSpec;
+
+/// Validated shape of an open stream, as declared by `stream_open`.
+#[derive(Debug, Clone)]
+pub struct StreamSpec {
+    /// Client-chosen stream id (unique within the session).
+    pub id: u64,
+    /// Application kernel each chunk runs (`apps::ALL`).
+    pub app: String,
+    /// Elements per chunk.
+    pub size: usize,
+    /// Pipeline depth: each chunk passes through `stages` chained
+    /// applications of the codelet, each stage selecting its variant
+    /// independently.
+    pub stages: usize,
+    /// Windowed operator, if declared.
+    pub window: Option<WindowSpec>,
+    /// Effective SLO driving backpressure (already merged with the
+    /// session-level declaration).
+    pub slo_ms: Option<f64>,
+}
+
+impl StreamSpec {
+    /// Validate a wire-level declaration. Pipelines and windows re-apply
+    /// the codelet to its own output, so any multi-stage or windowed
+    /// stream requires an idempotent app.
+    pub fn validate(
+        id: u64,
+        app: &str,
+        size: usize,
+        stages: usize,
+        window: usize,
+        slide: usize,
+        slo_ms: Option<f64>,
+    ) -> Result<StreamSpec> {
+        if !apps::ALL.contains(&app) {
+            bail!("unknown app '{app}' (expected one of {:?})", apps::ALL);
+        }
+        if size == 0 {
+            bail!("stream chunk size must be >= 1");
+        }
+        let stages = stages.max(1);
+        let window = WindowSpec::new(window, slide);
+        if (stages > 1 || window.is_some()) && !apps::idempotent(app) {
+            bail!(
+                "app '{app}' is not idempotent: multi-stage pipelines and windowed \
+                 operators re-apply the codelet (idempotent apps: {:?})",
+                apps::IDEMPOTENT
+            );
+        }
+        if let Some(ms) = slo_ms {
+            if !ms.is_finite() || ms <= 0.0 {
+                bail!("stream slo_ms must be a positive, finite number of milliseconds");
+            }
+        }
+        Ok(StreamSpec {
+            id,
+            app: app.to_string(),
+            size,
+            stages,
+            window,
+            slo_ms,
+        })
+    }
+}
+
+/// Lock-free state shared between the session thread (submits chunks,
+/// assembles windows) and the stream's completion worker (assesses
+/// credit, acks chunks).
+#[derive(Debug, Default)]
+pub struct StreamShared {
+    /// Current shed level, published by the completion worker and read
+    /// by the session thread when pushing into the windower.
+    pub shed: AtomicU8,
+    /// Current credit grant (informational mirror of the last decision).
+    pub credit: AtomicU64,
+    /// Chunks acked.
+    pub chunks: AtomicU64,
+    /// Chunks that failed submit or execution (the credit loop keeps
+    /// this at zero in healthy runs — backpressure sheds granularity,
+    /// not chunks).
+    pub dropped: AtomicU64,
+    /// Windows fired.
+    pub windows: AtomicU64,
+    /// Windows fired at reduced granularity.
+    pub shed_windows: AtomicU64,
+    /// Unsolicited `stream_credit` signals emitted.
+    pub credit_signals: AtomicU64,
+}
+
+impl StreamShared {
+    pub fn new(initial_credit: u64) -> StreamShared {
+        let s = StreamShared::default();
+        s.credit.store(initial_credit, Ordering::Relaxed);
+        s
+    }
+}
+
+/// Estimates the wall-clock backlog in front of a stream from measured
+/// per-task service times.
+///
+/// Modeled device times live in the microsecond domain of the analytic
+/// model and are what the *selection* layer prices; an SLO is a promise
+/// about wall milliseconds, so the credit loop must price the queue in
+/// the same domain. An EWMA over observed task walltime, multiplied by
+/// the runtime's current queue depth, is the modeled time-to-drain.
+#[derive(Debug, Clone, Copy)]
+pub struct BacklogModel {
+    ewma_secs: f64,
+    alpha: f64,
+}
+
+impl Default for BacklogModel {
+    fn default() -> BacklogModel {
+        BacklogModel {
+            ewma_secs: 0.0,
+            alpha: 0.3,
+        }
+    }
+}
+
+impl BacklogModel {
+    /// Feed one measured per-task walltime (seconds).
+    pub fn observe(&mut self, task_wall_secs: f64) {
+        if !task_wall_secs.is_finite() || task_wall_secs < 0.0 {
+            return;
+        }
+        if self.ewma_secs == 0.0 {
+            self.ewma_secs = task_wall_secs;
+        } else {
+            self.ewma_secs += self.alpha * (task_wall_secs - self.ewma_secs);
+        }
+    }
+
+    /// Modeled milliseconds of queued work at the given queue depth.
+    pub fn queued_ms(&self, queue_depth: usize) -> f64 {
+        self.ewma_secs * 1e3 * queue_depth as f64
+    }
+}
+
+/// Per-chunk latency record kept by the completion worker for the
+/// close-time summary.
+#[derive(Debug, Default)]
+pub struct LatencyTrack {
+    samples: Vec<f64>,
+}
+
+impl LatencyTrack {
+    pub fn record(&mut self, secs: f64) {
+        self.samples.push(secs);
+    }
+
+    /// p95 chunk latency in milliseconds (0 when no chunk completed).
+    pub fn p95_ms(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        stats::percentile(&sorted, 95.0) * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_normalizes_and_rejects() {
+        let s = StreamSpec::validate(1, "sort", 4096, 0, 4, 0, Some(20.0)).unwrap();
+        assert_eq!(s.stages, 1, "stages floor at 1");
+        let w = s.window.unwrap();
+        assert_eq!((w.window, w.slide), (4, 4), "slide 0 normalizes to tumbling");
+
+        assert!(StreamSpec::validate(1, "nope", 64, 1, 0, 0, None).is_err());
+        assert!(StreamSpec::validate(1, "sort", 0, 1, 0, 0, None).is_err());
+        assert!(StreamSpec::validate(1, "sort", 64, 1, 0, 0, Some(-1.0)).is_err());
+        // hotspot is not idempotent: fine single-stage, rejected piped
+        assert!(StreamSpec::validate(1, "hotspot", 64, 1, 0, 0, None).is_ok());
+        let err = StreamSpec::validate(1, "hotspot", 64, 2, 0, 0, None).unwrap_err();
+        assert!(format!("{err:#}").contains("not idempotent"), "{err:#}");
+        assert!(StreamSpec::validate(1, "hotspot", 64, 1, 4, 0, None).is_err());
+    }
+
+    #[test]
+    fn backlog_tracks_measured_walltime() {
+        let mut b = BacklogModel::default();
+        assert_eq!(b.queued_ms(10), 0.0, "no observations yet");
+        b.observe(0.002);
+        assert!((b.queued_ms(10) - 20.0).abs() < 1e-9, "2 ms x 10 queued");
+        // converges toward a new service time
+        for _ in 0..64 {
+            b.observe(0.001);
+        }
+        assert!((b.queued_ms(10) - 10.0).abs() < 0.5);
+        // garbage observations are ignored
+        b.observe(f64::NAN);
+        b.observe(-1.0);
+        assert!((b.queued_ms(10) - 10.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn latency_p95() {
+        let mut l = LatencyTrack::default();
+        assert_eq!(l.p95_ms(), 0.0);
+        for i in 1..=100 {
+            l.record(i as f64 / 1000.0);
+        }
+        assert!((l.p95_ms() - 95.05).abs() < 0.1);
+    }
+}

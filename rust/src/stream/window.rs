@@ -1,0 +1,204 @@
+//! Windowed operators over chunk sequences: tumbling and sliding
+//! windows, with load shedding expressed as *granularity* rather than
+//! loss — under pressure the window fires less often (the slide
+//! stretches), it never drops chunks.
+//!
+//! The assembler is pure bookkeeping: the serve layer owns the window
+//! *state* (a persistent `DataRegistry` handle set, so residency
+//! pricing applies to the windowed stage across firings) and asks this
+//! module only *when* a window completes.
+
+use std::collections::VecDeque;
+
+/// Declared window shape of a stream (`stream_open`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowSpec {
+    /// Chunks aggregated per window (>= 1).
+    pub window: usize,
+    /// Chunks between firings: `slide == window` is a tumbling window,
+    /// `slide < window` a sliding one.
+    pub slide: usize,
+}
+
+impl WindowSpec {
+    /// Normalize a wire-level declaration: `window == 0` means the
+    /// stream runs no windowed operator; `slide == 0` means tumbling
+    /// (slide = window); a slide wider than the window is clamped to it.
+    pub fn new(window: usize, slide: usize) -> Option<WindowSpec> {
+        if window == 0 {
+            return None;
+        }
+        let slide = if slide == 0 { window } else { slide.min(window) };
+        Some(WindowSpec { window, slide })
+    }
+
+    /// The slide at shed level `shed`: each level doubles the stride
+    /// between firings (coarser granularity, less windowed work), capped
+    /// at 4x the declared window so a shed stream still aggregates.
+    pub fn effective_slide(&self, shed: u8) -> usize {
+        let stretched = self.slide.saturating_shl(u32::from(shed.min(8)));
+        stretched.min(self.window.saturating_mul(4)).max(self.slide)
+    }
+}
+
+/// What a completed window firing covers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WindowFire {
+    /// Chunk sequence numbers in the window extent, oldest first.
+    pub seqs: Vec<u64>,
+    /// Fired at reduced granularity (shed level > 0).
+    pub shed: bool,
+}
+
+/// Assembles chunk sequences into window firings.
+#[derive(Debug)]
+pub struct Windower {
+    spec: WindowSpec,
+    /// The last `window` chunk seqs (the current window extent).
+    buf: VecDeque<u64>,
+    /// Chunks pushed since the last firing.
+    since_fire: usize,
+    /// Total windows fired.
+    pub fired: u64,
+    /// Firings emitted while shed (coarse granularity).
+    pub shed_fired: u64,
+}
+
+impl Windower {
+    pub fn new(spec: WindowSpec) -> Windower {
+        Windower {
+            spec,
+            buf: VecDeque::with_capacity(spec.window),
+            since_fire: 0,
+            fired: 0,
+            shed_fired: 0,
+        }
+    }
+
+    pub fn spec(&self) -> WindowSpec {
+        self.spec
+    }
+
+    /// Record one chunk; returns the window extent when a window
+    /// completes at the current shed granularity.
+    pub fn push(&mut self, seq: u64, shed: u8) -> Option<WindowFire> {
+        self.buf.push_back(seq);
+        while self.buf.len() > self.spec.window {
+            self.buf.pop_front();
+        }
+        self.since_fire += 1;
+        if self.buf.len() == self.spec.window && self.since_fire >= self.spec.effective_slide(shed)
+        {
+            self.since_fire = 0;
+            self.fired += 1;
+            if shed > 0 {
+                self.shed_fired += 1;
+            }
+            return Some(WindowFire {
+                seqs: self.buf.iter().copied().collect(),
+                shed: shed > 0,
+            });
+        }
+        None
+    }
+}
+
+/// `usize::checked_shl` that saturates instead of wrapping (shift
+/// counts here are tiny, but a hostile shed level must not overflow).
+trait SaturatingShl {
+    fn saturating_shl(self, n: u32) -> Self;
+}
+
+impl SaturatingShl for usize {
+    fn saturating_shl(self, n: u32) -> usize {
+        self.checked_shl(n).unwrap_or(usize::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_normalizes() {
+        assert_eq!(WindowSpec::new(0, 0), None, "window 0 = no operator");
+        let w = WindowSpec::new(4, 0).unwrap();
+        assert_eq!(w.slide, 4, "slide 0 = tumbling");
+        let w = WindowSpec::new(4, 9).unwrap();
+        assert_eq!(w.slide, 4, "slide clamped to window");
+        let w = WindowSpec::new(4, 2).unwrap();
+        assert_eq!((w.window, w.slide), (4, 2));
+    }
+
+    #[test]
+    fn shed_stretches_slide_with_cap() {
+        let w = WindowSpec::new(4, 2).unwrap();
+        assert_eq!(w.effective_slide(0), 2);
+        assert_eq!(w.effective_slide(1), 4);
+        assert_eq!(w.effective_slide(2), 8);
+        // capped at 4x the window
+        assert_eq!(w.effective_slide(3), 16);
+        assert_eq!(w.effective_slide(4), 16);
+        assert_eq!(w.effective_slide(8), 16);
+    }
+
+    #[test]
+    fn tumbling_fires_disjoint_extents() {
+        let mut w = Windower::new(WindowSpec::new(3, 0).unwrap());
+        let mut fires = Vec::new();
+        for seq in 1..=9 {
+            if let Some(f) = w.push(seq, 0) {
+                fires.push(f.seqs);
+            }
+        }
+        assert_eq!(fires, vec![vec![1, 2, 3], vec![4, 5, 6], vec![7, 8, 9]]);
+        assert_eq!(w.fired, 3);
+        assert_eq!(w.shed_fired, 0);
+    }
+
+    #[test]
+    fn sliding_fires_overlapping_extents() {
+        let mut w = Windower::new(WindowSpec::new(4, 2).unwrap());
+        let mut fires = Vec::new();
+        for seq in 1..=8 {
+            if let Some(f) = w.push(seq, 0) {
+                fires.push(f.seqs);
+            }
+        }
+        assert_eq!(
+            fires,
+            vec![vec![1, 2, 3, 4], vec![3, 4, 5, 6], vec![5, 6, 7, 8]]
+        );
+    }
+
+    #[test]
+    fn shed_level_coarsens_firing() {
+        // same stream, shed level 1: the slide stretches 2 -> 4, so only
+        // every other window fires — granularity shed, no chunk dropped
+        let mut w = Windower::new(WindowSpec::new(4, 2).unwrap());
+        let mut fired_at = Vec::new();
+        for seq in 1..=12 {
+            if let Some(f) = w.push(seq, 1) {
+                assert!(f.shed);
+                fired_at.push(seq);
+            }
+        }
+        assert_eq!(fired_at, vec![4, 8, 12]);
+        assert_eq!(w.shed_fired, 3);
+    }
+
+    #[test]
+    fn recovery_restores_granularity() {
+        let mut w = Windower::new(WindowSpec::new(2, 0).unwrap());
+        assert!(w.push(1, 0).is_none());
+        assert!(w.push(2, 0).is_some());
+        // shed: window 2 slide 2 -> effective 4, fires every 4 chunks
+        assert!(w.push(3, 1).is_none());
+        assert!(w.push(4, 1).is_none());
+        assert!(w.push(5, 1).is_none());
+        assert!(w.push(6, 1).is_some());
+        // recovered: back to every 2 chunks
+        assert!(w.push(7, 0).is_none());
+        assert!(w.push(8, 0).is_some());
+    }
+}

@@ -32,6 +32,9 @@ pub struct TaskResult {
     /// (seconds) — consumed by the trace exporter.
     pub t_start: f64,
     pub t_end: f64,
+    /// Application tag from [`super::task::TaskSpec::tag`] (chunk
+    /// sequence number for stream pipeline tasks; 0 = untagged).
+    pub tag: u64,
 }
 
 impl TaskResult {
@@ -141,6 +144,7 @@ mod tests {
             transfer_bytes: 256,
             t_start: 0.0,
             t_end: t,
+            tag: 0,
         }
     }
 

@@ -697,6 +697,7 @@ impl Runtime {
             ctx: spec.ctx,
             chosen_impl: None,
             est_cost_ns: 0,
+            tag: spec.tag,
         };
         if !archs.iter().any(|&a| slot.ctx.can_run(&probe, a)) {
             undo(self);

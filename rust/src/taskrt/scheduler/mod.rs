@@ -49,6 +49,8 @@ pub struct ReadyTask {
     pub chosen_impl: Option<usize>,
     /// Cost the policy charged to the worker's queue (to undo on finish).
     pub est_cost_ns: u64,
+    /// Opaque application tag from the spec (stream chunk seq; 0 = none).
+    pub tag: u64,
 }
 
 /// Static description of one worker thread.

@@ -248,6 +248,7 @@ mod tests {
             ctx: 0,
             chosen_impl: None,
             est_cost_ns: 0,
+            tag: 0,
         }
     }
 
@@ -363,6 +364,7 @@ mod tests {
             ctx: 0,
             chosen_impl: None,
             est_cost_ns: 0,
+            tag: 0,
         };
         let p = Contextual::new();
         // cold band: the prefer() prior discounts the hinted variant

@@ -294,6 +294,7 @@ mod tests {
             ctx: 0,
             chosen_impl: None,
             est_cost_ns: 0,
+            tag: 0,
         }
     }
 

@@ -37,6 +37,12 @@ pub struct TaskSpec {
     /// Scheduling context to run under (StarPU's `sched_ctx`); tasks are
     /// placed only on the context's worker partition. 0 = default.
     pub ctx: crate::taskrt::CtxId,
+    /// Opaque application tag carried through to [`super::metrics::TaskResult`]
+    /// (StarPU's `starpu_task::tag_id`). The stream layer stamps each
+    /// pipeline task with its chunk sequence number so per-chunk
+    /// feedback and acks can be attributed without a side table. 0 =
+    /// untagged.
+    pub tag: u64,
 }
 
 impl TaskSpec {
@@ -59,6 +65,7 @@ impl TaskSpec {
             priority: 0,
             after: Vec::new(),
             ctx: crate::taskrt::DEFAULT_CTX,
+            tag: 0,
         }
     }
 
@@ -89,6 +96,12 @@ impl TaskSpec {
     /// Explicit ordering: this task runs only after `deps` finish.
     pub fn after(mut self, deps: &[TaskId]) -> TaskSpec {
         self.after.extend_from_slice(deps);
+        self
+    }
+
+    /// Stamp an opaque application tag (carried into the task's result).
+    pub fn with_tag(mut self, tag: u64) -> TaskSpec {
+        self.tag = tag;
         self
     }
 }
@@ -291,6 +304,12 @@ mod tests {
     fn in_context_sets_ctx() {
         assert_eq!(spec().ctx, 0);
         assert_eq!(spec().in_context(3).ctx, 3);
+    }
+
+    #[test]
+    fn with_tag_sets_tag() {
+        assert_eq!(spec().tag, 0);
+        assert_eq!(spec().with_tag(17).tag, 17);
     }
 
     #[test]

@@ -98,6 +98,7 @@ mod tests {
             transfer_bytes: 65536,
             t_start: 0.01,
             t_end: 0.011,
+            tag: 0,
         }
     }
 

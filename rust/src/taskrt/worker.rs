@@ -121,6 +121,7 @@ pub(crate) fn push_ready(inner: &Arc<Inner>, id: super::task::TaskId) {
             ctx: spec.ctx,
             chosen_impl: None,
             est_cost_ns: 0,
+            tag: spec.tag,
         };
         // count the task into the context's queue depth *after* the
         // push: model-aware schedulers run their selection queries
@@ -293,5 +294,6 @@ fn execute_body(
         transfer_bytes,
         t_start,
         t_end: t_start + wall,
+        tag: task.tag,
     })
 }

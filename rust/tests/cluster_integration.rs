@@ -69,6 +69,7 @@ fn two_shard_cluster_serves_loadgen_end_to_end() {
         profile: None,
         verify: true,
         seed: 3,
+        ..LoadgenOptions::default()
     };
     let report = loadgen::run(&cluster.addr(), &lg).unwrap();
     assert_eq!(report.errors, 0);

@@ -126,6 +126,7 @@ fn loadgen_reports_throughput_and_percentiles() {
         profile: None,
         verify: true,
         seed: 7,
+        ..LoadgenOptions::default()
     };
     let report = loadgen::run(&addr, &lg).unwrap();
     assert_eq!(report.errors, 0);
@@ -157,6 +158,7 @@ fn pipelined_loadgen_matches_out_of_order_replies() {
         profile: None,
         verify: true,
         seed: 21,
+        ..LoadgenOptions::default()
     };
     let report = loadgen::run(&addr, &lg).unwrap();
     assert_eq!(report.errors, 0);

@@ -1,0 +1,305 @@
+//! Integration tests for v6 stream sessions: a heterogeneous server
+//! (CPU workers + an emulated device lane) accepts a chunk pipeline,
+//! selects every chunk's variant per-chunk, and answers overload with
+//! SLO-driven credit backpressure — shedding window granularity and
+//! shrinking the chunk window instead of dropping chunks. Also covers
+//! the autoscale coupling (sustained stream pressure migrates workers,
+//! the stream's SLO shows up in `stats`) and the protocol error paths.
+
+use std::collections::BTreeSet;
+use std::time::{Duration, Instant};
+
+use compar::autoscale::AutoscaleOptions;
+use compar::serve::{parse_contexts, Client, Response, ServeOptions, Server, StreamOpenReq};
+use compar::stream::{self, BASE_CREDIT};
+use compar::taskrt::SelectorKind;
+
+fn open_req(id: u64, app: &str, size: usize, stages: usize) -> StreamOpenReq {
+    StreamOpenReq {
+        id,
+        app: app.into(),
+        size,
+        stages,
+        window: 0,
+        slide: 0,
+        ctx: None,
+        slo_ms: None,
+    }
+}
+
+/// Client-side mirror of the credit window for stream 1: tracks the
+/// live grant, how low it sank, and every variant any chunk stage ran.
+struct Flow {
+    credit: u64,
+    min_credit: u64,
+    inflight: u64,
+    credit_signals: u64,
+    variants_seen: BTreeSet<String>,
+}
+
+impl Flow {
+    fn new(initial_credit: u64) -> Flow {
+        let credit = initial_credit.max(1);
+        Flow {
+            credit,
+            min_credit: credit,
+            inflight: 0,
+            credit_signals: 0,
+            variants_seen: BTreeSet::new(),
+        }
+    }
+
+    fn recv_one(&mut self, c: &mut Client) {
+        match c.recv_response().unwrap() {
+            Response::StreamAck(a) => {
+                assert_eq!(a.stream, 1);
+                assert!(
+                    a.variants.len() >= 2,
+                    "2 pipeline stages expected per chunk: {:?}",
+                    a.variants
+                );
+                assert_eq!(a.variants.len(), a.workers.len());
+                for v in a.variants {
+                    self.variants_seen.insert(v);
+                }
+                self.credit = a.credit.max(1);
+                self.min_credit = self.min_credit.min(self.credit);
+                self.inflight -= 1;
+            }
+            Response::StreamCredit(cr) => {
+                assert_eq!(cr.stream, 1);
+                self.credit = cr.credit.max(1);
+                self.min_credit = self.min_credit.min(self.credit);
+                self.credit_signals += 1;
+            }
+            Response::Error { error, .. } => panic!("stream error: {error}"),
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+}
+
+/// The tentpole contract end-to-end: chunks pushed faster than a tight
+/// SLO allows must see the credit window shrink (`stream_credit`
+/// backpressure), windows keep firing, no chunk is ever dropped, and
+/// the per-chunk variant record shows both the device lane and the
+/// host lanes executing — selection flipping chunk by chunk.
+#[test]
+fn overload_sheds_credit_not_chunks_and_flips_variants() {
+    let server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        ncpu: 2,
+        ncuda: 1,
+        selector: Some(SelectorKind::Contextual),
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    // the real cuda variant is a Pallas artifact; emulate the device
+    // lane natively so the heterogeneous story runs on a bare image
+    server.register_codelet(stream::emulated_device_sort(Duration::from_millis(5)));
+    let addr = server.local_addr().to_string();
+
+    let mut c = Client::connect(&addr).unwrap();
+    let opened = c
+        .stream_open(StreamOpenReq {
+            window: 4,
+            slide: 2,
+            slo_ms: Some(20.0),
+            ..open_req(1, "sort", 32_768, 2)
+        })
+        .unwrap();
+    assert_eq!(opened.credit, BASE_CREDIT);
+    assert_eq!((opened.window, opened.slide), (4, 2));
+    assert_eq!(opened.slo_ms, Some(20.0));
+
+    const CHUNKS: u64 = 60;
+    let mut flow = Flow::new(opened.credit);
+    for seq in 0..CHUNKS {
+        // respect the live credit grant, exactly like a real client
+        while flow.inflight >= flow.credit {
+            flow.recv_one(&mut c);
+        }
+        c.send_stream_chunk(1, seq, 0xbeef ^ seq).unwrap();
+        flow.inflight += 1;
+    }
+    while flow.inflight > 0 {
+        flow.recv_one(&mut c);
+    }
+
+    let closed = c.stream_close(1).unwrap();
+    assert_eq!(closed.chunks, CHUNKS, "every chunk acked");
+    assert_eq!(closed.dropped, 0, "backpressure must never drop chunks");
+    assert!(closed.windows >= 1, "windows kept firing: {closed:?}");
+    assert!(
+        flow.credit_signals >= 1 && closed.credit_signals >= 1,
+        "overload never engaged credit backpressure (client saw {}, server counted {})",
+        flow.credit_signals,
+        closed.credit_signals
+    );
+    assert!(
+        flow.min_credit < BASE_CREDIT,
+        "credit window never shrank below the base grant"
+    );
+    assert!(closed.p95_ms > 0.0);
+    assert!(
+        flow.variants_seen.contains("cuda"),
+        "device lane never executed a chunk stage: {:?}",
+        flow.variants_seen
+    );
+    assert!(
+        flow.variants_seen.contains("omp") || flow.variants_seen.contains("seq"),
+        "host lanes never executed a chunk stage: {:?}",
+        flow.variants_seen
+    );
+
+    c.quit().unwrap();
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests_err, 0, "no chunk may error: {stats:?}");
+    assert_eq!(stats.streams, 0, "stream gauge must return to zero");
+}
+
+/// Autoscale coupling: a stream pinned to a 1-worker context with a
+/// loose SLO (so credit never throttles the queue away) builds
+/// sustained pressure; the control loop must migrate pool workers in —
+/// observable through `autoscale_status` — and the stream's declared
+/// SLO must surface as the default context's effective `stats.slo_ms`
+/// while the stream lives.
+#[test]
+fn sustained_stream_pressure_migrates_workers_and_surfaces_slo() {
+    let server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        contexts: parse_contexts("hot:1,pool:3").unwrap(),
+        ncpu: 4,
+        ncuda: 0,
+        autoscale: Some(AutoscaleOptions {
+            period: Duration::from_millis(10),
+            cooldown: Duration::from_millis(40),
+            sustain: 1,
+            ..AutoscaleOptions::default()
+        }),
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut c = Client::connect(&addr).unwrap();
+    let mut mon = Client::connect(&addr).unwrap();
+    let opened = c
+        .stream_open(StreamOpenReq {
+            ctx: Some("hot".into()),
+            slo_ms: Some(200.0),
+            ..open_req(7, "sort", 65_536, 2)
+        })
+        .unwrap();
+    assert_eq!(opened.slo_ms, Some(200.0));
+
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut credit = opened.credit.max(1);
+    let mut inflight: u64 = 0;
+    let mut seq: u64 = 0;
+    let mut migrated = false;
+    while Instant::now() < deadline && !migrated {
+        for _ in 0..16 {
+            while inflight >= credit {
+                match c.recv_response().unwrap() {
+                    Response::StreamAck(a) => {
+                        credit = a.credit.max(1);
+                        inflight -= 1;
+                    }
+                    Response::StreamCredit(cr) => credit = cr.credit.max(1),
+                    Response::Error { error, .. } => panic!("stream error: {error}"),
+                    other => panic!("unexpected response {other:?}"),
+                }
+            }
+            c.send_stream_chunk(7, seq, 0x5eed ^ seq).unwrap();
+            inflight += 1;
+            seq += 1;
+        }
+        let st = mon.autoscale_status().unwrap();
+        assert!(st.enabled);
+        if st.moves >= 1 && st.moved_workers >= 1 {
+            migrated = true;
+        }
+    }
+    assert!(
+        migrated,
+        "autoscaler never migrated a worker into the pressured stream context \
+         ({seq} chunks pushed)"
+    );
+
+    // the stream-scoped declaration tightened the default ("hot")
+    // context's target — visible server-wide while the stream is open
+    let stats = mon.stats().unwrap();
+    assert!(
+        (stats.slo_ms - 200.0).abs() < 1e-6,
+        "stats.slo_ms = {} (expected the stream's 200 ms declaration)",
+        stats.slo_ms
+    );
+    assert!(stats.streams >= 1, "open-stream gauge: {stats:?}");
+
+    let closed = c.stream_close(7).unwrap();
+    assert_eq!(closed.chunks, seq, "every submitted chunk acked");
+    assert_eq!(closed.dropped, 0);
+    c.quit().unwrap();
+    mon.quit().unwrap();
+    server.shutdown().unwrap();
+}
+
+/// Protocol error paths: chunks for unknown streams, duplicate stream
+/// ids, and non-idempotent apps in multi-stage pipelines are rejected
+/// with telling errors — and a healthy stream on the same session keeps
+/// working through all of it.
+#[test]
+fn stream_protocol_rejects_bad_opens_and_orphan_chunks() {
+    let server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        ncpu: 2,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+
+    // chunk for a stream nobody opened
+    c.send_stream_chunk(99, 0, 1).unwrap();
+    match c.recv_response().unwrap() {
+        Response::Error { error, .. } => {
+            assert!(error.contains("unknown stream 99"), "{error}")
+        }
+        other => panic!("expected an error, got {other:?}"),
+    }
+
+    let opened = c.stream_open(open_req(1, "sort", 4096, 1)).unwrap();
+    assert_eq!(opened.stream, 1);
+    assert_eq!(opened.window, 0, "no windowed operator declared");
+
+    // same id again on the same session
+    let err = c.stream_open(open_req(1, "sort", 4096, 1)).unwrap_err();
+    assert!(format!("{err:#}").contains("already open"), "{err:#}");
+
+    // hotspot's stencil is not idempotent: fine single-stage, but a
+    // pipeline would re-apply it to its own output
+    let err = c.stream_open(open_req(2, "hotspot", 4096, 2)).unwrap_err();
+    assert!(format!("{err:#}").contains("not idempotent"), "{err:#}");
+
+    // zero-sized chunks and unknown apps are rejected up front
+    let err = c.stream_open(open_req(3, "sort", 0, 1)).unwrap_err();
+    assert!(format!("{err:#}").contains("size"), "{err:#}");
+    let err = c.stream_open(open_req(4, "nope", 64, 1)).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown app"), "{err:#}");
+
+    // the healthy stream still works after every rejection
+    for seq in 0..3u64 {
+        c.send_stream_chunk(1, seq, 7 + seq).unwrap();
+        match c.recv_response().unwrap() {
+            Response::StreamAck(a) => {
+                assert_eq!((a.stream, a.seq), (1, seq));
+                assert_eq!(a.variants.len(), 1, "single-stage pipeline");
+            }
+            other => panic!("expected an ack, got {other:?}"),
+        }
+    }
+    let closed = c.stream_close(1).unwrap();
+    assert_eq!((closed.chunks, closed.dropped, closed.windows), (3, 0, 0));
+    c.quit().unwrap();
+    server.shutdown().unwrap();
+}
