@@ -22,10 +22,25 @@ echo "== tier-1 verify =="
 cargo build --release
 cargo test -q
 
-echo "== serve smoke (loadgen, in-process, pipelined) =="
+echo "== serve smoke (loadgen, in-process, pipelined; threads/ndjson lane) =="
 cargo run --release --quiet -- loadgen \
   --clients 4 --requests 10 --app matmul --size 32 --pipeline 2 \
-  --contexts alpha:2,beta:2:epsilon --ctxs alpha,beta
+  --contexts alpha:2,beta:2:epsilon --ctxs alpha,beta \
+  --transport threads --framing ndjson
+
+echo "== serve smoke (epoll/binary lane: same load, multiplexed transport) =="
+cargo run --release --quiet -- loadgen \
+  --clients 4 --requests 10 --app matmul --size 32 --pipeline 2 \
+  --contexts alpha:2,beta:2:epsilon --ctxs alpha,beta \
+  --transport epoll --framing binary
+
+echo "== many-connection soak (epoll: 192 concurrent connections) =="
+# the fan-out driver exits non-zero on any connect failure or request
+# error; 192 concurrent sessions on 2 workers is the regime where
+# thread-per-connection thrashes and the readiness loop must not
+cargo run --release --quiet -- loadgen \
+  --connections 192 --requests 2 --app matmul --size 24 --ncpu 2 \
+  --transport epoll --framing binary
 
 echo "== selection-policy bench (smoke, incl. contended scenario) =="
 # --smoke also runs the contended scenario and FAILS the gate if the
@@ -44,6 +59,13 @@ echo "== stream smoke (v6 sessions: calibrated SLO + overload backpressure) =="
 # window granularity, shrink the chunk window) before dropping anything
 # — `bench stream --smoke` FAILS on either breach
 cargo run --release --quiet -- bench stream --smoke
+
+echo "== stream smoke (epoll/binary lane: loadgen stream profile) =="
+# the same credit-gated stream driver over the multiplexed transport
+# and binary framing: acks, credit signals, and close must all arrive
+cargo run --release --quiet -- loadgen \
+  --profile stream:200:16:1 --clients 2 --requests 12 --app sort \
+  --transport epoll --framing binary --ncpu 2
 
 echo "== autoscale smoke (context elasticity + shard churn) =="
 # in-process: a loadgen burst on a small context must trigger a worker

@@ -10,7 +10,7 @@ use anyhow::{Context, Result};
 use super::report::Table;
 use crate::serve::loadgen::{self, LoadReport, LoadgenOptions};
 use crate::serve::protocol::StatsResp;
-use crate::serve::{ServeOptions, Server};
+use crate::serve::{ServeOptions, Server, TransportKind};
 use crate::util::json::{self, Json};
 use crate::util::stats::fmt_time;
 
@@ -19,7 +19,11 @@ use crate::util::stats::fmt_time;
 /// changes; the `compar bench validate` subcommand (and ci.sh) checks
 /// it. v3: loadgen records grew stream counters (windows,
 /// shed_windows, stream_credits) and the "compar-stream" kind landed.
-pub const BENCH_SCHEMA: u64 = 3;
+/// v4: loadgen records carry the transport lane (config.transport,
+/// config.framing) plus connection fan-out stats (load.connections,
+/// load.connect_failures, load.connect_p50_s/p99_s), so threaded and
+/// epoll measurements are never compared as if they were one lane.
+pub const BENCH_SCHEMA: u64 = 4;
 
 /// Write a bench record atomically (temp file + rename), so a reader —
 /// or a crashed run — never observes a half-written record and the
@@ -80,6 +84,7 @@ pub fn to_json(
     stats: &StatsResp,
     load: &LoadgenOptions,
     contexts: &str,
+    transport: TransportKind,
 ) -> String {
     let mut m = BTreeMap::new();
     m.insert("bench".to_string(), Json::Str("compar-loadgen".into()));
@@ -103,6 +108,11 @@ pub fn to_json(
         ),
     );
     knobs.insert("contexts".into(), Json::Str(contexts.to_string()));
+    knobs.insert("transport".into(), Json::Str(transport.name().into()));
+    knobs.insert("framing".into(), Json::Str(load.framing.name().into()));
+    if load.connections > 0 {
+        knobs.insert("connections".into(), Json::Num(load.connections as f64));
+    }
     m.insert("config".into(), Json::Obj(knobs));
     m.insert("load".into(), loadgen::to_json(report));
     let mut srv = BTreeMap::new();

@@ -1,6 +1,12 @@
-//! The cluster router (`compar route`): speaks the serve NDJSON
-//! protocol to clients and fans submits out over N backend
-//! `compar serve` shards.
+//! The cluster router (`compar route`): speaks the serve protocol to
+//! clients and fans submits out over N backend `compar serve` shards.
+//!
+//! v7 framing: each client session negotiates its wire framing (ndjson
+//! or binary) in `hello`, and the router forwards that choice to the
+//! backend connections it opens for the session — a binary client gets
+//! binary hops end to end. Admin traffic (health probes, gossip,
+//! shutdown fan-out) stays on default-framing [`Client`] connections:
+//! it is low-rate and worth keeping trivially debuggable.
 //!
 //! ```text
 //! client ──TCP──▶ router session ──placement──▶ shard A (compar serve)
@@ -29,7 +35,7 @@
 //!   (each drains gracefully), then the router itself drains.
 
 use std::collections::{BTreeMap, HashMap};
-use std::io::{BufRead, BufReader, Write};
+use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
@@ -46,9 +52,11 @@ use crate::serve::protocol::{
     self, AutoscaleResp, Request, Response, ShardDesc, StatsResp, StreamOpenReq, SubmitReq,
     PROTOCOL_VERSION,
 };
+use crate::serve::transport::codec::{encode_frame, FrameDecoder, Framing};
 use crate::serve::Client;
 use crate::taskrt::perfmodel::VariantModel;
 use crate::taskrt::{SelectorKind, VALID_SELECTORS};
+use crate::util::json::Json;
 
 // ---------------------------------------------------------- configuration
 
@@ -698,14 +706,36 @@ fn shard_stats(addr: &str) -> Result<StatsResp> {
 
 // ------------------------------------------------------------- sessions
 
-type ReplyLane = Arc<Mutex<TcpStream>>;
+/// Client-side write deadline: a client that stops reading must not
+/// wedge the session (or its backend readers) inside a blocking send.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
-fn send_line(lane: &ReplyLane, resp: &Response) {
-    let mut line = protocol::encode_response(resp);
-    line.push('\n');
-    let mut w = lane.lock().unwrap();
-    let _ = w.write_all(line.as_bytes());
-    let _ = w.flush();
+/// The session's reply channel back to the client, shared between the
+/// session thread and its backend readers; carries the wire framing the
+/// session negotiated in hello.
+struct ReplySink {
+    stream: Mutex<TcpStream>,
+    framing: Mutex<Framing>,
+}
+
+type ReplyLane = Arc<ReplySink>;
+
+/// Send one response; returns false when the client is gone. A failed
+/// reply write closes the socket loudly so the session's reader side
+/// tears everything down instead of silently forwarding into the void.
+fn send_line(lane: &ReplyLane, resp: &Response) -> bool {
+    let f = *lane.framing.lock().unwrap();
+    let mut buf = Vec::with_capacity(128);
+    encode_frame(f, &protocol::response_value(resp), &mut buf);
+    let mut w = lane.stream.lock().unwrap();
+    match w.write_all(&buf).and_then(|_| w.flush()) {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!("route: closing session, reply write failed: {e}");
+            let _ = w.shutdown(Shutdown::Both);
+            false
+        }
+    }
 }
 
 /// A submit forwarded to a shard whose reply has not come back yet. Kept
@@ -719,6 +749,19 @@ struct Pending {
 /// One live backend connection of a session.
 struct Backend {
     stream: Mutex<TcpStream>,
+    /// Wire framing negotiated with the shard for this connection (the
+    /// session's framing, if the shard confirmed it).
+    framing: Framing,
+}
+
+impl Backend {
+    /// Encode `req` in this connection's framing and write it out.
+    fn write_request(&self, req: &Request) -> std::io::Result<()> {
+        let mut buf = Vec::with_capacity(128);
+        encode_frame(self.framing, &protocol::request_value(req), &mut buf);
+        let mut s = self.stream.lock().unwrap();
+        s.write_all(&buf).and_then(|_| s.flush())
+    }
 }
 
 /// Per-client-session state shared between the session thread and its
@@ -746,8 +789,12 @@ struct Session {
 fn session_loop(shared: Arc<RouterShared>, stream: TcpStream, sid: u64) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let reply: ReplyLane = match stream.try_clone() {
-        Ok(w) => Arc::new(Mutex::new(w)),
+        Ok(w) => Arc::new(ReplySink {
+            stream: Mutex::new(w),
+            framing: Mutex::new(Framing::Ndjson),
+        }),
         Err(_) => return,
     };
     let sess = Arc::new(Session {
@@ -762,18 +809,38 @@ fn session_loop(shared: Arc<RouterShared>, stream: TcpStream, sid: u64) {
         readers: Mutex::new(Vec::new()),
         closing: AtomicBool::new(false),
     });
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => break,
-            Ok(_) => {
-                let keep = handle_request(&sess, line.trim());
-                line.clear();
-                if !keep || shared.draining.load(Ordering::SeqCst) {
-                    break;
+    let mut stream = stream;
+    let mut dec = FrameDecoder::new(Framing::Ndjson);
+    'session: loop {
+        loop {
+            match dec.next() {
+                Ok(Some(v)) => {
+                    let keep = handle_frame(&sess, &v);
+                    // the hello arm may have renegotiated the framing
+                    let f = *sess.reply.framing.lock().unwrap();
+                    if f != dec.framing() {
+                        dec.set_framing(f);
+                    }
+                    if !keep || shared.draining.load(Ordering::SeqCst) {
+                        break 'session;
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    send_line(
+                        &sess.reply,
+                        &Response::Error {
+                            id: None,
+                            error: format!("{e:#}"),
+                        },
+                    );
+                    break 'session;
                 }
             }
+        }
+        match dec.fill_from(&mut stream) {
+            Ok(0) => break,
+            Ok(_) => {}
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
@@ -798,10 +865,8 @@ fn close_session(sess: &Arc<Session>) {
         .map(|(_, b)| b)
         .collect();
     for b in backends {
+        let _ = b.write_request(&Request::Quit);
         let s = b.stream.lock().unwrap();
-        let mut line = protocol::encode_request(&Request::Quit);
-        line.push('\n');
-        let _ = (&*s).write_all(line.as_bytes());
         let _ = s.shutdown(Shutdown::Both);
     }
     let readers: Vec<JoinHandle<()>> = std::mem::take(&mut *sess.readers.lock().unwrap());
@@ -810,12 +875,10 @@ fn close_session(sess: &Arc<Session>) {
     }
 }
 
-/// Handle one client request line; returns false to close the session.
-fn handle_request(sess: &Arc<Session>, line: &str) -> bool {
-    if line.is_empty() {
-        return true;
-    }
-    let req = match protocol::decode_request(line) {
+/// Decode one framed client request and dispatch it; returns false to
+/// close the session.
+fn handle_frame(sess: &Arc<Session>, value: &Json) -> bool {
+    let req = match protocol::request_from_value(value) {
         Ok(r) => r,
         Err(e) => {
             send_line(
@@ -834,7 +897,24 @@ fn handle_request(sess: &Arc<Session>, line: &str) -> bool {
             client: _,
             policy,
             slo_ms,
+            framing,
         } => {
+            // v7: negotiate the session's wire framing; backend
+            // connections opened for this session forward the choice
+            let accepted = match framing.as_deref().map(Framing::parse) {
+                None => None,
+                Some(Ok(f)) => Some(f),
+                Some(Err(e)) => {
+                    send_line(
+                        &sess.reply,
+                        &Response::Error {
+                            id: None,
+                            error: format!("{e:#}"),
+                        },
+                    );
+                    return true;
+                }
+            };
             if let Some(p) = &policy {
                 if SelectorKind::parse(p).is_none() {
                     send_line(
@@ -861,8 +941,13 @@ fn handle_request(sess: &Arc<Session>, line: &str) -> bool {
                     // apply the declared value when the hello is
                     // forwarded on each backend connection
                     slo_ms: None,
+                    framing: accepted.map(|f| f.name().to_string()),
                 },
             );
+            // switch after the (always pre-switch-framing) hello reply
+            if let Some(f) = accepted {
+                *sess.reply.framing.lock().unwrap() = f;
+            }
             true
         }
         Request::Submit(req) => {
@@ -993,21 +1078,23 @@ fn handle_request(sess: &Arc<Session>, line: &str) -> bool {
                         },
                     );
                 }
-                None => send_line(
-                    &sess.reply,
-                    &Response::Error {
-                        id: None,
-                        error: format!(
-                            "unknown shard '{shard}' (have: {})",
-                            router
-                                .shard_list()
-                                .iter()
-                                .map(|s| s.addr.clone())
-                                .collect::<Vec<_>>()
-                                .join(", ")
-                        ),
-                    },
-                ),
+                None => {
+                    send_line(
+                        &sess.reply,
+                        &Response::Error {
+                            id: None,
+                            error: format!(
+                                "unknown shard '{shard}' (have: {})",
+                                router
+                                    .shard_list()
+                                    .iter()
+                                    .map(|s| s.addr.clone())
+                                    .collect::<Vec<_>>()
+                                    .join(", ")
+                            ),
+                        },
+                    );
+                }
             }
             true
         }
@@ -1102,12 +1189,7 @@ fn route_submit(sess: &Arc<Session>, req: SubmitReq, exclude: &mut Vec<usize>) -
                 shard: si,
             },
         );
-        let mut line = protocol::encode_request(&Request::Submit(req.clone()));
-        line.push('\n');
-        let wrote = {
-            let mut s = backend.stream.lock().unwrap();
-            s.write_all(line.as_bytes()).and_then(|_| s.flush())
-        };
+        let wrote = backend.write_request(&Request::Submit(req.clone()));
         if wrote.is_err() {
             // reclaim the pending entry before retrying: if it is
             // already gone, the backend reader observed this connection
@@ -1202,12 +1284,7 @@ fn route_stream_open(sess: &Arc<Session>, req: StreamOpenReq) -> Result<()> {
         // rejection) races back through the backend reader, which
         // routes stream events by pin
         sess.streams.lock().unwrap().insert(req.id, si);
-        let mut line = protocol::encode_request(&Request::StreamOpen(req.clone()));
-        line.push('\n');
-        let wrote = {
-            let mut s = backend.stream.lock().unwrap();
-            s.write_all(line.as_bytes()).and_then(|_| s.flush())
-        };
+        let wrote = backend.write_request(&Request::StreamOpen(req.clone()));
         if wrote.is_err() {
             sess.streams.lock().unwrap().remove(&req.id);
             shards[si].set_healthy(false);
@@ -1235,11 +1312,8 @@ fn forward_stream(sess: &Arc<Session>, stream: u64, req: &Request) -> Result<()>
         .get(&si)
         .cloned()
         .ok_or_else(|| anyhow::anyhow!("shard{si} connection is gone"))?;
-    let mut line = protocol::encode_request(req);
-    line.push('\n');
-    let mut s = backend.stream.lock().unwrap();
-    s.write_all(line.as_bytes())
-        .and_then(|_| s.flush())
+    backend
+        .write_request(req)
         .with_context(|| format!("writing to shard{si}"))?;
     Ok(())
 }
@@ -1273,40 +1347,60 @@ fn ensure_backend(sess: &Arc<Session>, si: usize) -> Result<Arc<Backend>> {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(ADMIN_TIMEOUT));
     let _ = stream.set_write_timeout(Some(ADMIN_TIMEOUT));
-    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut read_side = stream.try_clone()?;
+    // forward the session's negotiated framing: a binary client gets a
+    // binary hop to the shard too (the shard's echo confirms it)
+    let want = *sess.reply.framing.lock().unwrap();
     let hello = Request::Hello {
         client: format!("compar-route-{}", sess.sid),
         policy: sess.policy.lock().unwrap().clone(),
         slo_ms: *sess.slo_ms.lock().unwrap(),
+        framing: match want {
+            Framing::Ndjson => None,
+            f => Some(f.name().to_string()),
+        },
     };
-    let mut line = protocol::encode_request(&hello);
-    line.push('\n');
-    (&stream).write_all(line.as_bytes())?;
+    let mut buf = Vec::with_capacity(128);
+    encode_frame(Framing::Ndjson, &protocol::request_value(&hello), &mut buf);
+    (&stream).write_all(&buf)?;
     (&stream).flush()?;
-    let mut resp_line = String::new();
-    if reader.read_line(&mut resp_line)? == 0 {
-        bail!("shard {addr} closed during handshake");
-    }
-    match protocol::decode_response(&resp_line)? {
-        Response::Hello { version, .. } => {
+    let mut dec = FrameDecoder::new(Framing::Ndjson);
+    let hello_value = loop {
+        if let Some(v) = dec.next()? {
+            break v;
+        }
+        if dec.fill_from(&mut read_side)? == 0 {
+            bail!("shard {addr} closed during handshake");
+        }
+    };
+    let framing = match protocol::response_from_value(&hello_value)? {
+        Response::Hello {
+            version, framing, ..
+        } => {
             if version != PROTOCOL_VERSION {
                 bail!("shard {addr} speaks protocol v{version}, router v{PROTOCOL_VERSION}");
+            }
+            match framing.as_deref() {
+                Some(f) => Framing::parse(f)?,
+                None => Framing::Ndjson,
             }
         }
         Response::Error { error, .. } => bail!("shard {addr} rejected hello: {error}"),
         other => bail!("shard {addr}: expected hello, got {other:?}"),
-    }
+    };
+    dec.set_framing(framing);
     // short read timeout so the reader thread can observe session close
     let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
     let backend = Arc::new(Backend {
         stream: Mutex::new(stream),
+        framing,
     });
     backends.insert(si, backend.clone());
     drop(backends);
     let sess2 = sess.clone();
     let handle = std::thread::Builder::new()
         .name(format!("route-be-{}-{}", sess.sid, si))
-        .spawn(move || backend_reader(sess2, si, reader))
+        .spawn(move || backend_reader(sess2, si, read_side, dec))
         .expect("spawning backend reader");
     sess.readers.lock().unwrap().push(handle);
     Ok(backend)
@@ -1315,15 +1409,18 @@ fn ensure_backend(sess: &Arc<Session>, si: usize) -> Result<Arc<Backend>> {
 /// Forward one shard's replies to the client, tagging results with the
 /// shard index; when the connection dies with replies still pending,
 /// replay those submits on another shard.
-fn backend_reader(sess: Arc<Session>, shard: usize, mut reader: BufReader<TcpStream>) {
-    let mut line = String::new();
-    loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => break,
-            Ok(_) => {
-                forward_backend_line(&sess, shard, line.trim());
-                line.clear();
+fn backend_reader(sess: Arc<Session>, shard: usize, mut stream: TcpStream, mut dec: FrameDecoder) {
+    'read: loop {
+        loop {
+            match dec.next() {
+                Ok(Some(v)) => forward_backend_value(&sess, shard, &v),
+                Ok(None) => break,
+                Err(_) => break 'read,
             }
+        }
+        match dec.fill_from(&mut stream) {
+            Ok(0) => break,
+            Ok(_) => {}
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
@@ -1397,11 +1494,8 @@ fn backend_reader(sess: Arc<Session>, shard: usize, mut reader: BufReader<TcpStr
     }
 }
 
-fn forward_backend_line(sess: &Arc<Session>, shard: usize, line: &str) {
-    if line.is_empty() {
-        return;
-    }
-    let Ok(resp) = protocol::decode_response(line) else {
+fn forward_backend_value(sess: &Arc<Session>, shard: usize, value: &Json) {
+    let Ok(resp) = protocol::response_from_value(value) else {
         return;
     };
     match resp {
@@ -1422,12 +1516,16 @@ fn forward_backend_line(sess: &Arc<Session>, shard: usize, line: &str) {
         }
         // v6 stream events ride the pinned stream's backend connection;
         // forward them, tagging acks with the shard like submit results
-        Response::StreamOpened(o) => send_line(&sess.reply, &Response::StreamOpened(o)),
+        Response::StreamOpened(o) => {
+            send_line(&sess.reply, &Response::StreamOpened(o));
+        }
         Response::StreamAck(mut a) => {
             a.ctx = format!("shard{shard}/{}", a.ctx);
             send_line(&sess.reply, &Response::StreamAck(a));
         }
-        Response::StreamCredit(c) => send_line(&sess.reply, &Response::StreamCredit(c)),
+        Response::StreamCredit(c) => {
+            send_line(&sess.reply, &Response::StreamCredit(c));
+        }
         Response::StreamClosed(c) => {
             sess.streams.lock().unwrap().remove(&c.stream);
             send_line(&sess.reply, &Response::StreamClosed(c));

@@ -127,7 +127,7 @@ fn print_usage() {
          \x20 compar bench validate <FILE>\n\
          \x20 compar calibrate --app APP [--sizes a,b,c]\n\
          \x20 compar serve [--addr HOST:PORT] [--contexts NAME:N[:POLICY],...] [--sched S] [--selector P] [--cap N]\n\
-         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--batch-window-us U] [--max-batch B] [--ncpu N] [--ncuda N]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--batch-window-us U] [--max-batch B] [--ncpu N] [--ncuda N] [--transport epoll|threads]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--autoscale [--scale-min N|name=N,..] [--scale-max N|name=N,..] [--slo-ms F]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--cooldown-ms T] [--scale-period-ms T] [--scale-high F] [--scale-low F]]\n\
          \x20 compar route --shards HOST:PORT,... [--listen HOST:PORT] [--placement PL]\n\
@@ -139,6 +139,7 @@ fn print_usage() {
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--shards N [--placement PL] [--no-gossip]] [--out FILE] [--no-verify]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--profile burst:<high_rps>:<low_rps>:<period_ms>]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--profile stream:<rate>:<chunk_kb>:<stages> [--slo-ms F] [--window W] [--slide S]]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--framing ndjson|binary] [--connections N] [--transport epoll|threads]\n\
          \x20 compar list\n\
          \n\
          Selection policies P: greedy | calibrating | epsilon[:E] | epsilon-decayed[:E] | contextual | forced:VARIANT\n\
@@ -544,6 +545,23 @@ fn validate_bench_record(file: &str) -> Result<()> {
                     if v.get("server").and_then(Json::as_obj).is_none() {
                         bail!("{file}: missing 'server' counters");
                     }
+                    // v4: every record names its lane so threaded/ndjson
+                    // and epoll/binary measurements are never conflated
+                    for k in ["transport", "framing"] {
+                        let lane = v
+                            .get("config")
+                            .and_then(|c| c.get(k))
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("{file}: missing config.{k}"))?;
+                        let known: &[&str] = if k == "transport" {
+                            &["threads", "epoll"]
+                        } else {
+                            &["ndjson", "binary"]
+                        };
+                        if !known.contains(&lane) {
+                            bail!("{file}: unknown config.{k} '{lane}'");
+                        }
+                    }
                 }
                 "compar-selection" => {
                     let rows = v
@@ -701,6 +719,9 @@ fn serve_options_from(opts: &HashMap<String, String>) -> Result<compar::serve::S
     }
     if let Some(v) = opts.get("max-batch") {
         so.max_batch = v.parse().context("--max-batch")?;
+    }
+    if let Some(v) = opts.get("transport") {
+        so.transport = compar::serve::TransportKind::parse(v).context("--transport")?;
     }
     so.autoscale = autoscale_options_from(opts)?;
     Ok(so)
@@ -867,6 +888,18 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
     if opts.contains_key("no-verify") {
         lg.verify = false;
     }
+    if let Some(v) = opts.get("framing") {
+        lg.framing = compar::serve::Framing::parse(v).context("--framing")?;
+    }
+    if let Some(v) = opts.get("connections") {
+        lg.connections = v.parse().context("--connections")?;
+    }
+    // the transport lane drives the in-process server (via
+    // serve_options_from) and labels the bench record either way
+    let transport = match opts.get("transport") {
+        Some(v) => compar::serve::TransportKind::parse(v).context("--transport")?,
+        None => compar::serve::TransportKind::default(),
+    };
 
     // --shutdown: just ask a running server to drain and exit
     if opts.contains_key("shutdown") {
@@ -925,8 +958,13 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         bail!("{} request(s) failed", report.errors);
     }
     if let Some(out) = opts.get("out") {
-        let json =
-            compar::bench_harness::serve_bench::to_json(&report, &stats, &lg, &contexts_desc);
+        let json = compar::bench_harness::serve_bench::to_json(
+            &report,
+            &stats,
+            &lg,
+            &contexts_desc,
+            transport,
+        );
         // atomic replace: the pending-toolchain placeholder (or a prior
         // measurement) is swapped in one rename
         compar::bench_harness::serve_bench::write_atomic(out, &(json + "\n"))?;

@@ -4,9 +4,16 @@
 //! protocol's correlation ids so callers (the load generator's
 //! `--pipeline N` mode) can keep several requests in flight and match
 //! out-of-order completions by id.
+//!
+//! v7: [`ClientConfig`] carries the session's wire framing (requested
+//! in hello, confirmed by the server's echo) and the socket deadlines.
+//! Every connect sets a *write* deadline — symmetric with the read
+//! side, so a server that stops reading can never wedge a client (or a
+//! router backend) inside a blocking send.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::Write;
 use std::net::TcpStream;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -14,11 +21,56 @@ use super::protocol::{
     self, AutoscaleResp, CtxDesc, Request, Response, ResultResp, ShardDesc, StatsResp,
     StreamClosedResp, StreamOpenReq, StreamOpenedResp, SubmitReq, PROTOCOL_VERSION,
 };
+use super::transport::codec::{encode_frame, FrameDecoder, Framing};
 use crate::util::json::Json;
 
+/// Default write deadline for ordinary clients: reads may legitimately
+/// block for as long as a submit takes to execute, but a write only
+/// blocks when the peer has stopped draining its socket.
+pub const DEFAULT_WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Connection configuration for [`Client::connect_cfg`]; the named
+/// constructors below are shorthands over it.
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// Session selection policy ("greedy" | "calibrating" |
+    /// "epsilon[:E]" | "epsilon-decayed[:E]" | "forced:VARIANT").
+    pub policy: Option<String>,
+    /// v5: the session's declared latency target.
+    pub slo_ms: Option<f64>,
+    /// v7: wire framing to request in hello. The server echoes what it
+    /// accepted; the session switches only on that confirmation.
+    pub framing: Framing,
+    /// Connect deadline (None = the OS default).
+    pub connect_timeout: Option<Duration>,
+    /// Read deadline; None = block for as long as a request takes
+    /// (normal traffic). Admin/probe traffic sets one.
+    pub read_timeout: Option<Duration>,
+    /// Write deadline; always on by default (see
+    /// [`DEFAULT_WRITE_TIMEOUT`]).
+    pub write_timeout: Option<Duration>,
+}
+
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig {
+            policy: None,
+            slo_ms: None,
+            framing: Framing::Ndjson,
+            connect_timeout: None,
+            read_timeout: None,
+            write_timeout: Some(DEFAULT_WRITE_TIMEOUT),
+        }
+    }
+}
+
 pub struct Client {
-    reader: BufReader<TcpStream>,
+    stream: TcpStream,
     writer: TcpStream,
+    dec: FrameDecoder,
+    /// Negotiated wire framing (requested framing, if the server
+    /// confirmed it in its hello echo).
+    framing: Framing,
     pub session: u64,
     /// v5: the effective latency SLO the server reported in its hello
     /// (None when autoscaling is off or no SLO is configured).
@@ -28,66 +80,110 @@ pub struct Client {
 impl Client {
     /// Connect and perform the hello handshake.
     pub fn connect(addr: &str) -> Result<Client> {
-        Client::connect_with_policy(addr, None)
+        Client::connect_cfg(addr, &ClientConfig::default())
     }
 
     /// Connect, optionally asking the server to run every submit on this
     /// session under `policy` ("greedy" | "calibrating" | "epsilon[:E]"
     /// | "epsilon-decayed[:E]" | "forced:VARIANT").
     pub fn connect_with_policy(addr: &str, policy: Option<&str>) -> Result<Client> {
-        let stream = TcpStream::connect(addr)?;
-        Client::handshake(stream, policy, None)
+        Client::connect_cfg(
+            addr,
+            &ClientConfig {
+                policy: policy.map(str::to_string),
+                ..ClientConfig::default()
+            },
+        )
     }
 
     /// v5: connect, declaring this session's latency target — the
     /// autoscaler treats the tightest declared target per context as
     /// that context's SLO.
     pub fn connect_with_slo(addr: &str, policy: Option<&str>, slo_ms: f64) -> Result<Client> {
-        let stream = TcpStream::connect(addr)?;
-        Client::handshake(stream, policy, Some(slo_ms))
+        Client::connect_cfg(
+            addr,
+            &ClientConfig {
+                policy: policy.map(str::to_string),
+                slo_ms: Some(slo_ms),
+                ..ClientConfig::default()
+            },
+        )
     }
 
     /// Connect with connect/read/write deadlines — for health probes,
     /// gossip and other periodic admin traffic, where one hung peer must
     /// not block the caller forever (a timed-out probe simply counts as
     /// the peer being down).
-    pub fn connect_with_deadline(addr: &str, timeout: std::time::Duration) -> Result<Client> {
-        use std::net::ToSocketAddrs;
-        let sa = addr
-            .to_socket_addrs()?
-            .next()
-            .ok_or_else(|| anyhow!("cannot resolve '{addr}'"))?;
-        let stream = TcpStream::connect_timeout(&sa, timeout)?;
-        let _ = stream.set_read_timeout(Some(timeout));
-        let _ = stream.set_write_timeout(Some(timeout));
-        Client::handshake(stream, None, None)
+    pub fn connect_with_deadline(addr: &str, timeout: Duration) -> Result<Client> {
+        Client::connect_cfg(
+            addr,
+            &ClientConfig {
+                connect_timeout: Some(timeout),
+                read_timeout: Some(timeout),
+                write_timeout: Some(timeout),
+                ..ClientConfig::default()
+            },
+        )
     }
 
-    fn handshake(stream: TcpStream, policy: Option<&str>, slo_ms: Option<f64>) -> Result<Client> {
+    /// Connect with the full configuration (framing, deadlines, policy).
+    pub fn connect_cfg(addr: &str, cfg: &ClientConfig) -> Result<Client> {
+        let stream = match cfg.connect_timeout {
+            Some(t) => {
+                use std::net::ToSocketAddrs;
+                let sa = addr
+                    .to_socket_addrs()?
+                    .next()
+                    .ok_or_else(|| anyhow!("cannot resolve '{addr}'"))?;
+                TcpStream::connect_timeout(&sa, t)?
+            }
+            None => TcpStream::connect(addr)?,
+        };
+        let _ = stream.set_read_timeout(cfg.read_timeout);
+        let _ = stream.set_write_timeout(cfg.write_timeout);
+        Client::handshake(stream, cfg)
+    }
+
+    fn handshake(stream: TcpStream, cfg: &ClientConfig) -> Result<Client> {
         let _ = stream.set_nodelay(true);
         let writer = stream.try_clone()?;
         let mut c = Client {
-            reader: BufReader::new(stream),
+            stream,
             writer,
+            dec: FrameDecoder::new(Framing::Ndjson),
+            // the hello exchange itself is always ndjson
+            framing: Framing::Ndjson,
             session: 0,
             slo_ms: None,
         };
         c.send(&Request::Hello {
             client: format!("compar-client-{}", std::process::id()),
-            policy: policy.map(str::to_string),
-            slo_ms,
+            policy: cfg.policy.clone(),
+            slo_ms: cfg.slo_ms,
+            framing: match cfg.framing {
+                Framing::Ndjson => None,
+                f => Some(f.name().to_string()),
+            },
         })?;
         match c.recv()? {
             Response::Hello {
                 session,
                 version,
                 slo_ms,
+                framing,
             } => {
                 if version != PROTOCOL_VERSION {
                     bail!("server speaks protocol v{version}, client v{PROTOCOL_VERSION}");
                 }
                 c.session = session;
                 c.slo_ms = slo_ms;
+                // switch only on the server's confirmation; a server
+                // that stays silent keeps the session on ndjson
+                if let Some(f) = framing.as_deref() {
+                    let accepted = Framing::parse(f)?;
+                    c.framing = accepted;
+                    c.dec.set_framing(accepted);
+                }
             }
             Response::Error { error, .. } => bail!("server rejected hello: {error}"),
             other => bail!("expected hello, got {other:?}"),
@@ -95,21 +191,28 @@ impl Client {
         Ok(c)
     }
 
+    /// The session's negotiated wire framing.
+    pub fn framing(&self) -> Framing {
+        self.framing
+    }
+
     fn send(&mut self, r: &Request) -> Result<()> {
-        let mut line = protocol::encode_request(r);
-        line.push('\n');
-        self.writer.write_all(line.as_bytes())?;
+        let mut buf = Vec::with_capacity(128);
+        encode_frame(self.framing, &protocol::request_value(r), &mut buf);
+        self.writer.write_all(&buf)?;
         self.writer.flush()?;
         Ok(())
     }
 
     fn recv(&mut self) -> Result<Response> {
-        let mut line = String::new();
-        let n = self.reader.read_line(&mut line)?;
-        if n == 0 {
-            bail!("server closed the connection");
+        loop {
+            if let Some(v) = self.dec.next()? {
+                return protocol::response_from_value(&v);
+            }
+            if self.dec.fill_from(&mut self.stream)? == 0 {
+                bail!("server closed the connection");
+            }
         }
-        protocol::decode_response(&line)
     }
 
     /// Fire a submit without waiting for the reply (pipelining). Pair

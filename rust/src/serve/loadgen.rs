@@ -11,8 +11,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::client::Client;
+use super::client::{Client, ClientConfig};
 use super::protocol::{Response, StreamOpenReq, SubmitReq};
+use super::transport::Framing;
 use crate::util::json::Json;
 use crate::util::stats;
 
@@ -192,6 +193,14 @@ pub struct LoadgenOptions {
     pub window: usize,
     /// v6 (stream profile): window slide in chunks (0 = tumbling).
     pub slide: usize,
+    /// v7: wire framing each connection requests in its hello.
+    pub framing: Framing,
+    /// v7: open-loop connection fan-out. 0 = off (the closed-loop
+    /// `clients` driver). N > 0 opens N concurrent connections as fast
+    /// as they can be established, each firing `requests` synchronous
+    /// submits — the many-connection soak shape that separates the
+    /// epoll transport from thread-per-connection.
+    pub connections: usize,
 }
 
 impl Default for LoadgenOptions {
@@ -211,6 +220,8 @@ impl Default for LoadgenOptions {
             slo_ms: None,
             window: 0,
             slide: 0,
+            framing: Framing::Ndjson,
+            connections: 0,
         }
     }
 }
@@ -246,6 +257,15 @@ pub struct LoadReport {
     /// v6 (stream profile): credit-change signals the servers sent
     /// (each one is backpressure engaging or easing).
     pub stream_credits: u64,
+    /// v7 (fan-out mode): connections attempted (0 = closed-loop run).
+    pub connections: usize,
+    /// v7 (fan-out mode): connections that failed to establish or
+    /// handshake (each also contributes its requests to `errors`).
+    pub connect_failures: usize,
+    /// v7 (fan-out mode): median connect+handshake latency (seconds).
+    pub connect_p50: f64,
+    /// v7 (fan-out mode): p99 connect+handshake latency (seconds).
+    pub connect_p99: f64,
 }
 
 struct ClientOutcome {
@@ -273,6 +293,17 @@ impl ClientOutcome {
             shed_windows: 0,
             stream_credits: 0,
         }
+    }
+}
+
+/// Connection config shared by every driver: the session policy, the
+/// declared SLO, and the requested wire framing.
+fn client_cfg(opts: &LoadgenOptions) -> ClientConfig {
+    ClientConfig {
+        policy: opts.policy.clone(),
+        slo_ms: opts.slo_ms,
+        framing: opts.framing,
+        ..ClientConfig::default()
     }
 }
 
@@ -310,7 +341,7 @@ fn tally(out: &mut ClientOutcome, resp: &super::protocol::ResultResp, latency: f
 }
 
 fn drive_client(addr: &str, opts: &LoadgenOptions, client_idx: usize) -> Result<ClientOutcome> {
-    let mut c = Client::connect_with_policy(addr, opts.policy.as_deref())?;
+    let mut c = Client::connect_cfg(addr, &client_cfg(opts))?;
     let mut out = ClientOutcome::empty(opts.requests);
     let window = opts.pipeline.max(1);
     let mut pacer = Pacer::new(opts.profile);
@@ -418,10 +449,7 @@ fn drive_stream_client(
     chunk_kb: usize,
     stages: usize,
 ) -> Result<ClientOutcome> {
-    let mut c = match opts.slo_ms {
-        Some(slo) => Client::connect_with_slo(addr, opts.policy.as_deref(), slo)?,
-        None => Client::connect_with_policy(addr, opts.policy.as_deref())?,
-    };
+    let mut c = Client::connect_cfg(addr, &client_cfg(opts))?;
     let mut out = ClientOutcome::empty(opts.requests);
     let stream_id = client_idx as u64 + 1;
     // chunk payload: chunk_kb KiB of f32 elements
@@ -470,8 +498,132 @@ fn drive_stream_client(
     Ok(out)
 }
 
+/// One fan-out connection: connect + handshake (timed), then fire the
+/// synchronous request burst. A failed connect charges every request
+/// it would have sent as an error.
+fn drive_fanout_conn(
+    addr: &str,
+    opts: &LoadgenOptions,
+    idx: usize,
+) -> (Option<f64>, ClientOutcome) {
+    let mut out = ClientOutcome::empty(opts.requests);
+    let t0 = Instant::now();
+    let mut c = match Client::connect_cfg(addr, &client_cfg(opts)) {
+        Ok(c) => c,
+        Err(_) => {
+            out.errors += opts.requests;
+            return (None, out);
+        }
+    };
+    let connect_lat = t0.elapsed().as_secs_f64();
+    for r in 0..opts.requests {
+        let req = request_for(opts, idx, r);
+        let t = Instant::now();
+        match c.submit(req) {
+            Ok(resp) => tally(&mut out, &resp, t.elapsed().as_secs_f64()),
+            Err(_) => out.errors += 1,
+        }
+    }
+    let _ = c.quit();
+    (Some(connect_lat), out)
+}
+
+/// Open-loop connection fan-out (`--connections N`): N connections are
+/// opened concurrently — all at once, not gated on each other — and
+/// each runs a synchronous request burst. The interesting numbers are
+/// the connect failures and the connect-latency tail: a transport that
+/// spawns a thread per connection degrades here long before a
+/// readiness loop does.
+fn run_fanout(addr: &str, opts: &LoadgenOptions) -> Result<LoadReport> {
+    let t0 = Instant::now();
+    let results: Vec<(Option<f64>, ClientOutcome)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..opts.connections)
+            .map(|i| {
+                let addr = addr.to_string();
+                let opts = opts.clone();
+                s.spawn(move || drive_fanout_conn(&addr, &opts, i))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| {
+                    let mut o = ClientOutcome::empty(0);
+                    o.errors = opts.requests;
+                    (None, o)
+                })
+            })
+            .collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut connect_lats: Vec<f64> = Vec::with_capacity(results.len());
+    let mut connect_failures = 0usize;
+    let mut latencies = Vec::new();
+    let mut errors = 0usize;
+    let mut variants = BTreeMap::new();
+    let mut per_ctx = BTreeMap::new();
+    let mut batched = 0usize;
+    let mut max_rel_err = 0.0f64;
+    for (lat, o) in results {
+        match lat {
+            Some(l) => connect_lats.push(l),
+            None => connect_failures += 1,
+        }
+        latencies.extend(o.latencies);
+        errors += o.errors;
+        for (k, v) in o.variants {
+            *variants.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in o.per_ctx {
+            *per_ctx.entry(k).or_insert(0) += v;
+        }
+        batched += o.batched;
+        max_rel_err = max_rel_err.max(o.max_rel_err);
+    }
+    if latencies.is_empty() {
+        return Err(anyhow!(
+            "no request succeeded ({errors} errors, {connect_failures} connect failures)"
+        ));
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    connect_lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = latencies.len();
+    Ok(LoadReport {
+        clients: opts.connections,
+        requests: n + errors,
+        pipeline: 1,
+        errors,
+        elapsed,
+        rps: n as f64 / elapsed,
+        lat_mean: latencies.iter().sum::<f64>() / n as f64,
+        lat_min: latencies[0],
+        lat_max: latencies[n - 1],
+        p50: stats::percentile(&latencies, 50.0),
+        p95: stats::percentile(&latencies, 95.0),
+        p99: stats::percentile(&latencies, 99.0),
+        variants,
+        per_ctx,
+        batched,
+        max_rel_err,
+        windows: 0,
+        shed_windows: 0,
+        stream_credits: 0,
+        connections: opts.connections,
+        connect_failures,
+        connect_p50: stats::percentile(&connect_lats, 50.0),
+        connect_p99: stats::percentile(&connect_lats, 99.0),
+    })
+}
+
 /// Run the load against a listening server.
 pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<LoadReport> {
+    if opts.connections > 0 {
+        if opts.requests == 0 {
+            return Err(anyhow!("need at least one request per connection"));
+        }
+        return run_fanout(addr, opts);
+    }
     if opts.clients == 0 || opts.requests == 0 {
         return Err(anyhow!("need at least one client and one request"));
     }
@@ -553,6 +705,10 @@ pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<LoadReport> {
         windows,
         shed_windows,
         stream_credits,
+        connections: 0,
+        connect_failures: 0,
+        connect_p50: 0.0,
+        connect_p99: 0.0,
     })
 }
 
@@ -603,6 +759,15 @@ pub fn render(r: &LoadReport) -> String {
             r.windows, r.shed_windows, r.stream_credits
         ));
     }
+    if r.connections > 0 {
+        out.push_str(&format!(
+            "connections {}  connect failures {}  connect p50 {}  p99 {}\n",
+            r.connections,
+            r.connect_failures,
+            stats::fmt_time(r.connect_p50),
+            stats::fmt_time(r.connect_p99)
+        ));
+    }
     out
 }
 
@@ -626,6 +791,13 @@ pub fn to_json(r: &LoadReport) -> Json {
     m.insert("windows".into(), Json::Num(r.windows as f64));
     m.insert("shed_windows".into(), Json::Num(r.shed_windows as f64));
     m.insert("stream_credits".into(), Json::Num(r.stream_credits as f64));
+    m.insert("connections".into(), Json::Num(r.connections as f64));
+    m.insert(
+        "connect_failures".into(),
+        Json::Num(r.connect_failures as f64),
+    );
+    m.insert("connect_p50_s".into(), Json::Num(r.connect_p50));
+    m.insert("connect_p99_s".into(), Json::Num(r.connect_p99));
     let mut variants = std::collections::BTreeMap::new();
     for (k, v) in &r.variants {
         variants.insert(k.clone(), Json::Num(*v as f64));

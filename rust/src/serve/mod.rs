@@ -22,8 +22,16 @@
 //! chunk's stage selects its variant per-chunk — with SLO-driven
 //! backpressure shedding window granularity instead of chunks.
 //!
+//! Protocol v7 adds the **multiplexed transport** (see [`transport`]):
+//! the server can run a readiness event loop (`--transport epoll`)
+//! multiplexing thousands of non-blocking sessions per core, and every
+//! session negotiates a framing in `hello` — newline-delimited JSON
+//! (default) or compact length-prefixed binary — with pooled buffers
+//! and coalesced vectored writes on the hot path.
+//!
 //! Layers (each its own module):
 //! * [`protocol`] — wire format (requests/responses, encode/decode).
+//! * [`transport`] — framing codecs, buffer pool, readiness loop.
 //! * [`server`] — sessions, admission, batching, contexts, drain.
 //! * [`client`] — blocking client used by tools and tests.
 //! * [`loadgen`] — the throughput/latency measurement harness.
@@ -32,11 +40,13 @@ pub mod client;
 pub mod loadgen;
 pub mod protocol;
 pub mod server;
+pub mod transport;
 
-pub use client::Client;
+pub use client::{Client, ClientConfig};
 pub use loadgen::{LoadProfile, LoadReport, LoadgenOptions};
 pub use protocol::{
     Request, Response, ShardDesc, StreamAckResp, StreamClosedResp, StreamCreditResp,
     StreamOpenReq, StreamOpenedResp, SubmitReq,
 };
 pub use server::{parse_contexts, CtxSpec, ServeOptions, Server};
+pub use transport::{Framing, TransportKind};

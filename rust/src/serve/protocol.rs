@@ -1,14 +1,29 @@
-//! Wire protocol of the component service: one JSON object per line
-//! (newline-delimited), hand-rolled over [`crate::util::json`] — the
-//! offline image ships no serde. Every message is self-describing
-//! (`"op"` on requests, `"type"` on responses) and carries the client's
-//! request `id` back so batched / out-of-order replies can be matched.
+//! Wire protocol of the component service, hand-rolled over
+//! [`crate::util::json`] — the offline image ships no serde. Every
+//! message is self-describing (`"op"` on requests, `"type"` on
+//! responses) and carries the client's request `id` back so batched /
+//! out-of-order replies can be matched.
 //!
-//! ## v6 message set
+//! Messages are JSON *values*; how a value becomes bytes is the
+//! session's negotiated **framing** (v7, see
+//! [`crate::serve::transport`]): newline-delimited JSON by default, or
+//! a compact length-prefixed binary encoding of the same value tree.
+//! This module therefore exposes both string-level helpers
+//! ([`encode_request`]/[`decode_request`], ndjson) and value-level ones
+//! ([`request_value`]/[`request_from_value`], framing-agnostic).
+//!
+//! ## v7 message set
 //!
 //! The same protocol is spoken at two levels: clients talk to either a
 //! single `compar serve` shard or to a `compar route` router, and the
-//! router talks to its shards. v6 (streaming) adds stream sessions:
+//! router talks to its shards. v7 (transport) adds the framing
+//! handshake: a `hello` request may carry `"framing":"binary"` (or
+//! `"ndjson"`, the default) and the `hello` response echoes the framing
+//! the server accepted; the handshake itself is always exchanged in
+//! ndjson, and every frame after it uses the negotiated framing. The
+//! router forwards a session's framing to its backend shards; its admin
+//! connections (health probes, shutdown fan-out) stay ndjson.
+//! v6 (streaming) adds stream sessions:
 //! `stream_open` declares a chunk pipeline (app, chunk size, stage
 //! count, optional tumbling/sliding window, optional per-stream
 //! `slo_ms`), `stream_chunk` pushes one chunk through it (every stage
@@ -30,7 +45,8 @@
 //!
 //! | request `op`       | response `type` | level  | purpose                               |
 //! |--------------------|-----------------|--------|---------------------------------------|
-//! | `hello`            | `hello`         | both   | session handshake (+ policy, slo_ms)  |
+//! | `hello`            | `hello`         | both   | session handshake (+ policy, slo_ms,  |
+//! |                    |                 |        | v7: `framing` negotiation)            |
 //! | `submit`           | `result`        | both   | task-graph request (router fans out)  |
 //! | `stream_open`      | `stream_opened` | both   | open a stream session (v6); router    |
 //! |                    |                 |        | pins the stream to one shard          |
@@ -64,18 +80,21 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::util::json::{self, Json};
 
-/// v6: streaming — `stream_open`/`stream_chunk`/`stream_close` stream
-/// sessions with per-chunk variant selection, windowed operators, and
-/// credit-based backpressure (`stream_credit`); `stats` gains the
-/// default context's effective `slo_ms` and the open-`streams` gauge.
-/// (v5 elastic scaling — `autoscale_status` and a latency SLO in
+/// v7: transport — the `hello` exchange negotiates a per-session
+/// framing (`"framing":"ndjson"|"binary"` on the request, echoed on
+/// the response); the handshake is always ndjson and every later frame
+/// uses the negotiated framing. (v6 streaming —
+/// `stream_open`/`stream_chunk`/`stream_close` stream sessions with
+/// per-chunk variant selection, windowed operators, and credit-based
+/// backpressure (`stream_credit`), plus `slo_ms`/`streams` in `stats`;
+/// v5 elastic scaling — `autoscale_status` and a latency SLO in
 /// `hello`; v4 the `contextual` session selector and runtime-snapshot
 /// fields in `stats`; v3 cluster ops — `perf_pull`/`perf_push`
 /// perf-model gossip on shards, `shards`/`drain_shard` rotation control
 /// on the router; v2 per-session selection policy in `hello`, `policy`
 /// on results, `selector` on context descriptors, `ctx_variants` in
 /// stats.)
-pub const PROTOCOL_VERSION: u64 = 6;
+pub const PROTOCOL_VERSION: u64 = 7;
 
 // --------------------------------------------------------------- requests
 
@@ -136,6 +155,9 @@ pub enum Request {
         client: String,
         policy: Option<String>,
         slo_ms: Option<f64>,
+        /// v7: requested wire framing ("ndjson"|"binary"); absent/None
+        /// means ndjson. The hello itself is always sent in ndjson.
+        framing: Option<String>,
     },
     Submit(SubmitReq),
     /// v6: open a stream session.
@@ -371,6 +393,9 @@ pub enum Response {
         /// context after applying the request's `slo_ms` (absent when
         /// autoscaling is off or no SLO is configured).
         slo_ms: Option<f64>,
+        /// v7: the framing the server accepted for this session
+        /// (absent = ndjson). Every frame after this hello uses it.
+        framing: Option<String>,
     },
     Result(ResultResp),
     /// v6: stream session opened.
@@ -426,12 +451,15 @@ fn strs(v: &[String]) -> Json {
     Json::Arr(v.iter().map(|x| s(x)).collect())
 }
 
-pub fn encode_request(r: &Request) -> String {
-    let j = match r {
+/// Framing-agnostic encode: the request as a JSON value. The framing
+/// codec ([`crate::serve::transport::codec`]) turns it into bytes.
+pub fn request_value(r: &Request) -> Json {
+    match r {
         Request::Hello {
             client,
             policy,
             slo_ms,
+            framing,
         } => {
             let mut pairs = vec![("op", s("hello")), ("client", s(client))];
             if let Some(p) = policy {
@@ -439,6 +467,9 @@ pub fn encode_request(r: &Request) -> String {
             }
             if let Some(ms) = slo_ms {
                 pairs.push(("slo_ms", n(*ms)));
+            }
+            if let Some(f) = framing {
+                pairs.push(("framing", s(f)));
             }
             obj(pairs)
         }
@@ -501,16 +532,22 @@ pub fn encode_request(r: &Request) -> String {
         }
         Request::Shutdown => obj(vec![("op", s("shutdown"))]),
         Request::Quit => obj(vec![("op", s("quit"))]),
-    };
-    json::to_string(&j)
+    }
 }
 
-pub fn encode_response(r: &Response) -> String {
-    let j = match r {
+/// ndjson encode (one line, no trailing newline).
+pub fn encode_request(r: &Request) -> String {
+    json::to_string(&request_value(r))
+}
+
+/// Framing-agnostic encode: the response as a JSON value.
+pub fn response_value(r: &Response) -> Json {
+    match r {
         Response::Hello {
             session,
             version,
             slo_ms,
+            framing,
         } => {
             let mut pairs = vec![
                 ("ok", Json::Bool(true)),
@@ -520,6 +557,9 @@ pub fn encode_response(r: &Response) -> String {
             ];
             if let Some(ms) = slo_ms {
                 pairs.push(("slo_ms", n(*ms)));
+            }
+            if let Some(f) = framing {
+                pairs.push(("framing", s(f)));
             }
             obj(pairs)
         }
@@ -716,8 +756,12 @@ pub fn encode_response(r: &Response) -> String {
         }
         Response::Shutdown => obj(vec![("ok", Json::Bool(true)), ("type", s("shutdown"))]),
         Response::Bye => obj(vec![("ok", Json::Bool(true)), ("type", s("bye"))]),
-    };
-    json::to_string(&j)
+    }
+}
+
+/// ndjson encode (one line, no trailing newline).
+pub fn encode_response(r: &Response) -> String {
+    json::to_string(&response_value(r))
 }
 
 // --------------------------------------------------------------- decoding
@@ -762,14 +806,15 @@ fn get_str_arr(j: &Json, k: &str) -> Result<Vec<String>> {
         .ok_or_else(|| anyhow!("missing/invalid array field '{k}'"))
 }
 
-pub fn decode_request(line: &str) -> Result<Request> {
-    let j = json::parse(line.trim()).map_err(|e| anyhow!("bad request json: {e}"))?;
-    let op = get_str(&j, "op")?;
+/// Framing-agnostic decode: a request from its JSON value.
+pub fn request_from_value(j: &Json) -> Result<Request> {
+    let op = get_str(j, "op")?;
     Ok(match op.as_str() {
         "hello" => Request::Hello {
-            client: get_str(&j, "client").unwrap_or_default(),
-            policy: get_str(&j, "policy").ok(),
-            slo_ms: get_f64(&j, "slo_ms").ok(),
+            client: get_str(j, "client").unwrap_or_default(),
+            policy: get_str(j, "policy").ok(),
+            slo_ms: get_f64(j, "slo_ms").ok(),
+            framing: get_str(j, "framing").ok(),
         },
         "submit" => {
             let tasks = get_u64(&j, "tasks").unwrap_or(1).max(1) as usize;
@@ -826,14 +871,21 @@ pub fn decode_request(line: &str) -> Result<Request> {
     })
 }
 
-pub fn decode_response(line: &str) -> Result<Response> {
-    let j = json::parse(line.trim()).map_err(|e| anyhow!("bad response json: {e}"))?;
-    let ty = get_str(&j, "type")?;
+/// ndjson decode (one line).
+pub fn decode_request(line: &str) -> Result<Request> {
+    let j = json::parse(line.trim()).map_err(|e| anyhow!("bad request json: {e}"))?;
+    request_from_value(&j)
+}
+
+/// Framing-agnostic decode: a response from its JSON value.
+pub fn response_from_value(j: &Json) -> Result<Response> {
+    let ty = get_str(j, "type")?;
     Ok(match ty.as_str() {
         "hello" => Response::Hello {
             session: get_u64(&j, "session")?,
             version: get_u64(&j, "version")?,
             slo_ms: get_f64(&j, "slo_ms").ok(),
+            framing: get_str(j, "framing").ok(),
         },
         "result" => Response::Result(ResultResp {
             id: get_u64(&j, "id")?,
@@ -1007,6 +1059,12 @@ pub fn decode_response(line: &str) -> Result<Response> {
     })
 }
 
+/// ndjson decode (one line).
+pub fn decode_response(line: &str) -> Result<Response> {
+    let j = json::parse(line.trim()).map_err(|e| anyhow!("bad response json: {e}"))?;
+    response_from_value(&j)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1029,11 +1087,13 @@ mod tests {
             client: "client-1".into(),
             policy: None,
             slo_ms: None,
+            framing: None,
         });
         roundtrip_req(Request::Hello {
             client: "client-2".into(),
             policy: Some("epsilon:0.2".into()),
             slo_ms: Some(12.5),
+            framing: Some("binary".into()),
         });
         roundtrip_req(Request::Submit(SubmitReq {
             id: 42,
@@ -1146,11 +1206,13 @@ mod tests {
             session: 9,
             version: PROTOCOL_VERSION,
             slo_ms: None,
+            framing: None,
         });
         roundtrip_resp(Response::Hello {
             session: 9,
             version: PROTOCOL_VERSION,
             slo_ms: Some(40.0),
+            framing: Some("binary".into()),
         });
         roundtrip_resp(Response::Result(ResultResp {
             id: 42,
@@ -1367,4 +1429,234 @@ mod tests {
         assert!(decode_request(r#"{"op":"submit","id":1}"#).is_err());
         assert!(decode_response(r#"{"ok":true}"#).is_err());
     }
+
+    #[test]
+    fn pre_v7_hello_decodes_without_framing() {
+        match decode_request(r#"{"op":"hello","client":"old"}"#).unwrap() {
+            Request::Hello { framing, .. } => assert!(framing.is_none()),
+            other => panic!("{other:?}"),
+        }
+        let old = decode_response(r#"{"ok":true,"type":"hello","session":1,"version":6}"#);
+        match old.unwrap() {
+            Response::Hello { framing, .. } => assert!(framing.is_none()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// One representative of every request kind (for cross-framing
+    /// property tests).
+    fn all_request_kinds() -> Vec<Request> {
+        vec![
+            Request::Hello {
+                client: "c".into(),
+                policy: Some("epsilon:0.1".into()),
+                slo_ms: Some(25.0),
+                framing: Some("binary".into()),
+            },
+            Request::Submit(SubmitReq {
+                id: 7,
+                app: "matmul".into(),
+                size: 48,
+                tasks: 2,
+                ctx: Some("hot".into()),
+                seed: 3,
+                variant: Some("omp".into()),
+                verify: true,
+            }),
+            Request::StreamOpen(StreamOpenReq {
+                id: 1,
+                app: "sort".into(),
+                size: 4096,
+                stages: 2,
+                window: 4,
+                slide: 2,
+                ctx: None,
+                slo_ms: Some(40.0),
+            }),
+            Request::StreamChunk {
+                stream: 1,
+                seq: 5,
+                seed: 11,
+            },
+            Request::StreamClose { stream: 1 },
+            Request::Stats,
+            Request::Contexts,
+            Request::AutoscaleStatus,
+            Request::PerfPull,
+            Request::PerfPush {
+                models: Json::Obj(BTreeMap::new()),
+            },
+            Request::Shards,
+            Request::DrainShard {
+                shard: "shard0".into(),
+            },
+            Request::Shutdown,
+            Request::Quit,
+        ]
+    }
+
+    /// One representative of every response kind.
+    fn all_response_kinds() -> Vec<Response> {
+        vec![
+            Response::Hello {
+                session: 1,
+                version: PROTOCOL_VERSION,
+                slo_ms: Some(25.0),
+                framing: Some("binary".into()),
+            },
+            Response::Result(ResultResp {
+                id: 7,
+                app: "matmul".into(),
+                size: 48,
+                ctx: "hot".into(),
+                policy: "greedy".into(),
+                variants: vec!["omp".into()],
+                workers: vec![2],
+                batch: 1,
+                modeled: 0.5,
+                wall: 0.25,
+                rel_err: 0.0,
+            }),
+            Response::StreamOpened(StreamOpenedResp {
+                stream: 1,
+                credit: 8,
+                window: 4,
+                slide: 2,
+                slo_ms: None,
+            }),
+            Response::StreamAck(StreamAckResp {
+                stream: 1,
+                seq: 5,
+                ctx: "hot".into(),
+                variants: vec!["cuda".into()],
+                workers: vec![3],
+                modeled: 0.1,
+                wall: 0.2,
+                latency: 0.3,
+                credit: 4,
+                shed: 1,
+            }),
+            Response::StreamCredit(StreamCreditResp {
+                stream: 1,
+                credit: 2,
+                shed: 2,
+                queued_ms: 9.5,
+            }),
+            Response::StreamClosed(StreamClosedResp {
+                stream: 1,
+                chunks: 10,
+                dropped: 0,
+                windows: 3,
+                shed_windows: 1,
+                credit_signals: 2,
+                p95_ms: 8.0,
+            }),
+            Response::Error {
+                id: Some(7),
+                error: "boom".into(),
+            },
+            Response::Stats(StatsResp {
+                uptime: 1.0,
+                requests_ok: 2,
+                requests_err: 0,
+                inflight: 1,
+                tasks_executed: 4,
+                queue_depth: 0,
+                busy_workers: 1,
+                total_workers: 4,
+                sessions: 1,
+                ctx_tasks: BTreeMap::new(),
+                ctx_variants: BTreeMap::new(),
+                slo_ms: 0.0,
+                streams: 0,
+            }),
+            Response::Contexts {
+                contexts: vec![CtxDesc {
+                    id: 0,
+                    name: "default".into(),
+                    policy: "fifo".into(),
+                    selector: "greedy".into(),
+                    workers: vec![0, 1],
+                    queued: 0,
+                }],
+            },
+            Response::PerfModels {
+                models: Json::Obj(BTreeMap::new()),
+            },
+            Response::PerfAck { merged: 3 },
+            Response::Shards {
+                shards: vec![ShardDesc {
+                    addr: "127.0.0.1:7201".into(),
+                    healthy: true,
+                    draining: false,
+                    inflight: 0,
+                    requests_ok: 1,
+                }],
+            },
+            Response::Drained {
+                shard: "shard0".into(),
+            },
+            Response::Autoscale(AutoscaleResp::default()),
+            Response::Shutdown,
+            Response::Bye,
+        ]
+    }
+
+    #[test]
+    fn binary_framing_roundtrips_every_request_kind() {
+        use crate::serve::transport::codec::{encode_frame, FrameDecoder, Framing};
+        for req in all_request_kinds() {
+            for framing in [Framing::Ndjson, Framing::Binary] {
+                let mut wire = Vec::new();
+                encode_frame(framing, &request_value(&req), &mut wire);
+                let mut dec = FrameDecoder::new(framing);
+                dec.push(&wire);
+                let v = dec.next().unwrap().expect("one frame");
+                let back = request_from_value(&v)
+                    .unwrap_or_else(|e| panic!("{req:?} via {framing:?}: {e}"));
+                assert_eq!(back, req, "{framing:?}");
+                assert_eq!(dec.buffered(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn binary_framing_roundtrips_every_response_kind() {
+        use crate::serve::transport::codec::{encode_frame, FrameDecoder, Framing};
+        for resp in all_response_kinds() {
+            for framing in [Framing::Ndjson, Framing::Binary] {
+                let mut wire = Vec::new();
+                encode_frame(framing, &response_value(&resp), &mut wire);
+                let mut dec = FrameDecoder::new(framing);
+                dec.push(&wire);
+                let v = dec.next().unwrap().expect("one frame");
+                let back = response_from_value(&v)
+                    .unwrap_or_else(|e| panic!("{resp:?} via {framing:?}: {e}"));
+                assert_eq!(back, resp, "{framing:?}");
+                assert_eq!(dec.buffered(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn binary_framing_survives_fragmented_delivery() {
+        // The whole message set concatenated on one wire, delivered in
+        // 3-byte fragments: every kind must resurface intact, in order.
+        use crate::serve::transport::codec::{encode_frame, FrameDecoder, Framing};
+        let reqs = all_request_kinds();
+        let mut wire = Vec::new();
+        for req in &reqs {
+            encode_frame(Framing::Binary, &request_value(req), &mut wire);
+        }
+        let mut dec = FrameDecoder::new(Framing::Binary);
+        let mut got = Vec::new();
+        for chunk in wire.chunks(3) {
+            dec.push(chunk);
+            while let Some(v) = dec.next().unwrap() {
+                got.push(request_from_value(&v).unwrap());
+            }
+        }
+        assert_eq!(got, reqs);
+    }
 }
+

@@ -1,10 +1,20 @@
 //! The persistent component service: accepts task-graph requests from
-//! many concurrent clients over newline-delimited JSON (TCP), routes
-//! each request to a scheduling context, batches same-codelet requests,
-//! enforces an admission cap, and drains gracefully on shutdown.
+//! many concurrent clients over TCP, routes each request to a
+//! scheduling context, batches same-codelet requests, enforces an
+//! admission cap, and drains gracefully on shutdown.
+//!
+//! Two transports run the same session state machine (v7, see
+//! [`crate::serve::transport`]): the default **threads** path below
+//! (one blocking thread per connection) and the **epoll** path in
+//! `server_mux.rs` (a readiness event loop multiplexing every session
+//! on one thread, with pooled buffers and coalesced vectored writes).
+//! Request parsing and response encoding are pure functions over
+//! buffers ([`handle_frame`] / [`send_batch`]) shared by both. Each
+//! session's wire framing (ndjson or length-prefixed binary) is
+//! negotiated in `hello`.
 //!
 //! ```text
-//! client ──TCP──▶ session thread ──▶ admission gate ──▶ batcher
+//! client ──TCP──▶ session (thread | event loop) ──▶ gate ──▶ batcher
 //!                                                          │ (same-app
 //!                                                          ▼  batches)
 //!                                     dispatcher ──▶ taskrt submit
@@ -14,7 +24,7 @@
 //! ```
 
 use std::collections::{BTreeMap, HashMap};
-use std::io::{BufRead, BufReader, Write};
+use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -28,6 +38,15 @@ use super::protocol::{
     StreamAckResp, StreamClosedResp, StreamCreditResp, StreamOpenReq, StreamOpenedResp, SubmitReq,
     PROTOCOL_VERSION,
 };
+use super::transport::codec::{encode_frame, FrameDecoder, Framing};
+#[cfg(unix)]
+use super::transport::event_loop::Outbox;
+use super::transport::TransportKind;
+use crate::util::json::Json;
+
+#[cfg(unix)]
+#[path = "server_mux.rs"]
+mod mux;
 use crate::apps;
 use crate::autoscale::{AutoscaleOptions, AutoscaleShared, Autoscaler, ScaleTarget};
 use crate::runtime::Manifest;
@@ -123,6 +142,9 @@ pub struct ServeOptions {
     /// Elastic worker scaling between scheduling contexts
     /// (`--autoscale`); `None` = static partitions.
     pub autoscale: Option<AutoscaleOptions>,
+    /// Session transport: blocking thread-per-connection (default) or
+    /// the readiness event loop (`--transport epoll`).
+    pub transport: TransportKind,
 }
 
 impl Default for ServeOptions {
@@ -138,9 +160,15 @@ impl Default for ServeOptions {
             batch_window: Duration::from_micros(500),
             max_batch: 16,
             autoscale: None,
+            transport: TransportKind::Threads,
         }
     }
 }
+
+/// Write deadline applied to every session socket: a peer that stops
+/// reading cannot wedge a reply writer forever (symmetric with the
+/// 100ms read timeout used for drain checks).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
 // -------------------------------------------------------- admission gate
 
@@ -182,17 +210,86 @@ impl Gate {
 
 // ---------------------------------------------------------------- batching
 
-/// A per-connection reply lane: completion threads and the session
-/// thread interleave line writes through one mutex.
-type ReplyLane = Arc<Mutex<TcpStream>>;
+/// A per-connection reply lane. Completion threads, stream workers and
+/// the session itself all reply through it; the sink owns the session's
+/// negotiated framing so every producer encodes consistently.
+///
+/// * `Blocking` — threaded transport: writes go straight to the socket
+///   under a mutex (one coalesced buffered write per batch).
+/// * `Queued` — epoll transport: frames are encoded into pooled buffers
+///   and queued on the connection's [`Outbox`]; the event loop drains
+///   them with vectored writes.
+pub(crate) enum ReplySink {
+    Blocking {
+        stream: Mutex<TcpStream>,
+        framing: Mutex<Framing>,
+    },
+    #[cfg(unix)]
+    Queued {
+        outbox: Arc<Outbox>,
+        framing: Mutex<Framing>,
+    },
+}
 
-fn send_line(lane: &ReplyLane, resp: &Response) {
-    let mut line = protocol::encode_response(resp);
-    line.push('\n');
-    let mut w = lane.lock().unwrap();
-    // a dead client is not a server error; drop silently
-    let _ = w.write_all(line.as_bytes());
-    let _ = w.flush();
+pub(crate) type ReplyLane = Arc<ReplySink>;
+
+impl ReplySink {
+    fn blocking(stream: TcpStream) -> ReplyLane {
+        Arc::new(ReplySink::Blocking {
+            stream: Mutex::new(stream),
+            framing: Mutex::new(Framing::Ndjson),
+        })
+    }
+
+    /// Switch the wire framing (after a successful hello negotiation).
+    fn set_framing(&self, f: Framing) {
+        match self {
+            ReplySink::Blocking { framing, .. } => *framing.lock().unwrap() = f,
+            #[cfg(unix)]
+            ReplySink::Queued { framing, .. } => *framing.lock().unwrap() = f,
+        }
+    }
+}
+
+fn send_line(lane: &ReplyLane, resp: &Response) -> bool {
+    send_batch(lane, std::slice::from_ref(resp))
+}
+
+/// Encode a batch of responses and hand it to the session's sink as one
+/// write. Returns false when the peer is gone: a failed reply write is
+/// connection death, not something to swallow — log it and close the
+/// socket so the reader side tears the session down promptly.
+fn send_batch(lane: &ReplyLane, resps: &[Response]) -> bool {
+    if resps.is_empty() {
+        return true;
+    }
+    match &**lane {
+        ReplySink::Blocking { stream, framing } => {
+            let f = *framing.lock().unwrap();
+            let mut buf = Vec::with_capacity(resps.len() * 128);
+            for r in resps {
+                encode_frame(f, &protocol::response_value(r), &mut buf);
+            }
+            let mut w = stream.lock().unwrap();
+            match w.write_all(&buf).and_then(|_| w.flush()) {
+                Ok(()) => true,
+                Err(e) => {
+                    eprintln!("serve: closing session, reply write failed: {e}");
+                    let _ = w.shutdown(std::net::Shutdown::Both);
+                    false
+                }
+            }
+        }
+        #[cfg(unix)]
+        ReplySink::Queued { outbox, framing } => {
+            let f = *framing.lock().unwrap();
+            let mut buf = outbox.pool().take();
+            for r in resps {
+                encode_frame(f, &protocol::response_value(r), &mut buf);
+            }
+            outbox.send(buf)
+        }
+    }
 }
 
 struct Job {
@@ -549,11 +646,18 @@ impl Server {
             scaler
         });
 
+        // the accept thread doubles as the whole transport on the epoll
+        // path: instead of spawning a thread per connection it runs the
+        // readiness event loop, multiplexing every session itself
+        let transport = opts.transport;
         let accept = {
             let shared = shared.clone();
             std::thread::Builder::new()
                 .name("serve-accept".into())
-                .spawn(move || accept_loop(shared, listener))
+                .spawn(move || match transport {
+                    TransportKind::Threads => accept_loop(shared, listener),
+                    TransportKind::Epoll => mux_transport(shared, listener),
+                })
                 .expect("spawning accept thread")
         };
         let dispatcher = {
@@ -679,6 +783,19 @@ impl Drop for Server {
 
 // ------------------------------------------------------------ accept loop
 
+/// `--transport epoll` entry point: the readiness event loop (unix), or
+/// a loud fallback to the threaded path elsewhere.
+#[cfg(unix)]
+fn mux_transport(shared: Arc<Shared>, listener: TcpListener) {
+    mux::event_loop(shared, listener);
+}
+
+#[cfg(not(unix))]
+fn mux_transport(shared: Arc<Shared>, listener: TcpListener) {
+    eprintln!("serve: epoll transport needs a unix platform; using threads");
+    accept_loop(shared, listener);
+}
+
 fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
     while !shared.draining.load(Ordering::SeqCst) {
         match listener.accept() {
@@ -723,40 +840,67 @@ struct SessionState {
     slo_declared: Vec<CtxId>,
     /// Open stream sessions (v6), keyed by the client-chosen stream id.
     streams: HashMap<u64, StreamHandle>,
+    /// Wire framing negotiated in hello (v7); the transport mirrors it
+    /// into its frame decoder after each dispatched request.
+    framing: Framing,
 }
 
 fn session_loop(shared: Arc<Shared>, stream: TcpStream, sid: u64) {
     let _ = stream.set_nodelay(true);
     // periodic timeout so the session observes `draining` while idle
     let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    // symmetric write deadline: a peer that stops reading cannot wedge
+    // completion threads inside the reply-lane mutex
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let reply: ReplyLane = match stream.try_clone() {
-        Ok(w) => Arc::new(Mutex::new(w)),
+        Ok(w) => ReplySink::blocking(w),
         Err(_) => return,
     };
     // count the session into the runtime's co-tenant gauge: selection
     // snapshots (and v4 stats) see how many clients share the machine
     shared.rt.tenant_started();
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+    let mut stream = stream;
+    let mut dec = FrameDecoder::new(Framing::Ndjson);
     let mut sess = SessionState::default();
-    loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => break, // EOF
-            Ok(_) => {
-                let keep = handle_request(&shared, &reply, line.trim(), sid, &mut sess);
-                line.clear();
-                // also break on drain here: a chatty client whose reads
-                // never time out must not hold the session (and thereby
-                // Server::shutdown's join) open forever
-                if !keep || shared.draining.load(Ordering::SeqCst) {
-                    break;
+    'session: loop {
+        // surface every frame already buffered before touching the socket
+        loop {
+            match dec.next() {
+                Ok(Some(v)) => {
+                    let keep = handle_frame(&shared, &reply, &v, sid, &mut sess);
+                    // hello may have renegotiated the wire framing
+                    if sess.framing != dec.framing() {
+                        dec.set_framing(sess.framing);
+                    }
+                    // also break on drain here: a chatty client whose
+                    // reads never time out must not hold the session
+                    // (and thereby Server::shutdown's join) open forever
+                    if !keep || shared.draining.load(Ordering::SeqCst) {
+                        break 'session;
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    // framing desync: the stream is unrecoverable
+                    send_line(
+                        &reply,
+                        &Response::Error {
+                            id: None,
+                            error: format!("{e:#}"),
+                        },
+                    );
+                    break 'session;
                 }
             }
+        }
+        match dec.fill_from(&mut stream) {
+            Ok(0) => break, // EOF
+            Ok(_) => {}
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                // partial data (if any) stays in `line`; just check drain
+                // partial data stays buffered in the decoder; check drain
                 if shared.draining.load(Ordering::SeqCst) {
                     break;
                 }
@@ -776,18 +920,17 @@ fn session_loop(shared: Arc<Shared>, stream: TcpStream, sid: u64) {
     shared.rt.tenant_finished();
 }
 
-/// Handle one request line; returns false when the session should close.
-fn handle_request(
+/// Decode one framed request value and dispatch it; returns false when
+/// the session should close. Pure over the decoded value — both the
+/// threaded path and the event loop call this.
+fn handle_frame(
     shared: &Arc<Shared>,
     reply: &ReplyLane,
-    line: &str,
+    value: &Json,
     sid: u64,
     sess: &mut SessionState,
 ) -> bool {
-    if line.is_empty() {
-        return true;
-    }
-    let req = match protocol::decode_request(line) {
+    let req = match protocol::request_from_value(value) {
         Ok(r) => r,
         Err(e) => {
             send_line(
@@ -800,12 +943,43 @@ fn handle_request(
             return true;
         }
     };
+    dispatch_request(shared, reply, req, sid, sess)
+}
+
+/// Handle one decoded request; returns false when the session should
+/// close.
+fn dispatch_request(
+    shared: &Arc<Shared>,
+    reply: &ReplyLane,
+    req: Request,
+    sid: u64,
+    sess: &mut SessionState,
+) -> bool {
     match req {
         Request::Hello {
             client: _,
             policy,
             slo_ms,
+            framing,
         } => {
+            // v7: negotiate the session's wire framing before anything
+            // else can fail — the hello *response* still goes out in
+            // the current (pre-switch) framing, everything after it in
+            // the accepted one.
+            let accepted = match framing.as_deref().map(Framing::parse) {
+                None => None,
+                Some(Ok(f)) => Some(f),
+                Some(Err(e)) => {
+                    send_line(
+                        reply,
+                        &Response::Error {
+                            id: None,
+                            error: format!("{e:#}"),
+                        },
+                    );
+                    return true;
+                }
+            };
             if let Some(p) = policy {
                 match SelectorKind::parse(&p) {
                     Some(kind) => {
@@ -853,8 +1027,17 @@ fn handle_request(
                     session: sid,
                     version: PROTOCOL_VERSION,
                     slo_ms: effective,
+                    // echo what was accepted; absent = ndjson, so older
+                    // clients that never asked see no new field
+                    framing: accepted.map(|f| f.name().to_string()),
                 },
             );
+            // switch *after* the hello reply is encoded: the handshake
+            // itself is always readable in the session's prior framing
+            if let Some(f) = accepted {
+                sess.framing = f;
+                reply.set_framing(f);
+            }
             true
         }
         Request::Stats => {
@@ -957,13 +1140,15 @@ fn handle_request(
         Request::StreamClose { stream } => {
             match sess.streams.remove(&stream) {
                 Some(h) => close_stream(shared, h),
-                None => send_line(
-                    reply,
-                    &Response::Error {
-                        id: None,
-                        error: format!("unknown stream {stream}"),
-                    },
-                ),
+                None => {
+                    send_line(
+                        reply,
+                        &Response::Error {
+                            id: None,
+                            error: format!("unknown stream {stream}"),
+                        },
+                    );
+                }
             }
             true
         }
@@ -1357,51 +1542,46 @@ fn stream_worker(
         let d = credit.assess(queued_ms);
         state.shed.store(d.shed, Ordering::Relaxed);
         state.credit.store(d.credit, Ordering::Relaxed);
+        // ack and (when the controller moved) credit signal go out as
+        // one coalesced write, not two syscalls per chunk
+        let mut out: Vec<Response> = Vec::with_capacity(2);
         match waited {
             Ok(()) => {
                 latency.record(lat);
                 state.chunks.fetch_add(1, Ordering::Relaxed);
                 shared.requests_ok.fetch_add(1, Ordering::Relaxed);
-                send_line(
-                    &reply,
-                    &Response::StreamAck(StreamAckResp {
-                        stream: spec.id,
-                        seq: c.seq,
-                        ctx: ctx_name.clone(),
-                        variants: results.iter().map(|r| r.variant.clone()).collect(),
-                        workers: results.iter().map(|r| r.worker).collect(),
-                        modeled: results.iter().map(|r| r.modeled_total()).sum(),
-                        wall: results.iter().map(|r| r.wall).sum(),
-                        latency: lat,
-                        credit: d.credit,
-                        shed: u64::from(d.shed),
-                    }),
-                );
+                out.push(Response::StreamAck(StreamAckResp {
+                    stream: spec.id,
+                    seq: c.seq,
+                    ctx: ctx_name.clone(),
+                    variants: results.iter().map(|r| r.variant.clone()).collect(),
+                    workers: results.iter().map(|r| r.worker).collect(),
+                    modeled: results.iter().map(|r| r.modeled_total()).sum(),
+                    wall: results.iter().map(|r| r.wall).sum(),
+                    latency: lat,
+                    credit: d.credit,
+                    shed: u64::from(d.shed),
+                }));
             }
             Err(e) => {
                 state.dropped.fetch_add(1, Ordering::Relaxed);
                 shared.requests_err.fetch_add(1, Ordering::Relaxed);
-                send_line(
-                    &reply,
-                    &Response::Error {
-                        id: None,
-                        error: format!("stream {} chunk {}: {e:#}", spec.id, c.seq),
-                    },
-                );
+                out.push(Response::Error {
+                    id: None,
+                    error: format!("stream {} chunk {}: {e:#}", spec.id, c.seq),
+                });
             }
         }
         if d.changed {
             state.credit_signals.fetch_add(1, Ordering::Relaxed);
-            send_line(
-                &reply,
-                &Response::StreamCredit(StreamCreditResp {
-                    stream: spec.id,
-                    credit: d.credit,
-                    shed: u64::from(d.shed),
-                    queued_ms,
-                }),
-            );
+            out.push(Response::StreamCredit(StreamCreditResp {
+                stream: spec.id,
+                credit: d.credit,
+                shed: u64::from(d.shed),
+                queued_ms,
+            }));
         }
+        send_batch(&reply, &out);
         shared.gate.release();
     }
     // Close marker (or the session dropped the sender): flush summary
@@ -1481,8 +1661,18 @@ fn run_batch(shared: &Arc<Shared>, jobs: Vec<Job>) {
     let handle = std::thread::Builder::new()
         .name("serve-complete".into())
         .spawn(move || {
+            // group the batch's replies per lane: one coalesced write
+            // per session instead of one syscall per result
+            let mut by_lane: Vec<(ReplyLane, Vec<Response>)> = Vec::new();
             for (job, inst, ids) in submitted {
-                complete_job(&shared2, job, inst, ids, batch_size);
+                let (lane, resp) = complete_job(&shared2, job, inst, ids, batch_size);
+                match by_lane.iter_mut().find(|(l, _)| Arc::ptr_eq(l, &lane)) {
+                    Some((_, v)) => v.push(resp),
+                    None => by_lane.push((lane, vec![resp])),
+                }
+            }
+            for (lane, resps) in by_lane {
+                send_batch(&lane, &resps);
             }
             // every rider is done: release the shared input handles
             for h in group_handles {
@@ -1575,14 +1765,16 @@ fn submit_job(
     Ok((inst, ids))
 }
 
-/// Wait for one request's tasks, verify, reply, clean up, release.
+/// Wait for one request's tasks, verify, clean up, release; the reply
+/// itself is returned so the completion thread can coalesce a whole
+/// batch's responses into one write per reply lane.
 fn complete_job(
     shared: &Arc<Shared>,
     job: Job,
     inst: apps::Instance,
     ids: Vec<TaskId>,
     batch: usize,
-) {
+) -> (ReplyLane, Response) {
     let rt = &shared.rt;
     let waited = rt.wait_tasks(&ids);
     let results = rt.metrics().take_results_for(&ids);
@@ -1634,23 +1826,21 @@ fn complete_job(
         let _ = rt.unregister_data(h);
     }
 
-    match outcome {
+    let resp = match outcome {
         Ok(resp) => {
             shared.requests_ok.fetch_add(1, Ordering::Relaxed);
-            send_line(&job.reply, &Response::Result(resp));
+            Response::Result(resp)
         }
         Err(e) => {
             shared.requests_err.fetch_add(1, Ordering::Relaxed);
-            send_line(
-                &job.reply,
-                &Response::Error {
-                    id: Some(job.req.id),
-                    error: format!("{e:#}"),
-                },
-            );
+            Response::Error {
+                id: Some(job.req.id),
+                error: format!("{e:#}"),
+            }
         }
-    }
+    };
     shared.gate.release();
+    (job.reply, resp)
 }
 
 #[cfg(test)]

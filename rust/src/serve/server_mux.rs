@@ -1,0 +1,264 @@
+//! The multiplexed serve transport (`--transport epoll`): one thread
+//! runs every session through a readiness event loop instead of a
+//! thread per connection.
+//!
+//! Layout: token 0 is the self-wake channel, token 1 the listener,
+//! tokens >= 2 are connections. Each connection owns a nonblocking
+//! socket, a [`FrameDecoder`] fed from a pooled read buffer, and an
+//! [`Outbox`] of encoded reply frames. Completion threads and stream
+//! workers never touch a socket: they encode into pooled buffers,
+//! queue on the outbox, and ring the [`WakeHub`]; the loop drains each
+//! dirty outbox with one vectored write per readiness cycle.
+//!
+//! Admission backpressure is inherited unchanged: a submit that hits
+//! the gate cap blocks *the loop itself*, pausing all reads — which is
+//! exactly the pushback the threaded path applies per session, applied
+//! globally. Completions release the gate from their own threads, and
+//! the waker's nonblocking write guarantees they never deadlock
+//! against the stalled loop.
+
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+
+use crate::serve::transport::buffer::BufferPool;
+use crate::serve::transport::event_loop::{drain_wakes, WakeHub, Waker};
+use crate::serve::transport::poller::{Event, Poller};
+
+use super::*;
+
+const TOKEN_WAKE: u64 = 0;
+const TOKEN_LISTENER: u64 = 1;
+const TOKEN_BASE: u64 = 2;
+
+/// One multiplexed connection, owned by the loop thread.
+struct Conn {
+    stream: TcpStream,
+    token: u64,
+    sid: u64,
+    dec: FrameDecoder,
+    outbox: Arc<Outbox>,
+    reply: ReplyLane,
+    sess: SessionState,
+    /// Whether writable interest is currently armed in the poller.
+    want_write: bool,
+    /// Close once the outbox drains (quit acked / protocol desync).
+    closing: bool,
+}
+
+pub(super) fn event_loop(shared: Arc<Shared>, listener: TcpListener) {
+    if let Err(e) = run(&shared, listener) {
+        eprintln!("serve: event loop failed: {e:#}");
+    }
+}
+
+struct Loop {
+    poller: Poller,
+    hub: Arc<WakeHub>,
+    pool: Arc<BufferPool>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+}
+
+fn run(shared: &Arc<Shared>, listener: TcpListener) -> Result<()> {
+    let (waker, mut wake_rx) = Waker::pair().context("wake channel")?;
+    let mut lp = Loop {
+        poller: Poller::new_best(),
+        hub: Arc::new(WakeHub::new(waker)),
+        pool: Arc::new(BufferPool::serving_default()),
+        conns: HashMap::new(),
+        next_token: TOKEN_BASE,
+    };
+    lp.poller.register(wake_rx.as_raw_fd(), TOKEN_WAKE, false)?;
+    lp.poller
+        .register(listener.as_raw_fd(), TOKEN_LISTENER, false)?;
+    let mut events: Vec<Event> = Vec::new();
+    let mut dirty: Vec<u64> = Vec::new();
+    while !shared.draining.load(Ordering::SeqCst) {
+        events.clear();
+        // 100ms cap mirrors the threaded path's read timeout: the loop
+        // observes `draining` at the same cadence while fully idle
+        lp.poller.wait(&mut events, 100)?;
+        for ev in events.iter().copied() {
+            match ev.token {
+                TOKEN_WAKE => drain_wakes(&mut wake_rx),
+                TOKEN_LISTENER => accept_ready(shared, &listener, &mut lp),
+                tok => {
+                    let mut dead = false;
+                    if let Some(conn) = lp.conns.get_mut(&tok) {
+                        if ev.readable || ev.hangup {
+                            dead = !read_ready(shared, conn);
+                        }
+                        if !dead && (ev.writable || conn.outbox.pending()) {
+                            dead = !flush_conn(conn, &mut lp.poller);
+                        }
+                        if !dead && conn.closing && !conn.outbox.pending() {
+                            dead = true;
+                        }
+                    }
+                    if dead {
+                        close_conn(shared, &mut lp, tok);
+                    }
+                    if shared.draining.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+            }
+        }
+        // connections whose outboxes gained frames off-loop (batch
+        // completions, stream acks) since the last cycle
+        dirty.clear();
+        lp.hub.drain(&mut dirty);
+        dirty.sort_unstable();
+        dirty.dedup();
+        for tok in dirty.drain(..) {
+            let mut dead = false;
+            if let Some(conn) = lp.conns.get_mut(&tok) {
+                dead = !flush_conn(conn, &mut lp.poller);
+                if !dead && conn.closing && !conn.outbox.pending() {
+                    dead = true;
+                }
+            }
+            if dead {
+                close_conn(shared, &mut lp, tok);
+            }
+        }
+    }
+    // drain: flush what's queued best-effort, then tear every session
+    // down with the same cleanup the threaded path runs
+    let tokens: Vec<u64> = lp.conns.keys().copied().collect();
+    for tok in tokens {
+        close_conn(shared, &mut lp, tok);
+    }
+    Ok(())
+}
+
+fn accept_ready(shared: &Arc<Shared>, listener: &TcpListener, lp: &mut Loop) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                // final-flush path only; the loop never blocks on writes
+                let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+                let sid = shared.next_session.fetch_add(1, Ordering::Relaxed);
+                let token = lp.next_token;
+                lp.next_token += 1;
+                if lp.poller.register(stream.as_raw_fd(), token, false).is_err() {
+                    continue;
+                }
+                let outbox = Outbox::new(token, lp.hub.clone(), lp.pool.clone());
+                let reply: ReplyLane = Arc::new(ReplySink::Queued {
+                    outbox: outbox.clone(),
+                    framing: Mutex::new(Framing::Ndjson),
+                });
+                shared.rt.tenant_started();
+                lp.conns.insert(
+                    token,
+                    Conn {
+                        dec: FrameDecoder::with_buffer(Framing::Ndjson, lp.pool.take()),
+                        stream,
+                        token,
+                        sid,
+                        outbox,
+                        reply,
+                        sess: SessionState::default(),
+                        want_write: false,
+                        closing: false,
+                    },
+                );
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(_) => return,
+        }
+    }
+}
+
+/// Pull everything the socket has, dispatching each complete frame.
+/// Returns false when the connection is finished (EOF / error).
+fn read_ready(shared: &Arc<Shared>, conn: &mut Conn) -> bool {
+    loop {
+        loop {
+            match conn.dec.next() {
+                Ok(Some(v)) => {
+                    let keep = handle_frame(shared, &conn.reply, &v, conn.sid, &mut conn.sess);
+                    if conn.sess.framing != conn.dec.framing() {
+                        conn.dec.set_framing(conn.sess.framing);
+                    }
+                    if !keep {
+                        // stop reading; close once the bye is flushed
+                        conn.closing = true;
+                        return true;
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    send_line(
+                        &conn.reply,
+                        &Response::Error {
+                            id: None,
+                            error: format!("{e:#}"),
+                        },
+                    );
+                    conn.closing = true;
+                    return true;
+                }
+            }
+        }
+        match conn.dec.fill_from(&mut conn.stream) {
+            Ok(0) => return false, // EOF
+            Ok(_) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Drain the outbox as far as the socket accepts, arming or disarming
+/// writable interest to match. Returns false on a dead peer.
+fn flush_conn(conn: &mut Conn, poller: &mut Poller) -> bool {
+    match conn.outbox.flush(&mut conn.stream) {
+        Ok(drained) => {
+            let want = !drained;
+            if want != conn.want_write {
+                conn.want_write = want;
+                let _ = poller.modify(conn.stream.as_raw_fd(), conn.token, want);
+            }
+            true
+        }
+        Err(e) => {
+            eprintln!(
+                "serve: closing session {}, reply write failed: {e}",
+                conn.sid
+            );
+            false
+        }
+    }
+}
+
+/// Deregister, final-flush (so quit/shutdown acks reach the peer),
+/// close the outbox, and run the threaded path's session cleanup.
+fn close_conn(shared: &Arc<Shared>, lp: &mut Loop, token: u64) {
+    let Some(mut conn) = lp.conns.remove(&token) else {
+        return;
+    };
+    let _ = lp.poller.deregister(conn.stream.as_raw_fd());
+    if conn.outbox.pending() {
+        // switch to blocking with the write deadline for the last mile
+        if conn.stream.set_nonblocking(false).is_ok() {
+            let _ = conn.outbox.flush(&mut conn.stream);
+        }
+    }
+    conn.outbox.close();
+    lp.pool.put(conn.dec.into_buffer());
+    let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+    for (_, h) in std::mem::take(&mut conn.sess.streams) {
+        close_stream(shared, h);
+    }
+    if let Some(a) = shared.autoscale.lock().unwrap().as_ref() {
+        a.release_session(conn.sid);
+    }
+    shared.rt.tenant_finished();
+}

@@ -1,0 +1,502 @@
+//! Framing codecs: how protocol values become bytes on a socket.
+//!
+//! Two framings, negotiated per-session in `hello` (protocol v7):
+//!
+//! - **ndjson** — one JSON object per `\n`-terminated line. Default.
+//!   Human-readable, `nc`-debuggable, and what every pre-v7 peer
+//!   speaks.
+//! - **binary** — `[u32 LE payload length][payload]` where the payload
+//!   is a compact tagged binary encoding of the same JSON value tree
+//!   (tag byte per node, LEB128 varint lengths, f64 as 8 LE bytes).
+//!   No escaping, no float formatting/reparsing, and the decoder knows
+//!   frame boundaries up front — meaningfully cheaper per message on
+//!   hot serving paths.
+//!
+//! Everything here is a pure function over byte buffers: the blocking
+//! per-thread path, the readiness event loop, the client, and the
+//! router's backend connections all share this code. [`FrameDecoder`]
+//! is an incremental state machine — bytes arrive in arbitrary splits
+//! (partial reads) and frames are surfaced exactly once, complete.
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+
+use crate::util::json::{self, Json};
+
+/// Hard cap on a single frame's payload; a peer announcing more than
+/// this is corrupt or hostile and the connection is dropped.
+pub const MAX_FRAME: usize = 16 * 1024 * 1024;
+
+/// How many bytes a decoder pulls from the socket per `fill_from`.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Wire framing for one session, fixed after `hello` negotiation.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum Framing {
+    #[default]
+    Ndjson,
+    Binary,
+}
+
+impl Framing {
+    pub fn parse(s: &str) -> Result<Framing> {
+        match s {
+            "ndjson" | "json" => Ok(Framing::Ndjson),
+            "binary" | "bin" => Ok(Framing::Binary),
+            other => bail!("unknown framing '{other}' (expected ndjson|binary)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Framing::Ndjson => "ndjson",
+            Framing::Binary => "binary",
+        }
+    }
+}
+
+// ---------------------------------------------------------------- binary value codec
+
+const TAG_NULL: u8 = 0;
+const TAG_FALSE: u8 = 1;
+const TAG_TRUE: u8 = 2;
+const TAG_NUM: u8 = 3;
+const TAG_STR: u8 = 4;
+const TAG_ARR: u8 = 5;
+const TAG_OBJ: u8 = 6;
+
+/// Nesting depth cap for the binary decoder (the JSON parser has an
+/// equivalent guard); protocol messages are at most 3 levels deep.
+const MAX_DEPTH: u32 = 64;
+
+fn put_varint(out: &mut Vec<u8>, mut n: u64) {
+    loop {
+        let b = (n & 0x7f) as u8;
+        n >>= 7;
+        if n == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Append the tagged binary encoding of `v` to `out`.
+pub fn encode_value(v: &Json, out: &mut Vec<u8>) {
+    match v {
+        Json::Null => out.push(TAG_NULL),
+        Json::Bool(false) => out.push(TAG_FALSE),
+        Json::Bool(true) => out.push(TAG_TRUE),
+        Json::Num(x) => {
+            out.push(TAG_NUM);
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        Json::Str(s) => {
+            out.push(TAG_STR);
+            put_varint(out, s.len() as u64);
+            out.extend_from_slice(s.as_bytes());
+        }
+        Json::Arr(items) => {
+            out.push(TAG_ARR);
+            put_varint(out, items.len() as u64);
+            for it in items {
+                encode_value(it, out);
+            }
+        }
+        Json::Obj(map) => {
+            out.push(TAG_OBJ);
+            put_varint(out, map.len() as u64);
+            for (k, val) in map {
+                put_varint(out, k.len() as u64);
+                out.extend_from_slice(k.as_bytes());
+                encode_value(val, out);
+            }
+        }
+    }
+}
+
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn u8(&mut self) -> Result<u8> {
+        let Some(&b) = self.b.get(self.i) else {
+            bail!("truncated binary value at byte {}", self.i);
+        };
+        self.i += 1;
+        Ok(b)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.i < n {
+            bail!(
+                "truncated binary value: need {n} bytes at offset {}, have {}",
+                self.i,
+                self.b.len() - self.i
+            );
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn varint(&mut self) -> Result<u64> {
+        let mut n: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            if shift >= 63 && b > 1 {
+                bail!("varint overflow in binary value");
+            }
+            n |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                return Ok(n);
+            }
+            shift += 7;
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.varint()? as usize;
+        if len > MAX_FRAME {
+            bail!("binary string of {len} bytes exceeds frame cap");
+        }
+        let bytes = self.take(len)?;
+        Ok(std::str::from_utf8(bytes)
+            .context("non-utf8 string in binary value")?
+            .to_string())
+    }
+}
+
+fn read_value(c: &mut Cur<'_>, depth: u32) -> Result<Json> {
+    if depth > MAX_DEPTH {
+        bail!("binary value nests deeper than {MAX_DEPTH}");
+    }
+    Ok(match c.u8()? {
+        TAG_NULL => Json::Null,
+        TAG_FALSE => Json::Bool(false),
+        TAG_TRUE => Json::Bool(true),
+        TAG_NUM => {
+            let raw = c.take(8)?;
+            let mut le = [0u8; 8];
+            le.copy_from_slice(raw);
+            Json::Num(f64::from_le_bytes(le))
+        }
+        TAG_STR => Json::Str(c.string()?),
+        TAG_ARR => {
+            let n = c.varint()? as usize;
+            let mut items = Vec::new();
+            for _ in 0..n {
+                items.push(read_value(c, depth + 1)?);
+            }
+            Json::Arr(items)
+        }
+        TAG_OBJ => {
+            let n = c.varint()? as usize;
+            let mut map = std::collections::BTreeMap::new();
+            for _ in 0..n {
+                let k = c.string()?;
+                let v = read_value(c, depth + 1)?;
+                map.insert(k, v);
+            }
+            Json::Obj(map)
+        }
+        t => bail!("unknown binary value tag {t}"),
+    })
+}
+
+/// Decode one complete binary payload; rejects trailing garbage.
+pub fn decode_value(buf: &[u8]) -> Result<Json> {
+    let mut c = Cur { b: buf, i: 0 };
+    let v = read_value(&mut c, 0)?;
+    if c.i != buf.len() {
+        bail!("{} trailing bytes after binary value", buf.len() - c.i);
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------- framing
+
+/// Append one complete frame carrying `v` in the given framing.
+pub fn encode_frame(framing: Framing, v: &Json, out: &mut Vec<u8>) {
+    match framing {
+        Framing::Ndjson => {
+            out.extend_from_slice(json::to_string(v).as_bytes());
+            out.push(b'\n');
+        }
+        Framing::Binary => {
+            let start = out.len();
+            out.extend_from_slice(&[0u8; 4]);
+            encode_value(v, out);
+            let len = out.len() - start - 4;
+            debug_assert!(len <= MAX_FRAME, "oversized outbound frame");
+            out[start..start + 4].copy_from_slice(&(len as u32).to_le_bytes());
+        }
+    }
+}
+
+/// Incremental frame extractor. Feed it bytes in whatever chunks the
+/// socket produces (`push` / `fill_from`); `next` yields each complete
+/// message value exactly once, or `None` when more bytes are needed.
+/// Switching framing mid-stream (after `hello`) is byte-exact: bytes
+/// already buffered are reinterpreted under the new framing, so a peer
+/// may pipeline its first binary frame right behind the ndjson hello.
+pub struct FrameDecoder {
+    framing: Framing,
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl FrameDecoder {
+    pub fn new(framing: Framing) -> FrameDecoder {
+        FrameDecoder::with_buffer(framing, Vec::new())
+    }
+
+    /// Build a decoder around a recycled buffer (see
+    /// [`super::BufferPool`]); pair with [`FrameDecoder::into_buffer`].
+    pub fn with_buffer(framing: Framing, mut buf: Vec<u8>) -> FrameDecoder {
+        buf.clear();
+        FrameDecoder {
+            framing,
+            buf,
+            start: 0,
+        }
+    }
+
+    pub fn framing(&self) -> Framing {
+        self.framing
+    }
+
+    pub fn set_framing(&mut self, f: Framing) {
+        self.framing = f;
+    }
+
+    /// Bytes buffered but not yet surfaced as frames.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Reclaim the internal buffer for a pool.
+    pub fn into_buffer(mut self) -> Vec<u8> {
+        self.buf.clear();
+        self.buf
+    }
+
+    fn compact(&mut self) {
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start > 4096 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+    }
+
+    /// Append raw bytes (tests and in-memory paths).
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.compact();
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pull one read's worth of bytes from `r` into the buffer.
+    /// Returns `Ok(0)` on EOF, propagates `WouldBlock`/`TimedOut`.
+    pub fn fill_from(&mut self, r: &mut impl Read) -> std::io::Result<usize> {
+        self.compact();
+        let len = self.buf.len();
+        self.buf.resize(len + READ_CHUNK, 0);
+        match r.read(&mut self.buf[len..]) {
+            Ok(n) => {
+                self.buf.truncate(len + n);
+                Ok(n)
+            }
+            Err(e) => {
+                self.buf.truncate(len);
+                Err(e)
+            }
+        }
+    }
+
+    /// Extract the next complete frame, if any. An error means the
+    /// stream is corrupt and the connection should be closed.
+    pub fn next(&mut self) -> Result<Option<Json>> {
+        loop {
+            match self.framing {
+                Framing::Ndjson => {
+                    let rel = match self.buf[self.start..].iter().position(|&b| b == b'\n') {
+                        Some(i) => i,
+                        None => {
+                            if self.buffered() > MAX_FRAME {
+                                bail!("ndjson line exceeds frame cap {MAX_FRAME}");
+                            }
+                            return Ok(None);
+                        }
+                    };
+                    let line_start = self.start;
+                    self.start += rel + 1;
+                    let text = std::str::from_utf8(&self.buf[line_start..line_start + rel])
+                        .context("non-utf8 ndjson frame")?
+                        .trim();
+                    if text.is_empty() {
+                        continue; // tolerate blank keepalive lines
+                    }
+                    let v = json::parse(text)
+                        .map_err(|e| anyhow::anyhow!("bad ndjson frame: {e}"))?;
+                    return Ok(Some(v));
+                }
+                Framing::Binary => {
+                    let avail = self.buf.len() - self.start;
+                    if avail < 4 {
+                        return Ok(None);
+                    }
+                    let p = self.start;
+                    let len = u32::from_le_bytes([
+                        self.buf[p],
+                        self.buf[p + 1],
+                        self.buf[p + 2],
+                        self.buf[p + 3],
+                    ]) as usize;
+                    if len > MAX_FRAME {
+                        bail!("binary frame of {len} bytes exceeds cap {MAX_FRAME}");
+                    }
+                    if avail < 4 + len {
+                        return Ok(None);
+                    }
+                    let v = decode_value(&self.buf[p + 4..p + 4 + len])?;
+                    self.start += 4 + len;
+                    return Ok(Some(v));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn sample_value() -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("op".to_string(), Json::Str("submit".into()));
+        obj.insert("id".to_string(), Json::Num(42.0));
+        obj.insert("neg".to_string(), Json::Num(-1.5));
+        obj.insert("ok".to_string(), Json::Bool(true));
+        obj.insert("none".to_string(), Json::Null);
+        obj.insert(
+            "arr".to_string(),
+            Json::Arr(vec![
+                Json::Num(0.0),
+                Json::Str("x\"esc\\ape\n".into()),
+                Json::Bool(false),
+                Json::Obj(BTreeMap::new()),
+            ]),
+        );
+        Json::Obj(obj)
+    }
+
+    #[test]
+    fn binary_value_roundtrips() {
+        let v = sample_value();
+        let mut bytes = Vec::new();
+        encode_value(&v, &mut bytes);
+        let back = decode_value(&bytes).unwrap();
+        assert_eq!(json::to_string(&v), json::to_string(&back));
+    }
+
+    #[test]
+    fn binary_value_rejects_garbage() {
+        assert!(decode_value(&[]).is_err());
+        assert!(decode_value(&[99]).is_err());
+        // Truncated string payload.
+        assert!(decode_value(&[TAG_STR, 10, b'a']).is_err());
+        // Trailing bytes after a complete value.
+        assert!(decode_value(&[TAG_NULL, TAG_NULL]).is_err());
+    }
+
+    #[test]
+    fn frames_roundtrip_both_framings() {
+        for framing in [Framing::Ndjson, Framing::Binary] {
+            let v = sample_value();
+            let mut wire = Vec::new();
+            encode_frame(framing, &v, &mut wire);
+            encode_frame(framing, &v, &mut wire);
+            let mut dec = FrameDecoder::new(framing);
+            dec.push(&wire);
+            for _ in 0..2 {
+                let got = dec.next().unwrap().expect("frame");
+                assert_eq!(json::to_string(&v), json::to_string(&got));
+            }
+            assert!(dec.next().unwrap().is_none());
+            assert_eq!(dec.buffered(), 0);
+        }
+    }
+
+    #[test]
+    fn decoder_resumes_across_partial_reads() {
+        // Feed the wire image one byte at a time: frames must surface
+        // exactly once each, only when complete.
+        for framing in [Framing::Ndjson, Framing::Binary] {
+            let v = sample_value();
+            let mut wire = Vec::new();
+            for _ in 0..3 {
+                encode_frame(framing, &v, &mut wire);
+            }
+            let mut dec = FrameDecoder::new(framing);
+            let mut got = 0;
+            for b in &wire {
+                dec.push(std::slice::from_ref(b));
+                while let Some(frame) = dec.next().unwrap() {
+                    assert_eq!(json::to_string(&v), json::to_string(&frame));
+                    got += 1;
+                }
+            }
+            assert_eq!(got, 3, "framing {:?}", framing);
+        }
+    }
+
+    #[test]
+    fn decoder_switches_framing_mid_stream() {
+        // ndjson hello followed immediately by a pipelined binary
+        // frame in the same byte stream — the v7 negotiation shape.
+        let v = sample_value();
+        let mut wire = Vec::new();
+        encode_frame(Framing::Ndjson, &v, &mut wire);
+        encode_frame(Framing::Binary, &v, &mut wire);
+        let mut dec = FrameDecoder::new(Framing::Ndjson);
+        dec.push(&wire);
+        let first = dec.next().unwrap().expect("ndjson frame");
+        assert_eq!(json::to_string(&v), json::to_string(&first));
+        dec.set_framing(Framing::Binary);
+        let second = dec.next().unwrap().expect("binary frame");
+        assert_eq!(json::to_string(&v), json::to_string(&second));
+        assert!(dec.next().unwrap().is_none());
+    }
+
+    #[test]
+    fn decoder_skips_blank_ndjson_lines() {
+        let mut dec = FrameDecoder::new(Framing::Ndjson);
+        dec.push(b"\n  \n{\"a\":1}\n");
+        let v = dec.next().unwrap().expect("frame");
+        assert_eq!(json::to_string(&v), "{\"a\":1}");
+    }
+
+    #[test]
+    fn decoder_rejects_oversized_binary_frame() {
+        let mut dec = FrameDecoder::new(Framing::Binary);
+        dec.push(&(u32::MAX).to_le_bytes());
+        assert!(dec.next().is_err());
+    }
+
+    #[test]
+    fn varint_boundaries_roundtrip() {
+        for n in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut out = Vec::new();
+            put_varint(&mut out, n);
+            let mut c = Cur { b: &out, i: 0 };
+            assert_eq!(c.varint().unwrap(), n);
+            assert_eq!(c.i, out.len());
+        }
+    }
+}

@@ -1,0 +1,314 @@
+//! Event-loop plumbing shared by the multiplexed serve transport: a
+//! cross-thread waker, a dirty-connection hub, and per-connection
+//! outbound queues with vectored, coalescing flushes.
+//!
+//! The loop thread owns every connection socket; completion threads,
+//! stream workers, and the dispatcher never touch a socket directly.
+//! They encode a frame into a pooled buffer, enqueue it on the
+//! connection's [`Outbox`], and ring the [`WakeHub`] — the loop then
+//! drains each dirty outbox with a single `writev`-style vectored
+//! write per readiness cycle, so a batch completion's worth of
+//! results (or an ack + credit pair) costs one syscall, not N.
+
+use std::collections::VecDeque;
+use std::io::{self, IoSlice, Read, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::{Arc, Mutex};
+
+use super::buffer::BufferPool;
+
+/// Most frames batched into one vectored write (IOV_MAX headroom).
+const MAX_IOVS: usize = 64;
+
+/// Write half of the loop's self-wake channel. Nonblocking: a full
+/// pipe already guarantees a pending wake, so `wake` never blocks —
+/// which is what makes it safe to call while the loop itself is
+/// stalled in a blocking admission acquire.
+pub struct Waker {
+    tx: UnixStream,
+}
+
+impl Waker {
+    /// Build the wake channel; the returned stream is the read half,
+    /// to be registered (nonblocking) in the poller.
+    pub fn pair() -> io::Result<(Waker, UnixStream)> {
+        let (tx, rx) = UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok((Waker { tx }, rx))
+    }
+
+    pub fn wake(&self) {
+        // WouldBlock means the pipe is already full of wakes: fine.
+        let _ = (&self.tx).write(&[1u8]);
+    }
+}
+
+/// Drain all pending wake bytes (the loop calls this on readability).
+pub fn drain_wakes(rx: &mut UnixStream) {
+    let mut sink = [0u8; 256];
+    while matches!(rx.read(&mut sink), Ok(n) if n > 0) {}
+}
+
+/// Wake fan-in: producers note which connection has pending output,
+/// the loop drains the set each cycle.
+pub struct WakeHub {
+    waker: Waker,
+    dirty: Mutex<Vec<u64>>,
+}
+
+impl WakeHub {
+    pub fn new(waker: Waker) -> WakeHub {
+        WakeHub {
+            waker,
+            dirty: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn notify(&self, token: u64) {
+        self.dirty.lock().unwrap().push(token);
+        self.waker.wake();
+    }
+
+    /// Move the dirty set into `out` (deduplicated, order-preserving
+    /// enough: tokens are deduped after sort by the caller's map).
+    pub fn drain(&self, out: &mut Vec<u64>) {
+        let mut d = self.dirty.lock().unwrap();
+        out.append(&mut d);
+    }
+}
+
+struct OutboxInner {
+    frames: VecDeque<Vec<u8>>,
+    /// Bytes of the front frame already written (short-write cursor).
+    head: usize,
+    closed: bool,
+}
+
+/// One connection's outbound frame queue. Thread-safe producer side
+/// (`send`), loop-owned consumer side (`flush`). Frames come from and
+/// return to the shared [`BufferPool`].
+pub struct Outbox {
+    token: u64,
+    inner: Mutex<OutboxInner>,
+    hub: Arc<WakeHub>,
+    pool: Arc<BufferPool>,
+}
+
+impl Outbox {
+    pub fn new(token: u64, hub: Arc<WakeHub>, pool: Arc<BufferPool>) -> Arc<Outbox> {
+        Arc::new(Outbox {
+            token,
+            inner: Mutex::new(OutboxInner {
+                frames: VecDeque::new(),
+                head: 0,
+                closed: false,
+            }),
+            hub,
+            pool,
+        })
+    }
+
+    pub fn token(&self) -> u64 {
+        self.token
+    }
+
+    /// The buffer pool frames are drawn from and recycled to.
+    pub fn pool(&self) -> &BufferPool {
+        &self.pool
+    }
+
+    /// Queue one encoded frame and wake the loop. Returns false (and
+    /// recycles the buffer) if the connection is already closed.
+    pub fn send(&self, frame: Vec<u8>) -> bool {
+        if frame.is_empty() {
+            self.pool.put(frame);
+            return true;
+        }
+        {
+            let mut q = self.inner.lock().unwrap();
+            if q.closed {
+                drop(q);
+                self.pool.put(frame);
+                return false;
+            }
+            q.frames.push_back(frame);
+        }
+        self.hub.notify(self.token);
+        true
+    }
+
+    /// Mark closed and recycle anything still queued. Late completions
+    /// for a dead client become no-ops, mirroring the blocking path's
+    /// "a dead client is not a server error" stance.
+    pub fn close(&self) {
+        let mut q = self.inner.lock().unwrap();
+        q.closed = true;
+        q.head = 0;
+        while let Some(f) = q.frames.pop_front() {
+            self.pool.put(f);
+        }
+    }
+
+    pub fn pending(&self) -> bool {
+        !self.inner.lock().unwrap().frames.is_empty()
+    }
+
+    /// Write as much queued output as `w` accepts, coalescing up to
+    /// [`MAX_IOVS`] frames per vectored write. Returns `Ok(true)` when
+    /// fully drained, `Ok(false)` when the writer would block with
+    /// bytes still queued (caller arms writable interest), `Err` on a
+    /// dead peer. Partial writes resume from the exact byte offset.
+    pub fn flush(&self, w: &mut impl Write) -> io::Result<bool> {
+        loop {
+            let mut q = self.inner.lock().unwrap();
+            if q.frames.is_empty() {
+                return Ok(true);
+            }
+            let head = q.head;
+            let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(q.frames.len().min(MAX_IOVS));
+            for (i, f) in q.frames.iter().take(MAX_IOVS).enumerate() {
+                if i == 0 {
+                    slices.push(IoSlice::new(&f[head..]));
+                } else {
+                    slices.push(IoSlice::new(f));
+                }
+            }
+            let wrote = match w.write_vectored(&slices) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            let mut left = wrote;
+            while left > 0 {
+                let front_rem = q.frames[0].len() - q.head;
+                if left >= front_rem {
+                    left -= front_rem;
+                    q.head = 0;
+                    let done = q.frames.pop_front().expect("front frame");
+                    self.pool.put(done);
+                } else {
+                    q.head += left;
+                    left = 0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Writer that accepts at most `cap` bytes per call — exercises
+    /// the short-write resumption cursor.
+    struct Trickle {
+        out: Vec<u8>,
+        cap: usize,
+    }
+
+    impl Write for Trickle {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            let n = buf.len().min(self.cap);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        // write_vectored's default impl forwards the first nonempty
+        // slice to write(), which is exactly the trickle we want.
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn outbox() -> (Arc<Outbox>, Arc<BufferPool>) {
+        let (waker, _rx) = Waker::pair().unwrap();
+        let hub = Arc::new(WakeHub::new(waker));
+        let pool = Arc::new(BufferPool::new(16, 64));
+        (Outbox::new(3, hub, pool.clone()), pool)
+    }
+
+    #[test]
+    fn flush_resumes_after_short_writes() {
+        let (ob, _pool) = outbox();
+        ob.send(b"hello ".to_vec());
+        ob.send(b"coalesced ".to_vec());
+        ob.send(b"world".to_vec());
+        let mut w = Trickle {
+            out: Vec::new(),
+            cap: 4,
+        };
+        assert!(ob.flush(&mut w).unwrap());
+        assert_eq!(w.out, b"hello coalesced world");
+        assert!(!ob.pending());
+    }
+
+    #[test]
+    fn flush_reports_wouldblock_and_resumes() {
+        struct Blocky {
+            out: Vec<u8>,
+            budget: usize,
+        }
+        impl Write for Blocky {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                if self.budget == 0 {
+                    return Err(io::ErrorKind::WouldBlock.into());
+                }
+                let n = buf.len().min(self.budget);
+                self.budget -= n;
+                self.out.extend_from_slice(&buf[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let (ob, _pool) = outbox();
+        ob.send(b"abcdefgh".to_vec());
+        let mut w = Blocky {
+            out: Vec::new(),
+            budget: 3,
+        };
+        assert!(!ob.flush(&mut w).unwrap(), "short write leaves residue");
+        assert!(ob.pending());
+        w.budget = 100;
+        assert!(ob.flush(&mut w).unwrap());
+        assert_eq!(w.out, b"abcdefgh");
+    }
+
+    #[test]
+    fn closed_outbox_recycles_frames() {
+        let (ob, pool) = outbox();
+        ob.send(b"queued".to_vec());
+        ob.close();
+        assert!(!ob.pending());
+        assert!(!ob.send(b"late".to_vec()), "sends after close are no-ops");
+        // Both buffers went back to the pool.
+        let b1 = pool.take();
+        let b2 = pool.take();
+        assert!(b1.capacity() > 0 && b2.capacity() > 0);
+        let (hits, _) = pool.counters();
+        assert_eq!(hits, 2);
+    }
+
+    #[test]
+    fn wake_hub_collects_dirty_tokens() {
+        let (waker, mut rx) = Waker::pair().unwrap();
+        let hub = WakeHub::new(waker);
+        hub.notify(1);
+        hub.notify(2);
+        hub.notify(1);
+        let mut sink = [0u8; 16];
+        assert!(matches!(rx.read(&mut sink), Ok(n) if n > 0));
+        drain_wakes(&mut rx);
+        let mut toks = Vec::new();
+        hub.drain(&mut toks);
+        toks.sort_unstable();
+        toks.dedup();
+        assert_eq!(toks, vec![1, 2]);
+        toks.clear();
+        hub.drain(&mut toks);
+        assert!(toks.is_empty());
+    }
+}

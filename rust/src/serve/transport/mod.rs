@@ -1,0 +1,73 @@
+//! Transport layer for the serve wire protocol: framing codecs,
+//! pooled buffers, and a readiness-driven event loop.
+//!
+//! The serve stack historically ran one blocking thread per connection
+//! with line-delimited JSON. This module factors the wire concerns out
+//! of the session logic so the same protocol state machine can run on
+//! either of two transports:
+//!
+//! - **threads** — the classic blocking path (one session thread per
+//!   connection), kept as the default for debuggability and tests;
+//! - **epoll** — a readiness-driven event loop (epoll(7) on Linux via
+//!   a thin FFI shim, portable poll(2) everywhere else) multiplexing
+//!   thousands of non-blocking sessions on one thread.
+//!
+//! Orthogonally, each session negotiates a *framing* in `hello`
+//! (protocol v7): newline-delimited JSON (the default, debuggable with
+//! `nc`) or a compact length-prefixed binary encoding of the same
+//! message values. Both transports speak both framings; the decoder
+//! ([`codec::FrameDecoder`]) and encoder ([`codec::encode_frame`]) are
+//! pure functions over byte buffers shared by every path, including
+//! the cluster router's backend connections.
+
+pub mod buffer;
+pub mod codec;
+#[cfg(unix)]
+pub mod event_loop;
+#[cfg(unix)]
+pub mod poller;
+
+pub use buffer::BufferPool;
+pub use codec::{encode_frame, FrameDecoder, Framing};
+
+use anyhow::{bail, Result};
+
+/// Which connection transport the server runs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum TransportKind {
+    /// One blocking thread per connection (the historical path).
+    #[default]
+    Threads,
+    /// Readiness event loop: epoll on Linux, poll(2) fallback.
+    Epoll,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        match s {
+            "threads" | "thread" | "blocking" => Ok(TransportKind::Threads),
+            "epoll" | "poll" | "event" => Ok(TransportKind::Epoll),
+            other => bail!("unknown transport '{other}' (expected epoll|threads)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Threads => "threads",
+            TransportKind::Epoll => "epoll",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("threads").unwrap(), TransportKind::Threads);
+        assert_eq!(TransportKind::parse("epoll").unwrap(), TransportKind::Epoll);
+        assert!(TransportKind::parse("uring").is_err());
+        assert_eq!(TransportKind::default().name(), "threads");
+    }
+}

@@ -25,6 +25,7 @@ fn serve_opts(selector: SelectorKind) -> ServeOptions {
         autoscale: None,
         batch_window: Duration::from_micros(200),
         max_batch: 8,
+        ..ServeOptions::default()
     }
 }
 

@@ -22,6 +22,7 @@ fn opts(contexts: &str) -> ServeOptions {
         batch_window: Duration::from_micros(200),
         max_batch: 8,
         autoscale: None,
+        ..ServeOptions::default()
     }
 }
 

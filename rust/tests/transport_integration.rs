@@ -1,0 +1,252 @@
+//! Integration tests for the v7 transport layer: binary framing
+//! negotiated alongside ndjson sessions on one server, the epoll
+//! readiness transport end to end (submits, pipelining, streams), the
+//! router forwarding both framings to its shards, and a
+//! many-connection fan-out that a thread-per-connection client count
+//! would never reach per thread of server.
+
+use std::time::Duration;
+
+use compar::serve::{
+    loadgen, parse_contexts, Client, ClientConfig, Framing, LoadgenOptions, Response,
+    ServeOptions, Server, SubmitReq, TransportKind,
+};
+use compar::taskrt::{SchedPolicy, SelectorKind};
+
+fn opts(contexts: &str, transport: TransportKind) -> ServeOptions {
+    ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        contexts: parse_contexts(contexts).unwrap(),
+        sched: SchedPolicy::Dmda,
+        selector: Some(SelectorKind::Greedy),
+        ncpu: 4,
+        ncuda: 0,
+        max_inflight: 16,
+        batch_window: Duration::from_micros(200),
+        max_batch: 8,
+        autoscale: None,
+        transport,
+    }
+}
+
+fn submit(id: u64, size: usize, ctx: Option<&str>, seed: u64) -> SubmitReq {
+    SubmitReq {
+        id,
+        app: "matmul".into(),
+        size,
+        tasks: 1,
+        ctx: ctx.map(str::to_string),
+        seed,
+        variant: None,
+        verify: true,
+    }
+}
+
+fn binary_cfg() -> ClientConfig {
+    ClientConfig {
+        framing: Framing::Binary,
+        ..ClientConfig::default()
+    }
+}
+
+/// One server, two live sessions in different framings: the binary
+/// session really negotiates binary (server echo), both compute
+/// correct results, and neither corrupts the other's stream.
+#[test]
+fn mixed_framing_clients_share_one_server() {
+    for transport in [TransportKind::Threads, TransportKind::Epoll] {
+        let server = Server::start(opts("", transport)).unwrap();
+        let addr = server.local_addr().to_string();
+
+        let mut bin = Client::connect_cfg(&addr, &binary_cfg()).unwrap();
+        assert_eq!(bin.framing(), Framing::Binary, "hello echo accepted");
+        let mut nd = Client::connect(&addr).unwrap();
+        assert_eq!(nd.framing(), Framing::Ndjson, "default stays ndjson");
+
+        // interleave submits across the two sessions
+        for r in 0..4u64 {
+            let rb = bin.submit(submit(r, 32, None, 100 + r)).unwrap();
+            assert!(rb.rel_err <= 5e-3, "binary client rel_err {}", rb.rel_err);
+            let rn = nd.submit(submit(r, 32, None, 200 + r)).unwrap();
+            assert!(rn.rel_err <= 5e-3, "ndjson client rel_err {}", rn.rel_err);
+        }
+        // protocol errors come back on the negotiated framing too
+        let e = bin.submit(submit(9, 32, Some("nope"), 1)).unwrap_err();
+        assert!(format!("{e:#}").contains("unknown context"), "{e:#}");
+
+        bin.quit().unwrap();
+        nd.quit().unwrap();
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.requests_ok, 8, "transport {}", transport.name());
+        assert_eq!(stats.requests_err, 1);
+        assert_eq!(stats.inflight, 0);
+    }
+}
+
+/// A hello asking for a framing the server does not speak is rejected
+/// with an error (in ndjson, since the session never switched), and
+/// the session keeps working after a corrected hello.
+#[test]
+fn unknown_framing_is_rejected_in_hello() {
+    use std::io::{BufRead, BufReader, Write};
+    for transport in [TransportKind::Threads, TransportKind::Epoll] {
+        let server = Server::start(opts("", transport)).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(raw.try_clone().unwrap());
+        raw.write_all(b"{\"op\":\"hello\",\"client\":\"raw\",\"framing\":\"msgpack\"}\n")
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"error\""), "{line}");
+        assert!(line.contains("unknown framing"), "{line}");
+        // the session survives and a valid hello still negotiates
+        raw.write_all(b"{\"op\":\"hello\",\"client\":\"raw\",\"framing\":\"binary\"}\n")
+            .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"hello\""), "{line}");
+        assert!(line.contains("\"binary\""), "echo confirms switch: {line}");
+        drop(raw);
+        server.shutdown().unwrap();
+    }
+}
+
+/// Pipelined binary traffic over the epoll transport: out-of-order
+/// completions, correlation ids, and the coalesced reply path.
+#[test]
+fn epoll_transport_pipelines_binary_sessions() {
+    let server = Server::start(opts("alpha:2,beta:2", TransportKind::Epoll)).unwrap();
+    let addr = server.local_addr().to_string();
+    let lg = LoadgenOptions {
+        clients: 4,
+        requests: 6,
+        app: "matmul".into(),
+        size: 32,
+        ctxs: vec!["alpha".into(), "beta".into()],
+        pipeline: 3,
+        framing: Framing::Binary,
+        ..LoadgenOptions::default()
+    };
+    let report = loadgen::run(&addr, &lg).unwrap();
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.requests, 24);
+    assert!(report.rps > 0.0);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests_ok, 24);
+    assert_eq!(stats.inflight, 0, "epoll drain left requests behind");
+}
+
+/// v6 stream sessions ride the epoll transport: open, credit-gated
+/// chunks, acks with latency, clean close. Exercises the queued reply
+/// lane from a stream worker thread.
+#[test]
+fn epoll_transport_runs_stream_sessions() {
+    let server = Server::start(opts("", TransportKind::Epoll)).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut c = Client::connect_cfg(&addr, &binary_cfg()).unwrap();
+    let opened = c
+        .stream_open(compar::serve::StreamOpenReq {
+            id: 1,
+            app: "sort".into(),
+            size: 256,
+            stages: 1,
+            window: 0,
+            slide: 0,
+            ctx: None,
+            slo_ms: None,
+        })
+        .unwrap();
+    assert!(opened.credit >= 1);
+    let mut acked = 0usize;
+    let mut inflight = 0u64;
+    let mut credit = opened.credit.max(1);
+    for seq in 0..6u64 {
+        while inflight >= credit {
+            match c.recv_response().unwrap() {
+                Response::StreamAck(a) => {
+                    credit = a.credit.max(1);
+                    inflight -= 1;
+                    acked += 1;
+                }
+                Response::StreamCredit(cr) => credit = cr.credit.max(1),
+                other => panic!("{other:?}"),
+            }
+        }
+        c.send_stream_chunk(1, seq, 40 + seq).unwrap();
+        inflight += 1;
+    }
+    while inflight > 0 {
+        match c.recv_response().unwrap() {
+            Response::StreamAck(_) => {
+                inflight -= 1;
+                acked += 1;
+            }
+            Response::StreamCredit(_) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+    assert_eq!(acked, 6, "every chunk acked");
+    let closed = c.stream_close(1).unwrap();
+    assert_eq!(closed.chunks, 6);
+    c.quit().unwrap();
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.streams, 0, "stream closed before drain");
+}
+
+/// The router forwards each session's negotiated framing to its
+/// backend hops: a binary client and an ndjson client drive the same
+/// two-shard cluster and both see shard-tagged results.
+#[test]
+fn router_forwards_both_framings() {
+    use compar::cluster::{LocalCluster, RouterOptions};
+    let serve = opts("", TransportKind::Threads);
+    let ropts = RouterOptions {
+        listen: "127.0.0.1:0".into(),
+        ..RouterOptions::default()
+    };
+    let cluster = LocalCluster::start(2, &serve, ropts).unwrap();
+    let addr = cluster.addr();
+
+    let mut bin = Client::connect_cfg(&addr, &binary_cfg()).unwrap();
+    assert_eq!(bin.framing(), Framing::Binary);
+    let mut nd = Client::connect(&addr).unwrap();
+    for r in 0..6u64 {
+        let rb = bin.submit(submit(r, 32, None, 500 + r)).unwrap();
+        assert!(rb.ctx.starts_with("shard"), "router tags ctx: {}", rb.ctx);
+        assert!(rb.rel_err <= 5e-3);
+        let rn = nd.submit(submit(r, 32, None, 600 + r)).unwrap();
+        assert!(rn.ctx.starts_with("shard"), "router tags ctx: {}", rn.ctx);
+    }
+    bin.quit().unwrap();
+    nd.quit().unwrap();
+    let stats = cluster.shutdown().unwrap();
+    let ok: u64 = stats.iter().map(|s| s.requests_ok).sum();
+    assert_eq!(ok, 12, "both framings' submits reached the shards");
+}
+
+/// Many-connection fan-out against the epoll transport: far more
+/// concurrent connections than worker threads, every one served, zero
+/// connect failures, and the report carries the connect-latency tail.
+#[test]
+fn epoll_sustains_many_concurrent_connections() {
+    let server = Server::start(opts("", TransportKind::Epoll)).unwrap();
+    let addr = server.local_addr().to_string();
+    let lg = LoadgenOptions {
+        requests: 1,
+        app: "matmul".into(),
+        size: 24,
+        connections: 64,
+        framing: Framing::Binary,
+        ..LoadgenOptions::default()
+    };
+    let report = loadgen::run(&addr, &lg).unwrap();
+    assert_eq!(report.connections, 64);
+    assert_eq!(report.connect_failures, 0, "every connection established");
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.requests, 64);
+    assert!(report.connect_p99 >= report.connect_p50);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests_ok, 64);
+    assert_eq!(stats.sessions, 0, "all fan-out sessions drained");
+}
