@@ -75,6 +75,18 @@ echo "== autoscale smoke (context elasticity + shard churn) =="
 # requests throughout — `bench autoscale --smoke` FAILS on any of these
 cargo run --release --quiet -- bench autoscale --smoke
 
+echo "== dag smoke (v8 graph planning; threads/ndjson lane) =="
+# one server, three graph submissions: `bench dag --smoke` FAILS unless
+# the planned makespan is <= the forced-greedy makespan, at least one
+# producer→consumer transfer is elided, every node reports a result,
+# and the contended submit degrades to per-task greedy
+cargo run --release --quiet -- bench dag --smoke \
+  --transport threads --framing ndjson
+
+echo "== dag smoke (epoll/binary lane: same gates, multiplexed transport) =="
+cargo run --release --quiet -- bench dag --smoke \
+  --transport epoll --framing binary
+
 # wait until a TCP port accepts connections (pure bash, no nc needed)
 wait_port() {
   local port="$1"

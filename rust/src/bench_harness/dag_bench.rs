@@ -1,0 +1,324 @@
+//! Graph-planning bench (`compar bench dag`): boots an in-process
+//! server with an emulated device variant, ships a transfer-heavy
+//! producer→consumer pipeline as one v8 `submit_graph` request, and
+//! compares the [`crate::plan::GraphPlanner`]'s joint assignment
+//! against per-task greedy on the same DAG. Three phases:
+//!
+//! * **planned** — the planner assigns variants to all nodes jointly;
+//!   co-scheduling the chain on one arch elides the intermediate
+//!   transfers the greedy baseline pays edge by edge.
+//! * **greedy** — the same graph with `mode: "greedy"`, the per-task
+//!   baseline the planner must never lose to (and cannot, by
+//!   construction: the planner's sweep starts from the greedy
+//!   assignment and only accepts improving flips).
+//! * **contended** — the same graph submitted while scalar chains keep
+//!   the context queue deeper than its worker count; the planner must
+//!   *degrade* to per-task greedy (stale lookahead under contention is
+//!   worse than no lookahead), observable as `mode: "greedy"` in the
+//!   `graph_done` report.
+//!
+//! The smoke gates check exactly the planning contract: planned
+//! makespan ≤ greedy makespan, at least one transfer elided, every
+//! node reports a result, and the contended submit degrades.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::report::Table;
+use super::serve_bench::BENCH_SCHEMA;
+use crate::serve::protocol::{GraphDoneResp, GraphNodeReq, StatsResp, SubmitGraphReq, SubmitReq};
+use crate::serve::{Client, ClientConfig, Framing, ServeOptions, Server, TransportKind};
+use crate::stream;
+use crate::taskrt::SelectorKind;
+use crate::util::json::{self, Json};
+use crate::util::stats::fmt_time;
+
+/// Problem size of every pipeline node — large enough that the modeled
+/// PCIe cost of an un-elided intermediate edge is visible next to the
+/// modeled kernel times.
+pub const NODE_SIZE: usize = 65536;
+
+/// The full bench: one server, three graph submissions.
+pub struct DagBenchRun {
+    pub transport: TransportKind,
+    pub framing: Framing,
+    /// Pipeline length (nodes per graph).
+    pub nodes: usize,
+    pub planned: GraphDoneResp,
+    pub greedy: GraphDoneResp,
+    pub contended: GraphDoneResp,
+    pub stats: StatsResp,
+}
+
+fn connect(addr: &str, framing: Framing) -> Result<Client> {
+    Client::connect_cfg(
+        addr,
+        &ClientConfig {
+            framing,
+            ..ClientConfig::default()
+        },
+    )
+}
+
+/// A linear producer→consumer pipeline: node k reads/writes the data
+/// node k-1 produced (the server shares the registry handles, so the
+/// dependency carries real bytes the planner can price — and elide).
+fn pipeline(id: u64, nodes: usize, mode: Option<&str>) -> SubmitGraphReq {
+    let nodes = (0..nodes)
+        .map(|k| GraphNodeReq {
+            name: format!("stage{k}"),
+            app: "sort".into(),
+            size: NODE_SIZE,
+            deps: if k == 0 {
+                Vec::new()
+            } else {
+                vec![format!("stage{}", k - 1)]
+            },
+            variant: None,
+        })
+        .collect();
+    SubmitGraphReq {
+        id,
+        nodes,
+        ctx: None,
+        mode: mode.map(str::to_string),
+    }
+}
+
+/// Run all three phases against one server. `smoke` shortens the
+/// pipeline and the contention burst for CI.
+pub fn run(transport: TransportKind, framing: Framing, smoke: bool) -> Result<DagBenchRun> {
+    let nodes = if smoke { 5 } else { 8 };
+    let server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        ncpu: 2,
+        ncuda: 1,
+        selector: Some(SelectorKind::Contextual),
+        transport,
+        ..ServeOptions::default()
+    })?;
+    // the app's real cuda variant is a Pallas artifact (absent in CI);
+    // a native device-emulating variant keeps the planner heterogeneous
+    server.register_codelet(stream::emulated_device_sort(Duration::from_millis(4)));
+    let addr = server.local_addr().to_string();
+
+    let mut c = connect(&addr, framing)?;
+    let planned = c.submit_graph(pipeline(1, nodes, None))?;
+    let greedy = c.submit_graph(pipeline(2, nodes, Some("greedy")))?;
+
+    // contention phase: scalar chains keep the default context's queue
+    // deeper than its 3 workers while the graph arrives
+    let (clients, chain) = if smoke { (6, 24) } else { (8, 48) };
+    let mut burst = Vec::new();
+    for i in 0..clients {
+        let addr = addr.clone();
+        burst.push(std::thread::spawn(move || -> Result<()> {
+            let mut c = connect(&addr, framing)?;
+            c.submit(SubmitReq {
+                id: 100 + i as u64,
+                app: "sort".into(),
+                size: 32768,
+                tasks: chain,
+                ctx: None,
+                seed: 7 + i as u64,
+                variant: None,
+                verify: false,
+            })?;
+            let _ = c.quit();
+            Ok(())
+        }));
+    }
+    // let the burst release its chains before the graph is submitted
+    std::thread::sleep(Duration::from_millis(30));
+    let contended = c.submit_graph(pipeline(3, nodes, None))?;
+    for h in burst {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("burst client panicked"))??;
+    }
+    let _ = c.quit();
+
+    let stats = server.shutdown()?;
+    Ok(DagBenchRun {
+        transport,
+        framing,
+        nodes,
+        planned,
+        greedy,
+        contended,
+        stats,
+    })
+}
+
+/// The CI gates (`compar bench dag --smoke`): the planning contract,
+/// checked on the wire-visible report.
+pub fn check_gates(r: &DagBenchRun) -> Result<()> {
+    for (label, g) in [
+        ("planned", &r.planned),
+        ("greedy", &r.greedy),
+        ("contended", &r.contended),
+    ] {
+        if g.nodes.len() != r.nodes {
+            bail!(
+                "gate: {label} run reported {}/{} nodes",
+                g.nodes.len(),
+                r.nodes
+            );
+        }
+        for nd in &g.nodes {
+            if nd.variant.is_empty() {
+                bail!("gate: {label} node '{}' finished without a variant", nd.name);
+            }
+        }
+    }
+    if r.planned.mode != "planned" {
+        bail!(
+            "gate: uncontended submit ran mode '{}' (want planned)",
+            r.planned.mode
+        );
+    }
+    if r.greedy.mode != "greedy" {
+        bail!(
+            "gate: forced-greedy submit ran mode '{}' (want greedy)",
+            r.greedy.mode
+        );
+    }
+    if r.contended.mode != "greedy" {
+        bail!(
+            "gate: contended submit ran mode '{}' (want degradation to greedy)",
+            r.contended.mode
+        );
+    }
+    if r.planned.makespan > r.greedy.makespan * (1.0 + 1e-9) {
+        bail!(
+            "gate: planned makespan {:.6}s exceeds greedy {:.6}s",
+            r.planned.makespan,
+            r.greedy.makespan
+        );
+    }
+    if r.planned.elided_transfers < 1 {
+        bail!("gate: planned run elided no producer→consumer transfers");
+    }
+    Ok(())
+}
+
+/// Plain-text report: one row per phase plus the planned assignment.
+pub fn render(r: &DagBenchRun) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== compar dag bench ({} nodes, {} / {}) ==\n",
+        r.nodes,
+        r.transport.name(),
+        r.framing.name()
+    ));
+    let mut t = Table::new(
+        "graph phases",
+        &[
+            "phase",
+            "mode",
+            "modeled makespan",
+            "wall",
+            "elided",
+            "nodes",
+        ],
+    );
+    for (name, g) in [
+        ("planned", &r.planned),
+        ("greedy", &r.greedy),
+        ("contended", &r.contended),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            g.mode.clone(),
+            fmt_time(g.makespan),
+            fmt_time(g.wall),
+            g.elided_transfers.to_string(),
+            g.nodes.len().to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    let cells: Vec<String> = r
+        .planned
+        .nodes
+        .iter()
+        .map(|nd| {
+            format!(
+                "{}={}/{}{}",
+                nd.name,
+                nd.variant,
+                nd.arch,
+                if nd.elided { "*" } else { "" }
+            )
+        })
+        .collect();
+    out.push_str(&format!(
+        "planned assignment (*=incoming transfer elided): {}\n",
+        cells.join("  ")
+    ));
+    out.push_str(&format!(
+        "server: plans={} planned_tasks={}\n",
+        r.stats.plans, r.stats.planned_tasks
+    ));
+    out
+}
+
+fn graph_json(g: &GraphDoneResp) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("mode".into(), Json::Str(g.mode.clone()));
+    o.insert("makespan".into(), Json::Num(g.makespan));
+    o.insert("wall".into(), Json::Num(g.wall));
+    o.insert(
+        "elided_transfers".into(),
+        Json::Num(g.elided_transfers as f64),
+    );
+    let nodes = g
+        .nodes
+        .iter()
+        .map(|nd| {
+            let mut n = BTreeMap::new();
+            n.insert("name".into(), Json::Str(nd.name.clone()));
+            n.insert("variant".into(), Json::Str(nd.variant.clone()));
+            n.insert("arch".into(), Json::Str(nd.arch.clone()));
+            n.insert("planned".into(), Json::Bool(nd.planned));
+            n.insert("est".into(), Json::Num(nd.est));
+            n.insert("modeled".into(), Json::Num(nd.modeled));
+            n.insert("wall".into(), Json::Num(nd.wall));
+            n.insert("elided".into(), Json::Bool(nd.elided));
+            Json::Obj(n)
+        })
+        .collect();
+    o.insert("nodes".into(), Json::Arr(nodes));
+    Json::Obj(o)
+}
+
+/// The BENCH record (`compar bench dag --out FILE`), kind "compar-dag":
+/// all three phases' wire reports plus server plan counters.
+pub fn to_json(r: &DagBenchRun) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("bench".to_string(), Json::Str("compar-dag".into()));
+    m.insert("schema".to_string(), Json::Num(BENCH_SCHEMA as f64));
+    m.insert("status".to_string(), Json::Str("measured".into()));
+    let mut knobs = BTreeMap::new();
+    knobs.insert("nodes".into(), Json::Num(r.nodes as f64));
+    knobs.insert("size".into(), Json::Num(NODE_SIZE as f64));
+    knobs.insert("transport".into(), Json::Str(r.transport.name().into()));
+    knobs.insert("framing".into(), Json::Str(r.framing.name().into()));
+    m.insert("config".into(), Json::Obj(knobs));
+    m.insert("planned".into(), graph_json(&r.planned));
+    m.insert("greedy".into(), graph_json(&r.greedy));
+    m.insert("contended".into(), graph_json(&r.contended));
+    let mut srv = BTreeMap::new();
+    srv.insert("plans".into(), Json::Num(r.stats.plans as f64));
+    srv.insert(
+        "planned_tasks".into(),
+        Json::Num(r.stats.planned_tasks as f64),
+    );
+    srv.insert("requests_ok".into(), Json::Num(r.stats.requests_ok as f64));
+    srv.insert(
+        "requests_err".into(),
+        Json::Num(r.stats.requests_err as f64),
+    );
+    m.insert("server".into(), Json::Obj(srv));
+    json::to_string(&Json::Obj(m))
+}

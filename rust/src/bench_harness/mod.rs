@@ -10,10 +10,13 @@
 //!   autoscaler off vs on, plus shard spawn/retire under burst;
 //! * [`stream_bench`] — v6 stream sessions: calibrated-rate vs
 //!   overload, credit backpressure and window shedding counters;
+//! * [`dag_bench`] — v8 graph planning: planned vs greedy makespan on
+//!   a transfer-heavy pipeline, plus degradation under contention;
 //! * [`report`] — the plain-text table renderer.
 
 pub mod autoscale_bench;
 pub mod cluster_bench;
+pub mod dag_bench;
 pub mod fig1;
 pub mod report;
 pub mod selection;

@@ -28,6 +28,15 @@
 //! `models.json` into their local layer at startup and would each ship
 //! those samples as their own — give clustered shards distinct
 //! perf-model directories (or none).
+//!
+//! v8: each pull also carries the shard's **banded selection summary**
+//! ([`crate::taskrt::Runtime::export_selection_bands`] — the contextual
+//! policy's (size band, load band) EWMA buckets), and pushes ship every
+//! *other* shard's bands alongside the models. The receiving policy
+//! merges count-monotonically (a remote bucket wins only with strictly
+//! more observations), so re-delivery is idempotent and stale gossip
+//! never regresses local learning — and a graph planner on shard B
+//! prices variants with interference evidence observed on shard A.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -56,8 +65,9 @@ pub fn run_round(shards: &[Arc<ShardState>], push: bool) -> RoundStats {
         if !shard.healthy() {
             continue;
         }
-        if let Ok(models) = pull(&shard.addr) {
+        if let Ok((models, bands)) = pull(&shard.addr) {
             shard.set_calib(models);
+            shard.set_bands(bands);
             stats.pulled += 1;
         }
     }
@@ -69,16 +79,25 @@ pub fn run_round(shards: &[Arc<ShardState>], push: bool) -> RoundStats {
             continue;
         }
         let mut merged: BTreeMap<String, VariantModel> = BTreeMap::new();
+        let mut bands: Vec<Json> = Vec::new();
         for (j, other) in shards.iter().enumerate() {
             if i == j {
                 continue; // never send a shard its own samples back
             }
             merge_models(&mut merged, &other.calib_clone());
+            if let Some(Json::Arr(mut a)) = other.bands_clone() {
+                bands.append(&mut a);
+            }
         }
-        if merged.is_empty() {
+        if merged.is_empty() && bands.is_empty() {
             continue;
         }
-        if push_models(&shard.addr, &models_to_json(&merged)).is_ok() {
+        let bands = if bands.is_empty() {
+            None
+        } else {
+            Some(Json::Arr(bands))
+        };
+        if push_models(&shard.addr, &models_to_json(&merged), bands.as_ref()).is_ok() {
             stats.pushed += 1;
         }
     }
@@ -93,27 +112,36 @@ pub fn run_round(shards: &[Arc<ShardState>], push: bool) -> RoundStats {
 /// models yet).
 pub fn seed_newcomer(addr: &str, existing: &[Arc<ShardState>]) -> Result<u64> {
     let mut merged: BTreeMap<String, VariantModel> = BTreeMap::new();
+    let mut bands: Vec<Json> = Vec::new();
     for shard in existing {
         if shard.healthy() {
             merge_models(&mut merged, &shard.calib_clone());
+            if let Some(Json::Arr(mut a)) = shard.bands_clone() {
+                bands.append(&mut a);
+            }
         }
     }
-    if merged.is_empty() {
+    if merged.is_empty() && bands.is_empty() {
         return Ok(0);
     }
-    push_models(addr, &models_to_json(&merged))
+    let bands = if bands.is_empty() {
+        None
+    } else {
+        Some(Json::Arr(bands))
+    };
+    push_models(addr, &models_to_json(&merged), bands.as_ref())
 }
 
-fn pull(addr: &str) -> Result<BTreeMap<String, VariantModel>> {
+fn pull(addr: &str) -> Result<(BTreeMap<String, VariantModel>, Option<Json>)> {
     let mut c = Client::connect_with_deadline(addr, super::router::ADMIN_TIMEOUT)?;
-    let models = c.perf_pull()?;
+    let (models, bands) = c.perf_pull_full()?;
     let _ = c.quit();
-    Ok(parse_models(&models))
+    Ok((parse_models(&models), bands))
 }
 
-fn push_models(addr: &str, models: &Json) -> Result<u64> {
+fn push_models(addr: &str, models: &Json, bands: Option<&Json>) -> Result<u64> {
     let mut c = Client::connect_with_deadline(addr, super::router::ADMIN_TIMEOUT)?;
-    let merged = c.perf_push(models)?;
+    let merged = c.perf_push_full(models, bands)?;
     let _ = c.quit();
     Ok(merged)
 }

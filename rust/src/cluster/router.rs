@@ -49,8 +49,8 @@ use super::gossip;
 use super::placement::{self, PlacementKind};
 use crate::autoscale::TokenBucket;
 use crate::serve::protocol::{
-    self, AutoscaleResp, Request, Response, ShardDesc, StatsResp, StreamOpenReq, SubmitReq,
-    PROTOCOL_VERSION,
+    self, AutoscaleResp, Request, Response, ShardDesc, StatsResp, StreamOpenReq, SubmitGraphReq,
+    SubmitReq, PROTOCOL_VERSION,
 };
 use crate::serve::transport::codec::{encode_frame, FrameDecoder, Framing};
 use crate::serve::Client;
@@ -121,6 +121,10 @@ pub struct ShardState {
     /// The shard's locally observed perf models, from the last gossip
     /// pull (feeds the `calibrated` placement policy and the push merge).
     calib: Mutex<BTreeMap<String, VariantModel>>,
+    /// The shard's banded selection summary from the last gossip pull
+    /// (v8); pushed to the *other* shards so their graph planners price
+    /// variants with this shard's interference evidence.
+    bands: Mutex<Option<Json>>,
 }
 
 impl ShardState {
@@ -137,6 +141,7 @@ impl ShardState {
             queue_depth: AtomicU64::new(0),
             streams: AtomicU64::new(0),
             calib: Mutex::new(BTreeMap::new()),
+            bands: Mutex::new(None),
         }
     }
 
@@ -211,6 +216,14 @@ impl ShardState {
 
     pub(crate) fn calib_clone(&self) -> BTreeMap<String, VariantModel> {
         self.calib.lock().unwrap().clone()
+    }
+
+    pub(crate) fn set_bands(&self, bands: Option<Json>) {
+        *self.bands.lock().unwrap() = bands;
+    }
+
+    pub(crate) fn bands_clone(&self) -> Option<Json> {
+        self.bands.lock().unwrap().clone()
     }
 
     /// Samples this shard holds for `codelet` at exactly `size`, summed
@@ -746,6 +759,16 @@ struct Pending {
     shard: usize,
 }
 
+/// A graph submission awaiting its `graph_done` (v8). Graphs are
+/// forwarded *whole* to one shard — a plan is only meaningful over one
+/// runtime's snapshot — and replayed whole on another shard when the
+/// connection dies (fresh instances per replay, so duplicated execution
+/// is wasted work, never a wrong answer — same as scalar submits).
+struct PendingGraph {
+    req: SubmitGraphReq,
+    shard: usize,
+}
+
 /// One live backend connection of a session.
 struct Backend {
     stream: Mutex<TcpStream>,
@@ -776,6 +799,10 @@ struct Session {
     slo_ms: Mutex<Option<f64>>,
     backends: Mutex<HashMap<usize, Arc<Backend>>>,
     pending: Mutex<HashMap<u64, Pending>>,
+    /// Graph submissions in flight, keyed by request id (a separate map
+    /// from `pending`: scalar and graph ids are independent client-side
+    /// id spaces).
+    graphs: Mutex<HashMap<u64, PendingGraph>>,
     /// v6: stream id → the shard index the stream is pinned to. A
     /// stream's chunk ordering, window accumulator and credit state
     /// all live inside one shard's runtime, so streams are
@@ -805,6 +832,7 @@ fn session_loop(shared: Arc<RouterShared>, stream: TcpStream, sid: u64) {
         slo_ms: Mutex::new(None),
         backends: Mutex::new(HashMap::new()),
         pending: Mutex::new(HashMap::new()),
+        graphs: Mutex::new(HashMap::new()),
         streams: Mutex::new(HashMap::new()),
         readers: Mutex::new(Vec::new()),
         closing: AtomicBool::new(false),
@@ -964,6 +992,30 @@ fn handle_frame(sess: &Arc<Session>, value: &Json) -> bool {
             let id = req.id;
             let mut exclude = Vec::new();
             if let Err(e) = route_submit(sess, req, &mut exclude) {
+                send_line(
+                    &sess.reply,
+                    &Response::Error {
+                        id: Some(id),
+                        error: format!("{e:#}"),
+                    },
+                );
+            }
+            true
+        }
+        Request::SubmitGraph(req) => {
+            if router.draining.load(Ordering::SeqCst) {
+                send_line(
+                    &sess.reply,
+                    &Response::Error {
+                        id: Some(req.id),
+                        error: "router is draining".into(),
+                    },
+                );
+                return true;
+            }
+            let id = req.id;
+            let mut exclude = Vec::new();
+            if let Err(e) = route_graph(sess, req, &mut exclude) {
                 send_line(
                     &sess.reply,
                     &Response::Error {
@@ -1246,6 +1298,96 @@ fn route_submit(sess: &Arc<Session>, req: SubmitReq, exclude: &mut Vec<usize>) -
     }
 }
 
+/// Route one graph submission, whole, to a single shard (v8). A graph
+/// plan is computed over one runtime's snapshot — splitting nodes
+/// across shards would plan each fragment blind to the others and pay
+/// network hops on every internal edge — so the router never splits a
+/// DAG. Uses the first node's (app, size) as the placement key and the
+/// node count as the load hint. Retry mirrors [`route_submit`],
+/// including the post-write registration re-check.
+fn route_graph(sess: &Arc<Session>, req: SubmitGraphReq, exclude: &mut Vec<usize>) -> Result<()> {
+    loop {
+        if sess.closing.load(Ordering::SeqCst) {
+            bail!("session is closing");
+        }
+        let shards = sess.router.shard_list();
+        let (app, size) = req
+            .nodes
+            .first()
+            .map(|n| (n.app.as_str(), n.size))
+            .unwrap_or(("", 0));
+        let Some(si) = placement::pick(
+            sess.router.placement,
+            &shards,
+            app,
+            size,
+            exclude,
+            &sess.router.rr,
+        ) else {
+            bail!(
+                "no available shard for graph {} ({} shard(s), {} excluded)",
+                req.id,
+                shards.len(),
+                exclude.len()
+            );
+        };
+        let backend = match ensure_backend(sess, si) {
+            Ok(b) => b,
+            Err(_) => {
+                shards[si].set_healthy(false);
+                exclude.push(si);
+                continue;
+            }
+        };
+        sess.graphs.lock().unwrap().insert(
+            req.id,
+            PendingGraph {
+                req: req.clone(),
+                shard: si,
+            },
+        );
+        let wrote = backend.write_request(&Request::SubmitGraph(req.clone()));
+        if wrote.is_err() {
+            let still_ours = sess.graphs.lock().unwrap().remove(&req.id).is_some();
+            {
+                let mut backends = sess.backends.lock().unwrap();
+                if backends
+                    .get(&si)
+                    .map(|b| Arc::ptr_eq(b, &backend))
+                    .unwrap_or(false)
+                {
+                    backends.remove(&si);
+                }
+            }
+            shards[si].set_healthy(false);
+            if !still_ours {
+                return Ok(()); // the reader's death sweep is replaying it
+            }
+            sess.router.retried.fetch_add(1, Ordering::Relaxed);
+            exclude.push(si);
+            continue;
+        }
+        let still_registered = sess
+            .backends
+            .lock()
+            .unwrap()
+            .get(&si)
+            .map(|b| Arc::ptr_eq(b, &backend))
+            .unwrap_or(false);
+        if !still_registered {
+            let still_ours = sess.graphs.lock().unwrap().remove(&req.id).is_some();
+            if !still_ours {
+                return Ok(());
+            }
+            sess.router.retried.fetch_add(1, Ordering::Relaxed);
+            exclude.push(si);
+            continue;
+        }
+        sess.router.routed.fetch_add(1, Ordering::Relaxed);
+        return Ok(());
+    }
+}
+
 /// Place a new stream on a shard and forward its open (v6). Placement
 /// retries other shards only while the *open* cannot be written; after
 /// the grant the stream is pinned and lives or dies with that backend
@@ -1468,6 +1610,33 @@ fn backend_reader(sess: Arc<Session>, shard: usize, mut stream: TcpStream, mut d
             );
         }
     }
+    // graphs pending on the dead shard are replayed whole elsewhere
+    let graph_orphans: Vec<SubmitGraphReq> = {
+        let mut graphs = sess.graphs.lock().unwrap();
+        let ids: Vec<u64> = graphs
+            .iter()
+            .filter(|(_, p)| p.shard == shard)
+            .map(|(id, _)| *id)
+            .collect();
+        ids.into_iter()
+            .filter_map(|id| graphs.remove(&id))
+            .map(|p| p.req)
+            .collect()
+    };
+    for req in graph_orphans {
+        sess.router.retried.fetch_add(1, Ordering::Relaxed);
+        let id = req.id;
+        let mut exclude = vec![shard];
+        if let Err(e) = route_graph(&sess, req, &mut exclude) {
+            send_line(
+                &sess.reply,
+                &Response::Error {
+                    id: Some(id),
+                    error: format!("{e:#}"),
+                },
+            );
+        }
+    }
     // streams pinned here die with the shard: their window accumulator
     // and credit controller lived inside its runtime, so there is
     // nothing to replay — surface the loss instead of going silent
@@ -1506,9 +1675,17 @@ fn forward_backend_value(sess: &Arc<Session>, shard: usize, value: &Json) {
             r.ctx = format!("shard{shard}/{}", r.ctx);
             send_line(&sess.reply, &Response::Result(r));
         }
+        // v8 graph reports follow the same shape as results: untrack,
+        // tag the context with the shard, forward
+        Response::GraphDone(mut g) => {
+            sess.graphs.lock().unwrap().remove(&g.id);
+            g.ctx = format!("shard{shard}/{}", g.ctx);
+            send_line(&sess.reply, &Response::GraphDone(g));
+        }
         Response::Error { id, error } => {
             if let Some(id) = id {
                 sess.pending.lock().unwrap().remove(&id);
+                sess.graphs.lock().unwrap().remove(&id);
             }
             // a per-request error from the shard (bad app, bad variant,
             // failed verification) is a real answer — forward, no retry
@@ -1555,6 +1732,8 @@ fn cluster_stats(router: &Arc<RouterShared>) -> StatsResp {
         total_workers: 0,
         sessions: 0,
         streams: 0,
+        plans: 0,
+        planned_tasks: 0,
         slo_ms: 0.0,
         ctx_tasks: BTreeMap::new(),
         ctx_variants: BTreeMap::new(),
@@ -1575,6 +1754,8 @@ fn cluster_stats(router: &Arc<RouterShared>) -> StatsResp {
         agg.total_workers += stats.total_workers;
         agg.sessions += stats.sessions;
         agg.streams += stats.streams;
+        agg.plans += stats.plans;
+        agg.planned_tasks += stats.planned_tasks;
         // the cluster-wide effective SLO is the tightest one any shard
         // is currently enforcing (0 = no shard has a target)
         if stats.slo_ms > 0.0 && (agg.slo_ms == 0.0 || stats.slo_ms < agg.slo_ms) {

@@ -28,6 +28,10 @@
 //! * [`stream`] — heterogeneous stream computing (HSTREAM-style):
 //!   stream sessions over the serve protocol with per-chunk variant
 //!   selection, windowed operators, and SLO-driven credit backpressure.
+//! * [`plan`] — global lookahead composition: a `GraphPlanner` that
+//!   assigns variants jointly over whole task DAGs before release,
+//!   eliding producer→consumer transfers and composing same-arch spans
+//!   (Kessler & Dastgeer's "Optimized Composition").
 //! * [`bench_harness`] — regenerates every table and figure of the
 //!   paper's evaluation section.
 
@@ -36,6 +40,7 @@ pub mod autoscale;
 pub mod bench_harness;
 pub mod cluster;
 pub mod compar;
+pub mod plan;
 pub mod runtime;
 pub mod serve;
 pub mod stream;

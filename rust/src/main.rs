@@ -4,7 +4,7 @@
 //! ```text
 //! compar compile <file.compar.c> [--out-dir DIR]      run the pre-compiler
 //! compar run --app A --size N [options]               run one benchmark task
-//! compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|autoscale|stream|all>
+//! compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|autoscale|stream|dag|all>
 //! compar bench validate <FILE>                        check a bench JSON record
 //! compar calibrate --app A [--sizes a,b,c]            warm the perf models
 //! compar serve [--addr A --contexts cpu:4,gpu:1 ...]  multi-tenant component service
@@ -122,8 +122,9 @@ fn print_usage() {
          USAGE:\n\
          \x20 compar compile <file.compar.c> [--out-dir DIR] [--emit c|rust|all]\n\
          \x20 compar run --app APP --size N [--variant V] [--sched S] [--selector P] [--ncpu N] [--ncuda N] [--reps R]\n\
-         \x20 compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|autoscale|stream|all> [--reps R] [--max-measured N] [--smoke]\n\
-         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 (selection: [--out FILE]; cluster: [--shards N] [--placement PL])\n\
+         \x20 compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|autoscale|stream|dag|all> [--reps R] [--max-measured N] [--smoke]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 (selection: [--out FILE]; cluster: [--shards N] [--placement PL];\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 dag: [--transport epoll|threads] [--framing ndjson|binary] [--out FILE])\n\
          \x20 compar bench validate <FILE>\n\
          \x20 compar calibrate --app APP [--sizes a,b,c]\n\
          \x20 compar serve [--addr HOST:PORT] [--contexts NAME:N[:POLICY],...] [--sched S] [--selector P] [--cap N]\n\
@@ -142,7 +143,7 @@ fn print_usage() {
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--framing ndjson|binary] [--connections N] [--transport epoll|threads]\n\
          \x20 compar list\n\
          \n\
-         Selection policies P: greedy | calibrating | epsilon[:E] | epsilon-decayed[:E] | contextual | forced:VARIANT\n\
+         Selection policies P: greedy | calibrating | epsilon[:E] | epsilon-decayed[:E] | contextual | planned | forced:VARIANT\n\
          Shard placement PL:   round-robin | least-loaded | calibrated\n\
          Environment: COMPAR_NCPU, COMPAR_NCUDA, COMPAR_SCHED, COMPAR_SELECTOR, COMPAR_CALIBRATE,\n\
          \x20 COMPAR_TIME_MODE=modeled|wall, COMPAR_PERFMODEL_DIR, COMPAR_ARTIFACTS\n\
@@ -455,6 +456,34 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         }
         ran = true;
     }
+    // dag is explicit-only (it boots a server and drives three graphs)
+    if which == "dag" {
+        let smoke = opts.contains_key("smoke");
+        let transport = match opts.get("transport") {
+            Some(v) => compar::serve::TransportKind::parse(v).context("--transport")?,
+            None => compar::serve::TransportKind::default(),
+        };
+        let framing = match opts.get("framing") {
+            Some(v) => compar::serve::Framing::parse(v).context("--framing")?,
+            None => compar::serve::Framing::default(),
+        };
+        let run = bench_harness::dag_bench::run(transport, framing, smoke)?;
+        print!("{}", bench_harness::dag_bench::render(&run));
+        if smoke {
+            // CI gates: planned makespan <= greedy, >= 1 transfer
+            // elided, every node reports a result, and the contended
+            // submit degrades to per-task greedy
+            bench_harness::dag_bench::check_gates(&run)?;
+        }
+        if let Some(out) = opts.get("out") {
+            bench_harness::serve_bench::write_atomic(
+                out,
+                &(bench_harness::dag_bench::to_json(&run) + "\n"),
+            )?;
+            println!("wrote {out}");
+        }
+        ran = true;
+    }
     // cluster is explicit-only (it boots several servers per run)
     if which == "cluster" {
         let smoke = opts.contains_key("smoke");
@@ -515,9 +544,29 @@ fn validate_bench_record(file: &str) -> Result<()> {
         .to_string();
     match status.as_str() {
         "pending-toolchain" => {
-            // the placeholder must say how to replace itself
+            // the documented placeholder shape (see BENCH_serve.json):
+            // a 'note' explaining why the measurement is missing, a
+            // 'regenerate' command that replaces the record, and the
+            // measurement fields explicitly null — a partially measured
+            // record must not hide behind the marker
             if v.get("regenerate").and_then(Json::as_str).is_none() {
-                bail!("{file}: pending record without a 'regenerate' command");
+                bail!(
+                    "{file}: 'pending-toolchain' placeholder without a \
+                     'regenerate' command"
+                );
+            }
+            if v.get("note").and_then(Json::as_str).is_none() {
+                bail!("{file}: 'pending-toolchain' placeholder without a 'note'");
+            }
+            for k in ["load", "server"] {
+                match v.get(k) {
+                    None | Some(Json::Null) => {}
+                    Some(_) => bail!(
+                        "{file}: 'pending-toolchain' placeholder carries a \
+                         non-null '{k}' — measured data must use status \
+                         'measured'"
+                    ),
+                }
             }
         }
         "measured" => {
@@ -581,6 +630,35 @@ fn validate_bench_record(file: &str) -> Result<()> {
                             if row.get(k).and_then(Json::as_f64).is_none() {
                                 bail!("{file}: row {i} missing '{k}'");
                             }
+                        }
+                    }
+                }
+                "compar-dag" => {
+                    for phase in ["planned", "greedy", "contended"] {
+                        let g = v
+                            .get(phase)
+                            .and_then(Json::as_obj)
+                            .ok_or_else(|| anyhow!("{file}: missing '{phase}' run"))?;
+                        let mode = g
+                            .get("mode")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("{file}: missing {phase}.mode"))?;
+                        if !["planned", "greedy"].contains(&mode) {
+                            bail!("{file}: unknown {phase}.mode '{mode}'");
+                        }
+                        let ms = g
+                            .get("makespan")
+                            .and_then(Json::as_f64)
+                            .ok_or_else(|| anyhow!("{file}: missing {phase}.makespan"))?;
+                        if !ms.is_finite() || ms <= 0.0 {
+                            bail!("{file}: non-positive {phase}.makespan {ms}");
+                        }
+                        let nodes = g
+                            .get("nodes")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("{file}: missing {phase}.nodes"))?;
+                        if nodes.is_empty() {
+                            bail!("{file}: empty {phase}.nodes");
                         }
                     }
                 }

@@ -1,0 +1,657 @@
+//! `plan` — global lookahead variant composition over task DAGs
+//! (Kessler & Dastgeer's *Optimized Composition*, PAPERS.md).
+//!
+//! Every other selection path in the repo decides one task at a time,
+//! at ready time. This subsystem is the first component that reasons
+//! about *more than one task jointly*: a client submits a whole
+//! [`GraphSpec`] (named nodes + data-dependency edges over registry
+//! handles), and the [`GraphPlanner`] assigns an implementation variant
+//! to every node *before any task is released*, minimizing the modeled
+//! makespan of the whole graph:
+//!
+//! * **Residency pricing** — candidate scores include the modeled PCIe
+//!   cost of moving operand bytes ([`transfer_model`]): a dep edge
+//!   whose producer landed on another architecture pays the transfer,
+//!   a root node pays for its main-memory-resident inputs.
+//! * **Transfer elision** — producer→consumer chains are co-scheduled
+//!   on one architecture whenever that lowers (or ties) the makespan,
+//!   so the bytes between them never cross the bus at all. Elided
+//!   edges are reported per node ([`NodeAssignment::elided`]).
+//! * **Span composition** — runs of consecutive same-arch nodes are
+//!   grouped into batcher-friendly spans ([`NodeAssignment::span`]);
+//!   the serve layer submits a span under one priority so same-codelet
+//!   batching can coalesce it.
+//! * **Contention degradation** — when the snapshot shows the machine
+//!   contended (queue pressure beyond the partition's parallelism),
+//!   the planner degrades to per-task greedy: the plan is still
+//!   reported (mode [`PlanMode::Greedy`]) but tasks are released
+//!   without priors. Planned assignments are always *prefer*-strength
+//!   (the `planned` selector falls back when the variant is
+//!   ineligible), never pins.
+//!
+//! The planner core is pure — it consumes a [`PlannerInput`] of
+//! per-node candidate tables and edge byte counts, so it unit-tests
+//! without a [`Runtime`](crate::taskrt::Runtime). The runtime glue
+//! ([`crate::taskrt::Runtime::submit_graph`]) builds the input from
+//! live perf models + residency state and releases the planned tasks
+//! in dependency order.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::taskrt::device::transfer_model;
+use crate::taskrt::{Arch, Codelet, HandleId, TaskId};
+
+// ------------------------------------------------------- submission API
+
+/// One node of a task graph: a codelet invocation over registry
+/// handles, depending on earlier nodes.
+pub struct GraphNode {
+    /// Client-visible node name (report key; unique within the graph).
+    pub name: String,
+    pub codelet: Arc<Codelet>,
+    /// Data handles in the codelet's declared parameter order.
+    pub handles: Vec<HandleId>,
+    /// Problem size (perf-model / artifact key).
+    pub size: usize,
+    /// Indices of *earlier* nodes this one depends on — the graph is
+    /// acyclic by construction.
+    pub deps: Vec<usize>,
+    /// Optional per-node variant pin (overrides the planner).
+    pub pinned: Option<String>,
+}
+
+/// A task DAG to be planned and submitted as one unit.
+#[derive(Default)]
+pub struct GraphSpec {
+    pub nodes: Vec<GraphNode>,
+}
+
+impl GraphSpec {
+    pub fn new() -> GraphSpec {
+        GraphSpec::default()
+    }
+
+    /// Append a node depending on earlier nodes; returns its index.
+    /// Dependency edges may only point backward (acyclic by
+    /// construction), and node names must be unique (they key the
+    /// per-node plan report).
+    pub fn add_node(
+        &mut self,
+        name: &str,
+        codelet: Arc<Codelet>,
+        handles: Vec<HandleId>,
+        size: usize,
+        deps: &[usize],
+    ) -> Result<usize> {
+        let idx = self.nodes.len();
+        if self.nodes.iter().any(|n| n.name == name) {
+            bail!("graph node '{name}' already exists");
+        }
+        let mut deps = deps.to_vec();
+        deps.sort_unstable();
+        deps.dedup();
+        if let Some(&bad) = deps.iter().find(|&&d| d >= idx) {
+            bail!("graph node '{name}' depends on node {bad}, which is not an earlier node");
+        }
+        self.nodes.push(GraphNode {
+            name: name.to_string(),
+            codelet,
+            handles,
+            size,
+            deps,
+            pinned: None,
+        });
+        Ok(idx)
+    }
+
+    /// Pin the last-added node to one variant by name.
+    pub fn pin_last(&mut self, variant: &str) {
+        if let Some(n) = self.nodes.last_mut() {
+            n.pinned = Some(variant.to_string());
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+// ------------------------------------------------------ planner input
+
+/// One selectable implementation of a node, with its modeled execution
+/// estimate (perf-model estimate, or the analytic device model while
+/// the pair is uncalibrated).
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub variant: String,
+    pub arch: Arch,
+    /// Modeled execution seconds at the node's size.
+    pub est: f64,
+}
+
+/// Planner view of one graph node: the candidate table plus the byte
+/// counts residency pricing needs.
+#[derive(Debug, Clone, Default)]
+pub struct PlanNode {
+    pub name: String,
+    /// Indices of earlier nodes this one depends on.
+    pub deps: Vec<usize>,
+    /// Bytes crossing each dependency edge (parallel to `deps`): the
+    /// handles this node shares with that producer.
+    pub edge_bytes: Vec<usize>,
+    /// Bytes of this node's inputs resident in main memory at plan
+    /// time (what a device placement would have to move first).
+    pub root_bytes: usize,
+    pub candidates: Vec<Candidate>,
+}
+
+/// Everything the pure planner consumes — built by the runtime glue,
+/// or directly by tests.
+#[derive(Debug, Clone, Default)]
+pub struct PlannerInput {
+    pub nodes: Vec<PlanNode>,
+    /// Modeled seconds already queued per architecture at plan time
+    /// (the snapshot's `queued_secs`, per arch).
+    pub arch_backlog: Vec<(Arch, f64)>,
+    /// Queue pressure beyond the partition's parallelism: the planner
+    /// degrades to per-task greedy rather than plan over stale state.
+    pub contended: bool,
+}
+
+// ------------------------------------------------------------- output
+
+/// Whether assignments were jointly optimized or chosen per-task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanMode {
+    /// Joint lookahead assignment; released tasks carry prefer-strength
+    /// priors (`planned` selector).
+    Planned,
+    /// Per-task greedy (forced, or contention degradation); tasks are
+    /// released without priors.
+    Greedy,
+}
+
+impl PlanMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanMode::Planned => "planned",
+            PlanMode::Greedy => "greedy",
+        }
+    }
+}
+
+/// The planner's verdict for one node.
+#[derive(Debug, Clone)]
+pub struct NodeAssignment {
+    pub node: usize,
+    pub name: String,
+    pub variant: String,
+    pub arch: Arch,
+    /// Modeled execution seconds behind the choice.
+    pub est: f64,
+    /// Modeled transfer seconds this placement pays (edges from
+    /// foreign-arch producers + non-resident root inputs).
+    pub transfer_secs: f64,
+    /// At least one incoming data edge was kept on-arch with bytes on
+    /// it — a transfer that per-edge pricing would otherwise pay.
+    pub elided: bool,
+    /// Batcher-friendly span index: consecutive same-arch nodes share
+    /// a span and are submitted under one priority.
+    pub span: usize,
+}
+
+/// A complete graph plan: per-node assignments + the modeled makespan
+/// the joint schedule achieves.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub mode: PlanMode,
+    pub assignments: Vec<NodeAssignment>,
+    /// Modeled end-to-end seconds of the planned schedule.
+    pub makespan: f64,
+    /// Producer→consumer edges (with bytes on them) kept on one arch.
+    pub elided_transfers: usize,
+    /// Number of same-arch spans the graph composed into.
+    pub spans: usize,
+}
+
+/// A planned graph after release: the submitted task ids (parallel to
+/// the spec's nodes) and the plan that shaped their release.
+pub struct GraphRun {
+    pub tasks: Vec<TaskId>,
+    pub plan: Plan,
+}
+
+// ------------------------------------------------------------ planner
+
+/// The global lookahead planner (see the module docs).
+#[derive(Default)]
+pub struct GraphPlanner;
+
+/// Modeled timing of one simulated schedule.
+struct Sim {
+    makespan: f64,
+    /// Per-node (finish time, transfer secs, elided-edge count).
+    per_node: Vec<(f64, f64, usize)>,
+    elided: usize,
+}
+
+impl GraphPlanner {
+    pub fn new() -> GraphPlanner {
+        GraphPlanner
+    }
+
+    /// Plan the graph: joint lookahead assignment normally, per-task
+    /// greedy when the input is contended. The planned makespan is
+    /// never worse than greedy's by construction (the improvement
+    /// sweep starts from the greedy assignment and only accepts
+    /// non-worsening flips).
+    pub fn plan(&self, input: &PlannerInput) -> Result<Plan> {
+        if input.nodes.is_empty() {
+            bail!("cannot plan an empty graph");
+        }
+        for n in &input.nodes {
+            if n.candidates.is_empty() {
+                bail!("graph node '{}' has no selectable implementation", n.name);
+            }
+        }
+        let greedy = greedy_choices(input);
+        if input.contended {
+            return Ok(build_plan(input, &greedy, PlanMode::Greedy));
+        }
+        // Joint refinement: start from greedy, flip one node at a time
+        // to any alternative candidate, re-simulate the whole schedule,
+        // and keep the flip when it lowers the makespan — or ties it
+        // while eliding more transfers (the co-scheduling move: pulling
+        // a consumer onto its producer's arch is usually such a tie-
+        // breaker win). Two sweeps are enough for chains to settle.
+        let mut choices = greedy.clone();
+        let mut best = simulate(input, &choices);
+        for _ in 0..2 {
+            let mut changed = false;
+            for i in 0..input.nodes.len() {
+                let mut kept = choices[i];
+                for c in 0..input.nodes[i].candidates.len() {
+                    if c == kept {
+                        continue;
+                    }
+                    choices[i] = c;
+                    let sim = simulate(input, &choices);
+                    let wins = sim.makespan < best.makespan - 1e-12
+                        || (sim.makespan <= best.makespan + 1e-12 && sim.elided > best.elided);
+                    if wins {
+                        best = sim;
+                        kept = c;
+                        changed = true;
+                    } else {
+                        choices[i] = kept;
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        Ok(build_plan(input, &choices, PlanMode::Planned))
+    }
+}
+
+/// Per-task greedy assignment: in dependency order, each node picks the
+/// candidate minimizing its own modeled finish (execution + transfers
+/// given what earlier nodes already chose + the arch's backlog) — the
+/// exact myopic decision ready-time selection makes.
+fn greedy_choices(input: &PlannerInput) -> Vec<usize> {
+    let mut choices: Vec<usize> = Vec::with_capacity(input.nodes.len());
+    let mut free = backlog_map(input);
+    let mut finish: Vec<f64> = Vec::with_capacity(input.nodes.len());
+    let mut arch_of: Vec<Arch> = Vec::with_capacity(input.nodes.len());
+    for n in &input.nodes {
+        let mut best: Option<(usize, f64)> = None;
+        for (c, cand) in n.candidates.iter().enumerate() {
+            let f = node_finish(n, cand, &arch_of, &finish, &free);
+            if best.map_or(true, |(_, bf)| f < bf) {
+                best = Some((c, f));
+            }
+        }
+        let (c, f) = best.expect("candidates checked non-empty");
+        let cand = &n.candidates[c];
+        set_free(&mut free, cand.arch, f);
+        choices.push(c);
+        finish.push(f);
+        arch_of.push(cand.arch);
+    }
+    choices
+}
+
+/// Modeled finish time of `n` under candidate `cand`, given earlier
+/// nodes' (arch, finish) and the per-arch free times.
+fn node_finish(
+    n: &PlanNode,
+    cand: &Candidate,
+    arch_of: &[Arch],
+    finish: &[f64],
+    free: &[(Arch, f64)],
+) -> f64 {
+    let (xfer, _) = placement_transfers(n, cand.arch, arch_of);
+    let deps_done = n
+        .deps
+        .iter()
+        .map(|&d| finish[d])
+        .fold(0.0f64, f64::max);
+    let ready = deps_done + xfer;
+    let start = ready.max(get_free(free, cand.arch));
+    start + cand.est
+}
+
+/// (transfer seconds, elided-edge count) of placing `n` on `arch`.
+fn placement_transfers(n: &PlanNode, arch: Arch, arch_of: &[Arch]) -> (f64, usize) {
+    let mut xfer = 0.0;
+    let mut elided = 0;
+    for (k, &d) in n.deps.iter().enumerate() {
+        let bytes = n.edge_bytes.get(k).copied().unwrap_or(0);
+        if bytes == 0 {
+            continue;
+        }
+        if arch_of[d] == arch {
+            elided += 1;
+        } else {
+            xfer += transfer_model(bytes);
+        }
+    }
+    // root inputs live in main memory (the CPU's node)
+    if n.root_bytes > 0 && arch != Arch::Cpu {
+        xfer += transfer_model(n.root_bytes);
+    }
+    (xfer, elided)
+}
+
+fn backlog_map(input: &PlannerInput) -> Vec<(Arch, f64)> {
+    input.arch_backlog.clone()
+}
+
+fn get_free(free: &[(Arch, f64)], arch: Arch) -> f64 {
+    free.iter()
+        .find(|(a, _)| *a == arch)
+        .map(|&(_, t)| t)
+        .unwrap_or(0.0)
+}
+
+fn set_free(free: &mut Vec<(Arch, f64)>, arch: Arch, t: f64) {
+    match free.iter_mut().find(|(a, _)| *a == arch) {
+        Some(slot) => slot.1 = t,
+        None => free.push((arch, t)),
+    }
+}
+
+/// Simulate the whole schedule under fixed choices (single modeled
+/// lane per architecture — conservative, and what the backlog term
+/// already assumes).
+fn simulate(input: &PlannerInput, choices: &[usize]) -> Sim {
+    let mut free = backlog_map(input);
+    let mut finish: Vec<f64> = Vec::with_capacity(input.nodes.len());
+    let mut arch_of: Vec<Arch> = Vec::with_capacity(input.nodes.len());
+    let mut per_node = Vec::with_capacity(input.nodes.len());
+    let mut elided_total = 0usize;
+    let mut makespan = 0.0f64;
+    for (i, n) in input.nodes.iter().enumerate() {
+        let cand = &n.candidates[choices[i]];
+        let (xfer, elided) = placement_transfers(n, cand.arch, &arch_of);
+        let deps_done = n
+            .deps
+            .iter()
+            .map(|&d| finish[d])
+            .fold(0.0f64, f64::max);
+        let start = (deps_done + xfer).max(get_free(&free, cand.arch));
+        let f = start + cand.est;
+        set_free(&mut free, cand.arch, f);
+        finish.push(f);
+        arch_of.push(cand.arch);
+        per_node.push((f, xfer, elided));
+        elided_total += elided;
+        makespan = makespan.max(f);
+    }
+    Sim {
+        makespan,
+        per_node,
+        elided: elided_total,
+    }
+}
+
+/// Materialize the plan report: assignments, spans, makespan.
+fn build_plan(input: &PlannerInput, choices: &[usize], mode: PlanMode) -> Plan {
+    let sim = simulate(input, choices);
+    let mut assignments = Vec::with_capacity(input.nodes.len());
+    let mut span = 0usize;
+    let mut prev_arch: Option<Arch> = None;
+    for (i, n) in input.nodes.iter().enumerate() {
+        let cand = &n.candidates[choices[i]];
+        if prev_arch.is_some() && prev_arch != Some(cand.arch) {
+            span += 1;
+        }
+        prev_arch = Some(cand.arch);
+        let (_, xfer, elided) = sim.per_node[i];
+        assignments.push(NodeAssignment {
+            node: i,
+            name: n.name.clone(),
+            variant: cand.variant.clone(),
+            arch: cand.arch,
+            est: cand.est,
+            transfer_secs: xfer,
+            elided: elided > 0,
+            span,
+        });
+    }
+    Plan {
+        mode,
+        assignments,
+        makespan: sim.makespan,
+        elided_transfers: sim.elided,
+        spans: span + 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cands(cpu: f64, cuda: f64) -> Vec<Candidate> {
+        vec![
+            Candidate {
+                variant: "omp".into(),
+                arch: Arch::Cpu,
+                est: cpu,
+            },
+            Candidate {
+                variant: "cuda".into(),
+                arch: Arch::Cuda,
+                est: cuda,
+            },
+        ]
+    }
+
+    /// A 4-stage pipeline moving 64 MB between stages: the device wins
+    /// per stage, but only if the chain stays on-device.
+    fn pipeline(contended: bool) -> PlannerInput {
+        let mb64 = 64 * 1024 * 1024;
+        let mut nodes = Vec::new();
+        for i in 0..4 {
+            nodes.push(PlanNode {
+                name: format!("s{i}"),
+                deps: if i == 0 { vec![] } else { vec![i - 1] },
+                edge_bytes: if i == 0 { vec![] } else { vec![mb64] },
+                root_bytes: if i == 0 { mb64 } else { 0 },
+                candidates: cands(0.010, 0.004),
+            });
+        }
+        PlannerInput {
+            nodes,
+            arch_backlog: vec![],
+            contended,
+        }
+    }
+
+    #[test]
+    fn chain_stays_on_one_arch_and_elides_transfers() {
+        let plan = GraphPlanner::new().plan(&pipeline(false)).unwrap();
+        assert_eq!(plan.mode, PlanMode::Planned);
+        // every consumer lands on its producer's arch: 3 elided edges
+        assert_eq!(plan.elided_transfers, 3, "{plan:?}");
+        assert!(plan.assignments[1..].iter().all(|a| a.elided));
+        let archs: Vec<Arch> = plan.assignments.iter().map(|a| a.arch).collect();
+        assert!(archs.windows(2).all(|w| w[0] == w[1]), "chain split: {archs:?}");
+        assert_eq!(plan.spans, 1, "one same-arch span");
+    }
+
+    #[test]
+    fn planned_never_worse_than_greedy() {
+        // mixed graph: a fan-out with asymmetric costs and a join
+        let kb256 = 256 * 1024;
+        let input = PlannerInput {
+            nodes: vec![
+                PlanNode {
+                    name: "src".into(),
+                    deps: vec![],
+                    edge_bytes: vec![],
+                    root_bytes: kb256,
+                    candidates: cands(0.002, 0.003),
+                },
+                PlanNode {
+                    name: "a".into(),
+                    deps: vec![0],
+                    edge_bytes: vec![kb256],
+                    root_bytes: 0,
+                    candidates: cands(0.008, 0.001),
+                },
+                PlanNode {
+                    name: "b".into(),
+                    deps: vec![0],
+                    edge_bytes: vec![kb256],
+                    root_bytes: 0,
+                    candidates: cands(0.003, 0.009),
+                },
+                PlanNode {
+                    name: "join".into(),
+                    deps: vec![1, 2],
+                    edge_bytes: vec![kb256, kb256],
+                    root_bytes: 0,
+                    candidates: cands(0.004, 0.004),
+                },
+            ],
+            arch_backlog: vec![(Arch::Cuda, 0.002)],
+            contended: false,
+        };
+        let planner = GraphPlanner::new();
+        let planned = planner.plan(&input).unwrap();
+        let degraded = planner
+            .plan(&PlannerInput {
+                contended: true,
+                ..input.clone()
+            })
+            .unwrap();
+        assert_eq!(degraded.mode, PlanMode::Greedy);
+        assert!(
+            planned.makespan <= degraded.makespan + 1e-12,
+            "planned {} > greedy {}",
+            planned.makespan,
+            degraded.makespan
+        );
+    }
+
+    #[test]
+    fn contention_degrades_to_greedy() {
+        let plan = GraphPlanner::new().plan(&pipeline(true)).unwrap();
+        assert_eq!(plan.mode, PlanMode::Greedy);
+        assert_eq!(plan.assignments.len(), 4);
+        assert!(plan.makespan > 0.0);
+    }
+
+    #[test]
+    fn backlog_steers_placement_off_the_contended_arch() {
+        // one independent node, device nominally faster — but 100 ms of
+        // device backlog makes the CPU candidate finish first
+        let input = PlannerInput {
+            nodes: vec![PlanNode {
+                name: "n".into(),
+                deps: vec![],
+                edge_bytes: vec![],
+                root_bytes: 0,
+                candidates: cands(0.010, 0.004),
+            }],
+            arch_backlog: vec![(Arch::Cuda, 0.100)],
+            contended: false,
+        };
+        let plan = GraphPlanner::new().plan(&input).unwrap();
+        assert_eq!(plan.assignments[0].arch, Arch::Cpu);
+    }
+
+    #[test]
+    fn spans_group_consecutive_same_arch_nodes() {
+        // costs force cpu, cpu, cuda, cuda -> 2 spans
+        let input = PlannerInput {
+            nodes: vec![
+                PlanNode {
+                    name: "a".into(),
+                    candidates: cands(0.001, 0.5),
+                    ..PlanNode::default()
+                },
+                PlanNode {
+                    name: "b".into(),
+                    candidates: cands(0.001, 0.5),
+                    ..PlanNode::default()
+                },
+                PlanNode {
+                    name: "c".into(),
+                    candidates: cands(0.5, 0.001),
+                    ..PlanNode::default()
+                },
+                PlanNode {
+                    name: "d".into(),
+                    candidates: cands(0.5, 0.001),
+                    ..PlanNode::default()
+                },
+            ],
+            arch_backlog: vec![],
+            contended: false,
+        };
+        let plan = GraphPlanner::new().plan(&input).unwrap();
+        assert_eq!(plan.spans, 2);
+        assert_eq!(plan.assignments[0].span, plan.assignments[1].span);
+        assert_eq!(plan.assignments[2].span, plan.assignments[3].span);
+        assert_ne!(plan.assignments[0].span, plan.assignments[3].span);
+    }
+
+    #[test]
+    fn graph_spec_rejects_forward_and_duplicate_nodes() {
+        let cl = Arc::new(
+            Codelet::new("c", "sort", vec![]), // zero-parameter codelet
+        );
+        let mut g = GraphSpec::new();
+        let a = g.add_node("a", cl.clone(), vec![], 8, &[]).unwrap();
+        assert_eq!(a, 0);
+        assert!(g.add_node("a", cl.clone(), vec![], 8, &[]).is_err());
+        assert!(g.add_node("b", cl.clone(), vec![], 8, &[5]).is_err());
+        let b = g.add_node("b", cl, vec![], 8, &[a]).unwrap();
+        assert_eq!(b, 1);
+        assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn empty_graph_and_empty_candidates_are_errors() {
+        let planner = GraphPlanner::new();
+        assert!(planner.plan(&PlannerInput::default()).is_err());
+        let input = PlannerInput {
+            nodes: vec![PlanNode {
+                name: "n".into(),
+                ..PlanNode::default()
+            }],
+            arch_backlog: vec![],
+            contended: false,
+        };
+        assert!(planner.plan(&input).is_err());
+    }
+}

@@ -18,8 +18,9 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use super::protocol::{
-    self, AutoscaleResp, CtxDesc, Request, Response, ResultResp, ShardDesc, StatsResp,
-    StreamClosedResp, StreamOpenReq, StreamOpenedResp, SubmitReq, PROTOCOL_VERSION,
+    self, AutoscaleResp, CtxDesc, GraphDoneResp, Request, Response, ResultResp, ShardDesc,
+    StatsResp, StreamClosedResp, StreamOpenReq, StreamOpenedResp, SubmitGraphReq, SubmitReq,
+    PROTOCOL_VERSION,
 };
 use super::transport::codec::{encode_frame, FrameDecoder, Framing};
 use crate::util::json::Json;
@@ -242,6 +243,24 @@ impl Client {
         }
     }
 
+    /// v8: submit a whole task DAG for joint variant planning; blocks
+    /// until every node completed and the `graph_done` report (per-node
+    /// variant, arch, modeled vs wall timing, elided edges) arrives.
+    pub fn submit_graph(&mut self, req: SubmitGraphReq) -> Result<GraphDoneResp> {
+        let id = req.id;
+        self.send(&Request::SubmitGraph(req))?;
+        match self.recv()? {
+            Response::GraphDone(g) => {
+                if g.id != id {
+                    bail!("graph_done id {} for request {id}", g.id);
+                }
+                Ok(g)
+            }
+            Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
     /// v6: open a stream session; blocks for the `stream_opened` grant.
     pub fn stream_open(&mut self, req: StreamOpenReq) -> Result<StreamOpenedResp> {
         let id = req.id;
@@ -314,9 +333,16 @@ impl Client {
     /// v3 (shard): fetch the server's locally observed perf-model bucket
     /// summaries (the gossip payload).
     pub fn perf_pull(&mut self) -> Result<Json> {
+        Ok(self.perf_pull_full()?.0)
+    }
+
+    /// v8 (shard): like [`Client::perf_pull`], but also returns the
+    /// shard's banded selection summary (None on pre-v8 peers or when
+    /// the shard has observed nothing yet).
+    pub fn perf_pull_full(&mut self) -> Result<(Json, Option<Json>)> {
         self.send(&Request::PerfPull)?;
         match self.recv()? {
-            Response::PerfModels { models } => Ok(models),
+            Response::PerfModels { models, bands } => Ok((models, bands)),
             Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
             other => bail!("unexpected response {other:?}"),
         }
@@ -325,8 +351,15 @@ impl Client {
     /// v3 (shard): install `models` as the server's remote perf-model
     /// overlay; returns the number of buckets accepted.
     pub fn perf_push(&mut self, models: &Json) -> Result<u64> {
+        self.perf_push_full(models, None)
+    }
+
+    /// v8 (shard): push perf models and, optionally, a banded selection
+    /// summary for the shard's contextual policies to merge.
+    pub fn perf_push_full(&mut self, models: &Json, bands: Option<&Json>) -> Result<u64> {
         self.send(&Request::PerfPush {
             models: models.clone(),
+            bands: bands.cloned(),
         })?;
         match self.recv()? {
             Response::PerfAck { merged } => Ok(merged),

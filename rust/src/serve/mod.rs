@@ -29,6 +29,13 @@
 //! (default) or compact length-prefixed binary — with pooled buffers
 //! and coalesced vectored writes on the hot path.
 //!
+//! Protocol v8 adds **graph submission** (see [`crate::plan`]): a
+//! client ships a whole task DAG in one `submit_graph` request, the
+//! [`crate::plan::GraphPlanner`] assigns variants to every node
+//! jointly before release, and the `graph_done` report carries each
+//! node's variant, arch, modeled vs wall timing and elided
+//! producer→consumer transfers.
+//!
 //! Layers (each its own module):
 //! * [`protocol`] — wire format (requests/responses, encode/decode).
 //! * [`transport`] — framing codecs, buffer pool, readiness loop.
@@ -45,8 +52,8 @@ pub mod transport;
 pub use client::{Client, ClientConfig};
 pub use loadgen::{LoadProfile, LoadReport, LoadgenOptions};
 pub use protocol::{
-    Request, Response, ShardDesc, StreamAckResp, StreamClosedResp, StreamCreditResp,
-    StreamOpenReq, StreamOpenedResp, SubmitReq,
+    GraphDoneResp, GraphNodeReport, GraphNodeReq, Request, Response, ShardDesc, StreamAckResp,
+    StreamClosedResp, StreamCreditResp, StreamOpenReq, StreamOpenedResp, SubmitGraphReq, SubmitReq,
 };
 pub use server::{parse_contexts, CtxSpec, ServeOptions, Server};
 pub use transport::{Framing, TransportKind};

@@ -12,11 +12,22 @@
 //! ([`encode_request`]/[`decode_request`], ndjson) and value-level ones
 //! ([`request_value`]/[`request_from_value`], framing-agnostic).
 //!
-//! ## v7 message set
+//! ## v8 message set
 //!
 //! The same protocol is spoken at two levels: clients talk to either a
 //! single `compar serve` shard or to a `compar route` router, and the
-//! router talks to its shards. v7 (transport) adds the framing
+//! router talks to its shards. v8 (graph planning) adds whole-DAG
+//! submission: `submit_graph` carries named nodes + data-dependency
+//! edges, the server plans variant assignments jointly over the graph
+//! before releasing any task ([`crate::plan`]), and `graph_done`
+//! reports the per-node variant/arch/timing plan (including which
+//! producer→consumer transfers were elided and whether the planner
+//! degraded to per-task greedy). `stats` gains `plans` /
+//! `planned_tasks` counters, and the perf-gossip pair may carry
+//! contextual band summaries (`bands` on `perf_push` and on the
+//! `perf_models` reply) so a plan computed on one shard prices
+//! variants with cluster-wide interference evidence.
+//! v7 (transport) adds the framing
 //! handshake: a `hello` request may carry `"framing":"binary"` (or
 //! `"ndjson"`, the default) and the `hello` response echoes the framing
 //! the server accepted; the handshake itself is always exchanged in
@@ -48,6 +59,9 @@
 //! | `hello`            | `hello`         | both   | session handshake (+ policy, slo_ms,  |
 //! |                    |                 |        | v7: `framing` negotiation)            |
 //! | `submit`           | `result`        | both   | task-graph request (router fans out)  |
+//! | `submit_graph`     | `graph_done`    | both   | whole-DAG request with jointly        |
+//! |                    |                 |        | planned variants (v8); router         |
+//! |                    |                 |        | forwards the graph whole to one shard |
 //! | `stream_open`      | `stream_opened` | both   | open a stream session (v6); router    |
 //! |                    |                 |        | pins the stream to one shard          |
 //! | `stream_chunk`     | `stream_ack`    | both   | push one chunk through the pipeline;  |
@@ -80,10 +94,14 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::util::json::{self, Json};
 
-/// v7: transport — the `hello` exchange negotiates a per-session
+/// v8: graph planning — `submit_graph`/`graph_done` whole-DAG requests
+/// with jointly planned variant assignments, `plans`/`planned_tasks`
+/// counters in `stats`, and optional contextual band summaries riding
+/// the perf-gossip pair. (v7 transport — the `hello` exchange
+/// negotiates a per-session
 /// framing (`"framing":"ndjson"|"binary"` on the request, echoed on
 /// the response); the handshake is always ndjson and every later frame
-/// uses the negotiated framing. (v6 streaming —
+/// uses the negotiated framing. v6 streaming —
 /// `stream_open`/`stream_chunk`/`stream_close` stream sessions with
 /// per-chunk variant selection, windowed operators, and credit-based
 /// backpressure (`stream_credit`), plus `slo_ms`/`streams` in `stats`;
@@ -94,7 +112,7 @@ use crate::util::json::{self, Json};
 /// on the router; v2 per-session selection policy in `hello`, `policy`
 /// on results, `selector` on context descriptors, `ctx_variants` in
 /// stats.)
-pub const PROTOCOL_VERSION: u64 = 7;
+pub const PROTOCOL_VERSION: u64 = 8;
 
 // --------------------------------------------------------------- requests
 
@@ -117,6 +135,41 @@ pub struct SubmitReq {
     pub variant: Option<String>,
     /// Verify the final output against the sequential reference.
     pub verify: bool,
+}
+
+/// v8: one node of a `submit_graph` DAG — a codelet invocation over a
+/// fresh (or producer-shared) problem instance, depending by name on
+/// earlier nodes in the same request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphNodeReq {
+    /// Node name, unique within the graph; keys the per-node report
+    /// and the `deps` references of later nodes.
+    pub name: String,
+    pub app: String,
+    pub size: usize,
+    /// Names of earlier nodes this one consumes. A dependency on a
+    /// same-app, same-size producer shares that producer's data
+    /// handles (a real producer→consumer edge the planner can elide);
+    /// other dependencies are ordering-only.
+    pub deps: Vec<String>,
+    /// Pin this node to one variant (None = the planner assigns).
+    pub variant: Option<String>,
+}
+
+/// v8: a whole task DAG submitted as one unit — the server plans
+/// variant assignments jointly over the graph before releasing any
+/// task ([`crate::plan`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitGraphReq {
+    /// Client-chosen correlation id, echoed in the response.
+    pub id: u64,
+    pub nodes: Vec<GraphNodeReq>,
+    /// Scheduling-context name (None = server default routing).
+    pub ctx: Option<String>,
+    /// Planning mode: None or "planned" = joint lookahead (degrading
+    /// to greedy under contention); "greedy" = force the per-task
+    /// baseline over the identical release path (benchmarks).
+    pub mode: Option<String>,
 }
 
 /// v6: open a stream session — a long-lived chunk pipeline with
@@ -160,6 +213,8 @@ pub enum Request {
         framing: Option<String>,
     },
     Submit(SubmitReq),
+    /// v8: submit a whole task DAG with jointly planned variants.
+    SubmitGraph(SubmitGraphReq),
     /// v6: open a stream session.
     StreamOpen(StreamOpenReq),
     /// v6: push one chunk (seeded input of the stream's declared size)
@@ -178,8 +233,11 @@ pub enum Request {
     /// bucket summaries (the gossip payload).
     PerfPull,
     /// v3 (shard): install `models` as the remote perf-model overlay,
-    /// replacing the previous one (idempotent gossip).
-    PerfPush { models: Json },
+    /// replacing the previous one (idempotent gossip). v8: `bands`
+    /// optionally carries contextual band summaries
+    /// ([`crate::taskrt::SelectionPolicy::import_bands`]) so graph
+    /// plans price variants with cluster-wide interference evidence.
+    PerfPush { models: Json, bands: Option<Json> },
     /// v3 (router): list shard health/load/drain state.
     Shards,
     /// v3 (router): take a shard (by address, or `shardN`/index) out of
@@ -260,6 +318,54 @@ pub struct StatsResp {
     pub slo_ms: f64,
     /// v6 — stream sessions currently open on this server.
     pub streams: u64,
+    /// v8 — graph plans computed (`submit_graph` requests served).
+    pub plans: u64,
+    /// v8 — tasks released with planned variant priors.
+    pub planned_tasks: u64,
+}
+
+/// v8: per-node entry of the `graph_done` plan report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphNodeReport {
+    pub name: String,
+    /// Variant that actually executed.
+    pub variant: String,
+    /// Architecture the plan assigned ("cpu"/"cuda").
+    pub arch: String,
+    /// The graph ran under a plan (mode "planned"). The reported
+    /// `variant` may still differ from the plan's assignment when a
+    /// worker exercised the prefer-strength escape hatch — compare
+    /// `variant` against `est`/`arch` to observe prefer-vs-actual.
+    pub planned: bool,
+    /// The planner's modeled execution seconds behind the assignment.
+    pub est: f64,
+    /// Measured modeled device seconds of the node's task.
+    pub modeled: f64,
+    /// Measured wall-clock execution seconds of the node's task.
+    pub wall: f64,
+    /// At least one incoming data edge stayed on-arch (a transfer the
+    /// per-task baseline would have paid).
+    pub elided: bool,
+}
+
+/// v8: `graph_done` — the whole DAG completed; reports the plan and
+/// per-node execution detail.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphDoneResp {
+    pub id: u64,
+    /// Context name the graph ran under.
+    pub ctx: String,
+    /// Mode actually used: "planned", or "greedy" when forced or when
+    /// the planner degraded under contention — the degradation is
+    /// observable here.
+    pub mode: String,
+    /// Modeled end-to-end seconds of the planned schedule.
+    pub makespan: f64,
+    /// Measured wall-clock seconds from release to last completion.
+    pub wall: f64,
+    /// Producer→consumer edges kept on one architecture.
+    pub elided_transfers: u64,
+    pub nodes: Vec<GraphNodeReport>,
 }
 
 /// v6: `stream_opened` — the stream is live; `credit` chunks may be
@@ -398,6 +504,8 @@ pub enum Response {
         framing: Option<String>,
     },
     Result(ResultResp),
+    /// v8: whole-DAG request completed, with the per-node plan report.
+    GraphDone(GraphDoneResp),
     /// v6: stream session opened.
     StreamOpened(StreamOpenedResp),
     /// v6: chunk completed.
@@ -409,8 +517,10 @@ pub enum Response {
     Error { id: Option<u64>, error: String },
     Stats(StatsResp),
     Contexts { contexts: Vec<CtxDesc> },
-    /// v3: serialized perf-model bucket summaries (`perf_pull`).
-    PerfModels { models: Json },
+    /// v3: serialized perf-model bucket summaries (`perf_pull`). v8:
+    /// `bands` optionally carries the shard's contextual band
+    /// summaries ([`crate::taskrt::SelectionPolicy::export_bands`]).
+    PerfModels { models: Json, bands: Option<Json> },
     /// v3: overlay installed; `merged` = (key, size) buckets accepted.
     PerfAck { merged: u64 },
     /// v3 (router): the shard table.
@@ -491,6 +601,36 @@ pub fn request_value(r: &Request) -> Json {
             }
             obj(pairs)
         }
+        Request::SubmitGraph(q) => {
+            let nodes = q
+                .nodes
+                .iter()
+                .map(|nd| {
+                    let mut pairs = vec![
+                        ("name", s(&nd.name)),
+                        ("app", s(&nd.app)),
+                        ("size", n(nd.size as f64)),
+                        ("deps", strs(&nd.deps)),
+                    ];
+                    if let Some(v) = &nd.variant {
+                        pairs.push(("variant", s(v)));
+                    }
+                    obj(pairs)
+                })
+                .collect();
+            let mut pairs = vec![
+                ("op", s("submit_graph")),
+                ("id", n(q.id as f64)),
+                ("nodes", Json::Arr(nodes)),
+            ];
+            if let Some(c) = &q.ctx {
+                pairs.push(("ctx", s(c)));
+            }
+            if let Some(m) = &q.mode {
+                pairs.push(("mode", s(m)));
+            }
+            obj(pairs)
+        }
         Request::StreamOpen(q) => {
             let mut pairs = vec![
                 ("op", s("stream_open")),
@@ -523,8 +663,12 @@ pub fn request_value(r: &Request) -> Json {
         Request::Contexts => obj(vec![("op", s("contexts"))]),
         Request::AutoscaleStatus => obj(vec![("op", s("autoscale_status"))]),
         Request::PerfPull => obj(vec![("op", s("perf_pull"))]),
-        Request::PerfPush { models } => {
-            obj(vec![("op", s("perf_push")), ("models", models.clone())])
+        Request::PerfPush { models, bands } => {
+            let mut pairs = vec![("op", s("perf_push")), ("models", models.clone())];
+            if let Some(b) = bands {
+                pairs.push(("bands", b.clone()));
+            }
+            obj(pairs)
         }
         Request::Shards => obj(vec![("op", s("shards"))]),
         Request::DrainShard { shard } => {
@@ -578,6 +722,35 @@ pub fn response_value(r: &Response) -> Json {
             ("wall", n(q.wall)),
             ("rel_err", n(q.rel_err)),
         ]),
+        Response::GraphDone(q) => {
+            let nodes = q
+                .nodes
+                .iter()
+                .map(|nd| {
+                    obj(vec![
+                        ("name", s(&nd.name)),
+                        ("variant", s(&nd.variant)),
+                        ("arch", s(&nd.arch)),
+                        ("planned", Json::Bool(nd.planned)),
+                        ("est", n(nd.est)),
+                        ("modeled", n(nd.modeled)),
+                        ("wall", n(nd.wall)),
+                        ("elided", Json::Bool(nd.elided)),
+                    ])
+                })
+                .collect();
+            obj(vec![
+                ("ok", Json::Bool(true)),
+                ("type", s("graph_done")),
+                ("id", n(q.id as f64)),
+                ("ctx", s(&q.ctx)),
+                ("mode", s(&q.mode)),
+                ("makespan", n(q.makespan)),
+                ("wall", n(q.wall)),
+                ("elided_transfers", n(q.elided_transfers as f64)),
+                ("nodes", Json::Arr(nodes)),
+            ])
+        }
         Response::StreamOpened(q) => {
             let mut pairs = vec![
                 ("ok", Json::Bool(true)),
@@ -665,6 +838,8 @@ pub fn response_value(r: &Response) -> Json {
                 ("ctx_variants", Json::Obj(ctx_variants)),
                 ("slo_ms", n(q.slo_ms)),
                 ("streams", n(q.streams as f64)),
+                ("plans", n(q.plans as f64)),
+                ("planned_tasks", n(q.planned_tasks as f64)),
             ])
         }
         Response::Contexts { contexts } => {
@@ -687,11 +862,17 @@ pub fn response_value(r: &Response) -> Json {
                 ("contexts", Json::Arr(arr)),
             ])
         }
-        Response::PerfModels { models } => obj(vec![
-            ("ok", Json::Bool(true)),
-            ("type", s("perf_models")),
-            ("models", models.clone()),
-        ]),
+        Response::PerfModels { models, bands } => {
+            let mut pairs = vec![
+                ("ok", Json::Bool(true)),
+                ("type", s("perf_models")),
+                ("models", models.clone()),
+            ];
+            if let Some(b) = bands {
+                pairs.push(("bands", b.clone()));
+            }
+            obj(pairs)
+        }
         Response::PerfAck { merged } => obj(vec![
             ("ok", Json::Bool(true)),
             ("type", s("perf_ack")),
@@ -833,6 +1014,31 @@ pub fn request_from_value(j: &Json) -> Result<Request> {
                 },
             })
         }
+        "submit_graph" => {
+            let arr = j
+                .get("nodes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing 'nodes'"))?;
+            let mut nodes = Vec::new();
+            for nd in arr {
+                nodes.push(GraphNodeReq {
+                    name: get_str(nd, "name")?,
+                    app: get_str(nd, "app")?,
+                    size: get_u64(nd, "size")? as usize,
+                    deps: get_str_arr(nd, "deps").unwrap_or_default(),
+                    variant: get_str(nd, "variant").ok(),
+                });
+            }
+            if nodes.is_empty() {
+                bail!("'submit_graph' needs at least one node");
+            }
+            Request::SubmitGraph(SubmitGraphReq {
+                id: get_u64(j, "id")?,
+                nodes,
+                ctx: get_str(j, "ctx").ok(),
+                mode: get_str(j, "mode").ok(),
+            })
+        }
         "stream_open" => Request::StreamOpen(StreamOpenReq {
             id: get_u64(&j, "id")?,
             app: get_str(&j, "app")?,
@@ -860,6 +1066,7 @@ pub fn request_from_value(j: &Json) -> Result<Request> {
                 .get("models")
                 .cloned()
                 .unwrap_or(Json::Obj(BTreeMap::new())),
+            bands: j.get("bands").cloned(),
         },
         "shards" => Request::Shards,
         "drain_shard" => Request::DrainShard {
@@ -900,6 +1107,34 @@ pub fn response_from_value(j: &Json) -> Result<Response> {
             wall: get_f64(&j, "wall")?,
             rel_err: get_f64(&j, "rel_err")?,
         }),
+        "graph_done" => {
+            let arr = j
+                .get("nodes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing 'nodes'"))?;
+            let mut nodes = Vec::new();
+            for nd in arr {
+                nodes.push(GraphNodeReport {
+                    name: get_str(nd, "name")?,
+                    variant: get_str(nd, "variant")?,
+                    arch: get_str(nd, "arch").unwrap_or_default(),
+                    planned: matches!(nd.get("planned"), Some(Json::Bool(true))),
+                    est: get_f64(nd, "est").unwrap_or(0.0),
+                    modeled: get_f64(nd, "modeled").unwrap_or(0.0),
+                    wall: get_f64(nd, "wall").unwrap_or(0.0),
+                    elided: matches!(nd.get("elided"), Some(Json::Bool(true))),
+                });
+            }
+            Response::GraphDone(GraphDoneResp {
+                id: get_u64(j, "id")?,
+                ctx: get_str(j, "ctx").unwrap_or_default(),
+                mode: get_str(j, "mode")?,
+                makespan: get_f64(j, "makespan").unwrap_or(0.0),
+                wall: get_f64(j, "wall").unwrap_or(0.0),
+                elided_transfers: get_u64(j, "elided_transfers").unwrap_or(0),
+                nodes,
+            })
+        }
         "stream_opened" => Response::StreamOpened(StreamOpenedResp {
             stream: get_u64(&j, "stream")?,
             credit: get_u64(&j, "credit")?,
@@ -977,6 +1212,9 @@ pub fn response_from_value(j: &Json) -> Result<Response> {
                 // v6 fields: tolerant decode (pre-v6 peers omit them)
                 slo_ms: get_f64(&j, "slo_ms").unwrap_or(0.0),
                 streams: get_u64(&j, "streams").unwrap_or(0),
+                // v8 fields: tolerant decode (pre-v8 peers omit them)
+                plans: get_u64(&j, "plans").unwrap_or(0),
+                planned_tasks: get_u64(&j, "planned_tasks").unwrap_or(0),
             })
         }
         "contexts" => {
@@ -1002,6 +1240,7 @@ pub fn response_from_value(j: &Json) -> Result<Response> {
                 .get("models")
                 .cloned()
                 .unwrap_or(Json::Obj(BTreeMap::new())),
+            bands: j.get("bands").cloned(),
         },
         "perf_ack" => Response::PerfAck {
             merged: get_u64(&j, "merged")?,
@@ -1157,11 +1396,20 @@ mod tests {
         let mut models = BTreeMap::new();
         models.insert("mmul:omp".to_string(), Json::Obj(sizes));
         roundtrip_req(Request::PerfPush {
+            models: Json::Obj(models.clone()),
+            bands: None,
+        });
+        // v8: selection-band summaries ride the same push
+        roundtrip_req(Request::PerfPush {
             models: Json::Obj(models),
+            bands: Some(Json::Arr(vec![Json::Str("band".into())])),
         });
         // a push without models decodes to an empty overlay
         match decode_request(r#"{"op":"perf_push"}"#).unwrap() {
-            Request::PerfPush { models } => assert_eq!(models, Json::Obj(BTreeMap::new())),
+            Request::PerfPush { models, bands } => {
+                assert_eq!(models, Json::Obj(BTreeMap::new()));
+                assert!(bands.is_none());
+            }
             other => panic!("{other:?}"),
         }
         roundtrip_req(Request::Shards);
@@ -1175,6 +1423,11 @@ mod tests {
     fn cluster_response_roundtrips() {
         roundtrip_resp(Response::PerfModels {
             models: Json::Obj(BTreeMap::new()),
+            bands: None,
+        });
+        roundtrip_resp(Response::PerfModels {
+            models: Json::Obj(BTreeMap::new()),
+            bands: Some(Json::Arr(Vec::new())),
         });
         roundtrip_resp(Response::PerfAck { merged: 12 });
         roundtrip_resp(Response::Shards {
@@ -1257,6 +1510,8 @@ mod tests {
             ctx_variants,
             slo_ms: 25.0,
             streams: 2,
+            plans: 3,
+            planned_tasks: 18,
         }));
         roundtrip_resp(Response::Contexts {
             contexts: vec![CtxDesc {
@@ -1289,6 +1544,8 @@ mod tests {
                 assert_eq!(s.tasks_executed, 4);
                 assert_eq!(s.slo_ms, 0.0);
                 assert_eq!(s.streams, 0);
+                assert_eq!(s.plans, 0);
+                assert_eq!(s.planned_tasks, 0);
             }
             other => panic!("{other:?}"),
         }
@@ -1463,6 +1720,27 @@ mod tests {
                 variant: Some("omp".into()),
                 verify: true,
             }),
+            Request::SubmitGraph(SubmitGraphReq {
+                id: 9,
+                nodes: vec![
+                    GraphNodeReq {
+                        name: "load".into(),
+                        app: "sort".into(),
+                        size: 4096,
+                        deps: vec![],
+                        variant: None,
+                    },
+                    GraphNodeReq {
+                        name: "reduce".into(),
+                        app: "sort".into(),
+                        size: 4096,
+                        deps: vec!["load".into()],
+                        variant: Some("cuda".into()),
+                    },
+                ],
+                ctx: Some("hot".into()),
+                mode: Some("greedy".into()),
+            }),
             Request::StreamOpen(StreamOpenReq {
                 id: 1,
                 app: "sort".into(),
@@ -1485,6 +1763,7 @@ mod tests {
             Request::PerfPull,
             Request::PerfPush {
                 models: Json::Obj(BTreeMap::new()),
+                bands: Some(Json::Arr(Vec::new())),
             },
             Request::Shards,
             Request::DrainShard {
@@ -1516,6 +1795,24 @@ mod tests {
                 modeled: 0.5,
                 wall: 0.25,
                 rel_err: 0.0,
+            }),
+            Response::GraphDone(GraphDoneResp {
+                id: 9,
+                ctx: "hot".into(),
+                mode: "planned".into(),
+                makespan: 0.012,
+                wall: 0.015,
+                elided_transfers: 1,
+                nodes: vec![GraphNodeReport {
+                    name: "reduce".into(),
+                    variant: "cuda".into(),
+                    arch: "cuda".into(),
+                    planned: true,
+                    est: 0.004,
+                    modeled: 0.004,
+                    wall: 0.005,
+                    elided: true,
+                }],
             }),
             Response::StreamOpened(StreamOpenedResp {
                 stream: 1,
@@ -1569,6 +1866,8 @@ mod tests {
                 ctx_variants: BTreeMap::new(),
                 slo_ms: 0.0,
                 streams: 0,
+                plans: 0,
+                planned_tasks: 0,
             }),
             Response::Contexts {
                 contexts: vec![CtxDesc {
@@ -1582,6 +1881,7 @@ mod tests {
             },
             Response::PerfModels {
                 models: Json::Obj(BTreeMap::new()),
+                bands: Some(Json::Arr(Vec::new())),
             },
             Response::PerfAck { merged: 3 },
             Response::Shards {
@@ -1657,6 +1957,130 @@ mod tests {
             }
         }
         assert_eq!(got, reqs);
+    }
+
+    #[test]
+    fn binary_framing_survives_fragmented_response_delivery() {
+        // Same property on the response side: every kind (including the
+        // v8 graph_done report) concatenated and fed back one byte at a
+        // time must resurface intact, in order.
+        use crate::serve::transport::codec::{encode_frame, FrameDecoder, Framing};
+        let resps = all_response_kinds();
+        let mut wire = Vec::new();
+        for resp in &resps {
+            encode_frame(Framing::Binary, &response_value(resp), &mut wire);
+        }
+        let mut dec = FrameDecoder::new(Framing::Binary);
+        let mut got = Vec::new();
+        for chunk in wire.chunks(1) {
+            dec.push(chunk);
+            while let Some(v) = dec.next().unwrap() {
+                got.push(response_from_value(&v).unwrap());
+            }
+        }
+        assert_eq!(got, resps);
+    }
+
+    #[test]
+    fn graph_request_roundtrips() {
+        // every SubmitGraph field, with and without optionals
+        roundtrip_req(Request::SubmitGraph(SubmitGraphReq {
+            id: 31,
+            nodes: vec![
+                GraphNodeReq {
+                    name: "src".into(),
+                    app: "sort".into(),
+                    size: 65536,
+                    deps: vec![],
+                    variant: Some("omp".into()),
+                },
+                GraphNodeReq {
+                    name: "mid".into(),
+                    app: "sort".into(),
+                    size: 65536,
+                    deps: vec!["src".into()],
+                    variant: None,
+                },
+                GraphNodeReq {
+                    name: "sink".into(),
+                    app: "sort".into(),
+                    size: 65536,
+                    deps: vec!["src".into(), "mid".into()],
+                    variant: None,
+                },
+            ],
+            ctx: Some("pipeline".into()),
+            mode: Some("planned".into()),
+        }));
+        roundtrip_req(Request::SubmitGraph(SubmitGraphReq {
+            id: 32,
+            nodes: vec![GraphNodeReq {
+                name: "only".into(),
+                app: "matmul".into(),
+                size: 48,
+                deps: vec![],
+                variant: None,
+            }],
+            ctx: None,
+            mode: None,
+        }));
+        // malformed: node list required and non-empty, nodes need names
+        assert!(decode_request(r#"{"op":"submit_graph","id":1}"#).is_err());
+        assert!(decode_request(r#"{"op":"submit_graph","id":1,"nodes":[]}"#).is_err());
+        assert!(
+            decode_request(r#"{"op":"submit_graph","id":1,"nodes":[{"app":"sort","size":8}]}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn graph_response_roundtrips() {
+        // every GraphDone field, both planned and degraded-to-greedy
+        roundtrip_resp(Response::GraphDone(GraphDoneResp {
+            id: 31,
+            ctx: "pipeline".into(),
+            mode: "planned".into(),
+            makespan: 0.0421,
+            wall: 0.0533,
+            elided_transfers: 2,
+            nodes: vec![
+                GraphNodeReport {
+                    name: "src".into(),
+                    variant: "omp".into(),
+                    arch: "cpu".into(),
+                    planned: true,
+                    est: 0.01,
+                    modeled: 0.011,
+                    wall: 0.012,
+                    elided: false,
+                },
+                GraphNodeReport {
+                    name: "sink".into(),
+                    variant: "cuda".into(),
+                    arch: "cuda".into(),
+                    planned: true,
+                    est: 0.004,
+                    modeled: 0.0041,
+                    wall: 0.0039,
+                    elided: true,
+                },
+            ],
+        }));
+        roundtrip_resp(Response::GraphDone(GraphDoneResp {
+            id: 32,
+            ctx: "default".into(),
+            mode: "greedy".into(),
+            makespan: 0.0,
+            wall: 0.001,
+            elided_transfers: 0,
+            nodes: vec![],
+        }));
+        // malformed: node reports need name and variant
+        assert!(decode_response(
+            r#"{"ok":true,"type":"graph_done","id":1,"mode":"planned","nodes":[{"variant":"omp"}]}"#
+        )
+        .is_err());
+        assert!(decode_response(r#"{"ok":true,"type":"graph_done","id":1}"#).is_err());
     }
 }
 

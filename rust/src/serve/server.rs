@@ -34,9 +34,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::protocol::{
-    self, AutoscaleCtxDesc, AutoscaleResp, CtxDesc, Request, Response, ResultResp, StatsResp,
-    StreamAckResp, StreamClosedResp, StreamCreditResp, StreamOpenReq, StreamOpenedResp, SubmitReq,
-    PROTOCOL_VERSION,
+    self, AutoscaleCtxDesc, AutoscaleResp, CtxDesc, GraphDoneResp, GraphNodeReport, Request,
+    Response, ResultResp, StatsResp, StreamAckResp, StreamClosedResp, StreamCreditResp,
+    StreamOpenReq, StreamOpenedResp, SubmitGraphReq, SubmitReq, PROTOCOL_VERSION,
 };
 use super::transport::codec::{encode_frame, FrameDecoder, Framing};
 #[cfg(unix)]
@@ -49,6 +49,7 @@ use crate::util::json::Json;
 mod mux;
 use crate::apps;
 use crate::autoscale::{AutoscaleOptions, AutoscaleShared, Autoscaler, ScaleTarget};
+use crate::plan::{GraphSpec, PlanMode};
 use crate::runtime::Manifest;
 use crate::stream::{
     BacklogModel, CreditController, LatencyTrack, StreamShared, StreamSpec, Windower, BASE_CREDIT,
@@ -411,6 +412,11 @@ struct Shared {
     /// Stream sessions currently open (v6 stats gauge; streams also
     /// count into cluster placement through it).
     streams: AtomicU64,
+    /// Graphs planned and released (v8; counts degraded-to-greedy
+    /// submissions too — `planned_tasks` distinguishes them).
+    plans: AtomicU64,
+    /// Tasks released carrying a planned prefer-strength prior (v8).
+    planned_tasks: AtomicU64,
     /// Tasks completed per context id (results leave Metrics per-request,
     /// so the server keeps its own per-tenant counters).
     ctx_tasks: Vec<AtomicU64>,
@@ -529,6 +535,8 @@ impl Shared {
             ctx_variants,
             slo_ms,
             streams: self.streams.load(Ordering::Relaxed),
+            plans: self.plans.load(Ordering::Relaxed),
+            planned_tasks: self.planned_tasks.load(Ordering::Relaxed),
         }
     }
 }
@@ -632,6 +640,8 @@ impl Server {
             requests_ok: AtomicU64::new(0),
             requests_err: AtomicU64::new(0),
             streams: AtomicU64::new(0),
+            plans: AtomicU64::new(0),
+            planned_tasks: AtomicU64::new(0),
             ctx_names,
             default_ctx,
             autoscale: Mutex::new(None),
@@ -1097,12 +1107,19 @@ fn dispatch_request(
                 reply,
                 &Response::PerfModels {
                     models: shared.rt.perf_models().to_json(),
+                    // v8: banded selection summaries ride the same pull,
+                    // so peer shards plan graphs with this shard's
+                    // interference evidence
+                    bands: shared.rt.export_selection_bands(),
                 },
             );
             true
         }
-        Request::PerfPush { models } => {
-            let merged = shared.rt.perf_models().set_remote_json(&models) as u64;
+        Request::PerfPush { models, bands } => {
+            let mut merged = shared.rt.perf_models().set_remote_json(&models) as u64;
+            if let Some(b) = &bands {
+                merged += shared.rt.import_selection_bands(b) as u64;
+            }
             send_line(reply, &Response::PerfAck { merged });
             true
         }
@@ -1150,6 +1167,10 @@ fn dispatch_request(
                     );
                 }
             }
+            true
+        }
+        Request::SubmitGraph(req) => {
+            submit_graph_request(shared, reply, req, sid, sess);
             true
         }
         Request::Submit(req) => {
@@ -1217,6 +1238,221 @@ fn dispatch_request(
             true
         }
     }
+}
+
+// --------------------------------------------------------- graph planning
+
+/// Admit one `submit_graph` request (v8): validate the context and
+/// mode on the session thread, then hand planning + release + wait to
+/// a dedicated thread — a whole-graph wait must not block the session
+/// loop any more than a batch wait may block the dispatcher.
+fn submit_graph_request(
+    shared: &Arc<Shared>,
+    reply: &ReplyLane,
+    req: SubmitGraphReq,
+    sid: u64,
+    sess: &mut SessionState,
+) {
+    let id = req.id;
+    let fail = |shared: &Arc<Shared>, e: String| {
+        shared.requests_err.fetch_add(1, Ordering::Relaxed);
+        send_line(reply, &Response::Error { id: Some(id), error: e });
+    };
+    if shared.draining.load(Ordering::SeqCst) {
+        return fail(shared, "server is draining".into());
+    }
+    let (ctx_id, ctx_name) = match shared.resolve_ctx(req.ctx.as_deref()) {
+        Ok(x) => x,
+        Err(e) => return fail(shared, format!("{e:#}")),
+    };
+    // `mode` forces the baseline: "greedy" skips the lookahead pass
+    // entirely (bench baselines, degradation tests); default = planned
+    let force_greedy = match req.mode.as_deref() {
+        None | Some("planned") => false,
+        Some("greedy") => true,
+        Some(other) => {
+            return fail(
+                shared,
+                format!("unknown graph mode '{other}' (want planned | greedy)"),
+            )
+        }
+    };
+    // the session's declared SLO follows graph submits exactly like
+    // scalar submits (v5 semantics)
+    if let Some(ms) = sess.slo_ms {
+        if !sess.slo_declared.contains(&ctx_id) {
+            if let Some(a) = shared.autoscale.lock().unwrap().as_ref() {
+                a.tighten_slo(&ctx_name, sid, ms);
+            }
+            sess.slo_declared.push(ctx_id);
+        }
+    }
+    let base_selector = sess.policy.as_ref().map(|(_, s)| s.clone());
+    // one gate slot per graph: the whole DAG is one admitted request
+    shared.gate.acquire();
+    let shared2 = shared.clone();
+    let reply = reply.clone();
+    let handle = std::thread::Builder::new()
+        .name("serve-graph".into())
+        .spawn(move || {
+            let resp = match run_graph(&shared2, req, ctx_id, &ctx_name, base_selector, force_greedy)
+            {
+                Ok(r) => {
+                    shared2.requests_ok.fetch_add(1, Ordering::Relaxed);
+                    Response::GraphDone(r)
+                }
+                Err(e) => {
+                    shared2.requests_err.fetch_add(1, Ordering::Relaxed);
+                    Response::Error {
+                        id: Some(id),
+                        error: format!("{e:#}"),
+                    }
+                }
+            };
+            send_line(&reply, &resp);
+            shared2.gate.release();
+        })
+        .expect("spawning graph thread");
+    shared.completions.lock().unwrap().push(handle);
+}
+
+/// Build the [`GraphSpec`], plan + release it, wait out every node and
+/// assemble the per-node report. Consumer nodes of the same app and
+/// size share their producer's handles, so a dependency edge is a real
+/// data dependency through the registry — exactly the bytes the planner
+/// prices (and elides when both ends land on one arch).
+fn run_graph(
+    shared: &Arc<Shared>,
+    req: SubmitGraphReq,
+    ctx_id: CtxId,
+    ctx_name: &str,
+    base_selector: Option<Arc<dyn SelectionPolicy>>,
+    force_greedy: bool,
+) -> Result<GraphDoneResp> {
+    let rt = &shared.rt;
+    let t0 = Instant::now();
+    let mut spec = GraphSpec::new();
+    let mut index: HashMap<String, usize> = HashMap::new();
+    let mut owned: Vec<HandleId> = Vec::new();
+    let mut node_handles: Vec<Vec<HandleId>> = Vec::new();
+    let mut node_keys: Vec<(String, usize)> = Vec::new();
+    let built = (|| -> Result<()> {
+        for (i, n) in req.nodes.iter().enumerate() {
+            let cl_name = apps::app_codelet_name(&n.app).to_string();
+            let cl = match rt.codelet(&cl_name) {
+                Some(c) => c,
+                None => rt.register_codelet(apps::codelet(&n.app)?),
+            };
+            let mut deps = Vec::with_capacity(n.deps.len());
+            for d in &n.deps {
+                let j = *index.get(d).ok_or_else(|| {
+                    anyhow!("node '{}' depends on unknown node '{d}' (deps must name earlier nodes)", n.name)
+                })?;
+                deps.push(j);
+            }
+            // chain through the first compatible producer's handles
+            let handles = match deps
+                .iter()
+                .copied()
+                .find(|&j| node_keys[j] == (n.app.clone(), n.size))
+            {
+                Some(j) => node_handles[j].clone(),
+                None => {
+                    let seed = req.id ^ (i as u64).wrapping_mul(0x9e3779b97f4a7c15);
+                    let inst = apps::prepare(rt, &n.app, n.size, seed)?;
+                    owned.extend(inst.owned_handles());
+                    inst.handles
+                }
+            };
+            // a pinned variant must exist; a typo is a protocol error
+            if let Some(v) = &n.variant {
+                if cl.impl_by_name(v).is_none() {
+                    let known: Vec<&str> = cl.impls.iter().map(|i| i.name.as_str()).collect();
+                    bail!(
+                        "node '{}': unknown variant '{v}' for app '{}' (registered: {})",
+                        n.name,
+                        n.app,
+                        known.join(", ")
+                    );
+                }
+            }
+            spec.add_node(&n.name, cl, handles.clone(), n.size, &deps)?;
+            if let Some(v) = &n.variant {
+                spec.pin_last(v);
+            }
+            index.insert(n.name.clone(), i);
+            node_handles.push(handles);
+            node_keys.push((n.app.clone(), n.size));
+        }
+        Ok(())
+    })();
+    let run = match built.and_then(|()| rt.submit_graph(&spec, ctx_id, base_selector, force_greedy))
+    {
+        Ok(r) => r,
+        Err(e) => {
+            for h in &owned {
+                let _ = rt.unregister_data(*h);
+            }
+            return Err(e);
+        }
+    };
+    let waited = rt.wait_tasks(&run.tasks);
+    let results = rt.metrics().take_results_for(&run.tasks);
+    if let Some(c) = shared.ctx_tasks.get(ctx_id) {
+        c.fetch_add(results.len() as u64, Ordering::Relaxed);
+    }
+    {
+        let mut hists = shared.ctx_variants.lock().unwrap();
+        if let Some(h) = hists.get_mut(ctx_id) {
+            for r in &results {
+                *h.entry(r.variant.clone()).or_insert(0) += 1;
+            }
+        }
+    }
+    rt.reap_tasks(&run.tasks);
+    for h in &owned {
+        let _ = rt.unregister_data(*h);
+    }
+    waited?;
+    let plan = &run.plan;
+    shared.plans.fetch_add(1, Ordering::Relaxed);
+    if plan.mode == PlanMode::Planned {
+        shared
+            .planned_tasks
+            .fetch_add(run.tasks.len() as u64, Ordering::Relaxed);
+    }
+    let mut nodes = Vec::with_capacity(plan.assignments.len());
+    for (a, tid) in plan.assignments.iter().zip(&run.tasks) {
+        let r = results
+            .iter()
+            .find(|r| r.task == *tid)
+            .ok_or_else(|| anyhow!("graph node '{}' finished without a result", a.name))?;
+        nodes.push(GraphNodeReport {
+            name: a.name.clone(),
+            // the variant actually executed — comparing it against the
+            // plan's prefer-strength choice is the whole observability
+            // point of the per-node report
+            variant: r.variant.clone(),
+            arch: match a.arch {
+                Arch::Cpu => "cpu".into(),
+                Arch::Cuda => "cuda".into(),
+            },
+            planned: plan.mode == PlanMode::Planned,
+            est: a.est,
+            modeled: r.modeled_total(),
+            wall: r.wall,
+            elided: a.elided,
+        });
+    }
+    Ok(GraphDoneResp {
+        id: req.id,
+        ctx: ctx_name.to_string(),
+        mode: plan.mode.name().to_string(),
+        makespan: plan.makespan,
+        wall: t0.elapsed().as_secs_f64(),
+        elided_transfers: plan.elided_transfers as u64,
+        nodes,
+    })
 }
 
 // -------------------------------------------------------------- streaming

@@ -7,6 +7,15 @@
 //! are on the wire. Buffers keep their capacity across cycles, so
 //! after warm-up the allocator is out of the per-message picture.
 //! Hit/miss counters are exposed for tests and diagnostics.
+//!
+//! The freelist is bounded two ways: by entry count (`max_pooled`) and
+//! by a **byte high-water mark**. Buffers may legitimately grow up to
+//! 8× the chunk size before they count as outliers, so a connection
+//! burst that returns hundreds of grown buffers could otherwise pin
+//! `max_pooled × 8 × chunk` bytes long after the burst drains. When a
+//! returned buffer would push the pooled bytes past the mark, the
+//! largest pooled buffers are dropped first until it fits — peak
+//! memory tracks the *steady* working set, not the worst burst.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -16,17 +25,36 @@ pub struct BufferPool {
     max_pooled: usize,
     /// Capacity fresh buffers are created with.
     chunk: usize,
+    /// Byte high-water mark: pooled capacities never sum past this.
+    max_bytes: usize,
     free: Mutex<Vec<Vec<u8>>>,
+    /// Sum of the pooled buffers' capacities (tracked under `free`'s
+    /// lock; atomic only so `pooled_bytes()` needs no lock).
+    bytes: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
 }
 
 impl BufferPool {
     pub fn new(max_pooled: usize, chunk: usize) -> BufferPool {
+        // default mark: every slot at its nominal chunk size plus 2x
+        // headroom for grown-but-kept buffers — far below the 8x worst
+        // case the per-buffer outlier check alone would allow
+        BufferPool::with_byte_cap(
+            max_pooled,
+            chunk,
+            max_pooled.saturating_mul(chunk).saturating_mul(2),
+        )
+    }
+
+    /// A pool with an explicit byte high-water mark.
+    pub fn with_byte_cap(max_pooled: usize, chunk: usize, max_bytes: usize) -> BufferPool {
         BufferPool {
             max_pooled,
             chunk,
+            max_bytes,
             free: Mutex::new(Vec::new()),
+            bytes: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -41,6 +69,8 @@ impl BufferPool {
     /// Take a cleared buffer, reusing a pooled one when available.
     pub fn take(&self) -> Vec<u8> {
         if let Some(mut b) = self.free.lock().unwrap().pop() {
+            self.bytes
+                .fetch_sub(b.capacity() as u64, Ordering::Relaxed);
             b.clear();
             self.hits.fetch_add(1, Ordering::Relaxed);
             return b;
@@ -51,16 +81,41 @@ impl BufferPool {
 
     /// Return a buffer to the freelist. Zero-capacity buffers and
     /// outliers that ballooned past 8× the chunk size are dropped so
-    /// one giant frame can't pin memory forever.
+    /// one giant frame can't pin memory forever; when the byte
+    /// high-water mark would be crossed, the largest pooled buffers
+    /// are evicted first to make room.
     pub fn put(&self, mut b: Vec<u8>) {
-        if b.capacity() == 0 || b.capacity() > self.chunk * 8 {
+        if b.capacity() == 0 || b.capacity() > self.chunk * 8 || b.capacity() > self.max_bytes {
             return;
         }
         b.clear();
         let mut free = self.free.lock().unwrap();
-        if free.len() < self.max_pooled {
-            free.push(b);
+        if free.len() >= self.max_pooled {
+            return;
         }
+        let mut pooled = self.bytes.load(Ordering::Relaxed) as usize;
+        if pooled + b.capacity() > self.max_bytes {
+            // evict largest-first: one eviction frees the most room,
+            // and the small steady-state buffers stay warm
+            free.sort_unstable_by_key(Vec::capacity);
+            while pooled + b.capacity() > self.max_bytes {
+                let Some(victim) = free.pop() else { break };
+                pooled -= victim.capacity();
+                self.bytes
+                    .fetch_sub(victim.capacity() as u64, Ordering::Relaxed);
+            }
+            if pooled + b.capacity() > self.max_bytes {
+                return;
+            }
+        }
+        self.bytes.fetch_add(b.capacity() as u64, Ordering::Relaxed);
+        free.push(b);
+    }
+
+    /// Sum of the pooled buffers' capacities — bounded by the byte
+    /// high-water mark at all times.
+    pub fn pooled_bytes(&self) -> usize {
+        self.bytes.load(Ordering::Relaxed) as usize
     }
 
     /// (hits, misses) — a warm steady state shows hits climbing while
@@ -84,9 +139,11 @@ mod tests {
         b.extend_from_slice(&[7u8; 40]);
         let cap = b.capacity();
         pool.put(b);
+        assert_eq!(pool.pooled_bytes(), cap);
         let b2 = pool.take();
         assert_eq!(b2.len(), 0, "pooled buffers come back cleared");
         assert_eq!(b2.capacity(), cap, "capacity survives the cycle");
+        assert_eq!(pool.pooled_bytes(), 0);
         let (hits, misses) = pool.counters();
         assert_eq!((hits, misses), (1, 1));
     }
@@ -99,5 +156,52 @@ mod tests {
         pool.put(Vec::with_capacity(64));
         pool.put(Vec::with_capacity(64)); // over freelist cap: dropped
         assert_eq!(pool.free.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn byte_high_water_mark_bounds_a_burst_of_grown_buffers() {
+        // 8 slots of nominal 64 B, but only 256 B pooled: a burst of
+        // grown (4x chunk) returns must not pin 8 x 256 B
+        let pool = BufferPool::with_byte_cap(8, 64, 256);
+        for _ in 0..8 {
+            pool.put(Vec::with_capacity(256)); // within the 8x outlier bound
+        }
+        assert!(
+            pool.pooled_bytes() <= 256,
+            "burst pinned {} B past the 256 B mark",
+            pool.pooled_bytes()
+        );
+        assert_eq!(pool.free.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn byte_cap_evicts_largest_first_keeping_steady_state_warm() {
+        let pool = BufferPool::with_byte_cap(8, 64, 320);
+        pool.put(Vec::with_capacity(64));
+        pool.put(Vec::with_capacity(256)); // a grown burst survivor
+        assert_eq!(pool.pooled_bytes(), 320);
+        // the next small return must evict the 256 B outlier, not be
+        // refused (and not evict the warm 64 B steady-state buffer)
+        pool.put(Vec::with_capacity(64));
+        let caps: Vec<usize> = pool
+            .free
+            .lock()
+            .unwrap()
+            .iter()
+            .map(Vec::capacity)
+            .collect();
+        assert_eq!(caps, vec![64, 64]);
+        assert_eq!(pool.pooled_bytes(), 128);
+    }
+
+    #[test]
+    fn count_and_byte_caps_compose() {
+        // count cap still applies even with byte headroom to spare
+        let pool = BufferPool::with_byte_cap(2, 64, 4096);
+        for _ in 0..4 {
+            pool.put(Vec::with_capacity(64));
+        }
+        assert_eq!(pool.free.lock().unwrap().len(), 2);
+        assert_eq!(pool.pooled_bytes(), 128);
     }
 }

@@ -67,8 +67,11 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::plan::{Candidate, GraphPlanner, GraphRun, GraphSpec, PlanMode, PlanNode, PlannerInput};
 use crate::runtime::{Manifest, Tensor, XlaHandle, XlaService};
+use crate::util::json::Json;
 use scheduler::{ReadyTask, SchedCtx, Scheduler, WorkerInfo};
+use selection::Planned;
 use task::TaskTable;
 
 /// Scheduling-context id: index into the runtime's context table.
@@ -795,6 +798,211 @@ impl Runtime {
 
     pub fn task_state(&self, id: TaskId) -> Option<TaskState> {
         self.inner.tasks.lock().unwrap().state(id)
+    }
+
+    // ------------------------------------------------------------ graphs
+
+    /// Submit a whole task DAG with globally planned variant assignments
+    /// (Kessler & Dastgeer's *Optimized Composition*; see [`crate::plan`]).
+    ///
+    /// The [`crate::plan::GraphPlanner`] prices every node's candidates
+    /// with the live perf models (analytic device models while cold),
+    /// the modeled PCIe cost of each data edge, and the context's
+    /// current backlog, then assigns variants jointly to minimize the
+    /// graph's modeled makespan. Nodes are released in dependency order
+    /// carrying prefer-strength [`Planned`] priors — never pins — and
+    /// runs of same-arch nodes share a priority so same-codelet
+    /// batching can coalesce them. When the context is contended at
+    /// submit time (queue pressure beyond its parallelism), or
+    /// `force_greedy` is set, the planner degrades to per-task greedy
+    /// and tasks are released under `base_selector` (the context's
+    /// policy when `None`).
+    pub fn submit_graph(
+        &self,
+        spec: &GraphSpec,
+        ctx: CtxId,
+        base_selector: Option<Arc<dyn SelectionPolicy>>,
+        force_greedy: bool,
+    ) -> Result<GraphRun> {
+        if spec.is_empty() {
+            bail!("cannot submit an empty graph");
+        }
+        let slot = self
+            .inner
+            .slot(ctx)
+            .ok_or_else(|| anyhow!("unknown scheduling context {ctx}"))?;
+
+        // planner view of every node
+        let mut nodes: Vec<PlanNode> = Vec::with_capacity(spec.len());
+        for n in &spec.nodes {
+            if n.handles.len() != n.codelet.modes.len() {
+                bail!(
+                    "graph node '{}': {} handle(s) for codelet '{}' expecting {}",
+                    n.name,
+                    n.handles.len(),
+                    n.codelet.name,
+                    n.codelet.modes.len()
+                );
+            }
+            let probe = ReadyTask {
+                id: 0,
+                codelet: n.codelet.clone(),
+                size: n.size,
+                handles: n
+                    .handles
+                    .iter()
+                    .copied()
+                    .zip(n.codelet.modes.iter().copied())
+                    .collect(),
+                selector: None,
+                priority: 0,
+                ctx,
+                chosen_impl: None,
+                est_cost_ns: 0,
+                tag: 0,
+            };
+            // candidate table: every eligible implementation on every
+            // member architecture, priced by the perf models — falling
+            // back to the analytic device model so cold codelets still
+            // plan instead of defaulting to arbitrary order
+            let mut candidates = Vec::new();
+            for &arch in &slot.ctx.member_archs() {
+                for i in slot.ctx.eligible_impls(&probe, arch) {
+                    let imp = &n.codelet.impls[i];
+                    if let Some(pin) = n.pinned.as_deref() {
+                        if imp.name != pin {
+                            continue;
+                        }
+                    }
+                    let est = slot
+                        .ctx
+                        .exec_estimate(&probe, i)
+                        .or_else(|| slot.ctx.recent_estimate(&probe, i))
+                        .unwrap_or_else(|| {
+                            device::exec_model(&n.codelet.app, &imp.name, n.size)
+                        });
+                    candidates.push(Candidate {
+                        variant: imp.name.clone(),
+                        arch: imp.arch,
+                        est,
+                    });
+                }
+            }
+            if candidates.is_empty() {
+                bail!(
+                    "graph node '{}' (codelet '{}', size {}) has no selectable \
+                     implementation in context '{}'",
+                    n.name,
+                    n.codelet.name,
+                    n.size,
+                    slot.name
+                );
+            }
+            // residency pricing: bytes shared with each producer ride
+            // that edge; bytes no producer writes are main-memory roots
+            let mut edge_bytes = Vec::with_capacity(n.deps.len());
+            let mut from_deps: Vec<HandleId> = Vec::new();
+            for &d in &n.deps {
+                let dep = &spec.nodes[d];
+                let mut bytes = 0usize;
+                for &h in &n.handles {
+                    if dep.handles.contains(&h) {
+                        bytes += self.inner.data.byte_size(h)?;
+                        from_deps.push(h);
+                    }
+                }
+                edge_bytes.push(bytes);
+            }
+            let mut root_bytes = 0usize;
+            for &h in &n.handles {
+                if !from_deps.contains(&h) {
+                    root_bytes += self.inner.data.byte_size(h)?;
+                }
+            }
+            nodes.push(PlanNode {
+                name: n.name.clone(),
+                deps: n.deps.clone(),
+                edge_bytes,
+                root_bytes,
+                candidates,
+            });
+        }
+
+        // per-arch backlog: the best-case wait on each architecture
+        let mut arch_backlog: Vec<(Arch, f64)> = Vec::new();
+        for w in slot.ctx.member_workers() {
+            let t = slot.ctx.queued_secs(w.id);
+            match arch_backlog.iter_mut().find(|(a, _)| *a == w.arch) {
+                Some(entry) => entry.1 = entry.1.min(t),
+                None => arch_backlog.push((w.arch, t)),
+            }
+        }
+        // degradation signal: queue pressure beyond the partition's
+        // parallelism means the snapshot is already stale by the time
+        // the whole graph would release — plan per-task instead
+        let contended = slot.ctx.pending.load(Ordering::Relaxed).max(0) as usize
+            > slot.ctx.member_count();
+
+        let input = PlannerInput {
+            nodes,
+            arch_backlog,
+            contended: contended || force_greedy,
+        };
+        let plan = GraphPlanner::new().plan(&input)?;
+
+        // release in dependency order; same-span nodes share a priority
+        // (higher = earlier spans) so the batcher sees them together
+        let mut tasks: Vec<TaskId> = Vec::with_capacity(spec.len());
+        for (i, n) in spec.nodes.iter().enumerate() {
+            let a = &plan.assignments[i];
+            let mut t = TaskSpec::new(n.codelet.clone(), n.handles.clone(), n.size)
+                .in_context(ctx)
+                .with_tag(i as u64 + 1)
+                .with_priority((plan.spans - a.span) as i32);
+            let after: Vec<TaskId> = n.deps.iter().map(|&d| tasks[d]).collect();
+            if !after.is_empty() {
+                t = t.after(&after);
+            }
+            t.selector = match plan.mode {
+                PlanMode::Planned => {
+                    Some(Arc::new(Planned::with_prior(&a.variant, a.est)) as Arc<dyn SelectionPolicy>)
+                }
+                PlanMode::Greedy => base_selector.clone(),
+            };
+            tasks.push(self.submit(t)?);
+        }
+        Ok(GraphRun { tasks, plan })
+    }
+
+    // ------------------------------------------------------- band gossip
+
+    /// Export every context's banded selection state
+    /// ([`SelectionPolicy::export_bands`]) as one summary, so graph
+    /// plans computed on other shards price variants with this shard's
+    /// interference evidence.
+    pub fn export_selection_bands(&self) -> Option<Json> {
+        let contexts = self.inner.contexts.read().unwrap();
+        let mut all = Vec::new();
+        for c in contexts.iter() {
+            if let Some(Json::Arr(mut a)) = c.ctx.selector.export_bands() {
+                all.append(&mut a);
+            }
+        }
+        if all.is_empty() {
+            None
+        } else {
+            Some(Json::Arr(all))
+        }
+    }
+
+    /// Merge a peer's banded selection summary into every context's
+    /// policy; returns the number of buckets accepted.
+    pub fn import_selection_bands(&self, bands: &Json) -> usize {
+        let contexts = self.inner.contexts.read().unwrap();
+        contexts
+            .iter()
+            .map(|c| c.ctx.selector.import_bands(bands))
+            .sum()
     }
 
     // -------------------------------------------------------- snapshots

@@ -45,6 +45,7 @@ use std::sync::Mutex;
 use super::query::SelectionQuery;
 use super::{best_by, explore_pool, SelectionPolicy, VariantChoice};
 use crate::taskrt::perfmodel::{key, EWMA_ALPHA};
+use crate::util::json::Json;
 
 /// Multiplier applied to the hinted variant's score in bands without
 /// observations: the author's `prefer()` expectation breaks near-ties
@@ -182,6 +183,60 @@ impl SelectionPolicy for Contextual {
             .entry(band)
             .or_default()
             .record(secs);
+    }
+
+    /// Band summaries for gossip: one object per (key, size band, load
+    /// band) bucket, so a graph plan on another shard prices variants
+    /// with this shard's interference evidence.
+    fn export_bands(&self) -> Option<Json> {
+        let buckets = self.buckets.lock().unwrap();
+        if buckets.is_empty() {
+            return None;
+        }
+        let arr = buckets
+            .iter()
+            .map(|((k, sb, lb), b)| {
+                let mut o = BTreeMap::new();
+                o.insert("key".to_string(), Json::Str(k.clone()));
+                o.insert("size_band".to_string(), Json::Num(*sb as f64));
+                o.insert("load_band".to_string(), Json::Num(*lb as f64));
+                o.insert("count".to_string(), Json::Num(b.count as f64));
+                o.insert("ewma".to_string(), Json::Num(b.ewma));
+                Json::Obj(o)
+            })
+            .collect();
+        Some(Json::Arr(arr))
+    }
+
+    /// Merge a peer's band summaries: a remote bucket replaces the
+    /// local one only when it has strictly more observations, so
+    /// re-importing the same summary is a no-op and local learning is
+    /// never regressed by stale gossip.
+    fn import_bands(&self, bands: &Json) -> usize {
+        let Some(entries) = bands.as_arr() else {
+            return 0;
+        };
+        let mut merged = 0;
+        let mut buckets = self.buckets.lock().unwrap();
+        for e in entries {
+            let (Some(k), Some(sb), Some(lb), Some(count), Some(ewma)) = (
+                e.get("key").and_then(|v| v.as_str()),
+                e.get("size_band").and_then(|v| v.as_f64()),
+                e.get("load_band").and_then(|v| v.as_f64()),
+                e.get("count").and_then(|v| v.as_f64()),
+                e.get("ewma").and_then(|v| v.as_f64()),
+            ) else {
+                continue;
+            };
+            let band = (k.to_string(), sb as u8, lb as u8);
+            let slot = buckets.entry(band).or_default();
+            if count as u64 > slot.count {
+                slot.count = count as u64;
+                slot.ewma = ewma;
+                merged += 1;
+            }
+        }
+        merged
     }
 }
 
@@ -376,6 +431,32 @@ mod tests {
         p.feedback(&ctx.query(&task, Arch::Cpu), "fast", 0.95e-3);
         let c = p.select(&ctx.query(&task, Arch::Cpu)).unwrap();
         assert_eq!(task.codelet.impls[c.impl_idx].name, "fast");
+    }
+
+    #[test]
+    fn band_export_import_is_idempotent_and_monotone() {
+        let src = Contextual::new();
+        let ctx = two_arch_ctx(Arc::new(Greedy::new()));
+        let task = cross_arch_task(None);
+        pressure(&ctx, 1, 4);
+        src.feedback(&ctx.query(&task, Arch::Cuda), "cuda", 5e-2);
+        src.feedback(&ctx.query(&task, Arch::Cuda), "cuda", 5e-2);
+        let bands = src.export_bands().expect("has banded state");
+
+        // fresh peer accepts every bucket; a re-import is a no-op
+        let dst = Contextual::new();
+        assert!(dst.export_bands().is_none(), "cold policy exports nothing");
+        assert_eq!(dst.import_bands(&bands), 1);
+        assert_eq!(dst.band_observations("c", "cuda", 64, 2), 2);
+        assert_eq!(dst.import_bands(&bands), 0, "idempotent re-import");
+
+        // local evidence with more observations is never regressed
+        dst.feedback(&ctx.query(&task, Arch::Cuda), "cuda", 1e-2);
+        assert_eq!(dst.import_bands(&bands), 0, "stale gossip loses");
+        assert_eq!(dst.band_observations("c", "cuda", 64, 2), 3);
+
+        // malformed payloads are ignored wholesale
+        assert_eq!(dst.import_bands(&Json::Str("junk".into())), 0);
     }
 
     #[test]

@@ -56,6 +56,10 @@
 //! |                           | inputs are CPU-resident                            |
 //! | [`Forced`]                | pin one variant by name; replaces both the old     |
 //! |                           | `force_variant` plumbing and the serve special case|
+//! | [`Planned`]               | prefer-strength graph-plan prior: takes the variant|
+//! |                           | the [`crate::plan::GraphPlanner`] assigned when it |
+//! |                           | is eligible, degrades to greedy otherwise (a plan  |
+//! |                           | is advice, not a pin)                              |
 
 pub mod contextual;
 pub mod query;
@@ -68,6 +72,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::perfmodel::key;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Default exploration rate for [`EpsilonGreedy`].
@@ -77,7 +82,7 @@ pub const DEFAULT_EPSILON: f64 = 0.1;
 /// CLI, `compar serve` and `compar route` (unknown names must be
 /// rejected with this set, never silently defaulted).
 pub const VALID_SELECTORS: &str =
-    "greedy | calibrating | epsilon[:E] | epsilon-decayed[:E] | contextual | forced:VARIANT";
+    "greedy | calibrating | epsilon[:E] | epsilon-decayed[:E] | contextual | planned | forced:VARIANT";
 
 /// The outcome of one selection decision.
 #[derive(Debug, Clone)]
@@ -125,6 +130,21 @@ pub trait SelectionPolicy: Send + Sync {
     /// shared [`super::PerfModels`] store is updated separately by the
     /// worker; policies use this to maintain their own state.
     fn feedback(&self, _q: &SelectionQuery, _variant: &str, _secs: f64) {}
+
+    /// Serialize this policy's banded observation state for gossip, so
+    /// a graph plan computed on one shard prices variants with the
+    /// whole cluster's evidence. `None` (the default) means the policy
+    /// has no banded state to ship.
+    fn export_bands(&self) -> Option<Json> {
+        None
+    }
+
+    /// Merge banded observation state received from a peer; returns
+    /// the number of buckets accepted. Idempotent by construction —
+    /// re-importing the same summary is a no-op. Default: ignore.
+    fn import_bands(&self, _bands: &Json) -> usize {
+        0
+    }
 }
 
 /// Serializable policy selector: what configs, CLI flags and the serve
@@ -141,6 +161,11 @@ pub enum SelectorKind {
     /// Context-aware selection over the full [`SelectionQuery`]
     /// (banded observations + transfer/queue-adjusted ranking).
     Contextual,
+    /// Prefer-strength graph-plan priors ([`Planned`]): honour the
+    /// variant a [`crate::plan::GraphPlanner`] assigned when eligible,
+    /// greedy otherwise. Built bare (no prior) it behaves like greedy;
+    /// the runtime attaches per-task priors at graph release.
+    Planned,
     Forced(String),
 }
 
@@ -160,6 +185,7 @@ impl SelectorKind {
                 return Some(SelectorKind::EpsilonDecayed(DEFAULT_EPSILON))
             }
             "contextual" | "context-aware" => return Some(SelectorKind::Contextual),
+            "planned" => return Some(SelectorKind::Planned),
             _ => {}
         }
         if let Some(e) = lower.strip_prefix("epsilon-decayed:") {
@@ -192,6 +218,7 @@ impl SelectorKind {
             SelectorKind::EpsilonGreedy(e) => format!("epsilon:{e}"),
             SelectorKind::EpsilonDecayed(e) => format!("epsilon-decayed:{e}"),
             SelectorKind::Contextual => "contextual".into(),
+            SelectorKind::Planned => "planned".into(),
             SelectorKind::Forced(v) => format!("forced:{v}"),
         }
     }
@@ -204,6 +231,7 @@ impl SelectorKind {
             SelectorKind::EpsilonGreedy(e) => Arc::new(EpsilonGreedy::new(*e, seed)),
             SelectorKind::EpsilonDecayed(e) => Arc::new(EpsilonGreedy::new_decayed(*e, seed)),
             SelectorKind::Contextual => Arc::new(Contextual::new()),
+            SelectorKind::Planned => Arc::new(Planned::new()),
             SelectorKind::Forced(v) => Arc::new(Forced::new(v)),
         }
     }
@@ -487,6 +515,90 @@ impl SelectionPolicy for EpsilonGreedy {
     }
 }
 
+// ---------------------------------------------------------------- planned
+
+/// Prefer-strength graph-plan prior: the [`crate::plan::GraphPlanner`]
+/// assigned this task a variant while optimizing the whole DAG's
+/// makespan, and the runtime attached that assignment here at release
+/// ([`Planned::with_prior`]). Unlike [`Forced`], a plan is advice: if
+/// the planned variant is not eligible on the arch being asked (the
+/// snapshot moved, workers migrated, the artifact is absent), selection
+/// degrades to greedy over whatever *is* eligible — workers can always
+/// bail. Built bare (`SelectorKind::Planned`) it carries no prior and
+/// behaves exactly like [`Greedy`].
+pub struct Planned {
+    variant: Option<String>,
+    /// The plan's modeled estimate behind the assignment (execution
+    /// only; schedulers re-add transfer terms themselves).
+    est: Option<f64>,
+    rr: AtomicUsize,
+}
+
+impl Planned {
+    /// No prior: greedy-like (what `SelectorKind::Planned` builds).
+    pub fn new() -> Planned {
+        Planned {
+            variant: None,
+            est: None,
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    /// A per-task prior from a graph plan.
+    pub fn with_prior(variant: &str, est: f64) -> Planned {
+        Planned {
+            variant: Some(variant.to_string()),
+            est: Some(est),
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    /// The planned variant, if any (diagnostics/tests).
+    pub fn planned_variant(&self) -> Option<&str> {
+        self.variant.as_deref()
+    }
+}
+
+impl Default for Planned {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SelectionPolicy for Planned {
+    fn name(&self) -> String {
+        match &self.variant {
+            Some(v) => format!("planned:{v}"),
+            None => "planned".into(),
+        }
+    }
+
+    fn select(&self, q: &SelectionQuery) -> Option<VariantChoice> {
+        let eligible = q.eligible();
+        if eligible.is_empty() {
+            return None;
+        }
+        if let Some(planned) = self.variant.as_deref() {
+            if let Some(&i) = eligible.iter().find(|&&i| q.variant_name(i) == planned) {
+                return Some(VariantChoice {
+                    impl_idx: i,
+                    est: self.est.or_else(|| q.exec_estimate(i)),
+                });
+            }
+        }
+        // plan inapplicable here: greedy fallback
+        let unknown: Vec<usize> = eligible
+            .iter()
+            .copied()
+            .filter(|&i| q.exec_estimate(i).is_none())
+            .collect();
+        if let Some(c) = explore_pool(q, &unknown, &self.rr) {
+            return Some(c);
+        }
+        best_known(q, &eligible)
+    }
+}
+
 // ----------------------------------------------------------------- forced
 
 /// Pin selection to one variant by name. Replaces both the old
@@ -614,6 +726,7 @@ mod tests {
             SelectorKind::parse("Context-Aware"),
             Some(SelectorKind::Contextual)
         );
+        assert_eq!(SelectorKind::parse("planned"), Some(SelectorKind::Planned));
         assert_eq!(SelectorKind::parse("epsilon:7"), None);
         assert_eq!(SelectorKind::parse("epsilon-decayed:7"), None);
         assert_eq!(SelectorKind::parse("forced:"), None);
@@ -624,6 +737,7 @@ mod tests {
             SelectorKind::EpsilonGreedy(0.5),
             SelectorKind::EpsilonDecayed(0.25),
             SelectorKind::Contextual,
+            SelectorKind::Planned,
             SelectorKind::Forced("omp".into()),
         ] {
             assert_eq!(SelectorKind::parse(&k.name()), Some(k.clone()), "{k:?}");
@@ -632,7 +746,14 @@ mod tests {
 
     #[test]
     fn valid_selector_set_names_every_policy() {
-        for name in ["greedy", "calibrating", "epsilon", "contextual", "forced"] {
+        for name in [
+            "greedy",
+            "calibrating",
+            "epsilon",
+            "contextual",
+            "planned",
+            "forced",
+        ] {
             assert!(VALID_SELECTORS.contains(name), "{name} missing");
         }
     }
@@ -747,6 +868,32 @@ mod tests {
         let bogus = Forced::new("nope");
         assert!(bogus.select(&ctx.query(&task, Arch::Cpu)).is_none());
         assert!(!bogus.can_serve(&ctx.query(&task, Arch::Cpu)));
+    }
+
+    #[test]
+    fn planned_prior_prefers_but_never_pins() {
+        let perf = Arc::new(PerfModels::new());
+        warm(&perf, "fast", 1e-3);
+        warm(&perf, "slow", 1e-1);
+        let ctx = ctx_with(perf);
+        let task = two_variant_task(None);
+        // planned prior names the *slower* variant: the plan wins
+        // (joint makespan said so), carrying the plan's estimate
+        let p = Planned::with_prior("slow", 0.05);
+        assert_eq!(p.name(), "planned:slow");
+        let c = p.select(&ctx.query(&task, Arch::Cpu)).unwrap();
+        assert_eq!(task.codelet.impls[c.impl_idx].name, "slow");
+        assert_eq!(c.est, Some(0.05));
+        // prior naming an ineligible variant: greedy fallback, not None
+        let stale = Planned::with_prior("gone", 0.05);
+        let c = stale.select(&ctx.query(&task, Arch::Cpu)).unwrap();
+        assert_eq!(task.codelet.impls[c.impl_idx].name, "fast");
+        // bare Planned behaves like greedy
+        let bare = Planned::new();
+        assert_eq!(bare.name(), "planned");
+        assert!(bare.planned_variant().is_none());
+        let c = bare.select(&ctx.query(&task, Arch::Cpu)).unwrap();
+        assert_eq!(task.codelet.impls[c.impl_idx].name, "fast");
     }
 
     #[test]

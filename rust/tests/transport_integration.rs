@@ -8,8 +8,8 @@
 use std::time::Duration;
 
 use compar::serve::{
-    loadgen, parse_contexts, Client, ClientConfig, Framing, LoadgenOptions, Response,
-    ServeOptions, Server, SubmitReq, TransportKind,
+    loadgen, parse_contexts, Client, ClientConfig, Framing, GraphNodeReq, LoadgenOptions,
+    Response, ServeOptions, Server, SubmitGraphReq, SubmitReq, TransportKind,
 };
 use compar::taskrt::{SchedPolicy, SelectorKind};
 
@@ -192,6 +192,70 @@ fn epoll_transport_runs_stream_sessions() {
     c.quit().unwrap();
     let stats = server.shutdown().unwrap();
     assert_eq!(stats.streams, 0, "stream closed before drain");
+}
+
+/// v8 graph submission rides both transports and both framings: a
+/// binary and an ndjson session on one server each ship a three-node
+/// producer→consumer DAG, get a planned per-node report back on their
+/// own framing, and a malformed dep comes back as a protocol error —
+/// not a dead session.
+#[test]
+fn graph_submission_works_on_both_transports_and_framings() {
+    fn chain(id: u64) -> SubmitGraphReq {
+        let node = |name: &str, deps: Vec<String>| GraphNodeReq {
+            name: name.into(),
+            app: "sort".into(),
+            size: 4096,
+            deps,
+            variant: None,
+        };
+        SubmitGraphReq {
+            id,
+            nodes: vec![
+                node("produce", vec![]),
+                node("transform", vec!["produce".into()]),
+                node("consume", vec!["transform".into()]),
+            ],
+            ctx: None,
+            mode: None,
+        }
+    }
+    for transport in [TransportKind::Threads, TransportKind::Epoll] {
+        let server = Server::start(opts("", transport)).unwrap();
+        let addr = server.local_addr().to_string();
+
+        let mut bin = Client::connect_cfg(&addr, &binary_cfg()).unwrap();
+        assert_eq!(bin.framing(), Framing::Binary);
+        let mut nd = Client::connect(&addr).unwrap();
+
+        for (tag, c) in [("binary", &mut bin), ("ndjson", &mut nd)] {
+            let g = c.submit_graph(chain(31)).unwrap();
+            assert_eq!(g.id, 31, "{tag}: correlation id echoed");
+            assert_eq!(g.mode, "planned", "{tag}: uncontended submit plans");
+            assert_eq!(g.nodes.len(), 3, "{tag}: every node reported");
+            for node in &g.nodes {
+                assert!(!node.variant.is_empty(), "{tag}: {} ran", node.name);
+                assert!(node.planned, "{tag}: {} carries a prior", node.name);
+            }
+            assert!(g.makespan > 0.0, "{tag}: modeled makespan present");
+        }
+        // a dep naming a nonexistent node is a protocol error on the
+        // negotiated framing, and the session survives it
+        let mut bad = chain(32);
+        bad.nodes[1].deps = vec!["ghost".into()];
+        let e = bin.submit_graph(bad).unwrap_err();
+        assert!(format!("{e:#}").contains("deps must name earlier"), "{e:#}");
+        let g = bin.submit_graph(chain(33)).unwrap();
+        assert_eq!(g.nodes.len(), 3, "session usable after graph error");
+
+        bin.quit().unwrap();
+        nd.quit().unwrap();
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.plans, 3, "transport {}", transport.name());
+        assert_eq!(stats.planned_tasks, 9);
+        assert_eq!(stats.requests_err, 1);
+        assert_eq!(stats.inflight, 0);
+    }
 }
 
 /// The router forwards each session's negotiated framing to its
