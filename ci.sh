@@ -87,6 +87,24 @@ echo "== dag smoke (epoll/binary lane: same gates, multiplexed transport) =="
 cargo run --release --quiet -- bench dag --smoke \
   --transport epoll --framing binary
 
+echo "== verify-model smoke (generative explorer + self-test + proofs + diff) =="
+# the verified concurrency core: 10k generated op sequences over the
+# pure state machine with every invariant checked per step, the
+# injected-bug self-test (the harness must catch the planted
+# conservation bug and shrink it to a minimal sequence), the concrete
+# run of the kani proof bodies, and a short differential pass against
+# the real runtime — `verify model --smoke` FAILS on any violation,
+# divergence, or a self-test that no longer catches the bug
+cargo run --release --quiet -- verify model --smoke
+
+echo "== kani harness lane (proof bodies compile + run concretely) =="
+# this image ships no `cargo kani`; the dev-profile check plus the
+# concrete --proofs run keep the #[cfg_attr(kani, kani::proof)]
+# harnesses in rust/src/model/proofs.rs from rotting. On a
+# kani-equipped image, run `cargo kani` for the bounded proofs.
+cargo check --quiet
+cargo run --release --quiet -- verify model --proofs
+
 # wait until a TCP port accepts connections (pure bash, no nc needed)
 wait_port() {
   local port="$1"

@@ -281,7 +281,7 @@ impl ScalePolicy for Threshold {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Rng;
+    use crate::util::rng::{run_cases, Rng};
 
     fn sample(ctx: usize, workers: usize, depth: usize) -> CtxSample {
         CtxSample {
@@ -358,11 +358,12 @@ mod tests {
     /// action to a model cluster conserves the total worker count, never
     /// drops a donor below its floor, and never grows a receiver past
     /// its ceiling. (Hand-rolled quickcheck style — proptest is not
-    /// available offline; shapes follow tests/properties.rs.)
+    /// available offline; shapes follow tests/properties.rs. Replay a
+    /// failing case with COMPAR_MODEL_SEED=<printed seed>.)
     #[test]
     fn prop_actions_conserve_workers_and_respect_bounds() {
-        let mut rng = Rng::new(0x5ca1e);
-        for case in 0..64 {
+        run_cases(0x5ca1e, 64, |case| {
+            let mut rng = Rng::new(case);
             let n_ctx = 2 + rng.below(4);
             let mut workers: Vec<usize> = (0..n_ctx).map(|_| 1 + rng.below(6)).collect();
             let homes = workers.clone();
@@ -402,15 +403,15 @@ mod tests {
                     "case {case} step {step}: workers created or destroyed"
                 );
             }
-        }
+        });
     }
 
     /// Property: with a capacity-1 bucket, two actions are never closer
     /// than the cooldown window (measured in accumulated `dt`).
     #[test]
     fn prop_cooldown_spaces_actions() {
-        let mut rng = Rng::new(0xc001);
-        for _ in 0..32 {
+        run_cases(0xc001, 32, |seed| {
+            let mut rng = Rng::new(seed);
             let cooldown_ms = 50 + rng.below(200) as u64;
             let mut p = Threshold::new(ThresholdConfig {
                 sustain: 1,
@@ -441,6 +442,6 @@ mod tests {
                 }
             }
             assert!(last_action.is_some(), "the loop never acted at all");
-        }
+        });
     }
 }

@@ -200,12 +200,13 @@ impl ShardState {
         self.healthy.store(false, Ordering::Relaxed);
     }
 
-    #[cfg(test)]
+    // Not #[cfg(test)]: the verification model (`crate::model::shard`)
+    // drives real ShardState values through placement with synthetic
+    // loads, exactly like the placement unit tests do.
     pub(crate) fn set_inflight(&self, v: u64) {
         self.inflight.store(v, Ordering::Relaxed);
     }
 
-    #[cfg(test)]
     pub(crate) fn set_queue_depth(&self, v: u64) {
         self.queue_depth.store(v, Ordering::Relaxed);
     }

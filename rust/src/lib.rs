@@ -32,6 +32,11 @@
 //!   assigns variants jointly over whole task DAGs before release,
 //!   eliding producer→consumer transfers and composing same-arch spans
 //!   (Kessler & Dastgeer's "Optimized Composition").
+//! * [`model`] — the verified concurrency core: a pure state-machine
+//!   model of the runtime's contexts / migration / eviction / shard
+//!   retirement, a deterministic generative explorer with shrinking,
+//!   kani-ready bounded proof harnesses, and a differential mode
+//!   against the real runtime (`compar verify model`).
 //! * [`bench_harness`] — regenerates every table and figure of the
 //!   paper's evaluation section.
 
@@ -40,6 +45,7 @@ pub mod autoscale;
 pub mod bench_harness;
 pub mod cluster;
 pub mod compar;
+pub mod model;
 pub mod plan;
 pub mod runtime;
 pub mod serve;

@@ -15,6 +15,7 @@
 //! compar loadgen --shards N ...                       drive an in-process cluster
 //! compar loadgen --profile burst:H:L:P                time-varying offered load
 //! compar loadgen --profile stream:R:KB:S              v6 stream sessions (credit-gated)
+//! compar verify model [--smoke|--seqs N --ops K ...]  generative model checking
 //! compar list                                         inventory: apps, variants, artifacts
 //! ```
 //!
@@ -106,6 +107,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "route" => cmd_route(rest),
         "loadgen" => cmd_loadgen(rest),
+        "verify" => cmd_verify(rest),
         "list" => cmd_list(),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -135,6 +137,8 @@ fn print_usage() {
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--health-ms T] [--gossip-ms T] [--no-gossip]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--autoscale [--min-shards N] [--max-shards N] [--scale-up L] [--scale-down L]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--cooldown-ms T] [--spawn-ncpu N] [--spawn-args \"SERVE FLAGS\"]]\n\
+         \x20 compar verify model [--smoke] [--seqs N] [--ops K] [--seed S] [--diff N] [--proofs]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--self-test] [--fault leak-worker|drop-task] [--ncpu N] [--ncuda N]\n\
          \x20 compar loadgen [--clients N] [--requests M] [--app APP] [--size N] [--tasks K]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--pipeline N] [--policy P] [--ctxs a,b] [--addr HOST:PORT | --contexts SPEC]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--shards N [--placement PL] [--no-gossip]] [--out FILE] [--no-verify]\n\
@@ -146,7 +150,8 @@ fn print_usage() {
          Selection policies P: greedy | calibrating | epsilon[:E] | epsilon-decayed[:E] | contextual | planned | forced:VARIANT\n\
          Shard placement PL:   round-robin | least-loaded | calibrated\n\
          Environment: COMPAR_NCPU, COMPAR_NCUDA, COMPAR_SCHED, COMPAR_SELECTOR, COMPAR_CALIBRATE,\n\
-         \x20 COMPAR_TIME_MODE=modeled|wall, COMPAR_PERFMODEL_DIR, COMPAR_ARTIFACTS\n\
+         \x20 COMPAR_TIME_MODE=modeled|wall, COMPAR_PERFMODEL_DIR, COMPAR_ARTIFACTS,\n\
+         \x20 COMPAR_MODEL_SEED (replay one verify/property seed)\n\
          (STARPU_NCPU / STARPU_NCUDA / STARPU_SCHED / STARPU_CALIBRATE are accepted aliases.)"
     );
 }
@@ -1049,6 +1054,138 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         println!("wrote {out}");
     }
     Ok(())
+}
+
+// ----------------------------------------------------------------- verify
+
+/// `compar verify model`: the verified-concurrency-core entry point.
+/// Default run: the generative explorer over the pure model. `--smoke`
+/// is the CI gate: a clean 10k-sequence exploration, the injected-bug
+/// self-test (the harness must catch and shrink it), the concrete run
+/// of every kani proof body, and a short differential pass against the
+/// real runtime.
+fn cmd_verify(args: &[String]) -> Result<()> {
+    let (pos, opts) = parse_opts(args);
+    match pos.first().map(String::as_str) {
+        Some("model") => {}
+        other => bail!(
+            "usage: compar verify model [--smoke] [--seqs N] [--ops K] [--seed S] \
+             [--diff N] [--proofs] [--self-test] [--fault KIND] (got {other:?})"
+        ),
+    }
+    let smoke = opts.contains_key("smoke");
+    let mut cfg = compar::model::ModelConfig::default();
+    if let Some(v) = opts.get("ncpu") {
+        cfg.ncpu = v.parse().context("--ncpu")?;
+    }
+    if let Some(v) = opts.get("ncuda") {
+        cfg.ncuda = v.parse().context("--ncuda")?;
+    }
+    if cfg.ncpu + cfg.ncuda == 0 {
+        bail!("verify model: need at least one worker (--ncpu/--ncuda)");
+    }
+    let mut explore_opts = compar::model::ExploreOptions {
+        config: cfg,
+        ..compar::model::ExploreOptions::default()
+    };
+    if smoke {
+        explore_opts.ops_per_seq = 32;
+    }
+    if let Some(v) = opts.get("seqs") {
+        explore_opts.sequences = v.parse().context("--seqs")?;
+    }
+    if let Some(v) = opts.get("ops") {
+        explore_opts.ops_per_seq = v.parse().context("--ops")?;
+    }
+    if let Some(v) = opts.get("seed") {
+        explore_opts.seed = parse_seed(v).context("--seed")?;
+    }
+    if let Some(v) = opts.get("fault") {
+        // fault injection demo: the explorer MUST find a violation and
+        // print the shrunk counterexample; a clean run is the failure
+        let fault = compar::model::Fault::parse(v)
+            .ok_or_else(|| anyhow!("unknown fault '{v}' (want {})", compar::model::VALID_FAULTS))?;
+        explore_opts.fault = Some(fault);
+        return match compar::model::explore(&explore_opts) {
+            Err(v) => {
+                println!("injected fault '{}' caught as expected:", fault.name());
+                println!("{v}");
+                Ok(())
+            }
+            Ok(stats) => bail!(
+                "injected fault '{}' survived {} sequences ({} ops) undetected",
+                fault.name(),
+                stats.sequences,
+                stats.ops_applied
+            ),
+        };
+    }
+
+    // explore by default; with a sub-mode flag (--proofs/--self-test/
+    // --diff) run only that lane — except under --smoke, which runs all
+    let run_explore = smoke
+        || (!opts.contains_key("proofs")
+            && !opts.contains_key("self-test")
+            && !opts.contains_key("diff"));
+    if run_explore {
+        match compar::model::explore(&explore_opts) {
+            Ok(stats) => println!(
+                "explore: {} sequences x {} ops ({} ops applied), all invariants held",
+                stats.sequences, explore_opts.ops_per_seq, stats.ops_applied
+            ),
+            Err(v) => bail!("model invariant violated:\n{v}"),
+        }
+    }
+    if smoke || opts.contains_key("self-test") {
+        match compar::model::self_test(&cfg) {
+            Ok(v) => println!(
+                "self-test: injected {} bug caught at step {} and shrunk {} -> {} op(s)",
+                compar::model::Fault::DropEvictedTask.name(),
+                v.step,
+                v.ops.len(),
+                v.shrunk.len()
+            ),
+            Err(msg) => bail!("self-test failed: {msg}"),
+        }
+    }
+    if smoke || opts.contains_key("proofs") {
+        let cases = if smoke { 64 } else { 256 };
+        compar::model::proofs::run_concrete(cases);
+        println!(
+            "proofs: 4 kani harness bodies x {cases} concrete cases passed \
+             (run `cargo kani` for the bounded proofs)"
+        );
+    }
+    if smoke || opts.contains_key("diff") {
+        let mut diff_opts = compar::model::DiffOptions {
+            config: cfg,
+            ..compar::model::DiffOptions::default()
+        };
+        if smoke {
+            diff_opts.sequences = 8;
+        }
+        if let Some(v) = opts.get("diff") {
+            if v != "1" {
+                diff_opts.sequences = v.parse().context("--diff")?;
+            }
+        }
+        let stats = compar::model::diff::run(&diff_opts)?;
+        println!(
+            "diff: {} sequences x {} steps against the real runtime \
+             ({} tasks executed), no divergence",
+            stats.sequences, diff_opts.steps_per_seq, stats.tasks_executed
+        );
+    }
+    println!("verify model OK");
+    Ok(())
+}
+
+/// Seeds accept decimal or 0x-hex (matching COMPAR_MODEL_SEED).
+fn parse_seed(v: &str) -> Result<u64> {
+    match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).map_err(Into::into),
+        None => v.parse().map_err(Into::into),
+    }
 }
 
 // -------------------------------------------------------------- calibrate

@@ -1,0 +1,231 @@
+//! Differential mode: replay one structural op sequence against the
+//! pure model **and** a real [`Runtime`], and compare the observable
+//! state after every step — so the model and the implementation
+//! cannot drift apart silently.
+//!
+//! The comparison runs at quiescent sync points (`wait_all` before
+//! every structural op): with no task in flight, the runtime's mover
+//! choice is deterministic (receiver-arch-first / idle-first /
+//! lowest-id) and must match the model's exactly. Compared per step:
+//!
+//! - accept/reject agreement for every call (the `bail!` paths);
+//! - moved-worker counts of `move_workers` / `resize_context`, and the
+//!   context id of `create_context`;
+//! - the full membership partition, read through
+//!   [`Runtime::audited_state`] — which also re-validates the live
+//!   occupancy counters on the spot.
+//!
+//! Task execution itself is compared only for submit accept/reject
+//! agreement and completion (both sides drain) — per-task placement is
+//! policy-dependent and deliberately outside the model.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Tensor;
+use crate::taskrt::{
+    AccessMode, Arch, Codelet, Config, NativeFn, Runtime, SchedPolicy, SelectorKind, TaskSpec,
+};
+use crate::util::rng::{derive_seed, env_seed, Rng};
+
+use super::invariants;
+use super::state::{ModelConfig, ModelState};
+
+#[derive(Debug, Clone)]
+pub struct DiffOptions {
+    pub sequences: usize,
+    pub steps_per_seq: usize,
+    pub seed: u64,
+    pub config: ModelConfig,
+}
+
+impl Default for DiffOptions {
+    fn default() -> Self {
+        DiffOptions {
+            sequences: 24,
+            steps_per_seq: 12,
+            seed: 0xd1ff,
+            config: ModelConfig::default(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DiffStats {
+    pub sequences: usize,
+    pub steps: usize,
+    pub tasks_executed: usize,
+}
+
+fn diff_codelet() -> Codelet {
+    let noop: NativeFn = Arc::new(|_| Ok(()));
+    Codelet::new("diffcl", "sort", vec![AccessMode::Read])
+        .with_native("omp", Arch::Cpu, noop.clone())
+        .with_native("cuda", Arch::Cuda, noop)
+}
+
+/// Run the differential explorer. Any divergence (or audit failure on
+/// the real side, or invariant violation on the model side) is an
+/// error naming the seed and step for replay.
+pub fn run(opts: &DiffOptions) -> Result<DiffStats> {
+    let seeds: Vec<u64> = match env_seed() {
+        Some(s) => vec![s],
+        None => (0..opts.sequences as u64)
+            .map(|i| derive_seed(opts.seed, i))
+            .collect(),
+    };
+    let mut stats = DiffStats::default();
+    for seed in seeds {
+        run_sequence(opts, seed, &mut stats)
+            .with_context(|| format!("differential sequence failed; replay with COMPAR_MODEL_SEED={seed:#x}"))?;
+        stats.sequences += 1;
+    }
+    Ok(stats)
+}
+
+fn run_sequence(opts: &DiffOptions, seed: u64, stats: &mut DiffStats) -> Result<()> {
+    let mut rng = Rng::new(seed);
+    let cfg = opts.config;
+    let total = cfg.ncpu + cfg.ncuda;
+    let mut model = ModelState::new(&cfg, None);
+    let rt = Runtime::new(
+        Config {
+            ncpu: cfg.ncpu,
+            ncuda: cfg.ncuda,
+            sched: SchedPolicy::Eager,
+            ..Config::default()
+        },
+        None,
+    )?;
+    let cl = rt.register_codelet(diff_codelet());
+
+    for step in 0..opts.steps_per_seq {
+        // quiescent sync point: with zero in-flight tasks the real
+        // mover choice is deterministic and create_context cannot
+        // spuriously reject for quiescence
+        rt.wait_all()?;
+        match rng.below(10) {
+            0..=1 => {
+                // create_context over a random (occasionally invalid)
+                // worker set — both sides must agree on accept/reject
+                // and, when accepted, on the new context id
+                let k = 1 + rng.below(total);
+                let workers: Vec<usize> = (0..k)
+                    .map(|_| {
+                        if rng.below(8) == 0 {
+                            total + rng.below(2)
+                        } else {
+                            rng.below(total)
+                        }
+                    })
+                    .collect();
+                let m = model.create_context(&workers);
+                let r = rt.create_context_with(
+                    &format!("d{step}"),
+                    &workers,
+                    SchedPolicy::Eager,
+                    SelectorKind::Greedy,
+                );
+                match (m, r) {
+                    (Ok(mid), Ok(rid)) if mid == rid => {}
+                    (Err(_), Err(_)) => {}
+                    (m, r) => bail!(
+                        "step {step}: create_context({workers:?}) diverged: \
+                         model {m:?}, runtime {:?}",
+                        r.map_err(|e| e.to_string())
+                    ),
+                }
+            }
+            2..=4 => {
+                let bound = model.contexts_len() + 1;
+                let from = rng.below(bound);
+                let to = rng.below(bound);
+                let n = rng.below(4);
+                let m = model.move_workers(from, to, n);
+                let r = rt.move_workers(from, to, n);
+                match (m, r) {
+                    (Ok(mn), Ok(rn)) if mn == rn => {}
+                    (Err(_), Err(_)) => {}
+                    (m, r) => bail!(
+                        "step {step}: move_workers({from}, {to}, {n}) diverged: \
+                         model {m:?}, runtime {:?}",
+                        r.map_err(|e| e.to_string())
+                    ),
+                }
+            }
+            5..=6 => {
+                let ctx = rng.below(model.contexts_len() + 1);
+                let target = rng.below(total + 2);
+                let m = model.resize_context(ctx, target);
+                let r = rt.resize_context(ctx, target);
+                match (m, r) {
+                    (Ok(mn), Ok(rn)) if mn == rn => {}
+                    (Err(_), Err(_)) => {}
+                    (m, r) => bail!(
+                        "step {step}: resize_context({ctx}, {target}) diverged: \
+                         model {m:?}, runtime {:?}",
+                        r.map_err(|e| e.to_string())
+                    ),
+                }
+            }
+            _ => {
+                // a burst of real task executions through a random
+                // context; both sides must agree per-submit and drain
+                // back to quiescence
+                let ctx = rng.below(model.contexts_len());
+                let count = 1 + rng.below(3);
+                let mut ids = Vec::new();
+                for _ in 0..count {
+                    let m = model.submit(ctx);
+                    let h = rt.register_data(Tensor::vector(vec![0.0; 4]));
+                    let r = rt.submit(TaskSpec::new(cl.clone(), vec![h], 64).in_context(ctx));
+                    match (m, r) {
+                        (Ok(_), Ok(id)) => ids.push(id),
+                        (Err(_), Err(_)) => {}
+                        (m, r) => bail!(
+                            "step {step}: submit(ctx {ctx}) diverged: model {m:?}, runtime {:?}",
+                            r.map_err(|e| e.to_string())
+                        ),
+                    }
+                }
+                rt.wait_tasks(&ids)?;
+                rt.reap_tasks(&ids);
+                model.drain();
+                stats.tasks_executed += ids.len();
+            }
+        }
+
+        // structural comparison through the audited snapshot (which
+        // also re-validates the runtime's live counters)
+        let audited = rt
+            .audited_state()
+            .with_context(|| format!("step {step}: runtime failed its own audit"))?;
+        if audited.contexts.len() != model.contexts_len() {
+            bail!(
+                "step {step}: context count diverged: model {}, runtime {}",
+                model.contexts_len(),
+                audited.contexts.len()
+            );
+        }
+        let memberships = model.memberships();
+        for (ca, mm) in audited.contexts.iter().zip(memberships.iter()) {
+            if &ca.members != mm {
+                bail!(
+                    "step {step}: context {} membership diverged: \
+                     model {mm:?}, runtime {:?}",
+                    ca.id,
+                    ca.members
+                );
+            }
+        }
+        if let Err(msg) = invariants::check(&model) {
+            bail!("step {step}: model invariant violated: {msg}");
+        }
+        stats.steps += 1;
+    }
+
+    rt.wait_all()?;
+    rt.shutdown()?;
+    Ok(())
+}

@@ -1,0 +1,234 @@
+//! The generative explorer: deterministic random op sequences over the
+//! pure model, invariants checked after every step, failures shrunk to
+//! a 1-minimal reproducing sequence by delta debugging.
+//!
+//! Determinism contract: a sequence is fully determined by its seed
+//! (per-sequence seeds derive from the base via
+//! [`derive_seed`](crate::util::rng::derive_seed)), and a recorded op
+//! list replays to the identical state regardless of the seed — so a
+//! shrunk counterexample is self-contained. Setting
+//! `COMPAR_MODEL_SEED` replays exactly one seed.
+
+use crate::util::rng::{derive_seed, env_seed, Rng};
+
+use super::invariants;
+use super::ops::{gen_op, Fault, Op};
+use super::state::{ModelConfig, ModelState};
+
+#[derive(Debug, Clone)]
+pub struct ExploreOptions {
+    /// Generated sequences to run (each gets its own derived seed).
+    pub sequences: usize,
+    /// Ops per sequence.
+    pub ops_per_seq: usize,
+    /// Base seed; per-sequence seeds derive from it.
+    pub seed: u64,
+    pub config: ModelConfig,
+    /// Injected bug (self-test / `--fault`); `None` = verify.
+    pub fault: Option<Fault>,
+    /// Honor a `COMPAR_MODEL_SEED` override (replay mode). The
+    /// self-test disables this: it must explore its own seeds.
+    pub honor_env_seed: bool,
+}
+
+impl Default for ExploreOptions {
+    fn default() -> Self {
+        ExploreOptions {
+            sequences: 10_000,
+            ops_per_seq: 48,
+            seed: 0x5eed_c0de,
+            config: ModelConfig::default(),
+            fault: None,
+            honor_env_seed: true,
+        }
+    }
+}
+
+/// An invariant violation, shrunk and ready to report.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// The sequence seed — `COMPAR_MODEL_SEED=<seed>` replays it.
+    pub seed: u64,
+    /// Step index (into `ops`) at which the invariant first broke.
+    pub step: usize,
+    pub message: String,
+    /// The full generated sequence up to (and including) the failure.
+    pub ops: Vec<Op>,
+    /// 1-minimal subsequence that still reproduces a violation.
+    pub shrunk: Vec<Op>,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "invariant violated at step {} of seed {:#x}: {}",
+            self.step, self.seed, self.message
+        )?;
+        writeln!(
+            f,
+            "shrunk to {} op(s) (from {}):",
+            self.shrunk.len(),
+            self.ops.len()
+        )?;
+        for (i, op) in self.shrunk.iter().enumerate() {
+            writeln!(f, "  {i:>3}. {op:?}")?;
+        }
+        write!(
+            f,
+            "replay with COMPAR_MODEL_SEED={:#x} (or {})",
+            self.seed, self.seed
+        )
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExploreStats {
+    pub sequences: usize,
+    pub ops_applied: usize,
+}
+
+/// Run the explorer. `Ok` carries throughput stats; `Err` carries the
+/// first violation, already shrunk.
+pub fn explore(opts: &ExploreOptions) -> Result<ExploreStats, Box<Violation>> {
+    let seeds: Vec<u64> = match env_seed().filter(|_| opts.honor_env_seed) {
+        Some(seed) => vec![seed],
+        None => (0..opts.sequences as u64)
+            .map(|i| derive_seed(opts.seed, i))
+            .collect(),
+    };
+    let mut stats = ExploreStats::default();
+    for seed in seeds {
+        let (ops, failure) = generate(seed, &opts.config, opts.fault, opts.ops_per_seq);
+        stats.sequences += 1;
+        stats.ops_applied += ops.len();
+        if let Some((step, message)) = failure {
+            let shrunk = shrink(&opts.config, opts.fault, &ops);
+            return Err(Box::new(Violation {
+                seed,
+                step,
+                message,
+                ops,
+                shrunk,
+            }));
+        }
+    }
+    Ok(stats)
+}
+
+/// Generate-and-check one sequence. Generation is state-aware (ops are
+/// drawn against the live model), but the recorded list alone replays
+/// to the same state — [`replay`] needs no RNG.
+fn generate(
+    seed: u64,
+    cfg: &ModelConfig,
+    fault: Option<Fault>,
+    len: usize,
+) -> (Vec<Op>, Option<(usize, String)>) {
+    let mut rng = Rng::new(seed);
+    let mut state = ModelState::new(cfg, fault);
+    let mut ops = Vec::with_capacity(len);
+    for step in 0..len {
+        let op = gen_op(&mut rng, &state);
+        ops.push(op.clone());
+        let _ = state.apply(&op); // rejected ops are legal no-ops
+        if let Err(msg) = invariants::check(&state) {
+            return (ops, Some((step, msg)));
+        }
+    }
+    (ops, None)
+}
+
+/// Replay a recorded op list from a fresh state; returns the first
+/// violation, if any.
+pub fn replay(cfg: &ModelConfig, fault: Option<Fault>, ops: &[Op]) -> Option<(usize, String)> {
+    let mut state = ModelState::new(cfg, fault);
+    for (step, op) in ops.iter().enumerate() {
+        let _ = state.apply(op);
+        if let Err(msg) = invariants::check(&state) {
+            return Some((step, msg));
+        }
+    }
+    None
+}
+
+/// Delta-debug the op list down to a 1-minimal subsequence that still
+/// violates an invariant: remove chunks (halving the chunk size), then
+/// single ops, until no single removal preserves the failure.
+pub fn shrink(cfg: &ModelConfig, fault: Option<Fault>, ops: &[Op]) -> Vec<Op> {
+    let mut cur: Vec<Op> = ops.to_vec();
+    let mut chunk = (cur.len() / 2).max(1);
+    loop {
+        let mut removed_any = false;
+        let mut i = 0;
+        while i < cur.len() {
+            let end = (i + chunk).min(cur.len());
+            let mut candidate = cur.clone();
+            candidate.drain(i..end);
+            if replay(cfg, fault, &candidate).is_some() {
+                cur = candidate;
+                removed_any = true;
+                // stay at i: the next chunk shifted into this position
+            } else {
+                i += chunk;
+            }
+        }
+        if chunk > 1 {
+            chunk = (chunk / 2).max(1);
+        } else if !removed_any {
+            return cur; // a full single-op pass removed nothing: 1-minimal
+        }
+    }
+}
+
+/// Prove the harness works: with an injected conservation bug the
+/// explorer must find a violation, the shrunk sequence must still
+/// reproduce it, and it must be 1-minimal. Returns the violation for
+/// reporting, or an error describing how the harness failed.
+pub fn self_test(cfg: &ModelConfig) -> Result<Box<Violation>, String> {
+    let fault = Some(Fault::DropEvictedTask);
+    let opts = ExploreOptions {
+        sequences: 2_000,
+        ops_per_seq: 32,
+        seed: 0xfa017,
+        config: *cfg,
+        fault,
+        honor_env_seed: false,
+    };
+    let violation = match explore(&opts) {
+        Ok(stats) => {
+            return Err(format!(
+                "injected {} bug survived {} sequences ({} ops) undetected",
+                Fault::DropEvictedTask.name(),
+                stats.sequences,
+                stats.ops_applied
+            ))
+        }
+        Err(v) => v,
+    };
+    if violation.shrunk.is_empty() {
+        return Err("shrinking produced an empty sequence".into());
+    }
+    if replay(cfg, fault, &violation.shrunk).is_none() {
+        return Err("shrunk sequence no longer reproduces the violation".into());
+    }
+    // 1-minimality: removing any single op must make the failure vanish
+    for skip in 0..violation.shrunk.len() {
+        let mut candidate = violation.shrunk.clone();
+        candidate.remove(skip);
+        if replay(cfg, fault, &candidate).is_some() {
+            return Err(format!(
+                "shrunk sequence is not 1-minimal: op {skip} is removable"
+            ));
+        }
+    }
+    // the fault must not be observable without the injection — the
+    // invariants hold on the same sequence against the correct model
+    if let Some((step, msg)) = replay(cfg, None, &violation.shrunk) {
+        return Err(format!(
+            "counterexample fails even without the fault (step {step}: {msg}) — \
+             the model itself is broken"
+        ));
+    }
+    Ok(violation)
+}

@@ -1,0 +1,141 @@
+//! The global invariant set, checked after **every** op the explorer
+//! applies. These are the properties the ROADMAP names as the safety
+//! floor for the next wave of hot-path work:
+//!
+//! 1. **Worker conservation / partition** — every worker is a member
+//!    of exactly one context, and the `worker_ctx` table agrees.
+//! 2. **Occupancy** — per context, each member has at most one task in
+//!    flight and per-arch in-flight ≤ per-arch members. Checked with
+//!    the *same* [`validate_occupancy`] the live runtime's snapshot
+//!    capture and `audited_state` use (single source of truth).
+//! 3. **Task conservation** — `submitted = completed + queued +
+//!    running`, with every live task id distinct: no task is ever lost
+//!    (or duplicated) across eviction, migration or rebalancing.
+//! 4. **Structural sanity** — lanes only exist on members; a worker
+//!    never carries more than one in-flight charge across all contexts
+//!    (the worker loop is serial).
+//! 5. **Shard table** — placement never lands on an unavailable shard,
+//!    pending requests stay resolvable across retirement, retirement
+//!    is terminal ([`ShardTableModel::check`]).
+//!
+//! [`ShardTableModel::check`]: super::shard::ShardTableModel::check
+
+use std::collections::BTreeSet;
+
+use crate::taskrt::{validate_occupancy, WorkerOccupancy};
+
+use super::state::ModelState;
+
+/// Check every invariant; `Err` names the first violation.
+pub fn check(state: &ModelState) -> Result<(), String> {
+    partition(state)?;
+    occupancy(state)?;
+    conservation(state)?;
+    structure(state)?;
+    state.shards.check()
+}
+
+fn partition(state: &ModelState) -> Result<(), String> {
+    let total = state.total_workers();
+    let mut owner: Vec<Option<usize>> = vec![None; total];
+    for (id, c) in state.contexts.iter().enumerate() {
+        for &w in &c.members {
+            if w >= total {
+                return Err(format!(
+                    "context {id} ('{}') lists worker {w} but the topology has {total}",
+                    c.name
+                ));
+            }
+            if let Some(prev) = owner[w] {
+                return Err(format!(
+                    "worker {w} is a member of both context {prev} and context {id}"
+                ));
+            }
+            owner[w] = Some(id);
+            if state.worker_ctx[w] != id {
+                return Err(format!(
+                    "worker {w} is a member of context {id} but worker_ctx says {}",
+                    state.worker_ctx[w]
+                ));
+            }
+        }
+    }
+    for (w, o) in owner.iter().enumerate() {
+        if o.is_none() {
+            return Err(format!(
+                "worker {w} is not a member of any context (worker leaked)"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn occupancy(state: &ModelState) -> Result<(), String> {
+    for (id, c) in state.contexts.iter().enumerate() {
+        let occ: Vec<WorkerOccupancy> = c
+            .members
+            .iter()
+            .map(|&w| {
+                (
+                    w,
+                    state.archs[w],
+                    c.running.get(&w).map_or(0, Vec::len),
+                )
+            })
+            .collect();
+        validate_occupancy(&occ)
+            .map_err(|msg| format!("context {id} ('{}') counter audit: {msg}", c.name))?;
+    }
+    Ok(())
+}
+
+fn conservation(state: &ModelState) -> Result<(), String> {
+    let queued: usize = state.contexts.iter().map(|c| c.queued()).sum();
+    let running: usize = state.contexts.iter().map(|c| c.running_count()).sum();
+    let live = state.submitted - state.completed;
+    if live != (queued + running) as u64 {
+        return Err(format!(
+            "task conservation broken: submitted {} - completed {} = {live} live, \
+             but {queued} queued + {running} running are accounted for",
+            state.submitted, state.completed
+        ));
+    }
+    let mut seen: BTreeSet<u64> = BTreeSet::new();
+    for c in &state.contexts {
+        for t in c.lanes.values().flatten().chain(c.running.values().flatten()) {
+            if !seen.insert(*t) {
+                return Err(format!("task {t} appears twice (duplicated in flight)"));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn structure(state: &ModelState) -> Result<(), String> {
+    for (id, c) in state.contexts.iter().enumerate() {
+        for w in c.lanes.keys() {
+            if !c.members.contains(w) {
+                return Err(format!(
+                    "context {id} ('{}') has a lane on worker {w}, not a member",
+                    c.name
+                ));
+            }
+        }
+    }
+    // the worker loop is serial: pop → execute → complete, so a worker
+    // holds at most one charge across ALL contexts (after a migration
+    // the charge legally sits on the source context)
+    for w in 0..state.total_workers() {
+        let charges: usize = state
+            .contexts
+            .iter()
+            .map(|c| c.running.get(&w).map_or(0, Vec::len))
+            .sum();
+        if charges > 1 {
+            return Err(format!(
+                "worker {w} carries {charges} in-flight charges across contexts"
+            ));
+        }
+    }
+    Ok(())
+}

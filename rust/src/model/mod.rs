@@ -1,0 +1,217 @@
+//! Verified concurrency core: a pure state-machine model of the
+//! runtime's concurrency mechanics, a deterministic generative
+//! explorer over it, bounded kani proof harnesses, and a differential
+//! mode against the real [`Runtime`](crate::taskrt::Runtime).
+//!
+//! Dynamic variant selection (the paper's headline feature) rests on
+//! genuinely intricate concurrency: live worker migration with
+//! per-context gates, signed queue/occupancy counters, eviction and
+//! re-placement, an append-only-with-retirement shard table. This
+//! module is the machine-checked safety floor under all of it:
+//!
+//! - [`state`] — the pure model: contexts, members, lanes, in-flight
+//!   charges, the shard table, the real autoscale policy;
+//! - [`ops`] — the op alphabet + seeded generator + injectable faults;
+//! - [`invariants`] — worker conservation, occupancy bounds (shared
+//!   verbatim with the live runtime via
+//!   [`validate_occupancy`](crate::taskrt::validate_occupancy)), task
+//!   conservation, shard-retirement stability;
+//! - [`explore`] — drive random op sequences, check after every step,
+//!   shrink failures to 1-minimal counterexamples (ddmin), print the
+//!   seed for `COMPAR_MODEL_SEED` replay;
+//! - [`proofs`] — the same invariants as `#[cfg(kani)]` bounded proof
+//!   harnesses, compiled and run concretely on images without kani;
+//! - [`diff`] — replay structural sequences against a real `Runtime`
+//!   and compare audited state, so model and implementation can't
+//!   drift.
+//!
+//! Entry point: `compar verify model` (see `main.rs`), smoke-gated in
+//! CI with ≥ 10k sequences plus the injected-fault self-test.
+
+pub mod diff;
+pub mod explore;
+pub mod invariants;
+pub mod ops;
+pub mod proofs;
+pub mod shard;
+pub mod state;
+
+pub use diff::{DiffOptions, DiffStats};
+pub use explore::{explore, self_test, shrink, ExploreOptions, ExploreStats, Violation};
+pub use ops::{Fault, Op, VALID_FAULTS};
+pub use shard::ShardTableModel;
+pub use state::{ModelConfig, ModelState};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::placement::PlacementKind;
+
+    #[test]
+    fn fresh_state_satisfies_invariants() {
+        let st = ModelState::new(&ModelConfig::default(), None);
+        assert!(invariants::check(&st).is_ok());
+        assert!(st.is_quiescent());
+        assert_eq!(st.total_workers(), 4);
+        assert_eq!(st.contexts_len(), 1);
+    }
+
+    #[test]
+    fn submit_pop_complete_lifecycle() {
+        let mut st = ModelState::new(&ModelConfig::default(), None);
+        let t = st.submit(0).unwrap();
+        assert!(!st.is_quiescent());
+        let ready = st.poppable_workers();
+        assert_eq!(ready.len(), 1, "one lane holds the task");
+        let w = ready[0];
+        assert_eq!(st.pop(w).unwrap(), t);
+        assert!(
+            st.pop(w).is_err(),
+            "a busy worker must not pop a second task"
+        );
+        assert_eq!(st.charged_workers(), vec![w]);
+        assert_eq!(st.complete(w).unwrap(), t);
+        assert!(st.is_quiescent());
+        assert!(invariants::check(&st).is_ok());
+    }
+
+    #[test]
+    fn create_context_requires_quiescence_and_range() {
+        let mut st = ModelState::new(&ModelConfig::default(), None);
+        assert!(st.create_context(&[]).is_err());
+        assert!(st.create_context(&[9]).is_err());
+        st.submit(0).unwrap();
+        assert!(st.create_context(&[1]).is_err(), "not quiescent");
+        st.drain();
+        let id = st.create_context(&[1, 2]).unwrap();
+        assert_eq!(id, 1);
+        assert_eq!(st.memberships(), vec![vec![0, 3], vec![1, 2]]);
+        assert!(invariants::check(&st).is_ok());
+    }
+
+    #[test]
+    fn move_workers_respects_last_of_arch_floor() {
+        // 3 cpu + 1 cuda: the cuda worker (id 3) is the default
+        // context's last of its arch and must never leave it
+        let mut st = ModelState::new(&ModelConfig::default(), None);
+        let id = st.create_context(&[0]).unwrap();
+        let moved = st.move_workers(0, id, 4).unwrap();
+        assert_eq!(moved, 1, "two cpus: one must stay, cuda is pinned");
+        assert_eq!(st.memberships()[0], vec![2, 3]);
+        assert!(invariants::check(&st).is_ok());
+        assert!(st.move_workers(id, id, 1).is_err(), "self-move rejected");
+        assert!(st.move_workers(0, 7, 1).is_err(), "unknown context");
+    }
+
+    #[test]
+    fn migration_evicts_and_replaces_queued_tasks() {
+        let mut st = ModelState::new(&ModelConfig::default(), None);
+        let id = st.create_context(&[0, 1]).unwrap();
+        for _ in 0..6 {
+            st.submit(id).unwrap();
+        }
+        // move one cpu out of the new context: its lane must re-place
+        // onto the remaining member, losing nothing
+        let moved = st.move_workers(id, 0, 1).unwrap();
+        assert_eq!(moved, 1);
+        assert!(invariants::check(&st).is_ok());
+        assert_eq!(st.contexts[id].queued(), 6, "all six tasks survived");
+        st.drain();
+        assert!(st.is_quiescent());
+        assert!(invariants::check(&st).is_ok());
+    }
+
+    #[test]
+    fn migrated_workers_charge_stays_on_source() {
+        let mut st = ModelState::new(&ModelConfig::default(), None);
+        let id = st.create_context(&[0, 1]).unwrap();
+        st.submit(id).unwrap();
+        let w = st.poppable_workers()[0];
+        st.pop(w).unwrap();
+        // migrate the executing worker out: the charge stays on the
+        // source context (the real Busy guard holds the source counter)
+        let moved = st.move_workers(id, 0, 2).unwrap();
+        assert!(moved >= 1);
+        if !st.contexts[id].members.contains(&w) {
+            assert!(
+                st.contexts[id].running.contains_key(&w),
+                "charge must stay on the source context"
+            );
+        }
+        assert!(invariants::check(&st).is_ok());
+        assert_eq!(st.complete(w).unwrap(), 0);
+        assert!(st.is_quiescent());
+    }
+
+    #[test]
+    fn injected_faults_violate_invariants() {
+        // worker leak: a move drops the mover from the partition
+        let mut st = ModelState::new(&ModelConfig::default(), Some(Fault::LeakWorkerOnMove));
+        let id = st.create_context(&[0, 1]).unwrap();
+        st.move_workers(id, 0, 1).unwrap();
+        let err = invariants::check(&st).unwrap_err();
+        assert!(err.contains("not a member of any context"), "{err}");
+
+        // task drop: eviction loses a queued task
+        let mut st = ModelState::new(&ModelConfig::default(), Some(Fault::DropEvictedTask));
+        let id = st.create_context(&[0, 1]).unwrap();
+        st.submit(id).unwrap();
+        let w = *st.contexts[id].lanes.keys().next().unwrap();
+        st.evict(id, w).unwrap();
+        let err = invariants::check(&st).unwrap_err();
+        assert!(err.contains("task conservation broken"), "{err}");
+    }
+
+    #[test]
+    fn explorer_short_run_is_clean_and_deterministic() {
+        let opts = ExploreOptions {
+            sequences: 200,
+            ops_per_seq: 40,
+            honor_env_seed: false,
+            ..ExploreOptions::default()
+        };
+        let a = explore(&opts).expect("no violation in the correct model");
+        let b = explore(&opts).expect("deterministic re-run");
+        assert_eq!(a.ops_applied, b.ops_applied, "same seeds, same ops");
+        assert_eq!(a.sequences, 200);
+    }
+
+    #[test]
+    fn self_test_catches_and_shrinks_the_injected_bug() {
+        let v = self_test(&ModelConfig::default()).expect("harness must catch the fault");
+        assert!(!v.shrunk.is_empty());
+        assert!(
+            v.shrunk.len() <= 8,
+            "expected a tight counterexample, got {} ops: {:?}",
+            v.shrunk.len(),
+            v.shrunk
+        );
+    }
+
+    #[test]
+    fn shard_model_retirement_properties() {
+        let mut sh = ShardTableModel::new();
+        sh.spawn();
+        sh.spawn();
+        let req = sh.place(PlacementKind::RoundRobin, "matmul", 64).unwrap();
+        sh.retire(1).unwrap();
+        assert!(sh.retired(1) && !sh.available(1));
+        // placement must keep avoiding the retired shard
+        for _ in 0..8 {
+            sh.place(PlacementKind::LeastLoaded, "matmul", 64).unwrap();
+        }
+        assert!(sh.check().is_ok(), "{:?}", sh.check());
+        // the pre-retirement request is still resolvable
+        assert_eq!(sh.complete(0).unwrap(), req);
+        // retiring everything leaves no placement target
+        sh.retire(0).unwrap();
+        sh.retire(2).unwrap();
+        assert!(sh.place(PlacementKind::RoundRobin, "matmul", 64).is_err());
+        assert!(sh.check().is_ok());
+    }
+
+    #[test]
+    fn proofs_run_concretely() {
+        proofs::run_concrete(32);
+    }
+}

@@ -1,0 +1,174 @@
+//! The operation alphabet of the concurrency-core model, plus the
+//! seeded generator that drives it and the injectable faults the
+//! self-test uses to prove the harness catches real bugs.
+//!
+//! Every [`Op`] mirrors one observable transition of the live system:
+//! the structural runtime calls (`create_context`, `move_workers`,
+//! `resize_context`), the worker loop's task lifecycle (`submit` →
+//! `pop` → `complete`), the migration-time `evict`, one autoscaler
+//! control step, and the router-side shard-table transitions (spawn /
+//! drain / retire / place / complete). An op may be *rejected* by
+//! [`ModelState::apply`](super::state::ModelState::apply) — mirroring
+//! the runtime's `bail!`s — which keeps generated sequences closed
+//! under subsequence removal, the property delta-debug shrinking needs.
+
+use crate::cluster::placement::PlacementKind;
+use crate::util::rng::Rng;
+
+use super::state::ModelState;
+
+/// One transition of the modeled concurrency core.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    /// `Runtime::create_context_with`: carve `workers` out of their
+    /// current contexts (quiescent runtimes only).
+    CreateContext { workers: Vec<usize> },
+    /// `Runtime::move_workers`: migrate up to `n` workers live.
+    MoveWorkers { from: usize, to: usize, n: usize },
+    /// `Runtime::resize_context`: exchange with the elastic pool.
+    ResizeContext { ctx: usize, target: usize },
+    /// `Runtime::submit` into `ctx` (task enters a member's lane).
+    Submit { ctx: usize },
+    /// A worker pops the next task from its current context's lane.
+    Pop { worker: usize },
+    /// The worker finishes its in-flight task (occupancy discharge).
+    Complete { worker: usize },
+    /// `Scheduler::evict`: drain one member's lane and re-place the
+    /// tasks on the context's other members.
+    Evict { ctx: usize, worker: usize },
+    /// One `Threshold::decide` control step over the modeled loads;
+    /// emitted moves are applied through the model's own `MoveWorkers`.
+    ScaleTick { dt_ms: u64 },
+    /// Router: append a new shard to the table.
+    SpawnShard,
+    /// Router: retire a shard (terminal; the slot is never reused).
+    RetireShard { shard: usize },
+    /// Router: toggle a shard's drain flag.
+    DrainShard { shard: usize, on: bool },
+    /// Health poll: overwrite a shard's load signals.
+    SetShardLoad { shard: usize, inflight: u64, depth: u64 },
+    /// Router: place one request via the real `placement::pick`.
+    RouteSubmit { policy: PlacementKind },
+    /// Router: complete the `pick`-th oldest pending request.
+    RouteComplete { pick: usize },
+}
+
+/// A deliberately injected bug, used by the explorer's self-test to
+/// prove the invariant harness actually catches (and shrinks) the
+/// conservation violations it exists for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// `move_workers` forgets to add the first mover to the receiver:
+    /// the worker vanishes from the partition (worker conservation).
+    LeakWorkerOnMove,
+    /// Eviction drops the first task of the drained lane instead of
+    /// re-placing it (task conservation).
+    DropEvictedTask,
+}
+
+impl Fault {
+    pub fn parse(s: &str) -> Option<Fault> {
+        match s.to_ascii_lowercase().as_str() {
+            "leak-worker" | "leak-worker-on-move" => Some(Fault::LeakWorkerOnMove),
+            "drop-task" | "drop-evicted-task" => Some(Fault::DropEvictedTask),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Fault::LeakWorkerOnMove => "leak-worker-on-move",
+            Fault::DropEvictedTask => "drop-evicted-task",
+        }
+    }
+}
+
+/// Names accepted by `--fault` (kept next to the parser so the CLI
+/// help cannot drift).
+pub const VALID_FAULTS: &[&str] = &["leak-worker-on-move", "drop-evicted-task"];
+
+/// Generate one weighted, state-aware op. Most draws target live ids
+/// (so sequences exercise deep interleavings rather than bouncing off
+/// validation), but roughly one draw in eight aims out of range on
+/// purpose: rejected ops must stay harmless no-ops, and the error
+/// paths are part of the modeled surface.
+pub fn gen_op(rng: &mut Rng, state: &ModelState) -> Op {
+    let nctx = state.contexts_len();
+    let nworkers = state.total_workers();
+    let nshards = state.shard_count();
+    let spice = |rng: &mut Rng, bound: usize| -> usize {
+        if rng.below(8) == 0 {
+            bound + rng.below(3)
+        } else {
+            rng.below(bound.max(1))
+        }
+    };
+    match rng.below(98) {
+        0..=21 => Op::Submit {
+            ctx: spice(rng, nctx),
+        },
+        22..=41 => {
+            // prefer a worker that actually has something to pop
+            let ready = state.poppable_workers();
+            let worker = if !ready.is_empty() && rng.below(8) != 0 {
+                ready[rng.below(ready.len())]
+            } else {
+                spice(rng, nworkers)
+            };
+            Op::Pop { worker }
+        }
+        42..=55 => {
+            let busy = state.charged_workers();
+            let worker = if !busy.is_empty() && rng.below(8) != 0 {
+                busy[rng.below(busy.len())]
+            } else {
+                spice(rng, nworkers)
+            };
+            Op::Complete { worker }
+        }
+        56..=62 => Op::MoveWorkers {
+            from: spice(rng, nctx),
+            to: spice(rng, nctx),
+            n: rng.below(4),
+        },
+        63..=65 => {
+            let k = 1 + rng.below(nworkers.max(1));
+            let workers: Vec<usize> = (0..k).map(|_| spice(rng, nworkers)).collect();
+            Op::CreateContext { workers }
+        }
+        66..=70 => Op::ResizeContext {
+            ctx: spice(rng, nctx),
+            target: rng.below(nworkers + 2),
+        },
+        71..=75 => Op::Evict {
+            ctx: spice(rng, nctx),
+            worker: spice(rng, nworkers),
+        },
+        76..=79 => Op::ScaleTick {
+            dt_ms: rng.below(400) as u64,
+        },
+        80..=81 => Op::SpawnShard,
+        82..=83 => Op::RetireShard {
+            shard: spice(rng, nshards),
+        },
+        84..=85 => Op::DrainShard {
+            shard: spice(rng, nshards),
+            on: rng.below(2) == 0,
+        },
+        86..=88 => Op::SetShardLoad {
+            shard: spice(rng, nshards),
+            inflight: rng.below(16) as u64,
+            depth: rng.below(16) as u64,
+        },
+        89..=93 => Op::RouteSubmit {
+            policy: match rng.below(3) {
+                0 => PlacementKind::RoundRobin,
+                1 => PlacementKind::LeastLoaded,
+                _ => PlacementKind::Calibrated,
+            },
+        },
+        _ => Op::RouteComplete {
+            pick: rng.below(state.pending_routes().max(1) + 1),
+        },
+    }
+}

@@ -1,0 +1,176 @@
+//! Bounded proof harnesses over the model's invariant set.
+//!
+//! Each `proof_*` function is written against a tiny nondeterministic
+//! value source and asserts the invariants afterwards. Under `cargo
+//! kani` the source is `kani::any()` + `kani::assume`, the functions
+//! carry `#[kani::proof]`, and the harness exhaustively covers the
+//! bounded space. Under a plain build the *same bodies* compile with a
+//! seeded RNG behind the source and run as concrete smoke cases
+//! ([`run_concrete`], wired into `compar verify model --proofs` and
+//! CI) — so the harnesses cannot rot on images without kani.
+//!
+//! Bounds are deliberately small (≤ 4 workers, ≤ 6 ops): the point is
+//! exhaustive coverage of the structural transitions, not scale — the
+//! generative explorer covers scale.
+
+use crate::cluster::placement::PlacementKind;
+
+use super::invariants;
+use super::ops::Op;
+use super::shard::ShardTableModel;
+use super::state::{ModelConfig, ModelState};
+
+#[cfg(kani)]
+fn any_below(n: usize) -> usize {
+    let v: usize = kani::any();
+    kani::assume(v < n.max(1));
+    v
+}
+
+#[cfg(not(kani))]
+mod ambient {
+    //! Concrete stand-in for `kani::any`: a thread-local seeded RNG,
+    //! reseeded per case by [`super::run_concrete`].
+    use std::cell::RefCell;
+
+    use crate::util::rng::{env_seed, Rng};
+
+    thread_local! {
+        static AMBIENT: RefCell<Rng> =
+            RefCell::new(Rng::new(env_seed().unwrap_or(0x0b5e55ed)));
+    }
+
+    pub fn reseed(seed: u64) {
+        AMBIENT.with(|r| *r.borrow_mut() = Rng::new(seed));
+    }
+
+    pub fn below(n: usize) -> usize {
+        AMBIENT.with(|r| r.borrow_mut().below(n.max(1)))
+    }
+}
+
+#[cfg(not(kani))]
+fn any_below(n: usize) -> usize {
+    ambient::below(n)
+}
+
+fn check(state: &ModelState, harness: &str) {
+    if let Err(msg) = invariants::check(state) {
+        panic!("{harness}: {msg}");
+    }
+}
+
+/// Any single live migration (any endpoints, any count) preserves the
+/// worker partition and every occupancy bound — including the
+/// rejected-op paths (self-move, unknown context, empty move).
+#[cfg_attr(kani, kani::proof)]
+pub fn proof_move_conserves_workers() {
+    let cfg = ModelConfig { ncpu: 2, ncuda: 1 };
+    let mut st = ModelState::new(&cfg, None);
+    let _ = st.apply(&Op::CreateContext {
+        workers: vec![any_below(3)],
+    });
+    let op = Op::MoveWorkers {
+        from: any_below(3),
+        to: any_below(3),
+        n: any_below(4),
+    };
+    let _ = st.apply(&op);
+    check(&st, "move_conserves_workers");
+}
+
+/// Eviction (and the re-placement behind migration) never loses or
+/// duplicates a queued task, for any backlog shape and eviction
+/// target — the conservation invariant the self-test's injected fault
+/// breaks on purpose.
+#[cfg_attr(kani, kani::proof)]
+pub fn proof_eviction_conserves_tasks() {
+    let cfg = ModelConfig { ncpu: 2, ncuda: 1 };
+    let mut st = ModelState::new(&cfg, None);
+    let backlog = any_below(4);
+    for _ in 0..backlog {
+        let _ = st.apply(&Op::Submit { ctx: 0 });
+    }
+    let _ = st.apply(&Op::Evict {
+        ctx: any_below(2),
+        worker: any_below(4),
+    });
+    check(&st, "eviction_conserves_tasks");
+    let _ = st.apply(&Op::MoveWorkers {
+        from: 0,
+        to: any_below(2),
+        n: 1 + any_below(2),
+    });
+    check(&st, "eviction_conserves_tasks(after move)");
+}
+
+/// The pop → complete lifecycle keeps every per-worker and per-arch
+/// in-flight bound, under any interleaving of up to six steps.
+#[cfg_attr(kani, kani::proof)]
+pub fn proof_occupancy_bound() {
+    let cfg = ModelConfig { ncpu: 2, ncuda: 1 };
+    let mut st = ModelState::new(&cfg, None);
+    for _ in 0..3 {
+        let _ = st.apply(&Op::Submit { ctx: 0 });
+    }
+    for _ in 0..6 {
+        let op = match any_below(3) {
+            0 => Op::Pop {
+                worker: any_below(3),
+            },
+            1 => Op::Complete {
+                worker: any_below(3),
+            },
+            _ => Op::Submit { ctx: 0 },
+        };
+        let _ = st.apply(&op);
+        check(&st, "occupancy_bound");
+    }
+}
+
+/// Shard retirement keeps the pending map resolvable and never puts a
+/// retired shard back into the placement rotation, for any retire /
+/// route interleaving over a small table.
+#[cfg_attr(kani, kani::proof)]
+pub fn proof_retirement_keeps_pending_resolvable() {
+    let mut shards = ShardTableModel::new();
+    let extra = any_below(2);
+    for _ in 0..extra {
+        shards.spawn();
+    }
+    let _ = shards.place(PlacementKind::RoundRobin, "matmul", 64);
+    let _ = shards.retire(any_below(shards.len() + 1));
+    let _ = shards.place(PlacementKind::LeastLoaded, "matmul", 64);
+    let _ = shards.complete(any_below(2));
+    if let Err(msg) = shards.check() {
+        panic!("retirement_keeps_pending_resolvable: {msg}");
+    }
+}
+
+/// Base seed for the concrete (non-kani) runs of the proof bodies.
+pub const CONCRETE_SEED: u64 = 0x0b5e55ed;
+
+/// Run every proof body `cases` times with derived seeds — the
+/// concrete lane that keeps the harnesses compiling and passing on
+/// images without kani. Panics (with the seed printed by the caller's
+/// `run_cases` wrapper) on any invariant violation.
+#[cfg(not(kani))]
+pub fn run_concrete(cases: usize) {
+    use crate::util::rng::{derive_seed, env_seed};
+    let seeds: Vec<u64> = match env_seed() {
+        Some(s) => vec![s],
+        None => (0..cases as u64)
+            .map(|i| derive_seed(CONCRETE_SEED, i))
+            .collect(),
+    };
+    for seed in seeds {
+        ambient::reseed(seed);
+        proof_move_conserves_workers();
+        ambient::reseed(seed ^ 1);
+        proof_eviction_conserves_tasks();
+        ambient::reseed(seed ^ 2);
+        proof_occupancy_bound();
+        ambient::reseed(seed ^ 3);
+        proof_retirement_keeps_pending_resolvable();
+    }
+}

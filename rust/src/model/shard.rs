@@ -1,0 +1,181 @@
+//! Shard-table model: the router's append-only-with-retirement shard
+//! set, driven through the **real** [`ShardState`] flags and the real
+//! [`placement::pick`] — so the retirement invariants ("a retired
+//! shard is never placed", "pending requests survive retirement")
+//! are checked against the production placement code, not a
+//! re-implementation of it.
+//!
+//! The model is single-threaded and deterministic: the round-robin
+//! cursor is owned here, loads only change through explicit ops, and
+//! calibration stays empty so `Calibrated` placement always takes its
+//! least-loaded fallback.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::AtomicUsize;
+use std::sync::Arc;
+
+use crate::cluster::placement::{self, PlacementKind};
+use crate::cluster::router::ShardState;
+
+/// A pending (routed, not yet completed) request: which shard it was
+/// placed on. Keyed by request id, ascending = submission order.
+pub type PendingMap = BTreeMap<u64, usize>;
+
+pub struct ShardTableModel {
+    shards: Vec<Arc<ShardState>>,
+    rr: AtomicUsize,
+    pending: PendingMap,
+    next_req: u64,
+    next_port: u16,
+    /// First detected placement violation (a pick landed on an
+    /// unavailable shard). Latched: once corrupt, always corrupt —
+    /// the invariant checker reports it after the offending step.
+    corrupt: Option<String>,
+}
+
+impl Default for ShardTableModel {
+    fn default() -> Self {
+        ShardTableModel::new()
+    }
+}
+
+impl ShardTableModel {
+    /// Start with one shard, like a freshly booted single-shard router.
+    pub fn new() -> ShardTableModel {
+        let mut m = ShardTableModel {
+            shards: Vec::new(),
+            rr: AtomicUsize::new(0),
+            pending: BTreeMap::new(),
+            next_req: 0,
+            next_port: 7500,
+            corrupt: None,
+        };
+        m.spawn();
+        m
+    }
+
+    /// Append a shard (the table never shrinks); returns its index.
+    pub fn spawn(&mut self) -> usize {
+        let addr = format!("127.0.0.1:{}", self.next_port);
+        self.next_port += 1;
+        self.shards.push(Arc::new(ShardState::new(addr)));
+        self.shards.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn available(&self, shard: usize) -> bool {
+        self.shards.get(shard).is_some_and(|s| s.available())
+    }
+
+    pub fn retired(&self, shard: usize) -> bool {
+        self.shards.get(shard).is_some_and(|s| s.retired())
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Retire a shard (terminal). Out-of-range ids are rejected like
+    /// any other invalid op.
+    pub fn retire(&mut self, shard: usize) -> Result<(), String> {
+        match self.shards.get(shard) {
+            Some(s) => {
+                s.set_retired();
+                Ok(())
+            }
+            None => Err(format!("unknown shard {shard}")),
+        }
+    }
+
+    pub fn drain(&mut self, shard: usize, on: bool) -> Result<(), String> {
+        match self.shards.get(shard) {
+            Some(s) => {
+                s.set_draining(on);
+                Ok(())
+            }
+            None => Err(format!("unknown shard {shard}")),
+        }
+    }
+
+    /// Health-poll overwrite of a shard's load signals.
+    pub fn set_load(&mut self, shard: usize, inflight: u64, depth: u64) -> Result<(), String> {
+        match self.shards.get(shard) {
+            Some(s) => {
+                s.set_inflight(inflight);
+                s.set_queue_depth(depth);
+                Ok(())
+            }
+            None => Err(format!("unknown shard {shard}")),
+        }
+    }
+
+    /// Route one request through the real placement policy. Returns
+    /// the request id, or an error when no shard is available (every
+    /// shard down/draining/retired — the router's 503 path).
+    pub fn place(&mut self, kind: PlacementKind, app: &str, size: usize) -> Result<u64, String> {
+        let Some(i) = placement::pick(kind, &self.shards, app, size, &[], &self.rr) else {
+            return Err("no shard available".into());
+        };
+        if !self.shards[i].available() && self.corrupt.is_none() {
+            self.corrupt = Some(format!(
+                "placement picked unavailable shard {i} (retired={}, draining={})",
+                self.shards[i].retired(),
+                self.shards[i].draining()
+            ));
+        }
+        let req = self.next_req;
+        self.next_req += 1;
+        self.pending.insert(req, i);
+        // the routed request counts toward the shard's load until it
+        // completes (mirrors the router's in-flight accounting)
+        let s = &self.shards[i];
+        s.set_inflight(s.inflight() + 1);
+        Ok(req)
+    }
+
+    /// Complete the `pick`-th oldest pending request. Retired shards
+    /// still complete their in-flight work — retirement only removes
+    /// them from the placement rotation.
+    pub fn complete(&mut self, pick: usize) -> Result<u64, String> {
+        let Some(&req) = self.pending.keys().nth(pick) else {
+            return Err(format!("no pending request at position {pick}"));
+        };
+        let shard = self.pending.remove(&req).expect("key just listed");
+        if let Some(s) = self.shards.get(shard) {
+            s.set_inflight(s.inflight().saturating_sub(1));
+        }
+        Ok(req)
+    }
+
+    /// The shard-table invariants: no placement ever landed on an
+    /// unavailable shard (latched at place() time, since the rotation
+    /// state has moved on by check time), every pending request maps to
+    /// a valid index (retirement never invalidates the pending map),
+    /// and retirement is terminal (a retired shard is never available).
+    pub fn check(&self) -> Result<(), String> {
+        if let Some(msg) = &self.corrupt {
+            return Err(msg.clone());
+        }
+        for (&req, &shard) in &self.pending {
+            if shard >= self.shards.len() {
+                return Err(format!(
+                    "pending request {req} maps to shard {shard} but the table has {}",
+                    self.shards.len()
+                ));
+            }
+        }
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.retired() && s.available() {
+                return Err(format!("shard {i} is retired yet still available"));
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,515 @@
+//! The pure state machine: an executable specification of the
+//! runtime's concurrency core. No threads, no atomics, no clocks —
+//! every transition is a plain function of the previous state, so the
+//! explorer can replay, bisect and shrink op sequences byte-for-byte.
+//!
+//! The model mirrors the real semantics exactly where they matter for
+//! the invariants:
+//!
+//! - `create_context` requires quiescence, shrinks donors in place and
+//!   appends a slot (context ids are never reused);
+//! - `move_workers` picks movers receiver-arch-first / idle-first /
+//!   lowest-id, never moves a donor's last worker of an architecture,
+//!   evicts the movers' lanes and re-places the tasks on the remaining
+//!   members;
+//! - a migrated worker's in-flight task stays **charged to the source
+//!   context** until it completes (in the real runtime the Busy guard
+//!   holds the source `SchedCtx`'s counter), so charges may legally
+//!   sit on workers that are no longer members;
+//! - the autoscaler step drives the real [`Threshold`] policy with
+//!   samples derived from the modeled lanes and charges.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::autoscale::{CtxSample, ScaleAction, ScalePolicy, Threshold, ThresholdConfig};
+use crate::taskrt::Arch;
+
+use super::ops::{Fault, Op};
+use super::shard::ShardTableModel;
+
+/// Machine shape of a modeled runtime (the paper topology: `ncpu` CPU
+/// workers on memory node 0, then `ncuda` device workers on node 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub ncpu: usize,
+    pub ncuda: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig { ncpu: 3, ncuda: 1 }
+    }
+}
+
+/// One scheduling context as the model sees it.
+#[derive(Debug, Clone)]
+pub struct ModelCtx {
+    pub name: String,
+    /// Sorted global worker ids of the partition.
+    pub members: Vec<usize>,
+    /// Worker count at creation — the autoscaler's rebalance target.
+    pub home: usize,
+    /// Per-member ready lanes (queued task ids, FIFO). Keys are always
+    /// a subset of `members`; eviction maintains this on migration.
+    pub lanes: BTreeMap<usize, Vec<u64>>,
+    /// In-flight tasks *charged to this context*, by executing worker.
+    /// A worker appears here from pop to complete; after a migration
+    /// it may no longer be a member (the charge stays on the source).
+    pub running: BTreeMap<usize, Vec<u64>>,
+}
+
+impl ModelCtx {
+    pub fn queued(&self) -> usize {
+        self.lanes.values().map(Vec::len).sum()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.running.values().map(Vec::len).sum()
+    }
+}
+
+/// The whole modeled system: worker partition, task lifecycle
+/// counters, the shard table, and the real autoscale policy instance.
+pub struct ModelState {
+    /// Architecture of each global worker id (fixed topology).
+    pub archs: Vec<Arch>,
+    /// Current context of each worker (the `worker_ctx` table).
+    pub worker_ctx: Vec<usize>,
+    /// Context table: append-only, ids never reused.
+    pub contexts: Vec<ModelCtx>,
+    pub next_task: u64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub shards: ShardTableModel,
+    scaler: Threshold,
+    fault: Option<Fault>,
+}
+
+impl ModelState {
+    pub fn new(cfg: &ModelConfig, fault: Option<Fault>) -> ModelState {
+        let mut archs = vec![Arch::Cpu; cfg.ncpu];
+        archs.resize(cfg.ncpu + cfg.ncuda, Arch::Cuda);
+        let members: Vec<usize> = (0..archs.len()).collect();
+        let default_ctx = ModelCtx {
+            name: "default".into(),
+            home: members.len(),
+            members,
+            lanes: BTreeMap::new(),
+            running: BTreeMap::new(),
+        };
+        ModelState {
+            worker_ctx: vec![0; archs.len()],
+            archs,
+            contexts: vec![default_ctx],
+            next_task: 0,
+            submitted: 0,
+            completed: 0,
+            shards: ShardTableModel::new(),
+            scaler: Threshold::new(ThresholdConfig::default()),
+            fault,
+        }
+    }
+
+    // ------------------------------------------------------ introspection
+
+    pub fn contexts_len(&self) -> usize {
+        self.contexts.len()
+    }
+
+    pub fn total_workers(&self) -> usize {
+        self.archs.len()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn pending_routes(&self) -> usize {
+        self.shards.pending_len()
+    }
+
+    /// No task submitted is still queued or in flight.
+    pub fn is_quiescent(&self) -> bool {
+        self.submitted == self.completed
+    }
+
+    /// Workers whose current context has something queued for them and
+    /// that are not already executing (the legal Pop targets).
+    pub fn poppable_workers(&self) -> Vec<usize> {
+        (0..self.archs.len())
+            .filter(|&w| {
+                !self.worker_busy(w)
+                    && self.contexts[self.worker_ctx[w]]
+                        .lanes
+                        .get(&w)
+                        .is_some_and(|l| !l.is_empty())
+            })
+            .collect()
+    }
+
+    /// Workers currently charged with an in-flight task (in any
+    /// context — migration can strand the charge on the source).
+    pub fn charged_workers(&self) -> Vec<usize> {
+        (0..self.archs.len())
+            .filter(|&w| self.worker_busy(w))
+            .collect()
+    }
+
+    fn worker_busy(&self, w: usize) -> bool {
+        self.contexts
+            .iter()
+            .any(|c| c.running.get(&w).is_some_and(|v| !v.is_empty()))
+    }
+
+    /// Sorted member sets per context (the differential mode compares
+    /// this against [`crate::taskrt::AuditedState`]).
+    pub fn memberships(&self) -> Vec<Vec<usize>> {
+        self.contexts.iter().map(|c| c.members.clone()).collect()
+    }
+
+    // ----------------------------------------------------------- stepping
+
+    /// Apply one op. `Err` mirrors the runtime's `bail!` paths — the
+    /// op was rejected and the state is unchanged. `Ok(Some(n))`
+    /// carries the moved-worker count of `MoveWorkers`/`ResizeContext`
+    /// (what the real calls return), `Ok(None)` for everything else.
+    pub fn apply(&mut self, op: &Op) -> Result<Option<usize>, String> {
+        match op {
+            Op::CreateContext { workers } => self.create_context(workers).map(|_| None),
+            Op::MoveWorkers { from, to, n } => self.move_workers(*from, *to, *n).map(Some),
+            Op::ResizeContext { ctx, target } => self.resize_context(*ctx, *target).map(Some),
+            Op::Submit { ctx } => self.submit(*ctx).map(|_| None),
+            Op::Pop { worker } => self.pop(*worker).map(|_| None),
+            Op::Complete { worker } => self.complete(*worker).map(|_| None),
+            Op::Evict { ctx, worker } => self.evict(*ctx, *worker).map(|_| None),
+            Op::ScaleTick { dt_ms } => self.scale_tick(*dt_ms).map(Some),
+            Op::SpawnShard => {
+                self.shards.spawn();
+                Ok(None)
+            }
+            Op::RetireShard { shard } => self.shards.retire(*shard).map(|_| None),
+            Op::DrainShard { shard, on } => self.shards.drain(*shard, *on).map(|_| None),
+            Op::SetShardLoad {
+                shard,
+                inflight,
+                depth,
+            } => self.shards.set_load(*shard, *inflight, *depth).map(|_| None),
+            Op::RouteSubmit { policy } => {
+                self.shards.place(*policy, "matmul", 64).map(|_| None)
+            }
+            Op::RouteComplete { pick } => self.shards.complete(*pick).map(|_| None),
+        }
+    }
+
+    /// Mirror of `Runtime::create_context_with` (same checks, same
+    /// order): sort/dedup, non-empty, in-range, quiescent; donors
+    /// shrink in place; the new context is appended.
+    pub fn create_context(&mut self, workers: &[usize]) -> Result<usize, String> {
+        let mut members = workers.to_vec();
+        members.sort_unstable();
+        members.dedup();
+        let name = format!("m{}", self.contexts.len());
+        if members.is_empty() {
+            return Err(format!("context '{name}' needs at least one worker"));
+        }
+        if let Some(&bad) = members.iter().find(|&&w| w >= self.archs.len()) {
+            return Err(format!(
+                "context '{name}': worker {bad} out of range (topology has {})",
+                self.archs.len()
+            ));
+        }
+        if !self.is_quiescent() {
+            return Err(format!(
+                "create_context('{name}') requires a quiescent runtime"
+            ));
+        }
+        let id = self.contexts.len();
+        for ctx in self.contexts.iter_mut() {
+            // quiescent: the removed members' lanes are empty, so the
+            // donor loses only (idle) workers
+            ctx.members.retain(|w| !members.contains(w));
+            ctx.lanes.retain(|w, _| !members.contains(w));
+        }
+        for &w in &members {
+            self.worker_ctx[w] = id;
+        }
+        self.contexts.push(ModelCtx {
+            name,
+            home: members.len(),
+            members,
+            lanes: BTreeMap::new(),
+            running: BTreeMap::new(),
+        });
+        Ok(id)
+    }
+
+    /// Mirror of `Runtime::move_workers`: receiver-arch-first /
+    /// idle-first / lowest-id mover choice, last-of-arch floor,
+    /// eviction + re-placement of the movers' lanes.
+    pub fn move_workers(&mut self, from: usize, to: usize, n: usize) -> Result<usize, String> {
+        if from == to {
+            return Err(format!(
+                "move_workers: source and destination are both context {from}"
+            ));
+        }
+        if from >= self.contexts.len() {
+            return Err(format!("unknown scheduling context {from}"));
+        }
+        if to >= self.contexts.len() {
+            return Err(format!("unknown scheduling context {to}"));
+        }
+        if n == 0 {
+            return Ok(0);
+        }
+        let members = self.contexts[from].members.clone();
+        let dst_archs: Vec<Arch> = {
+            let mut v: Vec<Arch> = Vec::new();
+            for &w in &self.contexts[to].members {
+                if !v.contains(&self.archs[w]) {
+                    v.push(self.archs[w]);
+                }
+            }
+            v
+        };
+        let mut cands = members.clone();
+        cands.sort_by_key(|&w| {
+            (
+                !dst_archs.is_empty() && !dst_archs.contains(&self.archs[w]),
+                self.contexts[from]
+                    .running
+                    .get(&w)
+                    .map_or(0, |v| v.len()),
+                w,
+            )
+        });
+        let mut remaining = members;
+        let mut movers: Vec<usize> = Vec::new();
+        for w in cands {
+            if movers.len() == n {
+                break;
+            }
+            let arch = self.archs[w];
+            let same_arch = remaining
+                .iter()
+                .filter(|&&x| self.archs[x] == arch)
+                .count();
+            if same_arch <= 1 {
+                continue; // last of its architecture stays
+            }
+            remaining.retain(|&x| x != w);
+            movers.push(w);
+        }
+        if movers.is_empty() {
+            return Ok(0);
+        }
+        self.contexts[from].members = remaining;
+        for &w in &movers {
+            let evicted = self.contexts[from].lanes.remove(&w).unwrap_or_default();
+            self.replace_evicted(from, evicted, None);
+        }
+        for (i, &w) in movers.iter().enumerate() {
+            if i == 0 && self.fault == Some(Fault::LeakWorkerOnMove) {
+                // injected bug: the first mover never joins the
+                // receiver — it vanishes from the partition
+                continue;
+            }
+            self.contexts[to].members.push(w);
+            self.worker_ctx[w] = to;
+        }
+        self.contexts[to].members.sort_unstable();
+        Ok(movers.len())
+    }
+
+    /// Mirror of `Runtime::resize_context`: exchange with context 0.
+    pub fn resize_context(&mut self, ctx: usize, target: usize) -> Result<usize, String> {
+        if ctx == 0 {
+            return Err("resize_context: context 0 is the elastic pool itself".into());
+        }
+        if ctx >= self.contexts.len() {
+            return Err(format!("unknown scheduling context {ctx}"));
+        }
+        let cur = self.contexts[ctx].members.len();
+        match target.cmp(&cur) {
+            std::cmp::Ordering::Greater => {
+                self.move_workers(0, ctx, target - cur)?;
+            }
+            std::cmp::Ordering::Less => {
+                self.move_workers(ctx, 0, cur - target)?;
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+        Ok(self.contexts[ctx].members.len())
+    }
+
+    /// Mirror of `Runtime::submit`: validates the context, then the
+    /// task enters the least-loaded member's lane. (The real scheduler
+    /// placement differs per policy; the invariants — conservation,
+    /// occupancy — are placement-independent, and the differential
+    /// mode compares outcomes at quiescent points only.)
+    pub fn submit(&mut self, ctx: usize) -> Result<u64, String> {
+        if ctx >= self.contexts.len() {
+            return Err(format!("unknown scheduling context {ctx}"));
+        }
+        if self.contexts[ctx].members.is_empty() {
+            // mirrors the "no selectable implementation" bail: a
+            // memberless context has no executor of any architecture
+            return Err(format!(
+                "no selectable implementation in context {ctx} (no members)"
+            ));
+        }
+        let task = self.next_task;
+        self.next_task += 1;
+        self.submitted += 1;
+        self.place_task(ctx, task, None);
+        Ok(task)
+    }
+
+    /// A worker pops the front task of its lane in its *current*
+    /// context. Rejected while the worker is executing (the worker
+    /// loop is serial: pop → execute → complete).
+    pub fn pop(&mut self, worker: usize) -> Result<u64, String> {
+        if worker >= self.archs.len() {
+            return Err(format!("worker {worker} out of range"));
+        }
+        if self.worker_busy(worker) {
+            return Err(format!("worker {worker} is executing a task"));
+        }
+        let ctx = self.worker_ctx[worker];
+        let Some(lane) = self.contexts[ctx].lanes.get_mut(&worker) else {
+            return Err(format!("worker {worker}: nothing queued"));
+        };
+        if lane.is_empty() {
+            return Err(format!("worker {worker}: nothing queued"));
+        }
+        let task = lane.remove(0);
+        self.contexts[ctx]
+            .running
+            .entry(worker)
+            .or_default()
+            .push(task);
+        Ok(task)
+    }
+
+    /// The worker finishes its in-flight task; the charge is released
+    /// in whichever context holds it (the source, after a migration).
+    pub fn complete(&mut self, worker: usize) -> Result<u64, String> {
+        for ctx in self.contexts.iter_mut() {
+            if let Some(v) = ctx.running.get_mut(&worker) {
+                if !v.is_empty() {
+                    let task = v.remove(0);
+                    if v.is_empty() {
+                        ctx.running.remove(&worker);
+                    }
+                    self.completed += 1;
+                    return Ok(task);
+                }
+            }
+        }
+        Err(format!("worker {worker} has nothing in flight"))
+    }
+
+    /// Mirror of `Scheduler::evict` + re-push: drain one member's lane
+    /// and re-place the tasks on the context's *other* members (or back
+    /// on the same worker when it is the only member).
+    pub fn evict(&mut self, ctx: usize, worker: usize) -> Result<usize, String> {
+        if ctx >= self.contexts.len() {
+            return Err(format!("unknown scheduling context {ctx}"));
+        }
+        let evicted = self.contexts[ctx].lanes.remove(&worker).unwrap_or_default();
+        let n = evicted.len();
+        self.replace_evicted(ctx, evicted, Some(worker));
+        Ok(n)
+    }
+
+    /// One autoscale control step: build [`CtxSample`]s from the
+    /// modeled lanes/charges, run the real [`Threshold`] policy, apply
+    /// its moves through the model's own `move_workers` (a move the
+    /// floor rejects simply moves fewer workers, like the real call).
+    pub fn scale_tick(&mut self, dt_ms: u64) -> Result<usize, String> {
+        let total = self.archs.len();
+        let samples: Vec<CtxSample> = self
+            .contexts
+            .iter()
+            .enumerate()
+            .map(|(id, c)| CtxSample {
+                ctx: id,
+                name: c.name.clone(),
+                workers: c.members.len(),
+                queue_depth: c.queued(),
+                busy: c
+                    .members
+                    .iter()
+                    .filter(|w| c.running.get(w).is_some_and(|v| !v.is_empty()))
+                    .count(),
+                queued_secs: 0.0,
+                tenants: 0,
+                home: c.home,
+                min: 1,
+                max: total,
+                slo_ms: None,
+            })
+            .collect();
+        let actions = self.scaler.decide(&samples, Duration::from_millis(dt_ms));
+        let mut moved = 0;
+        for ScaleAction::Move { from, to, n } in actions {
+            moved += self.move_workers(from, to, n).unwrap_or(0);
+        }
+        Ok(moved)
+    }
+
+    /// Run every queued task to completion (pop + complete over all
+    /// workers until quiescent) — the differential mode's sync point.
+    /// Stops early if no worker can make progress (only possible with
+    /// an injected fault; the invariants report the stranded task).
+    pub fn drain(&mut self) {
+        while !self.is_quiescent() {
+            let mut progressed = false;
+            for w in 0..self.archs.len() {
+                if self.pop(w).is_ok() {
+                    progressed = true;
+                }
+                if self.complete(w).is_ok() {
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ helpers
+
+    /// Queue `task` on the context's least-loaded member (ties: lowest
+    /// id), optionally excluding one worker (the eviction source).
+    fn place_task(&mut self, ctx: usize, task: u64, exclude: Option<usize>) {
+        let c = &mut self.contexts[ctx];
+        let target = c
+            .members
+            .iter()
+            .filter(|&&w| Some(w) != exclude)
+            .min_by_key(|&&w| (c.lanes.get(&w).map_or(0, Vec::len), w))
+            .copied()
+            .or_else(|| c.members.iter().copied().find(|&w| Some(w) == exclude));
+        let Some(w) = target else {
+            // no member at all: the caller guarantees this cannot
+            // happen for submit; eviction of a memberless context
+            // drains nothing (lanes ⊆ members)
+            return;
+        };
+        c.lanes.entry(w).or_default().push(task);
+    }
+
+    /// Re-place an evicted lane inside `ctx`, honoring the injected
+    /// drop-task fault (the self-test's conservation bug).
+    fn replace_evicted(&mut self, ctx: usize, evicted: Vec<u64>, exclude: Option<usize>) {
+        let mut evicted = evicted;
+        if self.fault == Some(Fault::DropEvictedTask) && !evicted.is_empty() {
+            evicted.remove(0); // injected bug: the first task is lost
+        }
+        for t in evicted {
+            self.place_task(ctx, t, exclude);
+        }
+    }
+}

@@ -55,8 +55,8 @@ pub use device::Arch;
 pub use metrics::{Metrics, TaskResult};
 pub use perfmodel::PerfModels;
 pub use selection::{
-    RuntimeSnapshot, SelectionPolicy, SelectionQuery, SelectorKind, VariantChoice,
-    VALID_SELECTORS,
+    validate_occupancy, RuntimeSnapshot, SelectionPolicy, SelectionQuery, SelectorKind,
+    VariantChoice, WorkerOccupancy, VALID_SELECTORS,
 };
 pub use task::{TaskId, TaskSpec, TaskState};
 
@@ -124,6 +124,32 @@ pub struct CtxLoad {
     pub queued_secs: f64,
     /// Live serve-layer sessions sharing the runtime.
     pub tenants: usize,
+}
+
+/// One context's membership and occupancy in an [`AuditedState`].
+#[derive(Debug, Clone)]
+pub struct CtxAudit {
+    pub id: CtxId,
+    pub name: String,
+    /// Sorted global worker ids of the partition.
+    pub members: Vec<usize>,
+    /// `(worker, arch, in-flight count)` per member — the exact tuples
+    /// [`validate_occupancy`] was run over.
+    pub occupancy: Vec<WorkerOccupancy>,
+    /// Tasks queued in this context's scheduler (clamped at 0).
+    pub queue_depth: usize,
+}
+
+/// A validated structural snapshot of the runtime's concurrency core,
+/// captured under the reconfiguration lock so membership is stable for
+/// the duration of the read. This is the observable the pure model in
+/// [`crate::model`] diffs against: if capture fails, the live counters
+/// violated the audited invariants.
+#[derive(Debug, Clone)]
+pub struct AuditedState {
+    pub contexts: Vec<CtxAudit>,
+    /// Total workers in the topology (every context indexes into it).
+    pub total_workers: usize,
 }
 
 /// Shared runtime state (one per [`Runtime`]).
@@ -495,6 +521,74 @@ impl Runtime {
                 }
             })
             .collect()
+    }
+
+    /// Capture a structural snapshot of the concurrency core and run
+    /// the counter audit over it. Takes the reconfiguration lock so no
+    /// migration can change membership mid-read, then checks:
+    ///
+    /// - per-context occupancy ([`validate_occupancy`] — the same
+    ///   function the pure model's invariant set uses);
+    /// - worker partition: every worker sits in exactly one context's
+    ///   member list, and `worker_ctx` agrees with it.
+    ///
+    /// Errors name the offending context/worker; `Ok` carries the
+    /// snapshot the model's differential mode compares against.
+    pub fn audited_state(&self) -> Result<AuditedState> {
+        let _reconfig = self.inner.reconfig.lock().unwrap();
+        let contexts = self.inner.contexts.read().unwrap();
+        let total_workers = self.inner.workers.len();
+        let mut owner: Vec<Option<CtxId>> = vec![None; total_workers];
+        let mut audits = Vec::with_capacity(contexts.len());
+        for (id, c) in contexts.iter().enumerate() {
+            let mut members = c.ctx.members();
+            members.sort_unstable();
+            let occupancy: Vec<WorkerOccupancy> = members
+                .iter()
+                .map(|&w| {
+                    (
+                        w,
+                        self.inner.workers[w].arch,
+                        c.ctx.running[w].load(Ordering::Relaxed),
+                    )
+                })
+                .collect();
+            if let Err(msg) = validate_occupancy(&occupancy) {
+                bail!("context {id} ('{}') failed the counter audit: {msg}", c.name);
+            }
+            for &w in &members {
+                if let Some(prev) = owner[w] {
+                    bail!(
+                        "worker {w} is a member of both context {prev} and context {id} ('{}')",
+                        c.name
+                    );
+                }
+                owner[w] = Some(id);
+                let recorded = self.inner.worker_ctx[w].load(Ordering::Relaxed);
+                if recorded != id {
+                    bail!(
+                        "worker {w} is a member of context {id} ('{}') but worker_ctx says {recorded}",
+                        c.name
+                    );
+                }
+            }
+            audits.push(CtxAudit {
+                id,
+                name: c.name.clone(),
+                members,
+                occupancy,
+                queue_depth: c.ctx.pending.load(Ordering::Relaxed).max(0) as usize,
+            });
+        }
+        for (w, o) in owner.iter().enumerate() {
+            if o.is_none() {
+                bail!("worker {w} is not a member of any context (partition leak)");
+            }
+        }
+        Ok(AuditedState {
+            contexts: audits,
+            total_workers,
+        })
     }
 
     /// Migrate up to `n` workers from context `from` into context `to`

@@ -65,7 +65,7 @@ pub mod contextual;
 pub mod query;
 
 pub use contextual::Contextual;
-pub use query::{RuntimeSnapshot, SelectionQuery};
+pub use query::{validate_occupancy, RuntimeSnapshot, SelectionQuery, WorkerOccupancy};
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -25,6 +25,50 @@ use std::sync::atomic::Ordering;
 use crate::taskrt::device::{transfer_model, Arch};
 use crate::taskrt::scheduler::{ReadyTask, SchedCtx};
 
+/// One member worker's occupancy as seen by the counter audit:
+/// `(worker id, architecture, in-flight count)`.
+pub type WorkerOccupancy = (usize, Arch, usize);
+
+/// The counter-audit invariants over one context's membership, as a
+/// `Result` so the pure model, the runtime's audited snapshots and the
+/// hot-path capture all share one source of truth:
+///
+/// - each member worker executes at most one task at a time (the Busy
+///   guard / worker-migration accounting must never leak an increment);
+/// - per architecture, in-flight tasks never exceed that architecture's
+///   member count (each member contributes at most one in-flight task).
+pub fn validate_occupancy(members: &[WorkerOccupancy]) -> Result<(), String> {
+    let mut errors: Vec<String> = Vec::new();
+    let mut per_arch: Vec<(Arch, usize, usize)> = Vec::new();
+    for &(w, arch, running) in members {
+        if running > 1 {
+            errors.push(format!(
+                "worker {w} in-flight count {running} > 1 (occupancy leak)"
+            ));
+        }
+        match per_arch.iter_mut().find(|(a, _, _)| *a == arch) {
+            Some(entry) => {
+                entry.1 += 1;
+                entry.2 += running;
+            }
+            None => per_arch.push((arch, 1, running)),
+        }
+    }
+    for (arch, arch_workers, arch_inflight) in per_arch {
+        if arch_inflight > arch_workers {
+            errors.push(format!(
+                "{arch_inflight} in-flight tasks on {arch_workers} {} member worker(s)",
+                arch.name()
+            ));
+        }
+    }
+    if errors.is_empty() {
+        Ok(())
+    } else {
+        Err(errors.join("; "))
+    }
+}
+
 /// A cheap point-in-time view of the runtime state relevant to one
 /// (task, arch) selection decision. Captured from atomic counters only
 /// — building one costs a handful of relaxed loads, so it sits on the
@@ -97,16 +141,17 @@ impl<'a> SelectionQuery<'a> {
         let mut arch_inflight = 0usize;
         let mut busy_workers = 0usize;
         let mut queued: Option<f64> = None;
+        // counter audit (debug builds only): the Busy guard and worker
+        // migration must keep each member's in-flight count ≤ 1 and each
+        // arch's in-flight total ≤ its member count; the same
+        // validate_occupancy is the model's invariant source of truth
+        let mut audit: Vec<WorkerOccupancy> = Vec::new();
         let members = ctx.members_read();
         for &w in members.iter() {
             let running = ctx.running[w].load(Ordering::Relaxed);
-            // a worker executes at most one task from its context at a
-            // time; a higher count means the occupancy accounting (the
-            // Busy guard, or worker migration) leaked an increment
-            debug_assert!(
-                running <= 1,
-                "worker {w} in-flight count {running} > 1 (occupancy leak)"
-            );
+            if cfg!(debug_assertions) {
+                audit.push((w, ctx.workers[w].arch, running));
+            }
             busy_workers += running.min(1);
             if ctx.workers[w].arch == arch {
                 arch_workers += 1;
@@ -118,15 +163,11 @@ impl<'a> SelectionQuery<'a> {
                 });
             }
         }
-        // per-arch in-flight work can never exceed the partition's
-        // per-arch parallelism — the invariant worker migration must
-        // preserve (each member contributes at most one in-flight task)
-        debug_assert!(
-            arch_inflight <= arch_workers,
-            "{} in-flight tasks on {arch_workers} {} member worker(s)",
-            arch_inflight,
-            arch.name()
-        );
+        if cfg!(debug_assertions) {
+            if let Err(msg) = validate_occupancy(&audit) {
+                panic!("{msg}");
+            }
+        }
         let partition_workers = members.len();
         drop(members);
         let snapshot = RuntimeSnapshot {
@@ -346,6 +387,35 @@ mod tests {
             ..RuntimeSnapshot::default()
         };
         assert_eq!(contended.load_band(), 2);
+    }
+
+    #[test]
+    fn validate_occupancy_accepts_legal_states() {
+        assert!(validate_occupancy(&[]).is_ok());
+        assert!(validate_occupancy(&[(0, Arch::Cpu, 0)]).is_ok());
+        assert!(validate_occupancy(&[
+            (0, Arch::Cpu, 1),
+            (1, Arch::Cpu, 0),
+            (2, Arch::Cuda, 1),
+        ])
+        .is_ok());
+    }
+
+    #[test]
+    fn validate_occupancy_flags_per_worker_leak() {
+        let err = validate_occupancy(&[(3, Arch::Cpu, 2), (4, Arch::Cpu, 0)]).unwrap_err();
+        assert!(err.contains("worker 3"), "{err}");
+        assert!(err.contains("occupancy leak"), "{err}");
+    }
+
+    #[test]
+    fn validate_occupancy_flags_per_arch_overflow() {
+        // one cuda member carrying two in-flight tasks trips both the
+        // per-worker bound and the per-arch aggregate; the report names
+        // both so a migration leak is diagnosable from either side
+        let err = validate_occupancy(&[(0, Arch::Cpu, 0), (1, Arch::Cuda, 2)]).unwrap_err();
+        assert!(err.contains("occupancy leak"), "{err}");
+        assert!(err.contains("in-flight tasks on 1 cuda member worker(s)"), "{err}");
     }
 
     #[test]

@@ -62,6 +62,67 @@ impl Rng {
     }
 }
 
+/// Environment variable that pins every generative harness (property
+/// tests, the model explorer, the concrete proof harnesses) to one
+/// exact seed for failure replay.
+pub const MODEL_SEED_ENV: &str = "COMPAR_MODEL_SEED";
+
+/// Seed override from `COMPAR_MODEL_SEED` (decimal or `0x`-prefixed hex).
+pub fn env_seed() -> Option<u64> {
+    let raw = std::env::var(MODEL_SEED_ENV).ok()?;
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return None;
+    }
+    let parsed = if let Some(hex) = raw.strip_prefix("0x").or_else(|| raw.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16)
+    } else {
+        raw.parse::<u64>()
+    };
+    match parsed {
+        Ok(v) => Some(v),
+        Err(_) => {
+            eprintln!("{MODEL_SEED_ENV}={raw:?} is not a u64 (decimal or 0x-hex); ignoring");
+            None
+        }
+    }
+}
+
+/// Per-case seed derived from a harness base seed: splitmix64 finalizer
+/// over `base ^ case`, so neighbouring case indices land far apart and
+/// any single case can be replayed in isolation.
+pub fn derive_seed(base: u64, case: u64) -> u64 {
+    let mut z = base
+        .wrapping_add(case.wrapping_mul(0x9e3779b97f4a7c15))
+        .wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Run a seeded property-test body over `cases` derived seeds.
+///
+/// Every generative harness in the repo goes through here so failures
+/// are always reproducible: if the case panics, the exact seed is
+/// printed with the `COMPAR_MODEL_SEED=<seed>` incantation that replays
+/// it, then the panic is re-raised. When `COMPAR_MODEL_SEED` is set in
+/// the environment, only that one seed runs (replay mode).
+pub fn run_cases<F: FnMut(u64)>(default_base: u64, cases: usize, mut body: F) {
+    use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+    let seeds: Vec<u64> = match env_seed() {
+        Some(seed) => vec![seed],
+        None => (0..cases as u64)
+            .map(|case| derive_seed(default_base, case))
+            .collect(),
+    };
+    for seed in seeds {
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| body(seed))) {
+            eprintln!("generative case failed; replay with {MODEL_SEED_ENV}={seed}");
+            resume_unwind(payload);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,5 +170,29 @@ mod tests {
         for _ in 0..1000 {
             assert!(r.below(17) < 17);
         }
+    }
+
+    #[test]
+    fn derive_seed_spreads_and_is_stable() {
+        let a = derive_seed(0x1234, 0);
+        let b = derive_seed(0x1234, 1);
+        assert_ne!(a, b);
+        assert_eq!(a, derive_seed(0x1234, 0));
+        // different bases diverge too
+        assert_ne!(derive_seed(1, 0), derive_seed(2, 0));
+    }
+
+    #[test]
+    fn run_cases_visits_each_derived_seed_once() {
+        // run_cases only consults the env override, which tests must not
+        // mutate (process-global); assert the derived-seed path instead
+        // when no override is active, and skip under replay mode.
+        if env_seed().is_some() {
+            return;
+        }
+        let mut seen = Vec::new();
+        run_cases(0xabc, 5, |seed| seen.push(seed));
+        let expect: Vec<u64> = (0..5).map(|c| derive_seed(0xabc, c)).collect();
+        assert_eq!(seen, expect);
     }
 }

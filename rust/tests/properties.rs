@@ -1,16 +1,23 @@
 //! Property-based tests (hand-rolled quickcheck style — proptest is not
 //! available offline): randomized inputs over the coordinator's
 //! invariants — routing/eligibility, dependency ordering, coherence
-//! state, perf-model math, JSON round-trips, and the pre-compiler's
-//! passthrough guarantee.
+//! state, perf-model math, JSON round-trips, shard retirement, and the
+//! pre-compiler's passthrough guarantee.
+//!
+//! Every test runs through [`run_cases`]: each case gets its own
+//! derived seed, a failing case prints `replay with
+//! COMPAR_MODEL_SEED=<seed>`, and setting that variable re-runs
+//! exactly the failing case.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use compar::cluster::PlacementKind;
+use compar::model::ShardTableModel;
 use compar::runtime::Tensor;
 use compar::taskrt::{AccessMode, Arch, Codelet, Config, Runtime, SchedPolicy, TaskSpec};
 use compar::util::json::{self, Json};
-use compar::util::rng::Rng;
+use compar::util::rng::{run_cases, Rng};
 
 const CASES: usize = 64;
 
@@ -53,13 +60,13 @@ fn gen_json(rng: &mut Rng, depth: usize) -> Json {
 
 #[test]
 fn prop_json_roundtrip() {
-    let mut rng = Rng::new(0x1a50);
-    for _ in 0..CASES * 4 {
+    run_cases(0x1a50, CASES * 4, |seed| {
+        let mut rng = Rng::new(seed);
         let v = gen_json(&mut rng, 3);
         let s = json::to_string(&v);
         let back = json::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
         assert_eq!(v, back, "roundtrip failed for {s}");
-    }
+    });
 }
 
 #[test]
@@ -68,8 +75,8 @@ fn prop_dependency_order_respected() {
     // execute in an order consistent with sequential consistency:
     // writers see all prior accesses' effects. We verify with a counter
     // tensor: each write task increments, each read task records.
-    let mut rng = Rng::new(42);
-    for _ in 0..8 {
+    run_cases(42, 8, |seed| {
+        let mut rng = Rng::new(seed);
         let rt = Runtime::new(
             Config {
                 ncpu: 3,
@@ -131,7 +138,7 @@ fn prop_dependency_order_respected() {
         want.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(got, want);
         assert_eq!(rt.snapshot(h).unwrap().data()[0], nwrites);
-    }
+    });
 }
 
 #[test]
@@ -139,8 +146,8 @@ fn prop_msi_coherence_never_loses_data() {
     // random acquire sequences across 3 nodes: after any prefix, at
     // least one node holds a valid copy, and a read on any node after a
     // write sees the written value (single-tensor model).
-    let mut rng = Rng::new(7);
-    for _ in 0..CASES {
+    run_cases(7, CASES, |seed| {
+        let mut rng = Rng::new(seed);
         let reg = compar::taskrt::DataRegistry::new();
         let h = reg.register(Tensor::vector(vec![1.0]));
         for _ in 0..20 {
@@ -164,14 +171,14 @@ fn prop_msi_coherence_never_loses_data() {
                 assert_eq!(tb == 0, valid.contains(&n));
             }
         }
-    }
+    });
 }
 
 #[test]
 fn prop_perfmodel_regression_recovers_exponent() {
     // for random power laws t = a*n^b, the fitted exponent is close
-    let mut rng = Rng::new(99);
-    for _ in 0..CASES {
+    run_cases(99, CASES, |seed| {
+        let mut rng = Rng::new(seed);
         let a = 10f64.powf(-9.0 + 3.0 * rng.next_f32() as f64);
         let b = 1.0 + 2.5 * rng.next_f32() as f64;
         let mut m = compar::taskrt::perfmodel::VariantModel::default();
@@ -183,14 +190,13 @@ fn prop_perfmodel_regression_recovers_exponent() {
         let (fa, fb) = m.regression().unwrap();
         assert!((fb - b).abs() < 0.02, "exponent {fb} vs {b}");
         assert!((fa - a).abs() / a < 0.1, "coeff {fa} vs {a}");
-    }
+    });
 }
 
 #[test]
 fn prop_scheduler_eligibility_is_safe() {
     // whatever the scheduler does, the executed variant must be
     // arch-compatible and honor force_variant
-    let mut rng = Rng::new(5);
     for &sched in &[
         SchedPolicy::Eager,
         SchedPolicy::Random,
@@ -213,7 +219,8 @@ fn prop_scheduler_eligibility_is_safe() {
                 .with_native("omp", Arch::Cpu, Arc::new(|_| Ok(())))
                 .with_native("seq", Arch::Cpu, Arc::new(|_| Ok(()))),
         );
-        for _ in 0..20 {
+        run_cases(5, 20, |seed| {
+            let mut rng = Rng::new(seed);
             let h = rt.register_data(Tensor::vector(vec![0.0]));
             let forced = match rng.below(3) {
                 0 => Some("omp"),
@@ -231,7 +238,7 @@ fn prop_scheduler_eligibility_is_safe() {
                 assert_eq!(r.variant, f, "{sched:?} ignored forced variant");
             }
             assert!(r.variant == "omp" || r.variant == "seq");
-        }
+        });
     }
 }
 
@@ -239,7 +246,6 @@ fn prop_scheduler_eligibility_is_safe() {
 fn prop_precompiler_passthrough_is_lossless() {
     // random C-ish sources with NO compar directives must transform to
     // themselves
-    let mut rng = Rng::new(12);
     let fragments = [
         "int x = 42;",
         "/* comment with #pragma omp */",
@@ -250,7 +256,8 @@ fn prop_precompiler_passthrough_is_lossless() {
         "char *s = \"#pragma compar in a string\";",
         "",
     ];
-    for _ in 0..CASES {
+    run_cases(12, CASES, |seed| {
+        let mut rng = Rng::new(seed);
         let n = 1 + rng.below(12);
         let src: String = (0..n)
             .map(|_| fragments[rng.below(fragments.len())])
@@ -259,13 +266,13 @@ fn prop_precompiler_passthrough_is_lossless() {
             + "\n";
         let out = compar::compar::codegen::c_glue::transform_source(&src);
         assert_eq!(out, src, "passthrough altered plain source");
-    }
+    });
 }
 
 #[test]
 fn prop_tensor_error_metrics_sane() {
-    let mut rng = Rng::new(31);
-    for _ in 0..CASES {
+    run_cases(31, CASES, |seed| {
+        let mut rng = Rng::new(seed);
         let n = 1 + rng.below(64);
         let data = rng.vec_f32(n, -10.0, 10.0);
         let t = Tensor::vector(data.clone());
@@ -278,18 +285,18 @@ fn prop_tensor_error_metrics_sane() {
         d2[k] += 1.0;
         let t2 = Tensor::vector(d2);
         assert!(t.max_abs_diff(&t2) >= 1.0);
-    }
+    });
 }
 
 #[test]
 fn prop_generated_directive_programs_always_compile() {
     // grammar-directed generator: every syntactically valid program the
     // generator emits must pass the full front-end + codegen
-    let mut rng = Rng::new(2718);
     let targets = ["cuda", "openmp", "seq", "opencl", "blas", "cublas"];
     let types = ["int", "float*", "double*", "char"];
     let modes = ["read", "write", "readwrite"];
-    for case in 0..CASES {
+    run_cases(2718, CASES, |seed| {
+        let mut rng = Rng::new(seed);
         let mut src = String::from("#pragma compar include\n");
         let n_ifaces = 1 + rng.below(4);
         for f in 0..n_ifaces {
@@ -322,80 +329,80 @@ fn prop_generated_directive_programs_always_compile() {
         }
         src.push_str("#pragma compar initialize\n#pragma compar terminate\n");
         let out = compar::compar::compile(&src, "gen.c")
-            .unwrap_or_else(|e| panic!("case {case}:\n{src}\n{e:#}"));
+            .unwrap_or_else(|e| panic!("seed {seed:#x}:\n{src}\n{e:#}"));
         assert_eq!(out.c_units.len(), n_ifaces);
-    }
+    });
 }
 
 #[test]
 fn prop_priority_order_on_single_worker() {
     // with one worker and a blocked queue, strictly higher-priority
     // tasks must run before lower ones
-    let rt = Runtime::new(
-        Config {
-            ncpu: 1,
-            ncuda: 0,
-            sched: SchedPolicy::Dmda,
-            ..Config::default()
-        },
-        None,
-    )
-    .unwrap();
-    let order = Arc::new(Mutex::new(Vec::new()));
-    let o2 = order.clone();
-    let gate = Arc::new(Mutex::new(()));
-    let cl = rt.register_codelet(
-        Codelet::new("ordered", "sort", vec![AccessMode::Read]).with_native(
-            "omp",
-            Arch::Cpu,
-            Arc::new(move |b| {
-                o2.lock().unwrap().push(b.size);
-                Ok(())
-            }),
-        ),
-    );
-    // hold the worker with a sleeper so the queue builds up
-    let guard = gate.lock().unwrap();
-    let g2 = gate.clone();
-    let sleeper = rt.register_codelet(
-        Codelet::new("sleeper", "sort", vec![AccessMode::Read]).with_native(
-            "omp",
-            Arch::Cpu,
-            Arc::new(move |_| {
-                drop(g2.lock().unwrap());
-                Ok(())
-            }),
-        ),
-    );
-    let h = rt.register_data(Tensor::vector(vec![0.0]));
-    rt.submit(TaskSpec::new(sleeper, vec![h], 0)).unwrap();
-    std::thread::sleep(std::time::Duration::from_millis(30));
-    // enqueue in mixed priority order while the worker is blocked
-    let mut rng = Rng::new(4);
-    let mut expect: Vec<(i32, usize)> = Vec::new();
-    for i in 0..12 {
-        let h = rt.register_data(Tensor::vector(vec![0.0]));
-        let pri = rng.below(3) as i32;
-        rt.submit(
-            TaskSpec::new(cl.clone(), vec![h], 100 + i).with_priority(pri),
+    run_cases(4, 2, |seed| {
+        let rt = Runtime::new(
+            Config {
+                ncpu: 1,
+                ncuda: 0,
+                sched: SchedPolicy::Dmda,
+                ..Config::default()
+            },
+            None,
         )
         .unwrap();
-        expect.push((pri, 100 + i));
-    }
-    drop(guard); // release the worker
-    rt.wait_all().unwrap();
-    let got = order.lock().unwrap().clone();
-    // expected: stable sort by descending priority
-    let mut want = expect.clone();
-    want.sort_by_key(|(p, _)| std::cmp::Reverse(*p));
-    let want: Vec<usize> = want.into_iter().map(|(_, s)| s).collect();
-    assert_eq!(got, want, "priority order violated");
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let o2 = order.clone();
+        let gate = Arc::new(Mutex::new(()));
+        let cl = rt.register_codelet(
+            Codelet::new("ordered", "sort", vec![AccessMode::Read]).with_native(
+                "omp",
+                Arch::Cpu,
+                Arc::new(move |b| {
+                    o2.lock().unwrap().push(b.size);
+                    Ok(())
+                }),
+            ),
+        );
+        // hold the worker with a sleeper so the queue builds up
+        let guard = gate.lock().unwrap();
+        let g2 = gate.clone();
+        let sleeper = rt.register_codelet(
+            Codelet::new("sleeper", "sort", vec![AccessMode::Read]).with_native(
+                "omp",
+                Arch::Cpu,
+                Arc::new(move |_| {
+                    drop(g2.lock().unwrap());
+                    Ok(())
+                }),
+            ),
+        );
+        let h = rt.register_data(Tensor::vector(vec![0.0]));
+        rt.submit(TaskSpec::new(sleeper, vec![h], 0)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        // enqueue in mixed priority order while the worker is blocked
+        let mut rng = Rng::new(seed);
+        let mut expect: Vec<(i32, usize)> = Vec::new();
+        for i in 0..12 {
+            let h = rt.register_data(Tensor::vector(vec![0.0]));
+            let pri = rng.below(3) as i32;
+            rt.submit(TaskSpec::new(cl.clone(), vec![h], 100 + i).with_priority(pri))
+                .unwrap();
+            expect.push((pri, 100 + i));
+        }
+        drop(guard); // release the worker
+        rt.wait_all().unwrap();
+        let got = order.lock().unwrap().clone();
+        // expected: stable sort by descending priority
+        let mut want = expect.clone();
+        want.sort_by_key(|(p, _)| std::cmp::Reverse(*p));
+        let want: Vec<usize> = want.into_iter().map(|(_, s)| s).collect();
+        assert_eq!(got, want, "priority order violated");
+    });
 }
 
 #[test]
 fn prop_explicit_deps_compose_with_implicit() {
-    let mut rng = Rng::new(77);
-    for _ in 0..6 {
+    run_cases(77, 6, |seed| {
+        let mut rng = Rng::new(seed);
         let rt = Runtime::new(
             Config {
                 ncpu: 2,
@@ -433,5 +440,140 @@ fn prop_explicit_deps_compose_with_implicit() {
         let got = log.lock().unwrap().clone();
         let want: Vec<usize> = (0..n).collect();
         assert_eq!(got, want, "explicit dependency chain violated");
-    }
+    });
+}
+
+// --------------------------------------------------- shard retirement
+// Driven through compar::model::ShardTableModel, which wraps the REAL
+// router ShardState flags and the real placement::pick — these are
+// properties of the production placement code, not of a re-model.
+
+const ALL_PLACEMENTS: &[PlacementKind] = &[
+    PlacementKind::RoundRobin,
+    PlacementKind::LeastLoaded,
+    PlacementKind::Calibrated,
+];
+
+#[test]
+fn prop_shard_indices_stable_across_retirement() {
+    // the table is append-only and retirement is terminal: under any
+    // spawn/retire/place/complete interleaving, indices never shift, a
+    // retired shard stays retired-and-unavailable forever, and the
+    // pending map always resolves (ShardTableModel::check)
+    run_cases(0x57ab1e, CASES, |seed| {
+        let mut rng = Rng::new(seed);
+        let mut sh = ShardTableModel::new();
+        let mut ever_retired: Vec<usize> = Vec::new();
+        for _ in 0..24 {
+            match rng.below(5) {
+                0 => {
+                    sh.spawn();
+                }
+                1 => {
+                    let i = rng.below(sh.len());
+                    sh.retire(i).unwrap();
+                    ever_retired.push(i);
+                }
+                2 => {
+                    let _ = sh.place(ALL_PLACEMENTS[rng.below(3)], "matmul", 64);
+                }
+                3 => {
+                    let _ = sh.complete(rng.below(sh.pending_len().max(1)));
+                }
+                _ => {
+                    let i = rng.below(sh.len());
+                    sh.set_load(i, rng.below(8) as u64, rng.below(8) as u64)
+                        .unwrap();
+                }
+            }
+            sh.check().unwrap_or_else(|e| panic!("{e}"));
+            for &i in &ever_retired {
+                assert!(sh.retired(i), "shard {i} un-retired itself");
+                assert!(!sh.available(i), "retired shard {i} became available");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_retired_shards_never_placed() {
+    // under every placement policy and any load pattern, a retired
+    // shard is never chosen; with the whole table retired, placement
+    // reports "no shard available" instead of resurrecting one
+    run_cases(0x2e71, CASES, |seed| {
+        let mut rng = Rng::new(seed);
+        let mut sh = ShardTableModel::new();
+        for _ in 0..(1 + rng.below(4)) {
+            sh.spawn();
+        }
+        for i in 0..sh.len() {
+            sh.set_load(i, rng.below(16) as u64, rng.below(16) as u64)
+                .unwrap();
+        }
+        let mut live = sh.len();
+        for _ in 0..rng.below(sh.len()) {
+            let i = rng.below(sh.len());
+            if !sh.retired(i) {
+                live -= 1;
+            }
+            sh.retire(i).unwrap();
+        }
+        for &kind in ALL_PLACEMENTS {
+            for _ in 0..6 {
+                let placed = sh.place(kind, "matmul", 64);
+                assert_eq!(
+                    placed.is_ok(),
+                    live > 0,
+                    "{kind:?}: placement with {live} live shard(s) returned {placed:?}"
+                );
+            }
+        }
+        // the corrupt latch inside place() fires if any pick landed on
+        // an unavailable shard — check() surfaces it
+        sh.check().unwrap_or_else(|e| panic!("{e}"));
+        while live > 0 {
+            let i = (0..sh.len()).find(|&i| !sh.retired(i)).unwrap();
+            sh.retire(i).unwrap();
+            live -= 1;
+        }
+        for &kind in ALL_PLACEMENTS {
+            assert!(
+                sh.place(kind, "matmul", 64).is_err(),
+                "{kind:?} placed on a fully retired table"
+            );
+        }
+        sh.check().unwrap_or_else(|e| panic!("{e}"));
+    });
+}
+
+#[test]
+fn prop_pending_map_survives_retirement() {
+    // requests routed before a retirement stay resolvable: retiring
+    // shards (even the ones the requests sit on) never invalidates or
+    // reorders the pending map, and every request completes exactly once
+    run_cases(0x9e4d, CASES, |seed| {
+        let mut rng = Rng::new(seed);
+        let mut sh = ShardTableModel::new();
+        for _ in 0..(1 + rng.below(3)) {
+            sh.spawn();
+        }
+        let k = 1 + rng.below(8);
+        let mut reqs = Vec::new();
+        for _ in 0..k {
+            reqs.push(sh.place(ALL_PLACEMENTS[rng.below(3)], "matmul", 64).unwrap());
+        }
+        for _ in 0..rng.below(sh.len() + 1) {
+            sh.retire(rng.below(sh.len())).unwrap();
+        }
+        sh.check().unwrap_or_else(|e| panic!("{e}"));
+        let mut done = Vec::new();
+        while sh.pending_len() > 0 {
+            let pick = rng.below(sh.pending_len());
+            done.push(sh.complete(pick).unwrap_or_else(|e| panic!("{e}")));
+            sh.check().unwrap_or_else(|e| panic!("{e}"));
+        }
+        done.sort_unstable();
+        reqs.sort_unstable();
+        assert_eq!(done, reqs, "requests lost or duplicated across retirement");
+    });
 }
