@@ -150,6 +150,33 @@ wait_port 7360
 wait "$ROUTER" "$SHARD1" "$SHARD2"
 trap - EXIT
 
+echo "== obs smoke (v9 metrics scrapes mid-serve, both transport lanes) =="
+# two loadgen runs against one live server per transport×framing lane,
+# each writing a compar-obs snapshot through a live connection before
+# the server drains; `bench validate` gates every histogram's
+# bucket-sum consistency plus the e2e-count/success reconcile, and
+# `--prev` gates counter monotonicity between the two scrapes
+for lane in "threads ndjson 7363" "epoll binary 7364"; do
+  read -r OBS_TP OBS_FR OBS_PORT <<<"$lane"
+  OBS1="$(mktemp)"; OBS2="$(mktemp)"; OBS_SRV=""
+  cleanup_obs() { kill "$OBS_SRV" 2>/dev/null || true; rm -f "$OBS1" "$OBS2"; }
+  trap cleanup_obs EXIT
+  "$COMPAR" serve --addr "127.0.0.1:${OBS_PORT}" --ncpu 2 \
+    --transport "$OBS_TP" --audit-cap 1024 &
+  OBS_SRV=$!
+  wait_port "$OBS_PORT"
+  "$COMPAR" loadgen --addr "127.0.0.1:${OBS_PORT}" --clients 2 --requests 6 \
+    --app matmul --size 32 --framing "$OBS_FR" --metrics-out "$OBS1"
+  "$COMPAR" loadgen --addr "127.0.0.1:${OBS_PORT}" --clients 2 --requests 6 \
+    --app matmul --size 32 --framing "$OBS_FR" --metrics-out "$OBS2"
+  "$COMPAR" bench validate "$OBS1"
+  "$COMPAR" bench validate "$OBS2" --prev "$OBS1"
+  "$COMPAR" loadgen --addr "127.0.0.1:${OBS_PORT}" --shutdown
+  wait "$OBS_SRV"
+  cleanup_obs
+  trap - EXIT
+done
+
 echo "== bench record schema (fresh record + repo baseline) =="
 tmp_bench="$(mktemp)"
 cargo run --release --quiet -- loadgen \

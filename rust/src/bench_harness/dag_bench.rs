@@ -84,6 +84,7 @@ fn pipeline(id: u64, nodes: usize, mode: Option<&str>) -> SubmitGraphReq {
         nodes,
         ctx: None,
         mode: mode.map(str::to_string),
+        trace: 0,
     }
 }
 
@@ -125,6 +126,7 @@ pub fn run(transport: TransportKind, framing: Framing, smoke: bool) -> Result<Da
                 seed: 7 + i as u64,
                 variant: None,
                 verify: false,
+                trace: 0,
             })?;
             let _ = c.quit();
             Ok(())

@@ -344,6 +344,8 @@ fn contended_run(kind: &SelectorKind, steps: usize) -> ContendedOutcome {
         chosen_impl: None,
         est_cost_ns: 0,
         tag: 0,
+        trace: 0,
+        enqueued_ns: 0,
     };
 
     let mut regret = 0.0;

@@ -23,7 +23,11 @@ use crate::util::stats::fmt_time;
 /// config.framing) plus connection fan-out stats (load.connections,
 /// load.connect_failures, load.connect_p50_s/p99_s), so threaded and
 /// epoll measurements are never compared as if they were one lane.
-pub const BENCH_SCHEMA: u64 = 4;
+/// v5: server counters gained the v9 monotonic totals
+/// (tasks_completed, bytes_transferred, batches_fused, decisions) and
+/// the "compar-obs" metrics-snapshot kind (`loadgen --metrics-out`)
+/// landed.
+pub const BENCH_SCHEMA: u64 = 5;
 
 /// Write a bench record atomically (temp file + rename), so a reader —
 /// or a crashed run — never observes a half-written record and the
@@ -122,6 +126,20 @@ pub fn to_json(
         "tasks_executed".into(),
         Json::Num(stats.tasks_executed as f64),
     );
+    // v5: the monotonic totals (vs the point-in-time gauges above)
+    srv.insert(
+        "tasks_completed".into(),
+        Json::Num(stats.tasks_completed as f64),
+    );
+    srv.insert(
+        "bytes_transferred".into(),
+        Json::Num(stats.bytes_transferred as f64),
+    );
+    srv.insert(
+        "batches_fused".into(),
+        Json::Num(stats.batches_fused as f64),
+    );
+    srv.insert("decisions".into(), Json::Num(stats.decisions as f64));
     let mut ctx_tasks = BTreeMap::new();
     for (k, v) in &stats.ctx_tasks {
         ctx_tasks.insert(k.clone(), Json::Num(*v as f64));

@@ -49,8 +49,8 @@ use super::gossip;
 use super::placement::{self, PlacementKind};
 use crate::autoscale::TokenBucket;
 use crate::serve::protocol::{
-    self, AutoscaleResp, Request, Response, ShardDesc, StatsResp, StreamOpenReq, SubmitGraphReq,
-    SubmitReq, PROTOCOL_VERSION,
+    self, AutoscaleResp, DecisionsResp, MetricsResp, Request, Response, ShardDesc, StatsResp,
+    StreamOpenReq, SubmitGraphReq, SubmitReq, TraceResp, PROTOCOL_VERSION,
 };
 use crate::serve::transport::codec::{encode_frame, FrameDecoder, Framing};
 use crate::serve::Client;
@@ -278,6 +278,11 @@ struct RouterShared {
     autoscale_on: AtomicBool,
     shards_spawned: AtomicU64,
     shards_retired: AtomicU64,
+    /// v9 observability: trace ids the router mints for requests that
+    /// arrive untraced, so the id rides client → router → shard. Seeded
+    /// past the 32-bit range so router-minted ids cannot collide with
+    /// ids a shard mints for its own direct clients.
+    next_trace: AtomicU64,
     started: Instant,
 }
 
@@ -372,6 +377,7 @@ impl Router {
             autoscale_on: AtomicBool::new(opts.autoscale.is_some()),
             shards_spawned: AtomicU64::new(0),
             shards_retired: AtomicU64::new(0),
+            next_trace: AtomicU64::new(1 << 32),
             started: Instant::now(),
         });
         let accept = {
@@ -1082,6 +1088,40 @@ fn handle_frame(sess: &Arc<Session>, value: &Json) -> bool {
             send_line(&sess.reply, &Response::Stats(cluster_stats(router)));
             true
         }
+        Request::Metrics { format } => {
+            // v9: aggregate every reachable shard's registry scrape,
+            // namespacing each instrument as `shardN/<name>` — the
+            // Prometheus renderer turns that prefix into a shard label
+            let text = match format.as_deref() {
+                None | Some("json") => false,
+                Some("prometheus") | Some("text") => true,
+                Some(other) => {
+                    send_line(
+                        &sess.reply,
+                        &Response::Error {
+                            id: None,
+                            error: format!(
+                                "unknown metrics format '{other}' (want json | prometheus)"
+                            ),
+                        },
+                    );
+                    return true;
+                }
+            };
+            send_line(&sess.reply, &Response::Metrics(cluster_metrics(router, text)));
+            true
+        }
+        Request::Decisions { limit, codelet } => {
+            send_line(
+                &sess.reply,
+                &Response::Decisions(cluster_decisions(router, limit, codelet.as_deref())),
+            );
+            true
+        }
+        Request::DumpTrace => {
+            send_line(&sess.reply, &Response::DumpTrace(cluster_trace(router)));
+            true
+        }
         Request::Contexts => {
             send_line(
                 &sess.reply,
@@ -1204,7 +1244,12 @@ fn resolve_shard(router: &Arc<RouterShared>, name: &str) -> Option<usize> {
 /// Route one submit to a shard, retrying on the next available shard
 /// when the chosen one cannot be reached or written to. Errors only when
 /// every shard has been excluded.
-fn route_submit(sess: &Arc<Session>, req: SubmitReq, exclude: &mut Vec<usize>) -> Result<()> {
+fn route_submit(sess: &Arc<Session>, mut req: SubmitReq, exclude: &mut Vec<usize>) -> Result<()> {
+    // v9: mint the trace id at the first hop so the shard (and its
+    // tasks) inherit it rather than minting a shard-local one
+    if req.trace == 0 {
+        req.trace = sess.router.next_trace.fetch_add(1, Ordering::Relaxed);
+    }
     loop {
         if sess.closing.load(Ordering::SeqCst) {
             bail!("session is closing");
@@ -1306,7 +1351,14 @@ fn route_submit(sess: &Arc<Session>, req: SubmitReq, exclude: &mut Vec<usize>) -
 /// DAG. Uses the first node's (app, size) as the placement key and the
 /// node count as the load hint. Retry mirrors [`route_submit`],
 /// including the post-write registration re-check.
-fn route_graph(sess: &Arc<Session>, req: SubmitGraphReq, exclude: &mut Vec<usize>) -> Result<()> {
+fn route_graph(
+    sess: &Arc<Session>,
+    mut req: SubmitGraphReq,
+    exclude: &mut Vec<usize>,
+) -> Result<()> {
+    if req.trace == 0 {
+        req.trace = sess.router.next_trace.fetch_add(1, Ordering::Relaxed);
+    }
     loop {
         if sess.closing.load(Ordering::SeqCst) {
             bail!("session is closing");
@@ -1393,7 +1445,10 @@ fn route_graph(sess: &Arc<Session>, req: SubmitGraphReq, exclude: &mut Vec<usize
 /// retries other shards only while the *open* cannot be written; after
 /// the grant the stream is pinned and lives or dies with that backend
 /// — its window and credit state cannot be replayed elsewhere.
-fn route_stream_open(sess: &Arc<Session>, req: StreamOpenReq) -> Result<()> {
+fn route_stream_open(sess: &Arc<Session>, mut req: StreamOpenReq) -> Result<()> {
+    if req.trace == 0 {
+        req.trace = sess.router.next_trace.fetch_add(1, Ordering::Relaxed);
+    }
     let mut exclude: Vec<usize> = Vec::new();
     loop {
         if sess.closing.load(Ordering::SeqCst) {
@@ -1735,6 +1790,10 @@ fn cluster_stats(router: &Arc<RouterShared>) -> StatsResp {
         streams: 0,
         plans: 0,
         planned_tasks: 0,
+        tasks_completed: 0,
+        bytes_transferred: 0,
+        batches_fused: 0,
+        decisions: 0,
         slo_ms: 0.0,
         ctx_tasks: BTreeMap::new(),
         ctx_variants: BTreeMap::new(),
@@ -1757,6 +1816,10 @@ fn cluster_stats(router: &Arc<RouterShared>) -> StatsResp {
         agg.streams += stats.streams;
         agg.plans += stats.plans;
         agg.planned_tasks += stats.planned_tasks;
+        agg.tasks_completed += stats.tasks_completed;
+        agg.bytes_transferred += stats.bytes_transferred;
+        agg.batches_fused += stats.batches_fused;
+        agg.decisions += stats.decisions;
         // the cluster-wide effective SLO is the tightest one any shard
         // is currently enforcing (0 = no shard has a target)
         if stats.slo_ms > 0.0 && (agg.slo_ms == 0.0 || stats.slo_ms < agg.slo_ms) {
@@ -1790,4 +1853,126 @@ fn cluster_contexts(router: &Arc<RouterShared>) -> Vec<protocol::CtxDesc> {
         let _ = c.quit();
     }
     out
+}
+
+/// v9: cluster-wide metrics scrape. Every reachable shard's registry is
+/// fetched live and merged into one document with each instrument
+/// namespaced as `shardN/<name>`; the Prometheus text renderer turns
+/// that prefix into a `shard="shardN"` label, so per-shard series stay
+/// distinguishable after aggregation.
+fn cluster_metrics(router: &Arc<RouterShared>, text: bool) -> MetricsResp {
+    let mut counters: BTreeMap<String, Json> = BTreeMap::new();
+    let mut gauges: BTreeMap<String, Json> = BTreeMap::new();
+    let mut histograms: BTreeMap<String, Json> = BTreeMap::new();
+    for (i, shard) in router.shard_list().iter().enumerate() {
+        if shard.retired() || !shard.healthy.load(Ordering::Relaxed) {
+            continue;
+        }
+        let Ok(mut c) = Client::connect_with_deadline(&shard.addr, ADMIN_TIMEOUT) else {
+            continue;
+        };
+        if let Ok(m) = c.metrics(None) {
+            if let Json::Obj(sections) = m.metrics {
+                for (section, dst) in [
+                    ("counters", &mut counters),
+                    ("gauges", &mut gauges),
+                    ("histograms", &mut histograms),
+                ] {
+                    if let Some(Json::Obj(entries)) = sections.get(section) {
+                        for (name, v) in entries {
+                            dst.insert(format!("shard{i}/{name}"), v.clone());
+                        }
+                    }
+                }
+            }
+        }
+        let _ = c.quit();
+    }
+    let mut root = BTreeMap::new();
+    root.insert("counters".into(), Json::Obj(counters));
+    root.insert("gauges".into(), Json::Obj(gauges));
+    root.insert("histograms".into(), Json::Obj(histograms));
+    let metrics = Json::Obj(root);
+    MetricsResp {
+        text: text.then(|| crate::obs::prometheus_from_json(&metrics)),
+        metrics,
+    }
+}
+
+/// v9: cluster-wide selection-decision audit. Each shard's recent slice
+/// is fetched with the caller's limit/filter and concatenated, every
+/// record tagged with the shard it came from; ring counters are summed.
+fn cluster_decisions(
+    router: &Arc<RouterShared>,
+    limit: Option<u64>,
+    codelet: Option<&str>,
+) -> DecisionsResp {
+    let mut total = 0u64;
+    let mut dropped = 0u64;
+    let mut evicted = 0u64;
+    let mut all = Vec::new();
+    for (i, shard) in router.shard_list().iter().enumerate() {
+        if shard.retired() || !shard.healthy.load(Ordering::Relaxed) {
+            continue;
+        }
+        let Ok(mut c) = Client::connect_with_deadline(&shard.addr, ADMIN_TIMEOUT) else {
+            continue;
+        };
+        if let Ok(d) = c.decisions(limit, codelet) {
+            total += d.total;
+            dropped += d.dropped;
+            evicted += d.evicted;
+            if let Json::Arr(recs) = d.decisions {
+                for mut rec in recs {
+                    if let Json::Obj(m) = &mut rec {
+                        m.insert("shard".into(), Json::Str(format!("shard{i}")));
+                    }
+                    all.push(rec);
+                }
+            }
+        }
+        let _ = c.quit();
+    }
+    DecisionsResp {
+        total,
+        dropped,
+        evicted,
+        decisions: Json::Arr(all),
+    }
+}
+
+/// v9: cluster-wide trace dump. Shard span rings are concatenated into
+/// one Chrome Trace document with each event's `pid` rewritten to the
+/// shard index, so the viewer shows one process group per shard.
+fn cluster_trace(router: &Arc<RouterShared>) -> TraceResp {
+    let mut events = Vec::new();
+    let mut count = 0u64;
+    for (i, shard) in router.shard_list().iter().enumerate() {
+        if shard.retired() || !shard.healthy.load(Ordering::Relaxed) {
+            continue;
+        }
+        let Ok(mut c) = Client::connect_with_deadline(&shard.addr, ADMIN_TIMEOUT) else {
+            continue;
+        };
+        if let Ok(t) = c.dump_trace() {
+            count += t.events;
+            if let Json::Obj(mut m) = t.trace {
+                if let Some(Json::Arr(evs)) = m.remove("traceEvents") {
+                    for mut ev in evs {
+                        if let Json::Obj(em) = &mut ev {
+                            em.insert("pid".into(), Json::Num(i as f64));
+                        }
+                        events.push(ev);
+                    }
+                }
+            }
+        }
+        let _ = c.quit();
+    }
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".into(), Json::Arr(events));
+    TraceResp {
+        events: count,
+        trace: Json::Obj(root),
+    }
 }

@@ -32,6 +32,12 @@
 //!   assigns variants jointly over whole task DAGs before release,
 //!   eliding producer→consumer transfers and composing same-arch spans
 //!   (Kessler & Dastgeer's "Optimized Composition").
+//! * [`obs`] — the live observability plane: a lock-cheap metrics
+//!   registry (counters / gauges / latency histograms, JSON +
+//!   Prometheus exposition), cross-layer request tracing with a live
+//!   span ring (`dump_trace`), and the selection-decision audit log
+//!   (`decisions`) — protocol v9, aggregated cluster-wide by the
+//!   router.
 //! * [`model`] — the verified concurrency core: a pure state-machine
 //!   model of the runtime's contexts / migration / eviction / shard
 //!   retirement, a deterministic generative explorer with shrinking,
@@ -46,6 +52,7 @@ pub mod bench_harness;
 pub mod cluster;
 pub mod compar;
 pub mod model;
+pub mod obs;
 pub mod plan;
 pub mod runtime;
 pub mod serve;

@@ -5,7 +5,7 @@
 //! compar compile <file.compar.c> [--out-dir DIR]      run the pre-compiler
 //! compar run --app A --size N [options]               run one benchmark task
 //! compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|autoscale|stream|dag|all>
-//! compar bench validate <FILE>                        check a bench JSON record
+//! compar bench validate <FILE> [--prev FILE]          check a bench JSON record
 //! compar calibrate --app A [--sizes a,b,c]            warm the perf models
 //! compar serve [--addr A --contexts cpu:4,gpu:1 ...]  multi-tenant component service
 //! compar serve --autoscale [--scale-min/-max --slo-ms --cooldown-ms]  elastic contexts
@@ -15,6 +15,7 @@
 //! compar loadgen --shards N ...                       drive an in-process cluster
 //! compar loadgen --profile burst:H:L:P                time-varying offered load
 //! compar loadgen --profile stream:R:KB:S              v6 stream sessions (credit-gated)
+//! compar loadgen --metrics-out FILE                   v9 post-run metrics snapshot
 //! compar verify model [--smoke|--seqs N --ops K ...]  generative model checking
 //! compar list                                         inventory: apps, variants, artifacts
 //! ```
@@ -127,10 +128,11 @@ fn print_usage() {
          \x20 compar bench <fig1a|fig1b|fig1c|fig1d|fig1e|table1f|selection|cluster|autoscale|stream|dag|all> [--reps R] [--max-measured N] [--smoke]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 (selection: [--out FILE]; cluster: [--shards N] [--placement PL];\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 dag: [--transport epoll|threads] [--framing ndjson|binary] [--out FILE])\n\
-         \x20 compar bench validate <FILE>\n\
+         \x20 compar bench validate <FILE> [--prev FILE]\n\
          \x20 compar calibrate --app APP [--sizes a,b,c]\n\
          \x20 compar serve [--addr HOST:PORT] [--contexts NAME:N[:POLICY],...] [--sched S] [--selector P] [--cap N]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--batch-window-us U] [--max-batch B] [--ncpu N] [--ncuda N] [--transport epoll|threads]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--audit-cap N] [--trace-cap N]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--autoscale [--scale-min N|name=N,..] [--scale-max N|name=N,..] [--slo-ms F]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--cooldown-ms T] [--scale-period-ms T] [--scale-high F] [--scale-low F]]\n\
          \x20 compar route --shards HOST:PORT,... [--listen HOST:PORT] [--placement PL]\n\
@@ -145,6 +147,7 @@ fn print_usage() {
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--profile burst:<high_rps>:<low_rps>:<period_ms>]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--profile stream:<rate>:<chunk_kb>:<stages> [--slo-ms F] [--window W] [--slide S]]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--framing ndjson|binary] [--connections N] [--transport epoll|threads]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--metrics-out FILE]\n\
          \x20 compar list\n\
          \n\
          Selection policies P: greedy | calibrating | epsilon[:E] | epsilon-decayed[:E] | contextual | planned | forced:VARIANT\n\
@@ -279,8 +282,8 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     if which == "validate" {
         let file = pos
             .get(1)
-            .ok_or_else(|| anyhow!("usage: compar bench validate <FILE>"))?;
-        return validate_bench_record(file);
+            .ok_or_else(|| anyhow!("usage: compar bench validate <FILE> [--prev FILE]"))?;
+        return validate_bench_record(file, opts.get("prev").map(String::as_str));
     }
     let reps: usize = opts.get("reps").map(|v| v.parse()).transpose()?.unwrap_or(3);
     let max_measured: usize = opts
@@ -528,11 +531,13 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// `compar bench validate FILE`: check a bench JSON record against the
-/// current schema (ci.sh runs this on BENCH_serve.json and on freshly
-/// generated records, so the pending-toolchain placeholder flow cannot
-/// rot silently).
-fn validate_bench_record(file: &str) -> Result<()> {
+/// `compar bench validate FILE [--prev FILE]`: check a bench JSON
+/// record against the current schema (ci.sh runs this on
+/// BENCH_serve.json and on freshly generated records, so the
+/// pending-toolchain placeholder flow cannot rot silently). For
+/// `compar-obs` metrics snapshots, `--prev` additionally gates counter
+/// monotonicity against an earlier scrape of the same server.
+fn validate_bench_record(file: &str, prev: Option<&str>) -> Result<()> {
     use compar::util::json::Json;
     let text = std::fs::read_to_string(file).with_context(|| format!("reading {file}"))?;
     let v = compar::util::json::parse(text.trim())
@@ -688,10 +693,105 @@ fn validate_bench_record(file: &str) -> Result<()> {
                         }
                     }
                 }
+                "compar-obs" => {
+                    // v9 loadgen --metrics-out snapshot: a full registry
+                    // scrape plus the loadgen's own success count
+                    let m = v
+                        .get("metrics")
+                        .ok_or_else(|| anyhow!("{file}: missing 'metrics' scrape"))?;
+                    for k in ["counters", "gauges", "histograms"] {
+                        if m.get(k).and_then(Json::as_obj).is_none() {
+                            bail!("{file}: metrics scrape missing '{k}'");
+                        }
+                    }
+                    // every histogram must be internally consistent: a
+                    // bucket ladder of N bounds plus one overflow bucket
+                    // whose counts sum exactly to `count`
+                    for (name, h) in m.get("histograms").and_then(Json::as_obj).unwrap() {
+                        let le = h
+                            .get("le")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("{file}: histogram {name} missing 'le'"))?;
+                        let counts = h.get("counts").and_then(Json::as_arr).ok_or_else(|| {
+                            anyhow!("{file}: histogram {name} missing 'counts'")
+                        })?;
+                        if counts.len() != le.len() + 1 {
+                            bail!(
+                                "{file}: histogram {name} has {} buckets for {} \
+                                 bounds (want bounds+1)",
+                                counts.len(),
+                                le.len()
+                            );
+                        }
+                        let count = h
+                            .get("count")
+                            .and_then(Json::as_f64)
+                            .ok_or_else(|| anyhow!("{file}: histogram {name} missing 'count'"))?;
+                        let bucket_sum: f64 = counts.iter().filter_map(Json::as_f64).sum();
+                        if (bucket_sum - count).abs() > 0.5 {
+                            bail!(
+                                "{file}: histogram {name} bucket counts sum to \
+                                 {bucket_sum}, count says {count}"
+                            );
+                        }
+                    }
+                    let ok = v
+                        .get("requests_ok")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("{file}: missing 'requests_ok'"))?;
+                    // the end-to-end histogram is observed once per
+                    // successful request, so its count must cover the
+                    // loadgen's successes (it may exceed them when other
+                    // clients also drove the server)
+                    if let Some(count) = m
+                        .get("histograms")
+                        .and_then(|h| h.get("serve_e2e_seconds"))
+                        .and_then(|h| h.get("count"))
+                        .and_then(Json::as_f64)
+                    {
+                        if count + 0.5 < ok {
+                            bail!(
+                                "{file}: serve_e2e_seconds count {count} does not \
+                                 cover requests_ok {ok}"
+                            );
+                        }
+                    }
+                    // --prev: an earlier scrape of the same server; every
+                    // counter it knew must not have gone backwards
+                    if let Some(pfile) = prev {
+                        let ptext = std::fs::read_to_string(pfile)
+                            .with_context(|| format!("reading {pfile}"))?;
+                        let pv = compar::util::json::parse(ptext.trim())
+                            .map_err(|e| anyhow!("{pfile}: invalid json: {e}"))?;
+                        if pv.get("bench").and_then(Json::as_str) != Some("compar-obs") {
+                            bail!("{pfile}: --prev must name a compar-obs record");
+                        }
+                        let pc = pv
+                            .get("metrics")
+                            .and_then(|pm| pm.get("counters"))
+                            .and_then(Json::as_obj)
+                            .ok_or_else(|| anyhow!("{pfile}: missing metrics.counters"))?;
+                        let cc = m.get("counters").and_then(Json::as_obj).unwrap();
+                        for (name, pval) in pc {
+                            let pval = pval.as_f64().unwrap_or(0.0);
+                            let cur = cc.get(name).and_then(Json::as_f64).unwrap_or(f64::MIN);
+                            if cur + 1e-9 < pval {
+                                bail!(
+                                    "{file}: counter {name} went backwards vs \
+                                     {pfile}: {pval} -> {cur}"
+                                );
+                            }
+                        }
+                        println!("{file}: counters monotonic vs {pfile}");
+                    }
+                }
                 other => bail!("{file}: unknown bench kind '{other}'"),
             }
         }
         other => bail!("{file}: unknown status '{other}'"),
+    }
+    if prev.is_some() && bench != "compar-obs" {
+        bail!("{file}: --prev is only supported for compar-obs records");
     }
     println!("{file}: valid {bench} record ({status})");
     Ok(())
@@ -805,6 +905,13 @@ fn serve_options_from(opts: &HashMap<String, String>) -> Result<compar::serve::S
     }
     if let Some(v) = opts.get("transport") {
         so.transport = compar::serve::TransportKind::parse(v).context("--transport")?;
+    }
+    // v9 observability rings (0 disables retention; recording still counts)
+    if let Some(v) = opts.get("audit-cap") {
+        so.audit_cap = v.parse().context("--audit-cap")?;
+    }
+    if let Some(v) = opts.get("trace-cap") {
+        so.trace_cap = v.parse().context("--trace-cap")?;
     }
     so.autoscale = autoscale_options_from(opts)?;
     Ok(so)
@@ -977,6 +1084,9 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
     if let Some(v) = opts.get("connections") {
         lg.connections = v.parse().context("--connections")?;
     }
+    if let Some(v) = opts.get("metrics-out") {
+        lg.metrics_out = Some(v.clone());
+    }
     // the transport lane drives the in-process server (via
     // serve_options_from) and labels the bench record either way
     let transport = match opts.get("transport") {
@@ -1039,6 +1149,9 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
     );
     if report.errors > 0 {
         bail!("{} request(s) failed", report.errors);
+    }
+    if let Some(p) = &lg.metrics_out {
+        println!("wrote metrics snapshot {p}");
     }
     if let Some(out) = opts.get("out") {
         let json = compar::bench_harness::serve_bench::to_json(

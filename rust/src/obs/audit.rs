@@ -1,0 +1,348 @@
+//! The selection-decision audit log: a bounded ring of
+//! [`DecisionRecord`]s, one per `SelectionPolicy::select` call, each
+//! capturing the `SelectionQuery` snapshot the policy saw (size band,
+//! load band, queue depth, residency penalty), the per-variant
+//! candidate estimates, the chosen variant and a reason tag. The ring
+//! answers the protocol-v9 `decisions` request; its totals feed
+//! `stats` and the metrics scrape.
+//!
+//! The recording side sits on the selection hot path, so it must never
+//! block it: `record` takes the ring lock with `try_lock` and counts a
+//! *drop* instead of waiting when a reader holds it. Overflow evicts
+//! the oldest record and counts an *eviction*; both counters are
+//! exported as metrics so silent loss is visible to scrapers.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Canonical reason tags, in the order policies fall through them.
+/// `reason_index` maps a tag to its slot in the per-reason counters;
+/// unknown tags share the final overflow slot.
+pub const REASON_NAMES: [&str; 7] = [
+    "calibrating",
+    "hint-prior",
+    "explore",
+    "exploit",
+    "contextual-band",
+    "planned-prefer",
+    "forced",
+];
+
+pub fn reason_index(name: &str) -> usize {
+    REASON_NAMES
+        .iter()
+        .position(|r| *r == name)
+        .unwrap_or(REASON_NAMES.len())
+}
+
+/// One audited selection decision.
+#[derive(Debug, Clone)]
+pub struct DecisionRecord {
+    /// Monotonic sequence number, assigned by the ring.
+    pub seq: u64,
+    /// Task id the decision was made for (0 for probe queries).
+    pub task: u64,
+    /// Trace id propagated from the request, 0 if untraced.
+    pub trace: u64,
+    pub codelet: String,
+    /// Scheduling context the query ran under.
+    pub ctx: u64,
+    /// Operand size the policy bucketed.
+    pub size: usize,
+    pub size_band: u32,
+    /// Snapshot load band (0 idle / 1 busy / 2 saturated).
+    pub load_band: u8,
+    /// Snapshot ready-queue depth for the querying context.
+    pub queue_depth: usize,
+    /// Target arch the query was scoped to.
+    pub arch: String,
+    /// Modeled residency/transfer penalty (seconds) the query priced.
+    pub transfer_penalty_secs: f64,
+    /// Per-variant candidate estimates at decision time
+    /// (`None` = uncalibrated).
+    pub candidates: Vec<(String, Option<f64>)>,
+    /// Variant the policy chose.
+    pub chosen: String,
+    /// The chosen variant's estimate, if the policy had one.
+    pub est: Option<f64>,
+    /// Reason tag; one of [`REASON_NAMES`].
+    pub reason: &'static str,
+}
+
+impl DecisionRecord {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("seq".into(), Json::Num(self.seq as f64));
+        m.insert("task".into(), Json::Num(self.task as f64));
+        m.insert("trace".into(), Json::Num(self.trace as f64));
+        m.insert("codelet".into(), Json::Str(self.codelet.clone()));
+        m.insert("ctx".into(), Json::Num(self.ctx as f64));
+        m.insert("size".into(), Json::Num(self.size as f64));
+        m.insert("size_band".into(), Json::Num(self.size_band as f64));
+        m.insert("load_band".into(), Json::Num(self.load_band as f64));
+        m.insert("queue_depth".into(), Json::Num(self.queue_depth as f64));
+        m.insert("arch".into(), Json::Str(self.arch.clone()));
+        m.insert(
+            "transfer_penalty_secs".into(),
+            Json::Num(self.transfer_penalty_secs),
+        );
+        m.insert(
+            "candidates".into(),
+            Json::Arr(
+                self.candidates
+                    .iter()
+                    .map(|(name, est)| {
+                        let mut c = std::collections::BTreeMap::new();
+                        c.insert("variant".into(), Json::Str(name.clone()));
+                        c.insert(
+                            "est".into(),
+                            est.map(Json::Num).unwrap_or(Json::Null),
+                        );
+                        Json::Obj(c)
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert("chosen".into(), Json::Str(self.chosen.clone()));
+        m.insert("est".into(), self.est.map(Json::Num).unwrap_or(Json::Null));
+        m.insert("reason".into(), Json::Str(self.reason.to_string()));
+        Json::Obj(m)
+    }
+}
+
+/// The bounded audit ring. Capacity is runtime-configurable
+/// (`--audit-cap`); capacity 0 disables retention but keeps counting.
+pub struct DecisionAudit {
+    ring: Mutex<VecDeque<DecisionRecord>>,
+    cap: AtomicUsize,
+    next_seq: AtomicU64,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+    evicted: AtomicU64,
+    by_reason: [AtomicU64; REASON_NAMES.len() + 1],
+}
+
+pub const DEFAULT_AUDIT_CAP: usize = 512;
+
+impl Default for DecisionAudit {
+    fn default() -> Self {
+        DecisionAudit::new(DEFAULT_AUDIT_CAP)
+    }
+}
+
+impl DecisionAudit {
+    pub fn new(cap: usize) -> DecisionAudit {
+        DecisionAudit {
+            ring: Mutex::new(VecDeque::new()),
+            cap: AtomicUsize::new(cap),
+            next_seq: AtomicU64::new(1),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            by_reason: Default::default(),
+        }
+    }
+
+    pub fn set_capacity(&self, cap: usize) {
+        self.cap.store(cap, Ordering::Relaxed);
+        if let Ok(mut ring) = self.ring.try_lock() {
+            while ring.len() > cap {
+                ring.pop_front();
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap.load(Ordering::Relaxed)
+    }
+
+    /// Record one decision. Never blocks: a contended ring counts a
+    /// drop, a full ring evicts its oldest entry. Reason and total
+    /// counters are bumped unconditionally so the metrics stay exact
+    /// even when the record itself is shed.
+    pub fn record(&self, mut rec: DecisionRecord) {
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+        self.by_reason[reason_index(rec.reason)].fetch_add(1, Ordering::Relaxed);
+        let cap = self.cap.load(Ordering::Relaxed);
+        if cap == 0 {
+            return;
+        }
+        match self.ring.try_lock() {
+            Ok(mut ring) => {
+                rec.seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+                ring.push_back(rec);
+                while ring.len() > cap {
+                    ring.pop_front();
+                    self.evicted.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Newest-last slice of retained records, optionally filtered by
+    /// codelet name, capped at `limit` (0 = no cap).
+    pub fn recent(&self, limit: usize, codelet: &str) -> Vec<DecisionRecord> {
+        let ring = self.ring.lock().unwrap();
+        let filtered: Vec<DecisionRecord> = ring
+            .iter()
+            .filter(|r| codelet.is_empty() || r.codelet == codelet)
+            .cloned()
+            .collect();
+        let skip = if limit > 0 && filtered.len() > limit {
+            filtered.len() - limit
+        } else {
+            0
+        };
+        filtered.into_iter().skip(skip).collect()
+    }
+
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Per-reason totals as `(tag, count)`, unknown-tag overflow last.
+    pub fn reason_totals(&self) -> Vec<(&'static str, u64)> {
+        let mut out: Vec<(&'static str, u64)> = REASON_NAMES
+            .iter()
+            .enumerate()
+            .map(|(i, name)| (*name, self.by_reason[i].load(Ordering::Relaxed)))
+            .collect();
+        out.push((
+            "other",
+            self.by_reason[REASON_NAMES.len()].load(Ordering::Relaxed),
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn rec(codelet: &str, reason: &'static str) -> DecisionRecord {
+        DecisionRecord {
+            seq: 0,
+            task: 1,
+            trace: 42,
+            codelet: codelet.to_string(),
+            ctx: 0,
+            size: 1024,
+            size_band: 3,
+            load_band: 1,
+            queue_depth: 7,
+            arch: "cuda".into(),
+            transfer_penalty_secs: 1e-4,
+            candidates: vec![("omp".into(), Some(2e-3)), ("cuda".into(), None)],
+            chosen: "omp".into(),
+            est: Some(2e-3),
+            reason,
+        }
+    }
+
+    #[test]
+    fn overflow_evicts_oldest_and_counts() {
+        let a = DecisionAudit::new(4);
+        for i in 0..10 {
+            a.record(rec(&format!("c{i}"), "exploit"));
+        }
+        assert_eq!(a.recorded(), 10);
+        assert_eq!(a.evicted(), 6);
+        let kept = a.recent(0, "");
+        assert_eq!(kept.len(), 4);
+        assert_eq!(kept[0].codelet, "c6", "oldest surviving record");
+        assert_eq!(kept[3].codelet, "c9");
+        // sequence numbers stay monotonic across eviction
+        assert!(kept.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+
+    #[test]
+    fn contended_ring_drops_instead_of_blocking() {
+        let a = Arc::new(DecisionAudit::new(64));
+        // Hold the ring lock from this thread, then record from
+        // another: the recorder must return promptly with a drop.
+        let guard = a.ring.lock().unwrap();
+        let a2 = a.clone();
+        let t = std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            for _ in 0..100 {
+                a2.record(rec("sort", "exploit"));
+            }
+            t0.elapsed()
+        });
+        let took = t.join().unwrap();
+        drop(guard);
+        assert_eq!(a.dropped(), 100);
+        assert_eq!(a.recorded(), 100, "totals still counted");
+        assert!(
+            took < std::time::Duration::from_millis(500),
+            "recording under contention must not block ({took:?})"
+        );
+        assert!(a.recent(0, "").is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_disables_retention_not_counting() {
+        let a = DecisionAudit::new(0);
+        a.record(rec("sort", "forced"));
+        assert_eq!(a.recorded(), 1);
+        assert!(a.recent(0, "").is_empty());
+        assert_eq!(a.evicted(), 0);
+    }
+
+    #[test]
+    fn recent_filters_by_codelet_and_limits() {
+        let a = DecisionAudit::new(32);
+        for _ in 0..3 {
+            a.record(rec("sort", "exploit"));
+            a.record(rec("scale", "explore"));
+        }
+        assert_eq!(a.recent(0, "sort").len(), 3);
+        assert_eq!(a.recent(2, "").len(), 2);
+        let last = a.recent(1, "scale");
+        assert_eq!(last.len(), 1);
+        assert_eq!(last[0].codelet, "scale");
+    }
+
+    #[test]
+    fn reason_totals_track_tags_and_overflow() {
+        let a = DecisionAudit::new(8);
+        a.record(rec("s", "exploit"));
+        a.record(rec("s", "exploit"));
+        a.record(rec("s", "calibrating"));
+        a.record(rec("s", "mystery-tag"));
+        let totals: std::collections::BTreeMap<_, _> =
+            a.reason_totals().into_iter().collect();
+        assert_eq!(totals["exploit"], 2);
+        assert_eq!(totals["calibrating"], 1);
+        assert_eq!(totals["other"], 1);
+        assert_eq!(reason_index("contextual-band"), 4);
+    }
+
+    #[test]
+    fn record_json_shape() {
+        let r = rec("sort", "contextual-band");
+        let j = r.to_json();
+        assert_eq!(j.get("codelet").and_then(Json::as_str), Some("sort"));
+        assert_eq!(j.get("load_band").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("reason").and_then(Json::as_str), Some("contextual-band"));
+        let cands = j.get("candidates").and_then(Json::as_arr).unwrap();
+        assert_eq!(cands.len(), 2);
+        assert_eq!(cands[1].get("est"), Some(&Json::Null));
+    }
+}

@@ -1,0 +1,266 @@
+//! Live observability plane: metrics registry, cross-layer request
+//! tracing, and the selection-decision audit log.
+//!
+//! Everything the running system wants to prove about itself flows
+//! through one [`Obs`] handle, owned by the `taskrt::Runtime` and
+//! shared (via `Arc`) with the serve/stream/plan/cluster layers:
+//!
+//! - **Metrics** ([`registry`]): lock-cheap counters, gauges, and
+//!   fixed-bucket latency histograms. Hot paths record through cached
+//!   `Arc` handles ([`Obs::select_seconds`] and friends); scrapers get
+//!   JSON or Prometheus-style text via the protocol-v9 `metrics`
+//!   request, and the router aggregates shard scrapes under
+//!   `shard{i}/` key prefixes that render as `shard` labels.
+//! - **Tracing** ([`trace_ring`]): a trace id is minted per request
+//!   (`submit` / `stream_open` / `submit_graph`), rides `TaskSpec` →
+//!   `ReadyTask` → `TaskResult`, and every layer pushes completed
+//!   spans (admission, batch fuse, task execution, router hop) into a
+//!   bounded live ring served by `dump_trace` as Chrome Trace Event
+//!   Format.
+//! - **Decision audit** ([`audit`]): every `SelectionPolicy::select`
+//!   records the query snapshot, candidate estimates, chosen variant
+//!   and reason tag into a bounded ring served by `decisions`.
+//!
+//! All three recording paths are non-blocking by design: rings use
+//! `try_lock` + drop counters, instruments are relaxed atomics. The
+//! plane observes the hot path; it never becomes part of it.
+
+pub mod audit;
+pub mod registry;
+pub mod trace_ring;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+pub use audit::{reason_index, DecisionAudit, DecisionRecord, DEFAULT_AUDIT_CAP, REASON_NAMES};
+pub use registry::{prometheus_from_json, Histogram, Registry, LATENCY_BUCKETS};
+pub use trace_ring::{SpanEvent, TraceRing, DEFAULT_TRACE_CAP};
+
+/// The shared observability handle: one per `Runtime`, cloned into
+/// every layer that reports.
+pub struct Obs {
+    /// Common time base: span timestamps and queue-wait stamps are
+    /// seconds/nanos since this instant. The runtime copies it so the
+    /// chrome exporter and the live ring agree on the timeline.
+    epoch: Instant,
+    pub registry: Registry,
+    pub audit: DecisionAudit,
+    pub trace: TraceRing,
+    // Cached hot-path instruments (registered once, recorded lock-free).
+    select_seconds: Arc<Histogram>,
+    queue_wait_seconds: Arc<Histogram>,
+    exec_seconds: Arc<Histogram>,
+    transfer_seconds: Arc<Histogram>,
+    e2e_seconds: Arc<Histogram>,
+    decisions_total: Arc<AtomicU64>,
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Obs::new()
+    }
+}
+
+impl Obs {
+    pub fn new() -> Obs {
+        let registry = Registry::new();
+        let select_seconds = registry.histogram("taskrt_select_seconds");
+        let queue_wait_seconds = registry.histogram("taskrt_queue_wait_seconds");
+        let exec_seconds = registry.histogram("taskrt_exec_seconds");
+        let transfer_seconds = registry.histogram("taskrt_transfer_seconds");
+        let e2e_seconds = registry.histogram("serve_e2e_seconds");
+        let decisions_total = registry.counter("select_decisions_total");
+        Obs {
+            epoch: Instant::now(),
+            registry,
+            audit: DecisionAudit::default(),
+            trace: TraceRing::default(),
+            select_seconds,
+            queue_wait_seconds,
+            exec_seconds,
+            transfer_seconds,
+            e2e_seconds,
+            decisions_total,
+        }
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Seconds since the epoch — the span time base.
+    pub fn now_secs(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Nanoseconds since the epoch — the queue-wait stamp base.
+    pub fn now_nanos(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Policy-consult duration (`SelectionPolicy::select` call).
+    pub fn select_seconds(&self) -> &Histogram {
+        &self.select_seconds
+    }
+
+    /// Ready-queue wait: task enqueue → worker pop.
+    pub fn queue_wait_seconds(&self) -> &Histogram {
+        &self.queue_wait_seconds
+    }
+
+    /// Task execution wall time.
+    pub fn exec_seconds(&self) -> &Histogram {
+        &self.exec_seconds
+    }
+
+    /// Modeled operand-transfer time per task.
+    pub fn transfer_seconds(&self) -> &Histogram {
+        &self.transfer_seconds
+    }
+
+    /// Serve end-to-end latency: admission → reply. Its `count`
+    /// reconciles with loadgen's successful-request count.
+    pub fn e2e_seconds(&self) -> &Histogram {
+        &self.e2e_seconds
+    }
+
+    /// Record one audited selection decision (ring + totals).
+    pub fn record_decision(&self, rec: DecisionRecord) {
+        self.decisions_total.fetch_add(1, Ordering::Relaxed);
+        self.audit.record(rec);
+    }
+
+    /// Total decisions observed (survives ring eviction).
+    pub fn decisions(&self) -> u64 {
+        self.decisions_total.load(Ordering::Relaxed)
+    }
+
+    /// Full metrics scrape: the registry's sections plus the audit and
+    /// trace rings' synthetic counters (per-reason decision totals,
+    /// drop/evict visibility for both rings).
+    pub fn metrics_json(&self) -> Json {
+        let mut j = self.registry.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(counters)) = m.get_mut("counters") {
+                for (reason, n) in self.audit.reason_totals() {
+                    counters.insert(
+                        format!("select_reason_{}_total", reason.replace('-', "_")),
+                        Json::Num(n as f64),
+                    );
+                }
+                counters.insert(
+                    "audit_dropped_total".into(),
+                    Json::Num(self.audit.dropped() as f64),
+                );
+                counters.insert(
+                    "audit_evicted_total".into(),
+                    Json::Num(self.audit.evicted() as f64),
+                );
+                counters.insert(
+                    "trace_spans_total".into(),
+                    Json::Num(self.trace.recorded() as f64),
+                );
+                counters.insert(
+                    "trace_dropped_total".into(),
+                    Json::Num(self.trace.dropped() as f64),
+                );
+                counters.insert(
+                    "trace_evicted_total".into(),
+                    Json::Num(self.trace.evicted() as f64),
+                );
+            }
+        }
+        j
+    }
+
+    /// Prometheus-style text exposition of [`Obs::metrics_json`].
+    pub fn render_prometheus(&self) -> String {
+        prometheus_from_json(&self.metrics_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cached_instruments_appear_in_scrape() {
+        let obs = Obs::new();
+        obs.e2e_seconds().observe(0.002);
+        obs.select_seconds().observe(1e-5);
+        let j = obs.metrics_json();
+        let hists = j.get("histograms").unwrap();
+        assert_eq!(
+            hists.get("serve_e2e_seconds").unwrap().get("count").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(
+            hists
+                .get("taskrt_select_seconds")
+                .unwrap()
+                .get("count")
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn decision_recording_feeds_counters_and_ring() {
+        let obs = Obs::new();
+        obs.record_decision(DecisionRecord {
+            seq: 0,
+            task: 1,
+            trace: 9,
+            codelet: "sort".into(),
+            ctx: 0,
+            size: 64,
+            size_band: 2,
+            load_band: 0,
+            queue_depth: 0,
+            arch: "cpu".into(),
+            transfer_penalty_secs: 0.0,
+            candidates: vec![("omp".into(), Some(1e-3))],
+            chosen: "omp".into(),
+            est: Some(1e-3),
+            reason: "hint-prior",
+        });
+        assert_eq!(obs.decisions(), 1);
+        assert_eq!(obs.audit.recent(0, "sort").len(), 1);
+        let j = obs.metrics_json();
+        let counters = j.get("counters").unwrap();
+        assert_eq!(
+            counters.get("select_decisions_total").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(
+            counters
+                .get("select_reason_hint_prior_total")
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn prometheus_render_covers_merged_counters() {
+        let obs = Obs::new();
+        obs.registry
+            .counter("serve_requests_total")
+            .fetch_add(3, Ordering::Relaxed);
+        let text = obs.render_prometheus();
+        assert!(text.contains("serve_requests_total 3\n"), "{text}");
+        assert!(text.contains("# TYPE taskrt_select_seconds histogram"), "{text}");
+        assert!(text.contains("audit_evicted_total 0\n"), "{text}");
+    }
+
+    #[test]
+    fn epoch_time_bases_are_monotone() {
+        let obs = Obs::new();
+        let a = obs.now_nanos();
+        let b = obs.now_nanos();
+        assert!(b >= a);
+        assert!(obs.now_secs() >= 0.0);
+    }
+}

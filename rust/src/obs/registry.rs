@@ -1,0 +1,394 @@
+//! The metrics registry: named atomic counters, gauges, and
+//! fixed-bucket histograms, cheap enough for every hot path in the
+//! runtime to report through.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Recording never blocks recording.** Every instrument is a
+//!    handful of relaxed atomics; the registry's maps are locked only
+//!    on *registration* (get-or-create) and on *scrape*. Hot paths
+//!    hold an `Arc` to their instrument and never touch the maps.
+//! 2. **Counters are monotonic** by construction (`AtomicU64`
+//!    increments); scrapers compute rates from two scrapes without
+//!    races. Gauges are set-style (`AtomicI64`) point-in-time values.
+//! 3. **Histograms are fixed-bucket**: observation is one bucket index
+//!    scan over a short bounds slice plus three relaxed adds. The sum
+//!    is kept in fixed-point nanounits so it can live in an atomic —
+//!    `sum()`/`count()` always agree with the bucket counts, which is
+//!    the consistency property ci.sh's selfcheck asserts.
+//!
+//! The scrape side renders the whole registry as a JSON object (the
+//! protocol-v9 `metrics` response) and, via [`prometheus_from_json`],
+//! as Prometheus-style text exposition. The router aggregates shard
+//! scrapes by key prefix (`shard0/...`), which the text renderer turns
+//! into a `shard` label — so the same renderer serves both a single
+//! shard and a whole cluster.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Default latency buckets (seconds): spans sub-10µs selection calls
+/// up to multi-second end-to-end tails. The final overflow bucket is
+/// implicit (`counts` has one more slot than `le`).
+pub const LATENCY_BUCKETS: [f64; 10] = [
+    1e-5, 5e-5, 1e-4, 5e-4, 1e-3, 5e-3, 1e-2, 5e-2, 0.1, 1.0,
+];
+
+/// A fixed-bucket histogram. `counts[i]` counts observations `<=
+/// bounds[i]`; the last slot counts overflow. The running sum is held
+/// in nanounits (`1e-9` resolution) so it fits an atomic and stays
+/// exactly consistent with `count` under concurrency.
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    sum_nanos: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        let bounds: Vec<f64> = bounds.to_vec();
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            bounds,
+            counts,
+            sum_nanos: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation. Negative / non-finite values clamp to
+    /// zero rather than poisoning the sum.
+    pub fn observe(&self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos
+            .fetch_add((v * 1e9).round() as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// (bounds, per-bucket counts incl. overflow, sum, count).
+    pub fn snapshot(&self) -> (Vec<f64>, Vec<u64>, f64, u64) {
+        (
+            self.bounds.clone(),
+            self.counts
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            self.sum(),
+            self.count(),
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        let (bounds, counts, sum, count) = self.snapshot();
+        let mut m = BTreeMap::new();
+        m.insert(
+            "le".into(),
+            Json::Arr(bounds.into_iter().map(Json::Num).collect()),
+        );
+        m.insert(
+            "counts".into(),
+            Json::Arr(counts.into_iter().map(|c| Json::Num(c as f64)).collect()),
+        );
+        m.insert("sum".into(), Json::Num(sum));
+        m.insert("count".into(), Json::Num(count as f64));
+        Json::Obj(m)
+    }
+}
+
+/// The registry: three get-or-create instrument maps. Instruments are
+/// `Arc`-shared, so registration cost is paid once and recording never
+/// sees these mutexes.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicI64>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create a monotonic counter.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Get-or-create a set-style gauge.
+    pub fn gauge(&self, name: &str) -> Arc<AtomicI64> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Get-or-create a histogram with the default latency buckets.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histogram_with(name, &LATENCY_BUCKETS)
+    }
+
+    /// Get-or-create a histogram with explicit bucket bounds (e.g.
+    /// batch sizes). An existing instrument keeps its original bounds.
+    pub fn histogram_with(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        self.hists
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new(bounds)))
+            .clone()
+    }
+
+    /// Scrape: `{"counters":{..},"gauges":{..},"histograms":{..}}`.
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            counters.insert(k.clone(), Json::Num(v.load(Ordering::Relaxed) as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            gauges.insert(k.clone(), Json::Num(v.load(Ordering::Relaxed) as f64));
+        }
+        let mut hists = BTreeMap::new();
+        for (k, v) in self.hists.lock().unwrap().iter() {
+            hists.insert(k.clone(), v.to_json());
+        }
+        let mut m = BTreeMap::new();
+        m.insert("counters".into(), Json::Obj(counters));
+        m.insert("gauges".into(), Json::Obj(gauges));
+        m.insert("histograms".into(), Json::Obj(hists));
+        Json::Obj(m)
+    }
+}
+
+/// Split an aggregated key: a `shard0/name` prefix (added by the
+/// router) becomes a `shard` label on the bare metric name.
+fn split_key(key: &str) -> (String, Option<String>) {
+    match key.split_once('/') {
+        Some((prefix, name)) => (sanitize(name), Some(prefix.to_string())),
+        None => (sanitize(key), None),
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+fn label_str(shard: &Option<String>, extra: Option<(&str, String)>) -> String {
+    let mut parts = Vec::new();
+    if let Some(s) = shard {
+        parts.push(format!("shard=\"{s}\""));
+    }
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render a metrics JSON scrape (one shard's, or the router's
+/// prefix-aggregated cluster view) as Prometheus-style text
+/// exposition. Keys carrying a `prefix/` become `shard` labels, so
+/// the same metric from N shards groups under one name.
+pub fn prometheus_from_json(v: &Json) -> String {
+    let mut out = String::new();
+    // name -> [(labels, rendered value lines)]
+    let mut counters: BTreeMap<String, Vec<(Option<String>, f64)>> = BTreeMap::new();
+    let mut gauges: BTreeMap<String, Vec<(Option<String>, f64)>> = BTreeMap::new();
+    for (section, dst) in [("counters", &mut counters), ("gauges", &mut gauges)] {
+        if let Some(obj) = v.get(section).and_then(Json::as_obj) {
+            for (k, val) in obj {
+                let (name, shard) = split_key(k);
+                dst.entry(name)
+                    .or_default()
+                    .push((shard, val.as_f64().unwrap_or(0.0)));
+            }
+        }
+    }
+    for (kind, map) in [("counter", &counters), ("gauge", &gauges)] {
+        for (name, series) in map {
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            for (shard, val) in series {
+                out.push_str(&format!(
+                    "{name}{} {}\n",
+                    label_str(shard, None),
+                    fmt_num(*val)
+                ));
+            }
+        }
+    }
+    // histograms: cumulative buckets + _sum + _count per series
+    let mut hists: BTreeMap<String, Vec<(Option<String>, &Json)>> = BTreeMap::new();
+    if let Some(obj) = v.get("histograms").and_then(Json::as_obj) {
+        for (k, val) in obj {
+            let (name, shard) = split_key(k);
+            hists.entry(name).or_default().push((shard, val));
+        }
+    }
+    for (name, series) in &hists {
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        for (shard, h) in series {
+            let le: Vec<f64> = h
+                .get("le")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default();
+            let counts: Vec<f64> = h
+                .get("counts")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default();
+            let mut cum = 0.0;
+            for (i, c) in counts.iter().enumerate() {
+                cum += c;
+                let bound = le
+                    .get(i)
+                    .map(|b| format!("{b}"))
+                    .unwrap_or_else(|| "+Inf".into());
+                out.push_str(&format!(
+                    "{name}_bucket{} {}\n",
+                    label_str(shard, Some(("le", bound))),
+                    fmt_num(cum)
+                ));
+            }
+            let sum = h.get("sum").and_then(Json::as_f64).unwrap_or(0.0);
+            let count = h.get("count").and_then(Json::as_f64).unwrap_or(0.0);
+            out.push_str(&format!(
+                "{name}_sum{} {sum}\n",
+                label_str(shard, None)
+            ));
+            out.push_str(&format!(
+                "{name}_count{} {}\n",
+                label_str(shard, None),
+                fmt_num(count)
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_shared_and_monotonic() {
+        let r = Registry::new();
+        let a = r.counter("x_total");
+        let b = r.counter("x_total");
+        a.fetch_add(2, Ordering::Relaxed);
+        b.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(r.counter("x_total").load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn histogram_sum_and_count_match_buckets() {
+        let r = Registry::new();
+        let h = r.histogram_with("lat", &[0.001, 0.01, 0.1]);
+        for v in [0.0005, 0.005, 0.05, 0.5, 5.0] {
+            h.observe(v);
+        }
+        let (bounds, counts, sum, count) = h.snapshot();
+        assert_eq!(bounds.len() + 1, counts.len());
+        assert_eq!(counts, vec![1, 1, 1, 2]);
+        assert_eq!(count, 5);
+        assert_eq!(counts.iter().sum::<u64>(), count);
+        assert!((sum - 5.5555).abs() < 1e-6, "sum {sum}");
+    }
+
+    #[test]
+    fn histogram_clamps_junk_observations() {
+        let h = Histogram::new(&[1.0]);
+        h.observe(-3.0);
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 0.0);
+        let (_, counts, _, _) = h.snapshot();
+        assert_eq!(counts, vec![3, 0], "all clamp into the first bucket");
+    }
+
+    #[test]
+    fn json_scrape_has_all_sections() {
+        let r = Registry::new();
+        r.counter("a_total").fetch_add(7, Ordering::Relaxed);
+        r.gauge("g").store(-2, Ordering::Relaxed);
+        r.histogram_with("h", &[1.0]).observe(0.5);
+        let j = r.to_json();
+        assert_eq!(j.get("counters").unwrap().get("a_total").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("gauges").unwrap().get("g").unwrap().as_f64(), Some(-2.0));
+        let h = j.get("histograms").unwrap().get("h").unwrap();
+        assert_eq!(h.get("count").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn prometheus_rendering_groups_shard_prefixes_as_labels() {
+        let r = Registry::new();
+        r.counter("req_total").fetch_add(4, Ordering::Relaxed);
+        let mut j = r.to_json();
+        // simulate the router's aggregation: prefix a second series
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(c)) = m.get_mut("counters") {
+                c.insert("shard1/req_total".into(), Json::Num(9.0));
+            }
+        }
+        let text = prometheus_from_json(&j);
+        assert!(text.contains("# TYPE req_total counter\n"), "{text}");
+        assert!(text.contains("req_total 4\n"), "{text}");
+        assert!(text.contains("req_total{shard=\"shard1\"} 9\n"), "{text}");
+        // one TYPE line for the grouped name
+        assert_eq!(text.matches("# TYPE req_total").count(), 1);
+    }
+
+    #[test]
+    fn prometheus_histogram_buckets_are_cumulative_with_inf() {
+        let r = Registry::new();
+        let h = r.histogram_with("lat_seconds", &[0.01, 0.1]);
+        h.observe(0.005);
+        h.observe(0.05);
+        h.observe(7.0);
+        let text = prometheus_from_json(&r.to_json());
+        assert!(text.contains("lat_seconds_bucket{le=\"0.01\"} 1\n"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{le=\"0.1\"} 2\n"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{le=\"+Inf\"} 3\n"), "{text}");
+        assert!(text.contains("lat_seconds_count 3\n"), "{text}");
+    }
+}

@@ -1,0 +1,231 @@
+//! The live trace ring: a bounded buffer of completed spans that a
+//! running server can flush as Chrome Trace Event Format JSON via the
+//! protocol-v9 `dump_trace` admin request — the live counterpart to
+//! `taskrt::trace::chrome_trace`, which only works post-hoc on a
+//! finished batch run.
+//!
+//! Spans carry the cross-layer trace id (minted at `submit` /
+//! `stream_open` / `submit_graph`, propagated through `TaskSpec` →
+//! `TaskResult`), so one request's admission span, batch window and
+//! per-stage task spans all correlate in the exported timeline. Like
+//! the decision audit, pushing a span never blocks the producer: the
+//! ring is `try_lock`-guarded with drop/evict counters exported as
+//! metrics.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// One completed span, times in seconds since the owning [`super::Obs`]
+/// epoch. `lane` is the chrome-trace tid (worker id, session id, …);
+/// `lane_name` labels it once in the export's thread metadata.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub name: String,
+    /// Category: "task", "serve", "route", …
+    pub cat: &'static str,
+    pub lane: u64,
+    pub lane_name: String,
+    /// Cross-layer trace id; 0 = untraced.
+    pub trace: u64,
+    pub t_start: f64,
+    pub t_end: f64,
+}
+
+pub const DEFAULT_TRACE_CAP: usize = 4096;
+
+/// Bounded span ring with non-blocking push.
+pub struct TraceRing {
+    ring: Mutex<VecDeque<SpanEvent>>,
+    cap: AtomicUsize,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+    evicted: AtomicU64,
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        TraceRing::new(DEFAULT_TRACE_CAP)
+    }
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing {
+            ring: Mutex::new(VecDeque::new()),
+            cap: AtomicUsize::new(cap),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+        }
+    }
+
+    pub fn set_capacity(&self, cap: usize) {
+        self.cap.store(cap, Ordering::Relaxed);
+        if let Ok(mut ring) = self.ring.try_lock() {
+            while ring.len() > cap {
+                ring.pop_front();
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Push one completed span; never blocks (contention counts a
+    /// drop, overflow evicts the oldest span).
+    pub fn push(&self, ev: SpanEvent) {
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+        let cap = self.cap.load(Ordering::Relaxed);
+        if cap == 0 {
+            return;
+        }
+        match self.ring.try_lock() {
+            Ok(mut ring) => {
+                ring.push_back(ev);
+                while ring.len() > cap {
+                    ring.pop_front();
+                    self.evicted.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Export the retained spans as Chrome Trace Event Format:
+    /// `{"traceEvents":[…]}` with one `M` thread-name metadata event
+    /// per lane and one `X` complete event per span (µs timestamps,
+    /// trace id in `args.trace`). Load the output in
+    /// `chrome://tracing` or Perfetto.
+    pub fn chrome_json(&self, pid: u64) -> Json {
+        let ring = self.ring.lock().unwrap();
+        let mut events = Vec::new();
+        let mut lanes: BTreeSet<(u64, String)> = BTreeSet::new();
+        for ev in ring.iter() {
+            lanes.insert((ev.lane, ev.lane_name.clone()));
+        }
+        for (lane, name) in &lanes {
+            let mut args = BTreeMap::new();
+            args.insert("name".into(), Json::Str(name.clone()));
+            let mut m = BTreeMap::new();
+            m.insert("ph".into(), Json::Str("M".into()));
+            m.insert("name".into(), Json::Str("thread_name".into()));
+            m.insert("pid".into(), Json::Num(pid as f64));
+            m.insert("tid".into(), Json::Num(*lane as f64));
+            m.insert("args".into(), Json::Obj(args));
+            events.push(Json::Obj(m));
+        }
+        for ev in ring.iter() {
+            let mut args = BTreeMap::new();
+            args.insert("trace".into(), Json::Num(ev.trace as f64));
+            let mut m = BTreeMap::new();
+            m.insert("ph".into(), Json::Str("X".into()));
+            m.insert("name".into(), Json::Str(ev.name.clone()));
+            m.insert("cat".into(), Json::Str(ev.cat.to_string()));
+            m.insert("pid".into(), Json::Num(pid as f64));
+            m.insert("tid".into(), Json::Num(ev.lane as f64));
+            m.insert("ts".into(), Json::Num(ev.t_start * 1e6));
+            m.insert(
+                "dur".into(),
+                Json::Num(((ev.t_end - ev.t_start).max(0.0)) * 1e6),
+            );
+            m.insert("args".into(), Json::Obj(args));
+            events.push(Json::Obj(m));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("traceEvents".into(), Json::Arr(events));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &str, lane: u64, trace: u64, t0: f64, t1: f64) -> SpanEvent {
+        SpanEvent {
+            name: name.to_string(),
+            cat: "task",
+            lane,
+            lane_name: format!("worker{lane}"),
+            trace,
+            t_start: t0,
+            t_end: t1,
+        }
+    }
+
+    #[test]
+    fn ring_bounds_and_evicts() {
+        let r = TraceRing::new(3);
+        for i in 0..5 {
+            r.push(span(&format!("s{i}"), 0, i, i as f64, i as f64 + 0.5));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.recorded(), 5);
+        assert_eq!(r.evicted(), 2);
+    }
+
+    #[test]
+    fn chrome_export_has_metadata_and_complete_events() {
+        let r = TraceRing::new(16);
+        r.push(span("sort", 2, 77, 0.001, 0.003));
+        r.push(span("admission", 1_000_003, 77, 0.0005, 0.001));
+        let j = r.chrome_json(0);
+        let events = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 2 lanes of metadata + 2 spans
+        assert_eq!(events.len(), 4);
+        let metas: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .collect();
+        assert_eq!(metas.len(), 2);
+        let xs: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 2);
+        let sort = xs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("sort"))
+            .unwrap();
+        assert_eq!(sort.get("ts").and_then(Json::as_f64), Some(1000.0));
+        assert_eq!(sort.get("dur").and_then(Json::as_f64), Some(2000.0));
+        assert_eq!(
+            sort.get("args").unwrap().get("trace").and_then(Json::as_f64),
+            Some(77.0)
+        );
+    }
+
+    #[test]
+    fn capacity_shrink_trims_existing() {
+        let r = TraceRing::new(10);
+        for i in 0..10 {
+            r.push(span("s", 0, i, 0.0, 1.0));
+        }
+        r.set_capacity(4);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.evicted(), 6);
+    }
+}

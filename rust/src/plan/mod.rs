@@ -66,6 +66,10 @@ pub struct GraphNode {
 #[derive(Default)]
 pub struct GraphSpec {
     pub nodes: Vec<GraphNode>,
+    /// v9 observability: request trace id stamped onto every node task
+    /// the graph releases (0 = untraced), so a whole DAG's execution
+    /// spans share one id in the live trace ring.
+    pub trace: u64,
 }
 
 impl GraphSpec {

@@ -18,9 +18,9 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use super::protocol::{
-    self, AutoscaleResp, CtxDesc, GraphDoneResp, Request, Response, ResultResp, ShardDesc,
-    StatsResp, StreamClosedResp, StreamOpenReq, StreamOpenedResp, SubmitGraphReq, SubmitReq,
-    PROTOCOL_VERSION,
+    self, AutoscaleResp, CtxDesc, DecisionsResp, GraphDoneResp, MetricsResp, Request, Response,
+    ResultResp, ShardDesc, StatsResp, StreamClosedResp, StreamOpenReq, StreamOpenedResp,
+    SubmitGraphReq, SubmitReq, TraceResp, PROTOCOL_VERSION,
 };
 use super::transport::codec::{encode_frame, FrameDecoder, Framing};
 use crate::util::json::Json;
@@ -305,6 +305,48 @@ impl Client {
         self.send(&Request::Stats)?;
         match self.recv()? {
             Response::Stats(s) => Ok(s),
+            Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// v9: scrape the server's metrics registry. `format` is `None` /
+    /// `"json"` for the JSON tree alone, `"prometheus"` to also get the
+    /// text exposition in [`MetricsResp::text`]. Against a router the
+    /// scrape aggregates every shard's registry under `shardN/` key
+    /// prefixes.
+    pub fn metrics(&mut self, format: Option<&str>) -> Result<MetricsResp> {
+        self.send(&Request::Metrics {
+            format: format.map(str::to_string),
+        })?;
+        match self.recv()? {
+            Response::Metrics(m) => Ok(m),
+            Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// v9: query the selection-decision audit ring — newest `limit`
+    /// records (None = server default), optionally filtered by codelet
+    /// name.
+    pub fn decisions(&mut self, limit: Option<u64>, codelet: Option<&str>) -> Result<DecisionsResp> {
+        self.send(&Request::Decisions {
+            limit,
+            codelet: codelet.map(str::to_string),
+        })?;
+        match self.recv()? {
+            Response::Decisions(d) => Ok(d),
+            Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// v9: flush the server's live trace ring as Chrome Trace Event
+    /// Format JSON (load it in `chrome://tracing` or Perfetto).
+    pub fn dump_trace(&mut self) -> Result<TraceResp> {
+        self.send(&Request::DumpTrace)?;
+        match self.recv()? {
+            Response::DumpTrace(t) => Ok(t),
             Response::Error { error, .. } => Err(anyhow!("server error: {error}")),
             other => bail!("unexpected response {other:?}"),
         }

@@ -201,6 +201,11 @@ pub struct LoadgenOptions {
     /// submits — the many-connection soak shape that separates the
     /// epoll transport from thread-per-connection.
     pub connections: usize,
+    /// v9: after a successful run, scrape the server's `metrics`
+    /// endpoint through a fresh connection and write the snapshot to
+    /// this path as a schema-versioned `compar-obs` record
+    /// (`compar bench validate` knows the kind).
+    pub metrics_out: Option<String>,
 }
 
 impl Default for LoadgenOptions {
@@ -222,6 +227,7 @@ impl Default for LoadgenOptions {
             slide: 0,
             framing: Framing::Ndjson,
             connections: 0,
+            metrics_out: None,
         }
     }
 }
@@ -325,6 +331,7 @@ fn request_for(opts: &LoadgenOptions, client_idx: usize, r: usize) -> SubmitReq 
             .wrapping_add(r as u64),
         variant: None,
         verify: opts.verify,
+        trace: 0,
     }
 }
 
@@ -468,6 +475,7 @@ fn drive_stream_client(
         slide: opts.slide,
         ctx,
         slo_ms: opts.slo_ms,
+        trace: 0,
     })?;
     let mut credit = opened.credit.max(1);
     let mut inflight = 0u64;
@@ -616,8 +624,51 @@ fn run_fanout(addr: &str, opts: &LoadgenOptions) -> Result<LoadReport> {
     })
 }
 
+/// v9: scrape the server's metrics registry right after the drive and
+/// write the snapshot to `path` as a schema-versioned `compar-obs`
+/// bench record (`compar bench validate` checks it). Scraping through
+/// a fresh connection exercises the same v9 `metrics` request any
+/// external scraper would use, and recording the loadgen's own success
+/// count next to the scrape lets offline tooling reconcile the
+/// end-to-end histogram against it.
+fn write_metrics_snapshot(
+    addr: &str,
+    opts: &LoadgenOptions,
+    r: &LoadReport,
+    path: &str,
+) -> Result<()> {
+    let mut c = Client::connect_cfg(addr, &client_cfg(opts))?;
+    let m = c.metrics(None)?;
+    let _ = c.quit();
+    let mut rec = std::collections::BTreeMap::new();
+    rec.insert("bench".into(), Json::Str("compar-obs".into()));
+    rec.insert("status".into(), Json::Str("measured".into()));
+    rec.insert(
+        "schema".into(),
+        Json::Num(crate::bench_harness::serve_bench::BENCH_SCHEMA as f64),
+    );
+    rec.insert("requests".into(), Json::Num(r.requests as f64));
+    rec.insert(
+        "requests_ok".into(),
+        Json::Num(r.requests.saturating_sub(r.errors) as f64),
+    );
+    rec.insert("metrics".into(), m.metrics);
+    let text = crate::util::json::to_string(&Json::Obj(rec));
+    std::fs::write(path, text + "\n")
+        .with_context(|| format!("writing metrics snapshot {path}"))?;
+    Ok(())
+}
+
 /// Run the load against a listening server.
 pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<LoadReport> {
+    let report = run_drivers(addr, opts)?;
+    if let Some(path) = &opts.metrics_out {
+        write_metrics_snapshot(addr, opts, &report, path)?;
+    }
+    Ok(report)
+}
+
+fn run_drivers(addr: &str, opts: &LoadgenOptions) -> Result<LoadReport> {
     if opts.connections > 0 {
         if opts.requests == 0 {
             return Err(anyhow!("need at least one request per connection"));

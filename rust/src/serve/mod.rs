@@ -36,6 +36,16 @@
 //! node's variant, arch, modeled vs wall timing and elided
 //! producer→consumer transfers.
 //!
+//! Protocol v9 adds the **observability plane** (see [`crate::obs`]):
+//! a `metrics` request scrapes the runtime's registry (counters,
+//! gauges, latency histograms — JSON or Prometheus-style text), a
+//! `decisions` request returns the selection-decision audit ring
+//! (query snapshot, candidate estimates, chosen variant, reason tag
+//! per decision), and `dump_trace` flushes the live span ring as
+//! Chrome Trace Event Format. Every request carries a trace id —
+//! minted at admission when the client sends none — that rides
+//! client → router → shard → task → result.
+//!
 //! Layers (each its own module):
 //! * [`protocol`] — wire format (requests/responses, encode/decode).
 //! * [`transport`] — framing codecs, buffer pool, readiness loop.
@@ -52,8 +62,9 @@ pub mod transport;
 pub use client::{Client, ClientConfig};
 pub use loadgen::{LoadProfile, LoadReport, LoadgenOptions};
 pub use protocol::{
-    GraphDoneResp, GraphNodeReport, GraphNodeReq, Request, Response, ShardDesc, StreamAckResp,
-    StreamClosedResp, StreamCreditResp, StreamOpenReq, StreamOpenedResp, SubmitGraphReq, SubmitReq,
+    DecisionsResp, GraphDoneResp, GraphNodeReport, GraphNodeReq, MetricsResp, Request, Response,
+    ShardDesc, StreamAckResp, StreamClosedResp, StreamCreditResp, StreamOpenReq, StreamOpenedResp,
+    SubmitGraphReq, SubmitReq, TraceResp,
 };
 pub use server::{parse_contexts, CtxSpec, ServeOptions, Server};
 pub use transport::{Framing, TransportKind};

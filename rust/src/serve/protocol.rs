@@ -12,11 +12,25 @@
 //! ([`encode_request`]/[`decode_request`], ndjson) and value-level ones
 //! ([`request_value`]/[`request_from_value`], framing-agnostic).
 //!
-//! ## v8 message set
+//! ## v9 message set
 //!
 //! The same protocol is spoken at two levels: clients talk to either a
 //! single `compar serve` shard or to a `compar route` router, and the
-//! router talks to its shards. v8 (graph planning) adds whole-DAG
+//! router talks to its shards. v9 (observability) adds the live
+//! observability plane: `metrics` scrapes the server's metrics
+//! registry (counters, gauges, latency histograms) as JSON or as
+//! Prometheus-style text exposition (`"format":"prometheus"`), with
+//! the router aggregating shard registries under per-shard key
+//! prefixes; `decisions` queries the bounded selection-decision audit
+//! ring (every `SelectionPolicy::select` records its query snapshot,
+//! candidate estimates, chosen variant and reason tag); `dump_trace`
+//! flushes the live trace ring as chrome://tracing Trace Event Format
+//! JSON. Requests that mint a request-scoped trace id (`submit`,
+//! `submit_graph`, `stream_open`) may carry `trace` on the wire so the
+//! router can propagate ids to shards, and `result` echoes the id
+//! back. `stats` gains monotonic totals (`tasks_completed`,
+//! `bytes_transferred`, `batches_fused`, `decisions`) alongside its
+//! point-in-time gauges. v8 (graph planning) adds whole-DAG
 //! submission: `submit_graph` carries named nodes + data-dependency
 //! edges, the server plans variant assignments jointly over the graph
 //! before releasing any task ([`crate::plan`]), and `graph_done`
@@ -69,7 +83,15 @@
 //! |                    | `stream_credit` | both   | unsolicited: credit/shed level moved  |
 //! | `stream_close`     | `stream_closed` | both   | flush + summarize (p95, shed windows) |
 //! | `stats`            | `stats`         | both   | counters (router aggregates shards);  |
-//! |                    |                 |        | v6 adds `slo_ms` + `streams`          |
+//! |                    |                 |        | v6 adds `slo_ms` + `streams`; v9      |
+//! |                    |                 |        | monotonic totals + `decisions`        |
+//! | `metrics`          | `metrics`       | both   | v9: metrics-registry scrape, JSON or  |
+//! |                    |                 |        | Prometheus text; router aggregates    |
+//! |                    |                 |        | shards under per-shard labels         |
+//! | `decisions`        | `decisions`     | both   | v9: selection-decision audit query    |
+//! |                    |                 |        | (optional `limit` + `codelet` filter) |
+//! | `dump_trace`       | `trace`         | both   | v9: flush the live trace ring as      |
+//! |                    |                 |        | chrome://tracing JSON                 |
 //! | `contexts`         | `contexts`      | both   | context table (router prefixes shard) |
 //! | `autoscale_status` | `autoscale`     | both   | elastic-scaling state (v5): context   |
 //! |                    |                 |        | bands in-process, shard churn on the  |
@@ -94,10 +116,16 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::util::json::{self, Json};
 
-/// v8: graph planning — `submit_graph`/`graph_done` whole-DAG requests
+/// v9: observability — `metrics` scrapes the metrics registry (JSON or
+/// Prometheus text), `decisions` queries the selection-decision audit
+/// ring, `dump_trace` flushes the live trace ring as chrome://tracing
+/// JSON; `submit`/`submit_graph`/`stream_open` may carry a `trace` id
+/// (router→shard propagation) echoed on `result`, and `stats` gains
+/// monotonic totals. (v8: graph planning — `submit_graph`/`graph_done`
+/// whole-DAG requests
 /// with jointly planned variant assignments, `plans`/`planned_tasks`
 /// counters in `stats`, and optional contextual band summaries riding
-/// the perf-gossip pair. (v7 transport — the `hello` exchange
+/// the perf-gossip pair; v7 transport — the `hello` exchange
 /// negotiates a per-session
 /// framing (`"framing":"ndjson"|"binary"` on the request, echoed on
 /// the response); the handshake is always ndjson and every later frame
@@ -112,7 +140,7 @@ use crate::util::json::{self, Json};
 /// on the router; v2 per-session selection policy in `hello`, `policy`
 /// on results, `selector` on context descriptors, `ctx_variants` in
 /// stats.)
-pub const PROTOCOL_VERSION: u64 = 8;
+pub const PROTOCOL_VERSION: u64 = 9;
 
 // --------------------------------------------------------------- requests
 
@@ -135,6 +163,10 @@ pub struct SubmitReq {
     pub variant: Option<String>,
     /// Verify the final output against the sequential reference.
     pub verify: bool,
+    /// v9: request-scoped trace id (0 = unset — the receiving server
+    /// mints one). A router mints the id and propagates it here so the
+    /// shard's task spans correlate with the router hop.
+    pub trace: u64,
 }
 
 /// v8: one node of a `submit_graph` DAG — a codelet invocation over a
@@ -170,6 +202,8 @@ pub struct SubmitGraphReq {
     /// to greedy under contention); "greedy" = force the per-task
     /// baseline over the identical release path (benchmarks).
     pub mode: Option<String>,
+    /// v9: request-scoped trace id (0 = unset; see [`SubmitReq::trace`]).
+    pub trace: u64,
 }
 
 /// v6: open a stream session — a long-lived chunk pipeline with
@@ -194,6 +228,9 @@ pub struct StreamOpenReq {
     /// Per-stream latency target driving backpressure; None falls back
     /// to the session-level `hello` declaration (if any).
     pub slo_ms: Option<f64>,
+    /// v9: request-scoped trace id (0 = unset; see [`SubmitReq::trace`]).
+    /// Every chunk task of the stream carries the stream's id.
+    pub trace: u64,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -224,6 +261,20 @@ pub enum Request {
     /// v6: flush outstanding chunks and close the stream.
     StreamClose { stream: u64 },
     Stats,
+    /// v9: scrape the server's metrics registry. `format` is "json"
+    /// (default) or "prometheus" (adds the text exposition rendering);
+    /// the router aggregates shard registries under per-shard labels.
+    Metrics { format: Option<String> },
+    /// v9: query the selection-decision audit ring — newest `limit`
+    /// records (server-capped), optionally filtered by codelet name.
+    Decisions {
+        limit: Option<u64>,
+        codelet: Option<String>,
+    },
+    /// v9: flush the live trace ring as chrome://tracing JSON
+    /// (request-scoped spans: router hop, admission, batch window,
+    /// per-task execution).
+    DumpTrace,
     Contexts,
     /// v5: the elastic-scaling control loop's live state (worker moves
     /// and per-context bands on a shard; shard spawn/retire counters on
@@ -274,6 +325,9 @@ pub struct ResultResp {
     /// Relative L2 error vs the sequential reference (0.0 when
     /// verification was disabled).
     pub rel_err: f64,
+    /// v9: the request-scoped trace id the server minted (or accepted
+    /// from a router); keys `dump_trace` spans and `decisions` records.
+    pub trace: u64,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -322,6 +376,17 @@ pub struct StatsResp {
     pub plans: u64,
     /// v8 — tasks released with planned variant priors.
     pub planned_tasks: u64,
+    /// v9 — monotonic totals (never reset, unlike the point-in-time
+    /// gauges above, which a scraper cannot difference): tasks the
+    /// runtime completed successfully over the server's lifetime.
+    pub tasks_completed: u64,
+    /// v9 — bytes moved across memory nodes, monotonic.
+    pub bytes_transferred: u64,
+    /// v9 — same-codelet batches fused by the batcher (window size
+    /// > 1), monotonic.
+    pub batches_fused: u64,
+    /// v9 — selection decisions recorded by the audit plane, monotonic.
+    pub decisions: u64,
 }
 
 /// v8: per-node entry of the `graph_done` plan report.
@@ -439,6 +504,41 @@ pub struct StreamClosedResp {
     pub p95_ms: f64,
 }
 
+/// v9: `metrics` — one registry scrape. `metrics` is the registry's
+/// JSON tree (`{"counters":{},"gauges":{},"histograms":{}}`; a router
+/// reply prefixes every key with `shardN/`, rendered as a
+/// `shard="shardN"` label in the text exposition). `text` carries the
+/// Prometheus-style rendering when `"format":"prometheus"` was asked.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsResp {
+    pub metrics: Json,
+    pub text: Option<String>,
+}
+
+/// v9: `decisions` — a slice of the selection-decision audit ring,
+/// newest records last, plus the ring's lifetime counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionsResp {
+    /// Decisions recorded since start (monotonic, includes evicted).
+    pub total: u64,
+    /// Records dropped because the ring was contended (never blocks
+    /// the selection hot path).
+    pub dropped: u64,
+    /// Records evicted by capacity.
+    pub evicted: u64,
+    /// JSON array of decision records (see `crate::obs::DecisionRecord`).
+    pub decisions: Json,
+}
+
+/// v9: `trace` — the live trace ring flushed as chrome://tracing
+/// Trace Event Format JSON (`trace.traceEvents`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceResp {
+    /// Span events included in the dump.
+    pub events: u64,
+    pub trace: Json,
+}
+
 /// One shard as the router sees it (`shards` response).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ShardDesc {
@@ -516,6 +616,12 @@ pub enum Response {
     StreamClosed(StreamClosedResp),
     Error { id: Option<u64>, error: String },
     Stats(StatsResp),
+    /// v9: metrics-registry scrape.
+    Metrics(MetricsResp),
+    /// v9: selection-decision audit slice.
+    Decisions(DecisionsResp),
+    /// v9: live trace ring flushed as chrome://tracing JSON.
+    DumpTrace(TraceResp),
     Contexts { contexts: Vec<CtxDesc> },
     /// v3: serialized perf-model bucket summaries (`perf_pull`). v8:
     /// `bands` optionally carries the shard's contextual band
@@ -599,6 +705,9 @@ pub fn request_value(r: &Request) -> Json {
             if let Some(v) = &q.variant {
                 pairs.push(("variant", s(v)));
             }
+            if q.trace != 0 {
+                pairs.push(("trace", n(q.trace as f64)));
+            }
             obj(pairs)
         }
         Request::SubmitGraph(q) => {
@@ -629,6 +738,9 @@ pub fn request_value(r: &Request) -> Json {
             if let Some(m) = &q.mode {
                 pairs.push(("mode", s(m)));
             }
+            if q.trace != 0 {
+                pairs.push(("trace", n(q.trace as f64)));
+            }
             obj(pairs)
         }
         Request::StreamOpen(q) => {
@@ -647,6 +759,9 @@ pub fn request_value(r: &Request) -> Json {
             if let Some(ms) = q.slo_ms {
                 pairs.push(("slo_ms", n(ms)));
             }
+            if q.trace != 0 {
+                pairs.push(("trace", n(q.trace as f64)));
+            }
             obj(pairs)
         }
         Request::StreamChunk { stream, seq, seed } => obj(vec![
@@ -660,6 +775,24 @@ pub fn request_value(r: &Request) -> Json {
             ("stream", n(*stream as f64)),
         ]),
         Request::Stats => obj(vec![("op", s("stats"))]),
+        Request::Metrics { format } => {
+            let mut pairs = vec![("op", s("metrics"))];
+            if let Some(f) = format {
+                pairs.push(("format", s(f)));
+            }
+            obj(pairs)
+        }
+        Request::Decisions { limit, codelet } => {
+            let mut pairs = vec![("op", s("decisions"))];
+            if let Some(l) = limit {
+                pairs.push(("limit", n(*l as f64)));
+            }
+            if let Some(c) = codelet {
+                pairs.push(("codelet", s(c)));
+            }
+            obj(pairs)
+        }
+        Request::DumpTrace => obj(vec![("op", s("dump_trace"))]),
         Request::Contexts => obj(vec![("op", s("contexts"))]),
         Request::AutoscaleStatus => obj(vec![("op", s("autoscale_status"))]),
         Request::PerfPull => obj(vec![("op", s("perf_pull"))]),
@@ -707,21 +840,27 @@ pub fn response_value(r: &Response) -> Json {
             }
             obj(pairs)
         }
-        Response::Result(q) => obj(vec![
-            ("ok", Json::Bool(true)),
-            ("type", s("result")),
-            ("id", n(q.id as f64)),
-            ("app", s(&q.app)),
-            ("size", n(q.size as f64)),
-            ("ctx", s(&q.ctx)),
-            ("policy", s(&q.policy)),
-            ("variants", strs(&q.variants)),
-            ("workers", nums(&q.workers)),
-            ("batch", n(q.batch as f64)),
-            ("modeled", n(q.modeled)),
-            ("wall", n(q.wall)),
-            ("rel_err", n(q.rel_err)),
-        ]),
+        Response::Result(q) => {
+            let mut pairs = vec![
+                ("ok", Json::Bool(true)),
+                ("type", s("result")),
+                ("id", n(q.id as f64)),
+                ("app", s(&q.app)),
+                ("size", n(q.size as f64)),
+                ("ctx", s(&q.ctx)),
+                ("policy", s(&q.policy)),
+                ("variants", strs(&q.variants)),
+                ("workers", nums(&q.workers)),
+                ("batch", n(q.batch as f64)),
+                ("modeled", n(q.modeled)),
+                ("wall", n(q.wall)),
+                ("rel_err", n(q.rel_err)),
+            ];
+            if q.trace != 0 {
+                pairs.push(("trace", n(q.trace as f64)));
+            }
+            obj(pairs)
+        }
         Response::GraphDone(q) => {
             let nodes = q
                 .nodes
@@ -840,8 +979,37 @@ pub fn response_value(r: &Response) -> Json {
                 ("streams", n(q.streams as f64)),
                 ("plans", n(q.plans as f64)),
                 ("planned_tasks", n(q.planned_tasks as f64)),
+                ("tasks_completed", n(q.tasks_completed as f64)),
+                ("bytes_transferred", n(q.bytes_transferred as f64)),
+                ("batches_fused", n(q.batches_fused as f64)),
+                ("decisions", n(q.decisions as f64)),
             ])
         }
+        Response::Metrics(q) => {
+            let mut pairs = vec![
+                ("ok", Json::Bool(true)),
+                ("type", s("metrics")),
+                ("metrics", q.metrics.clone()),
+            ];
+            if let Some(t) = &q.text {
+                pairs.push(("text", s(t)));
+            }
+            obj(pairs)
+        }
+        Response::Decisions(q) => obj(vec![
+            ("ok", Json::Bool(true)),
+            ("type", s("decisions")),
+            ("total", n(q.total as f64)),
+            ("dropped", n(q.dropped as f64)),
+            ("evicted", n(q.evicted as f64)),
+            ("decisions", q.decisions.clone()),
+        ]),
+        Response::DumpTrace(q) => obj(vec![
+            ("ok", Json::Bool(true)),
+            ("type", s("trace")),
+            ("events", n(q.events as f64)),
+            ("trace", q.trace.clone()),
+        ]),
         Response::Contexts { contexts } => {
             let arr = contexts
                 .iter()
@@ -1012,6 +1180,8 @@ pub fn request_from_value(j: &Json) -> Result<Request> {
                     None => true,
                     _ => bail!("invalid 'verify' field"),
                 },
+                // v9 field: tolerant decode (0 = unset on older peers)
+                trace: get_u64(&j, "trace").unwrap_or(0),
             })
         }
         "submit_graph" => {
@@ -1037,6 +1207,8 @@ pub fn request_from_value(j: &Json) -> Result<Request> {
                 nodes,
                 ctx: get_str(j, "ctx").ok(),
                 mode: get_str(j, "mode").ok(),
+                // v9 field: tolerant decode (0 = unset on older peers)
+                trace: get_u64(j, "trace").unwrap_or(0),
             })
         }
         "stream_open" => Request::StreamOpen(StreamOpenReq {
@@ -1048,6 +1220,8 @@ pub fn request_from_value(j: &Json) -> Result<Request> {
             slide: get_u64(&j, "slide").unwrap_or(0) as usize,
             ctx: get_str(&j, "ctx").ok(),
             slo_ms: get_f64(&j, "slo_ms").ok(),
+            // v9 field: tolerant decode (0 = unset on older peers)
+            trace: get_u64(&j, "trace").unwrap_or(0),
         }),
         "stream_chunk" => Request::StreamChunk {
             stream: get_u64(&j, "stream")?,
@@ -1058,6 +1232,14 @@ pub fn request_from_value(j: &Json) -> Result<Request> {
             stream: get_u64(&j, "stream")?,
         },
         "stats" => Request::Stats,
+        "metrics" => Request::Metrics {
+            format: get_str(&j, "format").ok(),
+        },
+        "decisions" => Request::Decisions {
+            limit: get_u64(&j, "limit").ok(),
+            codelet: get_str(&j, "codelet").ok(),
+        },
+        "dump_trace" => Request::DumpTrace,
         "contexts" => Request::Contexts,
         "autoscale_status" => Request::AutoscaleStatus,
         "perf_pull" => Request::PerfPull,
@@ -1106,6 +1288,8 @@ pub fn response_from_value(j: &Json) -> Result<Response> {
             modeled: get_f64(&j, "modeled")?,
             wall: get_f64(&j, "wall")?,
             rel_err: get_f64(&j, "rel_err")?,
+            // v9 field: tolerant decode (0 = untraced on older peers)
+            trace: get_u64(&j, "trace").unwrap_or(0),
         }),
         "graph_done" => {
             let arr = j
@@ -1215,8 +1399,36 @@ pub fn response_from_value(j: &Json) -> Result<Response> {
                 // v8 fields: tolerant decode (pre-v8 peers omit them)
                 plans: get_u64(&j, "plans").unwrap_or(0),
                 planned_tasks: get_u64(&j, "planned_tasks").unwrap_or(0),
+                // v9 fields: tolerant decode (pre-v9 peers omit them)
+                tasks_completed: get_u64(&j, "tasks_completed").unwrap_or(0),
+                bytes_transferred: get_u64(&j, "bytes_transferred").unwrap_or(0),
+                batches_fused: get_u64(&j, "batches_fused").unwrap_or(0),
+                decisions: get_u64(&j, "decisions").unwrap_or(0),
             })
         }
+        "metrics" => Response::Metrics(MetricsResp {
+            metrics: j
+                .get("metrics")
+                .cloned()
+                .unwrap_or(Json::Obj(BTreeMap::new())),
+            text: get_str(&j, "text").ok(),
+        }),
+        "decisions" => Response::Decisions(DecisionsResp {
+            total: get_u64(&j, "total").unwrap_or(0),
+            dropped: get_u64(&j, "dropped").unwrap_or(0),
+            evicted: get_u64(&j, "evicted").unwrap_or(0),
+            decisions: j
+                .get("decisions")
+                .cloned()
+                .unwrap_or(Json::Arr(Vec::new())),
+        }),
+        "trace" => Response::DumpTrace(TraceResp {
+            events: get_u64(&j, "events").unwrap_or(0),
+            trace: j
+                .get("trace")
+                .cloned()
+                .unwrap_or(Json::Obj(BTreeMap::new())),
+        }),
         "contexts" => {
             let arr = j
                 .get("contexts")
@@ -1343,6 +1555,7 @@ mod tests {
             seed: 7,
             variant: Some("omp".into()),
             verify: true,
+            trace: 9001,
         }));
         roundtrip_req(Request::Submit(SubmitReq {
             id: 0,
@@ -1353,6 +1566,7 @@ mod tests {
             seed: 0,
             variant: None,
             verify: false,
+            trace: 0,
         }));
         roundtrip_req(Request::Stats);
         roundtrip_req(Request::Contexts);
@@ -1479,6 +1693,7 @@ mod tests {
             modeled: 0.0025,
             wall: 0.001,
             rel_err: 1.5e-6,
+            trace: 77,
         }));
         roundtrip_resp(Response::Error {
             id: Some(3),
@@ -1512,6 +1727,10 @@ mod tests {
             streams: 2,
             plans: 3,
             planned_tasks: 18,
+            tasks_completed: 260,
+            bytes_transferred: 1 << 20,
+            batches_fused: 5,
+            decisions: 300,
         }));
         roundtrip_resp(Response::Contexts {
             contexts: vec![CtxDesc {
@@ -1546,6 +1765,11 @@ mod tests {
                 assert_eq!(s.streams, 0);
                 assert_eq!(s.plans, 0);
                 assert_eq!(s.planned_tasks, 0);
+                // v8 peers omit the v9 monotonic totals too
+                assert_eq!(s.tasks_completed, 0);
+                assert_eq!(s.bytes_transferred, 0);
+                assert_eq!(s.batches_fused, 0);
+                assert_eq!(s.decisions, 0);
             }
             other => panic!("{other:?}"),
         }
@@ -1562,6 +1786,7 @@ mod tests {
             slide: 2,
             ctx: Some("hot".into()),
             slo_ms: Some(40.0),
+            trace: 301,
         }));
         roundtrip_req(Request::StreamOpen(StreamOpenReq {
             id: 2,
@@ -1572,6 +1797,7 @@ mod tests {
             slide: 0,
             ctx: None,
             slo_ms: None,
+            trace: 0,
         }));
         roundtrip_req(Request::StreamChunk {
             stream: 1,
@@ -1719,6 +1945,7 @@ mod tests {
                 seed: 3,
                 variant: Some("omp".into()),
                 verify: true,
+                trace: 12,
             }),
             Request::SubmitGraph(SubmitGraphReq {
                 id: 9,
@@ -1740,6 +1967,7 @@ mod tests {
                 ],
                 ctx: Some("hot".into()),
                 mode: Some("greedy".into()),
+                trace: 13,
             }),
             Request::StreamOpen(StreamOpenReq {
                 id: 1,
@@ -1750,6 +1978,7 @@ mod tests {
                 slide: 2,
                 ctx: None,
                 slo_ms: Some(40.0),
+                trace: 14,
             }),
             Request::StreamChunk {
                 stream: 1,
@@ -1758,6 +1987,14 @@ mod tests {
             },
             Request::StreamClose { stream: 1 },
             Request::Stats,
+            Request::Metrics {
+                format: Some("prometheus".into()),
+            },
+            Request::Decisions {
+                limit: Some(32),
+                codelet: Some("mmul".into()),
+            },
+            Request::DumpTrace,
             Request::Contexts,
             Request::AutoscaleStatus,
             Request::PerfPull,
@@ -1795,6 +2032,7 @@ mod tests {
                 modeled: 0.5,
                 wall: 0.25,
                 rel_err: 0.0,
+                trace: 12,
             }),
             Response::GraphDone(GraphDoneResp {
                 id: 9,
@@ -1868,6 +2106,34 @@ mod tests {
                 streams: 0,
                 plans: 0,
                 planned_tasks: 0,
+                tasks_completed: 4,
+                bytes_transferred: 4096,
+                batches_fused: 1,
+                decisions: 6,
+            }),
+            Response::Metrics(MetricsResp {
+                metrics: {
+                    let mut counters = BTreeMap::new();
+                    counters.insert("select_decisions_total".to_string(), Json::Num(6.0));
+                    let mut m = BTreeMap::new();
+                    m.insert("counters".to_string(), Json::Obj(counters));
+                    Json::Obj(m)
+                },
+                text: Some("# TYPE select_decisions_total counter\n".into()),
+            }),
+            Response::Decisions(DecisionsResp {
+                total: 6,
+                dropped: 0,
+                evicted: 2,
+                decisions: Json::Arr(vec![Json::Obj(BTreeMap::new())]),
+            }),
+            Response::DumpTrace(TraceResp {
+                events: 3,
+                trace: {
+                    let mut m = BTreeMap::new();
+                    m.insert("traceEvents".to_string(), Json::Arr(Vec::new()));
+                    Json::Obj(m)
+                },
             }),
             Response::Contexts {
                 contexts: vec![CtxDesc {
@@ -2011,6 +2277,7 @@ mod tests {
             ],
             ctx: Some("pipeline".into()),
             mode: Some("planned".into()),
+            trace: 41,
         }));
         roundtrip_req(Request::SubmitGraph(SubmitGraphReq {
             id: 32,
@@ -2023,6 +2290,7 @@ mod tests {
             }],
             ctx: None,
             mode: None,
+            trace: 0,
         }));
         // malformed: node list required and non-empty, nodes need names
         assert!(decode_request(r#"{"op":"submit_graph","id":1}"#).is_err());
@@ -2081,6 +2349,115 @@ mod tests {
         )
         .is_err());
         assert!(decode_response(r#"{"ok":true,"type":"graph_done","id":1}"#).is_err());
+    }
+
+    #[test]
+    fn observability_request_roundtrips() {
+        roundtrip_req(Request::Metrics { format: None });
+        roundtrip_req(Request::Metrics {
+            format: Some("prometheus".into()),
+        });
+        roundtrip_req(Request::Decisions {
+            limit: None,
+            codelet: None,
+        });
+        roundtrip_req(Request::Decisions {
+            limit: Some(16),
+            codelet: Some("sort".into()),
+        });
+        roundtrip_req(Request::DumpTrace);
+        // bare scrapes decode with every option absent
+        match decode_request(r#"{"op":"metrics"}"#).unwrap() {
+            Request::Metrics { format } => assert!(format.is_none()),
+            other => panic!("{other:?}"),
+        }
+        match decode_request(r#"{"op":"decisions"}"#).unwrap() {
+            Request::Decisions { limit, codelet } => {
+                assert!(limit.is_none() && codelet.is_none());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn observability_response_roundtrips() {
+        let mut counters = BTreeMap::new();
+        counters.insert("serve_requests_total".to_string(), Json::Num(42.0));
+        let mut reg = BTreeMap::new();
+        reg.insert("counters".to_string(), Json::Obj(counters));
+        roundtrip_resp(Response::Metrics(MetricsResp {
+            metrics: Json::Obj(reg.clone()),
+            text: None,
+        }));
+        roundtrip_resp(Response::Metrics(MetricsResp {
+            metrics: Json::Obj(reg),
+            text: Some("serve_requests_total 42\n".into()),
+        }));
+        roundtrip_resp(Response::Decisions(DecisionsResp {
+            total: 9,
+            dropped: 1,
+            evicted: 3,
+            decisions: Json::Arr(vec![Json::Obj(BTreeMap::new())]),
+        }));
+        roundtrip_resp(Response::DumpTrace(TraceResp {
+            events: 2,
+            trace: {
+                let mut m = BTreeMap::new();
+                m.insert("traceEvents".to_string(), Json::Arr(Vec::new()));
+                Json::Obj(m)
+            },
+        }));
+        // tolerant decode: a sparse metrics reply still lands
+        match decode_response(r#"{"ok":true,"type":"metrics"}"#).unwrap() {
+            Response::Metrics(m) => {
+                assert_eq!(m.metrics, Json::Obj(BTreeMap::new()));
+                assert!(m.text.is_none());
+            }
+            other => panic!("{other:?}"),
+        }
+        match decode_response(r#"{"ok":true,"type":"decisions"}"#).unwrap() {
+            Response::Decisions(d) => {
+                assert_eq!(d.total, 0);
+                assert_eq!(d.decisions, Json::Arr(Vec::new()));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn v8_peer_messages_decode_without_trace() {
+        // a v8 peer omits `trace` on submit-family requests and results
+        match decode_request(r#"{"op":"submit","id":1,"app":"sort","size":256}"#).unwrap() {
+            Request::Submit(q) => assert_eq!(q.trace, 0),
+            other => panic!("{other:?}"),
+        }
+        let line = r#"{"op":"stream_open","id":5,"app":"sort","size":256}"#;
+        match decode_request(line).unwrap() {
+            Request::StreamOpen(q) => assert_eq!(q.trace, 0),
+            other => panic!("{other:?}"),
+        }
+        let line = r#"{"ok":true,"type":"result","id":1,"app":"sort","size":256,
+            "ctx":"default","policy":"greedy","variants":["omp"],"workers":[0],
+            "batch":1,"modeled":0.1,"wall":0.1,"rel_err":0}"#
+            .replace('\n', "");
+        match decode_response(&line).unwrap() {
+            Response::Result(r) => assert_eq!(r.trace, 0),
+            other => panic!("{other:?}"),
+        }
+        // and a v8 peer rejects nothing it used to accept: a v9 client
+        // sending trace=0 omits the field entirely
+        let wire = encode_request(&Request::Submit(SubmitReq {
+            id: 1,
+            app: "sort".into(),
+            size: 256,
+            tasks: 1,
+            ctx: None,
+            seed: 0,
+            variant: None,
+            verify: true,
+            trace: 0,
+        }));
+        assert!(!wire.contains("trace"));
     }
 }
 

@@ -34,9 +34,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::protocol::{
-    self, AutoscaleCtxDesc, AutoscaleResp, CtxDesc, GraphDoneResp, GraphNodeReport, Request,
-    Response, ResultResp, StatsResp, StreamAckResp, StreamClosedResp, StreamCreditResp,
-    StreamOpenReq, StreamOpenedResp, SubmitGraphReq, SubmitReq, PROTOCOL_VERSION,
+    self, AutoscaleCtxDesc, AutoscaleResp, CtxDesc, DecisionsResp, GraphDoneResp, GraphNodeReport,
+    MetricsResp, Request, Response, ResultResp, StatsResp, StreamAckResp, StreamClosedResp,
+    StreamCreditResp, StreamOpenReq, StreamOpenedResp, SubmitGraphReq, SubmitReq, TraceResp,
+    PROTOCOL_VERSION,
 };
 use super::transport::codec::{encode_frame, FrameDecoder, Framing};
 #[cfg(unix)]
@@ -49,6 +50,7 @@ use crate::util::json::Json;
 mod mux;
 use crate::apps;
 use crate::autoscale::{AutoscaleOptions, AutoscaleShared, Autoscaler, ScaleTarget};
+use crate::obs::SpanEvent;
 use crate::plan::{GraphSpec, PlanMode};
 use crate::runtime::Manifest;
 use crate::stream::{
@@ -146,6 +148,12 @@ pub struct ServeOptions {
     /// Session transport: blocking thread-per-connection (default) or
     /// the readiness event loop (`--transport epoll`).
     pub transport: TransportKind,
+    /// v9: selection-decision audit ring capacity (`--audit-cap`).
+    /// 0 disables retention; the per-reason and total counters stay
+    /// exact either way.
+    pub audit_cap: usize,
+    /// v9: live trace ring capacity in spans (`--trace-cap`).
+    pub trace_cap: usize,
 }
 
 impl Default for ServeOptions {
@@ -162,6 +170,8 @@ impl Default for ServeOptions {
             max_batch: 16,
             autoscale: None,
             transport: TransportKind::Threads,
+            audit_cap: crate::obs::DEFAULT_AUDIT_CAP,
+            trace_cap: crate::obs::DEFAULT_TRACE_CAP,
         }
     }
 }
@@ -303,6 +313,12 @@ struct Job {
     /// Per-session selection policy to attach to the task specs (None =
     /// the context's policy, or a per-request `Forced` pin).
     selector: Option<Arc<dyn SelectionPolicy>>,
+    /// v9: request trace id (minted at admission when the client sent
+    /// none); stamped onto every task spec and echoed in the result.
+    trace: u64,
+    /// v9: admission instant — the end-to-end latency histogram
+    /// observes `admitted.elapsed()` when the reply goes out.
+    admitted: Instant,
     reply: ReplyLane,
 }
 
@@ -417,6 +433,12 @@ struct Shared {
     plans: AtomicU64,
     /// Tasks released carrying a planned prefer-strength prior (v8).
     planned_tasks: AtomicU64,
+    /// Same-app batches that fused more than one request (v9 monotonic
+    /// total; `stats.batches_fused`).
+    batches_fused: AtomicU64,
+    /// Trace-id mint for requests arriving without one (v9). Starts at
+    /// 1: trace 0 means "untraced" on every wire field and struct.
+    next_trace: AtomicU64,
     /// Tasks completed per context id (results leave Metrics per-request,
     /// so the server keeps its own per-tenant counters).
     ctx_tasks: Vec<AtomicU64>,
@@ -537,6 +559,70 @@ impl Shared {
             streams: self.streams.load(Ordering::Relaxed),
             plans: self.plans.load(Ordering::Relaxed),
             planned_tasks: self.planned_tasks.load(Ordering::Relaxed),
+            // v9: monotonic totals — unlike the gauges above these
+            // never reset, so a scraper can difference them over time
+            tasks_completed: self
+                .rt
+                .metrics()
+                .tasks_executed
+                .load(Ordering::Relaxed) as u64,
+            bytes_transferred: self.rt.metrics().bytes_transferred.load(Ordering::Relaxed),
+            batches_fused: self.batches_fused.load(Ordering::Relaxed),
+            decisions: self.rt.obs().decisions(),
+        }
+    }
+
+    /// Mirror the runtime's and the server's own aggregates into the
+    /// metrics registry at scrape time. The sources of truth stay where
+    /// they are (taskrt atomics, server counters) — the registry is the
+    /// export surface, so the hot path never double-books. Counters are
+    /// mirrored from monotonic sources only, preserving monotonicity
+    /// for scrapers that difference them.
+    fn mirror_metrics(&self) {
+        let obs = self.rt.obs();
+        let reg = &obs.registry;
+        let m = self.rt.metrics();
+        reg.counter("taskrt_tasks_completed_total").store(
+            m.tasks_executed.load(Ordering::Relaxed) as u64,
+            Ordering::Relaxed,
+        );
+        reg.counter("taskrt_tasks_failed_total").store(
+            m.tasks_failed.load(Ordering::Relaxed) as u64,
+            Ordering::Relaxed,
+        );
+        reg.counter("taskrt_bytes_transferred_total").store(
+            m.bytes_transferred.load(Ordering::Relaxed),
+            Ordering::Relaxed,
+        );
+        reg.counter("serve_requests_ok_total")
+            .store(self.requests_ok.load(Ordering::Relaxed), Ordering::Relaxed);
+        reg.counter("serve_requests_err_total")
+            .store(self.requests_err.load(Ordering::Relaxed), Ordering::Relaxed);
+        reg.counter("serve_batches_fused_total")
+            .store(self.batches_fused.load(Ordering::Relaxed), Ordering::Relaxed);
+        reg.counter("serve_plans_total")
+            .store(self.plans.load(Ordering::Relaxed), Ordering::Relaxed);
+        reg.counter("serve_planned_tasks_total")
+            .store(self.planned_tasks.load(Ordering::Relaxed), Ordering::Relaxed);
+        reg.gauge("serve_inflight")
+            .store(self.gate.inflight() as i64, Ordering::Relaxed);
+        reg.gauge("serve_streams")
+            .store(self.streams.load(Ordering::Relaxed) as i64, Ordering::Relaxed);
+        reg.gauge("serve_sessions")
+            .store(self.rt.tenants() as i64, Ordering::Relaxed);
+        reg.gauge("taskrt_queue_depth")
+            .store(self.rt.queued_tasks() as i64, Ordering::Relaxed);
+        reg.gauge("taskrt_busy_workers")
+            .store(self.rt.busy_workers() as i64, Ordering::Relaxed);
+        reg.gauge("taskrt_total_workers")
+            .store(self.rt.worker_count() as i64, Ordering::Relaxed);
+        // elastic-scaling lifetime counters (when the control loop runs)
+        if let Some(a) = self.autoscale.lock().unwrap().as_ref() {
+            let st = a.status();
+            reg.counter("autoscale_moves_total")
+                .store(st.moves, Ordering::Relaxed);
+            reg.counter("autoscale_moved_workers_total")
+                .store(st.moved_workers, Ordering::Relaxed);
         }
     }
 }
@@ -586,6 +672,9 @@ impl Server {
             .ok()
             .map(Arc::new);
         let rt = Runtime::new(cfg, manifest)?;
+        // v9: size the observability rings before any traffic arrives
+        rt.obs().audit.set_capacity(opts.audit_cap);
+        rt.obs().trace.set_capacity(opts.trace_cap);
 
         // carve the requested partitions; cpu workers occupy global ids
         // [0, ncpu), cuda workers [ncpu, ncpu+ncuda) (paper_topology order)
@@ -642,6 +731,8 @@ impl Server {
             streams: AtomicU64::new(0),
             plans: AtomicU64::new(0),
             planned_tasks: AtomicU64::new(0),
+            batches_fused: AtomicU64::new(0),
+            next_trace: AtomicU64::new(1),
             ctx_names,
             default_ctx,
             autoscale: Mutex::new(None),
@@ -1054,6 +1145,65 @@ fn dispatch_request(
             send_line(reply, &Response::Stats(shared.stats_snapshot()));
             true
         }
+        Request::Metrics { format } => {
+            // v9: one registry scrape — mirror the runtime/server
+            // aggregates in first so the registry view is complete
+            let text = match format.as_deref() {
+                None | Some("json") => None,
+                Some("prometheus") | Some("text") => Some(()),
+                Some(other) => {
+                    send_line(
+                        reply,
+                        &Response::Error {
+                            id: None,
+                            error: format!(
+                                "unknown metrics format '{other}' (want json | prometheus)"
+                            ),
+                        },
+                    );
+                    return true;
+                }
+            };
+            shared.mirror_metrics();
+            let obs = shared.rt.obs();
+            send_line(
+                reply,
+                &Response::Metrics(MetricsResp {
+                    metrics: obs.metrics_json(),
+                    text: text.map(|()| obs.render_prometheus()),
+                }),
+            );
+            true
+        }
+        Request::Decisions { limit, codelet } => {
+            // v9: newest slice of the selection-decision audit ring
+            let obs = shared.rt.obs();
+            let limit = limit.map(|l| l.min(4096) as usize).unwrap_or(64);
+            let recs = obs.audit.recent(limit, codelet.as_deref().unwrap_or(""));
+            send_line(
+                reply,
+                &Response::Decisions(DecisionsResp {
+                    total: obs.audit.recorded(),
+                    dropped: obs.audit.dropped(),
+                    evicted: obs.audit.evicted(),
+                    decisions: Json::Arr(recs.iter().map(|r| r.to_json()).collect()),
+                }),
+            );
+            true
+        }
+        Request::DumpTrace => {
+            // v9: flush the live trace ring as Trace Event Format
+            let obs = shared.rt.obs();
+            let events = obs.trace.len() as u64;
+            send_line(
+                reply,
+                &Response::DumpTrace(TraceResp {
+                    events,
+                    trace: obs.trace.chrome_json(0),
+                }),
+            );
+            true
+        }
         Request::Contexts => {
             let contexts = shared
                 .rt
@@ -1173,7 +1323,7 @@ fn dispatch_request(
             submit_graph_request(shared, reply, req, sid, sess);
             true
         }
-        Request::Submit(req) => {
+        Request::Submit(mut req) => {
             let id = req.id;
             if shared.draining.load(Ordering::SeqCst) {
                 send_line(
@@ -1225,9 +1375,29 @@ fn dispatch_request(
                     .unwrap_or_else(|| "greedy".into())
             };
             let selector = sess.policy.as_ref().map(|(_, s)| s.clone());
-            // admission control: block (backpressure) until capacity
+            // v9: mint the request's trace id when the client (or an
+            // upstream router) sent none — every admitted request is
+            // traceable end to end
+            if req.trace == 0 {
+                req.trace = shared.next_trace.fetch_add(1, Ordering::Relaxed);
+            }
+            // admission control: block (backpressure) until capacity;
+            // the wait is a request-scoped span on the session's lane
+            let obs = shared.rt.obs();
+            let t_gate = obs.now_secs();
             shared.gate.acquire();
+            obs.trace.push(SpanEvent {
+                name: format!("admit:{}", req.app),
+                cat: "serve",
+                lane: sid,
+                lane_name: format!("session{sid}"),
+                trace: req.trace,
+                t_start: t_gate,
+                t_end: obs.now_secs(),
+            });
             shared.batcher.add(Job {
+                trace: req.trace,
+                admitted: Instant::now(),
                 req,
                 ctx_id,
                 ctx_name,
@@ -1249,7 +1419,7 @@ fn dispatch_request(
 fn submit_graph_request(
     shared: &Arc<Shared>,
     reply: &ReplyLane,
-    req: SubmitGraphReq,
+    mut req: SubmitGraphReq,
     sid: u64,
     sess: &mut SessionState,
 ) {
@@ -1288,8 +1458,13 @@ fn submit_graph_request(
         }
     }
     let base_selector = sess.policy.as_ref().map(|(_, s)| s.clone());
+    // v9: graphs are traced like scalar submits — one id for the DAG
+    if req.trace == 0 {
+        req.trace = shared.next_trace.fetch_add(1, Ordering::Relaxed);
+    }
     // one gate slot per graph: the whole DAG is one admitted request
     shared.gate.acquire();
+    let admitted = Instant::now();
     let shared2 = shared.clone();
     let reply = reply.clone();
     let handle = std::thread::Builder::new()
@@ -1299,6 +1474,13 @@ fn submit_graph_request(
             {
                 Ok(r) => {
                     shared2.requests_ok.fetch_add(1, Ordering::Relaxed);
+                    // end-to-end latency: admission -> reply (success
+                    // only, so count reconciles with requests_ok)
+                    shared2
+                        .rt
+                        .obs()
+                        .e2e_seconds()
+                        .observe(admitted.elapsed().as_secs_f64());
                     Response::GraphDone(r)
                 }
                 Err(e) => {
@@ -1332,6 +1514,7 @@ fn run_graph(
     let rt = &shared.rt;
     let t0 = Instant::now();
     let mut spec = GraphSpec::new();
+    spec.trace = req.trace;
     let mut index: HashMap<String, usize> = HashMap::new();
     let mut owned: Vec<HandleId> = Vec::new();
     let mut node_handles: Vec<Vec<HandleId>> = Vec::new();
@@ -1465,6 +1648,9 @@ struct StreamHandle {
     spec: StreamSpec,
     ctx_id: CtxId,
     codelet: Arc<Codelet>,
+    /// v9: the stream's trace id — every chunk-stage task carries it,
+    /// so one stream's spans correlate in the live trace ring.
+    trace: u64,
     /// Per-session selection policy (None = the context's policy).
     selector: Option<Arc<dyn SelectionPolicy>>,
     state: Arc<StreamShared>,
@@ -1500,7 +1686,7 @@ struct ChunkInFlight {
 fn stream_open(
     shared: &Arc<Shared>,
     reply: &ReplyLane,
-    req: StreamOpenReq,
+    mut req: StreamOpenReq,
     sid: u64,
     sess: &mut SessionState,
 ) {
@@ -1512,6 +1698,11 @@ fn stream_open(
     }
     if sess.streams.contains_key(&req.id) {
         return fail(format!("stream {} is already open on this session", req.id));
+    }
+    // v9: one trace id for the stream's whole life — every chunk-stage
+    // task rides it into the live trace ring
+    if req.trace == 0 {
+        req.trace = shared.next_trace.fetch_add(1, Ordering::Relaxed);
     }
     // the stream's own SLO wins; otherwise the session's hello
     // declaration drives this stream's backpressure too
@@ -1579,6 +1770,7 @@ fn stream_open(
             spec,
             ctx_id,
             codelet,
+            trace: req.trace,
             selector: sess.policy.as_ref().map(|(_, s)| s.clone()),
             state,
             acc,
@@ -1660,7 +1852,8 @@ fn submit_chunk(
     for _ in 0..h.spec.stages {
         let mut spec = TaskSpec::new(h.codelet.clone(), inst.handles.clone(), h.spec.size)
             .in_context(h.ctx_id)
-            .with_tag(seq);
+            .with_tag(seq)
+            .with_trace(h.trace);
         if let Some(sel) = &h.selector {
             spec = spec.with_selector(sel.clone());
         }
@@ -1679,7 +1872,8 @@ fn submit_chunk(
         if let Some(fire) = w.push(seq, shed) {
             let mut spec = TaskSpec::new(h.codelet.clone(), acc.handles.clone(), h.spec.size)
                 .in_context(h.ctx_id)
-                .with_tag(seq);
+                .with_tag(seq)
+                .with_trace(h.trace);
             if let Some(sel) = &h.selector {
                 spec = spec.with_selector(sel.clone());
             }
@@ -1687,8 +1881,15 @@ fn submit_chunk(
                 Ok(id) => {
                     ids.push(id);
                     h.state.windows.fetch_add(1, Ordering::Relaxed);
+                    // window fires are rare (one per slide), so the
+                    // registry lookup is off the per-chunk hot path
+                    let reg = &shared.rt.obs().registry;
+                    reg.counter("stream_windows_total")
+                        .fetch_add(1, Ordering::Relaxed);
                     if fire.shed {
                         h.state.shed_windows.fetch_add(1, Ordering::Relaxed);
+                        reg.counter("stream_shed_windows_total")
+                            .fetch_add(1, Ordering::Relaxed);
                     }
                 }
                 Err(e) => {
@@ -1750,6 +1951,10 @@ fn stream_worker(
     let mut credit = CreditController::new(spec.slo_ms, BASE_CREDIT);
     let mut backlog = BacklogModel::default();
     let mut latency = LatencyTrack::default();
+    // v9: per-chunk instruments, cached once — the loop records through
+    // plain atomics, never the registry's name map
+    let chunks_total = rt.obs().registry.counter("stream_chunks_total");
+    let credit_signals_total = rt.obs().registry.counter("stream_credit_signals_total");
     while let Ok(StreamWork::Chunk(c)) = rx.recv() {
         let waited = rt.wait_tasks(&c.ids);
         let results = rt.metrics().take_results_for(&c.ids);
@@ -1786,6 +1991,10 @@ fn stream_worker(
                 latency.record(lat);
                 state.chunks.fetch_add(1, Ordering::Relaxed);
                 shared.requests_ok.fetch_add(1, Ordering::Relaxed);
+                chunks_total.fetch_add(1, Ordering::Relaxed);
+                // chunk end-to-end: submit -> ack (success only, so the
+                // histogram count reconciles with requests_ok)
+                rt.obs().e2e_seconds().observe(lat);
                 out.push(Response::StreamAck(StreamAckResp {
                     stream: spec.id,
                     seq: c.seq,
@@ -1810,6 +2019,7 @@ fn stream_worker(
         }
         if d.changed {
             state.credit_signals.fetch_add(1, Ordering::Relaxed);
+            credit_signals_total.fetch_add(1, Ordering::Relaxed);
             out.push(Response::StreamCredit(StreamCreditResp {
                 stream: spec.id,
                 credit: d.credit,
@@ -1866,6 +2076,25 @@ fn dispatch_loop(shared: Arc<Shared>) {
 /// completed, so concurrent readers never race an unregister.
 fn run_batch(shared: &Arc<Shared>, jobs: Vec<Job>) {
     let batch_size = jobs.len();
+    // v9: the fuse itself is observable — a monotonic fused-batch
+    // counter plus a batch-window span on the dispatcher lane covering
+    // admission -> submit for the batch's oldest rider
+    if batch_size > 1 {
+        shared.batches_fused.fetch_add(1, Ordering::Relaxed);
+    }
+    if let Some(first) = jobs.first() {
+        let obs = shared.rt.obs();
+        let t_end = obs.now_secs();
+        obs.trace.push(SpanEvent {
+            name: format!("batch:{}x{batch_size}", first.req.app),
+            cat: "serve",
+            lane: 0,
+            lane_name: "dispatcher".into(),
+            trace: first.trace,
+            t_start: (t_end - first.admitted.elapsed().as_secs_f64()).max(0.0),
+            t_end,
+        });
+    }
     let mut submitted = Vec::new();
     // (size, seed) -> the shared input handles registered by the first
     // identical rider
@@ -1976,8 +2205,9 @@ fn submit_job(
     };
     let mut ids: Vec<TaskId> = Vec::with_capacity(job.req.tasks);
     for _ in 0..job.req.tasks {
-        let mut spec =
-            TaskSpec::new(cl.clone(), inst.handles.clone(), job.req.size).in_context(job.ctx_id);
+        let mut spec = TaskSpec::new(cl.clone(), inst.handles.clone(), job.req.size)
+            .in_context(job.ctx_id)
+            .with_trace(job.trace);
         if let Some(v) = &job.req.variant {
             spec = spec.with_variant(v);
         } else if let Some(sel) = &job.selector {
@@ -2052,6 +2282,7 @@ fn complete_job(
             modeled: results.iter().map(|r| r.modeled_total()).sum(),
             wall: results.iter().map(|r| r.wall).sum(),
             rel_err,
+            trace: job.trace,
         })
     });
 
@@ -2065,6 +2296,14 @@ fn complete_job(
     let resp = match outcome {
         Ok(resp) => {
             shared.requests_ok.fetch_add(1, Ordering::Relaxed);
+            // v9: end-to-end latency, admission -> reply; observed only
+            // for successes so the histogram's count reconciles with
+            // `requests_ok` and loadgen's success count
+            shared
+                .rt
+                .obs()
+                .e2e_seconds()
+                .observe(job.admitted.elapsed().as_secs_f64());
             Response::Result(resp)
         }
         Err(e) => {

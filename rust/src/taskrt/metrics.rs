@@ -35,6 +35,11 @@ pub struct TaskResult {
     /// Application tag from [`super::task::TaskSpec::tag`] (chunk
     /// sequence number for stream pipeline tasks; 0 = untagged).
     pub tag: u64,
+    /// Cross-layer trace id from [`super::task::TaskSpec::trace`]
+    /// (0 = untraced) — lets the chrome-trace exporter and the live
+    /// `dump_trace` ring attribute this execution to its originating
+    /// request.
+    pub trace: u64,
 }
 
 impl TaskResult {
@@ -145,6 +150,7 @@ mod tests {
             t_start: 0.0,
             t_end: t,
             tag: 0,
+            trace: 0,
         }
     }
 

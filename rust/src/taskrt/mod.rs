@@ -55,8 +55,8 @@ pub use device::Arch;
 pub use metrics::{Metrics, TaskResult};
 pub use perfmodel::PerfModels;
 pub use selection::{
-    validate_occupancy, RuntimeSnapshot, SelectionPolicy, SelectionQuery, SelectorKind,
-    VariantChoice, WorkerOccupancy, VALID_SELECTORS,
+    validate_occupancy, RuntimeSnapshot, SelectReason, SelectionPolicy, SelectionQuery,
+    SelectorKind, VariantChoice, WorkerOccupancy, VALID_SELECTORS,
 };
 pub use task::{TaskId, TaskSpec, TaskState};
 
@@ -184,7 +184,12 @@ pub(crate) struct Inner {
     pub inflight: Mutex<usize>,
     pub inflight_cv: Condvar,
     /// Runtime start time; task trace timestamps are relative to this.
+    /// Copied from `obs.epoch()` so worker task spans and serve-layer
+    /// request spans share one timeline.
     pub epoch: std::time::Instant,
+    /// Live observability plane (metrics registry, decision audit,
+    /// trace ring) shared by every context's `SchedCtx`.
+    pub obs: Arc<crate::obs::Obs>,
 }
 
 impl Inner {
@@ -211,6 +216,7 @@ impl Inner {
         );
         ctx.data_aware = self.config.data_aware;
         ctx.tenants = self.tenants.clone();
+        ctx.obs = self.obs.clone();
         ctx.set_members(members);
         ContextSlot {
             name: name.to_string(),
@@ -284,6 +290,10 @@ impl Runtime {
             .map(|_| AtomicUsize::new(DEFAULT_CTX))
             .collect();
         let noise = device::NoiseSource::new(config.seed ^ 0x5eed, 0.05);
+        // One observability plane per runtime; its construction instant
+        // is the shared epoch for worker and serve-layer trace spans.
+        let obs = Arc::new(crate::obs::Obs::new());
+        let epoch = obs.epoch();
 
         let inner = Arc::new(Inner {
             config,
@@ -304,7 +314,8 @@ impl Runtime {
             reconfig: Mutex::new(()),
             inflight: Mutex::new(0),
             inflight_cv: Condvar::new(),
-            epoch: std::time::Instant::now(),
+            epoch,
+            obs,
         });
         // default context 0: all workers, the configured policies
         {
@@ -795,6 +806,8 @@ impl Runtime {
             chosen_impl: None,
             est_cost_ns: 0,
             tag: spec.tag,
+            trace: spec.trace,
+            enqueued_ns: 0,
         };
         if !archs.iter().any(|&a| slot.ctx.can_run(&probe, a)) {
             undo(self);
@@ -954,6 +967,8 @@ impl Runtime {
                 chosen_impl: None,
                 est_cost_ns: 0,
                 tag: 0,
+                trace: 0,
+                enqueued_ns: 0,
             };
             // candidate table: every eligible implementation on every
             // member architecture, priced by the perf models — falling
@@ -1044,6 +1059,23 @@ impl Runtime {
         };
         let plan = GraphPlanner::new().plan(&input)?;
 
+        // observability: planner activity counters (scraped via the v9
+        // `metrics` request alongside the taskrt histograms)
+        let obs = &self.inner.obs;
+        obs.registry
+            .counter("plan_graphs_total")
+            .fetch_add(1, Ordering::Relaxed);
+        obs.registry
+            .counter("plan_nodes_total")
+            .fetch_add(spec.len() as u64, Ordering::Relaxed);
+        let mode_counter = match plan.mode {
+            PlanMode::Planned => "plan_planned_total",
+            PlanMode::Greedy => "plan_greedy_total",
+        };
+        obs.registry
+            .counter(mode_counter)
+            .fetch_add(1, Ordering::Relaxed);
+
         // release in dependency order; same-span nodes share a priority
         // (higher = earlier spans) so the batcher sees them together
         let mut tasks: Vec<TaskId> = Vec::with_capacity(spec.len());
@@ -1052,6 +1084,7 @@ impl Runtime {
             let mut t = TaskSpec::new(n.codelet.clone(), n.handles.clone(), n.size)
                 .in_context(ctx)
                 .with_tag(i as u64 + 1)
+                .with_trace(spec.trace)
                 .with_priority((plan.spans - a.span) as i32);
             let after: Vec<TaskId> = n.deps.iter().map(|&d| tasks[d]).collect();
             if !after.is_empty() {
@@ -1157,6 +1190,14 @@ impl Runtime {
 
     pub fn metrics(&self) -> &Metrics {
         &self.inner.metrics
+    }
+
+    /// The runtime's live observability plane: metrics registry,
+    /// selection-decision audit ring and trace ring. Shared with every
+    /// scheduling context's `SchedCtx`, so worker-side observations and
+    /// serve-layer request spans land in one place.
+    pub fn obs(&self) -> &Arc<crate::obs::Obs> {
+        &self.inner.obs
     }
 
     pub fn drain_results(&self) -> Vec<TaskResult> {

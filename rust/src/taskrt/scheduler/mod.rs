@@ -51,6 +51,14 @@ pub struct ReadyTask {
     pub est_cost_ns: u64,
     /// Opaque application tag from the spec (stream chunk seq; 0 = none).
     pub tag: u64,
+    /// Cross-layer trace id from the spec (0 = untraced); rides into
+    /// the task's result and spans (see [`crate::obs`]).
+    pub trace: u64,
+    /// When the task entered a ready queue, in nanoseconds since the
+    /// runtime's [`crate::obs::Obs`] epoch (0 = not stamped, e.g.
+    /// selection probes). Workers observe `pop time − enqueued_ns` as
+    /// the queue-wait histogram.
+    pub enqueued_ns: u64,
 }
 
 /// Static description of one worker thread.
@@ -112,6 +120,11 @@ pub struct SchedCtx {
     /// Round-robin cursor for calibration-phase worker placement.
     pub rr: AtomicUsize,
     pub rng: Mutex<Rng>,
+    /// Observability plane: [`SchedCtx::select_impl`] times every
+    /// policy consult and records the decision audit here. Contexts
+    /// built through the runtime share its `Obs`; a bare
+    /// [`SchedCtx::new`] (tests, simulations) gets its own.
+    pub obs: Arc<crate::obs::Obs>,
 }
 
 impl SchedCtx {
@@ -141,6 +154,7 @@ impl SchedCtx {
             tenants: Arc::new(AtomicUsize::new(0)),
             rr: AtomicUsize::new(0),
             rng: Mutex::new(Rng::new(seed)),
+            obs: Arc::new(crate::obs::Obs::new()),
         }
     }
 
@@ -264,10 +278,44 @@ impl SchedCtx {
 
     /// THE selection entry point: every layer (schedulers, workers)
     /// resolves "which implementation runs on `arch`" through here, and
-    /// every resolution carries a full [`SelectionQuery`].
+    /// every resolution carries a full [`SelectionQuery`]. Being the
+    /// single funnel, this is also where the observability plane taps
+    /// in: the policy consult is timed into the select histogram and
+    /// every decision lands in the audit ring with the query snapshot,
+    /// candidate estimates and the policy's reason tag. (The audit
+    /// push is `try_lock`-guarded — it can be shed, never block.)
     pub fn select_impl(&self, task: &ReadyTask, arch: Arch) -> Option<VariantChoice> {
         let q = self.query(task, arch);
-        self.policy_for(task).select(&q)
+        let t0 = std::time::Instant::now();
+        let choice = self.policy_for(task).select(&q);
+        self.obs
+            .select_seconds()
+            .observe(t0.elapsed().as_secs_f64());
+        if let Some(c) = &choice {
+            let candidates = q
+                .eligible()
+                .iter()
+                .map(|&i| (q.variant_name(i).to_string(), q.exec_estimate(i)))
+                .collect();
+            self.obs.record_decision(crate::obs::DecisionRecord {
+                seq: 0,
+                task: task.id,
+                trace: task.trace,
+                codelet: task.codelet.name.clone(),
+                ctx: task.ctx as u64,
+                size: task.size,
+                size_band: super::selection::contextual::size_band(task.size) as u32,
+                load_band: q.snapshot.load_band(),
+                queue_depth: q.snapshot.queue_depth,
+                arch: arch.name().to_string(),
+                transfer_penalty_secs: q.transfer_penalty_secs(),
+                candidates,
+                chosen: q.variant_name(c.impl_idx).to_string(),
+                est: c.est,
+                reason: c.reason.as_str(),
+            });
+        }
+        choice
     }
 
     /// Side-effect-free probe: can the governing policy serve `task` on

@@ -43,7 +43,7 @@ use std::sync::atomic::AtomicUsize;
 use std::sync::Mutex;
 
 use super::query::SelectionQuery;
-use super::{best_by, explore_pool, SelectionPolicy, VariantChoice};
+use super::{best_by, explore_pool, SelectReason, SelectionPolicy, VariantChoice};
 use crate::taskrt::perfmodel::{key, EWMA_ALPHA};
 use crate::util::json::Json;
 
@@ -169,6 +169,7 @@ impl SelectionPolicy for Contextual {
         // compute it once outside the ranking closure
         let transfer = q.transfer_penalty_secs();
         best_by(&eligible, |i| self.adjusted(q, i, transfer))
+            .map(|c| c.with_reason(SelectReason::ContextualBand))
     }
 
     fn feedback(&self, q: &SelectionQuery, variant: &str, secs: f64) {
@@ -304,6 +305,8 @@ mod tests {
             chosen_impl: None,
             est_cost_ns: 0,
             tag: 0,
+            trace: 0,
+            enqueued_ns: 0,
         }
     }
 
@@ -420,6 +423,8 @@ mod tests {
             chosen_impl: None,
             est_cost_ns: 0,
             tag: 0,
+            trace: 0,
+            enqueued_ns: 0,
         };
         let p = Contextual::new();
         // cold band: the prefer() prior discounts the hinted variant

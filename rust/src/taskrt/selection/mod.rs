@@ -84,6 +84,43 @@ pub const DEFAULT_EPSILON: f64 = 0.1;
 pub const VALID_SELECTORS: &str =
     "greedy | calibrating | epsilon[:E] | epsilon-decayed[:E] | contextual | planned | forced:VARIANT";
 
+/// Why a policy chose the variant it chose — the reason tag the
+/// observability plane's decision audit records (`decisions` request).
+/// [`SelectReason::as_str`] values match
+/// [`crate::obs::REASON_NAMES`], so per-reason counters in the metrics
+/// scrape need no mapping table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectReason {
+    /// Cold-start round-robin over un-modeled variants.
+    Calibrating,
+    /// A pre-compiler `prefer()` hint seeded the first exploration.
+    HintPrior,
+    /// An ε-fraction (or similar) deliberate exploration pick.
+    Explore,
+    /// Model-minimum exploitation.
+    Exploit,
+    /// The contextual policy's banded, transfer/queue-adjusted ranking.
+    ContextualBand,
+    /// A graph plan's prefer-strength prior was honoured.
+    PlannedPrefer,
+    /// A `forced:VARIANT` pin.
+    Forced,
+}
+
+impl SelectReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SelectReason::Calibrating => "calibrating",
+            SelectReason::HintPrior => "hint-prior",
+            SelectReason::Explore => "explore",
+            SelectReason::Exploit => "exploit",
+            SelectReason::ContextualBand => "contextual-band",
+            SelectReason::PlannedPrefer => "planned-prefer",
+            SelectReason::Forced => "forced",
+        }
+    }
+}
+
 /// The outcome of one selection decision.
 #[derive(Debug, Clone)]
 pub struct VariantChoice {
@@ -95,6 +132,16 @@ pub struct VariantChoice {
     /// *context-adjusted* estimate (e.g. including pending-transfer
     /// cost), which cost-argmin schedulers compare directly.
     pub est: Option<f64>,
+    /// Why this variant won (audit-log reason tag).
+    pub reason: SelectReason,
+}
+
+impl VariantChoice {
+    /// Tag (or re-tag) the choice's audit reason.
+    pub fn with_reason(mut self, reason: SelectReason) -> VariantChoice {
+        self.reason = reason;
+        self
+    }
 }
 
 /// A pluggable variant-selection policy. One instance lives per
@@ -264,12 +311,14 @@ fn explore_pool(q: &SelectionQuery, pool: &[usize], cursor: &AtomicUsize) -> Opt
         return Some(VariantChoice {
             impl_idx: i,
             est: None,
+            reason: SelectReason::HintPrior,
         });
     }
     let k = cursor.fetch_add(1, Ordering::Relaxed);
     Some(VariantChoice {
         impl_idx: pool[k % pool.len()],
         est: None,
+        reason: SelectReason::Calibrating,
     })
 }
 
@@ -294,7 +343,11 @@ fn best_by(pool: &[usize], est: impl Fn(usize) -> Option<f64>) -> Option<Variant
             let tb = b.1.unwrap_or(f64::MAX);
             ta.partial_cmp(&tb).unwrap_or(std::cmp::Ordering::Equal)
         })
-        .map(|(i, est)| VariantChoice { impl_idx: i, est })
+        .map(|(i, est)| VariantChoice {
+            impl_idx: i,
+            est,
+            reason: SelectReason::Exploit,
+        })
 }
 
 // ----------------------------------------------------------------- greedy
@@ -496,6 +549,7 @@ impl SelectionPolicy for EpsilonGreedy {
             return Some(VariantChoice {
                 impl_idx: pool[k],
                 est: None,
+                reason: SelectReason::Explore,
             });
         }
         if self.decayed {
@@ -583,6 +637,7 @@ impl SelectionPolicy for Planned {
                 return Some(VariantChoice {
                     impl_idx: i,
                     est: self.est.or_else(|| q.exec_estimate(i)),
+                    reason: SelectReason::PlannedPrefer,
                 });
             }
         }
@@ -635,6 +690,7 @@ impl SelectionPolicy for Forced {
             .map(|i| VariantChoice {
                 impl_idx: i,
                 est: q.exec_estimate(i),
+                reason: SelectReason::Forced,
             })
     }
 
@@ -682,6 +738,8 @@ mod tests {
             chosen_impl: None,
             est_cost_ns: 0,
             tag: 0,
+            trace: 0,
+            enqueued_ns: 0,
         }
     }
 

@@ -336,6 +336,8 @@ mod tests {
             chosen_impl: None,
             est_cost_ns: 0,
             tag: 0,
+            trace: 0,
+            enqueued_ns: 0,
         }
     }
 

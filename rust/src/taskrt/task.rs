@@ -43,6 +43,12 @@ pub struct TaskSpec {
     /// feedback and acks can be attributed without a side table. 0 =
     /// untagged.
     pub tag: u64,
+    /// Cross-layer trace id (see [`crate::obs`]): minted by the serve
+    /// layer at request admission, carried through the ready queues
+    /// into [`super::metrics::TaskResult`] and every span the task
+    /// emits, so one request's work correlates end-to-end in a
+    /// `dump_trace` export. 0 = untraced.
+    pub trace: u64,
 }
 
 impl TaskSpec {
@@ -66,6 +72,7 @@ impl TaskSpec {
             after: Vec::new(),
             ctx: crate::taskrt::DEFAULT_CTX,
             tag: 0,
+            trace: 0,
         }
     }
 
@@ -102,6 +109,13 @@ impl TaskSpec {
     /// Stamp an opaque application tag (carried into the task's result).
     pub fn with_tag(mut self, tag: u64) -> TaskSpec {
         self.tag = tag;
+        self
+    }
+
+    /// Stamp the cross-layer trace id (carried into the task's result
+    /// and every span it emits). 0 = untraced.
+    pub fn with_trace(mut self, trace: u64) -> TaskSpec {
+        self.trace = trace;
         self
     }
 }
@@ -310,6 +324,12 @@ mod tests {
     fn with_tag_sets_tag() {
         assert_eq!(spec().tag, 0);
         assert_eq!(spec().with_tag(17).tag, 17);
+    }
+
+    #[test]
+    fn with_trace_sets_trace() {
+        assert_eq!(spec().trace, 0);
+        assert_eq!(spec().with_trace(99).trace, 99);
     }
 
     #[test]

@@ -49,6 +49,10 @@ pub fn chrome_trace(results: &[TaskResult], workers: &[WorkerInfo]) -> Json {
             "modeled_transfer_us".into(),
             num(r.modeled_transfer * 1e6),
         );
+        if r.trace != 0 {
+            // request-scoped trace id (0 = untraced local submit)
+            args.insert("trace".into(), num(r.trace as f64));
+        }
         let mut ev = BTreeMap::new();
         ev.insert("ph".into(), s("X")); // complete event
         ev.insert("name".into(), s(&format!("{}:{}", r.codelet, r.variant)));
@@ -99,6 +103,7 @@ mod tests {
             t_start: 0.01,
             t_end: 0.011,
             tag: 0,
+            trace: 0,
         }
     }
 

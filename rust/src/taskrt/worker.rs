@@ -49,6 +49,13 @@ pub(crate) fn run(inner: Arc<Inner>, me: WorkerInfo) {
                 // May transiently reach -1 when this pop races the
                 // producer's post-push increment; snapshots clamp at 0.
                 slot.ctx.pending.fetch_sub(1, Ordering::Relaxed);
+                if t.enqueued_ns > 0 {
+                    let waited = slot.ctx.obs.now_nanos().saturating_sub(t.enqueued_ns);
+                    slot.ctx
+                        .obs
+                        .queue_wait_seconds()
+                        .observe(waited as f64 / 1e9);
+                }
                 execute(&inner, &me, &slot, t);
             }
             None => {
@@ -122,6 +129,8 @@ pub(crate) fn push_ready(inner: &Arc<Inner>, id: super::task::TaskId) {
             chosen_impl: None,
             est_cost_ns: 0,
             tag: spec.tag,
+            trace: spec.trace,
+            enqueued_ns: slot.ctx.obs.now_nanos(),
         };
         // count the task into the context's queue depth *after* the
         // push: model-aware schedulers run their selection queries
@@ -281,6 +290,22 @@ fn execute_body(
         .record(&codelet.name, &imp.name, task.size, modeled_exec);
     slot.ctx.feedback(task, me.arch, &imp.name, modeled_exec);
 
+    // observability: latency histograms + a request-correlated task
+    // span into the live trace ring (non-blocking by construction)
+    slot.ctx.obs.exec_seconds().observe(wall);
+    if transfer_bytes > 0 {
+        slot.ctx.obs.transfer_seconds().observe(modeled_transfer);
+    }
+    slot.ctx.obs.trace.push(crate::obs::SpanEvent {
+        name: format!("{}:{}", codelet.name, imp.name),
+        cat: "task",
+        lane: me.id as u64,
+        lane_name: format!("worker{}", me.id),
+        trace: task.trace,
+        t_start,
+        t_end: t_start + wall,
+    });
+
     Ok(TaskResult {
         task: task.id,
         codelet: codelet.name.clone(),
@@ -295,5 +320,6 @@ fn execute_body(
         t_start,
         t_end: t_start + wall,
         tag: task.tag,
+        trace: task.trace,
     })
 }

@@ -206,6 +206,7 @@ fn submit(id: u64, seed: u64, verify: bool) -> SubmitReq {
         seed,
         variant: None,
         verify,
+        trace: 0,
     }
 }
 

@@ -51,6 +51,7 @@ fn submit(id: u64, app: &str, size: usize, seed: u64, verify: bool) -> SubmitReq
         seed,
         variant: None,
         verify,
+        trace: 0,
     }
 }
 

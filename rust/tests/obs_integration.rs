@@ -1,0 +1,332 @@
+//! Integration tests for the v9 observability plane: a live server
+//! must answer `metrics` scrapes whose end-to-end latency histogram
+//! reconciles exactly with the load the generator reports, a
+//! `decisions` query against a contextual-policy session must show the
+//! device→host variant flip annotated with the load band that caused
+//! it (the paper's selection story, now auditable), `dump_trace` must
+//! hand back chrome://tracing JSON keyed by request trace ids, and the
+//! audit ring must stay bounded under overflow.
+
+use std::time::Duration;
+
+use compar::serve::{
+    loadgen, Client, LoadgenOptions, Response, ServeOptions, Server, StreamOpenReq, SubmitReq,
+};
+use compar::stream;
+use compar::taskrt::SelectorKind;
+use compar::util::json::Json;
+
+fn submit_req(id: u64, app: &str, size: usize) -> SubmitReq {
+    SubmitReq {
+        id,
+        app: app.into(),
+        size,
+        tasks: 1,
+        ctx: None,
+        seed: 7 + id,
+        variant: None,
+        verify: true,
+        trace: 0,
+    }
+}
+
+/// Pull a named histogram out of a registry scrape.
+fn hist<'a>(metrics: &'a Json, name: &str) -> &'a Json {
+    metrics
+        .get("histograms")
+        .and_then(|h| h.get(name))
+        .unwrap_or_else(|| panic!("scrape is missing histogram {name}: {metrics:?}"))
+}
+
+/// A counter's value in a registry scrape (0 when absent).
+fn counter(metrics: &Json, name: &str) -> f64 {
+    metrics
+        .get("counters")
+        .and_then(|c| c.get(name))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0)
+}
+
+/// The e2e-histogram acceptance contract: after a loadgen run, the
+/// `serve_e2e_seconds` histogram's count equals the generator's
+/// successful-request count, its bucket counts sum to that count, and
+/// every counter in the registry is monotonic between two scrapes.
+#[test]
+fn metrics_scrape_reconciles_with_loadgen() {
+    let server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        ncpu: 2,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let mut mon = Client::connect(&addr).unwrap();
+
+    // baseline scrape: instruments exist before any request ran
+    let m0 = mon.metrics(None).unwrap();
+    let e2e0 = hist(&m0.metrics, "serve_e2e_seconds");
+    assert_eq!(e2e0.get("count").and_then(Json::as_f64), Some(0.0));
+
+    let load = LoadgenOptions {
+        clients: 2,
+        requests: 10,
+        app: "matmul".into(),
+        size: 32,
+        ..LoadgenOptions::default()
+    };
+    let report = loadgen::run(&addr, &load).unwrap();
+    assert_eq!(report.errors, 0, "load must succeed: {report:?}");
+    let ok = (report.requests - report.errors) as f64;
+    assert_eq!(ok, 20.0);
+
+    let m1 = mon.metrics(None).unwrap();
+    let e2e = hist(&m1.metrics, "serve_e2e_seconds");
+    // the acceptance reconcile: one e2e observation per successful
+    // request, no more (scrapes and handshakes are not requests)
+    assert_eq!(
+        e2e.get("count").and_then(Json::as_f64),
+        Some(ok),
+        "serve_e2e_seconds count must equal loadgen successes: {e2e:?}"
+    );
+    // histogram internal consistency: bucket counts (incl. overflow)
+    // sum to the observation count, bounds ladder is intact
+    let le = e2e.get("le").and_then(Json::as_arr).unwrap();
+    let counts = e2e.get("counts").and_then(Json::as_arr).unwrap();
+    assert_eq!(counts.len(), le.len() + 1, "per-bound buckets + overflow");
+    let bucket_sum: f64 = counts.iter().filter_map(Json::as_f64).sum();
+    assert_eq!(bucket_sum, ok, "bucket counts must sum to count");
+    let sum = e2e.get("sum").and_then(Json::as_f64).unwrap();
+    assert!(sum > 0.0, "observed seconds must accumulate: {e2e:?}");
+    // each request's server-side interval nests inside the client's
+    // observed latency, so the summed e2e is bounded by the load side
+    assert!(
+        sum <= ok * report.lat_max + 0.5,
+        "summed e2e {sum}s cannot exceed {ok} requests at the client's \
+         max latency {}s",
+        report.lat_max
+    );
+
+    // every counter is monotonic across scrapes, and the selection
+    // plane counted at least one decision per executed task
+    let c0 = m0.metrics.get("counters").and_then(Json::as_obj).unwrap();
+    let c1 = m1.metrics.get("counters").and_then(Json::as_obj).unwrap();
+    for (name, v0) in c0 {
+        let v0 = v0.as_f64().unwrap();
+        let v1 = c1.get(name).and_then(Json::as_f64).unwrap_or_else(|| {
+            panic!("counter {name} disappeared between scrapes");
+        });
+        assert!(v1 >= v0, "counter {name} went backwards: {v0} -> {v1}");
+    }
+    assert!(counter(&m1.metrics, "select_decisions_total") >= ok);
+
+    // prometheus text mode renders the same registry
+    let prom = mon.metrics(Some("prometheus")).unwrap();
+    let text = prom.text.expect("text mode must fill `text`");
+    assert!(text.contains("# TYPE"), "{text}");
+    assert!(text.contains("serve_e2e_seconds"), "{text}");
+    // unknown formats are rejected, not guessed
+    let err = mon.metrics(Some("xml")).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown metrics format"));
+
+    // stats satellite: the monotonic totals move with the load and a
+    // scalar submit answers with a minted trace id
+    let s1 = mon.stats().unwrap();
+    assert_eq!(s1.requests_ok, 20);
+    assert!(s1.tasks_completed >= 20, "{s1:?}");
+    assert!(s1.decisions >= 20, "{s1:?}");
+    let r = mon.submit(submit_req(900, "matmul", 32)).unwrap();
+    assert_ne!(r.trace, 0, "server must mint a trace id: {r:?}");
+    let s2 = mon.stats().unwrap();
+    assert!(s2.tasks_completed > s1.tasks_completed, "{s1:?} -> {s2:?}");
+    assert!(s2.bytes_transferred >= s1.bytes_transferred);
+
+    mon.quit().unwrap();
+    server.shutdown().unwrap();
+}
+
+/// The decision-audit acceptance contract on the emulated device lane:
+/// drive a contextual-policy stream from an idle start into credit-
+/// gated overload, then ask `decisions` for the sort codelet — the
+/// audit must show the device lane chosen at a lower load band than a
+/// host lane (the device→host flip, annotated with the band that
+/// caused it), and `dump_trace` must return request-keyed spans.
+#[test]
+fn decisions_audit_shows_load_band_flip_on_device_lane() {
+    let server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        ncpu: 2,
+        ncuda: 1,
+        selector: Some(SelectorKind::Contextual),
+        // every decision of this run must stay resident for the query
+        audit_cap: 8192,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    // the real cuda variant is a Pallas artifact; emulate the device
+    // lane natively so the heterogeneous story runs on a bare image
+    server.register_codelet(stream::emulated_device_sort(Duration::from_millis(5)));
+    let addr = server.local_addr().to_string();
+
+    let mut c = Client::connect(&addr).unwrap();
+    let opened = c
+        .stream_open(StreamOpenReq {
+            id: 1,
+            app: "sort".into(),
+            size: 32_768,
+            stages: 2,
+            window: 4,
+            slide: 2,
+            ctx: None,
+            slo_ms: Some(20.0),
+            trace: 0,
+        })
+        .unwrap();
+
+    // phase 1 — idle: one chunk at a time, fully drained before the
+    // next, so its selections are audited at load band 0
+    let mut seq: u64 = 0;
+    for _ in 0..3 {
+        c.send_stream_chunk(1, seq, 0xbeef ^ seq).unwrap();
+        seq += 1;
+        loop {
+            match c.recv_response().unwrap() {
+                Response::StreamAck(a) => {
+                    assert_eq!(a.seq, seq - 1);
+                    break;
+                }
+                Response::StreamCredit(_) => {}
+                Response::Error { error, .. } => panic!("stream error: {error}"),
+                other => panic!("unexpected response {other:?}"),
+            }
+        }
+    }
+
+    // phase 2 — overload: pipeline chunks up to the live credit grant,
+    // building the backlog that pushes selections into higher bands
+    let mut credit = opened.credit.max(1);
+    let mut inflight: u64 = 0;
+    while seq < 60 {
+        while inflight >= credit {
+            match c.recv_response().unwrap() {
+                Response::StreamAck(a) => {
+                    credit = a.credit.max(1);
+                    inflight -= 1;
+                }
+                Response::StreamCredit(cr) => credit = cr.credit.max(1),
+                Response::Error { error, .. } => panic!("stream error: {error}"),
+                other => panic!("unexpected response {other:?}"),
+            }
+        }
+        c.send_stream_chunk(1, seq, 0xbeef ^ seq).unwrap();
+        inflight += 1;
+        seq += 1;
+    }
+    while inflight > 0 {
+        match c.recv_response().unwrap() {
+            Response::StreamAck(_) => inflight -= 1,
+            Response::StreamCredit(_) => {}
+            Response::Error { error, .. } => panic!("stream error: {error}"),
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+    let closed = c.stream_close(1).unwrap();
+    assert_eq!(closed.dropped, 0);
+
+    let mut mon = Client::connect(&addr).unwrap();
+    let d = mon.decisions(Some(0), Some("sort")).unwrap();
+    assert!(d.total > 0, "{d:?}");
+    let records = d.decisions.as_arr().unwrap();
+    assert!(!records.is_empty(), "audit returned no records: {d:?}");
+
+    let mut cuda_bands: Vec<f64> = Vec::new();
+    let mut host_bands: Vec<f64> = Vec::new();
+    for rec in records {
+        assert_eq!(rec.get("codelet").and_then(Json::as_str), Some("sort"));
+        let reason = rec.get("reason").and_then(Json::as_str).unwrap();
+        assert!(!reason.is_empty(), "{rec:?}");
+        assert!(rec.get("queue_depth").and_then(Json::as_f64).is_some());
+        assert!(rec.get("candidates").and_then(Json::as_arr).is_some());
+        let band = rec.get("load_band").and_then(Json::as_f64).unwrap();
+        match rec.get("chosen").and_then(Json::as_str).unwrap() {
+            "cuda" => cuda_bands.push(band),
+            "omp" | "seq" => host_bands.push(band),
+            other => panic!("unexpected variant {other} in {rec:?}"),
+        }
+    }
+    assert!(!cuda_bands.is_empty(), "device lane never audited");
+    assert!(!host_bands.is_empty(), "host lanes never audited");
+    let cuda_min = cuda_bands.iter().cloned().fold(f64::INFINITY, f64::min);
+    let host_max = host_bands.iter().cloned().fold(0.0, f64::max);
+    assert_eq!(cuda_min, 0.0, "idle phase must audit the device at band 0");
+    assert!(
+        host_max > cuda_min,
+        "no device→host flip across load bands (cuda bands {cuda_bands:?}, \
+         host bands {host_bands:?})"
+    );
+
+    // the trace ring serves the same run as chrome://tracing JSON,
+    // spans keyed by the stream's minted trace id
+    let t = mon.dump_trace().unwrap();
+    assert!(t.events > 0, "{t:?}");
+    let events = t.trace.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert!(events.len() as u64 >= t.events, "metadata rides along");
+    let traced = events.iter().any(|ev| {
+        ev.get("ph").and_then(Json::as_str) == Some("X")
+            && ev
+                .get("args")
+                .and_then(|a| a.get("trace"))
+                .and_then(Json::as_f64)
+                .map(|tr| tr > 0.0)
+                .unwrap_or(false)
+    });
+    assert!(traced, "no span carries a request trace id");
+
+    c.quit().unwrap();
+    mon.quit().unwrap();
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests_err, 0, "{stats:?}");
+}
+
+/// The audit ring never grows past its configured capacity: overflow
+/// evicts oldest records (counted, surfaced in `metrics`), retention
+/// accounting stays exact, and `limit`/codelet filters behave.
+#[test]
+fn audit_ring_stays_bounded_and_counts_eviction() {
+    let server = Server::start(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        ncpu: 2,
+        audit_cap: 8,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    for id in 0..20 {
+        c.submit(submit_req(id, "matmul", 24)).unwrap();
+    }
+
+    let d = c.decisions(Some(0), None).unwrap();
+    let retained = d.decisions.as_arr().unwrap().len() as u64;
+    assert!(retained <= 8, "ring exceeded its capacity: {retained}");
+    assert!(d.evicted > 0, "overflow must evict: {d:?}");
+    assert_eq!(
+        d.total,
+        retained + d.evicted + d.dropped,
+        "retention accounting must balance: {d:?}"
+    );
+    // the eviction counter is also a scrapeable metric
+    let m = c.metrics(None).unwrap();
+    assert_eq!(counter(&m.metrics, "audit_evicted_total"), d.evicted as f64);
+
+    // explicit limits cap the slice; a foreign codelet filter matches
+    // nothing but leaves the lifetime counters untouched
+    let d3 = c.decisions(Some(3), None).unwrap();
+    assert_eq!(d3.decisions.as_arr().unwrap().len(), 3);
+    assert_eq!(d3.total, d.total);
+    let none = c.decisions(Some(0), Some("no-such-codelet")).unwrap();
+    assert!(none.decisions.as_arr().unwrap().is_empty());
+    assert_eq!(none.total, d.total);
+
+    c.quit().unwrap();
+    server.shutdown().unwrap();
+}

@@ -36,6 +36,7 @@ fn submit(id: u64, app: &str, size: usize, tasks: usize, ctx: Option<&str>, seed
         seed,
         variant: None,
         verify: true,
+        trace: 0,
     }
 }
 

@@ -24,6 +24,7 @@ fn open_req(id: u64, app: &str, size: usize, stages: usize) -> StreamOpenReq {
         slide: 0,
         ctx: None,
         slo_ms: None,
+        trace: 0,
     }
 }
 

@@ -26,6 +26,7 @@ fn opts(contexts: &str, transport: TransportKind) -> ServeOptions {
         max_batch: 8,
         autoscale: None,
         transport,
+        ..ServeOptions::default()
     }
 }
 
@@ -39,6 +40,7 @@ fn submit(id: u64, size: usize, ctx: Option<&str>, seed: u64) -> SubmitReq {
         seed,
         variant: None,
         verify: true,
+        trace: 0,
     }
 }
 
@@ -155,6 +157,7 @@ fn epoll_transport_runs_stream_sessions() {
             slide: 0,
             ctx: None,
             slo_ms: None,
+            trace: 0,
         })
         .unwrap();
     assert!(opened.credit >= 1);
@@ -218,6 +221,7 @@ fn graph_submission_works_on_both_transports_and_framings() {
             ],
             ctx: None,
             mode: None,
+            trace: 0,
         }
     }
     for transport in [TransportKind::Threads, TransportKind::Epoll] {
